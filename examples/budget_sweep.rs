@@ -1,0 +1,66 @@
+//! Budget-size sweep: how test accuracy, merging frequency and training
+//! time depend on the budget B, for merging (Lookup-WD) vs the removal and
+//! projection baselines of Wang et al. (2012).
+//!
+//! Reproduces the paper's third experimental question ("How do results
+//! depend on the budget size?") on the ADULT-like profile.
+//!
+//! ```bash
+//! cargo run --release --example budget_sweep [scale]
+//! ```
+
+use budgetsvm::budget::{MergeSolver, Strategy};
+use budgetsvm::config::ExperimentConfig;
+use budgetsvm::data::synthetic::Profile;
+use budgetsvm::experiments::{options_for, prepare};
+use budgetsvm::solver::train_bsgd;
+
+fn main() {
+    let scale: f64 = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(0.1);
+    let cfg = ExperimentConfig { scale, ..Default::default() };
+    let profile = Profile::by_name("adult").unwrap();
+    let prep = prepare(profile, &cfg);
+    println!(
+        "ADULT-like profile: n_train={}, d={}, C=2^{}, γ=2^{}\n",
+        prep.train.len(),
+        prep.train.dim(),
+        profile.log2_c,
+        profile.log2_gamma
+    );
+    println!(
+        "{:<10} {:>7} {:>12} {:>12} {:>12} {:>10}",
+        "strategy", "budget", "test acc", "merge freq", "maint %", "wall s"
+    );
+
+    let strategies = [
+        Strategy::Merge(MergeSolver::LookupWd),
+        Strategy::Merge(MergeSolver::GssStandard),
+        Strategy::Removal,
+        Strategy::Projection,
+    ];
+    for strategy in strategies {
+        for &budget in &[25usize, 50, 100, 200, 400] {
+            // Projection is O(B³) per event; cap its budget to keep the
+            // sweep quick (that cost asymmetry is the finding).
+            if strategy == Strategy::Projection && budget > 100 {
+                continue;
+            }
+            let mut opts = options_for(&prep, &cfg, strategy, budget, 0);
+            opts.passes = 3;
+            let report = train_bsgd(&prep.train, &opts);
+            println!(
+                "{:<10} {:>7} {:>11.2}% {:>11.1}% {:>11.1}% {:>10.3}",
+                strategy.name(),
+                budget,
+                100.0 * report.model.accuracy(&prep.test),
+                100.0 * report.merging_frequency(),
+                100.0 * report.maintenance_fraction(),
+                report.wall_seconds,
+            );
+        }
+        println!();
+    }
+    println!("Expected shape (paper §4): accuracy grows with B and saturates; merging");
+    println!("frequency is nearly independent of B while B ≪ #SVs of the full model;");
+    println!("merging beats removal at small budgets; projection is accurate but slow.");
+}

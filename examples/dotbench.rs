@@ -1,0 +1,36 @@
+//! Perf-pass micro-probe: raw kernel-row cost (dot product + exp) at the
+//! three feature widths the dataset profiles use. This is the measurement
+//! behind EXPERIMENTS.md Perf iteration 1 (the chunks_exact dot rewrite);
+//! rerun it when touching kernel::dot.
+//!
+//! cargo run --release --example dotbench
+
+use budgetsvm::kernel::dot;
+use budgetsvm::util::bench::Bencher;
+use budgetsvm::util::rng::Rng;
+fn main() {
+    let mut rng = Rng::new(1);
+    for d in [22usize, 123, 300] {
+        let a: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        let sv: Vec<f32> = (0..500*d).map(|_| rng.normal() as f32).collect();
+        let mut b = Bencher::new();
+        let r = b.bench(&format!("kernel row 500xd{d}"), || {
+            let mut acc = 0.0f64;
+            for j in 0..500 {
+                let s = &sv[j*d..(j+1)*d];
+                let dd = dot(&a, s);
+                acc += (-0.5f64 * dd as f64).exp();
+            }
+            acc
+        });
+        r.report(Some(500.0));
+        let r2 = b.bench(&format!("dot-only 500xd{d}"), || {
+            let mut acc = 0.0f32;
+            for j in 0..500 {
+                acc += dot(&a, &sv[j*d..(j+1)*d]);
+            }
+            acc
+        });
+        r2.report(Some(500.0));
+    }
+}

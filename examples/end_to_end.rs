@@ -1,0 +1,116 @@
+//! End-to-end driver: the full three-layer system on a real small workload.
+//!
+//! 1. Generates the SUSY-like workload (the paper's largest dataset,
+//!    downscaled per DESIGN.md §5) — L3 data pipeline.
+//! 2. Trains BSGD with GSS-standard and with Lookup-WD (the paper's
+//!    headline comparison), logging the objective curve — L3 solver with
+//!    the paper's contribution on the hot path.
+//! 3. Evaluates both models on the held-out test set **through the PJRT
+//!    runtime**, i.e. the Pallas `gauss_decision` kernel lowered by JAX and
+//!    executed from Rust — proving L1/L2/L3 compose.
+//! 4. Reports the timing breakdown and the relative speed-up.
+//!
+//! Results of the canonical run are recorded in EXPERIMENTS.md.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example end_to_end [scale]
+//! ```
+
+use budgetsvm::budget::{MergeSolver, Strategy};
+use budgetsvm::config::ExperimentConfig;
+use budgetsvm::data::synthetic::Profile;
+use budgetsvm::experiments::{options_for, prepare};
+use budgetsvm::metrics::Section;
+use budgetsvm::runtime::Runtime;
+use budgetsvm::solver::train_bsgd;
+
+fn main() -> anyhow::Result<()> {
+    let scale: f64 = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(0.2);
+    let cfg = ExperimentConfig { scale, ..Default::default() };
+    let profile = Profile::by_name("susy").unwrap();
+    let prep = prepare(profile, &cfg);
+    let budget = 100;
+    println!("=== end-to-end: SUSY-like workload ===");
+    println!(
+        "n_train={}, n_test={}, d={}, B={budget}, C=2^{}, γ=2^{}, single pass\n",
+        prep.train.len(),
+        prep.test.len(),
+        prep.train.dim(),
+        profile.log2_c,
+        profile.log2_gamma
+    );
+
+    // --- Train with both solvers, logging the loss curve. ---
+    let mut reports = Vec::new();
+    for method in [MergeSolver::GssStandard, MergeSolver::LookupWd] {
+        let mut opts = options_for(&prep, &cfg, Strategy::Merge(method), budget, 0);
+        opts.curve_every = (prep.train.len() as u64 / 10).max(1);
+        opts.curve_sample = 1024;
+        println!("--- training with {} ---", method.name());
+        let report = train_bsgd(&prep.train, &opts);
+        println!("  step        objective    sample-acc   #SV");
+        for p in &report.curve {
+            println!(
+                "  {:>8}  {:>12.5}  {:>10.3}%  {:>4}",
+                p.step,
+                p.objective,
+                100.0 * p.sample_accuracy,
+                p.num_sv
+            );
+        }
+        println!(
+            "  wall {:.3}s | sgd {:.3}s | maintenance {:.3}s (A {:.3}s + B {:.3}s) | merge freq {:.1}%\n",
+            report.wall_seconds,
+            report.profiler.seconds(Section::SgdStep),
+            report.profiler.maintenance_seconds(),
+            report.profiler.seconds(Section::MaintA),
+            report.profiler.seconds(Section::MaintB),
+            100.0 * report.merging_frequency(),
+        );
+        reports.push((method, report));
+    }
+
+    // --- Evaluate through the AOT/PJRT path (L1+L2 artifacts). ---
+    let rt = Runtime::load("artifacts")?;
+    println!("--- evaluation through the PJRT/Pallas artifact path ---");
+    for (method, report) in &reports {
+        let native = report.model.accuracy(&prep.test);
+        let pjrt = rt.accuracy(&report.model, &prep.test)?;
+        println!(
+            "  {:<13} test accuracy: native {:.3}% | pjrt {:.3}% | Δ {:.4}",
+            method.name(),
+            100.0 * native,
+            100.0 * pjrt,
+            (native - pjrt).abs()
+        );
+        anyhow::ensure!((native - pjrt).abs() < 0.01, "PJRT and native eval diverge");
+    }
+
+    // --- Headline comparison. ---
+    let (t_gss, t_lut) = (reports[0].1.wall_seconds, reports[1].1.wall_seconds);
+    let (a_gss, a_lut) = (
+        reports[0].1.profiler.seconds(Section::MaintA),
+        reports[1].1.profiler.seconds(Section::MaintA),
+    );
+    let m_gss = reports[0].1.profiler.maintenance_seconds();
+    let m_lut = reports[1].1.profiler.maintenance_seconds();
+    println!("\n--- headline (paper: −65% merging time, −44% total on SUSY) ---");
+    println!(
+        "  section A (compute h/WD): {a_gss:.3}s → {a_lut:.3}s  ({:+.1}%)",
+        100.0 * (a_lut - a_gss) / a_gss.max(1e-12)
+    );
+    println!(
+        "  merging time total      : {m_gss:.3}s → {m_lut:.3}s  ({:+.1}%)",
+        100.0 * (m_lut - m_gss) / m_gss.max(1e-12)
+    );
+    println!(
+        "  training time total     : {t_gss:.3}s → {t_lut:.3}s  ({:+.1}%)",
+        100.0 * (t_lut - t_gss) / t_gss.max(1e-12)
+    );
+    let acc_diff = (reports[0].1.model.accuracy(&prep.test)
+        - reports[1].1.model.accuracy(&prep.test))
+        .abs();
+    println!("  |accuracy difference|   : {:.3}% (paper: within run-to-run noise)", 100.0 * acc_diff);
+    println!("\nend-to-end OK");
+    Ok(())
+}

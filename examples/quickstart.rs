@@ -1,0 +1,37 @@
+//! Quickstart: train a budgeted kernel SVM in five lines.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use budgetsvm::budget::{MergeSolver, Strategy};
+use budgetsvm::data::synthetic::two_moons;
+use budgetsvm::solver::{train_bsgd, BsgdOptions};
+
+fn main() {
+    // A nonlinearly separable toy problem: two interleaved half-moons.
+    let train = two_moons(4000, 0.12, 42);
+    let test = two_moons(1000, 0.12, 43);
+
+    // Budget B = 50 support vectors; C = 10, Gaussian kernel gamma = 2.
+    let mut opts = BsgdOptions::with_c(50, 10.0, 2.0, train.len());
+    opts.passes = 5;
+    opts.strategy = Strategy::Merge(MergeSolver::LookupWd); // the paper's method
+
+    let report = train_bsgd(&train, &opts);
+
+    println!("two-moons, n={} -> budget {} SVs", train.len(), report.model.num_sv());
+    println!("steps               : {}", report.steps);
+    println!("SV insertions       : {}", report.sv_inserts);
+    println!("merge events        : {}", report.maintenance_events);
+    println!("merging frequency   : {:.1}%", 100.0 * report.merging_frequency());
+    println!("train accuracy      : {:.2}%", 100.0 * report.model.accuracy(&train));
+    println!("test accuracy       : {:.2}%", 100.0 * report.model.accuracy(&test));
+    println!("wall time           : {:.3}s", report.wall_seconds);
+    println!(
+        "time in maintenance : {:.1}%",
+        100.0 * report.maintenance_fraction()
+    );
+    assert!(report.model.accuracy(&test) > 0.9, "quickstart sanity check");
+    println!("OK");
+}

@@ -1,0 +1,117 @@
+"""AOT export: lower the L2 graphs to HLO text + build the lookup table.
+
+Interchange format is **HLO text**, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which the published ``xla``
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Artifacts written (all consumed by ``rust/src/runtime``):
+
+* ``decision_b{B}_d{D}.hlo.txt`` — ``decision_margins`` lowered at batch
+  N=1024 for each (B, D) shape variant; the Rust side zero-pads rows,
+  features, SVs and coefficients up to the variant (padding is exact: a
+  padded SV has alpha = 0, padded feature dims are 0 on both operands).
+* ``merge_scan_p{P}_g{G}.hlo.txt`` — ``merge_argmin`` lowered for padded
+  candidate counts P with a G x G WD table input.
+* ``table{G}.tbl`` — the precomputed lookup tables in the shared binary
+  format (also loadable by the Rust ``LookupTable``).
+* ``manifest.json`` — shapes of everything above.
+
+Run via ``make artifacts`` (no-op when inputs are unchanged).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import table as table_mod
+from .model import decision_margins, merge_argmin
+
+# Batch rows per decision-artifact execution (multiple of the kernel tile).
+BATCH_N = 1024
+# (B, D) variants: budgets 100/200 pad to 128+1->256? No: budget B plus the
+# transient (B+1)-th SV still fits 512; the runtime picks the smallest
+# variant with b >= num_sv and d >= dim.
+DECISION_VARIANTS = [(128, 32), (512, 32), (128, 128), (512, 128), (128, 304), (512, 304)]
+MERGE_VARIANTS = [128, 512]
+TABLE_GRID = 400
+
+
+def to_hlo_text(lowered):
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_decision(b, d):
+    spec = jax.ShapeDtypeStruct
+    return jax.jit(decision_margins).lower(
+        spec((BATCH_N, d), jnp.float32),  # x
+        spec((BATCH_N,), jnp.float32),  # y
+        spec((b, d), jnp.float32),  # sv
+        spec((b,), jnp.float32),  # alpha
+        spec((1,), jnp.float32),  # gamma
+    )
+
+
+def lower_merge(p, g):
+    spec = jax.ShapeDtypeStruct
+    return jax.jit(merge_argmin).lower(
+        spec((p,), jnp.float32),  # alpha
+        spec((p,), jnp.float32),  # kappa
+        spec((1,), jnp.float32),  # alpha_min
+        spec((p,), jnp.float32),  # mask
+        spec((g, g), jnp.float32),  # wd table
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifacts directory")
+    ap.add_argument("--grid", type=int, default=TABLE_GRID)
+    ap.add_argument(
+        "--skip-table", action="store_true", help="only lower HLO (table built elsewhere)"
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {"batch_n": BATCH_N, "decision": [], "merge_scan": [], "table": None}
+
+    for b, d in DECISION_VARIANTS:
+        text = to_hlo_text(lower_decision(b, d))
+        name = f"decision_b{b}_d{d}.hlo.txt"
+        with open(os.path.join(args.out, name), "w") as f:
+            f.write(text)
+        manifest["decision"].append({"file": name, "b": b, "d": d, "n": BATCH_N})
+        print(f"wrote {name} ({len(text)} chars)")
+
+    for p in MERGE_VARIANTS:
+        text = to_hlo_text(lower_merge(p, args.grid))
+        name = f"merge_scan_p{p}_g{args.grid}.hlo.txt"
+        with open(os.path.join(args.out, name), "w") as f:
+            f.write(text)
+        manifest["merge_scan"].append({"file": name, "p": p, "g": args.grid})
+        print(f"wrote {name} ({len(text)} chars)")
+
+    if not args.skip_table:
+        h, s, wd = table_mod.build_tables(args.grid)
+        tname = f"table{args.grid}.tbl"
+        table_mod.save_tables(os.path.join(args.out, tname), h, s, wd)
+        manifest["table"] = {"file": tname, "grid": args.grid}
+        print(f"wrote {tname}")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print("wrote manifest.json")
+
+
+if __name__ == "__main__":
+    main()

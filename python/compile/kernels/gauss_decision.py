@@ -1,0 +1,83 @@
+"""L1 Pallas kernel: batched Gaussian-kernel decision values.
+
+This is the paper's compute hot spot: the margin computation
+``<w, phi(x)> = sum_j alpha_j k(x_j, x)`` dominates BSGD step time
+(Section 2: "The most costly step is the computation of <w, phi(x_i)>").
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the batch is tiled into
+``(TN, D)`` VMEM blocks via ``BlockSpec``; the support-vector matrix
+``(B, D)``, the coefficients and the scalar bandwidth stay resident across
+grid steps. The cross term ``X @ SV^T`` is an MXU matmul; row norms,
+``exp`` and the weighted reduction fuse in the VPU. VMEM at the largest
+variant (TN=128, B=512, D=304): (128+512)*304*4 + 128*512*4 = 1.0 MiB
+<< 16 MiB, leaving room to double-buffer the X tiles.
+
+``gamma`` is a runtime input (shape-(1,) tensor), not a static constant, so
+one AOT artifact per (B, D) serves every dataset's bandwidth.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; numerics are identical and the structure is what a TPU build
+would compile.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows per grid step. 128 matches the MXU systolic dimension and keeps the
+# X tile at 128*D*4 bytes (152 KiB at D=304).
+TILE_N = 128
+
+
+def _kernel(x_ref, sv_ref, alpha_ref, gamma_ref, o_ref):
+    x = x_ref[...]  # (TN, D)
+    sv = sv_ref[...]  # (B, D)
+    alpha = alpha_ref[...]  # (B,)
+    gamma = gamma_ref[...][0]  # scalar
+    # ||x - s||^2 = ||x||^2 + ||s||^2 - 2 x.s ; cross term on the MXU.
+    cross = jnp.dot(x, sv.T, preferred_element_type=jnp.float32)  # (TN, B)
+    xn = jnp.sum(x * x, axis=1, keepdims=True)  # (TN, 1)
+    sn = jnp.sum(sv * sv, axis=1)[None, :]  # (1, B)
+    d2 = jnp.maximum(xn + sn - 2.0 * cross, 0.0)
+    k = jnp.exp(-gamma * d2)  # (TN, B)
+    o_ref[...] = k @ alpha  # (TN,)
+
+
+@jax.jit
+def gauss_decision(x, sv, alpha, gamma):
+    """Pallas-tiled batched decision function.
+
+    Args:
+      x:     (N, D) query rows; N must be a multiple of TILE_N (the AOT
+             wrapper pads).
+      sv:    (B, D) support vectors (zero-padded rows must carry alpha=0).
+      alpha: (B,)   coefficients.
+      gamma: scalar or shape-(1,) bandwidth (runtime input).
+
+    Returns:
+      (N,) decision values, f32.
+    """
+    n, d = x.shape
+    b, d2 = sv.shape
+    assert d == d2, f"feature dims differ: {d} vs {d2}"
+    assert alpha.shape == (b,)
+    assert n % TILE_N == 0, f"N={n} must be a multiple of {TILE_N}"
+    grid = (n // TILE_N,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_N, d), lambda i: (i, 0)),
+            pl.BlockSpec((b, d), lambda i: (0, 0)),
+            pl.BlockSpec((b,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((TILE_N,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(
+        x.astype(jnp.float32),
+        sv.astype(jnp.float32),
+        alpha.astype(jnp.float32),
+        jnp.reshape(gamma, (1,)).astype(jnp.float32),
+    )

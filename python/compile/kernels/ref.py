@@ -1,0 +1,97 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the semantic ground truth: every Pallas kernel in this package
+must match its oracle to float tolerance (enforced by
+``python/tests/test_kernels.py``). They are also the reference used when
+estimating the kernels' roofline in DESIGN.md §8.
+"""
+
+import jax.numpy as jnp
+
+
+def gauss_decision_ref(x, sv, alpha, gamma):
+    """Batched Gaussian-kernel decision values.
+
+    f(x_i) = sum_j alpha_j * exp(-gamma * ||x_i - sv_j||^2)
+
+    Args:
+      x:     (N, D) query rows.
+      sv:    (B, D) support vectors.
+      alpha: (B,)   coefficients (zero-padded rows contribute nothing).
+      gamma: scalar bandwidth.
+
+    Returns:
+      (N,) decision values, f32.
+    """
+    x = x.astype(jnp.float32)
+    sv = sv.astype(jnp.float32)
+    alpha = alpha.astype(jnp.float32)
+    xn = jnp.sum(x * x, axis=1, keepdims=True)  # (N, 1)
+    sn = jnp.sum(sv * sv, axis=1)[None, :]  # (1, B)
+    d2 = jnp.maximum(xn + sn - 2.0 * (x @ sv.T), 0.0)  # (N, B)
+    k = jnp.exp(-gamma * d2)
+    return k @ alpha
+
+
+def bilinear_ref(table, u, v):
+    """Bilinear interpolation of ``table`` (G, G) at coordinates in [0, 1].
+
+    Matches the Rust ``LookupTable::bilinear``: uniform grid with G nodes
+    per axis, clamped to the unit square.
+
+    Args:
+      table: (G, G) grid values, indexed [i_u, i_v].
+      u, v:  (...,) query coordinates.
+
+    Returns:
+      (...,) interpolated values.
+    """
+    g = table.shape[0]
+    denom = jnp.float32(g - 1)
+    uu = jnp.clip(u, 0.0, 1.0) * denom
+    vv = jnp.clip(v, 0.0, 1.0) * denom
+    iu = jnp.minimum(uu.astype(jnp.int32), g - 2)
+    iv = jnp.minimum(vv.astype(jnp.int32), g - 2)
+    fu = uu - iu.astype(jnp.float32)
+    fv = vv - iv.astype(jnp.float32)
+    flat = table.reshape(-1)
+    v00 = jnp.take(flat, iu * g + iv)
+    v01 = jnp.take(flat, iu * g + iv + 1)
+    v10 = jnp.take(flat, (iu + 1) * g + iv)
+    v11 = jnp.take(flat, (iu + 1) * g + iv + 1)
+    r0 = v00 + (v01 - v00) * fv
+    r1 = v10 + (v11 - v10) * fv
+    return r0 + (r1 - r0) * fu
+
+
+def merge_scan_ref(alpha, kappa, alpha_min, mask, wd_table):
+    """Scored merge-candidate scan (Algorithm 1's inner loop, Lookup-WD).
+
+    For each candidate j: m_j = alpha_j / (alpha_j + alpha_min),
+    WD_j = (alpha_j + alpha_min)^2 * wd(m_j, kappa_j); masked candidates get
+    a huge finite sentinel (not inf: keeps the HLO free of inf literals).
+
+    Args:
+      alpha:     (P,) candidate effective coefficients (padded entries
+                 arbitrary).
+      kappa:     (P,) kernel values k(x_min, x_j).
+      alpha_min: scalar coefficient of the fixed min-|alpha| partner
+                 (passed as shape-(1,) array to keep the HLO signature
+                 tensor-only).
+      mask:      (P,) 1.0 for valid same-label candidates, 0.0 for padding /
+                 opposite sign / the min vector itself.
+      wd_table:  (G, G) normalized weight-degradation table, axes (m, kappa).
+
+    Returns:
+      (P,) scores: effective WD for valid candidates, 1e30 elsewhere.
+    """
+    alpha = alpha.astype(jnp.float32)
+    kappa = kappa.astype(jnp.float32)
+    mask = mask.astype(jnp.float32)
+    amin = jnp.reshape(alpha_min, (1,)).astype(jnp.float32)
+    s = alpha + amin
+    safe_s = jnp.where(jnp.abs(s) > 1e-30, s, 1.0)
+    m = alpha / safe_s
+    wd = bilinear_ref(wd_table, m, kappa)
+    scores = s * s * wd
+    return jnp.where(mask > 0.5, scores, jnp.float32(1e30))

@@ -1,0 +1,48 @@
+"""L2: JAX compute graphs over the L1 Pallas kernels.
+
+Two graphs are AOT-lowered per shape variant (see ``aot.py``):
+
+* ``decision_margins`` — batched decision values plus margins
+  ``y * f(x)`` for a tile of rows against the SV set: the quantity every
+  BSGD step and every evaluation pass needs. Calls the
+  ``gauss_decision`` Pallas kernel.
+* ``merge_argmin`` — the Lookup-WD candidate scan over a padded candidate
+  vector, returning per-candidate scores and the winning index. Calls the
+  ``merge_scan`` Pallas kernel.
+
+Python exists only on this compile path; the Rust runtime executes the
+lowered HLO through PJRT.
+"""
+
+import jax.numpy as jnp
+
+from .kernels.gauss_decision import gauss_decision
+from .kernels.merge_scan import merge_scan
+
+
+def decision_margins(x, y, sv, alpha, gamma):
+    """Decision values and margins for a batch.
+
+    Args:
+      x:     (N, D) rows (N a multiple of the kernel tile).
+      y:     (N,)   labels in {-1, +1} (0 for padding rows).
+      sv:    (B, D) support vectors, zero-padded.
+      alpha: (B,)   coefficients, zero-padded.
+      gamma: static bandwidth.
+
+    Returns:
+      (decision (N,), margin (N,)): margin = y * decision (0 on padding).
+    """
+    f = gauss_decision(x, sv, alpha, gamma)
+    return f, y.astype(jnp.float32) * f
+
+
+def merge_argmin(alpha, kappa, alpha_min, mask, wd_table):
+    """Candidate scores and the argmin winner.
+
+    Returns:
+      (scores (P,), best_idx (), best_score ()).
+    """
+    scores = merge_scan(alpha, kappa, alpha_min, mask, wd_table)
+    best = jnp.argmin(scores)
+    return scores, best.astype(jnp.int32), scores[best]

@@ -1,0 +1,125 @@
+"""Build-time precomputation of the merge lookup tables (Section 3).
+
+Vectorized golden section search over the whole (m, kappa) grid at once:
+a coarse 33-point scan brackets the dominant mode (the objective is bimodal
+for kappa < e^-2, Lemma 1), then ~50 golden-section iterations shrink every
+bracket below eps = 1e-10 simultaneously.
+
+The result is written in the same binary format as the Rust
+``LookupTable::{save,load}`` (magic ``BSVMTBL1``, u64 grid size, then the
+h / s / wd grids as little-endian f64), so the Rust coordinator can load a
+Python-built table and vice versa — the cross-language equivalence is a
+test in both directions.
+"""
+
+import struct
+
+import numpy as np
+
+MAGIC = b"BSVMTBL1"
+BUILD_EPS = 1e-10
+INV_PHI = (np.sqrt(5.0) - 1.0) / 2.0
+SCAN_POINTS = 33
+
+
+def s_value(m, kappa, h):
+    """Normalized merge objective; arrays broadcast."""
+    omh = 1.0 - h
+    # 0**0 = 1 per IEEE pow; numpy follows suit.
+    return (1.0 - m) * kappa ** (omh * omh) + m * kappa ** (h * h)
+
+
+def wd_from_s(m, kappa, s_star):
+    return np.maximum(m * m + (1.0 - m) ** 2 + 2.0 * m * (1.0 - m) * kappa - s_star * s_star, 0.0)
+
+
+def build_tables(grid=400, eps=BUILD_EPS):
+    """Precompute h/s/wd grids. Returns (h, s, wd) float64 arrays (G, G)."""
+    assert grid >= 2
+    coords = np.linspace(0.0, 1.0, grid)
+    m = coords[:, None]  # (G, 1)
+    kappa = coords[None, :]  # (1, G)
+    m_b = np.broadcast_to(m, (grid, grid))
+    k_b = np.broadcast_to(kappa, (grid, grid))
+
+    # Coarse scan to bracket the dominant mode.
+    hs = np.linspace(0.0, 1.0, SCAN_POINTS)
+    vals = np.stack([s_value(m_b, k_b, h) for h in hs])  # (S, G, G)
+    best = np.argmax(vals, axis=0)  # (G, G)
+    step = 1.0 / (SCAN_POINTS - 1)
+    lo = np.clip((best - 1) * step, 0.0, 1.0)
+    hi = np.clip((best + 1) * step, 0.0, 1.0)
+
+    # Vectorized golden section on all grid cells at once.
+    x1 = hi - INV_PHI * (hi - lo)
+    x2 = lo + INV_PHI * (hi - lo)
+    f1 = s_value(m_b, k_b, x1)
+    f2 = s_value(m_b, k_b, x2)
+    # Bracket shrinks by INV_PHI per iteration; iterations to reach eps from
+    # width 2*step: log(eps / (2 step)) / log(INV_PHI).
+    iters = int(np.ceil(np.log(eps / (2 * step)) / np.log(INV_PHI))) + 1
+    for _ in range(iters):
+        take_right = f1 < f2
+        lo = np.where(take_right, x1, lo)
+        hi = np.where(take_right, hi, x2)
+        x1_new = np.where(take_right, x2, hi - INV_PHI * (hi - lo))
+        x2_new = np.where(take_right, lo + INV_PHI * (hi - lo), x1)
+        f1_new = np.where(take_right, f2, s_value(m_b, k_b, x1_new))
+        f2_new = np.where(take_right, s_value(m_b, k_b, x2_new), f1)
+        x1, x2, f1, f2 = x1_new, x2_new, f1_new, f2_new
+
+    h = 0.5 * (lo + hi)
+    s = s_value(m_b, k_b, h)
+    wd = wd_from_s(m_b, k_b, s)
+
+    # kappa = 0 column: s_{m,0}(h) is discontinuous at the boundary
+    # (0**0 = 1), so GSS lands in the interior where s == 0. Use the
+    # continuous limit kappa -> 0+ instead: the optimum degenerates to
+    # removal of the smaller vector — h -> 0 (keep x_b) when m >= 1/2, else
+    # h -> 1, with s* = max(m, 1-m) and wd = min(m, 1-m)^2.
+    m0 = m_b[:, 0]
+    h[:, 0] = np.where(m0 >= 0.5, 0.0, 1.0)
+    s[:, 0] = np.maximum(m0, 1.0 - m0)
+    wd[:, 0] = np.minimum(m0, 1.0 - m0) ** 2
+    return h, s, wd
+
+
+def save_tables(path, h, s, wd):
+    """Serialize in the Rust-compatible binary format."""
+    g = h.shape[0]
+    assert h.shape == s.shape == wd.shape == (g, g)
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<Q", g))
+        for table in (h, s, wd):
+            f.write(np.ascontiguousarray(table, dtype="<f8").tobytes())
+
+
+def load_tables(path):
+    """Load tables written by either this module or the Rust side."""
+    with open(path, "rb") as f:
+        magic = f.read(8)
+        if magic != MAGIC:
+            raise ValueError(f"bad magic {magic!r}")
+        (g,) = struct.unpack("<Q", f.read(8))
+        out = []
+        for _ in range(3):
+            buf = f.read(g * g * 8)
+            out.append(np.frombuffer(buf, dtype="<f8").reshape(g, g).copy())
+    return tuple(out)
+
+
+def main():
+    import argparse
+
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--grid", type=int, default=400)
+    p.add_argument("--out", default="../artifacts/table400.tbl")
+    args = p.parse_args()
+    h, s, wd = build_tables(args.grid)
+    save_tables(args.out, h, s, wd)
+    print(f"wrote {args.grid}x{args.grid} tables to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,146 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.gauss_decision import TILE_N, gauss_decision
+from compile.kernels.merge_scan import SENTINEL, merge_scan
+from compile.kernels.ref import bilinear_ref, gauss_decision_ref, merge_scan_ref
+from compile.table import build_tables
+
+
+def rand_problem(rng, n, b, d):
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    sv = rng.standard_normal((b, d)).astype(np.float32)
+    alpha = rng.standard_normal(b).astype(np.float32)
+    return x, sv, alpha
+
+
+class TestGaussDecision:
+    @pytest.mark.parametrize("n,b,d", [(128, 16, 4), (256, 128, 32), (128, 512, 32), (384, 64, 7)])
+    def test_matches_ref(self, n, b, d):
+        rng = np.random.default_rng(7)
+        x, sv, alpha = rand_problem(rng, n, b, d)
+        got = np.asarray(gauss_decision(x, sv, alpha, 0.5))
+        want = np.asarray(gauss_decision_ref(x, sv, alpha, 0.5))
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_zero_alpha_padding_is_exact(self):
+        rng = np.random.default_rng(3)
+        x, sv, alpha = rand_problem(rng, 128, 60, 8)
+        # Pad SVs with garbage rows but alpha = 0.
+        sv_pad = np.concatenate([sv, rng.standard_normal((68, 8)).astype(np.float32)])
+        alpha_pad = np.concatenate([alpha, np.zeros(68, np.float32)])
+        a = np.asarray(gauss_decision(x, sv, alpha, 1.3))
+        b = np.asarray(gauss_decision(x, sv_pad, alpha_pad, 1.3))
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+    def test_zero_feature_padding_is_exact(self):
+        rng = np.random.default_rng(4)
+        x, sv, alpha = rand_problem(rng, 128, 32, 5)
+        xp = np.pad(x, ((0, 0), (0, 11)))
+        svp = np.pad(sv, ((0, 0), (0, 11)))
+        a = np.asarray(gauss_decision(x, sv, alpha, 0.25))
+        b = np.asarray(gauss_decision(xp, svp, alpha, 0.25))
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+    def test_gamma_as_runtime_input(self):
+        rng = np.random.default_rng(5)
+        x, sv, alpha = rand_problem(rng, 128, 16, 3)
+        for gamma in (0.0078125, 1.0, 8.0):
+            got = np.asarray(gauss_decision(x, sv, alpha, np.float32(gamma)))
+            want = np.asarray(gauss_decision_ref(x, sv, alpha, gamma))
+            np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_rejects_non_tile_batch(self):
+        rng = np.random.default_rng(6)
+        x, sv, alpha = rand_problem(rng, 100, 8, 3)
+        with pytest.raises(AssertionError):
+            gauss_decision(x, sv, alpha, 1.0)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n_tiles=st.integers(1, 3),
+        b=st.integers(1, 96),
+        d=st.integers(1, 48),
+        gamma=st.floats(1e-3, 16.0),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_shape_sweep(self, n_tiles, b, d, gamma, seed):
+        rng = np.random.default_rng(seed)
+        x, sv, alpha = rand_problem(rng, TILE_N * n_tiles, b, d)
+        got = np.asarray(gauss_decision(x, sv, alpha, gamma))
+        want = np.asarray(gauss_decision_ref(x, sv, alpha, gamma))
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+class TestMergeScan:
+    @pytest.fixture(scope="class")
+    def wd_table(self):
+        _, _, wd = build_tables(50)
+        return wd.astype(np.float32)
+
+    def rand_scan(self, rng, p):
+        alpha = (0.05 + rng.random(p)).astype(np.float32)
+        kappa = rng.random(p).astype(np.float32)
+        amin = np.array([0.04], np.float32)
+        mask = (rng.random(p) > 0.3).astype(np.float32)
+        return alpha, kappa, amin, mask
+
+    @pytest.mark.parametrize("p", [8, 128, 512])
+    def test_matches_ref(self, wd_table, p):
+        rng = np.random.default_rng(11)
+        alpha, kappa, amin, mask = self.rand_scan(rng, p)
+        got = np.asarray(merge_scan(alpha, kappa, amin, mask, wd_table))
+        want = np.asarray(merge_scan_ref(alpha, kappa, amin, mask, wd_table))
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+    def test_masked_lanes_are_sentinel(self, wd_table):
+        rng = np.random.default_rng(12)
+        alpha, kappa, amin, mask = self.rand_scan(rng, 64)
+        scores = np.asarray(merge_scan(alpha, kappa, amin, mask, wd_table))
+        assert np.all(scores[mask < 0.5] == SENTINEL)
+        assert np.all(scores[mask > 0.5] < SENTINEL)
+
+    def test_scores_scale_quadratically(self, wd_table):
+        # Doubling all coefficients must quadruple the scores.
+        rng = np.random.default_rng(13)
+        alpha, kappa, amin, mask = self.rand_scan(rng, 32)
+        mask[:] = 1.0
+        s1 = np.asarray(merge_scan(alpha, kappa, amin, mask, wd_table))
+        s2 = np.asarray(merge_scan(2 * alpha, kappa, 2 * amin, mask, wd_table))
+        np.testing.assert_allclose(s2, 4.0 * s1, rtol=1e-4, atol=1e-6)
+
+    @settings(max_examples=25, deadline=None)
+    @given(p=st.integers(2, 256), seed=st.integers(0, 2**31 - 1))
+    def test_hypothesis_sweep(self, wd_table, p, seed):
+        rng = np.random.default_rng(seed)
+        alpha, kappa, amin, mask = self.rand_scan(rng, p)
+        got = np.asarray(merge_scan(alpha, kappa, amin, mask, wd_table))
+        want = np.asarray(merge_scan_ref(alpha, kappa, amin, mask, wd_table))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+class TestBilinearRef:
+    def test_exact_at_nodes(self):
+        rng = np.random.default_rng(1)
+        t = rng.random((9, 9)).astype(np.float32)
+        for i in range(9):
+            for j in range(9):
+                v = float(bilinear_ref(t, i / 8.0, j / 8.0))
+                assert abs(v - t[i, j]) < 1e-6
+
+    def test_linear_function_reproduced_exactly(self):
+        # Bilinear interpolation is exact on f(u,v) = a + b·u + c·v + d·u·v.
+        g = 17
+        u = np.linspace(0, 1, g)
+        t = (0.3 + 0.7 * u[:, None] - 0.2 * u[None, :] + 0.5 * u[:, None] * u[None, :]).astype(
+            np.float32
+        )
+        rng = np.random.default_rng(2)
+        for _ in range(50):
+            uu, vv = rng.random(), rng.random()
+            want = 0.3 + 0.7 * uu - 0.2 * vv + 0.5 * uu * vv
+            got = float(bilinear_ref(t, uu, vv))
+            assert abs(got - want) < 1e-5

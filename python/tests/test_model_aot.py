@@ -1,0 +1,100 @@
+"""L2 graphs and the AOT lowering path (HLO-text interchange)."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+from compile.kernels.ref import gauss_decision_ref, merge_scan_ref
+from compile.model import decision_margins, merge_argmin
+from compile.table import build_tables
+
+
+class TestDecisionMargins:
+    def test_margin_is_label_times_decision(self):
+        rng = np.random.default_rng(1)
+        x = rng.standard_normal((128, 8)).astype(np.float32)
+        y = np.where(rng.random(128) > 0.5, 1.0, -1.0).astype(np.float32)
+        sv = rng.standard_normal((16, 8)).astype(np.float32)
+        alpha = rng.standard_normal(16).astype(np.float32)
+        f, margin = decision_margins(x, y, sv, alpha, np.float32(0.5))
+        np.testing.assert_allclose(np.asarray(margin), y * np.asarray(f), rtol=1e-6)
+        want = np.asarray(gauss_decision_ref(x, sv, alpha, 0.5))
+        np.testing.assert_allclose(np.asarray(f), want, rtol=1e-5, atol=1e-5)
+
+
+class TestMergeArgmin:
+    def test_argmin_matches_ref_scan(self):
+        _, _, wd = build_tables(40)
+        wd = wd.astype(np.float32)
+        rng = np.random.default_rng(2)
+        alpha = (0.05 + rng.random(64)).astype(np.float32)
+        kappa = rng.random(64).astype(np.float32)
+        amin = np.array([0.03], np.float32)
+        mask = np.ones(64, np.float32)
+        mask[10:20] = 0.0
+        scores, best, best_score = merge_argmin(alpha, kappa, amin, mask, wd)
+        ref = np.asarray(merge_scan_ref(alpha, kappa, amin, mask, wd))
+        assert int(best) == int(np.argmin(ref))
+        np.testing.assert_allclose(float(best_score), ref.min(), rtol=1e-5)
+
+
+class TestAotLowering:
+    def test_decision_hlo_text_is_parseable_hlo(self):
+        text = aot.to_hlo_text(aot.lower_decision(128, 32))
+        assert "ENTRY" in text
+        assert "f32[1024,32]" in text  # x input shape survives
+        assert "f32[128,32]" in text  # sv input shape
+
+    def test_merge_hlo_text(self):
+        text = aot.to_hlo_text(aot.lower_merge(128, 50))
+        assert "ENTRY" in text
+        assert "f32[50,50]" in text
+
+    def test_lowered_decision_executes_and_matches_ref(self):
+        # Compile the same lowered module with jax and check numerics: this
+        # is the exact computation the Rust runtime will execute via PJRT.
+        lowered = aot.lower_decision(128, 32)
+        compiled = lowered.compile()
+        rng = np.random.default_rng(3)
+        x = rng.standard_normal((aot.BATCH_N, 32)).astype(np.float32)
+        y = np.ones(aot.BATCH_N, np.float32)
+        sv = rng.standard_normal((128, 32)).astype(np.float32)
+        alpha = rng.standard_normal(128).astype(np.float32)
+        gamma = np.array([0.25], np.float32)
+        f, margin = compiled(x, y, sv, alpha, gamma)
+        want = np.asarray(gauss_decision_ref(x, sv, alpha, 0.25))
+        np.testing.assert_allclose(np.asarray(f), want, rtol=1e-4, atol=1e-4)
+
+    def test_manifest_generation(self, tmp_path, monkeypatch):
+        # Run main() with a tiny configuration to keep the test fast.
+        monkeypatch.setattr(aot, "DECISION_VARIANTS", [(128, 32)])
+        monkeypatch.setattr(aot, "MERGE_VARIANTS", [128])
+        monkeypatch.setattr(
+            "sys.argv",
+            ["aot", "--out", str(tmp_path), "--grid", "24"],
+        )
+        aot.main()
+        manifest = json.loads((tmp_path / "manifest.json").read_text())
+        assert manifest["batch_n"] == aot.BATCH_N
+        assert (tmp_path / manifest["decision"][0]["file"]).exists()
+        assert (tmp_path / manifest["merge_scan"][0]["file"]).exists()
+        assert (tmp_path / manifest["table"]["file"]).exists()
+
+
+class TestPaddingContract:
+    """The Rust runtime pads rows/features/SVs; padding must be exact."""
+
+    def test_row_padding_zero_rows_get_zero_margin(self):
+        rng = np.random.default_rng(4)
+        x = np.zeros((128, 8), np.float32)
+        x[:50] = rng.standard_normal((50, 8))
+        y = np.zeros(128, np.float32)
+        y[:50] = 1.0
+        sv = rng.standard_normal((16, 8)).astype(np.float32)
+        alpha = rng.standard_normal(16).astype(np.float32)
+        _, margin = decision_margins(x, y, sv, alpha, np.float32(0.5))
+        np.testing.assert_array_equal(np.asarray(margin)[50:], 0.0)

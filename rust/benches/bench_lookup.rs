@@ -1,0 +1,108 @@
+//! Micro-benchmark behind Figure 2 / Section 3: a single merge-problem
+//! solution via golden section search vs. precomputed lookup, plus the
+//! grid-size ablation (build cost vs. lookup cost vs. precision).
+//!
+//! This is the paper's core claim at its smallest scale: the lookup
+//! replaces ~30 (ε=0.01) to ~50 (ε=1e-10) objective evaluations with four
+//! table reads and a handful of FLOPs.
+
+use budgetsvm::budget::geometry::{s_value, wd_from_s};
+use budgetsvm::budget::gss::maximize;
+use budgetsvm::budget::lookup::LookupTable;
+use budgetsvm::budget::merge::{GSS_PRECISE_EPS, GSS_STANDARD_EPS};
+use budgetsvm::util::bench::Bencher;
+use budgetsvm::util::rng::Rng;
+
+/// Pre-drawn query stream so RNG cost stays out of the timed path.
+#[derive(Clone)]
+struct Queries {
+    qs: std::sync::Arc<Vec<(f64, f64)>>,
+    i: usize,
+}
+
+impl Queries {
+    fn new(seed: u64, n: usize) -> Self {
+        let mut rng = Rng::new(seed);
+        Queries {
+            qs: std::sync::Arc::new((0..n).map(|_| (rng.uniform(), rng.uniform())).collect()),
+            i: 0,
+        }
+    }
+
+    #[inline]
+    fn next(&mut self) -> (f64, f64) {
+        self.i = (self.i + 1) % self.qs.len();
+        self.qs[self.i]
+    }
+}
+
+fn main() {
+    let mut b = Bencher::new();
+    let q = Queries::new(42, 4096);
+
+    println!("# one merge-problem solution (h + WD), per call\n");
+    let mut q1 = q.clone();
+    b.run("gss-standard (eps=1e-2)", move || {
+        let (m, k) = q1.next();
+        let h = maximize(|x| s_value(m, k, x), 0.0, 1.0, GSS_STANDARD_EPS);
+        wd_from_s(m, k, s_value(m, k, h))
+    });
+    let mut q2 = q.clone();
+    b.run("gss-precise (eps=1e-10)", move || {
+        let (m, k) = q2.next();
+        let h = maximize(|x| s_value(m, k, x), 0.0, 1.0, GSS_PRECISE_EPS);
+        wd_from_s(m, k, s_value(m, k, h))
+    });
+
+    let table = LookupTable::build(400);
+    let (t, mut q3) = (table.clone(), q.clone());
+    b.run("lookup-h + closed-form WD (G=400)", move || {
+        let (m, k) = q3.next();
+        let h = t.lookup_h(m, k);
+        wd_from_s(m, k, s_value(m, k, h))
+    });
+    let (t, mut q4) = (table.clone(), q.clone());
+    b.run("lookup-WD (G=400)", move || {
+        let (m, k) = q4.next();
+        t.lookup_wd(m, k)
+    });
+    let (t, mut q5) = (table.clone(), q.clone());
+    b.run("lookup-h nearest (no interpolation)", move || {
+        let (m, k) = q5.next();
+        t.lookup_h_nearest(m, k)
+    });
+
+    if let Some(r) = b.ratio("gss-standard (eps=1e-2)", "lookup-WD (G=400)") {
+        println!("\nspeedup of lookup-WD over GSS-standard: {r:.1}x");
+    }
+    if let Some(r) = b.ratio("gss-precise (eps=1e-10)", "lookup-WD (G=400)") {
+        println!("speedup of lookup-WD over GSS-precise:  {r:.1}x");
+    }
+
+    println!("\n# grid-size ablation: build time, lookup time, max WD error vs exact\n");
+    let mut rng2 = Rng::new(7);
+    // Probe the smooth region κ > e⁻² (where interpolation is justified).
+    let probes: Vec<(f64, f64)> =
+        (0..300).map(|_| (rng2.uniform(), 0.14 + 0.86 * rng2.uniform())).collect();
+    for grid in [50usize, 100, 200, 400, 800] {
+        let t0 = std::time::Instant::now();
+        let t = LookupTable::build(grid);
+        let build = t0.elapsed();
+        let mut max_err = 0.0f64;
+        for &(m, k) in &probes {
+            let h = maximize(|x| s_value(m, k, x), 0.0, 1.0, GSS_PRECISE_EPS);
+            let exact = wd_from_s(m, k, s_value(m, k, h));
+            max_err = max_err.max((t.lookup_wd(m, k) - exact).abs());
+        }
+        let (tt, mut q6) = (t.clone(), q.clone());
+        let res = b.bench(&format!("lookup-WD G={grid}"), move || {
+            let (m, k) = q6.next();
+            tt.lookup_wd(m, k)
+        });
+        println!(
+            "G={grid:<4} build {build:>9.1?}  lookup {:>8.1}ns  max |wd err| {max_err:.2e}  mem {:.1} MiB",
+            res.mean_ns(),
+            (3 * grid * grid * 8) as f64 / (1024.0 * 1024.0)
+        );
+    }
+}

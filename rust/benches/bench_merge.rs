@@ -1,0 +1,58 @@
+//! Bench behind Figure 3 and Table 3's left half: one full budget-
+//! maintenance event (Algorithm 1 — min-α selection, κ row, candidate
+//! scan, merge) per solver, at both paper budget sizes.
+//!
+//! The model is cloned per iteration so every event sees the same state;
+//! the clone cost is reported separately and is identical across solvers.
+
+use budgetsvm::budget::{MergeEngine, MergeSolver};
+use budgetsvm::kernel::Gaussian;
+use budgetsvm::metrics::SectionProfiler;
+use budgetsvm::model::BudgetModel;
+use budgetsvm::util::bench::Bencher;
+use budgetsvm::util::rng::Rng;
+
+fn template_model(b: usize, d: usize, seed: u64) -> BudgetModel {
+    let mut rng = Rng::new(seed);
+    let mut m = BudgetModel::new(d, Gaussian::new(0.5), b + 1);
+    for _ in 0..b + 1 {
+        let row: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        // Mixed labels, same-sign majority — realistic SGD state.
+        let sign = if rng.bernoulli(0.7) { 1.0 } else { -1.0 };
+        m.push(&row, sign * (0.02 + rng.uniform()));
+    }
+    m
+}
+
+fn main() {
+    let mut bencher = Bencher::new();
+    for &(budget, d) in &[(100usize, 22usize), (500, 22), (100, 123), (500, 123)] {
+        println!("# one budget-maintenance event, B={budget}, d={d}\n");
+        let template = template_model(budget, d, 9);
+        {
+            let t = template.clone();
+            bencher.run(&format!("clone-only overhead B={budget} d={d}"), move || t.clone());
+        }
+        for solver in MergeSolver::ALL {
+            let t = template.clone();
+            let mut engine = MergeEngine::new(solver, 400);
+            let mut prof = SectionProfiler::new();
+            bencher.run(&format!("{} B={budget} d={d}", solver.name()), move || {
+                let mut model = t.clone();
+                engine.maintain(&mut model, &mut prof)
+            });
+        }
+        println!();
+    }
+
+    // Paper-shape summary at B=500 (where the scan dominates).
+    for (a, b) in [
+        ("GSS-standard B=500 d=22", "Lookup-WD B=500 d=22"),
+        ("GSS-precise B=500 d=22", "Lookup-WD B=500 d=22"),
+        ("GSS-standard B=500 d=123", "Lookup-WD B=500 d=123"),
+    ] {
+        if let Some(r) = bencher.ratio(a, b) {
+            println!("{a} / {b} = {r:.2}x");
+        }
+    }
+}

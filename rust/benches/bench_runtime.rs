@@ -1,0 +1,92 @@
+//! PJRT runtime bench: batched decision evaluation through the AOT Pallas
+//! artifact vs. the native Rust implementation, and the AOT merge-scan
+//! kernel vs. the native engine scan.
+//!
+//! Requires `make artifacts`. The native path wins at small batches (no
+//! dispatch overhead); the artifact path demonstrates the compiled-kernel
+//! route a TPU deployment would take.
+
+use std::time::Instant;
+
+use budgetsvm::budget::LookupTable;
+use budgetsvm::data::synthetic::two_moons;
+use budgetsvm::kernel::Gaussian;
+use budgetsvm::model::BudgetModel;
+use budgetsvm::runtime::Runtime;
+use budgetsvm::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let rt = match Runtime::load("artifacts") {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("SKIP bench_runtime: {e:#} (run `make artifacts`)");
+            return Ok(());
+        }
+    };
+    println!("# decision-batch evaluation: native vs PJRT/Pallas artifact\n");
+
+    for &(num_sv, n_rows) in &[(100usize, 1024usize), (500, 1024), (100, 8192), (500, 8192)] {
+        let ds = two_moons(n_rows, 0.12, 3);
+        let mut rng = Rng::new(5);
+        let mut model = BudgetModel::new(2, Gaussian::new(2.0), num_sv);
+        for _ in 0..num_sv {
+            model.push(&[rng.normal() as f32, rng.normal() as f32], rng.normal());
+        }
+
+        let reps = 5;
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            std::hint::black_box(model.decision_batch(&ds));
+        }
+        let native = t0.elapsed().as_secs_f64() / reps as f64;
+
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            std::hint::black_box(rt.decision_batch(&model, &ds)?);
+        }
+        let pjrt = t0.elapsed().as_secs_f64() / reps as f64;
+
+        println!(
+            "B={num_sv:<4} rows={n_rows:<6} native {:>8.3}ms ({:>6.1} Mrow·SV/s) | pjrt {:>8.3}ms ({:>6.1} Mrow·SV/s)",
+            1e3 * native,
+            (n_rows * num_sv) as f64 / native / 1e6,
+            1e3 * pjrt,
+            (n_rows * num_sv) as f64 / pjrt / 1e6,
+        );
+    }
+
+    println!("\n# merge scan: native engine scoring vs PJRT/Pallas artifact\n");
+    let table = LookupTable::build(400);
+    let mut rng = Rng::new(9);
+    for &c in &[100usize, 500] {
+        let alpha_min = 0.05;
+        let alpha: Vec<f64> = (0..c).map(|_| alpha_min + rng.uniform()).collect();
+        let kappa: Vec<f64> = (0..c).map(|_| rng.uniform()).collect();
+        let mask: Vec<f64> = vec![1.0; c];
+
+        let reps = 50;
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            let scores: Vec<f64> = (0..c)
+                .map(|j| {
+                    let s = alpha[j] + alpha_min;
+                    s * s * table.lookup_wd(alpha[j] / s, kappa[j])
+                })
+                .collect();
+            std::hint::black_box(scores);
+        }
+        let native = t0.elapsed().as_secs_f64() / reps as f64;
+
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            std::hint::black_box(rt.merge_scan(&alpha, &kappa, alpha_min, &mask, &table)?);
+        }
+        let pjrt = t0.elapsed().as_secs_f64() / reps as f64;
+        println!(
+            "candidates={c:<4} native {:>9.1}µs | pjrt {:>9.1}µs (dispatch-dominated at this size)",
+            1e6 * native,
+            1e6 * pjrt
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,41 @@
+//! SMO reference-solver scaling bench — the motivation for budgets
+//! (Section 1: exact dual training is quadratic-to-cubic in n) and the
+//! cost behind Table 1's reference column.
+
+use std::time::Instant;
+
+use budgetsvm::data::synthetic::two_moons;
+use budgetsvm::solver::smo::{train_smo, SmoOptions};
+
+fn main() {
+    println!("# SMO (exact dual) wall time vs n — why budgeted SGD exists\n");
+    println!("{:>6} {:>12} {:>10} {:>8} {:>10}", "n", "wall", "iters", "#SV", "train acc");
+    let mut last: Option<(usize, f64)> = None;
+    for n in [250usize, 500, 1000, 2000] {
+        let ds = two_moons(n, 0.15, 11);
+        let t0 = Instant::now();
+        let report = train_smo(
+            &ds,
+            &SmoOptions { c: 10.0, gamma: 3.0, max_rows: 4096, ..Default::default() },
+        )
+        .expect("smo");
+        let wall = t0.elapsed().as_secs_f64();
+        println!(
+            "{n:>6} {:>11.3}s {:>10} {:>8} {:>9.2}%",
+            wall,
+            report.iterations,
+            report.num_sv,
+            100.0 * report.model.accuracy(&ds)
+        );
+        if let Some((pn, pw)) = last {
+            let ratio = wall / pw;
+            let nratio = n as f64 / pn as f64;
+            println!(
+                "        scaling: n x{nratio:.1} -> time x{ratio:.1} (superlinear: {})",
+                ratio > nratio
+            );
+        }
+        last = Some((n, wall));
+    }
+    println!("\nCompare: BSGD at B=100 is linear in n and independent of #SV growth.");
+}

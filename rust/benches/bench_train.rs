@@ -1,0 +1,59 @@
+//! End-to-end training bench — the Table 3 measurement: total training
+//! time per merge solver on the six dataset profiles (downscaled), with
+//! the merging-time breakdown and the relative improvement of the lookup
+//! methods over GSS-standard.
+//!
+//! Full training runs take seconds; this harness times whole runs rather
+//! than micro-samples. `BENCH_SCALE` (default 0.03) controls the dataset
+//! size multiplier.
+
+use budgetsvm::budget::{MergeSolver, Strategy};
+use budgetsvm::config::ExperimentConfig;
+use budgetsvm::experiments::{options_for, prepare, METHODS};
+use budgetsvm::metrics::Section;
+use budgetsvm::solver::train_bsgd;
+
+fn main() {
+    let scale: f64 = std::env::var("BENCH_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(0.03);
+    let cfg = ExperimentConfig { scale, ..Default::default() };
+    println!("# end-to-end BSGD training time per merge solver (scale={scale})\n");
+    println!(
+        "{:<10} {:>7} {:<14} {:>10} {:>10} {:>10} {:>10} {:>9}",
+        "dataset", "budget", "method", "wall s", "sgd s", "maint A s", "maint B s", "mergefreq"
+    );
+
+    for profile in cfg.profiles() {
+        let prep = prepare(profile, &cfg);
+        let budget = profile.budgets[0];
+        let mut wall_gss = 0.0f64;
+        for &method in &METHODS {
+            let opts = options_for(&prep, &cfg, Strategy::Merge(method), budget, 0);
+            let report = train_bsgd(&prep.train, &opts);
+            if method == MergeSolver::GssStandard {
+                wall_gss = report.wall_seconds;
+            }
+            println!(
+                "{:<10} {:>7} {:<14} {:>10.3} {:>10.3} {:>10.3} {:>10.3} {:>8.1}%",
+                profile.name,
+                budget,
+                method.name(),
+                report.wall_seconds,
+                report.profiler.seconds(Section::SgdStep),
+                report.profiler.seconds(Section::MaintA),
+                report.profiler.seconds(Section::MaintB),
+                100.0 * report.merging_frequency(),
+            );
+        }
+        // Relative improvement (Table 3's left columns).
+        for method in [MergeSolver::LookupH, MergeSolver::LookupWd] {
+            let opts = options_for(&prep, &cfg, Strategy::Merge(method), budget, 1);
+            let report = train_bsgd(&prep.train, &opts);
+            println!(
+                "    improvement {} vs GSS-standard: {:+.2}%",
+                method.name(),
+                100.0 * (wall_gss - report.wall_seconds) / wall_gss.max(1e-12)
+            );
+        }
+        println!();
+    }
+}

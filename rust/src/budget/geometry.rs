@@ -1,0 +1,192 @@
+//! Normalized merge-problem geometry (Section 3 of the paper).
+//!
+//! Merging support vectors `(α_a, x_a)` and `(α_b, x_b)` under a Gaussian
+//! kernel reduces to a problem in two scalars:
+//!
+//! * `m = α_b / (α_a + α_b)` — relative coefficient of the candidate,
+//! * `κ = k(x_a, x_b)` — kernel value between the pair,
+//!
+//! both in `[0, 1]` when the pair has equal label signs. With
+//! `z = h·x_a + (1−h)·x_b` the kernel shortcuts
+//! `k(x_a, z) = κ^{(1−h)²}`, `k(x_b, z) = κ^{h²}` give the normalized
+//! objective (to MAXIMIZE over `h ∈ [0,1]`):
+//!
+//! ```text
+//! s_{m,κ}(h) = (1−m)·κ^{(1−h)²} + m·κ^{h²}  =  α_z(h) / (α_a + α_b)
+//! ```
+//!
+//! and the normalized weight degradation (to MINIMIZE):
+//!
+//! ```text
+//! wd(m,κ) = m² + (1−m)² + 2m(1−m)κ − s_{m,κ}(h*)²,   WD = (α_a+α_b)²·wd
+//! ```
+//!
+//! (The paper's Algorithm 1 lines 5/7/8 mix two conventions related by
+//! `h ↔ 1−h`; we fix the one consistent with its lines 8 and 13, see
+//! DESIGN.md §7.)
+
+/// Normalized merge objective `s_{m,κ}(h)`; equals `α_z(h)/(α_a+α_b)`.
+#[inline]
+pub fn s_value(m: f64, kappa: f64, h: f64) -> f64 {
+    let omh = 1.0 - h;
+    (1.0 - m) * kappa.powf(omh * omh) + m * kappa.powf(h * h)
+}
+
+/// Normalized weight degradation given the optimal objective value `s_star`.
+#[inline]
+pub fn wd_from_s(m: f64, kappa: f64, s_star: f64) -> f64 {
+    // ‖m φ_b + (1−m) φ_a‖² − s*² ; clamp tiny negative round-off.
+    (m * m + (1.0 - m) * (1.0 - m) + 2.0 * m * (1.0 - m) * kappa - s_star * s_star).max(0.0)
+}
+
+/// Un-normalized merged coefficient `α_z = α_a κ^{(1−h)²} + α_b κ^{h²}`.
+#[inline]
+pub fn alpha_z(alpha_a: f64, alpha_b: f64, kappa: f64, h: f64) -> f64 {
+    let omh = 1.0 - h;
+    alpha_a * kappa.powf(omh * omh) + alpha_b * kappa.powf(h * h)
+}
+
+/// Un-normalized weight degradation
+/// `WD = α_a² + α_b² + 2 α_a α_b κ − α_z²` (paper's Alg. 1 line 9; note its
+/// printed line 9 has `−…+2αaαbκ` grouped differently, this is the
+/// ‖before‖² − ‖projection‖² form, non-negative).
+#[inline]
+pub fn wd_unnormalized(alpha_a: f64, alpha_b: f64, kappa: f64, az: f64) -> f64 {
+    (alpha_a * alpha_a + alpha_b * alpha_b + 2.0 * alpha_a * alpha_b * kappa - az * az).max(0.0)
+}
+
+/// Below this κ the objective can become bimodal (Lemma 1: two modes iff
+/// `κ < e^{−2}` at `m = 1/2`).
+pub const KAPPA_BIMODAL: f64 = 0.135_335_283_236_612_7; // e^{-2}
+
+/// Brute-force oracle for `h* = argmax_h s_{m,κ}(h)`: dense grid scan plus
+/// local ternary refinement. Slow; used by tests and table validation only.
+pub fn oracle_h(m: f64, kappa: f64, grid: usize) -> f64 {
+    let mut best_h = 0.0;
+    let mut best_s = f64::NEG_INFINITY;
+    for i in 0..=grid {
+        let h = i as f64 / grid as f64;
+        let s = s_value(m, kappa, h);
+        if s > best_s {
+            best_s = s;
+            best_h = h;
+        }
+    }
+    // Ternary-search refinement within ±1 grid cell (the function is
+    // unimodal within one cell at reasonable grid sizes).
+    let mut lo = (best_h - 1.0 / grid as f64).max(0.0);
+    let mut hi = (best_h + 1.0 / grid as f64).min(1.0);
+    for _ in 0..200 {
+        let m1 = lo + (hi - lo) / 3.0;
+        let m2 = hi - (hi - lo) / 3.0;
+        if s_value(m, kappa, m1) < s_value(m, kappa, m2) {
+            lo = m1;
+        } else {
+            hi = m2;
+        }
+    }
+    0.5 * (lo + hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn s_value_limits() {
+        // κ → 1: merging identical points, s ≡ 1 for any h.
+        for &h in &[0.0, 0.3, 1.0] {
+            assert!((s_value(0.3, 1.0, h) - 1.0).abs() < 1e-12);
+        }
+        // h = 0 → z = x_b: s = (1−m)·κ + m.
+        assert!((s_value(0.25, 0.5, 0.0) - (0.75 * 0.5 + 0.25)).abs() < 1e-12);
+        // h = 1 → z = x_a: s = (1−m) + m·κ.
+        assert!((s_value(0.25, 0.5, 1.0) - (0.75 + 0.25 * 0.5)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn wd_zero_for_identical_points() {
+        let s = s_value(0.4, 1.0, 0.5);
+        assert!(wd_from_s(0.4, 1.0, s).abs() < 1e-12);
+    }
+
+    #[test]
+    fn wd_nonnegative_everywhere() {
+        for i in 0..=20 {
+            for j in 0..=20 {
+                let m = i as f64 / 20.0;
+                let k = j as f64 / 20.0;
+                let h = oracle_h(m, k, 512);
+                let wd = wd_from_s(m, k, s_value(m, k, h));
+                assert!(wd >= 0.0, "wd({m},{k}) = {wd}");
+                // wd is a squared relative distance, bounded by the no-merge
+                // worst case ‖m φ_b + (1−m) φ_a‖² ≤ (m + (1−m))² = 1.
+                assert!(wd <= 1.0 + 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn symmetric_m_half_prefers_midpoint_for_large_kappa() {
+        // For κ > e^{-2} and m = 1/2 the optimum is h = 1/2.
+        let h = oracle_h(0.5, 0.5, 1024);
+        assert!((h - 0.5).abs() < 1e-3, "h = {h}");
+    }
+
+    #[test]
+    fn small_kappa_extreme_m_is_removal_like() {
+        // κ ≪ 1 and m ≈ 1 (candidate dominates): optimum keeps x_b, i.e.
+        // h ≈ 0 (z = x_b).
+        let h = oracle_h(0.97, 0.01, 2048);
+        assert!(h < 0.05, "h = {h}");
+        // Mirror case.
+        let h = oracle_h(0.03, 0.01, 2048);
+        assert!(h > 0.95, "h = {h}");
+    }
+
+    #[test]
+    fn h_symmetry_under_m_flip() {
+        // s_{m,κ}(h) = s_{1−m,κ}(1−h) ⇒ h(m) = 1 − h(1−m).
+        for &(m, k) in &[(0.2, 0.6), (0.35, 0.3), (0.45, 0.9)] {
+            let h1 = oracle_h(m, k, 1024);
+            let h2 = oracle_h(1.0 - m, k, 1024);
+            assert!((h1 - (1.0 - h2)).abs() < 1e-3, "m={m} κ={k}: {h1} vs 1-{h2}");
+        }
+    }
+
+    #[test]
+    fn alpha_z_consistent_with_s_value() {
+        let (aa, ab) = (0.3, 0.7);
+        let m = ab / (aa + ab);
+        let kappa = 0.55;
+        for &h in &[0.1, 0.5, 0.9] {
+            let az = alpha_z(aa, ab, kappa, h);
+            assert!((az - (aa + ab) * s_value(m, kappa, h)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn unnormalized_wd_scales_quadratically() {
+        let (aa, ab, kappa) = (0.4, 1.1, 0.45);
+        let m = ab / (aa + ab);
+        let h = oracle_h(m, kappa, 1024);
+        let az = alpha_z(aa, ab, kappa, h);
+        let wd = wd_unnormalized(aa, ab, kappa, az);
+        let wd_norm = wd_from_s(m, kappa, s_value(m, kappa, h));
+        let scale = (aa + ab) * (aa + ab);
+        assert!((wd - scale * wd_norm).abs() < 1e-9, "{wd} vs {}", scale * wd_norm);
+    }
+
+    #[test]
+    fn bimodal_threshold_matches_lemma() {
+        // At m = 1/2: s''(1/2) > 0 (local minimum at the midpoint, two
+        // modes) iff κ < e^{-2}. Check just either side of the threshold.
+        let eps = 1e-3;
+        let second_deriv = |kappa: f64| {
+            let f = |h: f64| s_value(0.5, kappa, h);
+            (f(0.5 + eps) - 2.0 * f(0.5) + f(0.5 - eps)) / (eps * eps)
+        };
+        assert!(second_deriv(KAPPA_BIMODAL * 0.8) > 0.0);
+        assert!(second_deriv(KAPPA_BIMODAL * 1.2) < 0.0);
+    }
+}

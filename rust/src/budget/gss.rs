@@ -1,0 +1,138 @@
+//! Golden section search — the iterative baseline the paper replaces.
+//!
+//! [`maximize`] is the procedure BSGD traditionally runs per merge
+//! candidate (precision ε = 0.01 in the reference implementation,
+//! "GSS-standard"; ε = 1e-10 is "GSS-precise"). [`maximize_robust`] is the
+//! bracketing variant used when precomputing lookup tables: it first scans a
+//! coarse grid so that the bimodal regime (`κ < e^{-2}`, Lemma 1) converges
+//! to the dominant mode instead of an arbitrary one.
+
+/// Inverse golden ratio, `1/φ = (√5 − 1)/2`.
+const INV_PHI: f64 = 0.618_033_988_749_894_9;
+
+/// Golden section search maximizing `f` on `[lo, hi]` until the bracket is
+/// narrower than `eps`. Returns the bracket midpoint. Counts of function
+/// evaluations are reported through the return value of [`maximize_counted`].
+pub fn maximize<F: FnMut(f64) -> f64>(mut f: F, lo: f64, hi: f64, eps: f64) -> f64 {
+    maximize_counted(&mut f, lo, hi, eps).0
+}
+
+/// As [`maximize`], also returning the number of `f` evaluations (used by
+/// the cost model in the benches).
+pub fn maximize_counted<F: FnMut(f64) -> f64>(
+    f: &mut F,
+    mut lo: f64,
+    mut hi: f64,
+    eps: f64,
+) -> (f64, u32) {
+    debug_assert!(lo <= hi);
+    let mut evals = 0u32;
+    let mut x1 = hi - INV_PHI * (hi - lo);
+    let mut x2 = lo + INV_PHI * (hi - lo);
+    let mut f1 = f(x1);
+    let mut f2 = f(x2);
+    evals += 2;
+    while hi - lo > eps {
+        if f1 < f2 {
+            lo = x1;
+            x1 = x2;
+            f1 = f2;
+            x2 = lo + INV_PHI * (hi - lo);
+            f2 = f(x2);
+        } else {
+            hi = x2;
+            x2 = x1;
+            f2 = f1;
+            x1 = hi - INV_PHI * (hi - lo);
+            f1 = f(x1);
+        }
+        evals += 1;
+    }
+    (0.5 * (lo + hi), evals)
+}
+
+/// Robust variant for possibly-bimodal objectives: coarse scan with
+/// `scan_points` samples to bracket the global maximum, then golden section
+/// within the bracket.
+pub fn maximize_robust<F: FnMut(f64) -> f64>(
+    mut f: F,
+    lo: f64,
+    hi: f64,
+    eps: f64,
+    scan_points: usize,
+) -> f64 {
+    debug_assert!(scan_points >= 3);
+    let step = (hi - lo) / (scan_points - 1) as f64;
+    let mut best_i = 0usize;
+    let mut best_v = f64::NEG_INFINITY;
+    for i in 0..scan_points {
+        let v = f(lo + step * i as f64);
+        if v > best_v {
+            best_v = v;
+            best_i = i;
+        }
+    }
+    let blo = lo + step * best_i.saturating_sub(1) as f64;
+    let bhi = (lo + step * (best_i + 1) as f64).min(hi);
+    maximize(f, blo, bhi, eps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::budget::geometry::{oracle_h, s_value};
+
+    #[test]
+    fn finds_parabola_maximum() {
+        let x = maximize(|x| -(x - 0.37) * (x - 0.37), 0.0, 1.0, 1e-10);
+        assert!((x - 0.37).abs() < 1e-9);
+    }
+
+    #[test]
+    fn respects_precision_budget() {
+        let (x_loose, evals_loose) =
+            maximize_counted(&mut |x: f64| -(x - 0.37).powi(2), 0.0, 1.0, 1e-2);
+        let (_, evals_tight) =
+            maximize_counted(&mut |x: f64| -(x - 0.37).powi(2), 0.0, 1.0, 1e-10);
+        assert!((x_loose - 0.37).abs() < 1e-2);
+        assert!(evals_loose < evals_tight);
+        // GSS shrinks by 1/φ per eval: ε=1e-2 needs ~11 evals, 1e-10 ~49.
+        assert!((8..16).contains(&evals_loose), "evals_loose={evals_loose}");
+        assert!((40..60).contains(&evals_tight), "evals_tight={evals_tight}");
+    }
+
+    #[test]
+    fn boundary_maximum() {
+        let x = maximize(|x: f64| -x, 0.0, 1.0, 1e-8);
+        assert!(x < 1e-7);
+        let x = maximize(|x: f64| x, 0.0, 1.0, 1e-8);
+        assert!(x > 1.0 - 1e-7);
+    }
+
+    #[test]
+    fn matches_oracle_on_merge_objective_unimodal_regime() {
+        for &(m, k) in &[(0.5, 0.5), (0.3, 0.8), (0.7, 0.2), (0.9, 0.95), (0.12, 0.4)] {
+            let h_gss = maximize(|h| s_value(m, k, h), 0.0, 1.0, 1e-10);
+            let h_oracle = oracle_h(m, k, 4096);
+            assert!(
+                (s_value(m, k, h_gss) - s_value(m, k, h_oracle)).abs() < 1e-9,
+                "objective mismatch at m={m} κ={k}: {h_gss} vs {h_oracle}"
+            );
+        }
+    }
+
+    #[test]
+    fn robust_finds_dominant_mode_in_bimodal_regime() {
+        // κ < e^{-2}, m slightly off 1/2: two modes; the dominant one is on
+        // the heavy side. Plain GSS may pick either; robust must match the
+        // oracle.
+        for &(m, k) in &[(0.45, 0.05), (0.55, 0.05), (0.48, 0.1), (0.52, 0.02)] {
+            let h_rob = maximize_robust(|h| s_value(m, k, h), 0.0, 1.0, 1e-10, 33);
+            let h_oracle = oracle_h(m, k, 8192);
+            assert!(
+                (s_value(m, k, h_rob) - s_value(m, k, h_oracle)).abs() < 1e-9,
+                "m={m} κ={k}: robust={h_rob} oracle={h_oracle}"
+            );
+        }
+    }
+}

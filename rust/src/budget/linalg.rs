@@ -1,0 +1,120 @@
+//! Minimal dense linear algebra for the projection baseline: Cholesky
+//! factorization and solve for symmetric positive definite systems
+//! (the kernel Gram matrix of the remaining support vectors, plus ridge).
+
+use anyhow::{bail, Result};
+
+/// Dense symmetric positive definite solver via Cholesky (`A = L·Lᵀ`).
+/// `a` is row-major `n×n` and is consumed as workspace; `b` is overwritten
+/// with the solution. Fails if the matrix is not (numerically) SPD.
+pub fn cholesky_solve_in_place(a: &mut [f64], n: usize, b: &mut [f64]) -> Result<()> {
+    assert_eq!(a.len(), n * n);
+    assert_eq!(b.len(), n);
+    // Factorize: lower triangle of `a` becomes L.
+    for j in 0..n {
+        let mut diag = a[j * n + j];
+        for k in 0..j {
+            diag -= a[j * n + k] * a[j * n + k];
+        }
+        if diag <= 0.0 || !diag.is_finite() {
+            bail!("matrix not positive definite at pivot {j} (d={diag})");
+        }
+        let ljj = diag.sqrt();
+        a[j * n + j] = ljj;
+        for i in (j + 1)..n {
+            let mut v = a[i * n + j];
+            for k in 0..j {
+                v -= a[i * n + k] * a[j * n + k];
+            }
+            a[i * n + j] = v / ljj;
+        }
+    }
+    // Forward substitution: L·y = b.
+    for i in 0..n {
+        let mut v = b[i];
+        for k in 0..i {
+            v -= a[i * n + k] * b[k];
+        }
+        b[i] = v / a[i * n + i];
+    }
+    // Back substitution: Lᵀ·x = y.
+    for i in (0..n).rev() {
+        let mut v = b[i];
+        for k in (i + 1)..n {
+            v -= a[k * n + i] * b[k];
+        }
+        b[i] = v / a[i * n + i];
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn solves_identity() {
+        let mut a = vec![0.0; 9];
+        for i in 0..3 {
+            a[i * 3 + i] = 1.0;
+        }
+        let mut b = vec![3.0, -1.0, 2.0];
+        cholesky_solve_in_place(&mut a, 3, &mut b).unwrap();
+        assert_eq!(b, vec![3.0, -1.0, 2.0]);
+    }
+
+    #[test]
+    fn solves_known_system() {
+        // A = [[4,2],[2,3]], b = [10, 9] → x = [1.5, 2]
+        let mut a = vec![4.0, 2.0, 2.0, 3.0];
+        let mut b = vec![10.0, 9.0];
+        cholesky_solve_in_place(&mut a, 2, &mut b).unwrap();
+        assert!((b[0] - 1.5).abs() < 1e-12);
+        assert!((b[1] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let mut a = vec![1.0, 2.0, 2.0, 1.0]; // eigenvalues 3, −1
+        let mut b = vec![1.0, 1.0];
+        assert!(cholesky_solve_in_place(&mut a, 2, &mut b).is_err());
+    }
+
+    #[test]
+    fn random_spd_systems_property() {
+        forall("cholesky solves random SPD", 40, 0xCAFE, |rng: &mut Rng| {
+            let n = 2 + rng.below(10);
+            // A = MᵀM + I is SPD.
+            let m: Vec<f64> = (0..n * n).map(|_| rng.normal()).collect();
+            let mut a = vec![0.0f64; n * n];
+            for i in 0..n {
+                for j in 0..n {
+                    let mut v = 0.0;
+                    for k in 0..n {
+                        v += m[k * n + i] * m[k * n + j];
+                    }
+                    a[i * n + j] = v + if i == j { 1.0 } else { 0.0 };
+                }
+            }
+            let x_true: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let mut b = vec![0.0f64; n];
+            for i in 0..n {
+                for j in 0..n {
+                    b[i] += a[i * n + j] * x_true[j];
+                }
+            }
+            let mut a_work = a.clone();
+            if cholesky_solve_in_place(&mut a_work, n, &mut b).is_err() {
+                return (false, format!("SPD system rejected, n={n}"));
+            }
+            let err = b
+                .iter()
+                .zip(&x_true)
+                .map(|(x, t)| (x - t).abs())
+                .fold(0.0f64, f64::max);
+            (err < 1e-8, format!("n={n} max err={err}"))
+        });
+    }
+}

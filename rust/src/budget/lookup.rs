@@ -1,0 +1,380 @@
+//! Precomputed merge tables with bilinear interpolation — the paper's
+//! contribution (Section 3).
+//!
+//! `h(m,κ)`, `s*(m,κ) = s_{m,κ}(h*)` and `wd(m,κ)` are precomputed once on
+//! a `G × G` uniform grid over `[0,1]²` with high-precision golden section
+//! search (ε = 1e-10, bracketed so the bimodal regime resolves to the
+//! dominant mode), then evaluated at training time by bilinear
+//! interpolation: a plug-in replacement for running GSS per candidate.
+//!
+//! Storage is ~`3·G²·8` bytes (3.8 MB at the paper's G = 400). Tables can
+//! be persisted in a simple binary format and exported as CSV for Figure 2.
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::geometry::{s_value, wd_from_s};
+use super::gss::maximize_robust;
+
+/// Magic bytes of the binary table file format.
+const MAGIC: &[u8; 8] = b"BSVMTBL1";
+
+/// Precision used when building tables (the paper's ε for precomputation).
+pub const BUILD_EPS: f64 = 1e-10;
+
+/// Coarse-scan points used to bracket the dominant mode while building.
+const BUILD_SCAN: usize = 33;
+
+/// Solve one grid node `(m, κ)` → `(h*, s*, wd)`.
+///
+/// `κ = 0` is special-cased: `s_{m,0}(h)` is discontinuous at the boundary
+/// (`0⁰ = 1`), so GSS lands in the interior where `s ≡ 0`. The continuous
+/// limit `κ → 0⁺` is used instead: the optimum degenerates to removal of
+/// the smaller vector — `h → 0` (keep `x_b`) when `m ≥ 1/2`, else `h → 1`,
+/// with `s* = max(m, 1−m)` and `wd = min(m, 1−m)²`.
+fn solve_node(m: f64, kappa: f64) -> (f64, f64, f64) {
+    if kappa <= 0.0 {
+        let h = if m >= 0.5 { 0.0 } else { 1.0 };
+        let s = m.max(1.0 - m);
+        let wd = m.min(1.0 - m).powi(2);
+        return (h, s, wd);
+    }
+    let h = maximize_robust(|x| s_value(m, kappa, x), 0.0, 1.0, BUILD_EPS, BUILD_SCAN);
+    let s = s_value(m, kappa, h);
+    (h, s, wd_from_s(m, kappa, s))
+}
+
+/// Precomputed `G×G` tables of the normalized merge solution.
+#[derive(Debug, Clone)]
+pub struct LookupTable {
+    g: usize,
+    /// `h*(m,κ)`, row-major `[i_m * g + i_k]`.
+    h: Vec<f64>,
+    /// `s*(m,κ)` — the maximized objective (= normalized `α_z`).
+    s: Vec<f64>,
+    /// `wd(m,κ)` — normalized weight degradation at the optimum.
+    wd: Vec<f64>,
+}
+
+impl LookupTable {
+    /// Build a table of size `g × g` by running bracketed golden section
+    /// search with ε = 1e-10 at every grid node. O(g²·log(1/ε)); ~100 ms at
+    /// g = 400 in release mode — done once per process (or loaded from disk).
+    pub fn build(g: usize) -> Self {
+        assert!(g >= 2, "grid must be at least 2×2");
+        let mut h = vec![0.0f64; g * g];
+        let mut s = vec![0.0f64; g * g];
+        let mut wd = vec![0.0f64; g * g];
+        let denom = (g - 1) as f64;
+        for im in 0..g {
+            let m = im as f64 / denom;
+            for ik in 0..g {
+                let kappa = ik as f64 / denom;
+                let (hv, sv, wdv) = solve_node(m, kappa);
+                h[im * g + ik] = hv;
+                s[im * g + ik] = sv;
+                wd[im * g + ik] = wdv;
+            }
+        }
+        LookupTable { g, h, s, wd }
+    }
+
+    /// Grid resolution.
+    pub fn grid(&self) -> usize {
+        self.g
+    }
+
+    /// Raw `h` grid, row-major over (m, κ) — used by the PJRT runtime and
+    /// the figure exporters.
+    pub fn h_values(&self) -> &[f64] {
+        &self.h
+    }
+
+    /// Raw `s*` grid.
+    pub fn s_values(&self) -> &[f64] {
+        &self.s
+    }
+
+    /// Raw `wd` grid.
+    pub fn wd_values(&self) -> &[f64] {
+        &self.wd
+    }
+
+    /// Clamp a coordinate into `[0,1]` and map to (cell index, fraction).
+    #[inline]
+    fn locate(&self, v: f64) -> (usize, f64) {
+        let denom = (self.g - 1) as f64;
+        let x = (v.clamp(0.0, 1.0)) * denom;
+        let i = (x as usize).min(self.g - 2);
+        (i, x - i as f64)
+    }
+
+    /// Bilinear interpolation of a table at `(m, κ)`.
+    #[inline]
+    fn bilinear(&self, table: &[f64], m: f64, kappa: f64) -> f64 {
+        let (im, fm) = self.locate(m);
+        let (ik, fk) = self.locate(kappa);
+        let g = self.g;
+        // SAFETY: `locate` clamps to im, ik ≤ g − 2, so the largest index
+        // is (g−1)·g + (g−1) = g² − 1 < table.len(); skipping the four
+        // bounds checks is worth ~25% on this sub-30ns hot path
+        // (EXPERIMENTS.md §Perf).
+        debug_assert!((im + 1) * g + ik + 1 < table.len());
+        let (v00, v01, v10, v11) = unsafe {
+            (
+                *table.get_unchecked(im * g + ik),
+                *table.get_unchecked(im * g + ik + 1),
+                *table.get_unchecked((im + 1) * g + ik),
+                *table.get_unchecked((im + 1) * g + ik + 1),
+            )
+        };
+        let r0 = v00 + (v01 - v00) * fk;
+        let r1 = v10 + (v11 - v10) * fk;
+        r0 + (r1 - r0) * fm
+    }
+
+    /// Interpolated `h*(m,κ)` — the Lookup-h plug-in for GSS.
+    #[inline]
+    pub fn lookup_h(&self, m: f64, kappa: f64) -> f64 {
+        self.bilinear(&self.h, m, kappa).clamp(0.0, 1.0)
+    }
+
+    /// Interpolated normalized objective `s*(m,κ)`.
+    #[inline]
+    pub fn lookup_s(&self, m: f64, kappa: f64) -> f64 {
+        self.bilinear(&self.s, m, kappa)
+    }
+
+    /// Interpolated normalized weight degradation `wd(m,κ)` — the Lookup-WD
+    /// plug-in (saves even the closed-form WD computation).
+    #[inline]
+    pub fn lookup_wd(&self, m: f64, kappa: f64) -> f64 {
+        self.bilinear(&self.wd, m, kappa).max(0.0)
+    }
+
+    /// Nearest-grid-point h (no interpolation) — the naive variant the paper
+    /// mentions before recommending bilinear smoothing; kept for the
+    /// ablation bench.
+    #[inline]
+    pub fn lookup_h_nearest(&self, m: f64, kappa: f64) -> f64 {
+        let (im, fm) = self.locate(m);
+        let (ik, fk) = self.locate(kappa);
+        let i = im + usize::from(fm >= 0.5);
+        let k = ik + usize::from(fk >= 0.5);
+        self.h[i * self.g + k]
+    }
+
+    /// Serialize to the binary table format.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let f = std::fs::File::create(path.as_ref())
+            .with_context(|| format!("cannot create {}", path.as_ref().display()))?;
+        let mut w = BufWriter::new(f);
+        w.write_all(MAGIC)?;
+        w.write_all(&(self.g as u64).to_le_bytes())?;
+        for table in [&self.h, &self.s, &self.wd] {
+            for v in table.iter() {
+                w.write_all(&v.to_le_bytes())?;
+            }
+        }
+        w.flush()?;
+        Ok(())
+    }
+
+    /// Load from the binary table format.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let f = std::fs::File::open(path.as_ref())
+            .with_context(|| format!("cannot open {}", path.as_ref().display()))?;
+        let mut r = BufReader::new(f);
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("not a budgetsvm table file (bad magic)");
+        }
+        let mut gbuf = [0u8; 8];
+        r.read_exact(&mut gbuf)?;
+        let g = u64::from_le_bytes(gbuf) as usize;
+        if !(2..=65536).contains(&g) {
+            bail!("implausible grid size {g}");
+        }
+        let read_table = |r: &mut BufReader<std::fs::File>| -> Result<Vec<f64>> {
+            let mut t = vec![0.0f64; g * g];
+            let mut buf = [0u8; 8];
+            for v in t.iter_mut() {
+                r.read_exact(&mut buf)?;
+                *v = f64::from_le_bytes(buf);
+            }
+            Ok(t)
+        };
+        let h = read_table(&mut r)?;
+        let s = read_table(&mut r)?;
+        let wd = read_table(&mut r)?;
+        Ok(LookupTable { g, h, s, wd })
+    }
+
+    /// Load a cached table from `path`, or build it (and cache it) if absent
+    /// or unreadable.
+    pub fn load_or_build(g: usize, path: impl AsRef<Path>) -> Self {
+        if let Ok(t) = Self::load(path.as_ref()) {
+            if t.g == g {
+                return t;
+            }
+        }
+        let t = Self::build(g);
+        // Caching is best-effort.
+        let _ = t.save(path.as_ref());
+        t
+    }
+
+    /// Export the grids as CSV (`m,kappa,h,s,wd` per line) — the data behind
+    /// Figures 2a/2b.
+    pub fn export_csv<W: Write>(&self, out: W) -> Result<()> {
+        let mut w = BufWriter::new(out);
+        writeln!(w, "m,kappa,h,s,wd")?;
+        let denom = (self.g - 1) as f64;
+        for im in 0..self.g {
+            for ik in 0..self.g {
+                writeln!(
+                    w,
+                    "{},{},{},{},{}",
+                    im as f64 / denom,
+                    ik as f64 / denom,
+                    self.h[im * self.g + ik],
+                    self.s[im * self.g + ik],
+                    self.wd[im * self.g + ik]
+                )?;
+            }
+        }
+        w.flush()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::budget::geometry::{oracle_h, KAPPA_BIMODAL};
+    use crate::util::prop::forall;
+
+    #[test]
+    fn grid_nodes_are_exact() {
+        let t = LookupTable::build(21);
+        // At grid nodes the interpolation must return the precomputed value
+        // (κ = 0 is special-cased to the continuous limit, so it is not
+        // comparable to a direct GSS run and is checked separately below).
+        for &(m, k) in &[(0.5, 0.5), (1.0, 1.0), (0.25, 0.75), (0.0, 0.5)] {
+            let h_direct = maximize_robust(|x| s_value(m, k, x), 0.0, 1.0, BUILD_EPS, BUILD_SCAN);
+            assert!(
+                (s_value(m, k, t.lookup_h(m, k)) - s_value(m, k, h_direct)).abs() < 1e-9,
+                "node ({m},{k})"
+            );
+        }
+        // κ = 0 column stores the continuous limit: removal of the smaller
+        // vector, wd = min(m, 1−m)².
+        assert!((t.lookup_wd(0.75, 0.0) - 0.0625).abs() < 1e-12);
+        assert!((t.lookup_h(0.75, 0.0) - 0.0).abs() < 1e-12);
+        assert!((t.lookup_h(0.25, 0.0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn interpolation_error_shrinks_with_grid() {
+        // Compare max |wd_interp − wd_exact| over off-grid probes at two
+        // grid sizes; the finer grid must be markedly better in the smooth
+        // region κ > e^{-2}.
+        let coarse = LookupTable::build(20);
+        let fine = LookupTable::build(160);
+        let mut err = [0.0f64; 2];
+        for (ti, t) in [&coarse, &fine].iter().enumerate() {
+            for i in 0..25 {
+                for j in 0..25 {
+                    let m = 0.013 + 0.97 * (i as f64 / 24.0);
+                    let k = KAPPA_BIMODAL + 0.017 + (1.0 - KAPPA_BIMODAL - 0.03) * (j as f64 / 24.0);
+                    let h_exact = oracle_h(m, k, 4096);
+                    let wd_exact = wd_from_s(m, k, s_value(m, k, h_exact));
+                    err[ti] = err[ti].max((t.lookup_wd(m, k) - wd_exact).abs());
+                }
+            }
+        }
+        assert!(err[1] < err[0] / 10.0, "coarse {} fine {}", err[0], err[1]);
+        assert!(err[1] < 5e-4, "fine-grid wd error {}", err[1]);
+    }
+
+    #[test]
+    fn paper_grid_wd_precision() {
+        // At the paper's G=400, interpolated WD should be extremely close to
+        // exact (their "factor" column is ~1.00005–1.007).
+        let t = LookupTable::build(400);
+        forall("wd lookup near-exact at G=400", 200, 0xBEEF, |rng| {
+            let m = rng.uniform();
+            let k = rng.uniform();
+            let h_exact = oracle_h(m, k, 4096);
+            let wd_exact = wd_from_s(m, k, s_value(m, k, h_exact));
+            let wd_lut = t.lookup_wd(m, k);
+            let ok = (wd_lut - wd_exact).abs() < 2e-4;
+            (ok, format!("m={m} κ={k} exact={wd_exact} lut={wd_lut}"))
+        });
+    }
+
+    #[test]
+    fn lookup_h_clamped_to_unit_interval() {
+        let t = LookupTable::build(50);
+        forall("h in [0,1]", 200, 3, |rng| {
+            let m = rng.uniform_in(-0.2, 1.2); // deliberately out of range
+            let k = rng.uniform_in(-0.2, 1.2);
+            let h = t.lookup_h(m, k);
+            ((0.0..=1.0).contains(&h), format!("h({m},{k}) = {h}"))
+        });
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let t = LookupTable::build(17);
+        let dir = std::env::temp_dir().join("budgetsvm-test-tables");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t17.tbl");
+        t.save(&path).unwrap();
+        let t2 = LookupTable::load(&path).unwrap();
+        assert_eq!(t.g, t2.g);
+        assert_eq!(t.h, t2.h);
+        assert_eq!(t.s, t2.s);
+        assert_eq!(t.wd, t2.wd);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let dir = std::env::temp_dir().join("budgetsvm-test-tables");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("garbage.tbl");
+        std::fs::write(&path, b"not a table at all").unwrap();
+        assert!(LookupTable::load(&path).is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn csv_export_has_header_and_rows() {
+        let t = LookupTable::build(4);
+        let mut buf = Vec::new();
+        t.export_csv(&mut buf).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines[0], "m,kappa,h,s,wd");
+        assert_eq!(lines.len(), 1 + 16);
+    }
+
+    #[test]
+    fn nearest_is_coarser_than_bilinear() {
+        let t = LookupTable::build(40);
+        let mut err_near = 0.0f64;
+        let mut err_bi = 0.0f64;
+        for i in 0..20 {
+            let m = 0.21 + 0.55 * (i as f64 / 19.0);
+            let k = 0.31 + 0.6 * (i as f64 / 19.0);
+            let h_exact = oracle_h(m, k, 4096);
+            err_near = err_near.max((t.lookup_h_nearest(m, k) - h_exact).abs());
+            err_bi = err_bi.max((t.lookup_h(m, k) - h_exact).abs());
+        }
+        assert!(err_bi < err_near, "bilinear {err_bi} vs nearest {err_near}");
+    }
+}

@@ -1,0 +1,133 @@
+//! Budget maintenance: keeping the support-vector count at `B`.
+//!
+//! The paper's contribution lives here: [`merge`] implements Algorithm 1
+//! with the four interchangeable per-candidate solvers (GSS-standard,
+//! GSS-precise, Lookup-h, Lookup-WD); [`lookup`] holds the precomputed
+//! tables with bilinear interpolation; [`gss`] the iterative baseline;
+//! [`geometry`] the shared closed-form merge math; [`removal`] and
+//! [`projection`] the alternative strategies of Wang et al. (2012) used as
+//! ablation baselines; [`linalg`] a minimal Cholesky solver for projection.
+
+pub mod geometry;
+pub mod gss;
+pub mod linalg;
+pub mod lookup;
+pub mod merge;
+pub mod projection;
+pub mod removal;
+
+pub use lookup::LookupTable;
+pub use merge::{audit_event, AuditRecord, MergeEngine, MergeOutcome, MergeSolver};
+
+use crate::metrics::SectionProfiler;
+use crate::model::BudgetModel;
+
+/// Budget maintenance strategy selected for a training run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    /// Merging with one of the four per-candidate solvers (the paper).
+    Merge(MergeSolver),
+    /// Drop the smallest-|α| SV (baseline).
+    Removal,
+    /// Drop and project onto the remaining SVs (baseline, O(B³) per event).
+    Projection,
+}
+
+impl Strategy {
+    pub fn name(&self) -> String {
+        match self {
+            Strategy::Merge(s) => s.name().to_string(),
+            Strategy::Removal => "Removal".to_string(),
+            Strategy::Projection => "Projection".to_string(),
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Strategy> {
+        match s.to_ascii_lowercase().as_str() {
+            "removal" | "remove" => Some(Strategy::Removal),
+            "projection" | "project" => Some(Strategy::Projection),
+            other => MergeSolver::parse(other).map(Strategy::Merge),
+        }
+    }
+}
+
+/// A ready-to-run maintenance executor with its scratch state.
+pub enum Maintainer {
+    Merge(MergeEngine),
+    Removal,
+    Projection,
+}
+
+impl Maintainer {
+    /// Build a maintainer; `grid` is the lookup-table resolution for the
+    /// lookup solvers.
+    pub fn new(strategy: Strategy, grid: usize) -> Self {
+        match strategy {
+            Strategy::Merge(solver) => Maintainer::Merge(MergeEngine::new(solver, grid)),
+            Strategy::Removal => Maintainer::Removal,
+            Strategy::Projection => Maintainer::Projection,
+        }
+    }
+
+    /// Execute one maintenance event; returns the incurred weight
+    /// degradation.
+    pub fn maintain(&mut self, model: &mut BudgetModel, prof: &mut SectionProfiler) -> f64 {
+        match self {
+            Maintainer::Merge(engine) => engine.maintain(model, prof).weight_degradation,
+            Maintainer::Removal => removal::maintain_removal(model, prof),
+            Maintainer::Projection => projection::maintain_projection(model, prof)
+                .unwrap_or_else(|_| {
+                    // Numerically degenerate Gram matrix: fall back to removal.
+                    removal::maintain_removal(model, prof)
+                }),
+        }
+    }
+
+    pub fn strategy(&self) -> Strategy {
+        match self {
+            Maintainer::Merge(e) => Strategy::Merge(e.solver()),
+            Maintainer::Removal => Strategy::Removal,
+            Maintainer::Projection => Strategy::Projection,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::Gaussian;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn strategy_parsing() {
+        assert_eq!(Strategy::parse("lookup-wd"), Some(Strategy::Merge(MergeSolver::LookupWd)));
+        assert_eq!(Strategy::parse("GSS"), Some(Strategy::Merge(MergeSolver::GssStandard)));
+        assert_eq!(Strategy::parse("removal"), Some(Strategy::Removal));
+        assert_eq!(Strategy::parse("projection"), Some(Strategy::Projection));
+        assert_eq!(Strategy::parse("bogus"), None);
+    }
+
+    #[test]
+    fn all_maintainers_shrink_the_model() {
+        let strategies = [
+            Strategy::Merge(MergeSolver::GssStandard),
+            Strategy::Merge(MergeSolver::LookupWd),
+            Strategy::Removal,
+            Strategy::Projection,
+        ];
+        for strat in strategies {
+            let mut rng = Rng::new(13);
+            let mut model = BudgetModel::new(3, Gaussian::new(0.5), 6);
+            for _ in 0..6 {
+                let row: Vec<f32> = (0..3).map(|_| rng.normal() as f32).collect();
+                model.push(&row, 0.1 + rng.uniform());
+            }
+            let mut m = Maintainer::new(strat, 50);
+            let mut prof = SectionProfiler::new();
+            let wd = m.maintain(&mut model, &mut prof);
+            assert_eq!(model.num_sv(), 5, "{:?}", strat);
+            assert!(wd >= 0.0);
+            assert_eq!(m.strategy(), strat);
+        }
+    }
+}

@@ -1,0 +1,136 @@
+//! Projection budget maintenance — the second baseline from Wang et al.
+//! (JMLR 2012): remove the SV with smallest |α| and project its
+//! contribution onto the span of the remaining support vectors,
+//! `Δα = K⁻¹ κ · α_r`, where `K` is the Gram matrix of the survivors and
+//! `κ` their kernel values against the removed point.
+//!
+//! O(B³) per event via Cholesky — markedly more expensive than merging,
+//! which is exactly why the paper (and Wang et al.) prefer merging; the
+//! ablation bench quantifies this.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::linalg::cholesky_solve_in_place;
+use crate::metrics::{Section, SectionProfiler};
+use crate::model::BudgetModel;
+
+/// Ridge added to the Gram diagonal for numeric stability.
+const RIDGE: f64 = 1e-8;
+
+/// Remove the min-|α| SV and redistribute its weight onto the remaining
+/// SVs. Returns the (approximate) weight degradation
+/// `‖Δ‖² = α_r²·(1 − κᵀ K⁻¹ κ)` (the residual of projecting `φ(x_r)`).
+pub fn maintain_projection(model: &mut BudgetModel, prof: &mut SectionProfiler) -> Result<f64> {
+    let t0 = Instant::now();
+    let r_idx = model.argmin_abs_alpha().expect("non-empty model");
+    let alpha_r = model.alpha(r_idx);
+    let n = model.num_sv() - 1;
+    if n == 0 {
+        model.swap_remove(r_idx);
+        prof.add(Section::MaintB, t0.elapsed());
+        return Ok(alpha_r * alpha_r);
+    }
+
+    // Survivor indices.
+    let survivors: Vec<usize> = (0..model.num_sv()).filter(|&j| j != r_idx).collect();
+
+    // Gram matrix K (n×n) and rhs κ (kernel row vs removed SV).
+    use crate::kernel::Kernel;
+    let kernel = model.kernel();
+    let mut gram = vec![0.0f64; n * n];
+    let mut rhs = vec![0.0f64; n];
+    let xr = model.sv(r_idx).to_vec();
+    let nr = model.sv_norm2(r_idx);
+    for (i, &si) in survivors.iter().enumerate() {
+        rhs[i] = kernel.eval(&xr, nr, model.sv(si), model.sv_norm2(si));
+        for (j, &sj) in survivors.iter().enumerate().skip(i) {
+            let v = kernel.eval(model.sv(si), model.sv_norm2(si), model.sv(sj), model.sv_norm2(sj));
+            gram[i * n + j] = v;
+            gram[j * n + i] = v;
+        }
+        gram[i * n + i] += RIDGE;
+    }
+
+    let kappa = rhs.clone();
+    // Solve K β = κ; Δα_i = α_r β_i.
+    cholesky_solve_in_place(&mut gram, n, &mut rhs)?;
+
+    // Residual projection error: α_r²(1 − κᵀβ).
+    let kappa_beta: f64 = kappa.iter().zip(&rhs).map(|(a, b)| a * b).sum();
+    let wd = (alpha_r * alpha_r * (1.0 - kappa_beta)).max(0.0);
+
+    for (i, &si) in survivors.iter().enumerate() {
+        model.add_alpha(si, alpha_r * rhs[i]);
+    }
+    model.swap_remove(r_idx);
+    prof.add(Section::MaintB, t0.elapsed());
+    Ok(wd)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::Gaussian;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn projection_preserves_decision_better_than_removal() {
+        let mut rng = Rng::new(21);
+        let build = || {
+            let mut m = BudgetModel::new(2, Gaussian::new(0.8), 8);
+            let mut r = Rng::new(77);
+            for _ in 0..8 {
+                m.push(&[r.normal() as f32, r.normal() as f32], 0.1 + r.uniform());
+            }
+            m
+        };
+        let reference = build();
+        let probes: Vec<[f32; 2]> =
+            (0..50).map(|_| [rng.normal() as f32, rng.normal() as f32]).collect();
+
+        let mut proj = build();
+        let mut prof = SectionProfiler::new();
+        maintain_projection(&mut proj, &mut prof).unwrap();
+
+        let mut rem = build();
+        let idx = rem.argmin_abs_alpha().unwrap();
+        rem.swap_remove(idx);
+
+        let err = |m: &BudgetModel| -> f64 {
+            probes
+                .iter()
+                .map(|p| (m.decision(p) - reference.decision(p)).powi(2))
+                .sum::<f64>()
+        };
+        let (e_proj, e_rem) = (err(&proj), err(&rem));
+        assert!(
+            e_proj <= e_rem + 1e-12,
+            "projection error {e_proj} should not exceed removal error {e_rem}"
+        );
+        assert_eq!(proj.num_sv(), 7);
+    }
+
+    #[test]
+    fn projection_wd_nonnegative_and_bounded() {
+        let mut m = BudgetModel::new(2, Gaussian::new(0.3), 4);
+        m.push(&[0.0, 0.0], 0.2);
+        m.push(&[1.0, 0.0], 1.0);
+        m.push(&[0.0, 1.0], 0.9);
+        let mut prof = SectionProfiler::new();
+        let wd = maintain_projection(&mut m, &mut prof).unwrap();
+        assert!(wd >= 0.0);
+        assert!(wd <= 0.2 * 0.2 + 1e-12, "projection is at least as good as removal");
+    }
+
+    #[test]
+    fn single_sv_degenerates_to_removal() {
+        let mut m = BudgetModel::new(2, Gaussian::new(0.3), 1);
+        m.push(&[1.0, 1.0], 0.5);
+        let mut prof = SectionProfiler::new();
+        let wd = maintain_projection(&mut m, &mut prof).unwrap();
+        assert_eq!(m.num_sv(), 0);
+        assert!((wd - 0.25).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,41 @@
+//! Removal budget maintenance — the simplest baseline from Wang et al.
+//! (JMLR 2012): drop the support vector with the smallest |α|. Known to be
+//! inferior to merging (the paper's Section 3 notes that a degenerate merge
+//! approaches removal); kept as an ablation baseline.
+
+use std::time::Instant;
+
+use crate::metrics::{Section, SectionProfiler};
+use crate::model::BudgetModel;
+
+/// Remove the SV with minimal |α|. Returns the incurred weight degradation
+/// `‖Δ‖² = α_min²` (Gaussian kernel: `k(x,x) = 1`).
+pub fn maintain_removal(model: &mut BudgetModel, prof: &mut SectionProfiler) -> f64 {
+    let t0 = Instant::now();
+    let idx = model.argmin_abs_alpha().expect("non-empty model");
+    let alpha = model.alpha(idx);
+    model.swap_remove(idx);
+    prof.add(Section::MaintB, t0.elapsed());
+    alpha * alpha
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::Gaussian;
+
+    #[test]
+    fn removes_smallest_coefficient() {
+        let mut m = BudgetModel::new(2, Gaussian::new(1.0), 3);
+        m.push(&[0.0, 0.0], 2.0);
+        m.push(&[1.0, 0.0], 0.1);
+        m.push(&[0.0, 1.0], -1.5);
+        let mut p = SectionProfiler::new();
+        let wd = maintain_removal(&mut m, &mut p);
+        assert_eq!(m.num_sv(), 2);
+        assert!((wd - 0.01).abs() < 1e-12);
+        for j in 0..m.num_sv() {
+            assert!(m.alpha(j).abs() > 0.5);
+        }
+    }
+}

@@ -1,0 +1,167 @@
+//! Minimal command-line argument parser (clap is not in the offline vendor
+//! set).
+//!
+//! Supports `program <subcommand> [--flag] [--key value] ...` with typed
+//! accessors, unknown-option detection, and generated usage text.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Declared option (for usage text and validation).
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub takes_value: bool,
+    pub help: &'static str,
+}
+
+/// Parsed arguments of one invocation.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: String,
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]` against the declared options.
+    pub fn parse(argv: &[String], specs: &[OptSpec]) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = argv.iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                args.subcommand = it.next().unwrap().clone();
+            }
+        }
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                // --key=value form.
+                let (name, inline) = match name.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (name, None),
+                };
+                let spec = specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .with_context(|| format!("unknown option --{name}"))?;
+                if spec.takes_value {
+                    let value = match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .with_context(|| format!("--{name} requires a value"))?
+                            .clone(),
+                    };
+                    args.values.insert(name.to_string(), value);
+                } else {
+                    if inline.is_some() {
+                        bail!("--{name} does not take a value");
+                    }
+                    args.flags.push(name.to_string());
+                }
+            } else {
+                args.positional.push(tok.clone());
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(String::as_str)
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<Option<f64>> {
+        self.get(name)
+            .map(|v| v.parse::<f64>().with_context(|| format!("--{name}: bad number '{v}'")))
+            .transpose()
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<Option<usize>> {
+        self.get(name)
+            .map(|v| v.parse::<usize>().with_context(|| format!("--{name}: bad integer '{v}'")))
+            .transpose()
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<Option<u64>> {
+        self.get(name)
+            .map(|v| v.parse::<u64>().with_context(|| format!("--{name}: bad integer '{v}'")))
+            .transpose()
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+/// Render usage text for a subcommand table + option specs.
+pub fn usage(program: &str, subcommands: &[(&str, &str)], specs: &[OptSpec]) -> String {
+    let mut out = format!("usage: {program} <command> [options]\n\ncommands:\n");
+    for (name, help) in subcommands {
+        out.push_str(&format!("  {name:<14} {help}\n"));
+    }
+    out.push_str("\noptions:\n");
+    for s in specs {
+        let arg = if s.takes_value { format!("--{} <v>", s.name) } else { format!("--{}", s.name) };
+        out.push_str(&format!("  {arg:<22} {}\n", s.help));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<OptSpec> {
+        vec![
+            OptSpec { name: "scale", takes_value: true, help: "" },
+            OptSpec { name: "verbose", takes_value: false, help: "" },
+            OptSpec { name: "out", takes_value: true, help: "" },
+        ]
+    }
+
+    fn parse(tokens: &[&str]) -> Result<Args> {
+        let argv: Vec<String> = tokens.iter().map(|s| s.to_string()).collect();
+        Args::parse(&argv, &specs())
+    }
+
+    #[test]
+    fn parses_subcommand_options_and_flags() {
+        let a = parse(&["table2", "--scale", "0.5", "--verbose", "extra"]).unwrap();
+        assert_eq!(a.subcommand, "table2");
+        assert_eq!(a.get_f64("scale").unwrap(), Some(0.5));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional(), &["extra".to_string()]);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse(&["x", "--scale=0.25"]).unwrap();
+        assert_eq!(a.get_f64("scale").unwrap(), Some(0.25));
+    }
+
+    #[test]
+    fn rejects_unknown_and_missing_value() {
+        assert!(parse(&["x", "--nope"]).is_err());
+        assert!(parse(&["x", "--scale"]).is_err());
+        assert!(parse(&["x", "--verbose=1"]).is_err());
+    }
+
+    #[test]
+    fn bad_number_reported() {
+        let a = parse(&["x", "--scale", "abc"]).unwrap();
+        assert!(a.get_f64("scale").is_err());
+    }
+
+    #[test]
+    fn usage_lists_everything() {
+        let u = usage("repro", &[("table1", "run table 1")], &specs());
+        assert!(u.contains("table1"));
+        assert!(u.contains("--scale"));
+    }
+}

@@ -1,0 +1,201 @@
+//! Experiment configuration.
+//!
+//! A single [`ExperimentConfig`] drives every table/figure regeneration.
+//! Configs load from JSON files (via the in-repo [`crate::util::json`]
+//! parser) and every field has a CLI override; defaults are chosen so the
+//! full suite completes on a laptop-class machine in minutes. A
+//! paper-faithful run is `--scale 1.0 --passes-factor 4 --runs 5`.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Configuration for the experiment suite.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    /// Row-count multiplier on the (already downscaled) profile sizes in
+    /// `data::synthetic::PROFILES`. 1.0 = DESIGN.md §5 sizes.
+    pub scale: f64,
+    /// Multiplier on each profile's `default_passes` (the paper used 20
+    /// passes = 4× our default of 5 on the non-SUSY sets).
+    pub passes_factor: f64,
+    /// Repetitions per (dataset, method, budget) cell (paper: 5).
+    pub runs: usize,
+    /// Lookup-table grid resolution (paper: 400).
+    pub grid: usize,
+    /// Base RNG seed; run r uses `seed + r`.
+    pub seed: u64,
+    /// Worker threads (0 = available parallelism).
+    pub threads: usize,
+    /// Restrict to these dataset names (empty = all six).
+    pub datasets: Vec<String>,
+    /// Output directory for CSV/markdown dumps.
+    pub out_dir: String,
+    /// Max rows for the SMO reference solver (Table 1).
+    pub smo_max_rows: usize,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            scale: 0.1,
+            passes_factor: 1.0,
+            runs: 5,
+            grid: 400,
+            seed: 20180501,
+            threads: 0,
+            datasets: Vec::new(),
+            out_dir: "results".to_string(),
+            smo_max_rows: 2000,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Load from a JSON file; absent fields keep their defaults.
+    pub fn from_file(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("cannot read config {}", path.as_ref().display()))?;
+        Self::from_json_text(&text)
+    }
+
+    /// Parse from JSON text; absent fields keep their defaults.
+    pub fn from_json_text(text: &str) -> Result<Self> {
+        let v = Json::parse(text).context("config is not valid JSON")?;
+        let mut cfg = ExperimentConfig::default();
+        if let Some(x) = v.get("scale").and_then(Json::as_f64) {
+            cfg.scale = x;
+        }
+        if let Some(x) = v.get("passes_factor").and_then(Json::as_f64) {
+            cfg.passes_factor = x;
+        }
+        if let Some(x) = v.get("runs").and_then(Json::as_usize) {
+            cfg.runs = x;
+        }
+        if let Some(x) = v.get("grid").and_then(Json::as_usize) {
+            cfg.grid = x;
+        }
+        if let Some(x) = v.get("seed").and_then(Json::as_f64) {
+            cfg.seed = x as u64;
+        }
+        if let Some(x) = v.get("threads").and_then(Json::as_usize) {
+            cfg.threads = x;
+        }
+        if let Some(items) = v.get("datasets").and_then(Json::as_array) {
+            cfg.datasets = items
+                .iter()
+                .filter_map(|i| i.as_str().map(str::to_string))
+                .collect();
+        }
+        if let Some(x) = v.get("out_dir").and_then(Json::as_str) {
+            cfg.out_dir = x.to_string();
+        }
+        if let Some(x) = v.get("smo_max_rows").and_then(Json::as_usize) {
+            cfg.smo_max_rows = x;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.scale > 0.0 && self.scale <= 4.0, "scale out of range");
+        anyhow::ensure!(self.passes_factor > 0.0, "passes_factor must be positive");
+        anyhow::ensure!(self.runs >= 1, "need at least one run");
+        anyhow::ensure!(self.grid >= 2, "grid must be >= 2");
+        for name in &self.datasets {
+            anyhow::ensure!(
+                crate::data::synthetic::Profile::by_name(name).is_some(),
+                "unknown dataset '{name}'"
+            );
+        }
+        Ok(())
+    }
+
+    /// Number of worker threads to actually use.
+    pub fn effective_threads(&self) -> usize {
+        if self.threads > 0 {
+            self.threads
+        } else {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+        }
+    }
+
+    /// The profiles selected by this config, in paper order.
+    pub fn profiles(&self) -> Vec<&'static crate::data::synthetic::Profile> {
+        crate::data::synthetic::PROFILES
+            .iter()
+            .filter(|p| {
+                self.datasets.is_empty()
+                    || self.datasets.iter().any(|d| d.eq_ignore_ascii_case(p.name))
+            })
+            .collect()
+    }
+
+    /// Passes for a profile under this config (at least 1).
+    pub fn passes_for(&self, p: &crate::data::synthetic::Profile) -> usize {
+        ((p.default_passes as f64 * self.passes_factor).round() as usize).max(1)
+    }
+
+    /// Serialize (for reproducibility stamps in result files).
+    pub fn to_json(&self) -> Json {
+        Json::object(vec![
+            ("scale", Json::num(self.scale)),
+            ("passes_factor", Json::num(self.passes_factor)),
+            ("runs", Json::num(self.runs as f64)),
+            ("grid", Json::num(self.grid as f64)),
+            ("seed", Json::num(self.seed as f64)),
+            ("threads", Json::num(self.threads as f64)),
+            (
+                "datasets",
+                Json::array(self.datasets.iter().map(|d| Json::str(d.clone())).collect()),
+            ),
+            ("out_dir", Json::str(self.out_dir.clone())),
+            ("smo_max_rows", Json::num(self.smo_max_rows as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_valid() {
+        ExperimentConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn parses_partial_config() {
+        let cfg =
+            ExperimentConfig::from_json_text(r#"{"scale": 0.05, "datasets": ["adult", "web"]}"#)
+                .unwrap();
+        assert_eq!(cfg.scale, 0.05);
+        assert_eq!(cfg.runs, 5); // default preserved
+        assert_eq!(cfg.profiles().len(), 2);
+    }
+
+    #[test]
+    fn rejects_unknown_dataset() {
+        assert!(ExperimentConfig::from_json_text(r#"{"datasets": ["nope"]}"#).is_err());
+    }
+
+    #[test]
+    fn roundtrips_through_json() {
+        let cfg = ExperimentConfig { scale: 0.25, runs: 3, ..Default::default() };
+        let text = cfg.to_json().to_string();
+        let back = ExperimentConfig::from_json_text(&text).unwrap();
+        assert_eq!(back.scale, 0.25);
+        assert_eq!(back.runs, 3);
+    }
+
+    #[test]
+    fn passes_scaling() {
+        let cfg = ExperimentConfig { passes_factor: 4.0, ..Default::default() };
+        let ijcnn = crate::data::synthetic::Profile::by_name("ijcnn").unwrap();
+        assert_eq!(cfg.passes_for(ijcnn), 20); // the paper's setting
+        let susy = crate::data::synthetic::Profile::by_name("susy").unwrap();
+        assert_eq!(cfg.passes_for(susy), 4);
+    }
+}

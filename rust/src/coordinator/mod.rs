@@ -1,0 +1,259 @@
+//! Coordinator: the top-level orchestration the CLI drives.
+//!
+//! Ties the experiment suite, the lookup-table artifacts and the PJRT
+//! runtime together: runs whole experiment campaigns, stamps results with
+//! the config for reproducibility, and exposes a single-run training entry
+//! point used by `repro train` and the examples.
+
+use std::io::Write;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::budget::Strategy;
+use crate::config::ExperimentConfig;
+use crate::data::synthetic::Profile;
+use crate::data::{libsvm, Dataset};
+use crate::experiments::{self, prepare};
+use crate::solver::{train_bsgd, BsgdOptions, TrainReport};
+use crate::util::json::Json;
+
+/// Everything `repro all` produces.
+pub struct CampaignSummary {
+    pub table1: String,
+    pub table2: String,
+    pub table3: String,
+    pub figure2: String,
+    pub figure3: String,
+    pub wall_seconds: f64,
+}
+
+/// Run the full experiment campaign (all tables + figures) and persist
+/// results under `cfg.out_dir`.
+pub fn run_campaign(cfg: &ExperimentConfig) -> Result<CampaignSummary> {
+    let t0 = Instant::now();
+    std::fs::create_dir_all(&cfg.out_dir)?;
+    stamp_config(cfg)?;
+
+    eprintln!("[campaign] table 1 (exact reference via SMO)...");
+    let t1_rows = experiments::table1::run(cfg)?;
+    let table1 = experiments::table1::render(&t1_rows, cfg)?;
+
+    eprintln!("[campaign] table 2 (accuracy, 4 methods x budgets x {} runs)...", cfg.runs);
+    let t2_cells = experiments::table2::run(cfg)?;
+    let table2 = experiments::table2::render(&t2_cells, cfg)?;
+
+    eprintln!("[campaign] table 3 (timing + agreement audit)...");
+    let (t3_rows, t3_cells) = experiments::table3::run(cfg)?;
+    let table3 = experiments::table3::render(&t3_rows, &t3_cells, cfg)?;
+
+    eprintln!("[campaign] figure 2 (lookup-table surfaces)...");
+    let table = experiments::figure2::run(cfg)?;
+    let figure2 = experiments::figure2::render(&table);
+
+    eprintln!("[campaign] figure 3 (merging-time breakdown)...");
+    let f3_bars = experiments::figure3::run(cfg)?;
+    let figure3 = experiments::figure3::render(&f3_bars, cfg)?;
+
+    let summary = CampaignSummary {
+        table1,
+        table2,
+        table3,
+        figure2,
+        figure3,
+        wall_seconds: t0.elapsed().as_secs_f64(),
+    };
+    write_summary(&summary, cfg)?;
+    Ok(summary)
+}
+
+fn stamp_config(cfg: &ExperimentConfig) -> Result<()> {
+    let mut f = std::fs::File::create(Path::new(&cfg.out_dir).join("config.json"))?;
+    writeln!(f, "{}", cfg.to_json())?;
+    Ok(())
+}
+
+fn write_summary(s: &CampaignSummary, cfg: &ExperimentConfig) -> Result<()> {
+    let mut f = std::fs::File::create(Path::new(&cfg.out_dir).join("summary.md"))?;
+    writeln!(f, "# budgetsvm experiment campaign\n")?;
+    writeln!(f, "Wall time: {:.1}s\n", s.wall_seconds)?;
+    writeln!(f, "## Table 1\n\n{}\n## Table 2\n\n{}", s.table1, s.table2)?;
+    writeln!(f, "## Table 3\n\n{}\n## Figure 2\n\n```\n{}```", s.table3, s.figure2)?;
+    writeln!(f, "\n## Figure 3\n\n```\n{}```", s.figure3)?;
+    Ok(())
+}
+
+/// A single training run on a named profile or a LIBSVM file; returns the
+/// report plus the test accuracy (profile runs) for `repro train`.
+pub struct SingleRun {
+    pub report: TrainReport,
+    pub test_accuracy: Option<f64>,
+    pub train_accuracy: f64,
+    pub dataset: String,
+    pub n_train: usize,
+}
+
+/// Train once. `data` is either a profile name (susy/skin/...) or a path
+/// to a LIBSVM file.
+pub fn run_single(
+    data: &str,
+    budget: usize,
+    strategy: Strategy,
+    cfg: &ExperimentConfig,
+    passes_override: Option<usize>,
+    c_override: Option<f64>,
+    gamma_override: Option<f64>,
+) -> Result<SingleRun> {
+    if let Some(profile) = Profile::by_name(data) {
+        let prep = prepare(profile, cfg);
+        let mut opts = experiments::options_for(&prep, cfg, strategy, budget, 0);
+        if let Some(p) = passes_override {
+            opts.passes = p;
+        }
+        if let Some(c) = c_override {
+            opts.lambda = 1.0 / (c * prep.train.len() as f64);
+        }
+        if let Some(g) = gamma_override {
+            opts.gamma = g;
+        }
+        let report = train_bsgd(&prep.train, &opts);
+        Ok(SingleRun {
+            test_accuracy: Some(report.model.accuracy(&prep.test)),
+            train_accuracy: report.model.accuracy(&prep.train),
+            dataset: profile.name.to_string(),
+            n_train: prep.train.len(),
+            report,
+        })
+    } else {
+        let mut ds: Dataset = libsvm::read_file(data, 0)
+            .with_context(|| format!("'{data}' is neither a profile name nor a readable file"))?;
+        let scaling = ds.fit_scaling();
+        ds.apply_scaling(&scaling);
+        let c = c_override.unwrap_or(1.0);
+        let gamma = gamma_override.unwrap_or(1.0 / ds.dim() as f64);
+        let mut opts = BsgdOptions::with_c(budget, c, gamma, ds.len());
+        opts.strategy = strategy;
+        opts.grid = cfg.grid;
+        opts.passes = passes_override.unwrap_or(5);
+        opts.seed = cfg.seed;
+        let report = train_bsgd(&ds, &opts);
+        Ok(SingleRun {
+            test_accuracy: None,
+            train_accuracy: report.model.accuracy(&ds),
+            dataset: ds.name.clone(),
+            n_train: ds.len(),
+            report,
+        })
+    }
+}
+
+/// Machine-readable dump of a single run (used by `repro train --json`).
+pub fn single_run_json(run: &SingleRun, strategy: Strategy) -> Json {
+    Json::object(vec![
+        ("dataset", Json::str(run.dataset.clone())),
+        ("n_train", Json::num(run.n_train as f64)),
+        ("strategy", Json::str(strategy.name())),
+        ("steps", Json::num(run.report.steps as f64)),
+        ("sv_inserts", Json::num(run.report.sv_inserts as f64)),
+        ("maintenance_events", Json::num(run.report.maintenance_events as f64)),
+        ("merging_frequency", Json::num(run.report.merging_frequency())),
+        ("num_sv", Json::num(run.report.model.num_sv() as f64)),
+        ("train_accuracy", Json::num(run.train_accuracy)),
+        (
+            "test_accuracy",
+            run.test_accuracy.map(Json::num).unwrap_or(Json::Null),
+        ),
+        ("wall_seconds", Json::num(run.report.wall_seconds)),
+        (
+            "maintenance_seconds",
+            Json::num(run.report.profiler.maintenance_seconds()),
+        ),
+        (
+            "section_a_seconds",
+            Json::num(run.report.profiler.seconds(crate::metrics::Section::MaintA)),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::budget::MergeSolver;
+
+    fn tmp_cfg(name: &str) -> ExperimentConfig {
+        ExperimentConfig {
+            scale: 0.005,
+            runs: 1,
+            grid: 50,
+            smo_max_rows: 200,
+            datasets: vec!["phishing".into()],
+            out_dir: std::env::temp_dir()
+                .join(format!("budgetsvm-coord-{name}"))
+                .to_string_lossy()
+                .into_owned(),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn single_run_on_profile() {
+        let cfg = tmp_cfg("single");
+        let run = run_single(
+            "phishing",
+            40,
+            Strategy::Merge(MergeSolver::LookupWd),
+            &cfg,
+            Some(1),
+            None,
+            None,
+        )
+        .unwrap();
+        assert!(run.test_accuracy.unwrap() > 0.5);
+        assert!(run.report.model.num_sv() <= 40);
+        let json = single_run_json(&run, Strategy::Merge(MergeSolver::LookupWd)).to_string();
+        assert!(json.contains("\"merging_frequency\""));
+    }
+
+    #[test]
+    fn single_run_on_libsvm_file() {
+        let cfg = tmp_cfg("libsvm");
+        std::fs::create_dir_all(&cfg.out_dir).unwrap();
+        let path = Path::new(&cfg.out_dir).join("toy.libsvm");
+        let ds = crate::data::synthetic::two_moons(300, 0.1, 3);
+        libsvm::write_file(&ds, &path).unwrap();
+        let run = run_single(
+            path.to_str().unwrap(),
+            20,
+            Strategy::Merge(MergeSolver::GssStandard),
+            &cfg,
+            Some(3),
+            Some(10.0),
+            Some(2.0),
+        )
+        .unwrap();
+        assert!(run.train_accuracy > 0.8, "{}", run.train_accuracy);
+        assert!(run.test_accuracy.is_none());
+        std::fs::remove_dir_all(&cfg.out_dir).ok();
+    }
+
+    #[test]
+    fn campaign_smoke_on_tiny_config() {
+        let cfg = tmp_cfg("campaign");
+        let summary = run_campaign(&cfg).unwrap();
+        assert!(summary.table1.contains("PHISHING"));
+        assert!(summary.table2.contains("PHISHING"));
+        assert!(summary.table3.contains("PHISHING"));
+        assert!(summary.figure2.contains("Figure 2a"));
+        assert!(summary.figure3.contains("PHISHING"));
+        // Everything persisted.
+        for f in ["config.json", "summary.md", "table1.csv", "table2.csv", "table3.csv",
+                  "figure2.csv", "figure3.csv"] {
+            assert!(
+                Path::new(&cfg.out_dir).join(f).exists(),
+                "missing output {f}"
+            );
+        }
+        std::fs::remove_dir_all(&cfg.out_dir).ok();
+    }
+}

@@ -1,0 +1,293 @@
+//! Dense binary-classification dataset container.
+//!
+//! Features are stored as one flat row-major `Vec<f32>` so the kernel row
+//! loop in the trainer walks memory linearly. Labels are `±1.0`. The paper's
+//! datasets top out at 300 features, so a dense layout beats a sparse one on
+//! modern hardware for everything in scope; sparse LIBSVM files are
+//! densified at load time.
+
+use crate::util::rng::Rng;
+
+/// A binary classification dataset with dense rows and ±1 labels.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    /// Row-major features, `n * d` entries.
+    x: Vec<f32>,
+    /// Labels in `{-1.0, +1.0}`, length `n`.
+    y: Vec<f32>,
+    /// Number of rows.
+    n: usize,
+    /// Number of features.
+    d: usize,
+    /// Optional human-readable name used in reports.
+    pub name: String,
+}
+
+/// A train/test split (owned copies).
+#[derive(Debug, Clone)]
+pub struct Split {
+    pub train: Dataset,
+    pub test: Dataset,
+}
+
+/// Per-feature affine scaling parameters (fit on train, applied to both).
+#[derive(Debug, Clone)]
+pub struct ScalingParams {
+    /// Per-feature offset subtracted before scaling.
+    pub offset: Vec<f32>,
+    /// Per-feature multiplier applied after the offset.
+    pub scale: Vec<f32>,
+}
+
+impl Dataset {
+    /// Build from flat row-major features and ±1 labels.
+    pub fn new(name: impl Into<String>, x: Vec<f32>, y: Vec<f32>, d: usize) -> Self {
+        assert!(d > 0, "feature dimension must be positive");
+        assert_eq!(x.len() % d, 0, "feature buffer not a multiple of d");
+        let n = x.len() / d;
+        assert_eq!(y.len(), n, "label count {} != row count {}", y.len(), n);
+        for (i, &l) in y.iter().enumerate() {
+            assert!(l == 1.0 || l == -1.0, "label at row {i} must be ±1, got {l}");
+        }
+        Dataset { x, y, n, d, name: name.into() }
+    }
+
+    /// Empty dataset with given dimension (rows are appended with [`push_row`]).
+    ///
+    /// [`push_row`]: Dataset::push_row
+    pub fn empty(name: impl Into<String>, d: usize) -> Self {
+        Dataset { x: Vec::new(), y: Vec::new(), n: 0, d, name: name.into() }
+    }
+
+    pub fn push_row(&mut self, row: &[f32], label: f32) {
+        assert_eq!(row.len(), self.d);
+        assert!(label == 1.0 || label == -1.0);
+        self.x.extend_from_slice(row);
+        self.y.push(label);
+        self.n += 1;
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    /// Feature row `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.x[i * self.d..(i + 1) * self.d]
+    }
+
+    /// Label of row `i` (±1).
+    #[inline]
+    pub fn label(&self, i: usize) -> f32 {
+        self.y[i]
+    }
+
+    /// Flat feature buffer (row-major).
+    pub fn features(&self) -> &[f32] {
+        &self.x
+    }
+
+    /// Label vector.
+    pub fn labels(&self) -> &[f32] {
+        &self.y
+    }
+
+    /// Fraction of rows with label +1.
+    pub fn positive_fraction(&self) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        self.y.iter().filter(|&&l| l > 0.0).count() as f64 / self.n as f64
+    }
+
+    /// In-place deterministic row shuffle.
+    pub fn shuffle(&mut self, rng: &mut Rng) {
+        let perm = rng.permutation(self.n);
+        let mut x = vec![0.0f32; self.x.len()];
+        let mut y = vec![0.0f32; self.n];
+        for (new_i, &old_i) in perm.iter().enumerate() {
+            x[new_i * self.d..(new_i + 1) * self.d].copy_from_slice(self.row(old_i));
+            y[new_i] = self.y[old_i];
+        }
+        self.x = x;
+        self.y = y;
+    }
+
+    /// Copy a subset of rows by index.
+    pub fn subset(&self, idx: &[usize], name: impl Into<String>) -> Dataset {
+        let mut out = Dataset::empty(name, self.d);
+        for &i in idx {
+            out.push_row(self.row(i), self.y[i]);
+        }
+        out
+    }
+
+    /// Random subsample of at most `k` rows.
+    pub fn subsample(&self, k: usize, rng: &mut Rng) -> Dataset {
+        if k >= self.n {
+            return self.clone();
+        }
+        let idx = rng.sample_indices(self.n, k);
+        self.subset(&idx, format!("{}[sub{}]", self.name, k))
+    }
+
+    /// Split off the last `test_fraction` of rows (shuffle first for an
+    /// i.i.d. split).
+    pub fn split(&self, test_fraction: f64, rng: &mut Rng) -> Split {
+        assert!((0.0..1.0).contains(&test_fraction));
+        let mut shuffled = self.clone();
+        shuffled.shuffle(rng);
+        let n_test = ((self.n as f64) * test_fraction).round() as usize;
+        let n_train = self.n - n_test;
+        let train_idx: Vec<usize> = (0..n_train).collect();
+        let test_idx: Vec<usize> = (n_train..self.n).collect();
+        Split {
+            train: shuffled.subset(&train_idx, format!("{}-train", self.name)),
+            test: shuffled.subset(&test_idx, format!("{}-test", self.name)),
+        }
+    }
+
+    /// Fit per-feature scaling to `[-1, 1]` (LIBSVM `svm-scale` convention:
+    /// min/max over the training data; constant features map to 0).
+    pub fn fit_scaling(&self) -> ScalingParams {
+        let mut lo = vec![f32::INFINITY; self.d];
+        let mut hi = vec![f32::NEG_INFINITY; self.d];
+        for i in 0..self.n {
+            for (j, &v) in self.row(i).iter().enumerate() {
+                lo[j] = lo[j].min(v);
+                hi[j] = hi[j].max(v);
+            }
+        }
+        let mut offset = vec![0.0f32; self.d];
+        let mut scale = vec![1.0f32; self.d];
+        for j in 0..self.d {
+            let range = hi[j] - lo[j];
+            if range > 0.0 && range.is_finite() {
+                offset[j] = (hi[j] + lo[j]) / 2.0;
+                scale[j] = 2.0 / range;
+            } else {
+                offset[j] = lo[j].min(hi[j]); // constant (or empty) feature → 0
+                scale[j] = 0.0;
+            }
+        }
+        ScalingParams { offset, scale }
+    }
+
+    /// Apply scaling in place.
+    pub fn apply_scaling(&mut self, p: &ScalingParams) {
+        assert_eq!(p.offset.len(), self.d);
+        for i in 0..self.n {
+            let base = i * self.d;
+            for j in 0..self.d {
+                self.x[base + j] = (self.x[base + j] - p.offset[j]) * p.scale[j];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Dataset {
+        Dataset::new(
+            "toy",
+            vec![0.0, 0.0, 1.0, 1.0, 2.0, 2.0, 3.0, 3.0],
+            vec![1.0, 1.0, -1.0, -1.0],
+            2,
+        )
+    }
+
+    #[test]
+    fn basic_accessors() {
+        let ds = toy();
+        assert_eq!(ds.len(), 4);
+        assert_eq!(ds.dim(), 2);
+        assert_eq!(ds.row(2), &[2.0, 2.0]);
+        assert_eq!(ds.label(2), -1.0);
+        assert_eq!(ds.positive_fraction(), 0.5);
+    }
+
+    #[test]
+    #[should_panic(expected = "label")]
+    fn rejects_bad_labels() {
+        Dataset::new("bad", vec![0.0, 0.0], vec![0.5], 2);
+    }
+
+    #[test]
+    fn shuffle_preserves_row_label_pairing() {
+        let mut ds = toy();
+        let mut rng = Rng::new(4);
+        ds.shuffle(&mut rng);
+        assert_eq!(ds.len(), 4);
+        for i in 0..4 {
+            let r = ds.row(i);
+            // In the toy set, row = [v, v] and label = +1 iff v < 2.
+            assert_eq!(r[0], r[1]);
+            let expect = if r[0] < 2.0 { 1.0 } else { -1.0 };
+            assert_eq!(ds.label(i), expect);
+        }
+    }
+
+    #[test]
+    fn split_partitions_rows() {
+        let mut rng = Rng::new(1);
+        let ds = toy();
+        let split = ds.split(0.25, &mut rng);
+        assert_eq!(split.train.len(), 3);
+        assert_eq!(split.test.len(), 1);
+        assert_eq!(split.train.dim(), 2);
+    }
+
+    #[test]
+    fn scaling_maps_to_unit_interval() {
+        let mut ds = toy();
+        let p = ds.fit_scaling();
+        ds.apply_scaling(&p);
+        for i in 0..ds.len() {
+            for &v in ds.row(i) {
+                assert!((-1.0..=1.0).contains(&v), "value {v} out of range");
+            }
+        }
+        // extremes hit the interval ends
+        assert_eq!(ds.row(0)[0], -1.0);
+        assert_eq!(ds.row(3)[0], 1.0);
+    }
+
+    #[test]
+    fn scaling_handles_constant_feature() {
+        let mut ds = Dataset::new(
+            "const",
+            vec![5.0, 1.0, 5.0, 2.0, 5.0, 3.0],
+            vec![1.0, -1.0, 1.0],
+            2,
+        );
+        let p = ds.fit_scaling();
+        ds.apply_scaling(&p);
+        for i in 0..3 {
+            assert_eq!(ds.row(i)[0], 0.0);
+        }
+    }
+
+    #[test]
+    fn subsample_size_and_validity() {
+        let ds = toy();
+        let mut rng = Rng::new(8);
+        let sub = ds.subsample(2, &mut rng);
+        assert_eq!(sub.len(), 2);
+        let all = ds.subsample(10, &mut rng);
+        assert_eq!(all.len(), 4);
+    }
+}

@@ -1,0 +1,170 @@
+//! LIBSVM sparse text format reader/writer.
+//!
+//! Format, one example per line:
+//! ```text
+//! <label> <index>:<value> <index>:<value> ...
+//! ```
+//! Indices are 1-based and ascending; omitted features are zero. Labels are
+//! mapped to ±1: values > 0 (e.g. `1`, `+1`, `2` in some multiclass dumps
+//! restricted to two classes) become `+1`, the rest `-1`; `0/1` labeled
+//! files are handled by mapping `0 → −1`.
+//!
+//! The parser densifies into [`Dataset`] because every set in scope has
+//! ≤ a few hundred features (see `data::dataset`).
+
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::Dataset;
+
+/// Parse LIBSVM text from a reader. `dim` forces the feature dimension
+/// (0 = infer from the maximum index seen).
+pub fn read<R: Read>(reader: R, name: &str, dim: usize) -> Result<Dataset> {
+    let mut labels: Vec<f32> = Vec::new();
+    let mut rows: Vec<Vec<(usize, f32)>> = Vec::new();
+    let mut max_index = 0usize;
+
+    for (lineno, line) in BufReader::new(reader).lines().enumerate() {
+        let line = line.with_context(|| format!("I/O error at line {}", lineno + 1))?;
+        let line = line.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let label_tok = parts.next().unwrap();
+        let label: f32 = label_tok
+            .parse::<f64>()
+            .map_err(|_| anyhow::anyhow!("bad label '{label_tok}' at line {}", lineno + 1))?
+            as f32;
+        let label = if label > 0.0 { 1.0 } else { -1.0 };
+
+        let mut feats: Vec<(usize, f32)> = Vec::new();
+        for tok in parts {
+            let (idx_s, val_s) = tok
+                .split_once(':')
+                .with_context(|| format!("bad feature token '{tok}' at line {}", lineno + 1))?;
+            let idx: usize = idx_s
+                .parse()
+                .with_context(|| format!("bad feature index '{idx_s}' at line {}", lineno + 1))?;
+            if idx == 0 {
+                bail!("feature indices are 1-based; got 0 at line {}", lineno + 1);
+            }
+            let val: f32 = val_s
+                .parse()
+                .with_context(|| format!("bad feature value '{val_s}' at line {}", lineno + 1))?;
+            max_index = max_index.max(idx);
+            feats.push((idx - 1, val));
+        }
+        labels.push(label);
+        rows.push(feats);
+    }
+
+    let d = if dim > 0 {
+        if max_index > dim {
+            bail!("file has feature index {max_index} > forced dimension {dim}");
+        }
+        dim
+    } else if max_index == 0 {
+        bail!("no features found; cannot infer dimension");
+    } else {
+        max_index
+    };
+
+    let mut x = vec![0.0f32; rows.len() * d];
+    for (i, feats) in rows.iter().enumerate() {
+        for &(j, v) in feats {
+            x[i * d + j] = v;
+        }
+    }
+    Ok(Dataset::new(name, x, labels, d))
+}
+
+/// Read a LIBSVM file from disk.
+pub fn read_file(path: impl AsRef<Path>, dim: usize) -> Result<Dataset> {
+    let path = path.as_ref();
+    let f = std::fs::File::open(path)
+        .with_context(|| format!("cannot open LIBSVM file {}", path.display()))?;
+    let name = path.file_stem().and_then(|s| s.to_str()).unwrap_or("libsvm").to_string();
+    read(f, &name, dim)
+}
+
+/// Write a dataset in LIBSVM format (zeros omitted).
+pub fn write<W: Write>(ds: &Dataset, writer: W) -> Result<()> {
+    let mut w = BufWriter::new(writer);
+    for i in 0..ds.len() {
+        let label = if ds.label(i) > 0.0 { "+1" } else { "-1" };
+        write!(w, "{label}")?;
+        for (j, &v) in ds.row(i).iter().enumerate() {
+            if v != 0.0 {
+                write!(w, " {}:{}", j + 1, v)?;
+            }
+        }
+        writeln!(w)?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Write a dataset to a file in LIBSVM format.
+pub fn write_file(ds: &Dataset, path: impl AsRef<Path>) -> Result<()> {
+    let f = std::fs::File::create(path.as_ref())
+        .with_context(|| format!("cannot create {}", path.as_ref().display()))?;
+    write(ds, f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_basic_file() {
+        let text = "+1 1:0.5 3:2.0\n-1 2:1.0\n# comment line\n\n+1 1:-1 2:-2 3:-3\n";
+        let ds = read(text.as_bytes(), "t", 0).unwrap();
+        assert_eq!(ds.len(), 3);
+        assert_eq!(ds.dim(), 3);
+        assert_eq!(ds.row(0), &[0.5, 0.0, 2.0]);
+        assert_eq!(ds.row(1), &[0.0, 1.0, 0.0]);
+        assert_eq!(ds.labels(), &[1.0, -1.0, 1.0]);
+    }
+
+    #[test]
+    fn zero_one_labels_map_to_pm1() {
+        let text = "1 1:1\n0 1:2\n";
+        let ds = read(text.as_bytes(), "t", 0).unwrap();
+        assert_eq!(ds.labels(), &[1.0, -1.0]);
+    }
+
+    #[test]
+    fn forced_dimension_pads() {
+        let text = "+1 1:1\n";
+        let ds = read(text.as_bytes(), "t", 5).unwrap();
+        assert_eq!(ds.dim(), 5);
+        assert_eq!(ds.row(0), &[1.0, 0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn rejects_zero_index() {
+        let text = "+1 0:1\n";
+        assert!(read(text.as_bytes(), "t", 0).is_err());
+    }
+
+    #[test]
+    fn rejects_malformed_token() {
+        assert!(read("+1 1=3\n".as_bytes(), "t", 0).is_err());
+        assert!(read("abc 1:3\n".as_bytes(), "t", 0).is_err());
+        assert!(read("+1 x:3\n".as_bytes(), "t", 0).is_err());
+    }
+
+    #[test]
+    fn round_trip() {
+        let text = "+1 1:0.5 3:2\n-1 2:1.5\n";
+        let ds = read(text.as_bytes(), "t", 3).unwrap();
+        let mut buf = Vec::new();
+        write(&ds, &mut buf).unwrap();
+        let ds2 = read(buf.as_slice(), "t2", 3).unwrap();
+        assert_eq!(ds.features(), ds2.features());
+        assert_eq!(ds.labels(), ds2.labels());
+    }
+}

@@ -1,0 +1,16 @@
+//! Data pipeline: dense dataset container, LIBSVM-format I/O, feature
+//! scaling, train/test splitting, and synthetic generators for the six
+//! benchmark profiles of the paper (SUSY, SKIN, IJCNN, ADULT, WEB,
+//! PHISHING).
+//!
+//! Real copies of the paper's datasets are external downloads; this
+//! environment is offline, so [`synthetic`] generates statistical stand-ins
+//! (see DESIGN.md §5 for the substitution argument). The LIBSVM parser in
+//! [`libsvm`] means a user with the real files can run every experiment on
+//! them unchanged (`repro train --data path.libsvm ...`).
+
+mod dataset;
+pub mod libsvm;
+pub mod synthetic;
+
+pub use dataset::{Dataset, ScalingParams, Split};

@@ -1,0 +1,566 @@
+//! Synthetic stand-ins for the paper's six benchmark datasets.
+//!
+//! The real SUSY/SKIN/IJCNN/ADULT/WEB/PHISHING files are external downloads
+//! and unavailable offline, so each profile here generates a synthetic
+//! binary classification problem matching the real set's feature count,
+//! rough size (downscaled where DESIGN.md §5 notes), class balance,
+//! sparsity character (dense continuous vs. one-hot binary) and approximate
+//! achievable accuracy. The quantities the paper's claims depend on —
+//! merging frequency, kernel-evaluation cost per step, margin distribution —
+//! are functions of these, not of the actual physics/census semantics.
+//!
+//! Two generator families:
+//! * [`GaussianMixture`] — class-conditional Gaussian mixtures in `d`
+//!   continuous dimensions (SUSY, SKIN, IJCNN);
+//! * [`SparseBinary`] — one-hot/Bernoulli feature vectors with a subset of
+//!   informative coordinates (ADULT, WEB, PHISHING).
+
+use crate::util::rng::Rng;
+
+use super::Dataset;
+
+/// Class-conditional Gaussian mixture generator.
+#[derive(Debug, Clone)]
+pub struct GaussianMixture {
+    /// Feature dimension.
+    pub dim: usize,
+    /// Mixture components per class.
+    pub centers_per_class: usize,
+    /// Std of the center positions around the (separated) class means.
+    pub center_spread: f64,
+    /// Within-component standard deviation.
+    pub within_std: f64,
+    /// Distance between the two class means along a random direction,
+    /// in units of `within_std` — the difficulty knob.
+    pub separation: f64,
+    /// Fraction of +1 labels.
+    pub positive_fraction: f64,
+    /// Fraction of labels flipped after generation (label noise floor).
+    pub label_noise: f64,
+}
+
+impl GaussianMixture {
+    /// Generate `n` rows.
+    pub fn generate(&self, n: usize, name: &str, rng: &mut Rng) -> Dataset {
+        let d = self.dim;
+        // Random unit separation direction.
+        let mut dir: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        let norm = dir.iter().map(|v| v * v).sum::<f64>().sqrt().max(1e-12);
+        dir.iter_mut().for_each(|v| *v /= norm);
+        let half_gap = 0.5 * self.separation * self.within_std;
+
+        // Component centers per class: class mean ± the gap, plus spread.
+        let mut centers = [Vec::new(), Vec::new()]; // [neg, pos]
+        for (c, sign) in [(0usize, -1.0f64), (1usize, 1.0f64)] {
+            for _ in 0..self.centers_per_class {
+                let center: Vec<f64> = (0..d)
+                    .map(|j| sign * half_gap * dir[j] + self.center_spread * rng.normal())
+                    .collect();
+                centers[c].push(center);
+            }
+        }
+
+        let mut ds = Dataset::empty(name, d);
+        let mut row = vec![0.0f32; d];
+        for _ in 0..n {
+            let positive = rng.bernoulli(self.positive_fraction);
+            let class = usize::from(positive);
+            let comp = rng.below(self.centers_per_class);
+            let center = &centers[class][comp];
+            for j in 0..d {
+                row[j] = (center[j] + self.within_std * rng.normal()) as f32;
+            }
+            let mut label = if positive { 1.0 } else { -1.0 };
+            if rng.bernoulli(self.label_noise) {
+                label = -label;
+            }
+            ds.push_row(&row, label);
+        }
+        ds
+    }
+}
+
+/// Sparse one-hot style Bernoulli generator (census/web-text like sets).
+#[derive(Debug, Clone)]
+pub struct SparseBinary {
+    /// Feature dimension.
+    pub dim: usize,
+    /// Number of informative coordinates (the rest are class-independent noise).
+    pub informative: usize,
+    /// Base activation probability of each feature.
+    pub base_p: f64,
+    /// Additive shift of the activation probability on informative features
+    /// for the positive class (negative class gets `-shift`) — the
+    /// difficulty knob.
+    pub shift: f64,
+    /// Fraction of +1 labels.
+    pub positive_fraction: f64,
+    /// Fraction of labels flipped after generation.
+    pub label_noise: f64,
+    /// If nonzero, rows are drawn from a codebook of this many distinct
+    /// patterns per class instead of being i.i.d. — mimicking one-hot
+    /// encodings of a few discrete attributes, where the same feature
+    /// combination recurs many times (e.g. PHISHING: with γ = 2³ any two
+    /// *distinct* rows are kernel-orthogonal, so the learnability of the
+    /// real set comes entirely from duplicated rows).
+    pub codebook: usize,
+}
+
+impl SparseBinary {
+    pub fn generate(&self, n: usize, name: &str, rng: &mut Rng) -> Dataset {
+        assert!(self.informative <= self.dim);
+        // Random informative coordinate set and per-coordinate signs, fixed
+        // per dataset instance.
+        let mut idx = rng.permutation(self.dim);
+        idx.truncate(self.informative);
+        let signs: Vec<f64> = (0..self.informative)
+            .map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 })
+            .collect();
+
+        let mut informative_mask = vec![0.0f64; self.dim];
+        for (k, &j) in idx.iter().enumerate() {
+            informative_mask[j] = signs[k];
+        }
+
+        let mut row = vec![0.0f32; self.dim];
+        let draw_row = |rng: &mut Rng, y: f64, row: &mut [f32]| {
+            for j in 0..self.dim {
+                let p = (self.base_p + y * informative_mask[j] * self.shift).clamp(0.005, 0.995);
+                row[j] = if rng.bernoulli(p) { 1.0 } else { 0.0 };
+            }
+        };
+
+        // Optional codebooks of recurring patterns per class.
+        let mut codebooks: [Vec<Vec<f32>>; 2] = [Vec::new(), Vec::new()];
+        if self.codebook > 0 {
+            for (c, y) in [(0usize, -1.0f64), (1usize, 1.0f64)] {
+                for _ in 0..self.codebook {
+                    draw_row(rng, y, &mut row);
+                    codebooks[c].push(row.clone());
+                }
+            }
+        }
+
+        let mut ds = Dataset::empty(name, self.dim);
+        for _ in 0..n {
+            let positive = rng.bernoulli(self.positive_fraction);
+            let y = if positive { 1.0 } else { -1.0 };
+            if self.codebook > 0 {
+                let class = usize::from(positive);
+                let pattern = &codebooks[class][rng.below(self.codebook)];
+                row.copy_from_slice(pattern);
+            } else {
+                draw_row(rng, y, &mut row);
+            }
+            let mut label = y as f32;
+            if rng.bernoulli(self.label_noise) {
+                label = -label;
+            }
+            ds.push_row(&row, label);
+        }
+        ds
+    }
+}
+
+/// One of the six benchmark profiles from Table 1 of the paper, with its
+/// hyperparameters and our (downscaled) sizes.
+#[derive(Debug, Clone)]
+pub struct Profile {
+    /// Canonical lowercase name: susy, skin, ijcnn, adult, web, phishing.
+    pub name: &'static str,
+    /// Training rows we generate (paper's n in comments).
+    pub n_train: usize,
+    /// Test rows we generate.
+    pub n_test: usize,
+    /// Feature count (matches the real set).
+    pub dim: usize,
+    /// Regularization C = 1/(n·λ) from Table 1.
+    pub log2_c: i32,
+    /// Gaussian kernel bandwidth exponent: γ = 2^{log2_gamma} (Table 1).
+    pub log2_gamma: i32,
+    /// Budget sizes evaluated in Tables 2/3.
+    pub budgets: [usize; 2],
+    /// Epochs ("passes") the paper used for this set.
+    pub paper_passes: usize,
+    /// Our default passes for table sweeps (paper-faithful via `--passes`).
+    pub default_passes: usize,
+}
+
+/// The six profiles in paper order. Sizes per DESIGN.md §5.
+pub const PROFILES: [Profile; 6] = [
+    Profile {
+        // paper: 4,500,000 × 18, C=2^5, γ=2^-7, single pass
+        name: "susy",
+        n_train: 300_000,
+        n_test: 20_000,
+        dim: 18,
+        log2_c: 5,
+        log2_gamma: -7,
+        budgets: [100, 500],
+        paper_passes: 1,
+        default_passes: 1,
+    },
+    Profile {
+        // paper: 183,793 × 3, C=2^5, γ=2^-7
+        name: "skin",
+        n_train: 60_000,
+        n_test: 6_000,
+        dim: 3,
+        log2_c: 5,
+        log2_gamma: -7,
+        budgets: [100, 200],
+        paper_passes: 20,
+        default_passes: 5,
+    },
+    Profile {
+        // paper: 49,990 × 22, C=2^5, γ=2^1
+        name: "ijcnn",
+        n_train: 25_000,
+        n_test: 5_000,
+        dim: 22,
+        log2_c: 5,
+        log2_gamma: 1,
+        budgets: [100, 500],
+        paper_passes: 20,
+        default_passes: 5,
+    },
+    Profile {
+        // paper: 32,561 × 123, C=2^5, γ=2^-7
+        name: "adult",
+        n_train: 16_000,
+        n_test: 4_000,
+        dim: 123,
+        log2_c: 5,
+        log2_gamma: -7,
+        budgets: [100, 500],
+        paper_passes: 20,
+        default_passes: 5,
+    },
+    Profile {
+        // paper: 17,188 × 300, C=2^3, γ=2^-5
+        name: "web",
+        n_train: 10_000,
+        n_test: 3_000,
+        dim: 300,
+        log2_c: 3,
+        log2_gamma: -5,
+        budgets: [100, 500],
+        paper_passes: 20,
+        default_passes: 5,
+    },
+    Profile {
+        // paper: 8,315 × 68, C=2^3, γ=2^3
+        name: "phishing",
+        n_train: 8_000,
+        n_test: 2_000,
+        dim: 68,
+        log2_c: 3,
+        log2_gamma: 3,
+        budgets: [100, 500],
+        paper_passes: 20,
+        default_passes: 5,
+    },
+];
+
+impl Profile {
+    /// Look up a profile by (case-insensitive) name.
+    pub fn by_name(name: &str) -> Option<&'static Profile> {
+        let lname = name.to_ascii_lowercase();
+        PROFILES.iter().find(|p| p.name == lname)
+    }
+
+    /// `C` value from the log2 exponent.
+    pub fn c(&self) -> f64 {
+        (2.0f64).powi(self.log2_c)
+    }
+
+    /// `γ` value from the log2 exponent.
+    pub fn gamma(&self) -> f64 {
+        (2.0f64).powi(self.log2_gamma)
+    }
+
+    /// `λ = 1/(n·C)` for a given training size.
+    pub fn lambda(&self, n: usize) -> f64 {
+        1.0 / (n as f64 * self.c())
+    }
+
+    /// Generate the (train, test) pair for this profile with a given scale
+    /// factor on the row counts (1.0 = our default sizes; benches use less).
+    pub fn generate(&self, scale: f64, seed: u64) -> (Dataset, Dataset) {
+        let n_train = ((self.n_train as f64 * scale).round() as usize).max(64);
+        let n_test = ((self.n_test as f64 * scale).round() as usize).max(32);
+        let mut rng = Rng::new(seed ^ fxhash(self.name));
+        // IMPORTANT: train and test must come from the SAME generator
+        // instance (mixture centers / informative coordinates are sampled
+        // once per generate() call), so generate n_train+n_test rows in one
+        // call and split the i.i.d. stream afterwards.
+        let gen_pair = |rng: &mut Rng, nt: usize, ne: usize| -> (Dataset, Dataset) {
+            let split = |whole: Dataset, nt: usize| -> (Dataset, Dataset) {
+                let train_idx: Vec<usize> = (0..nt).collect();
+                let test_idx: Vec<usize> = (nt..whole.len()).collect();
+                (
+                    whole.subset(&train_idx, format!("{}-train", self.name)),
+                    whole.subset(&test_idx, format!("{}-test", self.name)),
+                )
+            };
+            match self.name {
+                // Dense continuous profiles.
+                "susy" => {
+                    // Hard physics-like problem, heavy class overlap (~79-80%).
+                    let g = GaussianMixture {
+                        dim: self.dim,
+                        centers_per_class: 8,
+                        center_spread: 1.0,
+                        within_std: 1.0,
+                        separation: 1.35,
+                        positive_fraction: 0.46,
+                        label_noise: 0.02,
+                    };
+                    split(g.generate(nt + ne, "susy", rng), nt)
+                }
+                "skin" => {
+                    // 3 features, almost separable (~99.9%).
+                    let g = GaussianMixture {
+                        dim: self.dim,
+                        centers_per_class: 3,
+                        center_spread: 0.6,
+                        within_std: 0.35,
+                        separation: 9.0,
+                        positive_fraction: 0.21,
+                        label_noise: 0.004,
+                    };
+                    split(g.generate(nt + ne, "skin", rng), nt)
+                }
+                "ijcnn" => {
+                    // Imbalanced, highly nonlinear but learnable (~98.8%).
+                    let g = GaussianMixture {
+                        dim: self.dim,
+                        centers_per_class: 12,
+                        center_spread: 0.9,
+                        within_std: 0.30,
+                        separation: 5.5,
+                        positive_fraction: 0.10,
+                        label_noise: 0.012,
+                    };
+                    split(g.generate(nt + ne, "ijcnn", rng), nt)
+                }
+                // Sparse one-hot profiles.
+                "adult" => {
+                    // Census one-hot, noisy (~85%).
+                    let g = SparseBinary {
+                        dim: self.dim,
+                        informative: 40,
+                        base_p: 0.11,
+                        shift: 0.075,
+                        positive_fraction: 0.24,
+                        label_noise: 0.05,
+                        codebook: 0,
+                    };
+                    split(g.generate(nt + ne, "adult", rng), nt)
+                }
+                "web" => {
+                    // Web text features, strong signal (~98.8%).
+                    let g = SparseBinary {
+                        dim: self.dim,
+                        informative: 90,
+                        base_p: 0.04,
+                        shift: 0.09,
+                        positive_fraction: 0.03,
+                        label_noise: 0.003,
+                        codebook: 0,
+                    };
+                    split(g.generate(nt + ne, "web", rng), nt)
+                }
+                "phishing" => {
+                    // Site features, clean (~97.5%).
+                    let g = SparseBinary {
+                        dim: self.dim,
+                        informative: 30,
+                        base_p: 0.35,
+                        shift: 0.16,
+                        positive_fraction: 0.56,
+                        label_noise: 0.012,
+                        // γ=2³ makes distinct rows kernel-orthogonal: real
+                        // PHISHING is learnable through recurring one-hot
+                        // patterns, reproduced with a per-class codebook.
+                        codebook: 80,
+                    };
+                    split(g.generate(nt + ne, "phishing", rng), nt)
+                }
+                other => panic!("unknown profile '{other}'"),
+            }
+        };
+        gen_pair(&mut rng, n_train, n_test)
+    }
+}
+
+/// Tiny FNV-style string hash to decorrelate per-profile seeds.
+fn fxhash(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+/// A small deterministic two-moons-like toy problem used by tests, examples
+/// and the quickstart: two interleaved half-circles in 2-D, nonlinearly
+/// separable (needs a Gaussian kernel).
+pub fn two_moons(n: usize, noise: f64, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let mut ds = Dataset::empty("two-moons", 2);
+    for i in 0..n {
+        let positive = i % 2 == 0;
+        let t = std::f64::consts::PI * rng.uniform();
+        let (mut px, mut py) = if positive {
+            (t.cos(), t.sin())
+        } else {
+            (1.0 - t.cos(), 0.5 - t.sin())
+        };
+        px += noise * rng.normal();
+        py += noise * rng.normal();
+        ds.push_row(&[px as f32, py as f32], if positive { 1.0 } else { -1.0 });
+    }
+    ds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profiles_by_name() {
+        for p in &PROFILES {
+            assert_eq!(Profile::by_name(p.name).unwrap().name, p.name);
+            assert_eq!(Profile::by_name(&p.name.to_uppercase()).unwrap().name, p.name);
+        }
+        assert!(Profile::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn hyperparameters_match_table1() {
+        let susy = Profile::by_name("susy").unwrap();
+        assert_eq!(susy.c(), 32.0);
+        assert!((susy.gamma() - 0.0078125).abs() < 1e-12);
+        let phishing = Profile::by_name("phishing").unwrap();
+        assert_eq!(phishing.c(), 8.0);
+        assert_eq!(phishing.gamma(), 8.0);
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let p = Profile::by_name("adult").unwrap();
+        let (a1, _) = p.generate(0.01, 7);
+        let (a2, _) = p.generate(0.01, 7);
+        assert_eq!(a1.features(), a2.features());
+        assert_eq!(a1.labels(), a2.labels());
+        let (a3, _) = p.generate(0.01, 8);
+        assert_ne!(a1.features(), a3.features());
+    }
+
+    #[test]
+    fn dimensions_and_sizes_match_spec() {
+        for p in &PROFILES {
+            let (train, test) = p.generate(0.005, 3);
+            assert_eq!(train.dim(), p.dim, "{}", p.name);
+            assert_eq!(test.dim(), p.dim);
+            assert!(train.len() >= 64);
+            assert!(test.len() >= 32);
+        }
+    }
+
+    #[test]
+    fn class_balance_approximately_matches() {
+        let p = Profile::by_name("ijcnn").unwrap();
+        let (train, _) = p.generate(0.2, 5);
+        let pos = train.positive_fraction();
+        assert!((pos - 0.10).abs() < 0.02, "ijcnn positive fraction {pos}");
+    }
+
+    #[test]
+    fn sparse_profiles_are_binary_valued() {
+        let p = Profile::by_name("web").unwrap();
+        let (train, _) = p.generate(0.02, 11);
+        for i in 0..train.len() {
+            for &v in train.row(i) {
+                assert!(v == 0.0 || v == 1.0);
+            }
+        }
+        // Web is sparse: average density well below 20%.
+        let nnz: usize =
+            (0..train.len()).map(|i| train.row(i).iter().filter(|&&v| v != 0.0).count()).sum();
+        let density = nnz as f64 / (train.len() * train.dim()) as f64;
+        assert!(density < 0.2, "density={density}");
+    }
+
+    #[test]
+    fn two_moons_shape() {
+        let ds = two_moons(200, 0.05, 1);
+        assert_eq!(ds.len(), 200);
+        assert_eq!(ds.dim(), 2);
+        assert!((ds.positive_fraction() - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn mixture_separation_controls_difficulty() {
+        // A nearest-class-mean classifier should be near-perfect at high
+        // separation and near-chance at zero separation.
+        let mut easy_acc = 0.0;
+        let mut hard_acc = 0.0;
+        for (sep, acc) in [(12.0, &mut easy_acc), (0.0, &mut hard_acc)] {
+            let g = GaussianMixture {
+                dim: 6,
+                centers_per_class: 1,
+                center_spread: 0.0,
+                within_std: 1.0,
+                separation: sep,
+                positive_fraction: 0.5,
+                label_noise: 0.0,
+            };
+            let mut rng = Rng::new(42);
+            let ds = g.generate(2000, "t", &mut rng);
+            // class means
+            let d = ds.dim();
+            let mut mean_pos = vec![0.0f64; d];
+            let mut mean_neg = vec![0.0f64; d];
+            let (mut np, mut nn) = (0.0, 0.0);
+            for i in 0..ds.len() {
+                let m = if ds.label(i) > 0.0 {
+                    np += 1.0;
+                    &mut mean_pos
+                } else {
+                    nn += 1.0;
+                    &mut mean_neg
+                };
+                for (j, &v) in ds.row(i).iter().enumerate() {
+                    m[j] += v as f64;
+                }
+            }
+            mean_pos.iter_mut().for_each(|v| *v /= np);
+            mean_neg.iter_mut().for_each(|v| *v /= nn);
+            let mut correct = 0;
+            for i in 0..ds.len() {
+                let dp: f64 = ds
+                    .row(i)
+                    .iter()
+                    .zip(&mean_pos)
+                    .map(|(&x, &m)| (x as f64 - m).powi(2))
+                    .sum();
+                let dn: f64 = ds
+                    .row(i)
+                    .iter()
+                    .zip(&mean_neg)
+                    .map(|(&x, &m)| (x as f64 - m).powi(2))
+                    .sum();
+                let pred = if dp < dn { 1.0 } else { -1.0 };
+                if pred == ds.label(i) {
+                    correct += 1;
+                }
+            }
+            *acc = correct as f64 / ds.len() as f64;
+        }
+        assert!(easy_acc > 0.99, "easy accuracy {easy_acc}");
+        assert!(hard_acc < 0.60, "hard accuracy {hard_acc}");
+    }
+}

@@ -1,0 +1,95 @@
+//! Figure 2: the graphs of `h(m,κ)` (2a) and `WD(m,κ)` (2b).
+//!
+//! Emits the full grid as CSV (`figure2.csv`: m, kappa, h, s, wd — ready
+//! for gnuplot/matplotlib surface plots) plus a coarse ASCII heat map of
+//! each function so the structure — the `h` discontinuity at
+//! `m = 1/2, κ < e⁻²` and the smooth WD surface — is visible in a
+//! terminal.
+
+use anyhow::Result;
+
+use crate::budget::LookupTable;
+use crate::config::ExperimentConfig;
+
+/// Build (or reuse) the table and export the CSV. Returns the table used.
+pub fn run(cfg: &ExperimentConfig) -> Result<LookupTable> {
+    let table = LookupTable::build(cfg.grid);
+    let dir = std::path::Path::new(&cfg.out_dir);
+    std::fs::create_dir_all(dir)?;
+    let f = std::fs::File::create(dir.join("figure2.csv"))?;
+    table.export_csv(f)?;
+    Ok(table)
+}
+
+/// ASCII heat map of a `[0,1]²` function sampled on `rows × cols` cells.
+pub fn ascii_heatmap(
+    f: &dyn Fn(f64, f64) -> f64,
+    rows: usize,
+    cols: usize,
+    lo: f64,
+    hi: f64,
+) -> String {
+    const SHADES: &[char] = &[' ', '░', '▒', '▓', '█'];
+    let mut out = String::new();
+    for r in (0..rows).rev() {
+        let m = r as f64 / (rows - 1) as f64;
+        out.push_str(&format!("m={m:4.2} |"));
+        for c in 0..cols {
+            let kappa = c as f64 / (cols - 1) as f64;
+            let v = ((f(m, kappa) - lo) / (hi - lo)).clamp(0.0, 1.0);
+            let idx = ((v * (SHADES.len() - 1) as f64).round()) as usize;
+            out.push(SHADES[idx.min(SHADES.len() - 1)]);
+        }
+        out.push('\n');
+    }
+    out.push_str(&format!("       +{}\n", "-".repeat(cols)));
+    out.push_str(&format!("        κ=0{}κ=1\n", " ".repeat(cols.saturating_sub(6))));
+    out
+}
+
+/// Render both panels for the terminal.
+pub fn render(table: &LookupTable) -> String {
+    let mut out = String::new();
+    out.push_str("Figure 2a: h(m, κ)  (note the jump across m=1/2 for κ < e⁻² ≈ 0.135)\n");
+    out.push_str(&ascii_heatmap(&|m, k| table.lookup_h(m, k), 21, 64, 0.0, 1.0));
+    out.push_str("\nFigure 2b: WD(m, κ)  (log scale, as in the paper)\n");
+    out.push_str(&ascii_heatmap(
+        &|m, k| (table.lookup_wd(m, k).max(1e-12)).log10(),
+        21,
+        64,
+        -8.0,
+        0.0,
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn figure2_csv_and_heatmaps() {
+        let cfg = ExperimentConfig {
+            grid: 40,
+            out_dir: std::env::temp_dir()
+                .join("budgetsvm-f2-test")
+                .to_string_lossy()
+                .into_owned(),
+            ..Default::default()
+        };
+        let table = run(&cfg).unwrap();
+        let csv =
+            std::fs::read_to_string(std::path::Path::new(&cfg.out_dir).join("figure2.csv"))
+                .unwrap();
+        assert!(csv.starts_with("m,kappa,h,s,wd"));
+        assert_eq!(csv.lines().count(), 1 + 40 * 40);
+        let text = render(&table);
+        assert!(text.contains("Figure 2a"));
+        assert!(text.contains("Figure 2b"));
+        // The h surface must show the discontinuity: at low κ, h jumps from
+        // ≈1 (m<1/2) to ≈0 (m>1/2).
+        assert!(table.lookup_h(0.30, 0.05) > 0.9);
+        assert!(table.lookup_h(0.70, 0.05) < 0.1);
+        std::fs::remove_dir_all(&cfg.out_dir).ok();
+    }
+}

@@ -1,0 +1,139 @@
+//! Figure 3: breakdown of the merging time into Section A (computing `h`
+//! via GSS or lookup — or looking up `WD` for Lookup-WD) and Section B
+//! (all other budget-maintenance work: κ kernel row, loop overhead, `α_z`,
+//! constructing `z`).
+//!
+//! One training run per (dataset, method) at the first budget, single-
+//! threaded timing; output is a grouped ASCII bar chart plus
+//! `figure3.csv`.
+
+use anyhow::Result;
+
+use super::report::{bar, write_csv};
+use super::{options_for, prepare, runner::run_jobs, METHODS};
+use crate::budget::{MergeSolver, Strategy};
+use crate::config::ExperimentConfig;
+use crate::metrics::Section;
+use crate::solver::train_bsgd;
+
+/// One bar of the figure.
+#[derive(Debug, Clone)]
+pub struct Figure3Bar {
+    pub dataset: String,
+    pub method: MergeSolver,
+    pub section_a_seconds: f64,
+    pub section_b_seconds: f64,
+    pub maintenance_events: u64,
+}
+
+/// Run the Figure-3 experiment.
+pub fn run(cfg: &ExperimentConfig) -> Result<Vec<Figure3Bar>> {
+    let mut bars = Vec::new();
+    for profile in cfg.profiles() {
+        let prep = std::sync::Arc::new(prepare(profile, cfg));
+        let budget = profile.budgets[0];
+        let jobs: Vec<_> = METHODS
+            .iter()
+            .map(|&method| {
+                let prep = std::sync::Arc::clone(&prep);
+                let cfg = cfg.clone();
+                move || {
+                    let opts = options_for(&prep, &cfg, Strategy::Merge(method), budget, 0);
+                    let report = train_bsgd(&prep.train, &opts);
+                    Figure3Bar {
+                        dataset: prep.profile.name.to_uppercase(),
+                        method,
+                        section_a_seconds: report.profiler.seconds(Section::MaintA),
+                        section_b_seconds: report.profiler.seconds(Section::MaintB),
+                        maintenance_events: report.maintenance_events,
+                    }
+                }
+            })
+            .collect();
+        // Single-threaded: these are timing measurements.
+        bars.extend(run_jobs(jobs, 1));
+    }
+    Ok(bars)
+}
+
+/// Render + persist.
+pub fn render(bars: &[Figure3Bar], cfg: &ExperimentConfig) -> Result<String> {
+    let max = bars
+        .iter()
+        .map(|b| b.section_a_seconds + b.section_b_seconds)
+        .fold(0.0f64, f64::max);
+    let mut out = String::new();
+    out.push_str("Merging-time breakdown (A = compute h / lookup WD, B = other merge ops)\n\n");
+    let mut csv = Vec::new();
+    let mut last_dataset = String::new();
+    for b in bars {
+        if b.dataset != last_dataset {
+            out.push_str(&format!("{}\n", b.dataset));
+            last_dataset = b.dataset.clone();
+        }
+        let total = b.section_a_seconds + b.section_b_seconds;
+        out.push_str(&format!(
+            "  {:<13} A {:>8.3}s  B {:>8.3}s  |{}{}|\n",
+            b.method.name(),
+            b.section_a_seconds,
+            b.section_b_seconds,
+            bar(b.section_a_seconds, max, 40),
+            "·".repeat(
+                bar(total, max, 40).chars().count()
+                    - bar(b.section_a_seconds, max, 40).chars().count()
+            ),
+        ));
+        csv.push(vec![
+            b.dataset.clone(),
+            b.method.name().to_string(),
+            format!("{:.6}", b.section_a_seconds),
+            format!("{:.6}", b.section_b_seconds),
+            b.maintenance_events.to_string(),
+        ]);
+    }
+    write_csv(
+        std::path::Path::new(&cfg.out_dir).join("figure3.csv"),
+        &["dataset", "method", "section_a_s", "section_b_s", "maintenance_events"],
+        &csv,
+    )?;
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn figure3_shape_lookup_shrinks_section_a() {
+        // SUSY: the hard profile with high merging frequency, so Section A
+        // accumulates enough events for a stable ordering even in debug
+        // builds.
+        let cfg = ExperimentConfig {
+            scale: 0.02,
+            grid: 100,
+            datasets: vec!["susy".into()],
+            out_dir: std::env::temp_dir()
+                .join("budgetsvm-f3-test")
+                .to_string_lossy()
+                .into_owned(),
+            ..Default::default()
+        };
+        let bars = run(&cfg).unwrap();
+        assert_eq!(bars.len(), 4);
+        let a = |m: MergeSolver| {
+            bars.iter().find(|b| b.method == m).unwrap().section_a_seconds
+        };
+        // The paper's Figure 3 shape: GSS-precise > GSS-standard > lookups
+        // in Section A.
+        assert!(a(MergeSolver::GssPrecise) > a(MergeSolver::GssStandard));
+        assert!(a(MergeSolver::GssStandard) > a(MergeSolver::LookupWd));
+        assert!(a(MergeSolver::GssStandard) > a(MergeSolver::LookupH));
+        // All methods do essentially the same number of events.
+        let events: Vec<u64> = bars.iter().map(|b| b.maintenance_events).collect();
+        let spread = *events.iter().max().unwrap() - *events.iter().min().unwrap();
+        assert!(spread as f64 <= 0.05 * *events.iter().max().unwrap() as f64 + 2.0);
+        let text = render(&bars, &cfg).unwrap();
+        assert!(text.contains("SUSY"));
+        std::fs::remove_dir_all(&cfg.out_dir).ok();
+    }
+}

@@ -1,0 +1,104 @@
+//! Experiment suite: regenerates every table and figure of the paper.
+//!
+//! | Paper artifact | Module | CLI |
+//! |---|---|---|
+//! | Table 1 (datasets + exact accuracy) | [`table1`] | `repro table1` |
+//! | Table 2 (accuracy, 4 methods × budgets) | [`table2`] | `repro table2` |
+//! | Table 3 (speed-up, merging freq, agreement) | [`table3`] | `repro table3` |
+//! | Figure 2 (h and WD graphs) | [`figure2`] | `repro figure2` |
+//! | Figure 3 (merging-time breakdown) | [`figure3`] | `repro figure3` |
+//!
+//! [`runner`] executes training jobs across worker threads; [`report`]
+//! formats markdown/CSV.
+
+pub mod figure2;
+pub mod figure3;
+pub mod report;
+pub mod runner;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+
+use crate::budget::{MergeSolver, Strategy};
+use crate::config::ExperimentConfig;
+use crate::data::synthetic::Profile;
+use crate::data::Dataset;
+use crate::solver::BsgdOptions;
+
+/// A prepared (train, test) pair for one profile under a config.
+pub struct Prepared {
+    pub profile: &'static Profile,
+    pub train: Dataset,
+    pub test: Dataset,
+    pub lambda: f64,
+}
+
+/// Generate and preprocess one profile's data (deterministic in
+/// `cfg.seed`): synthetic generation at `cfg.scale`, then min/max scaling
+/// to [-1, 1] fitted on train (LIBSVM `svm-scale` convention), matching the
+/// paper's standard preprocessing.
+pub fn prepare(profile: &'static Profile, cfg: &ExperimentConfig) -> Prepared {
+    let (mut train, mut test) = profile.generate(cfg.scale, cfg.seed);
+    let scaling = train.fit_scaling();
+    train.apply_scaling(&scaling);
+    test.apply_scaling(&scaling);
+    let lambda = profile.lambda(train.len());
+    Prepared { profile, train, test, lambda }
+}
+
+/// BSGD options for one (profile, strategy, budget, run) cell.
+pub fn options_for(
+    prep: &Prepared,
+    cfg: &ExperimentConfig,
+    strategy: Strategy,
+    budget: usize,
+    run: usize,
+) -> BsgdOptions {
+    let mut opts = BsgdOptions::new(budget, prep.lambda, prep.profile.gamma());
+    opts.passes = cfg.passes_for(prep.profile);
+    opts.seed = cfg.seed ^ (0x9E37 + run as u64 * 0x1_0001);
+    opts.strategy = strategy;
+    opts.grid = cfg.grid;
+    opts
+}
+
+/// The four merge solvers in the paper's column order.
+pub const METHODS: [MergeSolver; 4] = [
+    MergeSolver::GssPrecise,
+    MergeSolver::GssStandard,
+    MergeSolver::LookupH,
+    MergeSolver::LookupWd,
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> ExperimentConfig {
+        ExperimentConfig { scale: 0.004, runs: 1, ..Default::default() }
+    }
+
+    #[test]
+    fn prepare_scales_features() {
+        let cfg = tiny_cfg();
+        let p = Profile::by_name("ijcnn").unwrap();
+        let prep = prepare(p, &cfg);
+        for i in 0..prep.train.len().min(200) {
+            for &v in prep.train.row(i) {
+                assert!((-1.0..=1.0).contains(&v));
+            }
+        }
+        assert!(prep.lambda > 0.0);
+    }
+
+    #[test]
+    fn options_vary_by_run_seed() {
+        let cfg = tiny_cfg();
+        let p = Profile::by_name("adult").unwrap();
+        let prep = prepare(p, &cfg);
+        let o1 = options_for(&prep, &cfg, Strategy::Removal, 50, 0);
+        let o2 = options_for(&prep, &cfg, Strategy::Removal, 50, 1);
+        assert_ne!(o1.seed, o2.seed);
+        assert_eq!(o1.budget, 50);
+    }
+}

@@ -1,0 +1,132 @@
+//! Report formatting: markdown tables, CSV files, ASCII bar charts.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// A simple column-aligned markdown table builder.
+pub struct MarkdownTable {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl MarkdownTable {
+    pub fn new(header: &[&str]) -> Self {
+        MarkdownTable { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    /// Render with per-column width alignment.
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut width = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            width[i] = h.chars().count();
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                width[i] = width[i].max(c.chars().count());
+            }
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            let mut line = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                line.push_str(&format!(" {:<w$} |", c, w = width[i]));
+            }
+            line
+        };
+        let mut out = String::new();
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push('|');
+        for w in &width {
+            out.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Write CSV rows (first row = header) to `path`, creating parents.
+pub fn write_csv(path: impl AsRef<Path>, header: &[&str], rows: &[Vec<String>]) -> Result<()> {
+    let path = path.as_ref();
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("cannot create {}", path.display()))?;
+    writeln!(f, "{}", header.join(","))?;
+    for row in rows {
+        writeln!(f, "{}", row.join(","))?;
+    }
+    Ok(())
+}
+
+/// Horizontal ASCII bar scaled to `max_width` characters.
+pub fn bar(value: f64, max_value: f64, max_width: usize) -> String {
+    if max_value <= 0.0 {
+        return String::new();
+    }
+    let w = ((value / max_value) * max_width as f64).round().max(0.0) as usize;
+    "█".repeat(w.min(max_width))
+}
+
+/// `mean ± std` cell with fixed decimals.
+pub fn pm(mean: f64, std: f64, decimals: usize) -> String {
+    format!("{:.d$} ± {:.d$}", mean, std, d = decimals)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_alignment() {
+        let mut t = MarkdownTable::new(&["name", "v"]);
+        t.row(vec!["a".into(), "1.5".into()]);
+        t.row(vec!["long-name".into(), "22".into()]);
+        let r = t.render();
+        let lines: Vec<&str> = r.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].contains("| name      |"));
+        assert!(lines[2].starts_with("| a"));
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn arity_checked() {
+        MarkdownTable::new(&["a", "b"]).row(vec!["x".into()]);
+    }
+
+    #[test]
+    fn csv_write_and_content() {
+        let dir = std::env::temp_dir().join("budgetsvm-report-test");
+        let path = dir.join("t.csv");
+        write_csv(&path, &["a", "b"], &[vec!["1".into(), "2".into()]]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n1,2\n");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn bars_scale() {
+        assert_eq!(bar(5.0, 10.0, 10).chars().count(), 5);
+        assert_eq!(bar(10.0, 10.0, 10).chars().count(), 10);
+        assert_eq!(bar(0.0, 10.0, 10), "");
+    }
+
+    #[test]
+    fn pm_formatting() {
+        assert_eq!(pm(84.2345, 0.787, 2), "84.23 ± 0.79");
+    }
+}

@@ -1,0 +1,142 @@
+//! Table 1: dataset statistics, hyperparameters, and the "exact" SVM
+//! accuracy reference.
+//!
+//! The paper reports LIBSVM's test accuracy per dataset; our stand-in is
+//! the in-repo SMO solver (DESIGN.md §5) run on a subsample capped at
+//! `cfg.smo_max_rows` (exact dual training is quadratic-to-cubic in n —
+//! the very scaling problem BSGD exists to avoid, as Section 1 argues).
+
+use anyhow::Result;
+
+use super::report::{write_csv, MarkdownTable};
+use super::{prepare, runner::run_jobs};
+use crate::config::ExperimentConfig;
+use crate::solver::smo::{train_smo, SmoOptions};
+use crate::util::rng::Rng;
+
+/// One Table-1 row.
+#[derive(Debug, Clone)]
+pub struct Table1Row {
+    pub dataset: String,
+    pub n_train: usize,
+    pub n_test: usize,
+    pub features: usize,
+    pub log2_c: i32,
+    pub log2_gamma: i32,
+    /// Exact-solver (SMO) test accuracy in percent.
+    pub smo_accuracy: f64,
+    /// Rows the SMO solver actually trained on.
+    pub smo_rows: usize,
+    pub smo_converged: bool,
+}
+
+/// Run the Table-1 experiment.
+pub fn run(cfg: &ExperimentConfig) -> Result<Vec<Table1Row>> {
+    let profiles = cfg.profiles();
+    let jobs: Vec<_> = profiles
+        .iter()
+        .map(|profile| {
+            let profile = *profile;
+            let cfg = cfg.clone();
+            move || -> Result<Table1Row> {
+                let prep = prepare(profile, &cfg);
+                let mut rng = Rng::new(cfg.seed ^ 0x7AB1E1);
+                let sub = prep.train.subsample(cfg.smo_max_rows, &mut rng);
+                let report = train_smo(
+                    &sub,
+                    &SmoOptions {
+                        c: profile.c(),
+                        gamma: profile.gamma(),
+                        max_rows: cfg.smo_max_rows,
+                        ..Default::default()
+                    },
+                )?;
+                Ok(Table1Row {
+                    dataset: profile.name.to_uppercase(),
+                    n_train: prep.train.len(),
+                    n_test: prep.test.len(),
+                    features: profile.dim,
+                    log2_c: profile.log2_c,
+                    log2_gamma: profile.log2_gamma,
+                    smo_accuracy: 100.0 * report.model.accuracy(&prep.test),
+                    smo_rows: sub.len(),
+                    smo_converged: report.converged,
+                })
+            }
+        })
+        .collect();
+
+    let results: Result<Vec<_>> =
+        run_jobs(jobs, cfg.effective_threads()).into_iter().collect();
+    results
+}
+
+/// Render + persist the table.
+pub fn render(rows: &[Table1Row], cfg: &ExperimentConfig) -> Result<String> {
+    let mut t = MarkdownTable::new(&[
+        "data set", "size", "features", "C", "gamma", "accuracy (SMO ref)", "SMO rows",
+    ]);
+    let mut csv = Vec::new();
+    for r in rows {
+        t.row(vec![
+            r.dataset.clone(),
+            format!("{}", r.n_train),
+            format!("{}", r.features),
+            format!("2^{}", r.log2_c),
+            format!("2^{}", r.log2_gamma),
+            format!("{:.2}%{}", r.smo_accuracy, if r.smo_converged { "" } else { " (cap)" }),
+            format!("{}", r.smo_rows),
+        ]);
+        csv.push(vec![
+            r.dataset.clone(),
+            r.n_train.to_string(),
+            r.n_test.to_string(),
+            r.features.to_string(),
+            r.log2_c.to_string(),
+            r.log2_gamma.to_string(),
+            format!("{:.4}", r.smo_accuracy),
+            r.smo_rows.to_string(),
+            r.smo_converged.to_string(),
+        ]);
+    }
+    write_csv(
+        std::path::Path::new(&cfg.out_dir).join("table1.csv"),
+        &[
+            "dataset", "n_train", "n_test", "features", "log2_c", "log2_gamma",
+            "smo_accuracy_pct", "smo_rows", "smo_converged",
+        ],
+        &csv,
+    )?;
+    Ok(t.render())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_table1_runs() {
+        let cfg = ExperimentConfig {
+            scale: 0.004,
+            smo_max_rows: 300,
+            datasets: vec!["phishing".into(), "skin".into()],
+            out_dir: std::env::temp_dir()
+                .join("budgetsvm-t1-test")
+                .to_string_lossy()
+                .into_owned(),
+            ..Default::default()
+        };
+        let rows = run(&cfg).unwrap();
+        assert_eq!(rows.len(), 2);
+        for r in &rows {
+            assert!(r.smo_accuracy > 50.0, "{}: {}", r.dataset, r.smo_accuracy);
+            assert!(r.smo_rows <= 300);
+        }
+        // SKIN is nearly separable: the reference must be high even tiny.
+        let skin = rows.iter().find(|r| r.dataset == "SKIN").unwrap();
+        assert!(skin.smo_accuracy > 90.0, "skin {}", skin.smo_accuracy);
+        let rendered = render(&rows, &cfg).unwrap();
+        assert!(rendered.contains("SKIN"));
+        std::fs::remove_dir_all(&cfg.out_dir).ok();
+    }
+}

@@ -1,0 +1,192 @@
+//! Table 2: test accuracy of the four merge solvers at two budget sizes,
+//! averaged over `cfg.runs` seeds (paper: 5 runs, mean ± std).
+//!
+//! The reproduction target is the paper's *finding*, not its absolute
+//! numbers (our data is synthetic): all four methods are statistically
+//! indistinguishable — differences within one run-to-run standard
+//! deviation.
+
+use anyhow::Result;
+
+use super::report::{pm, write_csv, MarkdownTable};
+use super::{options_for, prepare, runner::run_jobs, METHODS};
+use crate::budget::{MergeSolver, Strategy};
+use crate::config::ExperimentConfig;
+use crate::solver::train_bsgd;
+use crate::util::stats::{mean, std};
+
+/// Accuracy cell: one (dataset, budget, method) with per-run values.
+#[derive(Debug, Clone)]
+pub struct Table2Cell {
+    pub dataset: String,
+    pub budget: usize,
+    pub method: MergeSolver,
+    /// Test accuracies (percent), one per run.
+    pub accuracies: Vec<f64>,
+}
+
+impl Table2Cell {
+    pub fn mean(&self) -> f64 {
+        mean(&self.accuracies)
+    }
+
+    pub fn std(&self) -> f64 {
+        std(&self.accuracies)
+    }
+}
+
+/// Run the Table-2 sweep.
+pub fn run(cfg: &ExperimentConfig) -> Result<Vec<Table2Cell>> {
+    let mut cells = Vec::new();
+    for profile in cfg.profiles() {
+        let prep = std::sync::Arc::new(prepare(profile, cfg));
+        for &budget in &profile.budgets {
+            // One job per (method, run); group afterwards.
+            let mut jobs = Vec::new();
+            for &method in &METHODS {
+                for run_idx in 0..cfg.runs {
+                    let prep = std::sync::Arc::clone(&prep);
+                    let cfg = cfg.clone();
+                    jobs.push(move || {
+                        let opts =
+                            options_for(&prep, &cfg, Strategy::Merge(method), budget, run_idx);
+                        let report = train_bsgd(&prep.train, &opts);
+                        (method, 100.0 * report.model.accuracy(&prep.test))
+                    });
+                }
+            }
+            let results = run_jobs(jobs, cfg.effective_threads());
+            for &method in &METHODS {
+                let accuracies: Vec<f64> = results
+                    .iter()
+                    .filter(|(m, _)| *m == method)
+                    .map(|(_, a)| *a)
+                    .collect();
+                cells.push(Table2Cell {
+                    dataset: profile.name.to_uppercase(),
+                    budget,
+                    method,
+                    accuracies,
+                });
+            }
+        }
+    }
+    Ok(cells)
+}
+
+/// Render + persist. Layout mirrors the paper: one row per (dataset,
+/// budget), one column per method.
+pub fn render(cells: &[Table2Cell], cfg: &ExperimentConfig) -> Result<String> {
+    let mut t = MarkdownTable::new(&[
+        "data set",
+        "budget",
+        "GSS-precise",
+        "GSS-standard",
+        "Lookup-h",
+        "Lookup-WD",
+    ]);
+    let mut csv = Vec::new();
+    let mut keys: Vec<(String, usize)> = Vec::new();
+    for c in cells {
+        let k = (c.dataset.clone(), c.budget);
+        if !keys.contains(&k) {
+            keys.push(k);
+        }
+    }
+    for (dataset, budget) in keys {
+        let cell = |m: MergeSolver| {
+            cells
+                .iter()
+                .find(|c| c.dataset == dataset && c.budget == budget && c.method == m)
+                .expect("cell present")
+        };
+        let row: Vec<String> = vec![
+            dataset.clone(),
+            budget.to_string(),
+            pm(cell(MergeSolver::GssPrecise).mean(), cell(MergeSolver::GssPrecise).std(), 3),
+            pm(cell(MergeSolver::GssStandard).mean(), cell(MergeSolver::GssStandard).std(), 3),
+            pm(cell(MergeSolver::LookupH).mean(), cell(MergeSolver::LookupH).std(), 3),
+            pm(cell(MergeSolver::LookupWd).mean(), cell(MergeSolver::LookupWd).std(), 3),
+        ];
+        t.row(row);
+        for &m in &METHODS {
+            let c = cell(m);
+            csv.push(vec![
+                dataset.clone(),
+                budget.to_string(),
+                m.name().to_string(),
+                format!("{:.4}", c.mean()),
+                format!("{:.4}", c.std()),
+                c.accuracies.iter().map(|a| format!("{a:.4}")).collect::<Vec<_>>().join(";"),
+            ]);
+        }
+    }
+    write_csv(
+        std::path::Path::new(&cfg.out_dir).join("table2.csv"),
+        &["dataset", "budget", "method", "mean_accuracy_pct", "std_accuracy_pct", "runs"],
+        &csv,
+    )?;
+    Ok(t.render())
+}
+
+/// The paper's headline check on this table: per (dataset, budget), the
+/// spread of method means should be within ~one pooled std (no method
+/// systematically better or worse). Returns the list of violations.
+pub fn indistinguishability_violations(cells: &[Table2Cell], slack: f64) -> Vec<String> {
+    let mut violations = Vec::new();
+    let mut keys: Vec<(String, usize)> = Vec::new();
+    for c in cells {
+        let k = (c.dataset.clone(), c.budget);
+        if !keys.contains(&k) {
+            keys.push(k);
+        }
+    }
+    for (dataset, budget) in keys {
+        let group: Vec<&Table2Cell> = cells
+            .iter()
+            .filter(|c| c.dataset == dataset && c.budget == budget)
+            .collect();
+        let means: Vec<f64> = group.iter().map(|c| c.mean()).collect();
+        let pooled_std = mean(&group.iter().map(|c| c.std()).collect::<Vec<_>>());
+        let spread = means.iter().cloned().fold(f64::MIN, f64::max)
+            - means.iter().cloned().fold(f64::MAX, f64::min);
+        if spread > slack * pooled_std.max(0.05) {
+            violations.push(format!(
+                "{dataset} B={budget}: spread {spread:.3} vs pooled std {pooled_std:.3}"
+            ));
+        }
+    }
+    violations
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_table2_runs_and_methods_agree() {
+        let cfg = ExperimentConfig {
+            scale: 0.01,
+            runs: 2,
+            grid: 100,
+            datasets: vec!["phishing".into()],
+            out_dir: std::env::temp_dir()
+                .join("budgetsvm-t2-test")
+                .to_string_lossy()
+                .into_owned(),
+            ..Default::default()
+        };
+        let cells = run(&cfg).unwrap();
+        // 1 dataset × 2 budgets × 4 methods.
+        assert_eq!(cells.len(), 8);
+        for c in &cells {
+            assert_eq!(c.accuracies.len(), 2);
+            assert!(c.mean() > 55.0, "{} B={} {}: {}", c.dataset, c.budget, c.method.name(), c.mean());
+        }
+        let rendered = render(&cells, &cfg).unwrap();
+        assert!(rendered.contains("PHISHING"));
+        // With tiny data the variance is large; just exercise the checker.
+        let _ = indistinguishability_violations(&cells, 3.0);
+        std::fs::remove_dir_all(&cfg.out_dir).ok();
+    }
+}

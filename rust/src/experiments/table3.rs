@@ -1,0 +1,266 @@
+//! Table 3: training-time improvement of the lookup methods over
+//! GSS-standard, merging frequency, decision agreement and WD factors.
+//!
+//! Left half (per dataset × budget): relative improvement of total
+//! training time, `(t_GSS − t_lookup)/t_GSS`, averaged over runs.
+//! Right half (budget = first budget): merging frequency, fraction of
+//! events where GSS-standard and Lookup-WD pick the same partner, and the
+//! factor by which each method's (exact) WD exceeds the GSS-precise
+//! optimum — collected by the audit instrumentation running both solvers
+//! side by side inside a single BSGD run, exactly as the paper describes.
+
+use anyhow::Result;
+
+use super::report::{write_csv, MarkdownTable};
+use super::{options_for, prepare, runner::run_jobs};
+use crate::budget::{MergeSolver, Strategy};
+use crate::config::ExperimentConfig;
+use crate::solver::train_bsgd;
+use crate::util::stats::mean;
+
+/// Timing cell for one (dataset, budget, method): per-run wall seconds.
+#[derive(Debug, Clone)]
+pub struct TimeCell {
+    pub dataset: String,
+    pub budget: usize,
+    pub method: MergeSolver,
+    pub wall_seconds: Vec<f64>,
+    pub maint_seconds: Vec<f64>,
+    pub section_a_seconds: Vec<f64>,
+}
+
+/// One Table-3 row (per dataset × budget, plus audit stats on the first
+/// budget).
+#[derive(Debug, Clone)]
+pub struct Table3Row {
+    pub dataset: String,
+    pub budget: usize,
+    /// (t_GSS − t_Lookup-h)/t_GSS, percent.
+    pub improvement_lookup_h: f64,
+    /// (t_GSS − t_Lookup-WD)/t_GSS, percent.
+    pub improvement_lookup_wd: f64,
+    /// Maintenance events / SGD steps (only on the first budget row).
+    pub merging_frequency: Option<f64>,
+    /// Fraction of equal GSS vs Lookup-WD decisions.
+    pub equal_decisions: Option<f64>,
+    /// Mean exact-WD factor of GSS-standard vs GSS-precise optimum.
+    pub factor_gss: Option<f64>,
+    /// Mean exact-WD factor of Lookup-WD vs GSS-precise optimum.
+    pub factor_lookup: Option<f64>,
+}
+
+/// Methods timed for this table.
+const TIMED: [MergeSolver; 3] =
+    [MergeSolver::GssStandard, MergeSolver::LookupH, MergeSolver::LookupWd];
+
+/// Run the Table-3 experiment. Returns (rows, raw timing cells).
+pub fn run(cfg: &ExperimentConfig) -> Result<(Vec<Table3Row>, Vec<TimeCell>)> {
+    let mut rows = Vec::new();
+    let mut all_cells = Vec::new();
+    for profile in cfg.profiles() {
+        let prep = std::sync::Arc::new(prepare(profile, cfg));
+
+        // Timing runs: (method, budget, run). Timing jobs run single-file
+        // (threads=1) to avoid cross-run interference on shared caches —
+        // the numbers feed a time-ratio claim.
+        let mut jobs = Vec::new();
+        for &budget in &profile.budgets {
+            for &method in &TIMED {
+                for run_idx in 0..cfg.runs {
+                    let prep = std::sync::Arc::clone(&prep);
+                    let cfg2 = cfg.clone();
+                    jobs.push(move || {
+                        let opts =
+                            options_for(&prep, &cfg2, Strategy::Merge(method), budget, run_idx);
+                        let report = train_bsgd(&prep.train, &opts);
+                        (
+                            budget,
+                            method,
+                            report.wall_seconds,
+                            report.profiler.maintenance_seconds(),
+                            report.profiler.seconds(crate::metrics::Section::MaintA),
+                        )
+                    });
+                }
+            }
+        }
+        let results = run_jobs(jobs, 1);
+        let mut cells: Vec<TimeCell> = Vec::new();
+        for &budget in &profile.budgets {
+            for &method in &TIMED {
+                let mine: Vec<&(usize, MergeSolver, f64, f64, f64)> = results
+                    .iter()
+                    .filter(|(b, m, ..)| *b == budget && *m == method)
+                    .collect();
+                cells.push(TimeCell {
+                    dataset: profile.name.to_uppercase(),
+                    budget,
+                    method,
+                    wall_seconds: mine.iter().map(|r| r.2).collect(),
+                    maint_seconds: mine.iter().map(|r| r.3).collect(),
+                    section_a_seconds: mine.iter().map(|r| r.4).collect(),
+                });
+            }
+        }
+
+        // Audit run (budget = first) for the right half of the table.
+        let audit = {
+            let mut opts = options_for(
+                &prep,
+                cfg,
+                Strategy::Merge(MergeSolver::GssStandard),
+                profile.budgets[0],
+                0,
+            );
+            opts.audit = true;
+            train_bsgd(&prep.train, &opts)
+        };
+        let stats = audit.agreement.clone().expect("audit enabled");
+
+        for (bi, &budget) in profile.budgets.iter().enumerate() {
+            let wall = |m: MergeSolver| {
+                mean(
+                    &cells
+                        .iter()
+                        .find(|c| c.budget == budget && c.method == m)
+                        .unwrap()
+                        .wall_seconds,
+                )
+            };
+            let t_gss = wall(MergeSolver::GssStandard);
+            let improvement = |m: MergeSolver| 100.0 * (t_gss - wall(m)) / t_gss.max(1e-12);
+            rows.push(Table3Row {
+                dataset: profile.name.to_uppercase(),
+                budget,
+                improvement_lookup_h: improvement(MergeSolver::LookupH),
+                improvement_lookup_wd: improvement(MergeSolver::LookupWd),
+                merging_frequency: (bi == 0).then(|| audit.merging_frequency()),
+                equal_decisions: (bi == 0 && stats.events > 0).then(|| stats.equal_fraction()),
+                factor_gss: (bi == 0 && stats.factor_gss.count() > 0)
+                    .then(|| stats.factor_gss.mean()),
+                factor_lookup: (bi == 0 && stats.factor_lookup.count() > 0)
+                    .then(|| stats.factor_lookup.mean()),
+            });
+        }
+        all_cells.extend(cells);
+    }
+    Ok((rows, all_cells))
+}
+
+/// Render + persist the table.
+pub fn render(rows: &[Table3Row], cells: &[TimeCell], cfg: &ExperimentConfig) -> Result<String> {
+    let mut t = MarkdownTable::new(&[
+        "data set",
+        "budget",
+        "Lookup-h vs GSS",
+        "Lookup-WD vs GSS",
+        "merging freq",
+        "equal decisions",
+        "factor GSS",
+        "factor Lookup-WD",
+    ]);
+    let opt = |v: Option<f64>, f: &dyn Fn(f64) -> String| v.map(f).unwrap_or_default();
+    for r in rows {
+        t.row(vec![
+            r.dataset.clone(),
+            r.budget.to_string(),
+            format!("{:+.3}%", r.improvement_lookup_h),
+            format!("{:+.3}%", r.improvement_lookup_wd),
+            opt(r.merging_frequency, &|v| format!("{:.0}%", 100.0 * v)),
+            opt(r.equal_decisions, &|v| format!("{:.2}%", 100.0 * v)),
+            opt(r.factor_gss, &|v| format!("{v:.5}")),
+            opt(r.factor_lookup, &|v| format!("{v:.5}")),
+        ]);
+    }
+    let csv: Vec<Vec<String>> = cells
+        .iter()
+        .map(|c| {
+            vec![
+                c.dataset.clone(),
+                c.budget.to_string(),
+                c.method.name().to_string(),
+                format!("{:.6}", mean(&c.wall_seconds)),
+                format!("{:.6}", mean(&c.maint_seconds)),
+                format!("{:.6}", mean(&c.section_a_seconds)),
+            ]
+        })
+        .collect();
+    write_csv(
+        std::path::Path::new(&cfg.out_dir).join("table3_timing.csv"),
+        &["dataset", "budget", "method", "wall_s", "maintenance_s", "section_a_s"],
+        &csv,
+    )?;
+    let csv2: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.dataset.clone(),
+                r.budget.to_string(),
+                format!("{:.4}", r.improvement_lookup_h),
+                format!("{:.4}", r.improvement_lookup_wd),
+                r.merging_frequency.map(|v| format!("{v:.4}")).unwrap_or_default(),
+                r.equal_decisions.map(|v| format!("{v:.4}")).unwrap_or_default(),
+                r.factor_gss.map(|v| format!("{v:.6}")).unwrap_or_default(),
+                r.factor_lookup.map(|v| format!("{v:.6}")).unwrap_or_default(),
+            ]
+        })
+        .collect();
+    write_csv(
+        std::path::Path::new(&cfg.out_dir).join("table3.csv"),
+        &[
+            "dataset", "budget", "improvement_lookup_h_pct", "improvement_lookup_wd_pct",
+            "merging_frequency", "equal_decisions", "factor_gss", "factor_lookup",
+        ],
+        &csv2,
+    )?;
+    Ok(t.render())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_table3_reproduces_paper_shape() {
+        // SUSY: high merging frequency → plenty of maintenance events even
+        // at tiny scale.
+        let cfg = ExperimentConfig {
+            scale: 0.02,
+            runs: 2,
+            // The paper's grid: the "lookup is more precise than
+            // GSS-standard" claim needs the fine 400×400 table.
+            grid: 400,
+            datasets: vec!["susy".into()],
+            out_dir: std::env::temp_dir()
+                .join("budgetsvm-t3-test")
+                .to_string_lossy()
+                .into_owned(),
+            ..Default::default()
+        };
+        let (rows, cells) = run(&cfg).unwrap();
+        assert_eq!(rows.len(), 2); // two budgets
+        assert_eq!(cells.len(), 6); // 2 budgets × 3 methods
+        let first = &rows[0];
+        // Shape checks (paper): lookup never slower than GSS by a margin,
+        // agreement high, factors ≥ 1 with lookup ≤ gss. The timing claim
+        // only holds in optimized builds — debug-mode inlining/bounds-check
+        // behaviour distorts the per-candidate cost ratio completely.
+        if !cfg!(debug_assertions) {
+            assert!(
+                first.improvement_lookup_wd > -10.0,
+                "wd impr {}",
+                first.improvement_lookup_wd
+            );
+        }
+        let eq = first.equal_decisions.unwrap();
+        assert!(eq > 0.6, "agreement {eq}");
+        let fg = first.factor_gss.unwrap();
+        let fl = first.factor_lookup.unwrap();
+        assert!(fg >= 1.0 - 1e-9 && fl >= 1.0 - 1e-9);
+        assert!(fl <= fg + 1e-6, "lookup factor {fl} vs gss {fg}");
+        assert!(first.merging_frequency.unwrap() > 0.0);
+        let rendered = render(&rows, &cells, &cfg).unwrap();
+        assert!(rendered.contains("SUSY"));
+        std::fs::remove_dir_all(&cfg.out_dir).ok();
+    }
+}

@@ -1,0 +1,101 @@
+//! Gaussian (RBF) kernel `k(x, x') = exp(−γ‖x − x'‖²)`.
+
+use super::{sqdist, Kernel};
+
+/// Gaussian kernel with bandwidth parameter `γ`.
+///
+/// This is the kernel whose geometry makes the paper's merging shortcut
+/// work: for `z = h·x_a + (1−h)·x_b` on the connecting line,
+/// `k(x_a, z) = κ^{(1−h)²}` and `k(x_b, z) = κ^{h²}` where `κ = k(x_a, x_b)`
+/// — no new kernel evaluation is needed while optimizing `h`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Gaussian {
+    pub gamma: f64,
+}
+
+impl Gaussian {
+    pub fn new(gamma: f64) -> Self {
+        assert!(gamma > 0.0, "gamma must be positive, got {gamma}");
+        Gaussian { gamma }
+    }
+
+    /// Construct from the paper's `log2 γ` convention (Table 1 lists
+    /// `γ = 2^{-7}` etc.).
+    pub fn from_log2(log2_gamma: i32) -> Self {
+        Gaussian::new((2.0f64).powi(log2_gamma))
+    }
+
+    /// Kernel value from a squared distance.
+    #[inline]
+    pub fn of_sqdist(&self, d2: f64) -> f64 {
+        (-self.gamma * d2).exp()
+    }
+}
+
+impl Kernel for Gaussian {
+    #[inline]
+    fn eval(&self, a: &[f32], a_norm2: f32, b: &[f32], b_norm2: f32) -> f64 {
+        self.of_sqdist(sqdist(a, a_norm2, b, b_norm2) as f64)
+    }
+
+    #[inline]
+    fn self_eval(&self, _norm2: f32) -> f64 {
+        1.0
+    }
+
+    fn describe(&self) -> String {
+        format!("gaussian(gamma={})", self.gamma)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::norm2;
+
+    #[test]
+    fn value_range_and_identity() {
+        let k = Gaussian::new(0.5);
+        let a = [1.0f32, 0.0, 2.0];
+        let b = [0.0f32, 1.0, -1.0];
+        let v = k.eval(&a, norm2(&a), &b, norm2(&b));
+        assert!(v > 0.0 && v < 1.0);
+        let same = k.eval(&a, norm2(&a), &a, norm2(&a));
+        assert!((same - 1.0).abs() < 1e-9);
+        assert_eq!(k.self_eval(norm2(&a)), 1.0);
+    }
+
+    #[test]
+    fn matches_direct_formula() {
+        let k = Gaussian::new(0.125);
+        let a = [0.5f32, -1.5, 2.5, 0.0];
+        let b = [1.0f32, 1.0, 1.0, 1.0];
+        let d2: f64 = a.iter().zip(&b).map(|(x, y)| ((x - y) as f64).powi(2)).sum();
+        let expect = (-0.125 * d2).exp();
+        let got = k.eval(&a, norm2(&a), &b, norm2(&b));
+        assert!((got - expect).abs() < 1e-6, "got {got} expect {expect}");
+    }
+
+    #[test]
+    fn from_log2_matches_table1_convention() {
+        let k = Gaussian::from_log2(-7);
+        assert!((k.gamma - 0.0078125).abs() < 1e-12);
+    }
+
+    #[test]
+    fn line_point_shortcut_holds() {
+        // k(x_a, z) = κ^{(1-h)²} for z on the connecting line.
+        let k = Gaussian::new(0.3);
+        let xa = [0.0f32, 0.0];
+        let xb = [1.5f32, -2.0];
+        let kappa = k.eval(&xa, norm2(&xa), &xb, norm2(&xb));
+        for &h in &[0.0, 0.25, 0.5, 0.8, 1.0] {
+            let z: Vec<f32> =
+                xa.iter().zip(&xb).map(|(a, b)| h as f32 * a + (1.0 - h as f32) * b).collect();
+            let kaz = k.eval(&xa, norm2(&xa), &z, norm2(&z));
+            let kbz = k.eval(&xb, norm2(&xb), &z, norm2(&z));
+            assert!((kaz - kappa.powf((1.0 - h) * (1.0 - h))).abs() < 1e-6);
+            assert!((kbz - kappa.powf(h * h)).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,40 @@
+//! Linear kernel `k(x, x') = ⟨x, x'⟩`.
+
+use super::{dot, Kernel};
+
+/// Plain inner-product kernel. Used by the unbudgeted baselines and the SMO
+/// reference solver; budget merging does not apply to it (the merge
+/// geometry of Section 3 is Gaussian-specific).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Linear;
+
+impl Kernel for Linear {
+    #[inline]
+    fn eval(&self, a: &[f32], _a_norm2: f32, b: &[f32], _b_norm2: f32) -> f64 {
+        dot(a, b) as f64
+    }
+
+    #[inline]
+    fn self_eval(&self, norm2: f32) -> f64 {
+        norm2 as f64
+    }
+
+    fn describe(&self) -> String {
+        "linear".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::norm2;
+
+    #[test]
+    fn matches_dot() {
+        let a = [1.0f32, 2.0, 3.0];
+        let b = [-1.0f32, 0.5, 2.0];
+        let k = Linear;
+        assert!((k.eval(&a, norm2(&a), &b, norm2(&b)) - 6.0).abs() < 1e-6);
+        assert!((k.self_eval(norm2(&a)) - 14.0).abs() < 1e-4);
+    }
+}

@@ -1,0 +1,58 @@
+//! Polynomial kernel `k(x, x') = (s·⟨x, x'⟩ + c)^d`.
+
+use super::{dot, Kernel};
+
+/// Polynomial kernel; provided for the baseline solvers (the merging
+/// geometry of the paper is Gaussian-specific).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Polynomial {
+    pub scale: f64,
+    pub offset: f64,
+    pub degree: u32,
+}
+
+impl Polynomial {
+    pub fn new(scale: f64, offset: f64, degree: u32) -> Self {
+        assert!(degree >= 1, "degree must be >= 1");
+        Polynomial { scale, offset, degree }
+    }
+}
+
+impl Kernel for Polynomial {
+    #[inline]
+    fn eval(&self, a: &[f32], _a_norm2: f32, b: &[f32], _b_norm2: f32) -> f64 {
+        (self.scale * dot(a, b) as f64 + self.offset).powi(self.degree as i32)
+    }
+
+    #[inline]
+    fn self_eval(&self, norm2: f32) -> f64 {
+        (self.scale * norm2 as f64 + self.offset).powi(self.degree as i32)
+    }
+
+    fn describe(&self) -> String {
+        format!("poly(scale={}, offset={}, degree={})", self.scale, self.offset, self.degree)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::norm2;
+
+    #[test]
+    fn quadratic_matches_manual() {
+        let k = Polynomial::new(0.5, 1.0, 2);
+        let a = [2.0f32, 0.0];
+        let b = [1.0f32, 1.0];
+        // (0.5*2 + 1)^2 = 4
+        assert!((k.eval(&a, norm2(&a), &b, norm2(&b)) - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn degree_one_is_affine_linear() {
+        let k = Polynomial::new(1.0, 0.0, 1);
+        let a = [3.0f32, -1.0];
+        let b = [0.5f32, 4.0];
+        assert!((k.eval(&a, norm2(&a), &b, norm2(&b)) - (-2.5)).abs() < 1e-6);
+    }
+}

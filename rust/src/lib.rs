@@ -1,0 +1,47 @@
+//! # budgetsvm — Budgeted SGD SVM training with precomputed golden section search
+//!
+//! A production reproduction of *"Speeding Up Budgeted Stochastic Gradient
+//! Descent SVM Training with Precomputed Golden Section Search"*
+//! (Glasmachers & Qaadan, 2018) as a three-layer Rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the full BSGD training system: data
+//!   pipeline, Gaussian-kernel sparse model with lazy scaling, golden
+//!   section search, the paper's precomputed lookup tables with bilinear
+//!   interpolation, merge/removal/projection budget maintenance, the
+//!   instrumented trainer, an SMO reference solver, and the experiment
+//!   runner that regenerates every table and figure of the paper.
+//! * **Layer 2 (python/compile/model.py, build-time only)** — the batched
+//!   decision function and merge-candidate scan as JAX graphs, AOT-lowered
+//!   to HLO text.
+//! * **Layer 1 (python/compile/kernels/, build-time only)** — Pallas
+//!   kernels for the Gaussian decision hot spot and the table-lookup merge
+//!   scan, verified against pure-jnp oracles.
+//!
+//! The [`runtime`] module loads the AOT artifacts through the PJRT C API
+//! (`xla` crate) so the compute path runs with **no Python at runtime**.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use budgetsvm::data::synthetic::two_moons;
+//! use budgetsvm::solver::{train_bsgd, BsgdOptions};
+//!
+//! let data = two_moons(2000, 0.12, 42);
+//! let opts = BsgdOptions::with_c(/*budget=*/ 50, /*C=*/ 10.0, /*gamma=*/ 2.0, data.len());
+//! let report = train_bsgd(&data, &opts);
+//! println!("accuracy = {:.3}", report.model.accuracy(&data));
+//! println!("merging frequency = {:.3}", report.merging_frequency());
+//! ```
+
+pub mod budget;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod kernel;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod solver;
+pub mod util;

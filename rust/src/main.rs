@@ -1,0 +1,244 @@
+//! `repro` — the budgetsvm launcher.
+//!
+//! Regenerates every table and figure of Glasmachers & Qaadan (2018), runs
+//! single training jobs on the built-in dataset profiles or user LIBSVM
+//! files, precomputes lookup tables, and smoke-checks the PJRT runtime.
+
+use anyhow::{bail, Result};
+
+use budgetsvm::budget::{LookupTable, Strategy};
+use budgetsvm::cli::{usage, Args, OptSpec};
+use budgetsvm::config::ExperimentConfig;
+use budgetsvm::coordinator;
+use budgetsvm::experiments;
+use budgetsvm::runtime::Runtime;
+
+const SUBCOMMANDS: &[(&str, &str)] = &[
+    ("all", "run the full campaign: tables 1-3 + figures 2-3"),
+    ("table1", "dataset stats + exact-SVM (SMO) reference accuracy"),
+    ("table2", "test accuracy of the 4 merge solvers x budgets x runs"),
+    ("table3", "training-time improvement, merging frequency, agreement"),
+    ("figure2", "h(m,k) and WD(m,k) surfaces (CSV + ASCII)"),
+    ("figure3", "merging-time Section A/B breakdown"),
+    ("train", "single training run: repro train <profile|file.libsvm>"),
+    ("eval", "evaluate a saved model: repro eval <model.bsvm> <file.libsvm>"),
+    ("precompute", "build and save a lookup table artifact"),
+    ("runtime-check", "load AOT artifacts and verify PJRT execution"),
+    ("help", "show this help"),
+];
+
+fn opt_specs() -> Vec<OptSpec> {
+    vec![
+        OptSpec { name: "config", takes_value: true, help: "JSON config file" },
+        OptSpec { name: "scale", takes_value: true, help: "dataset size multiplier (default 0.1)" },
+        OptSpec { name: "passes-factor", takes_value: true, help: "multiplier on default passes" },
+        OptSpec { name: "runs", takes_value: true, help: "repetitions per cell (default 5)" },
+        OptSpec { name: "grid", takes_value: true, help: "lookup grid size (default 400)" },
+        OptSpec { name: "seed", takes_value: true, help: "base RNG seed" },
+        OptSpec { name: "threads", takes_value: true, help: "worker threads (0 = all cores)" },
+        OptSpec { name: "datasets", takes_value: true, help: "comma-separated profile subset" },
+        OptSpec { name: "out", takes_value: true, help: "output directory (default results/)" },
+        OptSpec { name: "budget", takes_value: true, help: "train: budget B (default 100)" },
+        OptSpec {
+            name: "strategy",
+            takes_value: true,
+            help: "train: gss|gss-precise|lookup-h|lookup-wd|removal|projection",
+        },
+        OptSpec { name: "passes", takes_value: true, help: "train: passes override" },
+        OptSpec { name: "c", takes_value: true, help: "train: C override" },
+        OptSpec { name: "gamma", takes_value: true, help: "train: gamma override" },
+        OptSpec { name: "json", takes_value: false, help: "train: machine-readable output" },
+        OptSpec { name: "model-out", takes_value: true, help: "train: save the model here" },
+        OptSpec { name: "table-out", takes_value: true, help: "precompute: output path" },
+        OptSpec { name: "artifacts", takes_value: true, help: "runtime-check: artifacts dir" },
+    ]
+}
+
+fn config_from(args: &Args) -> Result<ExperimentConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => ExperimentConfig::from_file(path)?,
+        None => ExperimentConfig::default(),
+    };
+    if let Some(x) = args.get_f64("scale")? {
+        cfg.scale = x;
+    }
+    if let Some(x) = args.get_f64("passes-factor")? {
+        cfg.passes_factor = x;
+    }
+    if let Some(x) = args.get_usize("runs")? {
+        cfg.runs = x;
+    }
+    if let Some(x) = args.get_usize("grid")? {
+        cfg.grid = x;
+    }
+    if let Some(x) = args.get_u64("seed")? {
+        cfg.seed = x;
+    }
+    if let Some(x) = args.get_usize("threads")? {
+        cfg.threads = x;
+    }
+    if let Some(list) = args.get("datasets") {
+        cfg.datasets = list.split(',').map(|s| s.trim().to_string()).collect();
+    }
+    if let Some(x) = args.get("out") {
+        cfg.out_dir = x.to_string();
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let specs = opt_specs();
+    let args = Args::parse(&argv, &specs)?;
+    let cfg = config_from(&args)?;
+
+    match args.subcommand.as_str() {
+        "" | "help" => {
+            print!("{}", usage("repro", SUBCOMMANDS, &specs));
+        }
+        "all" => {
+            let summary = coordinator::run_campaign(&cfg)?;
+            println!("## Table 1\n\n{}", summary.table1);
+            println!("## Table 2\n\n{}", summary.table2);
+            println!("## Table 3\n\n{}", summary.table3);
+            println!("## Figure 2\n\n{}", summary.figure2);
+            println!("## Figure 3\n\n{}", summary.figure3);
+            println!(
+                "campaign finished in {:.1}s; outputs in {}/",
+                summary.wall_seconds, cfg.out_dir
+            );
+        }
+        "table1" => {
+            let rows = experiments::table1::run(&cfg)?;
+            println!("{}", experiments::table1::render(&rows, &cfg)?);
+        }
+        "table2" => {
+            let cells = experiments::table2::run(&cfg)?;
+            println!("{}", experiments::table2::render(&cells, &cfg)?);
+            let violations = experiments::table2::indistinguishability_violations(&cells, 2.0);
+            if violations.is_empty() {
+                println!("check: method accuracies are statistically indistinguishable ✓");
+            } else {
+                println!("check: spread exceeded 2x pooled std on:");
+                for v in violations {
+                    println!("  {v}");
+                }
+            }
+        }
+        "table3" => {
+            let (rows, cells) = experiments::table3::run(&cfg)?;
+            println!("{}", experiments::table3::render(&rows, &cells, &cfg)?);
+        }
+        "figure2" => {
+            let table = experiments::figure2::run(&cfg)?;
+            println!("{}", experiments::figure2::render(&table));
+            println!("grid CSV written to {}/figure2.csv", cfg.out_dir);
+        }
+        "figure3" => {
+            let bars = experiments::figure3::run(&cfg)?;
+            println!("{}", experiments::figure3::render(&bars, &cfg)?);
+        }
+        "train" => {
+            let data = args.positional().first().map(String::as_str).unwrap_or("ijcnn");
+            let budget = args.get_usize("budget")?.unwrap_or(100);
+            let strategy = match args.get("strategy") {
+                Some(s) => {
+                    Strategy::parse(s).ok_or_else(|| anyhow::anyhow!("unknown strategy '{s}'"))?
+                }
+                None => Strategy::parse("lookup-wd").unwrap(),
+            };
+            let run = coordinator::run_single(
+                data,
+                budget,
+                strategy,
+                &cfg,
+                args.get_usize("passes")?,
+                args.get_f64("c")?,
+                args.get_f64("gamma")?,
+            )?;
+            if let Some(path) = args.get("model-out") {
+                budgetsvm::model::io::save(&run.report.model, path)?;
+                eprintln!("model saved to {path}");
+            }
+            if args.flag("json") {
+                println!("{}", coordinator::single_run_json(&run, strategy));
+            } else {
+                println!("dataset            : {} ({} rows)", run.dataset, run.n_train);
+                println!("strategy           : {}", strategy.name());
+                println!("steps              : {}", run.report.steps);
+                println!("support vectors    : {}", run.report.model.num_sv());
+                println!(
+                    "merging frequency  : {:.1}%",
+                    100.0 * run.report.merging_frequency()
+                );
+                println!("train accuracy     : {:.2}%", 100.0 * run.train_accuracy);
+                if let Some(acc) = run.test_accuracy {
+                    println!("test accuracy      : {:.2}%", 100.0 * acc);
+                }
+                println!("wall time          : {:.3}s", run.report.wall_seconds);
+                println!(
+                    "maintenance time   : {:.3}s ({:.1}% of accounted time)",
+                    run.report.profiler.maintenance_seconds(),
+                    100.0 * run.report.maintenance_fraction()
+                );
+            }
+        }
+        "eval" => {
+            let pos = args.positional();
+            let (model_path, data_path) = match pos {
+                [m, d, ..] => (m.as_str(), d.as_str()),
+                _ => bail!("usage: repro eval <model.bsvm> <file.libsvm> [--gamma ...]"),
+            };
+            let model = budgetsvm::model::io::load(model_path)?;
+            let ds = budgetsvm::data::libsvm::read_file(data_path, model.dim())?;
+            let acc = model.accuracy(&ds);
+            println!(
+                "model: {} SVs, d={}, gamma={}, bias={:.6}",
+                model.num_sv(),
+                model.dim(),
+                model.kernel().gamma,
+                model.bias
+            );
+            println!("rows evaluated : {}", ds.len());
+            println!("accuracy       : {:.3}%", 100.0 * acc);
+        }
+        "precompute" => {
+            let out = args
+                .get("table-out")
+                .map(String::from)
+                .unwrap_or_else(|| format!("artifacts/table{}.tbl", cfg.grid));
+            let t = LookupTable::build(cfg.grid);
+            if let Some(parent) = std::path::Path::new(&out).parent() {
+                std::fs::create_dir_all(parent)?;
+            }
+            t.save(&out)?;
+            println!("built {0}x{0} lookup table -> {1}", cfg.grid, out);
+        }
+        "runtime-check" => {
+            let dir = args.get("artifacts").unwrap_or("artifacts");
+            let rt = Runtime::load(dir)?;
+            println!(
+                "loaded PJRT runtime: batch_n={}, decision variants {:?}",
+                rt.batch_n(),
+                rt.decision_variants()
+            );
+            // Tiny numeric check: train a 2-D model, compare PJRT vs native.
+            let ds = budgetsvm::data::synthetic::two_moons(512, 0.1, 7);
+            let mut opts = budgetsvm::solver::BsgdOptions::with_c(30, 10.0, 2.0, ds.len());
+            opts.passes = 2;
+            let report = budgetsvm::solver::train_bsgd(&ds, &opts);
+            let native = report.model.accuracy(&ds);
+            let pjrt = rt.accuracy(&report.model, &ds)?;
+            println!("two-moons accuracy: native={native:.4} pjrt={pjrt:.4}");
+            if (native - pjrt).abs() > 0.01 {
+                bail!("PJRT accuracy diverges from native");
+            }
+            println!("runtime check OK");
+        }
+        other => {
+            bail!("unknown command '{other}'; run `repro help`");
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,175 @@
+//! Instrumentation: section timing (Figure 3's A/B breakdown), agreement
+//! statistics between merge solvers (Table 3), and accuracy helpers.
+
+use std::time::Duration;
+
+use crate::util::stats::Welford;
+
+/// Timed sections of the trainer, mirroring the paper's profiler
+/// attribution:
+///
+/// * `SgdStep` — margin computation + coefficient update (everything outside
+///   budget maintenance),
+/// * `MaintA` — Figure 3 "Section A": computing `h` (GSS or lookup) — or
+///   looking up `WD` for the Lookup-WD method,
+/// * `MaintB` — Figure 3 "Section B": all other budget-maintenance work
+///   (κ kernel row, loop overhead, `α_z`, constructing the merge vector `z`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Section {
+    SgdStep,
+    MaintA,
+    MaintB,
+}
+
+const N_SECTIONS: usize = 3;
+
+/// Accumulates wall time per [`Section`] in nanoseconds.
+#[derive(Debug, Clone, Default)]
+pub struct SectionProfiler {
+    ns: [u64; N_SECTIONS],
+    events: [u64; N_SECTIONS],
+}
+
+impl SectionProfiler {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn add(&mut self, section: Section, elapsed: Duration) {
+        self.add_ns(section, elapsed.as_nanos() as u64);
+    }
+
+    #[inline]
+    pub fn add_ns(&mut self, section: Section, ns: u64) {
+        self.ns[section as usize] += ns;
+        self.events[section as usize] += 1;
+    }
+
+    pub fn ns(&self, section: Section) -> u64 {
+        self.ns[section as usize]
+    }
+
+    pub fn seconds(&self, section: Section) -> f64 {
+        self.ns[section as usize] as f64 * 1e-9
+    }
+
+    pub fn events(&self, section: Section) -> u64 {
+        self.events[section as usize]
+    }
+
+    /// Total maintenance time (A + B).
+    pub fn maintenance_seconds(&self) -> f64 {
+        self.seconds(Section::MaintA) + self.seconds(Section::MaintB)
+    }
+
+    /// Total accounted time.
+    pub fn total_seconds(&self) -> f64 {
+        self.seconds(Section::SgdStep) + self.maintenance_seconds()
+    }
+
+    pub fn merge(&mut self, other: &SectionProfiler) {
+        for i in 0..N_SECTIONS {
+            self.ns[i] += other.ns[i];
+            self.events[i] += other.events[i];
+        }
+    }
+}
+
+/// Statistics on how often two merge solvers take the same decision and how
+/// far their weight degradations are from the exact optimum (Table 3, right
+/// half).
+#[derive(Debug, Clone, Default)]
+pub struct AgreementStats {
+    /// Budget-maintenance events audited.
+    pub events: u64,
+    /// Events where GSS-standard and Lookup-WD chose the same partner.
+    pub equal_decisions: u64,
+    /// |WD_gss − WD_lookup| on disagreeing events (exact WD of each choice).
+    pub wd_diff_on_disagreement: Welford,
+    /// WD(GSS-standard's choice) / WD(GSS-precise best) — paper's "factor GSS".
+    pub factor_gss: Welford,
+    /// WD(Lookup-WD's choice) / WD(GSS-precise best) — paper's "factor lookup-WD".
+    pub factor_lookup: Welford,
+}
+
+impl AgreementStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fraction of events with identical decisions.
+    pub fn equal_fraction(&self) -> f64 {
+        if self.events == 0 {
+            0.0
+        } else {
+            self.equal_decisions as f64 / self.events as f64
+        }
+    }
+
+    pub fn merge(&mut self, other: &AgreementStats) {
+        self.events += other.events;
+        self.equal_decisions += other.equal_decisions;
+        self.wd_diff_on_disagreement.merge(&other.wd_diff_on_disagreement);
+        self.factor_gss.merge(&other.factor_gss);
+        self.factor_lookup.merge(&other.factor_lookup);
+    }
+}
+
+/// Classification accuracy of predictions vs. labels.
+pub fn accuracy(predictions: &[f32], labels: &[f32]) -> f64 {
+    assert_eq!(predictions.len(), labels.len());
+    if predictions.is_empty() {
+        return 0.0;
+    }
+    let correct = predictions
+        .iter()
+        .zip(labels)
+        .filter(|(p, l)| (**p >= 0.0) == (**l >= 0.0))
+        .count();
+    correct as f64 / predictions.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profiler_accumulates() {
+        let mut p = SectionProfiler::new();
+        p.add_ns(Section::MaintA, 100);
+        p.add_ns(Section::MaintA, 50);
+        p.add_ns(Section::MaintB, 25);
+        assert_eq!(p.ns(Section::MaintA), 150);
+        assert_eq!(p.events(Section::MaintA), 2);
+        assert!((p.maintenance_seconds() - 175e-9).abs() < 1e-15);
+    }
+
+    #[test]
+    fn profiler_merge() {
+        let mut a = SectionProfiler::new();
+        let mut b = SectionProfiler::new();
+        a.add_ns(Section::SgdStep, 10);
+        b.add_ns(Section::SgdStep, 30);
+        a.merge(&b);
+        assert_eq!(a.ns(Section::SgdStep), 40);
+        assert_eq!(a.events(Section::SgdStep), 2);
+    }
+
+    #[test]
+    fn agreement_fraction() {
+        let mut s = AgreementStats::new();
+        s.events = 10;
+        s.equal_decisions = 9;
+        assert!((s.equal_fraction() - 0.9).abs() < 1e-12);
+        assert_eq!(AgreementStats::new().equal_fraction(), 0.0);
+    }
+
+    #[test]
+    fn accuracy_counts_sign_agreement() {
+        let preds = [0.5f32, -2.0, 0.0, -0.1];
+        let labels = [1.0f32, -1.0, -1.0, 1.0];
+        // 0.0 counts as +1 prediction → row 3 wrong, row 4 wrong.
+        assert!((accuracy(&preds, &labels) - 0.5).abs() < 1e-12);
+    }
+}

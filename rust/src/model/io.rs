@@ -1,0 +1,139 @@
+//! Model persistence: save/load a trained [`BudgetModel`] in a compact
+//! binary format so training and serving can be separate processes
+//! (`repro train --model-out m.bsvm` → `repro eval m.bsvm data.libsvm`).
+//!
+//! Format: magic `BSVMMDL1`, then little-endian u64 `d`, u64 `count`,
+//! f64 `gamma`, f64 `bias`, `count` f64 effective coefficients, and
+//! `count·d` f32 support-vector values.
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::kernel::Gaussian;
+
+use super::BudgetModel;
+
+const MAGIC: &[u8; 8] = b"BSVMMDL1";
+
+/// Serialize a model (effective coefficients; the lazy scale is folded).
+pub fn save(model: &BudgetModel, path: impl AsRef<Path>) -> Result<()> {
+    let f = std::fs::File::create(path.as_ref())
+        .with_context(|| format!("cannot create {}", path.as_ref().display()))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(MAGIC)?;
+    w.write_all(&(model.dim() as u64).to_le_bytes())?;
+    w.write_all(&(model.num_sv() as u64).to_le_bytes())?;
+    w.write_all(&model.kernel().gamma.to_le_bytes())?;
+    w.write_all(&model.bias.to_le_bytes())?;
+    for j in 0..model.num_sv() {
+        w.write_all(&model.alpha(j).to_le_bytes())?;
+    }
+    for j in 0..model.num_sv() {
+        for &v in model.sv(j) {
+            w.write_all(&v.to_le_bytes())?;
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Load a model saved by [`save`].
+pub fn load(path: impl AsRef<Path>) -> Result<BudgetModel> {
+    let f = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("cannot open {}", path.as_ref().display()))?;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("not a budgetsvm model file (bad magic)");
+    }
+    let mut b8 = [0u8; 8];
+    r.read_exact(&mut b8)?;
+    let d = u64::from_le_bytes(b8) as usize;
+    r.read_exact(&mut b8)?;
+    let count = u64::from_le_bytes(b8) as usize;
+    r.read_exact(&mut b8)?;
+    let gamma = f64::from_le_bytes(b8);
+    r.read_exact(&mut b8)?;
+    let bias = f64::from_le_bytes(b8);
+    if d == 0 || d > 1_000_000 || count > 10_000_000 {
+        bail!("implausible model header: d={d}, count={count}");
+    }
+    if !(gamma.is_finite() && gamma > 0.0 && bias.is_finite()) {
+        bail!("implausible model parameters: gamma={gamma}, bias={bias}");
+    }
+    let mut alphas = vec![0.0f64; count];
+    for a in alphas.iter_mut() {
+        r.read_exact(&mut b8)?;
+        *a = f64::from_le_bytes(b8);
+    }
+    let mut model = BudgetModel::new(d, Gaussian::new(gamma), count);
+    model.bias = bias;
+    let mut b4 = [0u8; 4];
+    let mut row = vec![0.0f32; d];
+    for &alpha in &alphas {
+        for v in row.iter_mut() {
+            r.read_exact(&mut b4)?;
+            *v = f32::from_le_bytes(b4);
+        }
+        model.push(&row, alpha);
+    }
+    Ok(model)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::two_moons;
+    use crate::solver::{train_bsgd, BsgdOptions};
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("budgetsvm-model-io");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn round_trip_preserves_decision_function() {
+        let ds = two_moons(400, 0.12, 3);
+        let mut opts = BsgdOptions::with_c(25, 10.0, 2.0, ds.len());
+        opts.passes = 3;
+        let report = train_bsgd(&ds, &opts);
+        let path = tmp("m.bsvm");
+        save(&report.model, &path).unwrap();
+        let loaded = load(&path).unwrap();
+        assert_eq!(loaded.num_sv(), report.model.num_sv());
+        assert_eq!(loaded.dim(), 2);
+        for i in 0..ds.len() {
+            let a = report.model.decision(ds.row(i));
+            let b = loaded.decision(ds.row(i));
+            assert!((a - b).abs() < 1e-9, "row {i}: {a} vs {b}");
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_corrupt_files() {
+        let path = tmp("bad.bsvm");
+        std::fs::write(&path, b"BSVMMDL1 but truncated").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::write(&path, b"WRONGMAG").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn scale_is_folded_on_save() {
+        let mut m = BudgetModel::new(2, Gaussian::new(1.0), 2);
+        m.push(&[1.0, 0.0], 2.0);
+        m.rescale(0.25);
+        let path = tmp("scaled.bsvm");
+        save(&m, &path).unwrap();
+        let loaded = load(&path).unwrap();
+        assert!((loaded.alpha(0) - 0.5).abs() < 1e-12);
+        assert!((loaded.decision(&[1.0, 0.0]) - m.decision(&[1.0, 0.0])).abs() < 1e-12);
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,384 @@
+//! Sparse kernel expansion model with budget support.
+//!
+//! [`BudgetModel`] stores the support vectors in a flat row-major matrix
+//! with precomputed squared norms (the kernel row loop is the trainer's hot
+//! path) and keeps coefficients behind a lazy global scale factor `Φ` so the
+//! Pegasos shrink step `w ← (1 − 1/t)·w` is O(1) instead of O(B).
+
+pub mod io;
+
+use crate::kernel::{norm2, Gaussian};
+
+/// Lower bound on `Φ` before it is folded back into the raw coefficients
+/// (guards against underflow after very many SGD steps).
+const SCALE_FOLD_THRESHOLD: f64 = 1e-6;
+
+/// A budgeted kernel SVM model `f(x) = Σ_j α_j k(x_j, x) + b` with Gaussian
+/// kernel and at most `capacity` support vectors.
+#[derive(Debug, Clone)]
+pub struct BudgetModel {
+    d: usize,
+    kernel: Gaussian,
+    /// Flat row-major support vectors, `count * d` valid entries.
+    sv: Vec<f32>,
+    /// Raw coefficients; effective `α_j = Φ · alpha[j]`.
+    alpha: Vec<f64>,
+    /// Squared L2 norms of each SV row.
+    norms: Vec<f32>,
+    count: usize,
+    /// Global lazy scale Φ.
+    scale: f64,
+    /// Bias term (0 unless trained with bias).
+    pub bias: f64,
+}
+
+impl BudgetModel {
+    /// New empty model; `capacity` is a hint used to reserve storage (the
+    /// trainer passes `B + 1`).
+    pub fn new(d: usize, kernel: Gaussian, capacity: usize) -> Self {
+        BudgetModel {
+            d,
+            kernel,
+            sv: Vec::with_capacity(capacity * d),
+            alpha: Vec::with_capacity(capacity),
+            norms: Vec::with_capacity(capacity),
+            count: 0,
+            scale: 1.0,
+            bias: 0.0,
+        }
+    }
+
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    #[inline]
+    pub fn kernel(&self) -> Gaussian {
+        self.kernel
+    }
+
+    /// Number of support vectors currently stored.
+    #[inline]
+    pub fn num_sv(&self) -> usize {
+        self.count
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Support vector row `j`.
+    #[inline]
+    pub fn sv(&self, j: usize) -> &[f32] {
+        &self.sv[j * self.d..(j + 1) * self.d]
+    }
+
+    /// Squared norm of SV `j`.
+    #[inline]
+    pub fn sv_norm2(&self, j: usize) -> f32 {
+        self.norms[j]
+    }
+
+    /// Effective coefficient `α_j = Φ·a_j`.
+    #[inline]
+    pub fn alpha(&self, j: usize) -> f64 {
+        self.scale * self.alpha[j]
+    }
+
+    /// All effective coefficients (allocates).
+    pub fn alphas(&self) -> Vec<f64> {
+        self.alpha[..self.count].iter().map(|a| a * self.scale).collect()
+    }
+
+    /// Current global scale Φ (exposed for tests/diagnostics).
+    pub fn global_scale(&self) -> f64 {
+        self.scale
+    }
+
+    /// Multiply the whole expansion by `factor` in O(1) (Pegasos shrink).
+    pub fn rescale(&mut self, factor: f64) {
+        debug_assert!(factor.is_finite());
+        if self.count == 0 {
+            // An empty expansion times anything is still empty; keep Φ sane.
+            self.scale = 1.0;
+            return;
+        }
+        self.scale *= factor;
+        if self.scale.abs() < SCALE_FOLD_THRESHOLD {
+            self.fold_scale();
+        }
+    }
+
+    /// Fold Φ into the raw coefficients and reset it to 1.
+    pub fn fold_scale(&mut self) {
+        if self.scale == 1.0 {
+            return;
+        }
+        for a in &mut self.alpha[..self.count] {
+            *a *= self.scale;
+        }
+        self.scale = 1.0;
+    }
+
+    /// Append a support vector with *effective* coefficient `alpha_eff`.
+    pub fn push(&mut self, x: &[f32], alpha_eff: f64) {
+        assert_eq!(x.len(), self.d);
+        if self.scale == 0.0 {
+            // Degenerate state (all coefficients are exactly zero anyway).
+            self.clear();
+        }
+        self.sv.extend_from_slice(x);
+        self.norms.push(norm2(x));
+        self.alpha.push(alpha_eff / self.scale);
+        self.count += 1;
+    }
+
+    /// Remove SV `j` (swap-remove; order is not preserved).
+    pub fn swap_remove(&mut self, j: usize) {
+        assert!(j < self.count);
+        let last = self.count - 1;
+        if j != last {
+            let (head, tail) = self.sv.split_at_mut(last * self.d);
+            head[j * self.d..(j + 1) * self.d].copy_from_slice(&tail[..self.d]);
+            self.alpha[j] = self.alpha[last];
+            self.norms[j] = self.norms[last];
+        }
+        self.sv.truncate(last * self.d);
+        self.alpha.truncate(last);
+        self.norms.truncate(last);
+        self.count = last;
+    }
+
+    /// Remove all support vectors.
+    pub fn clear(&mut self) {
+        self.sv.clear();
+        self.alpha.clear();
+        self.norms.clear();
+        self.count = 0;
+        self.scale = 1.0;
+    }
+
+    /// Add `delta_eff` (effective units) to coefficient `j`.
+    pub fn add_alpha(&mut self, j: usize, delta_eff: f64) {
+        self.alpha[j] += delta_eff / self.scale;
+    }
+
+    /// Index of the SV with minimal `|α|` (None if empty). Ties break to the
+    /// lowest index.
+    pub fn argmin_abs_alpha(&self) -> Option<usize> {
+        // Raw |a_j| ordering equals effective |Φ·a_j| ordering (Φ is global).
+        (0..self.count).min_by(|&i, &j| {
+            self.alpha[i].abs().partial_cmp(&self.alpha[j].abs()).unwrap()
+        })
+    }
+
+    /// Decision value `f(x) = Φ·Σ_j a_j k(x_j, x) + b` for a row with known
+    /// squared norm. This is THE hot function of the whole system.
+    pub fn decision_with_norm(&self, x: &[f32], x_norm2: f32) -> f64 {
+        debug_assert_eq!(x.len(), self.d);
+        let gamma = self.kernel.gamma;
+        let d = self.d;
+        let mut acc = 0.0f64;
+        for j in 0..self.count {
+            let s = &self.sv[j * d..(j + 1) * d];
+            let dot = crate::kernel::dot(x, s);
+            let d2 = (x_norm2 + self.norms[j] - 2.0 * dot).max(0.0) as f64;
+            acc += self.alpha[j] * (-gamma * d2).exp();
+        }
+        self.scale * acc + self.bias
+    }
+
+    /// Decision value, computing the norm on the fly.
+    pub fn decision(&self, x: &[f32]) -> f64 {
+        self.decision_with_norm(x, norm2(x))
+    }
+
+    /// Predicted label (±1) for a row.
+    pub fn predict(&self, x: &[f32]) -> f32 {
+        if self.decision(x) >= 0.0 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    /// Kernel row `κ_j = k(x, sv_j)` written into `out` (length ≥ count).
+    /// Returns the number of entries written.
+    pub fn kernel_row(&self, x: &[f32], x_norm2: f32, out: &mut [f64]) -> usize {
+        let gamma = self.kernel.gamma;
+        let d = self.d;
+        for j in 0..self.count {
+            let s = &self.sv[j * d..(j + 1) * d];
+            let dot = crate::kernel::dot(x, s);
+            let d2 = (x_norm2 + self.norms[j] - 2.0 * dot).max(0.0) as f64;
+            out[j] = (-gamma * d2).exp();
+        }
+        self.count
+    }
+
+    /// Squared RKHS norm `‖w‖² = Σ_ij α_i α_j k(x_i, x_j)` — O(B²), used by
+    /// objective evaluation and tests, not by the hot loop.
+    pub fn weight_norm2(&self) -> f64 {
+        let mut acc = 0.0;
+        for i in 0..self.count {
+            for j in 0..self.count {
+                let k = self.kernel.eval_rows(
+                    self.sv(i),
+                    self.norms[i],
+                    self.sv(j),
+                    self.norms[j],
+                );
+                acc += self.alpha[i] * self.alpha[j] * k;
+            }
+        }
+        self.scale * self.scale * acc
+    }
+
+    /// Classification accuracy on a dataset.
+    pub fn accuracy(&self, ds: &crate::data::Dataset) -> f64 {
+        if ds.is_empty() {
+            return 0.0;
+        }
+        let mut correct = 0usize;
+        for i in 0..ds.len() {
+            if self.predict(ds.row(i)) == ds.label(i) {
+                correct += 1;
+            }
+        }
+        correct as f64 / ds.len() as f64
+    }
+
+    /// Decision values for every row of a dataset (allocates the output).
+    pub fn decision_batch(&self, ds: &crate::data::Dataset) -> Vec<f64> {
+        (0..ds.len()).map(|i| self.decision(ds.row(i))).collect()
+    }
+}
+
+impl Gaussian {
+    /// Convenience row-eval used by `weight_norm2`.
+    #[inline]
+    fn eval_rows(&self, a: &[f32], a_n: f32, b: &[f32], b_n: f32) -> f64 {
+        use crate::kernel::Kernel;
+        self.eval(a, a_n, b, b_n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model_with(points: &[(&[f32], f64)]) -> BudgetModel {
+        let d = points[0].0.len();
+        let mut m = BudgetModel::new(d, Gaussian::new(0.5), points.len());
+        for (x, a) in points {
+            m.push(x, *a);
+        }
+        m
+    }
+
+    #[test]
+    fn decision_matches_manual_sum() {
+        let m = model_with(&[(&[0.0, 0.0], 1.0), (&[1.0, 0.0], -0.5)]);
+        let x = [0.5f32, 0.5];
+        let k1 = (-0.5f64 * 0.5).exp(); // d² = 0.25+0.25
+        let k2 = (-0.5f64 * 0.5).exp();
+        let expect = 1.0 * k1 - 0.5 * k2;
+        assert!((m.decision(&x) - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rescale_is_lazy_and_correct() {
+        let mut m = model_with(&[(&[1.0, 2.0], 2.0)]);
+        let before = m.decision(&[0.0, 0.0]);
+        m.rescale(0.5);
+        let after = m.decision(&[0.0, 0.0]);
+        assert!((after - 0.5 * before).abs() < 1e-12);
+        assert!((m.alpha(0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn push_after_rescale_uses_effective_units() {
+        let mut m = model_with(&[(&[0.0, 0.0], 1.0)]);
+        m.rescale(0.25);
+        m.push(&[3.0, 3.0], 0.8);
+        assert!((m.alpha(1) - 0.8).abs() < 1e-12);
+        assert!((m.alpha(0) - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scale_folding_keeps_decision_invariant() {
+        let mut m = model_with(&[(&[1.0, 0.0], 1.0), (&[0.0, 1.0], -2.0)]);
+        let x = [0.3f32, 0.7];
+        let before = m.decision(&x);
+        // Shrink hard enough to trigger folding.
+        for _ in 0..40 {
+            m.rescale(0.5);
+        }
+        assert_eq!(m.global_scale(), 1.0, "scale should have folded");
+        let expect = before * 0.5f64.powi(40);
+        assert!((m.decision(&x) - expect).abs() < 1e-15 + expect.abs() * 1e-9);
+    }
+
+    #[test]
+    fn swap_remove_keeps_remaining_svs() {
+        let mut m = model_with(&[
+            (&[0.0, 0.0], 1.0),
+            (&[1.0, 1.0], 2.0),
+            (&[2.0, 2.0], 3.0),
+        ]);
+        m.swap_remove(0);
+        assert_eq!(m.num_sv(), 2);
+        // last row moved into slot 0
+        assert_eq!(m.sv(0), &[2.0, 2.0]);
+        assert!((m.alpha(0) - 3.0).abs() < 1e-12);
+        assert_eq!(m.sv(1), &[1.0, 1.0]);
+    }
+
+    #[test]
+    fn argmin_abs_alpha_finds_smallest() {
+        let m = model_with(&[(&[0.0, 0.0], -3.0), (&[1.0, 1.0], 0.5), (&[2.0, 2.0], 2.0)]);
+        assert_eq!(m.argmin_abs_alpha(), Some(1));
+        let empty = BudgetModel::new(2, Gaussian::new(1.0), 4);
+        assert_eq!(empty.argmin_abs_alpha(), None);
+    }
+
+    #[test]
+    fn kernel_row_matches_decision() {
+        let m = model_with(&[(&[0.0, 1.0], 1.5), (&[1.0, 0.0], -0.5), (&[1.0, 1.0], 0.25)]);
+        let x = [0.2f32, 0.8];
+        let mut row = vec![0.0f64; 3];
+        let n = m.kernel_row(&x, norm2(&x), &mut row);
+        assert_eq!(n, 3);
+        let via_row: f64 =
+            (0..3).map(|j| m.alpha(j) * row[j]).sum::<f64>() + m.bias;
+        assert!((via_row - m.decision(&x)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn weight_norm2_single_sv() {
+        let m = model_with(&[(&[1.0, 1.0], 2.0)]);
+        // ‖2φ(x)‖² = 4·k(x,x) = 4
+        assert!((m.weight_norm2() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_model_predicts_nonnegative_class() {
+        let m = BudgetModel::new(2, Gaussian::new(1.0), 4);
+        assert_eq!(m.decision(&[1.0, 2.0]), 0.0);
+        assert_eq!(m.predict(&[1.0, 2.0]), 1.0);
+    }
+
+    #[test]
+    fn accuracy_on_trivial_dataset() {
+        let m = model_with(&[(&[0.0, 0.0], 1.0), (&[4.0, 4.0], -1.0)]);
+        let ds = crate::data::Dataset::new(
+            "t",
+            vec![0.1, 0.1, 3.9, 3.9],
+            vec![1.0, -1.0],
+            2,
+        );
+        assert_eq!(m.accuracy(&ds), 1.0);
+    }
+}

@@ -1,0 +1,389 @@
+//! Budgeted Stochastic Gradient Descent (BSGD) — Wang, Crammer & Vucetic
+//! (JMLR 2012) — with the merge-solver choice of Glasmachers & Qaadan
+//! (2018) as a first-class option.
+//!
+//! Per step (Pegasos update on the primal objective (1) of the paper):
+//!
+//! ```text
+//! margin = y_i · f(x_i)                 (with the pre-update model)
+//! w ← (1 − η_t λ) · w                   (O(1) via the lazy global scale)
+//! if margin < 1:  w ← w + η_t y_i φ(x_i)  (insert SV)
+//! if #SV > B:     budget maintenance     (merge / remove / project)
+//! ```
+//!
+//! The trainer is instrumented exactly along the paper's profiler
+//! attribution: SGD-step time vs. budget-maintenance time, with maintenance
+//! split into Section A (computing `h`/`WD` per candidate) and Section B
+//! (everything else) — the data behind Figure 3 and Table 3.
+
+use std::time::Instant;
+
+use crate::budget::{audit_event, LookupTable, Maintainer, MergeSolver, Strategy};
+use crate::data::Dataset;
+use crate::kernel::Gaussian;
+use crate::metrics::{AgreementStats, Section, SectionProfiler};
+use crate::model::BudgetModel;
+use crate::util::rng::Rng;
+
+use super::schedule::LearningRate;
+
+/// Options for one BSGD training run.
+#[derive(Debug, Clone)]
+pub struct BsgdOptions {
+    /// Budget B — maximum number of support vectors.
+    pub budget: usize,
+    /// Regularization λ (the paper tunes `C = 1/(n·λ)`).
+    pub lambda: f64,
+    /// Gaussian kernel bandwidth γ.
+    pub gamma: f64,
+    /// Passes (epochs) over the training data.
+    pub passes: usize,
+    /// RNG seed controlling the visit order.
+    pub seed: u64,
+    /// Budget maintenance strategy.
+    pub strategy: Strategy,
+    /// Lookup-table grid resolution (paper: 400).
+    pub grid: usize,
+    /// Learning-rate schedule; `None` = Pegasos `1/(λt)`.
+    pub learning_rate: Option<LearningRate>,
+    /// Record Table-3-style agreement statistics (runs GSS-standard,
+    /// Lookup-WD and GSS-precise side by side at every maintenance event —
+    /// expensive, for the audit experiment only).
+    pub audit: bool,
+    /// Record an objective/accuracy curve every `curve_every` steps
+    /// (0 = never).
+    pub curve_every: u64,
+    /// Rows subsampled for each curve evaluation.
+    pub curve_sample: usize,
+}
+
+impl BsgdOptions {
+    /// Sensible defaults for a (budget, λ, γ) triple: Lookup-WD merging with
+    /// the paper's 400×400 grid, one pass.
+    pub fn new(budget: usize, lambda: f64, gamma: f64) -> Self {
+        BsgdOptions {
+            budget,
+            lambda,
+            gamma,
+            passes: 1,
+            seed: 0,
+            strategy: Strategy::Merge(MergeSolver::LookupWd),
+            grid: 400,
+            learning_rate: None,
+            audit: false,
+            curve_every: 0,
+            curve_sample: 512,
+        }
+    }
+
+    /// Derive λ from the paper's `C` convention: `λ = 1/(n·C)`.
+    pub fn with_c(budget: usize, c: f64, gamma: f64, n_train: usize) -> Self {
+        Self::new(budget, 1.0 / (c * n_train as f64), gamma)
+    }
+}
+
+/// One point of the training curve.
+#[derive(Debug, Clone, Copy)]
+pub struct CurvePoint {
+    pub step: u64,
+    /// Estimated primal objective `λ/2‖w‖² + mean hinge` on a fixed sample.
+    pub objective: f64,
+    /// Accuracy on the same sample.
+    pub sample_accuracy: f64,
+    /// Support vectors at this step.
+    pub num_sv: usize,
+}
+
+/// Everything a training run produces.
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    pub model: BudgetModel,
+    /// SGD steps executed (= passes · n).
+    pub steps: u64,
+    /// Steps that violated the margin and inserted an SV.
+    pub sv_inserts: u64,
+    /// Budget maintenance events triggered.
+    pub maintenance_events: u64,
+    /// Section timings (SGD / maintenance A / maintenance B).
+    pub profiler: SectionProfiler,
+    /// Total wall time of the training loop.
+    pub wall_seconds: f64,
+    /// Sum of weight degradations over all maintenance events.
+    pub total_weight_degradation: f64,
+    /// Objective curve (empty unless `curve_every > 0`).
+    pub curve: Vec<CurvePoint>,
+    /// Agreement statistics (present iff `audit`).
+    pub agreement: Option<AgreementStats>,
+}
+
+impl TrainReport {
+    /// Fraction of SGD steps that triggered budget maintenance — the
+    /// paper's "merging frequency" (Table 3).
+    pub fn merging_frequency(&self) -> f64 {
+        if self.steps == 0 {
+            0.0
+        } else {
+            self.maintenance_events as f64 / self.steps as f64
+        }
+    }
+
+    /// Fraction of total accounted time spent in budget maintenance.
+    pub fn maintenance_fraction(&self) -> f64 {
+        let total = self.profiler.total_seconds();
+        if total <= 0.0 {
+            0.0
+        } else {
+            self.profiler.maintenance_seconds() / total
+        }
+    }
+}
+
+/// Train a budgeted SVM with SGD. See module docs for the update rule.
+pub fn train_bsgd(train: &Dataset, opts: &BsgdOptions) -> TrainReport {
+    assert!(opts.budget >= 2, "budget must be at least 2 (merging needs a pair)");
+    assert!(opts.lambda > 0.0);
+    assert!(!train.is_empty());
+
+    let n = train.len();
+    let d = train.dim();
+    let kernel = Gaussian::new(opts.gamma);
+    let lr = opts.learning_rate.unwrap_or(LearningRate::PegasosInvT { lambda: opts.lambda });
+
+    let mut model = BudgetModel::new(d, kernel, opts.budget + 1);
+    let mut maintainer = Maintainer::new(opts.strategy, opts.grid);
+    let mut prof = SectionProfiler::new();
+    let mut rng = Rng::new(opts.seed);
+    let mut agreement = opts.audit.then(AgreementStats::new);
+    // The audit needs a table even when the primary strategy is GSS.
+    let audit_table: Option<LookupTable> =
+        opts.audit.then(|| LookupTable::build(opts.grid.max(2)));
+
+    // Precompute row norms once (reused by every margin evaluation).
+    let norms: Vec<f32> = (0..n).map(|i| crate::kernel::norm2(train.row(i))).collect();
+
+    // Fixed evaluation sample for the curve.
+    let curve_idx: Vec<usize> = if opts.curve_every > 0 {
+        rng.sample_indices(n, opts.curve_sample.min(n))
+    } else {
+        Vec::new()
+    };
+
+    let mut steps: u64 = 0;
+    let mut sv_inserts: u64 = 0;
+    let mut maintenance_events: u64 = 0;
+    let mut total_wd = 0.0f64;
+    let mut curve = Vec::new();
+    let mut order: Vec<usize> = (0..n).collect();
+
+    let wall_start = Instant::now();
+    for _pass in 0..opts.passes {
+        rng.shuffle(&mut order);
+        for &i in &order {
+            steps += 1;
+            let t_sgd = Instant::now();
+            let x = train.row(i);
+            let y = train.label(i) as f64;
+            let margin = y * model.decision_with_norm(x, norms[i]);
+            model.rescale(lr.shrink(steps, opts.lambda));
+            let violated = margin < 1.0;
+            if violated {
+                model.push(x, lr.eta(steps) * y);
+                sv_inserts += 1;
+            }
+            prof.add(Section::SgdStep, t_sgd.elapsed());
+
+            if model.num_sv() > opts.budget {
+                maintenance_events += 1;
+                if let (Some(stats), Some(table)) = (agreement.as_mut(), audit_table.as_ref()) {
+                    if let Some(rec) = audit_event(&model, table) {
+                        stats.events += 1;
+                        stats.equal_decisions += rec.equal as u64;
+                        if !rec.equal {
+                            stats.wd_diff_on_disagreement.push(rec.wd_diff);
+                        }
+                        if rec.factors_valid {
+                            stats.factor_gss.push(rec.factor_gss);
+                            stats.factor_lookup.push(rec.factor_lookup);
+                        }
+                    }
+                }
+                total_wd += maintainer.maintain(&mut model, &mut prof);
+            }
+
+            if opts.curve_every > 0 && steps % opts.curve_every == 0 {
+                curve.push(curve_point(&model, train, &curve_idx, opts.lambda, steps));
+            }
+        }
+    }
+    let wall_seconds = wall_start.elapsed().as_secs_f64();
+    if opts.curve_every > 0 {
+        curve.push(curve_point(&model, train, &curve_idx, opts.lambda, steps));
+    }
+
+    TrainReport {
+        model,
+        steps,
+        sv_inserts,
+        maintenance_events,
+        profiler: prof,
+        wall_seconds,
+        total_weight_degradation: total_wd,
+        curve,
+        agreement,
+    }
+}
+
+fn curve_point(
+    model: &BudgetModel,
+    train: &Dataset,
+    idx: &[usize],
+    lambda: f64,
+    step: u64,
+) -> CurvePoint {
+    let mut hinge = 0.0f64;
+    let mut correct = 0usize;
+    for &i in idx {
+        let f = model.decision(train.row(i));
+        let y = train.label(i) as f64;
+        hinge += (1.0 - y * f).max(0.0);
+        if (f >= 0.0) == (y >= 0.0) {
+            correct += 1;
+        }
+    }
+    let m = idx.len().max(1) as f64;
+    CurvePoint {
+        step,
+        objective: 0.5 * lambda * model.weight_norm2() + hinge / m,
+        sample_accuracy: correct as f64 / m,
+        num_sv: model.num_sv(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::two_moons;
+
+    fn moons_opts(budget: usize) -> (Dataset, BsgdOptions) {
+        let ds = two_moons(600, 0.12, 42);
+        let n = ds.len();
+        // C = 10 → λ = 1/(10 n); γ = 2 suits the moon scale.
+        let mut opts = BsgdOptions::with_c(budget, 10.0, 2.0, n);
+        opts.passes = 6;
+        opts.seed = 1;
+        (ds, opts)
+    }
+
+    #[test]
+    fn learns_two_moons_under_budget() {
+        let (ds, opts) = moons_opts(30);
+        let report = train_bsgd(&ds, &opts);
+        assert!(report.model.num_sv() <= 30);
+        let acc = report.model.accuracy(&ds);
+        assert!(acc > 0.9, "train accuracy {acc}");
+        assert_eq!(report.steps, 6 * 600);
+        assert!(report.maintenance_events > 0, "budget must actually bind");
+    }
+
+    #[test]
+    fn all_four_merge_solvers_reach_similar_accuracy() {
+        let (ds, base) = moons_opts(25);
+        let mut accs = Vec::new();
+        for solver in MergeSolver::ALL {
+            let mut opts = base.clone();
+            opts.strategy = Strategy::Merge(solver);
+            let report = train_bsgd(&ds, &opts);
+            accs.push((solver.name(), report.model.accuracy(&ds)));
+        }
+        for &(name, acc) in &accs {
+            assert!(acc > 0.88, "{name}: accuracy {acc}");
+        }
+        let max = accs.iter().map(|&(_, a)| a).fold(0.0, f64::max);
+        let min = accs.iter().map(|&(_, a)| a).fold(1.0, f64::min);
+        assert!(max - min < 0.08, "solver accuracies spread too wide: {accs:?}");
+    }
+
+    #[test]
+    fn budget_constraint_never_violated_after_training() {
+        for budget in [5usize, 17, 64] {
+            let (ds, mut opts) = moons_opts(budget);
+            opts.budget = budget;
+            opts.passes = 2;
+            let report = train_bsgd(&ds, &opts);
+            assert!(report.model.num_sv() <= budget, "B={budget}");
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (ds, opts) = moons_opts(20);
+        let r1 = train_bsgd(&ds, &opts);
+        let r2 = train_bsgd(&ds, &opts);
+        assert_eq!(r1.steps, r2.steps);
+        assert_eq!(r1.sv_inserts, r2.sv_inserts);
+        assert_eq!(r1.maintenance_events, r2.maintenance_events);
+        assert_eq!(r1.model.num_sv(), r2.model.num_sv());
+        let probe = [0.3f32, 0.2];
+        assert!((r1.model.decision(&probe) - r2.model.decision(&probe)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn curve_is_recorded_and_objective_decreases() {
+        let (ds, mut opts) = moons_opts(40);
+        opts.curve_every = 300;
+        opts.passes = 8;
+        let report = train_bsgd(&ds, &opts);
+        assert!(report.curve.len() >= 8);
+        let first = report.curve.first().unwrap().objective;
+        let last = report.curve.last().unwrap().objective;
+        assert!(
+            last < first,
+            "objective should decrease: first={first} last={last}"
+        );
+    }
+
+    #[test]
+    fn audit_mode_collects_agreement_stats() {
+        let (ds, mut opts) = moons_opts(15);
+        opts.audit = true;
+        opts.passes = 2;
+        opts.grid = 100;
+        let report = train_bsgd(&ds, &opts);
+        let stats = report.agreement.expect("audit stats");
+        assert!(stats.events > 0);
+        assert!(stats.equal_fraction() > 0.5, "agreement {}", stats.equal_fraction());
+        assert!(stats.factor_gss.mean() >= 1.0 - 1e-9);
+        assert!(stats.factor_lookup.mean() >= 1.0 - 1e-9);
+    }
+
+    #[test]
+    fn unbinding_budget_means_no_maintenance() {
+        let (ds, mut opts) = moons_opts(10_000);
+        opts.budget = 10_000;
+        opts.passes = 1;
+        let report = train_bsgd(&ds, &opts);
+        assert_eq!(report.maintenance_events, 0);
+        assert_eq!(report.merging_frequency(), 0.0);
+    }
+
+    #[test]
+    fn removal_and_projection_strategies_also_train() {
+        for strat in [Strategy::Removal, Strategy::Projection] {
+            let (ds, mut opts) = moons_opts(20);
+            opts.strategy = strat;
+            opts.passes = 3;
+            let report = train_bsgd(&ds, &opts);
+            assert!(report.model.num_sv() <= 20);
+            let acc = report.model.accuracy(&ds);
+            assert!(acc > 0.75, "{strat:?}: {acc}");
+        }
+    }
+
+    #[test]
+    fn merging_frequency_matches_event_count() {
+        let (ds, opts) = moons_opts(12);
+        let report = train_bsgd(&ds, &opts);
+        let expect = report.maintenance_events as f64 / report.steps as f64;
+        assert!((report.merging_frequency() - expect).abs() < 1e-15);
+    }
+}

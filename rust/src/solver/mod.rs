@@ -1,0 +1,19 @@
+//! Training algorithms.
+//!
+//! * [`bsgd`] — Budgeted Stochastic Gradient Descent (Wang et al. 2012),
+//!   the system this paper accelerates; fully instrumented.
+//! * [`multiclass`] — one-vs-rest reduction (the paper's "other tasks"
+//!   generalization), K budgeted machines sharing the merge machinery.
+//! * [`pegasos`] — unbudgeted kernelized Pegasos baseline.
+//! * [`smo`] — a working-set SMO dual solver standing in for LIBSVM as the
+//!   "exact model" reference of Table 1.
+//! * [`schedule`] — learning-rate schedules.
+
+pub mod bsgd;
+pub mod multiclass;
+pub mod pegasos;
+pub mod schedule;
+pub mod smo;
+
+pub use bsgd::{train_bsgd, BsgdOptions, CurvePoint, TrainReport};
+pub use schedule::LearningRate;

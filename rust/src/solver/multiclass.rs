@@ -1,0 +1,202 @@
+//! Multi-class budgeted SVM via one-vs-rest BSGD.
+//!
+//! The paper's Section 2 notes that other loss functions / reductions
+//! "allow to generalize SVMs to other tasks like multi-class
+//! classification"; this module provides the standard one-vs-rest
+//! reduction: K independent budgeted binary machines, each trained with the
+//! same merge-solver machinery (so the lookup speed-up applies K-fold), and
+//! prediction by maximal decision value.
+
+use anyhow::{ensure, Result};
+
+use crate::data::Dataset;
+use crate::model::BudgetModel;
+use crate::solver::{train_bsgd, BsgdOptions};
+
+/// Rows with integer class labels in `0..k`.
+#[derive(Debug, Clone)]
+pub struct MulticlassDataset {
+    x: Vec<f32>,
+    y: Vec<usize>,
+    n: usize,
+    d: usize,
+    k: usize,
+}
+
+impl MulticlassDataset {
+    pub fn new(x: Vec<f32>, y: Vec<usize>, d: usize) -> Result<Self> {
+        ensure!(d > 0, "dimension must be positive");
+        ensure!(x.len() % d == 0, "feature buffer not a multiple of d");
+        let n = x.len() / d;
+        ensure!(y.len() == n, "label count mismatch");
+        let k = y.iter().copied().max().map(|m| m + 1).unwrap_or(0);
+        ensure!(k >= 2, "need at least two classes");
+        Ok(MulticlassDataset { x, y, n, d, k })
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.k
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.x[i * self.d..(i + 1) * self.d]
+    }
+
+    pub fn label(&self, i: usize) -> usize {
+        self.y[i]
+    }
+
+    /// The binary one-vs-rest view for class `c` (+1 = class c).
+    fn binary_view(&self, c: usize) -> Dataset {
+        let labels: Vec<f32> =
+            self.y.iter().map(|&yi| if yi == c { 1.0 } else { -1.0 }).collect();
+        Dataset::new(format!("ovr-{c}"), self.x.clone(), labels, self.d)
+    }
+}
+
+/// A trained one-vs-rest ensemble.
+pub struct MulticlassModel {
+    machines: Vec<BudgetModel>,
+}
+
+impl MulticlassModel {
+    /// Predicted class = argmax of the per-class decision values.
+    pub fn predict(&self, x: &[f32]) -> usize {
+        let mut best = 0usize;
+        let mut best_v = f64::NEG_INFINITY;
+        for (c, m) in self.machines.iter().enumerate() {
+            let v = m.decision(x);
+            if v > best_v {
+                best_v = v;
+                best = c;
+            }
+        }
+        best
+    }
+
+    /// Per-class decision values.
+    pub fn decision(&self, x: &[f32]) -> Vec<f64> {
+        self.machines.iter().map(|m| m.decision(x)).collect()
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.machines.len()
+    }
+
+    /// Total support vectors across all machines (≤ K·B).
+    pub fn total_sv(&self) -> usize {
+        self.machines.iter().map(|m| m.num_sv()).sum()
+    }
+
+    pub fn machine(&self, c: usize) -> &BudgetModel {
+        &self.machines[c]
+    }
+
+    pub fn accuracy(&self, ds: &MulticlassDataset) -> f64 {
+        if ds.is_empty() {
+            return 0.0;
+        }
+        let correct =
+            (0..ds.len()).filter(|&i| self.predict(ds.row(i)) == ds.label(i)).count();
+        correct as f64 / ds.len() as f64
+    }
+}
+
+/// Train K one-vs-rest budgeted machines. `opts.budget` is the per-machine
+/// budget; the machines are independent, so the experiment runner can
+/// parallelize over classes if desired (here: sequential, deterministic).
+pub fn train_multiclass(ds: &MulticlassDataset, opts: &BsgdOptions) -> MulticlassModel {
+    let machines = (0..ds.num_classes())
+        .map(|c| {
+            let view = ds.binary_view(c);
+            let mut class_opts = opts.clone();
+            class_opts.seed = opts.seed ^ (0xC1A55 + c as u64);
+            train_bsgd(&view, &class_opts).model
+        })
+        .collect();
+    MulticlassModel { machines }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Three well-separated 2-D Gaussian blobs.
+    fn three_blobs(n: usize, seed: u64) -> MulticlassDataset {
+        let mut rng = Rng::new(seed);
+        let centers = [(0.0f64, 0.0f64), (4.0, 0.0), (2.0, 3.5)];
+        let mut x = Vec::with_capacity(n * 2);
+        let mut y = Vec::with_capacity(n);
+        for i in 0..n {
+            let c = i % 3;
+            x.push((centers[c].0 + 0.5 * rng.normal()) as f32);
+            x.push((centers[c].1 + 0.5 * rng.normal()) as f32);
+            y.push(c);
+        }
+        MulticlassDataset::new(x, y, 2).unwrap()
+    }
+
+    #[test]
+    fn learns_three_blobs_under_budget() {
+        let train = three_blobs(600, 1);
+        let test = three_blobs(300, 2);
+        let mut opts = BsgdOptions::with_c(20, 10.0, 1.0, train.len());
+        opts.passes = 4;
+        let model = train_multiclass(&train, &opts);
+        assert_eq!(model.num_classes(), 3);
+        assert!(model.total_sv() <= 3 * 20);
+        let acc = model.accuracy(&test);
+        assert!(acc > 0.95, "multiclass accuracy {acc}");
+    }
+
+    #[test]
+    fn decision_vector_has_k_entries_and_argmax_matches_predict() {
+        let train = three_blobs(300, 3);
+        let mut opts = BsgdOptions::with_c(15, 10.0, 1.0, train.len());
+        opts.passes = 3;
+        let model = train_multiclass(&train, &opts);
+        for i in 0..20 {
+            let d = model.decision(train.row(i));
+            assert_eq!(d.len(), 3);
+            let argmax = d
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            assert_eq!(argmax, model.predict(train.row(i)));
+        }
+    }
+
+    #[test]
+    fn rejects_degenerate_inputs() {
+        // Single class is not a classification problem.
+        assert!(MulticlassDataset::new(vec![1.0, 2.0], vec![0], 2).is_err());
+        assert!(MulticlassDataset::new(vec![1.0, 2.0], vec![0, 1], 1).is_ok());
+        assert!(MulticlassDataset::new(vec![1.0], vec![0, 1], 2).is_err());
+    }
+
+    #[test]
+    fn per_class_budgets_hold_individually() {
+        let train = three_blobs(400, 7);
+        let mut opts = BsgdOptions::with_c(8, 10.0, 1.0, train.len());
+        opts.passes = 2;
+        let model = train_multiclass(&train, &opts);
+        for c in 0..3 {
+            assert!(model.machine(c).num_sv() <= 8, "class {c}");
+        }
+    }
+}

@@ -1,0 +1,109 @@
+//! Unbudgeted kernelized Pegasos (Shalev-Shwartz et al. 2011) — the
+//! baseline BSGD degenerates to when the budget never binds. Model size
+//! grows with the number of margin violations (linear in n, Steinwart
+//! 2003), which is exactly the scaling problem budgets address.
+
+use std::time::Instant;
+
+use crate::data::Dataset;
+use crate::kernel::Gaussian;
+use crate::metrics::{Section, SectionProfiler};
+use crate::model::BudgetModel;
+use crate::util::rng::Rng;
+
+use super::schedule::LearningRate;
+
+/// Options for an unbudgeted Pegasos run.
+#[derive(Debug, Clone)]
+pub struct PegasosOptions {
+    pub lambda: f64,
+    pub gamma: f64,
+    pub passes: usize,
+    pub seed: u64,
+}
+
+/// Report of a Pegasos run.
+#[derive(Debug, Clone)]
+pub struct PegasosReport {
+    pub model: BudgetModel,
+    pub steps: u64,
+    pub sv_inserts: u64,
+    pub wall_seconds: f64,
+    pub profiler: SectionProfiler,
+}
+
+/// Train an unbudgeted kernel SVM with Pegasos SGD.
+pub fn train_pegasos(train: &Dataset, opts: &PegasosOptions) -> PegasosReport {
+    assert!(opts.lambda > 0.0);
+    let n = train.len();
+    let kernel = Gaussian::new(opts.gamma);
+    let lr = LearningRate::PegasosInvT { lambda: opts.lambda };
+    let mut model = BudgetModel::new(train.dim(), kernel, n.min(4096));
+    let mut prof = SectionProfiler::new();
+    let mut rng = Rng::new(opts.seed);
+    let norms: Vec<f32> = (0..n).map(|i| crate::kernel::norm2(train.row(i))).collect();
+
+    let mut steps = 0u64;
+    let mut sv_inserts = 0u64;
+    let mut order: Vec<usize> = (0..n).collect();
+    let wall = Instant::now();
+    for _ in 0..opts.passes {
+        rng.shuffle(&mut order);
+        for &i in &order {
+            steps += 1;
+            let t0 = Instant::now();
+            let y = train.label(i) as f64;
+            let margin = y * model.decision_with_norm(train.row(i), norms[i]);
+            model.rescale(lr.shrink(steps, opts.lambda));
+            if margin < 1.0 {
+                model.push(train.row(i), lr.eta(steps) * y);
+                sv_inserts += 1;
+            }
+            prof.add(Section::SgdStep, t0.elapsed());
+        }
+    }
+    PegasosReport {
+        model,
+        steps,
+        sv_inserts,
+        wall_seconds: wall.elapsed().as_secs_f64(),
+        profiler: prof,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::two_moons;
+
+    #[test]
+    fn learns_two_moons_unbudgeted() {
+        let ds = two_moons(400, 0.12, 9);
+        let opts = PegasosOptions {
+            lambda: 1.0 / (10.0 * ds.len() as f64),
+            gamma: 2.0,
+            passes: 5,
+            seed: 3,
+        };
+        let report = train_pegasos(&ds, &opts);
+        let acc = report.model.accuracy(&ds);
+        assert!(acc > 0.93, "accuracy {acc}");
+        // Unbudgeted: the model grows with margin violations, unchecked.
+        assert!(report.model.num_sv() > 20, "num_sv={}", report.model.num_sv());
+        assert!(report.model.num_sv() as u64 == report.sv_inserts);
+        assert_eq!(report.steps, 5 * 400);
+    }
+
+    #[test]
+    fn model_growth_tracks_margin_violations() {
+        let ds = two_moons(300, 0.2, 4);
+        let opts = PegasosOptions {
+            lambda: 1.0 / (10.0 * ds.len() as f64),
+            gamma: 2.0,
+            passes: 1,
+            seed: 0,
+        };
+        let report = train_pegasos(&ds, &opts);
+        assert_eq!(report.model.num_sv() as u64, report.sv_inserts);
+    }
+}

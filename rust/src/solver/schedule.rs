@@ -1,0 +1,59 @@
+//! Learning-rate schedules for the SGD solvers.
+
+/// Learning rate η_t as a function of the 1-based step counter.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LearningRate {
+    /// Pegasos schedule `η_t = 1/(λ·t)` — the BSGD default (guarantees
+    /// O(log t / t) convergence on the λ-strongly-convex SVM objective).
+    PegasosInvT { lambda: f64 },
+    /// `η_t = η₀/√t` (robbins-monro style, for ablation).
+    InvSqrt { eta0: f64 },
+    /// Constant step size (for ablation).
+    Constant { eta0: f64 },
+}
+
+impl LearningRate {
+    #[inline]
+    pub fn eta(&self, t: u64) -> f64 {
+        debug_assert!(t >= 1);
+        match *self {
+            LearningRate::PegasosInvT { lambda } => 1.0 / (lambda * t as f64),
+            LearningRate::InvSqrt { eta0 } => eta0 / (t as f64).sqrt(),
+            LearningRate::Constant { eta0 } => eta0,
+        }
+    }
+
+    /// Multiplicative shrink factor `(1 − η_t·λ)` applied to `w` each step.
+    #[inline]
+    pub fn shrink(&self, t: u64, lambda: f64) -> f64 {
+        (1.0 - self.eta(t) * lambda).max(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pegasos_shrink_is_one_minus_inv_t() {
+        let lr = LearningRate::PegasosInvT { lambda: 0.25 };
+        assert!((lr.eta(4) - 1.0).abs() < 1e-12);
+        assert!((lr.shrink(4, 0.25) - 0.75).abs() < 1e-12);
+        // t = 1 → shrink 0 (w starts at 0, so this is harmless).
+        assert_eq!(lr.shrink(1, 0.25), 0.0);
+    }
+
+    #[test]
+    fn schedules_decay() {
+        let inv = LearningRate::InvSqrt { eta0: 1.0 };
+        assert!(inv.eta(100) < inv.eta(10));
+        let c = LearningRate::Constant { eta0: 0.1 };
+        assert_eq!(c.eta(1), c.eta(1000));
+    }
+
+    #[test]
+    fn shrink_clamped_nonnegative() {
+        let c = LearningRate::Constant { eta0: 100.0 };
+        assert_eq!(c.shrink(1, 1.0), 0.0);
+    }
+}

@@ -1,0 +1,191 @@
+//! Criterion-style micro-benchmark harness (criterion itself is not in the
+//! offline vendor set).
+//!
+//! Provides warmup, adaptive iteration-count calibration, multiple timed
+//! samples, and a report with mean / std / median / min as well as derived
+//! throughput. All `cargo bench` targets (`harness = false`) use this via
+//! [`Bencher`].
+
+use std::time::{Duration, Instant};
+
+use super::stats::Summary;
+
+/// Result of one benchmark: per-iteration timings in nanoseconds.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    /// Per-iteration wall time (ns), one entry per sample.
+    pub ns_per_iter: Vec<f64>,
+    /// Iterations executed per sample.
+    pub iters_per_sample: u64,
+}
+
+impl BenchResult {
+    pub fn summary(&self) -> Summary {
+        Summary::of(&self.ns_per_iter)
+    }
+
+    /// Mean nanoseconds per iteration.
+    pub fn mean_ns(&self) -> f64 {
+        self.summary().mean
+    }
+
+    /// Print a human-readable report line, optionally with an
+    /// elements-per-iteration throughput figure.
+    pub fn report(&self, elements_per_iter: Option<f64>) {
+        let s = self.summary();
+        let thr = elements_per_iter
+            .map(|e| format!("  {:>10}/s", si(e * 1e9 / s.mean)))
+            .unwrap_or_default();
+        println!(
+            "bench {:<44} {:>12}/iter  (median {:>10}, min {:>10}, ±{:>9}, {} samples × {} iters){}",
+            self.name,
+            fmt_ns(s.mean),
+            fmt_ns(s.median),
+            fmt_ns(s.min),
+            fmt_ns(s.std),
+            s.n,
+            self.iters_per_sample,
+            thr
+        );
+    }
+}
+
+/// Format nanoseconds human-readably.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.3}s", ns / 1e9)
+    }
+}
+
+fn si(x: f64) -> String {
+    if x >= 1e9 {
+        format!("{:.2}G", x / 1e9)
+    } else if x >= 1e6 {
+        format!("{:.2}M", x / 1e6)
+    } else if x >= 1e3 {
+        format!("{:.2}k", x / 1e3)
+    } else {
+        format!("{x:.1}")
+    }
+}
+
+/// Benchmark runner with criterion-like calibration.
+pub struct Bencher {
+    /// Target wall time per sample.
+    pub sample_time: Duration,
+    /// Number of timed samples.
+    pub samples: usize,
+    /// Warmup duration before calibration.
+    pub warmup: Duration,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher::new()
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        // Keep bench wall-time moderate; CI-style runs can override.
+        let quick = std::env::var("BENCH_QUICK").is_ok();
+        Bencher {
+            sample_time: Duration::from_millis(if quick { 20 } else { 100 }),
+            samples: if quick { 5 } else { 15 },
+            warmup: Duration::from_millis(if quick { 50 } else { 300 }),
+            results: Vec::new(),
+        }
+    }
+
+    /// Benchmark `f`, which performs ONE logical iteration per call and
+    /// returns a value that is passed to `std::hint::black_box`.
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        // Warmup + calibration: find iteration count that fills sample_time.
+        let warm_end = Instant::now() + self.warmup;
+        let mut warm_iters: u64 = 0;
+        let warm_start = Instant::now();
+        while Instant::now() < warm_end {
+            std::hint::black_box(f());
+            warm_iters += 1;
+        }
+        let per_iter = warm_start.elapsed().as_nanos() as f64 / warm_iters.max(1) as f64;
+        let iters = ((self.sample_time.as_nanos() as f64 / per_iter.max(1.0)).ceil() as u64).max(1);
+
+        let mut ns_per_iter = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                std::hint::black_box(f());
+            }
+            ns_per_iter.push(t0.elapsed().as_nanos() as f64 / iters as f64);
+        }
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            ns_per_iter,
+            iters_per_sample: iters,
+        });
+        self.results.last().unwrap()
+    }
+
+    /// Benchmark and immediately print the report line.
+    pub fn run<T, F: FnMut() -> T>(&mut self, name: &str, f: F) {
+        self.bench(name, f).report(None);
+    }
+
+    /// Benchmark with a throughput figure (`elements` logical items per iteration).
+    pub fn run_throughput<T, F: FnMut() -> T>(&mut self, name: &str, elements: f64, f: F) {
+        self.bench(name, f).report(Some(elements));
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Ratio of mean times between two completed benchmarks (a / b).
+    pub fn ratio(&self, a: &str, b: &str) -> Option<f64> {
+        let fa = self.results.iter().find(|r| r.name == a)?.mean_ns();
+        let fb = self.results.iter().find(|r| r.name == b)?.mean_ns();
+        Some(fa / fb)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_timings() {
+        std::env::set_var("BENCH_QUICK", "1");
+        let mut b = Bencher::new();
+        let r = b.bench("noop-sum", || (0..100u64).sum::<u64>()).clone();
+        assert_eq!(r.ns_per_iter.len(), b.samples);
+        let s = r.summary();
+        assert!(s.mean > 0.0 && s.mean < 1e7, "mean={}", s.mean);
+    }
+
+    #[test]
+    fn ratio_between_benches() {
+        std::env::set_var("BENCH_QUICK", "1");
+        let mut b = Bencher::new();
+        b.bench("fast", || (0..10u64).sum::<u64>());
+        b.bench("slow", || (0..10_000u64).sum::<u64>());
+        let r = b.ratio("slow", "fast").unwrap();
+        assert!(r > 1.0, "slow/fast ratio {r} should exceed 1");
+    }
+
+    #[test]
+    fn fmt_ns_ranges() {
+        assert!(fmt_ns(12.3).ends_with("ns"));
+        assert!(fmt_ns(12_300.0).ends_with("µs"));
+        assert!(fmt_ns(12_300_000.0).ends_with("ms"));
+        assert!(fmt_ns(2.3e9).ends_with('s'));
+    }
+}

@@ -1,0 +1,21 @@
+//! Small self-contained utility substrates.
+//!
+//! The build environment is fully offline with only the `xla` crate's
+//! dependency closure vendored, so the usual ecosystem crates (`rand`,
+//! `proptest`, `criterion`, `serde`, `clap`) are unavailable. Everything the
+//! system needs from them is implemented here from scratch:
+//!
+//! * [`rng`] — a deterministic xoshiro256** PRNG with the sampling
+//!   distributions the data generators need,
+//! * [`stats`] — streaming/batch summary statistics used by the experiment
+//!   aggregation and the bench harness,
+//! * [`prop`] — a miniature property-based testing harness (seeded random
+//!   case generation with failing-seed reporting),
+//! * [`bench`] — a criterion-style micro-benchmark runner used by all
+//!   `cargo bench` targets.
+
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

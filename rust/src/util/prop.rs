@@ -1,0 +1,90 @@
+//! Miniature property-based testing harness.
+//!
+//! `proptest` is not available in the offline vendor set, so this module
+//! provides the subset we need: run a property over `N` randomly generated
+//! cases drawn from an explicit seed, and on failure report the case index
+//! and derived seed so the exact case can be replayed in a debugger.
+//!
+//! Usage:
+//! ```no_run
+//! use budgetsvm::util::prop::forall;
+//! forall("addition commutes", 256, 0xC0FFEE, |rng| {
+//!     let (a, b) = (rng.uniform(), rng.uniform());
+//!     let ok = (a + b - (b + a)).abs() < 1e-15;
+//!     (ok, format!("a={a} b={b}"))
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Run `cases` random test cases of `property`. Each case gets a fresh
+/// child RNG forked deterministically from `seed`. The property returns
+/// `(holds, context)`; on the first violation the harness panics with the
+/// property name, case index, replay seed, and the property's own context
+/// string.
+pub fn forall<F>(name: &str, cases: usize, seed: u64, mut property: F)
+where
+    F: FnMut(&mut Rng) -> (bool, String),
+{
+    let mut root = Rng::new(seed);
+    for case in 0..cases {
+        let case_seed = root.next_u64();
+        let mut rng = Rng::new(case_seed);
+        let (ok, ctx) = property(&mut rng);
+        assert!(
+            ok,
+            "property '{name}' failed at case {case}/{cases} (replay seed: {case_seed:#x}): {ctx}"
+        );
+    }
+}
+
+/// Replay a single case of a property with the seed reported by [`forall`].
+pub fn replay<F>(case_seed: u64, mut property: F) -> (bool, String)
+where
+    F: FnMut(&mut Rng) -> (bool, String),
+{
+    let mut rng = Rng::new(case_seed);
+    property(&mut rng)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall("trivial", 64, 1, |rng| {
+            count += 1;
+            let x = rng.uniform();
+            ((0.0..1.0).contains(&x), format!("x={x}"))
+        });
+        assert_eq!(count, 64);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-false' failed")]
+    fn failing_property_panics_with_context() {
+        forall("always-false", 8, 2, |_| (false, "ctx".into()));
+    }
+
+    #[test]
+    fn replay_reproduces_case() {
+        let mut failing_seed = None;
+        let mut root = Rng::new(99);
+        for _ in 0..128 {
+            let s = root.next_u64();
+            let mut rng = Rng::new(s);
+            if rng.uniform() > 0.9 {
+                failing_seed = Some(s);
+                break;
+            }
+        }
+        let s = failing_seed.expect("should find a case with u>0.9");
+        let (ok, _) = replay(s, |rng| {
+            let u = rng.uniform();
+            (u > 0.9, format!("u={u}"))
+        });
+        assert!(ok);
+    }
+}

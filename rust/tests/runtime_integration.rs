@@ -1,0 +1,170 @@
+//! Integration: the PJRT-executed AOT artifacts must agree with the native
+//! Rust implementations — this is the proof that the three layers compose.
+//!
+//! Requires `make artifacts` to have produced `artifacts/` (the Makefile
+//! `test` target guarantees the ordering).
+
+use budgetsvm::budget::{LookupTable, MergeSolver, Strategy};
+use budgetsvm::data::synthetic::two_moons;
+use budgetsvm::kernel::Gaussian;
+use budgetsvm::model::BudgetModel;
+use budgetsvm::runtime::Runtime;
+use budgetsvm::solver::{train_bsgd, BsgdOptions};
+use budgetsvm::util::rng::Rng;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn runtime() -> Option<Runtime> {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::load(&dir).expect("artifacts exist but failed to load"))
+}
+
+#[test]
+fn decision_batch_matches_native_model() {
+    let Some(rt) = runtime() else { return };
+    let ds = two_moons(700, 0.15, 3);
+    let mut opts = BsgdOptions::with_c(40, 10.0, 2.0, ds.len());
+    opts.passes = 2;
+    let report = train_bsgd(&ds, &opts);
+    let model = &report.model;
+
+    let via_pjrt = rt.decision_batch(model, &ds).expect("pjrt decision");
+    assert_eq!(via_pjrt.len(), ds.len());
+    let native = model.decision_batch(&ds);
+    let mut max_err = 0.0f64;
+    for (a, b) in via_pjrt.iter().zip(&native) {
+        max_err = max_err.max((*a as f64 - b).abs());
+    }
+    assert!(max_err < 1e-3, "pjrt vs native decision max err {max_err}");
+}
+
+#[test]
+fn accuracy_matches_native_accuracy() {
+    let Some(rt) = runtime() else { return };
+    let ds = two_moons(500, 0.12, 5);
+    let mut opts = BsgdOptions::with_c(30, 10.0, 2.0, ds.len());
+    opts.passes = 3;
+    let report = train_bsgd(&ds, &opts);
+    let native = report.model.accuracy(&ds);
+    let pjrt = rt.accuracy(&report.model, &ds).unwrap();
+    // f32 rounding can flip rows that sit exactly on the boundary; allow a
+    // tiny disagreement budget.
+    assert!(
+        (native - pjrt).abs() < 0.01,
+        "native accuracy {native} vs pjrt {pjrt}"
+    );
+}
+
+#[test]
+fn merge_scan_agrees_with_native_engine() {
+    let Some(rt) = runtime() else { return };
+    let table = LookupTable::load(artifacts_dir().join("table400.tbl"))
+        .expect("table artifact loads in rust");
+    assert_eq!(table.grid(), 400);
+
+    let mut rng = Rng::new(17);
+    for trial in 0..20 {
+        // Random same-sign candidate scan.
+        let c = 2 + rng.below(100);
+        let alpha_min = 0.01 + 0.1 * rng.uniform();
+        let alpha: Vec<f64> = (0..c).map(|_| alpha_min + rng.uniform()).collect();
+        let kappa: Vec<f64> = (0..c).map(|_| rng.uniform()).collect();
+        let mask: Vec<f64> = (0..c).map(|_| f64::from(rng.uniform() > 0.2)).collect();
+        if !mask.iter().any(|&m| m > 0.5) {
+            continue;
+        }
+
+        let (scores, best) = rt.merge_scan(&alpha, &kappa, alpha_min, &mask, &table).unwrap();
+        // Native scoring with the same table.
+        let native: Vec<f64> = (0..c)
+            .map(|j| {
+                if mask[j] < 0.5 {
+                    return f64::INFINITY;
+                }
+                let s = alpha[j] + alpha_min;
+                let m = alpha[j] / s;
+                s * s * table.lookup_wd(m, kappa[j])
+            })
+            .collect();
+        let native_best = (0..c)
+            .min_by(|&a, &b| native[a].partial_cmp(&native[b]).unwrap())
+            .unwrap();
+
+        for j in 0..c {
+            if mask[j] > 0.5 {
+                assert!(
+                    (scores[j] as f64 - native[j]).abs() < 1e-4 * (1.0 + native[j]),
+                    "trial {trial} lane {j}: pjrt {} native {}",
+                    scores[j],
+                    native[j]
+                );
+            }
+        }
+        // Winner agreement (ties broken identically or scores nearly equal).
+        if best != native_best {
+            assert!(
+                (native[best] - native[native_best]).abs() < 1e-6,
+                "trial {trial}: winners differ with distinct scores"
+            );
+        }
+    }
+}
+
+#[test]
+fn python_built_table_matches_rust_built_table() {
+    let path = artifacts_dir().join("table400.tbl");
+    if !path.exists() {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    let from_python = LookupTable::load(&path).unwrap();
+    let rust_built = LookupTable::build(400);
+    // Sample agreement across the domain (both run GSS at eps=1e-10 with
+    // bracketing; h/s/wd should agree to ~1e-8).
+    let mut rng = Rng::new(4);
+    for _ in 0..500 {
+        let m = rng.uniform();
+        let k = rng.uniform();
+        let dh = (from_python.lookup_h(m, k) - rust_built.lookup_h(m, k)).abs();
+        let dwd = (from_python.lookup_wd(m, k) - rust_built.lookup_wd(m, k)).abs();
+        assert!(dwd < 1e-8, "wd mismatch at ({m},{k}): {dwd}");
+        // h may differ at bimodal-discontinuity cells; allow those.
+        if k > budgetsvm::budget::geometry::KAPPA_BIMODAL + 0.01 {
+            assert!(dh < 1e-6, "h mismatch at ({m},{k}): {dh}");
+        }
+    }
+}
+
+#[test]
+fn end_to_end_train_native_evaluate_pjrt() {
+    // The full composition: train in pure Rust (L3), evaluate the trained
+    // model through the Pallas-lowered artifact (L1/L2 via PJRT).
+    let Some(rt) = runtime() else { return };
+    let train = two_moons(800, 0.12, 21);
+    let test = two_moons(400, 0.12, 22);
+    let mut opts = BsgdOptions::with_c(50, 10.0, 2.0, train.len());
+    opts.passes = 4;
+    opts.strategy = Strategy::Merge(MergeSolver::LookupWd);
+    let report = train_bsgd(&train, &opts);
+    let acc = rt.accuracy(&report.model, &test).unwrap();
+    assert!(acc > 0.9, "end-to-end test accuracy through PJRT: {acc}");
+}
+
+#[test]
+fn oversized_model_is_rejected_cleanly() {
+    let Some(rt) = runtime() else { return };
+    let mut model = BudgetModel::new(3, Gaussian::new(1.0), 600);
+    let mut rng = Rng::new(1);
+    for _ in 0..600 {
+        model.push(&[rng.normal() as f32, 0.0, 0.0], 0.1);
+    }
+    let ds = budgetsvm::data::Dataset::new("t", vec![0.0; 3], vec![1.0], 3);
+    let err = rt.decision_batch(&model, &ds);
+    assert!(err.is_err(), "600 SVs exceed every artifact variant (max 512)");
+}

@@ -1,0 +1,277 @@
+//! System-level integration and property tests across module boundaries:
+//! solver × budget × data × metrics invariants, failure injection on the
+//! I/O paths, and cross-strategy behavioural checks that no single module
+//! test covers.
+
+use budgetsvm::budget::{LookupTable, MergeSolver, Strategy};
+use budgetsvm::config::ExperimentConfig;
+use budgetsvm::data::synthetic::{two_moons, Profile};
+use budgetsvm::data::{libsvm, Dataset};
+use budgetsvm::solver::{train_bsgd, BsgdOptions};
+use budgetsvm::util::prop::forall;
+use budgetsvm::util::rng::Rng;
+
+// ---------- solver × budget invariants (property style) ----------
+
+#[test]
+fn prop_budget_is_invariant_under_all_strategies() {
+    forall("num_sv <= B after training", 12, 0xA11CE, |rng| {
+        let n = 150 + rng.below(200);
+        let budget = 4 + rng.below(24);
+        let noise = 0.05 + 0.2 * rng.uniform();
+        let ds = two_moons(n, noise, rng.next_u64());
+        let strategies = [
+            Strategy::Merge(MergeSolver::GssStandard),
+            Strategy::Merge(MergeSolver::LookupWd),
+            Strategy::Removal,
+            Strategy::Projection,
+        ];
+        let strat = strategies[rng.below(4)];
+        let mut opts = BsgdOptions::with_c(budget, 10.0, 2.0, n);
+        opts.passes = 1 + rng.below(3);
+        opts.seed = rng.next_u64();
+        opts.strategy = strat;
+        opts.grid = 60;
+        let report = train_bsgd(&ds, &opts);
+        (
+            report.model.num_sv() <= budget,
+            format!("strategy={strat:?} B={budget} num_sv={}", report.model.num_sv()),
+        )
+    });
+}
+
+#[test]
+fn prop_model_decisions_are_finite() {
+    forall("decisions finite after training", 10, 0xF1717E, |rng| {
+        let n = 120 + rng.below(150);
+        let ds = two_moons(n, 0.15, rng.next_u64());
+        let mut opts = BsgdOptions::with_c(8 + rng.below(16), 10.0, 2.0, n);
+        opts.passes = 2;
+        opts.seed = rng.next_u64();
+        let report = train_bsgd(&ds, &opts);
+        let all_finite = (0..ds.len()).all(|i| report.model.decision(ds.row(i)).is_finite());
+        (all_finite, format!("num_sv={}", report.model.num_sv()))
+    });
+}
+
+#[test]
+fn prop_total_weight_degradation_accounting() {
+    // Total WD is finite, non-negative, and 0 iff no maintenance happened.
+    forall("wd accounting", 8, 0xDE6, |rng| {
+        let n = 200 + rng.below(100);
+        let ds = two_moons(n, 0.2, rng.next_u64());
+        let mut opts = BsgdOptions::with_c(6 + rng.below(10), 10.0, 2.0, n);
+        opts.passes = 2;
+        opts.seed = rng.next_u64();
+        let report = train_bsgd(&ds, &opts);
+        let ok = if report.maintenance_events == 0 {
+            report.total_weight_degradation == 0.0
+        } else {
+            report.total_weight_degradation.is_finite() && report.total_weight_degradation >= 0.0
+        };
+        (
+            ok,
+            format!(
+                "events={} wd={}",
+                report.maintenance_events, report.total_weight_degradation
+            ),
+        )
+    });
+}
+
+// ---------- cross-strategy behaviour ----------
+
+#[test]
+fn merging_preserves_accuracy_better_than_removal_under_tight_budget() {
+    // Aggregate over several seeds: merging should not lose to removal on
+    // average (the Wang et al. finding that motivates the paper).
+    let mut merge_total = 0.0;
+    let mut removal_total = 0.0;
+    for seed in 0..5u64 {
+        let ds = two_moons(700, 0.12, 100 + seed);
+        let mut base = BsgdOptions::with_c(10, 10.0, 2.0, ds.len());
+        base.passes = 3;
+        base.seed = seed;
+        let mut merge_opts = base.clone();
+        merge_opts.strategy = Strategy::Merge(MergeSolver::LookupWd);
+        let mut removal_opts = base.clone();
+        removal_opts.strategy = Strategy::Removal;
+        merge_total += train_bsgd(&ds, &merge_opts).model.accuracy(&ds);
+        removal_total += train_bsgd(&ds, &removal_opts).model.accuracy(&ds);
+    }
+    assert!(
+        merge_total >= removal_total - 0.05,
+        "merging {merge_total} should not lose clearly to removal {removal_total}"
+    );
+}
+
+#[test]
+fn four_merge_solvers_produce_similar_weight_degradation_totals() {
+    let ds = two_moons(600, 0.15, 9);
+    let mut totals = Vec::new();
+    for solver in MergeSolver::ALL {
+        let mut opts = BsgdOptions::with_c(12, 10.0, 2.0, ds.len());
+        opts.passes = 2;
+        opts.seed = 3;
+        opts.strategy = Strategy::Merge(solver);
+        let report = train_bsgd(&ds, &opts);
+        totals.push((solver.name(), report.total_weight_degradation));
+    }
+    let max = totals.iter().map(|&(_, t)| t).fold(0.0, f64::max);
+    let min = totals.iter().map(|&(_, t)| t).fold(f64::INFINITY, f64::min);
+    assert!(
+        max < min * 1.5 + 1e-9,
+        "total WD should be comparable across solvers: {totals:?}"
+    );
+}
+
+// ---------- data pipeline round trips + failure injection ----------
+
+#[test]
+fn libsvm_round_trip_preserves_training_outcome() {
+    let ds = two_moons(300, 0.1, 17);
+    let dir = std::env::temp_dir().join("budgetsvm-sysint");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("moons.libsvm");
+    libsvm::write_file(&ds, &path).unwrap();
+    let ds2 = libsvm::read_file(&path, 2).unwrap();
+    assert_eq!(ds.len(), ds2.len());
+
+    let mut opts = BsgdOptions::with_c(20, 10.0, 2.0, ds.len());
+    opts.passes = 2;
+    let r1 = train_bsgd(&ds, &opts);
+    let r2 = train_bsgd(&ds2, &opts);
+    // Identical data + seed ⇒ identical trajectory.
+    assert_eq!(r1.sv_inserts, r2.sv_inserts);
+    assert_eq!(r1.maintenance_events, r2.maintenance_events);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn corrupted_inputs_error_cleanly_not_panic() {
+    let dir = std::env::temp_dir().join("budgetsvm-sysint-corrupt");
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // Corrupt LIBSVM file.
+    let p1 = dir.join("bad.libsvm");
+    std::fs::write(&p1, "not a libsvm line at all\n+1 3:x\n").unwrap();
+    assert!(libsvm::read_file(&p1, 0).is_err());
+
+    // Truncated lookup-table file.
+    let p2 = dir.join("trunc.tbl");
+    let t = LookupTable::build(10);
+    t.save(&p2).unwrap();
+    let full = std::fs::read(&p2).unwrap();
+    std::fs::write(&p2, &full[..full.len() / 2]).unwrap();
+    assert!(LookupTable::load(&p2).is_err());
+
+    // Config with invalid dataset.
+    assert!(ExperimentConfig::from_json_text(r#"{"datasets": ["made-up"]}"#).is_err());
+    // Config with malformed JSON.
+    assert!(ExperimentConfig::from_json_text("{scale: 0.1}").is_err());
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn load_or_build_recovers_from_corrupt_cache() {
+    let dir = std::env::temp_dir().join("budgetsvm-sysint-cache");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("cache.tbl");
+    std::fs::write(&path, b"garbage").unwrap();
+    let t = LookupTable::load_or_build(20, &path);
+    assert_eq!(t.grid(), 20);
+    // The rebuilt table must have replaced the corrupt cache.
+    let t2 = LookupTable::load(&path).unwrap();
+    assert_eq!(t2.grid(), 20);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------- profiles behave like their Table-1 roles ----------
+
+#[test]
+fn profile_difficulty_ordering_matches_paper() {
+    // SUSY is the hard profile (~80% ceiling); SKIN is the easy one
+    // (>99%). Train a BSGD model on each and compare.
+    let cfg = ExperimentConfig { scale: 0.02, ..Default::default() };
+    let acc_of = |name: &str| {
+        let p = Profile::by_name(name).unwrap();
+        let prep = budgetsvm::experiments::prepare(p, &cfg);
+        let mut opts = budgetsvm::experiments::options_for(
+            &prep,
+            &cfg,
+            Strategy::Merge(MergeSolver::LookupWd),
+            100,
+            0,
+        );
+        opts.passes = 3;
+        train_bsgd(&prep.train, &opts).model.accuracy(&prep.test)
+    };
+    let susy = acc_of("susy");
+    let skin = acc_of("skin");
+    assert!(susy < 0.93, "susy should be hard, got {susy}");
+    assert!(skin > 0.93, "skin should be easy, got {skin}");
+}
+
+#[test]
+fn merging_frequency_nearly_independent_of_budget() {
+    // Paper §4 finding 3: merging frequency is nearly independent of B as
+    // long as B ≪ #SVs of the unbudgeted model.
+    let cfg = ExperimentConfig { scale: 0.05, ..Default::default() };
+    let p = Profile::by_name("susy").unwrap();
+    let prep = budgetsvm::experiments::prepare(p, &cfg);
+    let mut freqs = Vec::new();
+    for budget in [50usize, 100, 200] {
+        let opts = budgetsvm::experiments::options_for(
+            &prep,
+            &cfg,
+            Strategy::Merge(MergeSolver::LookupWd),
+            budget,
+            0,
+        );
+        let report = train_bsgd(&prep.train, &opts);
+        freqs.push(report.merging_frequency());
+    }
+    let max = freqs.iter().cloned().fold(0.0, f64::max);
+    let min = freqs.iter().cloned().fold(1.0, f64::min);
+    assert!(min > 0.0, "budget must bind: {freqs:?}");
+    assert!(max - min < 0.12, "frequency spread too wide: {freqs:?}");
+}
+
+// ---------- dataset container edge cases under the solver ----------
+
+#[test]
+fn training_on_dataset_with_duplicate_rows_is_stable() {
+    // Duplicates produce κ = 1 candidates (exact merges, WD = 0).
+    let mut ds = Dataset::empty("dups", 2);
+    let mut rng = Rng::new(5);
+    for _ in 0..100 {
+        let x = [rng.normal() as f32, rng.normal() as f32];
+        let y = if x[0] > 0.0 { 1.0 } else { -1.0 };
+        for _ in 0..4 {
+            ds.push_row(&x, y); // 4 exact copies of each point
+        }
+    }
+    let mut opts = BsgdOptions::with_c(10, 10.0, 1.0, ds.len());
+    opts.passes = 3;
+    let report = train_bsgd(&ds, &opts);
+    assert!(report.model.num_sv() <= 10);
+    assert!(report.model.accuracy(&ds) > 0.9);
+}
+
+#[test]
+fn training_with_constant_feature_column_is_stable() {
+    let mut ds = Dataset::empty("const-col", 3);
+    let mut rng = Rng::new(6);
+    for _ in 0..300 {
+        let a = rng.normal() as f32;
+        let y = if a > 0.0 { 1.0 } else { -1.0 };
+        ds.push_row(&[a, 7.5, rng.normal() as f32 * 0.1], y);
+    }
+    let scaling = ds.fit_scaling();
+    ds.apply_scaling(&scaling);
+    let mut opts = BsgdOptions::with_c(12, 10.0, 1.0, ds.len());
+    opts.passes = 3;
+    let report = train_bsgd(&ds, &opts);
+    assert!(report.model.accuracy(&ds) > 0.9);
+}
