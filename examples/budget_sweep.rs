@@ -1,6 +1,7 @@
 //! Budget-size sweep: how test accuracy, merging frequency and training
 //! time depend on the budget B, for merging (Lookup-WD) vs the removal and
-//! projection baselines of Wang et al. (2012).
+//! projection baselines of Wang et al. (2012) — all through the unified
+//! estimator surface.
 //!
 //! Reproduces the paper's third experimental question ("How do results
 //! depend on the budget size?") on the ADULT-like profile.
@@ -9,11 +10,10 @@
 //! cargo run --release --example budget_sweep [scale]
 //! ```
 
-use budgetsvm::budget::{MergeSolver, Strategy};
 use budgetsvm::config::ExperimentConfig;
 use budgetsvm::data::synthetic::Profile;
-use budgetsvm::experiments::{options_for, prepare};
-use budgetsvm::solver::train_bsgd;
+use budgetsvm::experiments::prepare;
+use budgetsvm::prelude::*;
 
 fn main() {
     let scale: f64 = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(0.1);
@@ -45,17 +45,24 @@ fn main() {
             if strategy == Strategy::Projection && budget > 100 {
                 continue;
             }
-            let mut opts = options_for(&prep, &cfg, strategy, budget, 0);
-            opts.passes = 3;
-            let report = train_bsgd(&prep.train, &opts);
+            let config = SvmConfig::new()
+                .kernel(KernelSpec::gaussian(profile.gamma()))
+                .budget(budget)
+                .lambda(prep.lambda)
+                .strategy(strategy)
+                .grid(cfg.grid);
+            let run = RunConfig::new().passes(3).seed(cfg.seed ^ 0x9E37);
+            let mut est = BsgdEstimator::new(config, run).expect("valid sweep config");
+            est.fit(&prep.train).expect("sweep training");
+            let summary = est.summary().unwrap();
             println!(
                 "{:<10} {:>7} {:>11.2}% {:>11.1}% {:>11.1}% {:>10.3}",
                 strategy.name(),
                 budget,
-                100.0 * report.model.accuracy(&prep.test),
-                100.0 * report.merging_frequency(),
-                100.0 * report.maintenance_fraction(),
-                report.wall_seconds,
+                100.0 * est.model().unwrap().accuracy(&prep.test),
+                100.0 * summary.merging_frequency(),
+                100.0 * summary.maintenance_fraction(),
+                summary.wall_seconds,
             );
         }
         println!();

@@ -10,7 +10,7 @@ use std::time::Instant;
 
 use budgetsvm::budget::geometry::{alpha_z, s_value, wd_from_s, KAPPA_BIMODAL};
 use budgetsvm::budget::gss::maximize;
-use budgetsvm::budget::{LookupTable, MergeEngine, MergeSolver};
+use budgetsvm::budget::{shared_lookup_table, MergeEngine, MergeSolver};
 use budgetsvm::kernel::Gaussian;
 use budgetsvm::metrics::SectionProfiler;
 use budgetsvm::model::BudgetModel;
@@ -33,8 +33,8 @@ fn main() {
 
     println!("== The lookup table replaces that search ==\n");
     let t0 = Instant::now();
-    let table = LookupTable::build(400);
-    println!("built 400×400 table in {:?} (done once per process)", t0.elapsed());
+    let table = shared_lookup_table(400);
+    println!("built 400×400 table in {:?} (cached once per process)", t0.elapsed());
     println!("lookup h({m:.3}, {kappa}) = {:.6} (vs GSS {h:.6})", table.lookup_h(m, kappa));
     println!(
         "lookup wd({m:.3}, {kappa}) = {:.6e} (vs exact {:.6e})\n",

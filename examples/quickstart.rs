@@ -1,37 +1,69 @@
-//! Quickstart: train a budgeted kernel SVM in five lines.
+//! Quickstart: train budgeted kernel SVMs through the unified estimator
+//! surface — a Gaussian model with the paper's Lookup-WD merging, and a
+//! non-Gaussian (polynomial) model with removal maintenance (the merge
+//! geometry is Gaussian-specific; `SvmConfig::validate` enforces the
+//! compatibility matrix documented in `budgetsvm::budget`).
 //!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
 
-use budgetsvm::budget::{MergeSolver, Strategy};
 use budgetsvm::data::synthetic::two_moons;
-use budgetsvm::solver::{train_bsgd, BsgdOptions};
+use budgetsvm::prelude::*;
 
 fn main() {
     // A nonlinearly separable toy problem: two interleaved half-moons.
     let train = two_moons(4000, 0.12, 42);
     let test = two_moons(1000, 0.12, 43);
 
-    // Budget B = 50 support vectors; C = 10, Gaussian kernel gamma = 2.
-    let mut opts = BsgdOptions::with_c(50, 10.0, 2.0, train.len());
-    opts.passes = 5;
-    opts.strategy = Strategy::Merge(MergeSolver::LookupWd); // the paper's method
+    // --- Gaussian kernel + Lookup-WD merging (the paper's method). ---
+    let config = SvmConfig::new()
+        .kernel(KernelSpec::gaussian(2.0))
+        .budget(50)
+        .c(10.0, train.len())
+        .strategy(Strategy::Merge(MergeSolver::LookupWd));
+    let mut gauss = BsgdEstimator::new(config, RunConfig::new().passes(5)).unwrap();
+    gauss.fit(&train).unwrap();
 
-    let report = train_bsgd(&train, &opts);
-
-    println!("two-moons, n={} -> budget {} SVs", train.len(), report.model.num_sv());
-    println!("steps               : {}", report.steps);
-    println!("SV insertions       : {}", report.sv_inserts);
-    println!("merge events        : {}", report.maintenance_events);
-    println!("merging frequency   : {:.1}%", 100.0 * report.merging_frequency());
-    println!("train accuracy      : {:.2}%", 100.0 * report.model.accuracy(&train));
-    println!("test accuracy       : {:.2}%", 100.0 * report.model.accuracy(&test));
-    println!("wall time           : {:.3}s", report.wall_seconds);
+    let summary = gauss.summary().unwrap();
+    let model = gauss.model().unwrap();
+    println!("== gaussian kernel, Lookup-WD merging ==");
+    println!("two-moons, n={} -> budget {} SVs", train.len(), model.num_sv());
+    println!("steps               : {}", summary.steps);
+    println!("SV insertions       : {}", summary.sv_inserts);
+    println!("merge events        : {}", summary.maintenance_events);
+    println!("merging frequency   : {:.1}%", 100.0 * summary.merging_frequency());
+    println!("train accuracy      : {:.2}%", 100.0 * model.accuracy(&train));
+    println!("test accuracy       : {:.2}%", 100.0 * model.accuracy(&test));
+    println!("wall time           : {:.3}s", summary.wall_seconds);
     println!(
         "time in maintenance : {:.1}%",
-        100.0 * report.maintenance_fraction()
+        100.0 * summary.maintenance_fraction()
     );
-    assert!(report.model.accuracy(&test) > 0.9, "quickstart sanity check");
+    assert!(model.accuracy(&test) > 0.9, "gaussian quickstart sanity check");
+
+    // --- Polynomial kernel + removal maintenance (kernel-generic path). ---
+    let config = SvmConfig::new()
+        .kernel(KernelSpec::polynomial(3, 1.0))
+        .budget(50)
+        .c(10.0, train.len())
+        .strategy(Strategy::Removal);
+    let mut poly = BsgdEstimator::new(config, RunConfig::new().passes(5)).unwrap();
+    poly.fit(&train).unwrap();
+    let model = poly.model().unwrap();
+    println!("\n== polynomial kernel (degree 3), removal maintenance ==");
+    println!("kernel              : {}", model.kernel_spec().describe());
+    println!("support vectors     : {}", model.num_sv());
+    println!("train accuracy      : {:.2}%", 100.0 * model.accuracy(&train));
+    println!("test accuracy       : {:.2}%", 100.0 * model.accuracy(&test));
+    assert!(model.accuracy(&test) > 0.75, "polynomial quickstart sanity check");
+
+    // Merge maintenance on a non-Gaussian kernel is a configuration error,
+    // caught at construction with a descriptive message:
+    let invalid = SvmConfig::new().kernel(KernelSpec::linear());
+    match BsgdEstimator::new(invalid, RunConfig::new()) {
+        Err(err) => println!("\nmerge + linear kernel rejected as expected:\n  {err}"),
+        Ok(_) => panic!("merge + linear must be rejected"),
+    }
     println!("OK");
 }

@@ -1,17 +1,39 @@
 //! End-to-end training bench — the Table 3 measurement: total training
 //! time per merge solver on the six dataset profiles (downscaled), with
 //! the merging-time breakdown and the relative improvement of the lookup
-//! methods over GSS-standard.
+//! methods over GSS-standard. Runs through the unified estimator surface.
 //!
 //! Full training runs take seconds; this harness times whole runs rather
 //! than micro-samples. `BENCH_SCALE` (default 0.03) controls the dataset
 //! size multiplier.
 
-use budgetsvm::budget::{MergeSolver, Strategy};
 use budgetsvm::config::ExperimentConfig;
-use budgetsvm::experiments::{options_for, prepare, METHODS};
+use budgetsvm::data::synthetic::Profile;
+use budgetsvm::experiments::{prepare, Prepared, METHODS};
 use budgetsvm::metrics::Section;
-use budgetsvm::solver::train_bsgd;
+use budgetsvm::prelude::*;
+
+fn fit_once(
+    prep: &Prepared,
+    cfg: &ExperimentConfig,
+    method: MergeSolver,
+    budget: usize,
+    run_idx: u64,
+) -> FitSummary {
+    let profile: &Profile = prep.profile;
+    let config = SvmConfig::new()
+        .kernel(KernelSpec::gaussian(profile.gamma()))
+        .budget(budget)
+        .lambda(prep.lambda)
+        .strategy(Strategy::Merge(method))
+        .grid(cfg.grid);
+    let run = RunConfig::new()
+        .passes(cfg.passes_for(profile))
+        .seed(cfg.seed ^ (0x9E37 + run_idx * 0x1_0001));
+    let mut est = BsgdEstimator::new(config, run).expect("valid bench config");
+    est.fit(&prep.train).expect("bench training");
+    est.summary().expect("fitted").clone()
+}
 
 fn main() {
     let scale: f64 = std::env::var("BENCH_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(0.03);
@@ -27,31 +49,29 @@ fn main() {
         let budget = profile.budgets[0];
         let mut wall_gss = 0.0f64;
         for &method in &METHODS {
-            let opts = options_for(&prep, &cfg, Strategy::Merge(method), budget, 0);
-            let report = train_bsgd(&prep.train, &opts);
+            let summary = fit_once(&prep, &cfg, method, budget, 0);
             if method == MergeSolver::GssStandard {
-                wall_gss = report.wall_seconds;
+                wall_gss = summary.wall_seconds;
             }
             println!(
                 "{:<10} {:>7} {:<14} {:>10.3} {:>10.3} {:>10.3} {:>10.3} {:>8.1}%",
                 profile.name,
                 budget,
                 method.name(),
-                report.wall_seconds,
-                report.profiler.seconds(Section::SgdStep),
-                report.profiler.seconds(Section::MaintA),
-                report.profiler.seconds(Section::MaintB),
-                100.0 * report.merging_frequency(),
+                summary.wall_seconds,
+                summary.profiler.seconds(Section::SgdStep),
+                summary.profiler.seconds(Section::MaintA),
+                summary.profiler.seconds(Section::MaintB),
+                100.0 * summary.merging_frequency(),
             );
         }
         // Relative improvement (Table 3's left columns).
         for method in [MergeSolver::LookupH, MergeSolver::LookupWd] {
-            let opts = options_for(&prep, &cfg, Strategy::Merge(method), budget, 1);
-            let report = train_bsgd(&prep.train, &opts);
+            let summary = fit_once(&prep, &cfg, method, budget, 1);
             println!(
                 "    improvement {} vs GSS-standard: {:+.2}%",
                 method.name(),
-                100.0 * (wall_gss - report.wall_seconds) / wall_gss.max(1e-12)
+                100.0 * (wall_gss - summary.wall_seconds) / wall_gss.max(1e-12)
             );
         }
         println!();

@@ -10,13 +10,27 @@
 //! Storage is ~`3·G²·8` bytes (3.8 MB at the paper's G = 400). Tables can
 //! be persisted in a simple binary format and exported as CSV for Figure 2.
 
+use std::collections::HashMap;
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
+use std::sync::{Arc, Mutex, OnceLock};
 
 use anyhow::{bail, Context, Result};
 
 use super::geometry::{s_value, wd_from_s};
 use super::gss::maximize_robust;
+
+/// Process-wide cache of built tables keyed by grid size. Building the
+/// paper's 400×400 table costs ~100 ms; the one-vs-rest reducer spins up K
+/// merge engines and the experiment suite creates one engine per
+/// (method, budget, run) cell, so every consumer shares one `Arc` per
+/// resolution instead of rebuilding the identical table each time.
+pub fn shared(grid: usize) -> Arc<LookupTable> {
+    static CACHE: OnceLock<Mutex<HashMap<usize, Arc<LookupTable>>>> = OnceLock::new();
+    let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+    let mut guard = cache.lock().unwrap();
+    guard.entry(grid).or_insert_with(|| Arc::new(LookupTable::build(grid))).clone()
+}
 
 /// Magic bytes of the binary table file format.
 const MAGIC: &[u8; 8] = b"BSVMTBL1";

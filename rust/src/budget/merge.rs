@@ -14,13 +14,12 @@
 //! `m` computation, selection, final merge) and Section A work (computing
 //! `h` — or looking up `WD` — per candidate).
 
-use std::collections::HashMap;
-use std::sync::{Arc, Mutex, OnceLock};
+use std::sync::Arc;
 use std::time::Instant;
 
 use super::geometry::{alpha_z, s_value, wd_from_s};
 use super::gss::maximize;
-use super::lookup::LookupTable;
+use super::lookup::{self, LookupTable};
 use crate::metrics::{Section, SectionProfiler};
 use crate::model::BudgetModel;
 
@@ -67,15 +66,6 @@ impl MergeSolver {
     }
 }
 
-/// Process-wide cache of built lookup tables keyed by grid size (building a
-/// 400×400 table costs ~100 ms; experiments create many engines).
-fn table_cache(grid: usize) -> Arc<LookupTable> {
-    static CACHE: OnceLock<Mutex<HashMap<usize, Arc<LookupTable>>>> = OnceLock::new();
-    let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
-    let mut guard = cache.lock().unwrap();
-    guard.entry(grid).or_insert_with(|| Arc::new(LookupTable::build(grid))).clone()
-}
-
 /// Outcome of one budget-maintenance event.
 #[derive(Debug, Clone, Copy)]
 pub struct MergeOutcome {
@@ -106,9 +96,11 @@ pub struct MergeEngine {
 
 impl MergeEngine {
     /// Create an engine. `grid` is the lookup-table resolution (the paper
-    /// uses 400); ignored for the GSS solvers.
+    /// uses 400); ignored for the GSS solvers. Table-backed solvers share
+    /// one process-wide `Arc<LookupTable>` per resolution
+    /// ([`lookup::shared`]) rather than rebuilding it per engine.
     pub fn new(solver: MergeSolver, grid: usize) -> Self {
-        let table = solver.needs_table().then(|| table_cache(grid));
+        let table = solver.needs_table().then(|| lookup::shared(grid));
         MergeEngine {
             solver,
             table,

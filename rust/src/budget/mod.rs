@@ -7,6 +7,29 @@
 //! [`geometry`] the shared closed-form merge math; [`removal`] and
 //! [`projection`] the alternative strategies of Wang et al. (2012) used as
 //! ablation baselines; [`linalg`] a minimal Cholesky solver for projection.
+//!
+//! # Kernel / strategy compatibility
+//!
+//! Merge-based maintenance depends on the Gaussian kernel's closed-form
+//! geometry (`k(x_a, z) = κ^{(1−h)²}` for `z` on the connecting line —
+//! paper Section 3); removal and projection only need Gram-matrix
+//! evaluations and work with every kernel:
+//!
+//! | Strategy                    | Gaussian | Linear | Polynomial |
+//! |-----------------------------|----------|--------|------------|
+//! | `Merge(*)` (all 4 solvers)  | ✓        | ✗      | ✗          |
+//! | `Removal`                   | ✓        | ✓      | ✓          |
+//! | `Projection`                | ✓        | ✓      | ✓          |
+//!
+//! [`Strategy::valid_for`] encodes this table; the estimator configuration
+//! layer (`SvmConfig::validate`) rejects invalid combinations with an
+//! explanatory error instead of panicking mid-run, and non-Gaussian
+//! budgeted models default to removal maintenance.
+//!
+//! Lookup tables are shared process-wide per grid resolution via
+//! [`lookup::shared`], so K one-vs-rest machines (and repeated experiment
+//! runs) reuse one `Arc<LookupTable>` instead of paying the ~100 ms
+//! 400×400 build K times.
 
 pub mod geometry;
 pub mod gss;
@@ -16,9 +39,10 @@ pub mod merge;
 pub mod projection;
 pub mod removal;
 
-pub use lookup::LookupTable;
+pub use lookup::{shared as shared_lookup_table, LookupTable};
 pub use merge::{audit_event, AuditRecord, MergeEngine, MergeOutcome, MergeSolver};
 
+use crate::kernel::KernelSpec;
 use crate::metrics::SectionProfiler;
 use crate::model::BudgetModel;
 
@@ -47,6 +71,16 @@ impl Strategy {
             "removal" | "remove" => Some(Strategy::Removal),
             "projection" | "project" => Some(Strategy::Projection),
             other => MergeSolver::parse(other).map(Strategy::Merge),
+        }
+    }
+
+    /// Whether this strategy is usable with the given kernel (see the
+    /// module-level compatibility matrix): merging requires the Gaussian
+    /// closed-form geometry, removal/projection work with every kernel.
+    pub fn valid_for(&self, kernel: &KernelSpec) -> bool {
+        match self {
+            Strategy::Merge(_) => kernel.supports_merging(),
+            Strategy::Removal | Strategy::Projection => true,
         }
     }
 }
@@ -105,6 +139,34 @@ mod tests {
         assert_eq!(Strategy::parse("removal"), Some(Strategy::Removal));
         assert_eq!(Strategy::parse("projection"), Some(Strategy::Projection));
         assert_eq!(Strategy::parse("bogus"), None);
+    }
+
+    #[test]
+    fn compatibility_matrix() {
+        let gauss = KernelSpec::gaussian(1.0);
+        let linear = KernelSpec::linear();
+        let poly = KernelSpec::polynomial(3, 1.0);
+        for solver in MergeSolver::ALL {
+            assert!(Strategy::Merge(solver).valid_for(&gauss));
+            assert!(!Strategy::Merge(solver).valid_for(&linear));
+            assert!(!Strategy::Merge(solver).valid_for(&poly));
+        }
+        for strat in [Strategy::Removal, Strategy::Projection] {
+            for k in [gauss, linear, poly] {
+                assert!(strat.valid_for(&k));
+            }
+        }
+    }
+
+    #[test]
+    fn shared_lookup_table_is_cached_per_grid() {
+        let a = shared_lookup_table(37);
+        let b = shared_lookup_table(37);
+        assert!(std::sync::Arc::ptr_eq(&a, &b), "same grid must share one table");
+        assert_eq!(a.grid(), 37);
+        let c = shared_lookup_table(23);
+        assert_eq!(c.grid(), 23);
+        assert!(!std::sync::Arc::ptr_eq(&a, &c));
     }
 
     #[test]

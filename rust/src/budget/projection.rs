@@ -13,6 +13,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use super::linalg::cholesky_solve_in_place;
+use crate::kernel::Kernel;
 use crate::metrics::{Section, SectionProfiler};
 use crate::model::BudgetModel;
 
@@ -21,23 +22,28 @@ const RIDGE: f64 = 1e-8;
 
 /// Remove the min-|α| SV and redistribute its weight onto the remaining
 /// SVs. Returns the (approximate) weight degradation
-/// `‖Δ‖² = α_r²·(1 − κᵀ K⁻¹ κ)` (the residual of projecting `φ(x_r)`).
-pub fn maintain_projection(model: &mut BudgetModel, prof: &mut SectionProfiler) -> Result<f64> {
+/// `‖Δ‖² = α_r²·(k(x_r, x_r) − κᵀ K⁻¹ κ)` (the residual of projecting
+/// `φ(x_r)` onto the survivor span). Kernel-generic: only Gram-matrix
+/// evaluations are needed, no Gaussian geometry.
+pub fn maintain_projection<K: Kernel + Copy>(
+    model: &mut BudgetModel<K>,
+    prof: &mut SectionProfiler,
+) -> Result<f64> {
     let t0 = Instant::now();
     let r_idx = model.argmin_abs_alpha().expect("non-empty model");
     let alpha_r = model.alpha(r_idx);
+    let self_k = model.kernel().self_eval(model.sv_norm2(r_idx));
     let n = model.num_sv() - 1;
     if n == 0 {
         model.swap_remove(r_idx);
         prof.add(Section::MaintB, t0.elapsed());
-        return Ok(alpha_r * alpha_r);
+        return Ok(alpha_r * alpha_r * self_k);
     }
 
     // Survivor indices.
     let survivors: Vec<usize> = (0..model.num_sv()).filter(|&j| j != r_idx).collect();
 
     // Gram matrix K (n×n) and rhs κ (kernel row vs removed SV).
-    use crate::kernel::Kernel;
     let kernel = model.kernel();
     let mut gram = vec![0.0f64; n * n];
     let mut rhs = vec![0.0f64; n];
@@ -57,9 +63,9 @@ pub fn maintain_projection(model: &mut BudgetModel, prof: &mut SectionProfiler) 
     // Solve K β = κ; Δα_i = α_r β_i.
     cholesky_solve_in_place(&mut gram, n, &mut rhs)?;
 
-    // Residual projection error: α_r²(1 − κᵀβ).
+    // Residual projection error: α_r²(k(x_r, x_r) − κᵀβ).
     let kappa_beta: f64 = kappa.iter().zip(&rhs).map(|(a, b)| a * b).sum();
-    let wd = (alpha_r * alpha_r * (1.0 - kappa_beta)).max(0.0);
+    let wd = (alpha_r * alpha_r * (self_k - kappa_beta)).max(0.0);
 
     for (i, &si) in survivors.iter().enumerate() {
         model.add_alpha(si, alpha_r * rhs[i]);

@@ -1,28 +1,35 @@
 //! Removal budget maintenance — the simplest baseline from Wang et al.
 //! (JMLR 2012): drop the support vector with the smallest |α|. Known to be
 //! inferior to merging (the paper's Section 3 notes that a degenerate merge
-//! approaches removal); kept as an ablation baseline.
+//! approaches removal); kept as an ablation baseline — and, because it
+//! needs no kernel geometry at all, it is the default maintenance strategy
+//! for non-Gaussian budgeted models.
 
 use std::time::Instant;
 
+use crate::kernel::Kernel;
 use crate::metrics::{Section, SectionProfiler};
 use crate::model::BudgetModel;
 
 /// Remove the SV with minimal |α|. Returns the incurred weight degradation
-/// `‖Δ‖² = α_min²` (Gaussian kernel: `k(x,x) = 1`).
-pub fn maintain_removal(model: &mut BudgetModel, prof: &mut SectionProfiler) -> f64 {
+/// `‖Δ‖² = α_min²·k(x, x)` (for the Gaussian kernel `k(x, x) = 1`).
+pub fn maintain_removal<K: Kernel + Copy>(
+    model: &mut BudgetModel<K>,
+    prof: &mut SectionProfiler,
+) -> f64 {
     let t0 = Instant::now();
     let idx = model.argmin_abs_alpha().expect("non-empty model");
     let alpha = model.alpha(idx);
+    let self_k = model.kernel().self_eval(model.sv_norm2(idx));
     model.swap_remove(idx);
     prof.add(Section::MaintB, t0.elapsed());
-    alpha * alpha
+    alpha * alpha * self_k
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::kernel::Gaussian;
+    use crate::kernel::{Gaussian, Linear};
 
     #[test]
     fn removes_smallest_coefficient() {
@@ -37,5 +44,17 @@ mod tests {
         for j in 0..m.num_sv() {
             assert!(m.alpha(j).abs() > 0.5);
         }
+    }
+
+    #[test]
+    fn linear_kernel_weight_degradation_uses_self_similarity() {
+        let mut m = BudgetModel::new(2, Linear, 2);
+        m.push(&[3.0, 4.0], 0.1); // min-|α|, ‖x‖² = 25
+        m.push(&[0.0, 1.0], 1.0);
+        let mut p = SectionProfiler::new();
+        let wd = maintain_removal(&mut m, &mut p);
+        assert_eq!(m.num_sv(), 1);
+        // ‖Δ‖² = α²·⟨x,x⟩ = 0.01 · 25
+        assert!((wd - 0.25).abs() < 1e-9);
     }
 }

@@ -5,6 +5,11 @@
 //! parser) and every field has a CLI override; defaults are chosen so the
 //! full suite completes on a laptop-class machine in minutes. A
 //! paper-faithful run is `--scale 1.0 --passes-factor 4 --runs 5`.
+//!
+//! This is the *experiment-suite* configuration; per-model hyperparameters
+//! live in [`crate::solver::SvmConfig`] (kernel, budget, λ, strategy) and
+//! per-run knobs in [`crate::solver::RunConfig`] — `grid` and `seed` here
+//! feed those when the suite builds its training jobs.
 
 use std::path::Path;
 
@@ -104,6 +109,7 @@ impl ExperimentConfig {
         anyhow::ensure!(self.passes_factor > 0.0, "passes_factor must be positive");
         anyhow::ensure!(self.runs >= 1, "need at least one run");
         anyhow::ensure!(self.grid >= 2, "grid must be >= 2");
+        anyhow::ensure!(self.smo_max_rows >= 2, "smo_max_rows must be at least 2");
         for name in &self.datasets {
             anyhow::ensure!(
                 crate::data::synthetic::Profile::by_name(name).is_some(),

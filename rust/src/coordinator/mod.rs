@@ -16,7 +16,9 @@ use crate::config::ExperimentConfig;
 use crate::data::synthetic::Profile;
 use crate::data::{libsvm, Dataset};
 use crate::experiments::{self, prepare};
-use crate::solver::{train_bsgd, BsgdOptions, TrainReport};
+use crate::kernel::KernelSpec;
+use crate::model::AnyModel;
+use crate::solver::{BsgdEstimator, Estimator, FitSummary, RunConfig, SvmConfig};
 use crate::util::json::Json;
 
 /// Everything `repro all` produces.
@@ -85,67 +87,86 @@ fn write_summary(s: &CampaignSummary, cfg: &ExperimentConfig) -> Result<()> {
 }
 
 /// A single training run on a named profile or a LIBSVM file; returns the
-/// report plus the test accuracy (profile runs) for `repro train`.
+/// trained model and its [`FitSummary`] plus the test accuracy (profile
+/// runs) for `repro train`. Kernel-generic: the model is an [`AnyModel`].
 pub struct SingleRun {
-    pub report: TrainReport,
+    pub model: AnyModel,
+    pub summary: FitSummary,
     pub test_accuracy: Option<f64>,
     pub train_accuracy: f64,
     pub dataset: String,
     pub n_train: usize,
 }
 
-/// Train once. `data` is either a profile name (susy/skin/...) or a path
-/// to a LIBSVM file.
+/// Train once through the estimator surface. `data` is either a profile
+/// name (susy/skin/...) or a path to a LIBSVM file. `kernel` overrides the
+/// profile's Gaussian default (`gamma_override` only applies to that
+/// default); invalid kernel/strategy combinations fail with a descriptive
+/// error from `SvmConfig::validate`.
+#[allow(clippy::too_many_arguments)]
 pub fn run_single(
     data: &str,
     budget: usize,
     strategy: Strategy,
+    kernel: Option<KernelSpec>,
     cfg: &ExperimentConfig,
     passes_override: Option<usize>,
     c_override: Option<f64>,
     gamma_override: Option<f64>,
 ) -> Result<SingleRun> {
-    if let Some(profile) = Profile::by_name(data) {
-        let prep = prepare(profile, cfg);
-        let mut opts = experiments::options_for(&prep, cfg, strategy, budget, 0);
-        if let Some(p) = passes_override {
-            opts.passes = p;
-        }
-        if let Some(c) = c_override {
-            opts.lambda = 1.0 / (c * prep.train.len() as f64);
-        }
-        if let Some(g) = gamma_override {
-            opts.gamma = g;
-        }
-        let report = train_bsgd(&prep.train, &opts);
-        Ok(SingleRun {
-            test_accuracy: Some(report.model.accuracy(&prep.test)),
-            train_accuracy: report.model.accuracy(&prep.train),
-            dataset: profile.name.to_string(),
-            n_train: prep.train.len(),
-            report,
-        })
-    } else {
-        let mut ds: Dataset = libsvm::read_file(data, 0)
-            .with_context(|| format!("'{data}' is neither a profile name nor a readable file"))?;
-        let scaling = ds.fit_scaling();
-        ds.apply_scaling(&scaling);
-        let c = c_override.unwrap_or(1.0);
-        let gamma = gamma_override.unwrap_or(1.0 / ds.dim() as f64);
-        let mut opts = BsgdOptions::with_c(budget, c, gamma, ds.len());
-        opts.strategy = strategy;
-        opts.grid = cfg.grid;
-        opts.passes = passes_override.unwrap_or(5);
-        opts.seed = cfg.seed;
-        let report = train_bsgd(&ds, &opts);
-        Ok(SingleRun {
-            test_accuracy: None,
-            train_accuracy: report.model.accuracy(&ds),
-            dataset: ds.name.clone(),
-            n_train: ds.len(),
-            report,
-        })
-    }
+    let (train, test, lambda_default, gamma_default, passes_default, seed, name) =
+        if let Some(profile) = Profile::by_name(data) {
+            let prep = prepare(profile, cfg);
+            // Seed matches experiments::options_for(run = 0) so `repro
+            // train <profile>` reproduces the suite's first run.
+            (
+                prep.train,
+                Some(prep.test),
+                prep.lambda,
+                profile.gamma(),
+                cfg.passes_for(profile),
+                cfg.seed ^ 0x9E37,
+                profile.name.to_string(),
+            )
+        } else {
+            let mut ds: Dataset = libsvm::read_file(data, 0).with_context(|| {
+                format!("'{data}' is neither a profile name nor a readable file")
+            })?;
+            let scaling = ds.fit_scaling();
+            ds.apply_scaling(&scaling);
+            let n = ds.len();
+            let c = c_override.unwrap_or(1.0);
+            let gamma = 1.0 / ds.dim() as f64;
+            let name = ds.name.clone();
+            (ds, None, 1.0 / (c * n as f64), gamma, 5, cfg.seed, name)
+        };
+
+    let lambda = match c_override {
+        Some(c) => 1.0 / (c * train.len() as f64),
+        None => lambda_default,
+    };
+    let kernel =
+        kernel.unwrap_or(KernelSpec::Gaussian { gamma: gamma_override.unwrap_or(gamma_default) });
+    let config = SvmConfig {
+        kernel,
+        budget,
+        lambda,
+        strategy,
+        grid: cfg.grid,
+    };
+    let run = RunConfig::new().passes(passes_override.unwrap_or(passes_default)).seed(seed);
+    let mut est = BsgdEstimator::new(config, run)?;
+    est.fit(&train)?;
+    let summary = est.summary().context("fitted estimator")?.clone();
+    let model = est.into_model()?;
+    Ok(SingleRun {
+        test_accuracy: test.as_ref().map(|t| model.accuracy(t)),
+        train_accuracy: model.accuracy(&train),
+        dataset: name,
+        n_train: train.len(),
+        model,
+        summary,
+    })
 }
 
 /// Machine-readable dump of a single run (used by `repro train --json`).
@@ -154,24 +175,25 @@ pub fn single_run_json(run: &SingleRun, strategy: Strategy) -> Json {
         ("dataset", Json::str(run.dataset.clone())),
         ("n_train", Json::num(run.n_train as f64)),
         ("strategy", Json::str(strategy.name())),
-        ("steps", Json::num(run.report.steps as f64)),
-        ("sv_inserts", Json::num(run.report.sv_inserts as f64)),
-        ("maintenance_events", Json::num(run.report.maintenance_events as f64)),
-        ("merging_frequency", Json::num(run.report.merging_frequency())),
-        ("num_sv", Json::num(run.report.model.num_sv() as f64)),
+        ("kernel", Json::str(run.model.kernel_spec().describe())),
+        ("steps", Json::num(run.summary.steps as f64)),
+        ("sv_inserts", Json::num(run.summary.sv_inserts as f64)),
+        ("maintenance_events", Json::num(run.summary.maintenance_events as f64)),
+        ("merging_frequency", Json::num(run.summary.merging_frequency())),
+        ("num_sv", Json::num(run.model.num_sv() as f64)),
         ("train_accuracy", Json::num(run.train_accuracy)),
         (
             "test_accuracy",
             run.test_accuracy.map(Json::num).unwrap_or(Json::Null),
         ),
-        ("wall_seconds", Json::num(run.report.wall_seconds)),
+        ("wall_seconds", Json::num(run.summary.wall_seconds)),
         (
             "maintenance_seconds",
-            Json::num(run.report.profiler.maintenance_seconds()),
+            Json::num(run.summary.profiler.maintenance_seconds()),
         ),
         (
             "section_a_seconds",
-            Json::num(run.report.profiler.seconds(crate::metrics::Section::MaintA)),
+            Json::num(run.summary.profiler.seconds(crate::metrics::Section::MaintA)),
         ),
     ])
 }
@@ -203,6 +225,7 @@ mod tests {
             "phishing",
             40,
             Strategy::Merge(MergeSolver::LookupWd),
+            None,
             &cfg,
             Some(1),
             None,
@@ -210,9 +233,10 @@ mod tests {
         )
         .unwrap();
         assert!(run.test_accuracy.unwrap() > 0.5);
-        assert!(run.report.model.num_sv() <= 40);
+        assert!(run.model.num_sv() <= 40);
         let json = single_run_json(&run, Strategy::Merge(MergeSolver::LookupWd)).to_string();
         assert!(json.contains("\"merging_frequency\""));
+        assert!(json.contains("\"kernel\""));
     }
 
     #[test]
@@ -226,6 +250,7 @@ mod tests {
             path.to_str().unwrap(),
             20,
             Strategy::Merge(MergeSolver::GssStandard),
+            None,
             &cfg,
             Some(3),
             Some(10.0),
@@ -235,6 +260,38 @@ mod tests {
         assert!(run.train_accuracy > 0.8, "{}", run.train_accuracy);
         assert!(run.test_accuracy.is_none());
         std::fs::remove_dir_all(&cfg.out_dir).ok();
+    }
+
+    #[test]
+    fn single_run_with_non_gaussian_kernel() {
+        let cfg = tmp_cfg("kernel-override");
+        // Merge + linear must fail with a descriptive error...
+        let err = run_single(
+            "phishing",
+            30,
+            Strategy::Merge(MergeSolver::LookupWd),
+            Some(KernelSpec::linear()),
+            &cfg,
+            Some(1),
+            None,
+            None,
+        );
+        assert!(err.is_err());
+        // ...while removal maintenance trains fine.
+        let run = run_single(
+            "phishing",
+            30,
+            Strategy::Removal,
+            Some(KernelSpec::linear()),
+            &cfg,
+            Some(1),
+            None,
+            None,
+        )
+        .unwrap();
+        assert_eq!(run.model.kernel_spec(), KernelSpec::linear());
+        assert!(run.model.num_sv() <= 30);
+        assert!(run.test_accuracy.unwrap() > 0.5);
     }
 
     #[test]

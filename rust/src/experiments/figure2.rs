@@ -11,7 +11,9 @@ use anyhow::Result;
 use crate::budget::LookupTable;
 use crate::config::ExperimentConfig;
 
-/// Build (or reuse) the table and export the CSV. Returns the table used.
+/// Build the table and export the CSV. Returns the table used. (One-shot
+/// export path: an owned build that drops afterwards beats pinning a copy
+/// in the process-wide cache.)
 pub fn run(cfg: &ExperimentConfig) -> Result<LookupTable> {
     let table = LookupTable::build(cfg.grid);
     let dir = std::path::Path::new(&cfg.out_dir);

@@ -1,6 +1,6 @@
 //! Gaussian (RBF) kernel `k(x, x') = exp(−γ‖x − x'‖²)`.
 
-use super::{sqdist, Kernel};
+use super::{sqdist, Kernel, KernelSpec};
 
 /// Gaussian kernel with bandwidth parameter `γ`.
 ///
@@ -45,6 +45,10 @@ impl Kernel for Gaussian {
 
     fn describe(&self) -> String {
         format!("gaussian(gamma={})", self.gamma)
+    }
+
+    fn spec(&self) -> KernelSpec {
+        KernelSpec::Gaussian { gamma: self.gamma }
     }
 }
 

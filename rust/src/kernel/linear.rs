@@ -1,6 +1,6 @@
 //! Linear kernel `k(x, x') = ⟨x, x'⟩`.
 
-use super::{dot, Kernel};
+use super::{dot, Kernel, KernelSpec};
 
 /// Plain inner-product kernel. Used by the unbudgeted baselines and the SMO
 /// reference solver; budget merging does not apply to it (the merge
@@ -21,6 +21,10 @@ impl Kernel for Linear {
 
     fn describe(&self) -> String {
         "linear".to_string()
+    }
+
+    fn spec(&self) -> KernelSpec {
+        KernelSpec::Linear
     }
 }
 

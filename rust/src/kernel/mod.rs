@@ -8,8 +8,10 @@
 //! The merging geometry of the paper (Section 3) is specific to the
 //! Gaussian kernel — its self-similarity under scaling of distances gives
 //! the `k(x_i, z) = κ^{(1−h)²}` shortcut — so [`Gaussian`] is the kernel the
-//! budget solvers require; [`Linear`] and [`Polynomial`] exist for the
-//! unbudgeted baselines and the SMO reference solver.
+//! merge-based budget maintenance requires; [`Linear`] and [`Polynomial`]
+//! models train budgeted with removal/projection maintenance (and
+//! unbudgeted everywhere). [`KernelSpec`] is the typed, serializable
+//! configuration view used by `SvmConfig` and the model format.
 
 mod gaussian;
 mod linear;
@@ -18,6 +20,8 @@ mod polynomial;
 pub use gaussian::Gaussian;
 pub use linear::Linear;
 pub use polynomial::Polynomial;
+
+use anyhow::{bail, ensure, Result};
 
 /// A Mercer kernel over dense `f32` feature vectors.
 pub trait Kernel: Send + Sync {
@@ -31,6 +35,164 @@ pub trait Kernel: Send + Sync {
 
     /// Human-readable description for logs/reports.
     fn describe(&self) -> String;
+
+    /// The serializable [`KernelSpec`] this kernel was (or could have been)
+    /// built from.
+    fn spec(&self) -> KernelSpec;
+}
+
+/// Typed, serializable kernel selection — the configuration-level view of
+/// the concrete [`Kernel`] implementations. This is what [`crate::solver`]'s
+/// `SvmConfig` carries and what the `BSVMMDL2` model format records.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum KernelSpec {
+    /// Gaussian (RBF) kernel `exp(−γ‖x − x'‖²)` — the only kernel whose
+    /// geometry supports the paper's merge-based budget maintenance.
+    Gaussian { gamma: f64 },
+    /// Plain inner product `⟨x, x'⟩`.
+    Linear,
+    /// Polynomial kernel `(⟨x, x'⟩ + coef0)^degree`.
+    Polynomial { degree: u32, coef0: f64 },
+}
+
+impl KernelSpec {
+    /// Gaussian spec shorthand.
+    pub fn gaussian(gamma: f64) -> Self {
+        KernelSpec::Gaussian { gamma }
+    }
+
+    /// Gaussian spec from the paper's `log2 γ` convention.
+    pub fn gaussian_log2(log2_gamma: i32) -> Self {
+        KernelSpec::Gaussian { gamma: (2.0f64).powi(log2_gamma) }
+    }
+
+    /// Linear spec shorthand.
+    pub fn linear() -> Self {
+        KernelSpec::Linear
+    }
+
+    /// Polynomial spec shorthand.
+    pub fn polynomial(degree: u32, coef0: f64) -> Self {
+        KernelSpec::Polynomial { degree, coef0 }
+    }
+
+    /// Reject non-finite / out-of-domain parameters with a clear message.
+    pub fn validate(&self) -> Result<()> {
+        match *self {
+            KernelSpec::Gaussian { gamma } => {
+                ensure!(
+                    gamma.is_finite() && gamma > 0.0,
+                    "gaussian kernel needs gamma > 0, got {gamma}"
+                );
+            }
+            KernelSpec::Linear => {}
+            KernelSpec::Polynomial { degree, coef0 } => {
+                ensure!(degree >= 1, "polynomial kernel needs degree >= 1, got {degree}");
+                ensure!(
+                    coef0.is_finite(),
+                    "polynomial kernel needs a finite coef0, got {coef0}"
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Whether merge-based budget maintenance applies. The merge geometry
+    /// of the paper (Section 3) relies on the Gaussian self-similarity
+    /// `k(x_a, z) = κ^{(1−h)²}` along the connecting line; no such closed
+    /// form exists for the other kernels, which must fall back to removal
+    /// or projection maintenance.
+    pub fn supports_merging(&self) -> bool {
+        matches!(self, KernelSpec::Gaussian { .. })
+    }
+
+    /// Short family name ("gaussian" / "linear" / "polynomial").
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelSpec::Gaussian { .. } => "gaussian",
+            KernelSpec::Linear => "linear",
+            KernelSpec::Polynomial { .. } => "polynomial",
+        }
+    }
+
+    /// Human-readable description (matches the concrete kernels' formats).
+    pub fn describe(&self) -> String {
+        match *self {
+            KernelSpec::Gaussian { gamma } => format!("gaussian(gamma={gamma})"),
+            KernelSpec::Linear => "linear".to_string(),
+            KernelSpec::Polynomial { degree, coef0 } => {
+                format!("poly(scale=1, offset={coef0}, degree={degree})")
+            }
+        }
+    }
+
+    /// Parse a CLI-style spec: `gaussian:<gamma>` (alias `rbf:<gamma>`),
+    /// `linear`, or `poly:<degree>[:<coef0>]` (alias `polynomial:...`,
+    /// coef0 defaults to 1).
+    pub fn parse(s: &str) -> Result<KernelSpec> {
+        let lower = s.trim().to_ascii_lowercase();
+        let mut parts = lower.split(':');
+        let family = parts.next().unwrap_or("");
+        let spec = match family {
+            "gaussian" | "rbf" | "gauss" => {
+                let gamma: f64 = match parts.next() {
+                    Some(g) => match g.parse() {
+                        Ok(v) => v,
+                        Err(_) => bail!("bad gamma '{g}' in kernel spec '{s}'"),
+                    },
+                    None => bail!("gaussian kernel spec needs a gamma: gaussian:<gamma>"),
+                };
+                KernelSpec::Gaussian { gamma }
+            }
+            "linear" => KernelSpec::Linear,
+            "poly" | "polynomial" => {
+                let degree: u32 = match parts.next() {
+                    Some(d) => match d.parse() {
+                        Ok(v) => v,
+                        Err(_) => bail!("bad degree '{d}' in kernel spec '{s}'"),
+                    },
+                    None => bail!("polynomial kernel spec needs a degree: poly:<degree>[:<coef0>]"),
+                };
+                let coef0: f64 = match parts.next() {
+                    Some(c) => match c.parse() {
+                        Ok(v) => v,
+                        Err(_) => bail!("bad coef0 '{c}' in kernel spec '{s}'"),
+                    },
+                    None => 1.0,
+                };
+                KernelSpec::Polynomial { degree, coef0 }
+            }
+            other => bail!("unknown kernel family '{other}' (expected gaussian/linear/poly)"),
+        };
+        if parts.next().is_some() {
+            bail!("trailing parameters in kernel spec '{s}'");
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Kernel value under this spec (dynamic dispatch; the training hot
+    /// loops monomorphize on the concrete kernel types instead).
+    pub fn eval(&self, a: &[f32], a_norm2: f32, b: &[f32], b_norm2: f32) -> f64 {
+        match *self {
+            KernelSpec::Gaussian { gamma } => {
+                (-gamma * sqdist(a, a_norm2, b, b_norm2) as f64).exp()
+            }
+            KernelSpec::Linear => dot(a, b) as f64,
+            KernelSpec::Polynomial { degree, coef0 } => {
+                (dot(a, b) as f64 + coef0).powi(degree as i32)
+            }
+        }
+    }
+
+    /// `k(x, x)` under this spec.
+    pub fn self_eval(&self, norm2: f32) -> f64 {
+        match *self {
+            KernelSpec::Gaussian { .. } => 1.0,
+            KernelSpec::Linear => norm2 as f64,
+            KernelSpec::Polynomial { degree, coef0 } => (norm2 as f64 + coef0).powi(degree as i32),
+        }
+    }
 }
 
 /// Dot product of two equal-length rows.
@@ -99,5 +261,66 @@ mod tests {
         let d = sqdist(&a, norm2(&a), &a, norm2(&a));
         assert!(d >= 0.0);
         assert!(d < 1.0);
+    }
+
+    #[test]
+    fn spec_parsing_roundtrips() {
+        assert_eq!(KernelSpec::parse("gaussian:2.0").unwrap(), KernelSpec::gaussian(2.0));
+        assert_eq!(KernelSpec::parse("rbf:0.5").unwrap(), KernelSpec::gaussian(0.5));
+        assert_eq!(KernelSpec::parse("linear").unwrap(), KernelSpec::Linear);
+        assert_eq!(KernelSpec::parse("poly:3").unwrap(), KernelSpec::polynomial(3, 1.0));
+        assert_eq!(KernelSpec::parse("poly:2:0.5").unwrap(), KernelSpec::polynomial(2, 0.5));
+        assert!(KernelSpec::parse("gaussian").is_err());
+        assert!(KernelSpec::parse("gaussian:-1").is_err());
+        assert!(KernelSpec::parse("poly:0").is_err());
+        assert!(KernelSpec::parse("sigmoid:1").is_err());
+        assert!(KernelSpec::parse("linear:extra").is_err());
+    }
+
+    #[test]
+    fn spec_eval_matches_concrete_kernels() {
+        let a = [0.5f32, -1.0, 2.0];
+        let b = [1.0f32, 0.25, -0.5];
+        let (na, nb) = (norm2(&a), norm2(&b));
+        let cases: [(KernelSpec, f64); 3] = [
+            (KernelSpec::gaussian(0.7), Gaussian::new(0.7).eval(&a, na, &b, nb)),
+            (KernelSpec::linear(), Linear.eval(&a, na, &b, nb)),
+            (KernelSpec::polynomial(3, 1.5), Polynomial::new(1.0, 1.5, 3).eval(&a, na, &b, nb)),
+        ];
+        for (spec, expect) in cases {
+            assert!((spec.eval(&a, na, &b, nb) - expect).abs() < 1e-12, "{}", spec.describe());
+            let concrete_self = match spec {
+                KernelSpec::Gaussian { gamma } => Gaussian::new(gamma).self_eval(na),
+                KernelSpec::Linear => Linear.self_eval(na),
+                KernelSpec::Polynomial { degree, coef0 } => {
+                    Polynomial::new(1.0, coef0, degree).self_eval(na)
+                }
+            };
+            assert!((spec.self_eval(na) - concrete_self).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn spec_describe_matches_concrete_describe() {
+        assert_eq!(KernelSpec::gaussian(2.0).describe(), Gaussian::new(2.0).describe());
+        assert_eq!(KernelSpec::linear().describe(), Linear.describe());
+        assert_eq!(
+            KernelSpec::polynomial(3, 1.5).describe(),
+            Polynomial::new(1.0, 1.5, 3).describe()
+        );
+    }
+
+    #[test]
+    fn only_gaussian_supports_merging() {
+        assert!(KernelSpec::gaussian(1.0).supports_merging());
+        assert!(!KernelSpec::linear().supports_merging());
+        assert!(!KernelSpec::polynomial(2, 1.0).supports_merging());
+    }
+
+    #[test]
+    fn concrete_spec_roundtrip() {
+        assert_eq!(Gaussian::new(0.25).spec(), KernelSpec::gaussian(0.25));
+        assert_eq!(Linear.spec(), KernelSpec::Linear);
+        assert_eq!(Polynomial::new(1.0, 2.0, 4).spec(), KernelSpec::polynomial(4, 2.0));
     }
 }

@@ -1,6 +1,6 @@
 //! Polynomial kernel `k(x, x') = (s·⟨x, x'⟩ + c)^d`.
 
-use super::{dot, Kernel};
+use super::{dot, Kernel, KernelSpec};
 
 /// Polynomial kernel; provided for the baseline solvers (the merging
 /// geometry of the paper is Gaussian-specific).
@@ -31,6 +31,13 @@ impl Kernel for Polynomial {
 
     fn describe(&self) -> String {
         format!("poly(scale={}, offset={}, degree={})", self.scale, self.offset, self.degree)
+    }
+
+    /// Note: [`KernelSpec::Polynomial`] has no `scale` slot (spec-built
+    /// kernels always use scale = 1); a hand-built kernel with scale ≠ 1
+    /// is detected at serialization time via a describe-string comparison.
+    fn spec(&self) -> KernelSpec {
+        KernelSpec::Polynomial { degree: self.degree, coef0: self.offset }
     }
 }
 

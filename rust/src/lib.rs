@@ -5,11 +5,12 @@
 //! (Glasmachers & Qaadan, 2018) as a three-layer Rust + JAX + Pallas system:
 //!
 //! * **Layer 3 (this crate)** — the full BSGD training system: data
-//!   pipeline, Gaussian-kernel sparse model with lazy scaling, golden
+//!   pipeline, kernel-generic sparse models with lazy scaling, golden
 //!   section search, the paper's precomputed lookup tables with bilinear
 //!   interpolation, merge/removal/projection budget maintenance, the
-//!   instrumented trainer, an SMO reference solver, and the experiment
-//!   runner that regenerates every table and figure of the paper.
+//!   instrumented trainers behind one [`solver::Estimator`] surface, an SMO
+//!   reference solver, and the experiment runner that regenerates every
+//!   table and figure of the paper.
 //! * **Layer 2 (python/compile/model.py, build-time only)** — the batched
 //!   decision function and merge-candidate scan as JAX graphs, AOT-lowered
 //!   to HLO text.
@@ -18,20 +19,51 @@
 //!   scan, verified against pure-jnp oracles.
 //!
 //! The [`runtime`] module loads the AOT artifacts through the PJRT C API
-//! (`xla` crate) so the compute path runs with **no Python at runtime**.
+//! (`xla` crate, behind the `pjrt` cargo feature) so the compute path runs
+//! with **no Python at runtime**.
 //!
 //! ## Quickstart
 //!
+//! Every trainer implements the same [`solver::Estimator`] contract —
+//! `fit`, `partial_fit` (streaming ingest), `decision_function`,
+//! `predict_batch` — configured by a [`solver::SvmConfig`] builder with a
+//! typed [`kernel::KernelSpec`]:
+//!
 //! ```no_run
 //! use budgetsvm::data::synthetic::two_moons;
-//! use budgetsvm::solver::{train_bsgd, BsgdOptions};
+//! use budgetsvm::prelude::*;
 //!
-//! let data = two_moons(2000, 0.12, 42);
-//! let opts = BsgdOptions::with_c(/*budget=*/ 50, /*C=*/ 10.0, /*gamma=*/ 2.0, data.len());
-//! let report = train_bsgd(&data, &opts);
-//! println!("accuracy = {:.3}", report.model.accuracy(&data));
-//! println!("merging frequency = {:.3}", report.merging_frequency());
+//! let train = two_moons(2000, 0.12, 42);
+//!
+//! // Gaussian kernel with the paper's Lookup-WD merging.
+//! let config = SvmConfig::new()
+//!     .kernel(KernelSpec::gaussian(2.0))
+//!     .budget(50)
+//!     .c(10.0, train.len())
+//!     .strategy(Strategy::Merge(MergeSolver::LookupWd));
+//! let mut est = BsgdEstimator::new(config, RunConfig::new().passes(5)).unwrap();
+//! est.fit(&train).unwrap();
+//! println!("support vectors = {}", est.model().unwrap().num_sv());
+//! println!("merging frequency = {:.3}", est.summary().unwrap().merging_frequency());
+//!
+//! // Non-Gaussian kernels use removal maintenance (merging is
+//! // Gaussian-specific); models persist in the versioned BSVMMDL2 format.
+//! let poly = SvmConfig::new()
+//!     .kernel(KernelSpec::polynomial(3, 1.0))
+//!     .budget(50)
+//!     .c(10.0, train.len())
+//!     .strategy(Strategy::Removal);
+//! let mut est = BsgdEstimator::new(poly, RunConfig::new().passes(5)).unwrap();
+//! est.fit(&train).unwrap();
+//! budgetsvm::model::io::save_any(est.model().unwrap(), "model.bsvm").unwrap();
+//! let back = budgetsvm::model::io::load_any("model.bsvm").unwrap();
+//! # let _ = back;
 //! ```
+//!
+//! Streaming ingest — the production path — continues training without a
+//! reset: `est.partial_fit(&batch)` consumes each batch in presented
+//! order, so a `fit` with `RunConfig::new().shuffle(false)` over one pass
+//! and a single `partial_fit` of the same rows produce identical models.
 
 pub mod budget;
 pub mod cli;
@@ -45,3 +77,16 @@ pub mod model;
 pub mod runtime;
 pub mod solver;
 pub mod util;
+
+/// One-line import for the estimator surface: configuration types, the
+/// [`solver::Estimator`] trait, the four estimator implementations, and
+/// the runtime-polymorphic [`model::AnyModel`].
+pub mod prelude {
+    pub use crate::budget::{MergeSolver, Strategy};
+    pub use crate::kernel::KernelSpec;
+    pub use crate::model::AnyModel;
+    pub use crate::solver::{
+        BsgdEstimator, Estimator, FitSummary, OneVsRestEstimator, PegasosEstimator, RunConfig,
+        SmoEstimator, SvmConfig,
+    };
+}

@@ -6,11 +6,12 @@
 
 use anyhow::{bail, Result};
 
-use budgetsvm::budget::{LookupTable, Strategy};
+use budgetsvm::budget::{shared_lookup_table, Strategy};
 use budgetsvm::cli::{usage, Args, OptSpec};
 use budgetsvm::config::ExperimentConfig;
 use budgetsvm::coordinator;
 use budgetsvm::experiments;
+use budgetsvm::kernel::KernelSpec;
 use budgetsvm::runtime::Runtime;
 
 const SUBCOMMANDS: &[(&str, &str)] = &[
@@ -44,9 +45,15 @@ fn opt_specs() -> Vec<OptSpec> {
             takes_value: true,
             help: "train: gss|gss-precise|lookup-h|lookup-wd|removal|projection",
         },
+        OptSpec {
+            name: "kernel",
+            takes_value: true,
+            help: "train: gaussian:<gamma>|linear|poly:<degree>[:<coef0>] \
+                   (non-gaussian kernels need --strategy removal|projection)",
+        },
         OptSpec { name: "passes", takes_value: true, help: "train: passes override" },
         OptSpec { name: "c", takes_value: true, help: "train: C override" },
-        OptSpec { name: "gamma", takes_value: true, help: "train: gamma override" },
+        OptSpec { name: "gamma", takes_value: true, help: "train: gaussian gamma override" },
         OptSpec { name: "json", takes_value: false, help: "train: machine-readable output" },
         OptSpec { name: "model-out", takes_value: true, help: "train: save the model here" },
         OptSpec { name: "table-out", takes_value: true, help: "precompute: output path" },
@@ -142,23 +149,30 @@ fn main() -> Result<()> {
         "train" => {
             let data = args.positional().first().map(String::as_str).unwrap_or("ijcnn");
             let budget = args.get_usize("budget")?.unwrap_or(100);
+            let kernel = args.get("kernel").map(KernelSpec::parse).transpose()?;
             let strategy = match args.get("strategy") {
                 Some(s) => {
                     Strategy::parse(s).ok_or_else(|| anyhow::anyhow!("unknown strategy '{s}'"))?
                 }
-                None => Strategy::parse("lookup-wd").unwrap(),
+                // Merging needs the Gaussian geometry; default non-Gaussian
+                // kernels to removal instead of erroring out.
+                None => match &kernel {
+                    Some(k) if !k.supports_merging() => Strategy::Removal,
+                    _ => Strategy::parse("lookup-wd").unwrap(),
+                },
             };
             let run = coordinator::run_single(
                 data,
                 budget,
                 strategy,
+                kernel,
                 &cfg,
                 args.get_usize("passes")?,
                 args.get_f64("c")?,
                 args.get_f64("gamma")?,
             )?;
             if let Some(path) = args.get("model-out") {
-                budgetsvm::model::io::save(&run.report.model, path)?;
+                budgetsvm::model::io::save_any(&run.model, path)?;
                 eprintln!("model saved to {path}");
             }
             if args.flag("json") {
@@ -166,21 +180,22 @@ fn main() -> Result<()> {
             } else {
                 println!("dataset            : {} ({} rows)", run.dataset, run.n_train);
                 println!("strategy           : {}", strategy.name());
-                println!("steps              : {}", run.report.steps);
-                println!("support vectors    : {}", run.report.model.num_sv());
+                println!("kernel             : {}", run.model.kernel_spec().describe());
+                println!("steps              : {}", run.summary.steps);
+                println!("support vectors    : {}", run.model.num_sv());
                 println!(
                     "merging frequency  : {:.1}%",
-                    100.0 * run.report.merging_frequency()
+                    100.0 * run.summary.merging_frequency()
                 );
                 println!("train accuracy     : {:.2}%", 100.0 * run.train_accuracy);
                 if let Some(acc) = run.test_accuracy {
                     println!("test accuracy      : {:.2}%", 100.0 * acc);
                 }
-                println!("wall time          : {:.3}s", run.report.wall_seconds);
+                println!("wall time          : {:.3}s", run.summary.wall_seconds);
                 println!(
                     "maintenance time   : {:.3}s ({:.1}% of accounted time)",
-                    run.report.profiler.maintenance_seconds(),
-                    100.0 * run.report.maintenance_fraction()
+                    run.summary.profiler.maintenance_seconds(),
+                    100.0 * run.summary.maintenance_fraction()
                 );
             }
         }
@@ -190,15 +205,16 @@ fn main() -> Result<()> {
                 [m, d, ..] => (m.as_str(), d.as_str()),
                 _ => bail!("usage: repro eval <model.bsvm> <file.libsvm> [--gamma ...]"),
             };
-            let model = budgetsvm::model::io::load(model_path)?;
+            // Reads both BSVMMDL1 (legacy) and BSVMMDL2 files.
+            let model = budgetsvm::model::io::load_any(model_path)?;
             let ds = budgetsvm::data::libsvm::read_file(data_path, model.dim())?;
             let acc = model.accuracy(&ds);
             println!(
-                "model: {} SVs, d={}, gamma={}, bias={:.6}",
+                "model: {} SVs, d={}, kernel={}, bias={:.6}",
                 model.num_sv(),
                 model.dim(),
-                model.kernel().gamma,
-                model.bias
+                model.kernel_spec().describe(),
+                model.bias()
             );
             println!("rows evaluated : {}", ds.len());
             println!("accuracy       : {:.3}%", 100.0 * acc);
@@ -208,7 +224,7 @@ fn main() -> Result<()> {
                 .get("table-out")
                 .map(String::from)
                 .unwrap_or_else(|| format!("artifacts/table{}.tbl", cfg.grid));
-            let t = LookupTable::build(cfg.grid);
+            let t = shared_lookup_table(cfg.grid);
             if let Some(parent) = std::path::Path::new(&out).parent() {
                 std::fs::create_dir_all(parent)?;
             }

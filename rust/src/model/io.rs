@@ -1,31 +1,70 @@
-//! Model persistence: save/load a trained [`BudgetModel`] in a compact
-//! binary format so training and serving can be separate processes
+//! Model persistence: save/load a trained model in a compact binary format
+//! so training and serving can be separate processes
 //! (`repro train --model-out m.bsvm` → `repro eval m.bsvm data.libsvm`).
 //!
-//! Format: magic `BSVMMDL1`, then little-endian u64 `d`, u64 `count`,
-//! f64 `gamma`, f64 `bias`, `count` f64 effective coefficients, and
-//! `count·d` f32 support-vector values.
+//! Two format versions:
+//!
+//! * **`BSVMMDL2`** (current, written by [`save`]/[`save_any`]): magic,
+//!   little-endian u64 `d`, u64 `count`, u32 kernel tag
+//!   (0 = gaussian, 1 = linear, 2 = polynomial) followed by the kernel
+//!   parameters (gaussian: f64 `gamma`; linear: none; polynomial: u32
+//!   `degree`, f64 `coef0`), f64 `bias`, `count` f64 effective
+//!   coefficients, and `count·d` f32 support-vector values. The kernel
+//!   spec in the header is what makes a saved model self-describing across
+//!   kernel families.
+//! * **`BSVMMDL1`** (legacy, read-only): magic, u64 `d`, u64 `count`,
+//!   f64 `gamma`, f64 `bias`, coefficients, support vectors — always a
+//!   Gaussian model. [`load_any`]/[`load`] accept both versions, so every
+//!   pre-refactor model file keeps loading.
 
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
-use crate::kernel::Gaussian;
+use crate::kernel::{Gaussian, Kernel, KernelSpec};
 
-use super::BudgetModel;
+use super::{AnyModel, BudgetModel};
 
-const MAGIC: &[u8; 8] = b"BSVMMDL1";
+const MAGIC_V1: &[u8; 8] = b"BSVMMDL1";
+const MAGIC_V2: &[u8; 8] = b"BSVMMDL2";
 
-/// Serialize a model (effective coefficients; the lazy scale is folded).
-pub fn save(model: &BudgetModel, path: impl AsRef<Path>) -> Result<()> {
+/// Kernel tags of the v2 header.
+const TAG_GAUSSIAN: u32 = 0;
+const TAG_LINEAR: u32 = 1;
+const TAG_POLYNOMIAL: u32 = 2;
+
+/// Serialize a model in the v2 format (effective coefficients; the lazy
+/// scale is folded). Works for any kernel whose parameters round-trip
+/// through its [`KernelSpec`] — a hand-built `Polynomial` with
+/// `scale != 1` is rejected rather than silently altered.
+pub fn save<K: Kernel + Copy>(model: &BudgetModel<K>, path: impl AsRef<Path>) -> Result<()> {
+    let spec = model.kernel().spec();
+    ensure!(
+        spec.describe() == model.kernel().describe(),
+        "kernel {} does not round-trip through its spec and cannot be serialized",
+        model.kernel().describe()
+    );
     let f = std::fs::File::create(path.as_ref())
         .with_context(|| format!("cannot create {}", path.as_ref().display()))?;
     let mut w = BufWriter::new(f);
-    w.write_all(MAGIC)?;
+    w.write_all(MAGIC_V2)?;
     w.write_all(&(model.dim() as u64).to_le_bytes())?;
     w.write_all(&(model.num_sv() as u64).to_le_bytes())?;
-    w.write_all(&model.kernel().gamma.to_le_bytes())?;
+    match spec {
+        KernelSpec::Gaussian { gamma } => {
+            w.write_all(&TAG_GAUSSIAN.to_le_bytes())?;
+            w.write_all(&gamma.to_le_bytes())?;
+        }
+        KernelSpec::Linear => {
+            w.write_all(&TAG_LINEAR.to_le_bytes())?;
+        }
+        KernelSpec::Polynomial { degree, coef0 } => {
+            w.write_all(&TAG_POLYNOMIAL.to_le_bytes())?;
+            w.write_all(&degree.to_le_bytes())?;
+            w.write_all(&coef0.to_le_bytes())?;
+        }
+    }
     w.write_all(&model.bias.to_le_bytes())?;
     for j in 0..model.num_sv() {
         w.write_all(&model.alpha(j).to_le_bytes())?;
@@ -39,38 +78,54 @@ pub fn save(model: &BudgetModel, path: impl AsRef<Path>) -> Result<()> {
     Ok(())
 }
 
-/// Load a model saved by [`save`].
-pub fn load(path: impl AsRef<Path>) -> Result<BudgetModel> {
-    let f = std::fs::File::open(path.as_ref())
-        .with_context(|| format!("cannot open {}", path.as_ref().display()))?;
-    let mut r = BufReader::new(f);
-    let mut magic = [0u8; 8];
-    r.read_exact(&mut magic)?;
-    if &magic != MAGIC {
-        bail!("not a budgetsvm model file (bad magic)");
+/// Serialize an [`AnyModel`] in the v2 format.
+pub fn save_any(model: &AnyModel, path: impl AsRef<Path>) -> Result<()> {
+    match model {
+        AnyModel::Gaussian(m) => save(m, path),
+        AnyModel::Linear(m) => save(m, path),
+        AnyModel::Polynomial(m) => save(m, path),
     }
-    let mut b8 = [0u8; 8];
-    r.read_exact(&mut b8)?;
-    let d = u64::from_le_bytes(b8) as usize;
-    r.read_exact(&mut b8)?;
-    let count = u64::from_le_bytes(b8) as usize;
-    r.read_exact(&mut b8)?;
-    let gamma = f64::from_le_bytes(b8);
-    r.read_exact(&mut b8)?;
-    let bias = f64::from_le_bytes(b8);
+}
+
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_f64(r: &mut impl Read) -> Result<f64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(f64::from_le_bytes(b))
+}
+
+/// Read the common body (bias, coefficients, support vectors) into a fresh
+/// model for `spec`.
+fn read_body(r: &mut impl Read, d: usize, count: usize, spec: KernelSpec) -> Result<AnyModel> {
     if d == 0 || d > 1_000_000 || count > 10_000_000 {
         bail!("implausible model header: d={d}, count={count}");
     }
-    if !(gamma.is_finite() && gamma > 0.0 && bias.is_finite()) {
-        bail!("implausible model parameters: gamma={gamma}, bias={bias}");
+    // Bound the total buffer too: d and count can each pass their own
+    // check while count·d would demand an absurd allocation (a crafted
+    // 40-byte header must produce an error, not an allocation abort).
+    if count.saturating_mul(d) > 100_000_000 {
+        bail!("implausible model size: count={count} × d={d} support-vector values");
     }
+    spec.validate().context("implausible kernel parameters")?;
+    let bias = read_f64(r)?;
+    ensure!(bias.is_finite(), "implausible model bias {bias}");
     let mut alphas = vec![0.0f64; count];
     for a in alphas.iter_mut() {
-        r.read_exact(&mut b8)?;
-        *a = f64::from_le_bytes(b8);
+        *a = read_f64(r)?;
     }
-    let mut model = BudgetModel::new(d, Gaussian::new(gamma), count);
-    model.bias = bias;
+    let mut model = AnyModel::new(d, spec, count)?;
+    model.set_bias(bias);
     let mut b4 = [0u8; 4];
     let mut row = vec![0.0f32; d];
     for &alpha in &alphas {
@@ -83,16 +138,75 @@ pub fn load(path: impl AsRef<Path>) -> Result<BudgetModel> {
     Ok(model)
 }
 
+/// Load a model saved in either format version.
+pub fn load_any(path: impl AsRef<Path>) -> Result<AnyModel> {
+    let f = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("cannot open {}", path.as_ref().display()))?;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic == MAGIC_V1 {
+        // Legacy layout: d, count, gamma, bias, body — always Gaussian.
+        let d = read_u64(&mut r)? as usize;
+        let count = read_u64(&mut r)? as usize;
+        let gamma = read_f64(&mut r)?;
+        read_body(&mut r, d, count, KernelSpec::Gaussian { gamma })
+    } else if &magic == MAGIC_V2 {
+        let d = read_u64(&mut r)? as usize;
+        let count = read_u64(&mut r)? as usize;
+        let spec = match read_u32(&mut r)? {
+            TAG_GAUSSIAN => KernelSpec::Gaussian { gamma: read_f64(&mut r)? },
+            TAG_LINEAR => KernelSpec::Linear,
+            TAG_POLYNOMIAL => {
+                let degree = read_u32(&mut r)?;
+                let coef0 = read_f64(&mut r)?;
+                KernelSpec::Polynomial { degree, coef0 }
+            }
+            tag => bail!("unknown kernel tag {tag} in model header"),
+        };
+        read_body(&mut r, d, count, spec)
+    } else {
+        bail!("not a budgetsvm model file (bad magic)");
+    }
+}
+
+/// Load a Gaussian model (either format version). Errors if the file holds
+/// a non-Gaussian model — use [`load_any`] for the kernel-generic path.
+pub fn load(path: impl AsRef<Path>) -> Result<BudgetModel<Gaussian>> {
+    load_any(path)?.into_gaussian()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::data::synthetic::two_moons;
+    use crate::kernel::{Linear, Polynomial};
     use crate::solver::{train_bsgd, BsgdOptions};
 
     fn tmp(name: &str) -> std::path::PathBuf {
         let dir = std::env::temp_dir().join("budgetsvm-model-io");
         std::fs::create_dir_all(&dir).unwrap();
         dir.join(name)
+    }
+
+    /// Byte-for-byte writer of the legacy v1 format (what the pre-refactor
+    /// `save` produced) — the reader must keep accepting these files.
+    fn write_v1(model: &BudgetModel<Gaussian>, path: &std::path::Path) {
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC_V1);
+        bytes.extend_from_slice(&(model.dim() as u64).to_le_bytes());
+        bytes.extend_from_slice(&(model.num_sv() as u64).to_le_bytes());
+        bytes.extend_from_slice(&model.kernel().gamma.to_le_bytes());
+        bytes.extend_from_slice(&model.bias.to_le_bytes());
+        for j in 0..model.num_sv() {
+            bytes.extend_from_slice(&model.alpha(j).to_le_bytes());
+        }
+        for j in 0..model.num_sv() {
+            for &v in model.sv(j) {
+                bytes.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        std::fs::write(path, bytes).unwrap();
     }
 
     #[test]
@@ -115,10 +229,95 @@ mod tests {
     }
 
     #[test]
+    fn v1_files_load_through_the_v2_reader() {
+        let mut m = BudgetModel::new(3, Gaussian::new(0.75), 4);
+        m.push(&[1.0, 0.0, -1.0], 0.5);
+        m.push(&[0.0, 2.0, 0.5], -1.25);
+        m.bias = 0.125;
+        let path = tmp("legacy.bsvm");
+        write_v1(&m, &path);
+        // Kernel-generic reader.
+        let any = load_any(&path).unwrap();
+        assert_eq!(any.kernel_spec(), KernelSpec::gaussian(0.75));
+        assert_eq!(any.num_sv(), 2);
+        assert_eq!(any.bias(), 0.125);
+        // Legacy typed reader.
+        let loaded = load(&path).unwrap();
+        let probe = [0.3f32, -0.4, 1.1];
+        assert!((loaded.decision(&probe) - m.decision(&probe)).abs() < 1e-12);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn v2_round_trips_every_kernel_family() {
+        let specs = [
+            KernelSpec::gaussian(1.5),
+            KernelSpec::linear(),
+            KernelSpec::polynomial(3, 0.5),
+        ];
+        for (i, spec) in specs.into_iter().enumerate() {
+            let mut m = AnyModel::new(2, spec, 3).unwrap();
+            m.push(&[1.0, -0.5], 0.8);
+            m.push(&[-0.25, 2.0], -0.3);
+            m.set_bias(0.0625);
+            let path = tmp(&format!("k{i}.bsvm"));
+            save_any(&m, &path).unwrap();
+            let loaded = load_any(&path).unwrap();
+            assert_eq!(loaded.kernel_spec(), spec, "{}", spec.describe());
+            assert_eq!(loaded.num_sv(), 2);
+            for probe in [[0.0f32, 0.0], [1.0, 1.0], [-0.7, 0.3]] {
+                assert!(
+                    (loaded.decision(&probe) - m.decision(&probe)).abs() < 1e-9,
+                    "{}",
+                    spec.describe()
+                );
+            }
+            std::fs::remove_file(&path).ok();
+        }
+    }
+
+    #[test]
+    fn non_gaussian_file_rejected_by_typed_loader() {
+        let m = AnyModel::new(2, KernelSpec::linear(), 1).unwrap();
+        let path = tmp("linear-only.bsvm");
+        save_any(&m, &path).unwrap();
+        assert!(load(&path).is_err());
+        assert!(load_any(&path).is_ok());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn scaled_polynomial_kernel_is_rejected_not_corrupted() {
+        let mut m = BudgetModel::new(2, Polynomial::new(2.0, 1.0, 2), 1);
+        m.push(&[1.0, 1.0], 1.0);
+        let path = tmp("poly-scaled.bsvm");
+        assert!(save(&m, &path).is_err(), "scale != 1 must not serialize silently");
+        // scale = 1 is fine.
+        let mut ok = BudgetModel::new(2, Polynomial::new(1.0, 1.0, 2), 1);
+        ok.push(&[1.0, 1.0], 1.0);
+        save(&ok, &path).unwrap();
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn linear_save_via_typed_writer() {
+        let mut m = BudgetModel::new(2, Linear, 2);
+        m.push(&[2.0, 0.0], 1.0);
+        let path = tmp("linear-typed.bsvm");
+        save(&m, &path).unwrap();
+        let back = load_any(&path).unwrap();
+        assert_eq!(back.kernel_spec(), KernelSpec::linear());
+        assert!((back.decision(&[1.0, 0.0]) - 2.0).abs() < 1e-9);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
     fn rejects_corrupt_files() {
         let path = tmp("bad.bsvm");
         std::fs::write(&path, b"BSVMMDL1 but truncated").unwrap();
         assert!(load(&path).is_err());
+        std::fs::write(&path, b"BSVMMDL2 but truncated").unwrap();
+        assert!(load_any(&path).is_err());
         std::fs::write(&path, b"WRONGMAG").unwrap();
         assert!(load(&path).is_err());
         std::fs::remove_file(&path).ok();

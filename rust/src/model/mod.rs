@@ -4,21 +4,32 @@
 //! with precomputed squared norms (the kernel row loop is the trainer's hot
 //! path) and keeps coefficients behind a lazy global scale factor `Φ` so the
 //! Pegasos shrink step `w ← (1 − 1/t)·w` is O(1) instead of O(B).
+//!
+//! The model is generic over the [`Kernel`]: `BudgetModel<Gaussian>` (the
+//! default type parameter, so plain `BudgetModel` keeps meaning the
+//! Gaussian model) is what the merge-based budget maintenance operates on,
+//! while `BudgetModel<Linear>` / `BudgetModel<Polynomial>` support the
+//! removal/projection maintenance paths and the unbudgeted solvers. The
+//! kernel type is a monomorphized parameter — the decision hot loop
+//! compiles to the same fused code as the previously Gaussian-only version.
+//!
+//! [`AnyModel`] is the runtime-polymorphic wrapper the [`crate::solver`]
+//! estimator surface and the versioned model format ([`io`]) work with.
 
 pub mod io;
 
-use crate::kernel::{norm2, Gaussian};
+use crate::kernel::{norm2, Gaussian, Kernel, KernelSpec, Linear, Polynomial};
 
 /// Lower bound on `Φ` before it is folded back into the raw coefficients
 /// (guards against underflow after very many SGD steps).
 const SCALE_FOLD_THRESHOLD: f64 = 1e-6;
 
-/// A budgeted kernel SVM model `f(x) = Σ_j α_j k(x_j, x) + b` with Gaussian
-/// kernel and at most `capacity` support vectors.
+/// A budgeted kernel SVM model `f(x) = Σ_j α_j k(x_j, x) + b` with at most
+/// `capacity` support vectors.
 #[derive(Debug, Clone)]
-pub struct BudgetModel {
+pub struct BudgetModel<K: Kernel + Copy = Gaussian> {
     d: usize,
-    kernel: Gaussian,
+    kernel: K,
     /// Flat row-major support vectors, `count * d` valid entries.
     sv: Vec<f32>,
     /// Raw coefficients; effective `α_j = Φ · alpha[j]`.
@@ -32,10 +43,10 @@ pub struct BudgetModel {
     pub bias: f64,
 }
 
-impl BudgetModel {
+impl<K: Kernel + Copy> BudgetModel<K> {
     /// New empty model; `capacity` is a hint used to reserve storage (the
     /// trainer passes `B + 1`).
-    pub fn new(d: usize, kernel: Gaussian, capacity: usize) -> Self {
+    pub fn new(d: usize, kernel: K, capacity: usize) -> Self {
         BudgetModel {
             d,
             kernel,
@@ -54,8 +65,13 @@ impl BudgetModel {
     }
 
     #[inline]
-    pub fn kernel(&self) -> Gaussian {
+    pub fn kernel(&self) -> K {
         self.kernel
+    }
+
+    /// The serializable spec of this model's kernel.
+    pub fn kernel_spec(&self) -> KernelSpec {
+        self.kernel.spec()
     }
 
     /// Number of support vectors currently stored.
@@ -175,17 +191,16 @@ impl BudgetModel {
     }
 
     /// Decision value `f(x) = Φ·Σ_j a_j k(x_j, x) + b` for a row with known
-    /// squared norm. This is THE hot function of the whole system.
+    /// squared norm. This is THE hot function of the whole system; `K` is a
+    /// monomorphized parameter, so the kernel evaluation inlines exactly as
+    /// the hand-fused Gaussian loop did.
     pub fn decision_with_norm(&self, x: &[f32], x_norm2: f32) -> f64 {
         debug_assert_eq!(x.len(), self.d);
-        let gamma = self.kernel.gamma;
         let d = self.d;
         let mut acc = 0.0f64;
         for j in 0..self.count {
             let s = &self.sv[j * d..(j + 1) * d];
-            let dot = crate::kernel::dot(x, s);
-            let d2 = (x_norm2 + self.norms[j] - 2.0 * dot).max(0.0) as f64;
-            acc += self.alpha[j] * (-gamma * d2).exp();
+            acc += self.alpha[j] * self.kernel.eval(x, x_norm2, s, self.norms[j]);
         }
         self.scale * acc + self.bias
     }
@@ -207,13 +222,10 @@ impl BudgetModel {
     /// Kernel row `κ_j = k(x, sv_j)` written into `out` (length ≥ count).
     /// Returns the number of entries written.
     pub fn kernel_row(&self, x: &[f32], x_norm2: f32, out: &mut [f64]) -> usize {
-        let gamma = self.kernel.gamma;
         let d = self.d;
         for j in 0..self.count {
             let s = &self.sv[j * d..(j + 1) * d];
-            let dot = crate::kernel::dot(x, s);
-            let d2 = (x_norm2 + self.norms[j] - 2.0 * dot).max(0.0) as f64;
-            out[j] = (-gamma * d2).exp();
+            out[j] = self.kernel.eval(x, x_norm2, s, self.norms[j]);
         }
         self.count
     }
@@ -224,12 +236,7 @@ impl BudgetModel {
         let mut acc = 0.0;
         for i in 0..self.count {
             for j in 0..self.count {
-                let k = self.kernel.eval_rows(
-                    self.sv(i),
-                    self.norms[i],
-                    self.sv(j),
-                    self.norms[j],
-                );
+                let k = self.kernel.eval(self.sv(i), self.norms[i], self.sv(j), self.norms[j]);
                 acc += self.alpha[i] * self.alpha[j] * k;
             }
         }
@@ -256,12 +263,141 @@ impl BudgetModel {
     }
 }
 
-impl Gaussian {
-    /// Convenience row-eval used by `weight_norm2`.
-    #[inline]
-    fn eval_rows(&self, a: &[f32], a_n: f32, b: &[f32], b_n: f32) -> f64 {
-        use crate::kernel::Kernel;
-        self.eval(a, a_n, b, b_n)
+/// Dispatch a method call to whichever kernel variant an [`AnyModel`] holds.
+macro_rules! for_any_model {
+    ($any:expr, $m:ident => $body:expr) => {
+        match $any {
+            AnyModel::Gaussian($m) => $body,
+            AnyModel::Linear($m) => $body,
+            AnyModel::Polynomial($m) => $body,
+        }
+    };
+}
+
+/// Runtime-polymorphic budget model: one variant per supported kernel
+/// family. This is the type the [`crate::solver`] estimators and the
+/// versioned model format exchange; code that statically needs the Gaussian
+/// geometry (merge-based maintenance, the PJRT runtime) extracts the
+/// concrete variant via [`AnyModel::as_gaussian`] / [`AnyModel::into_gaussian`].
+#[derive(Debug, Clone)]
+pub enum AnyModel {
+    Gaussian(BudgetModel<Gaussian>),
+    Linear(BudgetModel<Linear>),
+    Polynomial(BudgetModel<Polynomial>),
+}
+
+impl AnyModel {
+    /// New empty model for a kernel spec (validates the spec).
+    pub fn new(d: usize, spec: KernelSpec, capacity: usize) -> anyhow::Result<AnyModel> {
+        spec.validate()?;
+        Ok(match spec {
+            KernelSpec::Gaussian { gamma } => {
+                AnyModel::Gaussian(BudgetModel::new(d, Gaussian::new(gamma), capacity))
+            }
+            KernelSpec::Linear => AnyModel::Linear(BudgetModel::new(d, Linear, capacity)),
+            KernelSpec::Polynomial { degree, coef0 } => AnyModel::Polynomial(BudgetModel::new(
+                d,
+                Polynomial::new(1.0, coef0, degree),
+                capacity,
+            )),
+        })
+    }
+
+    pub fn dim(&self) -> usize {
+        for_any_model!(self, m => m.dim())
+    }
+
+    pub fn num_sv(&self) -> usize {
+        for_any_model!(self, m => m.num_sv())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        for_any_model!(self, m => m.is_empty())
+    }
+
+    pub fn kernel_spec(&self) -> KernelSpec {
+        for_any_model!(self, m => m.kernel_spec())
+    }
+
+    pub fn bias(&self) -> f64 {
+        for_any_model!(self, m => m.bias)
+    }
+
+    pub fn set_bias(&mut self, bias: f64) {
+        for_any_model!(self, m => m.bias = bias)
+    }
+
+    /// Support vector row `j`.
+    pub fn sv(&self, j: usize) -> &[f32] {
+        for_any_model!(self, m => m.sv(j))
+    }
+
+    /// Effective coefficient `α_j`.
+    pub fn alpha(&self, j: usize) -> f64 {
+        for_any_model!(self, m => m.alpha(j))
+    }
+
+    /// Append a support vector with effective coefficient `alpha_eff`.
+    pub fn push(&mut self, x: &[f32], alpha_eff: f64) {
+        for_any_model!(self, m => m.push(x, alpha_eff))
+    }
+
+    /// Decision value `f(x)`.
+    pub fn decision(&self, x: &[f32]) -> f64 {
+        for_any_model!(self, m => m.decision(x))
+    }
+
+    /// Predicted label (±1).
+    pub fn predict(&self, x: &[f32]) -> f32 {
+        for_any_model!(self, m => m.predict(x))
+    }
+
+    /// Classification accuracy on a dataset.
+    pub fn accuracy(&self, ds: &crate::data::Dataset) -> f64 {
+        for_any_model!(self, m => m.accuracy(ds))
+    }
+
+    /// Decision values for every row of a dataset.
+    pub fn decision_batch(&self, ds: &crate::data::Dataset) -> Vec<f64> {
+        for_any_model!(self, m => m.decision_batch(ds))
+    }
+
+    /// Borrow the Gaussian variant, if that is what this model is.
+    pub fn as_gaussian(&self) -> Option<&BudgetModel<Gaussian>> {
+        match self {
+            AnyModel::Gaussian(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    /// Consume into the Gaussian variant; errors with the actual kernel
+    /// family otherwise.
+    pub fn into_gaussian(self) -> anyhow::Result<BudgetModel<Gaussian>> {
+        match self {
+            AnyModel::Gaussian(m) => Ok(m),
+            other => anyhow::bail!(
+                "expected a gaussian-kernel model, found {}",
+                other.kernel_spec().describe()
+            ),
+        }
+    }
+}
+
+impl From<BudgetModel<Gaussian>> for AnyModel {
+    fn from(m: BudgetModel<Gaussian>) -> Self {
+        AnyModel::Gaussian(m)
+    }
+}
+
+impl From<BudgetModel<Linear>> for AnyModel {
+    fn from(m: BudgetModel<Linear>) -> Self {
+        AnyModel::Linear(m)
+    }
+}
+
+impl From<BudgetModel<Polynomial>> for AnyModel {
+    fn from(m: BudgetModel<Polynomial>) -> Self {
+        AnyModel::Polynomial(m)
     }
 }
 
@@ -380,5 +516,61 @@ mod tests {
             2,
         );
         assert_eq!(m.accuracy(&ds), 1.0);
+    }
+
+    #[test]
+    fn linear_model_decision_matches_dot_expansion() {
+        let mut m = BudgetModel::new(2, Linear, 2);
+        m.push(&[1.0, 0.0], 2.0);
+        m.push(&[0.0, 1.0], -1.0);
+        // f(x) = 2·⟨(1,0),x⟩ − 1·⟨(0,1),x⟩ = 2x₀ − x₁
+        let x = [0.5f32, 0.25];
+        assert!((m.decision(&x) - (2.0 * 0.5 - 0.25)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn polynomial_model_weight_norm_uses_kernel_diagonal() {
+        let mut m = BudgetModel::new(2, Polynomial::new(1.0, 1.0, 2), 1);
+        m.push(&[1.0, 1.0], 1.0);
+        // ‖w‖² = k(x,x) = (⟨x,x⟩ + 1)² = 9
+        assert!((m.weight_norm2() - 9.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn any_model_dispatches_by_kernel() {
+        for spec in [
+            KernelSpec::gaussian(0.5),
+            KernelSpec::linear(),
+            KernelSpec::polynomial(2, 1.0),
+        ] {
+            let mut m = AnyModel::new(2, spec, 4).unwrap();
+            m.push(&[1.0, 0.0], 1.0);
+            m.push(&[0.0, 1.0], -0.5);
+            m.set_bias(0.25);
+            assert_eq!(m.dim(), 2);
+            assert_eq!(m.num_sv(), 2);
+            assert_eq!(m.kernel_spec(), spec);
+            assert_eq!(m.bias(), 0.25);
+            assert!((m.alpha(1) + 0.5).abs() < 1e-12);
+            assert_eq!(m.sv(0), &[1.0, 0.0]);
+            // decision must match the concrete kernel expansion + bias.
+            let x = [0.3f32, 0.7];
+            let expect = 1.0 * spec.eval(&x, norm2(&x), &[1.0, 0.0], 1.0)
+                - 0.5 * spec.eval(&x, norm2(&x), &[0.0, 1.0], 1.0)
+                + 0.25;
+            assert!((m.decision(&x) - expect).abs() < 1e-9, "{}", spec.describe());
+            assert_eq!(m.predict(&x), if expect >= 0.0 { 1.0 } else { -1.0 });
+        }
+    }
+
+    #[test]
+    fn any_model_gaussian_extraction() {
+        let g = AnyModel::new(3, KernelSpec::gaussian(1.0), 2).unwrap();
+        assert!(g.as_gaussian().is_some());
+        assert!(g.into_gaussian().is_ok());
+        let l = AnyModel::new(3, KernelSpec::linear(), 2).unwrap();
+        assert!(l.as_gaussian().is_none());
+        assert!(l.into_gaussian().is_err());
+        assert!(AnyModel::new(3, KernelSpec::gaussian(-1.0), 2).is_err());
     }
 }

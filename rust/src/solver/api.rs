@@ -1,0 +1,360 @@
+//! The unified estimator surface: one `fit` / `partial_fit` /
+//! `decision_function` / `predict_batch` contract implemented by every
+//! trainer in this crate (BSGD, one-vs-rest multiclass, Pegasos, SMO),
+//! plus the configuration split into model hyperparameters ([`SvmConfig`])
+//! and run/instrumentation knobs ([`RunConfig`]).
+//!
+//! ```no_run
+//! use budgetsvm::data::synthetic::two_moons;
+//! use budgetsvm::kernel::KernelSpec;
+//! use budgetsvm::solver::{BsgdEstimator, Estimator, RunConfig, SvmConfig};
+//!
+//! let train = two_moons(2000, 0.12, 42);
+//! let config = SvmConfig::new()
+//!     .kernel(KernelSpec::gaussian(2.0))
+//!     .budget(50)
+//!     .c(10.0, train.len());
+//! let mut est = BsgdEstimator::new(config, RunConfig::new().passes(5)).unwrap();
+//! est.fit(&train).unwrap();
+//! let preds = est.predict_batch(train.features()).unwrap();
+//! # let _ = preds;
+//! ```
+
+use anyhow::{ensure, Context, Result};
+
+use crate::budget::{MergeSolver, Strategy};
+use crate::kernel::KernelSpec;
+use crate::metrics::{AgreementStats, SectionProfiler};
+
+use super::bsgd::CurvePoint;
+use super::schedule::LearningRate;
+
+/// Model hyperparameters of a (budgeted) kernel SVM: everything that
+/// defines *what* is learned, as opposed to *how the run is executed*
+/// ([`RunConfig`]). Built with chainable setters.
+#[derive(Debug, Clone)]
+pub struct SvmConfig {
+    /// Kernel selection (typed; replaces the old flat `gamma: f64` field).
+    pub kernel: KernelSpec,
+    /// Budget B — maximum number of support vectors. `0` means unbudgeted
+    /// (the Pegasos regime); the budgeted BSGD estimator requires `B ≥ 2`.
+    pub budget: usize,
+    /// Regularization λ (the paper tunes `C = 1/(n·λ)`).
+    pub lambda: f64,
+    /// Budget maintenance strategy; must be compatible with the kernel
+    /// (see the [`crate::budget`] compatibility matrix).
+    pub strategy: Strategy,
+    /// Lookup-table grid resolution for the lookup merge solvers
+    /// (paper: 400).
+    pub grid: usize,
+}
+
+impl Default for SvmConfig {
+    fn default() -> Self {
+        SvmConfig {
+            kernel: KernelSpec::gaussian(1.0),
+            budget: 100,
+            lambda: 1e-4,
+            strategy: Strategy::Merge(MergeSolver::LookupWd),
+            grid: 400,
+        }
+    }
+}
+
+impl SvmConfig {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Set the kernel.
+    pub fn kernel(mut self, kernel: KernelSpec) -> Self {
+        self.kernel = kernel;
+        self
+    }
+
+    /// Set the support-vector budget.
+    pub fn budget(mut self, budget: usize) -> Self {
+        self.budget = budget;
+        self
+    }
+
+    /// Set the regularization λ directly.
+    pub fn lambda(mut self, lambda: f64) -> Self {
+        self.lambda = lambda;
+        self
+    }
+
+    /// Derive λ from the paper's `C` convention: `λ = 1/(n·C)`.
+    pub fn c(mut self, c: f64, n_train: usize) -> Self {
+        self.lambda = 1.0 / (c * n_train as f64);
+        self
+    }
+
+    /// Set the budget maintenance strategy.
+    pub fn strategy(mut self, strategy: Strategy) -> Self {
+        self.strategy = strategy;
+        self
+    }
+
+    /// Set the lookup-table grid resolution.
+    pub fn grid(mut self, grid: usize) -> Self {
+        self.grid = grid;
+        self
+    }
+
+    /// Validate hyperparameters and the kernel/strategy combination.
+    /// `budget == 0` (unbudgeted) is accepted here; budgeted estimators
+    /// impose their own `B ≥ 2` on top.
+    pub fn validate(&self) -> Result<()> {
+        self.kernel.validate()?;
+        ensure!(
+            self.lambda.is_finite() && self.lambda > 0.0,
+            "lambda must be positive and finite, got {}",
+            self.lambda
+        );
+        ensure!(self.grid >= 2, "lookup grid must be at least 2, got {}", self.grid);
+        ensure!(
+            self.strategy.valid_for(&self.kernel),
+            "maintenance strategy {} is not valid for the {} kernel: merge-based \
+             maintenance requires the Gaussian closed-form geometry — use the \
+             removal or projection strategy instead",
+            self.strategy.name(),
+            self.kernel.describe()
+        );
+        Ok(())
+    }
+}
+
+/// Run/instrumentation knobs: everything about *how* a training run is
+/// executed and observed, none of which changes the hypothesis class.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// Passes (epochs) over the data in [`Estimator::fit`]
+    /// (`partial_fit` always performs exactly one pass).
+    pub passes: usize,
+    /// RNG seed controlling the visit order.
+    pub seed: u64,
+    /// Shuffle the visit order each `fit` pass. `partial_fit` never
+    /// shuffles — it consumes the stream in presented order, which is what
+    /// makes `fit` (with `shuffle = false`, one pass) and a single
+    /// `partial_fit` bit-identical.
+    pub shuffle: bool,
+    /// Learning-rate schedule; `None` = Pegasos `1/(λt)`.
+    pub learning_rate: Option<LearningRate>,
+    /// Record Table-3-style agreement statistics (Gaussian + merge only;
+    /// expensive, for the audit experiment).
+    pub audit: bool,
+    /// Record an objective/accuracy curve every `curve_every` steps
+    /// (0 = never).
+    pub curve_every: u64,
+    /// Rows subsampled for each curve evaluation.
+    pub curve_sample: usize,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            passes: 1,
+            seed: 0,
+            shuffle: true,
+            learning_rate: None,
+            audit: false,
+            curve_every: 0,
+            curve_sample: 512,
+        }
+    }
+}
+
+impl RunConfig {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn passes(mut self, passes: usize) -> Self {
+        self.passes = passes;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn shuffle(mut self, shuffle: bool) -> Self {
+        self.shuffle = shuffle;
+        self
+    }
+
+    pub fn learning_rate(mut self, lr: LearningRate) -> Self {
+        self.learning_rate = Some(lr);
+        self
+    }
+
+    pub fn audit(mut self, audit: bool) -> Self {
+        self.audit = audit;
+        self
+    }
+
+    pub fn curve(mut self, every: u64, sample: usize) -> Self {
+        self.curve_every = every;
+        self.curve_sample = sample;
+        self
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.passes >= 1, "need at least one pass, got {}", self.passes);
+        if self.curve_every > 0 {
+            ensure!(self.curve_sample >= 1, "curve_sample must be positive when curves are on");
+        }
+        Ok(())
+    }
+}
+
+/// Everything an SGD-family training run produces besides the model itself
+/// (the kernel-generic sibling of the legacy `TrainReport`, which bundles
+/// the Gaussian model).
+#[derive(Debug, Clone, Default)]
+pub struct FitSummary {
+    /// SGD steps executed so far (cumulative across `partial_fit` calls).
+    pub steps: u64,
+    /// Steps that violated the margin and inserted an SV.
+    pub sv_inserts: u64,
+    /// Budget maintenance events triggered.
+    pub maintenance_events: u64,
+    /// Section timings (SGD / maintenance A / maintenance B).
+    pub profiler: SectionProfiler,
+    /// Total wall time spent inside training loops.
+    pub wall_seconds: f64,
+    /// Sum of weight degradations over all maintenance events.
+    pub total_weight_degradation: f64,
+    /// Objective curve (empty unless `curve_every > 0`).
+    pub curve: Vec<CurvePoint>,
+    /// Agreement statistics (present iff `audit`).
+    pub agreement: Option<AgreementStats>,
+}
+
+impl FitSummary {
+    /// Fraction of SGD steps that triggered budget maintenance — the
+    /// paper's "merging frequency" (Table 3).
+    pub fn merging_frequency(&self) -> f64 {
+        if self.steps == 0 {
+            0.0
+        } else {
+            self.maintenance_events as f64 / self.steps as f64
+        }
+    }
+
+    /// Fraction of total accounted time spent in budget maintenance.
+    pub fn maintenance_fraction(&self) -> f64 {
+        let total = self.profiler.total_seconds();
+        if total <= 0.0 {
+            0.0
+        } else {
+            self.profiler.maintenance_seconds() / total
+        }
+    }
+}
+
+/// The unified training/inference contract.
+///
+/// `Data` is the dataset type an implementation ingests: the binary
+/// trainers ([`super::BsgdEstimator`], [`super::PegasosEstimator`],
+/// [`super::SmoEstimator`]) consume [`crate::data::Dataset`] (±1 labels);
+/// the one-vs-rest reducer ([`super::OneVsRestEstimator`]) consumes
+/// [`crate::solver::multiclass::MulticlassDataset`] (class indices).
+///
+/// Inference methods take flat `f32` feature rows, so a serving layer can
+/// drive any estimator without constructing a labeled dataset.
+pub trait Estimator {
+    /// Dataset type this estimator trains on.
+    type Data;
+
+    /// Reset any learned state and train from scratch.
+    fn fit(&mut self, data: &Self::Data) -> Result<()>;
+
+    /// Streaming/online ingest — the production path: continue training
+    /// (without resetting) with one pass over `data` in presented order.
+    /// On a fresh estimator this initializes the model from the first
+    /// batch.
+    fn partial_fit(&mut self, data: &Self::Data) -> Result<()>;
+
+    /// Raw decision value(s) for one feature row: one entry for binary
+    /// estimators, K entries (per-class scores) for multiclass.
+    fn decision_function(&self, x: &[f32]) -> Result<Vec<f64>>;
+
+    /// Predicted label for one feature row: ±1 for binary estimators, the
+    /// class index (as `f32`) for multiclass.
+    fn predict(&self, x: &[f32]) -> Result<f32>;
+
+    /// Feature dimension, once fitted.
+    fn dim(&self) -> Option<usize>;
+
+    /// Whether the estimator holds a trained model.
+    fn is_fitted(&self) -> bool {
+        self.dim().is_some()
+    }
+
+    /// Predictions for a flat row-major batch (`x.len()` must be a
+    /// multiple of [`Estimator::dim`]).
+    fn predict_batch(&self, x: &[f32]) -> Result<Vec<f32>> {
+        let d = self.dim().context("estimator is not fitted")?;
+        ensure!(
+            x.len() % d == 0,
+            "batch buffer length {} is not a multiple of the feature dimension {d}",
+            x.len()
+        );
+        x.chunks_exact(d).map(|row| self.predict(row)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn svm_config_builder_chains() {
+        let cfg = SvmConfig::new()
+            .kernel(KernelSpec::gaussian(2.0))
+            .budget(50)
+            .c(10.0, 1000)
+            .strategy(Strategy::Removal)
+            .grid(100);
+        assert_eq!(cfg.budget, 50);
+        assert!((cfg.lambda - 1.0 / 10_000.0).abs() < 1e-18);
+        assert_eq!(cfg.grid, 100);
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn merge_strategy_rejected_for_non_gaussian_kernels() {
+        let bad = SvmConfig::new().kernel(KernelSpec::linear());
+        let err = bad.validate().unwrap_err().to_string();
+        assert!(err.contains("removal or projection"), "{err}");
+        // Removal fixes it.
+        SvmConfig::new()
+            .kernel(KernelSpec::linear())
+            .strategy(Strategy::Removal)
+            .validate()
+            .unwrap();
+    }
+
+    #[test]
+    fn config_validation_rejects_bad_numbers() {
+        assert!(SvmConfig::new().lambda(0.0).validate().is_err());
+        assert!(SvmConfig::new().lambda(-1.0).validate().is_err());
+        assert!(SvmConfig::new().lambda(f64::NAN).validate().is_err());
+        assert!(SvmConfig::new().grid(1).validate().is_err());
+        assert!(SvmConfig::new().kernel(KernelSpec::gaussian(0.0)).validate().is_err());
+        assert!(RunConfig::new().passes(0).validate().is_err());
+        RunConfig::new().passes(3).curve(100, 64).validate().unwrap();
+    }
+
+    #[test]
+    fn fit_summary_ratios() {
+        let mut s = FitSummary { steps: 100, maintenance_events: 25, ..Default::default() };
+        assert!((s.merging_frequency() - 0.25).abs() < 1e-15);
+        s.steps = 0;
+        assert_eq!(s.merging_frequency(), 0.0);
+        assert_eq!(s.maintenance_fraction(), 0.0);
+    }
+}

@@ -15,19 +15,42 @@
 //! attribution: SGD-step time vs. budget-maintenance time, with maintenance
 //! split into Section A (computing `h`/`WD` per candidate) and Section B
 //! (everything else) — the data behind Figure 3 and Table 3.
+//!
+//! Two surfaces share one generic SGD core ([`run_sgd_passes`]):
+//!
+//! * [`BsgdEstimator`] — the [`Estimator`]-trait implementation: kernel
+//!   selection via [`SvmConfig`], streaming ingest via `partial_fit`.
+//!   Gaussian models get the full strategy menu (merge/removal/projection
+//!   plus the audit instrumentation); other kernels run removal or
+//!   projection maintenance (the merge geometry is Gaussian-specific, and
+//!   `SvmConfig::validate` rejects the combination up front).
+//! * [`train_bsgd`] / [`BsgdOptions`] — the legacy Gaussian-only entry
+//!   point, kept as a thin shim over the estimator so the experiment suite
+//!   regenerates every paper table unchanged. Prefer the estimator surface
+//!   in new code.
 
 use std::time::Instant;
 
-use crate::budget::{audit_event, LookupTable, Maintainer, MergeSolver, Strategy};
+use anyhow::{ensure, Context, Result};
+
+use crate::budget::projection::maintain_projection;
+use crate::budget::removal::maintain_removal;
+use crate::budget::{audit_event, shared_lookup_table, Maintainer, MergeSolver, Strategy};
 use crate::data::Dataset;
-use crate::kernel::Gaussian;
+use crate::kernel::{Gaussian, Kernel, KernelSpec};
 use crate::metrics::{AgreementStats, Section, SectionProfiler};
-use crate::model::BudgetModel;
+use crate::model::{AnyModel, BudgetModel};
 use crate::util::rng::Rng;
 
+use super::api::{Estimator, FitSummary, RunConfig, SvmConfig};
 use super::schedule::LearningRate;
 
-/// Options for one BSGD training run.
+/// Options for one legacy BSGD training run (Gaussian kernel only).
+///
+/// Legacy shim: this flat struct predates the [`SvmConfig`] (model
+/// hyperparameters) / [`RunConfig`] (run knobs) split — [`BsgdOptions::split`]
+/// produces that pair, and [`train_bsgd`] is now a thin wrapper over
+/// [`BsgdEstimator`]. Prefer the estimator surface in new code.
 #[derive(Debug, Clone)]
 pub struct BsgdOptions {
     /// Budget B — maximum number of support vectors.
@@ -80,6 +103,45 @@ impl BsgdOptions {
     pub fn with_c(budget: usize, c: f64, gamma: f64, n_train: usize) -> Self {
         Self::new(budget, 1.0 / (c * n_train as f64), gamma)
     }
+
+    /// Reject invalid hyperparameters with a descriptive error instead of
+    /// letting a bad config panic (or silently misbehave) mid-run. Called
+    /// by [`train_bsgd`] and the CLI. Delegates to the `SvmConfig` /
+    /// `RunConfig` validators (one source of truth for the λ/γ/grid
+    /// invariants) plus the budgeted-trainer `B ≥ 2` requirement.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(
+            self.budget >= 2,
+            "budget must be at least 2 (merging needs a pair), got {}",
+            self.budget
+        );
+        let (config, run) = self.split();
+        config.validate()?;
+        run.validate()
+    }
+
+    /// Split into the new configuration pair: model hyperparameters
+    /// ([`SvmConfig`]) and run/instrumentation knobs ([`RunConfig`]).
+    pub fn split(&self) -> (SvmConfig, RunConfig) {
+        (
+            SvmConfig {
+                kernel: KernelSpec::Gaussian { gamma: self.gamma },
+                budget: self.budget,
+                lambda: self.lambda,
+                strategy: self.strategy,
+                grid: self.grid,
+            },
+            RunConfig {
+                passes: self.passes,
+                seed: self.seed,
+                shuffle: true,
+                learning_rate: self.learning_rate,
+                audit: self.audit,
+                curve_every: self.curve_every,
+                curve_sample: self.curve_sample,
+            },
+        )
+    }
 }
 
 /// One point of the training curve.
@@ -94,7 +156,8 @@ pub struct CurvePoint {
     pub num_sv: usize,
 }
 
-/// Everything a training run produces.
+/// Everything a legacy training run produces: the Gaussian model plus the
+/// kernel-generic [`FitSummary`] fields, flattened (pre-split layout).
 #[derive(Debug, Clone)]
 pub struct TrainReport {
     pub model: BudgetModel,
@@ -138,103 +201,91 @@ impl TrainReport {
     }
 }
 
-/// Train a budgeted SVM with SGD. See module docs for the update rule.
-pub fn train_bsgd(train: &Dataset, opts: &BsgdOptions) -> TrainReport {
-    assert!(opts.budget >= 2, "budget must be at least 2 (merging needs a pair)");
-    assert!(opts.lambda > 0.0);
-    assert!(!train.is_empty());
+/// SGD hyperparameters threaded through the generic pass loop.
+pub(crate) struct SgdHyper {
+    /// 0 = unbudgeted (the maintenance branch never triggers).
+    pub budget: usize,
+    pub lambda: f64,
+    pub lr: LearningRate,
+    pub curve_every: u64,
+    pub curve_sample: usize,
+}
 
+/// The kernel-generic SGD pass loop shared by the budgeted BSGD estimator
+/// (all kernels), the legacy `train_bsgd` path and the unbudgeted Pegasos
+/// estimator (`budget = 0`).
+///
+/// `maintain` executes one budget-maintenance event and returns its weight
+/// degradation; `audit` (optional) observes the pre-maintenance model state
+/// for the Table-3 agreement instrumentation. Counters, timings and the
+/// objective curve accumulate into `summary` (whose `agreement` field is
+/// not touched here — the audit hook owns those statistics).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_sgd_passes<K: Kernel + Copy>(
+    model: &mut BudgetModel<K>,
+    train: &Dataset,
+    passes: usize,
+    shuffle: bool,
+    hyper: &SgdHyper,
+    rng: &mut Rng,
+    summary: &mut FitSummary,
+    maintain: &mut dyn FnMut(&mut BudgetModel<K>, &mut SectionProfiler) -> f64,
+    mut audit: Option<&mut dyn FnMut(&BudgetModel<K>)>,
+) {
     let n = train.len();
-    let d = train.dim();
-    let kernel = Gaussian::new(opts.gamma);
-    let lr = opts.learning_rate.unwrap_or(LearningRate::PegasosInvT { lambda: opts.lambda });
-
-    let mut model = BudgetModel::new(d, kernel, opts.budget + 1);
-    let mut maintainer = Maintainer::new(opts.strategy, opts.grid);
-    let mut prof = SectionProfiler::new();
-    let mut rng = Rng::new(opts.seed);
-    let mut agreement = opts.audit.then(AgreementStats::new);
-    // The audit needs a table even when the primary strategy is GSS.
-    let audit_table: Option<LookupTable> =
-        opts.audit.then(|| LookupTable::build(opts.grid.max(2)));
+    debug_assert!(n > 0);
 
     // Precompute row norms once (reused by every margin evaluation).
     let norms: Vec<f32> = (0..n).map(|i| crate::kernel::norm2(train.row(i))).collect();
 
     // Fixed evaluation sample for the curve.
-    let curve_idx: Vec<usize> = if opts.curve_every > 0 {
-        rng.sample_indices(n, opts.curve_sample.min(n))
+    let curve_idx: Vec<usize> = if hyper.curve_every > 0 {
+        rng.sample_indices(n, hyper.curve_sample.min(n))
     } else {
         Vec::new()
     };
 
-    let mut steps: u64 = 0;
-    let mut sv_inserts: u64 = 0;
-    let mut maintenance_events: u64 = 0;
-    let mut total_wd = 0.0f64;
-    let mut curve = Vec::new();
     let mut order: Vec<usize> = (0..n).collect();
-
     let wall_start = Instant::now();
-    for _pass in 0..opts.passes {
-        rng.shuffle(&mut order);
+    for _pass in 0..passes {
+        if shuffle {
+            rng.shuffle(&mut order);
+        }
         for &i in &order {
-            steps += 1;
+            summary.steps += 1;
+            let steps = summary.steps;
             let t_sgd = Instant::now();
             let x = train.row(i);
             let y = train.label(i) as f64;
             let margin = y * model.decision_with_norm(x, norms[i]);
-            model.rescale(lr.shrink(steps, opts.lambda));
-            let violated = margin < 1.0;
-            if violated {
-                model.push(x, lr.eta(steps) * y);
-                sv_inserts += 1;
+            model.rescale(hyper.lr.shrink(steps, hyper.lambda));
+            if margin < 1.0 {
+                model.push(x, hyper.lr.eta(steps) * y);
+                summary.sv_inserts += 1;
             }
-            prof.add(Section::SgdStep, t_sgd.elapsed());
+            summary.profiler.add(Section::SgdStep, t_sgd.elapsed());
 
-            if model.num_sv() > opts.budget {
-                maintenance_events += 1;
-                if let (Some(stats), Some(table)) = (agreement.as_mut(), audit_table.as_ref()) {
-                    if let Some(rec) = audit_event(&model, table) {
-                        stats.events += 1;
-                        stats.equal_decisions += rec.equal as u64;
-                        if !rec.equal {
-                            stats.wd_diff_on_disagreement.push(rec.wd_diff);
-                        }
-                        if rec.factors_valid {
-                            stats.factor_gss.push(rec.factor_gss);
-                            stats.factor_lookup.push(rec.factor_lookup);
-                        }
-                    }
+            if hyper.budget > 0 && model.num_sv() > hyper.budget {
+                summary.maintenance_events += 1;
+                if let Some(hook) = audit.as_mut() {
+                    (*hook)(model);
                 }
-                total_wd += maintainer.maintain(&mut model, &mut prof);
+                summary.total_weight_degradation += maintain(model, &mut summary.profiler);
             }
 
-            if opts.curve_every > 0 && steps % opts.curve_every == 0 {
-                curve.push(curve_point(&model, train, &curve_idx, opts.lambda, steps));
+            if hyper.curve_every > 0 && steps % hyper.curve_every == 0 {
+                summary.curve.push(curve_point(model, train, &curve_idx, hyper.lambda, steps));
             }
         }
     }
-    let wall_seconds = wall_start.elapsed().as_secs_f64();
-    if opts.curve_every > 0 {
-        curve.push(curve_point(&model, train, &curve_idx, opts.lambda, steps));
+    if hyper.curve_every > 0 {
+        summary.curve.push(curve_point(model, train, &curve_idx, hyper.lambda, summary.steps));
     }
-
-    TrainReport {
-        model,
-        steps,
-        sv_inserts,
-        maintenance_events,
-        profiler: prof,
-        wall_seconds,
-        total_weight_degradation: total_wd,
-        curve,
-        agreement,
-    }
+    summary.wall_seconds += wall_start.elapsed().as_secs_f64();
 }
 
-fn curve_point(
-    model: &BudgetModel,
+fn curve_point<K: Kernel + Copy>(
+    model: &BudgetModel<K>,
     train: &Dataset,
     idx: &[usize],
     lambda: f64,
@@ -257,6 +308,262 @@ fn curve_point(
         sample_accuracy: correct as f64 / m,
         num_sv: model.num_sv(),
     }
+}
+
+/// Internal trained state of a [`BsgdEstimator`].
+struct BsgdState {
+    model: AnyModel,
+    summary: FitSummary,
+    /// Merge-engine scratch (Gaussian models only), kept across
+    /// `partial_fit` calls so the hot-path buffers survive.
+    maintainer: Option<Maintainer>,
+    rng: Rng,
+}
+
+/// Budgeted SGD trainer behind the unified [`Estimator`] surface:
+/// kernel-generic (via [`SvmConfig::kernel`]), streaming-capable (via
+/// [`Estimator::partial_fit`]), with the paper's merge-based maintenance
+/// available on Gaussian models and removal/projection on every kernel.
+pub struct BsgdEstimator {
+    config: SvmConfig,
+    run: RunConfig,
+    state: Option<BsgdState>,
+}
+
+impl BsgdEstimator {
+    /// Validate the configuration pair and build an unfitted estimator.
+    pub fn new(config: SvmConfig, run: RunConfig) -> Result<Self> {
+        config.validate()?;
+        run.validate()?;
+        ensure!(
+            config.budget >= 2,
+            "budgeted SGD needs a budget of at least 2 (merging needs a pair), got {}; \
+             use PegasosEstimator for unbudgeted training",
+            config.budget
+        );
+        if run.audit {
+            ensure!(
+                config.kernel.supports_merging(),
+                "audit instrumentation compares merge solvers and requires the Gaussian kernel"
+            );
+        }
+        Ok(BsgdEstimator { config, run, state: None })
+    }
+
+    /// Unbudgeted construction (budget = 0: the maintenance branch never
+    /// runs) — the engine behind `PegasosEstimator`.
+    pub(crate) fn new_unbudgeted(kernel: KernelSpec, lambda: f64, run: RunConfig) -> Result<Self> {
+        let config = SvmConfig::new()
+            .kernel(kernel)
+            .budget(0)
+            .lambda(lambda)
+            .strategy(Strategy::Removal);
+        config.validate()?;
+        run.validate()?;
+        ensure!(!run.audit, "audit instrumentation requires a budgeted Gaussian merge run");
+        Ok(BsgdEstimator { config, run, state: None })
+    }
+
+    /// The model hyperparameters this estimator was built with.
+    pub fn config(&self) -> &SvmConfig {
+        &self.config
+    }
+
+    /// The trained model, if fitted.
+    pub fn model(&self) -> Option<&AnyModel> {
+        self.state.as_ref().map(|s| &s.model)
+    }
+
+    /// Cumulative training statistics, if fitted.
+    pub fn summary(&self) -> Option<&FitSummary> {
+        self.state.as_ref().map(|s| &s.summary)
+    }
+
+    /// Consume the estimator, returning the trained model.
+    pub fn into_model(self) -> Result<AnyModel> {
+        Ok(self.state.context("estimator is not fitted")?.model)
+    }
+
+    /// Consume into the legacy [`TrainReport`] (Gaussian models only).
+    pub fn into_train_report(self) -> Result<TrainReport> {
+        let st = self.state.context("estimator is not fitted")?;
+        let model = st.model.into_gaussian()?;
+        let s = st.summary;
+        Ok(TrainReport {
+            model,
+            steps: s.steps,
+            sv_inserts: s.sv_inserts,
+            maintenance_events: s.maintenance_events,
+            profiler: s.profiler,
+            wall_seconds: s.wall_seconds,
+            total_weight_degradation: s.total_weight_degradation,
+            curve: s.curve,
+            agreement: s.agreement,
+        })
+    }
+
+    /// One ingest call: `passes` passes over `train`, shuffling between
+    /// passes iff `shuffle`. Creates the state on first use.
+    fn ingest(&mut self, train: &Dataset, passes: usize, shuffle: bool) -> Result<()> {
+        ensure!(!train.is_empty(), "cannot train on an empty dataset");
+        if self.state.is_none() {
+            let capacity = if self.config.budget > 0 {
+                self.config.budget + 1
+            } else {
+                train.len().min(4096)
+            };
+            self.state = Some(BsgdState {
+                model: AnyModel::new(train.dim(), self.config.kernel, capacity)?,
+                summary: FitSummary {
+                    agreement: self.run.audit.then(AgreementStats::new),
+                    ..Default::default()
+                },
+                maintainer: None,
+                rng: Rng::new(self.run.seed),
+            });
+        }
+        let hyper = SgdHyper {
+            budget: self.config.budget,
+            lambda: self.config.lambda,
+            lr: self
+                .run
+                .learning_rate
+                .unwrap_or(LearningRate::PegasosInvT { lambda: self.config.lambda }),
+            curve_every: self.run.curve_every,
+            curve_sample: self.run.curve_sample,
+        };
+        let strategy = self.config.strategy;
+        let grid = self.config.grid;
+        let st = self.state.as_mut().unwrap();
+        ensure!(
+            st.model.dim() == train.dim(),
+            "dataset dimension {} does not match the fitted model dimension {}",
+            train.dim(),
+            st.model.dim()
+        );
+        match &mut st.model {
+            AnyModel::Gaussian(model) => {
+                // Full-featured Gaussian path: any strategy + optional audit.
+                let mut maintainer =
+                    st.maintainer.take().unwrap_or_else(|| Maintainer::new(strategy, grid));
+                let audit_table =
+                    st.summary.agreement.is_some().then(|| shared_lookup_table(grid.max(2)));
+                let mut agreement = st.summary.agreement.take();
+                {
+                    let mut maintain = |m: &mut BudgetModel<Gaussian>,
+                                        prof: &mut SectionProfiler|
+                     -> f64 { maintainer.maintain(m, prof) };
+                    let mut audit_hook = |m: &BudgetModel<Gaussian>| {
+                        if let (Some(stats), Some(table)) =
+                            (agreement.as_mut(), audit_table.as_ref())
+                        {
+                            if let Some(rec) = audit_event(m, table) {
+                                stats.events += 1;
+                                stats.equal_decisions += rec.equal as u64;
+                                if !rec.equal {
+                                    stats.wd_diff_on_disagreement.push(rec.wd_diff);
+                                }
+                                if rec.factors_valid {
+                                    stats.factor_gss.push(rec.factor_gss);
+                                    stats.factor_lookup.push(rec.factor_lookup);
+                                }
+                            }
+                        }
+                    };
+                    let audit_opt: Option<&mut dyn FnMut(&BudgetModel<Gaussian>)> =
+                        if audit_table.is_some() { Some(&mut audit_hook) } else { None };
+                    run_sgd_passes(
+                        model,
+                        train,
+                        passes,
+                        shuffle,
+                        &hyper,
+                        &mut st.rng,
+                        &mut st.summary,
+                        &mut maintain,
+                        audit_opt,
+                    );
+                }
+                st.summary.agreement = agreement;
+                st.maintainer = Some(maintainer);
+            }
+            AnyModel::Linear(model) => {
+                ingest_generic(model, strategy, train, passes, shuffle, &hyper, &mut st.rng, &mut st.summary)
+            }
+            AnyModel::Polynomial(model) => {
+                ingest_generic(model, strategy, train, passes, shuffle, &hyper, &mut st.rng, &mut st.summary)
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Non-Gaussian ingest: removal/projection maintenance only (validated at
+/// construction), no audit instrumentation.
+#[allow(clippy::too_many_arguments)]
+fn ingest_generic<K: Kernel + Copy>(
+    model: &mut BudgetModel<K>,
+    strategy: Strategy,
+    train: &Dataset,
+    passes: usize,
+    shuffle: bool,
+    hyper: &SgdHyper,
+    rng: &mut Rng,
+    summary: &mut FitSummary,
+) {
+    let mut maintain = |m: &mut BudgetModel<K>, prof: &mut SectionProfiler| -> f64 {
+        match strategy {
+            Strategy::Projection => maintain_projection(m, prof).unwrap_or_else(|_| {
+                // Numerically degenerate Gram matrix: fall back to removal.
+                maintain_removal(m, prof)
+            }),
+            // Removal (merge strategies are rejected by SvmConfig::validate
+            // for non-Gaussian kernels before we can get here).
+            _ => maintain_removal(m, prof),
+        }
+    };
+    run_sgd_passes(model, train, passes, shuffle, hyper, rng, summary, &mut maintain, None);
+}
+
+impl Estimator for BsgdEstimator {
+    type Data = Dataset;
+
+    fn fit(&mut self, data: &Dataset) -> Result<()> {
+        self.state = None;
+        self.ingest(data, self.run.passes, self.run.shuffle)
+    }
+
+    fn partial_fit(&mut self, data: &Dataset) -> Result<()> {
+        self.ingest(data, 1, false)
+    }
+
+    fn decision_function(&self, x: &[f32]) -> Result<Vec<f64>> {
+        let st = self.state.as_ref().context("estimator is not fitted")?;
+        ensure!(x.len() == st.model.dim(), "feature row has wrong dimension");
+        Ok(vec![st.model.decision(x)])
+    }
+
+    fn predict(&self, x: &[f32]) -> Result<f32> {
+        let st = self.state.as_ref().context("estimator is not fitted")?;
+        ensure!(x.len() == st.model.dim(), "feature row has wrong dimension");
+        Ok(st.model.predict(x))
+    }
+
+    fn dim(&self) -> Option<usize> {
+        self.state.as_ref().map(|s| s.model.dim())
+    }
+}
+
+/// Train a budgeted SVM with SGD (legacy Gaussian-only surface; thin shim
+/// over [`BsgdEstimator`]). Panics on invalid options — call
+/// [`BsgdOptions::validate`] first (as the CLI does) to fail gracefully.
+pub fn train_bsgd(train: &Dataset, opts: &BsgdOptions) -> TrainReport {
+    opts.validate().expect("invalid BsgdOptions");
+    assert!(!train.is_empty());
+    let (config, run) = opts.split();
+    let mut est = BsgdEstimator::new(config, run).expect("validated options");
+    est.fit(train).expect("BSGD training failed");
+    est.into_train_report().expect("fitted estimator")
 }
 
 #[cfg(test)]
@@ -385,5 +692,135 @@ mod tests {
         let report = train_bsgd(&ds, &opts);
         let expect = report.maintenance_events as f64 / report.steps as f64;
         assert!((report.merging_frequency() - expect).abs() < 1e-15);
+    }
+
+    #[test]
+    fn validate_rejects_bad_options() {
+        let mut opts = BsgdOptions::new(0, 1e-3, 1.0);
+        assert!(opts.validate().is_err(), "budget 0");
+        opts.budget = 50;
+        opts.lambda = 0.0;
+        assert!(opts.validate().is_err(), "lambda 0");
+        opts.lambda = 1e-3;
+        opts.gamma = -2.0;
+        assert!(opts.validate().is_err(), "negative gamma");
+        opts.gamma = 1.0;
+        opts.grid = 1;
+        assert!(opts.validate().is_err(), "grid 1");
+        opts.grid = 400;
+        opts.validate().unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid BsgdOptions")]
+    fn train_bsgd_panics_with_message_on_bad_config() {
+        let ds = two_moons(50, 0.1, 1);
+        let opts = BsgdOptions::new(0, 1e-3, 1.0);
+        train_bsgd(&ds, &opts);
+    }
+
+    // ---- estimator-surface behaviour ----
+
+    #[test]
+    fn estimator_fit_matches_legacy_train_bsgd() {
+        let (ds, opts) = moons_opts(25);
+        let legacy = train_bsgd(&ds, &opts);
+        let (config, run) = opts.split();
+        let mut est = BsgdEstimator::new(config, run).unwrap();
+        est.fit(&ds).unwrap();
+        let summary = est.summary().unwrap();
+        assert_eq!(summary.steps, legacy.steps);
+        assert_eq!(summary.sv_inserts, legacy.sv_inserts);
+        assert_eq!(summary.maintenance_events, legacy.maintenance_events);
+        let model = est.model().unwrap();
+        let probe = [0.25f32, -0.4];
+        assert!((model.decision(&probe) - legacy.model.decision(&probe)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn partial_fit_equals_single_unshuffled_fit_pass() {
+        let ds = two_moons(300, 0.12, 9);
+        let config = SvmConfig::new()
+            .kernel(KernelSpec::gaussian(2.0))
+            .budget(20)
+            .c(10.0, ds.len());
+        let run = RunConfig::new().passes(1).shuffle(false).seed(7);
+
+        let mut fitted = BsgdEstimator::new(config.clone(), run.clone()).unwrap();
+        fitted.fit(&ds).unwrap();
+
+        let mut streamed = BsgdEstimator::new(config, run).unwrap();
+        streamed.partial_fit(&ds).unwrap();
+
+        assert_eq!(fitted.summary().unwrap().steps, streamed.summary().unwrap().steps);
+        for i in 0..20 {
+            let a = fitted.decision_function(ds.row(i)).unwrap()[0];
+            let b = streamed.decision_function(ds.row(i)).unwrap()[0];
+            assert!((a - b).abs() < 1e-12, "row {i}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn partial_fit_continues_streaming() {
+        let ds = two_moons(400, 0.12, 5);
+        let config = SvmConfig::new()
+            .kernel(KernelSpec::gaussian(2.0))
+            .budget(25)
+            .c(10.0, ds.len());
+        let mut est = BsgdEstimator::new(config, RunConfig::new()).unwrap();
+        for _ in 0..4 {
+            est.partial_fit(&ds).unwrap();
+        }
+        assert_eq!(est.summary().unwrap().steps, 4 * 400);
+        assert!(est.model().unwrap().num_sv() <= 25);
+        let acc: f64 = {
+            let preds = est.predict_batch(ds.features()).unwrap();
+            crate::metrics::accuracy(&preds, ds.labels())
+        };
+        assert!(acc > 0.85, "streamed accuracy {acc}");
+    }
+
+    #[test]
+    fn non_gaussian_kernels_train_with_removal() {
+        // Linearly separable blobs: the linear kernel should do well.
+        let mut ds = Dataset::empty("blobs", 2);
+        let mut rng = Rng::new(11);
+        for _ in 0..150 {
+            ds.push_row(&[rng.normal() as f32 * 0.3 - 2.0, rng.normal() as f32 * 0.3], 1.0);
+            ds.push_row(&[rng.normal() as f32 * 0.3 + 2.0, rng.normal() as f32 * 0.3], -1.0);
+        }
+        for kernel in [KernelSpec::linear(), KernelSpec::polynomial(2, 1.0)] {
+            let config = SvmConfig::new()
+                .kernel(kernel)
+                .budget(30)
+                .strategy(Strategy::Removal)
+                .c(10.0, ds.len());
+            let mut est = BsgdEstimator::new(config, RunConfig::new().passes(4)).unwrap();
+            est.fit(&ds).unwrap();
+            assert!(est.model().unwrap().num_sv() <= 30);
+            let preds = est.predict_batch(ds.features()).unwrap();
+            let acc = crate::metrics::accuracy(&preds, ds.labels());
+            assert!(acc > 0.9, "{}: accuracy {acc}", kernel.describe());
+        }
+    }
+
+    #[test]
+    fn merge_with_non_gaussian_kernel_is_rejected_at_construction() {
+        let config = SvmConfig::new().kernel(KernelSpec::linear()).budget(10);
+        let err = match BsgdEstimator::new(config, RunConfig::new()) {
+            Err(e) => e.to_string(),
+            Ok(_) => panic!("merge + linear must be rejected"),
+        };
+        assert!(err.contains("removal or projection"), "{err}");
+    }
+
+    #[test]
+    fn unfitted_estimator_errors_cleanly() {
+        let est =
+            BsgdEstimator::new(SvmConfig::new(), RunConfig::new()).unwrap();
+        assert!(!est.is_fitted());
+        assert!(est.predict(&[0.0, 0.0]).is_err());
+        assert!(est.decision_function(&[0.0, 0.0]).is_err());
+        assert!(est.predict_batch(&[0.0, 0.0]).is_err());
     }
 }

@@ -1,19 +1,32 @@
-//! Training algorithms.
+//! Training algorithms behind one unified [`Estimator`] surface
+//! (`fit` / `partial_fit` / `decision_function` / `predict_batch`):
 //!
+//! * [`api`] — the [`Estimator`] trait plus the configuration split into
+//!   model hyperparameters ([`SvmConfig`], with a typed [`crate::kernel::KernelSpec`])
+//!   and run/instrumentation knobs ([`RunConfig`]).
 //! * [`bsgd`] — Budgeted Stochastic Gradient Descent (Wang et al. 2012),
-//!   the system this paper accelerates; fully instrumented.
+//!   the system this paper accelerates; fully instrumented
+//!   ([`BsgdEstimator`], legacy [`train_bsgd`]).
 //! * [`multiclass`] — one-vs-rest reduction (the paper's "other tasks"
-//!   generalization), K budgeted machines sharing the merge machinery.
-//! * [`pegasos`] — unbudgeted kernelized Pegasos baseline.
+//!   generalization), K budgeted machines sharing one lookup table
+//!   ([`OneVsRestEstimator`], legacy `train_multiclass`).
+//! * [`pegasos`] — unbudgeted kernelized Pegasos baseline
+//!   ([`PegasosEstimator`], legacy `train_pegasos`).
 //! * [`smo`] — a working-set SMO dual solver standing in for LIBSVM as the
-//!   "exact model" reference of Table 1.
+//!   "exact model" reference of Table 1 ([`SmoEstimator`], legacy
+//!   `train_smo`).
 //! * [`schedule`] — learning-rate schedules.
 
+pub mod api;
 pub mod bsgd;
 pub mod multiclass;
 pub mod pegasos;
 pub mod schedule;
 pub mod smo;
 
-pub use bsgd::{train_bsgd, BsgdOptions, CurvePoint, TrainReport};
+pub use api::{Estimator, FitSummary, RunConfig, SvmConfig};
+pub use bsgd::{train_bsgd, BsgdEstimator, BsgdOptions, CurvePoint, TrainReport};
+pub use multiclass::OneVsRestEstimator;
+pub use pegasos::PegasosEstimator;
 pub use schedule::LearningRate;
+pub use smo::SmoEstimator;

@@ -6,12 +6,21 @@
 //! reduction: K independent budgeted binary machines, each trained with the
 //! same merge-solver machinery (so the lookup speed-up applies K-fold), and
 //! prediction by maximal decision value.
+//!
+//! [`OneVsRestEstimator`] is the [`Estimator`]-surface implementation —
+//! kernel-generic and streaming-capable like its binary machines; all K
+//! machines share one process-wide `Arc<LookupTable>` per grid resolution
+//! (see [`crate::budget::lookup::shared`]), so the 400×400 table is built
+//! once, not K times. [`train_multiclass`] / [`MulticlassModel`] remain as
+//! the legacy Gaussian shim.
 
-use anyhow::{ensure, Result};
+use anyhow::{ensure, Context, Result};
 
 use crate::data::Dataset;
-use crate::model::BudgetModel;
-use crate::solver::{train_bsgd, BsgdOptions};
+use crate::model::{AnyModel, BudgetModel};
+
+use super::api::{Estimator, RunConfig, SvmConfig};
+use super::bsgd::{BsgdEstimator, BsgdOptions};
 
 /// Rows with integer class labels in `0..k`.
 #[derive(Debug, Clone)]
@@ -66,7 +75,145 @@ impl MulticlassDataset {
     }
 }
 
-/// A trained one-vs-rest ensemble.
+/// Per-class seed derivation (kept identical to the historical
+/// `train_multiclass` convention so legacy runs stay reproducible).
+fn class_seed(base: u64, c: usize) -> u64 {
+    base ^ (0xC1A55 + c as u64)
+}
+
+/// One-vs-rest reduction behind the unified [`Estimator`] surface:
+/// K budgeted binary machines ([`BsgdEstimator`]), prediction by maximal
+/// decision value. `Data` is [`MulticlassDataset`] (class-index labels);
+/// inference still takes plain feature rows, returning the per-class score
+/// vector from `decision_function` and the argmax class from `predict`.
+pub struct OneVsRestEstimator {
+    config: SvmConfig,
+    run: RunConfig,
+    machines: Vec<BsgdEstimator>,
+}
+
+impl OneVsRestEstimator {
+    /// Validate the configuration pair and build an unfitted estimator.
+    /// The number of classes is learned from the first `fit`/`partial_fit`
+    /// batch.
+    pub fn new(config: SvmConfig, run: RunConfig) -> Result<Self> {
+        // Fail fast on bad configs (each machine re-validates on build).
+        config.validate()?;
+        run.validate()?;
+        ensure!(!run.audit, "audit instrumentation is a binary-trainer feature");
+        Ok(OneVsRestEstimator { config, run, machines: Vec::new() })
+    }
+
+    fn build_machines(&mut self, k: usize) -> Result<()> {
+        self.machines = (0..k)
+            .map(|c| {
+                let mut run = self.run.clone();
+                run.seed = class_seed(self.run.seed, c);
+                BsgdEstimator::new(self.config.clone(), run)
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(())
+    }
+
+    /// Number of classes (0 before the first fit).
+    pub fn num_classes(&self) -> usize {
+        self.machines.len()
+    }
+
+    /// The per-class binary machine.
+    pub fn machine(&self, c: usize) -> Option<&BsgdEstimator> {
+        self.machines.get(c)
+    }
+
+    /// Total support vectors across all machines (≤ K·B).
+    pub fn total_sv(&self) -> usize {
+        self.machines.iter().filter_map(|m| m.model()).map(|m| m.num_sv()).sum()
+    }
+
+    /// Classification accuracy on a multiclass dataset.
+    pub fn accuracy(&self, ds: &MulticlassDataset) -> Result<f64> {
+        if ds.is_empty() {
+            return Ok(0.0);
+        }
+        let mut correct = 0usize;
+        for i in 0..ds.len() {
+            if self.predict(ds.row(i))? as usize == ds.label(i) {
+                correct += 1;
+            }
+        }
+        Ok(correct as f64 / ds.len() as f64)
+    }
+
+    /// Consume the estimator, returning the legacy Gaussian ensemble
+    /// (errors for non-Gaussian kernels).
+    pub fn into_multiclass_model(self) -> Result<MulticlassModel> {
+        ensure!(!self.machines.is_empty(), "estimator is not fitted");
+        let machines = self
+            .machines
+            .into_iter()
+            .map(|m| m.into_model().and_then(AnyModel::into_gaussian))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(MulticlassModel { machines })
+    }
+
+    fn ingest(&mut self, ds: &MulticlassDataset, reset: bool) -> Result<()> {
+        ensure!(!ds.is_empty(), "cannot train on an empty dataset");
+        if reset || self.machines.is_empty() {
+            self.build_machines(ds.num_classes())?;
+        }
+        ensure!(
+            ds.num_classes() <= self.machines.len(),
+            "batch contains class {} but the estimator was initialized with {} classes",
+            ds.num_classes() - 1,
+            self.machines.len()
+        );
+        for (c, machine) in self.machines.iter_mut().enumerate() {
+            let view = ds.binary_view(c);
+            if reset {
+                machine.fit(&view)?;
+            } else {
+                machine.partial_fit(&view)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Estimator for OneVsRestEstimator {
+    type Data = MulticlassDataset;
+
+    fn fit(&mut self, data: &MulticlassDataset) -> Result<()> {
+        self.ingest(data, true)
+    }
+
+    fn partial_fit(&mut self, data: &MulticlassDataset) -> Result<()> {
+        self.ingest(data, false)
+    }
+
+    /// Per-class decision values (length = number of classes).
+    fn decision_function(&self, x: &[f32]) -> Result<Vec<f64>> {
+        ensure!(!self.machines.is_empty(), "estimator is not fitted");
+        self.machines.iter().map(|m| m.decision_function(x).map(|v| v[0])).collect()
+    }
+
+    /// Predicted class index (as `f32`) = argmax of the decision values.
+    fn predict(&self, x: &[f32]) -> Result<f32> {
+        let scores = self.decision_function(x)?;
+        let best = scores
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(c, _)| c)
+            .context("no classes")?;
+        Ok(best as f32)
+    }
+
+    fn dim(&self) -> Option<usize> {
+        self.machines.first().and_then(|m| m.dim())
+    }
+}
+
+/// A trained one-vs-rest ensemble (legacy Gaussian surface).
 pub struct MulticlassModel {
     machines: Vec<BudgetModel>,
 }
@@ -114,24 +261,21 @@ impl MulticlassModel {
     }
 }
 
-/// Train K one-vs-rest budgeted machines. `opts.budget` is the per-machine
-/// budget; the machines are independent, so the experiment runner can
-/// parallelize over classes if desired (here: sequential, deterministic).
+/// Train K one-vs-rest budgeted machines (legacy Gaussian shim over
+/// [`OneVsRestEstimator`]). `opts.budget` is the per-machine budget.
 pub fn train_multiclass(ds: &MulticlassDataset, opts: &BsgdOptions) -> MulticlassModel {
-    let machines = (0..ds.num_classes())
-        .map(|c| {
-            let view = ds.binary_view(c);
-            let mut class_opts = opts.clone();
-            class_opts.seed = opts.seed ^ (0xC1A55 + c as u64);
-            train_bsgd(&view, &class_opts).model
-        })
-        .collect();
-    MulticlassModel { machines }
+    opts.validate().expect("invalid BsgdOptions");
+    let (config, run) = opts.split();
+    let mut est = OneVsRestEstimator::new(config, run).expect("validated options");
+    est.fit(ds).expect("one-vs-rest training failed");
+    est.into_multiclass_model().expect("gaussian ensemble")
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::budget::Strategy;
+    use crate::kernel::KernelSpec;
     use crate::util::rng::Rng;
 
     /// Three well-separated 2-D Gaussian blobs.
@@ -198,5 +342,83 @@ mod tests {
         for c in 0..3 {
             assert!(model.machine(c).num_sv() <= 8, "class {c}");
         }
+    }
+
+    #[test]
+    fn estimator_surface_matches_legacy_ensemble() {
+        let train = three_blobs(300, 5);
+        let mut opts = BsgdOptions::with_c(12, 10.0, 1.0, train.len());
+        opts.passes = 2;
+        let legacy = train_multiclass(&train, &opts);
+
+        let (config, run) = opts.split();
+        let mut est = OneVsRestEstimator::new(config, run).unwrap();
+        est.fit(&train).unwrap();
+        assert_eq!(est.num_classes(), 3);
+        for i in (0..train.len()).step_by(29) {
+            let scores = est.decision_function(train.row(i)).unwrap();
+            let legacy_scores = legacy.decision(train.row(i));
+            for (a, b) in scores.iter().zip(&legacy_scores) {
+                assert!((a - b).abs() < 1e-12, "row {i}");
+            }
+            assert_eq!(est.predict(train.row(i)).unwrap() as usize, legacy.predict(train.row(i)));
+        }
+    }
+
+    #[test]
+    fn streaming_partial_fit_equals_unshuffled_fit() {
+        let train = three_blobs(240, 9);
+        let config = SvmConfig::new()
+            .kernel(KernelSpec::gaussian(1.0))
+            .budget(10)
+            .c(10.0, train.len());
+        let run = RunConfig::new().passes(1).shuffle(false).seed(3);
+
+        let mut fitted = OneVsRestEstimator::new(config.clone(), run.clone()).unwrap();
+        fitted.fit(&train).unwrap();
+        let mut streamed = OneVsRestEstimator::new(config, run).unwrap();
+        streamed.partial_fit(&train).unwrap();
+
+        for i in (0..train.len()).step_by(13) {
+            let a = fitted.decision_function(train.row(i)).unwrap();
+            let b = streamed.decision_function(train.row(i)).unwrap();
+            for (va, vb) in a.iter().zip(&b) {
+                assert!((va - vb).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn non_gaussian_one_vs_rest_trains_with_removal() {
+        let train = three_blobs(300, 21);
+        let config = SvmConfig::new()
+            .kernel(KernelSpec::polynomial(2, 1.0))
+            .budget(15)
+            .strategy(Strategy::Removal)
+            .c(10.0, train.len());
+        let mut est = OneVsRestEstimator::new(config, RunConfig::new().passes(3)).unwrap();
+        est.fit(&train).unwrap();
+        let acc = est.accuracy(&train).unwrap();
+        assert!(acc > 0.85, "polynomial OvR accuracy {acc}");
+        assert!(est.total_sv() <= 3 * 15);
+    }
+
+    #[test]
+    fn partial_fit_rejects_unseen_classes() {
+        let train = three_blobs(120, 2);
+        let config =
+            SvmConfig::new().kernel(KernelSpec::gaussian(1.0)).budget(8).c(10.0, train.len());
+        let mut est = OneVsRestEstimator::new(config, RunConfig::new()).unwrap();
+        // Initialize with only classes {0, 1}.
+        let two_class = MulticlassDataset::new(
+            vec![0.0, 0.0, 4.0, 0.0, 0.1, 0.1, 4.1, 0.1],
+            vec![0, 1, 0, 1],
+            2,
+        )
+        .unwrap();
+        est.partial_fit(&two_class).unwrap();
+        assert_eq!(est.num_classes(), 2);
+        // A batch containing class 2 must be rejected, not silently dropped.
+        assert!(est.partial_fit(&train).is_err());
     }
 }

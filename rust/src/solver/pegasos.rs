@@ -2,18 +2,23 @@
 //! baseline BSGD degenerates to when the budget never binds. Model size
 //! grows with the number of margin violations (linear in n, Steinwart
 //! 2003), which is exactly the scaling problem budgets address.
+//!
+//! [`PegasosEstimator`] is the [`Estimator`]-surface implementation: the
+//! shared SGD core with `budget = 0` (the maintenance branch never runs),
+//! kernel-generic and streaming-capable. [`train_pegasos`] /
+//! [`PegasosOptions`] remain as the legacy Gaussian-only shim.
 
-use std::time::Instant;
+use anyhow::{Context, Result};
 
 use crate::data::Dataset;
-use crate::kernel::Gaussian;
-use crate::metrics::{Section, SectionProfiler};
-use crate::model::BudgetModel;
-use crate::util::rng::Rng;
+use crate::kernel::KernelSpec;
+use crate::metrics::SectionProfiler;
+use crate::model::{AnyModel, BudgetModel};
 
-use super::schedule::LearningRate;
+use super::api::{Estimator, FitSummary, RunConfig};
+use super::bsgd::BsgdEstimator;
 
-/// Options for an unbudgeted Pegasos run.
+/// Options for a legacy unbudgeted Pegasos run (Gaussian kernel only).
 #[derive(Debug, Clone)]
 pub struct PegasosOptions {
     pub lambda: f64,
@@ -22,7 +27,7 @@ pub struct PegasosOptions {
     pub seed: u64,
 }
 
-/// Report of a Pegasos run.
+/// Report of a legacy Pegasos run.
 #[derive(Debug, Clone)]
 pub struct PegasosReport {
     pub model: BudgetModel,
@@ -32,42 +37,79 @@ pub struct PegasosReport {
     pub profiler: SectionProfiler,
 }
 
-/// Train an unbudgeted kernel SVM with Pegasos SGD.
+/// Unbudgeted kernel SGD behind the unified [`Estimator`] surface. This is
+/// plain [`BsgdEstimator`] machinery with the budget pinned to 0, so the
+/// model grows with every margin violation.
+pub struct PegasosEstimator {
+    inner: BsgdEstimator,
+}
+
+impl PegasosEstimator {
+    /// Build an unfitted estimator (validates kernel and λ).
+    pub fn new(kernel: KernelSpec, lambda: f64, run: RunConfig) -> Result<Self> {
+        Ok(PegasosEstimator { inner: BsgdEstimator::new_unbudgeted(kernel, lambda, run)? })
+    }
+
+    /// The trained model, if fitted.
+    pub fn model(&self) -> Option<&AnyModel> {
+        self.inner.model()
+    }
+
+    /// Cumulative training statistics, if fitted.
+    pub fn summary(&self) -> Option<&FitSummary> {
+        self.inner.summary()
+    }
+
+    /// Consume the estimator, returning the trained model.
+    pub fn into_model(self) -> Result<AnyModel> {
+        self.inner.into_model()
+    }
+}
+
+impl Estimator for PegasosEstimator {
+    type Data = Dataset;
+
+    fn fit(&mut self, data: &Dataset) -> Result<()> {
+        self.inner.fit(data)
+    }
+
+    fn partial_fit(&mut self, data: &Dataset) -> Result<()> {
+        self.inner.partial_fit(data)
+    }
+
+    fn decision_function(&self, x: &[f32]) -> Result<Vec<f64>> {
+        self.inner.decision_function(x)
+    }
+
+    fn predict(&self, x: &[f32]) -> Result<f32> {
+        self.inner.predict(x)
+    }
+
+    fn dim(&self) -> Option<usize> {
+        self.inner.dim()
+    }
+}
+
+/// Train an unbudgeted kernel SVM with Pegasos SGD (legacy shim over
+/// [`PegasosEstimator`]).
 pub fn train_pegasos(train: &Dataset, opts: &PegasosOptions) -> PegasosReport {
     assert!(opts.lambda > 0.0);
-    let n = train.len();
-    let kernel = Gaussian::new(opts.gamma);
-    let lr = LearningRate::PegasosInvT { lambda: opts.lambda };
-    let mut model = BudgetModel::new(train.dim(), kernel, n.min(4096));
-    let mut prof = SectionProfiler::new();
-    let mut rng = Rng::new(opts.seed);
-    let norms: Vec<f32> = (0..n).map(|i| crate::kernel::norm2(train.row(i))).collect();
-
-    let mut steps = 0u64;
-    let mut sv_inserts = 0u64;
-    let mut order: Vec<usize> = (0..n).collect();
-    let wall = Instant::now();
-    for _ in 0..opts.passes {
-        rng.shuffle(&mut order);
-        for &i in &order {
-            steps += 1;
-            let t0 = Instant::now();
-            let y = train.label(i) as f64;
-            let margin = y * model.decision_with_norm(train.row(i), norms[i]);
-            model.rescale(lr.shrink(steps, opts.lambda));
-            if margin < 1.0 {
-                model.push(train.row(i), lr.eta(steps) * y);
-                sv_inserts += 1;
-            }
-            prof.add(Section::SgdStep, t0.elapsed());
-        }
-    }
+    let run = RunConfig::new().passes(opts.passes).seed(opts.seed);
+    let mut est = PegasosEstimator::new(KernelSpec::gaussian(opts.gamma), opts.lambda, run)
+        .expect("invalid PegasosOptions");
+    est.fit(train).expect("Pegasos training failed");
+    let summary = est.summary().expect("fitted").clone();
+    let model = est
+        .into_model()
+        .and_then(AnyModel::into_gaussian)
+        .context("gaussian pegasos run")
+        .expect("gaussian pegasos run");
     PegasosReport {
         model,
-        steps,
-        sv_inserts,
-        wall_seconds: wall.elapsed().as_secs_f64(),
-        profiler: prof,
+        steps: summary.steps,
+        sv_inserts: summary.sv_inserts,
+        wall_seconds: summary.wall_seconds,
+        profiler: summary.profiler,
     }
 }
 
@@ -105,5 +147,29 @@ mod tests {
         };
         let report = train_pegasos(&ds, &opts);
         assert_eq!(report.model.num_sv() as u64, report.sv_inserts);
+    }
+
+    #[test]
+    fn estimator_surface_supports_linear_kernel_streaming() {
+        let mut ds = Dataset::empty("sep", 2);
+        let mut rng = crate::util::rng::Rng::new(2);
+        for _ in 0..100 {
+            ds.push_row(&[rng.normal() as f32 * 0.2 - 1.5, rng.normal() as f32], 1.0);
+            ds.push_row(&[rng.normal() as f32 * 0.2 + 1.5, rng.normal() as f32], -1.0);
+        }
+        let lambda = 1.0 / (10.0 * ds.len() as f64);
+        let mut est =
+            PegasosEstimator::new(KernelSpec::linear(), lambda, RunConfig::new()).unwrap();
+        est.partial_fit(&ds).unwrap();
+        est.partial_fit(&ds).unwrap();
+        assert_eq!(est.summary().unwrap().steps, 2 * 200);
+        let preds = est.predict_batch(ds.features()).unwrap();
+        let acc = crate::metrics::accuracy(&preds, ds.labels());
+        assert!(acc > 0.9, "linear pegasos accuracy {acc}");
+    }
+
+    #[test]
+    fn rejects_bad_lambda() {
+        assert!(PegasosEstimator::new(KernelSpec::gaussian(1.0), 0.0, RunConfig::new()).is_err());
     }
 }

@@ -8,16 +8,24 @@
 //! (Keerthi et al. / LIBSVM WSS1) and a precomputed kernel matrix, so it is
 //! intended for the subsampled reference runs (n ≲ 4000), not for scale —
 //! scale is BSGD's job, which is the point of the paper.
+//!
+//! The core is kernel-generic (only Gram evaluations are needed);
+//! [`SmoEstimator`] exposes it behind the unified [`Estimator`] surface
+//! with a buffered `partial_fit` (each call appends the new rows and
+//! re-solves — exact but O(n²) per call, matching SMO's batch nature),
+//! while [`train_smo`] / [`SmoOptions`] remain the legacy Gaussian shim.
 
 use std::time::Instant;
 
-use anyhow::{ensure, Result};
+use anyhow::{ensure, Context, Result};
 
 use crate::data::Dataset;
-use crate::kernel::{norm2, Gaussian, Kernel};
-use crate::model::BudgetModel;
+use crate::kernel::{norm2, Gaussian, Kernel, KernelSpec, Linear, Polynomial};
+use crate::model::{AnyModel, BudgetModel};
 
-/// Options for the SMO reference solver.
+use super::api::Estimator;
+
+/// Options for the legacy SMO reference solver (Gaussian kernel only).
 #[derive(Debug, Clone)]
 pub struct SmoOptions {
     /// Box constraint C.
@@ -38,7 +46,7 @@ impl Default for SmoOptions {
     }
 }
 
-/// Result of an SMO run.
+/// Result of a legacy SMO run.
 #[derive(Debug)]
 pub struct SmoReport {
     /// Trained model (SVs only, bias set).
@@ -56,26 +64,50 @@ pub struct SmoReport {
     pub num_bounded: usize,
 }
 
-/// Train an exact (non-budgeted) SVM with SMO.
-pub fn train_smo(train: &Dataset, opts: &SmoOptions) -> Result<SmoReport> {
+/// Solver statistics of one SMO solve (kernel-generic sibling of the
+/// non-model fields of [`SmoReport`]).
+#[derive(Debug, Clone, Copy)]
+pub struct SmoStats {
+    pub iterations: usize,
+    pub kkt_gap: f64,
+    pub converged: bool,
+    pub wall_seconds: f64,
+    pub num_sv: usize,
+    pub num_bounded: usize,
+}
+
+/// Kernel-independent solver knobs.
+#[derive(Debug, Clone, Copy)]
+struct SmoParams {
+    c: f64,
+    tolerance: f64,
+    max_iterations: usize,
+    max_rows: usize,
+}
+
+/// Train an exact (non-budgeted) SVM with SMO on any kernel.
+fn smo_core<K: Kernel + Copy>(
+    train: &Dataset,
+    kernel: K,
+    params: &SmoParams,
+) -> Result<(BudgetModel<K>, SmoStats)> {
     let n = train.len();
     ensure!(n >= 2, "need at least two rows");
     ensure!(
-        n <= opts.max_rows,
+        n <= params.max_rows,
         "SMO reference solver capped at {} rows (got {n}); subsample first",
-        opts.max_rows
+        params.max_rows
     );
-    ensure!(opts.c > 0.0 && opts.gamma > 0.0);
+    ensure!(params.c > 0.0 && params.c.is_finite(), "C must be positive, got {}", params.c);
     let wall = Instant::now();
 
-    let kernel = Gaussian::new(opts.gamma);
     let y: Vec<f64> = (0..n).map(|i| train.label(i) as f64).collect();
 
     // Full kernel matrix in f32 (n ≤ 4096 → ≤ 64 MiB).
     let norms: Vec<f32> = (0..n).map(|i| norm2(train.row(i))).collect();
     let mut k = vec![0.0f32; n * n];
     for i in 0..n {
-        k[i * n + i] = 1.0;
+        k[i * n + i] = kernel.self_eval(norms[i]) as f32;
         for j in (i + 1)..n {
             let v = kernel.eval(train.row(i), norms[i], train.row(j), norms[j]) as f32;
             k[i * n + j] = v;
@@ -87,7 +119,7 @@ pub fn train_smo(train: &Dataset, opts: &SmoOptions) -> Result<SmoReport> {
     // G = Qα − e starts at −e.
     let mut g = vec![-1.0f64; n];
 
-    let max_iter = if opts.max_iterations == 0 { 1000 * n } else { opts.max_iterations };
+    let max_iter = if params.max_iterations == 0 { 1000 * n } else { params.max_iterations };
     let mut iterations = 0usize;
     let mut gap = f64::INFINITY;
     let mut converged = false;
@@ -100,8 +132,8 @@ pub fn train_smo(train: &Dataset, opts: &SmoOptions) -> Result<SmoReport> {
         let mut big_m_idx = usize::MAX;
         for t in 0..n {
             let yg = -y[t] * g[t];
-            let in_up = (y[t] > 0.0 && alpha[t] < opts.c) || (y[t] < 0.0 && alpha[t] > 0.0);
-            let in_low = (y[t] < 0.0 && alpha[t] < opts.c) || (y[t] > 0.0 && alpha[t] > 0.0);
+            let in_up = (y[t] > 0.0 && alpha[t] < params.c) || (y[t] < 0.0 && alpha[t] > 0.0);
+            let in_low = (y[t] < 0.0 && alpha[t] < params.c) || (y[t] > 0.0 && alpha[t] > 0.0);
             if in_up && yg > m_val {
                 m_val = yg;
                 m_idx = t;
@@ -112,8 +144,8 @@ pub fn train_smo(train: &Dataset, opts: &SmoOptions) -> Result<SmoReport> {
             }
         }
         gap = m_val - big_m_val;
-        if gap < opts.tolerance || m_idx == usize::MAX || big_m_idx == usize::MAX {
-            converged = gap < opts.tolerance;
+        if gap < params.tolerance || m_idx == usize::MAX || big_m_idx == usize::MAX {
+            converged = gap < params.tolerance;
             break;
         }
         let (i, j) = (m_idx, big_m_idx);
@@ -125,8 +157,8 @@ pub fn train_smo(train: &Dataset, opts: &SmoOptions) -> Result<SmoReport> {
         let mut t_step = gap / quad;
 
         // Box constraints.
-        let bound_i = if y[i] > 0.0 { opts.c - alpha[i] } else { alpha[i] };
-        let bound_j = if y[j] > 0.0 { alpha[j] } else { opts.c - alpha[j] };
+        let bound_i = if y[i] > 0.0 { params.c - alpha[i] } else { alpha[i] };
+        let bound_j = if y[j] > 0.0 { alpha[j] } else { params.c - alpha[j] };
         t_step = t_step.min(bound_i).min(bound_j);
 
         alpha[i] += y[i] * t_step;
@@ -139,13 +171,12 @@ pub fn train_smo(train: &Dataset, opts: &SmoOptions) -> Result<SmoReport> {
         iterations += 1;
     }
 
-    // Bias from free SVs (0 < α < C): b = y_i − Σ_j α_j y_j K_ij = y_i·(−G_i)·y_i…
-    // directly: Σ_j α_j y_j K_ij = y_i·(G_i + 1)·y_i is messier; use G:
-    // G_i = y_i Σ_j α_j y_j K_ij − 1 ⇒ Σ_j α_j y_j K_ij = y_i (G_i + 1).
+    // Bias from free SVs (0 < α < C): G_i = y_i Σ_j α_j y_j K_ij − 1
+    // ⇒ Σ_j α_j y_j K_ij = y_i (G_i + 1), so b = y_i − y_i (G_i + 1).
     let mut b_sum = 0.0;
     let mut b_cnt = 0usize;
     for i in 0..n {
-        if alpha[i] > 1e-8 && alpha[i] < opts.c - 1e-8 {
+        if alpha[i] > 1e-8 && alpha[i] < params.c - 1e-8 {
             b_sum += y[i] - y[i] * (g[i] + 1.0);
             b_cnt += 1;
         }
@@ -158,7 +189,7 @@ pub fn train_smo(train: &Dataset, opts: &SmoOptions) -> Result<SmoReport> {
         let mut hi = f64::INFINITY;
         for i in 0..n {
             let v = y[i] - y[i] * (g[i] + 1.0);
-            if (y[i] > 0.0 && alpha[i] < opts.c - 1e-8) || (y[i] < 0.0 && alpha[i] > 1e-8) {
+            if (y[i] > 0.0 && alpha[i] < params.c - 1e-8) || (y[i] < 0.0 && alpha[i] > 1e-8) {
                 hi = hi.min(v);
             } else {
                 lo = lo.max(v);
@@ -173,7 +204,7 @@ pub fn train_smo(train: &Dataset, opts: &SmoOptions) -> Result<SmoReport> {
 
     // Assemble the sparse model.
     let num_sv = alpha.iter().filter(|&&a| a > 1e-8).count();
-    let num_bounded = alpha.iter().filter(|&&a| a > opts.c - 1e-8).count();
+    let num_bounded = alpha.iter().filter(|&&a| a > params.c - 1e-8).count();
     let mut model = BudgetModel::new(train.dim(), kernel, num_sv);
     for i in 0..n {
         if alpha[i] > 1e-8 {
@@ -182,14 +213,181 @@ pub fn train_smo(train: &Dataset, opts: &SmoOptions) -> Result<SmoReport> {
     }
     model.bias = bias;
 
-    Ok(SmoReport {
-        model,
+    let stats = SmoStats {
         iterations,
         kkt_gap: gap,
         converged,
         wall_seconds: wall.elapsed().as_secs_f64(),
         num_sv,
         num_bounded,
+    };
+    Ok((model, stats))
+}
+
+/// Exact dual solver behind the unified [`Estimator`] surface,
+/// kernel-generic via [`KernelSpec`].
+///
+/// `partial_fit` buffers: each call appends the incoming rows to an
+/// internal dataset and re-solves the dual on everything seen so far —
+/// semantically a true "all data so far" exact model, at batch-solver
+/// cost. A single `partial_fit` on a fresh estimator therefore equals
+/// `fit` on the same data.
+pub struct SmoEstimator {
+    kernel: KernelSpec,
+    params: SmoParams,
+    buffer: Option<Dataset>,
+    model: Option<AnyModel>,
+    stats: Option<SmoStats>,
+}
+
+impl SmoEstimator {
+    /// Build an unfitted estimator with LIBSVM-style defaults
+    /// (tolerance 1e-3, iteration cap `1000·n`, 4096-row cap).
+    pub fn new(kernel: KernelSpec, c: f64) -> Result<Self> {
+        kernel.validate()?;
+        ensure!(c.is_finite() && c > 0.0, "C must be positive, got {c}");
+        Ok(SmoEstimator {
+            kernel,
+            params: SmoParams { c, tolerance: 1e-3, max_iterations: 0, max_rows: 4096 },
+            buffer: None,
+            model: None,
+            stats: None,
+        })
+    }
+
+    /// Set the KKT tolerance.
+    pub fn tolerance(mut self, tolerance: f64) -> Self {
+        self.params.tolerance = tolerance;
+        self
+    }
+
+    /// Set the hard iteration cap (0 = `1000·n`).
+    pub fn max_iterations(mut self, max_iterations: usize) -> Self {
+        self.params.max_iterations = max_iterations;
+        self
+    }
+
+    /// Set the kernel-matrix row cap.
+    pub fn max_rows(mut self, max_rows: usize) -> Self {
+        self.params.max_rows = max_rows;
+        self
+    }
+
+    /// The trained model, if fitted.
+    pub fn model(&self) -> Option<&AnyModel> {
+        self.model.as_ref()
+    }
+
+    /// Statistics of the most recent solve, if fitted.
+    pub fn stats(&self) -> Option<&SmoStats> {
+        self.stats.as_ref()
+    }
+
+    /// Consume the estimator, returning the trained model.
+    pub fn into_model(self) -> Result<AnyModel> {
+        self.model.context("estimator is not fitted")
+    }
+
+    fn solve(&mut self) -> Result<()> {
+        let data = self.buffer.as_ref().expect("buffer populated by fit/partial_fit");
+        let (model, stats) = match self.kernel {
+            KernelSpec::Gaussian { gamma } => {
+                let (m, s) = smo_core(data, Gaussian::new(gamma), &self.params)?;
+                (AnyModel::Gaussian(m), s)
+            }
+            KernelSpec::Linear => {
+                let (m, s) = smo_core(data, Linear, &self.params)?;
+                (AnyModel::Linear(m), s)
+            }
+            KernelSpec::Polynomial { degree, coef0 } => {
+                let (m, s) = smo_core(data, Polynomial::new(1.0, coef0, degree), &self.params)?;
+                (AnyModel::Polynomial(m), s)
+            }
+        };
+        self.model = Some(model);
+        self.stats = Some(stats);
+        Ok(())
+    }
+}
+
+impl Estimator for SmoEstimator {
+    type Data = Dataset;
+
+    fn fit(&mut self, data: &Dataset) -> Result<()> {
+        ensure!(!data.is_empty(), "cannot train on an empty dataset");
+        self.buffer = Some(data.clone());
+        self.model = None;
+        self.stats = None;
+        self.solve()
+    }
+
+    fn partial_fit(&mut self, data: &Dataset) -> Result<()> {
+        ensure!(!data.is_empty(), "cannot train on an empty dataset");
+        // Check the row cap before touching the buffer so a rejected batch
+        // does not poison the estimator (the previous model keeps serving
+        // and smaller batches remain ingestible).
+        let buffered = self.buffer.as_ref().map_or(0, Dataset::len);
+        ensure!(
+            buffered + data.len() <= self.params.max_rows,
+            "ingesting {} rows would exceed the SMO row cap of {} ({} already \
+             buffered); raise max_rows or refit on a subsample",
+            data.len(),
+            self.params.max_rows,
+            buffered
+        );
+        match &mut self.buffer {
+            None => self.buffer = Some(data.clone()),
+            Some(buf) => {
+                ensure!(
+                    buf.dim() == data.dim(),
+                    "dataset dimension {} does not match the buffered dimension {}",
+                    data.dim(),
+                    buf.dim()
+                );
+                for i in 0..data.len() {
+                    buf.push_row(data.row(i), data.label(i));
+                }
+            }
+        }
+        self.solve()
+    }
+
+    fn decision_function(&self, x: &[f32]) -> Result<Vec<f64>> {
+        let model = self.model.as_ref().context("estimator is not fitted")?;
+        ensure!(x.len() == model.dim(), "feature row has wrong dimension");
+        Ok(vec![model.decision(x)])
+    }
+
+    fn predict(&self, x: &[f32]) -> Result<f32> {
+        let model = self.model.as_ref().context("estimator is not fitted")?;
+        ensure!(x.len() == model.dim(), "feature row has wrong dimension");
+        Ok(model.predict(x))
+    }
+
+    fn dim(&self) -> Option<usize> {
+        self.model.as_ref().map(|m| m.dim())
+    }
+}
+
+/// Train an exact (non-budgeted) Gaussian SVM with SMO (legacy shim over
+/// the kernel-generic core).
+pub fn train_smo(train: &Dataset, opts: &SmoOptions) -> Result<SmoReport> {
+    ensure!(opts.gamma > 0.0, "gamma must be positive, got {}", opts.gamma);
+    let params = SmoParams {
+        c: opts.c,
+        tolerance: opts.tolerance,
+        max_iterations: opts.max_iterations,
+        max_rows: opts.max_rows,
+    };
+    let (model, stats) = smo_core(train, Gaussian::new(opts.gamma), &params)?;
+    Ok(SmoReport {
+        model,
+        iterations: stats.iterations,
+        kkt_gap: stats.kkt_gap,
+        converged: stats.converged,
+        wall_seconds: stats.wall_seconds,
+        num_sv: stats.num_sv,
+        num_bounded: stats.num_bounded,
     })
 }
 
@@ -263,5 +461,44 @@ mod tests {
         opts.passes = 3;
         let bsgd = crate::solver::train_bsgd(&ds, &opts);
         assert!(smo.model.accuracy(&ds) + 1e-9 >= bsgd.model.accuracy(&ds) - 0.05);
+    }
+
+    #[test]
+    fn linear_kernel_separable_blobs_via_estimator() {
+        let mut ds = Dataset::empty("blobs", 2);
+        let mut rng = crate::util::rng::Rng::new(7);
+        for _ in 0..50 {
+            ds.push_row(&[rng.normal() as f32 * 0.3 - 2.0, rng.normal() as f32 * 0.3], 1.0);
+            ds.push_row(&[rng.normal() as f32 * 0.3 + 2.0, rng.normal() as f32 * 0.3], -1.0);
+        }
+        let mut est = SmoEstimator::new(KernelSpec::linear(), 10.0).unwrap();
+        est.fit(&ds).unwrap();
+        let preds = est.predict_batch(ds.features()).unwrap();
+        let acc = crate::metrics::accuracy(&preds, ds.labels());
+        assert!(acc > 0.98, "linear SMO accuracy {acc}");
+        assert_eq!(est.model().unwrap().kernel_spec(), KernelSpec::linear());
+    }
+
+    #[test]
+    fn buffered_partial_fit_equals_fit_on_the_union() {
+        let ds = two_moons(200, 0.12, 13);
+        // Split into two halves.
+        let idx_a: Vec<usize> = (0..100).collect();
+        let idx_b: Vec<usize> = (100..200).collect();
+        let half_a = ds.subset(&idx_a, "a");
+        let half_b = ds.subset(&idx_b, "b");
+
+        let mut streamed = SmoEstimator::new(KernelSpec::gaussian(3.0), 10.0).unwrap();
+        streamed.partial_fit(&half_a).unwrap();
+        streamed.partial_fit(&half_b).unwrap();
+
+        let mut batch = SmoEstimator::new(KernelSpec::gaussian(3.0), 10.0).unwrap();
+        batch.fit(&ds).unwrap();
+
+        for i in (0..200).step_by(17) {
+            let a = streamed.decision_function(ds.row(i)).unwrap()[0];
+            let b = batch.decision_function(ds.row(i)).unwrap()[0];
+            assert!((a - b).abs() < 1e-6, "row {i}: {a} vs {b}");
+        }
     }
 }

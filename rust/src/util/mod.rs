@@ -1,7 +1,8 @@
 //! Small self-contained utility substrates.
 //!
-//! The build environment is fully offline with only the `xla` crate's
-//! dependency closure vendored, so the usual ecosystem crates (`rand`,
+//! The build environment is fully offline (the only dependency is the
+//! in-repo `anyhow` shim under `vendor/anyhow`; the `xla` crate is opt-in
+//! behind the `pjrt` feature), so the usual ecosystem crates (`rand`,
 //! `proptest`, `criterion`, `serde`, `clap`) are unavailable. Everything the
 //! system needs from them is implemented here from scratch:
 //!

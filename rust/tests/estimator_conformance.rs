@@ -1,0 +1,303 @@
+//! Estimator-trait conformance: the same `fit` / `partial_fit` /
+//! `decision_function` / `predict_batch` contract must hold across all
+//! four solver families (BSGD, one-vs-rest multiclass, Pegasos, SMO),
+//! plus the v1 → v2 model-format migration guarantee.
+
+use budgetsvm::data::synthetic::two_moons;
+use budgetsvm::data::Dataset;
+use budgetsvm::model::io;
+use budgetsvm::prelude::*;
+use budgetsvm::solver::multiclass::MulticlassDataset;
+use budgetsvm::util::rng::Rng;
+
+/// Shared binary conformance check: fit → fitted invariants →
+/// decision/predict consistency → batch accuracy.
+fn binary_roundtrip<E: Estimator<Data = Dataset>>(
+    est: &mut E,
+    ds: &Dataset,
+    min_acc: f64,
+    name: &str,
+) {
+    assert!(!est.is_fitted(), "{name}: fresh estimator must be unfitted");
+    est.fit(ds).unwrap();
+    assert!(est.is_fitted(), "{name}");
+    assert_eq!(est.dim(), Some(ds.dim()), "{name}");
+    for i in (0..ds.len()).step_by(23) {
+        let f = est.decision_function(ds.row(i)).unwrap();
+        assert_eq!(f.len(), 1, "{name}: binary estimators emit one score");
+        let p = est.predict(ds.row(i)).unwrap();
+        assert_eq!(p, if f[0] >= 0.0 { 1.0 } else { -1.0 }, "{name}");
+    }
+    let preds = est.predict_batch(ds.features()).unwrap();
+    assert_eq!(preds.len(), ds.len(), "{name}");
+    let acc = budgetsvm::metrics::accuracy(&preds, ds.labels());
+    assert!(acc > min_acc, "{name}: accuracy {acc}");
+}
+
+fn moons_config(ds: &Dataset, budget: usize) -> SvmConfig {
+    SvmConfig::new().kernel(KernelSpec::gaussian(2.0)).budget(budget).c(10.0, ds.len())
+}
+
+/// Three well-separated 2-D Gaussian blobs with class-index labels.
+fn three_blobs(n: usize, seed: u64) -> MulticlassDataset {
+    let mut rng = Rng::new(seed);
+    let centers = [(0.0f64, 0.0f64), (4.0, 0.0), (2.0, 3.5)];
+    let mut x = Vec::with_capacity(n * 2);
+    let mut y = Vec::with_capacity(n);
+    for i in 0..n {
+        let c = i % 3;
+        x.push((centers[c].0 + 0.5 * rng.normal()) as f32);
+        x.push((centers[c].1 + 0.5 * rng.normal()) as f32);
+        y.push(c);
+    }
+    MulticlassDataset::new(x, y, 2).unwrap()
+}
+
+#[test]
+fn bsgd_fit_predict_roundtrip() {
+    let ds = two_moons(800, 0.12, 42);
+    let mut est =
+        BsgdEstimator::new(moons_config(&ds, 40), RunConfig::new().passes(4).seed(1)).unwrap();
+    binary_roundtrip(&mut est, &ds, 0.9, "bsgd");
+    assert!(est.model().unwrap().num_sv() <= 40);
+}
+
+#[test]
+fn pegasos_fit_predict_roundtrip() {
+    let ds = two_moons(500, 0.12, 7);
+    let lambda = 1.0 / (10.0 * ds.len() as f64);
+    let mut est = PegasosEstimator::new(
+        KernelSpec::gaussian(2.0),
+        lambda,
+        RunConfig::new().passes(4).seed(2),
+    )
+    .unwrap();
+    binary_roundtrip(&mut est, &ds, 0.9, "pegasos");
+}
+
+#[test]
+fn smo_fit_predict_roundtrip() {
+    let ds = two_moons(300, 0.1, 11);
+    let mut est = SmoEstimator::new(KernelSpec::gaussian(4.0), 10.0).unwrap();
+    binary_roundtrip(&mut est, &ds, 0.95, "smo");
+}
+
+#[test]
+fn one_vs_rest_fit_predict_roundtrip() {
+    let train = three_blobs(600, 1);
+    let config = SvmConfig::new()
+        .kernel(KernelSpec::gaussian(1.0))
+        .budget(20)
+        .c(10.0, train.len());
+    let mut est = OneVsRestEstimator::new(config, RunConfig::new().passes(4)).unwrap();
+    assert!(!est.is_fitted());
+    est.fit(&train).unwrap();
+    assert!(est.is_fitted());
+    assert_eq!(est.num_classes(), 3);
+    for i in (0..train.len()).step_by(31) {
+        let scores = est.decision_function(train.row(i)).unwrap();
+        assert_eq!(scores.len(), 3, "one score per class");
+        let pred = est.predict(train.row(i)).unwrap();
+        let argmax = scores
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(pred as usize, argmax);
+    }
+    let acc = est.accuracy(&train).unwrap();
+    assert!(acc > 0.95, "one-vs-rest accuracy {acc}");
+}
+
+// ---- partial_fit ≡ single-pass fit on the same visit order ----
+
+#[test]
+fn bsgd_partial_fit_matches_unshuffled_single_pass_fit() {
+    let ds = two_moons(400, 0.12, 3);
+    let run = RunConfig::new().passes(1).shuffle(false).seed(5);
+    let mut fitted = BsgdEstimator::new(moons_config(&ds, 25), run.clone()).unwrap();
+    fitted.fit(&ds).unwrap();
+    let mut streamed = BsgdEstimator::new(moons_config(&ds, 25), run).unwrap();
+    streamed.partial_fit(&ds).unwrap();
+    for i in (0..ds.len()).step_by(7) {
+        let a = fitted.decision_function(ds.row(i)).unwrap()[0];
+        let b = streamed.decision_function(ds.row(i)).unwrap()[0];
+        assert!((a - b).abs() < 1e-12, "row {i}: {a} vs {b}");
+    }
+}
+
+#[test]
+fn pegasos_partial_fit_matches_unshuffled_single_pass_fit() {
+    let ds = two_moons(300, 0.15, 19);
+    let lambda = 1.0 / (10.0 * ds.len() as f64);
+    let kernel = KernelSpec::gaussian(2.0);
+    let run = RunConfig::new().passes(1).shuffle(false).seed(9);
+    let mut fitted = PegasosEstimator::new(kernel, lambda, run.clone()).unwrap();
+    fitted.fit(&ds).unwrap();
+    let mut streamed = PegasosEstimator::new(kernel, lambda, run).unwrap();
+    streamed.partial_fit(&ds).unwrap();
+    for i in (0..ds.len()).step_by(11) {
+        let a = fitted.decision_function(ds.row(i)).unwrap()[0];
+        let b = streamed.decision_function(ds.row(i)).unwrap()[0];
+        assert!((a - b).abs() < 1e-12, "row {i}");
+    }
+}
+
+#[test]
+fn smo_partial_fit_matches_fit_on_same_data() {
+    let ds = two_moons(200, 0.12, 23);
+    let mut fitted = SmoEstimator::new(KernelSpec::gaussian(3.0), 10.0).unwrap();
+    fitted.fit(&ds).unwrap();
+    let mut streamed = SmoEstimator::new(KernelSpec::gaussian(3.0), 10.0).unwrap();
+    streamed.partial_fit(&ds).unwrap();
+    for i in (0..ds.len()).step_by(13) {
+        let a = fitted.decision_function(ds.row(i)).unwrap()[0];
+        let b = streamed.decision_function(ds.row(i)).unwrap()[0];
+        assert!((a - b).abs() < 1e-9, "row {i}");
+    }
+}
+
+#[test]
+fn one_vs_rest_partial_fit_matches_unshuffled_single_pass_fit() {
+    let train = three_blobs(240, 4);
+    let config = SvmConfig::new()
+        .kernel(KernelSpec::gaussian(1.0))
+        .budget(12)
+        .c(10.0, train.len());
+    let run = RunConfig::new().passes(1).shuffle(false).seed(6);
+    let mut fitted = OneVsRestEstimator::new(config.clone(), run.clone()).unwrap();
+    fitted.fit(&train).unwrap();
+    let mut streamed = OneVsRestEstimator::new(config, run).unwrap();
+    streamed.partial_fit(&train).unwrap();
+    for i in (0..train.len()).step_by(17) {
+        let a = fitted.decision_function(train.row(i)).unwrap();
+        let b = streamed.decision_function(train.row(i)).unwrap();
+        for (va, vb) in a.iter().zip(&b) {
+            assert!((va - vb).abs() < 1e-12, "row {i}");
+        }
+    }
+}
+
+// ---- kernel generality through one surface ----
+
+#[test]
+fn every_kernel_family_trains_through_the_same_surface() {
+    // Linearly separable blobs so even the linear kernel succeeds.
+    let mut ds = Dataset::empty("blobs", 2);
+    let mut rng = Rng::new(31);
+    for _ in 0..150 {
+        ds.push_row(&[rng.normal() as f32 * 0.3 - 2.0, rng.normal() as f32 * 0.4], 1.0);
+        ds.push_row(&[rng.normal() as f32 * 0.3 + 2.0, rng.normal() as f32 * 0.4], -1.0);
+    }
+    for (kernel, strategy) in [
+        (KernelSpec::gaussian(1.0), Strategy::Merge(MergeSolver::LookupWd)),
+        (KernelSpec::linear(), Strategy::Removal),
+        (KernelSpec::polynomial(2, 1.0), Strategy::Projection),
+    ] {
+        let config = SvmConfig::new()
+            .kernel(kernel)
+            .budget(25)
+            .strategy(strategy)
+            .c(10.0, ds.len());
+        let mut est = BsgdEstimator::new(config, RunConfig::new().passes(4)).unwrap();
+        binary_roundtrip(&mut est, &ds, 0.9, &kernel.describe());
+        assert_eq!(est.model().unwrap().kernel_spec(), kernel);
+    }
+}
+
+// ---- v1 → v2 model-format migration ----
+
+#[test]
+fn pre_refactor_bsvmmdl1_bytes_load_through_the_v2_reader() {
+    // A model file laid out byte-for-byte as the pre-refactor writer
+    // produced it: magic, u64 d, u64 count, f64 gamma, f64 bias, `count`
+    // f64 coefficients, `count·d` f32 support-vector values.
+    let gamma = 0.5f64;
+    let bias = 0.25f64;
+    let alphas = [1.5f64, -0.75];
+    let svs: [[f32; 2]; 2] = [[0.5, -1.0], [2.0, 0.25]];
+
+    let mut bytes = Vec::new();
+    bytes.extend_from_slice(b"BSVMMDL1");
+    bytes.extend_from_slice(&2u64.to_le_bytes()); // d
+    bytes.extend_from_slice(&2u64.to_le_bytes()); // count
+    bytes.extend_from_slice(&gamma.to_le_bytes());
+    bytes.extend_from_slice(&bias.to_le_bytes());
+    for a in alphas {
+        bytes.extend_from_slice(&a.to_le_bytes());
+    }
+    for sv in svs {
+        for v in sv {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    let dir = std::env::temp_dir().join("budgetsvm-conformance");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("pre-refactor.bsvm");
+    std::fs::write(&path, &bytes).unwrap();
+
+    // Kernel-generic reader.
+    let model = io::load_any(&path).unwrap();
+    assert_eq!(model.kernel_spec(), KernelSpec::gaussian(gamma));
+    assert_eq!(model.dim(), 2);
+    assert_eq!(model.num_sv(), 2);
+    assert_eq!(model.bias(), bias);
+
+    // Decision values must equal the hand-computed Gaussian expansion.
+    let probe = [0.25f32, 0.5];
+    let mut expect = bias;
+    for (a, sv) in alphas.iter().zip(&svs) {
+        let d2: f64 = sv
+            .iter()
+            .zip(&probe)
+            .map(|(s, p)| ((s - p) as f64) * ((s - p) as f64))
+            .sum();
+        expect += a * (-gamma * d2).exp();
+    }
+    assert!((model.decision(&probe) - expect).abs() < 1e-9);
+
+    // The legacy typed loader keeps working too.
+    let typed = io::load(&path).unwrap();
+    assert!((typed.decision(&probe) - expect).abs() < 1e-9);
+
+    // Re-saving writes v2; the round trip preserves the decision function.
+    let path2 = dir.join("migrated.bsvm");
+    io::save_any(&model, &path2).unwrap();
+    let migrated = io::load_any(&path2).unwrap();
+    assert!((migrated.decision(&probe) - expect).abs() < 1e-9);
+    assert_eq!(migrated.kernel_spec(), KernelSpec::gaussian(gamma));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn trained_non_gaussian_model_round_trips_through_v2() {
+    let mut ds = Dataset::empty("sep", 2);
+    let mut rng = Rng::new(13);
+    for _ in 0..80 {
+        ds.push_row(&[rng.normal() as f32 * 0.3 - 1.5, rng.normal() as f32], 1.0);
+        ds.push_row(&[rng.normal() as f32 * 0.3 + 1.5, rng.normal() as f32], -1.0);
+    }
+    let config = SvmConfig::new()
+        .kernel(KernelSpec::polynomial(2, 1.0))
+        .budget(20)
+        .strategy(Strategy::Removal)
+        .c(10.0, ds.len());
+    let mut est = BsgdEstimator::new(config, RunConfig::new().passes(3)).unwrap();
+    est.fit(&ds).unwrap();
+    let model = est.into_model().unwrap();
+
+    let dir = std::env::temp_dir().join("budgetsvm-conformance-poly");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("poly.bsvm");
+    io::save_any(&model, &path).unwrap();
+    let back = io::load_any(&path).unwrap();
+    assert_eq!(back.kernel_spec(), KernelSpec::polynomial(2, 1.0));
+    for i in (0..ds.len()).step_by(9) {
+        let a = model.decision(ds.row(i));
+        let b = back.decision(ds.row(i));
+        assert!((a - b).abs() < 1e-9, "row {i}");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
