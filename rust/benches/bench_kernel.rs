@@ -1,0 +1,17 @@
+//! Blocked kernel-row engine bench (`cargo bench --bench bench_kernel`).
+//!
+//! Thin wrapper over [`budgetsvm::experiments::kernel_bench`] — the same
+//! harness `repro bench` runs — so `cargo bench` and the CLI report
+//! identical numbers. Honors `BENCH_QUICK=1` for smoke runs and writes
+//! `BENCH_kernel.json` to the working directory.
+
+use budgetsvm::experiments::kernel_bench;
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let report = kernel_bench::run(quick, 0)?;
+    println!("{report}");
+    let path = kernel_bench::write(&report, ".")?;
+    eprintln!("bench report written to {path}");
+    Ok(())
+}

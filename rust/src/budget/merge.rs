@@ -9,10 +9,14 @@
 //!   `h` is looked up only for the winning pair.
 //!
 //! The engine keeps all per-candidate scratch buffers across calls (zero
-//! allocation in the hot path) and is structured in the two timed passes
-//! that Figure 3 attributes: Section B work (min-α selection, κ kernel row,
-//! `m` computation, selection, final merge) and Section A work (computing
-//! `h` — or looking up `WD` — per candidate).
+//! allocation in the hot path; length changes are grow-only) and is
+//! structured in the two timed passes that Figure 3 attributes: Section B
+//! work (min-α selection, κ kernel row, `m` computation, selection, final
+//! merge) and Section A work (computing `h` — or looking up `WD` — per
+//! candidate). The κ row is computed through the model's blocked
+//! kernel-row engine — for the Gaussian kernel κ *is* the kernel value —
+//! so the candidate scan rides the same SoA tile micro-kernel as the
+//! decision hot loop.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -91,6 +95,7 @@ pub struct MergeEngine {
     scale2: Vec<f64>,
     wd: Vec<f64>,
     hbuf: Vec<f64>,
+    krow: Vec<f64>,
     z: Vec<f32>,
 }
 
@@ -110,6 +115,7 @@ impl MergeEngine {
             scale2: Vec::new(),
             wd: Vec::new(),
             hbuf: Vec::new(),
+            krow: Vec::new(),
             z: Vec::new(),
         }
     }
@@ -127,6 +133,7 @@ impl MergeEngine {
             scale2: Vec::new(),
             wd: Vec::new(),
             hbuf: Vec::new(),
+            krow: Vec::new(),
             z: Vec::new(),
         }
     }
@@ -187,10 +194,20 @@ impl MergeEngine {
         self.kappa.clear();
         self.mrel.clear();
         self.scale2.clear();
-        let xa = model.sv(a_idx);
-        let na = model.sv_norm2(a_idx);
-        let gamma = model.kernel().gamma;
-        for j in 0..model.num_sv() {
+        let b = model.num_sv();
+        // κ row against every SV in one blocked pass: for the Gaussian
+        // kernel, κ_j = exp(−γ‖x_a − x_j‖²) IS the kernel value, so the
+        // whole candidate scan rides the tiled engine instead of a scalar
+        // sqdist per candidate.
+        if self.krow.len() < b {
+            self.krow.resize(b, 0.0);
+        }
+        {
+            let xa = model.sv(a_idx);
+            let na = model.sv_norm2(a_idx);
+            model.kernel_row(xa, na, &mut self.krow);
+        }
+        for j in 0..b {
             if j == a_idx {
                 continue;
             }
@@ -202,9 +219,8 @@ impl MergeEngine {
             if sum.abs() < 1e-300 {
                 continue;
             }
-            let d2 = crate::kernel::sqdist(xa, na, model.sv(j), model.sv_norm2(j)) as f64;
             self.cand.push(j);
-            self.kappa.push((-gamma * d2).exp());
+            self.kappa.push(self.krow[j]);
             self.mrel.push(alpha_b / sum);
             self.scale2.push(sum * sum);
         }
@@ -223,8 +239,12 @@ impl MergeEngine {
         // ---- Section A: per-candidate h / WD via the configured solver. ----
         let t_a = Instant::now();
         let n_cand = self.cand.len();
-        self.wd.resize(n_cand, 0.0);
-        self.hbuf.resize(n_cand, 0.0);
+        // Grow-only scratch: steady-state events touch no Vec length at
+        // all (every slot in 0..n_cand is overwritten before it is read).
+        if self.wd.len() < n_cand {
+            self.wd.resize(n_cand, 0.0);
+            self.hbuf.resize(n_cand, 0.0);
+        }
         match self.solver {
             MergeSolver::LookupWd => {
                 let table = self.table.as_ref().unwrap();
@@ -275,9 +295,13 @@ impl MergeEngine {
         let alpha_b = model.alpha(j_idx);
         let az = alpha_z(alpha_a, alpha_b, kappa, h);
 
-        // z = h·x_a + (1−h)·x_b.
+        // z = h·x_a + (1−h)·x_b. The scratch keeps its length across
+        // events (same model dimension), so no per-event resize happens;
+        // every element is overwritten below.
         let d = model.dim();
-        self.z.resize(d, 0.0);
+        if self.z.len() != d {
+            self.z.resize(d, 0.0);
+        }
         {
             let xa = model.sv(a_idx);
             let xb = model.sv(j_idx);
@@ -335,9 +359,9 @@ pub fn audit_event(model: &BudgetModel, table: &LookupTable) -> Option<AuditReco
     let a_idx = model.argmin_abs_alpha()?;
     let alpha_a = model.alpha(a_idx);
     let sign_a = if alpha_a >= 0.0 { 1.0 } else { -1.0 };
-    let xa = model.sv(a_idx);
-    let na = model.sv_norm2(a_idx);
-    let gamma = model.kernel().gamma;
+    // κ row in one blocked pass (κ_j is the Gaussian kernel value itself).
+    let mut krow = vec![0.0f64; model.num_sv()];
+    model.kernel_row(model.sv(a_idx), model.sv_norm2(a_idx), &mut krow);
 
     let mut best_gss = (usize::MAX, f64::INFINITY);
     let mut best_lut = (usize::MAX, f64::INFINITY);
@@ -357,8 +381,7 @@ pub fn audit_event(model: &BudgetModel, table: &LookupTable) -> Option<AuditReco
             continue;
         }
         let m = alpha_b / sum;
-        let d2 = crate::kernel::sqdist(xa, na, model.sv(j), model.sv_norm2(j)) as f64;
-        let kappa = (-gamma * d2).exp();
+        let kappa = krow[j];
         let s2 = sum * sum;
 
         let h_gss = maximize(|x| s_value(m, kappa, x), 0.0, 1.0, GSS_STANDARD_EPS);

@@ -43,20 +43,27 @@ pub fn maintain_projection<K: Kernel + Copy>(
     // Survivor indices.
     let survivors: Vec<usize> = (0..model.num_sv()).filter(|&j| j != r_idx).collect();
 
-    // Gram matrix K (n×n) and rhs κ (kernel row vs removed SV).
-    let kernel = model.kernel();
+    // Gram matrix K (n×n) and rhs κ (kernel row vs removed SV), both built
+    // from blocked kernel rows: one tiled pass per row instead of a scalar
+    // `Kernel::eval` per entry. Only the row prefix covering the i ≤ j
+    // survivors is evaluated (survivor indices are ascending, so the
+    // prefix up to s_j contains every earlier survivor) — the triangle
+    // saving of the scalar loop is kept, symmetry fills both halves.
     let mut gram = vec![0.0f64; n * n];
     let mut rhs = vec![0.0f64; n];
-    let xr = model.sv(r_idx).to_vec();
-    let nr = model.sv_norm2(r_idx);
+    let mut buf = vec![0.0f64; model.num_sv()];
+    model.kernel_row(model.sv(r_idx), model.sv_norm2(r_idx), &mut buf);
     for (i, &si) in survivors.iter().enumerate() {
-        rhs[i] = kernel.eval(&xr, nr, model.sv(si), model.sv_norm2(si));
-        for (j, &sj) in survivors.iter().enumerate().skip(i) {
-            let v = kernel.eval(model.sv(si), model.sv_norm2(si), model.sv(sj), model.sv_norm2(sj));
+        rhs[i] = buf[si];
+    }
+    for (j, &sj) in survivors.iter().enumerate() {
+        model.kernel_row_prefix(model.sv(sj), model.sv_norm2(sj), sj + 1, &mut buf);
+        for (i, &si) in survivors.iter().enumerate().take(j + 1) {
+            let v = buf[si];
             gram[i * n + j] = v;
             gram[j * n + i] = v;
         }
-        gram[i * n + i] += RIDGE;
+        gram[j * n + j] += RIDGE;
     }
 
     let kappa = rhs.clone();

@@ -121,11 +121,7 @@ impl ExperimentConfig {
 
     /// Number of worker threads to actually use.
     pub fn effective_threads(&self) -> usize {
-        if self.threads > 0 {
-            self.threads
-        } else {
-            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
-        }
+        crate::util::parallel::resolve_threads(self.threads)
     }
 
     /// The profiles selected by this config, in paper order.

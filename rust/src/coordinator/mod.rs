@@ -154,14 +154,17 @@ pub fn run_single(
         strategy,
         grid: cfg.grid,
     };
-    let run = RunConfig::new().passes(passes_override.unwrap_or(passes_default)).seed(seed);
+    let run = RunConfig::new()
+        .passes(passes_override.unwrap_or(passes_default))
+        .seed(seed)
+        .threads(cfg.threads);
     let mut est = BsgdEstimator::new(config, run)?;
     est.fit(&train)?;
     let summary = est.summary().context("fitted estimator")?.clone();
     let model = est.into_model()?;
     Ok(SingleRun {
-        test_accuracy: test.as_ref().map(|t| model.accuracy(t)),
-        train_accuracy: model.accuracy(&train),
+        test_accuracy: test.as_ref().map(|t| model.accuracy_threaded(t, cfg.threads)),
+        train_accuracy: model.accuracy_threaded(&train, cfg.threads),
         dataset: name,
         n_train: train.len(),
         model,

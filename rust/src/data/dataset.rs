@@ -5,7 +5,13 @@
 //! datasets top out at 300 features, so a dense layout beats a sparse one on
 //! modern hardware for everything in scope; sparse LIBSVM files are
 //! densified at load time.
+//!
+//! Each row's squared L2 norm is precomputed once and kept in sync through
+//! every mutation ([`Dataset::norms`]), so decision evaluation — training
+//! margins, batch prediction, accuracy, curve sampling — never recomputes
+//! `‖x‖²` per row per machine.
 
+use crate::kernel::norm2;
 use crate::util::rng::Rng;
 
 /// A binary classification dataset with dense rows and ±1 labels.
@@ -15,6 +21,8 @@ pub struct Dataset {
     x: Vec<f32>,
     /// Labels in `{-1.0, +1.0}`, length `n`.
     y: Vec<f32>,
+    /// Cached squared L2 norm of each row, length `n`.
+    row_norms: Vec<f32>,
     /// Number of rows.
     n: usize,
     /// Number of features.
@@ -49,14 +57,41 @@ impl Dataset {
         for (i, &l) in y.iter().enumerate() {
             assert!(l == 1.0 || l == -1.0, "label at row {i} must be ±1, got {l}");
         }
-        Dataset { x, y, n, d, name: name.into() }
+        let row_norms = (0..n).map(|i| norm2(&x[i * d..(i + 1) * d])).collect();
+        Dataset { x, y, row_norms, n, d, name: name.into() }
+    }
+
+    /// Build with row norms the caller already computed (they must equal
+    /// `norm2(row)` for every row — debug-asserted). Lets one-vs-rest
+    /// views reuse a single norm computation across all K per-class
+    /// relabelings instead of redoing `n·d` work per class.
+    pub fn with_norms(
+        name: impl Into<String>,
+        x: Vec<f32>,
+        y: Vec<f32>,
+        d: usize,
+        row_norms: Vec<f32>,
+    ) -> Self {
+        assert!(d > 0, "feature dimension must be positive");
+        assert_eq!(x.len() % d, 0, "feature buffer not a multiple of d");
+        let n = x.len() / d;
+        assert_eq!(y.len(), n, "label count {} != row count {}", y.len(), n);
+        for (i, &l) in y.iter().enumerate() {
+            assert!(l == 1.0 || l == -1.0, "label at row {i} must be ±1, got {l}");
+        }
+        assert_eq!(row_norms.len(), n, "norm count {} != row count {n}", row_norms.len());
+        debug_assert!(
+            (0..n).all(|i| row_norms[i] == norm2(&x[i * d..(i + 1) * d])),
+            "caller-supplied norms disagree with norm2(row)"
+        );
+        Dataset { x, y, row_norms, n, d, name: name.into() }
     }
 
     /// Empty dataset with given dimension (rows are appended with [`push_row`]).
     ///
     /// [`push_row`]: Dataset::push_row
     pub fn empty(name: impl Into<String>, d: usize) -> Self {
-        Dataset { x: Vec::new(), y: Vec::new(), n: 0, d, name: name.into() }
+        Dataset { x: Vec::new(), y: Vec::new(), row_norms: Vec::new(), n: 0, d, name: name.into() }
     }
 
     pub fn push_row(&mut self, row: &[f32], label: f32) {
@@ -64,6 +99,7 @@ impl Dataset {
         assert!(label == 1.0 || label == -1.0);
         self.x.extend_from_slice(row);
         self.y.push(label);
+        self.row_norms.push(norm2(row));
         self.n += 1;
     }
 
@@ -94,6 +130,18 @@ impl Dataset {
         self.y[i]
     }
 
+    /// Cached squared L2 norm of row `i` (bit-identical to `norm2(row(i))`).
+    #[inline]
+    pub fn norm(&self, i: usize) -> f32 {
+        self.row_norms[i]
+    }
+
+    /// Cached squared L2 norms of all rows.
+    #[inline]
+    pub fn norms(&self) -> &[f32] {
+        &self.row_norms
+    }
+
     /// Flat feature buffer (row-major).
     pub fn features(&self) -> &[f32] {
         &self.x
@@ -117,12 +165,15 @@ impl Dataset {
         let perm = rng.permutation(self.n);
         let mut x = vec![0.0f32; self.x.len()];
         let mut y = vec![0.0f32; self.n];
+        let mut norms = vec![0.0f32; self.n];
         for (new_i, &old_i) in perm.iter().enumerate() {
             x[new_i * self.d..(new_i + 1) * self.d].copy_from_slice(self.row(old_i));
             y[new_i] = self.y[old_i];
+            norms[new_i] = self.row_norms[old_i];
         }
         self.x = x;
         self.y = y;
+        self.row_norms = norms;
     }
 
     /// Copy a subset of rows by index.
@@ -185,7 +236,7 @@ impl Dataset {
         ScalingParams { offset, scale }
     }
 
-    /// Apply scaling in place.
+    /// Apply scaling in place (row norms are refreshed).
     pub fn apply_scaling(&mut self, p: &ScalingParams) {
         assert_eq!(p.offset.len(), self.d);
         for i in 0..self.n {
@@ -193,6 +244,9 @@ impl Dataset {
             for j in 0..self.d {
                 self.x[base + j] = (self.x[base + j] - p.offset[j]) * p.scale[j];
             }
+        }
+        for i in 0..self.n {
+            self.row_norms[i] = norm2(&self.x[i * self.d..(i + 1) * self.d]);
         }
     }
 }
@@ -279,6 +333,29 @@ mod tests {
         for i in 0..3 {
             assert_eq!(ds.row(i)[0], 0.0);
         }
+    }
+
+    #[test]
+    fn cached_norms_track_every_mutation() {
+        let check = |ds: &Dataset, what: &str| {
+            assert_eq!(ds.norms().len(), ds.len(), "{what}");
+            for i in 0..ds.len() {
+                let expect = crate::kernel::norm2(ds.row(i));
+                assert_eq!(ds.norm(i), expect, "{what}: row {i}");
+            }
+        };
+        let mut ds = toy();
+        check(&ds, "new");
+        ds.push_row(&[5.0, -1.0], 1.0);
+        check(&ds, "push_row");
+        let mut rng = Rng::new(3);
+        ds.shuffle(&mut rng);
+        check(&ds, "shuffle");
+        let p = ds.fit_scaling();
+        ds.apply_scaling(&p);
+        check(&ds, "apply_scaling");
+        let sub = ds.subset(&[0, 2], "sub");
+        check(&sub, "subset");
     }
 
     #[test]

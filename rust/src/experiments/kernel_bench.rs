@@ -1,0 +1,201 @@
+//! Tracked kernel-engine bench harness (`repro bench`,
+//! `cargo bench --bench bench_kernel`).
+//!
+//! Measures the two quantities this system's perf story hangs on and emits
+//! them as machine-readable `BENCH_kernel.json` so CI can archive the
+//! trajectory:
+//!
+//! 1. **Kernel-row throughput** — ns per `k(x, sv_j), j = 1..B` row, for
+//!    the blocked SoA-tile engine vs the scalar one-SV-at-a-time reference
+//!    it replaced, over `B ∈ {64, 256, 1024}` × `d ∈ {16, 128, 784}`.
+//! 2. **Multiclass training scaling** — one-vs-rest `fit` steps/s with one
+//!    worker vs all workers on a ≥4-class synthetic dataset (same seeds:
+//!    the two runs produce bit-identical machines; only the wall clock
+//!    differs).
+
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::kernel::{norm2, Gaussian, KernelSpec, TILE};
+use crate::model::BudgetModel;
+use crate::solver::{Estimator, MulticlassDataset, OneVsRestEstimator, RunConfig, SvmConfig};
+use crate::util::bench::Bencher;
+use crate::util::json::Json;
+use crate::util::parallel;
+use crate::util::rng::Rng;
+
+/// Budgets of the kernel-row sweep.
+pub const SWEEP_B: [usize; 3] = [64, 256, 1024];
+/// Dimensions of the kernel-row sweep (16/128 bracket the paper's
+/// datasets; 784 = MNIST-shaped rows).
+pub const SWEEP_D: [usize; 3] = [16, 128, 784];
+
+/// File name of the emitted report.
+pub const REPORT_FILE: &str = "BENCH_kernel.json";
+
+fn random_model(b: usize, d: usize, rng: &mut Rng) -> BudgetModel {
+    let mut m = BudgetModel::new(d, Gaussian::new(1.0 / d as f64), b);
+    for _ in 0..b {
+        let row: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        m.push(&row, rng.normal());
+    }
+    m
+}
+
+/// `k`-armed Gaussian blobs on a circle — the multiclass scaling workload.
+fn blobs(k: usize, n: usize, seed: u64) -> MulticlassDataset {
+    let mut rng = Rng::new(seed);
+    let mut x = Vec::with_capacity(n * 2);
+    let mut y = Vec::with_capacity(n);
+    for i in 0..n {
+        let c = i % k;
+        let angle = (c as f64) * std::f64::consts::TAU / (k as f64);
+        x.push((3.0 * angle.cos() + 0.45 * rng.normal()) as f32);
+        x.push((3.0 * angle.sin() + 0.45 * rng.normal()) as f32);
+        y.push(c);
+    }
+    MulticlassDataset::new(x, y, 2).expect("valid synthetic multiclass data")
+}
+
+/// One timed one-vs-rest fit; returns (wall seconds, total SGD steps).
+fn timed_fit(
+    train: &MulticlassDataset,
+    config: &SvmConfig,
+    passes: usize,
+    threads: usize,
+) -> Result<(f64, u64)> {
+    let run = RunConfig::new().passes(passes).seed(11).threads(threads);
+    let mut est = OneVsRestEstimator::new(config.clone(), run)?;
+    let t0 = Instant::now();
+    est.fit(train)?;
+    let secs = t0.elapsed().as_secs_f64();
+    let steps: u64 = (0..est.num_classes())
+        .map(|c| {
+            est.machine(c)
+                .and_then(|m| m.summary())
+                .map(|s| s.steps)
+                .unwrap_or(0)
+        })
+        .sum();
+    Ok((secs, steps))
+}
+
+/// Run the full harness. `quick` shrinks warmup/samples/workload for CI
+/// smoke runs; `threads` is the multi-thread arm's worker count (0 = all
+/// cores). Returns the JSON report (the caller decides where it goes).
+pub fn run(quick: bool, threads: usize) -> Result<Json> {
+    let mut bencher = Bencher::new();
+    if quick {
+        bencher.sample_time = Duration::from_millis(10);
+        bencher.samples = 5;
+        bencher.warmup = Duration::from_millis(20);
+    }
+
+    // ---- 1. kernel-row throughput sweep ----
+    let mut rng = Rng::new(0xB10C);
+    let mut sweep = Vec::new();
+    for &b in &SWEEP_B {
+        for &d in &SWEEP_D {
+            let model = random_model(b, d, &mut rng);
+            let x: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+            let xn = norm2(&x);
+            let mut out = vec![0.0f64; b];
+            let blocked = bencher
+                .bench(&format!("kernel_row/blocked/B{b}/d{d}"), || {
+                    model.kernel_row(&x, xn, &mut out)
+                })
+                .mean_ns();
+            let scalar = bencher
+                .bench(&format!("kernel_row/scalar/B{b}/d{d}"), || {
+                    model.kernel_row_scalar(&x, xn, &mut out)
+                })
+                .mean_ns();
+            sweep.push(Json::object(vec![
+                ("b", Json::num(b as f64)),
+                ("d", Json::num(d as f64)),
+                ("ns_per_row_blocked", Json::num(blocked)),
+                ("ns_per_row_scalar", Json::num(scalar)),
+                ("speedup", Json::num(scalar / blocked.max(1e-9))),
+            ]));
+        }
+    }
+
+    // ---- 2. multiclass one-vs-rest fit scaling ----
+    let classes = 4;
+    let n = if quick { 800 } else { 4000 };
+    let passes = if quick { 2 } else { 3 };
+    let train = blobs(classes, n, 7);
+    let config = SvmConfig::new()
+        .kernel(KernelSpec::gaussian(0.5))
+        .budget(64)
+        .c(10.0, train.len());
+    let mt = parallel::resolve_threads(threads).max(2).min(classes.max(2));
+    // Two runs per arm; keep the faster wall time of each (less noise).
+    let mut best_1t = f64::INFINITY;
+    let mut best_mt = f64::INFINITY;
+    let mut steps_total = 0u64;
+    for _ in 0..2 {
+        let (s1, steps) = timed_fit(&train, &config, passes, 1)?;
+        let (sm, _) = timed_fit(&train, &config, passes, mt)?;
+        best_1t = best_1t.min(s1);
+        best_mt = best_mt.min(sm);
+        steps_total = steps;
+    }
+    let multiclass = Json::object(vec![
+        ("classes", Json::num(classes as f64)),
+        ("rows", Json::num(n as f64)),
+        ("passes", Json::num(passes as f64)),
+        ("budget", Json::num(64.0)),
+        ("threads_mt", Json::num(mt as f64)),
+        ("steps", Json::num(steps_total as f64)),
+        ("seconds_1t", Json::num(best_1t)),
+        ("seconds_mt", Json::num(best_mt)),
+        ("steps_per_s_1t", Json::num(steps_total as f64 / best_1t.max(1e-12))),
+        ("steps_per_s_mt", Json::num(steps_total as f64 / best_mt.max(1e-12))),
+        ("speedup", Json::num(best_1t / best_mt.max(1e-12))),
+    ]);
+
+    Ok(Json::object(vec![
+        ("schema", Json::str("bench_kernel/v1")),
+        ("tile", Json::num(TILE as f64)),
+        ("quick", Json::Bool(quick)),
+        ("kernel_row", Json::array(sweep)),
+        ("multiclass_fit", multiclass),
+    ]))
+}
+
+/// Write the report as `BENCH_kernel.json` under `out_dir` (created if
+/// missing); returns the written path.
+pub fn write(report: &Json, out_dir: &str) -> Result<String> {
+    std::fs::create_dir_all(out_dir)
+        .with_context(|| format!("cannot create output directory {out_dir}"))?;
+    let path = format!("{}/{}", out_dir.trim_end_matches('/'), REPORT_FILE);
+    std::fs::write(&path, format!("{report}\n"))
+        .with_context(|| format!("cannot write {path}"))?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_harness_produces_well_formed_report() {
+        let report = run(true, 2).expect("bench harness runs");
+        assert_eq!(report.get("schema").and_then(Json::as_str), Some("bench_kernel/v1"));
+        let sweep = report.get("kernel_row").and_then(Json::as_array).expect("sweep array");
+        assert_eq!(sweep.len(), SWEEP_B.len() * SWEEP_D.len());
+        for cell in sweep {
+            assert!(cell.get("ns_per_row_blocked").and_then(Json::as_f64).unwrap() > 0.0);
+            assert!(cell.get("ns_per_row_scalar").and_then(Json::as_f64).unwrap() > 0.0);
+            assert!(cell.get("speedup").and_then(Json::as_f64).unwrap() > 0.0);
+        }
+        let mc = report.get("multiclass_fit").expect("multiclass section");
+        assert!(mc.get("steps").and_then(Json::as_f64).unwrap() > 0.0);
+        assert!(mc.get("seconds_1t").and_then(Json::as_f64).unwrap() > 0.0);
+        // Round-trips through the in-repo JSON parser.
+        let text = report.to_string();
+        assert_eq!(Json::parse(&text).unwrap(), report);
+    }
+}

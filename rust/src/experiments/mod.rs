@@ -9,10 +9,12 @@
 //! | Figure 3 (merging-time breakdown) | [`figure3`] | `repro figure3` |
 //!
 //! [`runner`] executes training jobs across worker threads; [`report`]
-//! formats markdown/CSV.
+//! formats markdown/CSV; [`kernel_bench`] is the tracked perf harness
+//! behind `repro bench` (emits `BENCH_kernel.json`).
 
 pub mod figure2;
 pub mod figure3;
+pub mod kernel_bench;
 pub mod report;
 pub mod runner;
 pub mod table1;

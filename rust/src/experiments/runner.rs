@@ -1,90 +1,8 @@
 //! Threaded experiment runner.
 //!
-//! Executes a list of independent jobs on a worker pool (std threads + a
-//! shared work queue; tokio is not in the offline vendor set and the jobs
-//! are CPU-bound anyway). Results come back in submission order.
+//! The pool implementation lives in [`crate::util::parallel`] since it is
+//! shared with one-vs-rest training and batch prediction; this module
+//! re-exports [`run_jobs`] so experiment code keeps its historical import
+//! path (`super::runner::run_jobs`).
 
-use std::collections::VecDeque;
-use std::sync::{Arc, Mutex};
-
-/// Run `jobs` on `threads` workers; returns results in job order.
-pub fn run_jobs<T, F>(jobs: Vec<F>, threads: usize) -> Vec<T>
-where
-    T: Send,
-    F: FnOnce() -> T + Send,
-{
-    let n = jobs.len();
-    let threads = threads.clamp(1, n.max(1));
-    // Queue of (index, job); results slotted by index.
-    let queue: Arc<Mutex<VecDeque<(usize, F)>>> =
-        Arc::new(Mutex::new(jobs.into_iter().enumerate().collect()));
-    let results: Arc<Mutex<Vec<Option<T>>>> =
-        Arc::new(Mutex::new((0..n).map(|_| None).collect()));
-
-    std::thread::scope(|scope| {
-        for _ in 0..threads {
-            let queue = Arc::clone(&queue);
-            let results = Arc::clone(&results);
-            scope.spawn(move || loop {
-                let job = queue.lock().unwrap().pop_front();
-                match job {
-                    Some((idx, f)) => {
-                        let out = f();
-                        results.lock().unwrap()[idx] = Some(out);
-                    }
-                    None => break,
-                }
-            });
-        }
-    });
-
-    Arc::try_unwrap(results)
-        .unwrap_or_else(|_| panic!("worker leaked a results handle"))
-        .into_inner()
-        .unwrap()
-        .into_iter()
-        .map(|r| r.expect("every job must produce a result"))
-        .collect()
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn results_preserve_submission_order() {
-        let jobs: Vec<Box<dyn FnOnce() -> usize + Send>> = (0..50)
-            .map(|i| {
-                Box::new(move || {
-                    // Uneven work so completion order scrambles.
-                    let mut acc = 0usize;
-                    for k in 0..((50 - i) * 1000) {
-                        acc = acc.wrapping_add(k);
-                    }
-                    std::hint::black_box(acc);
-                    i
-                }) as Box<dyn FnOnce() -> usize + Send>
-            })
-            .collect();
-        let out = run_jobs(jobs, 8);
-        assert_eq!(out, (0..50).collect::<Vec<_>>());
-    }
-
-    #[test]
-    fn single_thread_works() {
-        let jobs: Vec<_> = (0..5).map(|i| move || i * 2).collect();
-        assert_eq!(run_jobs(jobs, 1), vec![0, 2, 4, 6, 8]);
-    }
-
-    #[test]
-    fn more_threads_than_jobs() {
-        let jobs: Vec<_> = (0..3).map(|i| move || i).collect();
-        assert_eq!(run_jobs(jobs, 64), vec![0, 1, 2]);
-    }
-
-    #[test]
-    fn empty_job_list() {
-        let jobs: Vec<fn() -> u8> = Vec::new();
-        assert!(run_jobs(jobs, 4).is_empty());
-    }
-}
+pub use crate::util::parallel::run_jobs;

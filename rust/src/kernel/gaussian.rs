@@ -1,6 +1,6 @@
 //! Gaussian (RBF) kernel `k(x, x') = exp(−γ‖x − x'‖²)`.
 
-use super::{sqdist, Kernel, KernelSpec};
+use super::{sqdist, Kernel, KernelSpec, TILE};
 
 /// Gaussian kernel with bandwidth parameter `γ`.
 ///
@@ -36,6 +36,33 @@ impl Kernel for Gaussian {
     #[inline]
     fn eval(&self, a: &[f32], a_norm2: f32, b: &[f32], b_norm2: f32) -> f64 {
         self.of_sqdist(sqdist(a, a_norm2, b, b_norm2) as f64)
+    }
+
+    #[inline]
+    fn eval_dot(&self, dot: f32, a_norm2: f32, b_norm2: f32) -> f64 {
+        // Same clamped expression as `sqdist` so the two entry points agree
+        // bit-for-bit given the same inner product.
+        self.of_sqdist((a_norm2 + b_norm2 - 2.0 * dot).max(0.0) as f64)
+    }
+
+    /// Fused tile evaluation: one pass reconstructing the squared
+    /// distances, one shared `exp` pass over the tile.
+    #[inline]
+    fn eval_block(
+        &self,
+        x_norm2: f32,
+        dots: &[f32; TILE],
+        norms: &[f32; TILE],
+        out: &mut [f64; TILE],
+    ) {
+        let mut d2 = [0.0f64; TILE];
+        for l in 0..TILE {
+            d2[l] = (x_norm2 + norms[l] - 2.0 * dots[l]).max(0.0) as f64;
+        }
+        let neg_gamma = -self.gamma;
+        for (o, &v) in out.iter_mut().zip(d2.iter()) {
+            *o = (neg_gamma * v).exp();
+        }
     }
 
     #[inline]

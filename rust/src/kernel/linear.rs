@@ -15,6 +15,11 @@ impl Kernel for Linear {
     }
 
     #[inline]
+    fn eval_dot(&self, dot: f32, _a_norm2: f32, _b_norm2: f32) -> f64 {
+        dot as f64
+    }
+
+    #[inline]
     fn self_eval(&self, norm2: f32) -> f64 {
         norm2 as f64
     }

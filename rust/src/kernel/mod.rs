@@ -23,12 +23,45 @@ pub use polynomial::Polynomial;
 
 use anyhow::{bail, ensure, Result};
 
+/// Support vectors per SoA tile of the blocked kernel-row engine (one
+/// AVX2-width `f32` vector; see [`crate::model::SvStore`]). [`Kernel::eval_block`]
+/// consumes one tile's worth of precomputed inner products at a time.
+pub const TILE: usize = 8;
+
 /// A Mercer kernel over dense `f32` feature vectors.
 pub trait Kernel: Send + Sync {
     /// Kernel value `k(a, b)`; `a_norm2`/`b_norm2` are the squared L2 norms
     /// of `a`/`b` (callers cache them; kernels that don't need them ignore
     /// them).
     fn eval(&self, a: &[f32], a_norm2: f32, b: &[f32], b_norm2: f32) -> f64;
+
+    /// Kernel value from a precomputed inner product `⟨a, b⟩` and the two
+    /// squared norms. Every kernel in this crate is a function of exactly
+    /// these three scalars; the blocked engine computes the inner products
+    /// tile-wise and finishes each value through this hook. Must agree with
+    /// [`Kernel::eval`] whenever `dot == dot(a, b)` (the squared-distance
+    /// reconstruction below uses the identical clamped expression
+    /// [`sqdist`] uses).
+    fn eval_dot(&self, dot: f32, a_norm2: f32, b_norm2: f32) -> f64;
+
+    /// Evaluate one tile of kernel values `k(x, s_l)`, `l = 0..TILE`, from
+    /// the precomputed inner products `dots[l] = ⟨x, s_l⟩` and squared
+    /// norms `norms[l] = ‖s_l‖²`. The default finishes each lane through
+    /// [`Kernel::eval_dot`]; kernels with a profitable fused form (the
+    /// Gaussian shares one distance/`exp` loop over the tile) override it.
+    /// Padding lanes (zero data, zero norm) are evaluated like any other —
+    /// callers mask them out by coefficient, not by branching here.
+    fn eval_block(
+        &self,
+        x_norm2: f32,
+        dots: &[f32; TILE],
+        norms: &[f32; TILE],
+        out: &mut [f64; TILE],
+    ) {
+        for l in 0..TILE {
+            out[l] = self.eval_dot(dots[l], x_norm2, norms[l]);
+        }
+    }
 
     /// `k(x, x)` from the squared norm alone.
     fn self_eval(&self, norm2: f32) -> f64;
@@ -315,6 +348,54 @@ mod tests {
         assert!(KernelSpec::gaussian(1.0).supports_merging());
         assert!(!KernelSpec::linear().supports_merging());
         assert!(!KernelSpec::polynomial(2, 1.0).supports_merging());
+    }
+
+    #[test]
+    fn eval_dot_matches_eval_for_all_kernels() {
+        let a = [0.25f32, -1.5, 2.0, 0.5, 3.0];
+        let b = [1.0f32, 0.5, -0.25, 2.0, -1.0];
+        let (na, nb) = (norm2(&a), norm2(&b));
+        let d = dot(&a, &b);
+        let kernels: [&dyn Kernel; 3] =
+            [&Gaussian::new(0.35), &Linear, &Polynomial::new(1.0, 1.5, 3)];
+        for k in kernels {
+            let via_eval = k.eval(&a, na, &b, nb);
+            let via_dot = k.eval_dot(d, na, nb);
+            assert!(
+                (via_eval - via_dot).abs() <= 1e-12 * (1.0 + via_eval.abs()),
+                "{}: eval={via_eval} eval_dot={via_dot}",
+                k.describe()
+            );
+        }
+    }
+
+    #[test]
+    fn eval_block_matches_per_lane_eval_dot() {
+        let kernels: [&dyn Kernel; 3] =
+            [&Gaussian::new(0.7), &Linear, &Polynomial::new(1.0, 1.0, 2)];
+        let x_norm2 = 3.5f32;
+        let mut dots = [0.0f32; TILE];
+        let mut norms = [0.0f32; TILE];
+        for l in 0..TILE {
+            dots[l] = (l as f32) * 0.375 - 1.25;
+            norms[l] = 0.5 + (l as f32) * 0.25;
+        }
+        // A padding-like lane: zero data, zero norm.
+        dots[TILE - 1] = 0.0;
+        norms[TILE - 1] = 0.0;
+        for k in kernels {
+            let mut out = [0.0f64; TILE];
+            k.eval_block(x_norm2, &dots, &norms, &mut out);
+            for l in 0..TILE {
+                let expect = k.eval_dot(dots[l], x_norm2, norms[l]);
+                assert!(
+                    (out[l] - expect).abs() <= 1e-15 * (1.0 + expect.abs()),
+                    "{} lane {l}: block={} scalar={expect}",
+                    k.describe(),
+                    out[l]
+                );
+            }
+        }
     }
 
     #[test]

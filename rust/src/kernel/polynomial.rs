@@ -25,6 +25,11 @@ impl Kernel for Polynomial {
     }
 
     #[inline]
+    fn eval_dot(&self, dot: f32, _a_norm2: f32, _b_norm2: f32) -> f64 {
+        (self.scale * dot as f64 + self.offset).powi(self.degree as i32)
+    }
+
+    #[inline]
     fn self_eval(&self, norm2: f32) -> f64 {
         (self.scale * norm2 as f64 + self.offset).powi(self.degree as i32)
     }

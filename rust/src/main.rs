@@ -21,6 +21,7 @@ const SUBCOMMANDS: &[(&str, &str)] = &[
     ("table3", "training-time improvement, merging frequency, agreement"),
     ("figure2", "h(m,k) and WD(m,k) surfaces (CSV + ASCII)"),
     ("figure3", "merging-time Section A/B breakdown"),
+    ("bench", "kernel-row + parallel-fit throughput; writes BENCH_kernel.json"),
     ("train", "single training run: repro train <profile|file.libsvm>"),
     ("eval", "evaluate a saved model: repro eval <model.bsvm> <file.libsvm>"),
     ("precompute", "build and save a lookup table artifact"),
@@ -55,6 +56,7 @@ fn opt_specs() -> Vec<OptSpec> {
         OptSpec { name: "c", takes_value: true, help: "train: C override" },
         OptSpec { name: "gamma", takes_value: true, help: "train: gaussian gamma override" },
         OptSpec { name: "json", takes_value: false, help: "train: machine-readable output" },
+        OptSpec { name: "quick", takes_value: false, help: "bench: smoke mode (short samples)" },
         OptSpec { name: "model-out", takes_value: true, help: "train: save the model here" },
         OptSpec { name: "table-out", takes_value: true, help: "precompute: output path" },
         OptSpec { name: "artifacts", takes_value: true, help: "runtime-check: artifacts dir" },
@@ -145,6 +147,12 @@ fn main() -> Result<()> {
         "figure3" => {
             let bars = experiments::figure3::run(&cfg)?;
             println!("{}", experiments::figure3::render(&bars, &cfg)?);
+        }
+        "bench" => {
+            let report = experiments::kernel_bench::run(args.flag("quick"), cfg.threads)?;
+            println!("{report}");
+            let path = experiments::kernel_bench::write(&report, &cfg.out_dir)?;
+            eprintln!("bench report written to {path}");
         }
         "train" => {
             let data = args.positional().first().map(String::as_str).unwrap_or("ijcnn");

@@ -1,24 +1,51 @@
-//! Sparse kernel expansion model with budget support.
+//! Sparse kernel expansion model with budget support, running on a blocked
+//! kernel-row engine.
 //!
-//! [`BudgetModel`] stores the support vectors in a flat row-major matrix
-//! with precomputed squared norms (the kernel row loop is the trainer's hot
-//! path) and keeps coefficients behind a lazy global scale factor `Φ` so the
-//! Pegasos shrink step `w ← (1 − 1/t)·w` is O(1) instead of O(B).
+//! # Storage: the SoA tile layout
+//!
+//! [`BudgetModel`] keeps its support vectors in an [`SvStore`]: a
+//! cache-blocked layout of `TILE = 8` consecutive SVs per tile, stored
+//! feature-major within the tile with co-located squared norms (plus a
+//! row-major mirror for random access and serialization — see the
+//! [`store`] module docs for the exact invariants: tile size, zeroed
+//! padding lanes, swap-remove semantics). The hot kernel row
+//! `k(x, sv_j), j = 1..B` is then computed tile-by-tile: one pass over `x`
+//! yields all eight inner products of a tile through an 8-lane-unrolled
+//! FMA micro-kernel ([`SvStore::tile_dots`]), and the kernel finishes the
+//! tile in one fused pass ([`crate::kernel::Kernel::eval_block`] — the
+//! Gaussian shares a single distance-reconstruction + `exp` loop).
+//!
+//! To add a fused kernel: implement `Kernel::eval_dot` (value from
+//! `⟨x, s⟩` and the two squared norms — this alone makes the blocked
+//! engine correct via the generic `eval_block`), then override
+//! `eval_block` if a tile-wise form saves work. Padding lanes carry zero
+//! data and zero norms; consumers mask them by coefficient range, never
+//! inside the micro-kernel.
+//!
+//! Coefficients stay behind a lazy global scale factor `Φ` so the Pegasos
+//! shrink step `w ← (1 − 1/t)·w` is O(1) instead of O(B).
 //!
 //! The model is generic over the [`Kernel`]: `BudgetModel<Gaussian>` (the
-//! default type parameter, so plain `BudgetModel` keeps meaning the
-//! Gaussian model) is what the merge-based budget maintenance operates on,
-//! while `BudgetModel<Linear>` / `BudgetModel<Polynomial>` support the
-//! removal/projection maintenance paths and the unbudgeted solvers. The
-//! kernel type is a monomorphized parameter — the decision hot loop
-//! compiles to the same fused code as the previously Gaussian-only version.
+//! default type parameter) is what the merge-based budget maintenance
+//! operates on, while `BudgetModel<Linear>` / `BudgetModel<Polynomial>`
+//! support the removal/projection maintenance paths and the unbudgeted
+//! solvers. The kernel type is a monomorphized parameter — the decision
+//! hot loop compiles to straight-line tile code per kernel.
+//!
+//! The pre-tiling scalar loops survive as `*_scalar` reference methods
+//! (used by the conformance tests and the bench harness to measure the
+//! blocked engine's speedup).
 //!
 //! [`AnyModel`] is the runtime-polymorphic wrapper the [`crate::solver`]
 //! estimator surface and the versioned model format ([`io`]) work with.
 
 pub mod io;
+mod store;
 
-use crate::kernel::{norm2, Gaussian, Kernel, KernelSpec, Linear, Polynomial};
+pub use store::SvStore;
+
+use crate::kernel::{norm2, Gaussian, Kernel, KernelSpec, Linear, Polynomial, TILE};
+use crate::util::parallel;
 
 /// Lower bound on `Φ` before it is folded back into the raw coefficients
 /// (guards against underflow after very many SGD steps).
@@ -28,15 +55,11 @@ const SCALE_FOLD_THRESHOLD: f64 = 1e-6;
 /// `capacity` support vectors.
 #[derive(Debug, Clone)]
 pub struct BudgetModel<K: Kernel + Copy = Gaussian> {
-    d: usize,
     kernel: K,
-    /// Flat row-major support vectors, `count * d` valid entries.
-    sv: Vec<f32>,
+    /// Blocked support-vector storage (SoA tiles + row mirror + norms).
+    store: SvStore,
     /// Raw coefficients; effective `α_j = Φ · alpha[j]`.
     alpha: Vec<f64>,
-    /// Squared L2 norms of each SV row.
-    norms: Vec<f32>,
-    count: usize,
     /// Global lazy scale Φ.
     scale: f64,
     /// Bias term (0 unless trained with bias).
@@ -48,12 +71,9 @@ impl<K: Kernel + Copy> BudgetModel<K> {
     /// trainer passes `B + 1`).
     pub fn new(d: usize, kernel: K, capacity: usize) -> Self {
         BudgetModel {
-            d,
             kernel,
-            sv: Vec::with_capacity(capacity * d),
+            store: SvStore::new(d, capacity),
             alpha: Vec::with_capacity(capacity),
-            norms: Vec::with_capacity(capacity),
-            count: 0,
             scale: 1.0,
             bias: 0.0,
         }
@@ -61,7 +81,7 @@ impl<K: Kernel + Copy> BudgetModel<K> {
 
     #[inline]
     pub fn dim(&self) -> usize {
-        self.d
+        self.store.dim()
     }
 
     #[inline]
@@ -77,24 +97,24 @@ impl<K: Kernel + Copy> BudgetModel<K> {
     /// Number of support vectors currently stored.
     #[inline]
     pub fn num_sv(&self) -> usize {
-        self.count
+        self.store.len()
     }
 
     #[inline]
     pub fn is_empty(&self) -> bool {
-        self.count == 0
+        self.store.is_empty()
     }
 
     /// Support vector row `j`.
     #[inline]
     pub fn sv(&self, j: usize) -> &[f32] {
-        &self.sv[j * self.d..(j + 1) * self.d]
+        self.store.row(j)
     }
 
     /// Squared norm of SV `j`.
     #[inline]
     pub fn sv_norm2(&self, j: usize) -> f32 {
-        self.norms[j]
+        self.store.norm2(j)
     }
 
     /// Effective coefficient `α_j = Φ·a_j`.
@@ -103,9 +123,12 @@ impl<K: Kernel + Copy> BudgetModel<K> {
         self.scale * self.alpha[j]
     }
 
-    /// All effective coefficients (allocates).
-    pub fn alphas(&self) -> Vec<f64> {
-        self.alpha[..self.count].iter().map(|a| a * self.scale).collect()
+    /// All effective coefficients, allocation-free: the lazy scale Φ is
+    /// folded into the raw coefficients first, after which the raw slice
+    /// *is* the effective one.
+    pub fn alphas(&mut self) -> &[f64] {
+        self.fold_scale();
+        &self.alpha
     }
 
     /// Current global scale Φ (exposed for tests/diagnostics).
@@ -116,7 +139,7 @@ impl<K: Kernel + Copy> BudgetModel<K> {
     /// Multiply the whole expansion by `factor` in O(1) (Pegasos shrink).
     pub fn rescale(&mut self, factor: f64) {
         debug_assert!(factor.is_finite());
-        if self.count == 0 {
+        if self.store.is_empty() {
             // An empty expansion times anything is still empty; keep Φ sane.
             self.scale = 1.0;
             return;
@@ -132,7 +155,7 @@ impl<K: Kernel + Copy> BudgetModel<K> {
         if self.scale == 1.0 {
             return;
         }
-        for a in &mut self.alpha[..self.count] {
+        for a in &mut self.alpha {
             *a *= self.scale;
         }
         self.scale = 1.0;
@@ -140,39 +163,30 @@ impl<K: Kernel + Copy> BudgetModel<K> {
 
     /// Append a support vector with *effective* coefficient `alpha_eff`.
     pub fn push(&mut self, x: &[f32], alpha_eff: f64) {
-        assert_eq!(x.len(), self.d);
         if self.scale == 0.0 {
             // Degenerate state (all coefficients are exactly zero anyway).
             self.clear();
         }
-        self.sv.extend_from_slice(x);
-        self.norms.push(norm2(x));
+        self.store.push(x);
         self.alpha.push(alpha_eff / self.scale);
-        self.count += 1;
     }
 
     /// Remove SV `j` (swap-remove; order is not preserved).
     pub fn swap_remove(&mut self, j: usize) {
-        assert!(j < self.count);
-        let last = self.count - 1;
+        let count = self.store.len();
+        assert!(j < count, "swap_remove index {j} out of range {count}");
+        let last = count - 1;
         if j != last {
-            let (head, tail) = self.sv.split_at_mut(last * self.d);
-            head[j * self.d..(j + 1) * self.d].copy_from_slice(&tail[..self.d]);
             self.alpha[j] = self.alpha[last];
-            self.norms[j] = self.norms[last];
         }
-        self.sv.truncate(last * self.d);
         self.alpha.truncate(last);
-        self.norms.truncate(last);
-        self.count = last;
+        self.store.swap_remove(j);
     }
 
     /// Remove all support vectors.
     pub fn clear(&mut self) {
-        self.sv.clear();
+        self.store.clear();
         self.alpha.clear();
-        self.norms.clear();
-        self.count = 0;
         self.scale = 1.0;
     }
 
@@ -185,22 +199,43 @@ impl<K: Kernel + Copy> BudgetModel<K> {
     /// lowest index.
     pub fn argmin_abs_alpha(&self) -> Option<usize> {
         // Raw |a_j| ordering equals effective |Φ·a_j| ordering (Φ is global).
-        (0..self.count).min_by(|&i, &j| {
+        (0..self.store.len()).min_by(|&i, &j| {
             self.alpha[i].abs().partial_cmp(&self.alpha[j].abs()).unwrap()
         })
     }
 
     /// Decision value `f(x) = Φ·Σ_j a_j k(x_j, x) + b` for a row with known
-    /// squared norm. This is THE hot function of the whole system; `K` is a
-    /// monomorphized parameter, so the kernel evaluation inlines exactly as
-    /// the hand-fused Gaussian loop did.
+    /// squared norm. This is THE hot function of the whole system: the sum
+    /// runs tile-by-tile over the blocked SV store — one fused pass over
+    /// `x` per 8 SVs — with `K` monomorphized so the per-tile kernel
+    /// evaluation inlines.
     pub fn decision_with_norm(&self, x: &[f32], x_norm2: f32) -> f64 {
-        debug_assert_eq!(x.len(), self.d);
-        let d = self.d;
+        debug_assert_eq!(x.len(), self.store.dim());
+        let count = self.store.len();
         let mut acc = 0.0f64;
-        for j in 0..self.count {
-            let s = &self.sv[j * d..(j + 1) * d];
-            acc += self.alpha[j] * self.kernel.eval(x, x_norm2, s, self.norms[j]);
+        let mut dots = [0.0f32; TILE];
+        let mut kvals = [0.0f64; TILE];
+        for t in 0..self.store.num_tiles() {
+            self.store.tile_dots(t, x, &mut dots);
+            self.kernel.eval_block(x_norm2, &dots, self.store.tile_norms(t), &mut kvals);
+            let base = t * TILE;
+            let lanes = TILE.min(count - base);
+            for (a, k) in self.alpha[base..base + lanes].iter().zip(&kvals) {
+                acc += a * k;
+            }
+        }
+        self.scale * acc + self.bias
+    }
+
+    /// Scalar reference for [`BudgetModel::decision_with_norm`]: the
+    /// pre-tiling one-SV-at-a-time loop. Kept for conformance tests and
+    /// the bench harness's speedup baseline.
+    pub fn decision_with_norm_scalar(&self, x: &[f32], x_norm2: f32) -> f64 {
+        debug_assert_eq!(x.len(), self.store.dim());
+        let mut acc = 0.0f64;
+        for j in 0..self.store.len() {
+            let k = self.kernel.eval(x, x_norm2, self.store.row(j), self.store.norm2(j));
+            acc += self.alpha[j] * k;
         }
         self.scale * acc + self.bias
     }
@@ -219,47 +254,158 @@ impl<K: Kernel + Copy> BudgetModel<K> {
         }
     }
 
-    /// Kernel row `κ_j = k(x, sv_j)` written into `out` (length ≥ count).
-    /// Returns the number of entries written.
+    /// Kernel row `κ_j = k(x, sv_j)` written into `out` (length ≥ count),
+    /// computed through the blocked engine. Returns the number of entries
+    /// written.
     pub fn kernel_row(&self, x: &[f32], x_norm2: f32, out: &mut [f64]) -> usize {
-        let d = self.d;
-        for j in 0..self.count {
-            let s = &self.sv[j * d..(j + 1) * d];
-            out[j] = self.kernel.eval(x, x_norm2, s, self.norms[j]);
-        }
-        self.count
+        self.kernel_row_prefix(x, x_norm2, self.store.len(), out)
     }
 
-    /// Squared RKHS norm `‖w‖² = Σ_ij α_i α_j k(x_i, x_j)` — O(B²), used by
-    /// objective evaluation and tests, not by the hot loop.
+    /// [`BudgetModel::kernel_row`] truncated to the first `upto` SVs:
+    /// writes `κ_j` for `j < min(upto, count)` only, touching just the
+    /// tiles that cover that prefix. Lets symmetric consumers (Gram
+    /// construction) keep the triangle saving while staying blocked.
+    pub fn kernel_row_prefix(
+        &self,
+        x: &[f32],
+        x_norm2: f32,
+        upto: usize,
+        out: &mut [f64],
+    ) -> usize {
+        let count = self.store.len().min(upto);
+        debug_assert!(out.len() >= count);
+        let mut dots = [0.0f32; TILE];
+        let mut kvals = [0.0f64; TILE];
+        for t in 0..count.div_ceil(TILE) {
+            self.store.tile_dots(t, x, &mut dots);
+            self.kernel.eval_block(x_norm2, &dots, self.store.tile_norms(t), &mut kvals);
+            let base = t * TILE;
+            let lanes = TILE.min(count - base);
+            out[base..base + lanes].copy_from_slice(&kvals[..lanes]);
+        }
+        count
+    }
+
+    /// Scalar reference for [`BudgetModel::kernel_row`] (one `Kernel::eval`
+    /// per SV); bench baseline and conformance oracle.
+    pub fn kernel_row_scalar(&self, x: &[f32], x_norm2: f32, out: &mut [f64]) -> usize {
+        let count = self.store.len();
+        for j in 0..count {
+            out[j] = self.kernel.eval(x, x_norm2, self.store.row(j), self.store.norm2(j));
+        }
+        count
+    }
+
+    /// Squared RKHS norm `‖w‖² = Σ_ij α_i α_j k(x_i, x_j)` — used by
+    /// objective evaluation and tests, not by the hot loop. Exploits
+    /// symmetry: the diagonal comes from `self_eval`, the strict upper
+    /// triangle is computed once over the blocked engine and doubled, so
+    /// the work is half the naive full-matrix loop.
     pub fn weight_norm2(&self) -> f64 {
-        let mut acc = 0.0;
-        for i in 0..self.count {
-            for j in 0..self.count {
-                let k = self.kernel.eval(self.sv(i), self.norms[i], self.sv(j), self.norms[j]);
-                acc += self.alpha[i] * self.alpha[j] * k;
+        let count = self.store.len();
+        let mut diag = 0.0f64;
+        let mut off = 0.0f64;
+        let mut dots = [0.0f32; TILE];
+        let mut kvals = [0.0f64; TILE];
+        for i in 0..count {
+            let ai = self.alpha[i];
+            diag += ai * ai * self.kernel.self_eval(self.store.norm2(i));
+            let xi = self.store.row(i);
+            let ni = self.store.norm2(i);
+            // Tiles covering j < i (the last one partially).
+            let tiles = i.div_ceil(TILE);
+            for t in 0..tiles {
+                self.store.tile_dots(t, xi, &mut dots);
+                self.kernel.eval_block(ni, &dots, self.store.tile_norms(t), &mut kvals);
+                let base = t * TILE;
+                let lanes = TILE.min(i - base);
+                for (a, k) in self.alpha[base..base + lanes].iter().zip(&kvals) {
+                    off += ai * a * k;
+                }
             }
         }
-        self.scale * self.scale * acc
+        self.scale * self.scale * (diag + 2.0 * off)
     }
 
-    /// Classification accuracy on a dataset.
+    /// Classification accuracy on a dataset (uses the dataset's cached row
+    /// norms — no per-row `norm2` recomputation).
     pub fn accuracy(&self, ds: &crate::data::Dataset) -> f64 {
         if ds.is_empty() {
             return 0.0;
         }
+        let norms = ds.norms();
         let mut correct = 0usize;
         for i in 0..ds.len() {
-            if self.predict(ds.row(i)) == ds.label(i) {
+            let f = self.decision_with_norm(ds.row(i), norms[i]);
+            let pred = if f >= 0.0 { 1.0 } else { -1.0 };
+            if pred == ds.label(i) {
                 correct += 1;
             }
         }
         correct as f64 / ds.len() as f64
     }
 
+    /// Classification accuracy evaluated on `threads` workers (0 = all
+    /// hardware threads). Row-granular split + integer reduction: the
+    /// result is identical for every thread count.
+    pub fn accuracy_threaded(&self, ds: &crate::data::Dataset, threads: usize) -> f64 {
+        if ds.is_empty() {
+            return 0.0;
+        }
+        let norms = ds.norms();
+        let correct: usize = parallel::map_ranges(ds.len(), threads, |r| {
+            let mut correct = 0usize;
+            for i in r {
+                let f = self.decision_with_norm(ds.row(i), norms[i]);
+                let pred = if f >= 0.0 { 1.0 } else { -1.0 };
+                if pred == ds.label(i) {
+                    correct += 1;
+                }
+            }
+            correct
+        })
+        .into_iter()
+        .sum();
+        correct as f64 / ds.len() as f64
+    }
+
     /// Decision values for every row of a dataset (allocates the output).
     pub fn decision_batch(&self, ds: &crate::data::Dataset) -> Vec<f64> {
-        (0..ds.len()).map(|i| self.decision(ds.row(i))).collect()
+        let norms = ds.norms();
+        (0..ds.len()).map(|i| self.decision_with_norm(ds.row(i), norms[i])).collect()
+    }
+
+    /// Decision values for every row, evaluated on `threads` workers
+    /// (0 = all hardware threads). Chunked at row granularity and
+    /// concatenated in order — bit-identical for every thread count.
+    pub fn decision_batch_threaded(&self, ds: &crate::data::Dataset, threads: usize) -> Vec<f64> {
+        let norms = ds.norms();
+        parallel::map_ranges(ds.len(), threads, |r| {
+            r.map(|i| self.decision_with_norm(ds.row(i), norms[i])).collect::<Vec<f64>>()
+        })
+        .into_iter()
+        .flatten()
+        .collect()
+    }
+
+    /// Decision values for a flat row-major buffer (`x.len()` must be a
+    /// multiple of the model dimension), evaluated on `threads` workers
+    /// (0 = all hardware threads). Each row's norm is computed exactly
+    /// once.
+    pub fn decision_rows(&self, x: &[f32], threads: usize) -> Vec<f64> {
+        let d = self.store.dim();
+        assert!(d > 0, "model dimension must be positive");
+        assert_eq!(x.len() % d, 0, "flat buffer is not a multiple of the model dimension");
+        parallel::map_ranges(x.len() / d, threads, |r| {
+            r.map(|i| {
+                let row = &x[i * d..(i + 1) * d];
+                self.decision_with_norm(row, norm2(row))
+            })
+            .collect::<Vec<f64>>()
+        })
+        .into_iter()
+        .flatten()
+        .collect()
     }
 }
 
@@ -347,6 +493,11 @@ impl AnyModel {
         for_any_model!(self, m => m.decision(x))
     }
 
+    /// Decision value for a row with known squared norm.
+    pub fn decision_with_norm(&self, x: &[f32], x_norm2: f32) -> f64 {
+        for_any_model!(self, m => m.decision_with_norm(x, x_norm2))
+    }
+
     /// Predicted label (±1).
     pub fn predict(&self, x: &[f32]) -> f32 {
         for_any_model!(self, m => m.predict(x))
@@ -357,9 +508,26 @@ impl AnyModel {
         for_any_model!(self, m => m.accuracy(ds))
     }
 
+    /// Classification accuracy on `threads` workers (0 = all hardware
+    /// threads); identical result for every thread count.
+    pub fn accuracy_threaded(&self, ds: &crate::data::Dataset, threads: usize) -> f64 {
+        for_any_model!(self, m => m.accuracy_threaded(ds, threads))
+    }
+
     /// Decision values for every row of a dataset.
     pub fn decision_batch(&self, ds: &crate::data::Dataset) -> Vec<f64> {
         for_any_model!(self, m => m.decision_batch(ds))
+    }
+
+    /// Decision values for every row on `threads` workers (0 = all
+    /// hardware threads); bit-identical for every thread count.
+    pub fn decision_batch_threaded(&self, ds: &crate::data::Dataset, threads: usize) -> Vec<f64> {
+        for_any_model!(self, m => m.decision_batch_threaded(ds, threads))
+    }
+
+    /// Decision values for a flat row-major buffer on `threads` workers.
+    pub fn decision_rows(&self, x: &[f32], threads: usize) -> Vec<f64> {
+        for_any_model!(self, m => m.decision_rows(x, threads))
     }
 
     /// Borrow the Gaussian variant, if that is what this model is.
@@ -404,6 +572,8 @@ impl From<BudgetModel<Polynomial>> for AnyModel {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::prop::forall;
+    use crate::util::rng::Rng;
 
     fn model_with(points: &[(&[f32], f64)]) -> BudgetModel {
         let d = points[0].0.len();
@@ -481,6 +651,32 @@ mod tests {
     }
 
     #[test]
+    fn kernel_row_prefix_matches_full_row() {
+        let mut rng = Rng::new(41);
+        let mut m = BudgetModel::new(3, Gaussian::new(0.4), 19);
+        for _ in 0..19 {
+            let row: Vec<f32> = (0..3).map(|_| rng.normal() as f32).collect();
+            m.push(&row, rng.normal());
+        }
+        let x: Vec<f32> = (0..3).map(|_| rng.normal() as f32).collect();
+        let xn = norm2(&x);
+        let mut full = vec![0.0f64; 19];
+        assert_eq!(m.kernel_row(&x, xn, &mut full), 19);
+        for upto in [0usize, 1, 7, 8, 9, 16, 19, 25] {
+            let expect = upto.min(19);
+            let mut prefix = vec![f64::NAN; 19];
+            assert_eq!(m.kernel_row_prefix(&x, xn, upto, &mut prefix), expect);
+            for j in 0..expect {
+                assert_eq!(prefix[j], full[j], "upto={upto} j={j}");
+            }
+            // Entries past the prefix are untouched.
+            for j in expect..19 {
+                assert!(prefix[j].is_nan(), "upto={upto} j={j} was written");
+            }
+        }
+    }
+
+    #[test]
     fn kernel_row_matches_decision() {
         let m = model_with(&[(&[0.0, 1.0], 1.5), (&[1.0, 0.0], -0.5), (&[1.0, 1.0], 0.25)]);
         let x = [0.2f32, 0.8];
@@ -497,6 +693,98 @@ mod tests {
         let m = model_with(&[(&[1.0, 1.0], 2.0)]);
         // ‖2φ(x)‖² = 4·k(x,x) = 4
         assert!((m.weight_norm2() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn weight_norm2_symmetry_matches_full_matrix() {
+        // The halved (upper-triangle) computation must equal the naive
+        // full-matrix double loop it replaced.
+        let mut rng = Rng::new(31);
+        let mut m = BudgetModel::new(3, Gaussian::new(0.4), 13);
+        for _ in 0..13 {
+            let row: Vec<f32> = (0..3).map(|_| rng.normal() as f32).collect();
+            m.push(&row, rng.normal());
+        }
+        m.rescale(0.7);
+        let mut naive = 0.0f64;
+        for i in 0..m.num_sv() {
+            for j in 0..m.num_sv() {
+                let k = m.kernel().eval(m.sv(i), m.sv_norm2(i), m.sv(j), m.sv_norm2(j));
+                naive += m.alpha(i) * m.alpha(j) * k;
+            }
+        }
+        let fast = m.weight_norm2();
+        assert!(
+            (fast - naive).abs() <= 1e-9 * (1.0 + naive.abs()),
+            "fast={fast} naive={naive}"
+        );
+    }
+
+    #[test]
+    fn blocked_decision_matches_scalar_reference() {
+        // Odd sizes around the tile boundary; Gaussian-random data (the
+        // two summation orders agree to f32 rounding, checked loosely here
+        // — the exact ≤1e-12 property lives in tests/block_engine.rs on
+        // dyadic inputs).
+        let mut rng = Rng::new(77);
+        for &n_sv in &[1usize, 7, 8, 9, 16, 23] {
+            let mut m = BudgetModel::new(5, Gaussian::new(0.3), n_sv);
+            for _ in 0..n_sv {
+                let row: Vec<f32> = (0..5).map(|_| rng.normal() as f32).collect();
+                m.push(&row, rng.normal());
+            }
+            let x: Vec<f32> = (0..5).map(|_| rng.normal() as f32).collect();
+            let xn = norm2(&x);
+            let blocked = m.decision_with_norm(&x, xn);
+            let scalar = m.decision_with_norm_scalar(&x, xn);
+            assert!(
+                (blocked - scalar).abs() <= 1e-5 * (1.0 + scalar.abs()),
+                "n_sv={n_sv}: blocked={blocked} scalar={scalar}"
+            );
+        }
+    }
+
+    #[test]
+    fn alphas_slice_is_effective_and_allocation_free() {
+        let mut m = model_with(&[(&[0.0, 0.0], 1.0), (&[1.0, 1.0], -2.0)]);
+        m.rescale(0.5);
+        let a: Vec<f64> = m.alphas().to_vec();
+        assert_eq!(a.len(), 2);
+        assert!((a[0] - 0.5).abs() < 1e-15);
+        assert!((a[1] + 1.0).abs() < 1e-15);
+        // Folding happened: the scale is back to 1 and alpha(j) agrees.
+        assert_eq!(m.global_scale(), 1.0);
+        assert!((m.alpha(1) + 1.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn threaded_batch_matches_sequential() {
+        let mut rng = Rng::new(9);
+        let mut m = BudgetModel::new(2, Gaussian::new(0.8), 10);
+        for _ in 0..10 {
+            m.push(&[rng.normal() as f32, rng.normal() as f32], rng.normal());
+        }
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for i in 0..53 {
+            x.push(rng.normal() as f32);
+            x.push(rng.normal() as f32);
+            y.push(if i % 2 == 0 { 1.0 } else { -1.0 });
+        }
+        let ds = crate::data::Dataset::new("t", x.clone(), y, 2);
+        let seq = m.decision_batch(&ds);
+        for threads in [1usize, 2, 4, 7] {
+            let par = m.decision_batch_threaded(&ds, threads);
+            assert_eq!(seq.len(), par.len());
+            for (a, b) in seq.iter().zip(&par) {
+                assert!((a - b).abs() == 0.0, "threads={threads}: {a} vs {b}");
+            }
+            assert_eq!(m.accuracy(&ds), m.accuracy_threaded(&ds, threads));
+        }
+        let rows = m.decision_rows(&x, 3);
+        for (a, b) in seq.iter().zip(&rows) {
+            assert!((a - b).abs() == 0.0);
+        }
     }
 
     #[test]
@@ -572,5 +860,29 @@ mod tests {
         assert!(l.as_gaussian().is_none());
         assert!(l.into_gaussian().is_err());
         assert!(AnyModel::new(3, KernelSpec::gaussian(-1.0), 2).is_err());
+    }
+
+    #[test]
+    fn store_survives_heavy_churn() {
+        // Interleaved push/swap_remove across tile boundaries keeps the
+        // blocked and scalar paths agreeing.
+        forall("model churn keeps layouts in sync", 32, 0xBEEF7, |rng| {
+            let mut m = BudgetModel::new(3, Gaussian::new(0.6), 8);
+            for _ in 0..60 {
+                if m.is_empty() || rng.bernoulli(0.6) {
+                    let row: Vec<f32> = (0..3).map(|_| rng.normal() as f32).collect();
+                    m.push(&row, rng.normal());
+                } else {
+                    let j = rng.below(m.num_sv());
+                    m.swap_remove(j);
+                }
+            }
+            let x: Vec<f32> = (0..3).map(|_| rng.normal() as f32).collect();
+            let xn = norm2(&x);
+            let blocked = m.decision_with_norm(&x, xn);
+            let scalar = m.decision_with_norm_scalar(&x, xn);
+            let ok = (blocked - scalar).abs() <= 1e-5 * (1.0 + scalar.abs());
+            (ok, format!("n_sv={} blocked={blocked} scalar={scalar}", m.num_sv()))
+        });
     }
 }

@@ -1,0 +1,295 @@
+//! Cache-blocked support-vector storage.
+//!
+//! [`SvStore`] keeps the SV matrix in two synchronized layouts:
+//!
+//! * **rows** — the classic flat row-major matrix (`count · d` values),
+//!   serving random row access (`sv(j)`), serialization, and the scalar
+//!   reference path;
+//! * **tiles** — the blocked SoA layout the kernel-row engine runs on:
+//!   groups of `TILE = 8` consecutive SVs, stored *feature-major within
+//!   the tile* (`tiles[t·d·T + k·T + l]` is feature `k` of SV `t·T + l`).
+//!   One pass over a query row `x` then computes all `TILE` inner products
+//!   of a tile with a broadcast-FMA micro-kernel — `x[k]` is loaded once
+//!   and multiplied against 8 contiguous lane values, which the
+//!   auto-vectorizer turns into a single 8-wide `f32` FMA per feature.
+//!
+//! Invariants (relied on by [`crate::model::BudgetModel`] and the tests):
+//!
+//! * `tiles.len() == ⌈count/T⌉ · d · T` and `norms.len() == ⌈count/T⌉ · T`;
+//!   both layouts always describe the same `count` rows.
+//! * Padding lanes of the last tile hold zero data and zero norms, so a
+//!   kernel evaluated on a padding lane is a well-defined (if meaningless)
+//!   number — consumers mask padding by *coefficient range*, never by
+//!   branching inside the micro-kernel.
+//! * [`SvStore::swap_remove`] mirrors the classic swap-remove in both
+//!   layouts (order is not preserved) and re-zeroes the vacated lane.
+
+use crate::kernel::{norm2, TILE};
+
+/// Support vectors in synchronized row-major + SoA-tile layouts with
+/// co-located squared norms.
+#[derive(Debug, Clone)]
+pub struct SvStore {
+    d: usize,
+    count: usize,
+    /// Row-major mirror, `count * d` valid entries.
+    rows: Vec<f32>,
+    /// SoA tiles, `⌈count/TILE⌉ * d * TILE` entries, padding lanes zero.
+    tiles: Vec<f32>,
+    /// Squared L2 norms, padded to a TILE multiple (padding entries zero).
+    norms: Vec<f32>,
+}
+
+impl SvStore {
+    /// New empty store; `capacity` is a row-count reservation hint.
+    pub fn new(d: usize, capacity: usize) -> Self {
+        let cap_tiles = capacity.div_ceil(TILE);
+        SvStore {
+            d,
+            count: 0,
+            rows: Vec::with_capacity(capacity * d),
+            tiles: Vec::with_capacity(cap_tiles * d * TILE),
+            norms: Vec::with_capacity(cap_tiles * TILE),
+        }
+    }
+
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.count
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Row `j` (row-major mirror).
+    #[inline]
+    pub fn row(&self, j: usize) -> &[f32] {
+        &self.rows[j * self.d..(j + 1) * self.d]
+    }
+
+    /// Squared norm of row `j`.
+    #[inline]
+    pub fn norm2(&self, j: usize) -> f32 {
+        debug_assert!(j < self.count);
+        self.norms[j]
+    }
+
+    /// Number of SoA tiles (`⌈len/TILE⌉`).
+    #[inline]
+    pub fn num_tiles(&self) -> usize {
+        self.count.div_ceil(TILE)
+    }
+
+    /// Squared norms of tile `t`'s lanes (padding lanes read 0).
+    #[inline]
+    pub fn tile_norms(&self, t: usize) -> &[f32; TILE] {
+        let s = &self.norms[t * TILE..(t + 1) * TILE];
+        s.try_into().expect("tile norm slice has TILE entries")
+    }
+
+    /// The 8-lane-unrolled FMA micro-kernel: one pass over `x` computing
+    /// the inner products against all `TILE` lanes of tile `t`. The inner
+    /// fixed-bound loop compiles to one 8-wide f32 multiply-add per
+    /// feature (the `chunks_exact` iterator keeps bounds checks out of the
+    /// loop body).
+    #[inline]
+    pub fn tile_dots(&self, t: usize, x: &[f32], out: &mut [f32; TILE]) {
+        debug_assert_eq!(x.len(), self.d);
+        let tile = &self.tiles[t * self.d * TILE..(t + 1) * self.d * TILE];
+        let mut acc = [0.0f32; TILE];
+        for (lanes, &xk) in tile.chunks_exact(TILE).zip(x.iter()) {
+            for (a, &v) in acc.iter_mut().zip(lanes) {
+                *a += xk * v;
+            }
+        }
+        *out = acc;
+    }
+
+    /// Append a row; its squared norm is computed here (same `norm2` as
+    /// the scalar path, so cached norms are bit-identical to recomputed
+    /// ones).
+    pub fn push(&mut self, x: &[f32]) {
+        assert_eq!(x.len(), self.d, "row has wrong dimension");
+        let lane = self.count % TILE;
+        if lane == 0 {
+            // Open a fresh zeroed tile.
+            self.tiles.resize(self.tiles.len() + self.d * TILE, 0.0);
+            self.norms.resize(self.norms.len() + TILE, 0.0);
+        }
+        let t = self.count / TILE;
+        let base = t * self.d * TILE + lane;
+        for (k, &v) in x.iter().enumerate() {
+            self.tiles[base + k * TILE] = v;
+        }
+        self.rows.extend_from_slice(x);
+        self.norms[t * TILE + lane] = norm2(x);
+        self.count += 1;
+    }
+
+    /// Swap-remove row `j` (order is not preserved): the last row moves
+    /// into slot `j` in both layouts, the vacated last lane is re-zeroed,
+    /// and an emptied trailing tile is dropped.
+    pub fn swap_remove(&mut self, j: usize) {
+        assert!(j < self.count, "swap_remove index {j} out of range {}", self.count);
+        let last = self.count - 1;
+        let d = self.d;
+        if j != last {
+            let (head, tail) = self.rows.split_at_mut(last * d);
+            head[j * d..(j + 1) * d].copy_from_slice(&tail[..d]);
+            self.norms[j] = self.norms[last];
+            let (tj, lj) = (j / TILE, j % TILE);
+            let (tl, ll) = (last / TILE, last % TILE);
+            for k in 0..d {
+                self.tiles[tj * d * TILE + k * TILE + lj] =
+                    self.tiles[tl * d * TILE + k * TILE + ll];
+            }
+        }
+        let (tl, ll) = (last / TILE, last % TILE);
+        for k in 0..d {
+            self.tiles[tl * d * TILE + k * TILE + ll] = 0.0;
+        }
+        self.norms[last] = 0.0;
+        self.rows.truncate(last * d);
+        self.count = last;
+        if ll == 0 {
+            // The trailing tile just became empty: drop it entirely.
+            self.tiles.truncate(tl * d * TILE);
+            self.norms.truncate(tl * TILE);
+        }
+    }
+
+    /// Remove all rows.
+    pub fn clear(&mut self) {
+        self.rows.clear();
+        self.tiles.clear();
+        self.norms.clear();
+        self.count = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::dot;
+    use crate::util::prop::forall;
+    use crate::util::rng::Rng;
+
+    fn dots_reference(store: &SvStore, x: &[f32]) -> Vec<f32> {
+        (0..store.len()).map(|j| dot(x, store.row(j))).collect()
+    }
+
+    fn tile_dots_all(store: &SvStore, x: &[f32]) -> Vec<f32> {
+        let mut out = Vec::new();
+        let mut buf = [0.0f32; TILE];
+        for t in 0..store.num_tiles() {
+            store.tile_dots(t, x, &mut buf);
+            let lanes = TILE.min(store.len() - t * TILE);
+            out.extend_from_slice(&buf[..lanes]);
+        }
+        out
+    }
+
+    #[test]
+    fn push_and_row_roundtrip_across_tile_boundary() {
+        let mut s = SvStore::new(3, 4);
+        for j in 0..11 {
+            let row = [j as f32, j as f32 + 0.5, -(j as f32)];
+            s.push(&row);
+        }
+        assert_eq!(s.len(), 11);
+        assert_eq!(s.num_tiles(), 2);
+        for j in 0..11 {
+            assert_eq!(s.row(j), &[j as f32, j as f32 + 0.5, -(j as f32)]);
+            assert!((s.norm2(j) - dot(s.row(j), s.row(j))).abs() < 1e-4);
+        }
+        // Padding lanes of the last tile are inert.
+        let tn = s.tile_norms(1);
+        for l in 3..TILE {
+            assert_eq!(tn[l], 0.0);
+        }
+    }
+
+    #[test]
+    fn tile_dots_match_rowwise_dot_on_dyadic_data() {
+        // Dyadic-rational inputs make every product and partial sum exact
+        // in f32, so the two accumulation orders agree bit-for-bit.
+        forall("tile dots = row dots", 64, 0x71135, |rng| {
+            let d = [1, 3, 8, 17][rng.below(4)];
+            let n = 1 + rng.below(21);
+            let mut s = SvStore::new(d, n);
+            let mut gen = |rng: &mut Rng| ((rng.below(129) as i64 - 64) as f32) / 16.0;
+            for _ in 0..n {
+                let row: Vec<f32> = (0..d).map(|_| gen(rng)).collect();
+                s.push(&row);
+            }
+            let x: Vec<f32> = (0..d).map(|_| gen(rng)).collect();
+            let blocked = tile_dots_all(&s, &x);
+            let scalar = dots_reference(&s, &x);
+            let ok = blocked
+                .iter()
+                .zip(&scalar)
+                .all(|(a, b)| (a - b).abs() <= 1e-12 * (1.0 + b.abs()));
+            (ok, format!("d={d} n={n} blocked={blocked:?} scalar={scalar:?}"))
+        });
+    }
+
+    #[test]
+    fn swap_remove_keeps_layouts_synchronized() {
+        forall("swap_remove layout sync", 48, 0xDEAD5, |rng| {
+            let d = 1 + rng.below(9);
+            let mut s = SvStore::new(d, 8);
+            let mut gen = |rng: &mut Rng| ((rng.below(65) as i64 - 32) as f32) / 8.0;
+            // Random interleaving of pushes and removals.
+            for _ in 0..40 {
+                if s.is_empty() || rng.bernoulli(0.65) {
+                    let row: Vec<f32> = (0..d).map(|_| gen(rng)).collect();
+                    s.push(&row);
+                } else {
+                    let j = rng.below(s.len());
+                    s.swap_remove(j);
+                }
+            }
+            if s.is_empty() {
+                return (true, "emptied".to_string());
+            }
+            let x: Vec<f32> = (0..d).map(|_| gen(rng)).collect();
+            let blocked = tile_dots_all(&s, &x);
+            let scalar = dots_reference(&s, &x);
+            let ok = blocked.len() == scalar.len()
+                && blocked
+                    .iter()
+                    .zip(&scalar)
+                    .all(|(a, b)| (a - b).abs() <= 1e-12 * (1.0 + b.abs()));
+            (ok, format!("d={d} len={} blocked={blocked:?} scalar={scalar:?}", s.len()))
+        });
+    }
+
+    #[test]
+    fn clear_resets_everything() {
+        let mut s = SvStore::new(2, 4);
+        s.push(&[1.0, 2.0]);
+        s.push(&[3.0, 4.0]);
+        s.clear();
+        assert!(s.is_empty());
+        assert_eq!(s.num_tiles(), 0);
+        s.push(&[5.0, 6.0]);
+        assert_eq!(s.row(0), &[5.0, 6.0]);
+        assert_eq!(tile_dots_all(&s, &[1.0, 1.0]), vec![11.0]);
+    }
+
+    #[test]
+    fn removing_the_only_row_drops_the_tile() {
+        let mut s = SvStore::new(2, 2);
+        s.push(&[1.0, 1.0]);
+        s.swap_remove(0);
+        assert!(s.is_empty());
+        assert_eq!(s.num_tiles(), 0);
+    }
+}

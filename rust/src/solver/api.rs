@@ -149,6 +149,13 @@ pub struct RunConfig {
     pub curve_every: u64,
     /// Rows subsampled for each curve evaluation.
     pub curve_sample: usize,
+    /// Worker threads for the embarrassingly-parallel layers: per-class
+    /// one-vs-rest training, chunked batch prediction/accuracy, and curve
+    /// evaluation. `0` = all hardware threads, `1` = fully serial. The
+    /// thread count never changes results — work splits at machine / row
+    /// granularity with order-preserving reduction, so `threads = N` is
+    /// bit-identical to `threads = 1`.
+    pub threads: usize,
 }
 
 impl Default for RunConfig {
@@ -161,6 +168,7 @@ impl Default for RunConfig {
             audit: false,
             curve_every: 0,
             curve_sample: 512,
+            threads: 0,
         }
     }
 }
@@ -198,6 +206,13 @@ impl RunConfig {
     pub fn curve(mut self, every: u64, sample: usize) -> Self {
         self.curve_every = every;
         self.curve_sample = sample;
+        self
+    }
+
+    /// Worker threads (0 = all hardware threads, 1 = serial; results are
+    /// identical either way).
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
         self
     }
 
@@ -347,6 +362,16 @@ mod tests {
         assert!(SvmConfig::new().kernel(KernelSpec::gaussian(0.0)).validate().is_err());
         assert!(RunConfig::new().passes(0).validate().is_err());
         RunConfig::new().passes(3).curve(100, 64).validate().unwrap();
+    }
+
+    #[test]
+    fn run_config_threads_knob() {
+        let run = RunConfig::new().threads(4);
+        assert_eq!(run.threads, 4);
+        run.validate().unwrap();
+        // 0 (all cores) and 1 (serial) are both valid.
+        RunConfig::new().threads(0).validate().unwrap();
+        RunConfig::new().threads(1).validate().unwrap();
     }
 
     #[test]

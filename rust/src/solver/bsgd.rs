@@ -139,6 +139,7 @@ impl BsgdOptions {
                 audit: self.audit,
                 curve_every: self.curve_every,
                 curve_sample: self.curve_sample,
+                threads: 1,
             },
         )
     }
@@ -209,6 +210,8 @@ pub(crate) struct SgdHyper {
     pub lr: LearningRate,
     pub curve_every: u64,
     pub curve_sample: usize,
+    /// Resolved worker-thread count for curve evaluation (≥ 1).
+    pub threads: usize,
 }
 
 /// The kernel-generic SGD pass loop shared by the budgeted BSGD estimator
@@ -235,8 +238,9 @@ pub(crate) fn run_sgd_passes<K: Kernel + Copy>(
     let n = train.len();
     debug_assert!(n > 0);
 
-    // Precompute row norms once (reused by every margin evaluation).
-    let norms: Vec<f32> = (0..n).map(|i| crate::kernel::norm2(train.row(i))).collect();
+    // Row norms come precomputed with the dataset (bit-identical to the
+    // `norm2(row)` this loop used to recompute per ingest call).
+    let norms = train.norms();
 
     // Fixed evaluation sample for the curve.
     let curve_idx: Vec<usize> = if hyper.curve_every > 0 {
@@ -274,12 +278,26 @@ pub(crate) fn run_sgd_passes<K: Kernel + Copy>(
             }
 
             if hyper.curve_every > 0 && steps % hyper.curve_every == 0 {
-                summary.curve.push(curve_point(model, train, &curve_idx, hyper.lambda, steps));
+                summary.curve.push(curve_point(
+                    model,
+                    train,
+                    &curve_idx,
+                    hyper.lambda,
+                    steps,
+                    hyper.threads,
+                ));
             }
         }
     }
     if hyper.curve_every > 0 {
-        summary.curve.push(curve_point(model, train, &curve_idx, hyper.lambda, summary.steps));
+        summary.curve.push(curve_point(
+            model,
+            train,
+            &curve_idx,
+            hyper.lambda,
+            summary.steps,
+            hyper.threads,
+        ));
     }
     summary.wall_seconds += wall_start.elapsed().as_secs_f64();
 }
@@ -290,11 +308,26 @@ fn curve_point<K: Kernel + Copy>(
     idx: &[usize],
     lambda: f64,
     step: u64,
+    threads: usize,
 ) -> CurvePoint {
+    // Decision values in chunked parallel (row-granular, order-preserving:
+    // identical output for every thread count); the hinge/accuracy
+    // reduction stays sequential so summation order — and therefore the
+    // curve — is independent of the thread count. Tiny samples stay
+    // serial (spawn overhead beats the work).
+    let threads = if idx.len() < 64 { 1 } else { threads };
+    let decisions: Vec<f64> = crate::util::parallel::map_ranges(idx.len(), threads, |r| {
+        idx[r]
+            .iter()
+            .map(|&i| model.decision_with_norm(train.row(i), train.norm(i)))
+            .collect::<Vec<f64>>()
+    })
+    .into_iter()
+    .flatten()
+    .collect();
     let mut hinge = 0.0f64;
     let mut correct = 0usize;
-    for &i in idx {
-        let f = model.decision(train.row(i));
+    for (&i, &f) in idx.iter().zip(&decisions) {
         let y = train.label(i) as f64;
         hinge += (1.0 - y * f).max(0.0);
         if (f >= 0.0) == (y >= 0.0) {
@@ -431,6 +464,7 @@ impl BsgdEstimator {
                 .unwrap_or(LearningRate::PegasosInvT { lambda: self.config.lambda }),
             curve_every: self.run.curve_every,
             curve_sample: self.run.curve_sample,
+            threads: crate::util::parallel::resolve_threads(self.run.threads),
         };
         let strategy = self.config.strategy;
         let grid = self.config.grid;
@@ -551,6 +585,24 @@ impl Estimator for BsgdEstimator {
 
     fn dim(&self) -> Option<usize> {
         self.state.as_ref().map(|s| s.model.dim())
+    }
+
+    /// Chunked parallel batch prediction over `RunConfig::threads` workers
+    /// (row-granular split: identical output for every thread count).
+    fn predict_batch(&self, x: &[f32]) -> Result<Vec<f32>> {
+        let st = self.state.as_ref().context("estimator is not fitted")?;
+        let d = st.model.dim();
+        ensure!(
+            x.len() % d == 0,
+            "batch buffer length {} is not a multiple of the feature dimension {d}",
+            x.len()
+        );
+        Ok(st
+            .model
+            .decision_rows(x, self.run.threads)
+            .into_iter()
+            .map(|f| if f >= 0.0 { 1.0 } else { -1.0 })
+            .collect())
     }
 }
 

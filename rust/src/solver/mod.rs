@@ -26,7 +26,7 @@ pub mod smo;
 
 pub use api::{Estimator, FitSummary, RunConfig, SvmConfig};
 pub use bsgd::{train_bsgd, BsgdEstimator, BsgdOptions, CurvePoint, TrainReport};
-pub use multiclass::OneVsRestEstimator;
+pub use multiclass::{MulticlassDataset, OneVsRestEstimator};
 pub use pegasos::PegasosEstimator;
 pub use schedule::LearningRate;
 pub use smo::SmoEstimator;

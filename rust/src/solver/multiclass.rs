@@ -13,11 +13,22 @@
 //! (see [`crate::budget::lookup::shared`]), so the 400×400 table is built
 //! once, not K times. [`train_multiclass`] / [`MulticlassModel`] remain as
 //! the legacy Gaussian shim.
+//!
+//! Training is embarrassingly parallel across classes: `fit`/`partial_fit`
+//! run the K machines on the shared [`crate::util::parallel`] pool
+//! (`RunConfig::threads`, 0 = all cores). Each machine owns an
+//! independent per-class RNG stream derived from the base seed, so the
+//! result is *bit-identical* for every thread count — `threads = N`
+//! reproduces the `threads = 1` serial output exactly. Batch prediction
+//! and accuracy are likewise chunked across rows, with each row's norm
+//! computed once and shared by all K machines.
 
 use anyhow::{ensure, Context, Result};
 
 use crate::data::Dataset;
+use crate::kernel::norm2;
 use crate::model::{AnyModel, BudgetModel};
+use crate::util::parallel;
 
 use super::api::{Estimator, RunConfig, SvmConfig};
 use super::bsgd::{BsgdEstimator, BsgdOptions};
@@ -27,6 +38,8 @@ use super::bsgd::{BsgdEstimator, BsgdOptions};
 pub struct MulticlassDataset {
     x: Vec<f32>,
     y: Vec<usize>,
+    /// Row norms, computed once and shared by every per-class binary view.
+    row_norms: Vec<f32>,
     n: usize,
     d: usize,
     k: usize,
@@ -40,7 +53,8 @@ impl MulticlassDataset {
         ensure!(y.len() == n, "label count mismatch");
         let k = y.iter().copied().max().map(|m| m + 1).unwrap_or(0);
         ensure!(k >= 2, "need at least two classes");
-        Ok(MulticlassDataset { x, y, n, d, k })
+        let row_norms = (0..n).map(|i| norm2(&x[i * d..(i + 1) * d])).collect();
+        Ok(MulticlassDataset { x, y, row_norms, n, d, k })
     }
 
     pub fn len(&self) -> usize {
@@ -67,11 +81,22 @@ impl MulticlassDataset {
         self.y[i]
     }
 
-    /// The binary one-vs-rest view for class `c` (+1 = class c).
+    /// The binary one-vs-rest view for class `c` (+1 = class c). The
+    /// feature matrix is cloned (the binary `Dataset` owns its rows) but
+    /// the row norms are reused from this dataset instead of being
+    /// recomputed per class. During a parallel fit at most `threads` such
+    /// views are alive at once — each job builds its view on entry and
+    /// drops it with the job.
     fn binary_view(&self, c: usize) -> Dataset {
         let labels: Vec<f32> =
             self.y.iter().map(|&yi| if yi == c { 1.0 } else { -1.0 }).collect();
-        Dataset::new(format!("ovr-{c}"), self.x.clone(), labels, self.d)
+        Dataset::with_norms(
+            format!("ovr-{c}"),
+            self.x.clone(),
+            labels,
+            self.d,
+            self.row_norms.clone(),
+        )
     }
 }
 
@@ -109,6 +134,9 @@ impl OneVsRestEstimator {
             .map(|c| {
                 let mut run = self.run.clone();
                 run.seed = class_seed(self.run.seed, c);
+                // The ensemble owns the worker pool; machines stay serial
+                // inside so K-way class parallelism never oversubscribes.
+                run.threads = 1;
                 BsgdEstimator::new(self.config.clone(), run)
             })
             .collect::<Result<Vec<_>>>()?;
@@ -130,17 +158,34 @@ impl OneVsRestEstimator {
         self.machines.iter().filter_map(|m| m.model()).map(|m| m.num_sv()).sum()
     }
 
-    /// Classification accuracy on a multiclass dataset.
+    /// Borrow the fitted per-class models (errors before the first fit).
+    fn models(&self) -> Result<Vec<&AnyModel>> {
+        ensure!(!self.machines.is_empty(), "estimator is not fitted");
+        self.machines.iter().map(|m| m.model().context("machine is not fitted")).collect()
+    }
+
+    /// Classification accuracy on a multiclass dataset, evaluated in
+    /// row-chunks on the shared pool (`RunConfig::threads`). Each row's
+    /// norm is computed once and reused by all K machines; the correct
+    /// count reduces over integers, so the result is identical for every
+    /// thread count.
     pub fn accuracy(&self, ds: &MulticlassDataset) -> Result<f64> {
         if ds.is_empty() {
             return Ok(0.0);
         }
-        let mut correct = 0usize;
-        for i in 0..ds.len() {
-            if self.predict(ds.row(i))? as usize == ds.label(i) {
-                correct += 1;
+        let models = self.models()?;
+        ensure!(ds.dim() == models[0].dim(), "dataset dimension mismatch");
+        let correct: usize = parallel::map_ranges(ds.len(), self.run.threads, |r| {
+            let mut correct = 0usize;
+            for i in r {
+                if argmax_class_with_norm(&models, ds.row(i), ds.row_norms[i]) == ds.label(i) {
+                    correct += 1;
+                }
             }
-        }
+            correct
+        })
+        .into_iter()
+        .sum();
         Ok(correct as f64 / ds.len() as f64)
     }
 
@@ -167,16 +212,64 @@ impl OneVsRestEstimator {
             ds.num_classes() - 1,
             self.machines.len()
         );
-        for (c, machine) in self.machines.iter_mut().enumerate() {
-            let view = ds.binary_view(c);
-            if reset {
-                machine.fit(&view)?;
-            } else {
-                machine.partial_fit(&view)?;
+        // One job per class on the shared pool. The dataset is shared
+        // read-only; each job builds its own ±1 view and drives its own
+        // machine (independent per-class seed), so any thread count —
+        // including the serial `threads = 1` — produces bit-identical
+        // machines.
+        let threads = parallel::resolve_threads(self.run.threads).min(self.machines.len());
+        if threads <= 1 {
+            for (c, machine) in self.machines.iter_mut().enumerate() {
+                let view = ds.binary_view(c);
+                if reset {
+                    machine.fit(&view)?;
+                } else {
+                    machine.partial_fit(&view)?;
+                }
+            }
+        } else {
+            let jobs: Vec<_> = self
+                .machines
+                .iter_mut()
+                .enumerate()
+                .map(|(c, machine)| {
+                    move || -> Result<()> {
+                        let view = ds.binary_view(c);
+                        if reset {
+                            machine.fit(&view)
+                        } else {
+                            machine.partial_fit(&view)
+                        }
+                    }
+                })
+                .collect();
+            for outcome in parallel::run_jobs(jobs, threads) {
+                outcome?;
             }
         }
         Ok(())
     }
+}
+
+/// Argmax class over the per-class decision values, computing the row norm
+/// once for all machines. Ties resolve to the highest class index, exactly
+/// like the `Iterator::max_by` the per-row `predict` path uses.
+fn argmax_class(models: &[&AnyModel], x: &[f32]) -> usize {
+    argmax_class_with_norm(models, x, norm2(x))
+}
+
+/// [`argmax_class`] with a caller-supplied (cached) row norm.
+fn argmax_class_with_norm(models: &[&AnyModel], x: &[f32], xn: f32) -> usize {
+    let mut best = 0usize;
+    let mut best_v = f64::NEG_INFINITY;
+    for (c, m) in models.iter().enumerate() {
+        let v = m.decision_with_norm(x, xn);
+        if v >= best_v {
+            best_v = v;
+            best = c;
+        }
+    }
+    best
 }
 
 impl Estimator for OneVsRestEstimator {
@@ -190,10 +283,18 @@ impl Estimator for OneVsRestEstimator {
         self.ingest(data, false)
     }
 
-    /// Per-class decision values (length = number of classes).
+    /// Per-class decision values (length = number of classes). The row
+    /// norm is computed once and shared by all K machines.
     fn decision_function(&self, x: &[f32]) -> Result<Vec<f64>> {
-        ensure!(!self.machines.is_empty(), "estimator is not fitted");
-        self.machines.iter().map(|m| m.decision_function(x).map(|v| v[0])).collect()
+        let models = self.models()?;
+        let xn = norm2(x);
+        models
+            .iter()
+            .map(|m| {
+                ensure!(x.len() == m.dim(), "feature row has wrong dimension");
+                Ok(m.decision_with_norm(x, xn))
+            })
+            .collect()
     }
 
     /// Predicted class index (as `f32`) = argmax of the decision values.
@@ -211,6 +312,26 @@ impl Estimator for OneVsRestEstimator {
     fn dim(&self) -> Option<usize> {
         self.machines.first().and_then(|m| m.dim())
     }
+
+    /// Chunked parallel batch prediction (`RunConfig::threads` workers):
+    /// each row's norm is computed once for all K machines; chunks
+    /// concatenate in order, so the output is identical for every thread
+    /// count.
+    fn predict_batch(&self, x: &[f32]) -> Result<Vec<f32>> {
+        let models = self.models()?;
+        let d = models[0].dim();
+        ensure!(
+            x.len() % d == 0,
+            "batch buffer length {} is not a multiple of the feature dimension {d}",
+            x.len()
+        );
+        Ok(parallel::map_ranges(x.len() / d, self.run.threads, |r| {
+            r.map(|i| argmax_class(&models, &x[i * d..(i + 1) * d]) as f32).collect::<Vec<f32>>()
+        })
+        .into_iter()
+        .flatten()
+        .collect())
+    }
 }
 
 /// A trained one-vs-rest ensemble (legacy Gaussian surface).
@@ -219,12 +340,14 @@ pub struct MulticlassModel {
 }
 
 impl MulticlassModel {
-    /// Predicted class = argmax of the per-class decision values.
+    /// Predicted class = argmax of the per-class decision values (the row
+    /// norm is computed once for all machines).
     pub fn predict(&self, x: &[f32]) -> usize {
+        let xn = norm2(x);
         let mut best = 0usize;
         let mut best_v = f64::NEG_INFINITY;
         for (c, m) in self.machines.iter().enumerate() {
-            let v = m.decision(x);
+            let v = m.decision_with_norm(x, xn);
             if v > best_v {
                 best_v = v;
                 best = c;
@@ -233,9 +356,10 @@ impl MulticlassModel {
         best
     }
 
-    /// Per-class decision values.
+    /// Per-class decision values (one shared norm computation).
     pub fn decision(&self, x: &[f32]) -> Vec<f64> {
-        self.machines.iter().map(|m| m.decision(x)).collect()
+        let xn = norm2(x);
+        self.machines.iter().map(|m| m.decision_with_norm(x, xn)).collect()
     }
 
     pub fn num_classes(&self) -> usize {
@@ -401,6 +525,59 @@ mod tests {
         let acc = est.accuracy(&train).unwrap();
         assert!(acc > 0.85, "polynomial OvR accuracy {acc}");
         assert!(est.total_sv() <= 3 * 15);
+    }
+
+    #[test]
+    fn parallel_fit_is_bit_identical_to_serial() {
+        let train = three_blobs(320, 17);
+        let test = three_blobs(160, 18);
+        let config = SvmConfig::new()
+            .kernel(KernelSpec::gaussian(1.0))
+            .budget(12)
+            .c(10.0, train.len());
+        let mut results: Vec<Vec<f64>> = Vec::new();
+        let mut accs = Vec::new();
+        for threads in [1usize, 4] {
+            let run = RunConfig::new().passes(2).seed(5).threads(threads);
+            let mut est = OneVsRestEstimator::new(config.clone(), run).unwrap();
+            est.fit(&train).unwrap();
+            let mut flat = Vec::new();
+            for i in (0..train.len()).step_by(7) {
+                flat.extend(est.decision_function(train.row(i)).unwrap());
+            }
+            results.push(flat);
+            accs.push(est.accuracy(&test).unwrap());
+        }
+        assert_eq!(results[0].len(), results[1].len());
+        for (a, b) in results[0].iter().zip(&results[1]) {
+            assert!(
+                a.to_bits() == b.to_bits(),
+                "threads=4 must be bit-identical to threads=1: {a} vs {b}"
+            );
+        }
+        assert_eq!(accs[0], accs[1]);
+    }
+
+    #[test]
+    fn predict_batch_matches_per_row_predict() {
+        let train = three_blobs(240, 31);
+        let config = SvmConfig::new()
+            .kernel(KernelSpec::gaussian(1.0))
+            .budget(10)
+            .c(10.0, train.len());
+        let mut est =
+            OneVsRestEstimator::new(config, RunConfig::new().passes(2).threads(3)).unwrap();
+        est.fit(&train).unwrap();
+        // Flat buffer of all rows.
+        let mut flat = Vec::with_capacity(train.len() * 2);
+        for i in 0..train.len() {
+            flat.extend_from_slice(train.row(i));
+        }
+        let batch = est.predict_batch(&flat).unwrap();
+        assert_eq!(batch.len(), train.len());
+        for i in 0..train.len() {
+            assert_eq!(batch[i], est.predict(train.row(i)).unwrap(), "row {i}");
+        }
     }
 
     #[test]

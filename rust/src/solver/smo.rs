@@ -20,7 +20,7 @@ use std::time::Instant;
 use anyhow::{ensure, Context, Result};
 
 use crate::data::Dataset;
-use crate::kernel::{norm2, Gaussian, Kernel, KernelSpec, Linear, Polynomial};
+use crate::kernel::{Gaussian, Kernel, KernelSpec, Linear, Polynomial};
 use crate::model::{AnyModel, BudgetModel};
 
 use super::api::Estimator;
@@ -103,8 +103,9 @@ fn smo_core<K: Kernel + Copy>(
 
     let y: Vec<f64> = (0..n).map(|i| train.label(i) as f64).collect();
 
-    // Full kernel matrix in f32 (n ≤ 4096 → ≤ 64 MiB).
-    let norms: Vec<f32> = (0..n).map(|i| norm2(train.row(i))).collect();
+    // Full kernel matrix in f32 (n ≤ 4096 → ≤ 64 MiB); row norms come
+    // cached with the dataset.
+    let norms = train.norms();
     let mut k = vec![0.0f32; n * n];
     for i in 0..n {
         k[i * n + i] = kernel.self_eval(norms[i]) as f32;

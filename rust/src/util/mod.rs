@@ -13,10 +13,13 @@
 //! * [`prop`] — a miniature property-based testing harness (seeded random
 //!   case generation with failing-seed reporting),
 //! * [`bench`] — a criterion-style micro-benchmark runner used by all
-//!   `cargo bench` targets.
+//!   `cargo bench` targets,
+//! * [`parallel`] — the scoped-thread work-queue pool shared by
+//!   one-vs-rest training, batch prediction, and the experiment runner.
 
 pub mod bench;
 pub mod json;
+pub mod parallel;
 pub mod prop;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,204 @@
+//! Scoped-thread work-queue parallelism.
+//!
+//! Hoisted out of `experiments::runner` so every layer — one-vs-rest
+//! training, batch prediction, curve evaluation, the experiment suite —
+//! shares one pool implementation (std scoped threads + a mutexed queue;
+//! tokio/rayon are not in the offline vendor set and all jobs are
+//! CPU-bound).
+//!
+//! Determinism contract: [`run_jobs`] slots results by submission index, so
+//! for *independent* jobs the output is identical for every thread count.
+//! All in-crate consumers split work at row / machine granularity and
+//! reduce sequentially afterwards, which keeps `threads = N` bit-identical
+//! to `threads = 1`.
+
+use std::collections::VecDeque;
+use std::ops::Range;
+use std::sync::{Arc, Mutex};
+
+/// Number of hardware threads (fallback 4 when undetectable).
+pub fn available_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Resolve a user-facing thread knob: `0` means "all hardware threads".
+pub fn resolve_threads(requested: usize) -> usize {
+    if requested == 0 {
+        available_threads()
+    } else {
+        requested
+    }
+}
+
+/// Split `0..n` into at most `parts` contiguous ranges of near-equal
+/// length (earlier ranges get the remainder). Never returns an empty
+/// vector; `n == 0` yields one empty range.
+pub fn chunk_ranges(n: usize, parts: usize) -> Vec<Range<usize>> {
+    let parts = parts.clamp(1, n.max(1));
+    let base = n / parts;
+    let extra = n % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    for i in 0..parts {
+        let len = base + usize::from(i < extra);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+/// The one chunked-parallel-map used by every batch path in the crate:
+/// split `0..n` into at most `threads` contiguous ranges (`0` = all
+/// hardware threads), apply `f` to each, and return the per-range results
+/// in range order. `threads <= 1` (or `n <= 1`) calls `f(0..n)` inline —
+/// no worker is spawned — and because the split is contiguous and the
+/// output ordered, callers that concatenate or reduce the results
+/// sequentially get identical output for every thread count. Centralizing
+/// the pattern here is what keeps that bit-identity contract in one
+/// place.
+pub fn map_ranges<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(Range<usize>) -> T + Sync,
+{
+    let threads = resolve_threads(threads).min(n.max(1));
+    if threads <= 1 {
+        return vec![f(0..n)];
+    }
+    let jobs: Vec<_> = chunk_ranges(n, threads)
+        .into_iter()
+        .map(|r| {
+            let f = &f;
+            move || f(r)
+        })
+        .collect();
+    run_jobs(jobs, threads)
+}
+
+/// Run `jobs` on `threads` workers; returns results in job order.
+pub fn run_jobs<T, F>(jobs: Vec<F>, threads: usize) -> Vec<T>
+where
+    T: Send,
+    F: FnOnce() -> T + Send,
+{
+    let n = jobs.len();
+    let threads = threads.clamp(1, n.max(1));
+    // Queue of (index, job); results slotted by index.
+    let queue: Arc<Mutex<VecDeque<(usize, F)>>> =
+        Arc::new(Mutex::new(jobs.into_iter().enumerate().collect()));
+    let results: Arc<Mutex<Vec<Option<T>>>> =
+        Arc::new(Mutex::new((0..n).map(|_| None).collect()));
+
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            let queue = Arc::clone(&queue);
+            let results = Arc::clone(&results);
+            scope.spawn(move || loop {
+                let job = queue.lock().unwrap().pop_front();
+                match job {
+                    Some((idx, f)) => {
+                        let out = f();
+                        results.lock().unwrap()[idx] = Some(out);
+                    }
+                    None => break,
+                }
+            });
+        }
+    });
+
+    Arc::try_unwrap(results)
+        .unwrap_or_else(|_| panic!("worker leaked a results handle"))
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|r| r.expect("every job must produce a result"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_preserve_submission_order() {
+        let jobs: Vec<Box<dyn FnOnce() -> usize + Send>> = (0..50)
+            .map(|i| {
+                Box::new(move || {
+                    // Uneven work so completion order scrambles.
+                    let mut acc = 0usize;
+                    for k in 0..((50 - i) * 1000) {
+                        acc = acc.wrapping_add(k);
+                    }
+                    std::hint::black_box(acc);
+                    i
+                }) as Box<dyn FnOnce() -> usize + Send>
+            })
+            .collect();
+        let out = run_jobs(jobs, 8);
+        assert_eq!(out, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_thread_works() {
+        let jobs: Vec<_> = (0..5).map(|i| move || i * 2).collect();
+        assert_eq!(run_jobs(jobs, 1), vec![0, 2, 4, 6, 8]);
+    }
+
+    #[test]
+    fn more_threads_than_jobs() {
+        let jobs: Vec<_> = (0..3).map(|i| move || i).collect();
+        assert_eq!(run_jobs(jobs, 64), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn empty_job_list() {
+        let jobs: Vec<fn() -> u8> = Vec::new();
+        assert!(run_jobs(jobs, 4).is_empty());
+    }
+
+    #[test]
+    fn chunk_ranges_cover_exactly() {
+        for (n, parts) in [(10, 3), (3, 10), (0, 4), (16, 4), (1, 1), (7, 7)] {
+            let ranges = chunk_ranges(n, parts);
+            assert!(!ranges.is_empty());
+            let mut expect = 0usize;
+            for r in &ranges {
+                assert_eq!(r.start, expect, "n={n} parts={parts}");
+                expect = r.end;
+            }
+            assert_eq!(expect, n, "n={n} parts={parts}");
+            let (min, max) = ranges
+                .iter()
+                .fold((usize::MAX, 0), |(lo, hi), r| (lo.min(r.len()), hi.max(r.len())));
+            assert!(max - min <= 1, "near-equal split: n={n} parts={parts}");
+        }
+    }
+
+    #[test]
+    fn resolve_threads_zero_means_all() {
+        assert!(resolve_threads(0) >= 1);
+        assert_eq!(resolve_threads(3), 3);
+    }
+
+    #[test]
+    fn map_ranges_is_thread_count_invariant() {
+        let data: Vec<u64> = (0..997).map(|i| i * 7 + 3).collect();
+        let serial: Vec<u64> =
+            map_ranges(data.len(), 1, |r| data[r].to_vec()).into_iter().flatten().collect();
+        assert_eq!(serial, data);
+        for threads in [2usize, 3, 8, 64] {
+            let par: Vec<u64> = map_ranges(data.len(), threads, |r| data[r].to_vec())
+                .into_iter()
+                .flatten()
+                .collect();
+            assert_eq!(par, data, "threads={threads}");
+            let sum: u64 = map_ranges(data.len(), threads, |r| data[r].iter().sum::<u64>())
+                .into_iter()
+                .sum();
+            assert_eq!(sum, data.iter().sum::<u64>(), "threads={threads}");
+        }
+        // n = 0 still yields exactly one (empty) range.
+        let empty: Vec<Vec<u64>> = map_ranges(0, 4, |r| data[r].to_vec());
+        assert_eq!(empty, vec![Vec::<u64>::new()]);
+    }
+}

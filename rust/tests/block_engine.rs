@@ -1,0 +1,235 @@
+//! Conformance suite for the blocked kernel-row engine.
+//!
+//! The blocked SoA-tile path and the scalar reference accumulate the
+//! per-row inner product in different orders, so on arbitrary `f32` data
+//! they agree only to f32 rounding. On *dyadic-rational* inputs (multiples
+//! of 1/16 with small magnitude) every product and partial sum is exactly
+//! representable in an `f32`, both accumulation orders are exact, and the
+//! two paths must agree to f64 round-off — which is what pins the ≤1e-12
+//! bound below without weakening it to "roughly equal".
+//!
+//! Coverage: all three kernels, SV counts that are NOT multiples of the
+//! tile size, dimensions `d ∈ {1, 3, 8, 17}`, models churned through
+//! swap_remove, and the multiclass thread-count bit-identity guarantee.
+
+use budgetsvm::kernel::{norm2, Gaussian, Kernel, KernelSpec, Linear, Polynomial, TILE};
+use budgetsvm::model::BudgetModel;
+use budgetsvm::solver::{
+    Estimator, MulticlassDataset, OneVsRestEstimator, RunConfig, SvmConfig,
+};
+use budgetsvm::util::prop::forall;
+use budgetsvm::util::rng::Rng;
+
+const DIMS: [usize; 4] = [1, 3, 8, 17];
+const TOL: f64 = 1e-12;
+
+/// Dyadic rational in [-4, 4] with denominator 16: exactly representable,
+/// products exact in f32 (≤ 8 mantissa bits each), sums of dozens of such
+/// products exact too.
+fn dyadic(rng: &mut Rng) -> f32 {
+    ((rng.below(129) as i64 - 64) as f32) / 16.0
+}
+
+fn dyadic_row(rng: &mut Rng, d: usize) -> Vec<f32> {
+    (0..d).map(|_| dyadic(rng)).collect()
+}
+
+/// An SV count that deliberately avoids tile-size multiples most of the
+/// time (1..=26, covering 0, 1, 2, 3 tiles with partial boundaries).
+fn odd_count(rng: &mut Rng) -> usize {
+    let n = 1 + rng.below(26);
+    if n % TILE == 0 {
+        n + 1
+    } else {
+        n
+    }
+}
+
+fn check_model<K: Kernel + Copy>(m: &BudgetModel<K>, x: &[f32], what: &str) -> (bool, String) {
+    let xn = norm2(x);
+    let blocked = m.decision_with_norm(x, xn);
+    let scalar = m.decision_with_norm_scalar(x, xn);
+    if (blocked - scalar).abs() > TOL * (1.0 + scalar.abs()) {
+        return (
+            false,
+            format!("{what}: decision blocked={blocked} scalar={scalar} n_sv={}", m.num_sv()),
+        );
+    }
+    let mut row_b = vec![0.0f64; m.num_sv()];
+    let mut row_s = vec![0.0f64; m.num_sv()];
+    let nb = m.kernel_row(x, xn, &mut row_b);
+    let ns = m.kernel_row_scalar(x, xn, &mut row_s);
+    if nb != ns {
+        return (false, format!("{what}: kernel_row count {nb} vs {ns}"));
+    }
+    for j in 0..nb {
+        if (row_b[j] - row_s[j]).abs() > TOL * (1.0 + row_s[j].abs()) {
+            return (
+                false,
+                format!("{what}: kernel_row[{j}] blocked={} scalar={}", row_b[j], row_s[j]),
+            );
+        }
+    }
+    (true, String::new())
+}
+
+fn build_and_check<K: Kernel + Copy>(kernel: K, rng: &mut Rng, what: &str) -> (bool, String) {
+    let d = DIMS[rng.below(DIMS.len())];
+    let n = odd_count(rng);
+    let mut m = BudgetModel::new(d, kernel, n);
+    for _ in 0..n {
+        let row = dyadic_row(rng, d);
+        // Dyadic coefficients keep the f64 expansion sum exact as well.
+        let a = ((rng.below(33) as i64 - 16) as f64) / 8.0;
+        m.push(&row, a);
+    }
+    let x = dyadic_row(rng, d);
+    check_model(&m, &x, what)
+}
+
+#[test]
+fn gaussian_blocked_matches_scalar_to_1e12() {
+    forall("gaussian block engine", 128, 0x6A05, |rng| {
+        build_and_check(Gaussian::new(0.25), rng, "gaussian")
+    });
+}
+
+#[test]
+fn linear_blocked_matches_scalar_to_1e12() {
+    forall("linear block engine", 128, 0x11EA, |rng| build_and_check(Linear, rng, "linear"));
+}
+
+#[test]
+fn polynomial_blocked_matches_scalar_to_1e12() {
+    forall("polynomial block engine", 128, 0x9017, |rng| {
+        build_and_check(Polynomial::new(1.0, 1.0, 2), rng, "polynomial")
+    });
+}
+
+#[test]
+fn churned_model_stays_conformant() {
+    // swap_remove churn across tile boundaries must keep the tiled layout
+    // in exact agreement with the row mirror.
+    forall("churned block engine", 96, 0xC1114, |rng| {
+        let d = DIMS[rng.below(DIMS.len())];
+        let mut m = BudgetModel::new(d, Gaussian::new(0.5), 8);
+        for _ in 0..50 {
+            if m.is_empty() || rng.bernoulli(0.6) {
+                let row = dyadic_row(rng, d);
+                m.push(&row, ((rng.below(33) as i64 - 16) as f64) / 8.0);
+            } else {
+                let j = rng.below(m.num_sv());
+                m.swap_remove(j);
+            }
+        }
+        if m.is_empty() {
+            return (true, "emptied".to_string());
+        }
+        let x = dyadic_row(rng, d);
+        check_model(&m, &x, "churned")
+    });
+}
+
+#[test]
+fn weight_norm2_matches_naive_full_matrix() {
+    forall("symmetric weight_norm2", 64, 0x3377, |rng| {
+        let d = DIMS[rng.below(DIMS.len())];
+        let n = odd_count(rng);
+        let mut m = BudgetModel::new(d, Gaussian::new(0.5), n);
+        for _ in 0..n {
+            let row = dyadic_row(rng, d);
+            m.push(&row, ((rng.below(33) as i64 - 16) as f64) / 8.0);
+        }
+        let mut naive = 0.0f64;
+        for i in 0..m.num_sv() {
+            for j in 0..m.num_sv() {
+                let k = m.kernel().eval(m.sv(i), m.sv_norm2(i), m.sv(j), m.sv_norm2(j));
+                naive += m.alpha(i) * m.alpha(j) * k;
+            }
+        }
+        let fast = m.weight_norm2();
+        let ok = (fast - naive).abs() <= 1e-9 * (1.0 + naive.abs());
+        (ok, format!("n_sv={} fast={fast} naive={naive}", m.num_sv()))
+    });
+}
+
+/// Four well-separated Gaussian blobs (a ≥4-class problem so 4 workers all
+/// get a machine).
+fn four_blobs(n: usize, seed: u64) -> MulticlassDataset {
+    let mut rng = Rng::new(seed);
+    let centers = [(0.0f64, 0.0f64), (4.0, 0.0), (0.0, 4.0), (4.0, 4.0)];
+    let mut x = Vec::with_capacity(n * 2);
+    let mut y = Vec::with_capacity(n);
+    for i in 0..n {
+        let c = i % centers.len();
+        x.push((centers[c].0 + 0.45 * rng.normal()) as f32);
+        x.push((centers[c].1 + 0.45 * rng.normal()) as f32);
+        y.push(c);
+    }
+    MulticlassDataset::new(x, y, 2).unwrap()
+}
+
+#[test]
+fn multiclass_threads_4_is_bit_identical_to_threads_1() {
+    let train = four_blobs(480, 3);
+    let config = SvmConfig::new()
+        .kernel(KernelSpec::gaussian(1.0))
+        .budget(15)
+        .c(10.0, train.len());
+
+    let fit_with = |threads: usize| -> Vec<u64> {
+        let run = RunConfig::new().passes(3).seed(42).threads(threads);
+        let mut est = OneVsRestEstimator::new(config.clone(), run).unwrap();
+        est.fit(&train).unwrap();
+        // Capture every decision value bit pattern on a probe grid plus
+        // all training rows: any training divergence would surface here.
+        let mut bits = Vec::new();
+        for i in 0..train.len() {
+            for v in est.decision_function(train.row(i)).unwrap() {
+                bits.push(v.to_bits());
+            }
+        }
+        for gx in -2..7 {
+            for gy in -2..7 {
+                let probe = [gx as f32 * 0.75, gy as f32 * 0.75];
+                for v in est.decision_function(&probe).unwrap() {
+                    bits.push(v.to_bits());
+                }
+            }
+        }
+        bits
+    };
+
+    let serial = fit_with(1);
+    let parallel = fit_with(4);
+    assert_eq!(serial.len(), parallel.len());
+    let diverged = serial.iter().zip(&parallel).filter(|(a, b)| a != b).count();
+    assert_eq!(
+        diverged, 0,
+        "threads=4 training must be bit-identical to threads=1 ({diverged} of {} values differ)",
+        serial.len()
+    );
+}
+
+#[test]
+fn batch_prediction_is_thread_count_invariant() {
+    let train = four_blobs(240, 9);
+    let config = SvmConfig::new()
+        .kernel(KernelSpec::gaussian(1.0))
+        .budget(12)
+        .c(10.0, train.len());
+    let mut flat = Vec::with_capacity(train.len() * 2);
+    for i in 0..train.len() {
+        flat.extend_from_slice(train.row(i));
+    }
+    let mut outputs: Vec<Vec<f32>> = Vec::new();
+    for threads in [1usize, 2, 4, 7] {
+        let run = RunConfig::new().passes(2).seed(5).threads(threads);
+        let mut est = OneVsRestEstimator::new(config.clone(), run).unwrap();
+        est.fit(&train).unwrap();
+        outputs.push(est.predict_batch(&flat).unwrap());
+    }
+    for other in &outputs[1..] {
+        assert_eq!(&outputs[0], other, "predict_batch must not depend on the thread count");
+    }
+}
