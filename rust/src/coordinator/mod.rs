@@ -1,23 +1,29 @@
 //! Coordinator: the top-level orchestration the CLI drives.
 //!
-//! Ties the experiment suite, the lookup-table artifacts and the PJRT
-//! runtime together: runs whole experiment campaigns, stamps results with
-//! the config for reproducibility, and exposes a single-run training entry
-//! point used by `repro train` and the examples.
+//! Ties the experiment suite, the lookup-table artifacts, the PJRT
+//! runtime and the serving subsystem together: runs whole experiment
+//! campaigns, stamps results with the config for reproducibility, exposes
+//! a single-run training entry point used by `repro train` and the
+//! examples, and assembles the `repro serve` process (replay benchmark or
+//! live TCP server) from the [`crate::serve`] components.
 
 use std::io::Write;
 use std::path::Path;
+use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use crate::budget::Strategy;
 use crate::config::ExperimentConfig;
 use crate::data::synthetic::Profile;
 use crate::data::{libsvm, Dataset};
-use crate::experiments::{self, prepare};
+use crate::experiments::{self, prepare, serve_bench};
 use crate::kernel::KernelSpec;
 use crate::model::AnyModel;
+use crate::serve::{
+    protocol, BatcherOptions, MicroBatcher, ModelRegistry, ServeConfig, ServeState, ShardedIngest,
+};
 use crate::solver::{BsgdEstimator, Estimator, FitSummary, RunConfig, SvmConfig};
 use crate::util::json::Json;
 
@@ -170,6 +176,155 @@ pub fn run_single(
         model,
         summary,
     })
+}
+
+/// What `repro serve --replay` produced (printed by the CLI).
+pub struct ReplaySummary {
+    /// Rows replayed through the protocol path.
+    pub rows: usize,
+    /// Version of the snapshot that served the replay.
+    pub version: u64,
+    /// Where `BENCH_serve.json` was written.
+    pub bench_path: String,
+}
+
+/// Offline end-to-end serving benchmark: runs the `{1, shards}` sweep of
+/// [`serve_bench`] over the LIBSVM file, then replays every row as a
+/// `predict` line through the *actual protocol session path* and verifies
+/// the answered labels byte-match an offline `predict_batch` on the same
+/// snapshot — failing loudly if they ever diverge. No network involved.
+///
+/// With `model_in`, the pre-trained model is published over the
+/// bench-trained one before the replay, so the byte-match check covers a
+/// hot-swapped model too.
+pub fn run_serve_replay(
+    replay: &str,
+    scfg: &ServeConfig,
+    kernel: Option<KernelSpec>,
+    c_override: Option<f64>,
+    model_in: Option<&str>,
+    out_dir: &str,
+) -> Result<ReplaySummary> {
+    // Rows are replayed exactly as they appear in the file — no rescaling
+    // — matching what a live server sees on `predict` lines (and what
+    // `repro eval` does). A `--model` must therefore have been trained on
+    // features in the same space as the replay stream.
+    let ds = libsvm::read_file(replay, 0)
+        .with_context(|| format!("cannot read replay file {replay}"))?;
+    ensure!(!ds.is_empty(), "replay file {replay} has no rows");
+
+    let mut scfg = scfg.clone();
+    scfg.svm.kernel = kernel.unwrap_or(KernelSpec::Gaussian { gamma: 1.0 / ds.dim() as f64 });
+    if let Some(c) = c_override {
+        scfg.svm.lambda = 1.0 / (c * ds.len() as f64);
+    }
+    scfg.validate()?;
+
+    // The acceptance sweep: serial baseline + the configured shard count.
+    let sweep: Vec<usize> =
+        if scfg.shards <= 1 { vec![1] } else { vec![1, scfg.shards] };
+    let (report, registry) =
+        serve_bench::run(&ds, &scfg.svm, scfg.seed, &sweep, scfg.publish_every, scfg.threads)?;
+    let bench_path = serve_bench::write(&report, out_dir)?;
+
+    if let Some(path) = model_in {
+        let version = registry.publish_from_file(path)?;
+        let dim = registry.current().expect("just published").model().dim();
+        ensure!(
+            dim == ds.dim(),
+            "model {path} has dimension {dim} but the replay file has {}",
+            ds.dim()
+        );
+        eprintln!("published {path} as v{version}");
+    }
+
+    // Protocol-path replay: every row as one `predict` line through the
+    // same session loop a TCP connection uses.
+    let batcher = MicroBatcher::new(
+        Arc::clone(&registry),
+        BatcherOptions { max_batch_rows: scfg.batch_max_rows, threads: scfg.threads },
+    );
+    let state = ServeState::new(Arc::clone(&registry), batcher.client(), None, scfg.ingest_chunk);
+    let mut request = String::new();
+    for i in 0..ds.len() {
+        request.push_str("predict");
+        request.push_str(&protocol::format_features(ds.row(i)));
+        request.push('\n');
+    }
+    let mut response: Vec<u8> = Vec::new();
+    protocol::serve_session(&state, request.as_bytes(), &mut response)?;
+    let response = String::from_utf8(response).context("protocol replied non-UTF8")?;
+
+    let snap = registry.current().context("nothing published")?;
+    let offline = snap.model().decision_rows(ds.features(), scfg.threads);
+    let mut served = 0usize;
+    for (i, line) in response.lines().enumerate() {
+        let expect_label = if offline[i] >= 0.0 { "+1" } else { "-1" };
+        let expect = format!("ok {expect_label} v{}", snap.version());
+        if line != expect {
+            bail!(
+                "replay mismatch at row {i}: server answered '{line}', offline \
+                 predict_batch expects '{expect}'"
+            );
+        }
+        served += 1;
+    }
+    ensure!(
+        served == ds.len(),
+        "server answered {served} of {} replayed rows",
+        ds.len()
+    );
+    batcher.shutdown();
+    Ok(ReplaySummary { rows: served, version: snap.version(), bench_path })
+}
+
+/// Live TCP server: publish the initial model (if any), stand up the
+/// micro-batcher and the sharded ingest pipeline, and serve line-protocol
+/// connections until the process is killed (or `max_connections` is
+/// reached — used by smoke tests).
+pub fn run_serve_tcp(
+    scfg: &ServeConfig,
+    model_in: Option<&str>,
+    max_connections: Option<usize>,
+) -> Result<()> {
+    scfg.validate()?;
+    let registry = Arc::new(ModelRegistry::new());
+    if let Some(path) = model_in {
+        let version = registry.publish_from_file(path)?;
+        eprintln!("published {path} as v{version}");
+    } else {
+        eprintln!("no initial model: predictions will fail until trained rows are flushed");
+    }
+    let pipeline = ShardedIngest::new(
+        scfg.svm.clone(),
+        RunConfig::new().seed(scfg.seed),
+        scfg.shards,
+        scfg.publish_every,
+        Arc::clone(&registry),
+    )?;
+    let batcher = MicroBatcher::new(
+        Arc::clone(&registry),
+        BatcherOptions { max_batch_rows: scfg.batch_max_rows, threads: scfg.threads },
+    );
+    let state = Arc::new(ServeState::new(
+        Arc::clone(&registry),
+        batcher.client(),
+        Some(pipeline),
+        scfg.ingest_chunk,
+    ));
+    // Loopback only: the wire protocol is unauthenticated, so an external
+    // bind would let any network peer mutate the served model via
+    // `train`/`flush`. Fronting with a local proxy is the supported way
+    // to expose it.
+    let listener = std::net::TcpListener::bind(("127.0.0.1", scfg.port))
+        .with_context(|| format!("cannot bind port {}", scfg.port))?;
+    eprintln!(
+        "serving on {} ({} ingest shard(s), publish every {} rows)",
+        listener.local_addr()?,
+        scfg.shards,
+        scfg.publish_every
+    );
+    protocol::serve_connections(listener, state, max_connections)
 }
 
 /// Machine-readable dump of a single run (used by `repro train --json`).

@@ -10,13 +10,16 @@
 //!
 //! [`runner`] executes training jobs across worker threads; [`report`]
 //! formats markdown/CSV; [`kernel_bench`] is the tracked perf harness
-//! behind `repro bench` (emits `BENCH_kernel.json`).
+//! behind `repro bench` (emits `BENCH_kernel.json`); [`serve_bench`] is
+//! its serving sibling behind `repro serve --replay` (emits
+//! `BENCH_serve.json`).
 
 pub mod figure2;
 pub mod figure3;
 pub mod kernel_bench;
 pub mod report;
 pub mod runner;
+pub mod serve_bench;
 pub mod table1;
 pub mod table2;
 pub mod table3;

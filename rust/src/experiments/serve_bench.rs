@@ -1,0 +1,240 @@
+//! Tracked serving bench harness (`repro serve --replay`): throughput and
+//! latency of the online subsystem, emitted as `BENCH_serve.json` so CI
+//! can archive the trajectory alongside `BENCH_kernel.json`.
+//!
+//! Per shard count (the acceptance sweep is `{1, 4}`):
+//!
+//! 1. **Streaming ingest** — rows/s through [`ShardedIngest`] fed in
+//!    fixed-size chunks, plus the per-publish ingest stall (shard drain +
+//!    merge + registry swap; readers are never paused).
+//! 2. **Micro-batched prediction** — four concurrent clients issue
+//!    single-row requests through the [`MicroBatcher`]; per-request wall
+//!    latency is recorded and reported as p50/p99 with the aggregate
+//!    rows/s.
+//! 3. **Agreement** — the served labels of this shard count against the
+//!    1-shard (serial-equivalent) labels, plus plain accuracy on the
+//!    stream's own labels.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::data::Dataset;
+use crate::serve::{BatcherOptions, MicroBatcher, ModelRegistry, ShardedIngest};
+use crate::solver::{RunConfig, SvmConfig};
+use crate::util::json::Json;
+use crate::util::parallel;
+use crate::util::stats::quantile_sorted;
+
+/// File name of the emitted report.
+pub const REPORT_FILE: &str = "BENCH_serve.json";
+
+/// Rows per ingest chunk (the granularity a stream source hands over).
+const INGEST_CHUNK: usize = 256;
+
+/// Concurrent prediction clients in the latency phase.
+const PREDICT_CLIENTS: usize = 4;
+
+/// One shard-count arm of the sweep (the shard count itself is recorded
+/// inside `cell`).
+struct Arm {
+    labels: Vec<f32>,
+    cell: Json,
+}
+
+/// Run the harness over `shard_counts` (first entry is the serial
+/// baseline for the agreement column; callers pass `[1, 4]`). Returns the
+/// JSON report and the registry of the *last* arm, so a caller can keep
+/// serving or byte-check the published model.
+pub fn run(
+    stream: &Dataset,
+    svm: &SvmConfig,
+    seed: u64,
+    shard_counts: &[usize],
+    publish_every: usize,
+    threads: usize,
+) -> Result<(Json, Arc<ModelRegistry>)> {
+    ensure!(!stream.is_empty(), "bench stream must not be empty");
+    ensure!(!shard_counts.is_empty(), "need at least one shard count");
+    let mut arms: Vec<Arm> = Vec::new();
+    let mut last_registry = None;
+    for &shards in shard_counts {
+        let (arm, registry) = run_arm(stream, svm, seed, shards, publish_every, threads)
+            .with_context(|| format!("bench arm with {shards} shard(s) failed"))?;
+        arms.push(arm);
+        last_registry = Some(registry);
+    }
+
+    // Agreement of each arm against the first (serial baseline) arm.
+    let baseline: Vec<f32> = arms[0].labels.clone();
+    let cells: Vec<Json> = arms
+        .into_iter()
+        .map(|arm| {
+            let agree = arm
+                .labels
+                .iter()
+                .zip(&baseline)
+                .filter(|(a, b)| a == b)
+                .count() as f64
+                / baseline.len() as f64;
+            let mut obj = match arm.cell {
+                Json::Object(o) => o,
+                _ => unreachable!("arm cells are objects"),
+            };
+            obj.insert("agreement_vs_serial".to_string(), Json::num(agree));
+            Json::Object(obj)
+        })
+        .collect();
+
+    let report = Json::object(vec![
+        ("schema", Json::str("bench_serve/v1")),
+        ("rows", Json::num(stream.len() as f64)),
+        ("dim", Json::num(stream.dim() as f64)),
+        ("publish_every", Json::num(publish_every as f64)),
+        ("ingest_chunk", Json::num(INGEST_CHUNK as f64)),
+        ("predict_clients", Json::num(PREDICT_CLIENTS as f64)),
+        ("shards", Json::array(cells)),
+    ]);
+    Ok((report, last_registry.expect("at least one arm ran")))
+}
+
+fn run_arm(
+    stream: &Dataset,
+    svm: &SvmConfig,
+    seed: u64,
+    shards: usize,
+    publish_every: usize,
+    threads: usize,
+) -> Result<(Arm, Arc<ModelRegistry>)> {
+    // ---- phase 1: streaming ingest ----
+    let registry = Arc::new(ModelRegistry::new());
+    let mut ingest = ShardedIngest::new(
+        svm.clone(),
+        RunConfig::new().seed(seed),
+        shards,
+        publish_every,
+        Arc::clone(&registry),
+    )?;
+    let t0 = Instant::now();
+    let mut start = 0usize;
+    while start < stream.len() {
+        let idx: Vec<usize> = (start..(start + INGEST_CHUNK).min(stream.len())).collect();
+        ingest.ingest(&stream.subset(&idx, "bench-chunk"))?;
+        start += INGEST_CHUNK;
+    }
+    let report = ingest.finish()?;
+    let ingest_seconds = t0.elapsed().as_secs_f64();
+
+    // ---- phase 2: micro-batched prediction latency ----
+    let batcher = MicroBatcher::new(
+        Arc::clone(&registry),
+        BatcherOptions { max_batch_rows: 64, threads },
+    );
+    let d = stream.dim();
+    let t1 = Instant::now();
+    // One contiguous row range per client; per-range results keep row
+    // order, so the concatenated labels line up with the stream.
+    let per_client: Vec<(Vec<f32>, Vec<f64>)> =
+        parallel::map_ranges(stream.len(), PREDICT_CLIENTS, |range| {
+            let client = batcher.client();
+            let mut labels = Vec::with_capacity(range.len());
+            let mut lat = Vec::with_capacity(range.len());
+            for i in range {
+                let t = Instant::now();
+                let reply = client.predict(stream.row(i), d).expect("bench predict failed");
+                lat.push(t.elapsed().as_secs_f64());
+                labels.push(reply.labels[0]);
+            }
+            (labels, lat)
+        });
+    let predict_seconds = t1.elapsed().as_secs_f64();
+    batcher.shutdown();
+
+    let mut labels = Vec::with_capacity(stream.len());
+    let mut latencies = Vec::with_capacity(stream.len());
+    for (l, lat) in per_client {
+        labels.extend(l);
+        latencies.extend(lat);
+    }
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p50_us = quantile_sorted(&latencies, 0.5) * 1e6;
+    let p99_us = quantile_sorted(&latencies, 0.99) * 1e6;
+
+    let correct =
+        labels.iter().zip(stream.labels()).filter(|(a, b)| a == b).count() as f64;
+    let accuracy = correct / stream.len() as f64;
+
+    let cell = Json::object(vec![
+        ("shards", Json::num(shards as f64)),
+        ("ingest_seconds", Json::num(ingest_seconds)),
+        (
+            "ingest_rows_per_s",
+            Json::num(report.rows as f64 / ingest_seconds.max(1e-12)),
+        ),
+        ("publishes", Json::num(report.publishes as f64)),
+        ("publish_stall_mean_ms", Json::num(report.stall_mean_seconds() * 1e3)),
+        ("publish_stall_max_ms", Json::num(report.stall_max_seconds() * 1e3)),
+        ("published_version", Json::num(report.last_version as f64)),
+        ("predict_p50_us", Json::num(p50_us)),
+        ("predict_p99_us", Json::num(p99_us)),
+        (
+            "predict_rows_per_s",
+            Json::num(stream.len() as f64 / predict_seconds.max(1e-12)),
+        ),
+        ("num_sv", Json::num(registry.current().map(|s| s.model().num_sv()).unwrap_or(0) as f64)),
+        ("stream_accuracy", Json::num(accuracy)),
+    ]);
+    Ok((Arm { labels, cell }, registry))
+}
+
+/// Write the report as `BENCH_serve.json` under `out_dir` (created if
+/// missing); returns the written path.
+pub fn write(report: &Json, out_dir: &str) -> Result<String> {
+    std::fs::create_dir_all(out_dir)
+        .with_context(|| format!("cannot create output directory {out_dir}"))?;
+    let path = format!("{}/{}", out_dir.trim_end_matches('/'), REPORT_FILE);
+    std::fs::write(&path, format!("{report}\n"))
+        .with_context(|| format!("cannot write {path}"))?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::two_moons;
+    use crate::kernel::KernelSpec;
+
+    #[test]
+    fn harness_produces_well_formed_report() {
+        let ds = two_moons(600, 0.12, 17);
+        let svm = SvmConfig::new()
+            .kernel(KernelSpec::gaussian(2.0))
+            .budget(25)
+            .c(10.0, ds.len());
+        let (report, registry) = run(&ds, &svm, 3, &[1, 2], 256, 2).unwrap();
+        assert_eq!(report.get("schema").and_then(Json::as_str), Some("bench_serve/v1"));
+        assert_eq!(report.get("rows").and_then(Json::as_usize), Some(600));
+        let cells = report.get("shards").and_then(Json::as_array).expect("shards array");
+        assert_eq!(cells.len(), 2);
+        for cell in cells {
+            assert!(cell.get("ingest_rows_per_s").and_then(Json::as_f64).unwrap() > 0.0);
+            assert!(cell.get("publishes").and_then(Json::as_f64).unwrap() >= 1.0);
+            let p50 = cell.get("predict_p50_us").and_then(Json::as_f64).unwrap();
+            let p99 = cell.get("predict_p99_us").and_then(Json::as_f64).unwrap();
+            assert!(p50 > 0.0 && p99 >= p50, "p50={p50} p99={p99}");
+            assert!(cell.get("stream_accuracy").and_then(Json::as_f64).unwrap() > 0.8);
+            let agree = cell.get("agreement_vs_serial").and_then(Json::as_f64).unwrap();
+            assert!(agree > 0.85, "agreement {agree}");
+        }
+        // The serial arm agrees with itself perfectly.
+        assert_eq!(
+            cells[0].get("agreement_vs_serial").and_then(Json::as_f64),
+            Some(1.0)
+        );
+        // The returned registry holds the last arm's published model.
+        assert!(registry.current().is_some());
+        // Round-trips through the in-repo JSON parser.
+        assert_eq!(Json::parse(&report.to_string()).unwrap(), report);
+    }
+}

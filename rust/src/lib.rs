@@ -64,6 +64,14 @@
 //! reset: `est.partial_fit(&batch)` consumes each batch in presented
 //! order, so a `fit` with `RunConfig::new().shuffle(false)` over one pass
 //! and a single `partial_fit` of the same rows produce identical models.
+//!
+//! The [`serve`] subsystem (`repro serve`) runs training and prediction
+//! *concurrently* on one model lineage: a hot-swap
+//! [`serve::ModelRegistry`] of versioned snapshots, a micro-batching
+//! prediction front end riding the blocked tile engine, and a sharded
+//! `partial_fit` ingest pipeline that periodically merges shard models
+//! into one budget-respecting snapshot and publishes it without pausing
+//! readers.
 
 pub mod budget;
 pub mod cli;
@@ -75,16 +83,19 @@ pub mod kernel;
 pub mod metrics;
 pub mod model;
 pub mod runtime;
+pub mod serve;
 pub mod solver;
 pub mod util;
 
 /// One-line import for the estimator surface: configuration types, the
-/// [`solver::Estimator`] trait, the four estimator implementations, and
-/// the runtime-polymorphic [`model::AnyModel`].
+/// [`solver::Estimator`] trait, the four estimator implementations, the
+/// runtime-polymorphic [`model::AnyModel`], and the serving subsystem's
+/// registry + configuration ([`serve`]).
 pub mod prelude {
     pub use crate::budget::{MergeSolver, Strategy};
     pub use crate::kernel::KernelSpec;
     pub use crate::model::AnyModel;
+    pub use crate::serve::{ModelRegistry, ServeConfig};
     pub use crate::solver::{
         BsgdEstimator, Estimator, FitSummary, OneVsRestEstimator, PegasosEstimator, RunConfig,
         SmoEstimator, SvmConfig,

@@ -34,20 +34,20 @@ const TAG_GAUSSIAN: u32 = 0;
 const TAG_LINEAR: u32 = 1;
 const TAG_POLYNOMIAL: u32 = 2;
 
-/// Serialize a model in the v2 format (effective coefficients; the lazy
-/// scale is folded). Works for any kernel whose parameters round-trip
-/// through its [`KernelSpec`] — a hand-built `Polynomial` with
-/// `scale != 1` is rejected rather than silently altered.
-pub fn save<K: Kernel + Copy>(model: &BudgetModel<K>, path: impl AsRef<Path>) -> Result<()> {
+/// Serialize a model in the v2 format to any writer (effective
+/// coefficients; the lazy scale is folded into them). Works for any kernel
+/// whose parameters round-trip through its [`KernelSpec`] — a hand-built
+/// `Polynomial` with `scale != 1` is rejected rather than silently
+/// altered. This is the in-memory entry point the serving registry uses to
+/// dump live snapshots without touching the filesystem.
+pub fn save_writer<K: Kernel + Copy>(model: &BudgetModel<K>, writer: impl Write) -> Result<()> {
     let spec = model.kernel().spec();
     ensure!(
         spec.describe() == model.kernel().describe(),
         "kernel {} does not round-trip through its spec and cannot be serialized",
         model.kernel().describe()
     );
-    let f = std::fs::File::create(path.as_ref())
-        .with_context(|| format!("cannot create {}", path.as_ref().display()))?;
-    let mut w = BufWriter::new(f);
+    let mut w = BufWriter::new(writer);
     w.write_all(MAGIC_V2)?;
     w.write_all(&(model.dim() as u64).to_le_bytes())?;
     w.write_all(&(model.num_sv() as u64).to_le_bytes())?;
@@ -78,13 +78,27 @@ pub fn save<K: Kernel + Copy>(model: &BudgetModel<K>, path: impl AsRef<Path>) ->
     Ok(())
 }
 
-/// Serialize an [`AnyModel`] in the v2 format.
-pub fn save_any(model: &AnyModel, path: impl AsRef<Path>) -> Result<()> {
+/// Serialize a model in the v2 format to a file.
+pub fn save<K: Kernel + Copy>(model: &BudgetModel<K>, path: impl AsRef<Path>) -> Result<()> {
+    let f = std::fs::File::create(path.as_ref())
+        .with_context(|| format!("cannot create {}", path.as_ref().display()))?;
+    save_writer(model, f)
+}
+
+/// Serialize an [`AnyModel`] in the v2 format to any writer.
+pub fn save_any_writer(model: &AnyModel, writer: impl Write) -> Result<()> {
     match model {
-        AnyModel::Gaussian(m) => save(m, path),
-        AnyModel::Linear(m) => save(m, path),
-        AnyModel::Polynomial(m) => save(m, path),
+        AnyModel::Gaussian(m) => save_writer(m, writer),
+        AnyModel::Linear(m) => save_writer(m, writer),
+        AnyModel::Polynomial(m) => save_writer(m, writer),
     }
+}
+
+/// Serialize an [`AnyModel`] in the v2 format to a file.
+pub fn save_any(model: &AnyModel, path: impl AsRef<Path>) -> Result<()> {
+    let f = std::fs::File::create(path.as_ref())
+        .with_context(|| format!("cannot create {}", path.as_ref().display()))?;
+    save_any_writer(model, f)
 }
 
 fn read_u64(r: &mut impl Read) -> Result<u64> {
@@ -138,11 +152,11 @@ fn read_body(r: &mut impl Read, d: usize, count: usize, spec: KernelSpec) -> Res
     Ok(model)
 }
 
-/// Load a model saved in either format version.
-pub fn load_any(path: impl AsRef<Path>) -> Result<AnyModel> {
-    let f = std::fs::File::open(path.as_ref())
-        .with_context(|| format!("cannot open {}", path.as_ref().display()))?;
-    let mut r = BufReader::new(f);
+/// Load a model in either format version from any reader (the in-memory
+/// sibling of [`load_any`], used by the serving registry to rehydrate
+/// snapshots).
+pub fn load_any_reader(reader: impl Read) -> Result<AnyModel> {
+    let mut r = BufReader::new(reader);
     let mut magic = [0u8; 8];
     r.read_exact(&mut magic)?;
     if &magic == MAGIC_V1 {
@@ -168,6 +182,13 @@ pub fn load_any(path: impl AsRef<Path>) -> Result<AnyModel> {
     } else {
         bail!("not a budgetsvm model file (bad magic)");
     }
+}
+
+/// Load a model saved in either format version from a file.
+pub fn load_any(path: impl AsRef<Path>) -> Result<AnyModel> {
+    let f = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("cannot open {}", path.as_ref().display()))?;
+    load_any_reader(f)
 }
 
 /// Load a Gaussian model (either format version). Errors if the file holds
@@ -321,6 +342,32 @@ mod tests {
         std::fs::write(&path, b"WRONGMAG").unwrap();
         assert!(load(&path).is_err());
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn writer_reader_round_trip_in_memory_is_bit_identical_when_folded() {
+        // A snapshot whose scale is folded (the serving registry publishes
+        // only folded models) must predict bit-identically after a
+        // dump→load through a byte buffer: the saved effective α equal the
+        // raw α exactly, and the tiled summation order is unchanged.
+        let mut m = BudgetModel::new(3, Gaussian::new(0.6), 5);
+        m.push(&[1.0, 0.0, -0.5], 0.75);
+        m.push(&[0.25, -1.0, 2.0], -1.5);
+        m.push(&[0.0, 0.5, 0.125], 0.375);
+        m.rescale(0.5);
+        m.fold_scale();
+        m.bias = -0.0625;
+        let any: AnyModel = m.clone().into();
+        let mut buf: Vec<u8> = Vec::new();
+        save_any_writer(&any, &mut buf).unwrap();
+        let back = load_any_reader(buf.as_slice()).unwrap();
+        assert_eq!(back.num_sv(), any.num_sv());
+        assert_eq!(back.kernel_spec(), any.kernel_spec());
+        for probe in [[0.0f32, 0.0, 0.0], [1.0, -1.0, 0.5], [0.3, 0.7, -0.2]] {
+            let a = any.decision(&probe);
+            let b = back.decision(&probe);
+            assert_eq!(a.to_bits(), b.to_bits(), "{a} vs {b}");
+        }
     }
 
     #[test]

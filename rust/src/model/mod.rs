@@ -488,6 +488,14 @@ impl AnyModel {
         for_any_model!(self, m => m.push(x, alpha_eff))
     }
 
+    /// Fold the lazy global scale Φ into the raw coefficients (see
+    /// [`BudgetModel::fold_scale`]). The serving registry folds every
+    /// published snapshot so that a `BSVMMDL2` dump→load round trip is
+    /// bit-identical to the in-memory snapshot.
+    pub fn fold_scale(&mut self) {
+        for_any_model!(self, m => m.fold_scale())
+    }
+
     /// Decision value `f(x)`.
     pub fn decision(&self, x: &[f32]) -> f64 {
         for_any_model!(self, m => m.decision(x))

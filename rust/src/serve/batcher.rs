@@ -1,0 +1,357 @@
+//! Micro-batching prediction front end.
+//!
+//! Concurrent callers enqueue feature rows and block on a private reply
+//! channel; one drain thread coalesces everything queued (up to
+//! [`BatcherOptions::max_batch_rows`] rows per wakeup) into a single
+//! [`crate::model::AnyModel::decision_rows`] call against the current
+//! registry snapshot. Every request therefore rides the blocked SoA tile
+//! engine — and, for larger batches, the chunked parallel row split —
+//! instead of a scalar per-request `decision_function`.
+//!
+//! Batching never changes results: `decision_rows` is row-independent and
+//! bit-identical for every thread count, so the labels a request receives
+//! are exactly what an offline `predict_batch` on the same snapshot
+//! returns. The snapshot is resolved once per batch, so all rows of one
+//! batch are answered by one model version (stamped in the reply).
+
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use super::registry::ModelRegistry;
+
+/// Tuning knobs of the prediction front end.
+#[derive(Debug, Clone)]
+pub struct BatcherOptions {
+    /// Coalescing cap: rows evaluated per drain wakeup (at least one
+    /// request is always taken, even if it alone exceeds the cap).
+    pub max_batch_rows: usize,
+    /// Worker threads inside each `decision_rows` call (0 = all cores).
+    pub threads: usize,
+}
+
+impl Default for BatcherOptions {
+    fn default() -> Self {
+        BatcherOptions { max_batch_rows: 64, threads: 0 }
+    }
+}
+
+/// One answered prediction request.
+#[derive(Debug, Clone)]
+pub struct PredictReply {
+    /// ±1 labels, one per requested row.
+    pub labels: Vec<f32>,
+    /// Version of the snapshot that produced them.
+    pub version: u64,
+}
+
+/// Aggregate counters (monotonic over the batcher's lifetime).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BatcherStats {
+    /// Drain wakeups that executed a prediction batch.
+    pub batches: u64,
+    /// Total rows predicted.
+    pub rows: u64,
+    /// Largest single coalesced batch, in rows.
+    pub largest_batch: usize,
+}
+
+struct Request {
+    rows: Vec<f32>,
+    n_rows: usize,
+    dim: usize,
+    reply: mpsc::Sender<Result<PredictReply, String>>,
+}
+
+#[derive(Default)]
+struct QueueState {
+    pending: VecDeque<Request>,
+    shutdown: bool,
+    stats: BatcherStats,
+}
+
+struct Shared {
+    state: Mutex<QueueState>,
+    wake: Condvar,
+}
+
+/// Cloneable, `Send` submission handle (the per-connection side).
+#[derive(Clone)]
+pub struct BatcherClient {
+    shared: Arc<Shared>,
+}
+
+impl BatcherClient {
+    /// Predict `n_rows` rows packed row-major in `rows` (`rows.len() ==
+    /// n_rows * dim`). Blocks until the drain thread answers. Errors if
+    /// the buffer is malformed, no model is published, the dimension
+    /// disagrees with the current snapshot, or the batcher shut down.
+    pub fn predict(&self, rows: &[f32], dim: usize) -> Result<PredictReply> {
+        anyhow::ensure!(dim > 0, "dimension must be positive");
+        anyhow::ensure!(
+            !rows.is_empty() && rows.len() % dim == 0,
+            "row buffer length {} is not a positive multiple of dim {dim}",
+            rows.len()
+        );
+        let (tx, rx) = mpsc::channel();
+        {
+            let mut st = self.shared.state.lock().expect("batcher lock poisoned");
+            anyhow::ensure!(!st.shutdown, "batcher is shut down");
+            st.pending.push_back(Request {
+                rows: rows.to_vec(),
+                n_rows: rows.len() / dim,
+                dim,
+                reply: tx,
+            });
+        }
+        self.shared.wake.notify_one();
+        rx.recv()
+            .map_err(|_| anyhow!("batcher terminated before answering"))?
+            .map_err(|e| anyhow!(e))
+    }
+}
+
+/// The batching front end: owns the drain thread. Obtain cheap
+/// [`BatcherClient`] handles via [`MicroBatcher::client`] for concurrent
+/// submitters; dropping the batcher drains the queue and joins the
+/// thread.
+pub struct MicroBatcher {
+    shared: Arc<Shared>,
+    drain: Option<JoinHandle<()>>,
+}
+
+impl MicroBatcher {
+    pub fn new(registry: Arc<ModelRegistry>, opts: BatcherOptions) -> Self {
+        let max_rows = opts.max_batch_rows.max(1);
+        let threads = opts.threads;
+        let shared = Arc::new(Shared {
+            state: Mutex::new(QueueState::default()),
+            wake: Condvar::new(),
+        });
+        let worker_shared = Arc::clone(&shared);
+        let drain = std::thread::Builder::new()
+            .name("predict-batcher".to_string())
+            .spawn(move || drain_loop(&worker_shared, &registry, max_rows, threads))
+            .expect("failed to spawn batcher drain thread");
+        MicroBatcher { shared, drain: Some(drain) }
+    }
+
+    /// A cloneable submission handle.
+    pub fn client(&self) -> BatcherClient {
+        BatcherClient { shared: Arc::clone(&self.shared) }
+    }
+
+    /// Lifetime counters.
+    pub fn stats(&self) -> BatcherStats {
+        self.shared.state.lock().expect("batcher lock poisoned").stats
+    }
+
+    /// Stop accepting requests, answer what is queued, join the drain
+    /// thread.
+    pub fn shutdown(mut self) {
+        self.stop();
+    }
+
+    fn stop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().expect("batcher lock poisoned");
+            st.shutdown = true;
+        }
+        self.shared.wake.notify_all();
+        if let Some(h) = self.drain.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for MicroBatcher {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn drain_loop(shared: &Shared, registry: &ModelRegistry, max_rows: usize, threads: usize) {
+    loop {
+        // Collect one coalesced batch (or exit on drained shutdown).
+        let batch: Vec<Request> = {
+            let mut st = shared.state.lock().expect("batcher lock poisoned");
+            while st.pending.is_empty() && !st.shutdown {
+                st = shared.wake.wait(st).expect("batcher lock poisoned");
+            }
+            if st.pending.is_empty() {
+                return; // shutdown with an empty queue
+            }
+            let mut batch = Vec::new();
+            let mut rows = 0usize;
+            while let Some(front) = st.pending.front() {
+                if !batch.is_empty() && rows + front.n_rows > max_rows {
+                    break;
+                }
+                rows += front.n_rows;
+                batch.push(st.pending.pop_front().unwrap());
+            }
+            batch
+        };
+
+        let snapshot = registry.current();
+        let Some(snapshot) = snapshot else {
+            for req in batch {
+                let _ = req.reply.send(Err("no model published yet".to_string()));
+            }
+            continue;
+        };
+        let d = snapshot.model().dim();
+        let version = snapshot.version();
+
+        // Reject dimension mismatches individually; evaluate the rest as
+        // one flat buffer.
+        let mut flat: Vec<f32> = Vec::new();
+        let mut accepted: Vec<Request> = Vec::new();
+        for req in batch {
+            if req.dim != d {
+                let _ = req.reply.send(Err(format!(
+                    "request dimension {} does not match the serving dimension {d}",
+                    req.dim
+                )));
+            } else {
+                flat.extend_from_slice(&req.rows);
+                accepted.push(req);
+            }
+        }
+        if accepted.is_empty() {
+            continue;
+        }
+        // Count only rows that actually get predicted (rejected requests
+        // must not inflate the throughput counters).
+        let batch_rows = flat.len() / d;
+        {
+            let mut st = shared.state.lock().expect("batcher lock poisoned");
+            st.stats.batches += 1;
+            st.stats.rows += batch_rows as u64;
+            st.stats.largest_batch = st.stats.largest_batch.max(batch_rows);
+        }
+        let decisions = snapshot.model().decision_rows(&flat, threads);
+        let mut offset = 0usize;
+        for req in accepted {
+            let labels: Vec<f32> = decisions[offset..offset + req.n_rows]
+                .iter()
+                .map(|&f| if f >= 0.0 { 1.0 } else { -1.0 })
+                .collect();
+            offset += req.n_rows;
+            let _ = req.reply.send(Ok(PredictReply { labels, version }));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::KernelSpec;
+    use crate::model::AnyModel;
+    use crate::util::rng::Rng;
+
+    fn registry_with_model(num_sv: usize, d: usize, seed: u64) -> Arc<ModelRegistry> {
+        let mut rng = Rng::new(seed);
+        let mut m = AnyModel::new(d, KernelSpec::gaussian(0.5), num_sv).unwrap();
+        for _ in 0..num_sv {
+            let row: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+            m.push(&row, rng.normal());
+        }
+        let reg = Arc::new(ModelRegistry::new());
+        reg.publish(m);
+        reg
+    }
+
+    #[test]
+    fn batched_labels_match_offline_predict_batch() {
+        let reg = registry_with_model(12, 3, 7);
+        let batcher = MicroBatcher::new(Arc::clone(&reg), BatcherOptions::default());
+        let client = batcher.client();
+        let mut rng = Rng::new(99);
+        let rows: Vec<f32> = (0..3 * 40).map(|_| rng.normal() as f32).collect();
+        let reply = client.predict(&rows, 3).unwrap();
+        assert_eq!(reply.labels.len(), 40);
+        assert_eq!(reply.version, 1);
+        let snap = reg.current().unwrap();
+        let offline: Vec<f32> = snap
+            .model()
+            .decision_rows(&rows, 1)
+            .into_iter()
+            .map(|f| if f >= 0.0 { 1.0 } else { -1.0 })
+            .collect();
+        assert_eq!(reply.labels, offline);
+        let stats = batcher.stats();
+        assert_eq!(stats.rows, 40);
+        assert!(stats.batches >= 1);
+        batcher.shutdown();
+    }
+
+    #[test]
+    fn concurrent_clients_all_get_correct_answers() {
+        let reg = registry_with_model(8, 2, 3);
+        let batcher =
+            MicroBatcher::new(Arc::clone(&reg), BatcherOptions { max_batch_rows: 16, threads: 1 });
+        let snap = reg.current().unwrap();
+        std::thread::scope(|scope| {
+            for t in 0..8u64 {
+                let client = batcher.client();
+                let model = snap.model();
+                scope.spawn(move || {
+                    let mut rng = Rng::new(1000 + t);
+                    for _ in 0..25 {
+                        let row = [rng.normal() as f32, rng.normal() as f32];
+                        let reply = client.predict(&row, 2).unwrap();
+                        let expect = if model.decision(&row) >= 0.0 { 1.0 } else { -1.0 };
+                        assert_eq!(reply.labels, vec![expect]);
+                        assert_eq!(reply.version, 1);
+                    }
+                });
+            }
+        });
+        let stats = batcher.stats();
+        assert_eq!(stats.rows, 8 * 25);
+        assert!(stats.largest_batch >= 1);
+    }
+
+    #[test]
+    fn empty_registry_and_bad_dimensions_error_cleanly() {
+        let empty = Arc::new(ModelRegistry::new());
+        let batcher = MicroBatcher::new(Arc::clone(&empty), BatcherOptions::default());
+        let client = batcher.client();
+        let err = client.predict(&[0.0, 0.0], 2).unwrap_err().to_string();
+        assert!(err.contains("no model published"), "{err}");
+        // Malformed buffers are rejected before queuing.
+        assert!(client.predict(&[], 2).is_err());
+        assert!(client.predict(&[1.0, 2.0, 3.0], 2).is_err());
+        drop(batcher);
+
+        let reg = registry_with_model(4, 3, 1);
+        let batcher = MicroBatcher::new(reg, BatcherOptions::default());
+        let err = batcher.client().predict(&[1.0, 2.0], 2).unwrap_err().to_string();
+        assert!(err.contains("serving dimension"), "{err}");
+        batcher.shutdown();
+    }
+
+    #[test]
+    fn predictions_follow_hot_swaps() {
+        let reg = registry_with_model(4, 2, 5);
+        let batcher = MicroBatcher::new(Arc::clone(&reg), BatcherOptions::default());
+        let client = batcher.client();
+        let probe = [0.25f32, -0.5];
+        assert_eq!(client.predict(&probe, 2).unwrap().version, 1);
+        // Publish a constant-positive and a constant-negative model.
+        for (bias, expect_label) in [(5.0, 1.0f32), (-5.0, -1.0f32)] {
+            let mut m = AnyModel::new(2, KernelSpec::gaussian(0.5), 1).unwrap();
+            m.push(&[0.0, 0.0], 0.0);
+            m.set_bias(bias);
+            let v = reg.publish(m);
+            let reply = client.predict(&probe, 2).unwrap();
+            assert_eq!(reply.version, v);
+            assert_eq!(reply.labels, vec![expect_label]);
+        }
+        batcher.shutdown();
+    }
+}

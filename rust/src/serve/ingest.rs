@@ -1,0 +1,360 @@
+//! Sharded streaming-ingest pipeline: `S` long-lived shard workers, each
+//! running an independent `BsgdEstimator::partial_fit` stream, with a
+//! periodic snapshot → merge → publish step into the [`ModelRegistry`].
+//!
+//! Determinism: rows are partitioned round-robin by their global stream
+//! index, each shard consumes its sub-stream in presented order with a
+//! fixed per-shard seed, publishes trigger at deterministic row counts,
+//! and the merge folds shard reports in shard order — so a sharded run is
+//! bit-identical run-to-run for any thread scheduling. Snapshot commands
+//! ride the same per-shard channel as training batches, which (channel
+//! FIFO order) guarantees a snapshot reflects every batch sent before it
+//! without any extra barrier.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::data::Dataset;
+use crate::model::AnyModel;
+use crate::solver::{BsgdEstimator, Estimator, RunConfig, SvmConfig};
+use crate::util::parallel::{spawn_worker, Worker};
+
+use super::registry::ModelRegistry;
+
+enum ShardCmd {
+    /// One pre-partitioned training batch for this shard.
+    Ingest(Dataset),
+    /// Reply with (model clone, cumulative SGD steps), or `None` if the
+    /// shard has not seen a row yet.
+    Snapshot(mpsc::Sender<Option<(AnyModel, u64)>>),
+}
+
+/// Final accounting of a pipeline run (returned by
+/// [`ShardedIngest::finish`]).
+#[derive(Debug, Clone)]
+pub struct IngestReport {
+    /// Total rows ingested across all shards.
+    pub rows: u64,
+    /// Publish events executed (including the final flush).
+    pub publishes: u64,
+    /// Ingest-side stall of each publish, in seconds (shard drain +
+    /// merge + registry swap; readers are never paused).
+    pub publish_stalls: Vec<f64>,
+    /// Version of the last published snapshot.
+    pub last_version: u64,
+}
+
+impl IngestReport {
+    pub fn stall_mean_seconds(&self) -> f64 {
+        if self.publish_stalls.is_empty() {
+            0.0
+        } else {
+            self.publish_stalls.iter().sum::<f64>() / self.publish_stalls.len() as f64
+        }
+    }
+
+    pub fn stall_max_seconds(&self) -> f64 {
+        self.publish_stalls.iter().cloned().fold(0.0, f64::max)
+    }
+}
+
+/// The streaming-ingest pipeline front: partitions labeled rows across
+/// shard workers and publishes merged snapshots every `publish_every`
+/// rows.
+pub struct ShardedIngest {
+    workers: Vec<Worker<ShardCmd>>,
+    registry: Arc<ModelRegistry>,
+    config: SvmConfig,
+    publish_every: usize,
+    dim: usize,
+    rows_total: u64,
+    rows_since_publish: usize,
+    publish_stalls: Vec<f64>,
+    last_version: u64,
+}
+
+impl ShardedIngest {
+    /// Build the pipeline: `shards` workers, each owning a
+    /// [`BsgdEstimator`] constructed via `BsgdEstimator::new_shard`
+    /// (deterministic per-shard seed, serial inside). Publishing merges
+    /// into `registry` every `publish_every` ingested rows.
+    pub fn new(
+        config: SvmConfig,
+        run: RunConfig,
+        shards: usize,
+        publish_every: usize,
+        registry: Arc<ModelRegistry>,
+    ) -> Result<Self> {
+        ensure!(shards >= 1, "need at least one shard, got {shards}");
+        ensure!(publish_every >= 1, "publish_every must be at least 1");
+        let mut workers = Vec::with_capacity(shards);
+        for s in 0..shards {
+            let mut est = BsgdEstimator::new_shard(config.clone(), run.clone(), s)?;
+            workers.push(spawn_worker(&format!("ingest-shard-{s}"), move |cmd: ShardCmd| {
+                match cmd {
+                    ShardCmd::Ingest(ds) => {
+                        if !ds.is_empty() {
+                            est.partial_fit(&ds)
+                                .expect("shard partial_fit failed (dimension mismatch?)");
+                        }
+                    }
+                    ShardCmd::Snapshot(reply) => {
+                        let _ = reply.send(est.snapshot());
+                    }
+                }
+            }));
+        }
+        Ok(ShardedIngest {
+            workers,
+            registry,
+            config,
+            publish_every,
+            dim: 0,
+            rows_total: 0,
+            rows_since_publish: 0,
+            publish_stalls: Vec::new(),
+            last_version: 0,
+        })
+    }
+
+    /// Number of shard workers.
+    pub fn shards(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Total rows ingested so far.
+    pub fn rows_ingested(&self) -> u64 {
+        self.rows_total
+    }
+
+    /// Ingest one batch of labeled rows: rows are dealt round-robin by
+    /// global stream index to the shard workers (which train
+    /// asynchronously); an automatic snapshot/publish runs whenever
+    /// `publish_every` rows have accumulated since the last publish.
+    pub fn ingest(&mut self, batch: &Dataset) -> Result<()> {
+        if batch.is_empty() {
+            return Ok(());
+        }
+        if self.dim == 0 {
+            self.dim = batch.dim();
+        }
+        ensure!(
+            batch.dim() == self.dim,
+            "batch dimension {} does not match the stream dimension {}",
+            batch.dim(),
+            self.dim
+        );
+        let s = self.workers.len();
+        let mut parts: Vec<Dataset> =
+            (0..s).map(|i| Dataset::empty(format!("shard-{i}"), self.dim)).collect();
+        for i in 0..batch.len() {
+            let shard = ((self.rows_total + i as u64) % s as u64) as usize;
+            parts[shard].push_row(batch.row(i), batch.label(i));
+        }
+        for (worker, part) in self.workers.iter().zip(parts) {
+            if !part.is_empty() {
+                worker.send(ShardCmd::Ingest(part))?;
+            }
+        }
+        self.rows_total += batch.len() as u64;
+        self.rows_since_publish += batch.len();
+        if self.rows_since_publish >= self.publish_every {
+            self.publish_now()?;
+        }
+        Ok(())
+    }
+
+    /// Snapshot every shard, merge, and publish into the registry;
+    /// returns the new version. The wait for shard queues to drain is
+    /// part of the measured stall (readers keep serving the previous
+    /// snapshot throughout).
+    pub fn publish_now(&mut self) -> Result<u64> {
+        ensure!(self.rows_total > 0, "cannot publish before any rows are ingested");
+        let t0 = Instant::now();
+        let mut pending = Vec::with_capacity(self.workers.len());
+        for worker in &self.workers {
+            let (tx, rx) = mpsc::channel();
+            worker.send(ShardCmd::Snapshot(tx))?;
+            pending.push(rx);
+        }
+        let mut models = Vec::new();
+        let mut weights = Vec::new();
+        for rx in pending {
+            let snap = rx.recv().map_err(|_| anyhow!("shard worker terminated"))?;
+            if let Some((model, steps)) = snap {
+                models.push(model);
+                weights.push(steps as f64);
+            }
+        }
+        ensure!(!models.is_empty(), "no shard has trained a model yet");
+        let merged = super::merge::merge_shard_models(
+            models,
+            &weights,
+            self.config.budget,
+            self.config.strategy,
+            self.config.grid,
+        )?;
+        let version = self.registry.publish(merged);
+        self.publish_stalls.push(t0.elapsed().as_secs_f64());
+        self.rows_since_publish = 0;
+        self.last_version = version;
+        Ok(version)
+    }
+
+    /// Drain everything, publish a final snapshot if rows arrived since
+    /// the last one, join the shard workers, and return the accounting.
+    pub fn finish(mut self) -> Result<IngestReport> {
+        if self.rows_total > 0 && (self.rows_since_publish > 0 || self.last_version == 0) {
+            self.publish_now()?;
+        }
+        for worker in self.workers.drain(..) {
+            worker.join();
+        }
+        Ok(IngestReport {
+            rows: self.rows_total,
+            publishes: self.publish_stalls.len() as u64,
+            publish_stalls: self.publish_stalls,
+            last_version: self.last_version,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::two_moons;
+    use crate::kernel::KernelSpec;
+
+    fn config_for(n: usize, budget: usize) -> SvmConfig {
+        SvmConfig::new().kernel(KernelSpec::gaussian(2.0)).budget(budget).c(10.0, n)
+    }
+
+    fn run_pipeline(
+        ds: &Dataset,
+        shards: usize,
+        publish_every: usize,
+        chunk: usize,
+    ) -> (Arc<ModelRegistry>, IngestReport) {
+        let registry = Arc::new(ModelRegistry::new());
+        let mut ing = ShardedIngest::new(
+            config_for(ds.len(), 30),
+            RunConfig::new().seed(11),
+            shards,
+            publish_every,
+            Arc::clone(&registry),
+        )
+        .unwrap();
+        let mut start = 0;
+        while start < ds.len() {
+            let idx: Vec<usize> = (start..(start + chunk).min(ds.len())).collect();
+            ing.ingest(&ds.subset(&idx, "chunk")).unwrap();
+            start += chunk;
+        }
+        let report = ing.finish().unwrap();
+        (registry, report)
+    }
+
+    #[test]
+    fn single_shard_pipeline_matches_serial_partial_fit() {
+        let ds = two_moons(600, 0.12, 21);
+        let (registry, report) = run_pipeline(&ds, 1, 10_000, 64);
+        assert_eq!(report.rows, 600);
+        assert_eq!(report.publishes, 1);
+        let snap = registry.current().unwrap();
+
+        let mut serial = BsgdEstimator::new_shard(
+            config_for(ds.len(), 30),
+            RunConfig::new().seed(11),
+            0,
+        )
+        .unwrap();
+        serial.partial_fit(&ds).unwrap();
+        let model = serial.model().unwrap();
+        // Same trajectory; the published snapshot only differs by the
+        // folded scale, so decisions agree to f64 rounding.
+        for i in (0..ds.len()).step_by(37) {
+            let a = snap.model().decision(ds.row(i));
+            let b = model.decision(ds.row(i));
+            assert!((a - b).abs() <= 1e-12 * (1.0 + b.abs()), "row {i}: {a} vs {b}");
+        }
+        assert_eq!(snap.model().num_sv(), model.num_sv());
+    }
+
+    #[test]
+    fn sharded_ingest_is_deterministic_run_to_run() {
+        let ds = two_moons(500, 0.12, 33);
+        let probes: Vec<usize> = vec![0, 17, 123, 250, 499];
+        let (reg1, rep1) = run_pipeline(&ds, 4, 128, 50);
+        let (reg2, rep2) = run_pipeline(&ds, 4, 128, 50);
+        assert_eq!(rep1.publishes, rep2.publishes);
+        assert!(rep1.publishes >= 3, "publish cadence should fire: {}", rep1.publishes);
+        let (s1, s2) = (reg1.current().unwrap(), reg2.current().unwrap());
+        assert_eq!(s1.model().num_sv(), s2.model().num_sv());
+        for &i in &probes {
+            assert_eq!(
+                s1.model().decision(ds.row(i)).to_bits(),
+                s2.model().decision(ds.row(i)).to_bits(),
+                "row {i}"
+            );
+        }
+    }
+
+    #[test]
+    fn sharded_accuracy_is_close_to_serial() {
+        // Tolerance asserted here (recorded per the roadmap issue): the
+        // 4-shard weighted-average publish must stay within 0.10 absolute
+        // accuracy of the serial 1-shard pipeline on the same stream, and
+        // both must actually learn the task.
+        let ds = two_moons(1200, 0.1, 5);
+        let (reg_serial, _) = run_pipeline(&ds, 1, 100_000, 128);
+        let (reg_sharded, _) = run_pipeline(&ds, 4, 400, 128);
+        let acc_serial = reg_serial.current().unwrap().model().accuracy(&ds);
+        let acc_sharded = reg_sharded.current().unwrap().model().accuracy(&ds);
+        assert!(acc_serial > 0.85, "serial accuracy {acc_serial}");
+        assert!(acc_sharded > 0.82, "sharded accuracy {acc_sharded}");
+        assert!(
+            (acc_serial - acc_sharded).abs() <= 0.10,
+            "serial {acc_serial} vs sharded {acc_sharded}"
+        );
+    }
+
+    #[test]
+    fn publish_respects_budget_and_counts_rows() {
+        let ds = two_moons(400, 0.12, 8);
+        let (registry, report) = run_pipeline(&ds, 3, 100, 64);
+        assert_eq!(report.rows, 400);
+        assert!(report.publishes >= 4);
+        assert_eq!(report.last_version, registry.version());
+        assert!(registry.current().unwrap().model().num_sv() <= 30);
+        assert_eq!(report.publish_stalls.len() as u64, report.publishes);
+        assert!(report.stall_max_seconds() >= report.stall_mean_seconds());
+    }
+
+    #[test]
+    fn empty_and_mismatched_batches_are_handled() {
+        let registry = Arc::new(ModelRegistry::new());
+        let mut ing = ShardedIngest::new(
+            config_for(100, 10),
+            RunConfig::new(),
+            2,
+            1000,
+            Arc::clone(&registry),
+        )
+        .unwrap();
+        // Publishing before any rows is an error.
+        assert!(ing.publish_now().is_err());
+        ing.ingest(&Dataset::empty("none", 2)).unwrap();
+        assert_eq!(ing.rows_ingested(), 0);
+        let ds = two_moons(50, 0.1, 1);
+        ing.ingest(&ds).unwrap();
+        // Dimension is pinned by the first non-empty batch.
+        let bad = Dataset::new("bad", vec![0.0; 9], vec![1.0, 1.0, -1.0], 3);
+        assert!(ing.ingest(&bad).is_err());
+        let report = ing.finish().unwrap();
+        assert_eq!(report.rows, 50);
+        assert_eq!(registry.version(), report.last_version);
+    }
+}

@@ -1,0 +1,211 @@
+//! Shard-model merging for the publish step of the ingest pipeline.
+//!
+//! Semantics (documented invariants in [`super`] module docs): the merged
+//! model is the step-weighted average `Σ_s w_s · f_s` of the shard
+//! decision functions (`w_s ∝ SGD steps of shard s`, normalized), with
+//! the same weighting applied to the biases. The concatenated expansion
+//! can hold up to `S·B` support vectors, so the budget is re-enforced
+//! through the *same* maintenance machinery training uses — the paper's
+//! merge solvers for Gaussian models, removal/projection otherwise —
+//! until at most `budget` SVs remain.
+//!
+//! `S = 1` short-circuits to a clone of the single shard model, keeping
+//! the one-shard pipeline equivalent to serial `partial_fit`.
+
+use anyhow::{ensure, Result};
+
+use crate::budget::projection::maintain_projection;
+use crate::budget::removal::maintain_removal;
+use crate::budget::{Maintainer, Strategy};
+use crate::kernel::Kernel;
+use crate::metrics::SectionProfiler;
+use crate::model::{AnyModel, BudgetModel};
+
+/// Merge shard models into one budget-respecting model.
+///
+/// `weights` are per-shard publish weights (normalized internally;
+/// typically each shard's cumulative SGD step count). All shards must
+/// share one kernel spec and dimension. `budget = 0` skips enforcement
+/// (unbudgeted). The returned model has its lazy scale folded by the
+/// construction (coefficients are pushed in effective units into a fresh
+/// model).
+pub fn merge_shard_models(
+    shards: Vec<AnyModel>,
+    weights: &[f64],
+    budget: usize,
+    strategy: Strategy,
+    grid: usize,
+) -> Result<AnyModel> {
+    ensure!(!shards.is_empty(), "cannot merge zero shard models");
+    ensure!(shards.len() == weights.len(), "one weight per shard model required");
+    let total: f64 = weights.iter().sum();
+    ensure!(
+        weights.iter().all(|w| w.is_finite() && *w >= 0.0) && total > 0.0,
+        "shard weights must be non-negative with a positive sum"
+    );
+
+    let spec = shards[0].kernel_spec();
+    let d = shards[0].dim();
+    for m in &shards {
+        ensure!(
+            m.kernel_spec() == spec && m.dim() == d,
+            "shard models disagree on kernel/dimension: {} d={} vs {} d={}",
+            m.kernel_spec().describe(),
+            m.dim(),
+            spec.describe(),
+            d
+        );
+    }
+
+    if shards.len() == 1 {
+        // Single shard: weight is 1 after normalization — publish the
+        // model as-is so the one-shard pipeline stays equivalent to
+        // serial partial_fit.
+        return Ok(shards.into_iter().next().unwrap());
+    }
+
+    let capacity: usize = shards.iter().map(|m| m.num_sv()).sum::<usize>().max(budget + 1);
+    let mut merged = AnyModel::new(d, spec, capacity)?;
+    let mut bias = 0.0f64;
+    for (m, &w) in shards.iter().zip(weights) {
+        let w = w / total;
+        for j in 0..m.num_sv() {
+            merged.push(m.sv(j), w * m.alpha(j));
+        }
+        bias += w * m.bias();
+    }
+    merged.set_bias(bias);
+
+    if budget > 0 {
+        let mut prof = SectionProfiler::new();
+        match &mut merged {
+            AnyModel::Gaussian(g) => {
+                let mut maintainer = Maintainer::new(strategy, grid);
+                while g.num_sv() > budget {
+                    maintainer.maintain(g, &mut prof);
+                }
+            }
+            AnyModel::Linear(m) => shrink_generic(m, strategy, budget, &mut prof),
+            AnyModel::Polynomial(m) => shrink_generic(m, strategy, budget, &mut prof),
+        }
+    }
+    Ok(merged)
+}
+
+/// Budget enforcement for non-Gaussian merged models: projection where
+/// requested (falling back to removal on a degenerate Gram matrix),
+/// removal otherwise. Merge strategies cannot reach here — the config
+/// layer rejects them for non-Gaussian kernels.
+fn shrink_generic<K: Kernel + Copy>(
+    model: &mut BudgetModel<K>,
+    strategy: Strategy,
+    budget: usize,
+    prof: &mut SectionProfiler,
+) {
+    while model.num_sv() > budget {
+        match strategy {
+            Strategy::Projection => {
+                maintain_projection(model, prof).unwrap_or_else(|_| maintain_removal(model, prof))
+            }
+            _ => maintain_removal(model, prof),
+        };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::budget::MergeSolver;
+    use crate::kernel::KernelSpec;
+
+    fn shard(spec: KernelSpec, points: &[([f32; 2], f64)], bias: f64) -> AnyModel {
+        let mut m = AnyModel::new(2, spec, points.len().max(1)).unwrap();
+        for (x, a) in points {
+            m.push(x, *a);
+        }
+        m.set_bias(bias);
+        m
+    }
+
+    #[test]
+    fn two_shard_merge_is_the_weighted_average() {
+        let spec = KernelSpec::gaussian(0.5);
+        let a = shard(spec, &[([0.0, 0.0], 1.0)], 0.5);
+        let b = shard(spec, &[([1.0, 1.0], -2.0)], -0.25);
+        // Weights 3:1 → w_a = 0.75, w_b = 0.25; budget large enough that
+        // no shrink happens.
+        let merged =
+            merge_shard_models(vec![a.clone(), b.clone()], &[3.0, 1.0], 10, Strategy::Removal, 50)
+                .unwrap();
+        assert_eq!(merged.num_sv(), 2);
+        for probe in [[0.2f32, -0.3], [1.5, 0.5]] {
+            let expect = 0.75 * a.decision(&probe) + 0.25 * b.decision(&probe);
+            assert!(
+                (merged.decision(&probe) - expect).abs() < 1e-12,
+                "{} vs {expect}",
+                merged.decision(&probe)
+            );
+        }
+    }
+
+    #[test]
+    fn single_shard_merge_returns_the_model_unchanged() {
+        let spec = KernelSpec::gaussian(0.5);
+        let a = shard(spec, &[([0.3, -0.6], 0.8), ([1.0, 0.0], -0.4)], 0.125);
+        let merged =
+            merge_shard_models(vec![a.clone()], &[17.0], 10, Strategy::Removal, 50).unwrap();
+        let probe = [0.7f32, 0.1];
+        assert_eq!(merged.decision(&probe).to_bits(), a.decision(&probe).to_bits());
+    }
+
+    #[test]
+    fn budget_is_enforced_on_the_merged_model() {
+        let spec = KernelSpec::gaussian(0.5);
+        let mk = |seed: f32| {
+            let pts: Vec<([f32; 2], f64)> =
+                (0..6).map(|j| ([seed + j as f32 * 0.3, seed - j as f32 * 0.2], 0.4)).collect();
+            shard(spec, &pts, 0.0)
+        };
+        for strategy in
+            [Strategy::Merge(MergeSolver::LookupWd), Strategy::Removal, Strategy::Projection]
+        {
+            let merged = merge_shard_models(
+                vec![mk(0.0), mk(1.0), mk(-1.0)],
+                &[1.0, 1.0, 1.0],
+                5,
+                strategy,
+                50,
+            )
+            .unwrap();
+            assert!(merged.num_sv() <= 5, "{strategy:?}: {}", merged.num_sv());
+        }
+    }
+
+    #[test]
+    fn non_gaussian_shards_merge_under_removal_and_projection() {
+        for spec in [KernelSpec::linear(), KernelSpec::polynomial(2, 1.0)] {
+            let a = shard(spec, &[([1.0, 0.0], 1.0), ([0.5, 0.5], 0.3)], 0.0);
+            let b = shard(spec, &[([0.0, 1.0], -1.0), ([0.25, 0.75], 0.1)], 0.0);
+            for strategy in [Strategy::Removal, Strategy::Projection] {
+                let merged =
+                    merge_shard_models(vec![a.clone(), b.clone()], &[1.0, 1.0], 3, strategy, 50)
+                        .unwrap();
+                assert!(merged.num_sv() <= 3, "{}", spec.describe());
+                assert_eq!(merged.kernel_spec(), spec);
+            }
+        }
+    }
+
+    #[test]
+    fn merge_rejects_bad_inputs() {
+        let spec = KernelSpec::gaussian(0.5);
+        let a = shard(spec, &[([0.0, 0.0], 1.0)], 0.0);
+        assert!(merge_shard_models(Vec::new(), &[], 5, Strategy::Removal, 50).is_err());
+        assert!(merge_shard_models(vec![a.clone()], &[], 5, Strategy::Removal, 50).is_err());
+        assert!(merge_shard_models(vec![a.clone()], &[0.0], 5, Strategy::Removal, 50).is_err());
+        let other = shard(KernelSpec::linear(), &[([0.0, 0.0], 1.0)], 0.0);
+        assert!(
+            merge_shard_models(vec![a, other], &[1.0, 1.0], 5, Strategy::Removal, 50).is_err()
+        );
+    }
+}

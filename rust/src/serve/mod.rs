@@ -1,0 +1,185 @@
+//! Online serving + streaming ingest over [`crate::model::AnyModel`].
+//!
+//! This is the first subsystem where training and prediction run
+//! *concurrently* on the same model lineage. Three pieces compose it:
+//!
+//! * [`registry`] — [`ModelRegistry`]: an atomically hot-swappable,
+//!   monotonically versioned slot of immutable model snapshots. Readers
+//!   clone an `Arc` under a briefly-held read lock and then never touch
+//!   shared state again; publishers build the snapshot off to the side and
+//!   swap one pointer. Snapshots round-trip through the versioned
+//!   `BSVMMDL2` format ([`crate::model::io`]) bit-identically.
+//! * [`batcher`] — [`MicroBatcher`]: the prediction front end. Concurrent
+//!   requests are coalesced by a queue + condvar into one
+//!   `decision_rows` call per wakeup, so every request rides the blocked
+//!   SoA tile engine instead of a scalar `decision_function` each.
+//! * [`ingest`] — [`ShardedIngest`]: the streaming-ingest pipeline.
+//!   Incoming labeled rows are partitioned round-robin across `S`
+//!   long-lived shard workers ([`crate::util::parallel::spawn_worker`]),
+//!   each running an independent [`crate::solver::BsgdEstimator`]
+//!   `partial_fit` stream with a deterministic per-shard seed
+//!   ([`crate::solver::bsgd::shard_seed`]). [`merge`] periodically folds
+//!   the shard models into one budget-respecting model which is published
+//!   into the registry.
+//!
+//! # Wire protocol (v1, line-oriented UTF-8 — see [`protocol`])
+//!
+//! ```text
+//! predict <i:v ...>          -> ok <+1|-1> v<version>
+//! train <label> <i:v ...>    -> ok queued <buffered-rows>
+//! flush                      -> ok published v<version>
+//! stats                      -> ok <json>
+//! quit                       -> ok bye              (connection closes)
+//! anything else              -> err <message>
+//! ```
+//!
+//! Feature tokens use the LIBSVM convention: 1-based ascending indices,
+//! omitted features are zero. The serving dimension is fixed by the
+//! initial model (or, lacking one, by the largest index of the first
+//! `train` line) and every later row must fit inside it. Any parse or
+//! dispatch failure answers `err <reason>` on that line only; the session
+//! stays usable.
+//!
+//! # Snapshot / publish lifecycle
+//!
+//! ```text
+//!   rows ──round-robin──► shard 0..S-1 workers (partial_fit, per-shard seed)
+//!                               │
+//!        every publish_every rows (or an explicit flush):
+//!                               │ snapshot command, queued AFTER the
+//!                               │ shard's pending batches (channel order)
+//!                               ▼
+//!        weighted merge (weights ∝ shard SGD steps)
+//!        budget enforced via the configured maintenance strategy
+//!        scale folded  ──►  registry.publish(model)  [one Arc swap]
+//! ```
+//!
+//! Readers are never paused: a publish builds the merged model entirely
+//! off to the side and installs it with a single pointer swap, so the
+//! "publish stall" is an *ingest-side* pause only (shard drain + merge),
+//! measured and reported by the bench harness
+//! (`experiments::serve_bench`, `BENCH_serve.json`).
+//!
+//! # Shard-merge semantics (invariants, in the style of `model/store.rs`)
+//!
+//! * The merged model carries `Σ_s w_s · f_s` with `w_s = steps_s / Σ
+//!   steps` — a step-weighted average of the shard decision functions —
+//!   plus the equally weighted average bias.
+//! * A single-shard publish (`S = 1`) short-circuits to a clone of the
+//!   shard model, so the pipeline at one shard is *equivalent* to serial
+//!   `partial_fit` (decision values match to f64 rounding; the only
+//!   difference is the folded scale).
+//! * The merged model never exceeds the configured budget: excess SVs are
+//!   reduced through the same merge/removal/projection machinery training
+//!   uses, so a published model is always a valid budgeted model.
+//! * Published snapshots have their lazy scale folded (`Φ = 1`), which is
+//!   what makes a `BSVMMDL2` dump→load of a snapshot bit-identical to the
+//!   in-memory model it was taken from.
+//! * Versions are stamped under the publish lock: they are strictly
+//!   monotonic, and a reader holding snapshot `v` observes exactly the
+//!   model published as `v` (stamp and contents live in one immutable
+//!   allocation — no torn reads).
+
+pub mod batcher;
+pub mod ingest;
+pub mod merge;
+pub mod protocol;
+pub mod registry;
+
+pub use batcher::{BatcherClient, BatcherOptions, BatcherStats, MicroBatcher, PredictReply};
+pub use ingest::{IngestReport, ShardedIngest};
+pub use merge::merge_shard_models;
+pub use protocol::{serve_connections, serve_session, ServeState};
+pub use registry::{ModelRegistry, ModelSnapshot};
+
+use anyhow::{ensure, Result};
+
+use crate::solver::SvmConfig;
+
+/// Configuration of the serving subsystem (`repro serve`): the request
+/// front end, the ingest pipeline, and the model hyperparameters used for
+/// models trained *by* the pipeline (ignored when serving a pre-trained
+/// model that is never updated).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// TCP port for `repro serve --port`. The listener binds loopback
+    /// only — the wire protocol is unauthenticated, so external exposure
+    /// goes through a local proxy. Replay mode never opens a socket.
+    pub port: u16,
+    /// Ingest shard workers `S` (each an independent `partial_fit` stream).
+    pub shards: usize,
+    /// Rows between automatic snapshot/publish events.
+    pub publish_every: usize,
+    /// Micro-batcher coalescing cap (rows per prediction batch).
+    pub batch_max_rows: usize,
+    /// Ingest-front buffering: `train` rows accumulated before they are
+    /// handed to the shard pipeline as one batch.
+    pub ingest_chunk: usize,
+    /// Worker threads for batched prediction (0 = all cores).
+    pub threads: usize,
+    /// Base RNG seed (shards derive their own via `shard_seed`).
+    pub seed: u64,
+    /// Hyperparameters for pipeline-trained models.
+    pub svm: SvmConfig,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            port: 7878,
+            shards: 4,
+            publish_every: 1024,
+            batch_max_rows: 64,
+            ingest_chunk: 64,
+            threads: 0,
+            seed: 0,
+            svm: SvmConfig::default(),
+        }
+    }
+}
+
+impl ServeConfig {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.shards >= 1, "need at least one ingest shard, got {}", self.shards);
+        ensure!(self.publish_every >= 1, "publish_every must be at least 1");
+        ensure!(self.batch_max_rows >= 1, "batch_max_rows must be at least 1");
+        ensure!(self.ingest_chunk >= 1, "ingest_chunk must be at least 1");
+        self.svm.validate()?;
+        ensure!(
+            self.svm.budget >= 2,
+            "the ingest pipeline trains budgeted models (budget >= 2), got {}",
+            self.svm.budget
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serve_config_defaults_validate() {
+        ServeConfig::new().validate().unwrap();
+    }
+
+    #[test]
+    fn serve_config_rejects_degenerate_knobs() {
+        for bad in [
+            ServeConfig { shards: 0, ..Default::default() },
+            ServeConfig { publish_every: 0, ..Default::default() },
+            ServeConfig { batch_max_rows: 0, ..Default::default() },
+            ServeConfig { ingest_chunk: 0, ..Default::default() },
+            ServeConfig {
+                svm: SvmConfig::new().budget(1),
+                ..Default::default()
+            },
+        ] {
+            assert!(bad.validate().is_err());
+        }
+    }
+}

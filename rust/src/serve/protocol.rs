@@ -1,0 +1,497 @@
+//! Line protocol + session loop of `repro serve` (see the [`super`]
+//! module docs for the full wire grammar).
+//!
+//! The session loop is generic over `BufRead`/`Write`, so the same code
+//! path answers a TCP connection, an in-memory replay (the offline
+//! `--replay` benchmark and the tests), or any future transport. One
+//! [`ServeState`] is shared by every session: the registry and the
+//! batcher client are lock-free/short-lock concurrent, while the ingest
+//! front (row buffer + shard pipeline) sits behind one mutex — training
+//! rows are cheap to buffer and the pipeline itself fans out to shard
+//! workers immediately.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use crate::data::Dataset;
+use crate::util::json::Json;
+
+use super::batcher::BatcherClient;
+use super::ingest::ShardedIngest;
+use super::registry::ModelRegistry;
+
+/// Buffering ingest front: accumulates `train` rows and hands them to the
+/// shard pipeline in `chunk`-row batches (plus on every explicit flush).
+struct IngestFront {
+    pipeline: Option<ShardedIngest>,
+    buf_x: Vec<f32>,
+    buf_y: Vec<f32>,
+    /// Serving dimension; 0 until pinned by the initial model or the
+    /// first `train` line.
+    dim: usize,
+    chunk: usize,
+}
+
+impl IngestFront {
+    fn buffered_rows(&self) -> usize {
+        if self.dim == 0 {
+            0
+        } else {
+            self.buf_x.len() / self.dim
+        }
+    }
+
+    fn drain_to_pipeline(&mut self) -> Result<(), String> {
+        if self.buf_y.is_empty() {
+            return Ok(());
+        }
+        let pipeline = self.pipeline.as_mut().ok_or("ingest is disabled on this server")?;
+        let batch = Dataset::new(
+            "wire",
+            std::mem::take(&mut self.buf_x),
+            std::mem::take(&mut self.buf_y),
+            self.dim,
+        );
+        match pipeline.ingest(&batch) {
+            Ok(()) => Ok(()),
+            Err(e) => {
+                // Rows were acknowledged with `ok queued`; on a pipeline
+                // failure keep them buffered for the next drain attempt
+                // (at-least-once — never silently dropped) rather than
+                // losing them with the taken buffers.
+                self.buf_x.extend_from_slice(batch.features());
+                self.buf_y.extend_from_slice(batch.labels());
+                Err(e.to_string())
+            }
+        }
+    }
+}
+
+/// Shared state of one serving process.
+pub struct ServeState {
+    registry: Arc<ModelRegistry>,
+    client: BatcherClient,
+    ingest: Mutex<IngestFront>,
+    /// Lock-free mirror of the serving dimension (0 until pinned), so the
+    /// predict path never touches the ingest mutex — a publish stall on
+    /// the ingest side must not delay readers.
+    dim: AtomicUsize,
+}
+
+impl ServeState {
+    /// Assemble the serving state. `pipeline` is `None` for predict-only
+    /// servers (replay benchmarking of a frozen model); `chunk` is the
+    /// ingest-front buffer size in rows.
+    pub fn new(
+        registry: Arc<ModelRegistry>,
+        client: BatcherClient,
+        pipeline: Option<ShardedIngest>,
+        chunk: usize,
+    ) -> Self {
+        let dim = registry.current().map(|s| s.model().dim()).unwrap_or(0);
+        ServeState {
+            registry,
+            client,
+            ingest: Mutex::new(IngestFront {
+                pipeline,
+                buf_x: Vec::new(),
+                buf_y: Vec::new(),
+                dim,
+                chunk: chunk.max(1),
+            }),
+            dim: AtomicUsize::new(dim),
+        }
+    }
+
+    /// The serving dimension (0 until pinned). Lock-free; falls back to
+    /// the current registry snapshot when the mirror is still unset (a
+    /// model was published without going through this state's ingest).
+    fn dim(&self) -> usize {
+        let d = self.dim.load(Ordering::Relaxed);
+        if d != 0 {
+            return d;
+        }
+        match self.registry.current() {
+            Some(snap) => {
+                let d = snap.model().dim();
+                self.dim.store(d, Ordering::Relaxed);
+                d
+            }
+            None => 0,
+        }
+    }
+}
+
+/// Parse LIBSVM feature tokens (`idx:val`, 1-based ascending convention)
+/// into a dense row of dimension `d`.
+fn parse_features<'a>(
+    tokens: impl Iterator<Item = &'a str>,
+    d: usize,
+) -> Result<Vec<f32>, String> {
+    let mut row = vec![0.0f32; d];
+    for tok in tokens {
+        let (i, v) = tok.split_once(':').ok_or_else(|| format!("bad feature token '{tok}'"))?;
+        let idx: usize = i.parse().map_err(|_| format!("bad feature index '{i}'"))?;
+        if idx == 0 {
+            return Err("feature indices are 1-based".to_string());
+        }
+        if idx > d {
+            return Err(format!("feature index {idx} exceeds the serving dimension {d}"));
+        }
+        let val: f32 = v.parse().map_err(|_| format!("bad feature value '{v}'"))?;
+        row[idx - 1] = val;
+    }
+    Ok(row)
+}
+
+/// Largest feature index on a LIBSVM-ish line (0 if none parse).
+fn max_index<'a>(tokens: impl Iterator<Item = &'a str>) -> usize {
+    tokens
+        .filter_map(|tok| tok.split_once(':').and_then(|(i, _)| i.parse::<usize>().ok()))
+        .max()
+        .unwrap_or(0)
+}
+
+/// Answer one request line (already trimmed, non-empty, not `quit`).
+/// Infallible by contract: protocol failures become `err ...` responses.
+pub fn handle_line(state: &ServeState, line: &str) -> String {
+    match dispatch(state, line) {
+        Ok(resp) => resp,
+        Err(msg) => format!("err {msg}"),
+    }
+}
+
+fn dispatch(state: &ServeState, line: &str) -> Result<String, String> {
+    let mut parts = line.split_whitespace();
+    let verb = parts.next().unwrap_or("");
+    match verb {
+        "predict" => {
+            let d = state.dim();
+            if d == 0 {
+                return Err("no model published yet".to_string());
+            }
+            let row = parse_features(parts, d)?;
+            let reply = state.client.predict(&row, d).map_err(|e| e.to_string())?;
+            let label = if reply.labels[0] > 0.0 { "+1" } else { "-1" };
+            Ok(format!("ok {label} v{}", reply.version))
+        }
+        "train" => {
+            let label_tok = parts.next().ok_or("train needs a label")?;
+            let label: f64 =
+                label_tok.parse().map_err(|_| format!("bad label '{label_tok}'"))?;
+            let label = if label > 0.0 { 1.0f32 } else { -1.0f32 };
+            let mut front = state.ingest.lock().expect("ingest lock poisoned");
+            if front.pipeline.is_none() {
+                return Err("ingest is disabled on this server".to_string());
+            }
+            if front.dim == 0 {
+                // First labeled row pins the serving dimension — but only
+                // once the whole line parses, so a malformed first line
+                // cannot permanently commit a wrong dimension.
+                let feats: Vec<&str> = parts.collect();
+                let d = max_index(feats.iter().copied());
+                if d == 0 {
+                    return Err("cannot infer dimension from an empty row".to_string());
+                }
+                let row = parse_features(feats.into_iter(), d)?;
+                front.dim = d;
+                state.dim.store(d, Ordering::Relaxed);
+                front.buf_x.extend_from_slice(&row);
+            } else {
+                let d = front.dim;
+                let row = parse_features(parts, d)?;
+                front.buf_x.extend_from_slice(&row);
+            }
+            front.buf_y.push(label);
+            if front.buffered_rows() >= front.chunk {
+                front.drain_to_pipeline()?;
+            }
+            Ok(format!("ok queued {}", front.buffered_rows()))
+        }
+        "flush" => {
+            let mut front = state.ingest.lock().expect("ingest lock poisoned");
+            front.drain_to_pipeline()?;
+            let pipeline =
+                front.pipeline.as_mut().ok_or("ingest is disabled on this server")?;
+            let version = pipeline.publish_now().map_err(|e| e.to_string())?;
+            Ok(format!("ok published v{version}"))
+        }
+        "stats" => {
+            let (dim, buffered, ingested) = {
+                let front = state.ingest.lock().expect("ingest lock poisoned");
+                (
+                    front.dim,
+                    front.buffered_rows(),
+                    front.pipeline.as_ref().map(|p| p.rows_ingested()).unwrap_or(0),
+                )
+            };
+            let (version, num_sv) = match state.registry.current() {
+                Some(s) => (s.version(), s.model().num_sv()),
+                None => (0, 0),
+            };
+            let json = Json::object(vec![
+                ("version", Json::num(version as f64)),
+                ("num_sv", Json::num(num_sv as f64)),
+                ("dim", Json::num(dim as f64)),
+                ("buffered_rows", Json::num(buffered as f64)),
+                ("ingested_rows", Json::num(ingested as f64)),
+            ]);
+            Ok(format!("ok {json}"))
+        }
+        other => Err(format!("unknown command '{other}'")),
+    }
+}
+
+/// Run one session: read request lines, answer each, stop at `quit` or
+/// EOF. Works for TCP streams and in-memory buffers alike.
+pub fn serve_session<R: BufRead, W: Write>(
+    state: &ServeState,
+    reader: R,
+    mut writer: W,
+) -> Result<()> {
+    for line in reader.lines() {
+        let line = line.context("session read failed")?;
+        let t = line.trim();
+        if t.is_empty() {
+            continue;
+        }
+        if t == "quit" {
+            writeln!(writer, "ok bye")?;
+            writer.flush()?;
+            break;
+        }
+        writeln!(writer, "{}", handle_line(state, t))?;
+        writer.flush()?;
+    }
+    Ok(())
+}
+
+/// Accept loop over a bound listener: one thread per connection, all
+/// sharing `state`. `max_connections` bounds the number of accepted
+/// connections (for tests and graceful smoke runs); `None` serves
+/// forever.
+pub fn serve_connections(
+    listener: TcpListener,
+    state: Arc<ServeState>,
+    max_connections: Option<usize>,
+) -> Result<()> {
+    let mut handles: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    let mut accepted = 0usize;
+    for stream in listener.incoming() {
+        // Transient accept errors (ECONNABORTED, fd exhaustion under
+        // churn) must not kill the server — log and keep accepting.
+        let stream = match stream {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("accept failed (continuing): {e}");
+                continue;
+            }
+        };
+        accepted += 1;
+        let state = Arc::clone(&state);
+        // Reap finished sessions so a long-running server holds handles
+        // only for live connections, not every connection ever accepted.
+        handles.retain(|h| !h.is_finished());
+        handles.push(std::thread::spawn(move || {
+            let reader = match stream.try_clone() {
+                Ok(s) => BufReader::new(s),
+                Err(_) => return,
+            };
+            let _ = serve_session(&state, reader, stream);
+        }));
+        if let Some(max) = max_connections {
+            if accepted >= max {
+                break;
+            }
+        }
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    Ok(())
+}
+
+/// Format one dense row as the wire's LIBSVM feature tokens (zeros
+/// omitted, matching `data::libsvm::write`).
+pub fn format_features(row: &[f32]) -> String {
+    let mut out = String::new();
+    for (j, &v) in row.iter().enumerate() {
+        if v != 0.0 {
+            out.push_str(&format!(" {}:{}", j + 1, v));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::two_moons;
+    use crate::kernel::KernelSpec;
+    use crate::serve::batcher::{BatcherOptions, MicroBatcher};
+    use crate::solver::{RunConfig, SvmConfig};
+
+    fn predict_only_state(reg: Arc<ModelRegistry>) -> (ServeState, MicroBatcher) {
+        let batcher = MicroBatcher::new(Arc::clone(&reg), BatcherOptions::default());
+        let state = ServeState::new(reg, batcher.client(), None, 16);
+        (state, batcher)
+    }
+
+    fn registry_with_toy_model() -> Arc<ModelRegistry> {
+        let mut m = crate::model::AnyModel::new(2, KernelSpec::gaussian(1.0), 2).unwrap();
+        m.push(&[1.0, 0.0], 1.0);
+        m.push(&[-1.0, 0.0], -1.0);
+        let reg = Arc::new(ModelRegistry::new());
+        reg.publish(m);
+        reg
+    }
+
+    #[test]
+    fn predict_lines_answer_with_model_labels() {
+        let reg = registry_with_toy_model();
+        let snap = reg.current().unwrap();
+        let (state, _batcher) = predict_only_state(reg);
+        for probe in [[0.9f32, 0.1], [-0.9, 0.1], [0.0, 0.0]] {
+            let resp = handle_line(&state, &format!("predict{}", format_features(&probe)));
+            let expect = if snap.model().decision(&probe) >= 0.0 { "+1" } else { "-1" };
+            assert_eq!(resp, format!("ok {expect} v1"));
+        }
+    }
+
+    #[test]
+    fn malformed_lines_answer_err_and_keep_the_session_alive() {
+        let reg = registry_with_toy_model();
+        let (state, _batcher) = predict_only_state(reg);
+        for bad in [
+            "predict 0:1",
+            "predict 3:1",
+            "predict x:1",
+            "predict 1:abc",
+            "bogus",
+            "train +1 1:0.5", // ingest disabled on predict-only servers
+            "flush",
+        ] {
+            let resp = handle_line(&state, bad);
+            assert!(resp.starts_with("err "), "{bad} -> {resp}");
+        }
+        // Still serving afterwards.
+        assert!(handle_line(&state, "predict 1:1").starts_with("ok "));
+    }
+
+    #[test]
+    fn session_loop_answers_line_by_line_and_honors_quit() {
+        let reg = registry_with_toy_model();
+        let (state, _batcher) = predict_only_state(reg);
+        let input = "predict 1:1\n\nstats\nquit\npredict 1:1\n";
+        let mut out: Vec<u8> = Vec::new();
+        serve_session(&state, input.as_bytes(), &mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3, "{text}");
+        assert!(lines[0].starts_with("ok "));
+        assert!(lines[1].starts_with("ok {"));
+        assert_eq!(lines[2], "ok bye");
+        // The stats payload is valid JSON.
+        let json = Json::parse(lines[1].trim_start_matches("ok ")).unwrap();
+        assert_eq!(json.get("version").and_then(Json::as_usize), Some(1));
+        assert_eq!(json.get("dim").and_then(Json::as_usize), Some(2));
+    }
+
+    #[test]
+    fn malformed_first_train_line_does_not_pin_the_dimension() {
+        let reg = Arc::new(ModelRegistry::new());
+        let svm = SvmConfig::new().kernel(KernelSpec::gaussian(2.0)).budget(10).c(10.0, 100);
+        let pipeline =
+            ShardedIngest::new(svm, RunConfig::new(), 1, 10_000, Arc::clone(&reg)).unwrap();
+        let batcher = MicroBatcher::new(Arc::clone(&reg), BatcherOptions::default());
+        let state = ServeState::new(Arc::clone(&reg), batcher.client(), Some(pipeline), 8);
+        // A bad value on the would-be dimension-pinning line must leave
+        // the dimension unset...
+        assert!(handle_line(&state, "train +1 3:bogus").starts_with("err "));
+        // ...so a later valid wide row can still establish it.
+        assert!(handle_line(&state, "train +1 1:0.5 5:1.0").starts_with("ok queued"));
+        assert!(handle_line(&state, "train -1 4:0.25").starts_with("ok queued"));
+        batcher.shutdown();
+    }
+
+    #[test]
+    fn train_flush_lifecycle_publishes_and_serves_the_new_model() {
+        let ds = two_moons(240, 0.12, 13);
+        let reg = Arc::new(ModelRegistry::new());
+        let svm = SvmConfig::new()
+            .kernel(KernelSpec::gaussian(2.0))
+            .budget(20)
+            .c(10.0, ds.len());
+        let pipeline =
+            ShardedIngest::new(svm, RunConfig::new().seed(5), 2, 10_000, Arc::clone(&reg))
+                .unwrap();
+        let batcher = MicroBatcher::new(Arc::clone(&reg), BatcherOptions::default());
+        let state = ServeState::new(Arc::clone(&reg), batcher.client(), Some(pipeline), 32);
+
+        // Before any model: predict must fail, train must buffer. Rows are
+        // sent with both indices explicit so the first line pins the
+        // serving dimension at 2 even if a coordinate is zero.
+        assert!(handle_line(&state, "predict 1:0.5 2:0.5").starts_with("err "));
+        for i in 0..ds.len() {
+            let line = format!(
+                "train {} 1:{} 2:{}",
+                if ds.label(i) > 0.0 { "+1" } else { "-1" },
+                ds.row(i)[0],
+                ds.row(i)[1]
+            );
+            let resp = handle_line(&state, &line);
+            assert!(resp.starts_with("ok queued "), "{resp}");
+        }
+        let resp = handle_line(&state, "flush");
+        assert!(resp.starts_with("ok published v"), "{resp}");
+        assert_eq!(reg.version(), 1);
+        // The published model now serves predictions, and they match the
+        // snapshot's own labels.
+        let snap = reg.current().unwrap();
+        let mut correct = 0usize;
+        for i in 0..ds.len() {
+            let resp =
+                handle_line(&state, &format!("predict{}", format_features(ds.row(i))));
+            let expect = if snap.model().decision(ds.row(i)) >= 0.0 { "+1" } else { "-1" };
+            assert_eq!(resp, format!("ok {expect} v1"), "row {i}");
+            let label: f32 = if resp.contains("+1") { 1.0 } else { -1.0 };
+            if label == ds.label(i) {
+                correct += 1;
+            }
+        }
+        assert!(correct as f64 / ds.len() as f64 > 0.8, "served accuracy too low");
+        batcher.shutdown();
+    }
+
+    #[test]
+    fn tcp_round_trip_on_localhost() {
+        let reg = registry_with_toy_model();
+        let snap = reg.current().unwrap();
+        let batcher = MicroBatcher::new(Arc::clone(&reg), BatcherOptions::default());
+        let state = Arc::new(ServeState::new(reg, batcher.client(), None, 16));
+        let listener = TcpListener::bind(("127.0.0.1", 0)).expect("bind loopback");
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || serve_connections(listener, state, Some(1)));
+
+        let mut stream = std::net::TcpStream::connect(addr).expect("connect");
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut line = String::new();
+        for probe in [[0.9f32, 0.0], [-0.9, 0.0]] {
+            writeln!(stream, "predict{}", format_features(&probe)).unwrap();
+            line.clear();
+            reader.read_line(&mut line).unwrap();
+            let expect = if snap.model().decision(&probe) >= 0.0 { "+1" } else { "-1" };
+            assert_eq!(line.trim(), format!("ok {expect} v1"));
+        }
+        writeln!(stream, "quit").unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert_eq!(line.trim(), "ok bye");
+        server.join().unwrap().unwrap();
+        batcher.shutdown();
+    }
+}

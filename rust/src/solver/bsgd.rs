@@ -289,7 +289,13 @@ pub(crate) fn run_sgd_passes<K: Kernel + Copy>(
             }
         }
     }
-    if hyper.curve_every > 0 {
+    // Final flush of the curve — but only if the last in-loop sample did
+    // not already record this exact step. Without the guard, a run whose
+    // step count is a multiple of `curve_every` logged a duplicate final
+    // point, and a model trained through many small `partial_fit` batches
+    // accumulated one duplicate per ingest call, corrupting the cumulative
+    // curve accounting.
+    if hyper.curve_every > 0 && summary.curve.last().map(|p| p.step) != Some(summary.steps) {
         summary.curve.push(curve_point(
             model,
             train,
@@ -395,6 +401,24 @@ impl BsgdEstimator {
         run.validate()?;
         ensure!(!run.audit, "audit instrumentation requires a budgeted Gaussian merge run");
         Ok(BsgdEstimator { config, run, state: None })
+    }
+
+    /// Shard-local construction for the sharded streaming-ingest pipeline:
+    /// identical hyperparameters, but the RNG seed is derived per shard via
+    /// [`shard_seed`] so the `S` independent `partial_fit` streams are
+    /// decorrelated yet reproducible, and the machine stays serial inside
+    /// (the pipeline owns the cross-shard parallelism).
+    pub fn new_shard(config: SvmConfig, mut run: RunConfig, shard: usize) -> Result<Self> {
+        run.seed = shard_seed(run.seed, shard);
+        run.threads = 1;
+        Self::new(config, run)
+    }
+
+    /// Snapshot export for the serving layer: a clone of the current model
+    /// plus the cumulative SGD step count (the publish weight of this
+    /// shard). `None` before the first ingest.
+    pub fn snapshot(&self) -> Option<(AnyModel, u64)> {
+        self.state.as_ref().map(|s| (s.model.clone(), s.summary.steps))
     }
 
     /// The model hyperparameters this estimator was built with.
@@ -530,6 +554,14 @@ impl BsgdEstimator {
         }
         Ok(())
     }
+}
+
+/// Per-shard seed derivation for sharded `partial_fit` ingest: a fixed
+/// tweak keyed by the shard index, analogous to the per-class convention
+/// in `solver::multiclass` (kept stable so sharded runs stay reproducible
+/// across releases).
+pub fn shard_seed(base: u64, shard: usize) -> u64 {
+    base ^ 0x5EED ^ (shard as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
 }
 
 /// Non-Gaussian ingest: removal/projection maintenance only (validated at
@@ -830,6 +862,121 @@ mod tests {
             crate::metrics::accuracy(&preds, ds.labels())
         };
         assert!(acc > 0.85, "streamed accuracy {acc}");
+    }
+
+    #[test]
+    fn fit_and_repeated_partial_fit_report_consistent_cumulative_ratios() {
+        // Regression test for FitSummary accounting: a model trained
+        // through N small ingest batches must report the same cumulative
+        // merging frequency / maintenance ratios as one N-pass fit over
+        // the identical visit order.
+        let ds = two_moons(300, 0.12, 9);
+        let config = SvmConfig::new()
+            .kernel(KernelSpec::gaussian(2.0))
+            .budget(20)
+            .c(10.0, ds.len());
+        let passes = 4usize;
+
+        let mut fitted = BsgdEstimator::new(
+            config.clone(),
+            RunConfig::new().passes(passes).shuffle(false).seed(7),
+        )
+        .unwrap();
+        fitted.fit(&ds).unwrap();
+
+        let mut streamed =
+            BsgdEstimator::new(config, RunConfig::new().shuffle(false).seed(7)).unwrap();
+        for _ in 0..passes {
+            streamed.partial_fit(&ds).unwrap();
+        }
+
+        let a = fitted.summary().unwrap();
+        let b = streamed.summary().unwrap();
+        assert_eq!(a.steps, (passes * ds.len()) as u64);
+        assert_eq!(a.steps, b.steps);
+        assert_eq!(a.sv_inserts, b.sv_inserts);
+        assert_eq!(a.maintenance_events, b.maintenance_events);
+        assert!(a.maintenance_events > 0, "budget must bind for the test to mean anything");
+        assert!((a.merging_frequency() - b.merging_frequency()).abs() < 1e-15);
+        // Section *event* counts are deterministic (times are wall-clock);
+        // both fractions must be well-defined and bounded.
+        for s in [Section::SgdStep, Section::MaintA, Section::MaintB] {
+            assert_eq!(a.profiler.events(s), b.profiler.events(s), "{s:?}");
+        }
+        for s in [&a, &b] {
+            let f = s.maintenance_fraction();
+            assert!((0.0..=1.0).contains(&f), "maintenance fraction {f}");
+        }
+    }
+
+    #[test]
+    fn curve_steps_stay_unique_across_ingest_calls() {
+        // The final curve flush must not duplicate an in-loop sample —
+        // neither within one fit whose step count divides curve_every,
+        // nor across many partial_fit ingest batches.
+        let ds = two_moons(200, 0.12, 4);
+        let config = SvmConfig::new()
+            .kernel(KernelSpec::gaussian(2.0))
+            .budget(25)
+            .c(10.0, ds.len());
+        let run = RunConfig::new().shuffle(false).seed(3).curve(100, 64);
+        let mut est = BsgdEstimator::new(config.clone(), run.clone()).unwrap();
+        for _ in 0..3 {
+            est.partial_fit(&ds).unwrap();
+        }
+        let curve = &est.summary().unwrap().curve;
+        assert!(!curve.is_empty());
+        for pair in curve.windows(2) {
+            assert!(pair[0].step < pair[1].step, "duplicate/regressing curve step");
+        }
+        assert_eq!(curve.last().unwrap().step, 600);
+
+        // One fit with steps divisible by curve_every: same property.
+        let mut fitted =
+            BsgdEstimator::new(config, run.passes(2)).unwrap();
+        fitted.fit(&ds).unwrap();
+        let curve = &fitted.summary().unwrap().curve;
+        for pair in curve.windows(2) {
+            assert!(pair[0].step < pair[1].step, "duplicate/regressing curve step");
+        }
+        assert_eq!(curve.last().unwrap().step, 400);
+    }
+
+    #[test]
+    fn shard_seeds_are_distinct_and_stable() {
+        let base = 42u64;
+        let seeds: Vec<u64> = (0..8).map(|s| shard_seed(base, s)).collect();
+        for (i, &a) in seeds.iter().enumerate() {
+            assert_ne!(a, base, "shard {i} must not reuse the base seed");
+            for &b in &seeds[i + 1..] {
+                assert_ne!(a, b, "shard seeds collide");
+            }
+        }
+        // Stable convention (reproducibility across releases).
+        assert_eq!(shard_seed(base, 0), base ^ 0x5EED);
+    }
+
+    #[test]
+    fn snapshot_exports_model_clone_and_steps() {
+        let ds = two_moons(150, 0.12, 6);
+        let config = SvmConfig::new()
+            .kernel(KernelSpec::gaussian(2.0))
+            .budget(15)
+            .c(10.0, ds.len());
+        let mut est = BsgdEstimator::new(config, RunConfig::new().shuffle(false)).unwrap();
+        assert!(est.snapshot().is_none());
+        est.partial_fit(&ds).unwrap();
+        let (snap, steps) = est.snapshot().unwrap();
+        assert_eq!(steps, 150);
+        let probe = [0.1f32, 0.4];
+        assert_eq!(
+            snap.decision(&probe).to_bits(),
+            est.model().unwrap().decision(&probe).to_bits()
+        );
+        // The snapshot is a clone: further training must not affect it.
+        let before = snap.decision(&probe);
+        est.partial_fit(&ds).unwrap();
+        assert_eq!(snap.decision(&probe).to_bits(), before.to_bits());
     }
 
     #[test]

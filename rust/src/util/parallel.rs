@@ -1,4 +1,4 @@
-//! Scoped-thread work-queue parallelism.
+//! Scoped-thread work-queue parallelism and long-lived command workers.
 //!
 //! Hoisted out of `experiments::runner` so every layer — one-vs-rest
 //! training, batch prediction, curve evaluation, the experiment suite —
@@ -11,10 +11,21 @@
 //! All in-crate consumers split work at row / machine granularity and
 //! reduce sequentially afterwards, which keeps `threads = N` bit-identical
 //! to `threads = 1`.
+//!
+//! [`spawn_worker`] is the second primitive: a *long-lived* worker thread
+//! owning mutable state across commands (the serving layer's shard
+//! trainers), as opposed to the scoped fan-out above where every job is
+//! one-shot. Commands on one worker are processed strictly in send order,
+//! which is what lets the sharded-ingest pipeline snapshot a shard by
+//! simply enqueueing a snapshot command after the training batches.
 
 use std::collections::VecDeque;
 use std::ops::Range;
+use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result as AnyResult};
 
 /// Number of hardware threads (fallback 4 when undetectable).
 pub fn available_threads() -> usize {
@@ -115,6 +126,69 @@ where
         .collect()
 }
 
+/// A long-lived worker thread processing typed commands in send order.
+///
+/// Unlike the scoped fan-out of [`run_jobs`], the worker owns its closure
+/// state for its whole lifetime, so stateful consumers (a shard's
+/// streaming trainer, a metrics accumulator) can live *inside* the worker
+/// and be driven purely through the channel. Dropping the handle closes
+/// the channel and joins the thread; [`Worker::join`] does the same
+/// explicitly.
+pub struct Worker<Cmd: Send + 'static> {
+    tx: Option<Sender<Cmd>>,
+    handle: Option<JoinHandle<()>>,
+}
+
+/// Spawn a named long-lived worker; `f` is invoked once per command, in
+/// exactly the order commands were sent. The thread exits when every
+/// sender (the [`Worker`] handle and any clones obtained before sending)
+/// is gone.
+pub fn spawn_worker<Cmd, F>(name: &str, mut f: F) -> Worker<Cmd>
+where
+    Cmd: Send + 'static,
+    F: FnMut(Cmd) + Send + 'static,
+{
+    let (tx, rx) = channel::<Cmd>();
+    let handle = std::thread::Builder::new()
+        .name(name.to_string())
+        .spawn(move || {
+            while let Ok(cmd) = rx.recv() {
+                f(cmd);
+            }
+        })
+        .expect("failed to spawn worker thread");
+    Worker { tx: Some(tx), handle: Some(handle) }
+}
+
+impl<Cmd: Send + 'static> Worker<Cmd> {
+    /// Enqueue a command; errors if the worker thread has terminated.
+    pub fn send(&self, cmd: Cmd) -> AnyResult<()> {
+        self.tx
+            .as_ref()
+            .ok_or_else(|| anyhow!("worker channel already closed"))?
+            .send(cmd)
+            .map_err(|_| anyhow!("worker thread terminated"))
+    }
+
+    /// Close the channel and wait for the worker to drain its queue.
+    pub fn join(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        self.tx.take();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl<Cmd: Send + 'static> Drop for Worker<Cmd> {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -178,6 +252,40 @@ mod tests {
     fn resolve_threads_zero_means_all() {
         assert!(resolve_threads(0) >= 1);
         assert_eq!(resolve_threads(3), 3);
+    }
+
+    #[test]
+    fn worker_processes_commands_in_order_with_state() {
+        let seen = Arc::new(Mutex::new(Vec::new()));
+        let sink = Arc::clone(&seen);
+        // Stateful closure: accumulates across commands.
+        let mut running = 0u64;
+        let w = spawn_worker("acc", move |x: u64| {
+            running += x;
+            sink.lock().unwrap().push(running);
+        });
+        for x in 1..=5u64 {
+            w.send(x).unwrap();
+        }
+        w.join();
+        assert_eq!(*seen.lock().unwrap(), vec![1, 3, 6, 10, 15]);
+    }
+
+    #[test]
+    fn worker_reply_channels_round_trip() {
+        let w = spawn_worker("echo", |(x, reply): (u64, Sender<u64>)| {
+            let _ = reply.send(x * 2);
+        });
+        let mut rxs = Vec::new();
+        for x in 0..10u64 {
+            let (tx, rx) = channel();
+            w.send((x, tx)).unwrap();
+            rxs.push(rx);
+        }
+        let out: Vec<u64> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
+        assert_eq!(out, (0..10).map(|x| x * 2).collect::<Vec<_>>());
+        // Dropping joins cleanly.
+        drop(w);
     }
 
     #[test]

@@ -1,0 +1,245 @@
+//! Integration tests of the serving subsystem: offline replay end-to-end
+//! (the acceptance path of `repro serve --replay`), mid-stream snapshot
+//! persistence, sharded-ingest determinism through the public surface,
+//! and a loopback TCP smoke test.
+
+use std::io::{BufRead, BufReader, Write};
+use std::sync::Arc;
+
+use budgetsvm::coordinator;
+use budgetsvm::data::{libsvm, synthetic::two_moons};
+use budgetsvm::kernel::KernelSpec;
+use budgetsvm::serve::{ModelRegistry, ServeConfig, ShardedIngest};
+use budgetsvm::solver::{RunConfig, SvmConfig};
+use budgetsvm::util::json::Json;
+
+fn tmp_dir(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("budgetsvm-serve-{name}"));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn write_moons(path: &std::path::Path, n: usize, seed: u64) {
+    let ds = two_moons(n, 0.12, seed);
+    libsvm::write_file(&ds, path).unwrap();
+}
+
+#[test]
+fn replay_end_to_end_byte_matches_and_writes_bench_report() {
+    let dir = tmp_dir("replay");
+    let stream = dir.join("stream.libsvm");
+    write_moons(&stream, 700, 42);
+
+    let mut scfg = ServeConfig::new();
+    scfg.shards = 4;
+    scfg.publish_every = 256;
+    scfg.threads = 2;
+    scfg.seed = 9;
+    scfg.svm = SvmConfig::new().kernel(KernelSpec::gaussian(2.0)).budget(30).c(10.0, 700);
+
+    let summary = coordinator::run_serve_replay(
+        stream.to_str().unwrap(),
+        &scfg,
+        Some(KernelSpec::gaussian(2.0)),
+        Some(10.0),
+        None,
+        dir.to_str().unwrap(),
+    )
+    .expect("replay must byte-match offline predict_batch");
+    assert_eq!(summary.rows, 700);
+    assert!(summary.version >= 1);
+
+    // BENCH_serve.json exists, parses, and records the {1, 4} sweep with
+    // the acceptance metrics.
+    let text = std::fs::read_to_string(&summary.bench_path).unwrap();
+    let report = Json::parse(&text).unwrap();
+    assert_eq!(report.get("schema").and_then(Json::as_str), Some("bench_serve/v1"));
+    let cells = report.get("shards").and_then(Json::as_array).unwrap();
+    let counts: Vec<usize> =
+        cells.iter().filter_map(|c| c.get("shards").and_then(Json::as_usize)).collect();
+    assert_eq!(counts, vec![1, 4]);
+    for cell in cells {
+        for key in [
+            "ingest_rows_per_s",
+            "predict_p50_us",
+            "predict_p99_us",
+            "publish_stall_mean_ms",
+            "publish_stall_max_ms",
+            "agreement_vs_serial",
+        ] {
+            assert!(
+                cell.get(key).and_then(Json::as_f64).is_some(),
+                "BENCH_serve.json cell is missing {key}"
+            );
+        }
+        assert!(cell.get("ingest_rows_per_s").and_then(Json::as_f64).unwrap() > 0.0);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn replay_with_pretrained_model_serves_that_model() {
+    let dir = tmp_dir("replay-model");
+    let stream = dir.join("stream.libsvm");
+    write_moons(&stream, 300, 7);
+
+    // Train and save a model on the same (scaled) file via the public
+    // training entry point.
+    let cfg = budgetsvm::config::ExperimentConfig {
+        out_dir: dir.to_string_lossy().into_owned(),
+        ..Default::default()
+    };
+    let run = coordinator::run_single(
+        stream.to_str().unwrap(),
+        25,
+        budgetsvm::budget::Strategy::Merge(budgetsvm::budget::MergeSolver::LookupWd),
+        Some(KernelSpec::gaussian(2.0)),
+        &cfg,
+        Some(2),
+        Some(10.0),
+        None,
+    )
+    .unwrap();
+    let model_path = dir.join("model.bsvm");
+    budgetsvm::model::io::save_any(&run.model, &model_path).unwrap();
+
+    let mut scfg = ServeConfig::new();
+    scfg.shards = 2;
+    scfg.publish_every = 128;
+    scfg.threads = 1;
+    scfg.svm = SvmConfig::new().kernel(KernelSpec::gaussian(2.0)).budget(25).c(10.0, 300);
+    let summary = coordinator::run_serve_replay(
+        stream.to_str().unwrap(),
+        &scfg,
+        Some(KernelSpec::gaussian(2.0)),
+        Some(10.0),
+        Some(model_path.to_str().unwrap()),
+        dir.to_str().unwrap(),
+    )
+    .expect("hot-swapped pre-trained model must byte-match too");
+    assert_eq!(summary.rows, 300);
+    // The pre-trained model was published after the bench sweep, so it is
+    // the latest version.
+    assert!(summary.version >= 3);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn mid_stream_snapshot_dump_reload_is_bit_identical() {
+    let ds = two_moons(400, 0.12, 11);
+    let registry = Arc::new(ModelRegistry::new());
+    let svm = SvmConfig::new().kernel(KernelSpec::gaussian(2.0)).budget(20).c(10.0, ds.len());
+    let mut ingest =
+        ShardedIngest::new(svm, RunConfig::new().seed(4), 3, 120, Arc::clone(&registry)).unwrap();
+    ingest.ingest(&ds).unwrap();
+    // Mid-stream: at least one auto-publish has happened; dump it.
+    let snap = registry.current().expect("auto-publish must have fired");
+    let dir = tmp_dir("snapshot");
+    let path = dir.join("mid.bsvm");
+    let v = registry.dump(&path).unwrap();
+    assert_eq!(v, snap.version());
+    let back = budgetsvm::model::io::load_any(&path).unwrap();
+    for i in (0..ds.len()).step_by(29) {
+        assert_eq!(
+            snap.model().decision(ds.row(i)).to_bits(),
+            back.decision(ds.row(i)).to_bits(),
+            "row {i}"
+        );
+    }
+    ingest.finish().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn sharded_pipeline_is_reproducible_through_the_public_surface() {
+    let ds = two_moons(500, 0.12, 23);
+    let run_once = || {
+        let registry = Arc::new(ModelRegistry::new());
+        let svm =
+            SvmConfig::new().kernel(KernelSpec::gaussian(2.0)).budget(25).c(10.0, ds.len());
+        let mut ingest =
+            ShardedIngest::new(svm, RunConfig::new().seed(8), 4, 200, Arc::clone(&registry))
+                .unwrap();
+        ingest.ingest(&ds).unwrap();
+        ingest.finish().unwrap();
+        registry
+    };
+    let (a, b) = (run_once(), run_once());
+    let (sa, sb) = (a.current().unwrap(), b.current().unwrap());
+    assert_eq!(sa.version(), sb.version());
+    assert_eq!(sa.model().num_sv(), sb.model().num_sv());
+    for i in (0..ds.len()).step_by(41) {
+        assert_eq!(
+            sa.model().decision(ds.row(i)).to_bits(),
+            sb.model().decision(ds.row(i)).to_bits(),
+            "row {i}"
+        );
+    }
+}
+
+#[test]
+fn tcp_server_smoke_over_loopback() {
+    // Train a tiny model, serve it over a loopback TCP socket via the
+    // real server entry point (one connection), and check the answers
+    // against offline predictions.
+    let dir = tmp_dir("tcp");
+    let ds = two_moons(200, 0.12, 31);
+    let model_path = dir.join("m.bsvm");
+    {
+        use budgetsvm::solver::Estimator;
+        let svm =
+            SvmConfig::new().kernel(KernelSpec::gaussian(2.0)).budget(15).c(10.0, ds.len());
+        let mut est =
+            budgetsvm::solver::BsgdEstimator::new(svm, RunConfig::new().passes(3)).unwrap();
+        est.fit(&ds).unwrap();
+        budgetsvm::model::io::save_any(est.model().unwrap(), &model_path).unwrap();
+    }
+    let offline = budgetsvm::model::io::load_any(&model_path).unwrap();
+
+    // Pick a free loopback port first (bind :0, read it, drop it).
+    let port = {
+        let probe = std::net::TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        probe.local_addr().unwrap().port()
+    };
+    let mut scfg = ServeConfig::new();
+    scfg.port = port;
+    scfg.shards = 1;
+    scfg.threads = 1;
+    scfg.svm = SvmConfig::new().kernel(KernelSpec::gaussian(2.0)).budget(15).c(10.0, 200);
+    let model_str = model_path.to_string_lossy().into_owned();
+    let server = std::thread::spawn(move || {
+        coordinator::run_serve_tcp(&scfg, Some(&model_str), Some(1))
+    });
+
+    // The server needs a moment to bind; retry the connect briefly.
+    let mut stream = None;
+    for _ in 0..100 {
+        match std::net::TcpStream::connect(("127.0.0.1", port)) {
+            Ok(s) => {
+                stream = Some(s);
+                break;
+            }
+            Err(_) => std::thread::sleep(std::time::Duration::from_millis(20)),
+        }
+    }
+    let mut stream = stream.expect("server did not come up");
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut line = String::new();
+    for i in 0..20 {
+        let req = format!(
+            "predict{}",
+            budgetsvm::serve::protocol::format_features(ds.row(i))
+        );
+        writeln!(stream, "{req}").unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        let expect = if offline.decision(ds.row(i)) >= 0.0 { "+1" } else { "-1" };
+        assert_eq!(line.trim(), format!("ok {expect} v1"), "row {i}");
+    }
+    writeln!(stream, "quit").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert_eq!(line.trim(), "ok bye");
+    server.join().unwrap().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
