@@ -73,7 +73,7 @@ fn main() -> anyhow::Result<()> {
             summary.profiler.seconds(Section::SgdStep),
             summary.profiler.maintenance_seconds(),
             summary.profiler.seconds(Section::MaintA),
-            summary.profiler.seconds(Section::MaintB),
+            summary.profiler.section_b_seconds(),
             100.0 * summary.merging_frequency(),
         );
         results.push((method, est.into_model()?, summary));

@@ -61,7 +61,7 @@ fn main() {
                 summary.wall_seconds,
                 summary.profiler.seconds(Section::SgdStep),
                 summary.profiler.seconds(Section::MaintA),
-                summary.profiler.seconds(Section::MaintB),
+                summary.profiler.section_b_seconds(),
                 100.0 * summary.merging_frequency(),
             );
         }

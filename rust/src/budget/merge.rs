@@ -85,6 +85,25 @@ pub struct MergeOutcome {
 }
 
 /// The budget-maintenance merge engine.
+///
+/// Structured as three composable stages (the contracts the policy layer
+/// in [`crate::budget::policy`] builds on — see the [`crate::budget`]
+/// module docs for the invariants page):
+///
+/// 1. **candidate search** ([`MergeEngine::stage_scan`]) — model is *not*
+///    mutated; fills the candidate arrays (partner index, κ, relative `m`,
+///    squared coefficient sum) from one blocked κ kernel row;
+/// 2. **solver** ([`MergeEngine::stage_solve`]) — pure per-candidate
+///    `(m, κ) → (h, WD)` work through the configured [`MergeSolver`]
+///    (the paper's Section A);
+/// 3. **apply** ([`MergeEngine::stage_apply`]) — the only stage that
+///    mutates the model: winner selection, `α_z`, merge-vector
+///    construction, descending swap-removes, push.
+///
+/// [`MergeEngine::maintain`] composes them into the classic one-pair event;
+/// [`MergeEngine::maintain_sweep`] is the amortized multi-pair variant
+/// (one pivot argsort + one batched κ scan shared by every pair of the
+/// sweep).
 pub struct MergeEngine {
     solver: MergeSolver,
     table: Option<Arc<LookupTable>>,
@@ -97,6 +116,8 @@ pub struct MergeEngine {
     hbuf: Vec<f64>,
     krow: Vec<f64>,
     z: Vec<f32>,
+    /// Batched κ rows of a multi-pair sweep (pivot-major, stride = #SV).
+    sweep_krows: Vec<f64>,
 }
 
 impl MergeEngine {
@@ -106,24 +127,17 @@ impl MergeEngine {
     /// ([`lookup::shared`]) rather than rebuilding it per engine.
     pub fn new(solver: MergeSolver, grid: usize) -> Self {
         let table = solver.needs_table().then(|| lookup::shared(grid));
-        MergeEngine {
-            solver,
-            table,
-            cand: Vec::new(),
-            kappa: Vec::new(),
-            mrel: Vec::new(),
-            scale2: Vec::new(),
-            wd: Vec::new(),
-            hbuf: Vec::new(),
-            krow: Vec::new(),
-            z: Vec::new(),
-        }
+        Self::from_parts(solver, table)
     }
 
     /// Create an engine sharing an explicit table (used by the runtime-backed
     /// merge scan and by tests).
     pub fn with_table(solver: MergeSolver, table: Arc<LookupTable>) -> Self {
         let table = solver.needs_table().then_some(table);
+        Self::from_parts(solver, table)
+    }
+
+    fn from_parts(solver: MergeSolver, table: Option<Arc<LookupTable>>) -> Self {
         MergeEngine {
             solver,
             table,
@@ -135,6 +149,7 @@ impl MergeEngine {
             hbuf: Vec::new(),
             krow: Vec::new(),
             z: Vec::new(),
+            sweep_krows: Vec::new(),
         }
     }
 
@@ -174,19 +189,16 @@ impl MergeEngine {
         }
     }
 
-    /// Run one budget-maintenance event on `model` (which must have at least
-    /// 2 support vectors), timing Section A/B into `prof`.
+    /// Stage 1 — candidate search. Fixes `a_idx` as the pivot and fills the
+    /// candidate arrays (partner index, κ, relative `m`, squared sum) from
+    /// one blocked κ kernel row. The model is NOT mutated. Returns the
+    /// number of candidates found (0 = removal fallback territory).
     ///
-    /// Implements Algorithm 1: fixes the SV with minimal |α| as the first
-    /// partner, scans all same-label candidates, merges the pair with
-    /// minimal weight degradation. Falls back to plain removal when no
-    /// same-label candidate exists.
-    pub fn maintain(&mut self, model: &mut BudgetModel, prof: &mut SectionProfiler) -> MergeOutcome {
-        debug_assert!(model.num_sv() >= 2, "maintain needs at least two SVs");
-
-        // ---- Section B, pass 1: fixed partner, candidates, κ row, m. ----
-        let t_b1 = Instant::now();
-        let a_idx = model.argmin_abs_alpha().expect("non-empty model");
+    /// κ row against every SV in one blocked pass: for the Gaussian
+    /// kernel, κ_j = exp(−γ‖x_a − x_j‖²) IS the kernel value, so the
+    /// whole candidate scan rides the tiled engine instead of a scalar
+    /// sqdist per candidate.
+    fn stage_scan(&mut self, model: &BudgetModel, a_idx: usize) -> usize {
         let alpha_a = model.alpha(a_idx);
         let sign_a = if alpha_a >= 0.0 { 1.0 } else { -1.0 };
 
@@ -195,10 +207,6 @@ impl MergeEngine {
         self.mrel.clear();
         self.scale2.clear();
         let b = model.num_sv();
-        // κ row against every SV in one blocked pass: for the Gaussian
-        // kernel, κ_j = exp(−γ‖x_a − x_j‖²) IS the kernel value, so the
-        // whole candidate scan rides the tiled engine instead of a scalar
-        // sqdist per candidate.
         if self.krow.len() < b {
             self.krow.resize(b, 0.0);
         }
@@ -224,20 +232,14 @@ impl MergeEngine {
             self.mrel.push(alpha_b / sum);
             self.scale2.push(sum * sum);
         }
-        prof.add(Section::MaintB, t_b1.elapsed());
+        self.cand.len()
+    }
 
-        if self.cand.is_empty() {
-            // No same-label partner: remove the min-|α| vector (removal is
-            // the degenerate merge; see paper Section 3 discussion).
-            let t_b = Instant::now();
-            let wd = alpha_a * alpha_a;
-            model.swap_remove(a_idx);
-            prof.add(Section::MaintB, t_b.elapsed());
-            return MergeOutcome { min_index: a_idx, partner: None, h: 0.0, weight_degradation: wd };
-        }
-
-        // ---- Section A: per-candidate h / WD via the configured solver. ----
-        let t_a = Instant::now();
+    /// Stage 2 — the per-candidate solver (the paper's Section A): fill
+    /// `wd` (and, for the h-producing solvers, `hbuf`) for every candidate
+    /// of the last [`MergeEngine::stage_scan`]. Pure `(m, κ)` work; the
+    /// model is untouched.
+    fn stage_solve(&mut self) {
         let n_cand = self.cand.len();
         // Grow-only scratch: steady-state events touch no Vec length at
         // all (every slot in 0..n_cand is overwritten before it is read).
@@ -275,10 +277,13 @@ impl MergeEngine {
                 }
             }
         }
-        prof.add(Section::MaintA, t_a.elapsed());
+    }
 
-        // ---- Section B, pass 2: select the winner and execute the merge. ----
-        let t_b2 = Instant::now();
+    /// Stage 3 — apply: select the minimum-WD winner of the last solve and
+    /// execute the merge. The ONLY stage that mutates the model (two
+    /// descending swap-removes + one push).
+    fn stage_apply(&mut self, model: &mut BudgetModel, a_idx: usize) -> MergeOutcome {
+        let n_cand = self.cand.len();
         let mut best = 0usize;
         for c in 1..n_cand {
             if self.wd[c] < self.wd[best] {
@@ -292,6 +297,7 @@ impl MergeEngine {
             MergeSolver::LookupWd => self.table.as_ref().unwrap().lookup_h(m, kappa),
             _ => self.hbuf[best],
         };
+        let alpha_a = model.alpha(a_idx);
         let alpha_b = model.alpha(j_idx);
         let az = alpha_z(alpha_a, alpha_b, kappa, h);
 
@@ -316,14 +322,232 @@ impl MergeEngine {
         model.swap_remove(lo);
         model.push(&self.z, az);
         let wd_eff = self.wd[best];
-        prof.add(Section::MaintB, t_b2.elapsed());
 
-        MergeOutcome {
-            min_index: a_idx,
-            partner: Some(j_idx),
-            h,
-            weight_degradation: wd_eff,
+        MergeOutcome { min_index: a_idx, partner: Some(j_idx), h, weight_degradation: wd_eff }
+    }
+
+    /// Run one budget-maintenance event on `model` (which must have at least
+    /// 2 support vectors), timing scan / Section A / apply into `prof`.
+    ///
+    /// Implements Algorithm 1 by composing the three stages: fixes the SV
+    /// with minimal |α| as the first partner, scans all same-label
+    /// candidates, merges the pair with minimal weight degradation. Falls
+    /// back to plain removal when no same-label candidate exists.
+    pub fn maintain(&mut self, model: &mut BudgetModel, prof: &mut SectionProfiler) -> MergeOutcome {
+        debug_assert!(model.num_sv() >= 2, "maintain needs at least two SVs");
+
+        let t_scan = Instant::now();
+        let a_idx = model.argmin_abs_alpha().expect("non-empty model");
+        let n_cand = self.stage_scan(model, a_idx);
+        prof.add(Section::MaintScan, t_scan.elapsed());
+
+        if n_cand == 0 {
+            // No same-label partner: remove the min-|α| vector (removal is
+            // the degenerate merge; see paper Section 3 discussion).
+            let t_apply = Instant::now();
+            let alpha_a = model.alpha(a_idx);
+            let wd = alpha_a * alpha_a;
+            model.swap_remove(a_idx);
+            prof.add(Section::MaintApply, t_apply.elapsed());
+            return MergeOutcome { min_index: a_idx, partner: None, h: 0.0, weight_degradation: wd };
         }
+
+        let t_a = Instant::now();
+        self.stage_solve();
+        prof.add(Section::MaintA, t_a.elapsed());
+
+        let t_apply = Instant::now();
+        let outcome = self.stage_apply(model, a_idx);
+        prof.add(Section::MaintApply, t_apply.elapsed());
+        outcome
+    }
+
+    /// Amortized multi-pair maintenance (cf. Qaadan & Glasmachers,
+    /// *Multi-Merge Budget Maintenance*, arXiv:1806.10179): ONE event
+    /// merges up to `pairs` disjoint pairs, sharing
+    ///
+    /// * one lex-`(|α|, index)` argsort of the coefficients (replacing
+    ///   `pairs` argmin scans),
+    /// * one batched blocked κ candidate scan
+    ///   ([`BudgetModel::kernel_rows_for_svs`] — every SV tile is visited
+    ///   once for all pivots), and
+    /// * the one shared lookup table,
+    ///
+    /// across every pair of the sweep. Pivots are consumed in ascending
+    /// |α| order; each pivot merges with its minimum-WD same-sign partner
+    /// among the SVs still alive, or is removed when no partner exists
+    /// (the degenerate merge). All merges are computed from the pre-sweep
+    /// expansion (pairs are disjoint, so the approximations are
+    /// independent) and applied in one batch: descending swap-removes,
+    /// then the merged vectors are pushed.
+    ///
+    /// `maintain_sweep(model, 1, prof)` is bit-identical to
+    /// [`MergeEngine::maintain`] (pinned by tests). The sweep shrinks the
+    /// model by at least 1 and at most `min(pairs, num_sv − 1)` SVs — one
+    /// per pivot processed; fewer than `pairs` pivots can be processed when
+    /// earlier merges consume the remaining candidates (callers that must
+    /// reach a hard budget loop further events, each guaranteed progress).
+    /// Returns the summed weight degradation.
+    pub fn maintain_sweep(
+        &mut self,
+        model: &mut BudgetModel,
+        pairs: usize,
+        prof: &mut SectionProfiler,
+    ) -> f64 {
+        let b = model.num_sv();
+        debug_assert!(b >= 2, "maintain_sweep needs at least two SVs");
+        let target = pairs.max(1).min(b - 1);
+
+        // ---- Scan stage: pivot order + one batched κ scan. ----
+        let t_scan = Instant::now();
+        let mut order: Vec<usize> = (0..b).collect();
+        order.sort_by(|&i, &j| {
+            model
+                .alpha(i)
+                .abs()
+                .partial_cmp(&model.alpha(j).abs())
+                .expect("finite coefficients")
+                .then(i.cmp(&j))
+        });
+        // κ rows for the expected pivots (the `target` smallest |α|);
+        // stragglers promoted to pivot later (because an expected pivot was
+        // consumed as a partner) get a lazily computed row below.
+        let mut row_owner: Vec<usize> = order[..target].to_vec();
+        if self.sweep_krows.len() < target * b {
+            self.sweep_krows.resize(target * b, 0.0);
+        }
+        model.kernel_rows_for_svs(&row_owner, &mut self.sweep_krows);
+        let mut scan_ns = t_scan.elapsed().as_nanos() as u64;
+
+        let mut alive = vec![true; b];
+        // Deferred apply batch: merge vectors + their coefficients, and
+        // every index consumed by the sweep.
+        let mut merges: Vec<(Vec<f32>, f64)> = Vec::new();
+        let mut removals: Vec<usize> = Vec::new();
+        let mut total_wd = 0.0f64;
+        let mut done = 0usize;
+        let mut solve_ns = 0u64;
+        let mut apply_ns = 0u64;
+
+        for &a in &order {
+            if done == target {
+                break;
+            }
+            if !alive[a] {
+                continue;
+            }
+            // κ row of this pivot (lazy for stragglers).
+            let slot = match row_owner.iter().position(|&o| o == a) {
+                Some(s) => s,
+                None => {
+                    let t = Instant::now();
+                    row_owner.push(a);
+                    let s = row_owner.len() - 1;
+                    if self.sweep_krows.len() < (s + 1) * b {
+                        self.sweep_krows.resize((s + 1) * b, 0.0);
+                    }
+                    model.kernel_row(
+                        model.sv(a),
+                        model.sv_norm2(a),
+                        &mut self.sweep_krows[s * b..(s + 1) * b],
+                    );
+                    scan_ns += t.elapsed().as_nanos() as u64;
+                    s
+                }
+            };
+
+            // Solve stage: WD of every alive same-sign partner from the
+            // shared scan; track the minimum. The h-producing solvers
+            // compute h once per candidate here (cached alongside the
+            // tracked best — no re-solve at apply time); Lookup-WD defers
+            // h to the winning pair, exactly like the single-pair path.
+            let t_solve = Instant::now();
+            let alpha_a = model.alpha(a);
+            let sign_a = if alpha_a >= 0.0 { 1.0 } else { -1.0 };
+            let krow = &self.sweep_krows[slot * b..slot * b + b];
+            let mut best: Option<(usize, f64, f64, f64, Option<f64>)> = None; // (j, wd, m, κ, h)
+            for (j, &kappa) in krow.iter().enumerate() {
+                if j == a || !alive[j] {
+                    continue;
+                }
+                let alpha_b = model.alpha(j);
+                if alpha_b * sign_a <= 0.0 {
+                    continue;
+                }
+                let sum = alpha_a + alpha_b;
+                if sum.abs() < 1e-300 {
+                    continue;
+                }
+                let m = alpha_b / sum;
+                let (wd_norm, h_cand) = match self.solver {
+                    MergeSolver::LookupWd => {
+                        (self.table.as_ref().unwrap().lookup_wd(m, kappa), None)
+                    }
+                    _ => {
+                        let h = self.solve_h(m, kappa);
+                        (wd_from_s(m, kappa, s_value(m, kappa, h)), Some(h))
+                    }
+                };
+                let wd = sum * sum * wd_norm;
+                if best.is_none_or(|(_, bw, _, _, _)| wd < bw) {
+                    best = Some((j, wd, m, kappa, h_cand));
+                }
+            }
+            solve_ns += t_solve.elapsed().as_nanos() as u64;
+
+            // Decision for this pivot (deferred apply).
+            let t_apply = Instant::now();
+            match best {
+                None => {
+                    // Degenerate merge: remove the pivot.
+                    total_wd += alpha_a * alpha_a;
+                    alive[a] = false;
+                    removals.push(a);
+                }
+                Some((j, wd, m, kappa, h_cand)) => {
+                    // Lookup-WD resolves h for the winner only (one table
+                    // probe per merged pair, charged to apply like the
+                    // classic path); the other solvers reuse the cached h.
+                    let h = h_cand.unwrap_or_else(|| self.solve_h(m, kappa));
+                    let alpha_b = model.alpha(j);
+                    let az = alpha_z(alpha_a, alpha_b, kappa, h);
+                    let d = model.dim();
+                    let mut z = vec![0.0f32; d];
+                    {
+                        let xa = model.sv(a);
+                        let xb = model.sv(j);
+                        let hf = h as f32;
+                        for k in 0..d {
+                            z[k] = hf * xa[k] + (1.0 - hf) * xb[k];
+                        }
+                    }
+                    merges.push((z, az));
+                    total_wd += wd;
+                    alive[a] = false;
+                    alive[j] = false;
+                    removals.push(a);
+                    removals.push(j);
+                }
+            }
+            done += 1;
+            apply_ns += t_apply.elapsed().as_nanos() as u64;
+        }
+
+        // ---- Batched apply: descending swap-removes, then pushes. ----
+        let t_apply = Instant::now();
+        removals.sort_unstable_by_key(|&i| std::cmp::Reverse(i));
+        for &idx in &removals {
+            model.swap_remove(idx);
+        }
+        for (z, az) in &merges {
+            model.push(z, *az);
+        }
+        apply_ns += t_apply.elapsed().as_nanos() as u64;
+
+        prof.add_ns(Section::MaintScan, scan_ns);
+        prof.add_ns(Section::MaintA, solve_ns);
+        prof.add_ns(Section::MaintApply, apply_ns);
+        total_wd
     }
 }
 
@@ -465,7 +689,94 @@ mod tests {
             assert!(out.weight_degradation >= 0.0);
             assert!((0.0..=1.0).contains(&out.h));
             assert!(prof.ns(Section::MaintA) > 0);
-            assert!(prof.ns(Section::MaintB) > 0);
+            assert!(prof.ns(Section::MaintScan) > 0);
+            assert!(prof.ns(Section::MaintApply) > 0);
+        }
+    }
+
+    #[test]
+    fn sweep_of_one_pair_is_bit_identical_to_maintain() {
+        // The multi-pair sweep at pairs = 1 must reproduce the classic
+        // single-pair event exactly: same pivot, same partner, same merged
+        // vector, bit-for-bit.
+        let mut rng = Rng::new(17);
+        for solver in MergeSolver::ALL {
+            for trial in 0..6 {
+                let mut a = random_model(&mut rng, 9 + trial, 4, 0.5);
+                // Mix in a couple of negative coefficients so the same-sign
+                // filter is exercised.
+                if trial % 2 == 0 {
+                    let row: Vec<f32> = (0..4).map(|_| rng.normal() as f32).collect();
+                    a.push(&row, -(0.2 + rng.uniform()));
+                }
+                let mut b = a.clone();
+                let mut ea = MergeEngine::new(solver, 100);
+                let mut eb = MergeEngine::new(solver, 100);
+                let mut pa = SectionProfiler::new();
+                let mut pb = SectionProfiler::new();
+                let out = ea.maintain(&mut a, &mut pa);
+                let wd = eb.maintain_sweep(&mut b, 1, &mut pb);
+                assert_eq!(a.num_sv(), b.num_sv(), "{}", solver.name());
+                assert_eq!(
+                    out.weight_degradation.to_bits(),
+                    wd.to_bits(),
+                    "{} trial {trial}",
+                    solver.name()
+                );
+                for j in 0..a.num_sv() {
+                    assert_eq!(a.alpha(j).to_bits(), b.alpha(j).to_bits(), "alpha {j}");
+                    assert_eq!(a.sv(j), b.sv(j), "sv {j}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sweep_shrinks_within_pairs_budget_and_makes_progress() {
+        let mut rng = Rng::new(23);
+        for pairs in [1usize, 2, 3, 5] {
+            let mut model = random_model(&mut rng, 12, 3, 0.4);
+            let mut e = MergeEngine::new(MergeSolver::LookupWd, 100);
+            let mut p = SectionProfiler::new();
+            let wd = e.maintain_sweep(&mut model, pairs, &mut p);
+            // All-positive coefficients: plenty of candidates, so the full
+            // `pairs` quota is consumed (12 SVs cannot be exhausted here).
+            assert_eq!(model.num_sv(), 12 - pairs, "pairs={pairs}");
+            assert!(wd >= 0.0 && wd.is_finite());
+        }
+        // pairs beyond the candidate supply: every sweep still makes
+        // progress and never drops below one SV.
+        let mut model = random_model(&mut rng, 4, 3, 0.4);
+        let mut e = MergeEngine::new(MergeSolver::LookupWd, 100);
+        let mut p = SectionProfiler::new();
+        e.maintain_sweep(&mut model, 100, &mut p);
+        assert!(model.num_sv() < 4 && model.num_sv() >= 1, "{}", model.num_sv());
+    }
+
+    #[test]
+    fn sweep_never_merges_across_signs() {
+        // Two positives + two negatives: a sweep must merge within each
+        // sign class (or fall back to removal), never across.
+        let mut model = BudgetModel::new(2, Gaussian::new(0.5), 4);
+        model.push(&[0.0, 0.0], 0.1);
+        model.push(&[0.3, 0.0], 0.8);
+        model.push(&[0.0, 0.3], -0.2);
+        model.push(&[0.1, 0.4], -0.9);
+        let pos_weight: f64 = (0..4).map(|j| model.alpha(j).max(0.0)).sum();
+        let neg_weight: f64 = (0..4).map(|j| model.alpha(j).min(0.0)).sum();
+        let mut e = MergeEngine::new(MergeSolver::GssPrecise, 100);
+        let mut p = SectionProfiler::new();
+        let wd = e.maintain_sweep(&mut model, 2, &mut p);
+        assert!(model.num_sv() < 4);
+        assert!(wd >= 0.0);
+        // Sign-class weight can shrink (merging is lossy) but a class never
+        // flips or vanishes into the other: both signs survive.
+        let pos_after: f64 = (0..model.num_sv()).map(|j| model.alpha(j).max(0.0)).sum();
+        let neg_after: f64 = (0..model.num_sv()).map(|j| model.alpha(j).min(0.0)).sum();
+        assert!(pos_after > 0.0 && pos_after <= pos_weight + 1e-12);
+        assert!(neg_after < 0.0 && neg_after >= neg_weight - 1e-12);
+        for j in 0..model.num_sv() {
+            assert!(model.alpha(j).is_finite());
         }
     }
 

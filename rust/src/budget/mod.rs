@@ -1,12 +1,56 @@
-//! Budget maintenance: keeping the support-vector count at `B`.
+//! Budget maintenance: keeping the support-vector count at `B` — as a
+//! pluggable **policy pipeline**.
 //!
 //! The paper's contribution lives here: [`merge`] implements Algorithm 1
 //! with the four interchangeable per-candidate solvers (GSS-standard,
-//! GSS-precise, Lookup-h, Lookup-WD); [`lookup`] holds the precomputed
-//! tables with bilinear interpolation; [`gss`] the iterative baseline;
-//! [`geometry`] the shared closed-form merge math; [`removal`] and
-//! [`projection`] the alternative strategies of Wang et al. (2012) used as
-//! ablation baselines; [`linalg`] a minimal Cholesky solver for projection.
+//! GSS-precise, Lookup-h, Lookup-WD) plus the amortized multi-pair sweep;
+//! [`lookup`] holds the precomputed tables with bilinear interpolation;
+//! [`gss`] the iterative baseline; [`geometry`] the shared closed-form
+//! merge math; [`removal`] and [`projection`] the alternative strategies
+//! of Wang et al. (2012); [`linalg`] a minimal Cholesky solver for
+//! projection; [`policy`] the [`MaintenancePolicy`] trait everything
+//! dispatches through.
+//!
+//! # Pipeline invariants
+//!
+//! **Trigger semantics.** A policy's `trigger(num_sv, budget)` fires once
+//! the overshoot exceeds the configured slack `W`:
+//! `num_sv − budget > W`. With `W = 0` this is the classic
+//! `num_sv > budget` — one event per overflowing SGD step. With `W > 0`
+//! the model may transiently hold up to `budget + ⌈W⌉` SVs; the trigger
+//! then guarantees an overshoot of at least `⌈W⌉ + 1`, which is exactly
+//! the auto pair quota of one event (`MaintenanceConfig::effective_pairs`).
+//!
+//! **Slack accounting.** Slack trades peak model size for amortization:
+//! the *number of pairs merged over a training run is unchanged* (every
+//! insert beyond the budget is eventually shed), but events are `⌈W⌉ + 1`
+//! times rarer and each event shares one candidate scan, one pivot
+//! argsort and the one process-wide lookup table across its whole batch.
+//! Consumers that hand a model onward (end of every `fit`/`partial_fit`
+//! ingest call, the serving layer's shard merge) run
+//! `MaintenancePolicy::enforce`, so models that *leave* the training loop
+//! always satisfy `num_sv ≤ budget` regardless of slack.
+//!
+//! **Stage contracts** (shared by single-pair events, multi-pair sweeps
+//! and the serve-side shard merge; see [`merge::MergeEngine`]):
+//!
+//! 1. *candidate search* — read-only on the model; produces pivot(s) and
+//!    per-candidate `(κ, m, (α_a+α_b)²)` through the blocked kernel-row
+//!    engine (one batched tile pass for a whole sweep);
+//! 2. *solver* — pure `(m, κ) → (h, WD)` per candidate via the configured
+//!    [`MergeSolver`] (the paper's Section A; profiled as
+//!    `Section::MaintA`);
+//! 3. *apply* — the only stage mutating the model: winner selection,
+//!    `α_z`, merge-vector construction, descending swap-removes, pushes.
+//!
+//! Profiler attribution follows the stages (`MaintScan` / `MaintA` /
+//! `MaintApply`); `MaintScan + MaintApply` is the paper's Figure 3
+//! "Section B".
+//!
+//! **Equivalence pin.** With `slack = 0` and a single pair per event the
+//! pipeline is bit-identical to the pre-pipeline per-step maintainers for
+//! every strategy × kernel combination (pinned by `tests/maintenance.rs`
+//! and the in-module sweep/removal tests).
 //!
 //! # Kernel / strategy compatibility
 //!
@@ -24,7 +68,9 @@
 //! [`Strategy::valid_for`] encodes this table; the estimator configuration
 //! layer (`SvmConfig::validate`) rejects invalid combinations with an
 //! explanatory error instead of panicking mid-run, and non-Gaussian
-//! budgeted models default to removal maintenance.
+//! budgeted models default to removal maintenance. [`policy::generic_policy`]
+//! enforces the same rule at construction for callers that bypass the
+//! estimator surface.
 //!
 //! Lookup tables are shared process-wide per grid resolution via
 //! [`lookup::shared`], so K one-vs-rest machines (and repeated experiment
@@ -36,15 +82,18 @@ pub mod gss;
 pub mod linalg;
 pub mod lookup;
 pub mod merge;
+pub mod policy;
 pub mod projection;
 pub mod removal;
 
 pub use lookup::{shared as shared_lookup_table, LookupTable};
 pub use merge::{audit_event, AuditRecord, MergeEngine, MergeOutcome, MergeSolver};
+pub use policy::{
+    gaussian_policy, generic_policy, AnyPolicy, MaintenanceConfig, MaintenancePolicy,
+};
+pub use removal::MinAlphaIndex;
 
 use crate::kernel::KernelSpec;
-use crate::metrics::SectionProfiler;
-use crate::model::BudgetModel;
 
 /// Budget maintenance strategy selected for a training run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -85,51 +134,12 @@ impl Strategy {
     }
 }
 
-/// A ready-to-run maintenance executor with its scratch state.
-pub enum Maintainer {
-    Merge(MergeEngine),
-    Removal,
-    Projection,
-}
-
-impl Maintainer {
-    /// Build a maintainer; `grid` is the lookup-table resolution for the
-    /// lookup solvers.
-    pub fn new(strategy: Strategy, grid: usize) -> Self {
-        match strategy {
-            Strategy::Merge(solver) => Maintainer::Merge(MergeEngine::new(solver, grid)),
-            Strategy::Removal => Maintainer::Removal,
-            Strategy::Projection => Maintainer::Projection,
-        }
-    }
-
-    /// Execute one maintenance event; returns the incurred weight
-    /// degradation.
-    pub fn maintain(&mut self, model: &mut BudgetModel, prof: &mut SectionProfiler) -> f64 {
-        match self {
-            Maintainer::Merge(engine) => engine.maintain(model, prof).weight_degradation,
-            Maintainer::Removal => removal::maintain_removal(model, prof),
-            Maintainer::Projection => projection::maintain_projection(model, prof)
-                .unwrap_or_else(|_| {
-                    // Numerically degenerate Gram matrix: fall back to removal.
-                    removal::maintain_removal(model, prof)
-                }),
-        }
-    }
-
-    pub fn strategy(&self) -> Strategy {
-        match self {
-            Maintainer::Merge(e) => Strategy::Merge(e.solver()),
-            Maintainer::Removal => Strategy::Removal,
-            Maintainer::Projection => Strategy::Projection,
-        }
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::kernel::Gaussian;
+    use crate::metrics::SectionProfiler;
+    use crate::model::BudgetModel;
     use crate::util::rng::Rng;
 
     #[test]
@@ -170,7 +180,7 @@ mod tests {
     }
 
     #[test]
-    fn all_maintainers_shrink_the_model() {
+    fn all_policies_shrink_the_model() {
         let strategies = [
             Strategy::Merge(MergeSolver::GssStandard),
             Strategy::Merge(MergeSolver::LookupWd),
@@ -184,12 +194,13 @@ mod tests {
                 let row: Vec<f32> = (0..3).map(|_| rng.normal() as f32).collect();
                 model.push(&row, 0.1 + rng.uniform());
             }
-            let mut m = Maintainer::new(strat, 50);
+            let mut p = gaussian_policy(&MaintenanceConfig::new(strat, 50));
             let mut prof = SectionProfiler::new();
-            let wd = m.maintain(&mut model, &mut prof);
-            assert_eq!(model.num_sv(), 5, "{:?}", strat);
+            assert!(p.trigger(model.num_sv(), 5), "{strat:?}");
+            let wd = p.maintain(&mut model, 5, &mut prof);
+            assert_eq!(model.num_sv(), 5, "{strat:?}");
             assert!(wd >= 0.0);
-            assert_eq!(m.strategy(), strat);
+            assert_eq!(p.strategy(), strat);
         }
     }
 }

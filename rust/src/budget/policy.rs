@@ -1,0 +1,446 @@
+//! The pluggable budget-maintenance pipeline: [`MaintenancePolicy`] is the
+//! single dispatch surface every consumer of budget maintenance goes
+//! through — the BSGD solver hot loop, end-of-ingest budget enforcement,
+//! and the serving layer's shard-model merge. See the [`crate::budget`]
+//! module docs for the pipeline's invariants page (trigger semantics,
+//! slack accounting, stage contracts).
+//!
+//! Three policies implement the trait:
+//!
+//! * [`MergeMaintenance`] (Gaussian only) — the paper's merge maintenance,
+//!   with the amortized multi-pair sweep
+//!   ([`MergeEngine::maintain_sweep`]) once `slack > 0` or `pairs > 1`;
+//! * [`RemovalMaintenance`] (kernel-generic) — min-|α| removal backed by
+//!   the lazily-repaired [`MinAlphaIndex`] (amortized victim selection,
+//!   bit-identical to the full scan);
+//! * [`ProjectionMaintenance`] (kernel-generic) — Wang-style projection
+//!   with removal fallback on a numerically degenerate Gram matrix.
+//!
+//! Policies are built from a [`MaintenanceConfig`] through
+//! [`gaussian_policy`] / [`generic_policy`]; [`AnyPolicy`] is the
+//! runtime-polymorphic holder mirroring [`crate::model::AnyModel`].
+
+use std::time::Instant;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::kernel::{Gaussian, Kernel, Linear, Polynomial};
+use crate::metrics::{Section, SectionProfiler};
+use crate::model::BudgetModel;
+
+use super::merge::{MergeEngine, MergeSolver};
+use super::projection::maintain_projection;
+use super::removal::{maintain_removal, MinAlphaIndex};
+use super::Strategy;
+
+/// Everything that parameterizes budget maintenance, independent of the
+/// model hyperparameters it is attached to (`SvmConfig::maintenance()`
+/// derives one).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MaintenanceConfig {
+    /// Strategy (merge solver / removal / projection).
+    pub strategy: Strategy,
+    /// Lookup-table grid resolution for the lookup merge solvers.
+    pub grid: usize,
+    /// Slack `W`: the model may overshoot the budget by up to `W` support
+    /// vectors before a maintenance event triggers (`0` = the classic
+    /// maintain-every-overflow regime).
+    pub slack: f64,
+    /// Pairs merged (SVs shed) per maintenance event; `0` = auto, the
+    /// paper's `⌈W⌉ + 1` (so one event returns the model to the budget).
+    pub pairs: usize,
+}
+
+impl MaintenanceConfig {
+    /// Classic configuration: per-overflow single-pair maintenance.
+    pub fn new(strategy: Strategy, grid: usize) -> Self {
+        MaintenanceConfig { strategy, grid, slack: 0.0, pairs: 0 }
+    }
+
+    /// Pairs shed per triggered event: the explicit cap, or `⌈slack⌉ + 1`
+    /// when `pairs == 0` (exactly the overshoot a trigger guarantees).
+    pub fn effective_pairs(&self) -> usize {
+        if self.pairs > 0 {
+            self.pairs
+        } else {
+            (self.slack.ceil() as usize) + 1
+        }
+    }
+
+    /// Upper bound on the slack: the overshoot buffer is pre-allocated
+    /// alongside the budget, so an absurd value must fail validation with
+    /// a clear message instead of aborting inside the allocator.
+    pub const MAX_SLACK: f64 = 1e6;
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(
+            self.slack.is_finite() && (0.0..=Self::MAX_SLACK).contains(&self.slack),
+            "maintenance slack must be a finite number in [0, {}], got {}",
+            Self::MAX_SLACK,
+            self.slack
+        );
+        Ok(())
+    }
+}
+
+/// The shared trigger rule: fire once the overshoot exceeds the slack.
+/// `slack = 0` reduces to the pre-pipeline `num_sv > budget`.
+#[inline]
+fn slack_trigger(num_sv: usize, budget: usize, slack: f64) -> bool {
+    num_sv > budget && (num_sv - budget) as f64 > slack
+}
+
+/// One budget-maintenance policy: the trigger rule plus the event
+/// executor. This is the only surface through which the solver loop, the
+/// end-of-ingest enforcement, and the serving layer's shard merge reach
+/// budget maintenance — no strategy enum is branched on outside the
+/// policy constructors.
+///
+/// `Send` so estimators owning a policy can live on shard worker threads.
+pub trait MaintenancePolicy<K: Kernel + Copy>: Send {
+    /// Whether a maintenance event should run now (evaluated after every
+    /// SGD step of a budgeted run).
+    fn trigger(&self, num_sv: usize, budget: usize) -> bool;
+
+    /// Execute one maintenance event: shed up to the policy's per-event
+    /// pair quota (never less than one SV — guaranteed progress), timing
+    /// scan/solver/apply into `prof`. Returns the summed weight
+    /// degradation.
+    fn maintain(
+        &mut self,
+        model: &mut BudgetModel<K>,
+        budget: usize,
+        prof: &mut SectionProfiler,
+    ) -> f64;
+
+    /// Hard budget enforcement: run events until `num_sv ≤ budget`. Used
+    /// at the end of every ingest call (so published/returned models
+    /// always respect the budget even when slack allowed a transient
+    /// overshoot) and by the serving layer's shard merge. A no-op when
+    /// already within budget, hence free in the `slack = 0` regime.
+    fn enforce(
+        &mut self,
+        model: &mut BudgetModel<K>,
+        budget: usize,
+        prof: &mut SectionProfiler,
+    ) -> f64 {
+        let mut wd = 0.0;
+        while model.num_sv() > budget {
+            wd += self.maintain(model, budget, prof);
+        }
+        wd
+    }
+
+    /// The strategy this policy implements.
+    fn strategy(&self) -> Strategy;
+}
+
+/// Merge-based maintenance (the paper), Gaussian-only: single-pair events
+/// in the classic regime, the amortized multi-pair sweep once the slack
+/// (or an explicit pair cap) batches work.
+pub struct MergeMaintenance {
+    engine: MergeEngine,
+    slack: f64,
+    pairs: usize,
+}
+
+impl MergeMaintenance {
+    pub fn new(solver: MergeSolver, cfg: &MaintenanceConfig) -> Self {
+        MergeMaintenance {
+            engine: MergeEngine::new(solver, cfg.grid),
+            slack: cfg.slack,
+            pairs: cfg.effective_pairs(),
+        }
+    }
+}
+
+impl MaintenancePolicy<Gaussian> for MergeMaintenance {
+    fn trigger(&self, num_sv: usize, budget: usize) -> bool {
+        slack_trigger(num_sv, budget, self.slack)
+    }
+
+    fn maintain(
+        &mut self,
+        model: &mut BudgetModel<Gaussian>,
+        budget: usize,
+        prof: &mut SectionProfiler,
+    ) -> f64 {
+        let over = model.num_sv().saturating_sub(budget).max(1);
+        let sweep = self.pairs.min(over);
+        if sweep <= 1 {
+            // The classic single-pair event — bit-identical to the
+            // pre-pipeline per-step merge.
+            self.engine.maintain(model, prof).weight_degradation
+        } else {
+            self.engine.maintain_sweep(model, sweep, prof)
+        }
+    }
+
+    fn strategy(&self) -> Strategy {
+        Strategy::Merge(self.engine.solver())
+    }
+}
+
+/// Min-|α| removal, kernel-generic, with amortized victim selection
+/// through the lazily-repaired [`MinAlphaIndex`] (every mutation the
+/// policy performs is routed through the index's bookkeeping, so selection
+/// stays bit-identical to a full scan).
+pub struct RemovalMaintenance {
+    slack: f64,
+    pairs: usize,
+    index: MinAlphaIndex,
+}
+
+impl RemovalMaintenance {
+    pub fn new(cfg: &MaintenanceConfig) -> Self {
+        RemovalMaintenance {
+            slack: cfg.slack,
+            pairs: cfg.effective_pairs(),
+            index: MinAlphaIndex::new(),
+        }
+    }
+}
+
+impl<K: Kernel + Copy> MaintenancePolicy<K> for RemovalMaintenance {
+    fn trigger(&self, num_sv: usize, budget: usize) -> bool {
+        slack_trigger(num_sv, budget, self.slack)
+    }
+
+    fn maintain(
+        &mut self,
+        model: &mut BudgetModel<K>,
+        budget: usize,
+        prof: &mut SectionProfiler,
+    ) -> f64 {
+        let over = model.num_sv().saturating_sub(budget).max(1);
+        let count = self.pairs.min(over);
+        let mut wd = 0.0;
+        for _ in 0..count {
+            if model.is_empty() {
+                break;
+            }
+            let t0 = Instant::now();
+            let victim = self.index.pick(model).expect("non-empty model");
+            prof.add(Section::MaintScan, t0.elapsed());
+            let t1 = Instant::now();
+            let alpha = model.alpha(victim);
+            let self_k = model.kernel().self_eval(model.sv_norm2(victim));
+            self.index.note_swap_remove(model, victim);
+            model.swap_remove(victim);
+            prof.add(Section::MaintApply, t1.elapsed());
+            wd += alpha * alpha * self_k;
+        }
+        wd
+    }
+
+    fn strategy(&self) -> Strategy {
+        Strategy::Removal
+    }
+}
+
+/// Wang-style projection, kernel-generic; falls back to removal when the
+/// survivor Gram matrix is numerically degenerate. Projection rewrites
+/// survivor coefficients every event, so victim selection stays a full
+/// scan (a cached index would be invalidated each time).
+pub struct ProjectionMaintenance {
+    slack: f64,
+    pairs: usize,
+}
+
+impl ProjectionMaintenance {
+    pub fn new(cfg: &MaintenanceConfig) -> Self {
+        ProjectionMaintenance { slack: cfg.slack, pairs: cfg.effective_pairs() }
+    }
+}
+
+impl<K: Kernel + Copy> MaintenancePolicy<K> for ProjectionMaintenance {
+    fn trigger(&self, num_sv: usize, budget: usize) -> bool {
+        slack_trigger(num_sv, budget, self.slack)
+    }
+
+    fn maintain(
+        &mut self,
+        model: &mut BudgetModel<K>,
+        budget: usize,
+        prof: &mut SectionProfiler,
+    ) -> f64 {
+        let over = model.num_sv().saturating_sub(budget).max(1);
+        let count = self.pairs.min(over);
+        let mut wd = 0.0;
+        for _ in 0..count {
+            if model.is_empty() {
+                break;
+            }
+            wd += maintain_projection(model, prof).unwrap_or_else(|_| {
+                // Numerically degenerate Gram matrix: fall back to removal.
+                maintain_removal(model, prof)
+            });
+        }
+        wd
+    }
+
+    fn strategy(&self) -> Strategy {
+        Strategy::Projection
+    }
+}
+
+/// Build the policy for a Gaussian model: the full strategy menu.
+pub fn gaussian_policy(cfg: &MaintenanceConfig) -> Box<dyn MaintenancePolicy<Gaussian>> {
+    match cfg.strategy {
+        Strategy::Merge(solver) => Box::new(MergeMaintenance::new(solver, cfg)),
+        Strategy::Removal => Box::new(RemovalMaintenance::new(cfg)),
+        Strategy::Projection => Box::new(ProjectionMaintenance::new(cfg)),
+    }
+}
+
+/// Build the policy for an arbitrary kernel: removal/projection only
+/// (merge-based maintenance needs the Gaussian closed-form geometry; the
+/// configuration layer rejects that combination before training starts,
+/// so hitting this error indicates a caller bypassed validation).
+pub fn generic_policy<K: Kernel + Copy>(
+    cfg: &MaintenanceConfig,
+) -> Result<Box<dyn MaintenancePolicy<K>>> {
+    match cfg.strategy {
+        Strategy::Merge(_) => bail!(
+            "merge-based maintenance requires the Gaussian kernel; use the removal or \
+             projection strategy"
+        ),
+        Strategy::Removal => Ok(Box::new(RemovalMaintenance::new(cfg))),
+        Strategy::Projection => Ok(Box::new(ProjectionMaintenance::new(cfg))),
+    }
+}
+
+/// Runtime-polymorphic policy holder: one variant per kernel family,
+/// mirroring [`crate::model::AnyModel`] so estimator state can keep the
+/// policy (and its scratch/index caches) alive across `partial_fit` calls.
+pub enum AnyPolicy {
+    Gaussian(Box<dyn MaintenancePolicy<Gaussian>>),
+    Linear(Box<dyn MaintenancePolicy<Linear>>),
+    Polynomial(Box<dyn MaintenancePolicy<Polynomial>>),
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_model(n_sv: usize, seed: u64) -> BudgetModel {
+        let mut rng = Rng::new(seed);
+        let mut m = BudgetModel::new(3, Gaussian::new(0.5), n_sv);
+        for _ in 0..n_sv {
+            let row: Vec<f32> = (0..3).map(|_| rng.normal() as f32).collect();
+            m.push(&row, 0.05 + rng.uniform());
+        }
+        m
+    }
+
+    #[test]
+    fn trigger_respects_slack() {
+        let cfg = MaintenanceConfig { slack: 4.0, ..MaintenanceConfig::new(Strategy::Removal, 50) };
+        let p = RemovalMaintenance::new(&cfg);
+        let budget = 10;
+        for num_sv in 0..=14 {
+            assert!(!MaintenancePolicy::<Gaussian>::trigger(&p, num_sv, budget), "{num_sv}");
+        }
+        assert!(MaintenancePolicy::<Gaussian>::trigger(&p, 15, budget));
+        // slack = 0 is the classic rule.
+        let p0 = RemovalMaintenance::new(&MaintenanceConfig::new(Strategy::Removal, 50));
+        assert!(!MaintenancePolicy::<Gaussian>::trigger(&p0, 10, budget));
+        assert!(MaintenancePolicy::<Gaussian>::trigger(&p0, 11, budget));
+    }
+
+    #[test]
+    fn effective_pairs_auto_is_ceil_slack_plus_one() {
+        let mut cfg = MaintenanceConfig::new(Strategy::Removal, 50);
+        assert_eq!(cfg.effective_pairs(), 1);
+        cfg.slack = 4.0;
+        assert_eq!(cfg.effective_pairs(), 5);
+        cfg.slack = 2.5;
+        assert_eq!(cfg.effective_pairs(), 4); // ⌈2.5⌉ + 1
+        cfg.pairs = 2;
+        assert_eq!(cfg.effective_pairs(), 2); // explicit cap wins
+    }
+
+    #[test]
+    fn config_validation() {
+        let mut cfg = MaintenanceConfig::new(Strategy::Removal, 50);
+        cfg.validate().unwrap();
+        cfg.slack = -1.0;
+        assert!(cfg.validate().is_err());
+        cfg.slack = f64::NAN;
+        assert!(cfg.validate().is_err());
+        // Absurd slack must be a clean validation error, not an allocator
+        // abort when the model pre-allocates budget + slack capacity.
+        cfg.slack = 1e15;
+        assert!(cfg.validate().is_err());
+        cfg.slack = MaintenanceConfig::MAX_SLACK;
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn every_policy_enforces_the_budget() {
+        for strategy in [
+            Strategy::Merge(MergeSolver::LookupWd),
+            Strategy::Merge(MergeSolver::GssStandard),
+            Strategy::Removal,
+            Strategy::Projection,
+        ] {
+            for (slack, pairs) in [(0.0, 0), (3.0, 0), (0.0, 4)] {
+                let cfg = MaintenanceConfig { strategy, grid: 50, slack, pairs };
+                let mut policy = gaussian_policy(&cfg);
+                assert_eq!(policy.strategy(), strategy);
+                let mut model = random_model(17, 9);
+                let mut prof = SectionProfiler::new();
+                let wd = policy.enforce(&mut model, 6, &mut prof);
+                assert_eq!(model.num_sv(), 6, "{strategy:?} slack={slack} pairs={pairs}");
+                assert!(wd >= 0.0 && wd.is_finite());
+            }
+        }
+    }
+
+    #[test]
+    fn removal_policy_matches_full_scan_reference() {
+        let cfg = MaintenanceConfig::new(Strategy::Removal, 50);
+        let mut policy = RemovalMaintenance::new(&cfg);
+        let mut a = random_model(12, 4);
+        let mut b = a.clone();
+        let mut prof = SectionProfiler::new();
+        for _ in 0..8 {
+            let wd_p = MaintenancePolicy::<Gaussian>::maintain(&mut policy, &mut a, 0, &mut prof);
+            let wd_r = maintain_removal(&mut b, &mut prof);
+            assert_eq!(wd_p.to_bits(), wd_r.to_bits());
+            assert_eq!(a.num_sv(), b.num_sv());
+            for j in 0..a.num_sv() {
+                assert_eq!(a.alpha(j).to_bits(), b.alpha(j).to_bits(), "alpha {j}");
+                assert_eq!(a.sv(j), b.sv(j), "sv {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn generic_policy_rejects_merge() {
+        let cfg = MaintenanceConfig::new(Strategy::Merge(MergeSolver::LookupWd), 50);
+        assert!(generic_policy::<Linear>(&cfg).is_err());
+        assert!(generic_policy::<Linear>(&MaintenanceConfig::new(Strategy::Removal, 50)).is_ok());
+        assert!(
+            generic_policy::<Polynomial>(&MaintenanceConfig::new(Strategy::Projection, 50)).is_ok()
+        );
+    }
+
+    #[test]
+    fn merge_policy_sweeps_when_slack_batches_work() {
+        let cfg = MaintenanceConfig {
+            slack: 3.0,
+            ..MaintenanceConfig::new(Strategy::Merge(MergeSolver::LookupWd), 50)
+        };
+        let mut policy = gaussian_policy(&cfg);
+        let budget = 8;
+        // Overshoot of 4 (> slack 3): one event shrinks back to budget.
+        let mut model = random_model(12, 11);
+        assert!(policy.trigger(model.num_sv(), budget));
+        let mut prof = SectionProfiler::new();
+        policy.maintain(&mut model, budget, &mut prof);
+        assert_eq!(model.num_sv(), 8);
+        assert!(!policy.trigger(model.num_sv(), budget));
+    }
+}

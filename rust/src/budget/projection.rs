@@ -36,7 +36,7 @@ pub fn maintain_projection<K: Kernel + Copy>(
     let n = model.num_sv() - 1;
     if n == 0 {
         model.swap_remove(r_idx);
-        prof.add(Section::MaintB, t0.elapsed());
+        prof.add(Section::MaintApply, t0.elapsed());
         return Ok(alpha_r * alpha_r * self_k);
     }
 
@@ -65,6 +65,11 @@ pub fn maintain_projection<K: Kernel + Copy>(
         }
         gram[j * n + j] += RIDGE;
     }
+    // Victim selection + Gram/κ construction are the candidate scan; the
+    // Cholesky solve and the coefficient update below are the apply work
+    // (projection has no Section-A merge solver).
+    prof.add(Section::MaintScan, t0.elapsed());
+    let t1 = Instant::now();
 
     let kappa = rhs.clone();
     // Solve K β = κ; Δα_i = α_r β_i.
@@ -78,7 +83,7 @@ pub fn maintain_projection<K: Kernel + Copy>(
         model.add_alpha(si, alpha_r * rhs[i]);
     }
     model.swap_remove(r_idx);
-    prof.add(Section::MaintB, t0.elapsed());
+    prof.add(Section::MaintApply, t1.elapsed());
     Ok(wd)
 }
 

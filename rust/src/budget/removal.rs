@@ -4,6 +4,18 @@
 //! approaches removal); kept as an ablation baseline — and, because it
 //! needs no kernel geometry at all, it is the default maintenance strategy
 //! for non-Gaussian budgeted models.
+//!
+//! Two victim-selection paths exist:
+//!
+//! * [`maintain_removal`] — the straightforward per-event full
+//!   `argmin |α|` scan (O(B) per event); reference semantics.
+//! * [`MinAlphaIndex`] — a lazily-repaired candidate index used by the
+//!   removal *policy* ([`crate::budget::policy::RemovalMaintenance`]):
+//!   caches the K smallest-|α| SVs and repairs the cache incrementally
+//!   across pushes and its own removals, so steady-state victim selection
+//!   is O(K + new pushes) instead of a full O(B) rescan. Selection is
+//!   pinned **bit-identical** to the full scan by churn tests (same victim
+//!   under the same lexicographic `(|α|, index)` order, including ties).
 
 use std::time::Instant;
 
@@ -11,25 +23,213 @@ use crate::kernel::Kernel;
 use crate::metrics::{Section, SectionProfiler};
 use crate::model::BudgetModel;
 
-/// Remove the SV with minimal |α|. Returns the incurred weight degradation
-/// `‖Δ‖² = α_min²·k(x, x)` (for the Gaussian kernel `k(x, x) = 1`).
+/// Remove the SV with minimal |α| via a full scan. Returns the incurred
+/// weight degradation `‖Δ‖² = α_min²·k(x, x)` (for the Gaussian kernel
+/// `k(x, x) = 1`).
 pub fn maintain_removal<K: Kernel + Copy>(
     model: &mut BudgetModel<K>,
     prof: &mut SectionProfiler,
 ) -> f64 {
     let t0 = Instant::now();
     let idx = model.argmin_abs_alpha().expect("non-empty model");
+    prof.add(Section::MaintScan, t0.elapsed());
+    let t1 = Instant::now();
     let alpha = model.alpha(idx);
     let self_k = model.kernel().self_eval(model.sv_norm2(idx));
     model.swap_remove(idx);
-    prof.add(Section::MaintB, t0.elapsed());
+    prof.add(Section::MaintApply, t1.elapsed());
     alpha * alpha * self_k
+}
+
+/// Cached candidates kept by [`MinAlphaIndex`] (small: victim selection
+/// scans it linearly, rebuilds are amortized over `CAND_CAP` removals).
+const CAND_CAP: usize = 8;
+
+/// A lazily-repaired index of the smallest-|α| support vectors.
+///
+/// # Contract (what keeps it bit-identical to the full scan)
+///
+/// Between interactions with this index, the model may only be mutated by
+///
+/// 1. **pushes** — appends at indices ≥ the length last seen by
+///    [`MinAlphaIndex::pick`],
+/// 2. **uniform rescales** — the lazy global scale Φ (including folds),
+///    which never reorders `(|α|, index)`,
+/// 3. **removals routed through [`MinAlphaIndex::note_swap_remove`]** —
+///    called with the victim index *before* the actual
+///    `model.swap_remove`, so the index can track the swap permutation.
+///
+/// Any other mutation (e.g. projection's per-SV coefficient updates)
+/// invalidates the cache — call [`MinAlphaIndex::reset`]. `pick` carries a
+/// safety net that resets itself when the model visibly shrank outside
+/// its bookkeeping (a degenerate learning-rate schedule can zero the lazy
+/// scale, clearing the expansion mid-stream), so stale slots are never
+/// indexed.
+///
+/// # Invariant
+///
+/// Whenever `cands` is non-empty, every SV index `j ∉ cands` satisfies
+/// `(|α_j|, j) ≥ (|α_c|, c)` for the lexicographically largest cached
+/// entry `c` — hence for *all* cached entries, hence the global
+/// lexicographic minimum is always cached. Maintained by:
+///
+/// * rebuild fills the cache with the `CAND_CAP` lexicographically
+///   smallest entries of the whole model;
+/// * a new arrival is cached iff it lexicographically precedes the cached
+///   maximum (evicting that maximum at capacity — the evicted entry is ≥
+///   every remaining cached entry, so it may safely become uncached);
+/// * a removal drops the victim from the cache and re-examines the SV
+///   that `swap_remove` relocates into the victim's (smaller) index;
+/// * an empty cache triggers a full rebuild on the next pick.
+#[derive(Debug, Clone, Default)]
+pub struct MinAlphaIndex {
+    /// SV indices guaranteed to contain the global lex-min (see above).
+    cands: Vec<usize>,
+    /// Model length after the last `pick`/`note_swap_remove` sync; indices
+    /// ≥ `known_len` are unexamined new arrivals.
+    known_len: usize,
+}
+
+/// Lexicographic `(|α|, index)` strictly-less — the total order both the
+/// full scan and the index agree on (the full scan's `min_by` keeps the
+/// first minimum, i.e. the lowest index on value ties).
+#[inline]
+fn lex_lt(a_val: f64, a_idx: usize, b_val: f64, b_idx: usize) -> bool {
+    a_val < b_val || (a_val == b_val && a_idx < b_idx)
+}
+
+impl MinAlphaIndex {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Drop all cached state (next pick performs a full rebuild).
+    pub fn reset(&mut self) {
+        self.cands.clear();
+        self.known_len = 0;
+    }
+
+    /// Number of currently cached candidates (diagnostics/tests).
+    pub fn cached(&self) -> usize {
+        self.cands.len()
+    }
+
+    /// Index of the lexicographically largest cached entry within `cands`,
+    /// by current model values.
+    fn cached_max_slot<K: Kernel + Copy>(&self, model: &BudgetModel<K>) -> usize {
+        let mut slot = 0usize;
+        for s in 1..self.cands.len() {
+            let (ci, cs) = (self.cands[slot], self.cands[s]);
+            if lex_lt(model.alpha(ci).abs(), ci, model.alpha(cs).abs(), cs) {
+                slot = s;
+            }
+        }
+        slot
+    }
+
+    /// Offer an index for caching: inserted iff it lexicographically
+    /// precedes the cached maximum (which is evicted at capacity). No-op
+    /// on an empty cache (the next pick rebuilds anyway).
+    fn offer<K: Kernel + Copy>(&mut self, model: &BudgetModel<K>, j: usize) {
+        if self.cands.is_empty() {
+            return;
+        }
+        let max_slot = self.cached_max_slot(model);
+        let mx = self.cands[max_slot];
+        if lex_lt(model.alpha(j).abs(), j, model.alpha(mx).abs(), mx) {
+            if self.cands.len() >= CAND_CAP {
+                self.cands.swap_remove(max_slot);
+            }
+            self.cands.push(j);
+        }
+    }
+
+    /// Full rebuild: cache the `CAND_CAP` lexicographically smallest
+    /// entries of the whole model.
+    fn rebuild<K: Kernel + Copy>(&mut self, model: &BudgetModel<K>) {
+        self.cands.clear();
+        for j in 0..model.num_sv() {
+            if self.cands.len() < CAND_CAP {
+                self.cands.push(j);
+            } else {
+                let max_slot = self.cached_max_slot(model);
+                let mx = self.cands[max_slot];
+                if lex_lt(model.alpha(j).abs(), j, model.alpha(mx).abs(), mx) {
+                    self.cands.swap_remove(max_slot);
+                    self.cands.push(j);
+                }
+            }
+        }
+    }
+
+    /// The current min-|α| victim — identical to
+    /// `model.argmin_abs_alpha()`, amortized O(K + pushes since last
+    /// pick). `None` on an empty model.
+    pub fn pick<K: Kernel + Copy>(&mut self, model: &BudgetModel<K>) -> Option<usize> {
+        let len = model.num_sv();
+        if len == 0 {
+            self.reset();
+            return None;
+        }
+        // Safety net: if the model shrank behind our back (e.g. a
+        // degenerate learning-rate schedule zeroed the lazy scale, which
+        // clears the expansion inside `push`), drop the cache and rebuild
+        // rather than indexing stale slots.
+        if self.known_len > len || self.cands.iter().any(|&c| c >= len) {
+            self.reset();
+        }
+        // Fold unexamined arrivals into the cache.
+        if !self.cands.is_empty() {
+            for j in self.known_len..len {
+                self.offer(model, j);
+            }
+        }
+        self.known_len = len;
+        if self.cands.is_empty() {
+            self.rebuild(model);
+        }
+        let mut best = self.cands[0];
+        for &c in &self.cands[1..] {
+            if lex_lt(model.alpha(c).abs(), c, model.alpha(best).abs(), best) {
+                best = c;
+            }
+        }
+        Some(best)
+    }
+
+    /// Record an upcoming `model.swap_remove(victim)` — MUST be called
+    /// *before* the removal, on the pre-removal model, for every removal
+    /// performed while this index is live.
+    pub fn note_swap_remove<K: Kernel + Copy>(&mut self, model: &BudgetModel<K>, victim: usize) {
+        let last = model.num_sv() - 1;
+        self.cands.retain(|&c| c != victim);
+        if victim != last {
+            // The element at `last` relocates to `victim`'s slot.
+            if let Some(c) = self.cands.iter_mut().find(|c| **c == last) {
+                *c = victim;
+            } else if !self.cands.is_empty() {
+                // Uncached mover: at its new (smaller) index it may now
+                // lexicographically precede the cached maximum — re-offer
+                // it with its post-move index but pre-removal value.
+                let max_slot = self.cached_max_slot(model);
+                let mx = self.cands[max_slot];
+                if lex_lt(model.alpha(last).abs(), victim, model.alpha(mx).abs(), mx) {
+                    if self.cands.len() >= CAND_CAP {
+                        self.cands.swap_remove(max_slot);
+                    }
+                    self.cands.push(victim);
+                }
+            }
+        }
+        self.known_len = self.known_len.min(last);
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::kernel::{Gaussian, Linear};
+    use crate::util::prop::forall;
 
     #[test]
     fn removes_smallest_coefficient() {
@@ -56,5 +256,87 @@ mod tests {
         assert_eq!(m.num_sv(), 1);
         // ‖Δ‖² = α²·⟨x,x⟩ = 0.01 · 25
         assert!((wd - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn index_matches_full_scan_under_heavy_churn() {
+        // The bit-identity pin: arbitrary interleavings of pushes,
+        // rescales and index-routed removals must keep pick() equal to
+        // argmin_abs_alpha() at every step — including duplicate |α|
+        // values, which exercise the lexicographic tie-break.
+        forall("min-alpha index == full scan", 48, 0xA1FA, |rng| {
+            let mut m = BudgetModel::new(2, Gaussian::new(0.7), 8);
+            let mut idx = MinAlphaIndex::new();
+            for step in 0..120 {
+                let op = rng.below(10);
+                if m.num_sv() < 2 || op < 5 {
+                    // Push; every 3rd push duplicates an existing |α| to
+                    // force ties.
+                    let a = if m.num_sv() > 0 && op % 3 == 0 {
+                        m.alpha(rng.below(m.num_sv()))
+                    } else {
+                        (0.05 + rng.uniform()) * if rng.bernoulli(0.5) { 1.0 } else { -1.0 }
+                    };
+                    m.push(&[rng.normal() as f32, rng.normal() as f32], a);
+                } else if op < 7 {
+                    m.rescale(0.25 + rng.uniform());
+                } else {
+                    let want = m.argmin_abs_alpha();
+                    let got = idx.pick(&m);
+                    if want != got {
+                        return (false, format!("step {step}: scan {want:?} vs index {got:?}"));
+                    }
+                    let victim = got.unwrap();
+                    idx.note_swap_remove(&m, victim);
+                    m.swap_remove(victim);
+                }
+                // Every few steps, also verify pick without removing.
+                if step % 7 == 0 && m.num_sv() > 0 {
+                    let want = m.argmin_abs_alpha();
+                    let got = idx.pick(&m);
+                    if want != got {
+                        return (false, format!("probe {step}: scan {want:?} vs index {got:?}"));
+                    }
+                }
+            }
+            (true, String::new())
+        });
+    }
+
+    #[test]
+    fn index_amortizes_rescans() {
+        // After one rebuild, the next CAND_CAP picks are served from the
+        // cache (no rebuild): verify correctness across exactly that many
+        // removals, plus interleaved pushes.
+        let mut m = BudgetModel::new(1, Gaussian::new(1.0), 32);
+        for j in 0..24 {
+            m.push(&[j as f32], 1.0 + j as f64);
+        }
+        let mut idx = MinAlphaIndex::new();
+        for round in 0..20 {
+            let want = m.argmin_abs_alpha().unwrap();
+            let got = idx.pick(&m).unwrap();
+            assert_eq!(want, got, "round {round}");
+            idx.note_swap_remove(&m, got);
+            m.swap_remove(got);
+            if round % 3 == 0 {
+                m.push(&[100.0 + round as f32], 0.01 * (round + 1) as f64);
+            }
+        }
+        assert_eq!(m.num_sv(), 24 - 20 + 7);
+    }
+
+    #[test]
+    fn index_reset_recovers_from_foreign_mutations() {
+        let mut m = BudgetModel::new(1, Gaussian::new(1.0), 8);
+        for j in 0..6 {
+            m.push(&[j as f32], (j + 1) as f64);
+        }
+        let mut idx = MinAlphaIndex::new();
+        assert_eq!(idx.pick(&m), Some(0));
+        // Foreign mutation (projection-style coefficient update).
+        m.add_alpha(0, 100.0);
+        idx.reset();
+        assert_eq!(idx.pick(&m), m.argmin_abs_alpha());
     }
 }

@@ -40,6 +40,13 @@ pub struct ExperimentConfig {
     pub out_dir: String,
     /// Max rows for the SMO reference solver (Table 1).
     pub smo_max_rows: usize,
+    /// Budget-maintenance slack `W` for single training runs (`repro
+    /// train` / `repro serve`): allowed budget overshoot before an
+    /// amortized multi-pair sweep runs (0 = classic per-overflow; the
+    /// paper-regeneration suite always runs classic maintenance).
+    pub maint_slack: f64,
+    /// Pairs shed per maintenance event (0 = auto, `⌈W⌉ + 1`).
+    pub maint_pairs: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -54,6 +61,8 @@ impl Default for ExperimentConfig {
             datasets: Vec::new(),
             out_dir: "results".to_string(),
             smo_max_rows: 2000,
+            maint_slack: 0.0,
+            maint_pairs: 0,
         }
     }
 }
@@ -100,6 +109,12 @@ impl ExperimentConfig {
         if let Some(x) = v.get("smo_max_rows").and_then(Json::as_usize) {
             cfg.smo_max_rows = x;
         }
+        if let Some(x) = v.get("maint_slack").and_then(Json::as_f64) {
+            cfg.maint_slack = x;
+        }
+        if let Some(x) = v.get("maint_pairs").and_then(Json::as_usize) {
+            cfg.maint_pairs = x;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -110,6 +125,12 @@ impl ExperimentConfig {
         anyhow::ensure!(self.runs >= 1, "need at least one run");
         anyhow::ensure!(self.grid >= 2, "grid must be >= 2");
         anyhow::ensure!(self.smo_max_rows >= 2, "smo_max_rows must be at least 2");
+        anyhow::ensure!(
+            self.maint_slack.is_finite()
+                && (0.0..=crate::budget::MaintenanceConfig::MAX_SLACK).contains(&self.maint_slack),
+            "maint_slack must be a finite number in [0, {}]",
+            crate::budget::MaintenanceConfig::MAX_SLACK
+        );
         for name in &self.datasets {
             anyhow::ensure!(
                 crate::data::synthetic::Profile::by_name(name).is_some(),
@@ -155,6 +176,8 @@ impl ExperimentConfig {
             ),
             ("out_dir", Json::str(self.out_dir.clone())),
             ("smo_max_rows", Json::num(self.smo_max_rows as f64)),
+            ("maint_slack", Json::num(self.maint_slack)),
+            ("maint_pairs", Json::num(self.maint_pairs as f64)),
         ])
     }
 }
@@ -185,11 +208,29 @@ mod tests {
 
     #[test]
     fn roundtrips_through_json() {
-        let cfg = ExperimentConfig { scale: 0.25, runs: 3, ..Default::default() };
+        let cfg = ExperimentConfig {
+            scale: 0.25,
+            runs: 3,
+            maint_slack: 8.0,
+            maint_pairs: 3,
+            ..Default::default()
+        };
         let text = cfg.to_json().to_string();
         let back = ExperimentConfig::from_json_text(&text).unwrap();
         assert_eq!(back.scale, 0.25);
         assert_eq!(back.runs, 3);
+        assert_eq!(back.maint_slack, 8.0);
+        assert_eq!(back.maint_pairs, 3);
+    }
+
+    #[test]
+    fn maintenance_knobs_validate() {
+        assert!(ExperimentConfig { maint_slack: -1.0, ..Default::default() }
+            .validate()
+            .is_err());
+        ExperimentConfig { maint_slack: 16.0, maint_pairs: 2, ..Default::default() }
+            .validate()
+            .unwrap();
     }
 
     #[test]

@@ -108,7 +108,9 @@ pub struct SingleRun {
 /// name (susy/skin/...) or a path to a LIBSVM file. `kernel` overrides the
 /// profile's Gaussian default (`gamma_override` only applies to that
 /// default); invalid kernel/strategy combinations fail with a descriptive
-/// error from `SvmConfig::validate`.
+/// error from `SvmConfig::validate`. `maint_slack` / `maint_pairs`
+/// parameterize the budget-maintenance pipeline (`0.0` / `0` = the
+/// classic per-overflow single-pair regime).
 #[allow(clippy::too_many_arguments)]
 pub fn run_single(
     data: &str,
@@ -119,6 +121,8 @@ pub fn run_single(
     passes_override: Option<usize>,
     c_override: Option<f64>,
     gamma_override: Option<f64>,
+    maint_slack: f64,
+    maint_pairs: usize,
 ) -> Result<SingleRun> {
     let (train, test, lambda_default, gamma_default, passes_default, seed, name) =
         if let Some(profile) = Profile::by_name(data) {
@@ -159,6 +163,8 @@ pub fn run_single(
         lambda,
         strategy,
         grid: cfg.grid,
+        maint_slack,
+        maint_pairs,
     };
     let run = RunConfig::new()
         .passes(passes_override.unwrap_or(passes_default))
@@ -223,8 +229,15 @@ pub fn run_serve_replay(
     // The acceptance sweep: serial baseline + the configured shard count.
     let sweep: Vec<usize> =
         if scfg.shards <= 1 { vec![1] } else { vec![1, scfg.shards] };
-    let (report, registry) =
-        serve_bench::run(&ds, &scfg.svm, scfg.seed, &sweep, scfg.publish_every, scfg.threads)?;
+    let (report, registry) = serve_bench::run(
+        &ds,
+        &scfg.svm,
+        scfg.seed,
+        &sweep,
+        scfg.publish_every,
+        scfg.publish_adapt,
+        scfg.threads,
+    )?;
     let bench_path = serve_bench::write(&report, out_dir)?;
 
     if let Some(path) = model_in {
@@ -301,7 +314,8 @@ pub fn run_serve_tcp(
         scfg.shards,
         scfg.publish_every,
         Arc::clone(&registry),
-    )?;
+    )?
+    .with_adaptive_cadence(scfg.publish_adapt);
     let batcher = MicroBatcher::new(
         Arc::clone(&registry),
         BatcherOptions { max_batch_rows: scfg.batch_max_rows, threads: scfg.threads },
@@ -388,6 +402,8 @@ mod tests {
             Some(1),
             None,
             None,
+            0.0,
+            0,
         )
         .unwrap();
         assert!(run.test_accuracy.unwrap() > 0.5);
@@ -413,6 +429,8 @@ mod tests {
             Some(3),
             Some(10.0),
             Some(2.0),
+            0.0,
+            0,
         )
         .unwrap();
         assert!(run.train_accuracy > 0.8, "{}", run.train_accuracy);
@@ -433,6 +451,8 @@ mod tests {
             Some(1),
             None,
             None,
+            0.0,
+            0,
         );
         assert!(err.is_err());
         // ...while removal maintenance trains fine.
@@ -445,6 +465,8 @@ mod tests {
             Some(1),
             None,
             None,
+            0.0,
+            0,
         )
         .unwrap();
         assert_eq!(run.model.kernel_spec(), KernelSpec::linear());

@@ -44,7 +44,7 @@ pub fn run(cfg: &ExperimentConfig) -> Result<Vec<Figure3Bar>> {
                         dataset: prep.profile.name.to_uppercase(),
                         method,
                         section_a_seconds: report.profiler.seconds(Section::MaintA),
-                        section_b_seconds: report.profiler.seconds(Section::MaintB),
+                        section_b_seconds: report.profiler.section_b_seconds(),
                         maintenance_events: report.maintenance_events,
                     }
                 }

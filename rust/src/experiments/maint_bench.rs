@@ -1,0 +1,189 @@
+//! Tracked budget-maintenance bench harness (`repro bench --maintenance`):
+//! the measurable side of the amortized multi-pair maintenance pipeline,
+//! emitted as `BENCH_maintenance.json` so CI can archive the trajectory
+//! alongside `BENCH_kernel.json` / `BENCH_serve.json`.
+//!
+//! One binary training job per cell of
+//!
+//! `strategy ∈ {Lookup-WD (table), GSS-standard (iterative)} ×
+//!  slack ∈ {0, B/16, B/4}`,
+//!
+//! all on the same stream, budget and seed, recording
+//!
+//! * maintenance **events** and events/s (slack `W` batches `⌈W⌉+1` pairs
+//!   per event, so events shrink by that factor — deterministic, gated in
+//!   CI),
+//! * the **maintenance-time share** of the accounted wall time and its
+//!   scan / solver / apply split (the paper's Figure-3 attribution,
+//!   refined — the quantity the amortized sweep is meant to reduce),
+//! * steps/s and final train accuracy (the sweep must not cost quality).
+
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::budget::{MergeSolver, Strategy};
+use crate::data::synthetic::two_moons;
+use crate::kernel::KernelSpec;
+use crate::metrics::Section;
+use crate::solver::{BsgdEstimator, Estimator, RunConfig, SvmConfig};
+use crate::util::json::Json;
+
+/// File name of the emitted report.
+pub const REPORT_FILE: &str = "BENCH_maintenance.json";
+
+/// Budget of the bench workload.
+pub const BUDGET: usize = 64;
+
+/// The lookup-vs-iterative solver pair the sweep compares.
+pub const SOLVERS: [(MergeSolver, &str); 2] =
+    [(MergeSolver::LookupWd, "lookup"), (MergeSolver::GssStandard, "iterative-gss")];
+
+/// Slack points, as fractions of the budget: {0, B/16, B/4}.
+pub const SLACK_DIVISORS: [usize; 3] = [0, 16, 4];
+
+fn slack_points(budget: usize) -> Vec<f64> {
+    SLACK_DIVISORS
+        .iter()
+        .map(|&d| if d == 0 { 0.0 } else { (budget / d) as f64 })
+        .collect()
+}
+
+/// Run the full harness. `quick` shrinks the workload for CI smoke runs.
+/// Returns the JSON report (the caller decides where it goes).
+pub fn run(quick: bool) -> Result<Json> {
+    let n = if quick { 2000 } else { 8000 };
+    let passes = if quick { 2 } else { 4 };
+    let ds = two_moons(n, 0.12, 20180501);
+    let mut cells = Vec::new();
+
+    for &(solver, solver_kind) in &SOLVERS {
+        for &slack in &slack_points(BUDGET) {
+            let config = SvmConfig::new()
+                .kernel(KernelSpec::gaussian(2.0))
+                .budget(BUDGET)
+                .c(10.0, ds.len())
+                .strategy(Strategy::Merge(solver))
+                .grid(400)
+                .maint_slack(slack);
+            let run = RunConfig::new().passes(passes).seed(7).threads(1);
+            let mut est = BsgdEstimator::new(config, run)?;
+            let t0 = Instant::now();
+            est.fit(&ds)?;
+            let wall = t0.elapsed().as_secs_f64();
+            let summary = est.summary().context("fitted estimator")?;
+            let prof = &summary.profiler;
+            let accuracy = {
+                let preds = est.predict_batch(ds.features())?;
+                crate::metrics::accuracy(&preds, ds.labels())
+            };
+            let model = est.model().context("fitted estimator")?;
+            cells.push(Json::object(vec![
+                ("strategy", Json::str(Strategy::Merge(solver).name())),
+                ("solver", Json::str(solver_kind)),
+                ("slack", Json::num(slack)),
+                ("steps", Json::num(summary.steps as f64)),
+                ("maintenance_events", Json::num(summary.maintenance_events as f64)),
+                (
+                    "events_per_s",
+                    Json::num(summary.maintenance_events as f64 / wall.max(1e-12)),
+                ),
+                ("steps_per_s", Json::num(summary.steps as f64 / wall.max(1e-12))),
+                ("maintenance_share", Json::num(summary.maintenance_fraction())),
+                ("scan_seconds", Json::num(prof.seconds(Section::MaintScan))),
+                ("solve_seconds", Json::num(prof.seconds(Section::MaintA))),
+                ("apply_seconds", Json::num(prof.seconds(Section::MaintApply))),
+                ("wall_seconds", Json::num(wall)),
+                ("num_sv", Json::num(model.num_sv() as f64)),
+                ("train_accuracy", Json::num(accuracy)),
+            ]));
+        }
+    }
+
+    Ok(Json::object(vec![
+        ("schema", Json::str("bench_maintenance/v1")),
+        ("rows", Json::num(n as f64)),
+        ("passes", Json::num(passes as f64)),
+        ("budget", Json::num(BUDGET as f64)),
+        ("quick", Json::Bool(quick)),
+        ("cells", Json::array(cells)),
+    ]))
+}
+
+/// Human-readable summary of a report (printed by `repro bench
+/// --maintenance`).
+pub fn render(report: &Json) -> String {
+    let mut out = String::from(
+        "Budget-maintenance amortization (events, time share, scan/solve/apply)\n\n",
+    );
+    if let Some(cells) = report.get("cells").and_then(Json::as_array) {
+        for c in cells {
+            let g = |k: &str| c.get(k).and_then(Json::as_f64).unwrap_or(f64::NAN);
+            let strategy =
+                c.get("strategy").and_then(Json::as_str).unwrap_or("?").to_string();
+            out.push_str(&format!(
+                "  {strategy:<13} slack {:>4.0}  events {:>7.0} ({:>9.0}/s)  \
+                 maint share {:>5.1}%  scan/solve/apply {:.3}/{:.3}/{:.3}s  acc {:.3}\n",
+                g("slack"),
+                g("maintenance_events"),
+                g("events_per_s"),
+                100.0 * g("maintenance_share"),
+                g("scan_seconds"),
+                g("solve_seconds"),
+                g("apply_seconds"),
+                g("train_accuracy"),
+            ));
+        }
+    }
+    out
+}
+
+/// Write the report as `BENCH_maintenance.json` under `out_dir` (created
+/// if missing); returns the written path.
+pub fn write(report: &Json, out_dir: &str) -> Result<String> {
+    std::fs::create_dir_all(out_dir)
+        .with_context(|| format!("cannot create output directory {out_dir}"))?;
+    let path = format!("{}/{}", out_dir.trim_end_matches('/'), REPORT_FILE);
+    std::fs::write(&path, format!("{report}\n"))
+        .with_context(|| format!("cannot write {path}"))?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_harness_produces_well_formed_report() {
+        let report = run(true).expect("maintenance bench runs");
+        assert_eq!(
+            report.get("schema").and_then(Json::as_str),
+            Some("bench_maintenance/v1")
+        );
+        let cells = report.get("cells").and_then(Json::as_array).expect("cells");
+        assert_eq!(cells.len(), SOLVERS.len() * SLACK_DIVISORS.len());
+        for cell in cells {
+            let share = cell.get("maintenance_share").and_then(Json::as_f64).unwrap();
+            assert!((0.0..=1.0).contains(&share), "share {share}");
+            assert!(cell.get("maintenance_events").and_then(Json::as_f64).unwrap() > 0.0);
+            assert!(cell.get("num_sv").and_then(Json::as_usize).unwrap() <= BUDGET);
+            assert!(cell.get("train_accuracy").and_then(Json::as_f64).unwrap() > 0.8);
+        }
+        // The amortization invariant is deterministic: within a solver,
+        // slack > 0 must run strictly fewer maintenance events.
+        for &(_, kind) in &SOLVERS {
+            let events: Vec<f64> = cells
+                .iter()
+                .filter(|c| c.get("solver").and_then(Json::as_str) == Some(kind))
+                .map(|c| c.get("maintenance_events").and_then(Json::as_f64).unwrap())
+                .collect();
+            assert_eq!(events.len(), SLACK_DIVISORS.len());
+            assert!(
+                events[1] < events[0] && events[2] < events[1],
+                "{kind}: events must fall with slack, got {events:?}"
+            );
+        }
+        // Round-trips through the in-repo JSON parser.
+        assert_eq!(Json::parse(&report.to_string()).unwrap(), report);
+    }
+}

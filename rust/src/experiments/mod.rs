@@ -10,13 +10,15 @@
 //!
 //! [`runner`] executes training jobs across worker threads; [`report`]
 //! formats markdown/CSV; [`kernel_bench`] is the tracked perf harness
-//! behind `repro bench` (emits `BENCH_kernel.json`); [`serve_bench`] is
-//! its serving sibling behind `repro serve --replay` (emits
-//! `BENCH_serve.json`).
+//! behind `repro bench` (emits `BENCH_kernel.json`); [`maint_bench`] its
+//! budget-maintenance sibling behind `repro bench --maintenance` (emits
+//! `BENCH_maintenance.json`); [`serve_bench`] the serving one behind
+//! `repro serve --replay` (emits `BENCH_serve.json`).
 
 pub mod figure2;
 pub mod figure3;
 pub mod kernel_bench;
+pub mod maint_bench;
 pub mod report;
 pub mod runner;
 pub mod serve_bench;

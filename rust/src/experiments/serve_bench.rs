@@ -53,6 +53,7 @@ pub fn run(
     seed: u64,
     shard_counts: &[usize],
     publish_every: usize,
+    publish_adapt: bool,
     threads: usize,
 ) -> Result<(Json, Arc<ModelRegistry>)> {
     ensure!(!stream.is_empty(), "bench stream must not be empty");
@@ -60,8 +61,9 @@ pub fn run(
     let mut arms: Vec<Arm> = Vec::new();
     let mut last_registry = None;
     for &shards in shard_counts {
-        let (arm, registry) = run_arm(stream, svm, seed, shards, publish_every, threads)
-            .with_context(|| format!("bench arm with {shards} shard(s) failed"))?;
+        let (arm, registry) =
+            run_arm(stream, svm, seed, shards, publish_every, publish_adapt, threads)
+                .with_context(|| format!("bench arm with {shards} shard(s) failed"))?;
         arms.push(arm);
         last_registry = Some(registry);
     }
@@ -92,6 +94,7 @@ pub fn run(
         ("rows", Json::num(stream.len() as f64)),
         ("dim", Json::num(stream.dim() as f64)),
         ("publish_every", Json::num(publish_every as f64)),
+        ("publish_adapt", Json::Bool(publish_adapt)),
         ("ingest_chunk", Json::num(INGEST_CHUNK as f64)),
         ("predict_clients", Json::num(PREDICT_CLIENTS as f64)),
         ("shards", Json::array(cells)),
@@ -99,12 +102,14 @@ pub fn run(
     Ok((report, last_registry.expect("at least one arm ran")))
 }
 
+#[allow(clippy::too_many_arguments)]
 fn run_arm(
     stream: &Dataset,
     svm: &SvmConfig,
     seed: u64,
     shards: usize,
     publish_every: usize,
+    publish_adapt: bool,
     threads: usize,
 ) -> Result<(Arm, Arc<ModelRegistry>)> {
     // ---- phase 1: streaming ingest ----
@@ -115,7 +120,8 @@ fn run_arm(
         shards,
         publish_every,
         Arc::clone(&registry),
-    )?;
+    )?
+    .with_adaptive_cadence(publish_adapt);
     let t0 = Instant::now();
     let mut start = 0usize;
     while start < stream.len() {
@@ -175,6 +181,7 @@ fn run_arm(
         ("publishes", Json::num(report.publishes as f64)),
         ("publish_stall_mean_ms", Json::num(report.stall_mean_seconds() * 1e3)),
         ("publish_stall_max_ms", Json::num(report.stall_max_seconds() * 1e3)),
+        ("publish_every_final", Json::num(report.final_publish_every as f64)),
         ("published_version", Json::num(report.last_version as f64)),
         ("predict_p50_us", Json::num(p50_us)),
         ("predict_p99_us", Json::num(p99_us)),
@@ -212,14 +219,16 @@ mod tests {
             .kernel(KernelSpec::gaussian(2.0))
             .budget(25)
             .c(10.0, ds.len());
-        let (report, registry) = run(&ds, &svm, 3, &[1, 2], 256, 2).unwrap();
+        let (report, registry) = run(&ds, &svm, 3, &[1, 2], 256, false, 2).unwrap();
         assert_eq!(report.get("schema").and_then(Json::as_str), Some("bench_serve/v1"));
         assert_eq!(report.get("rows").and_then(Json::as_usize), Some(600));
+        assert_eq!(report.get("publish_adapt"), Some(&Json::Bool(false)));
         let cells = report.get("shards").and_then(Json::as_array).expect("shards array");
         assert_eq!(cells.len(), 2);
         for cell in cells {
             assert!(cell.get("ingest_rows_per_s").and_then(Json::as_f64).unwrap() > 0.0);
             assert!(cell.get("publishes").and_then(Json::as_f64).unwrap() >= 1.0);
+            assert_eq!(cell.get("publish_every_final").and_then(Json::as_usize), Some(256));
             let p50 = cell.get("predict_p50_us").and_then(Json::as_f64).unwrap();
             let p99 = cell.get("predict_p99_us").and_then(Json::as_f64).unwrap();
             assert!(p50 > 0.0 && p99 >= p50, "p50={p50} p99={p99}");

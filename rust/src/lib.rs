@@ -92,7 +92,7 @@ pub mod util;
 /// runtime-polymorphic [`model::AnyModel`], and the serving subsystem's
 /// registry + configuration ([`serve`]).
 pub mod prelude {
-    pub use crate::budget::{MergeSolver, Strategy};
+    pub use crate::budget::{MaintenanceConfig, MaintenancePolicy, MergeSolver, Strategy};
     pub use crate::kernel::KernelSpec;
     pub use crate::model::AnyModel;
     pub use crate::serve::{ModelRegistry, ServeConfig};

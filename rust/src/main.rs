@@ -21,7 +21,7 @@ const SUBCOMMANDS: &[(&str, &str)] = &[
     ("table3", "training-time improvement, merging frequency, agreement"),
     ("figure2", "h(m,k) and WD(m,k) surfaces (CSV + ASCII)"),
     ("figure3", "merging-time Section A/B breakdown"),
-    ("bench", "kernel-row + parallel-fit throughput; writes BENCH_kernel.json"),
+    ("bench", "perf harnesses: kernel-row/fit (BENCH_kernel.json) or --maintenance"),
     ("serve", "online serving + streaming ingest: --port <p> | --replay <file.libsvm>"),
     ("train", "single training run: repro train <profile|file.libsvm>"),
     ("eval", "evaluate a saved model: repro eval <model.bsvm> <file.libsvm>"),
@@ -56,8 +56,24 @@ fn opt_specs() -> Vec<OptSpec> {
         OptSpec { name: "passes", takes_value: true, help: "train: passes override" },
         OptSpec { name: "c", takes_value: true, help: "train: C override" },
         OptSpec { name: "gamma", takes_value: true, help: "train: gaussian gamma override" },
+        OptSpec {
+            name: "maint-slack",
+            takes_value: true,
+            help: "train/serve: allowed budget overshoot W before an amortized \
+                   multi-pair maintenance sweep runs (default 0 = classic per-overflow)",
+        },
+        OptSpec {
+            name: "maint-pairs",
+            takes_value: true,
+            help: "train/serve: pairs shed per maintenance event (default 0 = auto, ceil(W)+1)",
+        },
         OptSpec { name: "json", takes_value: false, help: "train: machine-readable output" },
         OptSpec { name: "quick", takes_value: false, help: "bench: smoke mode (short samples)" },
+        OptSpec {
+            name: "maintenance",
+            takes_value: false,
+            help: "bench: budget-maintenance amortization harness (BENCH_maintenance.json)",
+        },
         OptSpec { name: "model-out", takes_value: true, help: "train: save the model here" },
         OptSpec { name: "table-out", takes_value: true, help: "precompute: output path" },
         OptSpec { name: "artifacts", takes_value: true, help: "runtime-check: artifacts dir" },
@@ -75,6 +91,12 @@ fn opt_specs() -> Vec<OptSpec> {
             name: "publish-every",
             takes_value: true,
             help: "serve: rows between snapshot/publish events (default 1024)",
+        },
+        OptSpec {
+            name: "publish-adapt",
+            takes_value: false,
+            help: "serve: stall-aware adaptive publish cadence (scale publish-every \
+                   up to 16x under expensive merges, back down when idle)",
         },
         OptSpec {
             name: "replay",
@@ -175,10 +197,17 @@ fn main() -> Result<()> {
             println!("{}", experiments::figure3::render(&bars, &cfg)?);
         }
         "bench" => {
-            let report = experiments::kernel_bench::run(args.flag("quick"), cfg.threads)?;
-            println!("{report}");
-            let path = experiments::kernel_bench::write(&report, &cfg.out_dir)?;
-            eprintln!("bench report written to {path}");
+            if args.flag("maintenance") {
+                let report = experiments::maint_bench::run(args.flag("quick"))?;
+                print!("{}", experiments::maint_bench::render(&report));
+                let path = experiments::maint_bench::write(&report, &cfg.out_dir)?;
+                eprintln!("maintenance bench report written to {path}");
+            } else {
+                let report = experiments::kernel_bench::run(args.flag("quick"), cfg.threads)?;
+                println!("{report}");
+                let path = experiments::kernel_bench::write(&report, &cfg.out_dir)?;
+                eprintln!("bench report written to {path}");
+            }
         }
         "serve" => {
             let mut scfg = budgetsvm::serve::ServeConfig::new();
@@ -191,12 +220,16 @@ fn main() -> Result<()> {
             if let Some(pe) = args.get_usize("publish-every")? {
                 scfg.publish_every = pe;
             }
+            scfg.publish_adapt = args.flag("publish-adapt");
             scfg.threads = cfg.threads;
             scfg.seed = cfg.seed;
             scfg.svm.grid = cfg.grid;
             if let Some(b) = args.get_usize("budget")? {
                 scfg.svm.budget = b;
             }
+            // CLI flag wins; a JSON --config file can also set these.
+            scfg.svm.maint_slack = args.get_f64("maint-slack")?.unwrap_or(cfg.maint_slack);
+            scfg.svm.maint_pairs = args.get_usize("maint-pairs")?.unwrap_or(cfg.maint_pairs);
             let kernel_opt = args.get("kernel").map(KernelSpec::parse).transpose()?;
             let kernel = match (kernel_opt, args.get_f64("gamma")?) {
                 (Some(k), _) => Some(k),
@@ -274,6 +307,8 @@ fn main() -> Result<()> {
                 args.get_usize("passes")?,
                 args.get_f64("c")?,
                 args.get_f64("gamma")?,
+                args.get_f64("maint-slack")?.unwrap_or(cfg.maint_slack),
+                args.get_usize("maint-pairs")?.unwrap_or(cfg.maint_pairs),
             )?;
             if let Some(path) = args.get("model-out") {
                 budgetsvm::model::io::save_any(&run.model, path)?;
@@ -414,6 +449,55 @@ mod tests {
                 .unwrap_or_else(|| panic!("serve option --{opt} is not declared"));
             assert!(spec.takes_value, "--{opt} must take a value");
         }
+    }
+
+    #[test]
+    fn maintenance_surface_is_declared() {
+        let specs = opt_specs();
+        for opt in ["maint-slack", "maint-pairs"] {
+            let spec = specs
+                .iter()
+                .find(|s| s.name == opt)
+                .unwrap_or_else(|| panic!("maintenance option --{opt} is not declared"));
+            assert!(spec.takes_value, "--{opt} must take a value");
+        }
+        for flag in ["maintenance", "publish-adapt"] {
+            let spec = specs
+                .iter()
+                .find(|s| s.name == flag)
+                .unwrap_or_else(|| panic!("flag --{flag} is not declared"));
+            assert!(!spec.takes_value, "--{flag} must be a flag");
+        }
+    }
+
+    #[test]
+    fn maintenance_options_parse_through_the_cli() {
+        let argv: Vec<String> = [
+            "train",
+            "ijcnn",
+            "--maint-slack",
+            "16",
+            "--maint-pairs",
+            "4",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let args = Args::parse(&argv, &opt_specs()).unwrap();
+        assert_eq!(args.get_f64("maint-slack").unwrap(), Some(16.0));
+        assert_eq!(args.get_usize("maint-pairs").unwrap(), Some(4));
+
+        let argv: Vec<String> =
+            ["bench", "--maintenance", "--quick"].iter().map(|s| s.to_string()).collect();
+        let args = Args::parse(&argv, &opt_specs()).unwrap();
+        assert!(args.flag("maintenance") && args.flag("quick"));
+
+        let argv: Vec<String> = ["serve", "--publish-adapt", "--replay", "s.libsvm"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let args = Args::parse(&argv, &opt_specs()).unwrap();
+        assert!(args.flag("publish-adapt"));
     }
 
     #[test]

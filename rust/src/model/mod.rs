@@ -286,6 +286,36 @@ impl<K: Kernel + Copy> BudgetModel<K> {
         count
     }
 
+    /// κ rows of several *stored* SVs against every SV, in ONE pass over
+    /// the blocked tile store: each tile's feature data is visited once
+    /// and dotted against all `queries` before moving on (a tall-skinny
+    /// matrix product rather than `queries.len()` independent row scans —
+    /// the amortized candidate scan of multi-pair budget maintenance).
+    /// Row `q` of `out` (stride `num_sv`) is bit-identical to
+    /// `kernel_row(sv(queries[q]), ...)`: every entry runs the exact same
+    /// blocked arithmetic, only the traversal order differs.
+    pub fn kernel_rows_for_svs(&self, queries: &[usize], out: &mut [f64]) {
+        let count = self.store.len();
+        debug_assert!(out.len() >= queries.len() * count);
+        let mut dots = [0.0f32; TILE];
+        let mut kvals = [0.0f64; TILE];
+        for t in 0..count.div_ceil(TILE) {
+            let base = t * TILE;
+            let lanes = TILE.min(count - base);
+            for (q, &sv) in queries.iter().enumerate() {
+                self.store.tile_dots(t, self.store.row(sv), &mut dots);
+                self.kernel.eval_block(
+                    self.store.norm2(sv),
+                    &dots,
+                    self.store.tile_norms(t),
+                    &mut kvals,
+                );
+                out[q * count + base..q * count + base + lanes]
+                    .copy_from_slice(&kvals[..lanes]);
+            }
+        }
+    }
+
     /// Scalar reference for [`BudgetModel::kernel_row`] (one `Kernel::eval`
     /// per SV); bench baseline and conformance oracle.
     pub fn kernel_row_scalar(&self, x: &[f32], x_norm2: f32, out: &mut [f64]) -> usize {
@@ -680,6 +710,30 @@ mod tests {
             // Entries past the prefix are untouched.
             for j in expect..19 {
                 assert!(prefix[j].is_nan(), "upto={upto} j={j} was written");
+            }
+        }
+    }
+
+    #[test]
+    fn kernel_rows_for_svs_bit_match_single_rows() {
+        let mut rng = Rng::new(53);
+        let mut m = BudgetModel::new(4, Gaussian::new(0.3), 21);
+        for _ in 0..21 {
+            let row: Vec<f32> = (0..4).map(|_| rng.normal() as f32).collect();
+            m.push(&row, rng.normal());
+        }
+        let queries = [0usize, 7, 8, 20, 3];
+        let mut multi = vec![0.0f64; queries.len() * 21];
+        m.kernel_rows_for_svs(&queries, &mut multi);
+        let mut single = vec![0.0f64; 21];
+        for (q, &sv) in queries.iter().enumerate() {
+            m.kernel_row(m.sv(sv), m.sv_norm2(sv), &mut single);
+            for j in 0..21 {
+                assert_eq!(
+                    multi[q * 21 + j].to_bits(),
+                    single[j].to_bits(),
+                    "query {q} (sv {sv}) col {j}"
+                );
             }
         }
     }

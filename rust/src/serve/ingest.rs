@@ -45,6 +45,11 @@ pub struct IngestReport {
     pub publish_stalls: Vec<f64>,
     /// Version of the last published snapshot.
     pub last_version: u64,
+    /// `publish_every` in effect after the last publish (equals the
+    /// configured value unless adaptive cadence moved it).
+    pub final_publish_every: usize,
+    /// The cadence in effect at each publish (one entry per publish).
+    pub cadence_history: Vec<usize>,
 }
 
 impl IngestReport {
@@ -69,12 +74,31 @@ pub struct ShardedIngest {
     registry: Arc<ModelRegistry>,
     config: SvmConfig,
     publish_every: usize,
+    /// The configured (non-adapted) cadence — the floor the adaptive
+    /// controller relaxes back to when stalls are cheap.
+    base_publish_every: usize,
+    /// Stall-aware cadence adaptation (off by default: adapted cadences
+    /// depend on wall-clock measurements, so runs stop being bit-identical
+    /// run-to-run; publication content stays correct either way).
+    adapt: bool,
+    cadence_history: Vec<usize>,
     dim: usize,
     rows_total: u64,
     rows_since_publish: usize,
     publish_stalls: Vec<f64>,
     last_version: u64,
 }
+
+/// Publish stall (seconds) above which adaptive cadence doubles
+/// `publish_every`; a recent mean below a quarter of this relaxes the
+/// cadence back toward the configured base.
+pub const ADAPT_STALL_THRESHOLD_SECONDS: f64 = 0.020;
+
+/// Cap on how far adaptive cadence may stretch `publish_every` (×base).
+const ADAPT_MAX_FACTOR: usize = 16;
+
+/// Publishes averaged by the adaptive controller.
+const ADAPT_WINDOW: usize = 4;
 
 impl ShardedIngest {
     /// Build the pipeline: `shards` workers, each owning a
@@ -112,12 +136,31 @@ impl ShardedIngest {
             registry,
             config,
             publish_every,
+            base_publish_every: publish_every,
+            adapt: false,
+            cadence_history: Vec::new(),
             dim: 0,
             rows_total: 0,
             rows_since_publish: 0,
             publish_stalls: Vec::new(),
             last_version: 0,
         })
+    }
+
+    /// Enable/disable stall-aware adaptive publish cadence: when the mean
+    /// of the last few publish stalls exceeds
+    /// [`ADAPT_STALL_THRESHOLD_SECONDS`], `publish_every` doubles (capped
+    /// at 16× the configured base) so the merge cost amortizes over more
+    /// rows; when stalls drop well below the threshold it halves back
+    /// toward the base, keeping served models fresh on an idle stream.
+    pub fn with_adaptive_cadence(mut self, enabled: bool) -> Self {
+        self.adapt = enabled;
+        self
+    }
+
+    /// The cadence currently in effect.
+    pub fn current_publish_every(&self) -> usize {
+        self.publish_every
     }
 
     /// Number of shard workers.
@@ -194,14 +237,33 @@ impl ShardedIngest {
             models,
             &weights,
             self.config.budget,
-            self.config.strategy,
-            self.config.grid,
+            &self.config.maintenance(),
         )?;
         let version = self.registry.publish(merged);
         self.publish_stalls.push(t0.elapsed().as_secs_f64());
+        self.cadence_history.push(self.publish_every);
         self.rows_since_publish = 0;
         self.last_version = version;
+        if self.adapt {
+            self.adapt_cadence();
+        }
         Ok(version)
+    }
+
+    /// Stall-aware cadence controller (runs after each publish when
+    /// enabled): see [`ShardedIngest::with_adaptive_cadence`].
+    fn adapt_cadence(&mut self) {
+        let n = self.publish_stalls.len();
+        let recent = &self.publish_stalls[n.saturating_sub(ADAPT_WINDOW)..];
+        let mean = recent.iter().sum::<f64>() / recent.len() as f64;
+        if mean > ADAPT_STALL_THRESHOLD_SECONDS {
+            self.publish_every =
+                (self.publish_every * 2).min(self.base_publish_every * ADAPT_MAX_FACTOR);
+        } else if mean < ADAPT_STALL_THRESHOLD_SECONDS / 4.0
+            && self.publish_every > self.base_publish_every
+        {
+            self.publish_every = (self.publish_every / 2).max(self.base_publish_every);
+        }
     }
 
     /// Drain everything, publish a final snapshot if rows arrived since
@@ -218,6 +280,8 @@ impl ShardedIngest {
             publishes: self.publish_stalls.len() as u64,
             publish_stalls: self.publish_stalls,
             last_version: self.last_version,
+            final_publish_every: self.publish_every,
+            cadence_history: self.cadence_history,
         })
     }
 }
@@ -331,6 +395,49 @@ mod tests {
         assert!(registry.current().unwrap().model().num_sv() <= 30);
         assert_eq!(report.publish_stalls.len() as u64, report.publishes);
         assert!(report.stall_max_seconds() >= report.stall_mean_seconds());
+    }
+
+    #[test]
+    fn cadence_history_is_recorded_and_static_without_adapt() {
+        let ds = two_moons(400, 0.12, 8);
+        let (_registry, report) = run_pipeline(&ds, 2, 100, 64);
+        assert_eq!(report.cadence_history.len() as u64, report.publishes);
+        assert!(report.cadence_history.iter().all(|&c| c == 100));
+        assert_eq!(report.final_publish_every, 100);
+    }
+
+    #[test]
+    fn adaptive_cadence_moves_within_bounds() {
+        // Wall-clock driven, so only the bounds are asserted: the cadence
+        // never leaves [base, 16·base] and every publish records the
+        // cadence in effect.
+        let ds = two_moons(600, 0.12, 13);
+        let registry = Arc::new(ModelRegistry::new());
+        let base = 50;
+        let mut ing = ShardedIngest::new(
+            config_for(ds.len(), 30),
+            RunConfig::new().seed(11),
+            2,
+            base,
+            Arc::clone(&registry),
+        )
+        .unwrap()
+        .with_adaptive_cadence(true);
+        let mut start = 0;
+        while start < ds.len() {
+            let idx: Vec<usize> = (start..(start + 64).min(ds.len())).collect();
+            ing.ingest(&ds.subset(&idx, "chunk")).unwrap();
+            assert!(ing.current_publish_every() >= base);
+            assert!(ing.current_publish_every() <= base * 16);
+            start += 64;
+        }
+        let report = ing.finish().unwrap();
+        assert_eq!(report.cadence_history.len() as u64, report.publishes);
+        for &c in &report.cadence_history {
+            assert!((base..=base * 16).contains(&c), "cadence {c}");
+        }
+        // The published model is still a valid budgeted model.
+        assert!(registry.current().unwrap().model().num_sv() <= 30);
     }
 
     #[test]

@@ -14,27 +14,26 @@
 
 use anyhow::{ensure, Result};
 
-use crate::budget::projection::maintain_projection;
-use crate::budget::removal::maintain_removal;
-use crate::budget::{Maintainer, Strategy};
-use crate::kernel::Kernel;
+use crate::budget::{gaussian_policy, generic_policy, MaintenanceConfig};
 use crate::metrics::SectionProfiler;
-use crate::model::{AnyModel, BudgetModel};
+use crate::model::AnyModel;
 
 /// Merge shard models into one budget-respecting model.
 ///
 /// `weights` are per-shard publish weights (normalized internally;
 /// typically each shard's cumulative SGD step count). All shards must
 /// share one kernel spec and dimension. `budget = 0` skips enforcement
-/// (unbudgeted). The returned model has its lazy scale folded by the
-/// construction (coefficients are pushed in effective units into a fresh
-/// model).
+/// (unbudgeted). Budget enforcement dispatches through the same
+/// [`crate::budget::MaintenancePolicy`] pipeline training uses
+/// (`maint.effective_pairs()` pairs per sweep — a shard merge holding up
+/// to `S·B` SVs benefits directly from a multi-pair quota). The returned
+/// model has its lazy scale folded by the construction (coefficients are
+/// pushed in effective units into a fresh model).
 pub fn merge_shard_models(
     shards: Vec<AnyModel>,
     weights: &[f64],
     budget: usize,
-    strategy: Strategy,
-    grid: usize,
+    maint: &MaintenanceConfig,
 ) -> Result<AnyModel> {
     ensure!(!shards.is_empty(), "cannot merge zero shard models");
     ensure!(shards.len() == weights.len(), "one weight per shard model required");
@@ -80,43 +79,31 @@ pub fn merge_shard_models(
         let mut prof = SectionProfiler::new();
         match &mut merged {
             AnyModel::Gaussian(g) => {
-                let mut maintainer = Maintainer::new(strategy, grid);
-                while g.num_sv() > budget {
-                    maintainer.maintain(g, &mut prof);
-                }
+                let mut policy = gaussian_policy(maint);
+                policy.enforce(g, budget, &mut prof);
             }
-            AnyModel::Linear(m) => shrink_generic(m, strategy, budget, &mut prof),
-            AnyModel::Polynomial(m) => shrink_generic(m, strategy, budget, &mut prof),
+            AnyModel::Linear(m) => {
+                let mut policy = generic_policy(maint)?;
+                policy.enforce(m, budget, &mut prof);
+            }
+            AnyModel::Polynomial(m) => {
+                let mut policy = generic_policy(maint)?;
+                policy.enforce(m, budget, &mut prof);
+            }
         }
     }
     Ok(merged)
 }
 
-/// Budget enforcement for non-Gaussian merged models: projection where
-/// requested (falling back to removal on a degenerate Gram matrix),
-/// removal otherwise. Merge strategies cannot reach here — the config
-/// layer rejects them for non-Gaussian kernels.
-fn shrink_generic<K: Kernel + Copy>(
-    model: &mut BudgetModel<K>,
-    strategy: Strategy,
-    budget: usize,
-    prof: &mut SectionProfiler,
-) {
-    while model.num_sv() > budget {
-        match strategy {
-            Strategy::Projection => {
-                maintain_projection(model, prof).unwrap_or_else(|_| maintain_removal(model, prof))
-            }
-            _ => maintain_removal(model, prof),
-        };
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::budget::MergeSolver;
+    use crate::budget::{MergeSolver, Strategy};
     use crate::kernel::KernelSpec;
+
+    fn maint(strategy: Strategy) -> MaintenanceConfig {
+        MaintenanceConfig::new(strategy, 50)
+    }
 
     fn shard(spec: KernelSpec, points: &[([f32; 2], f64)], bias: f64) -> AnyModel {
         let mut m = AnyModel::new(2, spec, points.len().max(1)).unwrap();
@@ -135,7 +122,7 @@ mod tests {
         // Weights 3:1 → w_a = 0.75, w_b = 0.25; budget large enough that
         // no shrink happens.
         let merged =
-            merge_shard_models(vec![a.clone(), b.clone()], &[3.0, 1.0], 10, Strategy::Removal, 50)
+            merge_shard_models(vec![a.clone(), b.clone()], &[3.0, 1.0], 10, &maint(Strategy::Removal))
                 .unwrap();
         assert_eq!(merged.num_sv(), 2);
         for probe in [[0.2f32, -0.3], [1.5, 0.5]] {
@@ -153,7 +140,7 @@ mod tests {
         let spec = KernelSpec::gaussian(0.5);
         let a = shard(spec, &[([0.3, -0.6], 0.8), ([1.0, 0.0], -0.4)], 0.125);
         let merged =
-            merge_shard_models(vec![a.clone()], &[17.0], 10, Strategy::Removal, 50).unwrap();
+            merge_shard_models(vec![a.clone()], &[17.0], 10, &maint(Strategy::Removal)).unwrap();
         let probe = [0.7f32, 0.1];
         assert_eq!(merged.decision(&probe).to_bits(), a.decision(&probe).to_bits());
     }
@@ -173,12 +160,31 @@ mod tests {
                 vec![mk(0.0), mk(1.0), mk(-1.0)],
                 &[1.0, 1.0, 1.0],
                 5,
-                strategy,
-                50,
+                &maint(strategy),
             )
             .unwrap();
             assert!(merged.num_sv() <= 5, "{strategy:?}: {}", merged.num_sv());
         }
+    }
+
+    #[test]
+    fn multi_pair_quota_enforces_the_same_budget() {
+        // A merged pool of 18 SVs shrunk to 5 through multi-pair sweeps
+        // must land exactly on the budget, like the single-pair path.
+        let spec = KernelSpec::gaussian(0.5);
+        let mk = |seed: f32| {
+            let pts: Vec<([f32; 2], f64)> =
+                (0..6).map(|j| ([seed + j as f32 * 0.3, seed - j as f32 * 0.2], 0.4)).collect();
+            shard(spec, &pts, 0.0)
+        };
+        let cfg = MaintenanceConfig {
+            pairs: 4,
+            ..maint(Strategy::Merge(MergeSolver::LookupWd))
+        };
+        let merged =
+            merge_shard_models(vec![mk(0.0), mk(1.0), mk(-1.0)], &[1.0, 1.0, 1.0], 5, &cfg)
+                .unwrap();
+        assert_eq!(merged.num_sv(), 5);
     }
 
     #[test]
@@ -188,7 +194,7 @@ mod tests {
             let b = shard(spec, &[([0.0, 1.0], -1.0), ([0.25, 0.75], 0.1)], 0.0);
             for strategy in [Strategy::Removal, Strategy::Projection] {
                 let merged =
-                    merge_shard_models(vec![a.clone(), b.clone()], &[1.0, 1.0], 3, strategy, 50)
+                    merge_shard_models(vec![a.clone(), b.clone()], &[1.0, 1.0], 3, &maint(strategy))
                         .unwrap();
                 assert!(merged.num_sv() <= 3, "{}", spec.describe());
                 assert_eq!(merged.kernel_spec(), spec);
@@ -199,13 +205,12 @@ mod tests {
     #[test]
     fn merge_rejects_bad_inputs() {
         let spec = KernelSpec::gaussian(0.5);
+        let m = maint(Strategy::Removal);
         let a = shard(spec, &[([0.0, 0.0], 1.0)], 0.0);
-        assert!(merge_shard_models(Vec::new(), &[], 5, Strategy::Removal, 50).is_err());
-        assert!(merge_shard_models(vec![a.clone()], &[], 5, Strategy::Removal, 50).is_err());
-        assert!(merge_shard_models(vec![a.clone()], &[0.0], 5, Strategy::Removal, 50).is_err());
+        assert!(merge_shard_models(Vec::new(), &[], 5, &m).is_err());
+        assert!(merge_shard_models(vec![a.clone()], &[], 5, &m).is_err());
+        assert!(merge_shard_models(vec![a.clone()], &[0.0], 5, &m).is_err());
         let other = shard(KernelSpec::linear(), &[([0.0, 0.0], 1.0)], 0.0);
-        assert!(
-            merge_shard_models(vec![a, other], &[1.0, 1.0], 5, Strategy::Removal, 50).is_err()
-        );
+        assert!(merge_shard_models(vec![a, other], &[1.0, 1.0], 5, &m).is_err());
     }
 }

@@ -110,6 +110,12 @@ pub struct ServeConfig {
     pub shards: usize,
     /// Rows between automatic snapshot/publish events.
     pub publish_every: usize,
+    /// Stall-aware adaptive publish cadence: scale `publish_every` up
+    /// (≤ 16×) while publish stalls are expensive, back down when idle.
+    /// Off by default — adapted cadences follow the wall clock, so
+    /// run-to-run bit-identity of *when* snapshots publish is traded for
+    /// throughput (published model contents stay correct either way).
+    pub publish_adapt: bool,
     /// Micro-batcher coalescing cap (rows per prediction batch).
     pub batch_max_rows: usize,
     /// Ingest-front buffering: `train` rows accumulated before they are
@@ -129,6 +135,7 @@ impl Default for ServeConfig {
             port: 7878,
             shards: 4,
             publish_every: 1024,
+            publish_adapt: false,
             batch_max_rows: 64,
             ingest_chunk: 64,
             threads: 0,

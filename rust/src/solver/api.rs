@@ -22,7 +22,7 @@
 
 use anyhow::{ensure, Context, Result};
 
-use crate::budget::{MergeSolver, Strategy};
+use crate::budget::{MaintenanceConfig, MergeSolver, Strategy};
 use crate::kernel::KernelSpec;
 use crate::metrics::{AgreementStats, SectionProfiler};
 
@@ -47,6 +47,17 @@ pub struct SvmConfig {
     /// Lookup-table grid resolution for the lookup merge solvers
     /// (paper: 400).
     pub grid: usize,
+    /// Maintenance slack `W`: the model may overshoot the budget by up to
+    /// `W` SVs before a maintenance event triggers; the event then sheds
+    /// the whole batch in one amortized sweep. `0` (the default) is the
+    /// classic maintain-every-overflow regime — bit-identical to training
+    /// without the slack machinery. Models returned from `fit` /
+    /// `partial_fit` always respect the budget (end-of-ingest
+    /// enforcement), whatever the slack.
+    pub maint_slack: f64,
+    /// Pairs shed per maintenance event; `0` = auto (`⌈W⌉ + 1`, exactly
+    /// the overshoot a trigger guarantees).
+    pub maint_pairs: usize,
 }
 
 impl Default for SvmConfig {
@@ -57,6 +68,8 @@ impl Default for SvmConfig {
             lambda: 1e-4,
             strategy: Strategy::Merge(MergeSolver::LookupWd),
             grid: 400,
+            maint_slack: 0.0,
+            maint_pairs: 0,
         }
     }
 }
@@ -102,6 +115,31 @@ impl SvmConfig {
         self
     }
 
+    /// Set the maintenance slack `W` (allowed budget overshoot before an
+    /// amortized multi-pair maintenance event runs).
+    pub fn maint_slack(mut self, slack: f64) -> Self {
+        self.maint_slack = slack;
+        self
+    }
+
+    /// Set the per-event pair quota (`0` = auto, `⌈W⌉ + 1`).
+    pub fn maint_pairs(mut self, pairs: usize) -> Self {
+        self.maint_pairs = pairs;
+        self
+    }
+
+    /// The budget-maintenance slice of this configuration — what
+    /// [`crate::budget::policy`] builds a [`crate::budget::MaintenancePolicy`]
+    /// from.
+    pub fn maintenance(&self) -> MaintenanceConfig {
+        MaintenanceConfig {
+            strategy: self.strategy,
+            grid: self.grid,
+            slack: self.maint_slack,
+            pairs: self.maint_pairs,
+        }
+    }
+
     /// Validate hyperparameters and the kernel/strategy combination.
     /// `budget == 0` (unbudgeted) is accepted here; budgeted estimators
     /// impose their own `B ≥ 2` on top.
@@ -113,6 +151,7 @@ impl SvmConfig {
             self.lambda
         );
         ensure!(self.grid >= 2, "lookup grid must be at least 2, got {}", self.grid);
+        self.maintenance().validate()?;
         ensure!(
             self.strategy.valid_for(&self.kernel),
             "maintenance strategy {} is not valid for the {} kernel: merge-based \
@@ -351,6 +390,19 @@ mod tests {
             .strategy(Strategy::Removal)
             .validate()
             .unwrap();
+    }
+
+    #[test]
+    fn maintenance_slice_mirrors_the_config() {
+        let cfg = SvmConfig::new().maint_slack(8.0).maint_pairs(3).grid(100);
+        let m = cfg.maintenance();
+        assert_eq!(m.slack, 8.0);
+        assert_eq!(m.pairs, 3);
+        assert_eq!(m.grid, 100);
+        assert_eq!(m.strategy, cfg.strategy);
+        cfg.validate().unwrap();
+        assert!(SvmConfig::new().maint_slack(-2.0).validate().is_err());
+        assert!(SvmConfig::new().maint_slack(f64::INFINITY).validate().is_err());
     }
 
     #[test]

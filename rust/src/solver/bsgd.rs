@@ -8,8 +8,15 @@
 //! margin = y_i · f(x_i)                 (with the pre-update model)
 //! w ← (1 − η_t λ) · w                   (O(1) via the lazy global scale)
 //! if margin < 1:  w ← w + η_t y_i φ(x_i)  (insert SV)
-//! if #SV > B:     budget maintenance     (merge / remove / project)
+//! if policy.trigger(#SV, B):  policy.maintain(...)   (merge / remove /
+//!                                                     project; slack-aware)
 //! ```
+//!
+//! Budget maintenance goes through the single
+//! [`crate::budget::MaintenancePolicy`] surface — the trigger rule
+//! (`#SV − B > slack`) and the per-event batching both live in the
+//! policy, not in this loop; with the default `slack = 0` the behavior is
+//! the classic maintain-every-overflow regime, bit-for-bit.
 //!
 //! The trainer is instrumented exactly along the paper's profiler
 //! attribution: SGD-step time vs. budget-maintenance time, with maintenance
@@ -33,9 +40,10 @@ use std::time::Instant;
 
 use anyhow::{ensure, Context, Result};
 
-use crate::budget::projection::maintain_projection;
-use crate::budget::removal::maintain_removal;
-use crate::budget::{audit_event, shared_lookup_table, Maintainer, MergeSolver, Strategy};
+use crate::budget::{
+    audit_event, gaussian_policy, generic_policy, shared_lookup_table, AnyPolicy,
+    MaintenancePolicy, MergeSolver, Strategy,
+};
 use crate::data::Dataset;
 use crate::kernel::{Gaussian, Kernel, KernelSpec};
 use crate::metrics::{AgreementStats, Section, SectionProfiler};
@@ -130,6 +138,9 @@ impl BsgdOptions {
                 lambda: self.lambda,
                 strategy: self.strategy,
                 grid: self.grid,
+                // Legacy surface: classic per-overflow maintenance.
+                maint_slack: 0.0,
+                maint_pairs: 0,
             },
             RunConfig {
                 passes: self.passes,
@@ -218,11 +229,17 @@ pub(crate) struct SgdHyper {
 /// (all kernels), the legacy `train_bsgd` path and the unbudgeted Pegasos
 /// estimator (`budget = 0`).
 ///
-/// `maintain` executes one budget-maintenance event and returns its weight
-/// degradation; `audit` (optional) observes the pre-maintenance model state
-/// for the Table-3 agreement instrumentation. Counters, timings and the
-/// objective curve accumulate into `summary` (whose `agreement` field is
-/// not touched here — the audit hook owns those statistics).
+/// Budget maintenance dispatches through the single
+/// [`MaintenancePolicy`] surface: the policy owns the trigger rule
+/// (slack-aware overshoot) and the event executor — there is no strategy
+/// branching in this loop. After the passes the policy's hard enforcement
+/// runs, so the model leaves every ingest call with `num_sv ≤ budget`
+/// even when slack allowed a transient overshoot (a no-op in the classic
+/// `slack = 0` regime). `audit` (optional) observes the pre-maintenance
+/// model state for the Table-3 agreement instrumentation. Counters,
+/// timings and the objective curve accumulate into `summary` (whose
+/// `agreement` field is not touched here — the audit hook owns those
+/// statistics).
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn run_sgd_passes<K: Kernel + Copy>(
     model: &mut BudgetModel<K>,
@@ -232,7 +249,7 @@ pub(crate) fn run_sgd_passes<K: Kernel + Copy>(
     hyper: &SgdHyper,
     rng: &mut Rng,
     summary: &mut FitSummary,
-    maintain: &mut dyn FnMut(&mut BudgetModel<K>, &mut SectionProfiler) -> f64,
+    policy: &mut dyn MaintenancePolicy<K>,
     mut audit: Option<&mut dyn FnMut(&BudgetModel<K>)>,
 ) {
     let n = train.len();
@@ -269,12 +286,13 @@ pub(crate) fn run_sgd_passes<K: Kernel + Copy>(
             }
             summary.profiler.add(Section::SgdStep, t_sgd.elapsed());
 
-            if hyper.budget > 0 && model.num_sv() > hyper.budget {
+            if hyper.budget > 0 && policy.trigger(model.num_sv(), hyper.budget) {
                 summary.maintenance_events += 1;
                 if let Some(hook) = audit.as_mut() {
                     (*hook)(model);
                 }
-                summary.total_weight_degradation += maintain(model, &mut summary.profiler);
+                summary.total_weight_degradation +=
+                    policy.maintain(model, hyper.budget, &mut summary.profiler);
             }
 
             if hyper.curve_every > 0 && steps % hyper.curve_every == 0 {
@@ -304,6 +322,24 @@ pub(crate) fn run_sgd_passes<K: Kernel + Copy>(
             summary.steps,
             hyper.threads,
         ));
+    }
+    // Hard budget enforcement at the end of the ingest call: with slack
+    // the model may still hold up to `budget + ⌈slack⌉` SVs here; shed
+    // the excess so callers (and the serving publish path) always see a
+    // budget-respecting model. Counted as maintenance events — and
+    // observed by the audit hook — like any in-loop event, which is why
+    // this is an explicit loop rather than `MaintenancePolicy::enforce`
+    // (enforce has no access to the summary counters or the audit
+    // instrumentation). A no-op when slack = 0 (the in-loop trigger
+    // already capped the model), preserving the classic event accounting
+    // bit-for-bit.
+    while hyper.budget > 0 && model.num_sv() > hyper.budget {
+        summary.maintenance_events += 1;
+        if let Some(hook) = audit.as_mut() {
+            (*hook)(model);
+        }
+        summary.total_weight_degradation +=
+            policy.maintain(model, hyper.budget, &mut summary.profiler);
     }
     summary.wall_seconds += wall_start.elapsed().as_secs_f64();
 }
@@ -353,9 +389,10 @@ fn curve_point<K: Kernel + Copy>(
 struct BsgdState {
     model: AnyModel,
     summary: FitSummary,
-    /// Merge-engine scratch (Gaussian models only), kept across
-    /// `partial_fit` calls so the hot-path buffers survive.
-    maintainer: Option<Maintainer>,
+    /// The maintenance policy, kept across `partial_fit` calls so its
+    /// scratch (merge-engine buffers, the removal min-|α| index) survives
+    /// the whole stream.
+    policy: Option<AnyPolicy>,
     rng: Rng,
 }
 
@@ -465,7 +502,8 @@ impl BsgdEstimator {
         ensure!(!train.is_empty(), "cannot train on an empty dataset");
         if self.state.is_none() {
             let capacity = if self.config.budget > 0 {
-                self.config.budget + 1
+                // Room for the slack overshoot plus the triggering insert.
+                self.config.budget + (self.config.maint_slack.ceil() as usize) + 1
             } else {
                 train.len().min(4096)
             };
@@ -475,7 +513,7 @@ impl BsgdEstimator {
                     agreement: self.run.audit.then(AgreementStats::new),
                     ..Default::default()
                 },
-                maintainer: None,
+                policy: None,
                 rng: Rng::new(self.run.seed),
             });
         }
@@ -490,7 +528,7 @@ impl BsgdEstimator {
             curve_sample: self.run.curve_sample,
             threads: crate::util::parallel::resolve_threads(self.run.threads),
         };
-        let strategy = self.config.strategy;
+        let maint = self.config.maintenance();
         let grid = self.config.grid;
         let st = self.state.as_mut().unwrap();
         ensure!(
@@ -502,15 +540,14 @@ impl BsgdEstimator {
         match &mut st.model {
             AnyModel::Gaussian(model) => {
                 // Full-featured Gaussian path: any strategy + optional audit.
-                let mut maintainer =
-                    st.maintainer.take().unwrap_or_else(|| Maintainer::new(strategy, grid));
+                let mut policy = match st.policy.take() {
+                    Some(AnyPolicy::Gaussian(p)) => p,
+                    _ => gaussian_policy(&maint),
+                };
                 let audit_table =
                     st.summary.agreement.is_some().then(|| shared_lookup_table(grid.max(2)));
                 let mut agreement = st.summary.agreement.take();
                 {
-                    let mut maintain = |m: &mut BudgetModel<Gaussian>,
-                                        prof: &mut SectionProfiler|
-                     -> f64 { maintainer.maintain(m, prof) };
                     let mut audit_hook = |m: &BudgetModel<Gaussian>| {
                         if let (Some(stats), Some(table)) =
                             (agreement.as_mut(), audit_table.as_ref())
@@ -538,18 +575,48 @@ impl BsgdEstimator {
                         &hyper,
                         &mut st.rng,
                         &mut st.summary,
-                        &mut maintain,
+                        policy.as_mut(),
                         audit_opt,
                     );
                 }
                 st.summary.agreement = agreement;
-                st.maintainer = Some(maintainer);
+                st.policy = Some(AnyPolicy::Gaussian(policy));
             }
             AnyModel::Linear(model) => {
-                ingest_generic(model, strategy, train, passes, shuffle, &hyper, &mut st.rng, &mut st.summary)
+                let mut policy = match st.policy.take() {
+                    Some(AnyPolicy::Linear(p)) => p,
+                    _ => generic_policy(&maint)?,
+                };
+                run_sgd_passes(
+                    model,
+                    train,
+                    passes,
+                    shuffle,
+                    &hyper,
+                    &mut st.rng,
+                    &mut st.summary,
+                    policy.as_mut(),
+                    None,
+                );
+                st.policy = Some(AnyPolicy::Linear(policy));
             }
             AnyModel::Polynomial(model) => {
-                ingest_generic(model, strategy, train, passes, shuffle, &hyper, &mut st.rng, &mut st.summary)
+                let mut policy = match st.policy.take() {
+                    Some(AnyPolicy::Polynomial(p)) => p,
+                    _ => generic_policy(&maint)?,
+                };
+                run_sgd_passes(
+                    model,
+                    train,
+                    passes,
+                    shuffle,
+                    &hyper,
+                    &mut st.rng,
+                    &mut st.summary,
+                    policy.as_mut(),
+                    None,
+                );
+                st.policy = Some(AnyPolicy::Polynomial(policy));
             }
         }
         Ok(())
@@ -562,33 +629,6 @@ impl BsgdEstimator {
 /// across releases).
 pub fn shard_seed(base: u64, shard: usize) -> u64 {
     base ^ 0x5EED ^ (shard as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
-}
-
-/// Non-Gaussian ingest: removal/projection maintenance only (validated at
-/// construction), no audit instrumentation.
-#[allow(clippy::too_many_arguments)]
-fn ingest_generic<K: Kernel + Copy>(
-    model: &mut BudgetModel<K>,
-    strategy: Strategy,
-    train: &Dataset,
-    passes: usize,
-    shuffle: bool,
-    hyper: &SgdHyper,
-    rng: &mut Rng,
-    summary: &mut FitSummary,
-) {
-    let mut maintain = |m: &mut BudgetModel<K>, prof: &mut SectionProfiler| -> f64 {
-        match strategy {
-            Strategy::Projection => maintain_projection(m, prof).unwrap_or_else(|_| {
-                // Numerically degenerate Gram matrix: fall back to removal.
-                maintain_removal(m, prof)
-            }),
-            // Removal (merge strategies are rejected by SvmConfig::validate
-            // for non-Gaussian kernels before we can get here).
-            _ => maintain_removal(m, prof),
-        }
-    };
-    run_sgd_passes(model, train, passes, shuffle, hyper, rng, summary, &mut maintain, None);
 }
 
 impl Estimator for BsgdEstimator {
@@ -900,7 +940,7 @@ mod tests {
         assert!((a.merging_frequency() - b.merging_frequency()).abs() < 1e-15);
         // Section *event* counts are deterministic (times are wall-clock);
         // both fractions must be well-defined and bounded.
-        for s in [Section::SgdStep, Section::MaintA, Section::MaintB] {
+        for s in [Section::SgdStep, Section::MaintA, Section::MaintScan, Section::MaintApply] {
             assert_eq!(a.profiler.events(s), b.profiler.events(s), "{s:?}");
         }
         for s in [&a, &b] {

@@ -131,6 +131,44 @@ fn churned_model_stays_conformant() {
 }
 
 #[test]
+fn batched_multi_row_scan_is_bit_identical_to_single_rows() {
+    // The multi-pair maintenance sweep shares ONE pass over the SV tiles
+    // across all pivots (`kernel_rows_for_svs`); every entry must be
+    // bit-identical to the single-row blocked scan — only the traversal
+    // order differs, never the arithmetic.
+    forall("kernel_rows_for_svs == kernel_row", 96, 0x5CAB, |rng| {
+        let d = DIMS[rng.below(DIMS.len())];
+        let n = odd_count(rng).max(2);
+        let mut m = BudgetModel::new(d, Gaussian::new(0.5), n);
+        for _ in 0..n {
+            let row = dyadic_row(rng, d);
+            m.push(&row, ((rng.below(33) as i64 - 16) as f64) / 8.0);
+        }
+        let q = 1 + rng.below(n.min(6));
+        let queries: Vec<usize> = (0..q).map(|_| rng.below(n)).collect();
+        let mut multi = vec![0.0f64; q * n];
+        m.kernel_rows_for_svs(&queries, &mut multi);
+        let mut single = vec![0.0f64; n];
+        for (qi, &sv) in queries.iter().enumerate() {
+            m.kernel_row(m.sv(sv), m.sv_norm2(sv), &mut single);
+            for j in 0..n {
+                if multi[qi * n + j].to_bits() != single[j].to_bits() {
+                    return (
+                        false,
+                        format!(
+                            "query {qi} (sv {sv}) col {j}: {} vs {}",
+                            multi[qi * n + j],
+                            single[j]
+                        ),
+                    );
+                }
+            }
+        }
+        (true, String::new())
+    });
+}
+
+#[test]
 fn weight_norm2_matches_naive_full_matrix() {
     forall("symmetric weight_norm2", 64, 0x3377, |rng| {
         let d = DIMS[rng.below(DIMS.len())];

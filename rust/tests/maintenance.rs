@@ -1,0 +1,261 @@
+//! Equivalence pins for the budget-maintenance policy pipeline.
+//!
+//! The refactor contract: with `maint_slack = 0` / `maint_pairs` auto the
+//! pipeline must be **bit-identical** to the pre-pipeline per-step
+//! maintainers for every strategy × kernel combination. The reference
+//! implementations here replay the exact pre-refactor training loop using
+//! the free maintenance pieces (`MergeEngine::maintain`,
+//! `maintain_removal`, `maintain_projection` with removal fallback), and
+//! the estimator — which routes everything through `MaintenancePolicy`,
+//! including the removal policy's lazily-repaired min-|α| index — must
+//! reproduce them to the bit.
+//!
+//! On top of the pins: multi-merge behavior (slack reduces events, budget
+//! still enforced at the end of every ingest, accuracy preserved,
+//! deterministic) and thread-count invariance with slack enabled.
+
+use budgetsvm::budget::projection::maintain_projection;
+use budgetsvm::budget::removal::maintain_removal;
+use budgetsvm::budget::{MergeEngine, MergeSolver, Strategy};
+use budgetsvm::data::synthetic::two_moons;
+use budgetsvm::data::Dataset;
+use budgetsvm::kernel::{Gaussian, Kernel, KernelSpec, Linear, Polynomial};
+use budgetsvm::metrics::SectionProfiler;
+use budgetsvm::model::{AnyModel, BudgetModel};
+use budgetsvm::prelude::*;
+use budgetsvm::solver::LearningRate;
+
+const BUDGET: usize = 25;
+const PASSES: usize = 2;
+
+fn moons() -> Dataset {
+    two_moons(400, 0.12, 9)
+}
+
+/// The pre-refactor per-step training loop, verbatim: Pegasos update +
+/// one maintenance event per overflowing step (`num_sv > budget`), in
+/// presented order (no shuffle — the estimator runs with the same
+/// `RunConfig`, so the RNG is never consulted on either side).
+fn reference_train<K: Kernel + Copy>(
+    ds: &Dataset,
+    kernel: K,
+    lambda: f64,
+    maintain: &mut dyn FnMut(&mut BudgetModel<K>, &mut SectionProfiler) -> f64,
+) -> (BudgetModel<K>, u64) {
+    let mut model = BudgetModel::new(ds.dim(), kernel, BUDGET + 1);
+    let norms = ds.norms();
+    let lr = LearningRate::PegasosInvT { lambda };
+    let mut prof = SectionProfiler::new();
+    let mut events = 0u64;
+    let mut t = 0u64;
+    for _ in 0..PASSES {
+        for i in 0..ds.len() {
+            t += 1;
+            let y = ds.label(i) as f64;
+            let margin = y * model.decision_with_norm(ds.row(i), norms[i]);
+            model.rescale(lr.shrink(t, lambda));
+            if margin < 1.0 {
+                model.push(ds.row(i), lr.eta(t) * y);
+            }
+            if model.num_sv() > BUDGET {
+                events += 1;
+                maintain(&mut model, &mut prof);
+            }
+        }
+    }
+    (model, events)
+}
+
+/// Train through the estimator (policy pipeline) with classic maintenance
+/// parameters and return the model + event count.
+fn pipeline_train(ds: &Dataset, kernel: KernelSpec, strategy: Strategy) -> (AnyModel, u64) {
+    let config = SvmConfig::new()
+        .kernel(kernel)
+        .budget(BUDGET)
+        .c(10.0, ds.len())
+        .strategy(strategy)
+        .grid(100);
+    let run = RunConfig::new().passes(PASSES).shuffle(false).seed(7);
+    let mut est = BsgdEstimator::new(config, run).unwrap();
+    est.fit(ds).unwrap();
+    let events = est.summary().unwrap().maintenance_events;
+    (est.into_model().unwrap(), events)
+}
+
+fn assert_models_bit_identical<K: Kernel + Copy>(
+    reference: &BudgetModel<K>,
+    got: &AnyModel,
+    label: &str,
+) {
+    assert_eq!(reference.num_sv(), got.num_sv(), "{label}: SV count");
+    for j in 0..reference.num_sv() {
+        assert_eq!(
+            reference.alpha(j).to_bits(),
+            got.alpha(j).to_bits(),
+            "{label}: alpha {j}"
+        );
+        assert_eq!(reference.sv(j), got.sv(j), "{label}: sv {j}");
+    }
+}
+
+#[test]
+fn merge_strategies_slack0_bit_identical_to_per_step_reference() {
+    let ds = moons();
+    let lambda = 1.0 / (10.0 * ds.len() as f64);
+    for solver in [MergeSolver::LookupWd, MergeSolver::GssStandard] {
+        let mut engine = MergeEngine::new(solver, 100);
+        let mut maintain = |m: &mut BudgetModel<Gaussian>, p: &mut SectionProfiler| -> f64 {
+            engine.maintain(m, p).weight_degradation
+        };
+        let (reference, ref_events) =
+            reference_train(&ds, Gaussian::new(2.0), lambda, &mut maintain);
+        let (got, events) =
+            pipeline_train(&ds, KernelSpec::gaussian(2.0), Strategy::Merge(solver));
+        assert!(ref_events > 0, "budget must bind");
+        assert_eq!(ref_events, events, "{}", solver.name());
+        assert_models_bit_identical(&reference, &got, solver.name());
+    }
+}
+
+#[test]
+fn removal_slack0_bit_identical_to_full_scan_reference_on_all_kernels() {
+    // This is the system-level churn pin for the lazily-repaired min-|α|
+    // index: the estimator's removal policy selects victims through the
+    // index across thousands of push/rescale/remove interleavings, and
+    // must match the full-scan reference to the bit on every kernel.
+    let ds = moons();
+    let lambda = 1.0 / (10.0 * ds.len() as f64);
+
+    let mut maintain_g = |m: &mut BudgetModel<Gaussian>, p: &mut SectionProfiler| -> f64 {
+        maintain_removal(m, p)
+    };
+    let (reference, ref_events) =
+        reference_train(&ds, Gaussian::new(2.0), lambda, &mut maintain_g);
+    let (got, events) = pipeline_train(&ds, KernelSpec::gaussian(2.0), Strategy::Removal);
+    assert!(ref_events > 0);
+    assert_eq!(ref_events, events);
+    assert_models_bit_identical(&reference, &got, "removal/gaussian");
+
+    let mut maintain_l = |m: &mut BudgetModel<Linear>, p: &mut SectionProfiler| -> f64 {
+        maintain_removal(m, p)
+    };
+    let (reference, _) = reference_train(&ds, Linear, lambda, &mut maintain_l);
+    let (got, _) = pipeline_train(&ds, KernelSpec::linear(), Strategy::Removal);
+    assert_models_bit_identical(&reference, &got, "removal/linear");
+
+    let mut maintain_p = |m: &mut BudgetModel<Polynomial>, p: &mut SectionProfiler| -> f64 {
+        maintain_removal(m, p)
+    };
+    let (reference, _) =
+        reference_train(&ds, Polynomial::new(1.0, 1.0, 3), lambda, &mut maintain_p);
+    let (got, _) = pipeline_train(&ds, KernelSpec::polynomial(3, 1.0), Strategy::Removal);
+    assert_models_bit_identical(&reference, &got, "removal/polynomial");
+}
+
+#[test]
+fn projection_slack0_bit_identical_to_reference() {
+    let ds = moons();
+    let lambda = 1.0 / (10.0 * ds.len() as f64);
+    let mut maintain_g = |m: &mut BudgetModel<Gaussian>, p: &mut SectionProfiler| -> f64 {
+        maintain_projection(m, p).unwrap_or_else(|_| maintain_removal(m, p))
+    };
+    let (reference, ref_events) =
+        reference_train(&ds, Gaussian::new(2.0), lambda, &mut maintain_g);
+    let (got, events) = pipeline_train(&ds, KernelSpec::gaussian(2.0), Strategy::Projection);
+    assert!(ref_events > 0);
+    assert_eq!(ref_events, events);
+    assert_models_bit_identical(&reference, &got, "projection/gaussian");
+
+    let mut maintain_l = |m: &mut BudgetModel<Linear>, p: &mut SectionProfiler| -> f64 {
+        maintain_projection(m, p).unwrap_or_else(|_| maintain_removal(m, p))
+    };
+    let (reference, _) = reference_train(&ds, Linear, lambda, &mut maintain_l);
+    let (got, _) = pipeline_train(&ds, KernelSpec::linear(), Strategy::Projection);
+    assert_models_bit_identical(&reference, &got, "projection/linear");
+}
+
+fn slack_estimator(ds: &Dataset, slack: f64, threads: usize, seed: u64) -> BsgdEstimator {
+    let config = SvmConfig::new()
+        .kernel(KernelSpec::gaussian(2.0))
+        .budget(BUDGET)
+        .c(10.0, ds.len())
+        .strategy(Strategy::Merge(MergeSolver::LookupWd))
+        .grid(100)
+        .maint_slack(slack);
+    let mut est =
+        BsgdEstimator::new(config, RunConfig::new().passes(4).seed(seed).threads(threads))
+            .unwrap();
+    est.fit(ds).unwrap();
+    est
+}
+
+#[test]
+fn slack_amortizes_events_without_losing_quality() {
+    let ds = two_moons(800, 0.12, 21);
+    let classic = slack_estimator(&ds, 0.0, 1, 5);
+    let amortized = slack_estimator(&ds, (BUDGET / 4) as f64, 1, 5);
+
+    let e0 = classic.summary().unwrap().maintenance_events;
+    let e1 = amortized.summary().unwrap().maintenance_events;
+    assert!(e0 > 0, "budget must bind");
+    assert!(
+        e1 * 3 < e0,
+        "slack B/4 must cut events by at least 3x: {e0} -> {e1}"
+    );
+
+    // Models leaving fit() always respect the budget, slack or not.
+    assert!(classic.model().unwrap().num_sv() <= BUDGET);
+    assert!(amortized.model().unwrap().num_sv() <= BUDGET);
+
+    let acc = |est: &BsgdEstimator| {
+        let preds = est.predict_batch(ds.features()).unwrap();
+        budgetsvm::metrics::accuracy(&preds, ds.labels())
+    };
+    let (a0, a1) = (acc(&classic), acc(&amortized));
+    assert!(a0 > 0.85, "classic accuracy {a0}");
+    assert!(a1 > 0.85, "amortized accuracy {a1}");
+    assert!((a0 - a1).abs() < 0.08, "slack changed accuracy too much: {a0} vs {a1}");
+}
+
+#[test]
+fn slack_training_is_deterministic_and_thread_invariant() {
+    let ds = two_moons(500, 0.12, 33);
+    let a = slack_estimator(&ds, 8.0, 1, 3);
+    let b = slack_estimator(&ds, 8.0, 1, 3);
+    let c = slack_estimator(&ds, 8.0, 4, 3);
+    let (ma, mb, mc) =
+        (a.model().unwrap(), b.model().unwrap(), c.model().unwrap());
+    assert_eq!(ma.num_sv(), mb.num_sv());
+    assert_eq!(ma.num_sv(), mc.num_sv());
+    for i in (0..ds.len()).step_by(17) {
+        let da = ma.decision(ds.row(i)).to_bits();
+        assert_eq!(da, mb.decision(ds.row(i)).to_bits(), "run-to-run row {i}");
+        assert_eq!(da, mc.decision(ds.row(i)).to_bits(), "threads=4 row {i}");
+    }
+}
+
+#[test]
+fn partial_fit_streams_respect_budget_with_slack() {
+    // Streaming ingest with slack: every partial_fit call returns a model
+    // within the budget (end-of-ingest enforcement), and the stream keeps
+    // learning.
+    let ds = two_moons(400, 0.12, 12);
+    let config = SvmConfig::new()
+        .kernel(KernelSpec::gaussian(2.0))
+        .budget(20)
+        .c(10.0, ds.len())
+        .maint_slack(10.0);
+    let mut est = BsgdEstimator::new(config, RunConfig::new().shuffle(false)).unwrap();
+    for chunk in 0..4 {
+        let idx: Vec<usize> = (chunk * 100..(chunk + 1) * 100).collect();
+        est.partial_fit(&ds.subset(&idx, "chunk")).unwrap();
+        assert!(
+            est.model().unwrap().num_sv() <= 20,
+            "chunk {chunk}: {}",
+            est.model().unwrap().num_sv()
+        );
+    }
+    let preds = est.predict_batch(ds.features()).unwrap();
+    let acc = budgetsvm::metrics::accuracy(&preds, ds.labels());
+    assert!(acc > 0.8, "streamed accuracy {acc}");
+}

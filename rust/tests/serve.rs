@@ -98,6 +98,8 @@ fn replay_with_pretrained_model_serves_that_model() {
         Some(2),
         Some(10.0),
         None,
+        0.0,
+        0,
     )
     .unwrap();
     let model_path = dir.join("model.bsvm");
