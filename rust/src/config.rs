@@ -47,6 +47,14 @@ pub struct ExperimentConfig {
     pub maint_slack: f64,
     /// Pairs shed per maintenance event (0 = auto, `⌈W⌉ + 1`).
     pub maint_pairs: usize,
+    /// Opt-in fast exponential tier for single training runs and serving
+    /// (`--fast-exp`): the blocked Gaussian tile path uses the vectorized
+    /// `exp_v` (≤ 1e-14 relative) instead of libm `exp`. The default
+    /// `false` keeps libm exponential semantics (exact bit-identity to
+    /// the pre-SIMD engine additionally needs the scalar tile tier,
+    /// `BUDGETSVM_SIMD=scalar` — the AVX2 dot accumulation fuses FMA);
+    /// the paper-regeneration suite always runs with libm semantics.
+    pub fast_exp: bool,
 }
 
 impl Default for ExperimentConfig {
@@ -63,6 +71,7 @@ impl Default for ExperimentConfig {
             smo_max_rows: 2000,
             maint_slack: 0.0,
             maint_pairs: 0,
+            fast_exp: false,
         }
     }
 }
@@ -114,6 +123,9 @@ impl ExperimentConfig {
         }
         if let Some(x) = v.get("maint_pairs").and_then(Json::as_usize) {
             cfg.maint_pairs = x;
+        }
+        if let Some(x) = v.get("fast_exp").and_then(Json::as_bool) {
+            cfg.fast_exp = x;
         }
         cfg.validate()?;
         Ok(cfg)
@@ -178,6 +190,7 @@ impl ExperimentConfig {
             ("smo_max_rows", Json::num(self.smo_max_rows as f64)),
             ("maint_slack", Json::num(self.maint_slack)),
             ("maint_pairs", Json::num(self.maint_pairs as f64)),
+            ("fast_exp", Json::Bool(self.fast_exp)),
         ])
     }
 }
@@ -213,6 +226,7 @@ mod tests {
             runs: 3,
             maint_slack: 8.0,
             maint_pairs: 3,
+            fast_exp: true,
             ..Default::default()
         };
         let text = cfg.to_json().to_string();
@@ -221,6 +235,9 @@ mod tests {
         assert_eq!(back.runs, 3);
         assert_eq!(back.maint_slack, 8.0);
         assert_eq!(back.maint_pairs, 3);
+        assert!(back.fast_exp);
+        // Absent field keeps the (libm) default.
+        assert!(!ExperimentConfig::from_json_text("{}").unwrap().fast_exp);
     }
 
     #[test]

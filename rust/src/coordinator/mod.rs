@@ -165,6 +165,7 @@ pub fn run_single(
         grid: cfg.grid,
         maint_slack,
         maint_pairs,
+        fast_exp: cfg.fast_exp,
     };
     let run = RunConfig::new()
         .passes(passes_override.unwrap_or(passes_default))
@@ -241,7 +242,9 @@ pub fn run_serve_replay(
     let bench_path = serve_bench::write(&report, out_dir)?;
 
     if let Some(path) = model_in {
-        let version = registry.publish_from_file(path)?;
+        // Pre-trained models load with the default exponential tier; the
+        // serve configuration decides the execution tier at publish time.
+        let version = registry.publish_from_file(path, scfg.svm.fast_exp)?;
         let dim = registry.current().expect("just published").model().dim();
         ensure!(
             dim == ds.dim(),
@@ -303,7 +306,7 @@ pub fn run_serve_tcp(
     scfg.validate()?;
     let registry = Arc::new(ModelRegistry::new());
     if let Some(path) = model_in {
-        let version = registry.publish_from_file(path)?;
+        let version = registry.publish_from_file(path, scfg.svm.fast_exp)?;
         eprintln!("published {path} as v{version}");
     } else {
         eprintln!("no initial model: predictions will fail until trained rows are flushed");

@@ -5,9 +5,14 @@
 //! them as machine-readable `BENCH_kernel.json` so CI can archive the
 //! trajectory:
 //!
-//! 1. **Kernel-row throughput** — ns per `k(x, sv_j), j = 1..B` row, for
-//!    the blocked SoA-tile engine vs the scalar one-SV-at-a-time reference
-//!    it replaced, over `B ∈ {64, 256, 1024}` × `d ∈ {16, 128, 784}`.
+//! 1. **Kernel-row throughput** — ns per `k(x, sv_j), j = 1..B` row over
+//!    `B ∈ {64, 256, 1024}` × `d ∈ {16, 128, 784}`, in four arms: the
+//!    blocked engine on the dispatched SIMD tier, the same engine under
+//!    the forced-scalar override, the SIMD tier with the opt-in fast-exp
+//!    exponential, and the pre-tiling one-SV-at-a-time scalar reference.
+//!    A `kappa_scan` section times the batched multi-pivot
+//!    `kernel_rows_for_svs` (one tile pass for all pivots) against the
+//!    row-wise equivalent, dispatched and forced-scalar.
 //! 2. **Multiclass training scaling** — one-vs-rest `fit` steps/s with one
 //!    worker vs all workers on a ≥4-class synthetic dataset (same seeds:
 //!    the two runs produce bit-identical machines; only the wall clock
@@ -17,7 +22,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use crate::kernel::{norm2, Gaussian, KernelSpec, TILE};
+use crate::kernel::{norm2, simd, Gaussian, KernelSpec, TILE};
 use crate::model::BudgetModel;
 use crate::solver::{Estimator, MulticlassDataset, OneVsRestEstimator, RunConfig, SvmConfig};
 use crate::util::bench::Bencher;
@@ -95,17 +100,36 @@ pub fn run(quick: bool, threads: usize) -> Result<Json> {
     // ---- 1. kernel-row throughput sweep ----
     let mut rng = Rng::new(0xB10C);
     let mut sweep = Vec::new();
+    let mut kappa = Vec::new();
     for &b in &SWEEP_B {
         for &d in &SWEEP_D {
             let model = random_model(b, d, &mut rng);
             let x: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
             let xn = norm2(&x);
             let mut out = vec![0.0f64; b];
+            // Dispatched tier (SIMD when the hardware supports it).
             let blocked = bencher
                 .bench(&format!("kernel_row/blocked/B{b}/d{d}"), || {
                     model.kernel_row(&x, xn, &mut out)
                 })
                 .mean_ns();
+            // The same blocked engine under the forced-scalar override.
+            let forced = simd::with_forced_scalar(|| {
+                bencher
+                    .bench(&format!("kernel_row/forced_scalar/B{b}/d{d}"), || {
+                        model.kernel_row(&x, xn, &mut out)
+                    })
+                    .mean_ns()
+            });
+            // Dispatched tier + the opt-in fast-exp exponential.
+            let mut fast_model = model.clone();
+            fast_model.set_fast_exp(true);
+            let fast = bencher
+                .bench(&format!("kernel_row/fast_exp/B{b}/d{d}"), || {
+                    fast_model.kernel_row(&x, xn, &mut out)
+                })
+                .mean_ns();
+            // Pre-tiling one-SV-at-a-time reference.
             let scalar = bencher
                 .bench(&format!("kernel_row/scalar/B{b}/d{d}"), || {
                     model.kernel_row_scalar(&x, xn, &mut out)
@@ -115,8 +139,46 @@ pub fn run(quick: bool, threads: usize) -> Result<Json> {
                 ("b", Json::num(b as f64)),
                 ("d", Json::num(d as f64)),
                 ("ns_per_row_blocked", Json::num(blocked)),
+                ("ns_per_row_forced_scalar", Json::num(forced)),
+                ("ns_per_row_fast_exp", Json::num(fast)),
                 ("ns_per_row_scalar", Json::num(scalar)),
                 ("speedup", Json::num(scalar / blocked.max(1e-9))),
+                ("speedup_fast_exp", Json::num(scalar / fast.max(1e-9))),
+            ]));
+
+            // κ scan: 4 pivots' rows in one tile pass vs row-wise.
+            let queries = [0usize, b / 3, 2 * b / 3, b - 1];
+            let mut rows = vec![0.0f64; queries.len() * b];
+            let scan = bencher
+                .bench(&format!("kappa_scan/multi/B{b}/d{d}"), || {
+                    model.kernel_rows_for_svs(&queries, &mut rows)
+                })
+                .mean_ns();
+            let scan_forced = simd::with_forced_scalar(|| {
+                bencher
+                    .bench(&format!("kappa_scan/multi_forced_scalar/B{b}/d{d}"), || {
+                        model.kernel_rows_for_svs(&queries, &mut rows)
+                    })
+                    .mean_ns()
+            });
+            let scan_rowwise = bencher
+                .bench(&format!("kappa_scan/rowwise/B{b}/d{d}"), || {
+                    for (q, &sv) in queries.iter().enumerate() {
+                        model.kernel_row(
+                            model.sv(sv),
+                            model.sv_norm2(sv),
+                            &mut rows[q * b..(q + 1) * b],
+                        );
+                    }
+                })
+                .mean_ns();
+            kappa.push(Json::object(vec![
+                ("b", Json::num(b as f64)),
+                ("d", Json::num(d as f64)),
+                ("queries", Json::num(queries.len() as f64)),
+                ("ns_per_scan", Json::num(scan)),
+                ("ns_per_scan_forced_scalar", Json::num(scan_forced)),
+                ("ns_per_scan_rowwise", Json::num(scan_rowwise)),
             ]));
         }
     }
@@ -157,10 +219,12 @@ pub fn run(quick: bool, threads: usize) -> Result<Json> {
     ]);
 
     Ok(Json::object(vec![
-        ("schema", Json::str("bench_kernel/v1")),
+        ("schema", Json::str("bench_kernel/v2")),
         ("tile", Json::num(TILE as f64)),
+        ("simd_tier", Json::str(simd::detected().name())),
         ("quick", Json::Bool(quick)),
         ("kernel_row", Json::array(sweep)),
+        ("kappa_scan", Json::array(kappa)),
         ("multiclass_fit", multiclass),
     ]))
 }
@@ -183,13 +247,28 @@ mod tests {
     #[test]
     fn quick_harness_produces_well_formed_report() {
         let report = run(true, 2).expect("bench harness runs");
-        assert_eq!(report.get("schema").and_then(Json::as_str), Some("bench_kernel/v1"));
+        assert_eq!(report.get("schema").and_then(Json::as_str), Some("bench_kernel/v2"));
+        let tier = report.get("simd_tier").and_then(Json::as_str).expect("simd tier");
+        assert!(tier == "avx2" || tier == "scalar", "unexpected tier {tier}");
         let sweep = report.get("kernel_row").and_then(Json::as_array).expect("sweep array");
         assert_eq!(sweep.len(), SWEEP_B.len() * SWEEP_D.len());
         for cell in sweep {
             assert!(cell.get("ns_per_row_blocked").and_then(Json::as_f64).unwrap() > 0.0);
+            assert!(cell.get("ns_per_row_forced_scalar").and_then(Json::as_f64).unwrap() > 0.0);
+            assert!(cell.get("ns_per_row_fast_exp").and_then(Json::as_f64).unwrap() > 0.0);
             assert!(cell.get("ns_per_row_scalar").and_then(Json::as_f64).unwrap() > 0.0);
             assert!(cell.get("speedup").and_then(Json::as_f64).unwrap() > 0.0);
+            assert!(cell.get("speedup_fast_exp").and_then(Json::as_f64).unwrap() > 0.0);
+        }
+        let kappa = report.get("kappa_scan").and_then(Json::as_array).expect("kappa array");
+        assert_eq!(kappa.len(), SWEEP_B.len() * SWEEP_D.len());
+        for cell in kappa {
+            assert_eq!(cell.get("queries").and_then(Json::as_f64), Some(4.0));
+            assert!(cell.get("ns_per_scan").and_then(Json::as_f64).unwrap() > 0.0);
+            assert!(
+                cell.get("ns_per_scan_forced_scalar").and_then(Json::as_f64).unwrap() > 0.0
+            );
+            assert!(cell.get("ns_per_scan_rowwise").and_then(Json::as_f64).unwrap() > 0.0);
         }
         let mc = report.get("multiclass_fit").expect("multiclass section");
         assert!(mc.get("steps").and_then(Json::as_f64).unwrap() > 0.0);

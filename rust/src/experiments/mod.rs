@@ -13,7 +13,12 @@
 //! behind `repro bench` (emits `BENCH_kernel.json`); [`maint_bench`] its
 //! budget-maintenance sibling behind `repro bench --maintenance` (emits
 //! `BENCH_maintenance.json`); [`serve_bench`] the serving one behind
-//! `repro serve --replay` (emits `BENCH_serve.json`).
+//! `repro serve --replay` (emits `BENCH_serve.json`). `repro bench --all`
+//! runs the kernel + maintenance harnesses back to back and merges their
+//! reports (plus `BENCH_serve.json`, when one is already present in the
+//! output directory) into one top-level `BENCH_summary.json` via
+//! [`write_bench_summary`] — the single perf-trajectory artifact CI
+//! uploads.
 
 pub mod figure2;
 pub mod figure3;
@@ -26,11 +31,49 @@ pub mod table1;
 pub mod table2;
 pub mod table3;
 
+use anyhow::{Context, Result};
+
 use crate::budget::{MergeSolver, Strategy};
 use crate::config::ExperimentConfig;
 use crate::data::synthetic::Profile;
 use crate::data::Dataset;
 use crate::solver::BsgdOptions;
+use crate::util::json::Json;
+
+/// File name of the merged bench summary (`repro bench --all`).
+pub const SUMMARY_FILE: &str = "BENCH_summary.json";
+
+/// Merge the kernel and maintenance bench reports (and, when one already
+/// exists under `out_dir`, the serve report) into one top-level
+/// `BENCH_summary.json`; returns the written path. The per-bench files
+/// keep their own paths — this is purely the one-artifact view of the
+/// perf trajectory.
+pub fn write_bench_summary(out_dir: &str, kernel: &Json, maintenance: &Json) -> Result<String> {
+    let serve_path =
+        format!("{}/{}", out_dir.trim_end_matches('/'), serve_bench::REPORT_FILE);
+    let serve = match std::fs::read_to_string(&serve_path) {
+        Ok(text) => Json::parse(&text)
+            .with_context(|| format!("existing {serve_path} is not valid JSON"))?,
+        // Absent is fine (the serve bench runs in its own job); any other
+        // read failure must not silently drop the section.
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => Json::Null,
+        Err(e) => {
+            return Err(e).with_context(|| format!("cannot read existing {serve_path}"));
+        }
+    };
+    let summary = Json::object(vec![
+        ("schema", Json::str("bench_summary/v1")),
+        ("kernel", kernel.clone()),
+        ("maintenance", maintenance.clone()),
+        ("serve", serve),
+    ]);
+    std::fs::create_dir_all(out_dir)
+        .with_context(|| format!("cannot create output directory {out_dir}"))?;
+    let path = format!("{}/{}", out_dir.trim_end_matches('/'), SUMMARY_FILE);
+    std::fs::write(&path, format!("{summary}\n"))
+        .with_context(|| format!("cannot write {path}"))?;
+    Ok(path)
+}
 
 /// A prepared (train, test) pair for one profile under a config.
 pub struct Prepared {
@@ -96,6 +139,29 @@ mod tests {
             }
         }
         assert!(prep.lambda > 0.0);
+    }
+
+    #[test]
+    fn bench_summary_merges_reports_and_roundtrips() {
+        let dir = std::env::temp_dir().join("budgetsvm-bench-summary");
+        std::fs::create_dir_all(&dir).unwrap();
+        let out = dir.to_string_lossy().into_owned();
+        let kernel = Json::object(vec![("schema", Json::str("bench_kernel/v2"))]);
+        let maint = Json::object(vec![("schema", Json::str("bench_maintenance/v1"))]);
+        // No serve report present: the slot is null.
+        let path = write_bench_summary(&out, &kernel, &maint).unwrap();
+        let back = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(back.get("schema").and_then(Json::as_str), Some("bench_summary/v1"));
+        assert_eq!(back.get("kernel"), Some(&kernel));
+        assert_eq!(back.get("maintenance"), Some(&maint));
+        assert_eq!(back.get("serve"), Some(&Json::Null));
+        // With a serve report on disk it is folded in.
+        let serve = Json::object(vec![("schema", Json::str("bench_serve/v1"))]);
+        std::fs::write(dir.join(serve_bench::REPORT_FILE), format!("{serve}\n")).unwrap();
+        let path = write_bench_summary(&out, &kernel, &maint).unwrap();
+        let back = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(back.get("serve"), Some(&serve));
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

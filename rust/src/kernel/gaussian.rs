@@ -1,6 +1,6 @@
 //! Gaussian (RBF) kernel `k(x, x') = exp(−γ‖x − x'‖²)`.
 
-use super::{sqdist, Kernel, KernelSpec, TILE};
+use super::{simd, sqdist, Kernel, KernelSpec, TILE};
 
 /// Gaussian kernel with bandwidth parameter `γ`.
 ///
@@ -8,21 +8,41 @@ use super::{sqdist, Kernel, KernelSpec, TILE};
 /// work: for `z = h·x_a + (1−h)·x_b` on the connecting line,
 /// `k(x_a, z) = κ^{(1−h)²}` and `k(x_b, z) = κ^{h²}` where `κ = k(x_a, x_b)`
 /// — no new kernel evaluation is needed while optimizing `h`.
+///
+/// `fast_exp` selects the exponential tier of the *blocked* tile path
+/// ([`Kernel::eval_block`]) only: `false` (the default) keeps libm `exp`
+/// semantics — the per-lane exponential is bit-identical to the pre-SIMD
+/// engine (the tile *dot* accumulation still follows the active SIMD
+/// tier) — while `true` opts into the vectorized [`simd::exp_v`]
+/// (relative error ≤ 1e-14, pinned in `tests/simd.rs`). The scalar
+/// reference entry points ([`Kernel::eval`], [`Kernel::eval_dot`])
+/// always use libm `exp`, so they remain the
+/// correctness oracle for both tiers; the flag is a runtime execution
+/// choice and is deliberately NOT part of [`KernelSpec`] or the model
+/// format.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Gaussian {
     pub gamma: f64,
+    pub fast_exp: bool,
 }
 
 impl Gaussian {
     pub fn new(gamma: f64) -> Self {
         assert!(gamma > 0.0, "gamma must be positive, got {gamma}");
-        Gaussian { gamma }
+        Gaussian { gamma, fast_exp: false }
     }
 
     /// Construct from the paper's `log2 γ` convention (Table 1 lists
     /// `γ = 2^{-7}` etc.).
     pub fn from_log2(log2_gamma: i32) -> Self {
         Gaussian::new((2.0f64).powi(log2_gamma))
+    }
+
+    /// Select the exponential tier of the blocked tile path (see the type
+    /// docs); chainable.
+    pub fn with_fast_exp(mut self, fast_exp: bool) -> Self {
+        self.fast_exp = fast_exp;
+        self
     }
 
     /// Kernel value from a squared distance.
@@ -46,7 +66,10 @@ impl Kernel for Gaussian {
     }
 
     /// Fused tile evaluation: one pass reconstructing the squared
-    /// distances, one shared `exp` pass over the tile.
+    /// distances, one shared `exp` pass over the tile — dispatched through
+    /// the runtime-selected SIMD tier ([`simd::gaussian_block`]). The
+    /// distance pass is bit-identical on every tier; the exponential is
+    /// libm `exp` unless `fast_exp` opts into [`simd::exp_v`].
     #[inline]
     fn eval_block(
         &self,
@@ -55,14 +78,7 @@ impl Kernel for Gaussian {
         norms: &[f32; TILE],
         out: &mut [f64; TILE],
     ) {
-        let mut d2 = [0.0f64; TILE];
-        for l in 0..TILE {
-            d2[l] = (x_norm2 + norms[l] - 2.0 * dots[l]).max(0.0) as f64;
-        }
-        let neg_gamma = -self.gamma;
-        for (o, &v) in out.iter_mut().zip(d2.iter()) {
-            *o = (neg_gamma * v).exp();
-        }
+        simd::gaussian_block(-self.gamma, self.fast_exp, x_norm2, dots, norms, out);
     }
 
     #[inline]
@@ -111,6 +127,31 @@ mod tests {
     fn from_log2_matches_table1_convention() {
         let k = Gaussian::from_log2(-7);
         assert!((k.gamma - 0.0078125).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fast_exp_tile_path_agrees_with_default_and_keeps_the_spec() {
+        let k = Gaussian::new(0.4);
+        let kf = Gaussian::new(0.4).with_fast_exp(true);
+        // The execution tier is not a model property.
+        assert_eq!(kf.spec(), k.spec());
+        let mut dots = [0.0f32; TILE];
+        let mut norms = [0.0f32; TILE];
+        for l in 0..TILE {
+            dots[l] = (l as f32) * 0.4 - 1.1;
+            norms[l] = 0.3 + (l as f32) * 0.5;
+        }
+        let (mut out, mut out_fast) = ([0.0f64; TILE], [0.0f64; TILE]);
+        k.eval_block(2.25, &dots, &norms, &mut out);
+        kf.eval_block(2.25, &dots, &norms, &mut out_fast);
+        for l in 0..TILE {
+            assert!(
+                (out[l] - out_fast[l]).abs() <= 1e-13 * (1.0 + out[l].abs()),
+                "lane {l}: libm={} fast={}",
+                out[l],
+                out_fast[l]
+            );
+        }
     }
 
     #[test]

@@ -1,6 +1,6 @@
 //! Linear kernel `k(x, x') = ⟨x, x'⟩`.
 
-use super::{dot, Kernel, KernelSpec};
+use super::{dot, simd, Kernel, KernelSpec, TILE};
 
 /// Plain inner-product kernel. Used by the unbudgeted baselines and the SMO
 /// reference solver; budget merging does not apply to it (the merge
@@ -17,6 +17,20 @@ impl Kernel for Linear {
     #[inline]
     fn eval_dot(&self, dot: f32, _a_norm2: f32, _b_norm2: f32) -> f64 {
         dot as f64
+    }
+
+    /// Tile finish: widen the precomputed inner products to `f64` through
+    /// the SIMD layer (exact on every tier, so this is bit-identical to
+    /// the per-lane default).
+    #[inline]
+    fn eval_block(
+        &self,
+        _x_norm2: f32,
+        dots: &[f32; TILE],
+        _norms: &[f32; TILE],
+        out: &mut [f64; TILE],
+    ) {
+        simd::linear_block(dots, out);
     }
 
     #[inline]

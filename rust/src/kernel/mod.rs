@@ -12,10 +12,46 @@
 //! models train budgeted with removal/projection maintenance (and
 //! unbudgeted everywhere). [`KernelSpec`] is the typed, serializable
 //! configuration view used by `SvmConfig` and the model format.
+//!
+//! # How to add a fused kernel: the three-layer contract
+//!
+//! A kernel plugs into the blocked engine in up to three layers, each
+//! optional beyond the first and each verified against the one below it:
+//!
+//! 1. **`eval_dot` — correctness.** Express the kernel as a function of
+//!    `⟨a, b⟩`, `‖a‖²`, `‖b‖²`. This alone makes the blocked engine
+//!    correct: the default [`Kernel::eval_block`] finishes each tile lane
+//!    through it. It must agree with [`Kernel::eval`] whenever
+//!    `dot == dot(a, b)` (use the clamped [`sqdist`] expression for
+//!    distance-based kernels so the two entry points agree bit-for-bit).
+//! 2. **`eval_block` — tile fusion.** Override when a tile-wise form
+//!    saves work (the Gaussian shares one distance-reconstruction +
+//!    `exp` pass over all 8 lanes). Padding lanes carry zero data and
+//!    zero norms and are evaluated like any other — consumers mask them
+//!    by coefficient range, never by branching here. Conformance is
+//!    pinned at ≤ 1e-12 against per-lane `eval_dot` on dyadic inputs
+//!    (`tests/block_engine.rs`).
+//! 3. **SIMD micro-kernel — optional.** Route the fused form through
+//!    [`simd`] with a scalar tier that reproduces the pre-SIMD loop
+//!    verbatim and an AVX2 tier performing the same IEEE operations
+//!    lane-wise. The forced-scalar override must always be able to bypass
+//!    the vector path (`tests/simd.rs` pins scalar ≡ SIMD ≤ 1e-12 on
+//!    dyadic inputs).
+//!
+//! **Fast-exp accuracy policy.** Transcendental shortcuts are opt-in,
+//! never default: the Gaussian's default tile path keeps libm `exp`
+//! semantics (bit-identical to the scalar engine), while the `--fast-exp`
+//! tier ([`Gaussian::with_fast_exp`], `SvmConfig::fast_exp`) may use the
+//! vectorized [`simd::exp_v`] only under a pinned bound — max relative
+//! error ≤ 1e-14 over the full reduction domain, exact `exp(±0) = 1`,
+//! gradual underflow — plus end-to-end accuracy parity on the repro
+//! experiments. A fast path that cannot meet those pins stays out of the
+//! tree.
 
 mod gaussian;
 mod linear;
 mod polynomial;
+pub mod simd;
 
 pub use gaussian::Gaussian;
 pub use linear::Linear;

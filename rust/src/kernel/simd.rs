@@ -1,0 +1,797 @@
+//! Runtime-dispatched SIMD micro-kernels for the blocked tile engine.
+//!
+//! The `TILE = 8` engine does three kinds of arithmetic on every kernel
+//! row: the feature-major tile FMA accumulation (`SvStore::tile_dots`),
+//! the per-tile kernel finish (`Kernel::eval_block` — for the Gaussian a
+//! fused distance reconstruction + `exp` pass), and the batched
+//! multi-pivot κ scan (`BudgetModel::kernel_rows_for_svs`). This module
+//! owns the portable scalar loops for all three plus hand-written
+//! AVX2+FMA paths (8 × `f32` for the dot accumulation, 2 × 4 × `f64` for
+//! the kernel finish), selected once at startup.
+//!
+//! # Dispatch
+//!
+//! * [`detected`] probes the hardware once (`is_x86_feature_detected!`,
+//!   cached) and honors the process-wide `BUDGETSVM_SIMD=scalar`
+//!   environment override — CI runs the whole test suite under it to
+//!   exercise the portable fallback on any runner.
+//! * [`set_force_scalar`] / [`with_forced_scalar`] are a *thread-local*
+//!   override used by tests and the bench harness to measure the scalar
+//!   tier without perturbing concurrently running threads.
+//! * [`active`] combines both and is what every dispatched entry point
+//!   reads; the `*_with(tier, ...)` variants take the tier explicitly so
+//!   property tests can compare the two implementations side by side
+//!   without any global state.
+//!
+//! # Numerics contract
+//!
+//! * The AVX2 paths perform the *same* IEEE operations in the same order
+//!   as the scalar loops wherever that is possible: distance
+//!   reconstruction, `f32 → f64` widening, the polynomial square-multiply
+//!   chain and the whole [`exp_v`] pipeline are bit-identical across
+//!   tiers. The only divergence is the tile dot accumulation, where the
+//!   AVX2 path fuses multiply-add; on dyadic-rational inputs (the
+//!   conformance-test regime, where every product and partial sum is
+//!   exact in `f32`) fused and unfused agree bit-for-bit, and on
+//!   arbitrary data they differ only by `f32` rounding.
+//! * [`exp_fast`] / [`exp_v`] implement a branch-free Cephes-style
+//!   `2^n · P(r)` exponential (argument reduction against a hi/lo `ln 2`
+//!   split, degree-13 polynomial, two-step `2^n` scaling that underflows
+//!   gradually through the denormals). Max relative error against libm
+//!   `exp` is a few ulp — pinned at ≤ 1e-14 by `tests/simd.rs` over
+//!   `[-700, 700]` — with `exp(±0) = 1` exactly, monotone clamping at the
+//!   domain edges (`x ≤ -746 → 0`, `x ≥ 710 → ∞`). The default kernel
+//!   tier does NOT use it: Gaussian tiles keep libm `exp` semantics
+//!   (SIMD distances + scalar `exp`, bit-identical to the pre-SIMD
+//!   engine) unless the opt-in fast-exp tier (`SvmConfig::fast_exp`,
+//!   `--fast-exp`) is selected.
+
+use std::sync::OnceLock;
+
+use super::TILE;
+
+/// Execution tier of the tile micro-kernels.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tier {
+    /// Portable scalar loops (the auto-vectorizable reference).
+    Scalar,
+    /// Hand-written AVX2+FMA paths (x86-64 with `avx2` and `fma`).
+    Avx2,
+}
+
+impl Tier {
+    /// Whether this tier can run on the current hardware (ignores every
+    /// override — `Scalar` is always available).
+    pub fn available(self) -> bool {
+        match self {
+            Tier::Scalar => true,
+            Tier::Avx2 => hw_avx2(),
+        }
+    }
+
+    /// Short name for reports ("scalar" / "avx2").
+    pub fn name(self) -> &'static str {
+        match self {
+            Tier::Scalar => "scalar",
+            Tier::Avx2 => "avx2",
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn hw_avx2_impl() -> bool {
+    is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn hw_avx2_impl() -> bool {
+    false
+}
+
+static HW_AVX2: OnceLock<bool> = OnceLock::new();
+
+/// Cached hardware probe for the AVX2+FMA tier.
+fn hw_avx2() -> bool {
+    *HW_AVX2.get_or_init(hw_avx2_impl)
+}
+
+static DETECTED: OnceLock<Tier> = OnceLock::new();
+
+/// The process-wide tier selected once at startup: AVX2 when the hardware
+/// supports it, unless `BUDGETSVM_SIMD=scalar` forces the portable loops.
+pub fn detected() -> Tier {
+    *DETECTED.get_or_init(|| {
+        let forced = std::env::var("BUDGETSVM_SIMD")
+            .map(|v| v.eq_ignore_ascii_case("scalar"))
+            .unwrap_or(false);
+        if !forced && hw_avx2() {
+            Tier::Avx2
+        } else {
+            Tier::Scalar
+        }
+    })
+}
+
+thread_local! {
+    static FORCE_SCALAR: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+/// Thread-local forced-scalar override (testing/benching hook): while set,
+/// [`active`] reports [`Tier::Scalar`] on this thread regardless of the
+/// detected hardware. Other threads are unaffected; use the process-wide
+/// `BUDGETSVM_SIMD=scalar` environment variable to force a whole run.
+pub fn set_force_scalar(force: bool) {
+    FORCE_SCALAR.with(|c| c.set(force));
+}
+
+/// Whether the thread-local forced-scalar override is currently set.
+pub fn force_scalar() -> bool {
+    FORCE_SCALAR.with(|c| c.get())
+}
+
+/// Run `f` with the thread-local forced-scalar override set, restoring the
+/// previous state afterwards (also on panic).
+pub fn with_forced_scalar<R>(f: impl FnOnce() -> R) -> R {
+    struct Restore(bool);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            set_force_scalar(self.0);
+        }
+    }
+    let _restore = Restore(force_scalar());
+    set_force_scalar(true);
+    f()
+}
+
+/// The tier every dispatched micro-kernel call on this thread uses right
+/// now: [`Tier::Scalar`] under either override, the detected tier
+/// otherwise.
+pub fn active() -> Tier {
+    if force_scalar() {
+        Tier::Scalar
+    } else {
+        detected()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tile dot products (f32, 8 lanes)
+// ---------------------------------------------------------------------------
+
+/// Inner products of `x` against all `TILE` lanes of one feature-major
+/// tile (`tile[k * TILE + l]` = feature `k` of lane `l`), on the active
+/// tier.
+#[inline]
+pub fn tile_dots(tile: &[f32], x: &[f32], out: &mut [f32; TILE]) {
+    tile_dots_with(active(), tile, x, out);
+}
+
+/// [`tile_dots`] on an explicit tier (panics if the tier is unavailable).
+/// The length invariant is a real assert — the AVX2 path walks raw
+/// pointers, so a mismatched tile must never reach it (one compare per
+/// tile call, outside the per-feature loop).
+#[inline]
+pub fn tile_dots_with(tier: Tier, tile: &[f32], x: &[f32], out: &mut [f32; TILE]) {
+    assert_eq!(tile.len(), x.len() * TILE, "tile/query length mismatch");
+    match tier {
+        Tier::Scalar => tile_dots_scalar(tile, x, out),
+        Tier::Avx2 => dispatch_tile_dots_avx2(tile, x, out),
+    }
+}
+
+/// Portable reference: one 8-lane unrolled multiply-add per feature (the
+/// pre-SIMD auto-vectorized loop, kept verbatim).
+fn tile_dots_scalar(tile: &[f32], x: &[f32], out: &mut [f32; TILE]) {
+    let mut acc = [0.0f32; TILE];
+    for (lanes, &xk) in tile.chunks_exact(TILE).zip(x.iter()) {
+        for (a, &v) in acc.iter_mut().zip(lanes) {
+            *a += xk * v;
+        }
+    }
+    *out = acc;
+}
+
+/// Inner products of several query rows against one tile, visiting the
+/// tile's feature data once: each loaded 8-lane feature vector feeds every
+/// query's accumulator before the next feature is touched. Row `q` of
+/// `out` is bit-identical to `tile_dots(tile, xs[q], ...)` on the same
+/// tier — only the traversal order differs, never the per-query
+/// arithmetic.
+#[inline]
+pub fn tile_dots_multi(tile: &[f32], xs: &[&[f32]], out: &mut [[f32; TILE]]) {
+    tile_dots_multi_with(active(), tile, xs, out);
+}
+
+/// [`tile_dots_multi`] on an explicit tier. Every query length is
+/// checked with a real assert before the raw-pointer AVX2 path runs (the
+/// 4-query block sizes its loop from the first query alone).
+pub fn tile_dots_multi_with(tier: Tier, tile: &[f32], xs: &[&[f32]], out: &mut [[f32; TILE]]) {
+    assert_eq!(xs.len(), out.len(), "one output row per query");
+    for x in xs {
+        assert_eq!(tile.len(), x.len() * TILE, "tile/query length mismatch");
+    }
+    match tier {
+        Tier::Scalar => {
+            for (x, o) in xs.iter().zip(out.iter_mut()) {
+                tile_dots_scalar(tile, x, o);
+            }
+        }
+        Tier::Avx2 => dispatch_tile_dots_multi_avx2(tile, xs, out),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Kernel tile finishes (f64, 8 lanes)
+// ---------------------------------------------------------------------------
+
+/// Gaussian tile finish: reconstruct the eight clamped squared distances
+/// `max(‖x‖² + ‖s_l‖² − 2⟨x, s_l⟩, 0)`, widen to `f64`, and exponentiate
+/// `exp(−γ·d²)`. With `fast_exp = false` the exponential is libm `exp`
+/// per lane (bit-identical to the scalar engine on every tier); with
+/// `fast_exp = true` it is the vectorized [`exp_v`] (≤ 1e-14 relative).
+#[inline]
+pub fn gaussian_block(
+    neg_gamma: f64,
+    fast_exp: bool,
+    x_norm2: f32,
+    dots: &[f32; TILE],
+    norms: &[f32; TILE],
+    out: &mut [f64; TILE],
+) {
+    gaussian_block_with(active(), neg_gamma, fast_exp, x_norm2, dots, norms, out);
+}
+
+/// [`gaussian_block`] on an explicit tier.
+pub fn gaussian_block_with(
+    tier: Tier,
+    neg_gamma: f64,
+    fast_exp: bool,
+    x_norm2: f32,
+    dots: &[f32; TILE],
+    norms: &[f32; TILE],
+    out: &mut [f64; TILE],
+) {
+    let mut d2 = [0.0f64; TILE];
+    match tier {
+        Tier::Scalar => gaussian_d2_scalar(x_norm2, dots, norms, &mut d2),
+        Tier::Avx2 => dispatch_gaussian_d2_avx2(x_norm2, dots, norms, &mut d2),
+    }
+    if fast_exp {
+        for v in d2.iter_mut() {
+            *v *= neg_gamma;
+        }
+        exp_v_with(tier, &mut d2);
+        *out = d2;
+    } else {
+        for (o, &v) in out.iter_mut().zip(d2.iter()) {
+            *o = (neg_gamma * v).exp();
+        }
+    }
+}
+
+/// Scalar distance reconstruction (the pre-SIMD fused loop, kept
+/// verbatim; the same clamped expression `Kernel::eval_dot` uses).
+fn gaussian_d2_scalar(x_norm2: f32, dots: &[f32; TILE], norms: &[f32; TILE], d2: &mut [f64; TILE]) {
+    for l in 0..TILE {
+        d2[l] = (x_norm2 + norms[l] - 2.0 * dots[l]).max(0.0) as f64;
+    }
+}
+
+/// Linear tile finish: widen the eight inner products to `f64` (exact on
+/// every tier).
+#[inline]
+pub fn linear_block(dots: &[f32; TILE], out: &mut [f64; TILE]) {
+    linear_block_with(active(), dots, out);
+}
+
+/// [`linear_block`] on an explicit tier.
+pub fn linear_block_with(tier: Tier, dots: &[f32; TILE], out: &mut [f64; TILE]) {
+    match tier {
+        Tier::Scalar => {
+            for (o, &d) in out.iter_mut().zip(dots.iter()) {
+                *o = d as f64;
+            }
+        }
+        Tier::Avx2 => dispatch_linear_block_avx2(dots, out),
+    }
+}
+
+/// Polynomial tile finish: `(scale·⟨x, s_l⟩ + offset)^degree` via the
+/// square-and-multiply chain of `compiler-rt`'s `__powidf2`, so both
+/// tiers run the identical multiplication sequence.
+#[inline]
+pub fn poly_block(scale: f64, offset: f64, degree: u32, dots: &[f32; TILE], out: &mut [f64; TILE]) {
+    poly_block_with(active(), scale, offset, degree, dots, out);
+}
+
+/// [`poly_block`] on an explicit tier.
+pub fn poly_block_with(
+    tier: Tier,
+    scale: f64,
+    offset: f64,
+    degree: u32,
+    dots: &[f32; TILE],
+    out: &mut [f64; TILE],
+) {
+    match tier {
+        Tier::Scalar => {
+            for (o, &d) in out.iter_mut().zip(dots.iter()) {
+                *o = powi_mirror(scale * d as f64 + offset, degree);
+            }
+        }
+        Tier::Avx2 => dispatch_poly_block_avx2(scale, offset, degree, dots, out),
+    }
+}
+
+/// Integer power by square-and-multiply, mirroring `__powidf2` (the
+/// lowering of `f64::powi`) so the vector path can reproduce the exact
+/// multiplication sequence lane-wise.
+#[inline]
+fn powi_mirror(mut a: f64, mut b: u32) -> f64 {
+    let mut r = 1.0f64;
+    loop {
+        if b & 1 == 1 {
+            r *= a;
+        }
+        b /= 2;
+        if b == 0 {
+            break;
+        }
+        a *= a;
+    }
+    r
+}
+
+// ---------------------------------------------------------------------------
+// Vectorized exponential
+// ---------------------------------------------------------------------------
+
+/// Clamp bounds of the fast exponential: below `EXP_LO` the result is 0
+/// even after gradual underflow; above `EXP_HI` it is `+∞`.
+const EXP_LO: f64 = -746.0;
+const EXP_HI: f64 = 710.0;
+
+/// High/low split of `ln 2` (Cephes): `LN2_HI` has 21 significant bits so
+/// `n · LN2_HI` is exact for every reduction integer `|n| ≤ 1076`, and
+/// `LN2_HI + LN2_LO` matches `ln 2` to ~1e-22 (the Cephes C2 literal is
+/// kept verbatim, beyond f64 precision, hence the allow).
+const LN2_HI: f64 = 0.693_145_751_953_125;
+#[allow(clippy::excessive_precision)]
+const LN2_LO: f64 = 1.428_606_820_309_417_232_12e-6;
+
+/// `1.5 · 2^52`: adding and subtracting rounds to the nearest integer
+/// (ties to even) for `|x| < 2^51`, branch-free and identical on both
+/// tiers.
+const SHIFTER: f64 = 6_755_399_441_055_744.0;
+
+/// Taylor coefficients of `exp` on `[-ln2/2, ln2/2]`, highest order
+/// first (degree 13; truncation error ≈ 6e-18 relative, far below the
+/// Horner rounding noise).
+const EXP_POLY: [f64; 14] = [
+    1.0 / 6_227_020_800.0,
+    1.0 / 479_001_600.0,
+    1.0 / 39_916_800.0,
+    1.0 / 3_628_800.0,
+    1.0 / 362_880.0,
+    1.0 / 40_320.0,
+    1.0 / 5_040.0,
+    1.0 / 720.0,
+    1.0 / 120.0,
+    1.0 / 24.0,
+    1.0 / 6.0,
+    0.5,
+    1.0,
+    1.0,
+];
+
+/// `2^e` for `e` in the extended exponent range `[-538, 513]` (always a
+/// normal number) by direct bit construction.
+#[inline]
+fn pow2(e: i32) -> f64 {
+    debug_assert!((-1022..=1023).contains(&e));
+    f64::from_bits(((e + 1023) as u64) << 52)
+}
+
+/// Branch-free Cephes-style scalar exponential — the reference the AVX2
+/// lanes reproduce bit-for-bit. `exp(±0) = 1` exactly; underflows
+/// gradually through the denormals to 0 below ≈ −745.2; overflows to
+/// `+∞` above ≈ 709.8.
+pub fn exp_fast(x: f64) -> f64 {
+    let x = x.max(EXP_LO).min(EXP_HI);
+    // Round x/ln2 to the nearest integer, ties to even, via the shifter.
+    let n = (x * std::f64::consts::LOG2_E + SHIFTER) - SHIFTER;
+    // r = x − n·ln2 with the hi/lo split (the hi product is exact).
+    let r = x - n * LN2_HI;
+    let r = r - n * LN2_LO;
+    let mut p = EXP_POLY[0];
+    for &c in &EXP_POLY[1..] {
+        p = p * r + c;
+    }
+    // Two-step 2^n scaling: each factor stays normal, and the final
+    // multiply performs the single correctly-rounded step into the
+    // denormal range (or to 0 / ∞ at the domain edges).
+    let ni = n as i32;
+    let m1 = (ni + 1) >> 1;
+    let m2 = ni - m1;
+    (p * pow2(m2)) * pow2(m1)
+}
+
+/// Exponentiate a slice in place on the active tier (used by the fast-exp
+/// Gaussian tile finish; both tiers produce bit-identical results).
+#[inline]
+pub fn exp_v(xs: &mut [f64]) {
+    exp_v_with(active(), xs);
+}
+
+/// [`exp_v`] on an explicit tier.
+pub fn exp_v_with(tier: Tier, xs: &mut [f64]) {
+    match tier {
+        Tier::Scalar => {
+            for v in xs.iter_mut() {
+                *v = exp_fast(*v);
+            }
+        }
+        Tier::Avx2 => dispatch_exp_v_avx2(xs),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 dispatch shims (panic if the tier is requested where unavailable)
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod shims {
+    use super::{avx2, Tier, TILE};
+
+    #[inline]
+    fn check() {
+        assert!(Tier::Avx2.available(), "AVX2 tier requested but not available");
+    }
+
+    #[inline]
+    pub(super) fn tile_dots(tile: &[f32], x: &[f32], out: &mut [f32; TILE]) {
+        check();
+        // SAFETY: `check` verified avx2+fma support at runtime.
+        unsafe { avx2::tile_dots(tile, x, out) }
+    }
+
+    #[inline]
+    pub(super) fn tile_dots_multi(tile: &[f32], xs: &[&[f32]], out: &mut [[f32; TILE]]) {
+        check();
+        // SAFETY: `check` verified avx2+fma support at runtime.
+        unsafe { avx2::tile_dots_multi(tile, xs, out) }
+    }
+
+    #[inline]
+    pub(super) fn gaussian_d2(
+        x_norm2: f32,
+        dots: &[f32; TILE],
+        norms: &[f32; TILE],
+        d2: &mut [f64; TILE],
+    ) {
+        check();
+        // SAFETY: `check` verified avx2+fma support at runtime.
+        unsafe { avx2::gaussian_d2(x_norm2, dots, norms, d2) }
+    }
+
+    #[inline]
+    pub(super) fn linear_block(dots: &[f32; TILE], out: &mut [f64; TILE]) {
+        check();
+        // SAFETY: `check` verified avx2+fma support at runtime.
+        unsafe { avx2::linear_block(dots, out) }
+    }
+
+    #[inline]
+    pub(super) fn poly_block(
+        scale: f64,
+        offset: f64,
+        degree: u32,
+        dots: &[f32; TILE],
+        out: &mut [f64; TILE],
+    ) {
+        check();
+        // SAFETY: `check` verified avx2+fma support at runtime.
+        unsafe { avx2::poly_block(scale, offset, degree, dots, out) }
+    }
+
+    #[inline]
+    pub(super) fn exp_v(xs: &mut [f64]) {
+        check();
+        // SAFETY: `check` verified avx2+fma support at runtime.
+        unsafe { avx2::exp_v(xs) }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+use shims::{
+    exp_v as dispatch_exp_v_avx2, gaussian_d2 as dispatch_gaussian_d2_avx2,
+    linear_block as dispatch_linear_block_avx2, poly_block as dispatch_poly_block_avx2,
+    tile_dots as dispatch_tile_dots_avx2, tile_dots_multi as dispatch_tile_dots_multi_avx2,
+};
+
+#[cfg(not(target_arch = "x86_64"))]
+mod shims {
+    use super::TILE;
+
+    fn unavailable() -> ! {
+        panic!("AVX2 tier requested on a non-x86_64 architecture");
+    }
+
+    pub(super) fn tile_dots(_: &[f32], _: &[f32], _: &mut [f32; TILE]) {
+        unavailable()
+    }
+
+    pub(super) fn tile_dots_multi(_: &[f32], _: &[&[f32]], _: &mut [[f32; TILE]]) {
+        unavailable()
+    }
+
+    pub(super) fn gaussian_d2(_: f32, _: &[f32; TILE], _: &[f32; TILE], _: &mut [f64; TILE]) {
+        unavailable()
+    }
+
+    pub(super) fn linear_block(_: &[f32; TILE], _: &mut [f64; TILE]) {
+        unavailable()
+    }
+
+    pub(super) fn poly_block(_: f64, _: f64, _: u32, _: &[f32; TILE], _: &mut [f64; TILE]) {
+        unavailable()
+    }
+
+    pub(super) fn exp_v(_: &mut [f64]) {
+        unavailable()
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+use shims::{
+    exp_v as dispatch_exp_v_avx2, gaussian_d2 as dispatch_gaussian_d2_avx2,
+    linear_block as dispatch_linear_block_avx2, poly_block as dispatch_poly_block_avx2,
+    tile_dots as dispatch_tile_dots_avx2, tile_dots_multi as dispatch_tile_dots_multi_avx2,
+};
+
+// ---------------------------------------------------------------------------
+// AVX2+FMA micro-kernels
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    use super::{EXP_HI, EXP_LO, EXP_POLY, LN2_HI, LN2_LO, SHIFTER, TILE};
+
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn tile_dots(tile: &[f32], x: &[f32], out: &mut [f32; TILE]) {
+        debug_assert_eq!(tile.len(), x.len() * TILE);
+        let mut acc = _mm256_setzero_ps();
+        let mut ptr = tile.as_ptr();
+        for &xk in x {
+            let lanes = _mm256_loadu_ps(ptr);
+            acc = _mm256_fmadd_ps(_mm256_set1_ps(xk), lanes, acc);
+            ptr = ptr.add(TILE);
+        }
+        _mm256_storeu_ps(out.as_mut_ptr(), acc);
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn tile_dots_multi(tile: &[f32], xs: &[&[f32]], out: &mut [[f32; TILE]]) {
+        debug_assert_eq!(xs.len(), out.len());
+        let mut q = 0usize;
+        // Blocks of four queries share every loaded 8-lane feature vector.
+        while q + 4 <= xs.len() {
+            let (x0, x1, x2, x3) = (xs[q], xs[q + 1], xs[q + 2], xs[q + 3]);
+            let d = x0.len();
+            debug_assert_eq!(tile.len(), d * TILE);
+            let mut a0 = _mm256_setzero_ps();
+            let mut a1 = _mm256_setzero_ps();
+            let mut a2 = _mm256_setzero_ps();
+            let mut a3 = _mm256_setzero_ps();
+            let mut ptr = tile.as_ptr();
+            for k in 0..d {
+                let lanes = _mm256_loadu_ps(ptr);
+                a0 = _mm256_fmadd_ps(_mm256_set1_ps(*x0.get_unchecked(k)), lanes, a0);
+                a1 = _mm256_fmadd_ps(_mm256_set1_ps(*x1.get_unchecked(k)), lanes, a1);
+                a2 = _mm256_fmadd_ps(_mm256_set1_ps(*x2.get_unchecked(k)), lanes, a2);
+                a3 = _mm256_fmadd_ps(_mm256_set1_ps(*x3.get_unchecked(k)), lanes, a3);
+                ptr = ptr.add(TILE);
+            }
+            _mm256_storeu_ps(out[q].as_mut_ptr(), a0);
+            _mm256_storeu_ps(out[q + 1].as_mut_ptr(), a1);
+            _mm256_storeu_ps(out[q + 2].as_mut_ptr(), a2);
+            _mm256_storeu_ps(out[q + 3].as_mut_ptr(), a3);
+            q += 4;
+        }
+        while q < xs.len() {
+            tile_dots(tile, xs[q], &mut out[q]);
+            q += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn gaussian_d2(
+        x_norm2: f32,
+        dots: &[f32; TILE],
+        norms: &[f32; TILE],
+        d2: &mut [f64; TILE],
+    ) {
+        let xn = _mm256_set1_ps(x_norm2);
+        let dv = _mm256_loadu_ps(dots.as_ptr());
+        let nv = _mm256_loadu_ps(norms.as_ptr());
+        // Same operation order as the scalar loop: (xn + n) − 2d, clamped.
+        let t = _mm256_sub_ps(_mm256_add_ps(xn, nv), _mm256_add_ps(dv, dv));
+        let t = _mm256_max_ps(t, _mm256_setzero_ps());
+        let lo = _mm256_cvtps_pd(_mm256_castps256_ps128(t));
+        let hi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(t));
+        _mm256_storeu_pd(d2.as_mut_ptr(), lo);
+        _mm256_storeu_pd(d2.as_mut_ptr().add(4), hi);
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn linear_block(dots: &[f32; TILE], out: &mut [f64; TILE]) {
+        let dv = _mm256_loadu_ps(dots.as_ptr());
+        let lo = _mm256_cvtps_pd(_mm256_castps256_ps128(dv));
+        let hi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(dv));
+        _mm256_storeu_pd(out.as_mut_ptr(), lo);
+        _mm256_storeu_pd(out.as_mut_ptr().add(4), hi);
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn poly_block(
+        scale: f64,
+        offset: f64,
+        degree: u32,
+        dots: &[f32; TILE],
+        out: &mut [f64; TILE],
+    ) {
+        let dv = _mm256_loadu_ps(dots.as_ptr());
+        let s = _mm256_set1_pd(scale);
+        let o = _mm256_set1_pd(offset);
+        let dv_lo = _mm256_cvtps_pd(_mm256_castps256_ps128(dv));
+        let dv_hi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(dv));
+        let lo = _mm256_add_pd(_mm256_mul_pd(s, dv_lo), o);
+        let hi = _mm256_add_pd(_mm256_mul_pd(s, dv_hi), o);
+        _mm256_storeu_pd(out.as_mut_ptr(), powi4(lo, degree));
+        _mm256_storeu_pd(out.as_mut_ptr().add(4), powi4(hi, degree));
+    }
+
+    /// Lane-wise square-and-multiply, same sequence as `powi_mirror`.
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn powi4(mut a: __m256d, mut b: u32) -> __m256d {
+        let mut r = _mm256_set1_pd(1.0);
+        loop {
+            if b & 1 == 1 {
+                r = _mm256_mul_pd(r, a);
+            }
+            b /= 2;
+            if b == 0 {
+                break;
+            }
+            a = _mm256_mul_pd(a, a);
+        }
+        r
+    }
+
+    /// `2^e` per lane from four i32 exponents (extended range, always a
+    /// normal number) by direct bit construction.
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn pow2_4(e: __m128i) -> __m256d {
+        let e64 = _mm256_cvtepi32_epi64(e);
+        let bits = _mm256_slli_epi64::<52>(_mm256_add_epi64(e64, _mm256_set1_epi64x(1023)));
+        _mm256_castsi256_pd(bits)
+    }
+
+    /// Four-lane exponential, bit-identical to `exp_fast` per lane (same
+    /// clamp / shifter rounding / hi-lo reduction / Horner / two-step
+    /// scaling, all unfused).
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn exp4(x: __m256d) -> __m256d {
+        let x = _mm256_min_pd(_mm256_max_pd(x, _mm256_set1_pd(EXP_LO)), _mm256_set1_pd(EXP_HI));
+        let shifter = _mm256_set1_pd(SHIFTER);
+        let scaled = _mm256_mul_pd(x, _mm256_set1_pd(std::f64::consts::LOG2_E));
+        let n = _mm256_sub_pd(_mm256_add_pd(scaled, shifter), shifter);
+        let r = _mm256_sub_pd(x, _mm256_mul_pd(n, _mm256_set1_pd(LN2_HI)));
+        let r = _mm256_sub_pd(r, _mm256_mul_pd(n, _mm256_set1_pd(LN2_LO)));
+        let mut p = _mm256_set1_pd(EXP_POLY[0]);
+        for &c in &EXP_POLY[1..] {
+            p = _mm256_add_pd(_mm256_mul_pd(p, r), _mm256_set1_pd(c));
+        }
+        let ni = _mm256_cvtpd_epi32(n);
+        let m1 = _mm_srai_epi32::<1>(_mm_add_epi32(ni, _mm_set1_epi32(1)));
+        let m2 = _mm_sub_epi32(ni, m1);
+        _mm256_mul_pd(_mm256_mul_pd(p, pow2_4(m2)), pow2_4(m1))
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn exp_v(xs: &mut [f64]) {
+        let mut chunks = xs.chunks_exact_mut(4);
+        for c in &mut chunks {
+            let v = _mm256_loadu_pd(c.as_ptr());
+            _mm256_storeu_pd(c.as_mut_ptr(), exp4(v));
+        }
+        for v in chunks.into_remainder() {
+            *v = super::exp_fast(*v);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_tier_is_always_available() {
+        assert!(Tier::Scalar.available());
+        assert_eq!(Tier::Scalar.name(), "scalar");
+        assert_eq!(Tier::Avx2.name(), "avx2");
+    }
+
+    #[test]
+    fn forced_scalar_override_is_thread_local_and_restored() {
+        assert!(!force_scalar());
+        let tier = with_forced_scalar(|| {
+            assert!(force_scalar());
+            assert_eq!(active(), Tier::Scalar);
+            active()
+        });
+        assert_eq!(tier, Tier::Scalar);
+        assert!(!force_scalar());
+        // Another thread is unaffected by a set override here.
+        set_force_scalar(true);
+        let other = std::thread::spawn(force_scalar).join().unwrap();
+        assert!(!other);
+        set_force_scalar(false);
+    }
+
+    #[test]
+    fn exp_fast_hits_the_easy_anchors() {
+        assert_eq!(exp_fast(0.0), 1.0);
+        assert_eq!(exp_fast(-0.0), 1.0);
+        let e = exp_fast(1.0);
+        assert!((e - std::f64::consts::E).abs() < 1e-14);
+        assert_eq!(exp_fast(-1000.0), 0.0);
+        assert_eq!(exp_fast(1000.0), f64::INFINITY);
+    }
+
+    #[test]
+    fn exp_fast_matches_libm_on_a_coarse_grid() {
+        let mut worst = 0.0f64;
+        let mut x = -700.0f64;
+        while x <= 700.0 {
+            let got = exp_fast(x);
+            let want = x.exp();
+            let rel = (got - want).abs() / want;
+            worst = worst.max(rel);
+            x += 0.37;
+        }
+        assert!(worst <= 1e-14, "max relative error {worst:e}");
+    }
+
+    #[test]
+    fn tile_dots_scalar_matches_reference_sum() {
+        let d = 5usize;
+        let mut tile = vec![0.0f32; d * TILE];
+        for (i, v) in tile.iter_mut().enumerate() {
+            *v = (i as f32) * 0.25 - 2.0;
+        }
+        let x: Vec<f32> = (0..d).map(|k| 0.5 * k as f32 - 1.0).collect();
+        let mut out = [0.0f32; TILE];
+        tile_dots_with(Tier::Scalar, &tile, &x, &mut out);
+        for l in 0..TILE {
+            let want: f32 = (0..d).map(|k| x[k] * tile[k * TILE + l]).sum();
+            assert!((out[l] - want).abs() < 1e-4, "lane {l}: {} vs {want}", out[l]);
+        }
+    }
+
+    #[test]
+    fn powi_mirror_matches_powi() {
+        for &b in &[0.0f64, 1.0, -1.5, 0.875, 3.25] {
+            for deg in 1u32..=6 {
+                let got = powi_mirror(b, deg);
+                let want = b.powi(deg as i32);
+                assert!(
+                    (got - want).abs() <= 1e-12 * (1.0 + want.abs()),
+                    "base {b} deg {deg}: {got} vs {want}"
+                );
+            }
+        }
+    }
+}

@@ -21,7 +21,7 @@ const SUBCOMMANDS: &[(&str, &str)] = &[
     ("table3", "training-time improvement, merging frequency, agreement"),
     ("figure2", "h(m,k) and WD(m,k) surfaces (CSV + ASCII)"),
     ("figure3", "merging-time Section A/B breakdown"),
-    ("bench", "perf harnesses: kernel-row/fit (BENCH_kernel.json) or --maintenance"),
+    ("bench", "perf harnesses: kernel-row/fit (BENCH_kernel.json), --maintenance, or --all"),
     ("serve", "online serving + streaming ingest: --port <p> | --replay <file.libsvm>"),
     ("train", "single training run: repro train <profile|file.libsvm>"),
     ("eval", "evaluate a saved model: repro eval <model.bsvm> <file.libsvm>"),
@@ -67,12 +67,24 @@ fn opt_specs() -> Vec<OptSpec> {
             takes_value: true,
             help: "train/serve: pairs shed per maintenance event (default 0 = auto, ceil(W)+1)",
         },
+        OptSpec {
+            name: "fast-exp",
+            takes_value: false,
+            help: "train/serve/eval: vectorized exp tier for Gaussian tiles (pinned \
+                   <= 1e-14 relative error; default = libm exp, bit-identical engine)",
+        },
         OptSpec { name: "json", takes_value: false, help: "train: machine-readable output" },
         OptSpec { name: "quick", takes_value: false, help: "bench: smoke mode (short samples)" },
         OptSpec {
             name: "maintenance",
             takes_value: false,
             help: "bench: budget-maintenance amortization harness (BENCH_maintenance.json)",
+        },
+        OptSpec {
+            name: "all",
+            takes_value: false,
+            help: "bench: run kernel + maintenance harnesses and write a merged \
+                   top-level BENCH_summary.json (per-bench files unchanged)",
         },
         OptSpec { name: "model-out", takes_value: true, help: "train: save the model here" },
         OptSpec { name: "table-out", takes_value: true, help: "precompute: output path" },
@@ -140,6 +152,9 @@ fn config_from(args: &Args) -> Result<ExperimentConfig> {
     if let Some(x) = args.get("out") {
         cfg.out_dir = x.to_string();
     }
+    if args.flag("fast-exp") {
+        cfg.fast_exp = true;
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -197,7 +212,21 @@ fn main() -> Result<()> {
             println!("{}", experiments::figure3::render(&bars, &cfg)?);
         }
         "bench" => {
-            if args.flag("maintenance") {
+            if args.flag("all") {
+                // One invocation, one trajectory artifact: kernel +
+                // maintenance harnesses, merged into BENCH_summary.json
+                // (the per-bench files keep their paths for the gates).
+                let kernel = experiments::kernel_bench::run(args.flag("quick"), cfg.threads)?;
+                println!("{kernel}");
+                let kpath = experiments::kernel_bench::write(&kernel, &cfg.out_dir)?;
+                eprintln!("bench report written to {kpath}");
+                let maint = experiments::maint_bench::run(args.flag("quick"))?;
+                print!("{}", experiments::maint_bench::render(&maint));
+                let mpath = experiments::maint_bench::write(&maint, &cfg.out_dir)?;
+                eprintln!("maintenance bench report written to {mpath}");
+                let spath = experiments::write_bench_summary(&cfg.out_dir, &kernel, &maint)?;
+                eprintln!("merged bench summary written to {spath}");
+            } else if args.flag("maintenance") {
                 let report = experiments::maint_bench::run(args.flag("quick"))?;
                 print!("{}", experiments::maint_bench::render(&report));
                 let path = experiments::maint_bench::write(&report, &cfg.out_dir)?;
@@ -230,6 +259,10 @@ fn main() -> Result<()> {
             // CLI flag wins; a JSON --config file can also set these.
             scfg.svm.maint_slack = args.get_f64("maint-slack")?.unwrap_or(cfg.maint_slack);
             scfg.svm.maint_pairs = args.get_usize("maint-pairs")?.unwrap_or(cfg.maint_pairs);
+            // `--fast-exp` (or `fast_exp` in a JSON config) selects the
+            // exponential tier for pipeline-trained AND pre-published
+            // models alike.
+            scfg.svm.fast_exp = cfg.fast_exp;
             let kernel_opt = args.get("kernel").map(KernelSpec::parse).transpose()?;
             let kernel = match (kernel_opt, args.get_f64("gamma")?) {
                 (Some(k), _) => Some(k),
@@ -320,6 +353,11 @@ fn main() -> Result<()> {
                 println!("dataset            : {} ({} rows)", run.dataset, run.n_train);
                 println!("strategy           : {}", strategy.name());
                 println!("kernel             : {}", run.model.kernel_spec().describe());
+                println!(
+                    "simd tier          : {}{}",
+                    budgetsvm::kernel::simd::active().name(),
+                    if cfg.fast_exp { " + fast-exp" } else { "" }
+                );
                 println!("steps              : {}", run.summary.steps);
                 println!("support vectors    : {}", run.model.num_sv());
                 println!(
@@ -345,7 +383,8 @@ fn main() -> Result<()> {
                 _ => bail!("usage: repro eval <model.bsvm> <file.libsvm> [--gamma ...]"),
             };
             // Reads both BSVMMDL1 (legacy) and BSVMMDL2 files.
-            let model = budgetsvm::model::io::load_any(model_path)?;
+            let mut model = budgetsvm::model::io::load_any(model_path)?;
+            model.set_fast_exp(cfg.fast_exp);
             let ds = budgetsvm::data::libsvm::read_file(data_path, model.dim())?;
             let acc = model.accuracy(&ds);
             println!(
@@ -468,6 +507,34 @@ mod tests {
                 .unwrap_or_else(|| panic!("flag --{flag} is not declared"));
             assert!(!spec.takes_value, "--{flag} must be a flag");
         }
+    }
+
+    #[test]
+    fn simd_and_bench_surface_is_declared() {
+        let specs = opt_specs();
+        for flag in ["fast-exp", "all"] {
+            let spec = specs
+                .iter()
+                .find(|s| s.name == flag)
+                .unwrap_or_else(|| panic!("flag --{flag} is not declared"));
+            assert!(!spec.takes_value, "--{flag} must be a flag");
+        }
+    }
+
+    #[test]
+    fn fast_exp_and_bench_all_parse_through_the_cli() {
+        let argv: Vec<String> =
+            ["train", "ijcnn", "--fast-exp"].iter().map(|s| s.to_string()).collect();
+        let args = Args::parse(&argv, &opt_specs()).unwrap();
+        assert!(args.flag("fast-exp"));
+        let cfg = config_from(&args).unwrap();
+        assert!(cfg.fast_exp);
+
+        let argv: Vec<String> =
+            ["bench", "--all", "--quick"].iter().map(|s| s.to_string()).collect();
+        let args = Args::parse(&argv, &opt_specs()).unwrap();
+        assert!(args.flag("all") && args.flag("quick"));
+        assert!(!config_from(&args).unwrap().fast_exp);
     }
 
     #[test]

@@ -8,19 +8,24 @@
 //! feature-major within the tile with co-located squared norms (plus a
 //! row-major mirror for random access and serialization — see the
 //! [`store`] module docs for the exact invariants: tile size, zeroed
-//! padding lanes, swap-remove semantics). The hot kernel row
-//! `k(x, sv_j), j = 1..B` is then computed tile-by-tile: one pass over `x`
-//! yields all eight inner products of a tile through an 8-lane-unrolled
-//! FMA micro-kernel ([`SvStore::tile_dots`]), and the kernel finishes the
-//! tile in one fused pass ([`crate::kernel::Kernel::eval_block`] — the
-//! Gaussian shares a single distance-reconstruction + `exp` loop).
+//! padding lanes, swap-remove semantics, 64-byte-aligned tile base). The
+//! hot kernel row `k(x, sv_j), j = 1..B` is then computed tile-by-tile:
+//! one pass over `x` yields all eight inner products of a tile through
+//! the runtime-dispatched FMA micro-kernel ([`SvStore::tile_dots`] —
+//! AVX2+FMA or the portable 8-lane loop, see [`crate::kernel::simd`]),
+//! and the kernel finishes the tile in one fused pass
+//! ([`crate::kernel::Kernel::eval_block`] — the Gaussian shares a single
+//! distance-reconstruction + `exp` loop; the opt-in `--fast-exp` tier
+//! swaps the libm `exp` for the vectorized `exp_v` under a pinned
+//! ≤ 1e-14 relative-error bound).
 //!
-//! To add a fused kernel: implement `Kernel::eval_dot` (value from
-//! `⟨x, s⟩` and the two squared norms — this alone makes the blocked
-//! engine correct via the generic `eval_block`), then override
-//! `eval_block` if a tile-wise form saves work. Padding lanes carry zero
-//! data and zero norms; consumers mask them by coefficient range, never
-//! inside the micro-kernel.
+//! To add a fused kernel, follow the three-layer contract documented in
+//! [`crate::kernel`] (module docs): `eval_dot` for correctness,
+//! `eval_block` for tile fusion, an optional [`crate::kernel::simd`]
+//! micro-kernel for the vector tier — plus the fast-exp accuracy policy
+//! for any transcendental shortcut. Padding lanes carry zero data and
+//! zero norms; consumers mask them by coefficient range, never inside
+//! the micro-kernel.
 //!
 //! Coefficients stay behind a lazy global scale factor `Φ` so the Pegasos
 //! shrink step `w ← (1 − 1/t)·w` is O(1) instead of O(B).
@@ -287,26 +292,32 @@ impl<K: Kernel + Copy> BudgetModel<K> {
     }
 
     /// κ rows of several *stored* SVs against every SV, in ONE pass over
-    /// the blocked tile store: each tile's feature data is visited once
-    /// and dotted against all `queries` before moving on (a tall-skinny
-    /// matrix product rather than `queries.len()` independent row scans —
-    /// the amortized candidate scan of multi-pair budget maintenance).
-    /// Row `q` of `out` (stride `num_sv`) is bit-identical to
-    /// `kernel_row(sv(queries[q]), ...)`: every entry runs the exact same
-    /// blocked arithmetic, only the traversal order differs.
+    /// the blocked tile store: each tile's feature data is loaded once and
+    /// dotted against all `queries` before moving on
+    /// ([`SvStore::tile_dots_multi`] — in the AVX2 tier every loaded
+    /// 8-lane feature vector feeds four pivots' accumulators; a
+    /// tall-skinny matrix product rather than `queries.len()` independent
+    /// row scans — the amortized candidate scan of multi-pair budget
+    /// maintenance). Row `q` of `out` (stride `num_sv`) is bit-identical
+    /// to `kernel_row(sv(queries[q]), ...)`: every entry runs the exact
+    /// same blocked arithmetic, only the traversal order differs.
     pub fn kernel_rows_for_svs(&self, queries: &[usize], out: &mut [f64]) {
         let count = self.store.len();
         debug_assert!(out.len() >= queries.len() * count);
-        let mut dots = [0.0f32; TILE];
+        if queries.is_empty() || count == 0 {
+            return;
+        }
+        let qrows: Vec<&[f32]> = queries.iter().map(|&sv| self.store.row(sv)).collect();
+        let mut dots = vec![[0.0f32; TILE]; queries.len()];
         let mut kvals = [0.0f64; TILE];
         for t in 0..count.div_ceil(TILE) {
             let base = t * TILE;
             let lanes = TILE.min(count - base);
+            self.store.tile_dots_multi(t, &qrows, &mut dots);
             for (q, &sv) in queries.iter().enumerate() {
-                self.store.tile_dots(t, self.store.row(sv), &mut dots);
                 self.kernel.eval_block(
                     self.store.norm2(sv),
-                    &dots,
+                    &dots[q],
                     self.store.tile_norms(t),
                     &mut kvals,
                 );
@@ -439,6 +450,21 @@ impl<K: Kernel + Copy> BudgetModel<K> {
     }
 }
 
+impl BudgetModel<Gaussian> {
+    /// Select the exponential tier of the blocked Gaussian tile path:
+    /// `false` (default) = libm `exp` semantics, `true` = the vectorized
+    /// [`crate::kernel::simd::exp_v`] (≤ 1e-14 relative). A runtime
+    /// execution choice only — never serialized with the model.
+    pub fn set_fast_exp(&mut self, fast_exp: bool) {
+        self.kernel.fast_exp = fast_exp;
+    }
+
+    /// Whether the fast-exp tier is selected.
+    pub fn fast_exp(&self) -> bool {
+        self.kernel.fast_exp
+    }
+}
+
 /// Dispatch a method call to whichever kernel variant an [`AnyModel`] holds.
 macro_rules! for_any_model {
     ($any:expr, $m:ident => $body:expr) => {
@@ -566,6 +592,24 @@ impl AnyModel {
     /// Decision values for a flat row-major buffer on `threads` workers.
     pub fn decision_rows(&self, x: &[f32], threads: usize) -> Vec<f64> {
         for_any_model!(self, m => m.decision_rows(x, threads))
+    }
+
+    /// Select the fast-exp tier on a Gaussian model (no-op for the other
+    /// kernels, which evaluate no exponential). See
+    /// [`BudgetModel::set_fast_exp`].
+    pub fn set_fast_exp(&mut self, fast_exp: bool) {
+        if let AnyModel::Gaussian(m) = self {
+            m.set_fast_exp(fast_exp);
+        }
+    }
+
+    /// Whether the fast-exp tier is selected (always `false` for
+    /// non-Gaussian kernels).
+    pub fn fast_exp(&self) -> bool {
+        match self {
+            AnyModel::Gaussian(m) => m.fast_exp(),
+            _ => false,
+        }
     }
 
     /// Borrow the Gaussian variant, if that is what this model is.
@@ -911,6 +955,30 @@ mod tests {
             assert!((m.decision(&x) - expect).abs() < 1e-9, "{}", spec.describe());
             assert_eq!(m.predict(&x), if expect >= 0.0 { 1.0 } else { -1.0 });
         }
+    }
+
+    #[test]
+    fn fast_exp_toggle_is_close_gaussian_only_and_not_serialized() {
+        let mut m = model_with(&[(&[0.0, 0.5], 1.25), (&[1.0, -0.5], -0.75)]);
+        let x = [0.4f32, 0.1];
+        let before = m.decision(&x);
+        assert!(!m.fast_exp());
+        m.set_fast_exp(true);
+        assert!(m.fast_exp());
+        let after = m.decision(&x);
+        assert!(
+            (before - after).abs() <= 1e-12 * (1.0 + before.abs()),
+            "fast-exp decision drifted: {before} vs {after}"
+        );
+        // The tier is not a model property: the spec is unchanged.
+        assert_eq!(m.kernel_spec(), KernelSpec::gaussian(0.5));
+        // Non-Gaussian kernels have no exponential: the toggle is a no-op.
+        let mut lm = AnyModel::new(2, KernelSpec::linear(), 2).unwrap();
+        lm.set_fast_exp(true);
+        assert!(!lm.fast_exp());
+        let mut gm = AnyModel::new(2, KernelSpec::gaussian(1.0), 2).unwrap();
+        gm.set_fast_exp(true);
+        assert!(gm.fast_exp());
     }
 
     #[test]

@@ -9,14 +9,20 @@
 //!   groups of `TILE = 8` consecutive SVs, stored *feature-major within
 //!   the tile* (`tiles[t·d·T + k·T + l]` is feature `k` of SV `t·T + l`).
 //!   One pass over a query row `x` then computes all `TILE` inner products
-//!   of a tile with a broadcast-FMA micro-kernel — `x[k]` is loaded once
-//!   and multiplied against 8 contiguous lane values, which the
-//!   auto-vectorizer turns into a single 8-wide `f32` FMA per feature.
+//!   of a tile with a broadcast-FMA micro-kernel: `x[k]` is loaded once
+//!   and multiplied against 8 contiguous lane values — one 8-wide `f32`
+//!   FMA per feature, executed by the runtime-dispatched
+//!   [`crate::kernel::simd`] layer (hand-written AVX2+FMA when the CPU
+//!   supports it, the portable scalar loop otherwise).
 //!
 //! Invariants (relied on by [`crate::model::BudgetModel`] and the tests):
 //!
 //! * `tiles.len() == ⌈count/T⌉ · d · T` and `norms.len() == ⌈count/T⌉ · T`;
 //!   both layouts always describe the same `count` rows.
+//! * `tiles` and `norms` live in [`AlignedF32`] buffers whose base is
+//!   64-byte aligned; since one tile spans `32·d` bytes, every 8-lane
+//!   feature group starts on a 32-byte boundary — the AVX2 loads are
+//!   always aligned (push/swap_remove/clear never change the base).
 //! * Padding lanes of the last tile hold zero data and zero norms, so a
 //!   kernel evaluated on a padding lane is a well-defined (if meaningless)
 //!   number — consumers mask padding by *coefficient range*, never by
@@ -24,7 +30,8 @@
 //! * [`SvStore::swap_remove`] mirrors the classic swap-remove in both
 //!   layouts (order is not preserved) and re-zeroes the vacated lane.
 
-use crate::kernel::{norm2, TILE};
+use crate::kernel::{norm2, simd, TILE};
+use crate::util::aligned::AlignedF32;
 
 /// Support vectors in synchronized row-major + SoA-tile layouts with
 /// co-located squared norms.
@@ -34,10 +41,11 @@ pub struct SvStore {
     count: usize,
     /// Row-major mirror, `count * d` valid entries.
     rows: Vec<f32>,
-    /// SoA tiles, `⌈count/TILE⌉ * d * TILE` entries, padding lanes zero.
-    tiles: Vec<f32>,
+    /// SoA tiles, `⌈count/TILE⌉ * d * TILE` entries, padding lanes zero;
+    /// 64-byte-aligned base so vector loads never straddle unaligned.
+    tiles: AlignedF32,
     /// Squared L2 norms, padded to a TILE multiple (padding entries zero).
-    norms: Vec<f32>,
+    norms: AlignedF32,
 }
 
 impl SvStore {
@@ -48,8 +56,8 @@ impl SvStore {
             d,
             count: 0,
             rows: Vec::with_capacity(capacity * d),
-            tiles: Vec::with_capacity(cap_tiles * d * TILE),
-            norms: Vec::with_capacity(cap_tiles * TILE),
+            tiles: AlignedF32::with_capacity(cap_tiles * d * TILE),
+            norms: AlignedF32::with_capacity(cap_tiles * TILE),
         }
     }
 
@@ -94,22 +102,32 @@ impl SvStore {
         s.try_into().expect("tile norm slice has TILE entries")
     }
 
-    /// The 8-lane-unrolled FMA micro-kernel: one pass over `x` computing
-    /// the inner products against all `TILE` lanes of tile `t`. The inner
-    /// fixed-bound loop compiles to one 8-wide f32 multiply-add per
-    /// feature (the `chunks_exact` iterator keeps bounds checks out of the
-    /// loop body).
+    /// Feature-major data of tile `t` (`d * TILE` entries).
+    #[inline]
+    fn tile_data(&self, t: usize) -> &[f32] {
+        &self.tiles[t * self.d * TILE..(t + 1) * self.d * TILE]
+    }
+
+    /// The 8-lane FMA micro-kernel: one pass over `x` computing the inner
+    /// products against all `TILE` lanes of tile `t`, through the
+    /// runtime-dispatched [`crate::kernel::simd`] layer (AVX2+FMA when
+    /// available, the portable 8-lane-unrolled loop otherwise).
     #[inline]
     pub fn tile_dots(&self, t: usize, x: &[f32], out: &mut [f32; TILE]) {
         debug_assert_eq!(x.len(), self.d);
-        let tile = &self.tiles[t * self.d * TILE..(t + 1) * self.d * TILE];
-        let mut acc = [0.0f32; TILE];
-        for (lanes, &xk) in tile.chunks_exact(TILE).zip(x.iter()) {
-            for (a, &v) in acc.iter_mut().zip(lanes) {
-                *a += xk * v;
-            }
+        simd::tile_dots(self.tile_data(t), x, out);
+    }
+
+    /// Inner products of several query rows against tile `t`, visiting the
+    /// tile's feature data once for all queries (the amortized multi-pivot
+    /// scan of `BudgetModel::kernel_rows_for_svs`). Row `q` of `out` is
+    /// bit-identical to `tile_dots(t, xs[q], ...)`.
+    #[inline]
+    pub fn tile_dots_multi(&self, t: usize, xs: &[&[f32]], out: &mut [[f32; TILE]]) {
+        for x in xs {
+            debug_assert_eq!(x.len(), self.d);
         }
-        *out = acc;
+        simd::tile_dots_multi(self.tile_data(t), xs, out);
     }
 
     /// Append a row; its squared norm is computed here (same `norm2` as
@@ -291,5 +309,78 @@ mod tests {
         s.swap_remove(0);
         assert!(s.is_empty());
         assert_eq!(s.num_tiles(), 0);
+    }
+
+    #[test]
+    fn tile_storage_stays_64_byte_aligned_through_churn() {
+        // The AVX2 micro-kernels rely on the aligned-buffer invariant:
+        // the tile base is 64-byte aligned whenever an allocation exists,
+        // and push / swap_remove / clear never break it.
+        let check = |s: &SvStore, what: &str| {
+            if s.tiles.capacity() > 0 {
+                assert_eq!(
+                    s.tiles.as_ptr() as usize % crate::util::aligned::ALIGN,
+                    0,
+                    "tile base unaligned {what}"
+                );
+            }
+            if s.norms.capacity() > 0 {
+                assert_eq!(
+                    s.norms.as_ptr() as usize % crate::util::aligned::ALIGN,
+                    0,
+                    "norm base unaligned {what}"
+                );
+            }
+        };
+        let mut rng = Rng::new(0xA11A);
+        let mut s = SvStore::new(5, 2);
+        check(&s, "after new");
+        for step in 0..120 {
+            if s.is_empty() || rng.bernoulli(0.6) {
+                let row: Vec<f32> = (0..5).map(|_| rng.normal() as f32).collect();
+                s.push(&row);
+            } else {
+                let j = rng.below(s.len());
+                s.swap_remove(j);
+            }
+            check(&s, &format!("at churn step {step}"));
+        }
+        s.clear();
+        check(&s, "after clear");
+        s.push(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        check(&s, "after post-clear push");
+    }
+
+    #[test]
+    fn tile_dots_multi_bit_matches_single_queries() {
+        let d = 7usize;
+        let mut rng = Rng::new(0x517E);
+        let mut s = SvStore::new(d, 8);
+        for _ in 0..19 {
+            let row: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+            s.push(&row);
+        }
+        // 1..=6 queries cover the 4-wide SIMD block plus remainders.
+        let queries: Vec<Vec<f32>> = (0..6)
+            .map(|_| (0..d).map(|_| rng.normal() as f32).collect())
+            .collect();
+        for nq in 1..=queries.len() {
+            let refs: Vec<&[f32]> = queries[..nq].iter().map(|v| v.as_slice()).collect();
+            let mut multi = vec![[0.0f32; TILE]; nq];
+            let mut single = [0.0f32; TILE];
+            for t in 0..s.num_tiles() {
+                s.tile_dots_multi(t, &refs, &mut multi);
+                for (q, x) in refs.iter().enumerate() {
+                    s.tile_dots(t, x, &mut single);
+                    for l in 0..TILE {
+                        assert_eq!(
+                            multi[q][l].to_bits(),
+                            single[l].to_bits(),
+                            "nq={nq} tile {t} query {q} lane {l}"
+                        );
+                    }
+                }
+            }
+        }
     }
 }

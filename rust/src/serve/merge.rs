@@ -65,6 +65,9 @@ pub fn merge_shard_models(
 
     let capacity: usize = shards.iter().map(|m| m.num_sv()).sum::<usize>().max(budget + 1);
     let mut merged = AnyModel::new(d, spec, capacity)?;
+    // Preserve the shards' exponential tier (a runtime execution choice
+    // the kernel spec deliberately does not carry).
+    merged.set_fast_exp(shards[0].fast_exp());
     let mut bias = 0.0f64;
     for (m, &w) in shards.iter().zip(weights) {
         let w = w / total;

@@ -90,8 +90,17 @@ impl ModelRegistry {
     }
 
     /// Load a `BSVMMDL1/2` file and publish it as the next version.
-    pub fn publish_from_file(&self, path: impl AsRef<std::path::Path>) -> Result<u64> {
-        let model = io::load_any(path)?;
+    /// `fast_exp` selects the exponential tier of the published model
+    /// (an execution choice the model format deliberately does not carry;
+    /// pass `false` for libm semantics — the serving entry points thread
+    /// their `SvmConfig::fast_exp` through here).
+    pub fn publish_from_file(
+        &self,
+        path: impl AsRef<std::path::Path>,
+        fast_exp: bool,
+    ) -> Result<u64> {
+        let mut model = io::load_any(path)?;
+        model.set_fast_exp(fast_exp);
         Ok(self.publish(model))
     }
 }
@@ -196,7 +205,7 @@ mod tests {
             );
         }
         // And publishing the file bumps the version.
-        let v2 = reg.publish_from_file(&path).unwrap();
+        let v2 = reg.publish_from_file(&path, false).unwrap();
         assert_eq!(v2, 2);
         std::fs::remove_file(&path).ok();
     }

@@ -58,6 +58,17 @@ pub struct SvmConfig {
     /// Pairs shed per maintenance event; `0` = auto (`⌈W⌉ + 1`, exactly
     /// the overshoot a trigger guarantees).
     pub maint_pairs: usize,
+    /// Opt-in fast exponential tier for the blocked Gaussian tile path
+    /// (`--fast-exp`): the vectorized `exp_v` (≤ 1e-14 relative error,
+    /// pinned in `tests/simd.rs`) replaces libm `exp` in
+    /// `Kernel::eval_block`. `false` (the default) keeps libm exponential
+    /// semantics (exact bit-identity to the pre-SIMD engine additionally
+    /// needs the scalar tile tier — on AVX2 hardware the dot accumulation
+    /// fuses FMA, which differs at `f32` rounding on non-dyadic data). A
+    /// runtime execution choice: it changes no hyperparameter and is
+    /// never serialized with a model; non-Gaussian kernels ignore it
+    /// (they evaluate no exponential).
+    pub fast_exp: bool,
 }
 
 impl Default for SvmConfig {
@@ -70,6 +81,7 @@ impl Default for SvmConfig {
             grid: 400,
             maint_slack: 0.0,
             maint_pairs: 0,
+            fast_exp: false,
         }
     }
 }
@@ -125,6 +137,13 @@ impl SvmConfig {
     /// Set the per-event pair quota (`0` = auto, `⌈W⌉ + 1`).
     pub fn maint_pairs(mut self, pairs: usize) -> Self {
         self.maint_pairs = pairs;
+        self
+    }
+
+    /// Opt into the fast exponential tier of the blocked Gaussian tile
+    /// path (see the field docs; no-op for non-Gaussian kernels).
+    pub fn fast_exp(mut self, fast_exp: bool) -> Self {
+        self.fast_exp = fast_exp;
         self
     }
 
@@ -388,6 +407,21 @@ mod tests {
         SvmConfig::new()
             .kernel(KernelSpec::linear())
             .strategy(Strategy::Removal)
+            .validate()
+            .unwrap();
+    }
+
+    #[test]
+    fn fast_exp_knob_chains_and_validates_for_every_kernel() {
+        let cfg = SvmConfig::new().fast_exp(true);
+        assert!(cfg.fast_exp);
+        cfg.validate().unwrap();
+        assert!(!SvmConfig::new().fast_exp);
+        // Harmless (ignored) on kernels without an exponential.
+        SvmConfig::new()
+            .kernel(KernelSpec::linear())
+            .strategy(Strategy::Removal)
+            .fast_exp(true)
             .validate()
             .unwrap();
     }

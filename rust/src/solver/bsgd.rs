@@ -138,9 +138,11 @@ impl BsgdOptions {
                 lambda: self.lambda,
                 strategy: self.strategy,
                 grid: self.grid,
-                // Legacy surface: classic per-overflow maintenance.
+                // Legacy surface: classic per-overflow maintenance,
+                // libm exp semantics.
                 maint_slack: 0.0,
                 maint_pairs: 0,
+                fast_exp: false,
             },
             RunConfig {
                 passes: self.passes,
@@ -507,8 +509,12 @@ impl BsgdEstimator {
             } else {
                 train.len().min(4096)
             };
+            let mut model = AnyModel::new(train.dim(), self.config.kernel, capacity)?;
+            // Execution tier, not a hyperparameter: applied to the model's
+            // blocked tile path at creation (no-op for non-Gaussian).
+            model.set_fast_exp(self.config.fast_exp);
             self.state = Some(BsgdState {
-                model: AnyModel::new(train.dim(), self.config.kernel, capacity)?,
+                model,
                 summary: FitSummary {
                     agreement: self.run.audit.then(AgreementStats::new),
                     ..Default::default()

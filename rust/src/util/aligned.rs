@@ -1,0 +1,242 @@
+//! 64-byte-aligned growable `f32` buffer.
+//!
+//! The SoA tile storage of [`crate::model::SvStore`] is consumed by the
+//! AVX2 micro-kernels in [`crate::kernel::simd`] as 8-lane (32-byte)
+//! vector loads. A `Vec<f32>` only guarantees 4-byte alignment; this
+//! buffer guarantees a 64-byte (cache-line) aligned base, and because
+//! every tile spans `d · TILE · 4 = 32·d` bytes, *every* 8-lane feature
+//! group in the tile array then starts on a 32-byte boundary.
+//!
+//! Only the small `Vec` subset the tile store needs is implemented
+//! (`with_capacity` / `resize` / `truncate` / `clear` plus slice access
+//! through `Deref`); elements are plain `f32`, so there is no drop glue
+//! and truncation is O(1).
+
+use std::alloc::{alloc, dealloc, handle_alloc_error, Layout};
+use std::ptr::NonNull;
+
+/// Guaranteed base alignment in bytes.
+pub const ALIGN: usize = 64;
+
+/// Growable `f32` buffer whose backing allocation is always
+/// [`ALIGN`]-byte aligned (the empty buffer holds no allocation; its
+/// dangling pointer is never dereferenced).
+pub struct AlignedF32 {
+    ptr: NonNull<f32>,
+    len: usize,
+    cap: usize,
+}
+
+// SAFETY: the buffer exclusively owns its allocation; `f32` is Send+Sync.
+unsafe impl Send for AlignedF32 {}
+unsafe impl Sync for AlignedF32 {}
+
+impl AlignedF32 {
+    /// New empty buffer (no allocation).
+    pub fn new() -> Self {
+        AlignedF32 { ptr: NonNull::dangling(), len: 0, cap: 0 }
+    }
+
+    /// New empty buffer with room for `cap` elements.
+    pub fn with_capacity(cap: usize) -> Self {
+        let mut v = Self::new();
+        if cap > 0 {
+            v.grow_to(cap);
+        }
+        v
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    fn layout(cap: usize) -> Layout {
+        Layout::from_size_align(cap * std::mem::size_of::<f32>(), ALIGN)
+            .expect("aligned buffer layout overflow")
+    }
+
+    /// Reallocate to at least `min_cap` elements (amortized doubling),
+    /// preserving the first `len` elements.
+    fn grow_to(&mut self, min_cap: usize) {
+        debug_assert!(min_cap > 0);
+        let new_cap = min_cap.max(self.cap.saturating_mul(2));
+        let layout = Self::layout(new_cap);
+        // SAFETY: layout has non-zero size (new_cap ≥ min_cap ≥ 1).
+        let raw = unsafe { alloc(layout) } as *mut f32;
+        let new_ptr = match NonNull::new(raw) {
+            Some(p) => p,
+            None => handle_alloc_error(layout),
+        };
+        if self.len > 0 {
+            // SAFETY: both regions are valid for `len` elements and
+            // distinct allocations.
+            unsafe {
+                std::ptr::copy_nonoverlapping(self.ptr.as_ptr(), new_ptr.as_ptr(), self.len);
+            }
+        }
+        self.release();
+        self.ptr = new_ptr;
+        self.cap = new_cap;
+    }
+
+    fn release(&mut self) {
+        if self.cap > 0 {
+            // SAFETY: `ptr` was allocated with exactly this layout.
+            unsafe { dealloc(self.ptr.as_ptr() as *mut u8, Self::layout(self.cap)) };
+        }
+    }
+
+    /// Resize to `new_len`, filling any newly exposed tail with `value`
+    /// (matching `Vec::resize` — memory past a previous `truncate` is
+    /// refilled, never re-exposed stale).
+    pub fn resize(&mut self, new_len: usize, value: f32) {
+        if new_len > self.cap {
+            self.grow_to(new_len);
+        }
+        if new_len > self.len {
+            for i in self.len..new_len {
+                // SAFETY: i < new_len ≤ cap, and the slot is plain f32.
+                unsafe { self.ptr.as_ptr().add(i).write(value) };
+            }
+        }
+        self.len = new_len;
+    }
+
+    /// Shorten to `new_len` (no-op if already shorter); O(1).
+    pub fn truncate(&mut self, new_len: usize) {
+        if new_len < self.len {
+            self.len = new_len;
+        }
+    }
+
+    /// Remove all elements (keeps the allocation).
+    pub fn clear(&mut self) {
+        self.len = 0;
+    }
+}
+
+impl Default for AlignedF32 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Drop for AlignedF32 {
+    fn drop(&mut self) {
+        self.release();
+    }
+}
+
+impl Clone for AlignedF32 {
+    fn clone(&self) -> Self {
+        let mut v = Self::with_capacity(self.len);
+        if self.len > 0 {
+            // SAFETY: both allocations hold at least `len` elements.
+            unsafe {
+                std::ptr::copy_nonoverlapping(self.ptr.as_ptr(), v.ptr.as_ptr(), self.len);
+            }
+        }
+        v.len = self.len;
+        v
+    }
+}
+
+impl std::ops::Deref for AlignedF32 {
+    type Target = [f32];
+
+    #[inline]
+    fn deref(&self) -> &[f32] {
+        // SAFETY: `ptr` is valid for `len` initialized elements (dangling
+        // only when len == 0, which from_raw_parts permits).
+        unsafe { std::slice::from_raw_parts(self.ptr.as_ptr(), self.len) }
+    }
+}
+
+impl std::ops::DerefMut for AlignedF32 {
+    #[inline]
+    fn deref_mut(&mut self) -> &mut [f32] {
+        // SAFETY: as in `deref`, with exclusive access through `&mut self`.
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.as_ptr(), self.len) }
+    }
+}
+
+impl std::fmt::Debug for AlignedF32 {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_list().entries(self.iter()).finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn aligned(v: &AlignedF32) -> bool {
+        v.capacity() == 0 || (v.as_ptr() as usize) % ALIGN == 0
+    }
+
+    #[test]
+    fn base_pointer_is_64_byte_aligned_across_growth() {
+        let mut v = AlignedF32::with_capacity(4);
+        assert!(aligned(&v));
+        for round in 1..=8usize {
+            v.resize(round * 37, round as f32);
+            assert!(aligned(&v), "round {round}");
+            assert_eq!(v.len(), round * 37);
+            assert_eq!(v[v.len() - 1], round as f32);
+        }
+    }
+
+    #[test]
+    fn resize_fills_and_truncate_then_regrow_refills() {
+        let mut v = AlignedF32::new();
+        v.resize(5, 1.5);
+        assert_eq!(&v[..], &[1.5; 5]);
+        v.truncate(2);
+        assert_eq!(v.len(), 2);
+        v.resize(6, 0.0);
+        assert_eq!(&v[..], &[1.5, 1.5, 0.0, 0.0, 0.0, 0.0]);
+        v.clear();
+        assert!(v.is_empty());
+        v.resize(3, 2.0);
+        assert_eq!(&v[..], &[2.0; 3]);
+    }
+
+    #[test]
+    fn clone_is_deep_and_aligned() {
+        let mut v = AlignedF32::with_capacity(2);
+        v.resize(10, 0.25);
+        v[3] = -1.0;
+        let mut c = v.clone();
+        assert!(aligned(&c));
+        assert_eq!(&c[..], &v[..]);
+        c[3] = 9.0;
+        assert_eq!(v[3], -1.0);
+        // Cloning an empty buffer allocates nothing.
+        let empty = AlignedF32::new().clone();
+        assert_eq!(empty.capacity(), 0);
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn slice_views_support_mutation() {
+        let mut v = AlignedF32::with_capacity(8);
+        v.resize(8, 0.0);
+        for (i, x) in v.iter_mut().enumerate() {
+            *x = i as f32;
+        }
+        assert_eq!(v[7], 7.0);
+        let s: &[f32] = &v[2..5];
+        assert_eq!(s, &[2.0, 3.0, 4.0]);
+    }
+}

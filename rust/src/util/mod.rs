@@ -6,6 +6,8 @@
 //! `proptest`, `criterion`, `serde`, `clap`) are unavailable. Everything the
 //! system needs from them is implemented here from scratch:
 //!
+//! * [`aligned`] — a 64-byte-aligned growable `f32` buffer backing the
+//!   SoA tile storage so the AVX2 micro-kernels run on aligned lanes,
 //! * [`rng`] — a deterministic xoshiro256** PRNG with the sampling
 //!   distributions the data generators need,
 //! * [`stats`] — streaming/batch summary statistics used by the experiment
@@ -17,6 +19,7 @@
 //! * [`parallel`] — the scoped-thread work-queue pool shared by
 //!   one-vs-rest training, batch prediction, and the experiment runner.
 
+pub mod aligned;
 pub mod bench;
 pub mod json;
 pub mod parallel;

@@ -1,0 +1,420 @@
+//! Conformance suite for the SIMD dispatch seam.
+//!
+//! Three contracts are pinned here:
+//!
+//! 1. **Tier agreement.** The forced-scalar override and the dispatched
+//!    (possibly AVX2) engine agree to ≤ 1e-12 on dyadic-rational models
+//!    (where every `f32` product and partial sum is exact, so fused and
+//!    unfused accumulation coincide) — for all three kernels, odd SV
+//!    counts and churned stores. Where the hardware has AVX2, the
+//!    explicit-tier entry points are additionally compared bit-for-bit on
+//!    the operations specified as bit-identical (distance reconstruction,
+//!    widening, `exp_v`, the polynomial chain).
+//! 2. **`exp_v` accuracy.** Max relative error ≤ 1e-14 against libm over
+//!    `[-700, 700]`, exact `exp(±0) = 1`, gradual underflow through the
+//!    denormals, clamped overflow — and scalar ≡ AVX2 bitwise.
+//! 3. **Override semantics.** The thread-local forced-scalar override
+//!    really bypasses the vector path, and the fast-exp tier reaches
+//!    end-to-end accuracy parity on a real training run.
+
+use budgetsvm::kernel::simd::{self, Tier};
+use budgetsvm::kernel::{norm2, Gaussian, Kernel, Linear, Polynomial, TILE};
+use budgetsvm::model::BudgetModel;
+use budgetsvm::util::prop::forall;
+use budgetsvm::util::rng::Rng;
+
+const DIMS: [usize; 4] = [1, 3, 8, 17];
+const TOL: f64 = 1e-12;
+
+/// Dyadic rational in [-4, 4] with denominator 16 (exact products in f32).
+fn dyadic(rng: &mut Rng) -> f32 {
+    ((rng.below(129) as i64 - 64) as f32) / 16.0
+}
+
+fn dyadic_row(rng: &mut Rng, d: usize) -> Vec<f32> {
+    (0..d).map(|_| dyadic(rng)).collect()
+}
+
+/// SV count avoiding tile-size multiples most of the time.
+fn odd_count(rng: &mut Rng) -> usize {
+    let n = 1 + rng.below(26);
+    if n % TILE == 0 {
+        n + 1
+    } else {
+        n
+    }
+}
+
+fn dyadic_model<K: Kernel + Copy>(kernel: K, rng: &mut Rng, churn: bool) -> BudgetModel<K> {
+    let d = DIMS[rng.below(DIMS.len())];
+    let mut m = BudgetModel::new(d, kernel, 8);
+    if churn {
+        for _ in 0..50 {
+            if m.is_empty() || rng.bernoulli(0.6) {
+                let row = dyadic_row(rng, d);
+                m.push(&row, ((rng.below(33) as i64 - 16) as f64) / 8.0);
+            } else {
+                let j = rng.below(m.num_sv());
+                m.swap_remove(j);
+            }
+        }
+    } else {
+        let n = odd_count(rng);
+        for _ in 0..n {
+            let row = dyadic_row(rng, d);
+            m.push(&row, ((rng.below(33) as i64 - 16) as f64) / 8.0);
+        }
+    }
+    m
+}
+
+/// Dispatched vs forced-scalar agreement on one model (decision + kernel
+/// row + multi-pivot scan).
+fn check_tiers<K: Kernel + Copy>(m: &BudgetModel<K>, rng: &mut Rng, what: &str) -> (bool, String) {
+    if m.is_empty() {
+        return (true, "emptied".to_string());
+    }
+    let x = dyadic_row(rng, m.dim());
+    let xn = norm2(&x);
+    let n = m.num_sv();
+
+    let dec = m.decision_with_norm(&x, xn);
+    let mut row = vec![0.0f64; n];
+    m.kernel_row(&x, xn, &mut row);
+    let queries: Vec<usize> = (0..(1 + rng.below(n.min(6)))).map(|_| rng.below(n)).collect();
+    let mut multi = vec![0.0f64; queries.len() * n];
+    m.kernel_rows_for_svs(&queries, &mut multi);
+
+    let (dec_s, row_s, multi_s) = simd::with_forced_scalar(|| {
+        let dec_s = m.decision_with_norm(&x, xn);
+        let mut row_s = vec![0.0f64; n];
+        m.kernel_row(&x, xn, &mut row_s);
+        let mut multi_s = vec![0.0f64; queries.len() * n];
+        m.kernel_rows_for_svs(&queries, &mut multi_s);
+        (dec_s, row_s, multi_s)
+    });
+
+    if (dec - dec_s).abs() > TOL * (1.0 + dec_s.abs()) {
+        return (false, format!("{what}: decision {dec} vs scalar {dec_s}"));
+    }
+    for j in 0..n {
+        if (row[j] - row_s[j]).abs() > TOL * (1.0 + row_s[j].abs()) {
+            return (false, format!("{what}: row[{j}] {} vs scalar {}", row[j], row_s[j]));
+        }
+    }
+    for (i, (a, b)) in multi.iter().zip(&multi_s).enumerate() {
+        if (a - b).abs() > TOL * (1.0 + b.abs()) {
+            return (false, format!("{what}: multi[{i}] {a} vs scalar {b}"));
+        }
+    }
+    (true, String::new())
+}
+
+#[test]
+fn gaussian_forced_scalar_matches_dispatched_on_dyadic_models() {
+    forall("gaussian simd tiers", 96, 0x51D0, |rng| {
+        let m = dyadic_model(Gaussian::new(0.25), rng, false);
+        check_tiers(&m, rng, "gaussian")
+    });
+}
+
+#[test]
+fn linear_forced_scalar_matches_dispatched_on_dyadic_models() {
+    forall("linear simd tiers", 96, 0x51D1, |rng| {
+        let m = dyadic_model(Linear, rng, false);
+        check_tiers(&m, rng, "linear")
+    });
+}
+
+#[test]
+fn polynomial_forced_scalar_matches_dispatched_on_dyadic_models() {
+    forall("polynomial simd tiers", 96, 0x51D2, |rng| {
+        let m = dyadic_model(Polynomial::new(1.0, 1.0, 2), rng, false);
+        check_tiers(&m, rng, "polynomial")
+    });
+}
+
+#[test]
+fn churned_models_keep_tier_agreement() {
+    forall("churned simd tiers", 64, 0x51D3, |rng| {
+        let m = dyadic_model(Gaussian::new(0.5), rng, true);
+        check_tiers(&m, rng, "churned gaussian")
+    });
+}
+
+#[test]
+fn fast_exp_tier_agrees_on_dyadic_models_too() {
+    // exp_v's ≤ 1e-14 relative error sits far below the 1e-12 pin, so the
+    // fast-exp tier passes the same dyadic agreement bound.
+    forall("fast-exp simd tiers", 64, 0x51D4, |rng| {
+        let mut m = dyadic_model(Gaussian::new(0.25), rng, false);
+        m.set_fast_exp(true);
+        check_tiers(&m, rng, "gaussian fast-exp")
+    });
+}
+
+#[test]
+fn explicit_avx2_tier_is_bit_identical_where_specified() {
+    if !Tier::Avx2.available() {
+        eprintln!("skipping: AVX2+FMA not available on this host");
+        return;
+    }
+    forall("avx2 block bit-identity", 128, 0xB17B, |rng| {
+        // Arbitrary (non-dyadic) lane values: these paths promise
+        // bit-identity across tiers regardless of the data.
+        let mut dots = [0.0f32; TILE];
+        let mut norms = [0.0f32; TILE];
+        for l in 0..TILE {
+            dots[l] = rng.normal() as f32;
+            norms[l] = (rng.normal() as f32).abs();
+        }
+        let xn = (rng.normal() as f32).abs();
+
+        for fast in [false, true] {
+            let (mut a, mut b) = ([0.0f64; TILE], [0.0f64; TILE]);
+            simd::gaussian_block_with(Tier::Scalar, -0.35, fast, xn, &dots, &norms, &mut a);
+            simd::gaussian_block_with(Tier::Avx2, -0.35, fast, xn, &dots, &norms, &mut b);
+            for l in 0..TILE {
+                if a[l].to_bits() != b[l].to_bits() {
+                    return (false, format!("gaussian fast={fast} lane {l}: {} vs {}", a[l], b[l]));
+                }
+            }
+        }
+
+        let (mut a, mut b) = ([0.0f64; TILE], [0.0f64; TILE]);
+        simd::linear_block_with(Tier::Scalar, &dots, &mut a);
+        simd::linear_block_with(Tier::Avx2, &dots, &mut b);
+        for l in 0..TILE {
+            if a[l].to_bits() != b[l].to_bits() {
+                return (false, format!("linear lane {l}: {} vs {}", a[l], b[l]));
+            }
+        }
+
+        for degree in 1u32..=4 {
+            let (mut a, mut b) = ([0.0f64; TILE], [0.0f64; TILE]);
+            simd::poly_block_with(Tier::Scalar, 0.5, 1.25, degree, &dots, &mut a);
+            simd::poly_block_with(Tier::Avx2, 0.5, 1.25, degree, &dots, &mut b);
+            for l in 0..TILE {
+                if a[l].to_bits() != b[l].to_bits() {
+                    return (false, format!("poly deg {degree} lane {l}: {} vs {}", a[l], b[l]));
+                }
+            }
+        }
+        (true, String::new())
+    });
+}
+
+#[test]
+fn avx2_tile_dots_match_scalar_bitwise_on_dyadic_tiles() {
+    if !Tier::Avx2.available() {
+        eprintln!("skipping: AVX2+FMA not available on this host");
+        return;
+    }
+    forall("avx2 tile dots on dyadic data", 128, 0xD07D, |rng| {
+        let d = 1 + rng.below(24);
+        let tile: Vec<f32> = (0..d * TILE).map(|_| dyadic(rng)).collect();
+        let x = dyadic_row(rng, d);
+        let (mut s, mut v) = ([0.0f32; TILE], [0.0f32; TILE]);
+        simd::tile_dots_with(Tier::Scalar, &tile, &x, &mut s);
+        simd::tile_dots_with(Tier::Avx2, &tile, &x, &mut v);
+        for l in 0..TILE {
+            if s[l].to_bits() != v[l].to_bits() {
+                return (false, format!("d={d} lane {l}: scalar {} avx2 {}", s[l], v[l]));
+            }
+        }
+        // Multi-query (1..=6 pivots: the 4-wide block plus remainders)
+        // must equal per-query single calls bitwise on the same tier.
+        let queries: Vec<Vec<f32>> =
+            (0..(1 + rng.below(6))).map(|_| dyadic_row(rng, d)).collect();
+        let refs: Vec<&[f32]> = queries.iter().map(|q| q.as_slice()).collect();
+        let mut multi = vec![[0.0f32; TILE]; refs.len()];
+        simd::tile_dots_multi_with(Tier::Avx2, &tile, &refs, &mut multi);
+        for (q, x) in refs.iter().enumerate() {
+            let mut single = [0.0f32; TILE];
+            simd::tile_dots_with(Tier::Avx2, &tile, x, &mut single);
+            for l in 0..TILE {
+                if multi[q][l].to_bits() != single[l].to_bits() {
+                    return (false, format!("multi d={d} q={q} lane {l}"));
+                }
+            }
+        }
+        (true, String::new())
+    });
+}
+
+#[test]
+fn exp_v_stays_within_1e14_of_libm_over_the_sweep() {
+    let mut rng = Rng::new(0xE4B);
+    let mut worst = 0.0f64;
+    let mut worst_x = 0.0f64;
+    let mut check = |x: f64, worst: &mut f64, worst_x: &mut f64| {
+        let got = simd::exp_fast(x);
+        let want = x.exp();
+        let rel = (got - want).abs() / want;
+        if rel > *worst {
+            *worst = rel;
+            *worst_x = x;
+        }
+    };
+    for _ in 0..20_000 {
+        let x = (rng.uniform() - 0.5) * 1400.0; // uniform in [-700, 700]
+        check(x, &mut worst, &mut worst_x);
+    }
+    // Deterministic anchors, including reduction boundaries.
+    for &x in &[-700.0, -1.0, -0.5 * std::f64::consts::LN_2, 0.5, 1.0, 700.0] {
+        check(x, &mut worst, &mut worst_x);
+    }
+    assert!(worst <= 1e-14, "max relative error {worst:e} at x = {worst_x}");
+}
+
+#[test]
+fn exp_v_edge_cases_zero_denormals_underflow_overflow() {
+    // ±0 → exactly 1.
+    assert_eq!(simd::exp_fast(0.0).to_bits(), 1.0f64.to_bits());
+    assert_eq!(simd::exp_fast(-0.0).to_bits(), 1.0f64.to_bits());
+    // Overflow clamps to +∞ like libm.
+    assert_eq!(simd::exp_fast(710.0), f64::INFINITY);
+    assert_eq!(simd::exp_fast(1e300), f64::INFINITY);
+    assert!(simd::exp_fast(709.0).is_finite());
+    assert!((simd::exp_fast(709.0) - 709.0f64.exp()).abs() / 709.0f64.exp() <= 1e-14);
+    // Hard underflow to zero.
+    assert_eq!(simd::exp_fast(-760.0), 0.0);
+    assert_eq!(simd::exp_fast(-746.0), 0.0);
+    assert_eq!(simd::exp_fast(f64::NEG_INFINITY), 0.0);
+    // Gradual underflow: across the denormal range the result stays
+    // within max(1e-13 relative, 2 denormal quanta) of libm.
+    for &x in &[-708.5, -709.0, -710.0, -715.0, -720.0, -730.0, -740.0, -744.0, -745.0] {
+        let got = simd::exp_fast(x);
+        let want = x.exp();
+        let tol = (1e-13 * want).max(2.0 * f64::from_bits(1));
+        assert!(
+            (got - want).abs() <= tol,
+            "x={x}: got {got:e}, libm {want:e} (tol {tol:e})"
+        );
+    }
+}
+
+#[test]
+fn exp_v_slice_handles_every_length_and_tier() {
+    let mut rng = Rng::new(0x3C4);
+    for len in 0..=9usize {
+        let xs: Vec<f64> = (0..len).map(|_| (rng.uniform() - 0.5) * 1000.0).collect();
+        let mut scalar = xs.clone();
+        simd::exp_v_with(Tier::Scalar, &mut scalar);
+        for (i, (&x, &e)) in xs.iter().zip(&scalar).enumerate() {
+            assert_eq!(e.to_bits(), simd::exp_fast(x).to_bits(), "len {len} slot {i}");
+        }
+        if Tier::Avx2.available() {
+            let mut vector = xs.clone();
+            simd::exp_v_with(Tier::Avx2, &mut vector);
+            for (i, (&a, &b)) in scalar.iter().zip(&vector).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "len {len} slot {i}: {a} vs {b}");
+            }
+        }
+        let mut dispatched = xs.clone();
+        simd::exp_v(&mut dispatched);
+        // The dispatched tier is one of the two just verified.
+        for (i, (&a, &b)) in scalar.iter().zip(&dispatched).enumerate() {
+            let rel = if b == 0.0 { (a - b).abs() } else { (a - b).abs() / b.abs() };
+            assert!(rel <= 1e-14, "len {len} slot {i}");
+        }
+    }
+}
+
+#[test]
+fn forced_scalar_override_actually_bypasses_the_vector_path() {
+    // Dispatch-level check: under the override the active tier is scalar.
+    assert_eq!(simd::with_forced_scalar(simd::active), Tier::Scalar);
+    assert!(
+        simd::with_forced_scalar(simd::force_scalar),
+        "override must be visible while set"
+    );
+    assert!(!simd::force_scalar(), "override must be restored");
+
+    // Behavior-level check: find arbitrary f32 data where the AVX2 fused
+    // accumulation differs from the scalar loop (non-dyadic data makes
+    // this overwhelmingly likely); on that witness the dispatched call
+    // under the override must equal the scalar tier bit-for-bit.
+    if !Tier::Avx2.available() || simd::detected() != Tier::Avx2 {
+        eprintln!("skipping behavior-level check: dispatched tier is already scalar");
+        return;
+    }
+    let mut rng = Rng::new(0xFACE);
+    for _ in 0..500 {
+        let d = 16 + rng.below(17);
+        let tile: Vec<f32> = (0..d * TILE).map(|_| rng.normal() as f32).collect();
+        let x: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        let (mut s, mut v) = ([0.0f32; TILE], [0.0f32; TILE]);
+        simd::tile_dots_with(Tier::Scalar, &tile, &x, &mut s);
+        simd::tile_dots_with(Tier::Avx2, &tile, &x, &mut v);
+        if (0..TILE).any(|l| s[l].to_bits() != v[l].to_bits()) {
+            // Witness found: dispatched-under-override must take the
+            // scalar path, not the vector one.
+            let mut o = [0.0f32; TILE];
+            simd::with_forced_scalar(|| simd::tile_dots(&tile, &x, &mut o));
+            for l in 0..TILE {
+                assert_eq!(
+                    o[l].to_bits(),
+                    s[l].to_bits(),
+                    "lane {l}: override did not bypass the vector path"
+                );
+            }
+            // And without the override the dispatched call is the vector
+            // path.
+            let mut w = [0.0f32; TILE];
+            simd::tile_dots(&tile, &x, &mut w);
+            for l in 0..TILE {
+                assert_eq!(w[l].to_bits(), v[l].to_bits(), "lane {l}");
+            }
+            return;
+        }
+    }
+    panic!("no fused/unfused divergence found in 500 random cases — suspicious");
+}
+
+#[test]
+fn fast_exp_training_reaches_accuracy_parity() {
+    use budgetsvm::data::synthetic::two_moons;
+    use budgetsvm::kernel::KernelSpec;
+    use budgetsvm::solver::{BsgdEstimator, Estimator, RunConfig, SvmConfig};
+
+    let ds = two_moons(800, 0.12, 21);
+    let mut accs = Vec::new();
+    for fast in [false, true] {
+        let config = SvmConfig::new()
+            .kernel(KernelSpec::gaussian(2.0))
+            .budget(30)
+            .c(10.0, ds.len())
+            .fast_exp(fast);
+        let mut est = BsgdEstimator::new(config, RunConfig::new().passes(5).seed(3)).unwrap();
+        est.fit(&ds).unwrap();
+        let model = est.model().unwrap();
+        assert_eq!(model.fast_exp(), fast, "tier must be applied at model creation");
+        accs.push(model.accuracy(&ds));
+    }
+    assert!(accs[0] > 0.9, "libm-tier accuracy {}", accs[0]);
+    assert!(accs[1] > 0.9, "fast-exp accuracy {}", accs[1]);
+    assert!(
+        (accs[0] - accs[1]).abs() <= 0.03,
+        "fast-exp changed experiment accuracy: {} vs {}",
+        accs[0],
+        accs[1]
+    );
+
+    // Inference on a FIXED model: the two exponential tiers agree to the
+    // exp_v error bound, far inside 1e-12.
+    let config = SvmConfig::new().kernel(KernelSpec::gaussian(2.0)).budget(30).c(10.0, ds.len());
+    let mut est = BsgdEstimator::new(config, RunConfig::new().passes(3).seed(9)).unwrap();
+    est.fit(&ds).unwrap();
+    let base = est.into_model().unwrap();
+    let mut fast = base.clone();
+    fast.set_fast_exp(true);
+    for i in (0..ds.len()).step_by(37) {
+        let a = base.decision(ds.row(i));
+        let b = fast.decision(ds.row(i));
+        assert!(
+            (a - b).abs() <= 1e-12 * (1.0 + a.abs()),
+            "row {i}: libm {a} vs fast {b}"
+        );
+    }
+}
