@@ -1,0 +1,377 @@
+//! A budget-sized Gram slab cache for the dual solver family.
+//!
+//! The dual coordinate-ascent solver ([`crate::solver::bdca`]) evaluates
+//! `f(x_j) = Σ_i α_i k(x_i, x_j)` for *stored* support vectors over and
+//! over — every epoch sweep touches every coordinate. Recomputing those
+//! kernel rows per sweep would cost one blocked row scan per coordinate
+//! per epoch; caching the full `(B + slack)²` Gram matrix once makes each
+//! coordinate update a dot product over a resident row.
+//!
+//! [`GramCache`] is that cache: a row-major `capacity × capacity` slab of
+//! `f64` kernel values of which the leading `n × n` block mirrors the
+//! model's SV set. It is filled through the model's blocked kernel-row
+//! engine ([`crate::model::BudgetModel::kernel_row_prefix`] →
+//! `SvStore::tile_dots` + `Kernel::eval_block`), so every SIMD tier of the
+//! tile micro-kernels applies for free, and it exploits symmetry: only the
+//! lower triangle is ever *computed*; the upper triangle is mirrored.
+//!
+//! Churn discipline — the cache stays **exact** (bit-identical to a fresh
+//! recomputation, see the property tests) under every mutation of the SV
+//! set:
+//!
+//! * **insert** — [`GramCache::push_row`] computes the one new row through
+//!   the blocked engine and mirrors it into the new column;
+//! * **removal churn** — [`GramCache::swap_remove`] replays the model's
+//!   swap-remove move (last row/column into the vacated slot) on cached
+//!   values, no kernel evaluation at all; the removal maintenance policy
+//!   reports each victim through the [`ChurnObserver`] hook
+//!   ([`crate::budget::policy::MaintenancePolicy::maintain_observed`]);
+//! * **merge / projection churn** — those events push merged vectors
+//!   mid-event against a shifting SV set and rewrite survivor
+//!   coefficients, which no after-the-fact journal can reconstruct
+//!   exactly, so the policy invalidates the cache ([`GramCache::is_stale`])
+//!   and the owner rebuilds it from the model ([`GramCache::rebuild`] —
+//!   by construction identical to a fresh recomputation).
+//!
+//! Cached rows are exposed read-only ([`GramCache::row`] /
+//! [`GramCache::entry`]) so consumers that need kernel rows of stored SVs
+//! — the dual epoch sweep, a κ candidate scan, projection's survivor Gram
+//! assembly — can borrow them instead of re-running the blocked engine.
+
+use crate::kernel::Kernel;
+use crate::model::BudgetModel;
+
+use super::policy::ChurnObserver;
+
+/// Budget-sized Gram slab: the leading `len() × len()` block of a
+/// row-major `capacity × capacity` buffer, mirroring `k(sv_i, sv_j)` of a
+/// [`BudgetModel`]. See the module docs for the churn discipline.
+#[derive(Debug, Clone)]
+pub struct GramCache {
+    /// Row stride of the slab (maximum SV count mirrored).
+    cap: usize,
+    /// Live rows/columns (= SVs currently mirrored).
+    n: usize,
+    /// Row-major slab, stride `cap`; entries beyond the leading `n × n`
+    /// block are dead values.
+    g: Vec<f64>,
+    /// Set by [`ChurnObserver::invalidate`]: opaque churn happened and the
+    /// mirror must be rebuilt from the model before its next use.
+    stale: bool,
+}
+
+impl GramCache {
+    /// An empty cache able to mirror up to `capacity` support vectors
+    /// (budgeted estimators size this as budget + slack overshoot).
+    pub fn new(capacity: usize) -> Self {
+        GramCache { cap: capacity, n: 0, g: vec![0.0; capacity * capacity], stale: false }
+    }
+
+    /// Mirrored SV count.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Maximum SV count the slab can mirror.
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Whether opaque churn invalidated the mirror (rebuild before use).
+    pub fn is_stale(&self) -> bool {
+        self.stale
+    }
+
+    /// Cached kernel row of SV `j` against every mirrored SV: exactly the
+    /// κ row a candidate scan or a coordinate update needs, without
+    /// touching the blocked engine.
+    pub fn row(&self, j: usize) -> &[f64] {
+        debug_assert!(!self.stale, "stale GramCache read");
+        assert!(j < self.n, "row {j} out of range {}", self.n);
+        &self.g[j * self.cap..j * self.cap + self.n]
+    }
+
+    /// One cached kernel value `k(sv_i, sv_j)`.
+    pub fn entry(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(!self.stale, "stale GramCache read");
+        assert!(i < self.n && j < self.n, "entry ({i}, {j}) out of range {}", self.n);
+        self.g[i * self.cap + j]
+    }
+
+    /// Forget all mirrored rows (the slab allocation is kept).
+    pub fn clear(&mut self) {
+        self.n = 0;
+        self.stale = false;
+    }
+
+    /// Mirror the SV the model just pushed (call immediately after
+    /// `model.push(..)`): computes the one new row through the blocked
+    /// engine and mirrors it into the new column. The diagonal entry is
+    /// computed by the same tile path as every other entry, not by
+    /// `self_eval`, so the row is exactly what [`GramCache::rebuild`]
+    /// would produce.
+    pub fn push_row<K: Kernel + Copy>(&mut self, model: &BudgetModel<K>) {
+        assert!(!self.stale, "stale GramCache: rebuild before push_row");
+        let j = self.n;
+        assert!(j < self.cap, "GramCache capacity {} exhausted", self.cap);
+        assert_eq!(
+            model.num_sv(),
+            j + 1,
+            "push_row must run right after the model push it mirrors"
+        );
+        let row = &mut self.g[j * self.cap..j * self.cap + j + 1];
+        let wrote = model.kernel_row_prefix(model.sv(j), model.sv_norm2(j), j + 1, row);
+        debug_assert_eq!(wrote, j + 1);
+        for i in 0..j {
+            self.g[i * self.cap + j] = self.g[j * self.cap + i];
+        }
+        self.n = j + 1;
+    }
+
+    /// Replay the model's `swap_remove(j)` on cached values: the last row
+    /// and column move into slot `j`, the mirrored set shrinks by one. No
+    /// kernel evaluation — moved entries are verbatim copies of already
+    /// computed values, so exactness is preserved bit-for-bit.
+    pub fn swap_remove(&mut self, j: usize) {
+        assert!(j < self.n, "swap_remove index {j} out of range {}", self.n);
+        let last = self.n - 1;
+        if j != last {
+            // Row `last` → row `j` first; the column pass then reads the
+            // already-moved `(j, last)` entry, landing the old `(last,
+            // last)` diagonal value on the new `(j, j)` slot.
+            for i in 0..self.n {
+                self.g[j * self.cap + i] = self.g[last * self.cap + i];
+            }
+            for i in 0..self.n {
+                self.g[i * self.cap + j] = self.g[i * self.cap + last];
+            }
+        }
+        self.n = last;
+    }
+
+    /// Rebuild the mirror from the model, from scratch: the blocked
+    /// triangle fill (row `j` up to the diagonal via
+    /// [`BudgetModel::kernel_row_prefix`], mirrored into the column) —
+    /// the same procedure incremental growth uses, so a cache maintained
+    /// through [`GramCache::push_row`] / [`GramCache::swap_remove`] is
+    /// bit-identical to a rebuilt one. Clears the stale flag.
+    pub fn rebuild<K: Kernel + Copy>(&mut self, model: &BudgetModel<K>) {
+        let n = model.num_sv();
+        assert!(n <= self.cap, "model has {n} SVs, GramCache capacity is {}", self.cap);
+        for j in 0..n {
+            let row = &mut self.g[j * self.cap..j * self.cap + j + 1];
+            let wrote = model.kernel_row_prefix(model.sv(j), model.sv_norm2(j), j + 1, row);
+            debug_assert_eq!(wrote, j + 1);
+            for i in 0..j {
+                self.g[i * self.cap + j] = self.g[j * self.cap + i];
+            }
+        }
+        self.n = n;
+        self.stale = false;
+    }
+}
+
+/// The cache is its own churn observer: removal victims are replayed
+/// exactly; opaque events mark it stale for the owner to rebuild. Once
+/// stale, further itemized notifications are ignored (indices no longer
+/// correspond to mirrored slots) — the rebuild resynchronizes everything.
+impl ChurnObserver for GramCache {
+    fn on_swap_remove(&mut self, j: usize) {
+        if !self.stale {
+            self.swap_remove(j);
+        }
+    }
+
+    fn invalidate(&mut self) {
+        self.stale = true;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::budget::policy::{
+        gaussian_policy, MaintenanceConfig, MaintenancePolicy, RemovalMaintenance,
+    };
+    use crate::budget::{MergeSolver, Strategy};
+    use crate::kernel::Gaussian;
+    use crate::metrics::SectionProfiler;
+    use crate::util::prop::forall;
+    use crate::util::rng::Rng;
+
+    const DIM: usize = 4;
+
+    fn random_sv(rng: &mut Rng) -> Vec<f32> {
+        (0..DIM).map(|_| rng.normal() as f32).collect()
+    }
+
+    fn random_model(n_sv: usize, capacity: usize, seed: u64) -> BudgetModel {
+        let mut rng = Rng::new(seed);
+        let mut m = BudgetModel::new(DIM, Gaussian::new(0.7), capacity);
+        for _ in 0..n_sv {
+            m.push(&random_sv(&mut rng), 0.05 + rng.uniform());
+        }
+        m
+    }
+
+    fn rebuilt(model: &BudgetModel, capacity: usize) -> GramCache {
+        let mut g = GramCache::new(capacity);
+        g.rebuild(model);
+        g
+    }
+
+    fn assert_bit_identical(a: &GramCache, b: &GramCache) -> (bool, String) {
+        if a.len() != b.len() {
+            return (false, format!("len {} vs {}", a.len(), b.len()));
+        }
+        for i in 0..a.len() {
+            for j in 0..a.len() {
+                if a.entry(i, j).to_bits() != b.entry(i, j).to_bits() {
+                    return (
+                        false,
+                        format!("entry ({i}, {j}): {} vs {}", a.entry(i, j), b.entry(i, j)),
+                    );
+                }
+            }
+        }
+        (true, String::new())
+    }
+
+    #[test]
+    fn incremental_fill_matches_rebuild_bit_for_bit() {
+        let cap = 24;
+        let mut rng = Rng::new(0x6_4A11);
+        let mut model = BudgetModel::new(DIM, Gaussian::new(0.7), cap);
+        let mut gram = GramCache::new(cap);
+        for step in 0..20 {
+            model.push(&random_sv(&mut rng), 0.05 + rng.uniform());
+            gram.push_row(&model);
+            let (ok, ctx) = assert_bit_identical(&gram, &rebuilt(&model, cap));
+            assert!(ok, "step {step}: {ctx}");
+        }
+    }
+
+    #[test]
+    fn rows_are_symmetric_and_match_the_blocked_engine() {
+        let cap = 16;
+        let model = random_model(13, cap, 7);
+        let gram = rebuilt(&model, cap);
+        let n = model.num_sv();
+        let mut direct = vec![0.0f64; n];
+        for i in 0..n {
+            assert_eq!(gram.row(i).len(), n);
+            model.kernel_row(model.sv(i), model.sv_norm2(i), &mut direct);
+            for j in 0..n {
+                // Symmetric mirror, bit-for-bit.
+                assert_eq!(gram.entry(i, j).to_bits(), gram.entry(j, i).to_bits(), "({i},{j})");
+                // The triangle below the diagonal is the blocked row
+                // itself; mirrored entries agree with the direct row up
+                // to kernel symmetry rounding.
+                if j <= i {
+                    assert_eq!(gram.entry(i, j).to_bits(), direct[j].to_bits(), "({i},{j})");
+                } else {
+                    assert!((gram.entry(i, j) - direct[j]).abs() < 1e-12, "({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn swap_remove_replays_the_model_move_exactly() {
+        let cap = 16;
+        let mut model = random_model(9, cap, 11);
+        let mut gram = rebuilt(&model, cap);
+        // Remove a middle slot, the first slot, and the last slot.
+        for &victim in &[4usize, 0, model.num_sv() - 3] {
+            model.swap_remove(victim);
+            gram.swap_remove(victim);
+            let (ok, ctx) = assert_bit_identical(&gram, &rebuilt(&model, cap));
+            assert!(ok, "victim {victim}: {ctx}");
+        }
+    }
+
+    #[test]
+    fn randomized_push_swap_remove_churn_stays_bit_identical() {
+        forall("gram mirror == fresh recomputation under churn", 32, 0x6_4A12, |rng| {
+            let cap = 20;
+            let mut model = BudgetModel::new(DIM, Gaussian::new(0.9), cap);
+            let mut gram = GramCache::new(cap);
+            for _ in 0..60 {
+                let n = model.num_sv();
+                if n == 0 || (n < cap && rng.bernoulli(0.6)) {
+                    model.push(&random_sv(rng), 0.05 + rng.uniform());
+                    gram.push_row(&model);
+                } else {
+                    let victim = rng.below(n);
+                    gram.swap_remove(victim);
+                    model.swap_remove(victim);
+                }
+                let (ok, ctx) = assert_bit_identical(&gram, &rebuilt(&model, cap));
+                if !ok {
+                    return (false, ctx);
+                }
+            }
+            (true, String::new())
+        });
+    }
+
+    #[test]
+    fn observed_removal_maintenance_keeps_the_mirror_exact() {
+        forall("gram mirror survives removal-policy churn", 24, 0x6_4A13, |rng| {
+            let cap = 24;
+            let n0 = 12 + rng.below(10);
+            let mut model = random_model(n0, cap, rng.next_u64());
+            let mut gram = rebuilt(&model, cap);
+            let cfg = MaintenanceConfig::new(Strategy::Removal, 50);
+            let mut policy = RemovalMaintenance::new(&cfg);
+            let mut prof = SectionProfiler::new();
+            let budget = 4 + rng.below(4);
+            while model.num_sv() > budget {
+                MaintenancePolicy::<Gaussian>::maintain_observed(
+                    &mut policy,
+                    &mut model,
+                    budget,
+                    &mut prof,
+                    &mut gram,
+                );
+            }
+            if gram.is_stale() {
+                return (false, "removal churn must not invalidate".into());
+            }
+            assert_bit_identical(&gram, &rebuilt(&model, cap))
+        });
+    }
+
+    #[test]
+    fn merge_churn_invalidates_and_rebuild_resynchronizes() {
+        let cap = 24;
+        let mut model = random_model(16, cap, 23);
+        let mut gram = rebuilt(&model, cap);
+        let cfg = MaintenanceConfig::new(Strategy::Merge(MergeSolver::LookupWd), 50);
+        let mut policy = gaussian_policy(&cfg);
+        let mut prof = SectionProfiler::new();
+        policy.maintain_observed(&mut model, 12, &mut prof, &mut gram);
+        assert!(gram.is_stale(), "merge churn is opaque");
+        gram.rebuild(&model);
+        assert!(!gram.is_stale());
+        let (ok, ctx) = assert_bit_identical(&gram, &rebuilt(&model, cap));
+        assert!(ok, "{ctx}");
+    }
+
+    #[test]
+    fn clear_and_capacity_bookkeeping() {
+        let mut gram = GramCache::new(8);
+        assert!(gram.is_empty());
+        assert_eq!(gram.capacity(), 8);
+        let model = random_model(5, 8, 3);
+        gram.rebuild(&model);
+        assert_eq!(gram.len(), 5);
+        gram.clear();
+        assert!(gram.is_empty());
+        assert!(!gram.is_stale());
+    }
+}

@@ -9,7 +9,10 @@
 //! merge math; [`removal`] and [`projection`] the alternative strategies
 //! of Wang et al. (2012); [`linalg`] a minimal Cholesky solver for
 //! projection; [`policy`] the [`MaintenancePolicy`] trait everything
-//! dispatches through.
+//! dispatches through; [`gram`] the budget-sized Gram slab cache the dual
+//! solver family reads its kernel rows from, kept exact under churn via
+//! the [`policy::ChurnObserver`] notification hook
+//! ([`MaintenancePolicy::maintain_observed`]).
 //!
 //! # Pipeline invariants
 //!
@@ -78,6 +81,7 @@
 //! 400×400 build K times.
 
 pub mod geometry;
+pub mod gram;
 pub mod gss;
 pub mod linalg;
 pub mod lookup;
@@ -86,10 +90,12 @@ pub mod policy;
 pub mod projection;
 pub mod removal;
 
+pub use gram::GramCache;
 pub use lookup::{shared as shared_lookup_table, LookupTable};
 pub use merge::{audit_event, AuditRecord, MergeEngine, MergeOutcome, MergeSolver};
 pub use policy::{
-    gaussian_policy, generic_policy, AnyPolicy, MaintenanceConfig, MaintenancePolicy,
+    gaussian_policy, generic_policy, AnyPolicy, ChurnObserver, MaintenanceConfig,
+    MaintenancePolicy,
 };
 pub use removal::MinAlphaIndex;
 

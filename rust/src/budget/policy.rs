@@ -90,6 +90,23 @@ fn slack_trigger(num_sv: usize, budget: usize, slack: f64) -> bool {
     num_sv > budget && (num_sv - budget) as f64 > slack
 }
 
+/// Receiver of budget-churn notifications from
+/// [`MaintenancePolicy::maintain_observed`]: anything mirroring the SV set
+/// by index — the [`super::gram::GramCache`] slab, an auxiliary index —
+/// keeps itself exact under removal churn and learns when opaque churn
+/// forces a rebuild from the model.
+pub trait ChurnObserver {
+    /// The model is about to execute `swap_remove(j)` (the last SV moves
+    /// into slot `j`, the set shrinks by one); mirror it exactly.
+    fn on_swap_remove(&mut self, j: usize);
+
+    /// Opaque structural churn happened — merged vectors were pushed
+    /// mid-event against a shifting SV set, or survivor coefficients were
+    /// rewritten together with a removal the event does not itemize. The
+    /// mirror must be rebuilt from the model before its next use.
+    fn invalidate(&mut self);
+}
+
 /// One budget-maintenance policy: the trigger rule plus the event
 /// executor. This is the only surface through which the solver loop, the
 /// end-of-ingest enforcement, and the serving layer's shard merge reach
@@ -112,6 +129,27 @@ pub trait MaintenancePolicy<K: Kernel + Copy>: Send {
         budget: usize,
         prof: &mut SectionProfiler,
     ) -> f64;
+
+    /// [`MaintenancePolicy::maintain`] with churn notification: structural
+    /// mutations of the SV set are reported to `observer` so Gram-style
+    /// mirrors stay synchronized without recomputation. The default runs
+    /// the un-observed event — bit-identical model outcome — and then
+    /// conservatively invalidates the observer: merge events push merged
+    /// vectors *mid-event* against a shifting SV set, so a post-hoc journal
+    /// cannot reconstruct the rows they would need, and projection rewrites
+    /// every survivor coefficient. [`RemovalMaintenance`] overrides this
+    /// with exact per-victim [`ChurnObserver::on_swap_remove`] calls.
+    fn maintain_observed(
+        &mut self,
+        model: &mut BudgetModel<K>,
+        budget: usize,
+        prof: &mut SectionProfiler,
+        observer: &mut dyn ChurnObserver,
+    ) -> f64 {
+        let wd = self.maintain(model, budget, prof);
+        observer.invalidate();
+        wd
+    }
 
     /// Hard budget enforcement: run events until `num_sv ≤ budget`. Used
     /// at the end of every ingest call (so published/returned models
@@ -199,6 +237,40 @@ impl RemovalMaintenance {
             index: MinAlphaIndex::new(),
         }
     }
+
+    /// One removal event; identical with and without an observer (the
+    /// notification is issued right before each `swap_remove`, outside the
+    /// timed sections, so the observed path stays bit-identical).
+    fn run_event<K: Kernel + Copy>(
+        &mut self,
+        model: &mut BudgetModel<K>,
+        budget: usize,
+        prof: &mut SectionProfiler,
+        mut observer: Option<&mut dyn ChurnObserver>,
+    ) -> f64 {
+        let over = model.num_sv().saturating_sub(budget).max(1);
+        let count = self.pairs.min(over);
+        let mut wd = 0.0;
+        for _ in 0..count {
+            if model.is_empty() {
+                break;
+            }
+            let t0 = Instant::now();
+            let victim = self.index.pick(model).expect("non-empty model");
+            prof.add(Section::MaintScan, t0.elapsed());
+            if let Some(obs) = observer.as_mut() {
+                obs.on_swap_remove(victim);
+            }
+            let t1 = Instant::now();
+            let alpha = model.alpha(victim);
+            let self_k = model.kernel().self_eval(model.sv_norm2(victim));
+            self.index.note_swap_remove(model, victim);
+            model.swap_remove(victim);
+            prof.add(Section::MaintApply, t1.elapsed());
+            wd += alpha * alpha * self_k;
+        }
+        wd
+    }
 }
 
 impl<K: Kernel + Copy> MaintenancePolicy<K> for RemovalMaintenance {
@@ -212,25 +284,20 @@ impl<K: Kernel + Copy> MaintenancePolicy<K> for RemovalMaintenance {
         budget: usize,
         prof: &mut SectionProfiler,
     ) -> f64 {
-        let over = model.num_sv().saturating_sub(budget).max(1);
-        let count = self.pairs.min(over);
-        let mut wd = 0.0;
-        for _ in 0..count {
-            if model.is_empty() {
-                break;
-            }
-            let t0 = Instant::now();
-            let victim = self.index.pick(model).expect("non-empty model");
-            prof.add(Section::MaintScan, t0.elapsed());
-            let t1 = Instant::now();
-            let alpha = model.alpha(victim);
-            let self_k = model.kernel().self_eval(model.sv_norm2(victim));
-            self.index.note_swap_remove(model, victim);
-            model.swap_remove(victim);
-            prof.add(Section::MaintApply, t1.elapsed());
-            wd += alpha * alpha * self_k;
-        }
-        wd
+        self.run_event(model, budget, prof, None)
+    }
+
+    /// Removal churn is exactly itemizable: each victim is reported via
+    /// [`ChurnObserver::on_swap_remove`] before the model mutates, so a
+    /// Gram mirror tracks the event without any recomputation.
+    fn maintain_observed(
+        &mut self,
+        model: &mut BudgetModel<K>,
+        budget: usize,
+        prof: &mut SectionProfiler,
+        observer: &mut dyn ChurnObserver,
+    ) -> f64 {
+        self.run_event(model, budget, prof, Some(observer))
     }
 
     fn strategy(&self) -> Strategy {
@@ -413,6 +480,76 @@ mod tests {
             for j in 0..a.num_sv() {
                 assert_eq!(a.alpha(j).to_bits(), b.alpha(j).to_bits(), "alpha {j}");
                 assert_eq!(a.sv(j), b.sv(j), "sv {j}");
+            }
+        }
+    }
+
+    struct RecordingObserver {
+        removed: Vec<usize>,
+        invalidated: bool,
+    }
+
+    impl ChurnObserver for RecordingObserver {
+        fn on_swap_remove(&mut self, j: usize) {
+            self.removed.push(j);
+        }
+
+        fn invalidate(&mut self) {
+            self.invalidated = true;
+        }
+    }
+
+    #[test]
+    fn removal_reports_exact_churn_and_stays_bit_identical() {
+        let cfg = MaintenanceConfig::new(Strategy::Removal, 50);
+        let mut prof = SectionProfiler::new();
+
+        let mut observed_policy = RemovalMaintenance::new(&cfg);
+        let mut observed = random_model(12, 4);
+        let mut obs = RecordingObserver { removed: Vec::new(), invalidated: false };
+        let wd_o = MaintenancePolicy::<Gaussian>::maintain_observed(
+            &mut observed_policy,
+            &mut observed,
+            0,
+            &mut prof,
+            &mut obs,
+        );
+
+        let mut plain_policy = RemovalMaintenance::new(&cfg);
+        let mut plain = random_model(12, 4);
+        let wd_p =
+            MaintenancePolicy::<Gaussian>::maintain(&mut plain_policy, &mut plain, 0, &mut prof);
+
+        assert_eq!(wd_o.to_bits(), wd_p.to_bits());
+        assert_eq!(obs.removed.len(), 1, "one victim per single-pair event");
+        assert!(!obs.invalidated, "removal churn is exactly itemized");
+        assert_eq!(observed.num_sv(), plain.num_sv());
+        for j in 0..observed.num_sv() {
+            assert_eq!(observed.alpha(j).to_bits(), plain.alpha(j).to_bits(), "alpha {j}");
+            assert_eq!(observed.sv(j), plain.sv(j), "sv {j}");
+        }
+    }
+
+    #[test]
+    fn opaque_policies_invalidate_the_observer() {
+        let mut prof = SectionProfiler::new();
+        for strategy in
+            [Strategy::Merge(MergeSolver::LookupWd), Strategy::Projection, Strategy::Removal]
+        {
+            let cfg = MaintenanceConfig::new(strategy, 50);
+            let mut policy = gaussian_policy(&cfg);
+            let mut model = random_model(12, 7);
+            let mut obs = RecordingObserver { removed: Vec::new(), invalidated: false };
+            policy.maintain_observed(&mut model, 8, &mut prof, &mut obs);
+            match strategy {
+                Strategy::Removal => {
+                    assert!(!obs.invalidated);
+                    assert!(!obs.removed.is_empty());
+                }
+                _ => {
+                    assert!(obs.invalidated, "{strategy:?} must invalidate");
+                    assert!(obs.removed.is_empty());
+                }
             }
         }
     }

@@ -15,6 +15,7 @@ use std::path::Path;
 
 use anyhow::{Context, Result};
 
+use crate::solver::SolverSpec;
 use crate::util::json::Json;
 
 /// Configuration for the experiment suite.
@@ -55,6 +56,14 @@ pub struct ExperimentConfig {
     /// `BUDGETSVM_SIMD=scalar` — the AVX2 dot accumulation fuses FMA);
     /// the paper-regeneration suite always runs with libm semantics.
     pub fast_exp: bool,
+    /// Binary solver for single training runs and serving shards
+    /// (`--solver bsgd|bdca`): the primal SGD trainer (default, the
+    /// paper's solver) or the dual coordinate-ascent trainer. The
+    /// paper-regeneration suite always trains with BSGD.
+    pub solver: SolverSpec,
+    /// Dual-ascent epochs per streaming pass (`--dual-epochs`; BDCA only,
+    /// ignored by the primal solvers).
+    pub dual_epochs: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -72,6 +81,8 @@ impl Default for ExperimentConfig {
             maint_slack: 0.0,
             maint_pairs: 0,
             fast_exp: false,
+            solver: SolverSpec::Bsgd,
+            dual_epochs: 2,
         }
     }
 }
@@ -127,6 +138,13 @@ impl ExperimentConfig {
         if let Some(x) = v.get("fast_exp").and_then(Json::as_bool) {
             cfg.fast_exp = x;
         }
+        if let Some(x) = v.get("solver").and_then(Json::as_str) {
+            cfg.solver = SolverSpec::parse(x)
+                .with_context(|| format!("unknown solver '{x}' (expected bsgd or bdca)"))?;
+        }
+        if let Some(x) = v.get("dual_epochs").and_then(Json::as_usize) {
+            cfg.dual_epochs = x;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -137,6 +155,7 @@ impl ExperimentConfig {
         anyhow::ensure!(self.runs >= 1, "need at least one run");
         anyhow::ensure!(self.grid >= 2, "grid must be >= 2");
         anyhow::ensure!(self.smo_max_rows >= 2, "smo_max_rows must be at least 2");
+        anyhow::ensure!(self.dual_epochs >= 1, "need at least one dual-ascent epoch");
         anyhow::ensure!(
             self.maint_slack.is_finite()
                 && (0.0..=crate::budget::MaintenanceConfig::MAX_SLACK).contains(&self.maint_slack),
@@ -191,6 +210,8 @@ impl ExperimentConfig {
             ("maint_slack", Json::num(self.maint_slack)),
             ("maint_pairs", Json::num(self.maint_pairs as f64)),
             ("fast_exp", Json::Bool(self.fast_exp)),
+            ("solver", Json::str(self.solver.name())),
+            ("dual_epochs", Json::num(self.dual_epochs as f64)),
         ])
     }
 }
@@ -238,6 +259,24 @@ mod tests {
         assert!(back.fast_exp);
         // Absent field keeps the (libm) default.
         assert!(!ExperimentConfig::from_json_text("{}").unwrap().fast_exp);
+    }
+
+    #[test]
+    fn solver_knobs_roundtrip_and_validate() {
+        let cfg = ExperimentConfig {
+            solver: SolverSpec::Bdca,
+            dual_epochs: 4,
+            ..Default::default()
+        };
+        let back = ExperimentConfig::from_json_text(&cfg.to_json().to_string()).unwrap();
+        assert_eq!(back.solver, SolverSpec::Bdca);
+        assert_eq!(back.dual_epochs, 4);
+        // Absent fields keep the primal default.
+        let plain = ExperimentConfig::from_json_text("{}").unwrap();
+        assert_eq!(plain.solver, SolverSpec::Bsgd);
+        assert_eq!(plain.dual_epochs, 2);
+        assert!(ExperimentConfig::from_json_text(r#"{"solver": "nope"}"#).is_err());
+        assert!(ExperimentConfig { dual_epochs: 0, ..Default::default() }.validate().is_err());
     }
 
     #[test]

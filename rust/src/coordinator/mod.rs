@@ -24,7 +24,7 @@ use crate::model::AnyModel;
 use crate::serve::{
     protocol, BatcherOptions, MicroBatcher, ModelRegistry, ServeConfig, ServeState, ShardedIngest,
 };
-use crate::solver::{BsgdEstimator, Estimator, FitSummary, RunConfig, SvmConfig};
+use crate::solver::{AnyEstimator, Estimator, FitSummary, RunConfig, SolverSpec, SvmConfig};
 use crate::util::json::Json;
 
 /// Everything `repro all` produces.
@@ -110,7 +110,8 @@ pub struct SingleRun {
 /// default); invalid kernel/strategy combinations fail with a descriptive
 /// error from `SvmConfig::validate`. `maint_slack` / `maint_pairs`
 /// parameterize the budget-maintenance pipeline (`0.0` / `0` = the
-/// classic per-overflow single-pair regime).
+/// classic per-overflow single-pair regime). `solver` picks the binary
+/// trainer (`cfg.dual_epochs` only matters for the dual one).
 #[allow(clippy::too_many_arguments)]
 pub fn run_single(
     data: &str,
@@ -123,6 +124,7 @@ pub fn run_single(
     gamma_override: Option<f64>,
     maint_slack: f64,
     maint_pairs: usize,
+    solver: SolverSpec,
 ) -> Result<SingleRun> {
     let (train, test, lambda_default, gamma_default, passes_default, seed, name) =
         if let Some(profile) = Profile::by_name(data) {
@@ -166,12 +168,13 @@ pub fn run_single(
         maint_slack,
         maint_pairs,
         fast_exp: cfg.fast_exp,
+        dual_epochs: cfg.dual_epochs,
     };
     let run = RunConfig::new()
         .passes(passes_override.unwrap_or(passes_default))
         .seed(seed)
         .threads(cfg.threads);
-    let mut est = BsgdEstimator::new(config, run)?;
+    let mut est = AnyEstimator::new(solver, config, run)?;
     est.fit(&train)?;
     let summary = est.summary().context("fitted estimator")?.clone();
     let model = est.into_model()?;
@@ -311,7 +314,8 @@ pub fn run_serve_tcp(
     } else {
         eprintln!("no initial model: predictions will fail until trained rows are flushed");
     }
-    let pipeline = ShardedIngest::new(
+    let pipeline = ShardedIngest::with_solver(
+        scfg.solver,
         scfg.svm.clone(),
         RunConfig::new().seed(scfg.seed),
         scfg.shards,
@@ -407,6 +411,7 @@ mod tests {
             None,
             0.0,
             0,
+            SolverSpec::Bsgd,
         )
         .unwrap();
         assert!(run.test_accuracy.unwrap() > 0.5);
@@ -434,6 +439,7 @@ mod tests {
             Some(2.0),
             0.0,
             0,
+            SolverSpec::Bsgd,
         )
         .unwrap();
         assert!(run.train_accuracy > 0.8, "{}", run.train_accuracy);
@@ -456,6 +462,7 @@ mod tests {
             None,
             0.0,
             0,
+            SolverSpec::Bsgd,
         );
         assert!(err.is_err());
         // ...while removal maintenance trains fine.
@@ -470,11 +477,33 @@ mod tests {
             None,
             0.0,
             0,
+            SolverSpec::Bsgd,
         )
         .unwrap();
         assert_eq!(run.model.kernel_spec(), KernelSpec::linear());
         assert!(run.model.num_sv() <= 30);
         assert!(run.test_accuracy.unwrap() > 0.5);
+    }
+
+    #[test]
+    fn single_run_with_dual_solver() {
+        let cfg = tmp_cfg("bdca");
+        let run = run_single(
+            "phishing",
+            40,
+            Strategy::Merge(MergeSolver::LookupWd),
+            None,
+            &cfg,
+            Some(1),
+            None,
+            None,
+            0.0,
+            0,
+            SolverSpec::Bdca,
+        )
+        .unwrap();
+        assert!(run.test_accuracy.unwrap() > 0.5);
+        assert!(run.model.num_sv() <= 40);
     }
 
     #[test]

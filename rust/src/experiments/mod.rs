@@ -12,13 +12,15 @@
 //! formats markdown/CSV; [`kernel_bench`] is the tracked perf harness
 //! behind `repro bench` (emits `BENCH_kernel.json`); [`maint_bench`] its
 //! budget-maintenance sibling behind `repro bench --maintenance` (emits
-//! `BENCH_maintenance.json`); [`serve_bench`] the serving one behind
+//! `BENCH_maintenance.json`); [`solver_bench`] the solver-family one
+//! behind `repro bench --solver-bench` (BSGD vs BDCA at equal budget,
+//! emits `BENCH_solver.json`); [`serve_bench`] the serving one behind
 //! `repro serve --replay` (emits `BENCH_serve.json`). `repro bench --all`
-//! runs the kernel + maintenance harnesses back to back and merges their
-//! reports (plus `BENCH_serve.json`, when one is already present in the
-//! output directory) into one top-level `BENCH_summary.json` via
-//! [`write_bench_summary`] — the single perf-trajectory artifact CI
-//! uploads.
+//! runs the kernel + maintenance + solver harnesses back to back and
+//! merges their reports (plus `BENCH_serve.json`, when one is already
+//! present in the output directory) into one top-level
+//! `BENCH_summary.json` via [`write_bench_summary`] — the single
+//! perf-trajectory artifact CI uploads.
 
 pub mod figure2;
 pub mod figure3;
@@ -27,6 +29,7 @@ pub mod maint_bench;
 pub mod report;
 pub mod runner;
 pub mod serve_bench;
+pub mod solver_bench;
 pub mod table1;
 pub mod table2;
 pub mod table3;
@@ -43,12 +46,17 @@ use crate::util::json::Json;
 /// File name of the merged bench summary (`repro bench --all`).
 pub const SUMMARY_FILE: &str = "BENCH_summary.json";
 
-/// Merge the kernel and maintenance bench reports (and, when one already
-/// exists under `out_dir`, the serve report) into one top-level
+/// Merge the kernel, maintenance and solver bench reports (and, when one
+/// already exists under `out_dir`, the serve report) into one top-level
 /// `BENCH_summary.json`; returns the written path. The per-bench files
 /// keep their own paths — this is purely the one-artifact view of the
 /// perf trajectory.
-pub fn write_bench_summary(out_dir: &str, kernel: &Json, maintenance: &Json) -> Result<String> {
+pub fn write_bench_summary(
+    out_dir: &str,
+    kernel: &Json,
+    maintenance: &Json,
+    solver: &Json,
+) -> Result<String> {
     let serve_path =
         format!("{}/{}", out_dir.trim_end_matches('/'), serve_bench::REPORT_FILE);
     let serve = match std::fs::read_to_string(&serve_path) {
@@ -65,6 +73,7 @@ pub fn write_bench_summary(out_dir: &str, kernel: &Json, maintenance: &Json) -> 
         ("schema", Json::str("bench_summary/v1")),
         ("kernel", kernel.clone()),
         ("maintenance", maintenance.clone()),
+        ("solver", solver.clone()),
         ("serve", serve),
     ]);
     std::fs::create_dir_all(out_dir)
@@ -148,17 +157,19 @@ mod tests {
         let out = dir.to_string_lossy().into_owned();
         let kernel = Json::object(vec![("schema", Json::str("bench_kernel/v2"))]);
         let maint = Json::object(vec![("schema", Json::str("bench_maintenance/v1"))]);
+        let solver = Json::object(vec![("schema", Json::str("bench_solver/v1"))]);
         // No serve report present: the slot is null.
-        let path = write_bench_summary(&out, &kernel, &maint).unwrap();
+        let path = write_bench_summary(&out, &kernel, &maint, &solver).unwrap();
         let back = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
         assert_eq!(back.get("schema").and_then(Json::as_str), Some("bench_summary/v1"));
         assert_eq!(back.get("kernel"), Some(&kernel));
         assert_eq!(back.get("maintenance"), Some(&maint));
+        assert_eq!(back.get("solver"), Some(&solver));
         assert_eq!(back.get("serve"), Some(&Json::Null));
         // With a serve report on disk it is folded in.
         let serve = Json::object(vec![("schema", Json::str("bench_serve/v1"))]);
         std::fs::write(dir.join(serve_bench::REPORT_FILE), format!("{serve}\n")).unwrap();
-        let path = write_bench_summary(&out, &kernel, &maint).unwrap();
+        let path = write_bench_summary(&out, &kernel, &maint, &solver).unwrap();
         let back = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
         assert_eq!(back.get("serve"), Some(&serve));
         std::fs::remove_dir_all(&dir).ok();

@@ -1,0 +1,187 @@
+//! Tracked solver-family bench harness (`repro bench --solver-bench`):
+//! the primal (BSGD) and dual (BDCA) budgeted trainers head to head on
+//! the same stream, budget and seed, emitted as `BENCH_solver.json` so CI
+//! can gate accuracy parity and archive the trajectory alongside
+//! `BENCH_kernel.json` / `BENCH_maintenance.json` / `BENCH_serve.json`.
+//!
+//! One training job per [`crate::solver::SolverSpec`], recording
+//!
+//! * **epochs/s** and steps/s (the dual sweeps make a BDCA pass more
+//!   expensive than a primal one — this is the price being tracked),
+//! * the **Gram-fill share** of the dual-solver time
+//!   ([`Section::GramFill`] vs [`Section::DualAscent`]): how much of BDCA
+//!   goes into keeping the `(B+slack)²` slab exact under churn rather
+//!   than into coordinate updates,
+//! * train/test accuracy at the **same budget B** — the parity gate: the
+//!   dual solver must match the primal one within 0.01 test accuracy
+//!   (`parity_gap` in the report, gated in CI).
+
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::data::synthetic::two_moons;
+use crate::data::Dataset;
+use crate::kernel::KernelSpec;
+use crate::metrics::Section;
+use crate::solver::{AnyEstimator, Estimator, RunConfig, SolverSpec, SvmConfig};
+use crate::util::json::Json;
+
+/// File name of the emitted report.
+pub const REPORT_FILE: &str = "BENCH_solver.json";
+
+/// Maximum test-accuracy deficit of BDCA vs BSGD the harness (and CI)
+/// accepts at equal budget.
+pub const PARITY_TOLERANCE: f64 = 0.01;
+
+/// The family members the harness compares, in report order.
+pub const SOLVERS: [SolverSpec; 2] = [SolverSpec::Bsgd, SolverSpec::Bdca];
+
+fn accuracy_on(est: &AnyEstimator, ds: &Dataset) -> Result<f64> {
+    let preds = est.predict_batch(ds.features())?;
+    Ok(crate::metrics::accuracy(&preds, ds.labels()))
+}
+
+/// Run the full harness. `quick` shrinks the workload for CI smoke runs.
+/// Returns the JSON report (the caller decides where it goes).
+pub fn run(quick: bool) -> Result<Json> {
+    let n = if quick { 600 } else { 4000 };
+    let n_test = if quick { 400 } else { 1000 };
+    let budget = if quick { 60 } else { 100 };
+    let passes = 6;
+    let train = two_moons(n, 0.12, 42);
+    let test = two_moons(n_test, 0.12, 43);
+
+    let mut cells = Vec::new();
+    let mut test_accs = Vec::new();
+    for solver in SOLVERS {
+        let config = SvmConfig::new()
+            .kernel(KernelSpec::gaussian(2.0))
+            .budget(budget)
+            .c(10.0, train.len())
+            .grid(400);
+        let run = RunConfig::new().passes(passes).seed(1).threads(1);
+        let mut est = AnyEstimator::new(solver, config, run)?;
+        let t0 = Instant::now();
+        est.fit(&train)?;
+        let wall = t0.elapsed().as_secs_f64();
+        let summary = est.summary().context("fitted estimator")?;
+        let prof = &summary.profiler;
+        let dual = prof.dual_seconds();
+        let gram_fill = prof.seconds(Section::GramFill);
+        let train_acc = accuracy_on(&est, &train)?;
+        let test_acc = accuracy_on(&est, &test)?;
+        test_accs.push(test_acc);
+        let model = est.model().context("fitted estimator")?;
+        cells.push(Json::object(vec![
+            ("solver", Json::str(solver.name())),
+            ("steps", Json::num(summary.steps as f64)),
+            ("steps_per_s", Json::num(summary.steps as f64 / wall.max(1e-12))),
+            ("epochs_per_s", Json::num(passes as f64 / wall.max(1e-12))),
+            ("wall_seconds", Json::num(wall)),
+            ("maintenance_events", Json::num(summary.maintenance_events as f64)),
+            ("maintenance_share", Json::num(summary.maintenance_fraction())),
+            ("dual_seconds", Json::num(dual)),
+            ("gram_fill_seconds", Json::num(gram_fill)),
+            (
+                "gram_fill_share",
+                Json::num(if dual > 0.0 { gram_fill / dual } else { 0.0 }),
+            ),
+            ("num_sv", Json::num(model.num_sv() as f64)),
+            ("train_accuracy", Json::num(train_acc)),
+            ("test_accuracy", Json::num(test_acc)),
+        ]));
+    }
+
+    // Signed deficit of the dual solver: positive = BDCA behind BSGD.
+    let parity_gap = test_accs[0] - test_accs[1];
+    Ok(Json::object(vec![
+        ("schema", Json::str("bench_solver/v1")),
+        ("rows", Json::num(n as f64)),
+        ("test_rows", Json::num(n_test as f64)),
+        ("passes", Json::num(passes as f64)),
+        ("budget", Json::num(budget as f64)),
+        ("quick", Json::Bool(quick)),
+        ("parity_gap", Json::num(parity_gap)),
+        ("parity_tolerance", Json::num(PARITY_TOLERANCE)),
+        ("cells", Json::array(cells)),
+    ]))
+}
+
+/// Human-readable summary of a report (printed by `repro bench
+/// --solver-bench`).
+pub fn render(report: &Json) -> String {
+    let mut out = String::from(
+        "Solver family at equal budget (epochs/s, Gram-fill share, accuracy)\n\n",
+    );
+    if let Some(cells) = report.get("cells").and_then(Json::as_array) {
+        for c in cells {
+            let g = |k: &str| c.get(k).and_then(Json::as_f64).unwrap_or(f64::NAN);
+            let solver = c.get("solver").and_then(Json::as_str).unwrap_or("?").to_string();
+            out.push_str(&format!(
+                "  {solver:<5} epochs/s {:>8.1}  steps/s {:>9.0}  \
+                 gram-fill share {:>5.1}%  sv {:>4.0}  acc train/test {:.3}/{:.3}\n",
+                g("epochs_per_s"),
+                g("steps_per_s"),
+                100.0 * g("gram_fill_share"),
+                g("num_sv"),
+                g("train_accuracy"),
+                g("test_accuracy"),
+            ));
+        }
+    }
+    let gap = report.get("parity_gap").and_then(Json::as_f64).unwrap_or(f64::NAN);
+    let tol = report.get("parity_tolerance").and_then(Json::as_f64).unwrap_or(f64::NAN);
+    out.push_str(&format!(
+        "\n  parity gap (bsgd - bdca test accuracy): {gap:+.4} (tolerance {tol:.2})\n"
+    ));
+    out
+}
+
+/// Write the report as `BENCH_solver.json` under `out_dir` (created if
+/// missing); returns the written path.
+pub fn write(report: &Json, out_dir: &str) -> Result<String> {
+    std::fs::create_dir_all(out_dir)
+        .with_context(|| format!("cannot create output directory {out_dir}"))?;
+    let path = format!("{}/{}", out_dir.trim_end_matches('/'), REPORT_FILE);
+    std::fs::write(&path, format!("{report}\n"))
+        .with_context(|| format!("cannot write {path}"))?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_harness_produces_well_formed_report_and_holds_parity() {
+        let report = run(true).expect("solver bench runs");
+        assert_eq!(report.get("schema").and_then(Json::as_str), Some("bench_solver/v1"));
+        let budget = report.get("budget").and_then(Json::as_usize).unwrap();
+        let cells = report.get("cells").and_then(Json::as_array).expect("cells");
+        assert_eq!(cells.len(), SOLVERS.len());
+        for (cell, solver) in cells.iter().zip(SOLVERS) {
+            assert_eq!(cell.get("solver").and_then(Json::as_str), Some(solver.name()));
+            assert!(cell.get("num_sv").and_then(Json::as_usize).unwrap() <= budget);
+            let share = cell.get("gram_fill_share").and_then(Json::as_f64).unwrap();
+            assert!((0.0..=1.0).contains(&share), "gram-fill share {share}");
+            let acc = cell.get("test_accuracy").and_then(Json::as_f64).unwrap();
+            assert!(acc > 0.85, "{} test accuracy {acc}", solver.name());
+            let dual = cell.get("dual_seconds").and_then(Json::as_f64).unwrap();
+            match solver {
+                // The primal solver never touches the dual sections.
+                SolverSpec::Bsgd => assert_eq!(dual, 0.0),
+                // The dual solver spends real time in both of them.
+                SolverSpec::Bdca => {
+                    assert!(dual > 0.0);
+                    assert!(cell.get("gram_fill_seconds").and_then(Json::as_f64).unwrap() > 0.0);
+                }
+            }
+        }
+        // The headline gate: equal-budget accuracy parity.
+        let gap = report.get("parity_gap").and_then(Json::as_f64).unwrap();
+        assert!(gap <= PARITY_TOLERANCE, "parity gap {gap} exceeds {PARITY_TOLERANCE}");
+        // Round-trips through the in-repo JSON parser.
+        assert_eq!(Json::parse(&report.to_string()).unwrap(), report);
+    }
+}

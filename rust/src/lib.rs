@@ -97,7 +97,7 @@ pub mod prelude {
     pub use crate::model::AnyModel;
     pub use crate::serve::{ModelRegistry, ServeConfig};
     pub use crate::solver::{
-        BsgdEstimator, Estimator, FitSummary, OneVsRestEstimator, PegasosEstimator, RunConfig,
-        SmoEstimator, SvmConfig,
+        AnyEstimator, BdcaEstimator, BsgdEstimator, Estimator, FitSummary, OneVsRestEstimator,
+        PegasosEstimator, RunConfig, SmoEstimator, SolverSpec, SvmConfig,
     };
 }

@@ -13,6 +13,7 @@ use budgetsvm::coordinator;
 use budgetsvm::experiments;
 use budgetsvm::kernel::KernelSpec;
 use budgetsvm::runtime::Runtime;
+use budgetsvm::solver::SolverSpec;
 
 const SUBCOMMANDS: &[(&str, &str)] = &[
     ("all", "run the full campaign: tables 1-3 + figures 2-3"),
@@ -53,6 +54,17 @@ fn opt_specs() -> Vec<OptSpec> {
             help: "train: gaussian:<gamma>|linear|poly:<degree>[:<coef0>] \
                    (non-gaussian kernels need --strategy removal|projection)",
         },
+        OptSpec {
+            name: "solver",
+            takes_value: true,
+            help: "train/serve: binary solver family member, bsgd (primal, default) \
+                   or bdca (dual coordinate ascent on a cached Gram slab)",
+        },
+        OptSpec {
+            name: "dual-epochs",
+            takes_value: true,
+            help: "train/serve: dual-ascent sweeps per pass for --solver bdca (default 2)",
+        },
         OptSpec { name: "passes", takes_value: true, help: "train: passes override" },
         OptSpec { name: "c", takes_value: true, help: "train: C override" },
         OptSpec { name: "gamma", takes_value: true, help: "train: gaussian gamma override" },
@@ -81,10 +93,16 @@ fn opt_specs() -> Vec<OptSpec> {
             help: "bench: budget-maintenance amortization harness (BENCH_maintenance.json)",
         },
         OptSpec {
+            name: "solver-bench",
+            takes_value: false,
+            help: "bench: solver-family harness, BSGD vs BDCA at equal budget \
+                   (BENCH_solver.json, accuracy-parity gated in CI)",
+        },
+        OptSpec {
             name: "all",
             takes_value: false,
-            help: "bench: run kernel + maintenance harnesses and write a merged \
-                   top-level BENCH_summary.json (per-bench files unchanged)",
+            help: "bench: run kernel + maintenance + solver harnesses and write a \
+                   merged top-level BENCH_summary.json (per-bench files unchanged)",
         },
         OptSpec { name: "model-out", takes_value: true, help: "train: save the model here" },
         OptSpec { name: "table-out", takes_value: true, help: "precompute: output path" },
@@ -155,6 +173,13 @@ fn config_from(args: &Args) -> Result<ExperimentConfig> {
     if args.flag("fast-exp") {
         cfg.fast_exp = true;
     }
+    if let Some(s) = args.get("solver") {
+        cfg.solver = SolverSpec::parse(s)
+            .ok_or_else(|| anyhow::anyhow!("unknown solver '{s}' (expected bsgd or bdca)"))?;
+    }
+    if let Some(x) = args.get_usize("dual-epochs")? {
+        cfg.dual_epochs = x;
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -214,8 +239,9 @@ fn main() -> Result<()> {
         "bench" => {
             if args.flag("all") {
                 // One invocation, one trajectory artifact: kernel +
-                // maintenance harnesses, merged into BENCH_summary.json
-                // (the per-bench files keep their paths for the gates).
+                // maintenance + solver harnesses, merged into
+                // BENCH_summary.json (the per-bench files keep their paths
+                // for the gates).
                 let kernel = experiments::kernel_bench::run(args.flag("quick"), cfg.threads)?;
                 println!("{kernel}");
                 let kpath = experiments::kernel_bench::write(&kernel, &cfg.out_dir)?;
@@ -224,8 +250,18 @@ fn main() -> Result<()> {
                 print!("{}", experiments::maint_bench::render(&maint));
                 let mpath = experiments::maint_bench::write(&maint, &cfg.out_dir)?;
                 eprintln!("maintenance bench report written to {mpath}");
-                let spath = experiments::write_bench_summary(&cfg.out_dir, &kernel, &maint)?;
+                let solver = experiments::solver_bench::run(args.flag("quick"))?;
+                print!("{}", experiments::solver_bench::render(&solver));
+                let sbpath = experiments::solver_bench::write(&solver, &cfg.out_dir)?;
+                eprintln!("solver bench report written to {sbpath}");
+                let spath =
+                    experiments::write_bench_summary(&cfg.out_dir, &kernel, &maint, &solver)?;
                 eprintln!("merged bench summary written to {spath}");
+            } else if args.flag("solver-bench") {
+                let report = experiments::solver_bench::run(args.flag("quick"))?;
+                print!("{}", experiments::solver_bench::render(&report));
+                let path = experiments::solver_bench::write(&report, &cfg.out_dir)?;
+                eprintln!("solver bench report written to {path}");
             } else if args.flag("maintenance") {
                 let report = experiments::maint_bench::run(args.flag("quick"))?;
                 print!("{}", experiments::maint_bench::render(&report));
@@ -252,6 +288,10 @@ fn main() -> Result<()> {
             scfg.publish_adapt = args.flag("publish-adapt");
             scfg.threads = cfg.threads;
             scfg.seed = cfg.seed;
+            // `--solver bdca` trains the ingest shards with the dual
+            // solver; `--dual-epochs` tunes its per-pass sweep count.
+            scfg.solver = cfg.solver;
+            scfg.svm.dual_epochs = cfg.dual_epochs;
             scfg.svm.grid = cfg.grid;
             if let Some(b) = args.get_usize("budget")? {
                 scfg.svm.budget = b;
@@ -342,6 +382,7 @@ fn main() -> Result<()> {
                 args.get_f64("gamma")?,
                 args.get_f64("maint-slack")?.unwrap_or(cfg.maint_slack),
                 args.get_usize("maint-pairs")?.unwrap_or(cfg.maint_pairs),
+                cfg.solver,
             )?;
             if let Some(path) = args.get("model-out") {
                 budgetsvm::model::io::save_any(&run.model, path)?;
@@ -351,6 +392,7 @@ fn main() -> Result<()> {
                 println!("{}", coordinator::single_run_json(&run, strategy));
             } else {
                 println!("dataset            : {} ({} rows)", run.dataset, run.n_train);
+                println!("solver             : {}", cfg.solver.name());
                 println!("strategy           : {}", strategy.name());
                 println!("kernel             : {}", run.model.kernel_spec().describe());
                 println!(
@@ -519,6 +561,51 @@ mod tests {
                 .unwrap_or_else(|| panic!("flag --{flag} is not declared"));
             assert!(!spec.takes_value, "--{flag} must be a flag");
         }
+    }
+
+    #[test]
+    fn solver_surface_is_declared() {
+        let specs = opt_specs();
+        for opt in ["solver", "dual-epochs"] {
+            let spec = specs
+                .iter()
+                .find(|s| s.name == opt)
+                .unwrap_or_else(|| panic!("solver option --{opt} is not declared"));
+            assert!(spec.takes_value, "--{opt} must take a value");
+        }
+        let bench = specs
+            .iter()
+            .find(|s| s.name == "solver-bench")
+            .expect("flag --solver-bench is not declared");
+        assert!(!bench.takes_value, "--solver-bench must be a flag");
+    }
+
+    #[test]
+    fn solver_options_parse_through_the_cli() {
+        let argv: Vec<String> = ["train", "ijcnn", "--solver", "bdca", "--dual-epochs", "3"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let args = Args::parse(&argv, &opt_specs()).unwrap();
+        let cfg = config_from(&args).unwrap();
+        assert_eq!(cfg.solver, SolverSpec::Bdca);
+        assert_eq!(cfg.dual_epochs, 3);
+
+        // Unknown family members and degenerate epoch counts are rejected.
+        let argv: Vec<String> =
+            ["train", "ijcnn", "--solver", "smo"].iter().map(|s| s.to_string()).collect();
+        let args = Args::parse(&argv, &opt_specs()).unwrap();
+        assert!(config_from(&args).is_err());
+        let argv: Vec<String> =
+            ["train", "ijcnn", "--dual-epochs", "0"].iter().map(|s| s.to_string()).collect();
+        let args = Args::parse(&argv, &opt_specs()).unwrap();
+        assert!(config_from(&args).is_err());
+
+        // The bench leg flag parses alongside --quick.
+        let argv: Vec<String> =
+            ["bench", "--solver-bench", "--quick"].iter().map(|s| s.to_string()).collect();
+        let args = Args::parse(&argv, &opt_specs()).unwrap();
+        assert!(args.flag("solver-bench") && args.flag("quick"));
     }
 
     #[test]

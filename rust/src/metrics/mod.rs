@@ -23,15 +23,30 @@ use crate::util::stats::Welford;
 /// ([`SectionProfiler::section_b_seconds`]); the finer split makes the
 /// amortization claim of multi-pair maintenance measurable (one scan shared
 /// by many pairs shrinks `MaintScan` per merged pair).
+///
+/// The dual solver family (BDCA) adds two sections of its own so
+/// Figure-3-style consumers see where dual training time goes:
+///
+/// * `DualAscent` — randomized coordinate-ascent epoch sweeps over the
+///   budgeted SV set (closed-form per-coordinate updates off cached Gram
+///   rows),
+/// * `GramFill` — filling the [`crate::budget::GramCache`]: blocked kernel
+///   rows on SV insert and full slab rebuilds after opaque maintenance
+///   churn.
+///
+/// Both stay at zero for the primal solvers, so the existing BSGD
+/// accounting ([`SectionProfiler::total_seconds`] et al.) is unchanged.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Section {
     SgdStep,
     MaintA,
     MaintScan,
     MaintApply,
+    DualAscent,
+    GramFill,
 }
 
-const N_SECTIONS: usize = 4;
+const N_SECTIONS: usize = 6;
 
 /// Accumulates wall time per [`Section`] in nanoseconds.
 #[derive(Debug, Clone, Default)]
@@ -79,9 +94,15 @@ impl SectionProfiler {
         self.seconds(Section::MaintA) + self.section_b_seconds()
     }
 
+    /// Total dual-solver time: coordinate-ascent epoch sweeps plus Gram
+    /// cache fills. Zero for the primal solvers.
+    pub fn dual_seconds(&self) -> f64 {
+        self.seconds(Section::DualAscent) + self.seconds(Section::GramFill)
+    }
+
     /// Total accounted time.
     pub fn total_seconds(&self) -> f64 {
-        self.seconds(Section::SgdStep) + self.maintenance_seconds()
+        self.seconds(Section::SgdStep) + self.maintenance_seconds() + self.dual_seconds()
     }
 
     pub fn merge(&mut self, other: &SectionProfiler) {
@@ -161,6 +182,34 @@ mod tests {
         assert_eq!(p.events(Section::MaintA), 2);
         assert!((p.section_b_seconds() - 25e-9).abs() < 1e-15);
         assert!((p.maintenance_seconds() - 175e-9).abs() < 1e-15);
+    }
+
+    #[test]
+    fn dual_sections_split_from_maintenance_accounting() {
+        let mut p = SectionProfiler::new();
+        p.add_ns(Section::SgdStep, 100);
+        p.add_ns(Section::DualAscent, 40);
+        p.add_ns(Section::GramFill, 20);
+        // Dual work never leaks into the primal maintenance accounting …
+        assert!((p.maintenance_seconds() - 0.0).abs() < 1e-15);
+        assert!((p.dual_seconds() - 60e-9).abs() < 1e-15);
+        // … but is part of the total accounted time.
+        assert!((p.total_seconds() - 160e-9).abs() < 1e-15);
+        assert_eq!(p.events(Section::DualAscent), 1);
+        assert_eq!(p.events(Section::GramFill), 1);
+    }
+
+    #[test]
+    fn merge_covers_dual_sections() {
+        let mut a = SectionProfiler::new();
+        let mut b = SectionProfiler::new();
+        a.add_ns(Section::DualAscent, 10);
+        b.add_ns(Section::DualAscent, 30);
+        b.add_ns(Section::GramFill, 5);
+        a.merge(&b);
+        assert_eq!(a.ns(Section::DualAscent), 40);
+        assert_eq!(a.events(Section::DualAscent), 2);
+        assert_eq!(a.ns(Section::GramFill), 5);
     }
 
     #[test]

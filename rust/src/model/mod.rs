@@ -200,6 +200,14 @@ impl<K: Kernel + Copy> BudgetModel<K> {
         self.alpha[j] += delta_eff / self.scale;
     }
 
+    /// Overwrite the *effective* coefficient of SV `j` exactly (no
+    /// accumulate-then-round drift): the dual solver clips coefficients
+    /// onto its box boundary with this, which an `add_alpha` of the
+    /// difference could miss by an ulp.
+    pub fn set_alpha(&mut self, j: usize, alpha_eff: f64) {
+        self.alpha[j] = alpha_eff / self.scale;
+    }
+
     /// Index of the SV with minimal `|α|` (None if empty). Ties break to the
     /// lowest index.
     pub fn argmin_abs_alpha(&self) -> Option<usize> {

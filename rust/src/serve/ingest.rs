@@ -1,6 +1,8 @@
 //! Sharded streaming-ingest pipeline: `S` long-lived shard workers, each
-//! running an independent `BsgdEstimator::partial_fit` stream, with a
-//! periodic snapshot → merge → publish step into the [`ModelRegistry`].
+//! running an independent `partial_fit` stream on a shard estimator built
+//! by the solver-agnostic factory (`AnyEstimator::new_shard` — BSGD or
+//! BDCA, per `SolverSpec`), with a periodic snapshot → merge → publish
+//! step into the [`ModelRegistry`].
 //!
 //! Determinism: rows are partitioned round-robin by their global stream
 //! index, each shard consumes its sub-stream in presented order with a
@@ -19,7 +21,7 @@ use anyhow::{anyhow, ensure, Result};
 
 use crate::data::Dataset;
 use crate::model::AnyModel;
-use crate::solver::{BsgdEstimator, Estimator, RunConfig, SvmConfig};
+use crate::solver::{AnyEstimator, Estimator, RunConfig, SolverSpec, SvmConfig};
 use crate::util::parallel::{spawn_worker, Worker};
 
 use super::registry::ModelRegistry;
@@ -101,11 +103,27 @@ const ADAPT_MAX_FACTOR: usize = 16;
 const ADAPT_WINDOW: usize = 4;
 
 impl ShardedIngest {
-    /// Build the pipeline: `shards` workers, each owning a
-    /// [`BsgdEstimator`] constructed via `BsgdEstimator::new_shard`
-    /// (deterministic per-shard seed, serial inside). Publishing merges
-    /// into `registry` every `publish_every` ingested rows.
+    /// Build the pipeline with the default primal (BSGD) shard solver —
+    /// a thin wrapper over [`ShardedIngest::with_solver`], kept so
+    /// existing callers and their trained trajectories are untouched.
     pub fn new(
+        config: SvmConfig,
+        run: RunConfig,
+        shards: usize,
+        publish_every: usize,
+        registry: Arc<ModelRegistry>,
+    ) -> Result<Self> {
+        Self::with_solver(SolverSpec::Bsgd, config, run, shards, publish_every, registry)
+    }
+
+    /// Build the pipeline: `shards` workers, each owning a shard
+    /// estimator from the solver-agnostic factory
+    /// ([`AnyEstimator::new_shard`]: deterministic per-shard seed, serial
+    /// inside — BSGD and BDCA share the seed convention, so swapping
+    /// solvers keeps shard decorrelation). Publishing merges into
+    /// `registry` every `publish_every` ingested rows.
+    pub fn with_solver(
+        solver: SolverSpec,
         config: SvmConfig,
         run: RunConfig,
         shards: usize,
@@ -116,7 +134,7 @@ impl ShardedIngest {
         ensure!(publish_every >= 1, "publish_every must be at least 1");
         let mut workers = Vec::with_capacity(shards);
         for s in 0..shards {
-            let mut est = BsgdEstimator::new_shard(config.clone(), run.clone(), s)?;
+            let mut est = AnyEstimator::new_shard(solver, config.clone(), run.clone(), s)?;
             workers.push(spawn_worker(&format!("ingest-shard-{s}"), move |cmd: ShardCmd| {
                 match cmd {
                     ShardCmd::Ingest(ds) => {
@@ -291,6 +309,7 @@ mod tests {
     use super::*;
     use crate::data::synthetic::two_moons;
     use crate::kernel::KernelSpec;
+    use crate::solver::BsgdEstimator;
 
     fn config_for(n: usize, budget: usize) -> SvmConfig {
         SvmConfig::new().kernel(KernelSpec::gaussian(2.0)).budget(budget).c(10.0, n)
@@ -438,6 +457,87 @@ mod tests {
         }
         // The published model is still a valid budgeted model.
         assert!(registry.current().unwrap().model().num_sv() <= 30);
+    }
+
+    #[test]
+    fn default_factory_is_the_bsgd_path_bit_for_bit() {
+        let ds = two_moons(300, 0.12, 17);
+        let run_with = |solver: Option<SolverSpec>| {
+            let registry = Arc::new(ModelRegistry::new());
+            let mut ing = match solver {
+                Some(spec) => ShardedIngest::with_solver(
+                    spec,
+                    config_for(ds.len(), 30),
+                    RunConfig::new().seed(11),
+                    3,
+                    120,
+                    Arc::clone(&registry),
+                ),
+                None => ShardedIngest::new(
+                    config_for(ds.len(), 30),
+                    RunConfig::new().seed(11),
+                    3,
+                    120,
+                    Arc::clone(&registry),
+                ),
+            }
+            .unwrap();
+            ing.ingest(&ds).unwrap();
+            ing.finish().unwrap();
+            registry
+        };
+        let via_new = run_with(None);
+        let via_factory = run_with(Some(SolverSpec::Bsgd));
+        let (a, b) = (via_new.current().unwrap(), via_factory.current().unwrap());
+        assert_eq!(a.model().num_sv(), b.model().num_sv());
+        for i in (0..ds.len()).step_by(29) {
+            assert_eq!(
+                a.model().decision(ds.row(i)).to_bits(),
+                b.model().decision(ds.row(i)).to_bits(),
+                "row {i}"
+            );
+        }
+    }
+
+    #[test]
+    fn dual_solver_shards_train_and_publish_deterministically() {
+        let ds = two_moons(500, 0.12, 19);
+        let run_once = || {
+            let registry = Arc::new(ModelRegistry::new());
+            let mut ing = ShardedIngest::with_solver(
+                SolverSpec::Bdca,
+                config_for(ds.len(), 30),
+                RunConfig::new().seed(11),
+                4,
+                150,
+                Arc::clone(&registry),
+            )
+            .unwrap();
+            let mut start = 0;
+            while start < ds.len() {
+                let idx: Vec<usize> = (start..(start + 64).min(ds.len())).collect();
+                ing.ingest(&ds.subset(&idx, "chunk")).unwrap();
+                start += 64;
+            }
+            let report = ing.finish().unwrap();
+            (registry, report)
+        };
+        let (reg1, rep1) = run_once();
+        let (reg2, rep2) = run_once();
+        assert_eq!(rep1.rows, 500);
+        assert_eq!(rep1.publishes, rep2.publishes);
+        let (s1, s2) = (reg1.current().unwrap(), reg2.current().unwrap());
+        assert!(s1.model().num_sv() <= 30, "budget violated");
+        assert_eq!(s1.model().num_sv(), s2.model().num_sv());
+        for &i in &[0usize, 17, 123, 250, 499] {
+            assert_eq!(
+                s1.model().decision(ds.row(i)).to_bits(),
+                s2.model().decision(ds.row(i)).to_bits(),
+                "row {i}"
+            );
+        }
+        // And the merged dual model still learns the task.
+        assert!(s1.model().accuracy(&ds) > 0.8);
     }
 
     #[test]

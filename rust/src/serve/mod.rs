@@ -16,8 +16,10 @@
 //! * [`ingest`] — [`ShardedIngest`]: the streaming-ingest pipeline.
 //!   Incoming labeled rows are partitioned round-robin across `S`
 //!   long-lived shard workers ([`crate::util::parallel::spawn_worker`]),
-//!   each running an independent [`crate::solver::BsgdEstimator`]
-//!   `partial_fit` stream with a deterministic per-shard seed
+//!   each running an independent `partial_fit` stream on a shard
+//!   estimator from the solver-agnostic factory
+//!   ([`crate::solver::AnyEstimator::new_shard`], `--solver bsgd|bdca`)
+//!   with a deterministic per-shard seed
 //!   ([`crate::solver::bsgd::shard_seed`]). [`merge`] periodically folds
 //!   the shard models into one budget-respecting model which is published
 //!   into the registry.
@@ -94,7 +96,7 @@ pub use registry::{ModelRegistry, ModelSnapshot};
 
 use anyhow::{ensure, Result};
 
-use crate::solver::SvmConfig;
+use crate::solver::{SolverSpec, SvmConfig};
 
 /// Configuration of the serving subsystem (`repro serve`): the request
 /// front end, the ingest pipeline, and the model hyperparameters used for
@@ -125,6 +127,8 @@ pub struct ServeConfig {
     pub threads: usize,
     /// Base RNG seed (shards derive their own via `shard_seed`).
     pub seed: u64,
+    /// Binary solver the ingest shards train with (`--solver bsgd|bdca`).
+    pub solver: SolverSpec,
     /// Hyperparameters for pipeline-trained models.
     pub svm: SvmConfig,
 }
@@ -140,6 +144,7 @@ impl Default for ServeConfig {
             ingest_chunk: 64,
             threads: 0,
             seed: 0,
+            solver: SolverSpec::Bsgd,
             svm: SvmConfig::default(),
         }
     }

@@ -1,8 +1,11 @@
 //! The unified estimator surface: one `fit` / `partial_fit` /
 //! `decision_function` / `predict_batch` contract implemented by every
-//! trainer in this crate (BSGD, one-vs-rest multiclass, Pegasos, SMO),
-//! plus the configuration split into model hyperparameters ([`SvmConfig`])
-//! and run/instrumentation knobs ([`RunConfig`]).
+//! trainer in this crate (BSGD, BDCA, one-vs-rest multiclass, Pegasos,
+//! SMO), plus the configuration split into model hyperparameters
+//! ([`SvmConfig`]) and run/instrumentation knobs ([`RunConfig`]), and the
+//! solver-family registration ([`SolverSpec`] → [`AnyEstimator`]) that
+//! lets serving shards, the one-vs-rest reducer and the coordinator pick
+//! a binary trainer at runtime.
 //!
 //! ```no_run
 //! use budgetsvm::data::synthetic::two_moons;
@@ -23,10 +26,13 @@
 use anyhow::{ensure, Context, Result};
 
 use crate::budget::{MaintenanceConfig, MergeSolver, Strategy};
+use crate::data::Dataset;
 use crate::kernel::KernelSpec;
 use crate::metrics::{AgreementStats, SectionProfiler};
+use crate::model::AnyModel;
 
-use super::bsgd::CurvePoint;
+use super::bdca::BdcaEstimator;
+use super::bsgd::{BsgdEstimator, CurvePoint};
 use super::schedule::LearningRate;
 
 /// Model hyperparameters of a (budgeted) kernel SVM: everything that
@@ -69,6 +75,11 @@ pub struct SvmConfig {
     /// never serialized with a model; non-Gaussian kernels ignore it
     /// (they evaluate no exponential).
     pub fast_exp: bool,
+    /// Dual-ascent epochs: randomized coordinate-ascent sweeps over the
+    /// budgeted SV set that the dual solver family (BDCA) runs after each
+    /// streaming pass. Only read by [`super::BdcaEstimator`]; the primal
+    /// solvers ignore it.
+    pub dual_epochs: usize,
 }
 
 impl Default for SvmConfig {
@@ -82,6 +93,7 @@ impl Default for SvmConfig {
             maint_slack: 0.0,
             maint_pairs: 0,
             fast_exp: false,
+            dual_epochs: 2,
         }
     }
 }
@@ -147,6 +159,13 @@ impl SvmConfig {
         self
     }
 
+    /// Set the dual-ascent epoch count (BDCA only; ignored by the primal
+    /// solvers).
+    pub fn dual_epochs(mut self, epochs: usize) -> Self {
+        self.dual_epochs = epochs;
+        self
+    }
+
     /// The budget-maintenance slice of this configuration — what
     /// [`crate::budget::policy`] builds a [`crate::budget::MaintenancePolicy`]
     /// from.
@@ -170,6 +189,11 @@ impl SvmConfig {
             self.lambda
         );
         ensure!(self.grid >= 2, "lookup grid must be at least 2, got {}", self.grid);
+        ensure!(
+            self.dual_epochs >= 1,
+            "need at least one dual-ascent epoch, got {}",
+            self.dual_epochs
+        );
         self.maintenance().validate()?;
         ensure!(
             self.strategy.valid_for(&self.kernel),
@@ -380,6 +404,164 @@ pub trait Estimator {
     }
 }
 
+/// Which member of the budgeted binary solver family trains a model:
+/// the primal SGD trainer (BSGD, the paper's solver) or the dual
+/// coordinate-ascent trainer (BDCA, its sister-paper sibling). Both share
+/// [`SvmConfig`]/[`RunConfig`], the budget-maintenance pipeline and the
+/// [`Estimator`] contract, so everything downstream (serving shards,
+/// one-vs-rest reduction, the coordinator) selects a solver by this spec
+/// instead of hard-wiring a concrete type.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SolverSpec {
+    /// Budgeted primal SGD with merging/removal/projection maintenance
+    /// (Wang et al. 2012 + the paper's merge solvers). The default.
+    #[default]
+    Bsgd,
+    /// Budgeted dual coordinate ascent over a churn-aware Gram cache.
+    Bdca,
+}
+
+impl SolverSpec {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SolverSpec::Bsgd => "bsgd",
+            SolverSpec::Bdca => "bdca",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<SolverSpec> {
+        match s.to_ascii_lowercase().as_str() {
+            "bsgd" => Some(SolverSpec::Bsgd),
+            "bdca" => Some(SolverSpec::Bdca),
+            _ => None,
+        }
+    }
+}
+
+/// Runtime-dispatched member of the binary solver family — the estimator
+/// counterpart of [`crate::model::AnyModel`] / [`crate::budget::AnyPolicy`].
+/// Built from a [`SolverSpec`] so shard factories and one-vs-rest wiring
+/// stay solver-agnostic.
+#[derive(Debug)]
+pub enum AnyEstimator {
+    Bsgd(BsgdEstimator),
+    Bdca(BdcaEstimator),
+}
+
+impl AnyEstimator {
+    pub fn new(solver: SolverSpec, config: SvmConfig, run: RunConfig) -> Result<Self> {
+        Ok(match solver {
+            SolverSpec::Bsgd => AnyEstimator::Bsgd(BsgdEstimator::new(config, run)?),
+            SolverSpec::Bdca => AnyEstimator::Bdca(BdcaEstimator::new(config, run)?),
+        })
+    }
+
+    /// Shard-deterministic constructor (see [`super::bsgd::shard_seed`]):
+    /// the solver-agnostic factory the serving layer builds its ingest
+    /// shards from.
+    pub fn new_shard(
+        solver: SolverSpec,
+        config: SvmConfig,
+        run: RunConfig,
+        shard: usize,
+    ) -> Result<Self> {
+        Ok(match solver {
+            SolverSpec::Bsgd => AnyEstimator::Bsgd(BsgdEstimator::new_shard(config, run, shard)?),
+            SolverSpec::Bdca => AnyEstimator::Bdca(BdcaEstimator::new_shard(config, run, shard)?),
+        })
+    }
+
+    pub fn solver(&self) -> SolverSpec {
+        match self {
+            AnyEstimator::Bsgd(_) => SolverSpec::Bsgd,
+            AnyEstimator::Bdca(_) => SolverSpec::Bdca,
+        }
+    }
+
+    pub fn config(&self) -> &SvmConfig {
+        match self {
+            AnyEstimator::Bsgd(e) => e.config(),
+            AnyEstimator::Bdca(e) => e.config(),
+        }
+    }
+
+    /// Snapshot of the current model plus the step counter it was taken at
+    /// (`None` until the first ingest) — what the serving layer publishes.
+    pub fn snapshot(&self) -> Option<(AnyModel, u64)> {
+        match self {
+            AnyEstimator::Bsgd(e) => e.snapshot(),
+            AnyEstimator::Bdca(e) => e.snapshot(),
+        }
+    }
+
+    pub fn model(&self) -> Option<&AnyModel> {
+        match self {
+            AnyEstimator::Bsgd(e) => e.model(),
+            AnyEstimator::Bdca(e) => e.model(),
+        }
+    }
+
+    pub fn summary(&self) -> Option<&FitSummary> {
+        match self {
+            AnyEstimator::Bsgd(e) => e.summary(),
+            AnyEstimator::Bdca(e) => e.summary(),
+        }
+    }
+
+    pub fn into_model(self) -> Result<AnyModel> {
+        match self {
+            AnyEstimator::Bsgd(e) => e.into_model(),
+            AnyEstimator::Bdca(e) => e.into_model(),
+        }
+    }
+}
+
+impl Estimator for AnyEstimator {
+    type Data = Dataset;
+
+    fn fit(&mut self, data: &Dataset) -> Result<()> {
+        match self {
+            AnyEstimator::Bsgd(e) => e.fit(data),
+            AnyEstimator::Bdca(e) => e.fit(data),
+        }
+    }
+
+    fn partial_fit(&mut self, data: &Dataset) -> Result<()> {
+        match self {
+            AnyEstimator::Bsgd(e) => e.partial_fit(data),
+            AnyEstimator::Bdca(e) => e.partial_fit(data),
+        }
+    }
+
+    fn decision_function(&self, x: &[f32]) -> Result<Vec<f64>> {
+        match self {
+            AnyEstimator::Bsgd(e) => e.decision_function(x),
+            AnyEstimator::Bdca(e) => e.decision_function(x),
+        }
+    }
+
+    fn predict(&self, x: &[f32]) -> Result<f32> {
+        match self {
+            AnyEstimator::Bsgd(e) => e.predict(x),
+            AnyEstimator::Bdca(e) => e.predict(x),
+        }
+    }
+
+    fn dim(&self) -> Option<usize> {
+        match self {
+            AnyEstimator::Bsgd(e) => e.dim(),
+            AnyEstimator::Bdca(e) => e.dim(),
+        }
+    }
+
+    fn predict_batch(&self, x: &[f32]) -> Result<Vec<f32>> {
+        match self {
+            AnyEstimator::Bsgd(e) => e.predict_batch(x),
+            AnyEstimator::Bdca(e) => e.predict_batch(x),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -458,6 +640,54 @@ mod tests {
         // 0 (all cores) and 1 (serial) are both valid.
         RunConfig::new().threads(0).validate().unwrap();
         RunConfig::new().threads(1).validate().unwrap();
+    }
+
+    #[test]
+    fn dual_epochs_knob_chains_and_validates() {
+        let cfg = SvmConfig::new().dual_epochs(5);
+        assert_eq!(cfg.dual_epochs, 5);
+        cfg.validate().unwrap();
+        assert_eq!(SvmConfig::new().dual_epochs, 2);
+        assert!(SvmConfig::new().dual_epochs(0).validate().is_err());
+    }
+
+    #[test]
+    fn solver_spec_parsing_and_names() {
+        assert_eq!(SolverSpec::parse("bsgd"), Some(SolverSpec::Bsgd));
+        assert_eq!(SolverSpec::parse("BDCA"), Some(SolverSpec::Bdca));
+        assert_eq!(SolverSpec::parse("bogus"), None);
+        assert_eq!(SolverSpec::default(), SolverSpec::Bsgd);
+        for spec in [SolverSpec::Bsgd, SolverSpec::Bdca] {
+            assert_eq!(SolverSpec::parse(spec.name()), Some(spec));
+        }
+    }
+
+    #[test]
+    fn any_estimator_dispatches_both_family_members() {
+        use crate::data::synthetic::two_moons;
+        let train = two_moons(200, 0.12, 7);
+        for spec in [SolverSpec::Bsgd, SolverSpec::Bdca] {
+            let config = SvmConfig::new()
+                .kernel(KernelSpec::gaussian(2.0))
+                .budget(40)
+                .c(10.0, train.len());
+            let mut est =
+                AnyEstimator::new(spec, config, RunConfig::new().passes(2).seed(3)).unwrap();
+            assert_eq!(est.solver(), spec);
+            assert!(!est.is_fitted());
+            assert!(est.snapshot().is_none());
+            est.fit(&train).unwrap();
+            assert_eq!(est.dim(), Some(train.dim()));
+            let preds = est.predict_batch(train.features()).unwrap();
+            assert_eq!(preds.len(), train.len());
+            assert!(est.model().unwrap().num_sv() <= 40, "{spec:?}");
+            assert!(est.summary().unwrap().steps > 0);
+            let (snap, steps) = est.snapshot().unwrap();
+            assert_eq!(steps, est.summary().unwrap().steps);
+            assert_eq!(snap.num_sv(), est.model().unwrap().num_sv());
+            let model = est.into_model().unwrap();
+            assert!(model.num_sv() <= 40);
+        }
     }
 
     #[test]

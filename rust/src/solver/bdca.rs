@@ -1,0 +1,738 @@
+//! BDCA: budgeted dual coordinate ascent on a churn-aware Gram cache.
+//!
+//! The dual sibling of [`super::bsgd`] (the sister paper of the merging
+//! work, arXiv:1806.10182): instead of primal SGD steps, the trainer
+//! maintains the C-SVM **dual** variables of the stored support vectors —
+//! one box-constrained coefficient `a_j ∈ [0, C]` per SV, carried inside
+//! the model as the label-signed effective coefficient `α_j = y_j·a_j` —
+//! and improves the dual objective
+//!
+//! ```text
+//! D(a) = Σ_j a_j − ½ Σ_{i,j} α_i α_j k(x_i, x_j)
+//! ```
+//!
+//! by randomized coordinate ascent with the closed-form per-coordinate
+//! maximizer `a_j ← clip(a_j + (1 − y_j f(x_j)) / k(x_j, x_j), 0, C)`.
+//! Streaming rows enter by the same rule: a margin violator is an exact
+//! coordinate step on a fresh coordinate (`a = 0`), so insertions and
+//! sweep updates alike never decrease `D` — the invariant pinned by
+//! `tests/dual_invariants.rs`. `C = 1/(λ·n)` (the paper's convention),
+//! calibrated on the first ingest batch.
+//!
+//! Every `f(x_j)` a sweep needs is a dot product over a cached kernel row:
+//! the [`GramCache`] mirrors the budget-sized Gram matrix, filled through
+//! the blocked tile engine (all SIMD tiers apply), grown incrementally on
+//! insert and kept exact under budget-maintenance churn via the
+//! [`crate::budget::ChurnObserver`] hook — removal victims replay
+//! bit-identically, opaque merge/projection events invalidate and the
+//! trainer rebuilds (timed as [`Section::GramFill`]; the sweeps themselves
+//! as [`Section::DualAscent`]).
+//!
+//! Budget overflow dispatches through the *same*
+//! [`crate::budget::MaintenancePolicy`] pipeline as BSGD
+//! (merge/removal/projection); after an event the trainer folds the lazy
+//! scale and clips coefficients back onto the box exactly (merged `|α_z|`
+//! may exceed `C`), so the dual iterate leaving any `fit`/`partial_fit`
+//! is always feasible.
+
+use std::time::Instant;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::budget::{gaussian_policy, generic_policy, AnyPolicy, GramCache, MaintenancePolicy};
+use crate::data::Dataset;
+use crate::kernel::Kernel;
+use crate::metrics::Section;
+use crate::model::{AnyModel, BudgetModel};
+use crate::util::rng::Rng;
+
+use super::api::{Estimator, FitSummary, RunConfig, SvmConfig};
+use super::bsgd::shard_seed;
+
+/// Coordinates whose diagonal kernel value is at most this are skipped
+/// (e.g. the zero vector under the linear kernel): the closed-form update
+/// divides by `k(x_j, x_j)`.
+const K_DIAG_FLOOR: f64 = 1e-12;
+
+/// The dual trainer's per-ingest hyperparameters (the dual analogue of
+/// `SgdHyper`).
+struct BdcaHyper {
+    budget: usize,
+    /// Box upper bound `C = 1/(λ·n)`.
+    box_c: f64,
+    /// Coordinate-ascent sweeps after each streaming pass.
+    epochs: usize,
+}
+
+/// One streaming ingest: `passes` passes over `train` (each pass = one
+/// insertion scan + `epochs` randomized coordinate-ascent sweeps), budget
+/// maintenance dispatched through `policy` with the Gram cache observing
+/// churn. Mirrors `run_sgd_passes`' accounting: `steps`, `sv_inserts`,
+/// `maintenance_events`, weight degradation and wall time accumulate into
+/// `summary`; scan/sweep time lands in [`Section::DualAscent`], cache
+/// fills in [`Section::GramFill`].
+#[allow(clippy::too_many_arguments)]
+fn run_bdca_passes<K: Kernel + Copy>(
+    model: &mut BudgetModel<K>,
+    gram: &mut GramCache,
+    train: &Dataset,
+    passes: usize,
+    shuffle: bool,
+    hyper: &BdcaHyper,
+    rng: &mut Rng,
+    summary: &mut FitSummary,
+    policy: &mut dyn MaintenancePolicy<K>,
+) {
+    let wall_start = Instant::now();
+    let norms = train.norms();
+    let mut order: Vec<usize> = (0..train.len()).collect();
+    for _pass in 0..passes {
+        if shuffle {
+            rng.shuffle(&mut order);
+        }
+        for &i in &order {
+            summary.steps += 1;
+            let t_scan = Instant::now();
+            let x = train.row(i);
+            let y = train.label(i) as f64;
+            let margin = y * model.decision_with_norm(x, norms[i]);
+            let mut inserted = false;
+            if margin < 1.0 {
+                // Exact coordinate-ascent step on a fresh coordinate
+                // (a = 0): a₀ = clip((1 − y·f(x)) / k(x, x), 0, C) > 0
+                // exactly when the margin is violated.
+                let kxx = model.kernel().self_eval(norms[i]);
+                if kxx > K_DIAG_FLOOR {
+                    let a0 = ((1.0 - margin) / kxx).min(hyper.box_c);
+                    if a0 > 0.0 {
+                        model.push(x, y * a0);
+                        summary.sv_inserts += 1;
+                        inserted = true;
+                    }
+                }
+            }
+            summary.profiler.add(Section::DualAscent, t_scan.elapsed());
+            if inserted {
+                let t_fill = Instant::now();
+                gram.push_row(model);
+                summary.profiler.add(Section::GramFill, t_fill.elapsed());
+            }
+
+            if hyper.budget > 0 && policy.trigger(model.num_sv(), hyper.budget) {
+                summary.maintenance_events += 1;
+                summary.total_weight_degradation +=
+                    policy.maintain_observed(model, hyper.budget, &mut summary.profiler, gram);
+                resync_after_maintenance(model, gram, hyper.box_c, summary);
+            }
+        }
+        // Randomized coordinate-ascent epochs over the stored SV set.
+        for _ in 0..hyper.epochs {
+            let t_sweep = Instant::now();
+            dual_sweep(model, gram, hyper.box_c, rng);
+            summary.profiler.add(Section::DualAscent, t_sweep.elapsed());
+        }
+    }
+    // Hard budget enforcement at the end of the ingest call (see the BSGD
+    // twin): with slack the model may still overshoot here; shed the
+    // excess so callers always see a budget-respecting, box-feasible
+    // model. A no-op when slack = 0.
+    while hyper.budget > 0 && model.num_sv() > hyper.budget {
+        summary.maintenance_events += 1;
+        summary.total_weight_degradation +=
+            policy.maintain_observed(model, hyper.budget, &mut summary.profiler, gram);
+        resync_after_maintenance(model, gram, hyper.box_c, summary);
+    }
+    summary.wall_seconds += wall_start.elapsed().as_secs_f64();
+}
+
+/// Restore the dual invariants after a maintenance event: fold the lazy
+/// scale, clip coefficients back onto the box *exactly* (a merged `|α_z|`
+/// may exceed `C`; removal/projection rewrites may too), and rebuild the
+/// Gram mirror if the event was opaque ([`GramCache::is_stale`]).
+fn resync_after_maintenance<K: Kernel + Copy>(
+    model: &mut BudgetModel<K>,
+    gram: &mut GramCache,
+    box_c: f64,
+    summary: &mut FitSummary,
+) {
+    model.fold_scale();
+    for j in 0..model.num_sv() {
+        let a = model.alpha(j);
+        if a.abs() > box_c {
+            // set_alpha, not add_alpha: the assignment must land on the
+            // boundary exactly, not an ulp past it.
+            model.set_alpha(j, a.signum() * box_c);
+        }
+    }
+    if gram.is_stale() {
+        let t_fill = Instant::now();
+        gram.rebuild(model);
+        summary.profiler.add(Section::GramFill, t_fill.elapsed());
+    }
+}
+
+/// One randomized coordinate-ascent sweep: visit every stored SV in a
+/// fresh random permutation and apply the closed-form box-clipped
+/// maximizer. Exact per-coordinate maximization of a concave parabola
+/// clamped to its feasible interval — `D` never decreases. Coordinates at
+/// `a = 0` are skipped: their label is no longer recoverable from the
+/// signed coefficient, they contribute nothing to `f`, and budget
+/// maintenance sheds them first (min-|α|).
+fn dual_sweep<K: Kernel + Copy>(
+    model: &mut BudgetModel<K>,
+    gram: &GramCache,
+    box_c: f64,
+    rng: &mut Rng,
+) {
+    let n = model.num_sv();
+    debug_assert_eq!(gram.len(), n, "Gram mirror out of sync with the model");
+    if n == 0 {
+        return;
+    }
+    for j in rng.permutation(n) {
+        let alpha_j = model.alpha(j);
+        if alpha_j == 0.0 {
+            continue;
+        }
+        let y_j = if alpha_j >= 0.0 { 1.0 } else { -1.0 };
+        let a_j = alpha_j.abs();
+        let row = gram.row(j);
+        let kjj = row[j];
+        if kjj <= K_DIAG_FLOOR {
+            continue;
+        }
+        // f(x_j) off the cached row — Gauss–Seidel: always against the
+        // *current* coefficients, including this sweep's earlier updates.
+        let mut f_j = model.bias;
+        for (i, &k_ij) in row.iter().enumerate() {
+            f_j += model.alpha(i) * k_ij;
+        }
+        let new_a = (a_j + (1.0 - y_j * f_j) / kjj).clamp(0.0, box_c);
+        if new_a != a_j {
+            model.set_alpha(j, y_j * new_a);
+        }
+    }
+}
+
+/// The dual objective `D(a) = Σ_j a_j − ½ Σ_j α_j f(x_j)` evaluated off
+/// the cached Gram rows (`a_j = |α_j|` by the signed-coefficient
+/// convention; the trainer keeps the bias at zero).
+fn dual_objective_of<K: Kernel + Copy>(model: &BudgetModel<K>, gram: &GramCache) -> f64 {
+    let n = model.num_sv();
+    debug_assert_eq!(gram.len(), n, "Gram mirror out of sync with the model");
+    let mut d = 0.0;
+    for j in 0..n {
+        let alpha_j = model.alpha(j);
+        let row = gram.row(j);
+        let mut f_j = 0.0;
+        for (i, &k_ij) in row.iter().enumerate() {
+            f_j += model.alpha(i) * k_ij;
+        }
+        d += alpha_j.abs() - 0.5 * alpha_j * f_j;
+    }
+    d
+}
+
+/// `true` iff `gram` is bit-identical to a fresh [`GramCache::rebuild`]
+/// from `model` — the exactness invariant the churn discipline maintains.
+fn gram_matches_fresh<K: Kernel + Copy>(model: &BudgetModel<K>, gram: &GramCache) -> bool {
+    if gram.is_stale() || gram.len() != model.num_sv() {
+        return false;
+    }
+    let mut fresh = GramCache::new(gram.capacity());
+    fresh.rebuild(model);
+    (0..gram.len())
+        .all(|j| gram.row(j).iter().zip(fresh.row(j)).all(|(a, b)| a.to_bits() == b.to_bits()))
+}
+
+/// Internal trained state of a [`BdcaEstimator`].
+struct BdcaState {
+    model: AnyModel,
+    summary: FitSummary,
+    /// Maintenance policy, kept across `partial_fit` calls (scratch
+    /// buffers and the removal min-|α| index survive the stream).
+    policy: Option<AnyPolicy>,
+    rng: Rng,
+    /// The budget-sized Gram mirror the sweeps read their rows from.
+    gram: GramCache,
+    /// Dual box upper bound `C = 1/(λ·n)`, calibrated on the first ingest
+    /// batch and fixed for the rest of the stream.
+    box_c: f64,
+}
+
+/// Budgeted dual coordinate-ascent trainer behind the unified
+/// [`Estimator`] surface: kernel-generic, streaming-capable, with the
+/// same budget-maintenance pipeline as [`super::BsgdEstimator`] (merge on
+/// Gaussian, removal/projection everywhere) observed by a churn-aware
+/// Gram cache. See the module docs for the algorithm.
+///
+/// Differences from the primal twin: no learning-rate schedule (the
+/// closed-form coordinate maximizer has no step size), no objective
+/// curves and no merge-solver audit (both are primal-SGD
+/// instrumentation); `SvmConfig::dual_epochs` controls the sweeps per
+/// pass instead.
+pub struct BdcaEstimator {
+    config: SvmConfig,
+    run: RunConfig,
+    state: Option<BdcaState>,
+}
+
+impl BdcaEstimator {
+    /// Validate the configuration pair and build an unfitted estimator.
+    pub fn new(config: SvmConfig, run: RunConfig) -> Result<Self> {
+        config.validate()?;
+        run.validate()?;
+        ensure!(
+            config.budget >= 2,
+            "budgeted dual ascent needs a budget of at least 2 (merging needs a pair), got {}",
+            config.budget
+        );
+        ensure!(
+            !run.audit,
+            "audit instrumentation compares merge solvers on the primal SGD path; \
+             the dual trainer does not support it"
+        );
+        ensure!(
+            run.curve_every == 0,
+            "objective curves are primal-SGD instrumentation; the dual trainer \
+             does not record them"
+        );
+        Ok(BdcaEstimator { config, run, state: None })
+    }
+
+    /// Shard-local construction for the sharded streaming-ingest pipeline
+    /// (same [`shard_seed`] convention as the primal twin, so swapping
+    /// solvers keeps shard decorrelation and reproducibility).
+    pub fn new_shard(config: SvmConfig, mut run: RunConfig, shard: usize) -> Result<Self> {
+        run.seed = shard_seed(run.seed, shard);
+        run.threads = 1;
+        Self::new(config, run)
+    }
+
+    /// Snapshot export for the serving layer: a clone of the current model
+    /// plus the cumulative step count (the publish weight of this shard).
+    /// `None` before the first ingest.
+    pub fn snapshot(&self) -> Option<(AnyModel, u64)> {
+        self.state.as_ref().map(|s| (s.model.clone(), s.summary.steps))
+    }
+
+    /// The model hyperparameters this estimator was built with.
+    pub fn config(&self) -> &SvmConfig {
+        &self.config
+    }
+
+    /// The trained model, if fitted.
+    pub fn model(&self) -> Option<&AnyModel> {
+        self.state.as_ref().map(|s| &s.model)
+    }
+
+    /// Cumulative training statistics, if fitted.
+    pub fn summary(&self) -> Option<&FitSummary> {
+        self.state.as_ref().map(|s| &s.summary)
+    }
+
+    /// Consume the estimator, returning the trained model.
+    pub fn into_model(self) -> Result<AnyModel> {
+        Ok(self.state.context("estimator is not fitted")?.model)
+    }
+
+    /// The dual box upper bound `C = 1/(λ·n)` in effect (`None` before
+    /// the first ingest).
+    pub fn box_c(&self) -> Option<f64> {
+        self.state.as_ref().map(|s| s.box_c)
+    }
+
+    /// Current dual objective `D(a)` off the cached Gram rows (`None`
+    /// before the first ingest). Every ingest leaves the cache in sync,
+    /// so this is always evaluable on a fitted estimator.
+    pub fn dual_objective(&self) -> Option<f64> {
+        let st = self.state.as_ref()?;
+        Some(match &st.model {
+            AnyModel::Gaussian(m) => dual_objective_of(m, &st.gram),
+            AnyModel::Linear(m) => dual_objective_of(m, &st.gram),
+            AnyModel::Polynomial(m) => dual_objective_of(m, &st.gram),
+        })
+    }
+
+    /// Verification probe (driven by the dual-invariants suite): is the
+    /// churn-maintained Gram cache bit-identical to a fresh recomputation
+    /// from the current model? `None` before the first ingest.
+    pub fn gram_matches_fresh_rebuild(&self) -> Option<bool> {
+        let st = self.state.as_ref()?;
+        Some(match &st.model {
+            AnyModel::Gaussian(m) => gram_matches_fresh(m, &st.gram),
+            AnyModel::Linear(m) => gram_matches_fresh(m, &st.gram),
+            AnyModel::Polynomial(m) => gram_matches_fresh(m, &st.gram),
+        })
+    }
+
+    /// Run `epochs` extra coordinate-ascent sweeps on the fitted state and
+    /// return the dual objective after each — the monotonicity probe the
+    /// dual-invariants suite drives.
+    pub fn ascend_epochs(&mut self, epochs: usize) -> Result<Vec<f64>> {
+        let st = self.state.as_mut().context("estimator is not fitted")?;
+        let mut objectives = Vec::with_capacity(epochs);
+        for _ in 0..epochs {
+            let t_sweep = Instant::now();
+            let d = match &mut st.model {
+                AnyModel::Gaussian(m) => {
+                    dual_sweep(m, &st.gram, st.box_c, &mut st.rng);
+                    dual_objective_of(m, &st.gram)
+                }
+                AnyModel::Linear(m) => {
+                    dual_sweep(m, &st.gram, st.box_c, &mut st.rng);
+                    dual_objective_of(m, &st.gram)
+                }
+                AnyModel::Polynomial(m) => {
+                    dual_sweep(m, &st.gram, st.box_c, &mut st.rng);
+                    dual_objective_of(m, &st.gram)
+                }
+            };
+            st.summary.profiler.add(Section::DualAscent, t_sweep.elapsed());
+            objectives.push(d);
+        }
+        Ok(objectives)
+    }
+
+    /// One ingest call: `passes` passes over `train` (insertion scan +
+    /// `dual_epochs` sweeps each), shuffling between passes iff `shuffle`.
+    /// Creates the state — model, Gram cache, the box bound `C` — on
+    /// first use.
+    fn ingest(&mut self, train: &Dataset, passes: usize, shuffle: bool) -> Result<()> {
+        ensure!(!train.is_empty(), "cannot train on an empty dataset");
+        if self.state.is_none() {
+            // Room for the slack overshoot plus the triggering insert;
+            // the Gram mirror is sized to match the model exactly.
+            let capacity = self.config.budget + (self.config.maint_slack.ceil() as usize) + 1;
+            let mut model = AnyModel::new(train.dim(), self.config.kernel, capacity)?;
+            model.set_fast_exp(self.config.fast_exp);
+            self.state = Some(BdcaState {
+                model,
+                summary: FitSummary::default(),
+                policy: None,
+                rng: Rng::new(self.run.seed),
+                gram: GramCache::new(capacity),
+                box_c: 1.0 / (self.config.lambda * train.len() as f64),
+            });
+        }
+        let maint = self.config.maintenance();
+        let st = self.state.as_mut().unwrap();
+        ensure!(
+            st.model.dim() == train.dim(),
+            "dataset dimension {} does not match the fitted model dimension {}",
+            train.dim(),
+            st.model.dim()
+        );
+        let hyper = BdcaHyper {
+            budget: self.config.budget,
+            box_c: st.box_c,
+            epochs: self.config.dual_epochs,
+        };
+        match &mut st.model {
+            AnyModel::Gaussian(model) => {
+                let mut policy = match st.policy.take() {
+                    Some(AnyPolicy::Gaussian(p)) => p,
+                    _ => gaussian_policy(&maint),
+                };
+                run_bdca_passes(
+                    model,
+                    &mut st.gram,
+                    train,
+                    passes,
+                    shuffle,
+                    &hyper,
+                    &mut st.rng,
+                    &mut st.summary,
+                    policy.as_mut(),
+                );
+                st.policy = Some(AnyPolicy::Gaussian(policy));
+            }
+            AnyModel::Linear(model) => {
+                let mut policy = match st.policy.take() {
+                    Some(AnyPolicy::Linear(p)) => p,
+                    _ => generic_policy(&maint)?,
+                };
+                run_bdca_passes(
+                    model,
+                    &mut st.gram,
+                    train,
+                    passes,
+                    shuffle,
+                    &hyper,
+                    &mut st.rng,
+                    &mut st.summary,
+                    policy.as_mut(),
+                );
+                st.policy = Some(AnyPolicy::Linear(policy));
+            }
+            AnyModel::Polynomial(model) => {
+                let mut policy = match st.policy.take() {
+                    Some(AnyPolicy::Polynomial(p)) => p,
+                    _ => generic_policy(&maint)?,
+                };
+                run_bdca_passes(
+                    model,
+                    &mut st.gram,
+                    train,
+                    passes,
+                    shuffle,
+                    &hyper,
+                    &mut st.rng,
+                    &mut st.summary,
+                    policy.as_mut(),
+                );
+                st.policy = Some(AnyPolicy::Polynomial(policy));
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Estimator for BdcaEstimator {
+    type Data = Dataset;
+
+    fn fit(&mut self, data: &Dataset) -> Result<()> {
+        self.state = None;
+        self.ingest(data, self.run.passes, self.run.shuffle)
+    }
+
+    fn partial_fit(&mut self, data: &Dataset) -> Result<()> {
+        self.ingest(data, 1, false)
+    }
+
+    fn decision_function(&self, x: &[f32]) -> Result<Vec<f64>> {
+        let st = self.state.as_ref().context("estimator is not fitted")?;
+        ensure!(x.len() == st.model.dim(), "feature row has wrong dimension");
+        Ok(vec![st.model.decision(x)])
+    }
+
+    fn predict(&self, x: &[f32]) -> Result<f32> {
+        let st = self.state.as_ref().context("estimator is not fitted")?;
+        ensure!(x.len() == st.model.dim(), "feature row has wrong dimension");
+        Ok(st.model.predict(x))
+    }
+
+    fn dim(&self) -> Option<usize> {
+        self.state.as_ref().map(|s| s.model.dim())
+    }
+
+    /// Chunked parallel batch prediction over `RunConfig::threads` workers
+    /// (row-granular split: identical output for every thread count).
+    fn predict_batch(&self, x: &[f32]) -> Result<Vec<f32>> {
+        let st = self.state.as_ref().context("estimator is not fitted")?;
+        let d = st.model.dim();
+        ensure!(
+            x.len() % d == 0,
+            "batch buffer length {} is not a multiple of the feature dimension {d}",
+            x.len()
+        );
+        Ok(st
+            .model
+            .decision_rows(x, self.run.threads)
+            .into_iter()
+            .map(|f| if f >= 0.0 { 1.0 } else { -1.0 })
+            .collect())
+    }
+}
+
+impl std::fmt::Debug for BdcaEstimator {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("BdcaEstimator")
+            .field("budget", &self.config.budget)
+            .field("kernel", &self.config.kernel)
+            .field("dual_epochs", &self.config.dual_epochs)
+            .field("fitted", &self.state.is_some())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::budget::Strategy;
+    use crate::data::synthetic::two_moons;
+    use crate::kernel::KernelSpec;
+    use crate::metrics::accuracy;
+
+    fn moons() -> Dataset {
+        two_moons(600, 0.12, 42)
+    }
+
+    fn moons_config(n: usize, budget: usize) -> SvmConfig {
+        SvmConfig::new().kernel(KernelSpec::gaussian(2.0)).budget(budget).c(10.0, n)
+    }
+
+    fn fitted(budget: usize, passes: usize, seed: u64) -> (Dataset, BdcaEstimator) {
+        let ds = moons();
+        let config = moons_config(ds.len(), budget);
+        let mut est =
+            BdcaEstimator::new(config, RunConfig::new().passes(passes).seed(seed)).unwrap();
+        est.fit(&ds).unwrap();
+        (ds, est)
+    }
+
+    #[test]
+    fn learns_two_moons_under_budget() {
+        let (ds, est) = fitted(50, 4, 1);
+        let model = est.model().unwrap();
+        assert!(model.num_sv() <= 50);
+        assert!(est.summary().unwrap().maintenance_events > 0, "budget must bind");
+        let preds = est.predict_batch(ds.features()).unwrap();
+        let acc = accuracy(&preds, ds.labels());
+        assert!(acc > 0.9, "accuracy {acc}");
+        // Dual-time accounting: sweeps and fills were timed, the primal
+        // sections stayed empty.
+        let prof = &est.summary().unwrap().profiler;
+        assert!(prof.events(Section::DualAscent) > 0);
+        assert!(prof.events(Section::GramFill) > 0);
+        assert_eq!(prof.events(Section::SgdStep), 0);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (ds, a) = fitted(40, 3, 9);
+        let (_, b) = fitted(40, 3, 9);
+        let da = a.model().unwrap().decision_rows(ds.features(), 1);
+        let db = b.model().unwrap().decision_rows(ds.features(), 1);
+        assert_eq!(da.len(), db.len());
+        for (x, y) in da.iter().zip(&db) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        assert_eq!(
+            a.dual_objective().unwrap().to_bits(),
+            b.dual_objective().unwrap().to_bits()
+        );
+    }
+
+    #[test]
+    fn partial_fit_equals_unshuffled_single_pass_fit() {
+        let ds = moons();
+        let config = moons_config(ds.len(), 40);
+        let run = RunConfig::new().passes(1).shuffle(false).seed(5);
+        let mut by_fit = BdcaEstimator::new(config.clone(), run.clone()).unwrap();
+        by_fit.fit(&ds).unwrap();
+        let mut by_stream = BdcaEstimator::new(config, run).unwrap();
+        by_stream.partial_fit(&ds).unwrap();
+        let fa = by_fit.model().unwrap().decision_rows(ds.features(), 1);
+        let fb = by_stream.model().unwrap().decision_rows(ds.features(), 1);
+        for (x, y) in fa.iter().zip(&fb) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn alpha_stays_in_the_box_under_churn() {
+        let ds = moons();
+        let config = moons_config(ds.len(), 30);
+        let mut est = BdcaEstimator::new(config, RunConfig::new().seed(3)).unwrap();
+        for _ in 0..4 {
+            est.partial_fit(&ds).unwrap();
+            let c = est.box_c().unwrap();
+            let model = est.model().unwrap();
+            assert!(model.num_sv() <= 30, "budget violated");
+            for j in 0..model.num_sv() {
+                let a = model.alpha(j).abs();
+                assert!(a <= c, "|α_{j}| = {a} outside [0, {c}]");
+            }
+        }
+    }
+
+    #[test]
+    fn dual_objective_is_monotone_when_budget_does_not_bind() {
+        let ds = two_moons(120, 0.12, 7);
+        // Budget above n: insertions and sweeps are the only operations,
+        // so D must never decrease (exact box-clipped maximization).
+        let config = moons_config(ds.len(), 200);
+        let mut est =
+            BdcaEstimator::new(config, RunConfig::new().passes(1).shuffle(false).seed(2)).unwrap();
+        est.fit(&ds).unwrap();
+        assert_eq!(est.summary().unwrap().maintenance_events, 0);
+        let mut last = est.dual_objective().unwrap();
+        assert!(last.is_finite());
+        for (e, d) in est.ascend_epochs(6).unwrap().into_iter().enumerate() {
+            assert!(
+                d >= last - 1e-9 * (1.0 + last.abs()),
+                "epoch {e}: dual objective fell {last} -> {d}"
+            );
+            last = d;
+        }
+    }
+
+    #[test]
+    fn non_gaussian_kernels_train_with_removal() {
+        let ds = moons();
+        for kernel in [KernelSpec::linear(), KernelSpec::polynomial(3, 1.0)] {
+            let config = SvmConfig::new()
+                .kernel(kernel)
+                .strategy(Strategy::Removal)
+                .budget(40)
+                .c(10.0, ds.len());
+            let mut est =
+                BdcaEstimator::new(config, RunConfig::new().passes(2).seed(4)).unwrap();
+            est.fit(&ds).unwrap();
+            assert!(est.model().unwrap().num_sv() <= 40, "{kernel:?}");
+            assert!(est.dual_objective().unwrap().is_finite());
+        }
+    }
+
+    #[test]
+    fn snapshot_is_a_clone() {
+        let (ds, mut est) = fitted(40, 2, 11);
+        let (snap, steps) = est.snapshot().unwrap();
+        assert_eq!(steps, est.summary().unwrap().steps);
+        est.partial_fit(&ds).unwrap();
+        // The snapshot is detached from further training.
+        assert!(snap.num_sv() <= 40);
+        assert!(est.summary().unwrap().steps > steps);
+    }
+
+    #[test]
+    fn rejects_bad_configurations() {
+        let cfg = SvmConfig::new();
+        assert!(BdcaEstimator::new(cfg.clone().budget(1), RunConfig::new()).is_err());
+        assert!(BdcaEstimator::new(cfg.clone(), RunConfig::new().audit(true)).is_err());
+        assert!(BdcaEstimator::new(cfg.clone(), RunConfig::new().curve(10, 32)).is_err());
+        assert!(BdcaEstimator::new(cfg.clone().dual_epochs(0), RunConfig::new()).is_err());
+        // Merge maintenance still requires the Gaussian kernel.
+        assert!(BdcaEstimator::new(
+            cfg.kernel(KernelSpec::linear()),
+            RunConfig::new()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn unfitted_estimator_errors() {
+        let est = BdcaEstimator::new(SvmConfig::new(), RunConfig::new()).unwrap();
+        assert!(!est.is_fitted());
+        assert!(est.decision_function(&[0.0, 0.0]).is_err());
+        assert!(est.predict(&[0.0, 0.0]).is_err());
+        assert!(est.predict_batch(&[0.0, 0.0]).is_err());
+        assert!(est.dual_objective().is_none());
+        assert!(est.box_c().is_none());
+        let mut est = est;
+        assert!(est.ascend_epochs(1).is_err());
+    }
+
+    #[test]
+    fn accuracy_parity_with_the_primal_twin_at_equal_budget() {
+        use super::super::bsgd::BsgdEstimator;
+        let ds = moons();
+        let test = two_moons(400, 0.12, 43);
+        let budget = 60;
+        let config = moons_config(ds.len(), budget);
+        let run = RunConfig::new().passes(6).seed(1);
+        let mut primal = BsgdEstimator::new(config.clone(), run.clone()).unwrap();
+        primal.fit(&ds).unwrap();
+        let mut dual = BdcaEstimator::new(config, run).unwrap();
+        dual.fit(&ds).unwrap();
+        let acc_p = accuracy(&primal.predict_batch(test.features()).unwrap(), test.labels());
+        let acc_d = accuracy(&dual.predict_batch(test.features()).unwrap(), test.labels());
+        // The acceptance gate: the dual solver reaches parity (within
+        // 0.01, one-sided) with BSGD at the same budget.
+        assert!(
+            acc_p - acc_d <= 0.01,
+            "dual accuracy {acc_d} more than 0.01 below primal {acc_p}"
+        );
+    }
+}

@@ -139,10 +139,11 @@ impl BsgdOptions {
                 strategy: self.strategy,
                 grid: self.grid,
                 // Legacy surface: classic per-overflow maintenance,
-                // libm exp semantics.
+                // libm exp semantics, primal-only (dual knob at default).
                 maint_slack: 0.0,
                 maint_pairs: 0,
                 fast_exp: false,
+                dual_epochs: 2,
             },
             RunConfig {
                 passes: self.passes,

@@ -1,30 +1,84 @@
-//! Training algorithms behind one unified [`Estimator`] surface
-//! (`fit` / `partial_fit` / `decision_function` / `predict_batch`):
+//! The solver family: every trainer in the crate behind one unified
+//! [`Estimator`] surface (`fit` / `partial_fit` / `decision_function` /
+//! `predict_batch`).
 //!
-//! * [`api`] — the [`Estimator`] trait plus the configuration split into
-//!   model hyperparameters ([`SvmConfig`], with a typed [`crate::kernel::KernelSpec`])
-//!   and run/instrumentation knobs ([`RunConfig`]).
-//! * [`bsgd`] — Budgeted Stochastic Gradient Descent (Wang et al. 2012),
-//!   the system this paper accelerates; fully instrumented
-//!   ([`BsgdEstimator`], legacy [`train_bsgd`]).
-//! * [`multiclass`] — one-vs-rest reduction (the paper's "other tasks"
-//!   generalization), K budgeted machines sharing one lookup table
-//!   ([`OneVsRestEstimator`], legacy `train_multiclass`).
-//! * [`pegasos`] — unbudgeted kernelized Pegasos baseline
-//!   ([`PegasosEstimator`], legacy `train_pegasos`).
-//! * [`smo`] — a working-set SMO dual solver standing in for LIBSVM as the
-//!   "exact model" reference of Table 1 ([`SmoEstimator`], legacy
-//!   `train_smo`).
-//! * [`schedule`] — learning-rate schedules.
+//! # The family, by optimization view
+//!
+//! **Primal, budgeted** — [`bsgd`]: Budgeted Stochastic Gradient Descent
+//! (Wang et al. 2012), the system this paper accelerates. One SGD step
+//! per streaming row (margin check, Pegasos-style `1/(λt)` shrink,
+//! insert on violation), budget maintenance on overflow. Cheapest per
+//! row; accuracy depends on the learning-rate schedule.
+//!
+//! **Primal, unbudgeted** — [`pegasos`]: kernelized Pegasos baseline.
+//! The same SGD step with the maintenance branch never firing — the SV
+//! set grows without bound. Reference quality for small streams; memory
+//! makes it unusable beyond that.
+//!
+//! **Dual, budgeted** — [`bdca`]: Budgeted Dual Coordinate Ascent (the
+//! sister paper, arXiv:1806.10182). Maintains box-constrained dual
+//! coefficients `a_j ∈ [0, C]` over the stored SVs and sweeps them with
+//! closed-form coordinate updates off a churn-aware Gram cache
+//! ([`crate::budget::GramCache`]). No step size to tune, monotone dual
+//! objective between maintenance events; costs `O(B)` per coordinate
+//! update plus the cached `(B+slack)²` Gram slab.
+//!
+//! **Dual, exact** — [`smo`]: working-set SMO standing in for LIBSVM as
+//! the "exact model" reference of Table 1. No budget, no streaming —
+//! batch-only, for ground truth on subsampled data.
+//!
+//! # The budget-maintenance contract
+//!
+//! Both budgeted trainers dispatch overflow through the same
+//! [`crate::budget::MaintenancePolicy`] pipeline (merge on Gaussian
+//! kernels, removal/projection on every kernel; see the
+//! [`crate::budget`] compatibility matrix) and guarantee `num_sv ≤ B` on
+//! every model leaving `fit`/`partial_fit`. BDCA additionally registers
+//! its Gram cache as a [`crate::budget::ChurnObserver`] so the cache
+//! stays exact (removal) or is rebuilt (merge/projection) across events,
+//! and re-clips coefficients onto the dual box afterwards.
+//!
+//! # Picking a solver
+//!
+//! * Default to **BSGD** (`--solver bsgd`): the paper's solver, fastest
+//!   per row, the right choice when the stream is long and the budget
+//!   tight.
+//! * Pick **BDCA** (`--solver bdca`) when step-size sensitivity hurts —
+//!   it has no learning rate, its dual objective is monotone per epoch,
+//!   and repeated sweeps squeeze more quality out of the *same* B stored
+//!   vectors (at the cost of the Gram slab and `O(B²)` sweep time).
+//! * **Pegasos** for unbudgeted reference runs, **SMO** for exact
+//!   references on small data.
+//!
+//! Both family members plug into everything downstream through
+//! [`SolverSpec`] → [`AnyEstimator`]: serving shards
+//! (`serve::ShardedIngest`), the one-vs-rest reduction and the
+//! coordinator select a solver at runtime instead of hard-wiring a type.
+//!
+//! # Layout
+//!
+//! * [`api`] — the [`Estimator`] trait, the configuration split
+//!   ([`SvmConfig`] / [`RunConfig`]) and the family registration
+//!   ([`SolverSpec`], [`AnyEstimator`]).
+//! * [`bsgd`] — the budgeted primal trainer ([`BsgdEstimator`], legacy
+//!   [`train_bsgd`]).
+//! * [`bdca`] — the budgeted dual trainer ([`BdcaEstimator`]).
+//! * [`multiclass`] — one-vs-rest reduction over K binary machines of
+//!   either solver, sharing one lookup table ([`OneVsRestEstimator`]).
+//! * [`pegasos`] — unbudgeted kernelized Pegasos ([`PegasosEstimator`]).
+//! * [`smo`] — the exact dual reference ([`SmoEstimator`]).
+//! * [`schedule`] — learning-rate schedules (primal only).
 
 pub mod api;
+pub mod bdca;
 pub mod bsgd;
 pub mod multiclass;
 pub mod pegasos;
 pub mod schedule;
 pub mod smo;
 
-pub use api::{Estimator, FitSummary, RunConfig, SvmConfig};
+pub use api::{AnyEstimator, Estimator, FitSummary, RunConfig, SolverSpec, SvmConfig};
+pub use bdca::BdcaEstimator;
 pub use bsgd::{train_bsgd, BsgdEstimator, BsgdOptions, CurvePoint, TrainReport};
 pub use multiclass::{MulticlassDataset, OneVsRestEstimator};
 pub use pegasos::PegasosEstimator;

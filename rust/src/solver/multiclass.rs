@@ -1,11 +1,13 @@
-//! Multi-class budgeted SVM via one-vs-rest BSGD.
+//! Multi-class budgeted SVM via one-vs-rest over the binary solver family.
 //!
 //! The paper's Section 2 notes that other loss functions / reductions
 //! "allow to generalize SVMs to other tasks like multi-class
 //! classification"; this module provides the standard one-vs-rest
-//! reduction: K independent budgeted binary machines, each trained with the
-//! same merge-solver machinery (so the lookup speed-up applies K-fold), and
-//! prediction by maximal decision value.
+//! reduction: K independent budgeted binary machines — any member of the
+//! [`super::api::SolverSpec`] family (primal BSGD by default, dual BDCA
+//! via [`OneVsRestEstimator::with_solver`]) — each trained with the same
+//! budget-maintenance machinery (so the lookup speed-up applies K-fold),
+//! and prediction by maximal decision value.
 //!
 //! [`OneVsRestEstimator`] is the [`Estimator`]-surface implementation —
 //! kernel-generic and streaming-capable like its binary machines; all K
@@ -30,8 +32,8 @@ use crate::kernel::norm2;
 use crate::model::{AnyModel, BudgetModel};
 use crate::util::parallel;
 
-use super::api::{Estimator, RunConfig, SvmConfig};
-use super::bsgd::{BsgdEstimator, BsgdOptions};
+use super::api::{AnyEstimator, Estimator, RunConfig, SolverSpec, SvmConfig};
+use super::bsgd::BsgdOptions;
 
 /// Rows with integer class labels in `0..k`.
 #[derive(Debug, Clone)]
@@ -107,26 +109,34 @@ fn class_seed(base: u64, c: usize) -> u64 {
 }
 
 /// One-vs-rest reduction behind the unified [`Estimator`] surface:
-/// K budgeted binary machines ([`BsgdEstimator`]), prediction by maximal
-/// decision value. `Data` is [`MulticlassDataset`] (class-index labels);
-/// inference still takes plain feature rows, returning the per-class score
-/// vector from `decision_function` and the argmax class from `predict`.
+/// K budgeted binary machines of one solver family member
+/// ([`AnyEstimator`]; BSGD by default), prediction by maximal decision
+/// value. `Data` is [`MulticlassDataset`] (class-index labels); inference
+/// still takes plain feature rows, returning the per-class score vector
+/// from `decision_function` and the argmax class from `predict`.
 pub struct OneVsRestEstimator {
+    solver: SolverSpec,
     config: SvmConfig,
     run: RunConfig,
-    machines: Vec<BsgdEstimator>,
+    machines: Vec<AnyEstimator>,
 }
 
 impl OneVsRestEstimator {
-    /// Validate the configuration pair and build an unfitted estimator.
-    /// The number of classes is learned from the first `fit`/`partial_fit`
-    /// batch.
+    /// Validate the configuration pair and build an unfitted estimator on
+    /// the default primal (BSGD) machines. The number of classes is
+    /// learned from the first `fit`/`partial_fit` batch.
     pub fn new(config: SvmConfig, run: RunConfig) -> Result<Self> {
+        Self::with_solver(SolverSpec::Bsgd, config, run)
+    }
+
+    /// [`OneVsRestEstimator::new`] with an explicit solver family member
+    /// for the K binary machines (`--solver bsgd|bdca`).
+    pub fn with_solver(solver: SolverSpec, config: SvmConfig, run: RunConfig) -> Result<Self> {
         // Fail fast on bad configs (each machine re-validates on build).
         config.validate()?;
         run.validate()?;
         ensure!(!run.audit, "audit instrumentation is a binary-trainer feature");
-        Ok(OneVsRestEstimator { config, run, machines: Vec::new() })
+        Ok(OneVsRestEstimator { solver, config, run, machines: Vec::new() })
     }
 
     fn build_machines(&mut self, k: usize) -> Result<()> {
@@ -137,10 +147,15 @@ impl OneVsRestEstimator {
                 // The ensemble owns the worker pool; machines stay serial
                 // inside so K-way class parallelism never oversubscribes.
                 run.threads = 1;
-                BsgdEstimator::new(self.config.clone(), run)
+                AnyEstimator::new(self.solver, self.config.clone(), run)
             })
             .collect::<Result<Vec<_>>>()?;
         Ok(())
+    }
+
+    /// The solver family member the binary machines use.
+    pub fn solver(&self) -> SolverSpec {
+        self.solver
     }
 
     /// Number of classes (0 before the first fit).
@@ -149,7 +164,7 @@ impl OneVsRestEstimator {
     }
 
     /// The per-class binary machine.
-    pub fn machine(&self, c: usize) -> Option<&BsgdEstimator> {
+    pub fn machine(&self, c: usize) -> Option<&AnyEstimator> {
         self.machines.get(c)
     }
 
@@ -525,6 +540,43 @@ mod tests {
         let acc = est.accuracy(&train).unwrap();
         assert!(acc > 0.85, "polynomial OvR accuracy {acc}");
         assert!(est.total_sv() <= 3 * 15);
+    }
+
+    #[test]
+    fn dual_solver_one_vs_rest_learns_and_holds_budgets() {
+        let train = three_blobs(450, 11);
+        let test = three_blobs(210, 12);
+        let config = SvmConfig::new()
+            .kernel(KernelSpec::gaussian(1.0))
+            .budget(20)
+            .c(10.0, train.len());
+        let mut est = OneVsRestEstimator::with_solver(
+            SolverSpec::Bdca,
+            config.clone(),
+            RunConfig::new().passes(3).seed(4),
+        )
+        .unwrap();
+        assert_eq!(est.solver(), SolverSpec::Bdca);
+        est.fit(&train).unwrap();
+        assert_eq!(est.num_classes(), 3);
+        assert!(est.total_sv() <= 3 * 20);
+        let acc = est.accuracy(&test).unwrap();
+        assert!(acc > 0.9, "dual OvR accuracy {acc}");
+        // Class parallelism stays bit-identical for dual machines too.
+        let mut par = OneVsRestEstimator::with_solver(
+            SolverSpec::Bdca,
+            config,
+            RunConfig::new().passes(3).seed(4).threads(4),
+        )
+        .unwrap();
+        par.fit(&train).unwrap();
+        for i in (0..train.len()).step_by(31) {
+            let a = est.decision_function(train.row(i)).unwrap();
+            let b = par.decision_function(train.row(i)).unwrap();
+            for (va, vb) in a.iter().zip(&b) {
+                assert_eq!(va.to_bits(), vb.to_bits(), "row {i}");
+            }
+        }
     }
 
     #[test]

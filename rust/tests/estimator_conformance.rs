@@ -1,7 +1,7 @@
 //! Estimator-trait conformance: the same `fit` / `partial_fit` /
 //! `decision_function` / `predict_batch` contract must hold across all
-//! four solver families (BSGD, one-vs-rest multiclass, Pegasos, SMO),
-//! plus the v1 → v2 model-format migration guarantee.
+//! five solver families (BSGD, BDCA, one-vs-rest multiclass, Pegasos,
+//! SMO), plus the v1 → v2 model-format migration guarantee.
 
 use budgetsvm::data::synthetic::two_moons;
 use budgetsvm::data::Dataset;
@@ -63,6 +63,30 @@ fn bsgd_fit_predict_roundtrip() {
 }
 
 #[test]
+fn bdca_fit_predict_roundtrip() {
+    let ds = two_moons(800, 0.12, 42);
+    let mut est =
+        BdcaEstimator::new(moons_config(&ds, 40), RunConfig::new().passes(4).seed(1)).unwrap();
+    binary_roundtrip(&mut est, &ds, 0.9, "bdca");
+    assert!(est.model().unwrap().num_sv() <= 40);
+}
+
+#[test]
+fn any_estimator_fit_predict_roundtrip_for_both_family_members() {
+    let ds = two_moons(600, 0.12, 9);
+    for solver in [SolverSpec::Bsgd, SolverSpec::Bdca] {
+        let mut est = AnyEstimator::new(
+            solver,
+            moons_config(&ds, 40),
+            RunConfig::new().passes(4).seed(1),
+        )
+        .unwrap();
+        binary_roundtrip(&mut est, &ds, 0.9, solver.name());
+        assert!(est.model().unwrap().num_sv() <= 40, "{}", solver.name());
+    }
+}
+
+#[test]
 fn pegasos_fit_predict_roundtrip() {
     let ds = two_moons(500, 0.12, 7);
     let lambda = 1.0 / (10.0 * ds.len() as f64);
@@ -119,6 +143,21 @@ fn bsgd_partial_fit_matches_unshuffled_single_pass_fit() {
     let mut fitted = BsgdEstimator::new(moons_config(&ds, 25), run.clone()).unwrap();
     fitted.fit(&ds).unwrap();
     let mut streamed = BsgdEstimator::new(moons_config(&ds, 25), run).unwrap();
+    streamed.partial_fit(&ds).unwrap();
+    for i in (0..ds.len()).step_by(7) {
+        let a = fitted.decision_function(ds.row(i)).unwrap()[0];
+        let b = streamed.decision_function(ds.row(i)).unwrap()[0];
+        assert!((a - b).abs() < 1e-12, "row {i}: {a} vs {b}");
+    }
+}
+
+#[test]
+fn bdca_partial_fit_matches_unshuffled_single_pass_fit() {
+    let ds = two_moons(400, 0.12, 3);
+    let run = RunConfig::new().passes(1).shuffle(false).seed(5);
+    let mut fitted = BdcaEstimator::new(moons_config(&ds, 25), run.clone()).unwrap();
+    fitted.fit(&ds).unwrap();
+    let mut streamed = BdcaEstimator::new(moons_config(&ds, 25), run).unwrap();
     streamed.partial_fit(&ds).unwrap();
     for i in (0..ds.len()).step_by(7) {
         let a = fitted.decision_function(ds.row(i)).unwrap()[0];
