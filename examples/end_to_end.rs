@@ -5,11 +5,16 @@
 //! 2. Trains BSGD through the estimator surface with GSS-standard and with
 //!    Lookup-WD (the paper's headline comparison), logging the objective
 //!    curve — L3 solver with the paper's contribution on the hot path.
-//! 3. Evaluates both models on the held-out test set **through the PJRT
+//! 3. Kills and recovers the serve-tier ingest pipeline: a torn-write
+//!    crash is injected mid-stream between WAL append and dispatch, then
+//!    `ShardedIngest::recover` replays the log — demonstrating the
+//!    zero-acked-loss, byte-identical durability contract behind
+//!    `repro serve --wal-dir ... --recover`.
+//! 4. Evaluates both models on the held-out test set **through the PJRT
 //!    runtime**, i.e. the Pallas `gauss_decision` kernel lowered by JAX and
 //!    executed from Rust — proving L1/L2/L3 compose. (Skipped with a notice
 //!    when the artifacts are absent or the build lacks the `pjrt` feature.)
-//! 4. Reports the timing breakdown and the relative speed-up.
+//! 5. Reports the timing breakdown and the relative speed-up.
 //!
 //! Results of the canonical run are recorded in EXPERIMENTS.md.
 //!
@@ -17,12 +22,115 @@
 //! make artifacts && cargo run --release --example end_to_end [scale]
 //! ```
 
+use std::sync::Arc;
+
 use budgetsvm::config::ExperimentConfig;
 use budgetsvm::data::synthetic::Profile;
+use budgetsvm::data::Dataset;
 use budgetsvm::experiments::prepare;
 use budgetsvm::metrics::Section;
 use budgetsvm::prelude::*;
 use budgetsvm::runtime::Runtime;
+use budgetsvm::serve::{wal, FaultPlan, ShardedIngest};
+
+/// Kill-and-recover demo of the fault-tolerant serve tier: ingest with a
+/// WAL and checkpoint, crash mid-stream with a torn final write, recover
+/// from the surviving pair, and verify the durability contract — zero
+/// acked rows lost and a model byte-identical to an uninterrupted run
+/// over the same acked prefix. The recovery path is exactly what
+/// `repro serve --wal-dir <dir> --recover` executes at startup.
+fn kill_and_recover(train: &Dataset, svm: &SvmConfig, seed: u64) -> anyhow::Result<()> {
+    let take: Vec<usize> = (0..train.len().min(2000)).collect();
+    let stream = train.subset(&take, "serve-stream");
+    let dir = std::env::temp_dir().join("budgetsvm-end-to-end-recover");
+    std::fs::create_dir_all(&dir)?;
+    let wal_path = dir.join(wal::WAL_FILE);
+    let ckpt_path = dir.join(wal::CHECKPOINT_FILE);
+    let _ = std::fs::remove_file(&wal_path);
+    let _ = std::fs::remove_file(&ckpt_path);
+
+    // Faulted run: crash (with a torn tail) at three quarters of the
+    // stream, after the triggering batch hit the WAL but before its rows
+    // reached the shard workers — the worst case for durability.
+    let crash_at = (3 * stream.len() / 4) as u64;
+    let registry = Arc::new(ModelRegistry::new());
+    let mut ingest = ShardedIngest::new(
+        svm.clone(),
+        RunConfig::new().seed(seed),
+        2,
+        (stream.len() / 3).max(1),
+        Arc::clone(&registry),
+    )?;
+    ingest.enable_wal(&wal_path)?;
+    ingest.checkpoint_at(&ckpt_path);
+    ingest.fault_inject(FaultPlan::none().with_crash_at_rows(crash_at, true))?;
+    let mut acked = 0usize;
+    let mut crashed = false;
+    for start in (0..stream.len()).step_by(128) {
+        let idx: Vec<usize> = (start..(start + 128).min(stream.len())).collect();
+        match ingest.ingest(&stream.subset(&idx, "chunk")) {
+            Ok(()) => acked += idx.len(),
+            Err(e) => {
+                // The chunk that crashed was WAL-appended (acked) first.
+                acked += idx.len();
+                println!("  crash injected after {acked} acked rows: {e}");
+                crashed = true;
+                break;
+            }
+        }
+    }
+    anyhow::ensure!(crashed, "the injected crash must fire");
+    ingest.finish()?;
+
+    // Recovery: checkpoint for instant availability, then full WAL
+    // replay through a fresh deterministic pipeline.
+    let reg_recovered = Arc::new(ModelRegistry::new());
+    let (recovered, report) = ShardedIngest::recover(
+        SolverSpec::Bsgd,
+        svm.clone(),
+        RunConfig::new().seed(seed),
+        2,
+        (stream.len() / 3).max(1),
+        Arc::clone(&reg_recovered),
+        &wal_path,
+        Some(&ckpt_path),
+    )?;
+    println!(
+        "  recovered {} WAL rows (torn tail dropped: {}) from checkpoint at {} rows in {:.3}s",
+        report.wal_rows, report.torn_tail_dropped, report.checkpoint_rows, report.recovery_seconds
+    );
+    anyhow::ensure!(
+        report.wal_rows == acked as u64,
+        "zero acked rows may be lost: acked {acked}, recovered {}",
+        report.wal_rows
+    );
+
+    // Byte-identity: an uninterrupted run over exactly the acked prefix
+    // must dump the same BSVMMDL2 bytes.
+    let reg_reference = Arc::new(ModelRegistry::new());
+    let mut reference = ShardedIngest::new(
+        svm.clone(),
+        RunConfig::new().seed(seed),
+        2,
+        (stream.len() / 3).max(1),
+        Arc::clone(&reg_reference),
+    )?;
+    let prefix: Vec<usize> = (0..acked).collect();
+    reference.ingest(&stream.subset(&prefix, "acked-prefix"))?;
+    reference.publish_now()?;
+    let (pa, pb) = (dir.join("recovered.bsvm"), dir.join("reference.bsvm"));
+    reg_recovered.dump(&pa)?;
+    reg_reference.dump(&pb)?;
+    anyhow::ensure!(
+        std::fs::read(&pa)? == std::fs::read(&pb)?,
+        "recovered model must byte-match the uninterrupted run"
+    );
+    println!("  recovered model is byte-identical to the uninterrupted run");
+    recovered.finish()?;
+    reference.finish()?;
+    std::fs::remove_dir_all(&dir).ok();
+    Ok(())
+}
 
 fn main() -> anyhow::Result<()> {
     let scale: f64 = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(0.2);
@@ -78,6 +186,15 @@ fn main() -> anyhow::Result<()> {
         );
         results.push((method, est.into_model()?, summary));
     }
+
+    // --- Kill and recover the serve tier on the same workload. ---
+    println!("--- fault-tolerant serve tier: kill and recover ---");
+    let serve_svm = SvmConfig::new()
+        .kernel(KernelSpec::gaussian(profile.gamma()))
+        .budget(50)
+        .lambda(prep.lambda);
+    kill_and_recover(&prep.train, &serve_svm, cfg.seed ^ 0x51)?;
+    println!();
 
     // --- Evaluate through the AOT/PJRT path (L1+L2 artifacts). ---
     match Runtime::load("artifacts") {

@@ -10,19 +10,20 @@
 use std::io::Write;
 use std::path::Path;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::budget::Strategy;
 use crate::config::ExperimentConfig;
-use crate::data::synthetic::Profile;
+use crate::data::synthetic::{two_moons, Profile};
 use crate::data::{libsvm, Dataset};
-use crate::experiments::{self, prepare, serve_bench};
+use crate::experiments::{self, prepare, resilience_bench, serve_bench};
 use crate::kernel::KernelSpec;
 use crate::model::AnyModel;
 use crate::serve::{
-    protocol, BatcherOptions, MicroBatcher, ModelRegistry, ServeConfig, ServeState, ShardedIngest,
+    protocol, wal, BatcherOptions, FaultPlan, MicroBatcher, ModelRegistry, ServeConfig,
+    ServeState, ShadowPolicy, ShardedIngest,
 };
 use crate::solver::{AnyEstimator, Estimator, FitSummary, RunConfig, SolverSpec, SvmConfig};
 use crate::util::json::Json;
@@ -307,32 +308,78 @@ pub fn run_serve_tcp(
     max_connections: Option<usize>,
 ) -> Result<()> {
     scfg.validate()?;
-    let registry = Arc::new(ModelRegistry::new());
+    let registry = Arc::new(ModelRegistry::with_history(scfg.history));
     if let Some(path) = model_in {
         let version = registry.publish_from_file(path, scfg.svm.fast_exp)?;
         eprintln!("published {path} as v{version}");
-    } else {
+    } else if !scfg.recover {
         eprintln!("no initial model: predictions will fail until trained rows are flushed");
     }
-    let pipeline = ShardedIngest::with_solver(
-        scfg.solver,
-        scfg.svm.clone(),
-        RunConfig::new().seed(scfg.seed),
-        scfg.shards,
-        scfg.publish_every,
-        Arc::clone(&registry),
-    )?
+    let mut pipeline = if scfg.recover {
+        // validate() guarantees wal_dir is set when recover is.
+        let dir = Path::new(scfg.wal_dir.as_deref().expect("validated: --recover needs --wal-dir"));
+        let wal_path = dir.join(wal::WAL_FILE);
+        let ckpt_path = dir.join(wal::CHECKPOINT_FILE);
+        let (pipeline, report) = ShardedIngest::recover(
+            scfg.solver,
+            scfg.svm.clone(),
+            RunConfig::new().seed(scfg.seed),
+            scfg.shards,
+            scfg.publish_every,
+            Arc::clone(&registry),
+            &wal_path,
+            Some(&ckpt_path),
+        )?;
+        eprintln!(
+            "recovered {} WAL row(s) in {:.3}s (checkpoint covered {}, torn tail dropped: {})",
+            report.wal_rows, report.recovery_seconds, report.checkpoint_rows,
+            report.torn_tail_dropped
+        );
+        pipeline
+    } else {
+        let mut pipeline = ShardedIngest::with_solver(
+            scfg.solver,
+            scfg.svm.clone(),
+            RunConfig::new().seed(scfg.seed),
+            scfg.shards,
+            scfg.publish_every,
+            Arc::clone(&registry),
+        )?;
+        if let Some(dir) = scfg.wal_dir.as_deref() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("cannot create WAL directory {dir}"))?;
+            pipeline.enable_wal(Path::new(dir).join(wal::WAL_FILE))?;
+            pipeline.checkpoint_at(Path::new(dir).join(wal::CHECKPOINT_FILE));
+        }
+        pipeline
+    }
     .with_adaptive_cadence(scfg.publish_adapt);
+    if scfg.queue_rows > 0 {
+        // Shed maintenance at half depth, reject train batches at full.
+        pipeline = pipeline.with_admission(scfg.queue_rows, scfg.queue_rows / 2);
+    }
+    if scfg.shadow_eval {
+        pipeline = pipeline.with_shadow_policy(ShadowPolicy::default());
+    }
     let batcher = MicroBatcher::new(
         Arc::clone(&registry),
         BatcherOptions { max_batch_rows: scfg.batch_max_rows, threads: scfg.threads },
     );
-    let state = Arc::new(ServeState::new(
-        Arc::clone(&registry),
-        batcher.client(),
-        Some(pipeline),
-        scfg.ingest_chunk,
-    ));
+    let state = Arc::new(
+        ServeState::new(
+            Arc::clone(&registry),
+            batcher.client(),
+            Some(pipeline),
+            scfg.ingest_chunk,
+        )
+        .with_predict_deadline(
+            (scfg.predict_deadline_ms > 0)
+                .then(|| Duration::from_millis(scfg.predict_deadline_ms)),
+        )
+        .with_io_timeout(
+            (scfg.io_timeout_secs > 0).then(|| Duration::from_secs(scfg.io_timeout_secs)),
+        ),
+    );
     // Loopback only: the wire protocol is unauthenticated, so an external
     // bind would let any network peer mutate the served model via
     // `train`/`flush`. Fronting with a local proxy is the supported way
@@ -346,6 +393,29 @@ pub fn run_serve_tcp(
         scfg.publish_every
     );
     protocol::serve_connections(listener, state, max_connections)
+}
+
+/// Run the fault-injection resilience harness (`repro bench
+/// --resilience`) on a deterministic synthetic stream and write
+/// `BENCH_resilience.json` under `out_dir`; returns `(report, path)`.
+/// The fault schedule is derived from `seed` ([`FaultPlan::seeded`]), so
+/// a CI rerun replays the identical panic/crash/stall sequence.
+pub fn run_resilience_bench(quick: bool, seed: u64, out_dir: &str) -> Result<(Json, String)> {
+    let rows = if quick { 600 } else { 4000 };
+    let ds = two_moons(rows, 0.12, seed ^ 0x51);
+    let svm = SvmConfig::new()
+        .kernel(KernelSpec::gaussian(2.0))
+        .budget(if quick { 25 } else { 60 })
+        .c(10.0, ds.len());
+    let shards = 2;
+    let publish_every = (rows / 4).max(1);
+    let plan = FaultPlan::seeded(seed, rows as u64, shards);
+    let scratch = Path::new(out_dir).join("resilience-scratch");
+    let report =
+        resilience_bench::run(&ds, &svm, seed, shards, publish_every, plan, &scratch)?;
+    let path = resilience_bench::write(&report, out_dir)?;
+    let _ = std::fs::remove_dir_all(&scratch);
+    Ok((report, path))
 }
 
 /// Machine-readable dump of a single run (used by `repro train --json`).
@@ -504,6 +574,25 @@ mod tests {
         .unwrap();
         assert!(run.test_accuracy.unwrap() > 0.5);
         assert!(run.model.num_sv() <= 40);
+    }
+
+    #[test]
+    fn resilience_bench_under_a_seeded_plan_gates_hold() {
+        let out = std::env::temp_dir()
+            .join("budgetsvm-coord-resilience")
+            .to_string_lossy()
+            .into_owned();
+        let (report, path) = run_resilience_bench(true, 11, &out).unwrap();
+        assert!(path.ends_with("BENCH_resilience.json"));
+        let rec = report.get("recovery").expect("recovery section");
+        // The CI gates, regardless of where the seeded faults landed:
+        // every acked row survives and recovery is byte-exact.
+        assert_eq!(rec.get("rows_lost").and_then(Json::as_usize), Some(0));
+        assert_eq!(rec.get("byte_identical"), Some(&Json::Bool(true)));
+        assert_eq!(rec.get("crashed"), Some(&Json::Bool(true)));
+        let life = report.get("lifecycle").expect("lifecycle section");
+        assert_eq!(life.get("shadow_candidate_rejected"), Some(&Json::Bool(true)));
+        std::fs::remove_dir_all(&out).ok();
     }
 
     #[test]

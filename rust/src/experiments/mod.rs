@@ -15,9 +15,12 @@
 //! `BENCH_maintenance.json`); [`solver_bench`] the solver-family one
 //! behind `repro bench --solver-bench` (BSGD vs BDCA at equal budget,
 //! emits `BENCH_solver.json`); [`serve_bench`] the serving one behind
-//! `repro serve --replay` (emits `BENCH_serve.json`). `repro bench --all`
-//! runs the kernel + maintenance + solver harnesses back to back and
-//! merges their reports (plus `BENCH_serve.json`, when one is already
+//! `repro serve --replay` (emits `BENCH_serve.json`);
+//! [`resilience_bench`] the fault-tolerance one behind
+//! `repro bench --resilience` (deterministic fault injection, emits
+//! `BENCH_resilience.json`). `repro bench --all` runs the kernel +
+//! maintenance + solver harnesses back to back and merges their reports
+//! (plus `BENCH_serve.json` / `BENCH_resilience.json`, when already
 //! present in the output directory) into one top-level
 //! `BENCH_summary.json` via [`write_bench_summary`] — the single
 //! perf-trajectory artifact CI uploads.
@@ -27,6 +30,7 @@ pub mod figure3;
 pub mod kernel_bench;
 pub mod maint_bench;
 pub mod report;
+pub mod resilience_bench;
 pub mod runner;
 pub mod serve_bench;
 pub mod solver_bench;
@@ -46,35 +50,39 @@ use crate::util::json::Json;
 /// File name of the merged bench summary (`repro bench --all`).
 pub const SUMMARY_FILE: &str = "BENCH_summary.json";
 
-/// Merge the kernel, maintenance and solver bench reports (and, when one
-/// already exists under `out_dir`, the serve report) into one top-level
-/// `BENCH_summary.json`; returns the written path. The per-bench files
-/// keep their own paths — this is purely the one-artifact view of the
-/// perf trajectory.
+/// Merge the kernel, maintenance and solver bench reports (and, when
+/// they already exist under `out_dir`, the serve and resilience reports)
+/// into one top-level `BENCH_summary.json`; returns the written path.
+/// The per-bench files keep their own paths — this is purely the
+/// one-artifact view of the perf trajectory.
 pub fn write_bench_summary(
     out_dir: &str,
     kernel: &Json,
     maintenance: &Json,
     solver: &Json,
 ) -> Result<String> {
-    let serve_path =
-        format!("{}/{}", out_dir.trim_end_matches('/'), serve_bench::REPORT_FILE);
-    let serve = match std::fs::read_to_string(&serve_path) {
-        Ok(text) => Json::parse(&text)
-            .with_context(|| format!("existing {serve_path} is not valid JSON"))?,
-        // Absent is fine (the serve bench runs in its own job); any other
-        // read failure must not silently drop the section.
-        Err(e) if e.kind() == std::io::ErrorKind::NotFound => Json::Null,
-        Err(e) => {
-            return Err(e).with_context(|| format!("cannot read existing {serve_path}"));
+    // Reports produced by other jobs fold in when present; absent is fine
+    // (each bench runs in its own CI job), but any other read failure
+    // must not silently drop the section.
+    let sidecar = |file: &str| -> Result<Json> {
+        let path = format!("{}/{}", out_dir.trim_end_matches('/'), file);
+        match std::fs::read_to_string(&path) {
+            Ok(text) => {
+                Json::parse(&text).with_context(|| format!("existing {path} is not valid JSON"))
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(Json::Null),
+            Err(e) => Err(e).with_context(|| format!("cannot read existing {path}")),
         }
     };
+    let serve = sidecar(serve_bench::REPORT_FILE)?;
+    let resilience = sidecar(resilience_bench::REPORT_FILE)?;
     let summary = Json::object(vec![
         ("schema", Json::str("bench_summary/v1")),
         ("kernel", kernel.clone()),
         ("maintenance", maintenance.clone()),
         ("solver", solver.clone()),
         ("serve", serve),
+        ("resilience", resilience),
     ]);
     std::fs::create_dir_all(out_dir)
         .with_context(|| format!("cannot create output directory {out_dir}"))?;
@@ -166,12 +174,17 @@ mod tests {
         assert_eq!(back.get("maintenance"), Some(&maint));
         assert_eq!(back.get("solver"), Some(&solver));
         assert_eq!(back.get("serve"), Some(&Json::Null));
-        // With a serve report on disk it is folded in.
+        assert_eq!(back.get("resilience"), Some(&Json::Null));
+        // With serve/resilience reports on disk they are folded in.
         let serve = Json::object(vec![("schema", Json::str("bench_serve/v1"))]);
         std::fs::write(dir.join(serve_bench::REPORT_FILE), format!("{serve}\n")).unwrap();
+        let resil = Json::object(vec![("schema", Json::str("bench_resilience/v1"))]);
+        std::fs::write(dir.join(resilience_bench::REPORT_FILE), format!("{resil}\n"))
+            .unwrap();
         let path = write_bench_summary(&out, &kernel, &maint, &solver).unwrap();
         let back = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
         assert_eq!(back.get("serve"), Some(&serve));
+        assert_eq!(back.get("resilience"), Some(&resil));
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -138,6 +138,55 @@ fn opt_specs() -> Vec<OptSpec> {
             takes_value: true,
             help: "serve: initial model to publish (.bsvm)",
         },
+        OptSpec {
+            name: "resilience",
+            takes_value: false,
+            help: "bench: deterministic fault-injection harness — worker panic, torn-write \
+                   crash + recovery, stalled client (BENCH_resilience.json, zero-loss \
+                   gated in CI)",
+        },
+        OptSpec {
+            name: "wal-dir",
+            takes_value: true,
+            help: "serve: directory for the append-only WAL + checkpoint pair \
+                   (crash-safe ingest; default = volatile, no persistence)",
+        },
+        OptSpec {
+            name: "recover",
+            takes_value: false,
+            help: "serve: replay the --wal-dir WAL over its checkpoint at startup and \
+                   resume byte-identical to the pre-crash acked state",
+        },
+        OptSpec {
+            name: "queue-rows",
+            takes_value: true,
+            help: "serve: ingest queue bound in rows — shed maintenance at half depth, \
+                   reject train batches (typed 'overloaded' reply) at full depth \
+                   (default 0 = unbounded)",
+        },
+        OptSpec {
+            name: "predict-deadline-ms",
+            takes_value: true,
+            help: "serve: per-request predict deadline; requests still queued past it \
+                   answer a typed 'overloaded' reply (default 0 = no deadline)",
+        },
+        OptSpec {
+            name: "io-timeout-secs",
+            takes_value: true,
+            help: "serve: socket read/write timeout — a stalled or dead client is \
+                   disconnected instead of pinning its session thread (default 0 = none)",
+        },
+        OptSpec {
+            name: "shadow-eval",
+            takes_value: false,
+            help: "serve: gate publishes through shadow evaluation against the incumbent \
+                   on live predict traffic; regressing candidates are auto-rejected",
+        },
+        OptSpec {
+            name: "history",
+            takes_value: true,
+            help: "serve: registry versions retained for rollback (default 8)",
+        },
     ]
 }
 
@@ -257,6 +306,14 @@ fn main() -> Result<()> {
                 let spath =
                     experiments::write_bench_summary(&cfg.out_dir, &kernel, &maint, &solver)?;
                 eprintln!("merged bench summary written to {spath}");
+            } else if args.flag("resilience") {
+                let (report, path) = coordinator::run_resilience_bench(
+                    args.flag("quick"),
+                    cfg.seed,
+                    &cfg.out_dir,
+                )?;
+                println!("{report}");
+                eprintln!("resilience bench report written to {path}");
             } else if args.flag("solver-bench") {
                 let report = experiments::solver_bench::run(args.flag("quick"))?;
                 print!("{}", experiments::solver_bench::render(&report));
@@ -303,6 +360,25 @@ fn main() -> Result<()> {
             // exponential tier for pipeline-trained AND pre-published
             // models alike.
             scfg.svm.fast_exp = cfg.fast_exp;
+            // Fault-tolerance surface: backpressure, deadlines, timeouts,
+            // crash-safe persistence, registry lifecycle.
+            if let Some(q) = args.get_usize("queue-rows")? {
+                scfg.queue_rows = q;
+            }
+            if let Some(ms) = args.get_u64("predict-deadline-ms")? {
+                scfg.predict_deadline_ms = ms;
+            }
+            if let Some(secs) = args.get_u64("io-timeout-secs")? {
+                scfg.io_timeout_secs = secs;
+            }
+            if let Some(dir) = args.get("wal-dir") {
+                scfg.wal_dir = Some(dir.to_string());
+            }
+            scfg.recover = args.flag("recover");
+            scfg.shadow_eval = args.flag("shadow-eval");
+            if let Some(h) = args.get_usize("history")? {
+                scfg.history = h;
+            }
             let kernel_opt = args.get("kernel").map(KernelSpec::parse).transpose()?;
             let kernel = match (kernel_opt, args.get_f64("gamma")?) {
                 (Some(k), _) => Some(k),
@@ -523,12 +599,30 @@ mod tests {
     fn serve_surface_is_declared() {
         assert!(SUBCOMMANDS.iter().any(|(n, _)| *n == "serve"));
         let specs = opt_specs();
-        for opt in ["port", "shards", "publish-every", "replay", "model"] {
+        for opt in [
+            "port",
+            "shards",
+            "publish-every",
+            "replay",
+            "model",
+            "wal-dir",
+            "queue-rows",
+            "predict-deadline-ms",
+            "io-timeout-secs",
+            "history",
+        ] {
             let spec = specs
                 .iter()
                 .find(|s| s.name == opt)
                 .unwrap_or_else(|| panic!("serve option --{opt} is not declared"));
             assert!(spec.takes_value, "--{opt} must take a value");
+        }
+        for flag in ["recover", "shadow-eval"] {
+            let spec = specs
+                .iter()
+                .find(|s| s.name == flag)
+                .unwrap_or_else(|| panic!("serve flag --{flag} is not declared"));
+            assert!(!spec.takes_value, "--{flag} must be a flag");
         }
     }
 
@@ -554,13 +648,48 @@ mod tests {
     #[test]
     fn simd_and_bench_surface_is_declared() {
         let specs = opt_specs();
-        for flag in ["fast-exp", "all"] {
+        for flag in ["fast-exp", "all", "resilience"] {
             let spec = specs
                 .iter()
                 .find(|s| s.name == flag)
                 .unwrap_or_else(|| panic!("flag --{flag} is not declared"));
             assert!(!spec.takes_value, "--{flag} must be a flag");
         }
+    }
+
+    #[test]
+    fn resilience_serve_options_parse_through_the_cli() {
+        let argv: Vec<String> = [
+            "serve",
+            "--wal-dir",
+            "/tmp/wals",
+            "--recover",
+            "--queue-rows",
+            "4096",
+            "--predict-deadline-ms",
+            "250",
+            "--io-timeout-secs",
+            "30",
+            "--shadow-eval",
+            "--history",
+            "4",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let args = Args::parse(&argv, &opt_specs()).unwrap();
+        assert_eq!(args.get("wal-dir"), Some("/tmp/wals"));
+        assert!(args.flag("recover"));
+        assert!(args.flag("shadow-eval"));
+        assert_eq!(args.get_usize("queue-rows").unwrap(), Some(4096));
+        assert_eq!(args.get_u64("predict-deadline-ms").unwrap(), Some(250));
+        assert_eq!(args.get_u64("io-timeout-secs").unwrap(), Some(30));
+        assert_eq!(args.get_usize("history").unwrap(), Some(4));
+
+        let argv: Vec<String> =
+            ["bench", "--resilience", "--quick"].iter().map(|s| s.to_string()).collect();
+        let args = Args::parse(&argv, &opt_specs()).unwrap();
+        assert!(args.flag("resilience") && args.flag("quick"));
     }
 
     #[test]

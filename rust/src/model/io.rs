@@ -135,8 +135,9 @@ fn read_body(r: &mut impl Read, d: usize, count: usize, spec: KernelSpec) -> Res
     let bias = read_f64(r)?;
     ensure!(bias.is_finite(), "implausible model bias {bias}");
     let mut alphas = vec![0.0f64; count];
-    for a in alphas.iter_mut() {
+    for (j, a) in alphas.iter_mut().enumerate() {
         *a = read_f64(r)?;
+        ensure!(a.is_finite(), "non-finite coefficient {a} at index {j} (corrupt file)");
     }
     let mut model = AnyModel::new(d, spec, count)?;
     model.set_bias(bias);
@@ -159,12 +160,12 @@ pub fn load_any_reader(reader: impl Read) -> Result<AnyModel> {
     let mut r = BufReader::new(reader);
     let mut magic = [0u8; 8];
     r.read_exact(&mut magic)?;
-    if &magic == MAGIC_V1 {
+    let model = if &magic == MAGIC_V1 {
         // Legacy layout: d, count, gamma, bias, body — always Gaussian.
         let d = read_u64(&mut r)? as usize;
         let count = read_u64(&mut r)? as usize;
         let gamma = read_f64(&mut r)?;
-        read_body(&mut r, d, count, KernelSpec::Gaussian { gamma })
+        read_body(&mut r, d, count, KernelSpec::Gaussian { gamma })?
     } else if &magic == MAGIC_V2 {
         let d = read_u64(&mut r)? as usize;
         let count = read_u64(&mut r)? as usize;
@@ -178,10 +179,20 @@ pub fn load_any_reader(reader: impl Read) -> Result<AnyModel> {
             }
             tag => bail!("unknown kernel tag {tag} in model header"),
         };
-        read_body(&mut r, d, count, spec)
+        read_body(&mut r, d, count, spec)?
     } else {
         bail!("not a budgetsvm model file (bad magic)");
-    }
+    };
+    // The body must be the end of the stream: trailing bytes mean either a
+    // corrupted length field (the declared sections did not consume the
+    // file) or an appended payload — both are load errors, not data to
+    // silently ignore.
+    let mut probe = [0u8; 1];
+    ensure!(
+        r.read(&mut probe)? == 0,
+        "trailing bytes after model body (corrupt length field or oversized file)"
+    );
+    Ok(model)
 }
 
 /// Load a model saved in either format version from a file.
@@ -342,6 +353,87 @@ mod tests {
         std::fs::write(&path, b"WRONGMAG").unwrap();
         assert!(load(&path).is_err());
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn corruption_matrix_never_panics_and_detects_structural_damage() {
+        // Dump → mangle → load over a deliberately awkward v2 file; every
+        // mangled variant must return through `Result` (no panic, no
+        // unbounded allocation). Structural damage — truncation at any
+        // section boundary, trailing bytes, length-field flips — must be a
+        // typed error.
+        let mut m = AnyModel::new(3, KernelSpec::gaussian(0.8), 3).unwrap();
+        m.push(&[1.0, -0.5, 0.25], 0.75);
+        m.push(&[0.0, 2.0, -1.0], -0.5);
+        m.push(&[0.5, 0.5, 0.5], 0.125);
+        m.set_bias(-0.25);
+        let mut bytes: Vec<u8> = Vec::new();
+        save_any_writer(&m, &mut bytes).unwrap();
+        // Section boundaries of the v2 layout for d=3, count=3, gaussian:
+        // magic(8) | d(8) | count(8) | tag(4) | gamma(8) | bias(8) |
+        // alphas(3·8) | svs(3·3·4).
+        let boundaries = [0usize, 8, 16, 24, 28, 36, 44, 44 + 24, 44 + 24 + 36];
+        assert_eq!(*boundaries.last().unwrap(), bytes.len(), "layout drifted");
+        // Truncation at (and one byte before) every section boundary is a
+        // typed error, never a panic.
+        for &b in &boundaries[..boundaries.len() - 1] {
+            for cut in [b, b.saturating_sub(1)] {
+                let err = load_any_reader(&bytes[..cut]);
+                assert!(err.is_err(), "truncation at byte {cut} must fail");
+            }
+        }
+        // Trailing garbage is detected (a flipped count field would
+        // otherwise mis-parse coefficients as support vectors).
+        let mut extended = bytes.clone();
+        extended.push(0xAB);
+        assert!(load_any_reader(extended.as_slice()).is_err());
+        // Bit-flip matrix: flip the low and high bit of every byte. Each
+        // variant must come back through Result; structural fields (the
+        // first 28 bytes: magic + lengths + tag) must always error.
+        for i in 0..bytes.len() {
+            for bit in [0u8, 7] {
+                let mut mangled = bytes.clone();
+                mangled[i] ^= 1 << bit;
+                let res = load_any_reader(mangled.as_slice());
+                if i < 28 {
+                    assert!(res.is_err(), "flip of structural byte {i} bit {bit} must fail");
+                } else if let Ok(back) = res {
+                    // Payload flips may still parse; the result must at
+                    // least be structurally sound.
+                    assert_eq!(back.num_sv(), 3);
+                    assert_eq!(back.dim(), 3);
+                }
+            }
+        }
+        // Oversized length fields must error before allocating: claim
+        // u64::MAX support vectors.
+        let mut huge = bytes.clone();
+        huge[16..24].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(load_any_reader(huge.as_slice()).is_err());
+        // And a plausible-looking but absurd count × d product.
+        let mut wide = bytes.clone();
+        wide[8..16].copy_from_slice(&900_000u64.to_le_bytes());
+        wide[16..24].copy_from_slice(&9_000_000u64.to_le_bytes());
+        assert!(load_any_reader(wide.as_slice()).is_err());
+    }
+
+    #[test]
+    fn non_finite_coefficients_are_rejected() {
+        let mut m = AnyModel::new(2, KernelSpec::gaussian(1.0), 2).unwrap();
+        m.push(&[1.0, 0.0], 1.0);
+        m.push(&[0.0, 1.0], -1.0);
+        let mut bytes: Vec<u8> = Vec::new();
+        save_any_writer(&m, &mut bytes).unwrap();
+        // First alpha starts after magic(8)+d(8)+count(8)+tag(4)+gamma(8)+
+        // bias(8) = 44 bytes.
+        let mut nan_alpha = bytes.clone();
+        nan_alpha[44..52].copy_from_slice(&f64::NAN.to_le_bytes());
+        let err = load_any_reader(nan_alpha.as_slice()).unwrap_err().to_string();
+        assert!(err.contains("non-finite coefficient"), "{err}");
+        // Non-finite bias likewise.
+        let mut inf_bias = bytes.clone();
+        inf_bias[36..44].copy_from_slice(&f64::INFINITY.to_le_bytes());
+        assert!(load_any_reader(inf_bias.as_slice()).is_err());
     }
 
     #[test]

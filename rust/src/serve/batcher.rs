@@ -13,11 +13,21 @@
 //! are exactly what an offline `predict_batch` on the same snapshot
 //! returns. The snapshot is resolved once per batch, so all rows of one
 //! batch are answered by one model version (stamped in the reply).
+//!
+//! ## Deadlines
+//!
+//! A request may carry a deadline ([`BatcherClient::predict_deadline`]).
+//! The drain thread discards requests whose deadline has passed while
+//! they waited in the queue and answers them with
+//! [`PredictError::Overloaded`] — a typed backpressure signal, distinct
+//! from malformed-request failures — so under overload a client's wait is
+//! bounded by its own budget instead of the queue depth ahead of it.
 
 use std::collections::VecDeque;
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
@@ -48,6 +58,34 @@ pub struct PredictReply {
     pub version: u64,
 }
 
+/// Why a prediction request was not answered with labels.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PredictError {
+    /// The request's deadline passed while it waited in the queue — a
+    /// typed backpressure reply, not a failure: the client should back
+    /// off and retry.
+    Overloaded {
+        /// How long the request waited before being expired, in ms.
+        waited_ms: u64,
+    },
+    /// The request failed (malformed, no model published, dimension
+    /// mismatch, or the batcher shut down).
+    Failed(String),
+}
+
+impl std::fmt::Display for PredictError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PredictError::Overloaded { waited_ms } => {
+                write!(f, "overloaded: predict deadline exceeded after {waited_ms} ms")
+            }
+            PredictError::Failed(msg) => write!(f, "{msg}"),
+        }
+    }
+}
+
+impl std::error::Error for PredictError {}
+
 /// Aggregate counters (monotonic over the batcher's lifetime).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct BatcherStats {
@@ -57,13 +95,19 @@ pub struct BatcherStats {
     pub rows: u64,
     /// Largest single coalesced batch, in rows.
     pub largest_batch: usize,
+    /// Requests expired in queue past their deadline (answered with
+    /// [`PredictError::Overloaded`]).
+    pub expired: u64,
 }
 
 struct Request {
     rows: Vec<f32>,
     n_rows: usize,
     dim: usize,
-    reply: mpsc::Sender<Result<PredictReply, String>>,
+    /// Absolute expiry; `None` = wait however long it takes.
+    deadline: Option<Instant>,
+    enqueued: Instant,
+    reply: mpsc::Sender<Result<PredictReply, PredictError>>,
 }
 
 #[derive(Default)]
@@ -90,27 +134,52 @@ impl BatcherClient {
     /// the buffer is malformed, no model is published, the dimension
     /// disagrees with the current snapshot, or the batcher shut down.
     pub fn predict(&self, rows: &[f32], dim: usize) -> Result<PredictReply> {
-        anyhow::ensure!(dim > 0, "dimension must be positive");
-        anyhow::ensure!(
-            !rows.is_empty() && rows.len() % dim == 0,
-            "row buffer length {} is not a positive multiple of dim {dim}",
-            rows.len()
-        );
+        self.predict_deadline(rows, dim, None).map_err(|e| anyhow!(e.to_string()))
+    }
+
+    /// [`BatcherClient::predict`] with an optional deadline: if the
+    /// request is still queued `timeout` after submission it is answered
+    /// with [`PredictError::Overloaded`] instead of waiting further. A
+    /// zero timeout expires deterministically (useful for tests).
+    pub fn predict_deadline(
+        &self,
+        rows: &[f32],
+        dim: usize,
+        timeout: Option<Duration>,
+    ) -> Result<PredictReply, PredictError> {
+        if dim == 0 {
+            return Err(PredictError::Failed("dimension must be positive".to_string()));
+        }
+        if rows.is_empty() || rows.len() % dim != 0 {
+            return Err(PredictError::Failed(format!(
+                "row buffer length {} is not a positive multiple of dim {dim}",
+                rows.len()
+            )));
+        }
         let (tx, rx) = mpsc::channel();
+        let enqueued = Instant::now();
         {
             let mut st = self.shared.state.lock().expect("batcher lock poisoned");
-            anyhow::ensure!(!st.shutdown, "batcher is shut down");
+            if st.shutdown {
+                return Err(PredictError::Failed("batcher is shut down".to_string()));
+            }
             st.pending.push_back(Request {
                 rows: rows.to_vec(),
                 n_rows: rows.len() / dim,
                 dim,
+                deadline: timeout.map(|t| enqueued + t),
+                enqueued,
                 reply: tx,
             });
         }
         self.shared.wake.notify_one();
         rx.recv()
-            .map_err(|_| anyhow!("batcher terminated before answering"))?
-            .map_err(|e| anyhow!(e))
+            .map_err(|_| PredictError::Failed("batcher terminated before answering".to_string()))?
+    }
+
+    /// Lifetime counters (shared with the owning [`MicroBatcher`]).
+    pub fn stats(&self) -> BatcherStats {
+        self.shared.state.lock().expect("batcher lock poisoned").stats
     }
 }
 
@@ -175,7 +244,9 @@ impl Drop for MicroBatcher {
 
 fn drain_loop(shared: &Shared, registry: &ModelRegistry, max_rows: usize, threads: usize) {
     loop {
-        // Collect one coalesced batch (or exit on drained shutdown).
+        // Collect one coalesced batch (or exit on drained shutdown),
+        // expiring deadline-passed requests instead of serving them.
+        let mut expired: Vec<Request> = Vec::new();
         let batch: Vec<Request> = {
             let mut st = shared.state.lock().expect("batcher lock poisoned");
             while st.pending.is_empty() && !st.shutdown {
@@ -184,9 +255,17 @@ fn drain_loop(shared: &Shared, registry: &ModelRegistry, max_rows: usize, thread
             if st.pending.is_empty() {
                 return; // shutdown with an empty queue
             }
+            let now = Instant::now();
             let mut batch = Vec::new();
             let mut rows = 0usize;
             while let Some(front) = st.pending.front() {
+                // `now >= deadline` so a zero timeout expires even when
+                // the clock has not advanced (deterministic tests).
+                if front.deadline.map_or(false, |d| now >= d) {
+                    st.stats.expired += 1;
+                    expired.push(st.pending.pop_front().unwrap());
+                    continue;
+                }
                 if !batch.is_empty() && rows + front.n_rows > max_rows {
                     break;
                 }
@@ -195,11 +274,20 @@ fn drain_loop(shared: &Shared, registry: &ModelRegistry, max_rows: usize, thread
             }
             batch
         };
+        for req in expired {
+            let waited_ms = req.enqueued.elapsed().as_millis() as u64;
+            let _ = req.reply.send(Err(PredictError::Overloaded { waited_ms }));
+        }
+        if batch.is_empty() {
+            continue; // everything queued had expired
+        }
 
         let snapshot = registry.current();
         let Some(snapshot) = snapshot else {
             for req in batch {
-                let _ = req.reply.send(Err("no model published yet".to_string()));
+                let _ = req
+                    .reply
+                    .send(Err(PredictError::Failed("no model published yet".to_string())));
             }
             continue;
         };
@@ -212,10 +300,10 @@ fn drain_loop(shared: &Shared, registry: &ModelRegistry, max_rows: usize, thread
         let mut accepted: Vec<Request> = Vec::new();
         for req in batch {
             if req.dim != d {
-                let _ = req.reply.send(Err(format!(
+                let _ = req.reply.send(Err(PredictError::Failed(format!(
                     "request dimension {} does not match the serving dimension {d}",
                     req.dim
-                )));
+                ))));
             } else {
                 flat.extend_from_slice(&req.rows);
                 accepted.push(req);
@@ -286,6 +374,7 @@ mod tests {
         let stats = batcher.stats();
         assert_eq!(stats.rows, 40);
         assert!(stats.batches >= 1);
+        assert_eq!(stats.expired, 0);
         batcher.shutdown();
     }
 
@@ -352,6 +441,31 @@ mod tests {
             assert_eq!(reply.version, v);
             assert_eq!(reply.labels, vec![expect_label]);
         }
+        batcher.shutdown();
+    }
+
+    #[test]
+    fn zero_deadline_requests_expire_with_a_typed_overloaded_error() {
+        let reg = registry_with_model(4, 2, 9);
+        let batcher = MicroBatcher::new(Arc::clone(&reg), BatcherOptions::default());
+        let client = batcher.client();
+        // A zero timeout is already past its deadline when the drain
+        // thread sees it: deterministic expiry, no wall-clock dependence.
+        let err = client
+            .predict_deadline(&[0.5, -0.5], 2, Some(Duration::ZERO))
+            .unwrap_err();
+        match err {
+            PredictError::Overloaded { .. } => {}
+            other => panic!("expected Overloaded, got {other:?}"),
+        }
+        assert!(err.to_string().contains("overloaded"), "{err}");
+        assert_eq!(batcher.stats().expired, 1);
+        // A generous deadline still answers normally.
+        let reply = client
+            .predict_deadline(&[0.5, -0.5], 2, Some(Duration::from_secs(30)))
+            .unwrap();
+        assert_eq!(reply.labels.len(), 1);
+        assert_eq!(client.stats().expired, 1);
         batcher.shutdown();
     }
 }

@@ -1,0 +1,126 @@
+//! Deterministic fault injection for the serve tier.
+//!
+//! A [`FaultPlan`] is a seeded, schedule-driven description of the
+//! failures to inject into one pipeline run: a shard worker panicking
+//! after processing its k-th row, a simulated process crash between the
+//! WAL append and the checkpoint (optionally leaving a torn WAL frame
+//! behind, exactly what a real crash mid-append produces), and a
+//! slow-client stall for the protocol/latency harnesses. Every trigger
+//! point is a row count, never a wall-clock time, so a plan replays
+//! identically run-to-run — which is what makes the resilience
+//! acceptance tests and `experiments::resilience_bench` deterministic.
+//!
+//! The plan is threaded behind an explicit test/bench hook
+//! ([`super::ShardedIngest::fault_inject`]); production entry points
+//! simply never install one.
+
+use crate::util::rng::Rng;
+
+/// Marker carried by every injected-crash error message, so harnesses can
+/// tell a scheduled crash apart from a genuine failure.
+pub const INJECTED_CRASH_MARKER: &str = "injected crash";
+
+/// Returns whether an error message came from a scheduled
+/// [`FaultPlan::crash_at_rows`] trigger.
+pub fn is_injected_crash(msg: &str) -> bool {
+    msg.contains(INJECTED_CRASH_MARKER)
+}
+
+/// One shard-worker panic trigger.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WorkerPanic {
+    /// Shard whose worker panics.
+    pub shard: usize,
+    /// The worker panics when its cumulative processed row count would
+    /// reach this value (the batch crossing it is lost mid-flight).
+    pub after_rows: u64,
+}
+
+/// A deterministic, schedule-driven fault schedule for one pipeline run.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Panic one shard worker at a scheduled row count.
+    pub worker_panic: Option<WorkerPanic>,
+    /// Simulate a process crash once the global ingested row count
+    /// crosses this value: the triggering batch is WAL-appended (acked)
+    /// but never dispatched or checkpointed, and the pipeline refuses all
+    /// further work — the caller must go through recovery.
+    pub crash_at_rows: Option<u64>,
+    /// On the simulated crash, also leave half a WAL frame behind (a torn
+    /// write), which recovery must truncate away.
+    pub tear_wal_on_crash: bool,
+    /// Stall duration for the slow-client arm of the latency harnesses,
+    /// in milliseconds (not interpreted by the pipeline itself).
+    pub stall_client_ms: u64,
+}
+
+impl FaultPlan {
+    /// An empty plan (no faults).
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    /// Derive a full schedule from a seed for a run of roughly
+    /// `total_rows` rows over `shards` shards: one worker panic in the
+    /// first half of the stream, one torn-write crash in the second half,
+    /// and a stall in the tens of milliseconds. Deterministic in
+    /// `(seed, total_rows, shards)`.
+    pub fn seeded(seed: u64, total_rows: u64, shards: usize) -> Self {
+        let mut rng = Rng::new(seed ^ 0xFA_017);
+        let total = total_rows.max(8);
+        let per_shard = (total / shards.max(1) as u64).max(2);
+        FaultPlan {
+            worker_panic: Some(WorkerPanic {
+                shard: (rng.next_u64() % shards.max(1) as u64) as usize,
+                after_rows: 1 + rng.next_u64() % (per_shard / 2).max(1),
+            }),
+            crash_at_rows: Some(total / 2 + rng.next_u64() % (total / 4).max(1)),
+            tear_wal_on_crash: true,
+            stall_client_ms: 20 + rng.next_u64() % 40,
+        }
+    }
+
+    /// Builder: arm a worker panic.
+    pub fn with_worker_panic(mut self, shard: usize, after_rows: u64) -> Self {
+        self.worker_panic = Some(WorkerPanic { shard, after_rows });
+        self
+    }
+
+    /// Builder: arm a simulated crash (optionally with a torn WAL tail).
+    pub fn with_crash_at_rows(mut self, rows: u64, tear_wal: bool) -> Self {
+        self.crash_at_rows = Some(rows);
+        self.tear_wal_on_crash = tear_wal;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seeded_plans_are_deterministic_and_in_range() {
+        let a = FaultPlan::seeded(42, 1000, 4);
+        let b = FaultPlan::seeded(42, 1000, 4);
+        assert_eq!(a, b);
+        let c = FaultPlan::seeded(43, 1000, 4);
+        assert_ne!(a, c, "different seeds must give different schedules");
+        let p = a.worker_panic.unwrap();
+        assert!(p.shard < 4);
+        assert!(p.after_rows >= 1 && p.after_rows <= 125);
+        let crash = a.crash_at_rows.unwrap();
+        assert!((500..750).contains(&crash));
+        assert!((20..60).contains(&a.stall_client_ms));
+        assert!(a.tear_wal_on_crash);
+    }
+
+    #[test]
+    fn builders_compose() {
+        let plan = FaultPlan::none().with_worker_panic(2, 17).with_crash_at_rows(99, false);
+        assert_eq!(plan.worker_panic, Some(WorkerPanic { shard: 2, after_rows: 17 }));
+        assert_eq!(plan.crash_at_rows, Some(99));
+        assert!(!plan.tear_wal_on_crash);
+        assert!(is_injected_crash("pipeline dead: injected crash at row 99"));
+        assert!(!is_injected_crash("shard worker terminated"));
+    }
+}

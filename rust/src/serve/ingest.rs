@@ -12,26 +12,146 @@
 //! ride the same per-shard channel as training batches, which (channel
 //! FIFO order) guarantees a snapshot reflects every batch sent before it
 //! without any extra barrier.
+//!
+//! ## Failure domain
+//!
+//! * **Supervised workers** — a shard worker panic is caught
+//!   ([`std::panic::catch_unwind`] around the training step); the worker
+//!   marks itself poisoned and keeps draining (and dropping) its queue so
+//!   nothing deadlocks. The front end heals the shard on the next ingest
+//!   or publish: a fresh estimator with the shard's original
+//!   deterministic seed is installed, and the shard's rows are re-fed —
+//!   from the WAL (full sub-stream, bit-exact trajectory) when one is
+//!   attached, or from the unacknowledged in-flight batches otherwise
+//!   (no row silently dropped, trajectory approximate).
+//! * **Admission control** — dispatched-but-unprocessed rows are counted;
+//!   past `shed` the pipeline defers cadence publishes (multi-merge
+//!   slack as load shedding), past `max` it rejects train batches with a
+//!   typed `overloaded` error. A publish-stall EWMA feeds the same
+//!   ladder. See [`ShardedIngest::admission_state`].
+//! * **Durability** — with a WAL attached, a batch is appended and synced
+//!   *before* it is dispatched; acknowledged rows therefore survive any
+//!   crash and [`ShardedIngest::recover`] replays them into a state
+//!   byte-identical to an uninterrupted run (see `serve::wal`).
+//! * **Fault injection** — [`ShardedIngest::fault_inject`] installs a
+//!   deterministic [`FaultPlan`] (worker panic at a row count, simulated
+//!   crash between WAL append and checkpoint); production entry points
+//!   never install one.
 
-use std::sync::mpsc;
-use std::sync::Arc;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
 use std::time::Instant;
 
-use anyhow::{anyhow, ensure, Result};
+use anyhow::{anyhow, bail, ensure, Result};
 
 use crate::data::Dataset;
 use crate::model::AnyModel;
 use crate::solver::{AnyEstimator, Estimator, RunConfig, SolverSpec, SvmConfig};
 use crate::util::parallel::{spawn_worker, Worker};
 
-use super::registry::ModelRegistry;
+use super::faults::{FaultPlan, INJECTED_CRASH_MARKER};
+use super::registry::{ModelRegistry, ShadowPolicy};
+use super::wal::{self, WalWriter};
 
 enum ShardCmd {
-    /// One pre-partitioned training batch for this shard.
-    Ingest(Dataset),
-    /// Reply with (model clone, cumulative SGD steps), or `None` if the
-    /// shard has not seen a row yet.
-    Snapshot(mpsc::Sender<Option<(AnyModel, u64)>>),
+    /// One pre-partitioned training batch for this shard, tagged with a
+    /// per-shard dispatch sequence number (acknowledged on success).
+    Ingest { seq: u64, ds: Dataset },
+    /// Reply with the shard's training snapshot, or
+    /// [`ShardSnap::Poisoned`] if the worker has died.
+    Snapshot(mpsc::Sender<ShardSnap>),
+    /// Replace the shard estimator (heal after a poisoning) and clear the
+    /// poisoned state.
+    Reset(Box<AnyEstimator>),
+    /// Fault injection: panic once the cumulative processed row count
+    /// would reach the given value.
+    ArmPanic(u64),
+}
+
+enum ShardSnap {
+    /// (model clone, cumulative SGD steps), or `None` if the shard has
+    /// not seen a row yet.
+    Ready(Option<(AnyModel, u64)>),
+    /// The worker panicked and is dropping batches until a reset.
+    Poisoned,
+}
+
+/// One supervised shard lane: the worker plus the front-end bookkeeping
+/// needed to heal it (ack stream and unacknowledged in-flight batches).
+struct ShardChannel {
+    worker: Worker<ShardCmd>,
+    /// Set by the worker when it poisons itself; cleared by the healer.
+    poisoned: Arc<AtomicBool>,
+    /// Successful-batch acknowledgements (dispatch sequence numbers).
+    acks: mpsc::Receiver<u64>,
+    /// Last dispatch sequence number handed out.
+    next_seq: u64,
+    /// Dispatched batches not yet acknowledged, oldest first.
+    inflight: VecDeque<(u64, Dataset)>,
+}
+
+/// Admission decision for an incoming train batch (the degradation
+/// ladder: healthy → shed maintenance → reject).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admission {
+    /// Queue healthy: train and publish normally.
+    Accept,
+    /// Under pressure: train, but defer cadence publishes (multi-merge
+    /// slack absorbs the deferred maintenance).
+    ShedMaintenance,
+    /// Queue at capacity: reject the batch with a typed `overloaded`
+    /// error; the caller should retry later.
+    RejectTrain,
+}
+
+impl Admission {
+    /// Stable wire name (used by the protocol `stats` verb).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Admission::Accept => "accept",
+            Admission::ShedMaintenance => "shed-maintenance",
+            Admission::RejectTrain => "reject-train",
+        }
+    }
+}
+
+/// Point-in-time health of the pipeline (surfaced over `stats`).
+#[derive(Debug, Clone)]
+pub struct IngestHealth {
+    /// Rows dispatched to shard workers and not yet processed.
+    pub pending_rows: u64,
+    /// The admission decision the next train batch would receive.
+    pub admission: Admission,
+    /// Shard workers healed after a panic.
+    pub worker_restarts: u64,
+    /// Rows re-fed to healed shards.
+    pub rows_requeued: u64,
+    /// Rows rejected by admission control.
+    pub rejected_rows: u64,
+    /// Cadence publishes deferred under shed-maintenance.
+    pub deferred_publishes: u64,
+    /// Exponentially-weighted mean of recent publish stalls, seconds.
+    pub stall_ewma_seconds: f64,
+    /// Rows durably framed in the WAL (0 when no WAL is attached).
+    pub wal_rows: u64,
+}
+
+/// What [`ShardedIngest::recover`] reconstructed.
+#[derive(Debug, Clone)]
+pub struct RecoveryReport {
+    /// Acknowledged rows replayed from the WAL.
+    pub wal_rows: u64,
+    /// Whether a torn tail (crash mid-append) was truncated away.
+    pub torn_tail_dropped: bool,
+    /// Rows the checkpoint covered (0 if no checkpoint was found).
+    pub checkpoint_rows: u64,
+    /// Registry version pinned by the checkpoint (0 if none).
+    pub checkpoint_version: u64,
+    /// Wall-clock time of the whole recovery, seconds.
+    pub recovery_seconds: f64,
 }
 
 /// Final accounting of a pipeline run (returned by
@@ -52,6 +172,14 @@ pub struct IngestReport {
     pub final_publish_every: usize,
     /// The cadence in effect at each publish (one entry per publish).
     pub cadence_history: Vec<usize>,
+    /// Shard workers healed after a panic.
+    pub worker_restarts: u64,
+    /// Rows re-fed to healed shards.
+    pub rows_requeued: u64,
+    /// Rows rejected by admission control.
+    pub rejected_rows: u64,
+    /// Cadence publishes deferred under shed-maintenance.
+    pub deferred_publishes: u64,
 }
 
 impl IngestReport {
@@ -72,9 +200,11 @@ impl IngestReport {
 /// shard workers and publishes merged snapshots every `publish_every`
 /// rows.
 pub struct ShardedIngest {
-    workers: Vec<Worker<ShardCmd>>,
+    lanes: Vec<ShardChannel>,
     registry: Arc<ModelRegistry>,
+    solver: SolverSpec,
     config: SvmConfig,
+    run: RunConfig,
     publish_every: usize,
     /// The configured (non-adapted) cadence — the floor the adaptive
     /// controller relaxes back to when stalls are cheap.
@@ -89,6 +219,28 @@ pub struct ShardedIngest {
     rows_since_publish: usize,
     publish_stalls: Vec<f64>,
     last_version: u64,
+    /// Rows dispatched to shard workers and not yet processed (the
+    /// workers decrement as they drain, so this is the live queue depth).
+    pending_rows: Arc<AtomicU64>,
+    /// Queue depth at which train batches are rejected.
+    max_pending_rows: usize,
+    /// Queue depth at which cadence publishes are deferred.
+    shed_pending_rows: usize,
+    stall_ewma: f64,
+    shedding: bool,
+    deferred_publishes: u64,
+    /// Lazily created once the stream dimension is pinned.
+    wal_path: Option<PathBuf>,
+    wal: Option<WalWriter>,
+    checkpoint_path: Option<PathBuf>,
+    faults: Option<FaultPlan>,
+    /// Terminal failure (injected crash): every later call bails.
+    failed: Option<String>,
+    restarts: u64,
+    rows_requeued: u64,
+    rejected_rows: u64,
+    shadow: Option<ShadowPolicy>,
+    shadow_rejects: u64,
 }
 
 /// Publish stall (seconds) above which adaptive cadence doubles
@@ -101,6 +253,13 @@ const ADAPT_MAX_FACTOR: usize = 16;
 
 /// Publishes averaged by the adaptive controller.
 const ADAPT_WINDOW: usize = 4;
+
+/// Weight of the newest publish stall in the admission EWMA.
+const EWMA_ALPHA: f64 = 0.2;
+
+/// Publish-stall EWMA (seconds) above which admission sheds maintenance
+/// even when the queue itself is shallow.
+pub const SHED_STALL_EWMA_SECONDS: f64 = 0.050;
 
 impl ShardedIngest {
     /// Build the pipeline with the default primal (BSGD) shard solver —
@@ -132,27 +291,18 @@ impl ShardedIngest {
     ) -> Result<Self> {
         ensure!(shards >= 1, "need at least one shard, got {shards}");
         ensure!(publish_every >= 1, "publish_every must be at least 1");
-        let mut workers = Vec::with_capacity(shards);
+        let pending_rows = Arc::new(AtomicU64::new(0));
+        let mut lanes = Vec::with_capacity(shards);
         for s in 0..shards {
-            let mut est = AnyEstimator::new_shard(solver, config.clone(), run.clone(), s)?;
-            workers.push(spawn_worker(&format!("ingest-shard-{s}"), move |cmd: ShardCmd| {
-                match cmd {
-                    ShardCmd::Ingest(ds) => {
-                        if !ds.is_empty() {
-                            est.partial_fit(&ds)
-                                .expect("shard partial_fit failed (dimension mismatch?)");
-                        }
-                    }
-                    ShardCmd::Snapshot(reply) => {
-                        let _ = reply.send(est.snapshot());
-                    }
-                }
-            }));
+            let est = AnyEstimator::new_shard(solver, config.clone(), run.clone(), s)?;
+            lanes.push(Self::spawn_lane(s, est, &pending_rows));
         }
         Ok(ShardedIngest {
-            workers,
+            lanes,
             registry,
+            solver,
             config,
+            run,
             publish_every,
             base_publish_every: publish_every,
             adapt: false,
@@ -162,7 +312,83 @@ impl ShardedIngest {
             rows_since_publish: 0,
             publish_stalls: Vec::new(),
             last_version: 0,
+            pending_rows,
+            max_pending_rows: usize::MAX,
+            shed_pending_rows: usize::MAX,
+            stall_ewma: 0.0,
+            shedding: false,
+            deferred_publishes: 0,
+            wal_path: None,
+            wal: None,
+            checkpoint_path: None,
+            faults: None,
+            failed: None,
+            restarts: 0,
+            rows_requeued: 0,
+            rejected_rows: 0,
+            shadow: None,
+            shadow_rejects: 0,
         })
+    }
+
+    /// Spawn one supervised shard worker: training panics are caught, the
+    /// worker poisons itself and keeps draining (dropping batches, still
+    /// decrementing the queue counter) until the front end resets it.
+    fn spawn_lane(s: usize, est: AnyEstimator, pending: &Arc<AtomicU64>) -> ShardChannel {
+        let poisoned = Arc::new(AtomicBool::new(false));
+        let (ack_tx, acks) = mpsc::channel::<u64>();
+        let flag = Arc::clone(&poisoned);
+        let pending = Arc::clone(pending);
+        let mut est = est;
+        let mut dead = false;
+        let mut rows_done: u64 = 0;
+        let mut armed_panic: Option<u64> = None;
+        let worker = spawn_worker(&format!("ingest-shard-{s}"), move |cmd: ShardCmd| match cmd {
+            ShardCmd::Ingest { seq, ds } => {
+                let n = ds.len() as u64;
+                if !dead && n > 0 {
+                    let fire = armed_panic.map_or(false, |at| rows_done + n >= at);
+                    if fire {
+                        armed_panic = None; // one-shot: disarm before firing
+                    }
+                    let outcome = catch_unwind(AssertUnwindSafe(|| {
+                        if fire {
+                            panic!("injected shard-worker panic (fault plan)");
+                        }
+                        est.partial_fit(&ds)
+                    }));
+                    match outcome {
+                        Ok(Ok(())) => {
+                            rows_done += n;
+                            let _ = ack_tx.send(seq);
+                        }
+                        // Training error or panic: poison, drop the
+                        // batch (it stays unacknowledged in-flight on
+                        // the front end and will be re-fed at heal).
+                        Ok(Err(_)) | Err(_) => {
+                            dead = true;
+                            flag.store(true, Ordering::SeqCst);
+                        }
+                    }
+                }
+                pending.fetch_sub(n, Ordering::SeqCst);
+            }
+            ShardCmd::Snapshot(reply) => {
+                let snap =
+                    if dead { ShardSnap::Poisoned } else { ShardSnap::Ready(est.snapshot()) };
+                let _ = reply.send(snap);
+            }
+            ShardCmd::Reset(fresh) => {
+                est = *fresh;
+                dead = false;
+                rows_done = 0;
+                flag.store(false, Ordering::SeqCst);
+            }
+            ShardCmd::ArmPanic(at) => {
+                armed_panic = Some(at);
+            }
+        });
+        ShardChannel { worker, poisoned, acks, next_seq: 0, inflight: VecDeque::new() }
     }
 
     /// Enable/disable stall-aware adaptive publish cadence: when the mean
@@ -176,6 +402,80 @@ impl ShardedIngest {
         self
     }
 
+    /// Bound the ingest queue: at `shed_pending_rows` dispatched-but-
+    /// unprocessed rows cadence publishes are deferred, at
+    /// `max_pending_rows` train batches are rejected with a typed
+    /// `overloaded` error. Defaults are unbounded (no admission control).
+    pub fn with_admission(mut self, max_pending_rows: usize, shed_pending_rows: usize) -> Self {
+        self.max_pending_rows = max_pending_rows.max(1);
+        self.shed_pending_rows = shed_pending_rows.clamp(1, self.max_pending_rows);
+        self
+    }
+
+    /// Gate every publish through the registry's shadow evaluation with
+    /// this policy (see [`ModelRegistry::publish_shadowed`]).
+    pub fn with_shadow_policy(mut self, policy: ShadowPolicy) -> Self {
+        self.shadow = Some(policy);
+        self
+    }
+
+    /// Arm crash-safe persistence: a WAL is created at `path` as soon as
+    /// the stream dimension is pinned (first non-empty batch), and every
+    /// batch is framed + synced there **before** dispatch — the
+    /// acknowledgement point.
+    pub fn enable_wal(&mut self, path: impl Into<PathBuf>) -> Result<()> {
+        ensure!(self.rows_total == 0, "cannot enable a WAL after rows were ingested without one");
+        self.wal_path = Some(path.into());
+        Ok(())
+    }
+
+    /// Adopt an already-positioned WAL writer (the recovery path). The
+    /// writer's row count must equal the rows this pipeline has ingested:
+    /// the WAL position doubles as the global row index that round-robin
+    /// partitioning (and therefore shard healing) keys off.
+    pub fn attach_wal(&mut self, wal: WalWriter) -> Result<()> {
+        ensure!(
+            wal.rows() == self.rows_total,
+            "WAL holds {} rows but the pipeline has ingested {}",
+            wal.rows(),
+            self.rows_total
+        );
+        if self.dim == 0 {
+            self.dim = wal.dim();
+        }
+        ensure!(
+            wal.dim() == self.dim,
+            "WAL dimension {} does not match the stream dimension {}",
+            wal.dim(),
+            self.dim
+        );
+        self.wal_path = None;
+        self.wal = Some(wal);
+        Ok(())
+    }
+
+    /// Write a checkpoint (incumbent model + version + rows covered) at
+    /// `path` after every publish, atomically (tmp + rename).
+    pub fn checkpoint_at(&mut self, path: impl Into<PathBuf>) {
+        self.checkpoint_path = Some(path.into());
+    }
+
+    /// Install a deterministic fault schedule (test/bench hook; see
+    /// [`FaultPlan`]). Production entry points never call this.
+    pub fn fault_inject(&mut self, plan: FaultPlan) -> Result<()> {
+        if let Some(p) = plan.worker_panic {
+            ensure!(
+                p.shard < self.lanes.len(),
+                "fault plan targets shard {} but the pipeline has {}",
+                p.shard,
+                self.lanes.len()
+            );
+            self.lanes[p.shard].worker.send(ShardCmd::ArmPanic(p.after_rows))?;
+        }
+        self.faults = Some(plan);
+        Ok(())
+    }
+
     /// The cadence currently in effect.
     pub fn current_publish_every(&self) -> usize {
         self.publish_every
@@ -183,7 +483,7 @@ impl ShardedIngest {
 
     /// Number of shard workers.
     pub fn shards(&self) -> usize {
-        self.workers.len()
+        self.lanes.len()
     }
 
     /// Total rows ingested so far.
@@ -191,11 +491,50 @@ impl ShardedIngest {
         self.rows_total
     }
 
+    /// The admission decision the next train batch would receive.
+    pub fn admission_state(&self) -> Admission {
+        let pending = self.pending_rows.load(Ordering::SeqCst);
+        if pending >= self.max_pending_rows as u64 {
+            Admission::RejectTrain
+        } else if pending >= self.shed_pending_rows as u64
+            || self.stall_ewma > SHED_STALL_EWMA_SECONDS
+        {
+            Admission::ShedMaintenance
+        } else {
+            Admission::Accept
+        }
+    }
+
+    /// Point-in-time pipeline health (for the protocol `stats` verb).
+    pub fn health(&self) -> IngestHealth {
+        IngestHealth {
+            pending_rows: self.pending_rows.load(Ordering::SeqCst),
+            admission: self.admission_state(),
+            worker_restarts: self.restarts,
+            rows_requeued: self.rows_requeued,
+            rejected_rows: self.rejected_rows,
+            deferred_publishes: self.deferred_publishes,
+            stall_ewma_seconds: self.stall_ewma,
+            wal_rows: self.wal.as_ref().map_or(0, |w| w.rows()),
+        }
+    }
+
+    fn fail_check(&self) -> Result<()> {
+        if let Some(msg) = &self.failed {
+            bail!("pipeline dead: {msg}");
+        }
+        Ok(())
+    }
+
     /// Ingest one batch of labeled rows: rows are dealt round-robin by
     /// global stream index to the shard workers (which train
     /// asynchronously); an automatic snapshot/publish runs whenever
-    /// `publish_every` rows have accumulated since the last publish.
+    /// `publish_every` rows have accumulated since the last publish
+    /// (deferred under shed-maintenance admission). With a WAL attached
+    /// the batch is durably framed **before** dispatch; an `Ok` return
+    /// is the acknowledgement.
     pub fn ingest(&mut self, batch: &Dataset) -> Result<()> {
+        self.fail_check()?;
         if batch.is_empty() {
             return Ok(());
         }
@@ -208,47 +547,202 @@ impl ShardedIngest {
             batch.dim(),
             self.dim
         );
-        let s = self.workers.len();
+        self.heal_poisoned()?;
+        self.drain_acks();
+        let n = batch.len();
+        match self.admission_state() {
+            Admission::RejectTrain => {
+                self.rejected_rows += n as u64;
+                let pending = self.pending_rows.load(Ordering::SeqCst);
+                bail!("overloaded: ingest queue at capacity ({pending} rows pending)");
+            }
+            Admission::ShedMaintenance => self.shedding = true,
+            Admission::Accept => self.shedding = false,
+        }
+        if self.wal.is_none() {
+            if let Some(path) = self.wal_path.take() {
+                self.wal = Some(WalWriter::create(&path, self.dim)?);
+            }
+        }
+        // Durability point: once the append returns, the batch is acked.
+        if let Some(wal) = self.wal.as_mut() {
+            wal.append_rows(batch)?;
+        }
+        // Scheduled crash between WAL append and dispatch/checkpoint: the
+        // batch is acked-durable but never trained; recovery must replay
+        // it. Terminal — the pipeline refuses all further work.
+        if let Some(plan) = self.faults {
+            if let Some(at) = plan.crash_at_rows {
+                if self.rows_total < at && at <= self.rows_total + n as u64 {
+                    if plan.tear_wal_on_crash {
+                        if let Some(wal) = self.wal.as_mut() {
+                            wal.inject_torn_frame()?;
+                        }
+                    }
+                    let msg = format!(
+                        "{INJECTED_CRASH_MARKER} at row {at} (between WAL append and checkpoint)"
+                    );
+                    self.failed = Some(msg.clone());
+                    bail!("pipeline dead: {msg}");
+                }
+            }
+        }
+        self.dispatch(batch)?;
+        self.rows_total += n as u64;
+        self.rows_since_publish += n;
+        if self.rows_since_publish >= self.publish_every {
+            if self.shedding {
+                self.deferred_publishes += 1;
+            } else {
+                self.publish_now()?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Partition `batch` round-robin by global row index and send each
+    /// non-empty part to its shard, tracking it in-flight until acked.
+    fn dispatch(&mut self, batch: &Dataset) -> Result<()> {
+        let s = self.lanes.len();
         let mut parts: Vec<Dataset> =
             (0..s).map(|i| Dataset::empty(format!("shard-{i}"), self.dim)).collect();
         for i in 0..batch.len() {
             let shard = ((self.rows_total + i as u64) % s as u64) as usize;
             parts[shard].push_row(batch.row(i), batch.label(i));
         }
-        for (worker, part) in self.workers.iter().zip(parts) {
+        for (lane, part) in self.lanes.iter_mut().zip(parts) {
             if !part.is_empty() {
-                worker.send(ShardCmd::Ingest(part))?;
+                Self::dispatch_part(&self.pending_rows, lane, part)?;
             }
         }
-        self.rows_total += batch.len() as u64;
-        self.rows_since_publish += batch.len();
-        if self.rows_since_publish >= self.publish_every {
-            self.publish_now()?;
+        Ok(())
+    }
+
+    fn dispatch_part(pending: &Arc<AtomicU64>, lane: &mut ShardChannel, part: Dataset) -> Result<()> {
+        lane.next_seq += 1;
+        let seq = lane.next_seq;
+        pending.fetch_add(part.len() as u64, Ordering::SeqCst);
+        lane.inflight.push_back((seq, part.clone()));
+        lane.worker.send(ShardCmd::Ingest { seq, ds: part })?;
+        Ok(())
+    }
+
+    /// Drop acknowledged batches from the in-flight queues.
+    fn drain_acks(&mut self) {
+        for lane in &mut self.lanes {
+            while let Ok(seq) = lane.acks.try_recv() {
+                while lane.inflight.front().map_or(false, |(q, _)| *q <= seq) {
+                    lane.inflight.pop_front();
+                }
+            }
+        }
+    }
+
+    /// Heal every poisoned shard: install a fresh estimator with the
+    /// shard's original deterministic seed, then re-feed its rows — the
+    /// full WAL sub-stream when a WAL is attached (the healed shard
+    /// retraces the exact trajectory, bit for bit), or the
+    /// unacknowledged in-flight batches otherwise (no acked-into-the-
+    /// pipeline row is dropped, but the shard restarts from scratch so
+    /// its trajectory is approximate).
+    fn heal_poisoned(&mut self) -> Result<()> {
+        for s in 0..self.lanes.len() {
+            if !self.lanes[s].poisoned.load(Ordering::SeqCst) {
+                continue;
+            }
+            self.restarts += 1;
+            let fresh = AnyEstimator::new_shard(self.solver, self.config.clone(), self.run.clone(), s)?;
+            {
+                let lane = &mut self.lanes[s];
+                // Collect acks the worker sent before dying, so only the
+                // genuinely unprocessed suffix counts as lost.
+                while let Ok(seq) = lane.acks.try_recv() {
+                    while lane.inflight.front().map_or(false, |(q, _)| *q <= seq) {
+                        lane.inflight.pop_front();
+                    }
+                }
+                lane.poisoned.store(false, Ordering::SeqCst);
+                lane.worker.send(ShardCmd::Reset(Box::new(fresh)))?;
+            }
+            if self.wal.is_some() {
+                // Exact heal: the WAL holds every acked row in global
+                // order; this shard's sub-stream is the round-robin
+                // slice, re-fed as one batch (batch boundaries do not
+                // change the trajectory).
+                let path = {
+                    let w = self.wal.as_mut().unwrap();
+                    w.sync()?;
+                    w.path().to_path_buf()
+                };
+                let replayed = wal::replay(&path, Some(self.dim))?;
+                let nshards = self.lanes.len() as u64;
+                let mut mine = Dataset::empty(format!("heal-shard-{s}"), self.dim);
+                for i in 0..replayed.rows.len() {
+                    if (i as u64) % nshards == s as u64 {
+                        mine.push_row(replayed.rows.row(i), replayed.rows.label(i));
+                    }
+                }
+                let lane = &mut self.lanes[s];
+                lane.inflight.clear();
+                if !mine.is_empty() {
+                    self.rows_requeued += mine.len() as u64;
+                    Self::dispatch_part(&self.pending_rows, lane, mine)?;
+                }
+            } else {
+                let parts: Vec<Dataset> =
+                    self.lanes[s].inflight.drain(..).map(|(_, ds)| ds).collect();
+                for part in parts {
+                    self.rows_requeued += part.len() as u64;
+                    Self::dispatch_part(&self.pending_rows, &mut self.lanes[s], part)?;
+                }
+            }
         }
         Ok(())
     }
 
     /// Snapshot every shard, merge, and publish into the registry;
-    /// returns the new version. The wait for shard queues to drain is
-    /// part of the measured stall (readers keep serving the previous
-    /// snapshot throughout).
+    /// returns the serving version afterwards. The wait for shard queues
+    /// to drain is part of the measured stall (readers keep serving the
+    /// previous snapshot throughout). A shard found poisoned mid-snapshot
+    /// is healed and the snapshot retried, so a publish never silently
+    /// acks into a dead shard.
     pub fn publish_now(&mut self) -> Result<u64> {
+        self.fail_check()?;
         ensure!(self.rows_total > 0, "cannot publish before any rows are ingested");
         let t0 = Instant::now();
-        let mut pending = Vec::with_capacity(self.workers.len());
-        for worker in &self.workers {
-            let (tx, rx) = mpsc::channel();
-            worker.send(ShardCmd::Snapshot(tx))?;
-            pending.push(rx);
-        }
         let mut models = Vec::new();
         let mut weights = Vec::new();
-        for rx in pending {
-            let snap = rx.recv().map_err(|_| anyhow!("shard worker terminated"))?;
-            if let Some((model, steps)) = snap {
-                models.push(model);
-                weights.push(steps as f64);
+        let mut attempts = 0;
+        loop {
+            attempts += 1;
+            self.heal_poisoned()?;
+            self.drain_acks();
+            let mut pending = Vec::with_capacity(self.lanes.len());
+            for lane in &self.lanes {
+                let (tx, rx) = mpsc::channel();
+                lane.worker.send(ShardCmd::Snapshot(tx))?;
+                pending.push(rx);
             }
+            models.clear();
+            weights.clear();
+            let mut poisoned = false;
+            for rx in pending {
+                match rx.recv().map_err(|_| anyhow!("shard worker terminated"))? {
+                    ShardSnap::Ready(Some((model, steps))) => {
+                        models.push(model);
+                        weights.push(steps as f64);
+                    }
+                    ShardSnap::Ready(None) => {}
+                    ShardSnap::Poisoned => poisoned = true,
+                }
+            }
+            if !poisoned {
+                break;
+            }
+            ensure!(
+                attempts < 3,
+                "a shard worker kept dying across {attempts} heal attempts"
+            );
         }
         ensure!(!models.is_empty(), "no shard has trained a model yet");
         let merged = super::merge::merge_shard_models(
@@ -257,15 +751,40 @@ impl ShardedIngest {
             self.config.budget,
             &self.config.maintenance(),
         )?;
-        let version = self.registry.publish(merged);
-        self.publish_stalls.push(t0.elapsed().as_secs_f64());
+        let version = match self.shadow {
+            Some(policy) => {
+                let outcome = self.registry.publish_shadowed(merged, &policy);
+                if !outcome.accepted {
+                    self.shadow_rejects += 1;
+                }
+                outcome.version
+            }
+            None => self.registry.publish(merged),
+        };
+        let stall = t0.elapsed().as_secs_f64();
+        self.stall_ewma = if self.publish_stalls.is_empty() {
+            stall
+        } else {
+            EWMA_ALPHA * stall + (1.0 - EWMA_ALPHA) * self.stall_ewma
+        };
+        self.publish_stalls.push(stall);
         self.cadence_history.push(self.publish_every);
         self.rows_since_publish = 0;
         self.last_version = version;
         if self.adapt {
             self.adapt_cadence();
         }
+        if let Some(path) = self.checkpoint_path.clone() {
+            if let Some(snap) = self.registry.current() {
+                wal::write_checkpoint(&path, snap.model(), self.rows_total, snap.version())?;
+            }
+        }
         Ok(version)
+    }
+
+    /// Publishes rejected by the shadow gate so far.
+    pub fn shadow_rejects(&self) -> u64 {
+        self.shadow_rejects
     }
 
     /// Stall-aware cadence controller (runs after each publish when
@@ -286,12 +805,17 @@ impl ShardedIngest {
 
     /// Drain everything, publish a final snapshot if rows arrived since
     /// the last one, join the shard workers, and return the accounting.
+    /// A crashed (fault-injected) pipeline skips the final publish but
+    /// still joins cleanly.
     pub fn finish(mut self) -> Result<IngestReport> {
-        if self.rows_total > 0 && (self.rows_since_publish > 0 || self.last_version == 0) {
+        if self.failed.is_none()
+            && self.rows_total > 0
+            && (self.rows_since_publish > 0 || self.last_version == 0)
+        {
             self.publish_now()?;
         }
-        for worker in self.workers.drain(..) {
-            worker.join();
+        for lane in self.lanes.drain(..) {
+            lane.worker.join();
         }
         Ok(IngestReport {
             rows: self.rows_total,
@@ -300,7 +824,79 @@ impl ShardedIngest {
             last_version: self.last_version,
             final_publish_every: self.publish_every,
             cadence_history: self.cadence_history,
+            worker_restarts: self.restarts,
+            rows_requeued: self.rows_requeued,
+            rejected_rows: self.rejected_rows,
+            deferred_publishes: self.deferred_publishes,
         })
+    }
+
+    /// Rebuild a pipeline from its persistence pair after a crash.
+    ///
+    /// 1. If a checkpoint exists it is published immediately — the serve
+    ///    tier has a model before replay finishes (availability).
+    /// 2. The WAL is resumed (torn tail truncated) and **every** acked
+    ///    row is replayed through a fresh deterministic pipeline — the
+    ///    WAL, not the checkpoint, is the source of truth, and the
+    ///    pipeline's determinism contract makes the result byte-identical
+    ///    to an uninterrupted run over the same acked rows.
+    /// 3. The resumed WAL is re-attached so new rows keep appending, and
+    ///    a fresh checkpoint is written.
+    #[allow(clippy::too_many_arguments)]
+    pub fn recover(
+        solver: SolverSpec,
+        config: SvmConfig,
+        run: RunConfig,
+        shards: usize,
+        publish_every: usize,
+        registry: Arc<ModelRegistry>,
+        wal_path: &Path,
+        checkpoint_path: Option<&Path>,
+    ) -> Result<(Self, RecoveryReport)> {
+        let t0 = Instant::now();
+        let mut checkpoint_rows = 0;
+        let mut checkpoint_version = 0;
+        if let Some(ckpt) = checkpoint_path {
+            if ckpt.exists() {
+                let decoded = wal::read_checkpoint(ckpt)?;
+                checkpoint_rows = decoded.rows_covered;
+                checkpoint_version = decoded.version;
+                let mut model = decoded.model;
+                model.set_fast_exp(config.fast_exp);
+                registry.publish(model);
+            }
+        }
+        let (wal_writer, replayed) = WalWriter::resume(wal_path)?;
+        let mut pipeline =
+            Self::with_solver(solver, config, run, shards, publish_every, registry)?;
+        if !replayed.rows.is_empty() {
+            pipeline.ingest(&replayed.rows)?;
+            pipeline.publish_now()?;
+        }
+        pipeline.attach_wal(wal_writer)?;
+        if let Some(ckpt) = checkpoint_path {
+            pipeline.checkpoint_at(ckpt);
+            if pipeline.rows_total > 0 {
+                if let Some(snap) = pipeline.registry.current() {
+                    wal::write_checkpoint(ckpt, snap.model(), pipeline.rows_total, snap.version())?;
+                }
+            }
+        }
+        let report = RecoveryReport {
+            wal_rows: replayed.rows.len() as u64,
+            torn_tail_dropped: replayed.torn_tail,
+            checkpoint_rows,
+            checkpoint_version,
+            recovery_seconds: t0.elapsed().as_secs_f64(),
+        };
+        Ok((pipeline, report))
+    }
+
+    /// Test hook: force the queue-depth counter (admission decisions
+    /// only; workers never see forced values).
+    #[cfg(test)]
+    fn force_pending_rows(&self, rows: u64) {
+        self.pending_rows.store(rows, Ordering::SeqCst);
     }
 }
 
@@ -313,6 +909,12 @@ mod tests {
 
     fn config_for(n: usize, budget: usize) -> SvmConfig {
         SvmConfig::new().kernel(KernelSpec::gaussian(2.0)).budget(budget).c(10.0, n)
+    }
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("budgetsvm-ingest");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
     }
 
     fn run_pipeline(
@@ -414,6 +1016,11 @@ mod tests {
         assert!(registry.current().unwrap().model().num_sv() <= 30);
         assert_eq!(report.publish_stalls.len() as u64, report.publishes);
         assert!(report.stall_max_seconds() >= report.stall_mean_seconds());
+        // A fault-free run heals nothing and rejects nothing.
+        assert_eq!(report.worker_restarts, 0);
+        assert_eq!(report.rows_requeued, 0);
+        assert_eq!(report.rejected_rows, 0);
+        assert_eq!(report.deferred_publishes, 0);
     }
 
     #[test]
@@ -563,5 +1170,250 @@ mod tests {
         let report = ing.finish().unwrap();
         assert_eq!(report.rows, 50);
         assert_eq!(registry.version(), report.last_version);
+    }
+
+    #[test]
+    fn worker_panic_without_wal_requeues_unacked_rows() {
+        let ds = two_moons(300, 0.12, 9);
+        let registry = Arc::new(ModelRegistry::new());
+        let mut ing = ShardedIngest::new(
+            config_for(ds.len(), 30),
+            RunConfig::new().seed(7),
+            2,
+            10_000,
+            Arc::clone(&registry),
+        )
+        .unwrap();
+        // Shard 1 sees ~15 rows per 30-row chunk; panic on its 3rd batch.
+        ing.fault_inject(FaultPlan::none().with_worker_panic(1, 40)).unwrap();
+        let mut start = 0;
+        while start < ds.len() {
+            let idx: Vec<usize> = (start..(start + 30).min(ds.len())).collect();
+            ing.ingest(&ds.subset(&idx, "chunk")).unwrap();
+            start += 30;
+        }
+        let report = ing.finish().unwrap();
+        assert_eq!(report.rows, 300);
+        assert!(report.worker_restarts >= 1, "the panic must be healed");
+        assert!(report.rows_requeued > 0, "the dropped batch must be re-fed");
+        // The pipeline still publishes a valid budgeted model.
+        let snap = registry.current().unwrap();
+        assert!(snap.model().num_sv() <= 30);
+        assert_eq!(report.last_version, registry.version());
+    }
+
+    #[test]
+    fn worker_panic_heals_via_wal_to_the_unfaulted_trajectory() {
+        let ds = two_moons(240, 0.12, 23);
+        let run = |faulted: bool| {
+            let wal_path = tmp(if faulted { "heal-f.wal" } else { "heal-c.wal" });
+            let registry = Arc::new(ModelRegistry::new());
+            let mut ing = ShardedIngest::new(
+                config_for(ds.len(), 30),
+                RunConfig::new().seed(31),
+                3,
+                100_000,
+                Arc::clone(&registry),
+            )
+            .unwrap();
+            ing.enable_wal(&wal_path).unwrap();
+            if faulted {
+                ing.fault_inject(FaultPlan::none().with_worker_panic(1, 30)).unwrap();
+            }
+            let mut start = 0;
+            while start < ds.len() {
+                let idx: Vec<usize> = (start..(start + 40).min(ds.len())).collect();
+                ing.ingest(&ds.subset(&idx, "chunk")).unwrap();
+                start += 40;
+            }
+            let report = ing.finish().unwrap();
+            let dump = tmp(if faulted { "heal-f.bsvm" } else { "heal-c.bsvm" });
+            registry.dump(&dump).unwrap();
+            let bytes = std::fs::read(&dump).unwrap();
+            std::fs::remove_file(&dump).ok();
+            std::fs::remove_file(&wal_path).ok();
+            (report, bytes)
+        };
+        let (clean_report, clean_bytes) = run(false);
+        let (faulted_report, faulted_bytes) = run(true);
+        assert_eq!(clean_report.rows, 240);
+        assert_eq!(faulted_report.rows, 240);
+        assert_eq!(clean_report.worker_restarts, 0);
+        assert!(faulted_report.worker_restarts >= 1);
+        // The WAL heal replays the shard's full sub-stream with the
+        // shard's original seed, so the published model is bit-identical
+        // to the never-faulted run.
+        assert_eq!(clean_bytes, faulted_bytes, "healed trajectory must match the unfaulted one");
+    }
+
+    #[test]
+    fn injected_crash_after_wal_append_preserves_acked_rows_and_recovery_is_byte_identical() {
+        let ds = two_moons(400, 0.12, 41);
+        let wal_path = tmp("crash.wal");
+        let ckpt_path = tmp("crash.ckpt");
+        std::fs::remove_file(&wal_path).ok();
+        std::fs::remove_file(&ckpt_path).ok();
+        let config = || config_for(ds.len(), 30);
+        let run = RunConfig::new().seed(13);
+
+        // Crashed run: WAL + checkpoint armed, torn-write crash at row 150.
+        let registry = Arc::new(ModelRegistry::new());
+        let mut ing = ShardedIngest::new(config(), run.clone(), 2, 50, Arc::clone(&registry))
+            .unwrap();
+        ing.enable_wal(&wal_path).unwrap();
+        ing.checkpoint_at(&ckpt_path);
+        ing.fault_inject(FaultPlan::none().with_crash_at_rows(150, true)).unwrap();
+        let mut start = 0;
+        let mut crashed = false;
+        while start < ds.len() {
+            let idx: Vec<usize> = (start..(start + 40).min(ds.len())).collect();
+            match ing.ingest(&ds.subset(&idx, "chunk")) {
+                Ok(()) => {}
+                Err(e) => {
+                    let msg = e.to_string();
+                    assert!(crate::serve::faults::is_injected_crash(&msg), "{msg}");
+                    crashed = true;
+                    break;
+                }
+            }
+            start += 40;
+        }
+        assert!(crashed, "the fault plan must fire");
+        // Every later call fails fast.
+        assert!(ing.ingest(&ds).is_err());
+        assert!(ing.publish_now().is_err());
+        let report = ing.finish().unwrap();
+        // 120 rows dispatched before the crash; the crashing 40-row batch
+        // was WAL-acked but never trained.
+        assert_eq!(report.rows, 120);
+
+        // Recover: checkpoint gives instant availability, WAL replay
+        // rebuilds the authoritative state over all 160 acked rows.
+        let reg2 = Arc::new(ModelRegistry::new());
+        let (recovered, rec) = ShardedIngest::recover(
+            SolverSpec::Bsgd,
+            config(),
+            run.clone(),
+            2,
+            50,
+            Arc::clone(&reg2),
+            &wal_path,
+            Some(&ckpt_path),
+        )
+        .unwrap();
+        assert_eq!(rec.wal_rows, 160, "all acked rows survive, zero lost");
+        assert!(rec.torn_tail_dropped, "the torn frame must be truncated");
+        assert_eq!(rec.checkpoint_rows, 80, "checkpoint covered the last cadence publish");
+        assert!(rec.checkpoint_version >= 1);
+        assert_eq!(recovered.rows_ingested(), 160);
+        let dump_rec = tmp("crash-rec.bsvm");
+        reg2.dump(&dump_rec).unwrap();
+
+        // Reference: an uninterrupted pipeline over the same 160 rows.
+        let reg3 = Arc::new(ModelRegistry::new());
+        let mut reference =
+            ShardedIngest::new(config(), run, 2, 50, Arc::clone(&reg3)).unwrap();
+        let idx: Vec<usize> = (0..160).collect();
+        reference.ingest(&ds.subset(&idx, "reference")).unwrap();
+        reference.publish_now().unwrap();
+        let dump_ref = tmp("crash-ref.bsvm");
+        reg3.dump(&dump_ref).unwrap();
+
+        let rec_bytes = std::fs::read(&dump_rec).unwrap();
+        let ref_bytes = std::fs::read(&dump_ref).unwrap();
+        assert_eq!(rec_bytes, ref_bytes, "recovered state must be byte-identical");
+
+        std::fs::remove_file(&dump_rec).ok();
+        std::fs::remove_file(&dump_ref).ok();
+        std::fs::remove_file(&wal_path).ok();
+        std::fs::remove_file(&ckpt_path).ok();
+    }
+
+    #[test]
+    fn admission_ladder_sheds_then_rejects_then_recovers() {
+        let ds = two_moons(120, 0.12, 3);
+        let registry = Arc::new(ModelRegistry::new());
+        let mut ing = ShardedIngest::new(
+            config_for(ds.len(), 20),
+            RunConfig::new().seed(5),
+            2,
+            10,
+            Arc::clone(&registry),
+        )
+        .unwrap()
+        .with_admission(100, 50);
+        assert_eq!(ing.admission_state(), Admission::Accept);
+
+        // Shed: the batch trains but its cadence publish is deferred.
+        ing.force_pending_rows(60);
+        let idx: Vec<usize> = (0..30).collect();
+        ing.ingest(&ds.subset(&idx, "shed")).unwrap();
+        assert!(ing.health().deferred_publishes >= 1, "publish must be deferred under shed");
+        // Drain the workers (snapshot barrier) so their queue-counter
+        // decrements can no longer race the forced values below.
+        ing.publish_now().unwrap();
+
+        // Reject: the batch is refused with a typed overloaded error.
+        ing.force_pending_rows(100);
+        assert_eq!(ing.admission_state(), Admission::RejectTrain);
+        let idx: Vec<usize> = (30..60).collect();
+        let err = ing.ingest(&ds.subset(&idx, "reject")).unwrap_err().to_string();
+        assert!(err.contains("overloaded"), "{err}");
+        assert_eq!(ing.health().rejected_rows, 30);
+        assert_eq!(ing.health().admission, Admission::RejectTrain);
+
+        // Pressure gone: back to normal service, deferred work publishes.
+        ing.force_pending_rows(0);
+        assert_eq!(ing.admission_state(), Admission::Accept);
+        let idx: Vec<usize> = (30..120).collect();
+        ing.ingest(&ds.subset(&idx, "resume")).unwrap();
+        let report = ing.finish().unwrap();
+        assert_eq!(report.rows, 120);
+        assert!(report.deferred_publishes >= 1);
+        assert_eq!(report.rejected_rows, 30);
+        assert!(registry.version() >= 1);
+    }
+
+    #[test]
+    fn recover_on_missing_wal_is_a_typed_error() {
+        let registry = Arc::new(ModelRegistry::new());
+        let missing = tmp("never-written.wal");
+        std::fs::remove_file(&missing).ok();
+        let err = ShardedIngest::recover(
+            SolverSpec::Bsgd,
+            config_for(100, 10),
+            RunConfig::new(),
+            2,
+            100,
+            registry,
+            &missing,
+            None,
+        );
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn shadowed_publishes_ride_the_registry_gate() {
+        let ds = two_moons(200, 0.12, 29);
+        let registry = Arc::new(ModelRegistry::new());
+        let mut ing = ShardedIngest::new(
+            config_for(ds.len(), 30),
+            RunConfig::new().seed(17),
+            2,
+            60,
+            Arc::clone(&registry),
+        )
+        .unwrap()
+        .with_shadow_policy(ShadowPolicy { min_rows: 1_000_000, max_disagreement: 0.25 });
+        // min_rows is unreachable, so every publish passes the cold-start
+        // branch unconditionally — the plumbing works end to end.
+        ing.ingest(&ds).unwrap();
+        assert_eq!(ing.shadow_rejects(), 0);
+        let report = ing.finish().unwrap();
+        assert!(report.publishes >= 1);
+        assert!(registry.version() >= 1);
+        let stats = registry.lifecycle_stats();
+        assert_eq!(stats.rejected, 0);
+        assert_eq!(stats.last_accepted, Some(true));
     }
 }

@@ -1,66 +1,157 @@
 //! Online serving + streaming ingest over [`crate::model::AnyModel`].
 //!
 //! This is the first subsystem where training and prediction run
-//! *concurrently* on the same model lineage. Three pieces compose it:
+//! *concurrently* on the same model lineage, and the first with an
+//! explicit failure domain: deadlines, admission control, crash-safe
+//! persistence, and a supervised worker pool. Six pieces compose it:
 //!
 //! * [`registry`] — [`ModelRegistry`]: an atomically hot-swappable,
-//!   monotonically versioned slot of immutable model snapshots. Readers
-//!   clone an `Arc` under a briefly-held read lock and then never touch
-//!   shared state again; publishers build the snapshot off to the side and
-//!   swap one pointer. Snapshots round-trip through the versioned
-//!   `BSVMMDL2` format ([`crate::model::io`]) bit-identically.
+//!   monotonically versioned **bounded history** of immutable model
+//!   snapshots. Readers clone an `Arc` under a briefly-held read lock and
+//!   then never touch shared state again; publishers build the snapshot
+//!   off to the side and swap one pointer. [`ModelRegistry::rollback`]
+//!   reinstates an older model *under a fresh stamp* (versions never move
+//!   backwards for readers), and [`ModelRegistry::publish_shadowed`]
+//!   gates candidates through shadow evaluation over live traffic.
 //! * [`batcher`] — [`MicroBatcher`]: the prediction front end. Concurrent
 //!   requests are coalesced by a queue + condvar into one
-//!   `decision_rows` call per wakeup, so every request rides the blocked
-//!   SoA tile engine instead of a scalar `decision_function` each.
+//!   `decision_rows` call per wakeup. Every request may carry a
+//!   **deadline**; a request whose deadline passes while queued is
+//!   answered with a typed overloaded error instead of ever blocking its
+//!   client past the budget.
 //! * [`ingest`] — [`ShardedIngest`]: the streaming-ingest pipeline.
 //!   Incoming labeled rows are partitioned round-robin across `S`
-//!   long-lived shard workers ([`crate::util::parallel::spawn_worker`]),
-//!   each running an independent `partial_fit` stream on a shard
-//!   estimator from the solver-agnostic factory
-//!   ([`crate::solver::AnyEstimator::new_shard`], `--solver bsgd|bdca`)
-//!   with a deterministic per-shard seed
-//!   ([`crate::solver::bsgd::shard_seed`]). [`merge`] periodically folds
+//!   long-lived **supervised** shard workers
+//!   ([`crate::util::parallel::spawn_worker`]), each running an
+//!   independent `partial_fit` stream with a deterministic per-shard seed
+//!   ([`crate::solver::bsgd::shard_seed`]). A panicking worker is caught,
+//!   its unacknowledged rows re-queued, and the shard healed from a fresh
+//!   estimator (bit-exact via WAL replay). [`merge`] periodically folds
 //!   the shard models into one budget-respecting model which is published
 //!   into the registry.
+//! * [`wal`] — crash-safe persistence: a CRC-framed append-only WAL of
+//!   acknowledged train rows plus atomic (tmp + rename) checkpoints of
+//!   the registry incumbent.
+//! * [`faults`] — [`FaultPlan`]: deterministic, row-count-scheduled fault
+//!   injection (worker panics, torn-write crashes, slow-client stalls)
+//!   behind an explicit test/bench hook.
+//! * [`protocol`] — the line-oriented wire front end, with socket
+//!   read/write timeouts and bounded line buffering so a dead or
+//!   malicious client can never pin a session thread.
 //!
 //! # Wire protocol (v1, line-oriented UTF-8 — see [`protocol`])
 //!
 //! ```text
 //! predict <i:v ...>          -> ok <+1|-1> v<version>
+//!                            -> overloaded predict deadline exceeded after <n> ms
 //! train <label> <i:v ...>    -> ok queued <buffered-rows>
+//!                            -> overloaded ingest queue at capacity; retry later
 //! flush                      -> ok published v<version>
 //! stats                      -> ok <json>
 //! quit                       -> ok bye              (connection closes)
 //! anything else              -> err <message>
 //! ```
 //!
+//! ## Reply vocabulary
+//!
+//! * `ok …` — the verb succeeded. For `train`, `ok queued n` means the
+//!   row is **buffered** (volatile); durability is acquired when the
+//!   ingest front drains the buffer into the pipeline, which (with a WAL
+//!   attached) appends + syncs the rows *before* dispatching them to
+//!   shard workers. A crash between `ok queued` and the drain may lose
+//!   those buffered rows; a crash after the drain never does.
+//! * `overloaded …` — a typed backpressure reply, *not* an error: the
+//!   request was well-formed but the tier declined it to protect itself
+//!   (predict deadline expired in queue, or ingest admission rejected the
+//!   batch). Clients should back off and retry.
+//! * `err …` — the line was malformed (bad arity, non-finite literal,
+//!   oversized line, non-UTF-8 bytes, unknown verb) or the operation
+//!   failed. The session stays usable; only that line is affected.
+//! * Socket timeouts: a session that neither sends nor receives within
+//!   the configured io-timeout is answered `err session idle timeout`
+//!   and closed — a stalled client costs one bounded thread-second, not
+//!   a pinned thread.
+//!
 //! Feature tokens use the LIBSVM convention: 1-based ascending indices,
-//! omitted features are zero. The serving dimension is fixed by the
-//! initial model (or, lacking one, by the largest index of the first
-//! `train` line) and every later row must fit inside it. Any parse or
-//! dispatch failure answers `err <reason>` on that line only; the session
-//! stays usable.
+//! omitted features are zero, values must be finite. The serving
+//! dimension is fixed by the initial model (or, lacking one, by the
+//! largest index of the first valid `train` line) and every later row
+//! must fit inside it.
+//!
+//! # Ingest admission ladder (degradation order)
+//!
+//! ```text
+//! queue depth:   0 ──────── shed ─────────── max
+//! decision:      accept  │  shed-maintenance  │  reject-train
+//!                        │  (defer publishes; │  (typed overloaded
+//!                        │   multi-merge      │   reply; client
+//!                        │   slack absorbs it)│   retries later)
+//! ```
+//!
+//! A publish-stall EWMA feeds the same ladder: expensive merges push the
+//! tier into shed-maintenance even at shallow queues. Deferred publishes
+//! are counted and flushed when pressure clears.
+//!
+//! # WAL / recovery invariants (see [`wal`])
+//!
+//! * **Ack = durable**: a row is acknowledged into the pipeline only
+//!   after its WAL frame is appended *and synced*; the WAL write strictly
+//!   precedes shard dispatch.
+//! * **WAL is the source of truth**: recovery
+//!   ([`ShardedIngest::recover`], `repro serve --recover`) replays the
+//!   *entire* WAL through a fresh deterministic pipeline. The checkpoint
+//!   (registry incumbent + rows covered, atomically written) only
+//!   provides instant availability while replay runs.
+//! * **Byte-identity**: deterministic per-shard seeds, round-robin
+//!   partitioning by global row index, and batch-boundary invariance make
+//!   the recovered state byte-identical (`BSVMMDL2` dump) to an
+//!   uninterrupted run over the same acked rows.
+//! * **Torn tails**: a crash mid-append leaves a partial/CRC-failing
+//!   frame; replay stops there and resume truncates it. Only
+//!   unacknowledged bytes are ever dropped — acked rows are never lost.
+//!
+//! # Registry lifecycle state machine
+//!
+//! ```text
+//!            publish / publish_shadowed(accept)
+//!   empty ────────────────────────────────────► serving v (incumbent)
+//!                                               │        ▲ │
+//!              shadow gate rejects candidate    │        │ │ rollback(n)
+//!              (incumbent keeps serving,        └────────┘ │ reinstates
+//!               stats.rejected += 1)             candidate  │ older model
+//!                                                dropped    ▼ under fresh
+//!                                                         serving v+1
+//! ```
+//!
+//! Versions are stamped under the publish lock and never reused: readers
+//! observe a strictly monotonic sequence even across rollbacks and
+//! rejected candidates. Shadow evaluation scores a candidate against the
+//! incumbent over a sliding window of recent live predict rows; the
+//! decision (agreement, accepted/rejected, rollback count) is visible in
+//! the `stats` JSON and in `BENCH_resilience.json`.
 //!
 //! # Snapshot / publish lifecycle
 //!
 //! ```text
-//!   rows ──round-robin──► shard 0..S-1 workers (partial_fit, per-shard seed)
-//!                               │
-//!        every publish_every rows (or an explicit flush):
+//!   rows ──[WAL append+sync]──round-robin──► shard 0..S-1 workers
+//!                               │             (partial_fit, per-shard seed,
+//!                               │              panics caught + healed)
+//!        every publish_every rows (or an explicit flush,
+//!        unless admission is shedding maintenance):
 //!                               │ snapshot command, queued AFTER the
 //!                               │ shard's pending batches (channel order)
 //!                               ▼
 //!        weighted merge (weights ∝ shard SGD steps)
 //!        budget enforced via the configured maintenance strategy
-//!        scale folded  ──►  registry.publish(model)  [one Arc swap]
+//!        scale folded  ──►  registry publish (shadow-gated if enabled)
+//!                      ──►  checkpoint written atomically (if enabled)
 //! ```
 //!
 //! Readers are never paused: a publish builds the merged model entirely
 //! off to the side and installs it with a single pointer swap, so the
 //! "publish stall" is an *ingest-side* pause only (shard drain + merge),
-//! measured and reported by the bench harness
-//! (`experiments::serve_bench`, `BENCH_serve.json`).
+//! measured and reported by the bench harnesses
+//! (`experiments::serve_bench`, `experiments::resilience_bench`).
 //!
 //! # Shard-merge semantics (invariants, in the style of `model/store.rs`)
 //!
@@ -83,25 +174,35 @@
 //!   allocation — no torn reads).
 
 pub mod batcher;
+pub mod faults;
 pub mod ingest;
 pub mod merge;
 pub mod protocol;
 pub mod registry;
+pub mod wal;
 
-pub use batcher::{BatcherClient, BatcherOptions, BatcherStats, MicroBatcher, PredictReply};
-pub use ingest::{IngestReport, ShardedIngest};
+pub use batcher::{
+    BatcherClient, BatcherOptions, BatcherStats, MicroBatcher, PredictError, PredictReply,
+};
+pub use faults::{FaultPlan, WorkerPanic};
+pub use ingest::{
+    Admission, IngestHealth, IngestReport, RecoveryReport, ShardedIngest,
+};
 pub use merge::merge_shard_models;
 pub use protocol::{serve_connections, serve_session, ServeState};
-pub use registry::{ModelRegistry, ModelSnapshot};
+pub use registry::{
+    LifecycleStats, ModelRegistry, ModelSnapshot, ShadowOutcome, ShadowPolicy,
+};
+pub use wal::{WalWriter, CHECKPOINT_FILE, WAL_FILE};
 
 use anyhow::{ensure, Result};
 
 use crate::solver::{SolverSpec, SvmConfig};
 
 /// Configuration of the serving subsystem (`repro serve`): the request
-/// front end, the ingest pipeline, and the model hyperparameters used for
-/// models trained *by* the pipeline (ignored when serving a pre-trained
-/// model that is never updated).
+/// front end, the ingest pipeline, the resilience knobs, and the model
+/// hyperparameters used for models trained *by* the pipeline (ignored
+/// when serving a pre-trained model that is never updated).
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
     /// TCP port for `repro serve --port`. The listener binds loopback
@@ -129,6 +230,27 @@ pub struct ServeConfig {
     pub seed: u64,
     /// Binary solver the ingest shards train with (`--solver bsgd|bdca`).
     pub solver: SolverSpec,
+    /// Ingest queue bound in rows: at half this depth cadence publishes
+    /// are deferred (shed-maintenance), at the full depth train batches
+    /// are rejected with a typed overloaded reply. 0 = unbounded.
+    pub queue_rows: usize,
+    /// Predict deadline in milliseconds: requests still queued past this
+    /// budget get a typed overloaded reply. 0 = no deadline.
+    pub predict_deadline_ms: u64,
+    /// Socket read/write timeout in seconds; an idle or stalled client is
+    /// disconnected after this long. 0 = no timeout.
+    pub io_timeout_secs: u64,
+    /// Directory for the WAL + checkpoint pair (crash-safe persistence).
+    /// `None` = volatile ingest (no WAL, no checkpoint).
+    pub wal_dir: Option<String>,
+    /// Recover from the `wal_dir` pair at startup instead of starting
+    /// fresh (requires `wal_dir`).
+    pub recover: bool,
+    /// Gate publishes through shadow evaluation against the incumbent
+    /// over live predict traffic.
+    pub shadow_eval: bool,
+    /// Registry versions retained for rollback (min 1).
+    pub history: usize,
     /// Hyperparameters for pipeline-trained models.
     pub svm: SvmConfig,
 }
@@ -145,6 +267,13 @@ impl Default for ServeConfig {
             threads: 0,
             seed: 0,
             solver: SolverSpec::Bsgd,
+            queue_rows: 0,
+            predict_deadline_ms: 0,
+            io_timeout_secs: 0,
+            wal_dir: None,
+            recover: false,
+            shadow_eval: false,
+            history: registry::DEFAULT_HISTORY,
             svm: SvmConfig::default(),
         }
     }
@@ -160,6 +289,11 @@ impl ServeConfig {
         ensure!(self.publish_every >= 1, "publish_every must be at least 1");
         ensure!(self.batch_max_rows >= 1, "batch_max_rows must be at least 1");
         ensure!(self.ingest_chunk >= 1, "ingest_chunk must be at least 1");
+        ensure!(self.history >= 1, "registry history must retain at least one version");
+        ensure!(
+            !self.recover || self.wal_dir.is_some(),
+            "--recover needs --wal-dir (nothing to recover from)"
+        );
         self.svm.validate()?;
         ensure!(
             self.svm.budget >= 2,
@@ -186,6 +320,8 @@ mod tests {
             ServeConfig { publish_every: 0, ..Default::default() },
             ServeConfig { batch_max_rows: 0, ..Default::default() },
             ServeConfig { ingest_chunk: 0, ..Default::default() },
+            ServeConfig { history: 0, ..Default::default() },
+            ServeConfig { recover: true, wal_dir: None, ..Default::default() },
             ServeConfig {
                 svm: SvmConfig::new().budget(1),
                 ..Default::default()

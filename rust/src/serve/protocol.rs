@@ -1,5 +1,5 @@
 //! Line protocol + session loop of `repro serve` (see the [`super`]
-//! module docs for the full wire grammar).
+//! module docs for the full wire grammar and reply vocabulary).
 //!
 //! The session loop is generic over `BufRead`/`Write`, so the same code
 //! path answers a TCP connection, an in-memory replay (the offline
@@ -9,20 +9,35 @@
 //! front (row buffer + shard pipeline) sits behind one mutex — training
 //! rows are cheap to buffer and the pipeline itself fans out to shard
 //! workers immediately.
+//!
+//! Robustness: request lines are read through a **bounded** buffer
+//! ([`MAX_LINE_BYTES`]) so an attacker cannot balloon memory with one
+//! endless line (the oversized line is consumed and answered `err …`,
+//! the session survives); non-UTF-8 bytes answer `err …` per line
+//! instead of killing the session; socket read/write timeouts (set by
+//! [`serve_connections`] from the state's io-timeout) turn a stalled or
+//! dead client into a bounded `err session idle timeout` + disconnect,
+//! never a pinned thread.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpListener;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
 use crate::data::Dataset;
 use crate::util::json::Json;
 
-use super::batcher::BatcherClient;
-use super::ingest::ShardedIngest;
+use super::batcher::{BatcherClient, PredictError};
+use super::ingest::{Admission, ShardedIngest};
 use super::registry::ModelRegistry;
+
+/// Hard cap on one request line (bytes, newline excluded). Longer lines
+/// are consumed (the session stays line-synchronized) but answered with
+/// a typed error.
+pub const MAX_LINE_BYTES: usize = 64 * 1024;
 
 /// Buffering ingest front: accumulates `train` rows and hands them to the
 /// shard pipeline in `chunk`-row batches (plus on every explicit flush).
@@ -80,6 +95,10 @@ pub struct ServeState {
     /// predict path never touches the ingest mutex — a publish stall on
     /// the ingest side must not delay readers.
     dim: AtomicUsize,
+    /// Per-request predict deadline (`None` = wait however long).
+    predict_deadline: Option<Duration>,
+    /// Socket read/write timeout applied by [`serve_connections`].
+    io_timeout: Option<Duration>,
 }
 
 impl ServeState {
@@ -104,7 +123,28 @@ impl ServeState {
                 chunk: chunk.max(1),
             }),
             dim: AtomicUsize::new(dim),
+            predict_deadline: None,
+            io_timeout: None,
         }
+    }
+
+    /// Expire queued predict requests after `deadline` with a typed
+    /// `overloaded` reply (`None` = no deadline).
+    pub fn with_predict_deadline(mut self, deadline: Option<Duration>) -> Self {
+        self.predict_deadline = deadline;
+        self
+    }
+
+    /// Disconnect sessions whose socket stalls for `timeout`
+    /// (`None` = no socket timeouts).
+    pub fn with_io_timeout(mut self, timeout: Option<Duration>) -> Self {
+        self.io_timeout = timeout;
+        self
+    }
+
+    /// The configured socket timeout (applied per accepted connection).
+    pub fn io_timeout(&self) -> Option<Duration> {
+        self.io_timeout
     }
 
     /// The serving dimension (0 until pinned). Lock-free; falls back to
@@ -127,7 +167,9 @@ impl ServeState {
 }
 
 /// Parse LIBSVM feature tokens (`idx:val`, 1-based ascending convention)
-/// into a dense row of dimension `d`.
+/// into a dense row of dimension `d`. Values must be finite — NaN or
+/// infinite literals poison every downstream kernel evaluation, so they
+/// are rejected at the wire.
 fn parse_features<'a>(
     tokens: impl Iterator<Item = &'a str>,
     d: usize,
@@ -143,6 +185,9 @@ fn parse_features<'a>(
             return Err(format!("feature index {idx} exceeds the serving dimension {d}"));
         }
         let val: f32 = v.parse().map_err(|_| format!("bad feature value '{v}'"))?;
+        if !val.is_finite() {
+            return Err(format!("non-finite feature value '{v}'"));
+        }
         row[idx - 1] = val;
     }
     Ok(row)
@@ -157,7 +202,8 @@ fn max_index<'a>(tokens: impl Iterator<Item = &'a str>) -> usize {
 }
 
 /// Answer one request line (already trimmed, non-empty, not `quit`).
-/// Infallible by contract: protocol failures become `err ...` responses.
+/// Infallible by contract: protocol failures become `err ...` responses
+/// and backpressure becomes `overloaded ...` responses.
 pub fn handle_line(state: &ServeState, line: &str) -> String {
     match dispatch(state, line) {
         Ok(resp) => resp,
@@ -175,18 +221,37 @@ fn dispatch(state: &ServeState, line: &str) -> Result<String, String> {
                 return Err("no model published yet".to_string());
             }
             let row = parse_features(parts, d)?;
-            let reply = state.client.predict(&row, d).map_err(|e| e.to_string())?;
-            let label = if reply.labels[0] > 0.0 { "+1" } else { "-1" };
-            Ok(format!("ok {label} v{}", reply.version))
+            match state.client.predict_deadline(&row, d, state.predict_deadline) {
+                Ok(reply) => {
+                    // Live traffic feeds the shadow-evaluation window.
+                    state.registry.record_live_rows(&row, d);
+                    let label = if reply.labels[0] > 0.0 { "+1" } else { "-1" };
+                    Ok(format!("ok {label} v{}", reply.version))
+                }
+                Err(PredictError::Overloaded { waited_ms }) => {
+                    Ok(format!("overloaded predict deadline exceeded after {waited_ms} ms"))
+                }
+                Err(PredictError::Failed(msg)) => Err(msg),
+            }
         }
         "train" => {
             let label_tok = parts.next().ok_or("train needs a label")?;
             let label: f64 =
                 label_tok.parse().map_err(|_| format!("bad label '{label_tok}'"))?;
+            if !label.is_finite() {
+                return Err(format!("non-finite label '{label_tok}'"));
+            }
             let label = if label > 0.0 { 1.0f32 } else { -1.0f32 };
             let mut front = state.ingest.lock().expect("ingest lock poisoned");
             if front.pipeline.is_none() {
                 return Err("ingest is disabled on this server".to_string());
+            }
+            // Admission pre-check: at capacity the row is refused before
+            // buffering, so `ok queued` is never followed by silent loss.
+            if let Some(p) = front.pipeline.as_ref() {
+                if p.admission_state() == Admission::RejectTrain {
+                    return Ok("overloaded ingest queue at capacity; retry later".to_string());
+                }
             }
             if front.dim == 0 {
                 // First labeled row pins the serving dimension — but only
@@ -208,7 +273,17 @@ fn dispatch(state: &ServeState, line: &str) -> Result<String, String> {
             }
             front.buf_y.push(label);
             if front.buffered_rows() >= front.chunk {
-                front.drain_to_pipeline()?;
+                if let Err(msg) = front.drain_to_pipeline() {
+                    // Admission turned reject between the pre-check and
+                    // the drain: rows stay buffered (at-least-once), the
+                    // client gets the typed backpressure reply.
+                    if msg.contains("overloaded") {
+                        return Ok(
+                            "overloaded ingest queue at capacity; retry later".to_string()
+                        );
+                    }
+                    return Err(msg);
+                }
             }
             Ok(format!("ok queued {}", front.buffered_rows()))
         }
@@ -221,41 +296,150 @@ fn dispatch(state: &ServeState, line: &str) -> Result<String, String> {
             Ok(format!("ok published v{version}"))
         }
         "stats" => {
-            let (dim, buffered, ingested) = {
+            let (dim, buffered, ingested, health) = {
                 let front = state.ingest.lock().expect("ingest lock poisoned");
                 (
                     front.dim,
                     front.buffered_rows(),
                     front.pipeline.as_ref().map(|p| p.rows_ingested()).unwrap_or(0),
+                    front.pipeline.as_ref().map(|p| p.health()),
                 )
             };
             let (version, num_sv) = match state.registry.current() {
                 Some(s) => (s.version(), s.model().num_sv()),
                 None => (0, 0),
             };
-            let json = Json::object(vec![
+            let life = state.registry.lifecycle_stats();
+            let bstats = state.client.stats();
+            let mut pairs = vec![
                 ("version", Json::num(version as f64)),
                 ("num_sv", Json::num(num_sv as f64)),
                 ("dim", Json::num(dim as f64)),
                 ("buffered_rows", Json::num(buffered as f64)),
                 ("ingested_rows", Json::num(ingested as f64)),
-            ]);
-            Ok(format!("ok {json}"))
+                ("history_len", Json::num(state.registry.history_len() as f64)),
+                ("published", Json::num(life.published as f64)),
+                ("rollbacks", Json::num(life.rollbacks as f64)),
+                ("shadow_rejected", Json::num(life.rejected as f64)),
+                (
+                    "shadow_last_agreement",
+                    life.last_agreement.map(Json::num).unwrap_or(Json::Null),
+                ),
+                (
+                    "shadow_last_accepted",
+                    life.last_accepted.map(Json::Bool).unwrap_or(Json::Null),
+                ),
+                (
+                    "shadow_window_rows",
+                    Json::num(state.registry.shadow_window_rows() as f64),
+                ),
+                ("predict_expired", Json::num(bstats.expired as f64)),
+            ];
+            if let Some(h) = health {
+                pairs.push(("admission", Json::str(h.admission.as_str())));
+                pairs.push(("pending_rows", Json::num(h.pending_rows as f64)));
+                pairs.push(("worker_restarts", Json::num(h.worker_restarts as f64)));
+                pairs.push(("rows_requeued", Json::num(h.rows_requeued as f64)));
+                pairs.push(("rejected_rows", Json::num(h.rejected_rows as f64)));
+                pairs.push(("deferred_publishes", Json::num(h.deferred_publishes as f64)));
+                pairs.push(("wal_rows", Json::num(h.wal_rows as f64)));
+            }
+            Ok(format!("ok {}", Json::object(pairs)))
         }
         other => Err(format!("unknown command '{other}'")),
     }
 }
 
+/// Read one line of at most `max` bytes. Returns `None` at EOF. The
+/// returned flag is `true` when the line exceeded `max`: the overflow is
+/// consumed through the terminating newline (keeping the stream
+/// line-synchronized) but never buffered — memory stays bounded no
+/// matter what the peer sends.
+fn read_bounded_line<R: BufRead>(
+    reader: &mut R,
+    max: usize,
+) -> std::io::Result<Option<(Vec<u8>, bool)>> {
+    let mut line: Vec<u8> = Vec::new();
+    let mut truncated = false;
+    loop {
+        let available = match reader.fill_buf() {
+            Ok(buf) => buf,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        };
+        if available.is_empty() {
+            // EOF: a final unterminated line still counts if anything
+            // was read for it.
+            return if line.is_empty() && !truncated {
+                Ok(None)
+            } else {
+                Ok(Some((line, truncated)))
+            };
+        }
+        match available.iter().position(|&b| b == b'\n') {
+            Some(pos) => {
+                if !truncated {
+                    let take = max.saturating_sub(line.len()).min(pos);
+                    line.extend_from_slice(&available[..take]);
+                    if take < pos {
+                        truncated = true;
+                    }
+                }
+                reader.consume(pos + 1);
+                return Ok(Some((line, truncated)));
+            }
+            None => {
+                let n = available.len();
+                if !truncated {
+                    let take = max.saturating_sub(line.len()).min(n);
+                    line.extend_from_slice(&available[..take]);
+                    if take < n {
+                        truncated = true;
+                    }
+                }
+                reader.consume(n);
+            }
+        }
+    }
+}
+
 /// Run one session: read request lines, answer each, stop at `quit` or
-/// EOF. Works for TCP streams and in-memory buffers alike.
+/// EOF. Works for TCP streams and in-memory buffers alike. A socket
+/// read/write timeout (see [`ServeState::with_io_timeout`]) surfaces
+/// here as `err session idle timeout` + disconnect; oversized and
+/// non-UTF-8 lines are answered per line and the session survives.
 pub fn serve_session<R: BufRead, W: Write>(
     state: &ServeState,
-    reader: R,
+    mut reader: R,
     mut writer: W,
 ) -> Result<()> {
-    for line in reader.lines() {
-        let line = line.context("session read failed")?;
-        let t = line.trim();
+    loop {
+        let (bytes, truncated) = match read_bounded_line(&mut reader, MAX_LINE_BYTES) {
+            Ok(Some(v)) => v,
+            Ok(None) => break, // EOF
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                // Stalled client: one bounded farewell, then hang up — a
+                // dead peer must never pin this thread.
+                let _ = writeln!(writer, "err session idle timeout");
+                let _ = writer.flush();
+                break;
+            }
+            Err(e) => return Err(e).context("session read failed"),
+        };
+        if truncated {
+            writeln!(writer, "err line exceeds {MAX_LINE_BYTES} bytes")?;
+            writer.flush()?;
+            continue;
+        }
+        let Ok(text) = std::str::from_utf8(&bytes) else {
+            writeln!(writer, "err request is not valid UTF-8")?;
+            writer.flush()?;
+            continue;
+        };
+        let t = text.trim();
         if t.is_empty() {
             continue;
         }
@@ -271,7 +455,9 @@ pub fn serve_session<R: BufRead, W: Write>(
 }
 
 /// Accept loop over a bound listener: one thread per connection, all
-/// sharing `state`. `max_connections` bounds the number of accepted
+/// sharing `state`. Each accepted socket gets the state's read/write
+/// timeouts, so stalled clients are disconnected instead of pinning
+/// their session thread. `max_connections` bounds the number of accepted
 /// connections (for tests and graceful smoke runs); `None` serves
 /// forever.
 pub fn serve_connections(
@@ -291,6 +477,10 @@ pub fn serve_connections(
                 continue;
             }
         };
+        if let Some(t) = state.io_timeout() {
+            let _ = stream.set_read_timeout(Some(t));
+            let _ = stream.set_write_timeout(Some(t));
+        }
         accepted += 1;
         let state = Arc::clone(&state);
         // Reap finished sessions so a long-running server holds handles
@@ -371,8 +561,12 @@ mod tests {
             "predict 3:1",
             "predict x:1",
             "predict 1:abc",
+            "predict 1:NaN",
+            "predict 1:inf",
+            "predict 2:-Infinity",
             "bogus",
             "train +1 1:0.5", // ingest disabled on predict-only servers
+            "train NaN 1:0.5",
             "flush",
         ] {
             let resp = handle_line(&state, bad);
@@ -395,10 +589,50 @@ mod tests {
         assert!(lines[0].starts_with("ok "));
         assert!(lines[1].starts_with("ok {"));
         assert_eq!(lines[2], "ok bye");
-        // The stats payload is valid JSON.
+        // The stats payload is valid JSON with the lifecycle fields.
         let json = Json::parse(lines[1].trim_start_matches("ok ")).unwrap();
         assert_eq!(json.get("version").and_then(Json::as_usize), Some(1));
         assert_eq!(json.get("dim").and_then(Json::as_usize), Some(2));
+        assert_eq!(json.get("history_len").and_then(Json::as_usize), Some(1));
+        assert_eq!(json.get("rollbacks").and_then(Json::as_usize), Some(0));
+        assert_eq!(json.get("predict_expired").and_then(Json::as_usize), Some(0));
+        // The predict fed the shadow window.
+        assert_eq!(json.get("shadow_window_rows").and_then(Json::as_usize), Some(1));
+    }
+
+    #[test]
+    fn oversized_and_non_utf8_lines_answer_err_without_killing_the_session() {
+        let reg = registry_with_toy_model();
+        let (state, _batcher) = predict_only_state(reg);
+        let mut input: Vec<u8> = Vec::new();
+        // One line far past the cap (memory stays bounded; reply typed).
+        input.extend_from_slice(b"predict ");
+        input.extend(std::iter::repeat(b'a').take(MAX_LINE_BYTES + 100));
+        input.push(b'\n');
+        // Invalid UTF-8 bytes.
+        input.extend_from_slice(&[0xFF, 0xFE, 0x80, b'\n']);
+        // A normal request afterwards must still be served.
+        input.extend_from_slice(b"predict 1:1\nquit\n");
+        let mut out: Vec<u8> = Vec::new();
+        serve_session(&state, &input[..], &mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 4, "{text}");
+        assert!(lines[0].contains("err line exceeds"), "{}", lines[0]);
+        assert!(lines[1].contains("err request is not valid UTF-8"), "{}", lines[1]);
+        assert!(lines[2].starts_with("ok "), "{}", lines[2]);
+        assert_eq!(lines[3], "ok bye");
+    }
+
+    #[test]
+    fn zero_predict_deadline_answers_overloaded_not_err() {
+        let reg = registry_with_toy_model();
+        let batcher = MicroBatcher::new(Arc::clone(&reg), BatcherOptions::default());
+        let state = ServeState::new(reg, batcher.client(), None, 16)
+            .with_predict_deadline(Some(Duration::ZERO));
+        let resp = handle_line(&state, "predict 1:1");
+        assert!(resp.starts_with("overloaded "), "{resp}");
+        batcher.shutdown();
     }
 
     #[test]

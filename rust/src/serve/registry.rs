@@ -18,12 +18,37 @@
 //!   the effective-coefficient `BSVMMDL2` encoding) makes
 //!   [`ModelRegistry::dump`] → [`ModelRegistry::publish_from_file`]
 //!   bit-identical to the in-memory snapshot.
+//!
+//! Lifecycle (this file is the registry half of the serve tier's failure
+//! domain — see `serve/mod.rs` for the full state machine):
+//!
+//! * The registry keeps a **bounded version history** (newest at the
+//!   back). [`ModelRegistry::rollback`] reinstates the model from `n`
+//!   publishes ago **under a fresh version stamp** — version numbers are
+//!   strictly monotonic even across rollbacks, so concurrent readers
+//!   never observe time moving backwards.
+//! * [`ModelRegistry::publish_shadowed`] gates a candidate through
+//!   **shadow evaluation**: the candidate re-scores a sliding window of
+//!   recent live prediction rows (fed by the serving path via
+//!   [`ModelRegistry::record_live_rows`]) and is compared against the
+//!   incumbent's decisions on the same rows. If the candidate flips more
+//!   than [`ShadowPolicy::max_disagreement`] of the window, it is
+//!   auto-rejected and the incumbent keeps serving; the decision is
+//!   recorded in [`LifecycleStats`] and surfaced over the protocol's
+//!   `stats` verb.
 
-use std::sync::{Arc, RwLock};
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex, RwLock};
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::model::{io, AnyModel};
+
+/// Default number of retained versions (incumbent included).
+pub const DEFAULT_HISTORY: usize = 8;
+
+/// Default sliding-window capacity for shadow evaluation, in rows.
+pub const DEFAULT_SHADOW_WINDOW: usize = 256;
 
 /// One immutable published model with its monotonic version stamp.
 #[derive(Debug)]
@@ -44,41 +69,262 @@ impl ModelSnapshot {
     }
 }
 
-/// Atomic hot-swap registry of [`ModelSnapshot`]s.
+/// Shadow-evaluation gate for [`ModelRegistry::publish_shadowed`].
+#[derive(Debug, Clone, Copy)]
+pub struct ShadowPolicy {
+    /// Minimum live rows in the window before the gate can judge; below
+    /// this the candidate publishes unconditionally (cold start).
+    pub min_rows: usize,
+    /// Maximum tolerated fraction of window rows whose predicted label
+    /// flips relative to the incumbent before the candidate is rejected.
+    pub max_disagreement: f64,
+}
+
+impl Default for ShadowPolicy {
+    fn default() -> Self {
+        ShadowPolicy { min_rows: 32, max_disagreement: 0.25 }
+    }
+}
+
+/// Outcome of one shadowed publish attempt.
+#[derive(Debug, Clone, Copy)]
+pub struct ShadowOutcome {
+    /// Whether the candidate was installed.
+    pub accepted: bool,
+    /// The serving version after the decision (new stamp if accepted,
+    /// incumbent stamp if rejected).
+    pub version: u64,
+    /// Fraction of evaluated rows whose label agreed with the incumbent
+    /// (`None` when the gate could not judge — empty window or no
+    /// incumbent — and the candidate published unconditionally).
+    pub agreement: Option<f64>,
+    /// Live rows the gate scored.
+    pub evaluated_rows: usize,
+}
+
+/// Aggregate lifecycle counters (monotonic over the registry's lifetime).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LifecycleStats {
+    /// Successful publishes (including rollback re-publishes).
+    pub published: u64,
+    /// Candidates rejected by the shadow gate.
+    pub rejected: u64,
+    /// Rollback re-publishes.
+    pub rollbacks: u64,
+    /// Agreement of the most recent shadow evaluation, if any ran.
+    pub last_agreement: Option<f64>,
+    /// Whether the most recent shadowed candidate was accepted.
+    pub last_accepted: Option<bool>,
+}
+
+#[derive(Debug)]
+struct Inner {
+    /// Retained versions, oldest at the front, incumbent at the back.
+    history: VecDeque<Arc<ModelSnapshot>>,
+    /// Next stamp to hand out; never reused, even across rollback.
+    next_version: u64,
+    capacity: usize,
+    stats: LifecycleStats,
+}
+
 #[derive(Debug, Default)]
+struct ShadowWindow {
+    rows: VecDeque<f32>,
+    dim: usize,
+    capacity_rows: usize,
+}
+
+/// Atomic hot-swap registry of [`ModelSnapshot`]s with bounded history,
+/// rollback and shadow evaluation.
+#[derive(Debug)]
 pub struct ModelRegistry {
-    slot: RwLock<Option<Arc<ModelSnapshot>>>,
+    inner: RwLock<Inner>,
+    window: Mutex<ShadowWindow>,
+}
+
+impl Default for ModelRegistry {
+    fn default() -> Self {
+        Self::with_history(DEFAULT_HISTORY)
+    }
 }
 
 impl ModelRegistry {
-    /// Empty registry (no model until the first [`ModelRegistry::publish`]).
+    /// Empty registry (no model until the first [`ModelRegistry::publish`])
+    /// retaining [`DEFAULT_HISTORY`] versions.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Empty registry retaining up to `capacity` versions (min 1).
+    pub fn with_history(capacity: usize) -> Self {
+        ModelRegistry {
+            inner: RwLock::new(Inner {
+                history: VecDeque::new(),
+                next_version: 1,
+                capacity: capacity.max(1),
+                stats: LifecycleStats::default(),
+            }),
+            window: Mutex::new(ShadowWindow {
+                rows: VecDeque::new(),
+                dim: 0,
+                capacity_rows: DEFAULT_SHADOW_WINDOW,
+            }),
+        }
+    }
+
     /// Publish a model as the next version and return its stamp. The
     /// model's lazy scale is folded first (see the module docs); the swap
-    /// itself is a single pointer store under the write lock.
+    /// itself is a single push under the write lock.
     pub fn publish(&self, mut model: AnyModel) -> u64 {
         model.fold_scale();
-        let mut slot = self.slot.write().expect("registry lock poisoned");
-        // The next version is derived from the slot itself, under the same
-        // write lock that installs it — one source of truth, strictly
-        // monotonic even with racing publishers.
-        let version = slot.as_ref().map(|s| s.version).unwrap_or(0) + 1;
-        *slot = Some(Arc::new(ModelSnapshot { version, model }));
+        let mut inner = self.inner.write().expect("registry lock poisoned");
+        Self::install(&mut inner, model)
+    }
+
+    /// Install `model` (scale already folded) as the next version.
+    fn install(inner: &mut Inner, model: AnyModel) -> u64 {
+        let version = inner.next_version;
+        inner.next_version += 1;
+        inner.history.push_back(Arc::new(ModelSnapshot { version, model }));
+        while inner.history.len() > inner.capacity {
+            inner.history.pop_front();
+        }
+        inner.stats.published += 1;
         version
     }
 
     /// The current snapshot (`None` before the first publish). O(1): one
     /// read-lock acquisition and one `Arc` clone.
     pub fn current(&self) -> Option<Arc<ModelSnapshot>> {
-        self.slot.read().expect("registry lock poisoned").clone()
+        self.inner.read().expect("registry lock poisoned").history.back().cloned()
     }
 
     /// Version of the current snapshot (0 before the first publish).
     pub fn version(&self) -> u64 {
         self.current().map(|s| s.version).unwrap_or(0)
+    }
+
+    /// Number of retained versions (incumbent included).
+    pub fn history_len(&self) -> usize {
+        self.inner.read().expect("registry lock poisoned").history.len()
+    }
+
+    /// Lifecycle counters (publishes, shadow rejections, rollbacks).
+    pub fn lifecycle_stats(&self) -> LifecycleStats {
+        self.inner.read().expect("registry lock poisoned").stats
+    }
+
+    /// Reinstate the model from `n` publishes before the incumbent
+    /// (`rollback(1)` = previous version) **under a fresh version stamp**,
+    /// so reader-observed versions stay monotonic. Returns the new stamp.
+    /// Errors when the history does not reach back that far.
+    pub fn rollback(&self, n: usize) -> Result<u64> {
+        if n == 0 {
+            bail!("rollback(0) is a no-op: the incumbent is already serving");
+        }
+        let mut inner = self.inner.write().expect("registry lock poisoned");
+        let len = inner.history.len();
+        if n >= len {
+            bail!(
+                "rollback depth {n} exceeds retained history ({len} version{} held)",
+                if len == 1 { "" } else { "s" }
+            );
+        }
+        let model = inner.history[len - 1 - n].model.clone();
+        let version = Self::install(&mut inner, model);
+        inner.stats.rollbacks += 1;
+        Ok(version)
+    }
+
+    /// Record live prediction rows into the shadow sliding window.
+    /// `rows.len()` must be a multiple of `dim`; rows with a different
+    /// dimension than the window's current one reset the window (the
+    /// serving dimension changed, so older probes are meaningless).
+    pub fn record_live_rows(&self, rows: &[f32], dim: usize) {
+        if dim == 0 || rows.is_empty() || rows.len() % dim != 0 {
+            return;
+        }
+        let mut w = self.window.lock().expect("shadow window lock poisoned");
+        if w.dim != dim {
+            w.rows.clear();
+            w.dim = dim;
+        }
+        for &v in rows {
+            w.rows.push_back(v);
+        }
+        let cap = w.capacity_rows * dim;
+        while w.rows.len() > cap {
+            w.rows.pop_front();
+        }
+    }
+
+    /// Rows currently held in the shadow window.
+    pub fn shadow_window_rows(&self) -> usize {
+        let w = self.window.lock().expect("shadow window lock poisoned");
+        if w.dim == 0 {
+            0
+        } else {
+            w.rows.len() / w.dim
+        }
+    }
+
+    /// Gate `candidate` through shadow evaluation against the incumbent
+    /// over the live-row window. On acceptance the candidate becomes the
+    /// next version; on rejection the incumbent keeps serving and the
+    /// rejection is counted. Publishes unconditionally when the gate
+    /// cannot judge (no incumbent, dimension change, or fewer than
+    /// [`ShadowPolicy::min_rows`] window rows).
+    pub fn publish_shadowed(
+        &self,
+        mut candidate: AnyModel,
+        policy: &ShadowPolicy,
+    ) -> ShadowOutcome {
+        candidate.fold_scale();
+        // Copy the window out so scoring runs without holding any lock.
+        let (probe, dim) = {
+            let w = self.window.lock().expect("shadow window lock poisoned");
+            (w.rows.iter().copied().collect::<Vec<f32>>(), w.dim)
+        };
+        let incumbent = self.current();
+        let verdict = match &incumbent {
+            Some(inc)
+                if dim == candidate.dim()
+                    && inc.model.dim() == dim
+                    && probe.len() / dim.max(1) >= policy.min_rows.max(1) =>
+            {
+                let n = probe.len() / dim;
+                let old = inc.model.decision_rows(&probe, 1);
+                let new = candidate.decision_rows(&probe, 1);
+                let agree = old
+                    .iter()
+                    .zip(new.iter())
+                    .filter(|(a, b)| (**a >= 0.0) == (**b >= 0.0))
+                    .count();
+                Some((agree as f64 / n as f64, n))
+            }
+            _ => None,
+        };
+        let mut inner = self.inner.write().expect("registry lock poisoned");
+        match verdict {
+            Some((agreement, n)) if 1.0 - agreement > policy.max_disagreement => {
+                inner.stats.rejected += 1;
+                inner.stats.last_agreement = Some(agreement);
+                inner.stats.last_accepted = Some(false);
+                let version = inner.history.back().map(|s| s.version).unwrap_or(0);
+                ShadowOutcome { accepted: false, version, agreement: Some(agreement), evaluated_rows: n }
+            }
+            Some((agreement, n)) => {
+                let version = Self::install(&mut inner, candidate);
+                inner.stats.last_agreement = Some(agreement);
+                inner.stats.last_accepted = Some(true);
+                ShadowOutcome { accepted: true, version, agreement: Some(agreement), evaluated_rows: n }
+            }
+            None => {
+                let version = Self::install(&mut inner, candidate);
+                inner.stats.last_accepted = Some(true);
+                ShadowOutcome { accepted: true, version, agreement: None, evaluated_rows: 0 }
+            }
+        }
     }
 
     /// Dump the current snapshot in the `BSVMMDL2` format; returns the
@@ -119,11 +365,20 @@ mod tests {
         m
     }
 
+    /// A constant-sign model: decision(x) == bias for the zero SV.
+    fn constant_model(bias: f64) -> AnyModel {
+        let mut m = AnyModel::new(2, KernelSpec::gaussian(1.0), 1).unwrap();
+        m.push(&[0.0, 0.0], 0.0);
+        m.set_bias(bias);
+        m
+    }
+
     #[test]
     fn empty_registry_reports_no_model() {
         let reg = ModelRegistry::new();
         assert!(reg.current().is_none());
         assert_eq!(reg.version(), 0);
+        assert_eq!(reg.history_len(), 0);
         assert!(reg.dump(std::env::temp_dir().join("never.bsvm")).is_err());
     }
 
@@ -136,6 +391,78 @@ mod tests {
         assert_eq!(snap.version(), 2);
         assert_eq!(snap.model().bias(), 2.0);
         assert_eq!(reg.version(), 2);
+        assert_eq!(reg.lifecycle_stats().published, 2);
+    }
+
+    #[test]
+    fn history_is_bounded_and_rollback_reinstates_under_new_stamp() {
+        let reg = ModelRegistry::with_history(3);
+        for tag in 1..=5u64 {
+            reg.publish(tagged_model(tag));
+        }
+        // Capacity 3: versions 3, 4, 5 retained.
+        assert_eq!(reg.history_len(), 3);
+        // Rolling back past the retained window errors.
+        assert!(reg.rollback(3).is_err());
+        assert!(reg.rollback(0).is_err());
+        // rollback(2) reinstates version 3's contents under stamp 6.
+        let v = reg.rollback(2).unwrap();
+        assert_eq!(v, 6);
+        let snap = reg.current().unwrap();
+        assert_eq!(snap.version(), 6);
+        assert_eq!(snap.model().bias(), 3.0);
+        let stats = reg.lifecycle_stats();
+        assert_eq!(stats.rollbacks, 1);
+        assert_eq!(stats.published, 6);
+    }
+
+    #[test]
+    fn shadow_gate_rejects_degraded_candidate_and_keeps_incumbent() {
+        let reg = ModelRegistry::new();
+        reg.publish(constant_model(5.0)); // incumbent: always +1
+        // Live traffic: 64 probes (contents are irrelevant for a
+        // constant-sign model).
+        let rows: Vec<f32> = (0..128).map(|i| i as f32 * 0.01).collect();
+        reg.record_live_rows(&rows, 2);
+        assert_eq!(reg.shadow_window_rows(), 64);
+        let policy = ShadowPolicy { min_rows: 32, max_disagreement: 0.25 };
+        // A sign-flipped candidate disagrees on every window row.
+        let out = reg.publish_shadowed(constant_model(-5.0), &policy);
+        assert!(!out.accepted);
+        assert_eq!(out.version, 1, "incumbent must keep serving");
+        assert_eq!(out.agreement, Some(0.0));
+        assert_eq!(out.evaluated_rows, 64);
+        assert_eq!(reg.version(), 1);
+        let stats = reg.lifecycle_stats();
+        assert_eq!(stats.rejected, 1);
+        assert_eq!(stats.last_accepted, Some(false));
+        // An agreeing candidate sails through as version 2.
+        let out = reg.publish_shadowed(constant_model(4.0), &policy);
+        assert!(out.accepted);
+        assert_eq!(out.version, 2);
+        assert_eq!(out.agreement, Some(1.0));
+        assert_eq!(reg.version(), 2);
+    }
+
+    #[test]
+    fn shadow_gate_publishes_unconditionally_below_min_rows() {
+        let reg = ModelRegistry::new();
+        reg.publish(constant_model(1.0));
+        reg.record_live_rows(&[0.1, 0.2], 2); // one row < min_rows
+        let out = reg.publish_shadowed(constant_model(-1.0), &ShadowPolicy::default());
+        assert!(out.accepted);
+        assert_eq!(out.agreement, None);
+        assert_eq!(reg.version(), 2);
+    }
+
+    #[test]
+    fn shadow_window_is_bounded_and_resets_on_dimension_change() {
+        let reg = ModelRegistry::new();
+        let many: Vec<f32> = vec![0.5; 2 * (DEFAULT_SHADOW_WINDOW + 50)];
+        reg.record_live_rows(&many, 2);
+        assert_eq!(reg.shadow_window_rows(), DEFAULT_SHADOW_WINDOW);
+        reg.record_live_rows(&[0.1, 0.2, 0.3], 3);
+        assert_eq!(reg.shadow_window_rows(), 1);
     }
 
     #[test]

@@ -1,0 +1,486 @@
+//! Crash-safe persistence for the ingest pipeline: an append-only,
+//! CRC-framed write-ahead log of acknowledged train rows plus atomic
+//! snapshot checkpoints.
+//!
+//! ## Durability contract
+//!
+//! * A train row counts as **acknowledged** only once its WAL frame has
+//!   been appended and synced ([`WalWriter::append_rows`] syncs before
+//!   returning). Acked rows therefore survive any crash.
+//! * The WAL is the **authoritative row log**. Recovery replays the full
+//!   WAL through a fresh deterministic pipeline
+//!   ([`super::ShardedIngest::recover`]); byte-identity with an
+//!   uninterrupted run over the same rows follows from the pipeline's
+//!   determinism contract (fixed per-shard seeds, round-robin
+//!   partitioning by global row index, batch-boundary invariance).
+//! * A **checkpoint** pins the registry incumbent (model + version +
+//!   rows covered) for instant serve availability on recovery; it is an
+//!   optimization, never the source of truth. Checkpoints are written
+//!   atomically (tmp + rename) through the `model::io` writers, so a
+//!   crash mid-checkpoint leaves the previous checkpoint intact.
+//! * A crash mid-append leaves a **torn tail**: a partial frame or a
+//!   frame whose CRC does not match. [`replay`] stops at the first torn
+//!   frame (reporting it) and [`WalWriter::resume`] truncates it away —
+//!   only unacknowledged bytes are ever dropped.
+//!
+//! ## File formats
+//!
+//! WAL: magic `BSVMWAL1`, u64 LE dimension, then frames of
+//! `u32 LE len | u32 LE crc32(payload) | payload` where the payload is
+//! `f32 LE label` followed by `dim` `f32 LE` features (`len` must equal
+//! `4·(dim+1)`, which bounds every allocation during replay).
+//!
+//! Checkpoint: magic `BSVMCKP1`, u64 LE rows_covered, u64 LE version,
+//! u64 LE model_len, u32 LE crc32(model bytes), then the `BSVMMDL2`
+//! model body.
+
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::data::Dataset;
+use crate::model::{io as model_io, AnyModel};
+
+const WAL_MAGIC: &[u8; 8] = b"BSVMWAL1";
+const CKPT_MAGIC: &[u8; 8] = b"BSVMCKP1";
+
+/// Default WAL file name under a persistence directory.
+pub const WAL_FILE: &str = "serve.wal";
+
+/// Default checkpoint file name under a persistence directory.
+pub const CHECKPOINT_FILE: &str = "serve.ckpt";
+
+/// Upper bound on the dimension a WAL header may declare (mirrors the
+/// model-loader plausibility bound; keeps a corrupt header from driving
+/// replay allocations).
+const MAX_WAL_DIM: u64 = 1_000_000;
+
+/// Upper bound on a checkpoint's embedded model, in bytes.
+const MAX_CKPT_MODEL_BYTES: u64 = 1_000_000_000;
+
+const fn crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+const CRC_TABLE: [u32; 256] = crc_table();
+
+/// CRC-32 (IEEE 802.3 polynomial, the zlib/`cksum -o 3` convention).
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+/// Append-only writer over one WAL file. Every append is framed and
+/// synced before the call returns — the caller may acknowledge the rows
+/// the moment `append_rows` is back.
+#[derive(Debug)]
+pub struct WalWriter {
+    file: File,
+    path: PathBuf,
+    dim: usize,
+    rows: u64,
+}
+
+impl WalWriter {
+    /// Create a fresh WAL at `path` (truncating any existing file) for
+    /// rows of dimension `dim`.
+    pub fn create(path: impl AsRef<Path>, dim: usize) -> Result<Self> {
+        ensure!(dim > 0, "WAL dimension must be positive");
+        ensure!((dim as u64) <= MAX_WAL_DIM, "implausible WAL dimension {dim}");
+        let path = path.as_ref().to_path_buf();
+        let mut file = File::create(&path)
+            .with_context(|| format!("cannot create WAL {}", path.display()))?;
+        file.write_all(WAL_MAGIC)?;
+        file.write_all(&(dim as u64).to_le_bytes())?;
+        file.sync_data().context("WAL header sync failed")?;
+        Ok(WalWriter { file, path, dim, rows: 0 })
+    }
+
+    /// Reopen an existing WAL for appending: validates the header, scans
+    /// the frames, truncates a torn tail if one exists, and positions at
+    /// the end. Returns the writer plus what survived the scan.
+    pub fn resume(path: impl AsRef<Path>) -> Result<(Self, WalReplay)> {
+        let path = path.as_ref().to_path_buf();
+        let replayed = replay(&path, None)?;
+        let dim = replayed.rows.dim();
+        let mut file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .open(&path)
+            .with_context(|| format!("cannot reopen WAL {}", path.display()))?;
+        // Drop the torn tail: everything past the last valid frame is
+        // unacknowledged by construction.
+        file.set_len(replayed.valid_bytes).context("WAL tail truncation failed")?;
+        file.seek(SeekFrom::End(0))?;
+        file.sync_data().context("WAL truncation sync failed")?;
+        let rows = replayed.rows.len() as u64;
+        Ok((WalWriter { file, path, dim, rows }, replayed))
+    }
+
+    /// The file this writer appends to.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Rows framed and synced so far (including rows already in the file
+    /// when the writer was resumed).
+    pub fn rows(&self) -> u64 {
+        self.rows
+    }
+
+    /// Row dimension of this WAL.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Frame and durably append every row of `batch`. One buffered write
+    /// plus one sync for the whole batch; on return the rows are
+    /// acknowledged-safe.
+    pub fn append_rows(&mut self, batch: &Dataset) -> Result<()> {
+        if batch.is_empty() {
+            return Ok(());
+        }
+        ensure!(
+            batch.dim() == self.dim,
+            "batch dimension {} does not match the WAL dimension {}",
+            batch.dim(),
+            self.dim
+        );
+        let frame_len = 4 * (self.dim + 1);
+        let mut buf = Vec::with_capacity(batch.len() * (8 + frame_len));
+        let mut payload = Vec::with_capacity(frame_len);
+        for i in 0..batch.len() {
+            payload.clear();
+            payload.extend_from_slice(&batch.label(i).to_le_bytes());
+            for &v in batch.row(i) {
+                payload.extend_from_slice(&v.to_le_bytes());
+            }
+            buf.extend_from_slice(&(frame_len as u32).to_le_bytes());
+            buf.extend_from_slice(&crc32(&payload).to_le_bytes());
+            buf.extend_from_slice(&payload);
+        }
+        self.file.write_all(&buf).context("WAL append failed")?;
+        self.sync()?;
+        self.rows += batch.len() as u64;
+        Ok(())
+    }
+
+    /// Flush appended frames to stable storage.
+    pub fn sync(&mut self) -> Result<()> {
+        self.file.sync_data().context("WAL sync failed")
+    }
+
+    /// Fault-injection hook: write half a frame header and stop, exactly
+    /// what a crash mid-append leaves behind. The torn bytes are past the
+    /// last acknowledged frame, so recovery must drop them and nothing
+    /// else.
+    pub fn inject_torn_frame(&mut self) -> Result<()> {
+        let garbage = [(4 * (self.dim + 1)) as u8, 0, 0, 0, 0xDE];
+        self.file.write_all(&garbage).context("torn-frame write failed")?;
+        self.sync()
+    }
+}
+
+/// What a WAL scan recovered.
+#[derive(Debug)]
+pub struct WalReplay {
+    /// Every fully-framed, CRC-valid row, in append order.
+    pub rows: Dataset,
+    /// Whether the scan stopped at a torn/corrupt tail frame.
+    pub torn_tail: bool,
+    /// File offset just past the last valid frame (the truncation point
+    /// for [`WalWriter::resume`]).
+    pub valid_bytes: u64,
+}
+
+/// Scan a WAL file: header, then frames until EOF or the first torn or
+/// CRC-invalid frame. Corruption **after** the last valid frame is
+/// reported, not an error — that is the expected shape of a crash.
+/// A header that is missing, malformed, or disagrees with `expect_dim`
+/// is an error: that is not a torn tail, it is the wrong file.
+pub fn replay(path: impl AsRef<Path>, expect_dim: Option<usize>) -> Result<WalReplay> {
+    let path = path.as_ref();
+    let mut bytes = Vec::new();
+    File::open(path)
+        .with_context(|| format!("cannot open WAL {}", path.display()))?
+        .read_to_end(&mut bytes)
+        .with_context(|| format!("cannot read WAL {}", path.display()))?;
+    ensure!(bytes.len() >= 16, "WAL {} is shorter than its header", path.display());
+    ensure!(&bytes[..8] == WAL_MAGIC, "not a budgetsvm WAL (bad magic): {}", path.display());
+    let dim64 = u64::from_le_bytes(bytes[8..16].try_into().unwrap());
+    ensure!(dim64 > 0 && dim64 <= MAX_WAL_DIM, "implausible WAL dimension {dim64}");
+    let dim = dim64 as usize;
+    if let Some(d) = expect_dim {
+        ensure!(d == dim, "WAL dimension {dim} does not match the expected dimension {d}");
+    }
+    let frame_len = 4 * (dim + 1);
+    let mut rows = Dataset::empty("wal-replay", dim);
+    let mut pos = 16usize;
+    let mut torn = false;
+    let mut row = vec![0.0f32; dim];
+    while pos < bytes.len() {
+        if pos + 8 + frame_len > bytes.len() {
+            torn = true; // partial frame at the tail
+            break;
+        }
+        let len = u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap()) as usize;
+        let crc = u32::from_le_bytes(bytes[pos + 4..pos + 8].try_into().unwrap());
+        let payload = &bytes[pos + 8..pos + 8 + frame_len];
+        if len != frame_len || crc32(payload) != crc {
+            torn = true; // corrupt frame: stop, keep what came before
+            break;
+        }
+        let label = f32::from_le_bytes(payload[..4].try_into().unwrap());
+        for (j, v) in row.iter_mut().enumerate() {
+            *v = f32::from_le_bytes(payload[4 + 4 * j..8 + 4 * j].try_into().unwrap());
+        }
+        rows.push_row(&row, label);
+        pos += 8 + frame_len;
+    }
+    Ok(WalReplay { rows, torn_tail: torn, valid_bytes: pos as u64 })
+}
+
+/// One decoded checkpoint.
+#[derive(Debug)]
+pub struct Checkpoint {
+    /// WAL rows that had been ingested when this checkpoint was written.
+    pub rows_covered: u64,
+    /// Registry version of the pinned model.
+    pub version: u64,
+    /// The pinned incumbent (scale folded, as published).
+    pub model: AnyModel,
+}
+
+/// Atomically write a checkpoint: serialize to `<path>.tmp`, sync,
+/// rename over `path`. A crash at any point leaves either the previous
+/// checkpoint or the new one — never a torn file at `path`.
+pub fn write_checkpoint(
+    path: impl AsRef<Path>,
+    model: &AnyModel,
+    rows_covered: u64,
+    version: u64,
+) -> Result<()> {
+    let path = path.as_ref();
+    let mut model_bytes = Vec::new();
+    model_io::save_any_writer(model, &mut model_bytes)?;
+    let mut out = Vec::with_capacity(36 + model_bytes.len());
+    out.extend_from_slice(CKPT_MAGIC);
+    out.extend_from_slice(&rows_covered.to_le_bytes());
+    out.extend_from_slice(&version.to_le_bytes());
+    out.extend_from_slice(&(model_bytes.len() as u64).to_le_bytes());
+    out.extend_from_slice(&crc32(&model_bytes).to_le_bytes());
+    out.extend_from_slice(&model_bytes);
+    let tmp = path.with_extension("ckpt.tmp");
+    {
+        let mut f = File::create(&tmp)
+            .with_context(|| format!("cannot create checkpoint tmp {}", tmp.display()))?;
+        f.write_all(&out).context("checkpoint write failed")?;
+        f.sync_data().context("checkpoint sync failed")?;
+    }
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("cannot install checkpoint {}", path.display()))?;
+    Ok(())
+}
+
+/// Read and verify a checkpoint written by [`write_checkpoint`].
+pub fn read_checkpoint(path: impl AsRef<Path>) -> Result<Checkpoint> {
+    let path = path.as_ref();
+    let mut bytes = Vec::new();
+    File::open(path)
+        .with_context(|| format!("cannot open checkpoint {}", path.display()))?
+        .read_to_end(&mut bytes)
+        .with_context(|| format!("cannot read checkpoint {}", path.display()))?;
+    ensure!(bytes.len() >= 36, "checkpoint {} is shorter than its header", path.display());
+    ensure!(&bytes[..8] == CKPT_MAGIC, "not a budgetsvm checkpoint (bad magic)");
+    let rows_covered = u64::from_le_bytes(bytes[8..16].try_into().unwrap());
+    let version = u64::from_le_bytes(bytes[16..24].try_into().unwrap());
+    let model_len = u64::from_le_bytes(bytes[24..32].try_into().unwrap());
+    let crc = u32::from_le_bytes(bytes[32..36].try_into().unwrap());
+    ensure!(model_len <= MAX_CKPT_MODEL_BYTES, "implausible checkpoint model size {model_len}");
+    ensure!(
+        bytes.len() as u64 == 36 + model_len,
+        "checkpoint length {} disagrees with its declared model size {model_len}",
+        bytes.len()
+    );
+    let model_bytes = &bytes[36..];
+    ensure!(crc32(model_bytes) == crc, "checkpoint CRC mismatch (corrupt file)");
+    let model = model_io::load_any_reader(model_bytes)
+        .context("checkpoint model body failed to load")?;
+    Ok(Checkpoint { rows_covered, version, model })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::KernelSpec;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("budgetsvm-wal");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn toy_batch(n: usize, dim: usize, salt: f32) -> Dataset {
+        let mut ds = Dataset::empty("toy", dim);
+        for i in 0..n {
+            let row: Vec<f32> = (0..dim).map(|j| salt + i as f32 + j as f32 * 0.5).collect();
+            ds.push_row(&row, if i % 2 == 0 { 1.0 } else { -1.0 });
+        }
+        ds
+    }
+
+    #[test]
+    fn crc32_matches_the_reference_vector() {
+        // The canonical IEEE check value.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn append_then_replay_round_trips_bit_exactly() {
+        let path = tmp("roundtrip.wal");
+        let mut w = WalWriter::create(&path, 3).unwrap();
+        let a = toy_batch(5, 3, 0.25);
+        let b = toy_batch(2, 3, -7.5);
+        w.append_rows(&a).unwrap();
+        w.append_rows(&b).unwrap();
+        assert_eq!(w.rows(), 7);
+        let back = replay(&path, Some(3)).unwrap();
+        assert!(!back.torn_tail);
+        assert_eq!(back.rows.len(), 7);
+        for i in 0..5 {
+            assert_eq!(back.rows.row(i), a.row(i));
+            assert_eq!(back.rows.label(i), a.label(i));
+        }
+        for i in 0..2 {
+            assert_eq!(back.rows.row(5 + i), b.row(i));
+            assert_eq!(back.rows.label(5 + i), b.label(i));
+        }
+        // Dimension mismatch is a typed error, not a silent mis-read.
+        assert!(replay(&path, Some(4)).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn torn_tail_is_detected_and_resume_truncates_it() {
+        let path = tmp("torn.wal");
+        let mut w = WalWriter::create(&path, 2).unwrap();
+        w.append_rows(&toy_batch(4, 2, 1.0)).unwrap();
+        w.inject_torn_frame().unwrap();
+        drop(w);
+        let back = replay(&path, Some(2)).unwrap();
+        assert!(back.torn_tail, "the injected tear must be seen");
+        assert_eq!(back.rows.len(), 4, "all acked rows survive the tear");
+        // Resume drops the tear and appends cleanly after it.
+        let (mut w, replayed) = WalWriter::resume(&path).unwrap();
+        assert_eq!(replayed.rows.len(), 4);
+        assert_eq!(w.rows(), 4);
+        assert_eq!(w.dim(), 2);
+        w.append_rows(&toy_batch(3, 2, 9.0)).unwrap();
+        let healed = replay(&path, Some(2)).unwrap();
+        assert!(!healed.torn_tail);
+        assert_eq!(healed.rows.len(), 7);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn corrupt_frame_stops_replay_at_the_last_valid_row() {
+        let path = tmp("bitflip.wal");
+        let mut w = WalWriter::create(&path, 2).unwrap();
+        w.append_rows(&toy_batch(3, 2, 0.0)).unwrap();
+        drop(w);
+        let mut bytes = std::fs::read(&path).unwrap();
+        // Flip one payload bit of the second frame: header(16) +
+        // frame0(8+12) + frame1 header(8) + first payload byte.
+        let idx = 16 + 20 + 8;
+        bytes[idx] ^= 0x01;
+        std::fs::write(&path, &bytes).unwrap();
+        let back = replay(&path, Some(2)).unwrap();
+        assert!(back.torn_tail);
+        assert_eq!(back.rows.len(), 1, "rows after the corrupt frame are dropped");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn wal_header_corruption_is_a_typed_error() {
+        let path = tmp("header.wal");
+        std::fs::write(&path, b"short").unwrap();
+        assert!(replay(&path, None).is_err());
+        std::fs::write(&path, b"WRONGMAGxxxxxxxx").unwrap();
+        assert!(replay(&path, None).is_err());
+        let mut huge = Vec::new();
+        huge.extend_from_slice(WAL_MAGIC);
+        huge.extend_from_slice(&u64::MAX.to_le_bytes());
+        std::fs::write(&path, &huge).unwrap();
+        assert!(replay(&path, None).is_err(), "absurd dimension must not drive allocations");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn checkpoint_round_trips_the_model_bit_exactly() {
+        let mut m = AnyModel::new(3, KernelSpec::gaussian(0.8), 3).unwrap();
+        m.push(&[1.0, -0.5, 0.25], 0.75);
+        m.push(&[0.0, 2.0, -1.0], -0.5);
+        m.set_bias(-0.125);
+        m.fold_scale();
+        let path = tmp("ckpt.bin");
+        write_checkpoint(&path, &m, 1234, 7).unwrap();
+        let back = read_checkpoint(&path).unwrap();
+        assert_eq!(back.rows_covered, 1234);
+        assert_eq!(back.version, 7);
+        assert_eq!(back.model.num_sv(), 2);
+        for probe in [[0.0f32, 0.0, 0.0], [0.3, -0.7, 1.1]] {
+            assert_eq!(
+                back.model.decision(&probe).to_bits(),
+                m.decision(&probe).to_bits()
+            );
+        }
+        // No stray tmp file is left behind.
+        assert!(!path.with_extension("ckpt.tmp").exists());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn checkpoint_corruption_is_always_a_typed_error() {
+        let mut m = AnyModel::new(2, KernelSpec::linear(), 1).unwrap();
+        m.push(&[1.0, 0.0], 1.0);
+        let path = tmp("ckpt-corrupt.bin");
+        write_checkpoint(&path, &m, 5, 1).unwrap();
+        let good = std::fs::read(&path).unwrap();
+        // Truncation at every section boundary plus mid-body.
+        for cut in [0usize, 7, 8, 16, 24, 32, 36, good.len() - 1] {
+            std::fs::write(&path, &good[..cut]).unwrap();
+            assert!(read_checkpoint(&path).is_err(), "cut at {cut}");
+        }
+        // A flipped model byte fails the CRC.
+        let mut flipped = good.clone();
+        let last = flipped.len() - 1;
+        flipped[last] ^= 0x80;
+        std::fs::write(&path, &flipped).unwrap();
+        let err = read_checkpoint(&path).unwrap_err().to_string();
+        assert!(err.contains("CRC"), "{err}");
+        // Trailing bytes are rejected too.
+        let mut extended = good.clone();
+        extended.push(0);
+        std::fs::write(&path, &extended).unwrap();
+        assert!(read_checkpoint(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

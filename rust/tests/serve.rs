@@ -1,16 +1,23 @@
 //! Integration tests of the serving subsystem: offline replay end-to-end
 //! (the acceptance path of `repro serve --replay`), mid-stream snapshot
 //! persistence, sharded-ingest determinism through the public surface,
-//! and a loopback TCP smoke test.
+//! a loopback TCP smoke test, and the fault-tolerance acceptance paths —
+//! protocol fuzz matrix, torn-write crash recovery (byte-identical, zero
+//! acked rows lost), shadow-gated publishing, and the idle-client socket
+//! timeout.
 
 use std::io::{BufRead, BufReader, Write};
 use std::sync::Arc;
+use std::time::Duration;
 
 use budgetsvm::coordinator;
 use budgetsvm::data::{libsvm, synthetic::two_moons};
 use budgetsvm::kernel::KernelSpec;
-use budgetsvm::serve::{ModelRegistry, ServeConfig, ShardedIngest};
-use budgetsvm::solver::{RunConfig, SvmConfig};
+use budgetsvm::serve::{
+    protocol, BatcherOptions, FaultPlan, MicroBatcher, ModelRegistry, ServeConfig, ServeState,
+    ShadowPolicy, ShardedIngest,
+};
+use budgetsvm::solver::{RunConfig, SolverSpec, SvmConfig};
 use budgetsvm::util::json::Json;
 
 fn tmp_dir(name: &str) -> std::path::PathBuf {
@@ -100,6 +107,7 @@ fn replay_with_pretrained_model_serves_that_model() {
         None,
         0.0,
         0,
+        SolverSpec::Bsgd,
     )
     .unwrap();
     let model_path = dir.join("model.bsvm");
@@ -244,4 +252,221 @@ fn tcp_server_smoke_over_loopback() {
     assert_eq!(line.trim(), "ok bye");
     server.join().unwrap().unwrap();
     std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Predict-only serving state over a 2-SV toy model (for protocol tests).
+fn toy_state() -> (ServeState, MicroBatcher, Arc<ModelRegistry>) {
+    let reg = Arc::new(ModelRegistry::new());
+    let mut m = budgetsvm::model::AnyModel::new(2, KernelSpec::gaussian(1.0), 2).unwrap();
+    m.push(&[1.0, 0.0], 1.0);
+    m.push(&[-1.0, 0.0], -1.0);
+    reg.publish(m);
+    let batcher = MicroBatcher::new(Arc::clone(&reg), BatcherOptions::default());
+    let state = ServeState::new(Arc::clone(&reg), batcher.client(), None, 16);
+    (state, batcher, reg)
+}
+
+#[test]
+fn protocol_fuzz_matrix_answers_typed_errors_and_the_session_survives() {
+    let (state, batcher, _reg) = toy_state();
+    // Every line here must answer `err ...` — and none may kill the
+    // session, pin the dimension, or panic.
+    let bad_lines: &[&str] = &[
+        "predict 1:NaN",
+        "predict 1:inf",
+        "predict 2:-Infinity",
+        "predict 0:1",
+        "predict 5:1",
+        "predict x:1",
+        "predict 1:1:1",
+        "train",
+        "train +1 1:0.5",
+        "train NaN 1:0.5",
+        "train inf 1:0.5",
+        "flush",
+        "bogus verb",
+    ];
+    let mut input: Vec<u8> = Vec::new();
+    for l in bad_lines {
+        input.extend_from_slice(l.as_bytes());
+        input.push(b'\n');
+    }
+    // An oversized line (past the 64 KiB cap) and raw non-UTF-8 bytes.
+    input.extend_from_slice(b"predict ");
+    input.resize(input.len() + 70_000, b'a');
+    input.push(b'\n');
+    input.extend_from_slice(&[0xC3, 0x28, 0xFF, b'\n']);
+    // A healthy request afterwards proves the session survived it all.
+    input.extend_from_slice(b"predict 1:0.9\nquit\n");
+
+    let mut out: Vec<u8> = Vec::new();
+    protocol::serve_session(&state, &input[..], &mut out).unwrap();
+    let text = String::from_utf8(out).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), bad_lines.len() + 4, "{text}");
+    for (i, line) in lines.iter().take(bad_lines.len()).enumerate() {
+        assert!(
+            line.starts_with("err "),
+            "fuzz line {:?} answered {line}",
+            bad_lines[i]
+        );
+    }
+    assert!(lines[bad_lines.len()].contains("err line exceeds"));
+    assert!(lines[bad_lines.len() + 1].contains("not valid UTF-8"));
+    assert!(lines[bad_lines.len() + 2].starts_with("ok "));
+    assert_eq!(lines[bad_lines.len() + 3], "ok bye");
+    batcher.shutdown();
+}
+
+#[test]
+fn crash_recovery_replays_the_wal_to_byte_identical_state_with_zero_acked_loss() {
+    let dir = tmp_dir("crash-recover");
+    let wal = dir.join("serve.wal");
+    let ckpt = dir.join("serve.ckpt");
+    let _ = std::fs::remove_file(&wal);
+    let _ = std::fs::remove_file(&ckpt);
+    let ds = two_moons(480, 0.12, 19);
+    let svm = SvmConfig::new().kernel(KernelSpec::gaussian(2.0)).budget(20).c(10.0, ds.len());
+
+    // Faulted run: a torn-write crash at row 300, fed in 80-row chunks —
+    // the crash fires while ingesting rows 240..320, after their WAL
+    // append (acked) but before dispatch.
+    let reg = Arc::new(ModelRegistry::new());
+    let mut ing =
+        ShardedIngest::new(svm.clone(), RunConfig::new().seed(3), 2, 150, Arc::clone(&reg))
+            .unwrap();
+    ing.enable_wal(&wal).unwrap();
+    ing.checkpoint_at(&ckpt);
+    ing.fault_inject(FaultPlan::none().with_crash_at_rows(300, true)).unwrap();
+    let mut crashed = false;
+    for start in (0..ds.len()).step_by(80) {
+        let idx: Vec<usize> = (start..(start + 80).min(ds.len())).collect();
+        if ing.ingest(&ds.subset(&idx, "chunk")).is_err() {
+            crashed = true;
+            break;
+        }
+    }
+    assert!(crashed, "the injected crash must fire");
+    ing.finish().unwrap();
+
+    // Recovery: every acked row comes back, none lost, torn tail dropped.
+    let reg_rec = Arc::new(ModelRegistry::new());
+    let (rec, rep) = ShardedIngest::recover(
+        SolverSpec::Bsgd,
+        svm.clone(),
+        RunConfig::new().seed(3),
+        2,
+        150,
+        Arc::clone(&reg_rec),
+        &wal,
+        Some(&ckpt),
+    )
+    .unwrap();
+    assert!(rep.torn_tail_dropped);
+    assert_eq!(rep.wal_rows, 320);
+    assert_eq!(rec.rows_ingested(), 320, "zero acked rows may be lost");
+
+    // The recovered model is byte-identical to an uninterrupted run over
+    // exactly the acked rows.
+    let reg_ref = Arc::new(ModelRegistry::new());
+    let mut reference =
+        ShardedIngest::new(svm, RunConfig::new().seed(3), 2, 150, Arc::clone(&reg_ref)).unwrap();
+    let idx: Vec<usize> = (0..320).collect();
+    reference.ingest(&ds.subset(&idx, "acked")).unwrap();
+    reference.publish_now().unwrap();
+    let (pa, pb) = (dir.join("recovered.bsvm"), dir.join("reference.bsvm"));
+    reg_rec.dump(&pa).unwrap();
+    reg_ref.dump(&pb).unwrap();
+    assert_eq!(
+        std::fs::read(&pa).unwrap(),
+        std::fs::read(&pb).unwrap(),
+        "recovered BSVMMDL2 dump must byte-match the uninterrupted run"
+    );
+    rec.finish().unwrap();
+    reference.finish().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn shadow_gate_rejects_a_degraded_candidate_and_the_stats_verb_shows_it() {
+    let ds = two_moons(300, 0.12, 5);
+    let registry = Arc::new(ModelRegistry::new());
+    let svm = SvmConfig::new().kernel(KernelSpec::gaussian(2.0)).budget(20).c(10.0, ds.len());
+    let mut ingest =
+        ShardedIngest::new(svm, RunConfig::new().seed(2), 2, 1000, Arc::clone(&registry))
+            .unwrap()
+            .with_shadow_policy(ShadowPolicy::default());
+    ingest.ingest(&ds).unwrap();
+    // Cold start: the window is empty, so the incumbent publishes freely.
+    ingest.publish_now().unwrap();
+    let batcher = MicroBatcher::new(Arc::clone(&registry), BatcherOptions::default());
+    let state = ServeState::new(Arc::clone(&registry), batcher.client(), Some(ingest), 32);
+
+    // Live predict traffic fills the shadow window through the protocol.
+    for i in (0..ds.len()).step_by(4) {
+        let resp = protocol::handle_line(
+            &state,
+            &format!("predict{}", protocol::format_features(ds.row(i))),
+        );
+        assert!(resp.starts_with("ok "), "{resp}");
+    }
+
+    // A degraded candidate (a constant classifier) must be auto-rejected;
+    // the incumbent keeps serving unchanged.
+    let before = registry.version();
+    let mut degraded =
+        budgetsvm::model::AnyModel::new(ds.dim(), KernelSpec::gaussian(2.0), 2).unwrap();
+    degraded.push(&vec![0.0f32; ds.dim()], 1.0);
+    let outcome = registry.publish_shadowed(degraded, &ShadowPolicy::default());
+    assert!(!outcome.accepted, "a constant classifier must not oust the incumbent");
+    assert_eq!(registry.version(), before, "the incumbent must keep serving");
+
+    // The decision is visible over the wire.
+    let stats_line = protocol::handle_line(&state, "stats");
+    let json = Json::parse(stats_line.trim_start_matches("ok ")).unwrap();
+    assert_eq!(json.get("shadow_rejected").and_then(Json::as_usize), Some(1));
+    assert_eq!(json.get("shadow_last_accepted"), Some(&Json::Bool(false)));
+    assert!(
+        json.get("shadow_last_agreement").and_then(Json::as_f64).unwrap() < 0.75,
+        "the rejection must record the failing agreement"
+    );
+    batcher.shutdown();
+}
+
+#[test]
+fn stalled_tcp_client_is_disconnected_instead_of_pinning_the_session_thread() {
+    let port = {
+        let probe = std::net::TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        probe.local_addr().unwrap().port()
+    };
+    let mut scfg = ServeConfig::new();
+    scfg.port = port;
+    scfg.shards = 1;
+    scfg.threads = 1;
+    scfg.io_timeout_secs = 1;
+    let server = std::thread::spawn(move || coordinator::run_serve_tcp(&scfg, None, Some(1)));
+
+    let mut stream = None;
+    for _ in 0..100 {
+        match std::net::TcpStream::connect(("127.0.0.1", port)) {
+            Ok(s) => {
+                stream = Some(s);
+                break;
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(20)),
+        }
+    }
+    let stream = stream.expect("server did not come up");
+    // Send nothing: within the 1 s io timeout (plus slack) the server must
+    // answer the farewell and hang up — the whole server (bounded to this
+    // one connection) then exits, proving no session thread was pinned.
+    stream.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert_eq!(line.trim(), "err session idle timeout");
+    line.clear();
+    let n = reader.read_line(&mut line).unwrap();
+    assert_eq!(n, 0, "the server must close the connection after the farewell");
+    server.join().unwrap().unwrap();
 }
