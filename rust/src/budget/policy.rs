@@ -20,7 +20,6 @@
 //! [`gaussian_policy`] / [`generic_policy`]; [`AnyPolicy`] is the
 //! runtime-polymorphic holder mirroring [`crate::model::AnyModel`].
 
-use std::time::Instant;
 
 use anyhow::{bail, ensure, Result};
 
@@ -255,18 +254,21 @@ impl RemovalMaintenance {
             if model.is_empty() {
                 break;
             }
-            let t0 = Instant::now();
-            let victim = self.index.pick(model).expect("non-empty model");
-            prof.add(Section::MaintScan, t0.elapsed());
+            let victim = {
+                let _scan = crate::telemetry::span(Section::MaintScan, prof);
+                self.index.pick(model).expect("non-empty model")
+            };
             if let Some(obs) = observer.as_mut() {
                 obs.on_swap_remove(victim);
             }
-            let t1 = Instant::now();
-            let alpha = model.alpha(victim);
-            let self_k = model.kernel().self_eval(model.sv_norm2(victim));
-            self.index.note_swap_remove(model, victim);
-            model.swap_remove(victim);
-            prof.add(Section::MaintApply, t1.elapsed());
+            let (alpha, self_k) = {
+                let _apply = crate::telemetry::span(Section::MaintApply, prof);
+                let alpha = model.alpha(victim);
+                let self_k = model.kernel().self_eval(model.sv_norm2(victim));
+                self.index.note_swap_remove(model, victim);
+                model.swap_remove(victim);
+                (alpha, self_k)
+            };
             wd += alpha * alpha * self_k;
         }
         wd

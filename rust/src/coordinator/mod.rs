@@ -308,6 +308,16 @@ pub fn run_serve_tcp(
     max_connections: Option<usize>,
 ) -> Result<()> {
     scfg.validate()?;
+    if let Some(path) = scfg.telemetry_log.as_deref() {
+        crate::telemetry::set_event_log(Path::new(path))
+            .with_context(|| format!("cannot open telemetry log {path}"))?;
+        eprintln!("telemetry events -> {path}");
+    }
+    if scfg.metrics_port > 0 {
+        let bound = crate::telemetry::prometheus::spawn_exporter(scfg.metrics_port)
+            .with_context(|| format!("cannot bind metrics port {}", scfg.metrics_port))?;
+        eprintln!("metrics endpoint on 127.0.0.1:{bound}");
+    }
     let registry = Arc::new(ModelRegistry::with_history(scfg.history));
     if let Some(path) = model_in {
         let version = registry.publish_from_file(path, scfg.svm.fast_exp)?;
@@ -414,6 +424,18 @@ pub fn run_resilience_bench(quick: bool, seed: u64, out_dir: &str) -> Result<(Js
     let report =
         resilience_bench::run(&ds, &svm, seed, shards, publish_every, plan, &scratch)?;
     let path = resilience_bench::write(&report, out_dir)?;
+    let _ = std::fs::remove_dir_all(&scratch);
+    Ok((report, path))
+}
+
+/// Run the telemetry overhead gate (`repro bench --observability`) and
+/// write `BENCH_observability.json` under `out_dir`; returns
+/// `(report, path)`. CI asserts the instrumented-vs-disabled hot-loop
+/// overhead stays within budget and the Prometheus scrape is complete.
+pub fn run_observability_bench(quick: bool, seed: u64, out_dir: &str) -> Result<(Json, String)> {
+    let scratch = Path::new(out_dir).join("observability-scratch");
+    let report = experiments::observability_bench::run(quick, seed, &scratch)?;
+    let path = experiments::observability_bench::write(&report, out_dir)?;
     let _ = std::fs::remove_dir_all(&scratch);
     Ok((report, path))
 }

@@ -18,17 +18,22 @@
 //! `repro serve --replay` (emits `BENCH_serve.json`);
 //! [`resilience_bench`] the fault-tolerance one behind
 //! `repro bench --resilience` (deterministic fault injection, emits
-//! `BENCH_resilience.json`). `repro bench --all` runs the kernel +
+//! `BENCH_resilience.json`); [`observability_bench`] the telemetry
+//! overhead gate behind `repro bench --observability` (instrumented vs
+//! disabled hot-loop cost + scrape completeness, emits
+//! `BENCH_observability.json`). `repro bench --all` runs the kernel +
 //! maintenance + solver harnesses back to back and merges their reports
-//! (plus `BENCH_serve.json` / `BENCH_resilience.json`, when already
-//! present in the output directory) into one top-level
-//! `BENCH_summary.json` via [`write_bench_summary`] — the single
-//! perf-trajectory artifact CI uploads.
+//! (plus `BENCH_serve.json` / `BENCH_resilience.json` /
+//! `BENCH_observability.json`, when already present in the output
+//! directory) into one top-level `BENCH_summary.json` via
+//! [`write_bench_summary`] — the single perf-trajectory artifact CI
+//! uploads.
 
 pub mod figure2;
 pub mod figure3;
 pub mod kernel_bench;
 pub mod maint_bench;
+pub mod observability_bench;
 pub mod report;
 pub mod resilience_bench;
 pub mod runner;
@@ -76,6 +81,7 @@ pub fn write_bench_summary(
     };
     let serve = sidecar(serve_bench::REPORT_FILE)?;
     let resilience = sidecar(resilience_bench::REPORT_FILE)?;
+    let observability = sidecar(observability_bench::REPORT_FILE)?;
     let summary = Json::object(vec![
         ("schema", Json::str("bench_summary/v1")),
         ("kernel", kernel.clone()),
@@ -83,6 +89,7 @@ pub fn write_bench_summary(
         ("solver", solver.clone()),
         ("serve", serve),
         ("resilience", resilience),
+        ("observability", observability),
     ]);
     std::fs::create_dir_all(out_dir)
         .with_context(|| format!("cannot create output directory {out_dir}"))?;
@@ -175,16 +182,21 @@ mod tests {
         assert_eq!(back.get("solver"), Some(&solver));
         assert_eq!(back.get("serve"), Some(&Json::Null));
         assert_eq!(back.get("resilience"), Some(&Json::Null));
-        // With serve/resilience reports on disk they are folded in.
+        assert_eq!(back.get("observability"), Some(&Json::Null));
+        // With sidecar reports on disk they are folded in.
         let serve = Json::object(vec![("schema", Json::str("bench_serve/v1"))]);
         std::fs::write(dir.join(serve_bench::REPORT_FILE), format!("{serve}\n")).unwrap();
         let resil = Json::object(vec![("schema", Json::str("bench_resilience/v1"))]);
         std::fs::write(dir.join(resilience_bench::REPORT_FILE), format!("{resil}\n"))
             .unwrap();
+        let obs = Json::object(vec![("schema", Json::str("bench_observability/v1"))]);
+        std::fs::write(dir.join(observability_bench::REPORT_FILE), format!("{obs}\n"))
+            .unwrap();
         let path = write_bench_summary(&out, &kernel, &maint, &solver).unwrap();
         let back = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
         assert_eq!(back.get("serve"), Some(&serve));
         assert_eq!(back.get("resilience"), Some(&resil));
+        assert_eq!(back.get("observability"), Some(&obs));
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -1,0 +1,305 @@
+//! Tracked observability-overhead gate (`repro bench --observability`):
+//! proves the telemetry subsystem is cheap enough to leave on, and that
+//! one Prometheus scrape really carries the whole contract. Emits
+//! `BENCH_observability.json` with two sections, both CI-gated:
+//!
+//! 1. **Hot-loop overhead** — the BSGD step loop trained with telemetry
+//!    recording enabled vs globally disabled
+//!    ([`registry::set_enabled`], the one-relaxed-load arm), min-of-R
+//!    wall per arm with the arms interleaved so drift hits both
+//!    equally. CI asserts `overhead_pct <=` [`MAX_OVERHEAD_PCT`].
+//! 2. **Scrape completeness** — after exercising every training section
+//!    (BSGD merge + removal maintenance, BDCA dual ascent/Gram fill)
+//!    and every serve stage (WAL-backed sharded ingest behind admission
+//!    control, publish, shadow gate, micro-batcher predicts incl. one
+//!    zero-deadline expiry), a single [`prometheus::render`] scrape
+//!    must contain every registered counter, gauge, and stage
+//!    histogram.
+//!
+//! The harness holds the registry's toggle lock for its whole run, so
+//! concurrently running tests never observe a surprise disable window.
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::budget::{MergeSolver, Strategy};
+use crate::data::synthetic::two_moons;
+use crate::kernel::KernelSpec;
+use crate::model::AnyModel;
+use crate::serve::{BatcherOptions, MicroBatcher, ModelRegistry, ShadowPolicy, ShardedIngest};
+use crate::solver::{AnyEstimator, Estimator, RunConfig, SolverSpec, SvmConfig};
+use crate::telemetry::{prometheus, registry, Counter, Gauge, Stage};
+use crate::util::json::Json;
+
+/// File name of the emitted report.
+pub const REPORT_FILE: &str = "BENCH_observability.json";
+
+/// The CI-gated ceiling on instrumented-vs-disabled hot-loop overhead.
+pub const MAX_OVERHEAD_PCT: f64 = 2.0;
+
+/// Re-enables telemetry even if the harness unwinds mid-arm.
+struct ReEnable;
+
+impl Drop for ReEnable {
+    fn drop(&mut self) {
+        registry::set_enabled(true);
+    }
+}
+
+/// Run the harness. `scratch` hosts the WAL files of the serve exercise
+/// (created if missing). Deterministic in `seed` up to wall-clock
+/// columns. Returns the JSON report.
+pub fn run(quick: bool, seed: u64, scratch: &Path) -> Result<Json> {
+    // Serialize with every test that toggles or asserts on the global
+    // enable flag; restore the flag no matter how we exit.
+    let _toggle = registry::toggle_lock();
+    let _reenable = ReEnable;
+
+    let rows = if quick { 4_000 } else { 8_000 };
+    let passes = if quick { 2 } else { 3 };
+    let repeats = if quick { 5 } else { 7 };
+    let budget = if quick { 150 } else { 200 };
+    let ds = two_moons(rows, 0.12, seed ^ 0x0B5);
+    let svm = SvmConfig::new()
+        .kernel(KernelSpec::gaussian(2.0))
+        .budget(budget)
+        .c(10.0, ds.len())
+        .strategy(Strategy::Merge(MergeSolver::LookupWd));
+
+    // ---- phase 1: hot-loop overhead (the tentpole gate) ----
+    // Identical seed => identical work in both arms; only the recording
+    // differs. Min-of-R filters scheduler noise; interleaving the arms
+    // spreads thermal/frequency drift across both.
+    let fit_once = |enabled: bool| -> Result<(f64, u64)> {
+        registry::set_enabled(enabled);
+        let mut est = AnyEstimator::new(
+            SolverSpec::Bsgd,
+            svm.clone(),
+            RunConfig::new().passes(passes).seed(seed).threads(1),
+        )?;
+        let t = Instant::now();
+        est.fit(&ds)?;
+        let wall = t.elapsed().as_secs_f64();
+        let steps = est.summary().context("fitted estimator has a summary")?.steps;
+        Ok((wall, steps))
+    };
+    fit_once(true)?; // warm-up: page in data, settle the allocator
+    let mut enabled_s = f64::INFINITY;
+    let mut disabled_s = f64::INFINITY;
+    let mut steps = 0u64;
+    for _ in 0..repeats {
+        let (w, s) = fit_once(false)?;
+        disabled_s = disabled_s.min(w);
+        let (w, _) = fit_once(true)?;
+        enabled_s = enabled_s.min(w);
+        steps = s;
+    }
+    registry::set_enabled(true);
+    let overhead_pct = (enabled_s / disabled_s - 1.0) * 100.0;
+
+    // ---- phase 2: cover the remaining training sections ----
+    // Removal maintenance samples MaintScan/MaintApply; the dual solver
+    // samples DualAscent/GramFill. Tiny fits — coverage, not timing.
+    let cover = two_moons(600, 0.12, seed ^ 0x0B6);
+    let removal_svm = SvmConfig::new()
+        .kernel(KernelSpec::gaussian(2.0))
+        .budget(40)
+        .c(10.0, cover.len())
+        .strategy(Strategy::Removal);
+    let mut est = AnyEstimator::new(
+        SolverSpec::Bsgd,
+        removal_svm,
+        RunConfig::new().passes(1).seed(seed).threads(1),
+    )?;
+    est.fit(&cover)?;
+    let mut est = AnyEstimator::new(
+        SolverSpec::Bdca,
+        svm.clone().budget(40),
+        RunConfig::new().passes(1).seed(seed).threads(1),
+    )?;
+    est.fit(&cover)?;
+
+    // ---- phase 3: exercise every serve stage ----
+    std::fs::create_dir_all(scratch)
+        .with_context(|| format!("cannot create scratch directory {}", scratch.display()))?;
+    let wal_path = scratch.join("obs-bench.wal");
+    let _ = std::fs::remove_file(&wal_path);
+    let reg = Arc::new(ModelRegistry::new());
+    let serve_svm = SvmConfig::new()
+        .kernel(KernelSpec::gaussian(2.0))
+        .budget(40)
+        .c(10.0, cover.len());
+    let mut ing = ShardedIngest::new(
+        serve_svm,
+        RunConfig::new().seed(seed),
+        2,
+        cover.len(), // publish explicitly below, not on cadence
+        Arc::clone(&reg),
+    )?;
+    ing.enable_wal(&wal_path)?; // WalAppend samples
+    let mut ing = ing.with_admission(1 << 20, 1 << 19); // AdmissionDecide samples
+    const CHUNK: usize = 128;
+    let mut start = 0usize;
+    while start < cover.len() {
+        let idx: Vec<usize> = (start..(start + CHUNK).min(cover.len())).collect();
+        ing.ingest(&cover.subset(&idx, "obs-chunk"))?;
+        start += CHUNK;
+    }
+    ing.publish_now()?; // ShardMerge + PublishStall samples
+
+    // Shadow gate: live rows into the window, then a degenerate constant
+    // classifier through the gate — evaluated (ShadowEval samples) and
+    // rejected against the incumbent.
+    let d = cover.dim();
+    for i in (0..cover.len()).step_by((cover.len() / 64).max(1)) {
+        reg.record_live_rows(cover.row(i), d);
+    }
+    let mut degenerate = AnyModel::new(d, KernelSpec::gaussian(2.0), 2)?;
+    degenerate.push(&vec![0.0f32; d], 1.0);
+    let _ = reg.publish_shadowed(degenerate, &ShadowPolicy::default());
+
+    // Micro-batcher: served predicts sample BatchQueueWait; one
+    // zero-deadline request exercises the typed expiry path.
+    let batcher = MicroBatcher::new(
+        Arc::clone(&reg),
+        BatcherOptions { max_batch_rows: 32, threads: 2 },
+    );
+    let client = batcher.client();
+    for i in 0..64.min(cover.len()) {
+        client
+            .predict_deadline(cover.row(i), d, Some(Duration::from_secs(30)))
+            .expect("bench predict failed");
+    }
+    let _ = client.predict_deadline(cover.row(0), d, Some(Duration::ZERO));
+    batcher.shutdown();
+    ing.finish()?;
+
+    // ---- phase 4: one scrape must carry the whole contract ----
+    let text = prometheus::render();
+    let mut missing: Vec<Json> = Vec::new();
+    for c in Counter::ALL {
+        if !text.contains(c.key()) {
+            missing.push(Json::str(c.key()));
+        }
+    }
+    for g in Gauge::ALL {
+        if !text.contains(g.key()) {
+            missing.push(Json::str(g.key()));
+        }
+    }
+    for s in Stage::ALL {
+        for suffix in ["_seconds_count", "_seconds_sum"] {
+            let name = format!("budgetsvm_{}{suffix}", s.key());
+            if !text.contains(&name) {
+                missing.push(Json::str(name));
+            }
+        }
+    }
+    let complete = missing.is_empty();
+    let sampled: Vec<Stage> =
+        Stage::ALL.into_iter().filter(|&s| registry::stage_snapshot(s).count > 0).collect();
+    let train_sampled = [
+        Stage::SgdStep,
+        Stage::MaintA,
+        Stage::MaintScan,
+        Stage::MaintApply,
+        Stage::DualAscent,
+        Stage::GramFill,
+    ]
+    .iter()
+    .all(|s| sampled.contains(s));
+    let serve_sampled = [
+        Stage::BatchQueueWait,
+        Stage::WalAppend,
+        Stage::AdmissionDecide,
+        Stage::PublishStall,
+        Stage::ShardMerge,
+        Stage::ShadowEval,
+    ]
+    .iter()
+    .all(|s| sampled.contains(s));
+
+    Ok(Json::object(vec![
+        ("schema", Json::str("bench_observability/v1")),
+        ("quick", Json::Bool(quick)),
+        ("seed", Json::num(seed as f64)),
+        (
+            "hot_loop",
+            Json::object(vec![
+                ("rows", Json::num(rows as f64)),
+                ("passes", Json::num(passes as f64)),
+                ("budget", Json::num(budget as f64)),
+                ("repeats", Json::num(repeats as f64)),
+                ("steps", Json::num(steps as f64)),
+                ("instrumented_seconds", Json::num(enabled_s)),
+                ("disabled_seconds", Json::num(disabled_s)),
+                ("overhead_pct", Json::num(overhead_pct)),
+                ("max_overhead_pct", Json::num(MAX_OVERHEAD_PCT)),
+                ("within_budget", Json::Bool(overhead_pct <= MAX_OVERHEAD_PCT)),
+            ]),
+        ),
+        (
+            "scrape",
+            Json::object(vec![
+                ("complete", Json::Bool(complete)),
+                ("missing", Json::array(missing)),
+                (
+                    "sampled_stages",
+                    Json::array(sampled.iter().map(|s| Json::str(s.key())).collect()),
+                ),
+                ("train_sections_sampled", Json::Bool(train_sampled)),
+                ("serve_stages_sampled", Json::Bool(serve_sampled)),
+            ]),
+        ),
+    ]))
+}
+
+/// Write the report as `BENCH_observability.json` under `out_dir`
+/// (created if missing); returns the written path.
+pub fn write(report: &Json, out_dir: &str) -> Result<String> {
+    std::fs::create_dir_all(out_dir)
+        .with_context(|| format!("cannot create output directory {out_dir}"))?;
+    let path = format!("{}/{}", out_dir.trim_end_matches('/'), REPORT_FILE);
+    std::fs::write(&path, format!("{report}\n"))
+        .with_context(|| format!("cannot write {path}"))?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn harness_reports_a_complete_scrape_with_every_stage_sampled() {
+        let scratch = std::env::temp_dir().join("budgetsvm-observability-bench");
+        let report = run(true, 23, &scratch).unwrap();
+        assert_eq!(
+            report.get("schema").and_then(Json::as_str),
+            Some("bench_observability/v1")
+        );
+
+        let hot = report.get("hot_loop").expect("hot_loop section");
+        assert!(hot.get("steps").and_then(Json::as_usize).unwrap() > 0);
+        assert!(hot.get("instrumented_seconds").and_then(Json::as_f64).unwrap() > 0.0);
+        assert!(hot.get("disabled_seconds").and_then(Json::as_f64).unwrap() > 0.0);
+        // The overhead number itself is asserted by the dedicated CI job,
+        // where the harness runs alone; under the parallel test runner it
+        // would be noise, so here we only require it to be finite.
+        assert!(hot.get("overhead_pct").and_then(Json::as_f64).unwrap().is_finite());
+
+        let scrape = report.get("scrape").expect("scrape section");
+        assert_eq!(scrape.get("complete"), Some(&Json::Bool(true)));
+        assert_eq!(scrape.get("missing").and_then(Json::as_array).unwrap().len(), 0);
+        assert_eq!(scrape.get("train_sections_sampled"), Some(&Json::Bool(true)));
+        assert_eq!(scrape.get("serve_stages_sampled"), Some(&Json::Bool(true)));
+
+        assert_eq!(Json::parse(&report.to_string()).unwrap(), report);
+        let out = scratch.to_string_lossy().into_owned();
+        let path = write(&report, &out).unwrap();
+        assert!(path.ends_with(REPORT_FILE));
+        std::fs::remove_dir_all(&scratch).ok();
+    }
+}

@@ -85,6 +85,7 @@ pub mod model;
 pub mod runtime;
 pub mod serve;
 pub mod solver;
+pub mod telemetry;
 pub mod util;
 
 /// One-line import for the estimator surface: configuration types, the

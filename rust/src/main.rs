@@ -146,6 +146,26 @@ fn opt_specs() -> Vec<OptSpec> {
                    gated in CI)",
         },
         OptSpec {
+            name: "observability",
+            takes_value: false,
+            help: "bench: telemetry overhead gate — instrumented vs disabled BSGD hot \
+                   loop plus scrape completeness (BENCH_observability.json, <= 2% \
+                   overhead gated in CI)",
+        },
+        OptSpec {
+            name: "metrics-port",
+            takes_value: true,
+            help: "serve: loopback port for the Prometheus-text metrics endpoint \
+                   (default 0 = disabled)",
+        },
+        OptSpec {
+            name: "telemetry-log",
+            takes_value: true,
+            help: "serve: append lifecycle events (maintenance, admission transitions, \
+                   restarts, publishes/rollbacks/shadow rejections) as JSONL here \
+                   (default = disabled)",
+        },
+        OptSpec {
             name: "wal-dir",
             takes_value: true,
             help: "serve: directory for the append-only WAL + checkpoint pair \
@@ -314,6 +334,14 @@ fn main() -> Result<()> {
                 )?;
                 println!("{report}");
                 eprintln!("resilience bench report written to {path}");
+            } else if args.flag("observability") {
+                let (report, path) = coordinator::run_observability_bench(
+                    args.flag("quick"),
+                    cfg.seed,
+                    &cfg.out_dir,
+                )?;
+                println!("{report}");
+                eprintln!("observability bench report written to {path}");
             } else if args.flag("solver-bench") {
                 let report = experiments::solver_bench::run(args.flag("quick"))?;
                 print!("{}", experiments::solver_bench::render(&report));
@@ -378,6 +406,14 @@ fn main() -> Result<()> {
             scfg.shadow_eval = args.flag("shadow-eval");
             if let Some(h) = args.get_usize("history")? {
                 scfg.history = h;
+            }
+            // Observability surface: Prometheus endpoint + JSONL events.
+            if let Some(p) = args.get_usize("metrics-port")? {
+                scfg.metrics_port =
+                    u16::try_from(p).map_err(|_| anyhow::anyhow!("--metrics-port out of range"))?;
+            }
+            if let Some(path) = args.get("telemetry-log") {
+                scfg.telemetry_log = Some(path.to_string());
             }
             let kernel_opt = args.get("kernel").map(KernelSpec::parse).transpose()?;
             let kernel = match (kernel_opt, args.get_f64("gamma")?) {
@@ -648,13 +684,43 @@ mod tests {
     #[test]
     fn simd_and_bench_surface_is_declared() {
         let specs = opt_specs();
-        for flag in ["fast-exp", "all", "resilience"] {
+        for flag in ["fast-exp", "all", "resilience", "observability"] {
             let spec = specs
                 .iter()
                 .find(|s| s.name == flag)
                 .unwrap_or_else(|| panic!("flag --{flag} is not declared"));
             assert!(!spec.takes_value, "--{flag} must be a flag");
         }
+    }
+
+    #[test]
+    fn observability_surface_is_declared_and_parses() {
+        let specs = opt_specs();
+        for opt in ["metrics-port", "telemetry-log"] {
+            let spec = specs
+                .iter()
+                .find(|s| s.name == opt)
+                .unwrap_or_else(|| panic!("observability option --{opt} is not declared"));
+            assert!(spec.takes_value, "--{opt} must take a value");
+        }
+        let argv: Vec<String> = [
+            "serve",
+            "--metrics-port",
+            "9102",
+            "--telemetry-log",
+            "/tmp/events.jsonl",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let args = Args::parse(&argv, &opt_specs()).unwrap();
+        assert_eq!(args.get_usize("metrics-port").unwrap(), Some(9102));
+        assert_eq!(args.get("telemetry-log"), Some("/tmp/events.jsonl"));
+
+        let argv: Vec<String> =
+            ["bench", "--observability", "--quick"].iter().map(|s| s.to_string()).collect();
+        let args = Args::parse(&argv, &opt_specs()).unwrap();
+        assert!(args.flag("observability") && args.flag("quick"));
     }
 
     #[test]

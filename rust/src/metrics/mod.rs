@@ -1,5 +1,52 @@
-//! Instrumentation: section timing (Figure 3's A/B breakdown), agreement
-//! statistics between merge solvers (Table 3), and accuracy helpers.
+//! Instrumentation and the **observability contract**: section timing
+//! (Figure 3's A/B breakdown), agreement statistics between merge
+//! solvers (Table 3), accuracy helpers — and the rules every metric in
+//! the process plays by.
+//!
+//! # Observability contract
+//!
+//! Two instrumentation layers coexist, fed through one seam:
+//!
+//! * **Run-local accounting (this module).** [`SectionProfiler`]
+//!   accumulates exact per-[`Section`] nanosecond totals for one
+//!   training run — the source of truth for the paper's Figure-3 A/B
+//!   attribution and every `BENCH_*.json` artifact. Deterministic,
+//!   owned by the run, summed without sampling error.
+//! * **Process-global telemetry ([`crate::telemetry`]).** Atomic
+//!   counters, gauges, and log-scale latency histograms in static
+//!   storage, scrapeable at any time (serve `metrics` verb,
+//!   `--metrics-port` Prometheus endpoint). Histograms trade ≤ 12.5%
+//!   relative sample error for wait-free recording.
+//!
+//! The seam: [`SectionProfiler::add_ns`] forwards every sample it
+//! receives into the matching [`crate::telemetry::Stage`] histogram.
+//! Instrumenting code once — with [`crate::telemetry::span`] or an
+//! explicit profiler `add` — feeds both layers; they can never drift
+//! apart on what was measured.
+//!
+//! ## Always-on vs bench-only
+//!
+//! * **Always-on**: counters, gauges, and stage histograms
+//!   (`telemetry::registry`). Budget: one relaxed atomic load when
+//!   disabled, a handful of relaxed RMWs when enabled — ≤ 2% overhead
+//!   on the BSGD step loop, enforced by the CI `observability-smoke`
+//!   gate over `repro bench --observability`.
+//! * **Bench-only**: [`AgreementStats`] audits (a second merge solver
+//!   runs per event), per-run JSON artifacts, and the JSONL event log
+//!   (`--telemetry-log`, off unless a sink is installed).
+//!
+//! ## Metric-key naming
+//!
+//! * Counters: `budgetsvm_<noun>_total` (monotone).
+//! * Gauges: `budgetsvm_<noun>[_<unit>]`, e.g.
+//!   `budgetsvm_queue_depth_rows`.
+//! * Latency histograms: `budgetsvm_<stage>_seconds`, where `<stage>`
+//!   is `train_<section>` for solver sections and `serve_<stage>` for
+//!   serving stages; explicit quantile gauges ride alongside as
+//!   `budgetsvm_<stage>_quantile_seconds{q="0.5|0.99|0.999"}`.
+//!
+//! New metrics must follow these patterns; the telemetry registry's
+//! key-uniqueness test is the enforcement point.
 
 use std::time::Duration;
 
@@ -69,6 +116,11 @@ impl SectionProfiler {
     pub fn add_ns(&mut self, section: Section, ns: u64) {
         self.ns[section as usize] += ns;
         self.events[section as usize] += 1;
+        // The one seam between run-local accounting and process-global
+        // telemetry: every profiled sample also lands in the section's
+        // latency histogram. (`merge` deliberately bypasses this —
+        // merged shard totals are not new samples.)
+        crate::telemetry::registry::record_section_ns(section, ns);
     }
 
     pub fn ns(&self, section: Section) -> u64 {
@@ -100,9 +152,12 @@ impl SectionProfiler {
         self.seconds(Section::DualAscent) + self.seconds(Section::GramFill)
     }
 
-    /// Total accounted time.
+    /// Total accounted time. Summed over *all* sections by index — a
+    /// newly added [`Section`] variant is counted automatically instead
+    /// of silently missing from the total until someone remembers to
+    /// extend a hand-written sum.
     pub fn total_seconds(&self) -> f64 {
-        self.seconds(Section::SgdStep) + self.maintenance_seconds() + self.dual_seconds()
+        self.ns.iter().sum::<u64>() as f64 * 1e-9
     }
 
     pub fn merge(&mut self, other: &SectionProfiler) {
@@ -154,6 +209,12 @@ impl AgreementStats {
 }
 
 /// Classification accuracy of predictions vs. labels.
+///
+/// Sign agreement with an explicit NaN rule: a NaN prediction (or
+/// label) **counts as incorrect**. The naive sign compare would
+/// silently score a NaN prediction as the −1 side (`NaN >= 0.0` is
+/// false) and call it *correct* against a negative label — a poisoned
+/// model must never look half-right.
 pub fn accuracy(predictions: &[f32], labels: &[f32]) -> f64 {
     assert_eq!(predictions.len(), labels.len());
     if predictions.is_empty() {
@@ -162,7 +223,7 @@ pub fn accuracy(predictions: &[f32], labels: &[f32]) -> f64 {
     let correct = predictions
         .iter()
         .zip(labels)
-        .filter(|(p, l)| (**p >= 0.0) == (**l >= 0.0))
+        .filter(|(p, l)| !p.is_nan() && !l.is_nan() && (**p >= 0.0) == (**l >= 0.0))
         .count();
     correct as f64 / predictions.len() as f64
 }
@@ -238,5 +299,82 @@ mod tests {
         let labels = [1.0f32, -1.0, -1.0, 1.0];
         // 0.0 counts as +1 prediction → row 3 wrong, row 4 wrong.
         assert!((accuracy(&preds, &labels) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn total_seconds_covers_every_section_by_construction() {
+        // Feed every section a distinct amount; the total must be the
+        // exact sum — no hand-written section list to forget to extend.
+        let all = [
+            Section::SgdStep,
+            Section::MaintA,
+            Section::MaintScan,
+            Section::MaintApply,
+            Section::DualAscent,
+            Section::GramFill,
+        ];
+        let mut p = SectionProfiler::new();
+        let mut expect_ns = 0u64;
+        for (i, &s) in all.iter().enumerate() {
+            let ns = 10 + i as u64;
+            p.add_ns(s, ns);
+            expect_ns += ns;
+        }
+        assert!((p.total_seconds() - expect_ns as f64 * 1e-9).abs() < 1e-15);
+    }
+
+    #[test]
+    fn accuracy_counts_nan_predictions_as_incorrect() {
+        // The naive sign compare would call a NaN prediction "correct"
+        // against a −1 label; the contract says NaN is always wrong.
+        let preds = [f32::NAN, f32::NAN, 1.0, -1.0];
+        let labels = [-1.0f32, 1.0, 1.0, -1.0];
+        assert!((accuracy(&preds, &labels) - 0.5).abs() < 1e-12);
+        // All-NaN predictions score zero, even against NaN labels.
+        assert_eq!(accuracy(&[f32::NAN; 4], &[-1.0f32, 1.0, -1.0, 1.0]), 0.0);
+        assert_eq!(accuracy(&[f32::NAN; 2], &[f32::NAN; 2]), 0.0);
+    }
+
+    #[test]
+    fn accuracy_nan_properties_hold_on_random_vectors() {
+        // Deterministic xorshift so the property sweep is reproducible.
+        let mut state = 0x1234_5678_9ABC_DEFu64;
+        let mut next = move || {
+            state ^= state >> 12;
+            state ^= state << 25;
+            state ^= state >> 27;
+            state.wrapping_mul(0x2545_F491_4F6C_DD1D)
+        };
+        for _ in 0..50 {
+            let n = 1 + (next() % 64) as usize;
+            let mut preds: Vec<f32> = Vec::with_capacity(n);
+            let mut labels: Vec<f32> = Vec::with_capacity(n);
+            for _ in 0..n {
+                preds.push(match next() % 4 {
+                    0 => f32::NAN,
+                    1 => -1.0,
+                    2 => 0.5,
+                    _ => (next() % 7) as f32 - 3.0,
+                });
+                labels.push(if next() % 2 == 0 { 1.0 } else { -1.0 });
+            }
+            let acc = accuracy(&preds, &labels);
+            // Property 1: replacing every NaN with the matching label can
+            // only raise (never lower) the accuracy.
+            let healed: Vec<f32> = preds
+                .iter()
+                .zip(&labels)
+                .map(|(p, l)| if p.is_nan() { *l } else { *p })
+                .collect();
+            assert!(accuracy(&healed, &labels) >= acc);
+            // Property 2: the NaN rows contribute exactly zero — the
+            // score equals correct-finite-pairs / total.
+            let finite_correct = preds
+                .iter()
+                .zip(&labels)
+                .filter(|(p, l)| !p.is_nan() && (**p >= 0.0) == (**l >= 0.0))
+                .count();
+            assert!((acc - finite_correct as f64 / n as f64).abs() < 1e-12);
+        }
     }
 }

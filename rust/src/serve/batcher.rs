@@ -31,6 +31,8 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
+use crate::telemetry::{registry as metrics, Counter, Stage};
+
 use super::registry::ModelRegistry;
 
 /// Tuning knobs of the prediction front end.
@@ -263,6 +265,7 @@ fn drain_loop(shared: &Shared, registry: &ModelRegistry, max_rows: usize, thread
                 // the clock has not advanced (deterministic tests).
                 if front.deadline.map_or(false, |d| now >= d) {
                     st.stats.expired += 1;
+                    metrics::count(Counter::DeadlineExpired);
                     expired.push(st.pending.pop_front().unwrap());
                     continue;
                 }
@@ -305,6 +308,13 @@ fn drain_loop(shared: &Shared, registry: &ModelRegistry, max_rows: usize, thread
                     req.dim
                 ))));
             } else {
+                // Queue wait of a request that will actually be served:
+                // submission to batch assembly (the tail the predict
+                // deadline guards against).
+                metrics::record_stage_ns(
+                    Stage::BatchQueueWait,
+                    req.enqueued.elapsed().as_nanos() as u64,
+                );
                 flat.extend_from_slice(&req.rows);
                 accepted.push(req);
             }

@@ -50,6 +50,8 @@ use anyhow::{anyhow, bail, ensure, Result};
 use crate::data::Dataset;
 use crate::model::AnyModel;
 use crate::solver::{AnyEstimator, Estimator, RunConfig, SolverSpec, SvmConfig};
+use crate::telemetry::{self, Counter, Gauge, Stage};
+use crate::util::json::Json;
 use crate::util::parallel::{spawn_worker, Worker};
 
 use super::faults::{FaultPlan, INJECTED_CRASH_MARKER};
@@ -241,6 +243,9 @@ pub struct ShardedIngest {
     rejected_rows: u64,
     shadow: Option<ShadowPolicy>,
     shadow_rejects: u64,
+    /// Previous admission decision — emits an `admission_transition`
+    /// event whenever the ladder moves.
+    last_admission: Admission,
 }
 
 /// Publish stall (seconds) above which adaptive cadence doubles
@@ -328,6 +333,7 @@ impl ShardedIngest {
             rejected_rows: 0,
             shadow: None,
             shadow_rejects: 0,
+            last_admission: Admission::Accept,
         })
     }
 
@@ -550,14 +556,41 @@ impl ShardedIngest {
         self.heal_poisoned()?;
         self.drain_acks();
         let n = batch.len();
-        match self.admission_state() {
+        let decision = {
+            let _admit = telemetry::stage_span(Stage::AdmissionDecide);
+            self.admission_state()
+        };
+        if decision != self.last_admission {
+            let (from, to) = (self.last_admission.as_str(), decision.as_str());
+            let pending = self.pending_rows.load(Ordering::SeqCst);
+            telemetry::emit("admission_transition", || {
+                vec![
+                    ("from", Json::str(from)),
+                    ("to", Json::str(to)),
+                    ("pending_rows", Json::num(pending as f64)),
+                ]
+            });
+            self.last_admission = decision;
+        }
+        telemetry::registry::gauge_set(
+            Gauge::QueueDepth,
+            self.pending_rows.load(Ordering::SeqCst),
+        );
+        match decision {
             Admission::RejectTrain => {
+                telemetry::registry::count(Counter::AdmissionReject);
                 self.rejected_rows += n as u64;
                 let pending = self.pending_rows.load(Ordering::SeqCst);
                 bail!("overloaded: ingest queue at capacity ({pending} rows pending)");
             }
-            Admission::ShedMaintenance => self.shedding = true,
-            Admission::Accept => self.shedding = false,
+            Admission::ShedMaintenance => {
+                telemetry::registry::count(Counter::AdmissionShed);
+                self.shedding = true;
+            }
+            Admission::Accept => {
+                telemetry::registry::count(Counter::AdmissionAccept);
+                self.shedding = false;
+            }
         }
         if self.wal.is_none() {
             if let Some(path) = self.wal_path.take() {
@@ -588,11 +621,16 @@ impl ShardedIngest {
             }
         }
         self.dispatch(batch)?;
+        telemetry::registry::gauge_set(
+            Gauge::QueueDepth,
+            self.pending_rows.load(Ordering::SeqCst),
+        );
         self.rows_total += n as u64;
         self.rows_since_publish += n;
         if self.rows_since_publish >= self.publish_every {
             if self.shedding {
                 self.deferred_publishes += 1;
+                telemetry::registry::count(Counter::DeferredPublishes);
             } else {
                 self.publish_now()?;
             }
@@ -651,6 +689,10 @@ impl ShardedIngest {
                 continue;
             }
             self.restarts += 1;
+            telemetry::registry::count(Counter::WorkerRestarts);
+            telemetry::emit("worker_restart", || {
+                vec![("shard", Json::num(s as f64))]
+            });
             let fresh = AnyEstimator::new_shard(self.solver, self.config.clone(), self.run.clone(), s)?;
             {
                 let lane = &mut self.lanes[s];
@@ -686,6 +728,7 @@ impl ShardedIngest {
                 lane.inflight.clear();
                 if !mine.is_empty() {
                     self.rows_requeued += mine.len() as u64;
+                    telemetry::registry::count_n(Counter::RowsRequeued, mine.len() as u64);
                     Self::dispatch_part(&self.pending_rows, lane, mine)?;
                 }
             } else {
@@ -693,6 +736,7 @@ impl ShardedIngest {
                     self.lanes[s].inflight.drain(..).map(|(_, ds)| ds).collect();
                 for part in parts {
                     self.rows_requeued += part.len() as u64;
+                    telemetry::registry::count_n(Counter::RowsRequeued, part.len() as u64);
                     Self::dispatch_part(&self.pending_rows, &mut self.lanes[s], part)?;
                 }
             }
@@ -745,12 +789,15 @@ impl ShardedIngest {
             );
         }
         ensure!(!models.is_empty(), "no shard has trained a model yet");
-        let merged = super::merge::merge_shard_models(
-            models,
-            &weights,
-            self.config.budget,
-            &self.config.maintenance(),
-        )?;
+        let merged = {
+            let _merge = telemetry::stage_span(Stage::ShardMerge);
+            super::merge::merge_shard_models(
+                models,
+                &weights,
+                self.config.budget,
+                &self.config.maintenance(),
+            )?
+        };
         let version = match self.shadow {
             Some(policy) => {
                 let outcome = self.registry.publish_shadowed(merged, &policy);
@@ -761,6 +808,10 @@ impl ShardedIngest {
             }
             None => self.registry.publish(merged),
         };
+        telemetry::registry::record_stage_ns(
+            Stage::PublishStall,
+            t0.elapsed().as_nanos() as u64,
+        );
         let stall = t0.elapsed().as_secs_f64();
         self.stall_ewma = if self.publish_stalls.is_empty() {
             stall

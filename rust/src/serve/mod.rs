@@ -48,6 +48,7 @@
 //!                            -> overloaded ingest queue at capacity; retry later
 //! flush                      -> ok published v<version>
 //! stats                      -> ok <json>
+//! metrics                    -> ok <json>            (telemetry registry snapshot)
 //! quit                       -> ok bye              (connection closes)
 //! anything else              -> err <message>
 //! ```
@@ -172,6 +173,48 @@
 //!   monotonic, and a reader holding snapshot `v` observes exactly the
 //!   model published as `v` (stamp and contents live in one immutable
 //!   allocation — no torn reads).
+//!
+//! # Monitoring
+//!
+//! Every serve stage feeds the process-wide telemetry registry
+//! ([`crate::telemetry`]): counters for the admission ladder
+//! (accept/shed/reject), deadline expiries, worker restarts, requeued
+//! rows, publishes, rollbacks, and shadow rejections; gauges for ingest
+//! queue depth and the incumbent model (version, SV count); and
+//! log-scale latency histograms for batcher queue wait, WAL append +
+//! fsync, admission decisions, publish stalls, shard merges, and shadow
+//! evaluation windows. Three surfaces expose it:
+//!
+//! * **`stats` verb** — the JSON payload carries a pinned `telemetry`
+//!   sub-object with the operator-facing core (queue depth, admission
+//!   counters, WAL fsync p99, deadline expiries, lifecycle counters).
+//!   Its key set is a wire contract, guarded by a schema drift test in
+//!   [`protocol`].
+//! * **`metrics` verb** — the full registry snapshot as JSON (every
+//!   counter, gauge, and per-stage histogram summary with p50/p99/p999),
+//!   for clients already speaking the line protocol.
+//! * **Prometheus endpoint** — `repro serve --metrics-port <p>` spawns a
+//!   loopback HTTP listener answering any path with a text-format
+//!   (`text/plain; version=0.0.4`) scrape. Example excerpt:
+//!
+//! ```text
+//! # TYPE budgetsvm_admission_accept_total counter
+//! budgetsvm_admission_accept_total 4182
+//! # TYPE budgetsvm_queue_depth_rows gauge
+//! budgetsvm_queue_depth_rows 96
+//! # TYPE budgetsvm_serve_wal_append_seconds histogram
+//! budgetsvm_serve_wal_append_seconds_bucket{le="0.000016383"} 310
+//! budgetsvm_serve_wal_append_seconds_bucket{le="+Inf"} 327
+//! budgetsvm_serve_wal_append_seconds_sum 0.004913
+//! budgetsvm_serve_wal_append_seconds_count 327
+//! # TYPE budgetsvm_serve_wal_append_quantile_seconds gauge
+//! budgetsvm_serve_wal_append_quantile_seconds{q="0.99"} 0.000024575
+//! ```
+//!
+//! A JSONL event log (`repro serve --telemetry-log <file>`) additionally
+//! records discrete lifecycle events — maintenance runs, admission-ladder
+//! transitions, worker restarts, publishes, rollbacks, shadow rejections —
+//! with monotonic `ts_ns` timestamps for offline timeline reconstruction.
 
 pub mod batcher;
 pub mod faults;
@@ -251,6 +294,12 @@ pub struct ServeConfig {
     pub shadow_eval: bool,
     /// Registry versions retained for rollback (min 1).
     pub history: usize,
+    /// Loopback port for the Prometheus-text metrics endpoint
+    /// (`repro serve --metrics-port`). 0 = endpoint disabled.
+    pub metrics_port: u16,
+    /// Path for the JSONL telemetry event log
+    /// (`repro serve --telemetry-log`). `None` = event log disabled.
+    pub telemetry_log: Option<String>,
     /// Hyperparameters for pipeline-trained models.
     pub svm: SvmConfig,
 }
@@ -274,6 +323,8 @@ impl Default for ServeConfig {
             recover: false,
             shadow_eval: false,
             history: registry::DEFAULT_HISTORY,
+            metrics_port: 0,
+            telemetry_log: None,
             svm: SvmConfig::default(),
         }
     }

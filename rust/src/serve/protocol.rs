@@ -28,6 +28,8 @@ use std::time::Duration;
 use anyhow::{Context, Result};
 
 use crate::data::Dataset;
+use crate::telemetry::registry as metrics_registry;
+use crate::telemetry::{Counter, Gauge, Stage};
 use crate::util::json::Json;
 
 use super::batcher::{BatcherClient, PredictError};
@@ -334,6 +336,7 @@ fn dispatch(state: &ServeState, line: &str) -> Result<String, String> {
                     Json::num(state.registry.shadow_window_rows() as f64),
                 ),
                 ("predict_expired", Json::num(bstats.expired as f64)),
+                ("telemetry", telemetry_summary()),
             ];
             if let Some(h) = health {
                 pairs.push(("admission", Json::str(h.admission.as_str())));
@@ -346,8 +349,53 @@ fn dispatch(state: &ServeState, line: &str) -> Result<String, String> {
             }
             Ok(format!("ok {}", Json::object(pairs)))
         }
+        "metrics" => {
+            // The full registry snapshot as JSON — the wire twin of the
+            // Prometheus endpoint, for clients already on the line
+            // protocol.
+            Ok(format!("ok {}", metrics_registry::snapshot().to_json()))
+        }
         other => Err(format!("unknown command '{other}'")),
     }
+}
+
+/// The pinned telemetry summary carried by the `stats` payload: the
+/// operator-facing core of the registry (queue depth, admission ladder
+/// counters, WAL fsync p99, deadline expiries, lifecycle counters)
+/// without the full per-stage histogram dump the `metrics` verb serves.
+/// The key set is a wire contract — see the schema drift test.
+fn telemetry_summary() -> Json {
+    let wal_p99 = metrics_registry::stage_snapshot(Stage::WalAppend).quantile(0.99);
+    Json::object(vec![
+        ("queue_depth", Json::num(metrics_registry::gauge_value(Gauge::QueueDepth) as f64)),
+        (
+            "admission_accept",
+            Json::num(metrics_registry::counter_value(Counter::AdmissionAccept) as f64),
+        ),
+        (
+            "admission_shed",
+            Json::num(metrics_registry::counter_value(Counter::AdmissionShed) as f64),
+        ),
+        (
+            "admission_reject",
+            Json::num(metrics_registry::counter_value(Counter::AdmissionReject) as f64),
+        ),
+        (
+            "deadline_expired",
+            Json::num(metrics_registry::counter_value(Counter::DeadlineExpired) as f64),
+        ),
+        ("wal_append_p99_ns", Json::num(wal_p99 as f64)),
+        (
+            "worker_restarts",
+            Json::num(metrics_registry::counter_value(Counter::WorkerRestarts) as f64),
+        ),
+        ("publishes", Json::num(metrics_registry::counter_value(Counter::Publishes) as f64)),
+        ("rollbacks", Json::num(metrics_registry::counter_value(Counter::Rollbacks) as f64)),
+        (
+            "shadow_rejected",
+            Json::num(metrics_registry::counter_value(Counter::ShadowRejected) as f64),
+        ),
+    ])
 }
 
 /// Read one line of at most `max` bytes. Returns `None` at EOF. The
@@ -699,6 +747,100 @@ mod tests {
         }
         assert!(correct as f64 / ds.len() as f64 > 0.8, "served accuracy too low");
         batcher.shutdown();
+    }
+
+    /// Satellite: the `stats` payload schema is a wire contract. Any key
+    /// added to or removed from the payload must be a deliberate change
+    /// that updates this pinned list alongside the dashboards that parse
+    /// it. Keys are compared as exact sets, not subsets, so drift in
+    /// either direction fails.
+    #[test]
+    fn stats_schema_is_pinned_for_both_server_shapes() {
+        let base_keys = [
+            "buffered_rows",
+            "dim",
+            "history_len",
+            "ingested_rows",
+            "num_sv",
+            "predict_expired",
+            "published",
+            "rollbacks",
+            "shadow_last_accepted",
+            "shadow_last_agreement",
+            "shadow_rejected",
+            "shadow_window_rows",
+            "telemetry",
+            "version",
+        ];
+        let health_keys = [
+            "admission",
+            "deferred_publishes",
+            "pending_rows",
+            "rejected_rows",
+            "rows_requeued",
+            "wal_rows",
+            "worker_restarts",
+        ];
+        let telemetry_keys = [
+            "admission_accept",
+            "admission_reject",
+            "admission_shed",
+            "deadline_expired",
+            "publishes",
+            "queue_depth",
+            "rollbacks",
+            "shadow_rejected",
+            "wal_append_p99_ns",
+            "worker_restarts",
+        ];
+        let keys_of = |resp: &str| -> Vec<String> {
+            let json = Json::parse(resp.trim_start_matches("ok ")).unwrap();
+            json.as_object().expect("stats payload is an object").keys().cloned().collect()
+        };
+
+        // Predict-only server: the base schema, no pipeline health block.
+        let reg = registry_with_toy_model();
+        let (state, _batcher) = predict_only_state(reg);
+        let resp = handle_line(&state, "stats");
+        assert_eq!(keys_of(&resp), base_keys, "predict-only stats keys drifted");
+        let json = Json::parse(resp.trim_start_matches("ok ")).unwrap();
+        let tel = json.get("telemetry").and_then(Json::as_object).expect("telemetry object");
+        let tel_keys: Vec<String> = tel.keys().cloned().collect();
+        assert_eq!(tel_keys, telemetry_keys, "telemetry sub-object keys drifted");
+
+        // Full ingest server: base schema plus the health block (BTreeMap
+        // ordering interleaves them alphabetically).
+        let reg = Arc::new(ModelRegistry::new());
+        let svm = SvmConfig::new().kernel(KernelSpec::gaussian(2.0)).budget(10).c(10.0, 100);
+        let pipeline =
+            ShardedIngest::new(svm, RunConfig::new(), 1, 10_000, Arc::clone(&reg)).unwrap();
+        let batcher = MicroBatcher::new(Arc::clone(&reg), BatcherOptions::default());
+        let state = ServeState::new(Arc::clone(&reg), batcher.client(), Some(pipeline), 8);
+        let mut expected: Vec<String> = base_keys
+            .iter()
+            .chain(health_keys.iter())
+            .map(|s| s.to_string())
+            .collect();
+        expected.sort();
+        assert_eq!(keys_of(&handle_line(&state, "stats")), expected, "ingest stats keys drifted");
+        batcher.shutdown();
+    }
+
+    #[test]
+    fn metrics_verb_serves_the_full_registry_snapshot() {
+        let reg = registry_with_toy_model();
+        let (state, _batcher) = predict_only_state(reg);
+        let resp = handle_line(&state, "metrics");
+        assert!(resp.starts_with("ok {"), "{resp}");
+        let json = Json::parse(resp.trim_start_matches("ok ")).unwrap();
+        for family in ["counters", "gauges", "stages"] {
+            assert!(json.get(family).and_then(Json::as_object).is_some(), "missing {family}");
+        }
+        // Every stage histogram is present whether or not it has samples.
+        let stages = json.get("stages").and_then(Json::as_object).unwrap();
+        for stage in crate::telemetry::Stage::ALL {
+            assert!(stages.contains_key(stage.key()), "stage {} missing", stage.key());
+        }
     }
 
     #[test]

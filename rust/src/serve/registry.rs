@@ -43,6 +43,8 @@ use std::sync::{Arc, Mutex, RwLock};
 use anyhow::{bail, Context, Result};
 
 use crate::model::{io, AnyModel};
+use crate::telemetry::{self, Counter, Gauge, Stage};
+use crate::util::json::Json;
 
 /// Default number of retained versions (incumbent included).
 pub const DEFAULT_HISTORY: usize = 8;
@@ -184,12 +186,22 @@ impl ModelRegistry {
     /// Install `model` (scale already folded) as the next version.
     fn install(inner: &mut Inner, model: AnyModel) -> u64 {
         let version = inner.next_version;
+        let num_sv = model.num_sv();
         inner.next_version += 1;
         inner.history.push_back(Arc::new(ModelSnapshot { version, model }));
         while inner.history.len() > inner.capacity {
             inner.history.pop_front();
         }
         inner.stats.published += 1;
+        telemetry::registry::count(Counter::Publishes);
+        telemetry::registry::gauge_set(Gauge::ModelVersion, version);
+        telemetry::registry::gauge_set(Gauge::ModelNumSv, num_sv as u64);
+        telemetry::emit("publish", || {
+            vec![
+                ("version", Json::num(version as f64)),
+                ("num_sv", Json::num(num_sv as f64)),
+            ]
+        });
         version
     }
 
@@ -233,6 +245,10 @@ impl ModelRegistry {
         let model = inner.history[len - 1 - n].model.clone();
         let version = Self::install(&mut inner, model);
         inner.stats.rollbacks += 1;
+        telemetry::registry::count(Counter::Rollbacks);
+        telemetry::emit("rollback", || {
+            vec![("depth", Json::num(n as f64)), ("version", Json::num(version as f64))]
+        });
         Ok(version)
     }
 
@@ -292,6 +308,9 @@ impl ModelRegistry {
                     && inc.model.dim() == dim
                     && probe.len() / dim.max(1) >= policy.min_rows.max(1) =>
             {
+                // The shadow-eval window: both models re-score the probe
+                // rows — the latency cost of gating one publish.
+                let _eval = telemetry::stage_span(Stage::ShadowEval);
                 let n = probe.len() / dim;
                 let old = inc.model.decision_rows(&probe, 1);
                 let new = candidate.decision_rows(&probe, 1);
@@ -310,6 +329,13 @@ impl ModelRegistry {
                 inner.stats.rejected += 1;
                 inner.stats.last_agreement = Some(agreement);
                 inner.stats.last_accepted = Some(false);
+                telemetry::registry::count(Counter::ShadowRejected);
+                telemetry::emit("shadow_reject", || {
+                    vec![
+                        ("agreement", Json::num(agreement)),
+                        ("evaluated_rows", Json::num(n as f64)),
+                    ]
+                });
                 let version = inner.history.back().map(|s| s.version).unwrap_or(0);
                 ShadowOutcome { accepted: false, version, agreement: Some(agreement), evaluated_rows: n }
             }

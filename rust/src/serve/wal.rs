@@ -176,8 +176,13 @@ impl WalWriter {
             buf.extend_from_slice(&crc32(&payload).to_le_bytes());
             buf.extend_from_slice(&payload);
         }
-        self.file.write_all(&buf).context("WAL append failed")?;
-        self.sync()?;
+        {
+            // The span covers write + fsync — the full durability cost a
+            // train batch pays before it may be acknowledged.
+            let _append = crate::telemetry::stage_span(crate::telemetry::Stage::WalAppend);
+            self.file.write_all(&buf).context("WAL append failed")?;
+            self.sync()?;
+        }
         self.rows += batch.len() as u64;
         Ok(())
     }

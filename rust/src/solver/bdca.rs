@@ -44,6 +44,8 @@ use crate::data::Dataset;
 use crate::kernel::Kernel;
 use crate::metrics::Section;
 use crate::model::{AnyModel, BudgetModel};
+use crate::telemetry;
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 use super::api::{Estimator, FitSummary, RunConfig, SvmConfig};
@@ -92,34 +94,42 @@ fn run_bdca_passes<K: Kernel + Copy>(
         }
         for &i in &order {
             summary.steps += 1;
-            let t_scan = Instant::now();
-            let x = train.row(i);
-            let y = train.label(i) as f64;
-            let margin = y * model.decision_with_norm(x, norms[i]);
             let mut inserted = false;
-            if margin < 1.0 {
-                // Exact coordinate-ascent step on a fresh coordinate
-                // (a = 0): a₀ = clip((1 − y·f(x)) / k(x, x), 0, C) > 0
-                // exactly when the margin is violated.
-                let kxx = model.kernel().self_eval(norms[i]);
-                if kxx > K_DIAG_FLOOR {
-                    let a0 = ((1.0 - margin) / kxx).min(hyper.box_c);
-                    if a0 > 0.0 {
-                        model.push(x, y * a0);
-                        summary.sv_inserts += 1;
-                        inserted = true;
+            {
+                let _scan = telemetry::span(Section::DualAscent, &mut summary.profiler);
+                let x = train.row(i);
+                let y = train.label(i) as f64;
+                let margin = y * model.decision_with_norm(x, norms[i]);
+                if margin < 1.0 {
+                    // Exact coordinate-ascent step on a fresh coordinate
+                    // (a = 0): a₀ = clip((1 − y·f(x)) / k(x, x), 0, C) > 0
+                    // exactly when the margin is violated.
+                    let kxx = model.kernel().self_eval(norms[i]);
+                    if kxx > K_DIAG_FLOOR {
+                        let a0 = ((1.0 - margin) / kxx).min(hyper.box_c);
+                        if a0 > 0.0 {
+                            model.push(x, y * a0);
+                            summary.sv_inserts += 1;
+                            inserted = true;
+                        }
                     }
                 }
             }
-            summary.profiler.add(Section::DualAscent, t_scan.elapsed());
             if inserted {
-                let t_fill = Instant::now();
+                let _fill = telemetry::span(Section::GramFill, &mut summary.profiler);
                 gram.push_row(model);
-                summary.profiler.add(Section::GramFill, t_fill.elapsed());
             }
 
             if hyper.budget > 0 && policy.trigger(model.num_sv(), hyper.budget) {
                 summary.maintenance_events += 1;
+                telemetry::registry::count(telemetry::Counter::MaintenanceEvents);
+                telemetry::emit("maintenance", || {
+                    vec![
+                        ("solver", Json::str("bdca")),
+                        ("num_sv", Json::num(model.num_sv() as f64)),
+                        ("budget", Json::num(hyper.budget as f64)),
+                    ]
+                });
                 summary.total_weight_degradation +=
                     policy.maintain_observed(model, hyper.budget, &mut summary.profiler, gram);
                 resync_after_maintenance(model, gram, hyper.box_c, summary);
@@ -127,9 +137,8 @@ fn run_bdca_passes<K: Kernel + Copy>(
         }
         // Randomized coordinate-ascent epochs over the stored SV set.
         for _ in 0..hyper.epochs {
-            let t_sweep = Instant::now();
+            let _sweep = telemetry::span(Section::DualAscent, &mut summary.profiler);
             dual_sweep(model, gram, hyper.box_c, rng);
-            summary.profiler.add(Section::DualAscent, t_sweep.elapsed());
         }
     }
     // Hard budget enforcement at the end of the ingest call (see the BSGD
@@ -138,6 +147,14 @@ fn run_bdca_passes<K: Kernel + Copy>(
     // model. A no-op when slack = 0.
     while hyper.budget > 0 && model.num_sv() > hyper.budget {
         summary.maintenance_events += 1;
+        telemetry::registry::count(telemetry::Counter::MaintenanceEvents);
+        telemetry::emit("maintenance", || {
+            vec![
+                ("solver", Json::str("bdca")),
+                ("num_sv", Json::num(model.num_sv() as f64)),
+                ("budget", Json::num(hyper.budget as f64)),
+            ]
+        });
         summary.total_weight_degradation +=
             policy.maintain_observed(model, hyper.budget, &mut summary.profiler, gram);
         resync_after_maintenance(model, gram, hyper.box_c, summary);
@@ -165,9 +182,8 @@ fn resync_after_maintenance<K: Kernel + Copy>(
         }
     }
     if gram.is_stale() {
-        let t_fill = Instant::now();
+        let _fill = telemetry::span(Section::GramFill, &mut summary.profiler);
         gram.rebuild(model);
-        summary.profiler.add(Section::GramFill, t_fill.elapsed());
     }
 }
 
@@ -373,22 +389,23 @@ impl BdcaEstimator {
         let st = self.state.as_mut().context("estimator is not fitted")?;
         let mut objectives = Vec::with_capacity(epochs);
         for _ in 0..epochs {
-            let t_sweep = Instant::now();
-            let d = match &mut st.model {
-                AnyModel::Gaussian(m) => {
-                    dual_sweep(m, &st.gram, st.box_c, &mut st.rng);
-                    dual_objective_of(m, &st.gram)
-                }
-                AnyModel::Linear(m) => {
-                    dual_sweep(m, &st.gram, st.box_c, &mut st.rng);
-                    dual_objective_of(m, &st.gram)
-                }
-                AnyModel::Polynomial(m) => {
-                    dual_sweep(m, &st.gram, st.box_c, &mut st.rng);
-                    dual_objective_of(m, &st.gram)
+            let d = {
+                let _sweep = telemetry::span(Section::DualAscent, &mut st.summary.profiler);
+                match &mut st.model {
+                    AnyModel::Gaussian(m) => {
+                        dual_sweep(m, &st.gram, st.box_c, &mut st.rng);
+                        dual_objective_of(m, &st.gram)
+                    }
+                    AnyModel::Linear(m) => {
+                        dual_sweep(m, &st.gram, st.box_c, &mut st.rng);
+                        dual_objective_of(m, &st.gram)
+                    }
+                    AnyModel::Polynomial(m) => {
+                        dual_sweep(m, &st.gram, st.box_c, &mut st.rng);
+                        dual_objective_of(m, &st.gram)
+                    }
                 }
             };
-            st.summary.profiler.add(Section::DualAscent, t_sweep.elapsed());
             objectives.push(d);
         }
         Ok(objectives)

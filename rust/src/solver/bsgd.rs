@@ -48,6 +48,8 @@ use crate::data::Dataset;
 use crate::kernel::{Gaussian, Kernel, KernelSpec};
 use crate::metrics::{AgreementStats, Section, SectionProfiler};
 use crate::model::{AnyModel, BudgetModel};
+use crate::telemetry;
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 use super::api::{Estimator, FitSummary, RunConfig, SvmConfig};
@@ -278,19 +280,31 @@ pub(crate) fn run_sgd_passes<K: Kernel + Copy>(
         for &i in &order {
             summary.steps += 1;
             let steps = summary.steps;
-            let t_sgd = Instant::now();
-            let x = train.row(i);
-            let y = train.label(i) as f64;
-            let margin = y * model.decision_with_norm(x, norms[i]);
-            model.rescale(hyper.lr.shrink(steps, hyper.lambda));
-            if margin < 1.0 {
-                model.push(x, hyper.lr.eta(steps) * y);
-                summary.sv_inserts += 1;
+            {
+                // RAII span: drops (and records) exactly where the old
+                // `Instant::now()`/`add()` pair ended — bit-identical
+                // profiler totals, plus the histogram feed.
+                let _step = telemetry::span(Section::SgdStep, &mut summary.profiler);
+                let x = train.row(i);
+                let y = train.label(i) as f64;
+                let margin = y * model.decision_with_norm(x, norms[i]);
+                model.rescale(hyper.lr.shrink(steps, hyper.lambda));
+                if margin < 1.0 {
+                    model.push(x, hyper.lr.eta(steps) * y);
+                    summary.sv_inserts += 1;
+                }
             }
-            summary.profiler.add(Section::SgdStep, t_sgd.elapsed());
 
             if hyper.budget > 0 && policy.trigger(model.num_sv(), hyper.budget) {
                 summary.maintenance_events += 1;
+                telemetry::registry::count(telemetry::Counter::MaintenanceEvents);
+                telemetry::emit("maintenance", || {
+                    vec![
+                        ("solver", Json::str("bsgd")),
+                        ("num_sv", Json::num(model.num_sv() as f64)),
+                        ("budget", Json::num(hyper.budget as f64)),
+                    ]
+                });
                 if let Some(hook) = audit.as_mut() {
                     (*hook)(model);
                 }
@@ -338,6 +352,14 @@ pub(crate) fn run_sgd_passes<K: Kernel + Copy>(
     // bit-for-bit.
     while hyper.budget > 0 && model.num_sv() > hyper.budget {
         summary.maintenance_events += 1;
+        telemetry::registry::count(telemetry::Counter::MaintenanceEvents);
+        telemetry::emit("maintenance", || {
+            vec![
+                ("solver", Json::str("bsgd")),
+                ("num_sv", Json::num(model.num_sv() as f64)),
+                ("budget", Json::num(hyper.budget as f64)),
+            ]
+        });
         if let Some(hook) = audit.as_mut() {
             (*hook)(model);
         }

@@ -1,0 +1,132 @@
+//! Structured JSONL event log (`repro serve --telemetry-log`).
+//!
+//! Discrete lifecycle events — budget-maintenance triggers, admission
+//! ladder transitions, worker restarts, publishes, rollbacks, shadow
+//! rejections — are appended as one JSON object per line:
+//!
+//! ```text
+//! {"event": "admission_transition", "from": "accept", "to": "shed", "ts_ns": 183041, ...}
+//! ```
+//!
+//! `ts_ns` is a **monotonic** timestamp: nanoseconds since the sink was
+//! installed (`Instant`-based, immune to wall-clock steps), so event
+//! ordering and spacing are trustworthy even across NTP adjustments.
+//!
+//! Cost model: with no sink installed (the default, and every training
+//! CLI path) an emit site is one `Relaxed` load — the field-building
+//! closure is never run. With a sink, fields are built and the line is
+//! written + flushed under a short mutex; event rates are low (per
+//! maintenance event / publish / restart, not per row), so the lock is
+//! uncontended in practice.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+struct Sink {
+    out: BufWriter<File>,
+    start: Instant,
+}
+
+static ACTIVE: AtomicBool = AtomicBool::new(false);
+static SINK: Mutex<Option<Sink>> = Mutex::new(None);
+
+fn sink_lock() -> std::sync::MutexGuard<'static, Option<Sink>> {
+    SINK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Install (or replace) the event log sink. The file is created (or
+/// truncated) immediately so a bad path fails at startup, not at the
+/// first event.
+pub fn set_event_log(path: &Path) -> Result<()> {
+    let file = File::create(path)
+        .with_context(|| format!("creating telemetry log {}", path.display()))?;
+    let mut sink = sink_lock();
+    *sink = Some(Sink { out: BufWriter::new(file), start: Instant::now() });
+    ACTIVE.store(true, Ordering::Relaxed);
+    Ok(())
+}
+
+/// Flush and drop the sink; subsequent emits return to the one-load
+/// fast path.
+pub fn close_event_log() {
+    let mut sink = sink_lock();
+    ACTIVE.store(false, Ordering::Relaxed);
+    if let Some(mut s) = sink.take() {
+        let _ = s.out.flush();
+    }
+}
+
+/// True while a sink is installed (emit sites are live).
+#[inline]
+pub fn event_log_active() -> bool {
+    ACTIVE.load(Ordering::Relaxed)
+}
+
+/// Append one event. `fields` is only invoked when a sink is installed,
+/// so hot paths pay nothing to describe events nobody is recording.
+/// Each line is flushed on write: a crash loses at most the event being
+/// written, never earlier ones.
+#[inline]
+pub fn emit(kind: &'static str, fields: impl FnOnce() -> Vec<(&'static str, Json)>) {
+    if !event_log_active() {
+        return;
+    }
+    emit_slow(kind, fields());
+}
+
+fn emit_slow(kind: &'static str, fields: Vec<(&'static str, Json)>) {
+    let mut sink = sink_lock();
+    let Some(s) = sink.as_mut() else { return };
+    let ts = s.start.elapsed().as_nanos() as u64;
+    let mut pairs = vec![("event", Json::str(kind)), ("ts_ns", Json::num(ts as f64))];
+    pairs.extend(fields);
+    let line = Json::object(pairs);
+    if writeln!(s.out, "{line}").and_then(|_| s.out.flush()).is_err() {
+        // A dead disk must not take the serve tier down with it: drop
+        // the sink and keep serving without an event log.
+        ACTIVE.store(false, Ordering::Relaxed);
+        *sink = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_append_as_jsonl_with_monotone_timestamps() {
+        let dir = std::env::temp_dir().join(format!("telemetry_events_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("events.jsonl");
+        set_event_log(&path).unwrap();
+        assert!(event_log_active());
+        emit("maintenance", || vec![("strategy", Json::str("merge"))]);
+        emit("publish", || vec![("version", Json::num(3.0))]);
+        close_event_log();
+        assert!(!event_log_active());
+        // Emits after close are dropped, not errors.
+        emit("publish", || vec![("version", Json::num(4.0))]);
+
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2, "{text}");
+        let first = Json::parse(lines[0]).unwrap();
+        let second = Json::parse(lines[1]).unwrap();
+        assert_eq!(first.get("event").and_then(Json::as_str), Some("maintenance"));
+        assert_eq!(first.get("strategy").and_then(Json::as_str), Some("merge"));
+        assert_eq!(second.get("event").and_then(Json::as_str), Some("publish"));
+        assert_eq!(second.get("version").and_then(Json::as_usize), Some(3));
+        let t0 = first.get("ts_ns").and_then(Json::as_f64).unwrap();
+        let t1 = second.get("ts_ns").and_then(Json::as_f64).unwrap();
+        assert!(t1 >= t0, "timestamps must be monotone: {t0} then {t1}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

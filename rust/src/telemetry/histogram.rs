@@ -1,0 +1,326 @@
+//! Lock-free log-scale latency histogram (HDR-style).
+//!
+//! The bucket layout trades a small, *bounded* relative error for a
+//! fixed-size, allocation-free, wait-free data structure:
+//!
+//! * values `0..16` ns get one bucket each (exact),
+//! * every octave `[2^k, 2^(k+1))` above that is split into
+//!   `2^SUB_BITS = 8` equal sub-buckets, so any recorded value is off by
+//!   at most one sub-bucket width (`2^(k-3)` ns — a relative error of
+//!   ≤ 12.5%),
+//! * the top bucket saturates: anything at or past `2^40` ns (~18 min)
+//!   lands in bucket [`N_BUCKETS`]` - 1` and is reported as that
+//!   bucket's lower bound or more.
+//!
+//! Recording is four `Relaxed` atomic adds (bucket, count, sum, max) —
+//! no locks, no allocation, no ordering constraints — so writer threads
+//! never contend beyond cache-line traffic and never lose counts.
+//! Quantiles are extracted from an immutable [`HistogramSnapshot`]; the
+//! estimate for any quantile is the upper bound of the bucket holding
+//! the exact order statistic, which pins the error to ≤ one bucket
+//! width (tested below).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Sub-bucket resolution: each octave splits into `2^SUB_BITS` buckets.
+const SUB_BITS: u32 = 3;
+const SUBS: usize = 1 << SUB_BITS; // 8
+/// Values below this are bucketed exactly (one bucket per nanosecond).
+const LINEAR_MAX: u64 = (2 * SUBS) as u64; // 16
+/// Highest octave covered before saturation: `[2^TOP_OCTAVE, 2^(TOP_OCTAVE+1))`.
+const TOP_OCTAVE: u32 = 39;
+/// Total bucket count: 16 linear + 8 per octave for octaves 4..=39.
+pub const N_BUCKETS: usize = LINEAR_MAX as usize + (TOP_OCTAVE as usize - 3) * SUBS; // 304
+
+/// Bucket index for a value in nanoseconds. Monotone in `v`; saturates
+/// at `N_BUCKETS - 1`.
+#[inline]
+pub fn bucket_index(v: u64) -> usize {
+    if v < LINEAR_MAX {
+        return v as usize;
+    }
+    let k = 63 - v.leading_zeros(); // floor(log2 v), >= 4
+    let sub = ((v >> (k - SUB_BITS)) as usize) - SUBS; // 0..8
+    let idx = LINEAR_MAX as usize + (k as usize - 4) * SUBS + sub;
+    idx.min(N_BUCKETS - 1)
+}
+
+/// Inclusive lower bound of bucket `i` in nanoseconds.
+pub fn bucket_min(i: usize) -> u64 {
+    if i < LINEAR_MAX as usize {
+        return i as u64;
+    }
+    let block = (i - LINEAR_MAX as usize) / SUBS;
+    let sub = ((i - LINEAR_MAX as usize) % SUBS) as u64;
+    let k = block as u32 + 4;
+    (1u64 << k) + sub * (1u64 << (k - SUB_BITS))
+}
+
+/// Inclusive upper bound of bucket `i` in nanoseconds. The top bucket is
+/// saturating, so its nominal upper bound undercounts values past
+/// `2^40` ns; quantile estimates never exceed it by construction.
+pub fn bucket_max(i: usize) -> u64 {
+    if i < LINEAR_MAX as usize {
+        return i as u64;
+    }
+    let block = (i - LINEAR_MAX as usize) / SUBS;
+    let sub = ((i - LINEAR_MAX as usize) % SUBS) as u64;
+    let k = block as u32 + 4;
+    (1u64 << k) + (sub + 1) * (1u64 << (k - SUB_BITS)) - 1
+}
+
+/// A wait-free fixed-size latency histogram. All methods take `&self`;
+/// concurrent recorders never block and never lose counts.
+pub struct LogHistogram {
+    buckets: [AtomicU64; N_BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl LogHistogram {
+    pub const fn new() -> Self {
+        // A `const` item is the only stable way to array-initialize
+        // atomics; the "interior mutable const" lint does not apply —
+        // the const is used purely as an initializer template.
+        #[allow(clippy::declare_interior_mutable_const)]
+        const ZERO: AtomicU64 = AtomicU64::new(0);
+        LogHistogram {
+            buckets: [ZERO; N_BUCKETS],
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one value (nanoseconds). Four `Relaxed` atomic RMWs.
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// An immutable copy of the current state. Concurrent recorders may
+    /// land between the bucket reads and the total reads, so the
+    /// snapshot recomputes `count` from the buckets it actually read —
+    /// internally consistent even under write load.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        let mut buckets = [0u64; N_BUCKETS];
+        for (i, b) in self.buckets.iter().enumerate() {
+            buckets[i] = b.load(Ordering::Relaxed);
+        }
+        let count = buckets.iter().sum();
+        HistogramSnapshot {
+            buckets,
+            count,
+            sum: self.sum.load(Ordering::Relaxed),
+            max: self.max.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Immutable histogram state; the unit for quantile extraction,
+/// Prometheus rendering, and cross-shard merging.
+#[derive(Clone)]
+pub struct HistogramSnapshot {
+    pub buckets: [u64; N_BUCKETS],
+    pub count: u64,
+    pub sum: u64,
+    pub max: u64,
+}
+
+impl HistogramSnapshot {
+    pub fn empty() -> Self {
+        HistogramSnapshot { buckets: [0; N_BUCKETS], count: 0, sum: 0, max: 0 }
+    }
+
+    /// Quantile estimate in nanoseconds: the upper bound of the bucket
+    /// containing the exact order statistic of rank `ceil(q * count)`.
+    /// Always ≥ the exact value and within one bucket width of it.
+    /// Returns 0 on an empty histogram.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut cum = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return bucket_max(i);
+            }
+        }
+        bucket_max(N_BUCKETS - 1)
+    }
+
+    /// Fold `other` into `self`. Associative and commutative (bucket-wise
+    /// addition + max), so shard histograms merge in any order.
+    pub fn merge(&mut self, other: &HistogramSnapshot) {
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.max = self.max.max(other.max);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic xorshift64* — property tests must not depend on
+    /// ambient entropy.
+    fn rng(seed: &mut u64) -> u64 {
+        let mut x = *seed;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        *seed = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    #[test]
+    fn bucket_layout_is_monotone_and_self_consistent() {
+        let mut prev_idx = 0usize;
+        let mut seed = 7u64;
+        let mut probes: Vec<u64> = (0..200u64).collect();
+        for _ in 0..2000 {
+            probes.push(rng(&mut seed) >> (rng(&mut seed) % 40));
+        }
+        probes.sort_unstable();
+        for &v in &probes {
+            let i = bucket_index(v);
+            assert!(i >= prev_idx, "index not monotone at v={v}");
+            prev_idx = i;
+            if i < N_BUCKETS - 1 {
+                assert!(
+                    bucket_min(i) <= v && v <= bucket_max(i),
+                    "v={v} outside bucket {i}: [{}, {}]",
+                    bucket_min(i),
+                    bucket_max(i)
+                );
+            } else {
+                assert!(v >= bucket_min(i), "saturated v={v} below top bucket");
+            }
+        }
+        // Buckets tile the axis: each bucket starts where the previous ended.
+        for i in 1..N_BUCKETS {
+            assert_eq!(bucket_min(i), bucket_max(i - 1) + 1, "gap before bucket {i}");
+        }
+    }
+
+    #[test]
+    fn quantile_error_is_at_most_one_bucket_width() {
+        let h = LogHistogram::new();
+        let mut seed = 0xBADC_0FFE;
+        let mut values: Vec<u64> = Vec::new();
+        for _ in 0..5000 {
+            // Mix of scales: ns-level noise through multi-ms latencies.
+            let v = rng(&mut seed) % (1u64 << (4 + (rng(&mut seed) % 28)));
+            h.record(v);
+            values.push(v);
+        }
+        values.sort_unstable();
+        let snap = h.snapshot();
+        for q in [0.5, 0.9, 0.99, 0.999] {
+            let rank = ((q * values.len() as f64).ceil() as usize).clamp(1, values.len());
+            let exact = values[rank - 1];
+            let est = snap.quantile(q);
+            // The estimate is the upper bound of the exact value's bucket:
+            // never below the truth, never more than one bucket width above.
+            assert_eq!(est, bucket_max(bucket_index(exact)), "q={q}");
+            assert!(est >= exact, "q={q}: est {est} < exact {exact}");
+            let width = bucket_max(bucket_index(exact)) - bucket_min(bucket_index(exact)) + 1;
+            assert!(est - exact <= width, "q={q}: error {} > width {width}", est - exact);
+        }
+    }
+
+    #[test]
+    fn quantile_edge_cases() {
+        assert_eq!(HistogramSnapshot::empty().quantile(0.5), 0);
+        let h = LogHistogram::new();
+        h.record(100);
+        let s = h.snapshot();
+        // Single sample: every quantile reports its bucket.
+        for q in [0.0, 0.5, 1.0] {
+            assert_eq!(s.quantile(q), bucket_max(bucket_index(100)));
+        }
+    }
+
+    #[test]
+    fn merge_is_associative_and_commutative() {
+        let mut seed = 42u64;
+        let mut parts = Vec::new();
+        for _ in 0..3 {
+            let h = LogHistogram::new();
+            for _ in 0..500 {
+                h.record(rng(&mut seed) % 1_000_000);
+            }
+            parts.push(h.snapshot());
+        }
+        let (a, b, c) = (&parts[0], &parts[1], &parts[2]);
+        // (a + b) + c
+        let mut left = a.clone();
+        left.merge(b);
+        left.merge(c);
+        // a + (b + c)
+        let mut bc = b.clone();
+        bc.merge(c);
+        let mut right = a.clone();
+        right.merge(&bc);
+        // c + b + a (commutativity)
+        let mut rev = c.clone();
+        rev.merge(b);
+        rev.merge(a);
+        for other in [&right, &rev] {
+            assert_eq!(left.buckets, other.buckets);
+            assert_eq!(left.count, other.count);
+            assert_eq!(left.sum, other.sum);
+            assert_eq!(left.max, other.max);
+        }
+    }
+
+    #[test]
+    fn top_bucket_saturates_instead_of_overflowing() {
+        let h = LogHistogram::new();
+        h.record(u64::MAX);
+        h.record(1u64 << 62);
+        h.record(bucket_min(N_BUCKETS - 1));
+        let s = h.snapshot();
+        assert_eq!(s.count, 3);
+        assert_eq!(s.buckets[N_BUCKETS - 1], 3);
+        assert_eq!(s.max, u64::MAX);
+        assert_eq!(s.quantile(1.0), bucket_max(N_BUCKETS - 1));
+    }
+
+    #[test]
+    fn concurrent_writers_never_lose_counts() {
+        const THREADS: usize = 8;
+        const PER_THREAD: u64 = 20_000;
+        let h = LogHistogram::new();
+        std::thread::scope(|scope| {
+            for t in 0..THREADS {
+                let h = &h;
+                scope.spawn(move || {
+                    let mut seed = 0x5EED + t as u64;
+                    for _ in 0..PER_THREAD {
+                        h.record(rng(&mut seed) % 1_000_000);
+                    }
+                });
+            }
+        });
+        let s = h.snapshot();
+        let expected = THREADS as u64 * PER_THREAD;
+        assert_eq!(s.count, expected, "lost or duplicated counts");
+        assert_eq!(s.buckets.iter().sum::<u64>(), expected);
+    }
+}

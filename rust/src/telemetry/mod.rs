@@ -1,0 +1,141 @@
+//! Unified telemetry: lock-free metric registry, log-scale latency
+//! histograms, RAII span timing, JSONL event log, and Prometheus-text
+//! exposition.
+//!
+//! The subsystem closes the gap between the repo's *post-hoc*
+//! instrumentation (per-run [`SectionProfiler`] totals, `BENCH_*.json`
+//! artifacts) and what a live operator or a CI SLO gate needs:
+//! continuously scrapeable counters, gauges, and p50/p99/p999 latency
+//! distributions for every training section and serving stage.
+//!
+//! * [`registry`] — process-wide atomic counters/gauges and one
+//!   [`histogram::LogHistogram`] per [`registry::Stage`]. Static
+//!   storage, relaxed atomics, no handles to thread through APIs.
+//! * [`histogram`] — the HDR-style log-bucketed latency histogram
+//!   (≤ 12.5% relative error, wait-free recording, mergeable
+//!   snapshots, exact-rank quantile extraction).
+//! * [`span`]/[`stage_span`] — RAII timing guards superseding ad-hoc
+//!   `Instant::now()` pairs. A [`Span`] feeds the run-local
+//!   [`SectionProfiler`] (bit-identical to the pair it replaced —
+//!   same `elapsed().as_nanos()` sample), and the profiler itself
+//!   forwards every sample into the matching stage histogram, so *all*
+//!   profiled code feeds telemetry through one seam.
+//! * [`events`] — append-only JSONL event log of discrete lifecycle
+//!   events with monotonic timestamps (`--telemetry-log`).
+//! * [`prometheus`] — text-format rendering and the loopback scrape
+//!   endpoint (`--metrics-port`).
+//!
+//! # Overhead contract
+//!
+//! Recording is always-on by default but globally maskable
+//! ([`registry::set_enabled`]): a disabled site costs one relaxed
+//! atomic load. The `repro bench --observability` gate measures the
+//! instrumented BSGD hot loop against the disabled arm and CI asserts
+//! the overhead stays ≤ 2% (see `experiments::observability_bench`).
+
+pub mod events;
+pub mod histogram;
+pub mod prometheus;
+pub mod registry;
+
+use std::time::Instant;
+
+use crate::metrics::{Section, SectionProfiler};
+
+pub use events::{close_event_log, emit, event_log_active, set_event_log};
+pub use histogram::{HistogramSnapshot, LogHistogram};
+pub use registry::{Counter, Gauge, Snapshot, Stage};
+
+/// RAII timing guard over a profiled training section. On drop it adds
+/// `start.elapsed().as_nanos()` to the profiler — the exact sample the
+/// `Instant::now()`/`add()` pair it supersedes would have recorded —
+/// and the profiler forwards the sample into the section's histogram.
+#[must_use = "a span records on drop; an unused span measures nothing"]
+pub struct Span<'p> {
+    profiler: &'p mut SectionProfiler,
+    section: Section,
+    start: Instant,
+}
+
+impl Drop for Span<'_> {
+    #[inline]
+    fn drop(&mut self) {
+        let ns = self.start.elapsed().as_nanos() as u64;
+        self.profiler.add_ns(self.section, ns);
+    }
+}
+
+/// Open a timing span over `section`, recording into `profiler` (and,
+/// through it, the section's stage histogram) when the guard drops.
+#[inline]
+pub fn span(section: Section, profiler: &mut SectionProfiler) -> Span<'_> {
+    Span { profiler, section, start: Instant::now() }
+}
+
+/// RAII timing guard over a serve-side stage. On drop the elapsed time
+/// is recorded straight into the stage histogram — serve stages have no
+/// run-local profiler.
+#[must_use = "a span records on drop; an unused span measures nothing"]
+pub struct StageSpan {
+    stage: Stage,
+    start: Instant,
+}
+
+impl Drop for StageSpan {
+    #[inline]
+    fn drop(&mut self) {
+        let ns = self.start.elapsed().as_nanos() as u64;
+        registry::record_stage_ns(self.stage, ns);
+    }
+}
+
+/// Open a timing span over a serve stage.
+#[inline]
+pub fn stage_span(stage: Stage) -> StageSpan {
+    StageSpan { stage, start: Instant::now() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn span_feeds_profiler_and_histogram() {
+        // Hold the toggle lock so the observability bench's disabled arm
+        // cannot mask the histogram forward this test asserts on.
+        let _guard = registry::toggle_lock();
+        let mut prof = SectionProfiler::new();
+        let hist_before = registry::stage_snapshot(Stage::MaintScan).count;
+        {
+            let _s = span(Section::MaintScan, &mut prof);
+            std::hint::black_box(0u64);
+        }
+        assert_eq!(prof.events(Section::MaintScan), 1);
+        // The profiler forwarded the same sample into the histogram.
+        assert!(registry::stage_snapshot(Stage::MaintScan).count >= hist_before + 1);
+    }
+
+    #[test]
+    fn stage_span_feeds_the_stage_histogram() {
+        let _guard = registry::toggle_lock();
+        let before = registry::stage_snapshot(Stage::AdmissionDecide);
+        {
+            let _s = stage_span(Stage::AdmissionDecide);
+        }
+        let after = registry::stage_snapshot(Stage::AdmissionDecide);
+        assert!(after.count >= before.count + 1);
+    }
+
+    #[test]
+    fn consecutive_spans_attribute_time_to_their_own_sections() {
+        let mut prof = SectionProfiler::new();
+        {
+            let _outer = span(Section::MaintApply, &mut prof);
+        }
+        {
+            let _inner = span(Section::MaintA, &mut prof);
+        }
+        assert_eq!(prof.events(Section::MaintApply), 1);
+        assert_eq!(prof.events(Section::MaintA), 1);
+    }
+}

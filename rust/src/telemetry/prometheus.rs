@@ -1,0 +1,188 @@
+//! Prometheus text-format exposition (`repro serve --metrics-port`).
+//!
+//! [`render`] serializes the whole registry snapshot in the Prometheus
+//! text format (version 0.0.4): counters and gauges as single samples,
+//! each stage histogram as a cumulative `_bucket{le="…"}` series (one
+//! bound per octave block, capped at the highest non-empty bucket) plus
+//! `_sum`/`_count`, and explicit `…_quantile_seconds{q="…"}` gauges for
+//! p50/p99/p999 so dashboards get exact-from-process quantiles without
+//! server-side `histogram_quantile` interpolation.
+//!
+//! [`spawn_exporter`] serves that text over a deliberately tiny
+//! HTTP/1.1 responder on loopback: every request — whatever the path —
+//! is answered with one full scrape and the connection is closed. No
+//! routing, no keep-alive, no dependency; a scraper, `curl`, or a
+//! health probe all get the same document.
+
+use std::io::{Read, Write};
+use std::net::TcpListener;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use super::histogram::{bucket_max, N_BUCKETS};
+use super::registry::{self, Snapshot};
+
+/// Quantiles exported as explicit gauges next to each histogram.
+const QUANTILES: [(f64, &str); 3] = [(0.5, "0.5"), (0.99, "0.99"), (0.999, "0.999")];
+
+/// Render one full scrape of the current registry state.
+pub fn render() -> String {
+    render_snapshot(&registry::snapshot())
+}
+
+fn render_snapshot(snap: &Snapshot) -> String {
+    let mut out = String::with_capacity(8 * 1024);
+    for &(c, v) in &snap.counters {
+        let key = c.key();
+        out.push_str(&format!("# TYPE {key} counter\n{key} {v}\n"));
+    }
+    for &(g, v) in &snap.gauges {
+        let key = g.key();
+        out.push_str(&format!("# TYPE {key} gauge\n{key} {v}\n"));
+    }
+    for (stage, h) in &snap.stages {
+        let family = format!("budgetsvm_{}_seconds", stage.key());
+        out.push_str(&format!("# TYPE {family} histogram\n"));
+        // One `le` bound per octave block keeps the series count sane
+        // (~40 bounds instead of 304); stop at the block containing the
+        // highest non-empty bucket — empty tail octaves add no
+        // information to a cumulative histogram.
+        let highest = h.buckets.iter().rposition(|&c| c > 0);
+        let mut cum = 0u64;
+        if let Some(hi) = highest {
+            let mut i = 0usize;
+            while i < N_BUCKETS {
+                let block_end = (i + 8 - 1).min(N_BUCKETS - 1);
+                cum += h.buckets[i..=block_end].iter().sum::<u64>();
+                let le = bucket_max(block_end) as f64 * 1e-9;
+                out.push_str(&format!("{family}_bucket{{le=\"{le}\"}} {cum}\n"));
+                if block_end >= hi {
+                    break;
+                }
+                i = block_end + 1;
+            }
+        }
+        out.push_str(&format!("{family}_bucket{{le=\"+Inf\"}} {}\n", h.count));
+        out.push_str(&format!("{family}_sum {}\n", h.sum as f64 * 1e-9));
+        out.push_str(&format!("{family}_count {}\n", h.count));
+        let qfamily = format!("budgetsvm_{}_quantile_seconds", stage.key());
+        out.push_str(&format!("# TYPE {qfamily} gauge\n"));
+        for (q, label) in QUANTILES {
+            let v = h.quantile(q) as f64 * 1e-9;
+            out.push_str(&format!("{qfamily}{{q=\"{label}\"}} {v}\n"));
+        }
+    }
+    out
+}
+
+/// Bind `127.0.0.1:port` (0 = ephemeral) and serve scrapes from a
+/// detached thread for the life of the process. Returns the bound port.
+pub fn spawn_exporter(port: u16) -> Result<u16> {
+    let listener = TcpListener::bind(("127.0.0.1", port))
+        .with_context(|| format!("binding metrics port {port}"))?;
+    let bound = listener.local_addr().context("metrics listener address")?.port();
+    std::thread::Builder::new()
+        .name("metrics-exporter".to_string())
+        .spawn(move || {
+            for stream in listener.incoming() {
+                let Ok(mut stream) = stream else { continue };
+                // A stalled scraper costs at most the read timeout; the
+                // exporter never blocks on a dead peer.
+                let _ = stream.set_read_timeout(Some(Duration::from_secs(2)));
+                let _ = stream.set_write_timeout(Some(Duration::from_secs(2)));
+                let mut buf = [0u8; 1024];
+                let _ = stream.read(&mut buf); // request line + headers; contents ignored
+                let body = render();
+                let resp = format!(
+                    "HTTP/1.1 200 OK\r\nContent-Type: text/plain; version=0.0.4; \
+                     charset=utf-8\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+                    body.len(),
+                    body
+                );
+                let _ = stream.write_all(resp.as_bytes());
+            }
+        })
+        .context("spawning metrics exporter thread")?;
+    Ok(bound)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::registry::{Counter, Gauge, Stage};
+
+    #[test]
+    fn render_contains_every_registered_metric() {
+        // Make sure at least one histogram is non-empty so the bucket
+        // path renders too.
+        registry::record_stage_ns(Stage::WalAppend, 1_500_000);
+        let text = render();
+        for c in Counter::ALL {
+            assert!(text.contains(c.key()), "scrape missing {}", c.key());
+            assert!(text.contains(&format!("# TYPE {} counter", c.key())));
+        }
+        for g in Gauge::ALL {
+            assert!(text.contains(g.key()), "scrape missing {}", g.key());
+            assert!(text.contains(&format!("# TYPE {} gauge", g.key())));
+        }
+        for s in Stage::ALL {
+            let family = format!("budgetsvm_{}_seconds", s.key());
+            assert!(text.contains(&format!("# TYPE {family} histogram")), "{family}");
+            assert!(text.contains(&format!("{family}_count")), "{family}_count");
+            assert!(text.contains(&format!("{family}_bucket{{le=\"+Inf\"}}")), "{family}");
+            for (_, label) in QUANTILES {
+                assert!(
+                    text.contains(&format!(
+                        "budgetsvm_{}_quantile_seconds{{q=\"{label}\"}}",
+                        s.key()
+                    )),
+                    "missing q={label} for {}",
+                    s.key()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn cumulative_buckets_are_monotone_and_end_at_count() {
+        // Serialize with the observability bench's disabled arm: the
+        // recorded samples below must actually land.
+        let _guard = registry::toggle_lock();
+        registry::record_stage_ns(Stage::ShardMerge, 3_000);
+        registry::record_stage_ns(Stage::ShardMerge, 700_000);
+        registry::record_stage_ns(Stage::ShardMerge, 90_000_000);
+        let snap = registry::snapshot();
+        let text = render_snapshot(&snap);
+        let family = "budgetsvm_serve_shard_merge_seconds_bucket";
+        let mut prev = 0u64;
+        let mut last = 0u64;
+        let mut n = 0usize;
+        for line in text.lines().filter(|l| l.starts_with(family)) {
+            let v: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(v >= prev, "bucket series must be cumulative: {line}");
+            prev = v;
+            last = v;
+            n += 1;
+        }
+        assert!(n >= 2, "expected several le bounds plus +Inf");
+        let count =
+            snap.stages.iter().find(|(s, _)| *s == Stage::ShardMerge).unwrap().1.count;
+        assert_eq!(last, count, "+Inf bucket must equal _count");
+    }
+
+    #[test]
+    fn exporter_answers_http_scrapes_on_loopback() {
+        registry::record_stage_ns(Stage::BatchQueueWait, 42_000);
+        let port = spawn_exporter(0).unwrap();
+        let mut stream =
+            std::net::TcpStream::connect(("127.0.0.1", port)).expect("connect exporter");
+        stream.write_all(b"GET /metrics HTTP/1.1\r\nHost: localhost\r\n\r\n").unwrap();
+        let mut resp = String::new();
+        stream.read_to_string(&mut resp).unwrap();
+        assert!(resp.starts_with("HTTP/1.1 200 OK"), "{resp}");
+        assert!(resp.contains("text/plain; version=0.0.4"));
+        assert!(resp.contains("budgetsvm_serve_batch_queue_wait_seconds_count"));
+        assert!(resp.contains("budgetsvm_publishes_total"));
+    }
+}

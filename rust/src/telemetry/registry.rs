@@ -1,0 +1,405 @@
+//! Process-wide metric registry: named atomic counters, gauges, and one
+//! [`LogHistogram`] per pipeline stage.
+//!
+//! Everything lives in `static` storage — no handles to thread through
+//! constructors, no locks on the record path. A recording site costs:
+//!
+//! * one `Relaxed` load of the global enable flag, plus
+//! * (when enabled) one `Relaxed` RMW for a counter/gauge, or four for
+//!   a histogram sample.
+//!
+//! With telemetry disabled ([`set_enabled`]) the cost is the single
+//! relaxed load — this is the "compiled-out" arm the
+//! `repro bench --observability` overhead gate measures against.
+//!
+//! Metric naming follows one convention (see `metrics` module docs for
+//! the full contract): counters are `budgetsvm_<noun>_total`, gauges are
+//! `budgetsvm_<noun>[_<unit>]`, and stage latencies are
+//! `budgetsvm_<stage>_seconds` where `<stage>` is `train_*` for solver
+//! sections and `serve_*` for serving stages.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+use crate::metrics::Section;
+use crate::util::json::Json;
+
+use super::histogram::{HistogramSnapshot, LogHistogram};
+
+/// Monotone event counters. Keys are full Prometheus metric names.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Counter {
+    AdmissionAccept,
+    AdmissionShed,
+    AdmissionReject,
+    DeadlineExpired,
+    WorkerRestarts,
+    RowsRequeued,
+    Publishes,
+    Rollbacks,
+    ShadowRejected,
+    MaintenanceEvents,
+    DeferredPublishes,
+}
+
+pub const N_COUNTERS: usize = 11;
+
+impl Counter {
+    pub const ALL: [Counter; N_COUNTERS] = [
+        Counter::AdmissionAccept,
+        Counter::AdmissionShed,
+        Counter::AdmissionReject,
+        Counter::DeadlineExpired,
+        Counter::WorkerRestarts,
+        Counter::RowsRequeued,
+        Counter::Publishes,
+        Counter::Rollbacks,
+        Counter::ShadowRejected,
+        Counter::MaintenanceEvents,
+        Counter::DeferredPublishes,
+    ];
+
+    pub fn key(self) -> &'static str {
+        match self {
+            Counter::AdmissionAccept => "budgetsvm_admission_accept_total",
+            Counter::AdmissionShed => "budgetsvm_admission_shed_total",
+            Counter::AdmissionReject => "budgetsvm_admission_reject_total",
+            Counter::DeadlineExpired => "budgetsvm_deadline_expired_total",
+            Counter::WorkerRestarts => "budgetsvm_worker_restarts_total",
+            Counter::RowsRequeued => "budgetsvm_rows_requeued_total",
+            Counter::Publishes => "budgetsvm_publishes_total",
+            Counter::Rollbacks => "budgetsvm_rollbacks_total",
+            Counter::ShadowRejected => "budgetsvm_shadow_rejected_total",
+            Counter::MaintenanceEvents => "budgetsvm_maintenance_events_total",
+            Counter::DeferredPublishes => "budgetsvm_deferred_publishes_total",
+        }
+    }
+}
+
+/// Last-write-wins instantaneous values.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Gauge {
+    QueueDepth,
+    ModelVersion,
+    ModelNumSv,
+}
+
+pub const N_GAUGES: usize = 3;
+
+impl Gauge {
+    pub const ALL: [Gauge; N_GAUGES] = [Gauge::QueueDepth, Gauge::ModelVersion, Gauge::ModelNumSv];
+
+    pub fn key(self) -> &'static str {
+        match self {
+            Gauge::QueueDepth => "budgetsvm_queue_depth_rows",
+            Gauge::ModelVersion => "budgetsvm_model_version",
+            Gauge::ModelNumSv => "budgetsvm_model_num_sv",
+        }
+    }
+}
+
+/// Latency-histogram stages. The first six mirror
+/// [`crate::metrics::Section`] *in declaration order* — that index
+/// identity is what lets [`record_section_ns`] route every existing
+/// `SectionProfiler` sample into its histogram without a lookup table.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    SgdStep,
+    MaintA,
+    MaintScan,
+    MaintApply,
+    DualAscent,
+    GramFill,
+    BatchQueueWait,
+    WalAppend,
+    AdmissionDecide,
+    PublishStall,
+    ShardMerge,
+    ShadowEval,
+}
+
+pub const N_STAGES: usize = 12;
+
+impl Stage {
+    pub const ALL: [Stage; N_STAGES] = [
+        Stage::SgdStep,
+        Stage::MaintA,
+        Stage::MaintScan,
+        Stage::MaintApply,
+        Stage::DualAscent,
+        Stage::GramFill,
+        Stage::BatchQueueWait,
+        Stage::WalAppend,
+        Stage::AdmissionDecide,
+        Stage::PublishStall,
+        Stage::ShardMerge,
+        Stage::ShadowEval,
+    ];
+
+    /// Stage slug: `train_*` for solver sections, `serve_*` for serving
+    /// stages. The Prometheus family is `budgetsvm_<slug>_seconds`.
+    pub fn key(self) -> &'static str {
+        match self {
+            Stage::SgdStep => "train_sgd_step",
+            Stage::MaintA => "train_maint_a",
+            Stage::MaintScan => "train_maint_scan",
+            Stage::MaintApply => "train_maint_apply",
+            Stage::DualAscent => "train_dual_ascent",
+            Stage::GramFill => "train_gram_fill",
+            Stage::BatchQueueWait => "serve_batch_queue_wait",
+            Stage::WalAppend => "serve_wal_append",
+            Stage::AdmissionDecide => "serve_admission_decide",
+            Stage::PublishStall => "serve_publish_stall",
+            Stage::ShardMerge => "serve_shard_merge",
+            Stage::ShadowEval => "serve_shadow_eval",
+        }
+    }
+}
+
+// The first N_SECTIONS stages must mirror Section declaration order —
+// checked at compile time via the key strings of the boundary variants.
+const _: () = assert!(Counter::ALL.len() == N_COUNTERS);
+const _: () = assert!(Gauge::ALL.len() == N_GAUGES);
+const _: () = assert!(Stage::ALL.len() == N_STAGES);
+
+static ENABLED: AtomicBool = AtomicBool::new(true);
+
+#[allow(clippy::declare_interior_mutable_const)]
+const ZERO_U64: AtomicU64 = AtomicU64::new(0);
+#[allow(clippy::declare_interior_mutable_const)]
+const EMPTY_HIST: LogHistogram = LogHistogram::new();
+
+static COUNTERS: [AtomicU64; N_COUNTERS] = [ZERO_U64; N_COUNTERS];
+static GAUGES: [AtomicU64; N_GAUGES] = [ZERO_U64; N_GAUGES];
+static STAGES: [LogHistogram; N_STAGES] = [EMPTY_HIST; N_STAGES];
+
+/// Globally enable/disable all recording. Disabled recording costs one
+/// relaxed load per site. (Scraping a disabled registry is fine — it
+/// just stops moving.)
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Increment a counter by 1.
+#[inline]
+pub fn count(c: Counter) {
+    count_n(c, 1);
+}
+
+/// Increment a counter by `n`.
+#[inline]
+pub fn count_n(c: Counter, n: u64) {
+    if enabled() {
+        COUNTERS[c as usize].fetch_add(n, Ordering::Relaxed);
+    }
+}
+
+/// Current counter value (monotone; only grows while enabled).
+pub fn counter_value(c: Counter) -> u64 {
+    COUNTERS[c as usize].load(Ordering::Relaxed)
+}
+
+/// Set a gauge to an instantaneous value.
+#[inline]
+pub fn gauge_set(g: Gauge, v: u64) {
+    if enabled() {
+        GAUGES[g as usize].store(v, Ordering::Relaxed);
+    }
+}
+
+/// Current gauge value.
+pub fn gauge_value(g: Gauge) -> u64 {
+    GAUGES[g as usize].load(Ordering::Relaxed)
+}
+
+/// Record one latency sample (nanoseconds) into a stage histogram.
+#[inline]
+pub fn record_stage_ns(stage: Stage, ns: u64) {
+    if enabled() {
+        STAGES[stage as usize].record(ns);
+    }
+}
+
+/// Route a [`SectionProfiler`](crate::metrics::SectionProfiler) sample
+/// into the matching training-stage histogram. Called from
+/// `SectionProfiler::add_ns`, so every existing profiled section feeds
+/// its histogram without touching the call sites.
+#[inline]
+pub fn record_section_ns(section: Section, ns: u64) {
+    if enabled() {
+        STAGES[section as usize].record(ns);
+    }
+}
+
+/// Immutable snapshot of a single stage histogram.
+pub fn stage_snapshot(stage: Stage) -> HistogramSnapshot {
+    STAGES[stage as usize].snapshot()
+}
+
+/// A consistent-enough point-in-time copy of the whole registry (each
+/// metric is read atomically; cross-metric skew is unavoidable and
+/// fine for monitoring).
+pub struct Snapshot {
+    pub counters: Vec<(Counter, u64)>,
+    pub gauges: Vec<(Gauge, u64)>,
+    pub stages: Vec<(Stage, HistogramSnapshot)>,
+}
+
+/// Snapshot every counter, gauge, and stage histogram.
+pub fn snapshot() -> Snapshot {
+    Snapshot {
+        counters: Counter::ALL.iter().map(|&c| (c, counter_value(c))).collect(),
+        gauges: Gauge::ALL.iter().map(|&g| (g, gauge_value(g))).collect(),
+        stages: Stage::ALL.iter().map(|&s| (s, stage_snapshot(s))).collect(),
+    }
+}
+
+impl Snapshot {
+    /// JSON form used by the serve `metrics` verb: counters and gauges
+    /// as flat maps, stages as `{count, sum_ns, max_ns, p50_ns, p99_ns,
+    /// p999_ns}` objects keyed by stage slug.
+    pub fn to_json(&self) -> Json {
+        let counters =
+            self.counters.iter().map(|&(c, v)| (c.key(), Json::num(v as f64))).collect();
+        let gauges =
+            self.gauges.iter().map(|&(g, v)| (g.key(), Json::num(v as f64))).collect();
+        let stages = self
+            .stages
+            .iter()
+            .map(|(s, h)| {
+                (
+                    s.key(),
+                    Json::object(vec![
+                        ("count", Json::num(h.count as f64)),
+                        ("sum_ns", Json::num(h.sum as f64)),
+                        ("max_ns", Json::num(h.max as f64)),
+                        ("p50_ns", Json::num(h.quantile(0.5) as f64)),
+                        ("p99_ns", Json::num(h.quantile(0.99) as f64)),
+                        ("p999_ns", Json::num(h.quantile(0.999) as f64)),
+                    ]),
+                )
+            })
+            .collect();
+        Json::object(vec![
+            ("counters", Json::object(counters)),
+            ("gauges", Json::object(gauges)),
+            ("stages", Json::object(stages)),
+        ])
+    }
+}
+
+/// Serializes tests (and the observability bench) that toggle the
+/// global enable flag, so concurrent tests never observe a surprise
+/// disable window.
+pub(crate) fn toggle_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_and_only_grow() {
+        // Global state is shared with concurrently running tests, so
+        // assert deltas, not absolutes — and hold the toggle lock so the
+        // observability bench's disabled arm cannot mask the recording.
+        let _guard = toggle_lock();
+        let before = counter_value(Counter::MaintenanceEvents);
+        count(Counter::MaintenanceEvents);
+        count_n(Counter::MaintenanceEvents, 4);
+        let after = counter_value(Counter::MaintenanceEvents);
+        assert!(after >= before + 5, "before={before} after={after}");
+    }
+
+    #[test]
+    fn disabled_recording_is_a_no_op() {
+        let _guard = toggle_lock();
+        set_enabled(false);
+        let c0 = counter_value(Counter::RowsRequeued);
+        let h0 = stage_snapshot(Stage::ShadowEval).count;
+        count(Counter::RowsRequeued);
+        record_stage_ns(Stage::ShadowEval, 1_000);
+        gauge_set(Gauge::QueueDepth, 123_456_789);
+        assert_eq!(counter_value(Counter::RowsRequeued), c0);
+        assert_eq!(stage_snapshot(Stage::ShadowEval).count, h0);
+        assert_ne!(gauge_value(Gauge::QueueDepth), 123_456_789);
+        set_enabled(true);
+        count(Counter::RowsRequeued);
+        assert!(counter_value(Counter::RowsRequeued) >= c0 + 1);
+    }
+
+    #[test]
+    fn sections_route_to_the_matching_training_stage() {
+        let _guard = toggle_lock();
+        let pairs = [
+            (Section::SgdStep, Stage::SgdStep),
+            (Section::MaintA, Stage::MaintA),
+            (Section::MaintScan, Stage::MaintScan),
+            (Section::MaintApply, Stage::MaintApply),
+            (Section::DualAscent, Stage::DualAscent),
+            (Section::GramFill, Stage::GramFill),
+        ];
+        for (section, stage) in pairs {
+            assert_eq!(section as usize, stage as usize);
+            let before = stage_snapshot(stage).count;
+            record_section_ns(section, 500);
+            assert!(stage_snapshot(stage).count >= before + 1);
+        }
+    }
+
+    #[test]
+    fn metric_keys_are_unique_and_follow_the_convention() {
+        let mut keys: Vec<&str> = Vec::new();
+        for c in Counter::ALL {
+            assert!(c.key().starts_with("budgetsvm_"), "{}", c.key());
+            assert!(c.key().ends_with("_total"), "counter {} missing _total", c.key());
+            keys.push(c.key());
+        }
+        for g in Gauge::ALL {
+            assert!(g.key().starts_with("budgetsvm_"), "{}", g.key());
+            keys.push(g.key());
+        }
+        for s in Stage::ALL {
+            assert!(
+                s.key().starts_with("train_") || s.key().starts_with("serve_"),
+                "{}",
+                s.key()
+            );
+            keys.push(s.key());
+        }
+        let n = keys.len();
+        keys.sort_unstable();
+        keys.dedup();
+        assert_eq!(keys.len(), n, "duplicate metric keys");
+    }
+
+    #[test]
+    fn snapshot_json_has_all_three_families() {
+        let _guard = toggle_lock();
+        let before = counter_value(Counter::Publishes);
+        count(Counter::Publishes);
+        record_stage_ns(Stage::PublishStall, 2_000_000);
+        let json = snapshot().to_json();
+        let counters = json.get("counters").expect("counters");
+        let v = counters
+            .get(Counter::Publishes.key())
+            .and_then(Json::as_f64)
+            .expect("publishes counter");
+        assert!(v >= (before + 1) as f64);
+        for g in Gauge::ALL {
+            assert!(json.get("gauges").and_then(|o| o.get(g.key())).is_some(), "{}", g.key());
+        }
+        for s in Stage::ALL {
+            let st = json.get("stages").and_then(|o| o.get(s.key())).expect(s.key());
+            for field in ["count", "sum_ns", "max_ns", "p50_ns", "p99_ns", "p999_ns"] {
+                assert!(st.get(field).is_some(), "{} missing {field}", s.key());
+            }
+        }
+    }
+}
