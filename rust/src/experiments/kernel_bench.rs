@@ -9,10 +9,15 @@
 //!    `B ∈ {64, 256, 1024}` × `d ∈ {16, 128, 784}`, in four arms: the
 //!    blocked engine on the dispatched SIMD tier, the same engine under
 //!    the forced-scalar override, the SIMD tier with the opt-in fast-exp
-//!    exponential, and the pre-tiling one-SV-at-a-time scalar reference.
+//!    exponential, and the pre-tiling one-SV-at-a-time scalar reference —
+//!    plus a `per_tier` column with the row time under every tier
+//!    available on this machine (scalar/avx2/avx512/neon, forced).
 //!    A `kappa_scan` section times the batched multi-pivot
 //!    `kernel_rows_for_svs` (one tile pass for all pivots) against the
-//!    row-wise equivalent, dispatched and forced-scalar.
+//!    row-wise equivalent, dispatched and forced-scalar. A
+//!    `fused_decision` section times the fused α·κ decision path
+//!    (`decision_with_norm` riding `tile_decision`) against the unfused
+//!    materialize-then-reduce equivalent, per available tier.
 //! 2. **Multiclass training scaling** — one-vs-rest `fit` steps/s with one
 //!    worker vs all workers on a ≥4-class synthetic dataset (same seeds:
 //!    the two runs produce bit-identical machines; only the wall clock
@@ -101,6 +106,7 @@ pub fn run(quick: bool, threads: usize) -> Result<Json> {
     let mut rng = Rng::new(0xB10C);
     let mut sweep = Vec::new();
     let mut kappa = Vec::new();
+    let mut fused = Vec::new();
     for &b in &SWEEP_B {
         for &d in &SWEEP_D {
             let model = random_model(b, d, &mut rng);
@@ -135,6 +141,21 @@ pub fn run(quick: bool, threads: usize) -> Result<Json> {
                     model.kernel_row_scalar(&x, xn, &mut out)
                 })
                 .mean_ns();
+            // Row time under every tier this machine can run (forced).
+            let tier_cols: Vec<(&str, Json)> = simd::Tier::ALL
+                .iter()
+                .filter(|t| t.available())
+                .map(|&t| {
+                    let ns = simd::with_forced_tier(t, || {
+                        bencher
+                            .bench(&format!("kernel_row/tier_{}/B{b}/d{d}", t.name()), || {
+                                model.kernel_row(&x, xn, &mut out)
+                            })
+                            .mean_ns()
+                    });
+                    (t.name(), Json::num(ns))
+                })
+                .collect();
             sweep.push(Json::object(vec![
                 ("b", Json::num(b as f64)),
                 ("d", Json::num(d as f64)),
@@ -144,6 +165,7 @@ pub fn run(quick: bool, threads: usize) -> Result<Json> {
                 ("ns_per_row_scalar", Json::num(scalar)),
                 ("speedup", Json::num(scalar / blocked.max(1e-9))),
                 ("speedup_fast_exp", Json::num(scalar / fast.max(1e-9))),
+                ("per_tier", Json::object(tier_cols)),
             ]));
 
             // κ scan: 4 pivots' rows in one tile pass vs row-wise.
@@ -179,6 +201,45 @@ pub fn run(quick: bool, threads: usize) -> Result<Json> {
                 ("ns_per_scan", Json::num(scan)),
                 ("ns_per_scan_forced_scalar", Json::num(scan_forced)),
                 ("ns_per_scan_rowwise", Json::num(scan_rowwise)),
+            ]));
+
+            // Fused α·κ decision (one tile pass, no materialized κ row)
+            // vs the unfused materialize-then-reduce equivalent, per tier.
+            let weights: Vec<f64> = (0..b).map(|_| rng.normal()).collect();
+            let mut tier_rows = Vec::new();
+            for &t in simd::Tier::ALL.iter().filter(|t| t.available()) {
+                let fused_ns = simd::with_forced_tier(t, || {
+                    bencher
+                        .bench(
+                            &format!("fused_decision/fused/{}/B{b}/d{d}", t.name()),
+                            || model.decision_with_norm(&x, xn),
+                        )
+                        .mean_ns()
+                });
+                let unfused_ns = simd::with_forced_tier(t, || {
+                    bencher
+                        .bench(
+                            &format!("fused_decision/unfused/{}/B{b}/d{d}", t.name()),
+                            || {
+                                model.kernel_row(&x, xn, &mut out);
+                                let acc: f64 =
+                                    weights.iter().zip(&out).map(|(a, k)| a * k).sum();
+                                0.5 * acc + 0.25
+                            },
+                        )
+                        .mean_ns()
+                });
+                tier_rows.push(Json::object(vec![
+                    ("tier", Json::str(t.name())),
+                    ("ns_fused", Json::num(fused_ns)),
+                    ("ns_unfused", Json::num(unfused_ns)),
+                    ("speedup", Json::num(unfused_ns / fused_ns.max(1e-9))),
+                ]));
+            }
+            fused.push(Json::object(vec![
+                ("b", Json::num(b as f64)),
+                ("d", Json::num(d as f64)),
+                ("tiers", Json::array(tier_rows)),
             ]));
         }
     }
@@ -219,12 +280,13 @@ pub fn run(quick: bool, threads: usize) -> Result<Json> {
     ]);
 
     Ok(Json::object(vec![
-        ("schema", Json::str("bench_kernel/v2")),
+        ("schema", Json::str("bench_kernel/v3")),
         ("tile", Json::num(TILE as f64)),
         ("simd_tier", Json::str(simd::detected().name())),
         ("quick", Json::Bool(quick)),
         ("kernel_row", Json::array(sweep)),
         ("kappa_scan", Json::array(kappa)),
+        ("fused_decision", Json::array(fused)),
         ("multiclass_fit", multiclass),
     ]))
 }
@@ -247,9 +309,12 @@ mod tests {
     #[test]
     fn quick_harness_produces_well_formed_report() {
         let report = run(true, 2).expect("bench harness runs");
-        assert_eq!(report.get("schema").and_then(Json::as_str), Some("bench_kernel/v2"));
+        assert_eq!(report.get("schema").and_then(Json::as_str), Some("bench_kernel/v3"));
         let tier = report.get("simd_tier").and_then(Json::as_str).expect("simd tier");
-        assert!(tier == "avx2" || tier == "scalar", "unexpected tier {tier}");
+        assert!(
+            simd::Tier::ALL.iter().any(|t| t.name() == tier),
+            "unexpected tier {tier}"
+        );
         let sweep = report.get("kernel_row").and_then(Json::as_array).expect("sweep array");
         assert_eq!(sweep.len(), SWEEP_B.len() * SWEEP_D.len());
         for cell in sweep {
@@ -259,6 +324,22 @@ mod tests {
             assert!(cell.get("ns_per_row_scalar").and_then(Json::as_f64).unwrap() > 0.0);
             assert!(cell.get("speedup").and_then(Json::as_f64).unwrap() > 0.0);
             assert!(cell.get("speedup_fast_exp").and_then(Json::as_f64).unwrap() > 0.0);
+            // The scalar tier is always available, so per_tier is never empty.
+            let per_tier = cell.get("per_tier").expect("per_tier column");
+            assert!(per_tier.get("scalar").and_then(Json::as_f64).unwrap() > 0.0);
+        }
+        let fused =
+            report.get("fused_decision").and_then(Json::as_array).expect("fused array");
+        assert_eq!(fused.len(), SWEEP_B.len() * SWEEP_D.len());
+        for cell in fused {
+            let tiers = cell.get("tiers").and_then(Json::as_array).expect("tier rows");
+            assert!(!tiers.is_empty());
+            for row in tiers {
+                let name = row.get("tier").and_then(Json::as_str).expect("tier name");
+                assert!(simd::Tier::ALL.iter().any(|t| t.name() == name));
+                assert!(row.get("ns_fused").and_then(Json::as_f64).unwrap() > 0.0);
+                assert!(row.get("ns_unfused").and_then(Json::as_f64).unwrap() > 0.0);
+            }
         }
         let kappa = report.get("kappa_scan").and_then(Json::as_array).expect("kappa array");
         assert_eq!(kappa.len(), SWEEP_B.len() * SWEEP_D.len());

@@ -82,6 +82,11 @@ impl Kernel for Gaussian {
     }
 
     #[inline]
+    fn op(&self) -> simd::KernelOp {
+        simd::KernelOp::Gaussian { neg_gamma: -self.gamma, fast_exp: self.fast_exp }
+    }
+
+    #[inline]
     fn self_eval(&self, _norm2: f32) -> f64 {
         1.0
     }

@@ -34,6 +34,11 @@ impl Kernel for Linear {
     }
 
     #[inline]
+    fn op(&self) -> simd::KernelOp {
+        simd::KernelOp::Linear
+    }
+
+    #[inline]
     fn self_eval(&self, norm2: f32) -> f64 {
         norm2 as f64
     }

@@ -13,9 +13,9 @@
 //! unbudgeted everywhere). [`KernelSpec`] is the typed, serializable
 //! configuration view used by `SvmConfig` and the model format.
 //!
-//! # How to add a fused kernel: the three-layer contract
+//! # How to add a fused kernel: the four-layer contract
 //!
-//! A kernel plugs into the blocked engine in up to three layers, each
+//! A kernel plugs into the blocked engine in up to four layers, each
 //! optional beyond the first and each verified against the one below it:
 //!
 //! 1. **`eval_dot` — correctness.** Express the kernel as a function of
@@ -31,12 +31,23 @@
 //!    by coefficient range, never by branching here. Conformance is
 //!    pinned at ≤ 1e-12 against per-lane `eval_dot` on dyadic inputs
 //!    (`tests/block_engine.rs`).
-//! 3. **SIMD micro-kernel — optional.** Route the fused form through
+//! 3. **`tile_decision` — reduction fusion.** Describe the finish stage
+//!    as plain data via [`Kernel::op`] so the decision hot loops
+//!    ([`crate::model::BudgetModel::decision_with_norm`], `decision_rows`,
+//!    `weight_norm2`) can run dots → finish → α-weighted accumulate in
+//!    one fused pass per tile ([`simd::tile_decision`]) without
+//!    materializing the κ row. The tier is resolved **once per row** and
+//!    threaded through every tile via the `*_with(tier, …)` seams.
+//!    `tests/simd.rs` pins the fused path against
+//!    materialize-then-reduce on every tier (bitwise on the scalar
+//!    tier).
+//! 4. **SIMD micro-kernels — optional.** Route the fused forms through
 //!    [`simd`] with a scalar tier that reproduces the pre-SIMD loop
-//!    verbatim and an AVX2 tier performing the same IEEE operations
-//!    lane-wise. The forced-scalar override must always be able to bypass
-//!    the vector path (`tests/simd.rs` pins scalar ≡ SIMD ≤ 1e-12 on
-//!    dyadic inputs).
+//!    verbatim and vector tiers (AVX2, AVX-512, NEON) performing the
+//!    same IEEE operations lane-wise. The forced-tier override must
+//!    always be able to bypass the vector path (`tests/simd.rs` pins
+//!    scalar ≡ SIMD ≤ 1e-12 on dyadic inputs, bitwise for the kernel
+//!    finishes).
 //!
 //! **Fast-exp accuracy policy.** Transcendental shortcuts are opt-in,
 //! never default: the Gaussian's default tile path keeps libm `exp`
@@ -98,6 +109,13 @@ pub trait Kernel: Send + Sync {
             out[l] = self.eval_dot(dots[l], x_norm2, norms[l]);
         }
     }
+
+    /// This kernel's finish stage as plain data, resolved once per row
+    /// by the decision hot loops so the fused
+    /// [`simd::tile_decision`] path can dispatch on it without a
+    /// virtual call per tile. Must describe exactly the arithmetic
+    /// [`Kernel::eval_block`] performs.
+    fn op(&self) -> simd::KernelOp;
 
     /// `k(x, x)` from the squared norm alone.
     fn self_eval(&self, norm2: f32) -> f64;

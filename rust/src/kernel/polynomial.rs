@@ -45,6 +45,15 @@ impl Kernel for Polynomial {
     }
 
     #[inline]
+    fn op(&self) -> simd::KernelOp {
+        simd::KernelOp::Polynomial {
+            scale: self.scale,
+            offset: self.offset,
+            degree: self.degree,
+        }
+    }
+
+    #[inline]
     fn self_eval(&self, norm2: f32) -> f64 {
         (self.scale * norm2 as f64 + self.offset).powi(self.degree as i32)
     }

@@ -1,39 +1,49 @@
-//! Runtime-dispatched SIMD micro-kernels for the blocked tile engine.
+//! Runtime SIMD dispatch and the tier micro-kernel ladder.
 //!
-//! The `TILE = 8` engine does three kinds of arithmetic on every kernel
-//! row: the feature-major tile FMA accumulation (`SvStore::tile_dots`),
-//! the per-tile kernel finish (`Kernel::eval_block` — for the Gaussian a
-//! fused distance reconstruction + `exp` pass), and the batched
-//! multi-pivot κ scan (`BudgetModel::kernel_rows_for_svs`). This module
-//! owns the portable scalar loops for all three plus hand-written
-//! AVX2+FMA paths (8 × `f32` for the dot accumulation, 2 × 4 × `f64` for
-//! the kernel finish), selected once at startup.
+//! Layer 4 of the fused-kernel contract (see `kernel/mod.rs`): every
+//! public entry point here has a dispatched form (`tile_dots`,
+//! `gaussian_block`, …) that resolves [`active`] once per call, and an
+//! explicit `*_with(tier, …)` form that the hot loops use to resolve
+//! the tier **once per row** and thread it through every tile. The
+//! ladder currently has four rungs:
 //!
-//! # Dispatch
+//! * `scalar` — portable reference, always available, defines the
+//!   numerics contract.
+//! * `avx2` — 8-lane f32 FMA tile kernels + 4-lane f64 finishes
+//!   (x86-64 with AVX2+FMA).
+//! * `avx512` — 16-lane f32 tile kernels (two features per step) +
+//!   8-lane f64 finishes (x86-64 with AVX-512F).
+//! * `neon` — 2×4-lane f32 tile kernels + 2-lane f64 finishes
+//!   (aarch64 baseline; always available there).
 //!
-//! * [`detected`] probes the hardware once (`is_x86_feature_detected!`,
-//!   cached) and honors the process-wide `BUDGETSVM_SIMD=scalar`
-//!   environment override — CI runs the whole test suite under it to
-//!   exercise the portable fallback on any runner.
-//! * [`set_force_scalar`] / [`with_forced_scalar`] are a *thread-local*
-//!   override used by tests and the bench harness to measure the scalar
-//!   tier without perturbing concurrently running threads.
-//! * [`active`] combines both and is what every dispatched entry point
-//!   reads; the `*_with(tier, ...)` variants take the tier explicitly so
-//!   property tests can compare the two implementations side by side
-//!   without any global state.
+//! Selection: `BUDGETSVM_SIMD=scalar|avx2|avx512|neon` pins a tier for
+//! the whole process. A requested tier that is unavailable on this CPU
+//! (or unrecognized) warns once on stderr and falls back to the best
+//! available tier — it never panics, so a config written for one box
+//! still runs on another. Tests additionally use the thread-local
+//! [`with_forced_tier`] override to compare tiers in-process.
 //!
 //! # Numerics contract
 //!
-//! * The AVX2 paths perform the *same* IEEE operations in the same order
-//!   as the scalar loops wherever that is possible: distance
-//!   reconstruction, `f32 → f64` widening, the polynomial square-multiply
-//!   chain and the whole [`exp_v`] pipeline are bit-identical across
-//!   tiers. The only divergence is the tile dot accumulation, where the
-//!   AVX2 path fuses multiply-add; on dyadic-rational inputs (the
-//!   conformance-test regime, where every product and partial sum is
-//!   exact in `f32`) fused and unfused agree bit-for-bit, and on
-//!   arbitrary data they differ only by `f32` rounding.
+//! * Every vector tier performs the *same* IEEE operations in the same
+//!   order as the scalar loops wherever that is possible: distance
+//!   reconstruction `max(x²+y²−2·x·y, 0)`, the `f32 → f64` widening
+//!   point, the polynomial square-multiply chain ([`pow_v`] is bitwise
+//!   identical to `f64::powi` on every tier) and the whole [`exp_v`]
+//!   pipeline are bit-identical across tiers. The only divergence is
+//!   the tile dot accumulation, where the vector paths fuse
+//!   multiply-add (and AVX-512 pairs two features per step); on
+//!   dyadic-rational inputs (the conformance-test regime, where every
+//!   product and partial sum is exact in `f32`) all tiers agree
+//!   bit-for-bit, and on arbitrary data they differ only by `f32`
+//!   rounding.
+//! * [`tile_decision`] fuses the α·κ reduction into the tile kernel
+//!   without materializing a caller-visible κ buffer — the κ values
+//!   live only in a register block. The fused reduction uses the plain
+//!   sequential sum on the scalar tier and on partial tiles (bitwise
+//!   identical to materialize-then-reduce) and a fixed pairwise tree on
+//!   full tiles under vector tiers, so the order is deterministic per
+//!   tier and pinned by `tests/simd.rs`.
 //! * [`exp_fast`] / [`exp_v`] implement a branch-free Cephes-style
 //!   `2^n · P(r)` exponential (argument reduction against a hi/lo `ln 2`
 //!   split, degree-13 polynomial, two-step `2^n` scaling that underflows
@@ -46,6 +56,7 @@
 //!   engine) unless the opt-in fast-exp tier (`SvmConfig::fast_exp`,
 //!   `--fast-exp`) is selected.
 
+use std::cell::Cell;
 use std::sync::OnceLock;
 
 use super::TILE;
@@ -57,30 +68,48 @@ pub enum Tier {
     Scalar,
     /// Hand-written AVX2+FMA paths (x86-64 with `avx2` and `fma`).
     Avx2,
+    /// AVX-512F paths: 16 × `f32` tile kernels, 8 × `f64` finishes.
+    Avx512,
+    /// NEON paths (aarch64 baseline): 2 × 4 × `f32` tile kernels,
+    /// 2 × `f64` finishes.
+    Neon,
 }
 
 impl Tier {
-    /// Whether this tier can run on the current hardware (ignores every
-    /// override — `Scalar` is always available).
+    /// Every tier in the ladder, scalar first.
+    pub const ALL: [Tier; 4] = [Tier::Scalar, Tier::Avx2, Tier::Avx512, Tier::Neon];
+
+    /// Whether this tier's micro-kernels can run on the current CPU.
     pub fn available(self) -> bool {
         match self {
             Tier::Scalar => true,
             Tier::Avx2 => hw_avx2(),
+            Tier::Avx512 => hw_avx512(),
+            Tier::Neon => cfg!(target_arch = "aarch64"),
         }
     }
 
-    /// Short name for reports ("scalar" / "avx2").
+    /// Stable lowercase name used by `BUDGETSVM_SIMD`, the bench
+    /// report, and the telemetry surfaces.
     pub fn name(self) -> &'static str {
         match self {
             Tier::Scalar => "scalar",
             Tier::Avx2 => "avx2",
+            Tier::Avx512 => "avx512",
+            Tier::Neon => "neon",
         }
+    }
+
+    /// Parse a tier name as accepted by `BUDGETSVM_SIMD` (ASCII
+    /// case-insensitive). Returns `None` for unrecognized names.
+    pub fn parse(s: &str) -> Option<Tier> {
+        Tier::ALL.into_iter().find(|t| s.eq_ignore_ascii_case(t.name()))
     }
 }
 
 #[cfg(target_arch = "x86_64")]
 fn hw_avx2_impl() -> bool {
-    is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+    std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma")
 }
 
 #[cfg(not(target_arch = "x86_64"))]
@@ -88,99 +117,243 @@ fn hw_avx2_impl() -> bool {
     false
 }
 
-static HW_AVX2: OnceLock<bool> = OnceLock::new();
+#[cfg(target_arch = "x86_64")]
+fn hw_avx512_impl() -> bool {
+    // The 512-bit kernels fall back to 256-bit AVX2+FMA ops for tails,
+    // so the tier needs all three features (every avx512f CPU shipped
+    // to date has them, but the check keeps the contract explicit).
+    std::arch::is_x86_feature_detected!("avx512f")
+        && std::arch::is_x86_feature_detected!("avx2")
+        && std::arch::is_x86_feature_detected!("fma")
+}
 
-/// Cached hardware probe for the AVX2+FMA tier.
+#[cfg(not(target_arch = "x86_64"))]
+fn hw_avx512_impl() -> bool {
+    false
+}
+
+static HW_AVX2: OnceLock<bool> = OnceLock::new();
+static HW_AVX512: OnceLock<bool> = OnceLock::new();
+
 fn hw_avx2() -> bool {
     *HW_AVX2.get_or_init(hw_avx2_impl)
 }
 
+fn hw_avx512() -> bool {
+    *HW_AVX512.get_or_init(hw_avx512_impl)
+}
+
+/// The widest tier the current CPU supports.
+fn best_available() -> Tier {
+    if Tier::Avx512.available() {
+        Tier::Avx512
+    } else if Tier::Avx2.available() {
+        Tier::Avx2
+    } else if Tier::Neon.available() {
+        Tier::Neon
+    } else {
+        Tier::Scalar
+    }
+}
+
 static DETECTED: OnceLock<Tier> = OnceLock::new();
 
-/// The process-wide tier selected once at startup: AVX2 when the hardware
-/// supports it, unless `BUDGETSVM_SIMD=scalar` forces the portable loops.
+/// Process-wide tier: the `BUDGETSVM_SIMD` override when it names an
+/// available tier, otherwise the best tier the CPU supports. An
+/// override naming an unavailable or unrecognized tier warns on
+/// stderr and falls back — it never panics.
 pub fn detected() -> Tier {
     *DETECTED.get_or_init(|| {
-        let forced = std::env::var("BUDGETSVM_SIMD")
-            .map(|v| v.eq_ignore_ascii_case("scalar"))
-            .unwrap_or(false);
-        if !forced && hw_avx2() {
-            Tier::Avx2
-        } else {
-            Tier::Scalar
+        let requested = std::env::var("BUDGETSVM_SIMD").ok();
+        match requested.as_deref().map(str::trim) {
+            None | Some("") => best_available(),
+            Some(name) => match Tier::parse(name) {
+                Some(t) if t.available() => t,
+                Some(t) => {
+                    let best = best_available();
+                    eprintln!(
+                        "warning: BUDGETSVM_SIMD={} is not available on this CPU; \
+                         falling back to {}",
+                        t.name(),
+                        best.name()
+                    );
+                    best
+                }
+                None => {
+                    let best = best_available();
+                    eprintln!(
+                        "warning: BUDGETSVM_SIMD={name} is not recognized \
+                         (expected scalar|avx2|avx512|neon); using {}",
+                        best.name()
+                    );
+                    best
+                }
+            },
         }
     })
 }
 
 thread_local! {
-    static FORCE_SCALAR: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+    /// Per-thread tier override used by tests and the bench harness to
+    /// compare tiers in-process without touching the environment.
+    static FORCED_TIER: Cell<Option<Tier>> = const { Cell::new(None) };
 }
 
-/// Thread-local forced-scalar override (testing/benching hook): while set,
-/// [`active`] reports [`Tier::Scalar`] on this thread regardless of the
-/// detected hardware. Other threads are unaffected; use the process-wide
-/// `BUDGETSVM_SIMD=scalar` environment variable to force a whole run.
-pub fn set_force_scalar(force: bool) {
-    FORCE_SCALAR.with(|c| c.set(force));
+/// Pin (or clear) this thread's tier override. Panics if the requested
+/// tier's micro-kernels cannot run on this CPU — forcing is a test and
+/// bench facility, so an impossible request is a programming error.
+pub fn set_forced_tier(tier: Option<Tier>) {
+    if let Some(t) = tier {
+        assert!(t.available(), "cannot force unavailable tier {}", t.name());
+    }
+    FORCED_TIER.with(|f| f.set(tier));
 }
 
-/// Whether the thread-local forced-scalar override is currently set.
-pub fn force_scalar() -> bool {
-    FORCE_SCALAR.with(|c| c.get())
+/// The current thread's tier override, if any.
+pub fn forced_tier() -> Option<Tier> {
+    FORCED_TIER.with(|f| f.get())
 }
 
-/// Run `f` with the thread-local forced-scalar override set, restoring the
-/// previous state afterwards (also on panic).
-pub fn with_forced_scalar<R>(f: impl FnOnce() -> R) -> R {
-    struct Restore(bool);
+/// Run `f` with this thread pinned to `tier`, restoring the previous
+/// override afterwards (also on unwind).
+pub fn with_forced_tier<R>(tier: Tier, f: impl FnOnce() -> R) -> R {
+    struct Restore(Option<Tier>);
     impl Drop for Restore {
         fn drop(&mut self) {
-            set_force_scalar(self.0);
+            FORCED_TIER.with(|f| f.set(self.0));
         }
     }
-    let _restore = Restore(force_scalar());
-    set_force_scalar(true);
+    let _restore = Restore(forced_tier());
+    set_forced_tier(Some(tier));
     f()
 }
 
-/// The tier every dispatched micro-kernel call on this thread uses right
-/// now: [`Tier::Scalar`] under either override, the detected tier
-/// otherwise.
+/// Back-compat wrapper: pin this thread to the scalar tier (`true`) or
+/// clear the override (`false`).
+pub fn set_force_scalar(force: bool) {
+    set_forced_tier(force.then_some(Tier::Scalar));
+}
+
+/// Whether this thread is currently pinned to the scalar tier.
+pub fn force_scalar() -> bool {
+    forced_tier() == Some(Tier::Scalar)
+}
+
+/// Run `f` with this thread pinned to the scalar tier.
+pub fn with_forced_scalar<R>(f: impl FnOnce() -> R) -> R {
+    with_forced_tier(Tier::Scalar, f)
+}
+
+/// The tier entry points dispatch to: the thread-local override when
+/// set, otherwise the process-wide [`detected`] tier.
 pub fn active() -> Tier {
-    if force_scalar() {
-        Tier::Scalar
-    } else {
-        detected()
+    forced_tier().unwrap_or_else(detected)
+}
+
+/// A kernel's finish stage, resolved to plain data so the fused tile
+/// path can dispatch on it without a virtual call per tile. Built once
+/// per row by [`crate::kernel::Kernel::op`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum KernelOp {
+    /// Gaussian finish: `exp(neg_gamma · d²)` with the distance
+    /// reconstructed from dots and norms.
+    Gaussian { neg_gamma: f64, fast_exp: bool },
+    /// Identity finish: widen the dot to f64.
+    Linear,
+    /// Polynomial finish: `(scale·dot + offset)^degree` via the exact
+    /// `powi` square-and-multiply chain.
+    Polynomial { scale: f64, offset: f64, degree: u32 },
+}
+
+/// Apply a kernel finish to one tile of dots on an explicit tier.
+/// Identical numerics to the corresponding `*_block_with` entry point.
+pub fn finish_with(
+    tier: Tier,
+    op: KernelOp,
+    x_norm2: f32,
+    dots: &[f32; TILE],
+    norms: &[f32; TILE],
+    out: &mut [f64; TILE],
+) {
+    match op {
+        KernelOp::Gaussian { neg_gamma, fast_exp } => {
+            gaussian_block_with(tier, neg_gamma, fast_exp, x_norm2, dots, norms, out)
+        }
+        KernelOp::Linear => linear_block_with(tier, dots, out),
+        KernelOp::Polynomial { scale, offset, degree } => {
+            poly_block_with(tier, scale, offset, degree, dots, out)
+        }
     }
 }
 
-// ---------------------------------------------------------------------------
-// Tile dot products (f32, 8 lanes)
-// ---------------------------------------------------------------------------
-
-/// Inner products of `x` against all `TILE` lanes of one feature-major
-/// tile (`tile[k * TILE + l]` = feature `k` of lane `l`), on the active
-/// tier.
-#[inline]
-pub fn tile_dots(tile: &[f32], x: &[f32], out: &mut [f32; TILE]) {
-    tile_dots_with(active(), tile, x, out);
+/// Fused tile decision on the dispatched tier: dots → kernel finish →
+/// α-weighted reduction, without a caller-visible κ buffer.
+pub fn tile_decision(
+    op: KernelOp,
+    tile: &[f32],
+    x: &[f32],
+    x_norm2: f32,
+    norms: &[f32; TILE],
+    alphas: &[f64],
+) -> f64 {
+    tile_decision_with(active(), op, tile, x, x_norm2, norms, alphas)
 }
 
-/// [`tile_dots`] on an explicit tier (panics if the tier is unavailable).
-/// The length invariant is a real assert — the AVX2 path walks raw
-/// pointers, so a mismatched tile must never reach it (one compare per
-/// tile call, outside the per-feature loop).
-#[inline]
+/// Fused tile decision on an explicit tier. `alphas` holds the live
+/// coefficients for this tile (`len ≤ TILE`); padding lanes beyond it
+/// are never read. On the scalar tier (and on partial tiles) the
+/// reduction is the plain sequential sum, bitwise identical to
+/// materializing the κ row and reducing it; full tiles on vector
+/// tiers use a fixed pairwise tree so the reduction order is
+/// deterministic per tier.
+pub fn tile_decision_with(
+    tier: Tier,
+    op: KernelOp,
+    tile: &[f32],
+    x: &[f32],
+    x_norm2: f32,
+    norms: &[f32; TILE],
+    alphas: &[f64],
+) -> f64 {
+    debug_assert!(alphas.len() <= TILE);
+    let mut dots = [0.0f32; TILE];
+    tile_dots_with(tier, tile, x, &mut dots);
+    let mut kvals = [0.0f64; TILE];
+    finish_with(tier, op, x_norm2, &dots, norms, &mut kvals);
+    if tier != Tier::Scalar && alphas.len() == TILE {
+        let mut p = [0.0f64; TILE];
+        for ((pl, &a), &k) in p.iter_mut().zip(alphas).zip(&kvals) {
+            *pl = a * k;
+        }
+        ((p[0] + p[1]) + (p[2] + p[3])) + ((p[4] + p[5]) + (p[6] + p[7]))
+    } else {
+        let mut acc = 0.0;
+        for (&a, &k) in alphas.iter().zip(&kvals) {
+            acc += a * k;
+        }
+        acc
+    }
+}
+
+/// Accumulate `x · sv_l` for the eight SVs of one feature-major tile.
+///
+/// `tile` is laid out `[k*TILE + l]` (feature `k`, lane `l`); `out`
+/// receives one dot per lane. Dispatches on [`active`].
+pub fn tile_dots(tile: &[f32], x: &[f32], out: &mut [f32; TILE]) {
+    tile_dots_with(active(), tile, x, out)
+}
+
+/// [`tile_dots`] on an explicit tier.
 pub fn tile_dots_with(tier: Tier, tile: &[f32], x: &[f32], out: &mut [f32; TILE]) {
     assert_eq!(tile.len(), x.len() * TILE, "tile/query length mismatch");
     match tier {
         Tier::Scalar => tile_dots_scalar(tile, x, out),
-        Tier::Avx2 => dispatch_tile_dots_avx2(tile, x, out),
+        Tier::Avx2 => shims_avx2::tile_dots(tile, x, out),
+        Tier::Avx512 => shims_avx512::tile_dots(tile, x, out),
+        Tier::Neon => shims_neon::tile_dots(tile, x, out),
     }
 }
 
-/// Portable reference: one 8-lane unrolled multiply-add per feature (the
-/// pre-SIMD auto-vectorized loop, kept verbatim).
 fn tile_dots_scalar(tile: &[f32], x: &[f32], out: &mut [f32; TILE]) {
     let mut acc = [0.0f32; TILE];
     for (lanes, &xk) in tile.chunks_exact(TILE).zip(x.iter()) {
@@ -191,22 +364,16 @@ fn tile_dots_scalar(tile: &[f32], x: &[f32], out: &mut [f32; TILE]) {
     *out = acc;
 }
 
-/// Inner products of several query rows against one tile, visiting the
-/// tile's feature data once: each loaded 8-lane feature vector feeds every
-/// query's accumulator before the next feature is touched. Row `q` of
-/// `out` is bit-identical to `tile_dots(tile, xs[q], ...)` on the same
-/// tier — only the traversal order differs, never the per-query
-/// arithmetic.
-#[inline]
+/// Dot every query in `xs` against the same tile, one output block per
+/// query. Bitwise identical to calling [`tile_dots`] per query on the
+/// same tier; vector tiers amortize the tile loads across queries.
 pub fn tile_dots_multi(tile: &[f32], xs: &[&[f32]], out: &mut [[f32; TILE]]) {
-    tile_dots_multi_with(active(), tile, xs, out);
+    tile_dots_multi_with(active(), tile, xs, out)
 }
 
-/// [`tile_dots_multi`] on an explicit tier. Every query length is
-/// checked with a real assert before the raw-pointer AVX2 path runs (the
-/// 4-query block sizes its loop from the first query alone).
+/// [`tile_dots_multi`] on an explicit tier.
 pub fn tile_dots_multi_with(tier: Tier, tile: &[f32], xs: &[&[f32]], out: &mut [[f32; TILE]]) {
-    assert_eq!(xs.len(), out.len(), "one output row per query");
+    assert_eq!(xs.len(), out.len(), "query/output count mismatch");
     for x in xs {
         assert_eq!(tile.len(), x.len() * TILE, "tile/query length mismatch");
     }
@@ -216,20 +383,15 @@ pub fn tile_dots_multi_with(tier: Tier, tile: &[f32], xs: &[&[f32]], out: &mut [
                 tile_dots_scalar(tile, x, o);
             }
         }
-        Tier::Avx2 => dispatch_tile_dots_multi_avx2(tile, xs, out),
+        Tier::Avx2 => shims_avx2::tile_dots_multi(tile, xs, out),
+        Tier::Avx512 => shims_avx512::tile_dots_multi(tile, xs, out),
+        Tier::Neon => shims_neon::tile_dots_multi(tile, xs, out),
     }
 }
 
-// ---------------------------------------------------------------------------
-// Kernel tile finishes (f64, 8 lanes)
-// ---------------------------------------------------------------------------
-
-/// Gaussian tile finish: reconstruct the eight clamped squared distances
-/// `max(‖x‖² + ‖s_l‖² − 2⟨x, s_l⟩, 0)`, widen to `f64`, and exponentiate
-/// `exp(−γ·d²)`. With `fast_exp = false` the exponential is libm `exp`
-/// per lane (bit-identical to the scalar engine on every tier); with
-/// `fast_exp = true` it is the vectorized [`exp_v`] (≤ 1e-14 relative).
-#[inline]
+/// Gaussian finish for one tile: reconstruct clamped squared
+/// distances from dots and norms, widen to f64, then exponentiate
+/// (libm `exp` by default, [`exp_v`] when `fast_exp` is set).
 pub fn gaussian_block(
     neg_gamma: f64,
     fast_exp: bool,
@@ -238,7 +400,7 @@ pub fn gaussian_block(
     norms: &[f32; TILE],
     out: &mut [f64; TILE],
 ) {
-    gaussian_block_with(active(), neg_gamma, fast_exp, x_norm2, dots, norms, out);
+    gaussian_block_with(active(), neg_gamma, fast_exp, x_norm2, dots, norms, out)
 }
 
 /// [`gaussian_block`] on an explicit tier.
@@ -251,57 +413,58 @@ pub fn gaussian_block_with(
     norms: &[f32; TILE],
     out: &mut [f64; TILE],
 ) {
-    let mut d2 = [0.0f64; TILE];
     match tier {
-        Tier::Scalar => gaussian_d2_scalar(x_norm2, dots, norms, &mut d2),
-        Tier::Avx2 => dispatch_gaussian_d2_avx2(x_norm2, dots, norms, &mut d2),
+        Tier::Scalar => gaussian_d2_scalar(x_norm2, dots, norms, out),
+        Tier::Avx2 => shims_avx2::gaussian_d2(x_norm2, dots, norms, out),
+        Tier::Avx512 => shims_avx512::gaussian_d2(x_norm2, dots, norms, out),
+        Tier::Neon => shims_neon::gaussian_d2(x_norm2, dots, norms, out),
     }
     if fast_exp {
-        for v in d2.iter_mut() {
+        for v in out.iter_mut() {
             *v *= neg_gamma;
         }
-        exp_v_with(tier, &mut d2);
-        *out = d2;
+        exp_v_with(tier, out);
     } else {
-        for (o, &v) in out.iter_mut().zip(d2.iter()) {
-            *o = (neg_gamma * v).exp();
+        for v in out.iter_mut() {
+            *v = (neg_gamma * *v).exp();
         }
     }
 }
 
-/// Scalar distance reconstruction (the pre-SIMD fused loop, kept
-/// verbatim; the same clamped expression `Kernel::eval_dot` uses).
-fn gaussian_d2_scalar(x_norm2: f32, dots: &[f32; TILE], norms: &[f32; TILE], d2: &mut [f64; TILE]) {
+fn gaussian_d2_scalar(
+    x_norm2: f32,
+    dots: &[f32; TILE],
+    norms: &[f32; TILE],
+    out: &mut [f64; TILE],
+) {
     for l in 0..TILE {
-        d2[l] = (x_norm2 + norms[l] - 2.0 * dots[l]).max(0.0) as f64;
+        out[l] = (x_norm2 + norms[l] - 2.0 * dots[l]).max(0.0) as f64;
     }
 }
 
-/// Linear tile finish: widen the eight inner products to `f64` (exact on
-/// every tier).
-#[inline]
+/// Linear finish: widen the dots to f64.
 pub fn linear_block(dots: &[f32; TILE], out: &mut [f64; TILE]) {
-    linear_block_with(active(), dots, out);
+    linear_block_with(active(), dots, out)
 }
 
 /// [`linear_block`] on an explicit tier.
 pub fn linear_block_with(tier: Tier, dots: &[f32; TILE], out: &mut [f64; TILE]) {
     match tier {
         Tier::Scalar => {
-            for (o, &d) in out.iter_mut().zip(dots.iter()) {
-                *o = d as f64;
+            for l in 0..TILE {
+                out[l] = dots[l] as f64;
             }
         }
-        Tier::Avx2 => dispatch_linear_block_avx2(dots, out),
+        Tier::Avx2 => shims_avx2::linear_block(dots, out),
+        Tier::Avx512 => shims_avx512::linear_block(dots, out),
+        Tier::Neon => shims_neon::linear_block(dots, out),
     }
 }
 
-/// Polynomial tile finish: `(scale·⟨x, s_l⟩ + offset)^degree` via the
-/// square-and-multiply chain of `compiler-rt`'s `__powidf2`, so both
-/// tiers run the identical multiplication sequence.
-#[inline]
+/// Polynomial finish: `(scale·dot + offset)^degree` with the exact
+/// `powi` square-and-multiply chain in every lane.
 pub fn poly_block(scale: f64, offset: f64, degree: u32, dots: &[f32; TILE], out: &mut [f64; TILE]) {
-    poly_block_with(active(), scale, offset, degree, dots, out);
+    poly_block_with(active(), scale, offset, degree, dots, out)
 }
 
 /// [`poly_block`] on an explicit tier.
@@ -315,19 +478,41 @@ pub fn poly_block_with(
 ) {
     match tier {
         Tier::Scalar => {
-            for (o, &d) in out.iter_mut().zip(dots.iter()) {
-                *o = powi_mirror(scale * d as f64 + offset, degree);
+            for l in 0..TILE {
+                out[l] = powi_mirror(scale * dots[l] as f64 + offset, degree);
             }
         }
-        Tier::Avx2 => dispatch_poly_block_avx2(scale, offset, degree, dots, out),
+        Tier::Avx2 => shims_avx2::poly_block(scale, offset, degree, dots, out),
+        Tier::Avx512 => shims_avx512::poly_block(scale, offset, degree, dots, out),
+        Tier::Neon => shims_neon::poly_block(scale, offset, degree, dots, out),
     }
 }
 
-/// Integer power by square-and-multiply, mirroring `__powidf2` (the
-/// lowering of `f64::powi`) so the vector path can reproduce the exact
-/// multiplication sequence lane-wise.
-#[inline]
-fn powi_mirror(mut a: f64, mut b: u32) -> f64 {
+/// Raise every element of `xs` to the `degree`-th power in place,
+/// using the exact square-and-multiply chain of `f64::powi` — bitwise
+/// identical to `x.powi(degree as i32)` on every tier.
+pub fn pow_v(xs: &mut [f64], degree: u32) {
+    pow_v_with(active(), xs, degree)
+}
+
+/// [`pow_v`] on an explicit tier.
+pub fn pow_v_with(tier: Tier, xs: &mut [f64], degree: u32) {
+    match tier {
+        Tier::Scalar => {
+            for x in xs.iter_mut() {
+                *x = powi_mirror(*x, degree);
+            }
+        }
+        Tier::Avx2 => shims_avx2::pow_v(xs, degree),
+        Tier::Avx512 => shims_avx512::pow_v(xs, degree),
+        Tier::Neon => shims_neon::pow_v(xs, degree),
+    }
+}
+
+/// The exact square-and-multiply chain compiler-rt uses for
+/// `f64::powi` with a positive exponent: same multiplication order,
+/// so the result is bitwise identical to `a.powi(b as i32)`.
+pub(crate) fn powi_mirror(mut a: f64, mut b: u32) -> f64 {
     let mut r = 1.0f64;
     loop {
         if b & 1 == 1 {
@@ -342,31 +527,20 @@ fn powi_mirror(mut a: f64, mut b: u32) -> f64 {
     r
 }
 
-// ---------------------------------------------------------------------------
-// Vectorized exponential
-// ---------------------------------------------------------------------------
+// --- fast exp ---------------------------------------------------------
 
-/// Clamp bounds of the fast exponential: below `EXP_LO` the result is 0
-/// even after gradual underflow; above `EXP_HI` it is `+∞`.
+/// Clamp bounds for the fast-exp argument: below `EXP_LO` the result
+/// underflows to zero anyway, above `EXP_HI` it overflows to +inf.
 const EXP_LO: f64 = -746.0;
 const EXP_HI: f64 = 710.0;
-
-/// High/low split of `ln 2` (Cephes): `LN2_HI` has 21 significant bits so
-/// `n · LN2_HI` is exact for every reduction integer `|n| ≤ 1076`, and
-/// `LN2_HI + LN2_LO` matches `ln 2` to ~1e-22 (the Cephes C2 literal is
-/// kept verbatim, beyond f64 precision, hence the allow).
+const LOG2_E: f64 = std::f64::consts::LOG2_E;
 const LN2_HI: f64 = 0.693_145_751_953_125;
 #[allow(clippy::excessive_precision)]
 const LN2_LO: f64 = 1.428_606_820_309_417_232_12e-6;
-
-/// `1.5 · 2^52`: adding and subtracting rounds to the nearest integer
-/// (ties to even) for `|x| < 2^51`, branch-free and identical on both
-/// tiers.
+/// 1.5·2^52: adding and subtracting rounds to the nearest integer.
 const SHIFTER: f64 = 6_755_399_441_055_744.0;
-
-/// Taylor coefficients of `exp` on `[-ln2/2, ln2/2]`, highest order
-/// first (degree 13; truncation error ≈ 6e-18 relative, far below the
-/// Horner rounding noise).
+/// Taylor coefficients for `e^r` on the reduced interval, highest
+/// degree first (1/13! … 1/2!, 1, 1).
 const EXP_POLY: [f64; 14] = [
     1.0 / 6_227_020_800.0,
     1.0 / 479_001_600.0,
@@ -384,105 +558,84 @@ const EXP_POLY: [f64; 14] = [
     1.0,
 ];
 
-/// `2^e` for `e` in the extended exponent range `[-538, 513]` (always a
-/// normal number) by direct bit construction.
-#[inline]
+/// 2^e for |e| within the double exponent range, by bit assembly.
 fn pow2(e: i32) -> f64 {
-    debug_assert!((-1022..=1023).contains(&e));
     f64::from_bits(((e + 1023) as u64) << 52)
 }
 
-/// Branch-free Cephes-style scalar exponential — the reference the AVX2
-/// lanes reproduce bit-for-bit. `exp(±0) = 1` exactly; underflows
-/// gradually through the denormals to 0 below ≈ −745.2; overflows to
-/// `+∞` above ≈ 709.8.
+/// Branch-free Cephes-style `e^x`: split `x = n·ln2 + r`, evaluate the
+/// Taylor polynomial on `r`, scale by `2^n` in two halves so the
+/// subnormal range stays exact. ≤1e-14 relative against libm.
 pub fn exp_fast(x: f64) -> f64 {
-    let x = x.max(EXP_LO).min(EXP_HI);
-    // Round x/ln2 to the nearest integer, ties to even, via the shifter.
-    let n = (x * std::f64::consts::LOG2_E + SHIFTER) - SHIFTER;
-    // r = x − n·ln2 with the hi/lo split (the hi product is exact).
-    let r = x - n * LN2_HI;
-    let r = r - n * LN2_LO;
+    let x = x.clamp(EXP_LO, EXP_HI);
+    let n = (x * LOG2_E + SHIFTER) - SHIFTER;
+    let r = x - n * LN2_HI - n * LN2_LO;
     let mut p = EXP_POLY[0];
     for &c in &EXP_POLY[1..] {
         p = p * r + c;
     }
-    // Two-step 2^n scaling: each factor stays normal, and the final
-    // multiply performs the single correctly-rounded step into the
-    // denormal range (or to 0 / ∞ at the domain edges).
     let ni = n as i32;
     let m1 = (ni + 1) >> 1;
     let m2 = ni - m1;
-    (p * pow2(m2)) * pow2(m1)
+    p * pow2(m2) * pow2(m1)
 }
 
-/// Exponentiate a slice in place on the active tier (used by the fast-exp
-/// Gaussian tile finish; both tiers produce bit-identical results).
-#[inline]
+/// Vectorized [`exp_fast`] over a slice, in place.
 pub fn exp_v(xs: &mut [f64]) {
-    exp_v_with(active(), xs);
+    exp_v_with(active(), xs)
 }
 
-/// [`exp_v`] on an explicit tier.
+/// [`exp_v`] on an explicit tier. Bit-identical to [`exp_fast`] per
+/// element on every tier.
 pub fn exp_v_with(tier: Tier, xs: &mut [f64]) {
     match tier {
         Tier::Scalar => {
-            for v in xs.iter_mut() {
-                *v = exp_fast(*v);
+            for x in xs.iter_mut() {
+                *x = exp_fast(*x);
             }
         }
-        Tier::Avx2 => dispatch_exp_v_avx2(xs),
+        Tier::Avx2 => shims_avx2::exp_v(xs),
+        Tier::Avx512 => shims_avx512::exp_v(xs),
+        Tier::Neon => shims_neon::exp_v(xs),
     }
 }
 
-// ---------------------------------------------------------------------------
-// AVX2 dispatch shims (panic if the tier is requested where unavailable)
-// ---------------------------------------------------------------------------
+// --- shims: safe wrappers asserting tier availability -----------------
 
 #[cfg(target_arch = "x86_64")]
-mod shims {
+mod shims_avx2 {
     use super::{avx2, Tier, TILE};
 
-    #[inline]
     fn check() {
-        assert!(Tier::Avx2.available(), "AVX2 tier requested but not available");
+        assert!(Tier::Avx2.available(), "avx2 micro-kernel dispatched without avx2+fma");
     }
 
-    #[inline]
-    pub(super) fn tile_dots(tile: &[f32], x: &[f32], out: &mut [f32; TILE]) {
+    pub fn tile_dots(tile: &[f32], x: &[f32], out: &mut [f32; TILE]) {
         check();
-        // SAFETY: `check` verified avx2+fma support at runtime.
         unsafe { avx2::tile_dots(tile, x, out) }
     }
 
-    #[inline]
-    pub(super) fn tile_dots_multi(tile: &[f32], xs: &[&[f32]], out: &mut [[f32; TILE]]) {
+    pub fn tile_dots_multi(tile: &[f32], xs: &[&[f32]], out: &mut [[f32; TILE]]) {
         check();
-        // SAFETY: `check` verified avx2+fma support at runtime.
         unsafe { avx2::tile_dots_multi(tile, xs, out) }
     }
 
-    #[inline]
-    pub(super) fn gaussian_d2(
+    pub fn gaussian_d2(
         x_norm2: f32,
         dots: &[f32; TILE],
         norms: &[f32; TILE],
-        d2: &mut [f64; TILE],
+        out: &mut [f64; TILE],
     ) {
         check();
-        // SAFETY: `check` verified avx2+fma support at runtime.
-        unsafe { avx2::gaussian_d2(x_norm2, dots, norms, d2) }
+        unsafe { avx2::gaussian_d2(x_norm2, dots, norms, out) }
     }
 
-    #[inline]
-    pub(super) fn linear_block(dots: &[f32; TILE], out: &mut [f64; TILE]) {
+    pub fn linear_block(dots: &[f32; TILE], out: &mut [f64; TILE]) {
         check();
-        // SAFETY: `check` verified avx2+fma support at runtime.
         unsafe { avx2::linear_block(dots, out) }
     }
 
-    #[inline]
-    pub(super) fn poly_block(
+    pub fn poly_block(
         scale: f64,
         offset: f64,
         degree: u32,
@@ -490,78 +643,243 @@ mod shims {
         out: &mut [f64; TILE],
     ) {
         check();
-        // SAFETY: `check` verified avx2+fma support at runtime.
         unsafe { avx2::poly_block(scale, offset, degree, dots, out) }
     }
 
-    #[inline]
-    pub(super) fn exp_v(xs: &mut [f64]) {
+    pub fn exp_v(xs: &mut [f64]) {
         check();
-        // SAFETY: `check` verified avx2+fma support at runtime.
         unsafe { avx2::exp_v(xs) }
+    }
+
+    pub fn pow_v(xs: &mut [f64], degree: u32) {
+        check();
+        unsafe { avx2::pow_v(xs, degree) }
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+mod shims_avx2 {
+    use super::TILE;
+
+    pub fn tile_dots(_: &[f32], _: &[f32], _: &mut [f32; TILE]) {
+        unreachable!("avx2 tier is never available off x86_64")
+    }
+
+    pub fn tile_dots_multi(_: &[f32], _: &[&[f32]], _: &mut [[f32; TILE]]) {
+        unreachable!("avx2 tier is never available off x86_64")
+    }
+
+    pub fn gaussian_d2(_: f32, _: &[f32; TILE], _: &[f32; TILE], _: &mut [f64; TILE]) {
+        unreachable!("avx2 tier is never available off x86_64")
+    }
+
+    pub fn linear_block(_: &[f32; TILE], _: &mut [f64; TILE]) {
+        unreachable!("avx2 tier is never available off x86_64")
+    }
+
+    pub fn poly_block(_: f64, _: f64, _: u32, _: &[f32; TILE], _: &mut [f64; TILE]) {
+        unreachable!("avx2 tier is never available off x86_64")
+    }
+
+    pub fn exp_v(_: &mut [f64]) {
+        unreachable!("avx2 tier is never available off x86_64")
+    }
+
+    pub fn pow_v(_: &mut [f64], _: u32) {
+        unreachable!("avx2 tier is never available off x86_64")
     }
 }
 
 #[cfg(target_arch = "x86_64")]
-use shims::{
-    exp_v as dispatch_exp_v_avx2, gaussian_d2 as dispatch_gaussian_d2_avx2,
-    linear_block as dispatch_linear_block_avx2, poly_block as dispatch_poly_block_avx2,
-    tile_dots as dispatch_tile_dots_avx2, tile_dots_multi as dispatch_tile_dots_multi_avx2,
-};
+mod shims_avx512 {
+    use super::{avx512, Tier, TILE};
 
-#[cfg(not(target_arch = "x86_64"))]
-mod shims {
-    use super::TILE;
-
-    fn unavailable() -> ! {
-        panic!("AVX2 tier requested on a non-x86_64 architecture");
+    fn check() {
+        assert!(Tier::Avx512.available(), "avx512 micro-kernel dispatched without avx512f");
     }
 
-    pub(super) fn tile_dots(_: &[f32], _: &[f32], _: &mut [f32; TILE]) {
-        unavailable()
+    pub fn tile_dots(tile: &[f32], x: &[f32], out: &mut [f32; TILE]) {
+        check();
+        unsafe { avx512::tile_dots(tile, x, out) }
     }
 
-    pub(super) fn tile_dots_multi(_: &[f32], _: &[&[f32]], _: &mut [[f32; TILE]]) {
-        unavailable()
+    pub fn tile_dots_multi(tile: &[f32], xs: &[&[f32]], out: &mut [[f32; TILE]]) {
+        check();
+        unsafe { avx512::tile_dots_multi(tile, xs, out) }
     }
 
-    pub(super) fn gaussian_d2(_: f32, _: &[f32; TILE], _: &[f32; TILE], _: &mut [f64; TILE]) {
-        unavailable()
+    pub fn gaussian_d2(
+        x_norm2: f32,
+        dots: &[f32; TILE],
+        norms: &[f32; TILE],
+        out: &mut [f64; TILE],
+    ) {
+        check();
+        unsafe { avx512::gaussian_d2(x_norm2, dots, norms, out) }
     }
 
-    pub(super) fn linear_block(_: &[f32; TILE], _: &mut [f64; TILE]) {
-        unavailable()
+    pub fn linear_block(dots: &[f32; TILE], out: &mut [f64; TILE]) {
+        check();
+        unsafe { avx512::linear_block(dots, out) }
     }
 
-    pub(super) fn poly_block(_: f64, _: f64, _: u32, _: &[f32; TILE], _: &mut [f64; TILE]) {
-        unavailable()
+    pub fn poly_block(
+        scale: f64,
+        offset: f64,
+        degree: u32,
+        dots: &[f32; TILE],
+        out: &mut [f64; TILE],
+    ) {
+        check();
+        unsafe { avx512::poly_block(scale, offset, degree, dots, out) }
     }
 
-    pub(super) fn exp_v(_: &mut [f64]) {
-        unavailable()
+    pub fn exp_v(xs: &mut [f64]) {
+        check();
+        unsafe { avx512::exp_v(xs) }
+    }
+
+    pub fn pow_v(xs: &mut [f64], degree: u32) {
+        check();
+        unsafe { avx512::pow_v(xs, degree) }
     }
 }
 
 #[cfg(not(target_arch = "x86_64"))]
-use shims::{
-    exp_v as dispatch_exp_v_avx2, gaussian_d2 as dispatch_gaussian_d2_avx2,
-    linear_block as dispatch_linear_block_avx2, poly_block as dispatch_poly_block_avx2,
-    tile_dots as dispatch_tile_dots_avx2, tile_dots_multi as dispatch_tile_dots_multi_avx2,
-};
+mod shims_avx512 {
+    use super::TILE;
 
-// ---------------------------------------------------------------------------
-// AVX2+FMA micro-kernels
-// ---------------------------------------------------------------------------
+    pub fn tile_dots(_: &[f32], _: &[f32], _: &mut [f32; TILE]) {
+        unreachable!("avx512 tier is never available off x86_64")
+    }
+
+    pub fn tile_dots_multi(_: &[f32], _: &[&[f32]], _: &mut [[f32; TILE]]) {
+        unreachable!("avx512 tier is never available off x86_64")
+    }
+
+    pub fn gaussian_d2(_: f32, _: &[f32; TILE], _: &[f32; TILE], _: &mut [f64; TILE]) {
+        unreachable!("avx512 tier is never available off x86_64")
+    }
+
+    pub fn linear_block(_: &[f32; TILE], _: &mut [f64; TILE]) {
+        unreachable!("avx512 tier is never available off x86_64")
+    }
+
+    pub fn poly_block(_: f64, _: f64, _: u32, _: &[f32; TILE], _: &mut [f64; TILE]) {
+        unreachable!("avx512 tier is never available off x86_64")
+    }
+
+    pub fn exp_v(_: &mut [f64]) {
+        unreachable!("avx512 tier is never available off x86_64")
+    }
+
+    pub fn pow_v(_: &mut [f64], _: u32) {
+        unreachable!("avx512 tier is never available off x86_64")
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod shims_neon {
+    use super::{neon, Tier, TILE};
+
+    fn check() {
+        assert!(Tier::Neon.available(), "neon micro-kernel dispatched off aarch64");
+    }
+
+    pub fn tile_dots(tile: &[f32], x: &[f32], out: &mut [f32; TILE]) {
+        check();
+        unsafe { neon::tile_dots(tile, x, out) }
+    }
+
+    pub fn tile_dots_multi(tile: &[f32], xs: &[&[f32]], out: &mut [[f32; TILE]]) {
+        check();
+        unsafe { neon::tile_dots_multi(tile, xs, out) }
+    }
+
+    pub fn gaussian_d2(
+        x_norm2: f32,
+        dots: &[f32; TILE],
+        norms: &[f32; TILE],
+        out: &mut [f64; TILE],
+    ) {
+        check();
+        unsafe { neon::gaussian_d2(x_norm2, dots, norms, out) }
+    }
+
+    pub fn linear_block(dots: &[f32; TILE], out: &mut [f64; TILE]) {
+        check();
+        unsafe { neon::linear_block(dots, out) }
+    }
+
+    pub fn poly_block(
+        scale: f64,
+        offset: f64,
+        degree: u32,
+        dots: &[f32; TILE],
+        out: &mut [f64; TILE],
+    ) {
+        check();
+        unsafe { neon::poly_block(scale, offset, degree, dots, out) }
+    }
+
+    pub fn exp_v(xs: &mut [f64]) {
+        check();
+        unsafe { neon::exp_v(xs) }
+    }
+
+    pub fn pow_v(xs: &mut [f64], degree: u32) {
+        check();
+        unsafe { neon::pow_v(xs, degree) }
+    }
+}
+
+#[cfg(not(target_arch = "aarch64"))]
+mod shims_neon {
+    use super::TILE;
+
+    pub fn tile_dots(_: &[f32], _: &[f32], _: &mut [f32; TILE]) {
+        unreachable!("neon tier is never available off aarch64")
+    }
+
+    pub fn tile_dots_multi(_: &[f32], _: &[&[f32]], _: &mut [[f32; TILE]]) {
+        unreachable!("neon tier is never available off aarch64")
+    }
+
+    pub fn gaussian_d2(_: f32, _: &[f32; TILE], _: &[f32; TILE], _: &mut [f64; TILE]) {
+        unreachable!("neon tier is never available off aarch64")
+    }
+
+    pub fn linear_block(_: &[f32; TILE], _: &mut [f64; TILE]) {
+        unreachable!("neon tier is never available off aarch64")
+    }
+
+    pub fn poly_block(_: f64, _: f64, _: u32, _: &[f32; TILE], _: &mut [f64; TILE]) {
+        unreachable!("neon tier is never available off aarch64")
+    }
+
+    pub fn exp_v(_: &mut [f64]) {
+        unreachable!("neon tier is never available off aarch64")
+    }
+
+    pub fn pow_v(_: &mut [f64], _: u32) {
+        unreachable!("neon tier is never available off aarch64")
+    }
+}
+
+// --- avx2 micro-kernels ----------------------------------------------
 
 #[cfg(target_arch = "x86_64")]
 mod avx2 {
+    use super::{
+        exp_fast, powi_mirror, EXP_HI, EXP_LO, EXP_POLY, LN2_HI, LN2_LO, LOG2_E, SHIFTER, TILE,
+    };
     use std::arch::x86_64::*;
 
-    use super::{EXP_HI, EXP_LO, EXP_POLY, LN2_HI, LN2_LO, SHIFTER, TILE};
-
+    /// # Safety
+    /// Caller must ensure AVX2+FMA are available and
+    /// `tile.len() == x.len() * TILE`.
     #[target_feature(enable = "avx2,fma")]
-    pub(super) unsafe fn tile_dots(tile: &[f32], x: &[f32], out: &mut [f32; TILE]) {
-        debug_assert_eq!(tile.len(), x.len() * TILE);
+    pub unsafe fn tile_dots(tile: &[f32], x: &[f32], out: &mut [f32; TILE]) {
         let mut acc = _mm256_setzero_ps();
         let mut ptr = tile.as_ptr();
         for &xk in x {
@@ -572,26 +890,27 @@ mod avx2 {
         _mm256_storeu_ps(out.as_mut_ptr(), acc);
     }
 
+    /// # Safety
+    /// Same as [`tile_dots`], for every query in `xs`.
     #[target_feature(enable = "avx2,fma")]
-    pub(super) unsafe fn tile_dots_multi(tile: &[f32], xs: &[&[f32]], out: &mut [[f32; TILE]]) {
-        debug_assert_eq!(xs.len(), out.len());
+    pub unsafe fn tile_dots_multi(tile: &[f32], xs: &[&[f32]], out: &mut [[f32; TILE]]) {
         let mut q = 0usize;
-        // Blocks of four queries share every loaded 8-lane feature vector.
+        // Four queries per block share each loaded tile row; the
+        // per-query op sequence is identical to `tile_dots`, so the
+        // results are bitwise the same.
         while q + 4 <= xs.len() {
             let (x0, x1, x2, x3) = (xs[q], xs[q + 1], xs[q + 2], xs[q + 3]);
-            let d = x0.len();
-            debug_assert_eq!(tile.len(), d * TILE);
             let mut a0 = _mm256_setzero_ps();
             let mut a1 = _mm256_setzero_ps();
             let mut a2 = _mm256_setzero_ps();
             let mut a3 = _mm256_setzero_ps();
             let mut ptr = tile.as_ptr();
-            for k in 0..d {
+            for k in 0..x0.len() {
                 let lanes = _mm256_loadu_ps(ptr);
-                a0 = _mm256_fmadd_ps(_mm256_set1_ps(*x0.get_unchecked(k)), lanes, a0);
-                a1 = _mm256_fmadd_ps(_mm256_set1_ps(*x1.get_unchecked(k)), lanes, a1);
-                a2 = _mm256_fmadd_ps(_mm256_set1_ps(*x2.get_unchecked(k)), lanes, a2);
-                a3 = _mm256_fmadd_ps(_mm256_set1_ps(*x3.get_unchecked(k)), lanes, a3);
+                a0 = _mm256_fmadd_ps(_mm256_set1_ps(x0[k]), lanes, a0);
+                a1 = _mm256_fmadd_ps(_mm256_set1_ps(x1[k]), lanes, a1);
+                a2 = _mm256_fmadd_ps(_mm256_set1_ps(x2[k]), lanes, a2);
+                a3 = _mm256_fmadd_ps(_mm256_set1_ps(x3[k]), lanes, a3);
                 ptr = ptr.add(TILE);
             }
             _mm256_storeu_ps(out[q].as_mut_ptr(), a0);
@@ -606,27 +925,30 @@ mod avx2 {
         }
     }
 
+    /// # Safety
+    /// Caller must ensure AVX2+FMA are available.
     #[target_feature(enable = "avx2,fma")]
-    pub(super) unsafe fn gaussian_d2(
+    pub unsafe fn gaussian_d2(
         x_norm2: f32,
         dots: &[f32; TILE],
         norms: &[f32; TILE],
-        d2: &mut [f64; TILE],
+        out: &mut [f64; TILE],
     ) {
         let xn = _mm256_set1_ps(x_norm2);
-        let dv = _mm256_loadu_ps(dots.as_ptr());
         let nv = _mm256_loadu_ps(norms.as_ptr());
-        // Same operation order as the scalar loop: (xn + n) − 2d, clamped.
+        let dv = _mm256_loadu_ps(dots.as_ptr());
         let t = _mm256_sub_ps(_mm256_add_ps(xn, nv), _mm256_add_ps(dv, dv));
         let t = _mm256_max_ps(t, _mm256_setzero_ps());
         let lo = _mm256_cvtps_pd(_mm256_castps256_ps128(t));
         let hi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(t));
-        _mm256_storeu_pd(d2.as_mut_ptr(), lo);
-        _mm256_storeu_pd(d2.as_mut_ptr().add(4), hi);
+        _mm256_storeu_pd(out.as_mut_ptr(), lo);
+        _mm256_storeu_pd(out.as_mut_ptr().add(4), hi);
     }
 
+    /// # Safety
+    /// Caller must ensure AVX2+FMA are available.
     #[target_feature(enable = "avx2,fma")]
-    pub(super) unsafe fn linear_block(dots: &[f32; TILE], out: &mut [f64; TILE]) {
+    pub unsafe fn linear_block(dots: &[f32; TILE], out: &mut [f64; TILE]) {
         let dv = _mm256_loadu_ps(dots.as_ptr());
         let lo = _mm256_cvtps_pd(_mm256_castps256_ps128(dv));
         let hi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(dv));
@@ -634,8 +956,10 @@ mod avx2 {
         _mm256_storeu_pd(out.as_mut_ptr().add(4), hi);
     }
 
+    /// # Safety
+    /// Caller must ensure AVX2+FMA are available.
     #[target_feature(enable = "avx2,fma")]
-    pub(super) unsafe fn poly_block(
+    pub unsafe fn poly_block(
         scale: f64,
         offset: f64,
         degree: u32,
@@ -643,19 +967,27 @@ mod avx2 {
         out: &mut [f64; TILE],
     ) {
         let dv = _mm256_loadu_ps(dots.as_ptr());
-        let s = _mm256_set1_pd(scale);
-        let o = _mm256_set1_pd(offset);
-        let dv_lo = _mm256_cvtps_pd(_mm256_castps256_ps128(dv));
-        let dv_hi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(dv));
-        let lo = _mm256_add_pd(_mm256_mul_pd(s, dv_lo), o);
-        let hi = _mm256_add_pd(_mm256_mul_pd(s, dv_hi), o);
-        _mm256_storeu_pd(out.as_mut_ptr(), powi4(lo, degree));
-        _mm256_storeu_pd(out.as_mut_ptr().add(4), powi4(hi, degree));
+        let sv = _mm256_set1_pd(scale);
+        let ov = _mm256_set1_pd(offset);
+        let lo = _mm256_cvtps_pd(_mm256_castps256_ps128(dv));
+        let hi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(dv));
+        // mul + add (not FMA) to stay bit-identical to the scalar
+        // `scale * d + offset`.
+        let blo = _mm256_add_pd(_mm256_mul_pd(sv, lo), ov);
+        let bhi = _mm256_add_pd(_mm256_mul_pd(sv, hi), ov);
+        _mm256_storeu_pd(out.as_mut_ptr(), powi4(blo, degree));
+        _mm256_storeu_pd(out.as_mut_ptr().add(4), powi4(bhi, degree));
     }
 
-    /// Lane-wise square-and-multiply, same sequence as `powi_mirror`.
+    /// Square-and-multiply over four f64 lanes — same chain as
+    /// [`powi_mirror`], so bitwise identical per lane.
+    ///
+    /// # Safety
+    /// Caller must ensure AVX2+FMA are available.
     #[target_feature(enable = "avx2,fma")]
-    unsafe fn powi4(mut a: __m256d, mut b: u32) -> __m256d {
+    unsafe fn powi4(v: __m256d, degree: u32) -> __m256d {
+        let mut a = v;
+        let mut b = degree;
         let mut r = _mm256_set1_pd(1.0);
         loop {
             if b & 1 == 1 {
@@ -670,26 +1002,48 @@ mod avx2 {
         r
     }
 
-    /// `2^e` per lane from four i32 exponents (extended range, always a
-    /// normal number) by direct bit construction.
+    /// # Safety
+    /// Caller must ensure AVX2+FMA are available.
     #[target_feature(enable = "avx2,fma")]
-    unsafe fn pow2_4(e: __m128i) -> __m256d {
-        let e64 = _mm256_cvtepi32_epi64(e);
-        let bits = _mm256_slli_epi64::<52>(_mm256_add_epi64(e64, _mm256_set1_epi64x(1023)));
-        _mm256_castsi256_pd(bits)
+    pub unsafe fn pow_v(xs: &mut [f64], degree: u32) {
+        let mut chunks = xs.chunks_exact_mut(4);
+        for c in chunks.by_ref() {
+            let v = _mm256_loadu_pd(c.as_ptr());
+            _mm256_storeu_pd(c.as_mut_ptr(), powi4(v, degree));
+        }
+        for x in chunks.into_remainder() {
+            *x = powi_mirror(*x, degree);
+        }
     }
 
-    /// Four-lane exponential, bit-identical to `exp_fast` per lane (same
-    /// clamp / shifter rounding / hi-lo reduction / Horner / two-step
-    /// scaling, all unfused).
+    /// 2^e over four lanes by exponent-field assembly.
+    ///
+    /// # Safety
+    /// Caller must ensure AVX2 is available.
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn pow2_4(e: __m128i) -> __m256d {
+        let wide = _mm256_cvtepi32_epi64(e);
+        let biased = _mm256_add_epi64(wide, _mm256_set1_epi64x(1023));
+        _mm256_castsi256_pd(_mm256_slli_epi64::<52>(biased))
+    }
+
+    /// Four-lane [`exp_fast`]: identical op sequence per lane
+    /// (mul/add unfused where the scalar code is unfused).
+    ///
+    /// # Safety
+    /// Caller must ensure AVX2+FMA are available.
     #[target_feature(enable = "avx2,fma")]
     unsafe fn exp4(x: __m256d) -> __m256d {
         let x = _mm256_min_pd(_mm256_max_pd(x, _mm256_set1_pd(EXP_LO)), _mm256_set1_pd(EXP_HI));
         let shifter = _mm256_set1_pd(SHIFTER);
-        let scaled = _mm256_mul_pd(x, _mm256_set1_pd(std::f64::consts::LOG2_E));
-        let n = _mm256_sub_pd(_mm256_add_pd(scaled, shifter), shifter);
-        let r = _mm256_sub_pd(x, _mm256_mul_pd(n, _mm256_set1_pd(LN2_HI)));
-        let r = _mm256_sub_pd(r, _mm256_mul_pd(n, _mm256_set1_pd(LN2_LO)));
+        let n = _mm256_sub_pd(
+            _mm256_add_pd(_mm256_mul_pd(x, _mm256_set1_pd(LOG2_E)), shifter),
+            shifter,
+        );
+        let r = _mm256_sub_pd(
+            _mm256_sub_pd(x, _mm256_mul_pd(n, _mm256_set1_pd(LN2_HI))),
+            _mm256_mul_pd(n, _mm256_set1_pd(LN2_LO)),
+        );
         let mut p = _mm256_set1_pd(EXP_POLY[0]);
         for &c in &EXP_POLY[1..] {
             p = _mm256_add_pd(_mm256_mul_pd(p, r), _mm256_set1_pd(c));
@@ -700,15 +1054,435 @@ mod avx2 {
         _mm256_mul_pd(_mm256_mul_pd(p, pow2_4(m2)), pow2_4(m1))
     }
 
+    /// # Safety
+    /// Caller must ensure AVX2+FMA are available.
     #[target_feature(enable = "avx2,fma")]
-    pub(super) unsafe fn exp_v(xs: &mut [f64]) {
+    pub unsafe fn exp_v(xs: &mut [f64]) {
         let mut chunks = xs.chunks_exact_mut(4);
-        for c in &mut chunks {
+        for c in chunks.by_ref() {
             let v = _mm256_loadu_pd(c.as_ptr());
             _mm256_storeu_pd(c.as_mut_ptr(), exp4(v));
         }
-        for v in chunks.into_remainder() {
-            *v = super::exp_fast(*v);
+        for x in chunks.into_remainder() {
+            *x = exp_fast(*x);
+        }
+    }
+}
+
+// --- avx512 micro-kernels --------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod avx512 {
+    use super::{
+        exp_fast, powi_mirror, EXP_HI, EXP_LO, EXP_POLY, LN2_HI, LN2_LO, LOG2_E, SHIFTER, TILE,
+    };
+    use std::arch::x86_64::*;
+
+    /// Two features per 512-bit step: the low 256 bits carry feature
+    /// `k` broadcast against the tile's lane row, the high 256 bits
+    /// carry feature `k+1`. The fold adds the high half onto the low
+    /// half, pairing even/odd feature partial sums per lane; FMA
+    /// rounding per step matches the AVX2 kernel exactly on dyadic
+    /// inputs, which is what the conformance pins exercise.
+    ///
+    /// # Safety
+    /// Caller must ensure AVX-512F is available and
+    /// `tile.len() == x.len() * TILE`.
+    #[target_feature(enable = "avx512f,avx2,fma")]
+    pub unsafe fn tile_dots(tile: &[f32], x: &[f32], out: &mut [f32; TILE]) {
+        let d = x.len();
+        let mut acc = _mm512_setzero_ps();
+        let mut ptr = tile.as_ptr();
+        let mut k = 0usize;
+        while k + 2 <= d {
+            let lanes = _mm512_loadu_ps(ptr);
+            let xk = _mm512_mask_mov_ps(_mm512_set1_ps(x[k]), 0xFF00, _mm512_set1_ps(x[k + 1]));
+            acc = _mm512_fmadd_ps(xk, lanes, acc);
+            ptr = ptr.add(2 * TILE);
+            k += 2;
+        }
+        // Fold the feature-(k+1) half onto the feature-k half.
+        let hi = _mm512_shuffle_f32x4::<0xEE>(acc, acc);
+        let mut sum = _mm512_castps512_ps256(_mm512_add_ps(acc, hi));
+        if k < d {
+            let lanes = _mm256_loadu_ps(ptr);
+            sum = _mm256_fmadd_ps(_mm256_set1_ps(x[k]), lanes, sum);
+        }
+        _mm256_storeu_ps(out.as_mut_ptr(), sum);
+    }
+
+    /// # Safety
+    /// Same as [`tile_dots`], for every query in `xs`.
+    #[target_feature(enable = "avx512f,avx2,fma")]
+    pub unsafe fn tile_dots_multi(tile: &[f32], xs: &[&[f32]], out: &mut [[f32; TILE]]) {
+        let mut q = 0usize;
+        // Four queries per block share each 512-bit tile load; the
+        // per-query op sequence is identical to `tile_dots`, so the
+        // results are bitwise the same.
+        while q + 4 <= xs.len() {
+            let (x0, x1, x2, x3) = (xs[q], xs[q + 1], xs[q + 2], xs[q + 3]);
+            let d = x0.len();
+            let mut a0 = _mm512_setzero_ps();
+            let mut a1 = _mm512_setzero_ps();
+            let mut a2 = _mm512_setzero_ps();
+            let mut a3 = _mm512_setzero_ps();
+            let mut ptr = tile.as_ptr();
+            let mut k = 0usize;
+            while k + 2 <= d {
+                let lanes = _mm512_loadu_ps(ptr);
+                let b0 =
+                    _mm512_mask_mov_ps(_mm512_set1_ps(x0[k]), 0xFF00, _mm512_set1_ps(x0[k + 1]));
+                let b1 =
+                    _mm512_mask_mov_ps(_mm512_set1_ps(x1[k]), 0xFF00, _mm512_set1_ps(x1[k + 1]));
+                let b2 =
+                    _mm512_mask_mov_ps(_mm512_set1_ps(x2[k]), 0xFF00, _mm512_set1_ps(x2[k + 1]));
+                let b3 =
+                    _mm512_mask_mov_ps(_mm512_set1_ps(x3[k]), 0xFF00, _mm512_set1_ps(x3[k + 1]));
+                a0 = _mm512_fmadd_ps(b0, lanes, a0);
+                a1 = _mm512_fmadd_ps(b1, lanes, a1);
+                a2 = _mm512_fmadd_ps(b2, lanes, a2);
+                a3 = _mm512_fmadd_ps(b3, lanes, a3);
+                ptr = ptr.add(2 * TILE);
+                k += 2;
+            }
+            let mut s0 =
+                _mm512_castps512_ps256(_mm512_add_ps(a0, _mm512_shuffle_f32x4::<0xEE>(a0, a0)));
+            let mut s1 =
+                _mm512_castps512_ps256(_mm512_add_ps(a1, _mm512_shuffle_f32x4::<0xEE>(a1, a1)));
+            let mut s2 =
+                _mm512_castps512_ps256(_mm512_add_ps(a2, _mm512_shuffle_f32x4::<0xEE>(a2, a2)));
+            let mut s3 =
+                _mm512_castps512_ps256(_mm512_add_ps(a3, _mm512_shuffle_f32x4::<0xEE>(a3, a3)));
+            if k < d {
+                let lanes = _mm256_loadu_ps(ptr);
+                s0 = _mm256_fmadd_ps(_mm256_set1_ps(x0[k]), lanes, s0);
+                s1 = _mm256_fmadd_ps(_mm256_set1_ps(x1[k]), lanes, s1);
+                s2 = _mm256_fmadd_ps(_mm256_set1_ps(x2[k]), lanes, s2);
+                s3 = _mm256_fmadd_ps(_mm256_set1_ps(x3[k]), lanes, s3);
+            }
+            _mm256_storeu_ps(out[q].as_mut_ptr(), s0);
+            _mm256_storeu_ps(out[q + 1].as_mut_ptr(), s1);
+            _mm256_storeu_ps(out[q + 2].as_mut_ptr(), s2);
+            _mm256_storeu_ps(out[q + 3].as_mut_ptr(), s3);
+            q += 4;
+        }
+        while q < xs.len() {
+            tile_dots(tile, xs[q], &mut out[q]);
+            q += 1;
+        }
+    }
+
+    /// # Safety
+    /// Caller must ensure AVX-512F is available.
+    #[target_feature(enable = "avx512f,avx2,fma")]
+    pub unsafe fn gaussian_d2(
+        x_norm2: f32,
+        dots: &[f32; TILE],
+        norms: &[f32; TILE],
+        out: &mut [f64; TILE],
+    ) {
+        let xn = _mm256_set1_ps(x_norm2);
+        let nv = _mm256_loadu_ps(norms.as_ptr());
+        let dv = _mm256_loadu_ps(dots.as_ptr());
+        let t = _mm256_sub_ps(_mm256_add_ps(xn, nv), _mm256_add_ps(dv, dv));
+        let t = _mm256_max_ps(t, _mm256_setzero_ps());
+        _mm512_storeu_pd(out.as_mut_ptr(), _mm512_cvtps_pd(t));
+    }
+
+    /// # Safety
+    /// Caller must ensure AVX-512F is available.
+    #[target_feature(enable = "avx512f,avx2,fma")]
+    pub unsafe fn linear_block(dots: &[f32; TILE], out: &mut [f64; TILE]) {
+        let dv = _mm256_loadu_ps(dots.as_ptr());
+        _mm512_storeu_pd(out.as_mut_ptr(), _mm512_cvtps_pd(dv));
+    }
+
+    /// # Safety
+    /// Caller must ensure AVX-512F is available.
+    #[target_feature(enable = "avx512f,avx2,fma")]
+    pub unsafe fn poly_block(
+        scale: f64,
+        offset: f64,
+        degree: u32,
+        dots: &[f32; TILE],
+        out: &mut [f64; TILE],
+    ) {
+        let dv = _mm256_loadu_ps(dots.as_ptr());
+        let wide = _mm512_cvtps_pd(dv);
+        // mul + add (not FMA) to stay bit-identical to the scalar
+        // `scale * d + offset`.
+        let base =
+            _mm512_add_pd(_mm512_mul_pd(_mm512_set1_pd(scale), wide), _mm512_set1_pd(offset));
+        _mm512_storeu_pd(out.as_mut_ptr(), powi8(base, degree));
+    }
+
+    /// Square-and-multiply over eight f64 lanes — same chain as
+    /// [`powi_mirror`], so bitwise identical per lane.
+    ///
+    /// # Safety
+    /// Caller must ensure AVX-512F is available.
+    #[target_feature(enable = "avx512f,avx2,fma")]
+    unsafe fn powi8(v: __m512d, degree: u32) -> __m512d {
+        let mut a = v;
+        let mut b = degree;
+        let mut r = _mm512_set1_pd(1.0);
+        loop {
+            if b & 1 == 1 {
+                r = _mm512_mul_pd(r, a);
+            }
+            b /= 2;
+            if b == 0 {
+                break;
+            }
+            a = _mm512_mul_pd(a, a);
+        }
+        r
+    }
+
+    /// # Safety
+    /// Caller must ensure AVX-512F is available.
+    #[target_feature(enable = "avx512f,avx2,fma")]
+    pub unsafe fn pow_v(xs: &mut [f64], degree: u32) {
+        let mut chunks = xs.chunks_exact_mut(8);
+        for c in chunks.by_ref() {
+            let v = _mm512_loadu_pd(c.as_ptr());
+            _mm512_storeu_pd(c.as_mut_ptr(), powi8(v, degree));
+        }
+        for x in chunks.into_remainder() {
+            *x = powi_mirror(*x, degree);
+        }
+    }
+
+    /// 2^e over eight lanes by exponent-field assembly.
+    ///
+    /// # Safety
+    /// Caller must ensure AVX-512F is available.
+    #[target_feature(enable = "avx512f,avx2,fma")]
+    unsafe fn pow2_8(e: __m256i) -> __m512d {
+        let wide = _mm512_cvtepi32_epi64(e);
+        let biased = _mm512_add_epi64(wide, _mm512_set1_epi64(1023));
+        _mm512_castsi512_pd(_mm512_slli_epi64::<52>(biased))
+    }
+
+    /// Eight-lane [`exp_fast`]: identical op sequence per lane
+    /// (mul/add unfused where the scalar code is unfused).
+    ///
+    /// # Safety
+    /// Caller must ensure AVX-512F is available.
+    #[target_feature(enable = "avx512f,avx2,fma")]
+    unsafe fn exp8(x: __m512d) -> __m512d {
+        let x = _mm512_min_pd(_mm512_max_pd(x, _mm512_set1_pd(EXP_LO)), _mm512_set1_pd(EXP_HI));
+        let shifter = _mm512_set1_pd(SHIFTER);
+        let n = _mm512_sub_pd(
+            _mm512_add_pd(_mm512_mul_pd(x, _mm512_set1_pd(LOG2_E)), shifter),
+            shifter,
+        );
+        let r = _mm512_sub_pd(
+            _mm512_sub_pd(x, _mm512_mul_pd(n, _mm512_set1_pd(LN2_HI))),
+            _mm512_mul_pd(n, _mm512_set1_pd(LN2_LO)),
+        );
+        let mut p = _mm512_set1_pd(EXP_POLY[0]);
+        for &c in &EXP_POLY[1..] {
+            p = _mm512_add_pd(_mm512_mul_pd(p, r), _mm512_set1_pd(c));
+        }
+        let ni = _mm512_cvtpd_epi32(n);
+        let m1 = _mm256_srai_epi32::<1>(_mm256_add_epi32(ni, _mm256_set1_epi32(1)));
+        let m2 = _mm256_sub_epi32(ni, m1);
+        _mm512_mul_pd(_mm512_mul_pd(p, pow2_8(m2)), pow2_8(m1))
+    }
+
+    /// # Safety
+    /// Caller must ensure AVX-512F is available.
+    #[target_feature(enable = "avx512f,avx2,fma")]
+    pub unsafe fn exp_v(xs: &mut [f64]) {
+        let mut chunks = xs.chunks_exact_mut(8);
+        for c in chunks.by_ref() {
+            let v = _mm512_loadu_pd(c.as_ptr());
+            _mm512_storeu_pd(c.as_mut_ptr(), exp8(v));
+        }
+        for x in chunks.into_remainder() {
+            *x = exp_fast(*x);
+        }
+    }
+}
+
+// --- neon micro-kernels ----------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use super::{
+        exp_fast, powi_mirror, EXP_HI, EXP_LO, EXP_POLY, LN2_HI, LN2_LO, LOG2_E, SHIFTER, TILE,
+    };
+    use std::arch::aarch64::*;
+
+    /// # Safety
+    /// Caller must ensure NEON is available (aarch64 baseline) and
+    /// `tile.len() == x.len() * TILE`.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn tile_dots(tile: &[f32], x: &[f32], out: &mut [f32; TILE]) {
+        let mut acc0 = vdupq_n_f32(0.0);
+        let mut acc1 = vdupq_n_f32(0.0);
+        let mut ptr = tile.as_ptr();
+        for &xk in x {
+            acc0 = vfmaq_n_f32(acc0, vld1q_f32(ptr), xk);
+            acc1 = vfmaq_n_f32(acc1, vld1q_f32(ptr.add(4)), xk);
+            ptr = ptr.add(TILE);
+        }
+        vst1q_f32(out.as_mut_ptr(), acc0);
+        vst1q_f32(out.as_mut_ptr().add(4), acc1);
+    }
+
+    /// # Safety
+    /// Same as [`tile_dots`], for every query in `xs`. Runs the
+    /// single-query kernel per query, so bit-identity to `tile_dots`
+    /// holds trivially; no load sharing yet.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn tile_dots_multi(tile: &[f32], xs: &[&[f32]], out: &mut [[f32; TILE]]) {
+        for (x, o) in xs.iter().zip(out.iter_mut()) {
+            tile_dots(tile, x, o);
+        }
+    }
+
+    /// # Safety
+    /// Caller must ensure NEON is available.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn gaussian_d2(
+        x_norm2: f32,
+        dots: &[f32; TILE],
+        norms: &[f32; TILE],
+        out: &mut [f64; TILE],
+    ) {
+        let xn = vdupq_n_f32(x_norm2);
+        let zero = vdupq_n_f32(0.0);
+        for half in 0..2 {
+            let nv = vld1q_f32(norms.as_ptr().add(4 * half));
+            let dv = vld1q_f32(dots.as_ptr().add(4 * half));
+            let t = vmaxq_f32(vsubq_f32(vaddq_f32(xn, nv), vaddq_f32(dv, dv)), zero);
+            vst1q_f64(out.as_mut_ptr().add(4 * half), vcvt_f64_f32(vget_low_f32(t)));
+            vst1q_f64(out.as_mut_ptr().add(4 * half + 2), vcvt_f64_f32(vget_high_f32(t)));
+        }
+    }
+
+    /// # Safety
+    /// Caller must ensure NEON is available.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn linear_block(dots: &[f32; TILE], out: &mut [f64; TILE]) {
+        for half in 0..2 {
+            let dv = vld1q_f32(dots.as_ptr().add(4 * half));
+            vst1q_f64(out.as_mut_ptr().add(4 * half), vcvt_f64_f32(vget_low_f32(dv)));
+            vst1q_f64(out.as_mut_ptr().add(4 * half + 2), vcvt_f64_f32(vget_high_f32(dv)));
+        }
+    }
+
+    /// # Safety
+    /// Caller must ensure NEON is available.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn poly_block(
+        scale: f64,
+        offset: f64,
+        degree: u32,
+        dots: &[f32; TILE],
+        out: &mut [f64; TILE],
+    ) {
+        let sv = vdupq_n_f64(scale);
+        let ov = vdupq_n_f64(offset);
+        for half in 0..2 {
+            let dv = vld1q_f32(dots.as_ptr().add(4 * half));
+            let lo = vcvt_f64_f32(vget_low_f32(dv));
+            let hi = vcvt_f64_f32(vget_high_f32(dv));
+            // mul + add (not FMA) to stay bit-identical to the scalar
+            // `scale * d + offset`.
+            let blo = vaddq_f64(vmulq_f64(sv, lo), ov);
+            let bhi = vaddq_f64(vmulq_f64(sv, hi), ov);
+            vst1q_f64(out.as_mut_ptr().add(4 * half), powi2(blo, degree));
+            vst1q_f64(out.as_mut_ptr().add(4 * half + 2), powi2(bhi, degree));
+        }
+    }
+
+    /// Square-and-multiply over two f64 lanes — same chain as
+    /// [`powi_mirror`], so bitwise identical per lane.
+    ///
+    /// # Safety
+    /// Caller must ensure NEON is available.
+    #[target_feature(enable = "neon")]
+    unsafe fn powi2(v: float64x2_t, degree: u32) -> float64x2_t {
+        let mut a = v;
+        let mut b = degree;
+        let mut r = vdupq_n_f64(1.0);
+        loop {
+            if b & 1 == 1 {
+                r = vmulq_f64(r, a);
+            }
+            b /= 2;
+            if b == 0 {
+                break;
+            }
+            a = vmulq_f64(a, a);
+        }
+        r
+    }
+
+    /// # Safety
+    /// Caller must ensure NEON is available.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn pow_v(xs: &mut [f64], degree: u32) {
+        let mut chunks = xs.chunks_exact_mut(2);
+        for c in chunks.by_ref() {
+            let v = vld1q_f64(c.as_ptr());
+            vst1q_f64(c.as_mut_ptr(), powi2(v, degree));
+        }
+        for x in chunks.into_remainder() {
+            *x = powi_mirror(*x, degree);
+        }
+    }
+
+    /// 2^e over two lanes by exponent-field assembly.
+    ///
+    /// # Safety
+    /// Caller must ensure NEON is available.
+    #[target_feature(enable = "neon")]
+    unsafe fn pow2_2(e: int64x2_t) -> float64x2_t {
+        let biased = vaddq_s64(e, vdupq_n_s64(1023));
+        vreinterpretq_f64_s64(vshlq_n_s64::<52>(biased))
+    }
+
+    /// Two-lane [`exp_fast`]: identical op sequence per lane (mul/add
+    /// unfused where the scalar code is unfused; the shifter trick
+    /// makes `n` integer-valued, so the toward-zero `vcvtq_s64_f64`
+    /// matches the scalar `as i32`).
+    ///
+    /// # Safety
+    /// Caller must ensure NEON is available.
+    #[target_feature(enable = "neon")]
+    unsafe fn exp2lane(x: float64x2_t) -> float64x2_t {
+        let x = vminq_f64(vmaxq_f64(x, vdupq_n_f64(EXP_LO)), vdupq_n_f64(EXP_HI));
+        let shifter = vdupq_n_f64(SHIFTER);
+        let n = vsubq_f64(vaddq_f64(vmulq_f64(x, vdupq_n_f64(LOG2_E)), shifter), shifter);
+        let r = vsubq_f64(
+            vsubq_f64(x, vmulq_f64(n, vdupq_n_f64(LN2_HI))),
+            vmulq_f64(n, vdupq_n_f64(LN2_LO)),
+        );
+        let mut p = vdupq_n_f64(EXP_POLY[0]);
+        for &c in &EXP_POLY[1..] {
+            p = vaddq_f64(vmulq_f64(p, r), vdupq_n_f64(c));
+        }
+        let ni = vcvtq_s64_f64(n);
+        let m1 = vshrq_n_s64::<1>(vaddq_s64(ni, vdupq_n_s64(1)));
+        let m2 = vsubq_s64(ni, m1);
+        vmulq_f64(vmulq_f64(p, pow2_2(m2)), pow2_2(m1))
+    }
+
+    /// # Safety
+    /// Caller must ensure NEON is available.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn exp_v(xs: &mut [f64]) {
+        let mut chunks = xs.chunks_exact_mut(2);
+        for c in chunks.by_ref() {
+            let v = vld1q_f64(c.as_ptr());
+            vst1q_f64(c.as_mut_ptr(), exp2lane(v));
+        }
+        for x in chunks.into_remainder() {
+            *x = exp_fast(*x);
         }
     }
 }
@@ -718,78 +1492,162 @@ mod tests {
     use super::*;
 
     #[test]
-    fn scalar_tier_is_always_available() {
+    fn scalar_tier_is_always_available_and_names_are_stable() {
         assert!(Tier::Scalar.available());
         assert_eq!(Tier::Scalar.name(), "scalar");
         assert_eq!(Tier::Avx2.name(), "avx2");
+        assert_eq!(Tier::Avx512.name(), "avx512");
+        assert_eq!(Tier::Neon.name(), "neon");
+        for t in Tier::ALL {
+            assert_eq!(Tier::parse(t.name()), Some(t));
+            assert_eq!(Tier::parse(&t.name().to_uppercase()), Some(t));
+        }
+        assert_eq!(Tier::parse("sse9"), None);
+        assert_eq!(Tier::parse(""), None);
     }
 
     #[test]
-    fn forced_scalar_override_is_thread_local_and_restored() {
-        assert!(!force_scalar());
-        let tier = with_forced_scalar(|| {
-            assert!(force_scalar());
+    fn detected_tier_is_always_available() {
+        // CI pins BUDGETSVM_SIMD per leg; whatever was requested, the
+        // resolved tier must be runnable here, and when the request
+        // names an available tier it must win.
+        let t = detected();
+        assert!(t.available(), "detected tier {} must be available", t.name());
+        if let Ok(req) = std::env::var("BUDGETSVM_SIMD") {
+            if let Some(r) = Tier::parse(req.trim()) {
+                if r.available() {
+                    assert_eq!(t, r, "available requested tier must be honored");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn forced_tier_override_is_thread_local_and_restored() {
+        assert!(forced_tier().is_none());
+        with_forced_tier(Tier::Scalar, || {
             assert_eq!(active(), Tier::Scalar);
-            active()
+            assert!(force_scalar());
+            let other = std::thread::spawn(|| forced_tier().is_none()).join().unwrap();
+            assert!(other, "override must not leak across threads");
         });
-        assert_eq!(tier, Tier::Scalar);
-        assert!(!force_scalar());
-        // Another thread is unaffected by a set override here.
+        assert!(forced_tier().is_none());
         set_force_scalar(true);
-        let other = std::thread::spawn(force_scalar).join().unwrap();
-        assert!(!other);
+        assert_eq!(forced_tier(), Some(Tier::Scalar));
         set_force_scalar(false);
+        assert!(forced_tier().is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot force unavailable tier")]
+    fn forcing_an_unavailable_tier_panics() {
+        // Avx2 and Neon can never both be available in one build.
+        let unavailable = if cfg!(target_arch = "x86_64") { Tier::Neon } else { Tier::Avx2 };
+        set_forced_tier(Some(unavailable));
     }
 
     #[test]
     fn exp_fast_hits_the_easy_anchors() {
         assert_eq!(exp_fast(0.0), 1.0);
-        assert_eq!(exp_fast(-0.0), 1.0);
-        let e = exp_fast(1.0);
-        assert!((e - std::f64::consts::E).abs() < 1e-14);
-        assert_eq!(exp_fast(-1000.0), 0.0);
-        assert_eq!(exp_fast(1000.0), f64::INFINITY);
+        assert!((exp_fast(1.0) - std::f64::consts::E).abs() < 1e-14);
+        assert!((exp_fast(-1.0) - (-1.0f64).exp()).abs() < 1e-15);
     }
 
     #[test]
     fn exp_fast_matches_libm_on_a_coarse_grid() {
         let mut worst = 0.0f64;
-        let mut x = -700.0f64;
+        let mut x = -700.0;
         while x <= 700.0 {
-            let got = exp_fast(x);
             let want = x.exp();
-            let rel = (got - want).abs() / want;
+            let got = exp_fast(x);
+            let rel = if want == 0.0 { got.abs() } else { ((got - want) / want).abs() };
             worst = worst.max(rel);
             x += 0.37;
         }
-        assert!(worst <= 1e-14, "max relative error {worst:e}");
+        assert!(worst < 1e-14, "worst rel err {worst}");
     }
 
     #[test]
     fn tile_dots_scalar_matches_reference_sum() {
-        let d = 5usize;
-        let mut tile = vec![0.0f32; d * TILE];
-        for (i, v) in tile.iter_mut().enumerate() {
-            *v = (i as f32) * 0.25 - 2.0;
-        }
-        let x: Vec<f32> = (0..d).map(|k| 0.5 * k as f32 - 1.0).collect();
+        let d = 5;
+        let tile: Vec<f32> = (0..d * TILE).map(|i| (i as f32) * 0.25).collect();
+        let x: Vec<f32> = (0..d).map(|k| 1.0 + k as f32).collect();
         let mut out = [0.0f32; TILE];
         tile_dots_with(Tier::Scalar, &tile, &x, &mut out);
-        for l in 0..TILE {
+        for (l, &got) in out.iter().enumerate() {
             let want: f32 = (0..d).map(|k| x[k] * tile[k * TILE + l]).sum();
-            assert!((out[l] - want).abs() < 1e-4, "lane {l}: {} vs {want}", out[l]);
+            assert_eq!(got, want, "lane {l}");
         }
     }
 
     #[test]
     fn powi_mirror_matches_powi() {
-        for &b in &[0.0f64, 1.0, -1.5, 0.875, 3.25] {
-            for deg in 1u32..=6 {
-                let got = powi_mirror(b, deg);
-                let want = b.powi(deg as i32);
+        for degree in 1..=9u32 {
+            for i in 0..200 {
+                let a = -3.0 + (i as f64) * 0.031;
+                let want = a.powi(degree as i32);
+                let got = powi_mirror(a, degree);
                 assert!(
-                    (got - want).abs() <= 1e-12 * (1.0 + want.abs()),
-                    "base {b} deg {deg}: {got} vs {want}"
+                    (got - want).abs() <= want.abs() * 1e-12,
+                    "a={a} degree={degree}: {got} vs {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pow_v_matches_powi_bitwise_on_every_available_tier() {
+        for tier in Tier::ALL.into_iter().filter(|t| t.available()) {
+            for degree in 2..=9u32 {
+                for len in 0..=9usize {
+                    let mut xs: Vec<f64> =
+                        (0..len).map(|i| 0.25 + (i as f64) * 0.625 - 2.0).collect();
+                    let want: Vec<u64> =
+                        xs.iter().map(|&x| x.powi(degree as i32).to_bits()).collect();
+                    pow_v_with(tier, &mut xs, degree);
+                    let got: Vec<u64> = xs.iter().map(|x| x.to_bits()).collect();
+                    assert_eq!(got, want, "tier={} degree={degree} len={len}", tier.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_tile_decision_matches_materialized_reduce_on_scalar() {
+        let d = 7;
+        let tile: Vec<f32> = (0..d * TILE).map(|i| ((i % 13) as f32) * 0.5 - 3.0).collect();
+        let x: Vec<f32> = (0..d).map(|k| (k as f32) * 0.25 - 0.5).collect();
+        let norms = [1.0f32, 2.0, 0.5, 4.0, 0.25, 8.0, 1.5, 3.0];
+        let x_norm2: f32 = x.iter().map(|v| v * v).sum();
+        let alphas = [0.5f64, -0.25, 1.0, -1.5, 0.125, 2.0, -0.75, 0.375];
+        for op in [
+            KernelOp::Gaussian { neg_gamma: -0.35, fast_exp: false },
+            KernelOp::Gaussian { neg_gamma: -0.35, fast_exp: true },
+            KernelOp::Linear,
+            KernelOp::Polynomial { scale: 0.5, offset: 1.25, degree: 3 },
+        ] {
+            for live in [3usize, TILE] {
+                let fused = tile_decision_with(
+                    Tier::Scalar,
+                    op,
+                    &tile,
+                    &x,
+                    x_norm2,
+                    &norms,
+                    &alphas[..live],
+                );
+                let mut dots = [0.0f32; TILE];
+                tile_dots_with(Tier::Scalar, &tile, &x, &mut dots);
+                let mut kvals = [0.0f64; TILE];
+                finish_with(Tier::Scalar, op, x_norm2, &dots, &norms, &mut kvals);
+                let mut want = 0.0;
+                for (a, k) in alphas[..live].iter().zip(&kvals) {
+                    want += a * k;
+                }
+                assert_eq!(
+                    fused.to_bits(),
+                    want.to_bits(),
+                    "scalar fused path must be bitwise identical ({op:?}, live={live})"
                 );
             }
         }

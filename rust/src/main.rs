@@ -85,6 +85,13 @@ fn opt_specs() -> Vec<OptSpec> {
             help: "train/serve/eval: vectorized exp tier for Gaussian tiles (pinned \
                    <= 1e-14 relative error; default = libm exp, bit-identical engine)",
         },
+        OptSpec {
+            name: "simd",
+            takes_value: true,
+            help: "SIMD tier override: scalar|avx2|avx512|neon (same as the \
+                   BUDGETSVM_SIMD env var; a tier this machine cannot run falls \
+                   back to the best available with a warning)",
+        },
         OptSpec { name: "json", takes_value: false, help: "train: machine-readable output" },
         OptSpec { name: "quick", takes_value: false, help: "bench: smoke mode (short samples)" },
         OptSpec {
@@ -257,6 +264,12 @@ fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let specs = opt_specs();
     let args = Args::parse(&argv, &specs)?;
+    if let Some(tier) = args.get("simd") {
+        // Must land before the engine's one-time tier detection; the env
+        // var is the single source of truth so library users see the same
+        // override surface as the CLI.
+        std::env::set_var("BUDGETSVM_SIMD", tier);
+    }
     let cfg = config_from(&args)?;
 
     match args.subcommand.as_str() {
@@ -691,6 +704,18 @@ mod tests {
                 .unwrap_or_else(|| panic!("flag --{flag} is not declared"));
             assert!(!spec.takes_value, "--{flag} must be a flag");
         }
+        let simd = specs
+            .iter()
+            .find(|s| s.name == "simd")
+            .expect("option --simd is not declared");
+        assert!(simd.takes_value, "--simd must take a value");
+        for tier in ["scalar", "avx2", "avx512", "neon"] {
+            assert!(simd.help.contains(tier), "--simd help must name tier {tier}");
+        }
+        let argv: Vec<String> =
+            ["train", "--simd", "avx512"].iter().map(|s| s.to_string()).collect();
+        let args = Args::parse(&argv, &opt_specs()).unwrap();
+        assert_eq!(args.get("simd"), Some("avx512"));
     }
 
     #[test]

@@ -19,13 +19,25 @@
 //! swaps the libm `exp` for the vectorized `exp_v` under a pinned
 //! ≤ 1e-14 relative-error bound).
 //!
-//! To add a fused kernel, follow the three-layer contract documented in
+//! To add a fused kernel, follow the four-layer contract documented in
 //! [`crate::kernel`] (module docs): `eval_dot` for correctness,
-//! `eval_block` for tile fusion, an optional [`crate::kernel::simd`]
-//! micro-kernel for the vector tier — plus the fast-exp accuracy policy
-//! for any transcendental shortcut. Padding lanes carry zero data and
-//! zero norms; consumers mask them by coefficient range, never inside
-//! the micro-kernel.
+//! `eval_block` for tile fusion, [`crate::kernel::Kernel::op`] +
+//! [`crate::kernel::simd::tile_decision`] for reduction fusion, and an
+//! optional [`crate::kernel::simd`] micro-kernel per vector tier — plus
+//! the fast-exp accuracy policy for any transcendental shortcut.
+//! Padding lanes carry zero data and zero norms; consumers mask them by
+//! coefficient range, never inside the micro-kernel.
+//!
+//! # One resolved execution plan per row
+//!
+//! Every kernel-row loop here resolves the SIMD tier
+//! ([`crate::kernel::simd::active`]) and the kernel's finish descriptor
+//! ([`crate::kernel::Kernel::op`]) **once at the top of the row**, then
+//! threads both through the `*_with(tier, …)` seams — no per-tile
+//! re-dispatch. The decision paths ([`BudgetModel::decision_with_norm`],
+//! `decision_rows`, `weight_norm2`) additionally run the fused
+//! [`SvStore::tile_decision`]: dots → kernel finish → α-weighted
+//! accumulate in one pass per tile, never materializing the κ row.
 //!
 //! Coefficients stay behind a lazy global scale factor `Φ` so the Pegasos
 //! shrink step `w ← (1 − 1/t)·w` is O(1) instead of O(B).
@@ -49,7 +61,7 @@ mod store;
 
 pub use store::SvStore;
 
-use crate::kernel::{norm2, Gaussian, Kernel, KernelSpec, Linear, Polynomial, TILE};
+use crate::kernel::{norm2, simd, Gaussian, Kernel, KernelSpec, Linear, Polynomial, TILE};
 use crate::util::parallel;
 
 /// Lower bound on `Φ` before it is folded back into the raw coefficients
@@ -218,24 +230,28 @@ impl<K: Kernel + Copy> BudgetModel<K> {
     }
 
     /// Decision value `f(x) = Φ·Σ_j a_j k(x_j, x) + b` for a row with known
-    /// squared norm. This is THE hot function of the whole system: the sum
-    /// runs tile-by-tile over the blocked SV store — one fused pass over
-    /// `x` per 8 SVs — with `K` monomorphized so the per-tile kernel
-    /// evaluation inlines.
+    /// squared norm. This is THE hot function of the whole system: the
+    /// tier and the kernel's finish descriptor are resolved once, then
+    /// the sum runs tile-by-tile through the fused
+    /// [`SvStore::tile_decision`] — dots → kernel finish → α-weighted
+    /// accumulate in one pass per 8 SVs, no materialized κ buffer.
     pub fn decision_with_norm(&self, x: &[f32], x_norm2: f32) -> f64 {
         debug_assert_eq!(x.len(), self.store.dim());
         let count = self.store.len();
+        let tier = simd::active();
+        let op = self.kernel.op();
         let mut acc = 0.0f64;
-        let mut dots = [0.0f32; TILE];
-        let mut kvals = [0.0f64; TILE];
         for t in 0..self.store.num_tiles() {
-            self.store.tile_dots(t, x, &mut dots);
-            self.kernel.eval_block(x_norm2, &dots, self.store.tile_norms(t), &mut kvals);
             let base = t * TILE;
             let lanes = TILE.min(count - base);
-            for (a, k) in self.alpha[base..base + lanes].iter().zip(&kvals) {
-                acc += a * k;
-            }
+            acc += self.store.tile_decision(
+                tier,
+                op,
+                t,
+                x,
+                x_norm2,
+                &self.alpha[base..base + lanes],
+            );
         }
         self.scale * acc + self.bias
     }
@@ -287,11 +303,13 @@ impl<K: Kernel + Copy> BudgetModel<K> {
     ) -> usize {
         let count = self.store.len().min(upto);
         debug_assert!(out.len() >= count);
+        let tier = simd::active();
+        let op = self.kernel.op();
         let mut dots = [0.0f32; TILE];
         let mut kvals = [0.0f64; TILE];
         for t in 0..count.div_ceil(TILE) {
-            self.store.tile_dots(t, x, &mut dots);
-            self.kernel.eval_block(x_norm2, &dots, self.store.tile_norms(t), &mut kvals);
+            self.store.tile_dots_with(tier, t, x, &mut dots);
+            simd::finish_with(tier, op, x_norm2, &dots, self.store.tile_norms(t), &mut kvals);
             let base = t * TILE;
             let lanes = TILE.min(count - base);
             out[base..base + lanes].copy_from_slice(&kvals[..lanes]);
@@ -315,15 +333,19 @@ impl<K: Kernel + Copy> BudgetModel<K> {
         if queries.is_empty() || count == 0 {
             return;
         }
+        let tier = simd::active();
+        let op = self.kernel.op();
         let qrows: Vec<&[f32]> = queries.iter().map(|&sv| self.store.row(sv)).collect();
         let mut dots = vec![[0.0f32; TILE]; queries.len()];
         let mut kvals = [0.0f64; TILE];
         for t in 0..count.div_ceil(TILE) {
             let base = t * TILE;
             let lanes = TILE.min(count - base);
-            self.store.tile_dots_multi(t, &qrows, &mut dots);
+            self.store.tile_dots_multi_with(tier, t, &qrows, &mut dots);
             for (q, &sv) in queries.iter().enumerate() {
-                self.kernel.eval_block(
+                simd::finish_with(
+                    tier,
+                    op,
                     self.store.norm2(sv),
                     &dots[q],
                     self.store.tile_norms(t),
@@ -352,25 +374,29 @@ impl<K: Kernel + Copy> BudgetModel<K> {
     /// the work is half the naive full-matrix loop.
     pub fn weight_norm2(&self) -> f64 {
         let count = self.store.len();
+        let tier = simd::active();
+        let op = self.kernel.op();
         let mut diag = 0.0f64;
         let mut off = 0.0f64;
-        let mut dots = [0.0f32; TILE];
-        let mut kvals = [0.0f64; TILE];
         for i in 0..count {
             let ai = self.alpha[i];
             diag += ai * ai * self.kernel.self_eval(self.store.norm2(i));
             let xi = self.store.row(i);
             let ni = self.store.norm2(i);
-            // Tiles covering j < i (the last one partially).
-            let tiles = i.div_ceil(TILE);
-            for t in 0..tiles {
-                self.store.tile_dots(t, xi, &mut dots);
-                self.kernel.eval_block(ni, &dots, self.store.tile_norms(t), &mut kvals);
+            // Tiles covering j < i (the last one partially), each through
+            // the fused dots → finish → α-weighted accumulate pass.
+            for t in 0..i.div_ceil(TILE) {
                 let base = t * TILE;
                 let lanes = TILE.min(i - base);
-                for (a, k) in self.alpha[base..base + lanes].iter().zip(&kvals) {
-                    off += ai * a * k;
-                }
+                off += ai
+                    * self.store.tile_decision(
+                        tier,
+                        op,
+                        t,
+                        xi,
+                        ni,
+                        &self.alpha[base..base + lanes],
+                    );
             }
         }
         self.scale * self.scale * (diag + 2.0 * off)

@@ -118,6 +118,41 @@ impl SvStore {
         simd::tile_dots(self.tile_data(t), x, out);
     }
 
+    /// [`SvStore::tile_dots`] on an explicit tier — the per-row seam:
+    /// callers resolve [`simd::active`] once per kernel row and thread
+    /// the tier through every tile instead of re-dispatching per tile.
+    #[inline]
+    pub fn tile_dots_with(&self, tier: simd::Tier, t: usize, x: &[f32], out: &mut [f32; TILE]) {
+        debug_assert_eq!(x.len(), self.d);
+        simd::tile_dots_with(tier, self.tile_data(t), x, out);
+    }
+
+    /// Fused decision contribution of tile `t`: dots → kernel finish →
+    /// α-weighted accumulate in one pass ([`simd::tile_decision_with`]),
+    /// no materialized κ buffer. `alphas` holds the live coefficients
+    /// for this tile (`len ≤ TILE`); padding lanes are never read.
+    #[inline]
+    pub fn tile_decision(
+        &self,
+        tier: simd::Tier,
+        op: simd::KernelOp,
+        t: usize,
+        x: &[f32],
+        x_norm2: f32,
+        alphas: &[f64],
+    ) -> f64 {
+        debug_assert_eq!(x.len(), self.d);
+        simd::tile_decision_with(
+            tier,
+            op,
+            self.tile_data(t),
+            x,
+            x_norm2,
+            self.tile_norms(t),
+            alphas,
+        )
+    }
+
     /// Inner products of several query rows against tile `t`, visiting the
     /// tile's feature data once for all queries (the amortized multi-pivot
     /// scan of `BudgetModel::kernel_rows_for_svs`). Row `q` of `out` is
@@ -128,6 +163,22 @@ impl SvStore {
             debug_assert_eq!(x.len(), self.d);
         }
         simd::tile_dots_multi(self.tile_data(t), xs, out);
+    }
+
+    /// [`SvStore::tile_dots_multi`] on an explicit tier (the per-scan
+    /// seam of `BudgetModel::kernel_rows_for_svs`).
+    #[inline]
+    pub fn tile_dots_multi_with(
+        &self,
+        tier: simd::Tier,
+        t: usize,
+        xs: &[&[f32]],
+        out: &mut [[f32; TILE]],
+    ) {
+        for x in xs {
+            debug_assert_eq!(x.len(), self.d);
+        }
+        simd::tile_dots_multi_with(tier, self.tile_data(t), xs, out);
     }
 
     /// Append a row; its squared norm is computed here (same `norm2` as

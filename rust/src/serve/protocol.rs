@@ -361,8 +361,9 @@ fn dispatch(state: &ServeState, line: &str) -> Result<String, String> {
 
 /// The pinned telemetry summary carried by the `stats` payload: the
 /// operator-facing core of the registry (queue depth, admission ladder
-/// counters, WAL fsync p99, deadline expiries, lifecycle counters)
-/// without the full per-stage histogram dump the `metrics` verb serves.
+/// counters, WAL fsync p99, deadline expiries, lifecycle counters, the
+/// resolved SIMD tier) without the full per-stage histogram dump the
+/// `metrics` verb serves.
 /// The key set is a wire contract — see the schema drift test.
 fn telemetry_summary() -> Json {
     let wal_p99 = metrics_registry::stage_snapshot(Stage::WalAppend).quantile(0.99);
@@ -395,6 +396,7 @@ fn telemetry_summary() -> Json {
             "shadow_rejected",
             Json::num(metrics_registry::counter_value(Counter::ShadowRejected) as f64),
         ),
+        ("simd_tier", Json::str(crate::kernel::simd::active().name())),
     ])
 }
 
@@ -790,6 +792,7 @@ mod tests {
             "queue_depth",
             "rollbacks",
             "shadow_rejected",
+            "simd_tier",
             "wal_append_p99_ns",
             "worker_restarts",
         ];

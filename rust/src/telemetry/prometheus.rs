@@ -41,6 +41,12 @@ fn render_snapshot(snap: &Snapshot) -> String {
         let key = g.key();
         out.push_str(&format!("# TYPE {key} gauge\n{key} {v}\n"));
     }
+    // Info-style gauge: which SIMD tier the kernel engine resolved for
+    // this process (constant 1, the tier rides in the label).
+    let tier = crate::kernel::simd::active().name();
+    out.push_str(&format!(
+        "# TYPE budgetsvm_simd_tier gauge\nbudgetsvm_simd_tier{{tier=\"{tier}\"}} 1\n"
+    ));
     for (stage, h) in &snap.stages {
         let family = format!("budgetsvm_{}_seconds", stage.key());
         out.push_str(&format!("# TYPE {family} histogram\n"));
@@ -126,6 +132,10 @@ mod tests {
             assert!(text.contains(g.key()), "scrape missing {}", g.key());
             assert!(text.contains(&format!("# TYPE {} gauge", g.key())));
         }
+        assert!(
+            text.contains("budgetsvm_simd_tier{tier=\""),
+            "scrape missing the simd tier info gauge"
+        );
         for s in Stage::ALL {
             let family = format!("budgetsvm_{}_seconds", s.key());
             assert!(text.contains(&format!("# TYPE {family} histogram")), "{family}");

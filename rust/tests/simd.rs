@@ -1,19 +1,26 @@
 //! Conformance suite for the SIMD dispatch seam.
 //!
-//! Three contracts are pinned here:
+//! Four contracts are pinned here:
 //!
 //! 1. **Tier agreement.** The forced-scalar override and the dispatched
-//!    (possibly AVX2) engine agree to ≤ 1e-12 on dyadic-rational models
-//!    (where every `f32` product and partial sum is exact, so fused and
-//!    unfused accumulation coincide) — for all three kernels, odd SV
-//!    counts and churned stores. Where the hardware has AVX2, the
-//!    explicit-tier entry points are additionally compared bit-for-bit on
-//!    the operations specified as bit-identical (distance reconstruction,
+//!    engine — and every explicitly forced vector tier this machine can
+//!    run (AVX2, AVX-512, NEON) — agree to ≤ 1e-12 on dyadic-rational
+//!    models (where every `f32` product and partial sum is exact, so
+//!    fused and unfused accumulation coincide) — for all three kernels,
+//!    odd SV counts and churned stores. Each available vector tier's
+//!    explicit entry points are additionally compared bit-for-bit on the
+//!    operations specified as bit-identical (distance reconstruction,
 //!    widening, `exp_v`, the polynomial chain).
-//! 2. **`exp_v` accuracy.** Max relative error ≤ 1e-14 against libm over
+//! 2. **Reduction fusion.** The fused `tile_decision` (dots → finish →
+//!    α-weighted accumulate, no materialized κ row) equals materializing
+//!    the row and reducing it: bitwise on the scalar tier and on partial
+//!    tiles, ≤ 1e-12 on full tiles under the vector tiers (whose pairwise
+//!    reduction tree reassociates the sum). `pow_v` equals scalar
+//!    `f64::powi` bitwise on every tier for degrees 2–9.
+//! 3. **`exp_v` accuracy.** Max relative error ≤ 1e-14 against libm over
 //!    `[-700, 700]`, exact `exp(±0) = 1`, gradual underflow through the
-//!    denormals, clamped overflow — and scalar ≡ AVX2 bitwise.
-//! 3. **Override semantics.** The thread-local forced-scalar override
+//!    denormals, clamped overflow — and scalar ≡ vector tiers bitwise.
+//! 4. **Override semantics.** The thread-local forced-tier override
 //!    really bypasses the vector path, and the fast-exp tier reaches
 //!    end-to-end accuracy parity on a real training run.
 
@@ -25,6 +32,15 @@ use budgetsvm::util::rng::Rng;
 
 const DIMS: [usize; 4] = [1, 3, 8, 17];
 const TOL: f64 = 1e-12;
+
+/// The vector tiers this machine can actually execute.
+fn vector_tiers() -> Vec<Tier> {
+    Tier::ALL
+        .iter()
+        .copied()
+        .filter(|t| *t != Tier::Scalar && t.available())
+        .collect()
+}
 
 /// Dyadic rational in [-4, 4] with denominator 16 (exact products in f32).
 fn dyadic(rng: &mut Rng) -> f32 {
@@ -154,12 +170,13 @@ fn fast_exp_tier_agrees_on_dyadic_models_too() {
 }
 
 #[test]
-fn explicit_avx2_tier_is_bit_identical_where_specified() {
-    if !Tier::Avx2.available() {
-        eprintln!("skipping: AVX2+FMA not available on this host");
+fn explicit_vector_tiers_are_bit_identical_where_specified() {
+    let tiers = vector_tiers();
+    if tiers.is_empty() {
+        eprintln!("skipping: no vector tier available on this host");
         return;
     }
-    forall("avx2 block bit-identity", 128, 0xB17B, |rng| {
+    forall("vector-tier block bit-identity", 128, 0xB17B, |rng| {
         // Arbitrary (non-dyadic) lane values: these paths promise
         // bit-identity across tiers regardless of the data.
         let mut dots = [0.0f32; TILE];
@@ -170,33 +187,42 @@ fn explicit_avx2_tier_is_bit_identical_where_specified() {
         }
         let xn = (rng.normal() as f32).abs();
 
-        for fast in [false, true] {
-            let (mut a, mut b) = ([0.0f64; TILE], [0.0f64; TILE]);
-            simd::gaussian_block_with(Tier::Scalar, -0.35, fast, xn, &dots, &norms, &mut a);
-            simd::gaussian_block_with(Tier::Avx2, -0.35, fast, xn, &dots, &norms, &mut b);
-            for l in 0..TILE {
-                if a[l].to_bits() != b[l].to_bits() {
-                    return (false, format!("gaussian fast={fast} lane {l}: {} vs {}", a[l], b[l]));
+        for &tier in &tiers {
+            let name = tier.name();
+            for fast in [false, true] {
+                let (mut a, mut b) = ([0.0f64; TILE], [0.0f64; TILE]);
+                simd::gaussian_block_with(Tier::Scalar, -0.35, fast, xn, &dots, &norms, &mut a);
+                simd::gaussian_block_with(tier, -0.35, fast, xn, &dots, &norms, &mut b);
+                for l in 0..TILE {
+                    if a[l].to_bits() != b[l].to_bits() {
+                        return (
+                            false,
+                            format!("{name} gaussian fast={fast} lane {l}: {} vs {}", a[l], b[l]),
+                        );
+                    }
                 }
             }
-        }
 
-        let (mut a, mut b) = ([0.0f64; TILE], [0.0f64; TILE]);
-        simd::linear_block_with(Tier::Scalar, &dots, &mut a);
-        simd::linear_block_with(Tier::Avx2, &dots, &mut b);
-        for l in 0..TILE {
-            if a[l].to_bits() != b[l].to_bits() {
-                return (false, format!("linear lane {l}: {} vs {}", a[l], b[l]));
-            }
-        }
-
-        for degree in 1u32..=4 {
             let (mut a, mut b) = ([0.0f64; TILE], [0.0f64; TILE]);
-            simd::poly_block_with(Tier::Scalar, 0.5, 1.25, degree, &dots, &mut a);
-            simd::poly_block_with(Tier::Avx2, 0.5, 1.25, degree, &dots, &mut b);
+            simd::linear_block_with(Tier::Scalar, &dots, &mut a);
+            simd::linear_block_with(tier, &dots, &mut b);
             for l in 0..TILE {
                 if a[l].to_bits() != b[l].to_bits() {
-                    return (false, format!("poly deg {degree} lane {l}: {} vs {}", a[l], b[l]));
+                    return (false, format!("{name} linear lane {l}: {} vs {}", a[l], b[l]));
+                }
+            }
+
+            for degree in 1u32..=4 {
+                let (mut a, mut b) = ([0.0f64; TILE], [0.0f64; TILE]);
+                simd::poly_block_with(Tier::Scalar, 0.5, 1.25, degree, &dots, &mut a);
+                simd::poly_block_with(tier, 0.5, 1.25, degree, &dots, &mut b);
+                for l in 0..TILE {
+                    if a[l].to_bits() != b[l].to_bits() {
+                        return (
+                            false,
+                            format!("{name} poly deg {degree} lane {l}: {} vs {}", a[l], b[l]),
+                        );
+                    }
                 }
             }
         }
@@ -205,41 +231,174 @@ fn explicit_avx2_tier_is_bit_identical_where_specified() {
 }
 
 #[test]
-fn avx2_tile_dots_match_scalar_bitwise_on_dyadic_tiles() {
-    if !Tier::Avx2.available() {
-        eprintln!("skipping: AVX2+FMA not available on this host");
+fn vector_tile_dots_match_scalar_bitwise_on_dyadic_tiles() {
+    let tiers = vector_tiers();
+    if tiers.is_empty() {
+        eprintln!("skipping: no vector tier available on this host");
         return;
     }
-    forall("avx2 tile dots on dyadic data", 128, 0xD07D, |rng| {
+    forall("vector tile dots on dyadic data", 128, 0xD07D, |rng| {
         let d = 1 + rng.below(24);
         let tile: Vec<f32> = (0..d * TILE).map(|_| dyadic(rng)).collect();
         let x = dyadic_row(rng, d);
-        let (mut s, mut v) = ([0.0f32; TILE], [0.0f32; TILE]);
+        let mut s = [0.0f32; TILE];
         simd::tile_dots_with(Tier::Scalar, &tile, &x, &mut s);
-        simd::tile_dots_with(Tier::Avx2, &tile, &x, &mut v);
-        for l in 0..TILE {
-            if s[l].to_bits() != v[l].to_bits() {
-                return (false, format!("d={d} lane {l}: scalar {} avx2 {}", s[l], v[l]));
-            }
-        }
-        // Multi-query (1..=6 pivots: the 4-wide block plus remainders)
-        // must equal per-query single calls bitwise on the same tier.
-        let queries: Vec<Vec<f32>> =
-            (0..(1 + rng.below(6))).map(|_| dyadic_row(rng, d)).collect();
-        let refs: Vec<&[f32]> = queries.iter().map(|q| q.as_slice()).collect();
-        let mut multi = vec![[0.0f32; TILE]; refs.len()];
-        simd::tile_dots_multi_with(Tier::Avx2, &tile, &refs, &mut multi);
-        for (q, x) in refs.iter().enumerate() {
-            let mut single = [0.0f32; TILE];
-            simd::tile_dots_with(Tier::Avx2, &tile, x, &mut single);
+        for &tier in &tiers {
+            let name = tier.name();
+            let mut v = [0.0f32; TILE];
+            simd::tile_dots_with(tier, &tile, &x, &mut v);
             for l in 0..TILE {
-                if multi[q][l].to_bits() != single[l].to_bits() {
-                    return (false, format!("multi d={d} q={q} lane {l}"));
+                if s[l].to_bits() != v[l].to_bits() {
+                    return (false, format!("d={d} lane {l}: scalar {} {name} {}", s[l], v[l]));
+                }
+            }
+            // Multi-query (1..=6 pivots: the wide blocks plus remainders)
+            // must equal per-query single calls bitwise on the same tier.
+            let queries: Vec<Vec<f32>> =
+                (0..(1 + rng.below(6))).map(|_| dyadic_row(rng, d)).collect();
+            let refs: Vec<&[f32]> = queries.iter().map(|q| q.as_slice()).collect();
+            let mut multi = vec![[0.0f32; TILE]; refs.len()];
+            simd::tile_dots_multi_with(tier, &tile, &refs, &mut multi);
+            for (q, x) in refs.iter().enumerate() {
+                let mut single = [0.0f32; TILE];
+                simd::tile_dots_with(tier, &tile, x, &mut single);
+                for l in 0..TILE {
+                    if multi[q][l].to_bits() != single[l].to_bits() {
+                        return (false, format!("{name} multi d={d} q={q} lane {l}"));
+                    }
                 }
             }
         }
         (true, String::new())
     });
+}
+
+/// Dyadic-model agreement for one kernel under every explicitly forced
+/// vector tier: the dispatched engine pinned to `tier` must match the
+/// forced-scalar arm inside the 1e-12 pin on decision, kernel row and
+/// multi-pivot scan.
+fn check_forced_tiers<K: Kernel + Copy>(kernel: K, churn: bool, seed: u64, what: &'static str) {
+    let tiers = vector_tiers();
+    if tiers.is_empty() {
+        eprintln!("skipping {what}: no vector tier available on this host");
+        return;
+    }
+    forall(what, 48, seed, |rng| {
+        let m = dyadic_model(kernel, rng, churn);
+        for &tier in &tiers {
+            let (ok, why) = simd::with_forced_tier(tier, || check_tiers(&m, rng, what));
+            if !ok {
+                return (false, format!("[{}] {why}", tier.name()));
+            }
+        }
+        (true, String::new())
+    });
+}
+
+#[test]
+fn every_available_tier_agrees_on_dyadic_gaussian_models() {
+    check_forced_tiers(Gaussian::new(0.25), true, 0x51D5, "forced-tier gaussian");
+}
+
+#[test]
+fn every_available_tier_agrees_on_dyadic_linear_models() {
+    check_forced_tiers(Linear, false, 0x51D6, "forced-tier linear");
+}
+
+#[test]
+fn every_available_tier_agrees_on_dyadic_polynomial_models() {
+    check_forced_tiers(Polynomial::new(1.0, 1.0, 3), false, 0x51D7, "forced-tier polynomial");
+}
+
+#[test]
+fn fused_tile_decision_matches_materialized_reduce_per_tier() {
+    let ops = [
+        simd::KernelOp::Gaussian { neg_gamma: -0.25, fast_exp: false },
+        simd::KernelOp::Gaussian { neg_gamma: -0.25, fast_exp: true },
+        simd::KernelOp::Linear,
+        simd::KernelOp::Polynomial { scale: 0.5, offset: 1.25, degree: 3 },
+    ];
+    let mut tiers = vec![Tier::Scalar];
+    tiers.extend(vector_tiers());
+    forall("fused tile decision", 96, 0x51D8, |rng| {
+        let d = 1 + rng.below(24);
+        let tile: Vec<f32> = (0..d * TILE).map(|_| dyadic(rng)).collect();
+        let x = dyadic_row(rng, d);
+        let xn = norm2(&x);
+        let mut norms = [0.0f32; TILE];
+        for n in norms.iter_mut() {
+            *n = (rng.normal() as f32).abs();
+        }
+        let live = 1 + rng.below(TILE); // partial AND full tiles
+        let alphas: Vec<f64> =
+            (0..live).map(|_| ((rng.below(33) as i64 - 16) as f64) / 8.0).collect();
+        for &op in &ops {
+            for &tier in &tiers {
+                let fused =
+                    simd::tile_decision_with(tier, op, &tile, &x, xn, &norms, &alphas);
+                // Reference: materialize the κ row, then reduce.
+                let mut dots = [0.0f32; TILE];
+                simd::tile_dots_with(tier, &tile, &x, &mut dots);
+                let mut kvals = [0.0f64; TILE];
+                simd::finish_with(tier, op, xn, &dots, &norms, &mut kvals);
+                let mut mat = 0.0f64;
+                for (&a, &k) in alphas.iter().zip(&kvals) {
+                    mat += a * k;
+                }
+                let exact = tier == Tier::Scalar || live < TILE;
+                if exact && fused.to_bits() != mat.to_bits() {
+                    return (
+                        false,
+                        format!(
+                            "{} {op:?} live={live}: fused {fused} != materialized {mat}",
+                            tier.name()
+                        ),
+                    );
+                }
+                if !exact && (fused - mat).abs() > TOL * (1.0 + mat.abs()) {
+                    return (
+                        false,
+                        format!(
+                            "{} {op:?} full tile: fused {fused} vs materialized {mat}",
+                            tier.name()
+                        ),
+                    );
+                }
+            }
+        }
+        (true, String::new())
+    });
+}
+
+#[test]
+fn pow_v_matches_f64_powi_bitwise_on_every_available_tier() {
+    let mut tiers = vec![Tier::Scalar];
+    tiers.extend(vector_tiers());
+    let mut rng = Rng::new(0x90D);
+    for degree in 2u32..=9 {
+        for len in 0..=9usize {
+            let base: Vec<f64> = (0..len).map(|_| rng.normal() * 2.0).collect();
+            let want: Vec<u64> =
+                base.iter().map(|&b| b.powi(degree as i32).to_bits()).collect();
+            for &tier in &tiers {
+                let mut xs = base.clone();
+                simd::pow_v_with(tier, &mut xs, degree);
+                for (i, (&x, &w)) in xs.iter().zip(&want).enumerate() {
+                    assert_eq!(
+                        x.to_bits(),
+                        w,
+                        "{} deg {degree} len {len} slot {i}: {x}",
+                        tier.name()
+                    );
+                }
+            }
+            let mut xs = base.clone();
+            simd::pow_v(&mut xs, degree);
+            for (i, (&x, &w)) in xs.iter().zip(&want).enumerate() {
+                assert_eq!(x.to_bits(), w, "dispatched deg {degree} len {len} slot {i}");
+            }
+        }
+    }
 }
 
 #[test]
@@ -304,11 +463,16 @@ fn exp_v_slice_handles_every_length_and_tier() {
         for (i, (&x, &e)) in xs.iter().zip(&scalar).enumerate() {
             assert_eq!(e.to_bits(), simd::exp_fast(x).to_bits(), "len {len} slot {i}");
         }
-        if Tier::Avx2.available() {
+        for &tier in &vector_tiers() {
             let mut vector = xs.clone();
-            simd::exp_v_with(Tier::Avx2, &mut vector);
+            simd::exp_v_with(tier, &mut vector);
             for (i, (&a, &b)) in scalar.iter().zip(&vector).enumerate() {
-                assert_eq!(a.to_bits(), b.to_bits(), "len {len} slot {i}: {a} vs {b}");
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "{} len {len} slot {i}: {a} vs {b}",
+                    tier.name()
+                );
             }
         }
         let mut dispatched = xs.clone();
@@ -331,11 +495,13 @@ fn forced_scalar_override_actually_bypasses_the_vector_path() {
     );
     assert!(!simd::force_scalar(), "override must be restored");
 
-    // Behavior-level check: find arbitrary f32 data where the AVX2 fused
-    // accumulation differs from the scalar loop (non-dyadic data makes
-    // this overwhelmingly likely); on that witness the dispatched call
-    // under the override must equal the scalar tier bit-for-bit.
-    if !Tier::Avx2.available() || simd::detected() != Tier::Avx2 {
+    // Behavior-level check: find arbitrary f32 data where the dispatched
+    // vector tier's fused accumulation differs from the scalar loop
+    // (non-dyadic data makes this overwhelmingly likely); on that witness
+    // the dispatched call under the override must equal the scalar tier
+    // bit-for-bit.
+    let vt = simd::detected();
+    if vt == Tier::Scalar {
         eprintln!("skipping behavior-level check: dispatched tier is already scalar");
         return;
     }
@@ -346,7 +512,7 @@ fn forced_scalar_override_actually_bypasses_the_vector_path() {
         let x: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
         let (mut s, mut v) = ([0.0f32; TILE], [0.0f32; TILE]);
         simd::tile_dots_with(Tier::Scalar, &tile, &x, &mut s);
-        simd::tile_dots_with(Tier::Avx2, &tile, &x, &mut v);
+        simd::tile_dots_with(vt, &tile, &x, &mut v);
         if (0..TILE).any(|l| s[l].to_bits() != v[l].to_bits()) {
             // Witness found: dispatched-under-override must take the
             // scalar path, not the vector one.
