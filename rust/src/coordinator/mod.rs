@@ -318,6 +318,15 @@ pub fn run_serve_tcp(
             .with_context(|| format!("cannot bind metrics port {}", scfg.metrics_port))?;
         eprintln!("metrics endpoint on 127.0.0.1:{bound}");
     }
+    if scfg.coordinator {
+        // Multi-node front: no local pipeline — the remote nodes train;
+        // the coordinator deals, merges, and serves the merged model.
+        ensure!(
+            model_in.is_none(),
+            "--coordinator merges its model from the nodes; --model does not apply"
+        );
+        return crate::serve::cluster::run_coordinator_tcp(scfg, max_connections);
+    }
     let registry = Arc::new(ModelRegistry::with_history(scfg.history));
     if let Some(path) = model_in {
         let version = registry.publish_from_file(path, scfg.svm.fast_exp)?;
@@ -339,6 +348,7 @@ pub fn run_serve_tcp(
             Arc::clone(&registry),
             &wal_path,
             Some(&ckpt_path),
+            scfg.wal_rotate,
         )?;
         eprintln!(
             "recovered {} WAL row(s) in {:.3}s (checkpoint covered {}, torn tail dropped: {})",
@@ -360,6 +370,9 @@ pub fn run_serve_tcp(
                 .with_context(|| format!("cannot create WAL directory {dir}"))?;
             pipeline.enable_wal(Path::new(dir).join(wal::WAL_FILE))?;
             pipeline.checkpoint_at(Path::new(dir).join(wal::CHECKPOINT_FILE));
+            if scfg.wal_rotate {
+                pipeline.enable_wal_rotation();
+            }
         }
         pipeline
     }
@@ -410,7 +423,19 @@ pub fn run_serve_tcp(
 /// `BENCH_resilience.json` under `out_dir`; returns `(report, path)`.
 /// The fault schedule is derived from `seed` ([`FaultPlan::seeded`]), so
 /// a CI rerun replays the identical panic/crash/stall sequence.
-pub fn run_resilience_bench(quick: bool, seed: u64, out_dir: &str) -> Result<(Json, String)> {
+///
+/// `nodes == 0` runs the single-process harness alone and keeps the v1
+/// report schema. `nodes >= 3` additionally runs the multi-node
+/// scenario ([`resilience_bench::run_cluster`]) — a coordinator over
+/// `nodes` loopback serve nodes under a seeded
+/// [`crate::serve::NetFaultPlan`], run twice for the determinism
+/// gate — and nests both reports as `bench_resilience/v2`.
+pub fn run_resilience_bench(
+    quick: bool,
+    seed: u64,
+    nodes: usize,
+    out_dir: &str,
+) -> Result<(Json, String)> {
     let rows = if quick { 600 } else { 4000 };
     let ds = two_moons(rows, 0.12, seed ^ 0x51);
     let svm = SvmConfig::new()
@@ -421,8 +446,26 @@ pub fn run_resilience_bench(quick: bool, seed: u64, out_dir: &str) -> Result<(Js
     let publish_every = (rows / 4).max(1);
     let plan = FaultPlan::seeded(seed, rows as u64, shards);
     let scratch = Path::new(out_dir).join("resilience-scratch");
-    let report =
+    let single =
         resilience_bench::run(&ds, &svm, seed, shards, publish_every, plan, &scratch)?;
+    let cluster = if nodes > 0 {
+        let cluster_rows = if quick { 160 } else { 400 };
+        let cds = two_moons(cluster_rows, 0.12, seed ^ 0xC1);
+        let csvm = SvmConfig::new()
+            .kernel(KernelSpec::gaussian(2.0))
+            .budget(20)
+            .c(10.0, cds.len());
+        Some(resilience_bench::run_cluster(
+            &cds,
+            &csvm,
+            seed,
+            nodes,
+            &scratch.join("cluster"),
+        )?)
+    } else {
+        None
+    };
+    let report = resilience_bench::compose(single, cluster);
     let path = resilience_bench::write(&report, out_dir)?;
     let _ = std::fs::remove_dir_all(&scratch);
     Ok((report, path))
@@ -604,8 +647,13 @@ mod tests {
             .join("budgetsvm-coord-resilience")
             .to_string_lossy()
             .into_owned();
-        let (report, path) = run_resilience_bench(true, 11, &out).unwrap();
+        let (report, path) = run_resilience_bench(true, 11, 0, &out).unwrap();
         assert!(path.ends_with("BENCH_resilience.json"));
+        // With no cluster the report keeps the v1 schema untouched.
+        assert_eq!(
+            report.get("schema").and_then(Json::as_str),
+            Some("bench_resilience/v1")
+        );
         let rec = report.get("recovery").expect("recovery section");
         // The CI gates, regardless of where the seeded faults landed:
         // every acked row survives and recovery is byte-exact.

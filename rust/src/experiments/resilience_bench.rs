@@ -19,9 +19,20 @@
 //!
 //! Every trigger in the plan is a row count, so the whole harness is
 //! deterministic in `(seed, plan)` up to wall-clock columns.
+//!
+//! With `--nodes N` the harness additionally runs the **multi-node**
+//! scenario ([`run_cluster`]): N real serve nodes on loopback behind a
+//! [`ClusterCoordinator`], a seeded [`NetFaultPlan`] (node kill,
+//! partition, slow replies, one corrupted reply) keyed to the dealt-row
+//! clock, and a zero-loss audit of every coordinator-acked row against
+//! the nodes' WALs. The whole scenario runs twice and the merged and
+//! recovered models must match byte for byte — the report then nests
+//! both runs as `bench_resilience/v2` (see [`compose`]).
 
+use std::collections::HashMap;
+use std::net::TcpListener;
 use std::path::Path;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -30,11 +41,14 @@ use anyhow::{ensure, Context, Result};
 use crate::data::Dataset;
 use crate::model::AnyModel;
 use crate::serve::faults::is_injected_crash;
+use crate::serve::protocol::format_features;
 use crate::serve::{
-    wal, BatcherOptions, FaultPlan, MicroBatcher, ModelRegistry, PredictError, ShadowPolicy,
+    canonical_train_line, serve_connections, wal, BatcherOptions, ClusterCoordinator, FaultPlan,
+    MicroBatcher, ModelRegistry, NetFaultPlan, NodeLink, PredictError, ServeState, ShadowPolicy,
     ShardedIngest,
 };
 use crate::solver::{RunConfig, SolverSpec, SvmConfig};
+use crate::util::backoff::Backoff;
 use crate::util::json::Json;
 use crate::util::parallel;
 use crate::util::stats::quantile_sorted;
@@ -119,6 +133,7 @@ pub fn run(
         Arc::clone(&reg_rec),
         &wal_path,
         Some(&ckpt_path),
+        false,
     )?;
     let recovered_rows = rec.rows_ingested();
     let rows_lost = acked_rows.saturating_sub(recovered_rows);
@@ -308,6 +323,323 @@ pub fn run(
     ]))
 }
 
+// ---------------------------------------------------------------------
+// Multi-node scenario: kill + partition + failover under a seeded plan
+// ---------------------------------------------------------------------
+
+/// Shards per cluster node. The multi-shard path is the single-node
+/// harness's job; in the cluster every node *is* one shard.
+const NODE_SHARDS: usize = 1;
+
+/// Rows per coordinator chunk. Heartbeat probes and the sync-cadence
+/// check run at chunk boundaries, so the whole probe/merge schedule is
+/// keyed to the dealt-row clock and replays identically.
+const CLUSTER_CHUNK: usize = 32;
+
+/// Per-node derived seed: node solvers and link backoff jitter.
+fn node_seed(seed: u64, node: usize) -> u64 {
+    seed ^ (node as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+/// Spawn one in-process serve node on loopback: a real [`ServeState`]
+/// behind [`serve_connections`], ingest chunk 1 (a node's ack means the
+/// row is WAL-framed), WAL + checkpoint under `dir`. The acceptor
+/// thread is detached — a node outlives the coordinator run, exactly
+/// like a real remote process would.
+fn spawn_node(svm: &SvmConfig, seed: u64, dir: &Path) -> Result<String> {
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("cannot create node directory {}", dir.display()))?;
+    let _ = std::fs::remove_file(dir.join(wal::WAL_FILE));
+    let _ = std::fs::remove_file(dir.join(wal::CHECKPOINT_FILE));
+    let registry = Arc::new(ModelRegistry::new());
+    let mut pipeline = ShardedIngest::new(
+        svm.clone(),
+        RunConfig::new().seed(seed),
+        NODE_SHARDS,
+        usize::MAX / 4, // cadence publishes off: the coordinator's `flush` decides
+        Arc::clone(&registry),
+    )?;
+    pipeline.enable_wal(dir.join(wal::WAL_FILE))?;
+    pipeline.checkpoint_at(dir.join(wal::CHECKPOINT_FILE));
+    let batcher = MicroBatcher::new(
+        Arc::clone(&registry),
+        BatcherOptions { max_batch_rows: 16, threads: 1 },
+    );
+    let client = batcher.client();
+    let state = Arc::new(ServeState::new(registry, client, Some(pipeline), 1));
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?.to_string();
+    std::thread::spawn(move || {
+        let _ = serve_connections(listener, state, None);
+        batcher.shutdown();
+    });
+    Ok(addr)
+}
+
+/// Everything one cluster run produces that the caller gates or
+/// reports.
+struct ClusterOutcome {
+    stats: crate::serve::ClusterStats,
+    predicts_ok: u64,
+    rows_lost: u64,
+    duplicate_rows: u64,
+    wal_rows_total: u64,
+    killed_wal_rows: u64,
+    killed_recovered_rows: u64,
+    merged_dump: Vec<u8>,
+    killed_dump: Vec<u8>,
+}
+
+/// One pass of the multi-node scenario: deal the whole stream through a
+/// coordinator whose links carry `plan`, then audit the nodes' WALs
+/// against the coordinator's acked ledger and recover the killed node
+/// offline from its own WAL + checkpoint.
+fn cluster_scenario(
+    stream: &Dataset,
+    svm: &SvmConfig,
+    seed: u64,
+    nodes: usize,
+    plan: NetFaultPlan,
+    sync_every: u64,
+    scratch: &Path,
+) -> Result<ClusterOutcome> {
+    std::fs::create_dir_all(scratch)
+        .with_context(|| format!("cannot create scratch directory {}", scratch.display()))?;
+    let node_dirs: Vec<std::path::PathBuf> =
+        (0..nodes).map(|i| scratch.join(format!("node-{i}"))).collect();
+    let dealt = Arc::new(AtomicU64::new(0));
+    let mut links = Vec::with_capacity(nodes);
+    for (i, dir) in node_dirs.iter().enumerate() {
+        let addr = spawn_node(svm, node_seed(seed, i), dir)?;
+        let backoff = Backoff::new(
+            Duration::from_micros(500),
+            Duration::from_millis(8),
+            2,
+            node_seed(seed, i),
+        );
+        links.push(
+            NodeLink::new(i, addr, Some(Duration::from_secs(5)), backoff)
+                .with_faults(plan, Arc::clone(&dealt)),
+        );
+    }
+    let mut coord = ClusterCoordinator::new(
+        links,
+        svm.clone(),
+        Arc::new(ModelRegistry::new()),
+        sync_every,
+    )
+    .with_deal_clock(Arc::clone(&dealt));
+    coord.record_acked_lines();
+
+    let (killed, kill_at) = plan.kill_node.context("the cluster plan must kill a node")?;
+    let part_from = plan.partition.map(|(_, from, _)| from);
+    // The probe/merge cadence is row-keyed; holding it off while the
+    // dealt clock sits right on the kill trigger pins the failure
+    // order — the killed node takes its first failure *inside* a deal,
+    // so the in-flight row is always re-dealt — without changing what
+    // is tested.
+    let near_kill = |clock: u64| clock >= kill_at && clock < kill_at + 4;
+
+    let mut predicts_ok = 0u64;
+    let mut burst_done = false;
+    for start in (0..stream.len()).step_by(CLUSTER_CHUNK) {
+        for i in start..(start + CLUSTER_CHUNK).min(stream.len()) {
+            // One predict burst over every replica the instant the
+            // partition window opens: the partitioned node is still in
+            // the rotation, so exactly one exchange hits the cut link
+            // and the failover path fires — deterministically, because
+            // the burst briefly advances the shared clock into the
+            // window (a client predict racing the partition).
+            if !burst_done && part_from == Some(i as u64 + 1) {
+                burst_done = true;
+                dealt.store(i as u64 + 1, Ordering::SeqCst);
+                let line = format!("predict{}", format_features(stream.row(i)));
+                for _ in 0..nodes {
+                    if coord.forward_predict(&line).starts_with("ok") {
+                        predicts_ok += 1;
+                    }
+                }
+                dealt.store(i as u64, Ordering::SeqCst);
+            }
+            coord.deal_train(stream.label(i), stream.row(i))?;
+        }
+        if !near_kill(dealt.load(Ordering::SeqCst)) {
+            coord.heartbeat_tick();
+            let _ = coord.maybe_sync();
+        }
+    }
+    // Final pull + merge + publish over whatever is still up.
+    coord.sync_models()?;
+    let stats = coord.stats();
+    let merged_dump_path = scratch.join("merged.mdl");
+    coord.registry().dump(&merged_dump_path)?;
+    let merged_dump = std::fs::read(&merged_dump_path)?;
+
+    // ---- zero-loss audit: every acked line must appear in some node's
+    // WAL. The lines are re-built from the WAL replays with the same
+    // canonical rule the coordinator deals with, so the comparison is
+    // exact string equality. ----
+    let mut ledger: HashMap<String, i64> = HashMap::new();
+    for line in coord.acked_lines() {
+        *ledger.entry(line.clone()).or_insert(0) += 1;
+    }
+    drop(coord); // close the links; node sessions end at EOF
+    let mut wal_rows_total = 0u64;
+    let mut killed_wal_rows = 0u64;
+    for (i, dir) in node_dirs.iter().enumerate() {
+        let replayed = wal::replay(&dir.join(wal::WAL_FILE), None)
+            .with_context(|| format!("replaying node {i}'s WAL"))?;
+        ensure!(!replayed.torn_tail, "node {i}: a cut link must never tear the node's WAL");
+        let n = replayed.rows.len() as u64;
+        wal_rows_total += n;
+        if i == killed {
+            killed_wal_rows = n;
+        }
+        for r in 0..replayed.rows.len() {
+            let line = canonical_train_line(replayed.rows.label(r), replayed.rows.row(r));
+            *ledger.entry(line).or_insert(0) -= 1;
+        }
+    }
+    // Positive counts are acked rows missing from every WAL (loss);
+    // negative counts are at-least-once duplicates (benign: a row the
+    // coordinator re-sent because the ack, not the append, was lost).
+    let rows_lost: u64 = ledger.values().filter(|&&c| c > 0).map(|&c| c as u64).sum();
+    let duplicate_rows: u64 = ledger.values().filter(|&&c| c < 0).map(|&c| (-c) as u64).sum();
+
+    // ---- the killed node recovers offline from its own WAL +
+    // checkpoint: node-local durability holds even for the node the
+    // cluster lost. ----
+    let killed_dir = &node_dirs[killed];
+    let ckpt_path = killed_dir.join(wal::CHECKPOINT_FILE);
+    let reg_rec = Arc::new(ModelRegistry::new());
+    let (rec, _recovery) = ShardedIngest::recover(
+        SolverSpec::Bsgd,
+        svm.clone(),
+        RunConfig::new().seed(node_seed(seed, killed)),
+        NODE_SHARDS,
+        usize::MAX / 4,
+        Arc::clone(&reg_rec),
+        &killed_dir.join(wal::WAL_FILE),
+        ckpt_path.exists().then_some(ckpt_path.as_path()),
+        false,
+    )?;
+    let killed_recovered_rows = rec.rows_ingested();
+    rec.finish()?;
+    let killed_dump_path = scratch.join("killed-recovered.mdl");
+    reg_rec.dump(&killed_dump_path)?;
+    let killed_dump = std::fs::read(&killed_dump_path)?;
+
+    Ok(ClusterOutcome {
+        stats,
+        predicts_ok,
+        rows_lost,
+        duplicate_rows,
+        wal_rows_total,
+        killed_wal_rows,
+        killed_recovered_rows,
+        merged_dump,
+        killed_dump,
+    })
+}
+
+/// Run the multi-node scenario twice under the same seeded
+/// [`NetFaultPlan`] and report the fault-tolerance counters plus the
+/// run-to-run determinism gate (merged model, killed-node recovered
+/// model and every row count must match across runs). `nodes >= 3` so
+/// the killed, partitioned and surviving roles land on distinct nodes.
+pub fn run_cluster(
+    stream: &Dataset,
+    svm: &SvmConfig,
+    seed: u64,
+    nodes: usize,
+    scratch: &Path,
+) -> Result<Json> {
+    ensure!(nodes >= 3, "the cluster scenario needs >= 3 nodes (kill + partition + survivor)");
+    ensure!(
+        stream.len() >= 2 * CLUSTER_CHUNK,
+        "cluster stream too short for the row-keyed fault schedule"
+    );
+    let plan = NetFaultPlan::seeded(seed, stream.len() as u64, nodes);
+    let sync_every = (stream.len() as u64 / 8).max(1);
+    let a = cluster_scenario(stream, svm, seed, nodes, plan, sync_every, &scratch.join("run-a"))?;
+    let b = cluster_scenario(stream, svm, seed, nodes, plan, sync_every, &scratch.join("run-b"))?;
+    let deterministic = a.merged_dump == b.merged_dump
+        && a.killed_dump == b.killed_dump
+        && a.stats.acked_rows == b.stats.acked_rows
+        && a.stats.rows_redealt == b.stats.rows_redealt
+        && a.wal_rows_total == b.wal_rows_total;
+    let (killed, kill_at) = plan.kill_node.unwrap_or((0, 0));
+    let (part, part_from, part_span) = plan.partition.unwrap_or((0, 0, 0));
+    Ok(Json::object(vec![
+        ("nodes", Json::num(nodes as f64)),
+        ("rows", Json::num(stream.len() as f64)),
+        ("seed", Json::num(seed as f64)),
+        (
+            "fault_plan",
+            Json::object(vec![
+                ("kill_node", Json::num(killed as f64)),
+                ("kill_at_rows", Json::num(kill_at as f64)),
+                ("partition_node", Json::num(part as f64)),
+                ("partition_from_rows", Json::num(part_from as f64)),
+                ("partition_for_rows", Json::num(part_span as f64)),
+                (
+                    "slow_node",
+                    plan.slow_node.map(|(n, _)| Json::num(n as f64)).unwrap_or(Json::Null),
+                ),
+                (
+                    "slow_ms",
+                    plan.slow_node.map(|(_, ms)| Json::num(ms as f64)).unwrap_or(Json::Null),
+                ),
+                (
+                    "corrupt_reply_node",
+                    plan.corrupt_reply.map(|(n, _)| Json::num(n as f64)).unwrap_or(Json::Null),
+                ),
+                (
+                    "corrupt_reply_at_rows",
+                    plan.corrupt_reply
+                        .map(|(_, at)| Json::num(at as f64))
+                        .unwrap_or(Json::Null),
+                ),
+            ]),
+        ),
+        ("rows_dealt", Json::num(a.stats.rows_dealt as f64)),
+        ("acked_rows", Json::num(a.stats.acked_rows as f64)),
+        ("rows_redealt", Json::num(a.stats.rows_redealt as f64)),
+        ("failovers", Json::num(a.stats.failovers as f64)),
+        ("refused", Json::num(a.stats.refused as f64)),
+        ("predicts_ok", Json::num(a.predicts_ok as f64)),
+        ("rows_lost", Json::num(a.rows_lost as f64)),
+        ("duplicate_rows", Json::num(a.duplicate_rows as f64)),
+        ("wal_rows_total", Json::num(a.wal_rows_total as f64)),
+        ("killed_node_wal_rows", Json::num(a.killed_wal_rows as f64)),
+        (
+            "killed_node_recovered_rows",
+            Json::num(a.killed_recovered_rows as f64),
+        ),
+        ("nodes_up_at_end", Json::num(a.stats.nodes_up as f64)),
+        (
+            "node_states",
+            Json::Array(a.stats.states.iter().map(|s| Json::str(s)).collect()),
+        ),
+        ("merged_version", Json::num(a.stats.merged_version as f64)),
+        ("deterministic_across_runs", Json::Bool(deterministic)),
+    ]))
+}
+
+/// Stitch the single-node report and (optionally) the cluster report
+/// into the versioned on-disk schema: without a cluster run the v1
+/// report passes through byte-compatible; with one, v2 nests both.
+pub fn compose(single: Json, cluster: Option<Json>) -> Json {
+    match cluster {
+        None => single,
+        Some(c) => Json::object(vec![
+            ("schema", Json::str("bench_resilience/v2")),
+            ("single_node", single),
+            ("cluster", c),
+        ]),
+    }
+}
+
 /// Write the report as `BENCH_resilience.json` under `out_dir` (created
 /// if missing); returns the written path.
 pub fn write(report: &Json, out_dir: &str) -> Result<String> {
@@ -378,6 +710,73 @@ mod tests {
         let out = scratch.to_string_lossy().into_owned();
         let path = write(&report, &out).unwrap();
         assert!(path.ends_with(REPORT_FILE));
+        std::fs::remove_dir_all(&scratch).ok();
+    }
+
+    #[test]
+    fn cluster_scenario_survives_node_loss_without_losing_acked_rows() {
+        let ds = two_moons(160, 0.12, 23);
+        let svm = SvmConfig::new()
+            .kernel(KernelSpec::gaussian(2.0))
+            .budget(20)
+            .c(10.0, ds.len());
+        let scratch = std::env::temp_dir().join("budgetsvm-cluster-bench-test");
+        std::fs::remove_dir_all(&scratch).ok();
+        let report = run_cluster(&ds, &svm, 29, 3, &scratch).unwrap();
+
+        // The headline gates, same as CI: nothing acked is lost, the
+        // kill forced at least one re-deal, the partition forced at
+        // least one predict failover, and the whole schedule replays
+        // byte-identically.
+        assert_eq!(report.get("rows_lost").and_then(Json::as_usize), Some(0));
+        assert_eq!(
+            report.get("acked_rows").and_then(Json::as_usize),
+            Some(ds.len()),
+            "every dealt row must end up acked by some node"
+        );
+        assert!(report.get("rows_redealt").and_then(Json::as_usize).unwrap() >= 1);
+        assert!(report.get("failovers").and_then(Json::as_usize).unwrap() >= 1);
+        assert!(report.get("predicts_ok").and_then(Json::as_usize).unwrap() >= 1);
+        assert_eq!(
+            report.get("deterministic_across_runs"),
+            Some(&Json::Bool(true))
+        );
+
+        // Node-local durability holds even on the node the cluster
+        // lost: offline recovery replays exactly what it acked.
+        let killed_wal = report.get("killed_node_wal_rows").and_then(Json::as_usize).unwrap();
+        assert!(killed_wal >= 1, "the killed node served before dying");
+        assert_eq!(
+            report.get("killed_node_recovered_rows").and_then(Json::as_usize),
+            Some(killed_wal)
+        );
+
+        // The kill is permanent; the partition heals. With 3 nodes that
+        // leaves exactly one node down at the end.
+        let killed = report
+            .get("fault_plan")
+            .and_then(|p| p.get("kill_node"))
+            .and_then(Json::as_usize)
+            .unwrap();
+        match report.get("node_states") {
+            Some(Json::Array(states)) => assert_eq!(states[killed], Json::str("down")),
+            other => panic!("node_states missing: {other:?}"),
+        }
+        assert_eq!(report.get("nodes_up_at_end").and_then(Json::as_usize), Some(2));
+        assert!(report.get("merged_version").and_then(Json::as_usize).unwrap() >= 1);
+
+        // v2 composition nests both reports; without a cluster run the
+        // v1 report passes through untouched.
+        let single = Json::object(vec![("schema", Json::str("bench_resilience/v1"))]);
+        let composed = compose(single.clone(), Some(report.clone()));
+        assert_eq!(
+            composed.get("schema").and_then(Json::as_str),
+            Some("bench_resilience/v2")
+        );
+        assert_eq!(composed.get("cluster"), Some(&report));
+        assert_eq!(composed.get("single_node"), Some(&single));
+        assert_eq!(compose(single.clone(), None), single);
+        assert_eq!(Json::parse(&report.to_string()).unwrap(), report);
         std::fs::remove_dir_all(&scratch).ok();
     }
 }

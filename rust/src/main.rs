@@ -214,6 +214,26 @@ fn opt_specs() -> Vec<OptSpec> {
             takes_value: true,
             help: "serve: registry versions retained for rollback (default 8)",
         },
+        OptSpec {
+            name: "wal-rotate",
+            takes_value: false,
+            help: "serve: rotate the WAL at every durable checkpoint (bounded replay: \
+                   recovery reads the checkpoint plus only the rows past it)",
+        },
+        OptSpec {
+            name: "coordinator",
+            takes_value: false,
+            help: "serve: multi-node coordinator — deal acked train rows over the \
+                   --nodes serve processes, merge their snapshots into the served \
+                   model, fail predict traffic over across the replicas",
+        },
+        OptSpec {
+            name: "nodes",
+            takes_value: true,
+            help: "serve --coordinator: comma-separated host:port list of serve nodes; \
+                   bench --resilience: node count for the multi-node kill/partition \
+                   scenario (default 0 = single-process harness only)",
+        },
     ]
 }
 
@@ -343,6 +363,7 @@ fn main() -> Result<()> {
                 let (report, path) = coordinator::run_resilience_bench(
                     args.flag("quick"),
                     cfg.seed,
+                    args.get_usize("nodes")?.unwrap_or(0),
                     &cfg.out_dir,
                 )?;
                 println!("{report}");
@@ -416,6 +437,13 @@ fn main() -> Result<()> {
                 scfg.wal_dir = Some(dir.to_string());
             }
             scfg.recover = args.flag("recover");
+            scfg.wal_rotate = args.flag("wal-rotate");
+            // Multi-node front: `serve --coordinator --nodes a:p,b:p` deals
+            // to remote serve processes instead of training locally.
+            scfg.coordinator = args.flag("coordinator");
+            if let Some(list) = args.get("nodes") {
+                scfg.nodes = list.split(',').map(|s| s.trim().to_string()).collect();
+            }
             scfg.shadow_eval = args.flag("shadow-eval");
             if let Some(h) = args.get_usize("history")? {
                 scfg.history = h;
@@ -659,6 +687,7 @@ mod tests {
             "predict-deadline-ms",
             "io-timeout-secs",
             "history",
+            "nodes",
         ] {
             let spec = specs
                 .iter()
@@ -666,7 +695,7 @@ mod tests {
                 .unwrap_or_else(|| panic!("serve option --{opt} is not declared"));
             assert!(spec.takes_value, "--{opt} must take a value");
         }
-        for flag in ["recover", "shadow-eval"] {
+        for flag in ["recover", "shadow-eval", "wal-rotate", "coordinator"] {
             let spec = specs
                 .iter()
                 .find(|s| s.name == flag)
@@ -781,6 +810,43 @@ mod tests {
             ["bench", "--resilience", "--quick"].iter().map(|s| s.to_string()).collect();
         let args = Args::parse(&argv, &opt_specs()).unwrap();
         assert!(args.flag("resilience") && args.flag("quick"));
+    }
+
+    #[test]
+    fn cluster_serve_options_parse_through_the_cli() {
+        let argv: Vec<String> = [
+            "serve",
+            "--coordinator",
+            "--nodes",
+            "127.0.0.1:7001, 127.0.0.1:7002,127.0.0.1:7003",
+            "--wal-rotate",
+            "--wal-dir",
+            "/tmp/wals",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let args = Args::parse(&argv, &opt_specs()).unwrap();
+        assert!(args.flag("coordinator"));
+        assert!(args.flag("wal-rotate"));
+        // The node list splits on commas and trims whitespace, exactly as
+        // the serve dispatch does before ServeConfig::validate sees it.
+        let nodes: Vec<String> = args
+            .get("nodes")
+            .unwrap()
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .collect();
+        assert_eq!(nodes, ["127.0.0.1:7001", "127.0.0.1:7002", "127.0.0.1:7003"]);
+
+        // The same --nodes option is the cluster size on the bench side.
+        let argv: Vec<String> = ["bench", "--resilience", "--nodes", "3", "--quick"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let args = Args::parse(&argv, &opt_specs()).unwrap();
+        assert!(args.flag("resilience"));
+        assert_eq!(args.get_usize("nodes").unwrap(), Some(3));
     }
 
     #[test]

@@ -1,0 +1,808 @@
+//! The cluster coordinator: deals acked train rows over the up nodes,
+//! merges their snapshots into one served model, and fans predict
+//! traffic out over the replicas with failover.
+//!
+//! Dealing contract (at-least-once, dedup by sequence number): every
+//! train row gets a global sequence number and is held in the target
+//! node's unacked queue until that node's `ok` comes back — the node's
+//! ack is the client's ack. If the link's retry budget runs out, the
+//! node takes a health failure and *all* of its unacked rows are
+//! re-dealt to survivors. An acked row is dropped from coordinator
+//! state entirely, so it can never be dealt twice by the coordinator;
+//! a node that died after applying a row whose ack was lost may hold a
+//! duplicate (at-least-once), which WAL replay tolerates and the
+//! resilience bench's loss accounting treats as benign.
+//!
+//! Model flow: on a row cadence the coordinator asks every up node to
+//! `flush` and `snapshot`, merges the returned shard models through
+//! [`merge_shard_models`] weighted by each node's ingested row count,
+//! publishes the merged model into its local [`ModelRegistry`] (the
+//! failover replica of last resort), and pushes it back to every up
+//! node with `snapshot load` — which is also exactly how a rejoining
+//! node is re-synced before it re-enters the rotations.
+
+use std::collections::VecDeque;
+use std::io::{BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use super::super::merge::merge_shard_models;
+use super::super::protocol::{self, MAX_LINE_BYTES};
+use super::super::registry::ModelRegistry;
+use super::super::ServeConfig;
+use super::heartbeat::{NodeHealth, NodeState};
+use super::node::NodeLink;
+use crate::solver::SvmConfig;
+use crate::telemetry::{self, Counter, Gauge, Stage};
+use crate::util::backoff::Backoff;
+use crate::util::json::Json;
+
+/// Heartbeat cadence of the TCP coordinator's probe thread.
+const HEARTBEAT_INTERVAL: Duration = Duration::from_secs(1);
+
+/// Consecutive failures before a node is declared down.
+const DOWN_THRESHOLD: u32 = 3;
+
+/// A row router over a set of cluster nodes. Single-threaded by
+/// design — the TCP front serializes sessions through a mutex, and the
+/// benches drive it directly — which is what keeps a seeded scenario
+/// deterministic.
+pub struct ClusterCoordinator {
+    links: Vec<NodeLink>,
+    health: Vec<NodeHealth>,
+    /// Per node: rows dealt to it whose ack has not arrived. Drained
+    /// and re-dealt when the node goes down.
+    pending: Vec<VecDeque<(u64, String)>>,
+    registry: Arc<ModelRegistry>,
+    svm: SvmConfig,
+    /// Global dealt-row clock, shared with the links' fault schedules.
+    dealt: Arc<AtomicU64>,
+    seq: u64,
+    acked: u64,
+    rows_redealt: u64,
+    failovers: u64,
+    refused: u64,
+    deal_rr: usize,
+    predict_rr: usize,
+    /// Pull + merge + publish after this many acked rows (0 = only on
+    /// explicit `flush`).
+    sync_every: u64,
+    last_sync: u64,
+    /// Bench hook: canonical wire lines of every acked row, for the
+    /// zero-loss audit against the nodes' WALs.
+    acked_ledger: Option<Vec<String>>,
+}
+
+/// Point-in-time counters for `stats` replies and bench reports.
+#[derive(Debug, Clone)]
+pub struct ClusterStats {
+    pub nodes: usize,
+    pub nodes_up: usize,
+    pub rows_dealt: u64,
+    pub acked_rows: u64,
+    pub rows_redealt: u64,
+    pub failovers: u64,
+    pub refused: u64,
+    pub merged_version: u64,
+    pub states: Vec<&'static str>,
+}
+
+impl ClusterStats {
+    /// The stats as the JSON object the coordinator's `stats` verb
+    /// returns.
+    pub fn to_json(&self) -> Json {
+        Json::object(vec![
+            ("nodes", Json::num(self.nodes as f64)),
+            ("nodes_up", Json::num(self.nodes_up as f64)),
+            ("rows_dealt", Json::num(self.rows_dealt as f64)),
+            ("acked_rows", Json::num(self.acked_rows as f64)),
+            ("rows_redealt", Json::num(self.rows_redealt as f64)),
+            ("failovers", Json::num(self.failovers as f64)),
+            ("refused", Json::num(self.refused as f64)),
+            ("merged_version", Json::num(self.merged_version as f64)),
+            (
+                "node_states",
+                Json::Array(self.states.iter().map(|s| Json::str(s)).collect()),
+            ),
+        ])
+    }
+}
+
+impl ClusterCoordinator {
+    /// A coordinator over `links` (one per node, same order as the
+    /// node indices baked into them). `sync_every` is the acked-row
+    /// cadence of the pull→merge→publish→push cycle.
+    pub fn new(
+        links: Vec<NodeLink>,
+        svm: SvmConfig,
+        registry: Arc<ModelRegistry>,
+        sync_every: u64,
+    ) -> Self {
+        assert!(!links.is_empty(), "a cluster needs at least one node");
+        let n = links.len();
+        let coord = ClusterCoordinator {
+            links,
+            health: vec![NodeHealth::new(DOWN_THRESHOLD); n],
+            pending: (0..n).map(|_| VecDeque::new()).collect(),
+            registry,
+            svm,
+            dealt: Arc::new(AtomicU64::new(0)),
+            seq: 0,
+            acked: 0,
+            rows_redealt: 0,
+            failovers: 0,
+            refused: 0,
+            deal_rr: 0,
+            predict_rr: 0,
+            sync_every,
+            last_sync: 0,
+            acked_ledger: None,
+        };
+        coord.publish_nodes_up();
+        coord
+    }
+
+    /// Share the dealt-row clock with the links' fault schedules (the
+    /// benches build the links around the same counter).
+    pub fn with_deal_clock(mut self, dealt: Arc<AtomicU64>) -> Self {
+        dealt.store(self.seq, Ordering::SeqCst);
+        self.dealt = dealt;
+        self
+    }
+
+    /// Record the canonical wire line of every acked row (bench loss
+    /// audit).
+    pub fn record_acked_lines(&mut self) {
+        self.acked_ledger = Some(Vec::new());
+    }
+
+    /// The recorded acked lines (empty unless [`record_acked_lines`]
+    /// was called).
+    ///
+    /// [`record_acked_lines`]: ClusterCoordinator::record_acked_lines
+    pub fn acked_lines(&self) -> &[String] {
+        self.acked_ledger.as_deref().unwrap_or(&[])
+    }
+
+    /// The coordinator's local registry (merged models).
+    pub fn registry(&self) -> &Arc<ModelRegistry> {
+        &self.registry
+    }
+
+    /// Current per-node availability.
+    pub fn node_states(&self) -> Vec<NodeState> {
+        self.health.iter().map(|h| h.state()).collect()
+    }
+
+    fn publish_nodes_up(&self) {
+        let up = self.health.iter().filter(|h| h.state().is_up()).count();
+        telemetry::registry::gauge_set(Gauge::NodesUp, up as u64);
+    }
+
+    /// First up node at or after `start` in ring order.
+    fn next_up_from(&self, start: usize) -> Option<usize> {
+        let n = self.links.len();
+        (0..n).map(|k| (start + k) % n).find(|&i| self.health[i].state().is_up())
+    }
+
+    fn node_success(&mut self, node: usize) {
+        self.health[node].on_success();
+        self.publish_nodes_up();
+    }
+
+    /// Feed a link failure into the node's health; returns the state it
+    /// landed in.
+    fn node_failure(&mut self, node: usize) -> NodeState {
+        let state = self.health[node].on_failure();
+        self.publish_nodes_up();
+        state
+    }
+
+    /// Deal one labeled row as its [`canonical_train_line`].
+    pub fn deal_train(&mut self, label: f32, row: &[f32]) -> Result<String> {
+        self.deal_train_line(&canonical_train_line(label, row))
+    }
+
+    /// Deal one raw `train ...` wire line (the TCP front forwards client
+    /// lines verbatim after validating the verb and label).
+    pub fn deal_train_line(&mut self, line: &str) -> Result<String> {
+        let mut parts = line.split_whitespace();
+        ensure!(parts.next() == Some("train"), "deal_train_line takes a train line");
+        let label_tok = parts.next().ok_or_else(|| anyhow!("train needs a label"))?;
+        let label: f64 =
+            label_tok.parse().map_err(|_| anyhow!("bad label '{label_tok}'"))?;
+        ensure!(label.is_finite(), "non-finite label '{label_tok}'");
+        let seq = self.seq;
+        self.seq += 1;
+        self.dealt.store(self.seq, Ordering::SeqCst);
+        self.deal(seq, line.to_string())
+    }
+
+    /// The deal loop: route every queued row to an up node, absorbing
+    /// refusals by rotating and link death by re-dealing the dead
+    /// node's unacked queue. Returns the ack reply of the row that
+    /// triggered the call.
+    fn deal(&mut self, seq: u64, line: String) -> Result<String> {
+        let mut work: VecDeque<(u64, String)> = VecDeque::new();
+        work.push_back((seq, line));
+        let mut last_reply = String::new();
+        'rows: while let Some((seq, line)) = work.pop_front() {
+            let mut attempts = 0usize;
+            loop {
+                attempts += 1;
+                ensure!(
+                    attempts <= 4 * self.links.len() + 8,
+                    "row {seq}: no node accepted it after {attempts} attempts"
+                );
+                let Some(node) = self.next_up_from(self.deal_rr) else {
+                    bail!("cluster fully degraded: no node is up to take row {seq}");
+                };
+                self.deal_rr = (node + 1) % self.links.len();
+                self.pending[node].push_back((seq, line.clone()));
+                match self.links[node].request(&line) {
+                    Ok(reply) if reply.starts_with("ok") => {
+                        self.pending[node].pop_back();
+                        self.node_success(node);
+                        self.acked += 1;
+                        if let Some(ledger) = &mut self.acked_ledger {
+                            ledger.push(line.clone());
+                        }
+                        last_reply = reply;
+                        continue 'rows;
+                    }
+                    Ok(_refusal) => {
+                        // `overloaded` / `err`: the node answered and
+                        // declined — the link is healthy, rotate on.
+                        self.pending[node].pop_back();
+                        self.node_success(node);
+                        self.refused += 1;
+                    }
+                    Err(_) => {
+                        // Retry budget exhausted: health failure, and
+                        // everything unacked on this node goes back
+                        // into the work queue (at-least-once).
+                        self.node_failure(node);
+                        let orphans: Vec<(u64, String)> =
+                            self.pending[node].drain(..).collect();
+                        let n = orphans.len() as u64;
+                        self.rows_redealt += n;
+                        telemetry::registry::count_n(Counter::RowsRedealt, n);
+                        for item in orphans.into_iter().rev() {
+                            work.push_front(item);
+                        }
+                        continue 'rows;
+                    }
+                }
+            }
+        }
+        Ok(last_reply)
+    }
+
+    /// Forward a `predict ...` wire line to a replica, failing over
+    /// across the up nodes and falling back to the local merged model.
+    /// Infallible by the protocol's contract: failures become `err`
+    /// replies.
+    pub fn forward_predict(&mut self, line: &str) -> String {
+        for _ in 0..self.links.len() {
+            let Some(node) = self.next_up_from(self.predict_rr) else { break };
+            self.predict_rr = (node + 1) % self.links.len();
+            match self.links[node].exchange(line) {
+                Ok(reply) => {
+                    self.node_success(node);
+                    return reply;
+                }
+                Err(_) => {
+                    self.node_failure(node);
+                    self.failovers += 1;
+                    telemetry::registry::count(Counter::Failovers);
+                }
+            }
+        }
+        self.local_predict(line)
+    }
+
+    /// Answer a predict from the coordinator's own merged model — the
+    /// replica of last resort when every node is out.
+    fn local_predict(&self, line: &str) -> String {
+        let Some(snap) = self.registry.current() else {
+            return "err no replica is up and no model is merged yet".to_string();
+        };
+        let mut parts = line.split_whitespace();
+        if parts.next() != Some("predict") {
+            return "err expected a predict line".to_string();
+        }
+        match protocol::parse_features(parts, snap.model().dim()) {
+            Ok(row) => {
+                let label = if snap.model().decision(&row) > 0.0 { "+1" } else { "-1" };
+                format!("ok {label} v{} local", snap.version())
+            }
+            Err(msg) => format!("err {msg}"),
+        }
+    }
+
+    /// One heartbeat pass: probe every node's `health` verb (a single
+    /// exchange, so the cadence is fixed), feed the outcome into its
+    /// state machine, and re-sync any node that just came back.
+    pub fn heartbeat_tick(&mut self) {
+        for i in 0..self.links.len() {
+            let t0 = Instant::now();
+            let probe = self.links[i].probe();
+            telemetry::registry::record_stage_ns(
+                Stage::Heartbeat,
+                t0.elapsed().as_nanos() as u64,
+            );
+            match probe {
+                Ok(_) => {
+                    if self.health[i].on_success() == NodeState::Rejoining {
+                        self.resync_node(i);
+                    }
+                }
+                Err(_) => {
+                    self.health[i].on_failure();
+                }
+            }
+        }
+        self.publish_nodes_up();
+    }
+
+    /// Push the latest merged model to a rejoining node; only a
+    /// successful push (or having nothing to push) readmits it.
+    fn resync_node(&mut self, node: usize) {
+        let Some(snap) = self.registry.current() else {
+            // Nothing merged yet — the node cannot be staler than us.
+            self.health[node].mark_synced();
+            return;
+        };
+        let mut bytes = Vec::new();
+        if crate::model::io::save_any_writer(snap.model(), &mut bytes).is_err() {
+            return;
+        }
+        let line =
+            format!("snapshot load {} {}", snap.version(), protocol::hex_encode(&bytes));
+        match self.links[node].request(&line) {
+            Ok(reply) if reply.starts_with("ok") => {
+                self.health[node].mark_synced();
+            }
+            _ => {
+                self.health[node].on_failure();
+            }
+        }
+    }
+
+    /// Pull a snapshot from every up node (after a `flush`), merge the
+    /// shard models weighted by each node's ingested rows, publish the
+    /// merged model locally, and push it back to the up replicas.
+    /// Returns the local registry version of the merge.
+    pub fn sync_models(&mut self) -> Result<u64> {
+        let mut models = Vec::new();
+        let mut weights = Vec::new();
+        for i in 0..self.links.len() {
+            if !self.health[i].state().is_up() {
+                continue;
+            }
+            // A flush refusal (e.g. nothing ingested yet) is an answer,
+            // not a link failure — the snapshot pull below decides.
+            if self.links[i].request("flush").is_err() {
+                self.node_failure(i);
+                continue;
+            }
+            let reply = match self.links[i].request("snapshot") {
+                Ok(r) => r,
+                Err(_) => {
+                    self.node_failure(i);
+                    continue;
+                }
+            };
+            let mut parts = reply.split_whitespace();
+            let (Some("ok"), Some(_ver), Some(rows_tok), Some(hex)) =
+                (parts.next(), parts.next(), parts.next(), parts.next())
+            else {
+                continue; // `err no model published yet` and kin
+            };
+            let Ok(rows) = rows_tok.parse::<u64>() else { continue };
+            let Ok(bytes) = protocol::hex_decode(hex) else { continue };
+            let Ok(model) = crate::model::io::load_any_reader(&bytes[..]) else { continue };
+            models.push(model);
+            weights.push(rows.max(1) as f64);
+        }
+        ensure!(!models.is_empty(), "no up node produced a snapshot to merge");
+        let merged =
+            merge_shard_models(models, &weights, self.svm.budget, &self.svm.maintenance())?;
+        let mut bytes = Vec::new();
+        crate::model::io::save_any_writer(&merged, &mut bytes)?;
+        let version = self.registry.publish(merged);
+        let push = format!("snapshot load {version} {}", protocol::hex_encode(&bytes));
+        for i in 0..self.links.len() {
+            if !self.health[i].state().is_up() {
+                continue;
+            }
+            if self.links[i].request(&push).is_err() {
+                self.node_failure(i);
+            }
+        }
+        self.last_sync = self.acked;
+        Ok(version)
+    }
+
+    /// Run the sync cycle if the acked-row cadence is due. Early in a
+    /// stream no node may have anything to snapshot yet; that is not an
+    /// error, just "not yet".
+    pub fn maybe_sync(&mut self) -> Option<u64> {
+        if self.sync_every == 0 || self.acked.saturating_sub(self.last_sync) < self.sync_every
+        {
+            return None;
+        }
+        self.sync_models().ok()
+    }
+
+    /// Point-in-time counters.
+    pub fn stats(&self) -> ClusterStats {
+        ClusterStats {
+            nodes: self.links.len(),
+            nodes_up: self.health.iter().filter(|h| h.state().is_up()).count(),
+            rows_dealt: self.seq,
+            acked_rows: self.acked,
+            rows_redealt: self.rows_redealt,
+            failovers: self.failovers,
+            refused: self.refused,
+            merged_version: self.registry.version(),
+            states: self.health.iter().map(|h| h.state().label()).collect(),
+        }
+    }
+}
+
+/// The canonical `train` wire line for a labeled dense row. The line
+/// always carries the highest feature index explicitly (a `d:0` token
+/// if the last component is zero) so every node pins the same serving
+/// dimension no matter which row it sees first. The resilience bench
+/// rebuilds these lines from WAL replays for its zero-loss audit, so
+/// the mapping must stay a pure function of `(label, row)`.
+pub fn canonical_train_line(label: f32, row: &[f32]) -> String {
+    let mut feats = protocol::format_features(row);
+    if let Some(&last) = row.last() {
+        if last == 0.0 {
+            feats.push_str(&format!(" {}:0", row.len()));
+        }
+    }
+    let label = if label > 0.0 { 1 } else { -1 };
+    format!("train {label}{feats}")
+}
+
+/// Answer one coordinator-session line (trimmed, non-empty, not
+/// `quit`). Same infallible contract as the node protocol.
+fn coordinator_line(coord: &Mutex<ClusterCoordinator>, line: &str) -> String {
+    let mut c = coord.lock().expect("coordinator lock poisoned");
+    let verb = line.split_whitespace().next().unwrap_or("");
+    match verb {
+        "predict" => c.forward_predict(line),
+        "train" => match c.deal_train_line(line) {
+            Ok(reply) => {
+                let _ = c.maybe_sync();
+                reply
+            }
+            Err(e) => format!("err {e}"),
+        },
+        "flush" => match c.sync_models() {
+            Ok(v) => format!("ok published v{v}"),
+            Err(e) => format!("err {e}"),
+        },
+        "stats" => format!("ok {}", c.stats().to_json()),
+        "health" => {
+            let s = c.stats();
+            format!("ok {} {}", s.merged_version, s.acked_rows)
+        }
+        _ => format!("err unknown verb '{verb}' in coordinator mode"),
+    }
+}
+
+/// One client session against the coordinator: same line discipline as
+/// the node server (bounded reads, `err` on malformed input, `quit` to
+/// leave).
+fn coordinator_session(
+    coord: &Mutex<ClusterCoordinator>,
+    stream: TcpStream,
+    io_timeout: Option<Duration>,
+) -> Result<()> {
+    stream.set_read_timeout(io_timeout)?;
+    stream.set_write_timeout(io_timeout)?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    loop {
+        let Some((bytes, truncated)) =
+            protocol::read_bounded_line(&mut reader, MAX_LINE_BYTES)?
+        else {
+            return Ok(());
+        };
+        if truncated {
+            writeln!(writer, "err line exceeds {MAX_LINE_BYTES} bytes")?;
+            continue;
+        }
+        let Ok(text) = String::from_utf8(bytes) else {
+            writeln!(writer, "err line is not valid UTF-8")?;
+            continue;
+        };
+        let line = text.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if line == "quit" {
+            writeln!(writer, "ok bye")?;
+            return Ok(());
+        }
+        writeln!(writer, "{}", coordinator_line(coord, line))?;
+    }
+}
+
+/// Run the coordinator's TCP front: build one [`NodeLink`] per
+/// `--nodes` entry, start the heartbeat thread, and serve client
+/// sessions on loopback. `max_connections` bounds the accept loop for
+/// harnesses (`None` = serve forever).
+pub fn run_coordinator_tcp(scfg: &ServeConfig, max_connections: Option<usize>) -> Result<()> {
+    scfg.validate()?;
+    ensure!(scfg.coordinator, "run_coordinator_tcp needs coordinator mode");
+    let io_timeout =
+        (scfg.io_timeout_secs > 0).then(|| Duration::from_secs(scfg.io_timeout_secs));
+    let registry = Arc::new(ModelRegistry::with_history(scfg.history));
+    let links: Vec<NodeLink> = scfg
+        .nodes
+        .iter()
+        .enumerate()
+        .map(|(i, addr)| {
+            let backoff = Backoff::new(
+                Duration::from_millis(50),
+                Duration::from_secs(2),
+                4,
+                scfg.seed ^ (i as u64).wrapping_mul(0x9E37_79B9),
+            );
+            NodeLink::new(i, addr.clone(), io_timeout, backoff)
+        })
+        .collect();
+    let coord = Arc::new(Mutex::new(ClusterCoordinator::new(
+        links,
+        scfg.svm.clone(),
+        registry,
+        scfg.publish_every as u64,
+    )));
+    let listener = TcpListener::bind(("127.0.0.1", scfg.port))?;
+    let local = listener.local_addr()?;
+    eprintln!(
+        "coordinator listening on {local} over {} node(s): {}",
+        scfg.nodes.len(),
+        scfg.nodes.join(", ")
+    );
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let heartbeat = {
+        let coord = Arc::clone(&coord);
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            while !stop.load(Ordering::SeqCst) {
+                coord.lock().expect("coordinator lock poisoned").heartbeat_tick();
+                std::thread::sleep(HEARTBEAT_INTERVAL);
+            }
+        })
+    };
+
+    let mut served = 0usize;
+    let mut handles = Vec::new();
+    for stream in listener.incoming() {
+        let stream = match stream {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        let coord = Arc::clone(&coord);
+        handles.push(std::thread::spawn(move || {
+            let _ = coordinator_session(&coord, stream, io_timeout);
+        }));
+        handles.retain(|h| !h.is_finished());
+        served += 1;
+        if let Some(max) = max_connections {
+            if served >= max {
+                break;
+            }
+        }
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    stop.store(true, Ordering::SeqCst);
+    heartbeat.join().ok();
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::faults::NetFaultPlan;
+
+    fn test_link(index: usize, addr: String, budget: u32) -> NodeLink {
+        let backoff = Backoff::new(
+            Duration::from_micros(200),
+            Duration::from_millis(2),
+            budget,
+            17 + index as u64,
+        );
+        NodeLink::new(index, addr, Some(Duration::from_secs(2)), backoff)
+    }
+
+    fn test_coordinator(links: Vec<NodeLink>) -> ClusterCoordinator {
+        ClusterCoordinator::new(
+            links,
+            SvmConfig::default(),
+            Arc::new(ModelRegistry::new()),
+            0, // no automatic sync in unit tests
+        )
+    }
+
+    /// A node that acks `ok_lines` train lines on its first connection,
+    /// then drops the connection *and* the listener (a dead node).
+    fn spawn_dying_node(ok_lines: usize) -> (String, std::thread::JoinHandle<()>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let handle = std::thread::spawn(move || {
+            let Ok((stream, _)) = listener.accept() else { return };
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let mut stream = stream;
+            for _ in 0..ok_lines {
+                match protocol::read_bounded_line(&mut reader, MAX_LINE_BYTES) {
+                    Ok(Some(_)) => {
+                        if writeln!(stream, "ok queued 1").is_err() {
+                            return;
+                        }
+                    }
+                    _ => return,
+                }
+            }
+        });
+        (addr, handle)
+    }
+
+    /// A node that answers every line on every connection with `reply`
+    /// until `conns` connections have come and gone.
+    fn spawn_steady_node(
+        reply: &'static str,
+        conns: usize,
+    ) -> (String, std::thread::JoinHandle<()>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let handle = std::thread::spawn(move || {
+            for _ in 0..conns {
+                let Ok((stream, _)) = listener.accept() else { return };
+                let mut reader = BufReader::new(stream.try_clone().unwrap());
+                let mut stream = stream;
+                while let Ok(Some((_line, _))) =
+                    protocol::read_bounded_line(&mut reader, MAX_LINE_BYTES)
+                {
+                    if writeln!(stream, "{reply}").is_err() {
+                        break;
+                    }
+                }
+            }
+        });
+        (addr, handle)
+    }
+
+    #[test]
+    fn rows_orphaned_by_a_dead_node_are_redealt_to_survivors() {
+        // Node 0 acks one row then dies; node 1 survives. With a
+        // down-threshold of 3 the deal loop keeps probing node 0 until
+        // its health crosses into Down, re-dealing each orphaned row.
+        let (addr0, h0) = spawn_dying_node(1);
+        let (addr1, h1) = spawn_steady_node("ok queued 1", 1);
+        let links = vec![test_link(0, addr0, 1), test_link(1, addr1, 1)];
+        let mut coord = test_coordinator(links);
+        coord.record_acked_lines();
+        for i in 0..6 {
+            let label = if i % 2 == 0 { 1.0 } else { -1.0 };
+            let reply = coord.deal_train(label, &[0.5, i as f32]).unwrap();
+            assert!(reply.starts_with("ok"), "row {i}: {reply}");
+        }
+        let stats = coord.stats();
+        assert_eq!(stats.acked_rows, 6, "every row must end up acked somewhere");
+        assert_eq!(stats.rows_dealt, 6);
+        assert!(stats.rows_redealt >= 1, "the orphaned row must be re-dealt");
+        assert_eq!(coord.acked_lines().len(), 6);
+        assert_eq!(stats.nodes_up, 1);
+        assert_eq!(coord.node_states()[0], NodeState::Down);
+        drop(coord);
+        h0.join().unwrap();
+        h1.join().unwrap();
+    }
+
+    #[test]
+    fn dealing_fails_typed_when_every_node_is_down() {
+        // Nothing listens on either address.
+        let dead = || {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let links = vec![test_link(0, dead(), 1), test_link(1, dead(), 1)];
+        let mut coord = test_coordinator(links);
+        let err = coord.deal_train(1.0, &[1.0]).unwrap_err().to_string();
+        assert!(err.contains("cluster fully degraded"), "got: {err}");
+        assert_eq!(coord.stats().nodes_up, 0);
+    }
+
+    #[test]
+    fn predict_fails_over_to_the_next_replica_and_counts_it() {
+        let dead_addr = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let (addr1, h1) = spawn_steady_node("ok +1 v3", 1);
+        let links = vec![test_link(0, dead_addr, 1), test_link(1, addr1, 1)];
+        let mut coord = test_coordinator(links);
+        let reply = coord.forward_predict("predict 1:0.5");
+        assert_eq!(reply, "ok +1 v3");
+        let stats = coord.stats();
+        assert!(stats.failovers >= 1);
+        // With every replica gone and nothing merged, predict answers a
+        // typed err rather than hanging.
+        let links = vec![test_link(0, {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        }, 1)];
+        let mut lone = test_coordinator(links);
+        lone.node_failure(0);
+        lone.node_failure(0);
+        lone.node_failure(0);
+        let reply = lone.forward_predict("predict 1:0.5");
+        assert!(reply.starts_with("err "), "got: {reply}");
+        drop(coord);
+        h1.join().unwrap();
+    }
+
+    #[test]
+    fn a_partitioned_node_goes_down_then_rejoins_through_the_heartbeat() {
+        // The node's server is healthy the whole time; the *link* is
+        // partitioned by the fault schedule until the dealt-row clock
+        // passes 50.
+        let (addr, handle) = spawn_steady_node("ok 0 0", 1);
+        let dealt = Arc::new(AtomicU64::new(0));
+        let plan = NetFaultPlan::none().with_partition(0, 0, 50);
+        let link =
+            test_link(0, addr, 1).with_faults(plan, Arc::clone(&dealt));
+        let mut coord =
+            test_coordinator(vec![link]).with_deal_clock(Arc::clone(&dealt));
+        for _ in 0..DOWN_THRESHOLD {
+            coord.heartbeat_tick();
+        }
+        assert_eq!(coord.node_states()[0], NodeState::Down);
+        assert_eq!(coord.stats().nodes_up, 0);
+        // The partition heals once the clock passes the window. Nothing
+        // is merged yet, so the re-sync is a no-op and one tick brings
+        // the node all the way back.
+        dealt.store(100, Ordering::SeqCst);
+        coord.heartbeat_tick();
+        assert_eq!(coord.node_states()[0], NodeState::Up);
+        assert_eq!(coord.stats().nodes_up, 1);
+        drop(coord);
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn coordinator_sessions_speak_the_protocol_surface() {
+        let (addr, handle) = spawn_steady_node("ok queued 1", 1);
+        let coord = Mutex::new(test_coordinator(vec![test_link(0, addr, 2)]));
+        for (line, want_prefix) in [
+            ("stats", "ok {"),
+            ("health", "ok 0 0"),
+            ("train 1 1:0.5", "ok queued"),
+            ("train", "err "),
+            ("train x 1:0.5", "err "),
+            ("flush", "err "), // steady node's "ok queued 1" is not a snapshot
+            ("bogus", "err unknown verb"),
+        ] {
+            let reply = coordinator_line(&coord, line);
+            assert!(reply.starts_with(want_prefix), "{line} -> {reply}");
+        }
+        let stats = coord.lock().unwrap().stats();
+        assert_eq!(stats.acked_rows, 1);
+        drop(coord);
+        handle.join().unwrap();
+    }
+}

@@ -1,0 +1,179 @@
+//! Per-node availability state machine, driven by heartbeat probes and
+//! exchange outcomes.
+//!
+//! The coordinator holds one [`NodeHealth`] per node and feeds it two
+//! events: `on_success` (a probe or exchange completed) and `on_failure`
+//! (the link's retry budget was exhausted). The machine is pure state —
+//! no I/O, no clocks — so transitions are deterministic and the cluster
+//! benches replay identically run-to-run:
+//!
+//! ```text
+//!        on_failure              on_failure × threshold
+//!   Up ─────────────▶ Suspect ─────────────────────────▶ Down
+//!    ▲                   │ on_success                      │ on_success
+//!    │                   ▼                                 ▼
+//!    │◀────────────── (Up) ◀── mark_synced ─────────── Rejoining
+//! ```
+//!
+//! A down node that answers a probe does **not** go straight back to
+//! `Up`: it first passes through `Rejoining`, where the coordinator
+//! pushes the latest merged snapshot (`snapshot load`) before the node
+//! is allowed back into the deal and predict rotations. That re-sync is
+//! what keeps a rejoining replica from serving a stale model.
+
+/// Availability of one cluster node, as observed by the coordinator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeState {
+    /// Healthy: in the deal and predict rotations.
+    Up,
+    /// One or more recent failures, below the down threshold. Still
+    /// excluded from new work; the next success restores `Up`.
+    Suspect,
+    /// Failure count crossed the threshold: out of both rotations, its
+    /// unacked rows re-dealt to survivors. Probes continue.
+    Down,
+    /// A probe succeeded on a down node; waiting for the coordinator to
+    /// push the latest merged snapshot before rejoining the rotations.
+    Rejoining,
+}
+
+impl NodeState {
+    /// Whether the node may take new rows and predict traffic.
+    pub fn is_up(self) -> bool {
+        matches!(self, NodeState::Up)
+    }
+
+    /// Stable lower-case label for reports and stats.
+    pub fn label(self) -> &'static str {
+        match self {
+            NodeState::Up => "up",
+            NodeState::Suspect => "suspect",
+            NodeState::Down => "down",
+            NodeState::Rejoining => "rejoining",
+        }
+    }
+}
+
+/// The state machine for one node: current [`NodeState`] plus the
+/// consecutive-failure count that drives the suspect→down transition.
+#[derive(Debug, Clone, Copy)]
+pub struct NodeHealth {
+    state: NodeState,
+    failures: u32,
+    down_threshold: u32,
+}
+
+impl NodeHealth {
+    /// A healthy node that goes down after `down_threshold` consecutive
+    /// failures (clamped to at least 1: the first failure always at
+    /// least suspects the node).
+    pub fn new(down_threshold: u32) -> Self {
+        NodeHealth { state: NodeState::Up, failures: 0, down_threshold: down_threshold.max(1) }
+    }
+
+    /// Current availability.
+    pub fn state(&self) -> NodeState {
+        self.state
+    }
+
+    /// Consecutive failures since the last success.
+    pub fn failures(&self) -> u32 {
+        self.failures
+    }
+
+    /// A probe or exchange failed (retry budget exhausted). Returns the
+    /// new state; the caller re-deals the node's unacked rows iff this
+    /// transition reached `Down`.
+    pub fn on_failure(&mut self) -> NodeState {
+        self.failures = self.failures.saturating_add(1);
+        self.state = match self.state {
+            NodeState::Down => NodeState::Down,
+            // A rejoining node that fails its re-sync goes straight back
+            // down — it never served while stale.
+            NodeState::Rejoining => NodeState::Down,
+            _ if self.failures >= self.down_threshold => NodeState::Down,
+            _ => NodeState::Suspect,
+        };
+        self.state
+    }
+
+    /// A probe or exchange succeeded. A down node moves to `Rejoining`
+    /// (it must be re-synced before serving); anything else is `Up`.
+    pub fn on_success(&mut self) -> NodeState {
+        self.failures = 0;
+        self.state = match self.state {
+            NodeState::Down | NodeState::Rejoining => NodeState::Rejoining,
+            _ => NodeState::Up,
+        };
+        self.state
+    }
+
+    /// The coordinator finished pushing the merged snapshot to a
+    /// rejoining node: back into the rotations.
+    pub fn mark_synced(&mut self) -> NodeState {
+        if self.state == NodeState::Rejoining {
+            self.state = NodeState::Up;
+            self.failures = 0;
+        }
+        self.state
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn failures_walk_up_suspect_down_and_success_resets() {
+        let mut h = NodeHealth::new(3);
+        assert_eq!(h.state(), NodeState::Up);
+        assert_eq!(h.on_failure(), NodeState::Suspect);
+        assert_eq!(h.on_failure(), NodeState::Suspect);
+        // A success below the threshold fully restores the node.
+        assert_eq!(h.on_success(), NodeState::Up);
+        assert_eq!(h.failures(), 0);
+        assert_eq!(h.on_failure(), NodeState::Suspect);
+        assert_eq!(h.on_failure(), NodeState::Suspect);
+        assert_eq!(h.on_failure(), NodeState::Down);
+        // Further failures keep it down, not deeper.
+        assert_eq!(h.on_failure(), NodeState::Down);
+    }
+
+    #[test]
+    fn a_down_node_rejoins_only_through_resync() {
+        let mut h = NodeHealth::new(1);
+        assert_eq!(h.on_failure(), NodeState::Down);
+        // Probe succeeds: rejoining, but not yet in the rotations.
+        assert_eq!(h.on_success(), NodeState::Rejoining);
+        assert!(!h.state().is_up());
+        // Re-sync completes: up.
+        assert_eq!(h.mark_synced(), NodeState::Up);
+        assert!(h.state().is_up());
+    }
+
+    #[test]
+    fn a_failed_resync_drops_the_node_back_down() {
+        let mut h = NodeHealth::new(2);
+        h.on_failure();
+        h.on_failure();
+        assert_eq!(h.state(), NodeState::Down);
+        assert_eq!(h.on_success(), NodeState::Rejoining);
+        assert_eq!(h.on_failure(), NodeState::Down);
+        // mark_synced on a non-rejoining node is a no-op.
+        assert_eq!(h.mark_synced(), NodeState::Down);
+    }
+
+    #[test]
+    fn threshold_is_clamped_to_at_least_one() {
+        let mut h = NodeHealth::new(0);
+        assert_eq!(h.on_failure(), NodeState::Down);
+    }
+
+    #[test]
+    fn state_labels_are_stable() {
+        assert_eq!(NodeState::Up.label(), "up");
+        assert_eq!(NodeState::Suspect.label(), "suspect");
+        assert_eq!(NodeState::Down.label(), "down");
+        assert_eq!(NodeState::Rejoining.label(), "rejoining");
+    }
+}

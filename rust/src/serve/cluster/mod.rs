@@ -1,0 +1,45 @@
+//! Multi-node serve tier: a coordinator that deals acked train rows to
+//! remote shard nodes over the line protocol, merges their snapshots
+//! into one served model, and survives node loss.
+//!
+//! The cluster reuses the single-process pieces wholesale — every node
+//! is an ordinary `repro serve` process (loopback TCP, line protocol,
+//! WAL + checkpoint per node), and the coordinator is a thin router
+//! built from three parts:
+//!
+//! * [`node`] — [`NodeLink`]: one coordinator↔node connection. Socket
+//!   read/write timeouts and bounded line reads (the same discipline the
+//!   server applies to clients), every exchange wrapped in a seeded
+//!   equal-jitter [`crate::util::backoff::Backoff`] with a retry budget,
+//!   and a [`super::faults::NetFaultPlan`] injection point for the
+//!   deterministic cluster benches.
+//! * [`heartbeat`] — [`NodeHealth`]: the per-node availability state
+//!   machine (`up → suspect → down → rejoining → up`), driven by probe
+//!   and exchange outcomes. Pure state — no I/O — so the transitions are
+//!   unit-testable and deterministic.
+//! * [`coordinator`] — [`ClusterCoordinator`]: deals rows round-robin
+//!   over up nodes (a node's ack is the client's ack; rows orphaned by a
+//!   node going down are re-dealt to survivors, at-least-once with
+//!   coordinator-side dedup by row sequence number), pulls node
+//!   snapshots on cadence, merges them via [`super::merge`], publishes
+//!   the merged model locally and pushes it back to every up node (the
+//!   prediction replicas), and fans predict traffic out over the
+//!   replicas with sequential failover.
+//!
+//! Failure semantics, in one table:
+//!
+//! | failure                | detection              | response                                   |
+//! |------------------------|------------------------|--------------------------------------------|
+//! | node stops answering   | retry budget exhausted | mark suspect→down, re-deal unacked rows    |
+//! | node partitioned       | same                   | same; heals via heartbeat probes           |
+//! | node rejoins           | probe succeeds on down | push latest merged snapshot, then serve    |
+//! | replica dead on predict| exchange fails         | fail over to next replica, else local model|
+//! | corrupt reply          | malformed reply line   | drop connection, retry through backoff     |
+
+pub mod coordinator;
+pub mod heartbeat;
+pub mod node;
+
+pub use coordinator::{canonical_train_line, run_coordinator_tcp, ClusterCoordinator, ClusterStats};
+pub use heartbeat::{NodeHealth, NodeState};
+pub use node::NodeLink;

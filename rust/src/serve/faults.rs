@@ -94,6 +94,105 @@ impl FaultPlan {
     }
 }
 
+/// Network-level fault schedule for one cluster run: which
+/// coordinator↔node links fail, when, and how. Like [`FaultPlan`],
+/// every trigger is a **dealt-row count** (the coordinator's global
+/// sequence counter), never a wall-clock time, so a cluster scenario
+/// replays identically run-to-run. Injection lives coordinator-side in
+/// the node client ([`super::cluster::NodeLink`]), which consults the
+/// plan before and after every exchange.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct NetFaultPlan {
+    /// Kill a node: from this dealt-row count on, every exchange with
+    /// `(node, from_rows)` fails as a dropped connection, permanently —
+    /// the node only comes back if the harness explicitly restarts it.
+    pub kill_node: Option<(usize, u64)>,
+    /// Partition a node: exchanges with `(node, from_rows, for_rows)`
+    /// fail while the dealt-row counter is in
+    /// `[from_rows, from_rows + for_rows)`, then heal.
+    pub partition: Option<(usize, u64, u64)>,
+    /// Slow node: every exchange with `(node, delay_ms)` sleeps before
+    /// reading the reply — the backoff/timeout path, not a failure.
+    pub slow_node: Option<(usize, u64)>,
+    /// Corrupt one reply: the exchange with `node` that first crosses
+    /// `(node, at_rows)` has its reply bytes scrambled, forcing the
+    /// client's parse-and-retry path.
+    pub corrupt_reply: Option<(usize, u64)>,
+}
+
+impl NetFaultPlan {
+    /// An empty plan (healthy network).
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    /// Derive a full network-fault schedule from a seed for a run of
+    /// roughly `total_rows` dealt rows over `nodes` nodes: one node
+    /// killed in the second half of the stream, a *different* node
+    /// partitioned across the middle, a third slowed, and one corrupted
+    /// reply early on. Deterministic in `(seed, total_rows, nodes)`.
+    pub fn seeded(seed: u64, total_rows: u64, nodes: usize) -> Self {
+        let mut rng = Rng::new(seed ^ 0x9E7_F1E7);
+        let n = nodes.max(1) as u64;
+        let total = total_rows.max(8);
+        let killed = rng.next_u64() % n;
+        let partitioned = if n > 1 { (killed + 1 + rng.next_u64() % (n - 1)) % n } else { 0 };
+        let slowed = (killed + partitioned + 1) % n.max(1);
+        NetFaultPlan {
+            kill_node: Some((killed as usize, total / 2 + rng.next_u64() % (total / 4).max(1))),
+            partition: Some((
+                partitioned as usize,
+                total / 4 + rng.next_u64() % (total / 8).max(1),
+                (total / 4).max(2),
+            )),
+            slow_node: Some((slowed as usize, 1 + rng.next_u64() % 5)),
+            corrupt_reply: Some((partitioned as usize, 1 + rng.next_u64() % (total / 8).max(1))),
+        }
+    }
+
+    /// Builder: kill `node` once `from_rows` rows have been dealt.
+    pub fn with_kill(mut self, node: usize, from_rows: u64) -> Self {
+        self.kill_node = Some((node, from_rows));
+        self
+    }
+
+    /// Builder: partition `node` for `for_rows` dealt rows starting at
+    /// `from_rows`.
+    pub fn with_partition(mut self, node: usize, from_rows: u64, for_rows: u64) -> Self {
+        self.partition = Some((node, from_rows, for_rows));
+        self
+    }
+
+    /// Builder: delay every reply from `node` by `delay_ms`.
+    pub fn with_slow(mut self, node: usize, delay_ms: u64) -> Self {
+        self.slow_node = Some((node, delay_ms));
+        self
+    }
+
+    /// Builder: corrupt the first reply from `node` at or after
+    /// `at_rows` dealt rows.
+    pub fn with_corrupt_reply(mut self, node: usize, at_rows: u64) -> Self {
+        self.corrupt_reply = Some((node, at_rows));
+        self
+    }
+
+    /// Whether an exchange with `node` at dealt-row count `rows` is cut
+    /// off by the kill or partition schedule.
+    pub fn link_cut(&self, node: usize, rows: u64) -> bool {
+        if let Some((dead, from)) = self.kill_node {
+            if node == dead && rows >= from {
+                return true;
+            }
+        }
+        if let Some((part, from, span)) = self.partition {
+            if node == part && rows >= from && rows < from.saturating_add(span) {
+                return true;
+            }
+        }
+        false
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -112,6 +211,40 @@ mod tests {
         assert!((500..750).contains(&crash));
         assert!((20..60).contains(&a.stall_client_ms));
         assert!(a.tear_wal_on_crash);
+    }
+
+    #[test]
+    fn seeded_net_plans_are_deterministic_and_spread_over_distinct_nodes() {
+        let a = NetFaultPlan::seeded(42, 1000, 3);
+        assert_eq!(a, NetFaultPlan::seeded(42, 1000, 3));
+        assert_ne!(a, NetFaultPlan::seeded(43, 1000, 3));
+        let (killed, kill_at) = a.kill_node.unwrap();
+        let (partitioned, part_from, part_span) = a.partition.unwrap();
+        assert!(killed < 3 && partitioned < 3);
+        assert_ne!(killed, partitioned, "kill and partition must hit different nodes");
+        assert!((500..750).contains(&kill_at));
+        assert!(part_from >= 250 && part_span >= 2);
+        // The schedule drives link_cut: killed stays cut, partition heals.
+        assert!(a.link_cut(killed, kill_at));
+        assert!(a.link_cut(killed, kill_at + 10_000), "kill is permanent");
+        assert!(!a.link_cut(killed, kill_at - 1));
+        assert!(a.link_cut(partitioned, part_from));
+        assert!(!a.link_cut(partitioned, part_from + part_span), "partition heals");
+    }
+
+    #[test]
+    fn net_plan_builders_compose() {
+        let plan = NetFaultPlan::none()
+            .with_kill(0, 100)
+            .with_partition(1, 50, 25)
+            .with_slow(2, 7)
+            .with_corrupt_reply(1, 10);
+        assert_eq!(plan.kill_node, Some((0, 100)));
+        assert_eq!(plan.partition, Some((1, 50, 25)));
+        assert_eq!(plan.slow_node, Some((2, 7)));
+        assert_eq!(plan.corrupt_reply, Some((1, 10)));
+        assert!(plan.link_cut(1, 60) && !plan.link_cut(1, 80));
+        assert!(!plan.link_cut(2, 1_000_000));
     }
 
     #[test]

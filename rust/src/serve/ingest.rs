@@ -33,6 +33,14 @@
 //!   *before* it is dispatched; acknowledged rows therefore survive any
 //!   crash and [`ShardedIngest::recover`] replays them into a state
 //!   byte-identical to an uninterrupted run (see `serve::wal`).
+//! * **WAL rotation** (opt-in, [`ShardedIngest::enable_wal_rotation`]) —
+//!   the WAL is truncated under every durable checkpoint: the
+//!   checkpointed model becomes the *generation base* (merged into every
+//!   publish with weight = the rows it covers) and the lanes restart on
+//!   generation-derived seeds, so WAL size and replay cost stay bounded
+//!   by one publish cadence instead of the full stream history.
+//!   Recovery of a rotated run is byte-identical to the same rotated run
+//!   left uninterrupted.
 //! * **Fault injection** — [`ShardedIngest::fault_inject`] installs a
 //!   deterministic [`FaultPlan`] (worker panic at a row count, simulated
 //!   crash between WAL append and checkpoint); production entry points
@@ -235,6 +243,14 @@ pub struct ShardedIngest {
     wal_path: Option<PathBuf>,
     wal: Option<WalWriter>,
     checkpoint_path: Option<PathBuf>,
+    /// Rotate the WAL under every durable checkpoint (opt-in; see
+    /// [`ShardedIngest::enable_wal_rotation`]). Off by default so the
+    /// single-WAL full-replay lineage keeps its exact contract.
+    rotate_wal: bool,
+    /// Generation base: the last durable checkpoint's model and the rows
+    /// it covers. Present only in rotation mode after the first
+    /// rotation; merged into every publish with weight `rows`.
+    base_model: Option<(AnyModel, u64)>,
     faults: Option<FaultPlan>,
     /// Terminal failure (injected crash): every later call bails.
     failed: Option<String>,
@@ -326,6 +342,8 @@ impl ShardedIngest {
             wal_path: None,
             wal: None,
             checkpoint_path: None,
+            rotate_wal: false,
+            base_model: None,
             faults: None,
             failed: None,
             restarts: 0,
@@ -464,6 +482,91 @@ impl ShardedIngest {
     /// `path` after every publish, atomically (tmp + rename).
     pub fn checkpoint_at(&mut self, path: impl Into<PathBuf>) {
         self.checkpoint_path = Some(path.into());
+    }
+
+    /// Opt in to WAL rotation: after every durable checkpoint the WAL is
+    /// rotated to an empty generation based at the checkpointed row
+    /// count, the checkpointed model becomes the generation base merged
+    /// into every later publish (weight = rows it covers), and the lanes
+    /// restart on generation-derived seeds. Effective only when a
+    /// checkpoint path is set — rotation is anchored to the durable
+    /// checkpoint, never ahead of it. Off by default: rotation bounds
+    /// WAL growth and replay cost but makes the trained lineage
+    /// "base + current generation" instead of "all rows through the
+    /// lanes", a distinct (still fully deterministic) trajectory.
+    pub fn enable_wal_rotation(&mut self) {
+        self.rotate_wal = true;
+    }
+
+    /// Deterministic per-generation run configuration: generation 0 is
+    /// the configured run verbatim, later generations mix the durable
+    /// base row count (recorded in both the WAL v2 header and the
+    /// checkpoint) into the seed — so recovery, healing, and an
+    /// uninterrupted run all derive identical lane streams from disk
+    /// state alone.
+    fn generation_run(run: &RunConfig, base: u64) -> RunConfig {
+        if base == 0 {
+            run.clone()
+        } else {
+            run.clone().seed(run.seed ^ 0x9E37_79B9_7F4A_7C15u64.wrapping_mul(base))
+        }
+    }
+
+    /// Install fresh generation-seeded estimators in every lane and clear
+    /// the in-flight bookkeeping. Callers guarantee the lanes are drained
+    /// (the publish snapshot loop is a per-lane barrier).
+    fn reset_lanes_for_generation(&mut self, base: u64) -> Result<()> {
+        for s in 0..self.lanes.len() {
+            let fresh = AnyEstimator::new_shard(
+                self.solver,
+                self.config.clone(),
+                Self::generation_run(&self.run, base),
+                s,
+            )?;
+            let lane = &mut self.lanes[s];
+            while lane.acks.try_recv().is_ok() {}
+            lane.inflight.clear();
+            lane.poisoned.store(false, Ordering::SeqCst);
+            lane.worker.send(ShardCmd::Reset(Box::new(fresh)))?;
+        }
+        Ok(())
+    }
+
+    /// Recovery hook: adopt a checkpointed model as the generation base
+    /// covering `rows` rows, before any WAL-tail rows are replayed.
+    fn install_base(&mut self, model: AnyModel, rows: u64) -> Result<()> {
+        ensure!(self.rows_total == 0, "generation base must be installed before any ingest");
+        if self.dim == 0 {
+            self.dim = model.dim();
+        }
+        ensure!(
+            model.dim() == self.dim,
+            "checkpoint dimension {} does not match the stream dimension {}",
+            model.dim(),
+            self.dim
+        );
+        self.rows_total = rows;
+        self.base_model = Some((model, rows));
+        self.reset_lanes_for_generation(rows)
+    }
+
+    /// Start a new WAL generation under the checkpoint that was just
+    /// written: rotate the WAL to an empty segment based at the current
+    /// row count, adopt the just-published model as the new generation
+    /// base, and reseed the lanes. A no-op when the WAL is already based
+    /// here (empty generation), which makes recovery idempotent.
+    fn start_generation(&mut self) -> Result<()> {
+        let rows = self.rows_total;
+        match self.wal.as_mut() {
+            Some(wal) if wal.base_rows() != rows => wal.rotate(rows)?,
+            _ => return Ok(()),
+        }
+        let snap = self
+            .registry
+            .current()
+            .ok_or_else(|| anyhow!("cannot rotate the WAL without a published model"))?;
+        self.base_model = Some((snap.model().clone(), rows));
+        self.reset_lanes_for_generation(rows)
     }
 
     /// Install a deterministic fault schedule (test/bench hook; see
@@ -693,7 +796,13 @@ impl ShardedIngest {
             telemetry::emit("worker_restart", || {
                 vec![("shard", Json::num(s as f64))]
             });
-            let fresh = AnyEstimator::new_shard(self.solver, self.config.clone(), self.run.clone(), s)?;
+            let base = self.base_model.as_ref().map_or(0, |(_, rows)| *rows);
+            let fresh = AnyEstimator::new_shard(
+                self.solver,
+                self.config.clone(),
+                Self::generation_run(&self.run, base),
+                s,
+            )?;
             {
                 let lane = &mut self.lanes[s];
                 // Collect acks the worker sent before dying, so only the
@@ -720,7 +829,9 @@ impl ShardedIngest {
                 let nshards = self.lanes.len() as u64;
                 let mut mine = Dataset::empty(format!("heal-shard-{s}"), self.dim);
                 for i in 0..replayed.rows.len() {
-                    if (i as u64) % nshards == s as u64 {
+                    // Slice by *global* row index: a rotated WAL's frames
+                    // start at the generation base, not at row 0.
+                    if (replayed.base_rows + i as u64) % nshards == s as u64 {
                         mine.push_row(replayed.rows.row(i), replayed.rows.label(i));
                     }
                 }
@@ -788,6 +899,13 @@ impl ShardedIngest {
                 "a shard worker kept dying across {attempts} heal attempts"
             );
         }
+        // In rotation mode the generation base rides every merge with
+        // weight = the rows it covers, so the publish reflects the whole
+        // stream even though the lanes only hold the current generation.
+        if let Some((base, rows)) = &self.base_model {
+            models.insert(0, base.clone());
+            weights.insert(0, *rows as f64);
+        }
         ensure!(!models.is_empty(), "no shard has trained a model yet");
         let merged = {
             let _merge = telemetry::stage_span(Stage::ShardMerge);
@@ -828,6 +946,12 @@ impl ShardedIngest {
         if let Some(path) = self.checkpoint_path.clone() {
             if let Some(snap) = self.registry.current() {
                 wal::write_checkpoint(&path, snap.model(), self.rows_total, snap.version())?;
+                // Rotation rides the durable checkpoint: the rows it
+                // covers are now recoverable from the checkpoint alone,
+                // so the WAL no longer needs them.
+                if self.rotate_wal {
+                    self.start_generation()?;
+                }
             }
         }
         Ok(version)
@@ -893,6 +1017,16 @@ impl ShardedIngest {
     ///    to an uninterrupted run over the same acked rows.
     /// 3. The resumed WAL is re-attached so new rows keep appending, and
     ///    a fresh checkpoint is written.
+    ///
+    /// With `rotate` set the pair is interpreted as a rotating lineage:
+    /// the checkpointed model is installed as the generation base, only
+    /// the WAL frames **past** the checkpoint are replayed (the bounded
+    /// tail — replay cost no longer grows with stream age), and recovery
+    /// finishes by rotating the WAL under the fresh checkpoint. A crash
+    /// between checkpoint write and rotation (a *torn rotation*) leaves
+    /// the WAL one generation behind the checkpoint; the same skip logic
+    /// converges it, so torn and clean rotations recover identically.
+    /// Recovering a rotated WAL with `rotate` unset is a typed error.
     #[allow(clippy::too_many_arguments)]
     pub fn recover(
         solver: SolverSpec,
@@ -903,10 +1037,12 @@ impl ShardedIngest {
         registry: Arc<ModelRegistry>,
         wal_path: &Path,
         checkpoint_path: Option<&Path>,
+        rotate: bool,
     ) -> Result<(Self, RecoveryReport)> {
         let t0 = Instant::now();
         let mut checkpoint_rows = 0;
         let mut checkpoint_version = 0;
+        let mut checkpoint_model = None;
         if let Some(ckpt) = checkpoint_path {
             if ckpt.exists() {
                 let decoded = wal::read_checkpoint(ckpt)?;
@@ -914,14 +1050,48 @@ impl ShardedIngest {
                 checkpoint_version = decoded.version;
                 let mut model = decoded.model;
                 model.set_fast_exp(config.fast_exp);
+                if rotate {
+                    checkpoint_model = Some(model.clone());
+                }
                 registry.publish(model);
             }
         }
         let (wal_writer, replayed) = WalWriter::resume(wal_path)?;
         let mut pipeline =
             Self::with_solver(solver, config, run, shards, publish_every, registry)?;
-        if !replayed.rows.is_empty() {
-            pipeline.ingest(&replayed.rows)?;
+        pipeline.rotate_wal = rotate;
+        let mut skip = 0usize;
+        if let Some(model) = checkpoint_model {
+            ensure!(
+                checkpoint_rows >= replayed.base_rows,
+                "checkpoint covers {} rows but the WAL generation starts at {}",
+                checkpoint_rows,
+                replayed.base_rows
+            );
+            skip = (checkpoint_rows - replayed.base_rows) as usize;
+            ensure!(
+                skip <= replayed.rows.len(),
+                "checkpoint covers {} rows but the WAL only reaches {}",
+                checkpoint_rows,
+                replayed.base_rows + replayed.rows.len() as u64
+            );
+            pipeline.install_base(model, checkpoint_rows)?;
+        } else {
+            ensure!(
+                replayed.base_rows == 0,
+                "WAL was rotated (generation base {}); recover with rotation enabled and \
+                 the checkpoint that anchored it",
+                replayed.base_rows
+            );
+        }
+        let tail = if skip == 0 {
+            replayed.rows.clone()
+        } else {
+            let idx: Vec<usize> = (skip..replayed.rows.len()).collect();
+            replayed.rows.subset(&idx, "wal-tail")
+        };
+        if !tail.is_empty() {
+            pipeline.ingest(&tail)?;
             pipeline.publish_now()?;
         }
         pipeline.attach_wal(wal_writer)?;
@@ -931,10 +1101,13 @@ impl ShardedIngest {
                 if let Some(snap) = pipeline.registry.current() {
                     wal::write_checkpoint(ckpt, snap.model(), pipeline.rows_total, snap.version())?;
                 }
+                if rotate {
+                    pipeline.start_generation()?;
+                }
             }
         }
         let report = RecoveryReport {
-            wal_rows: replayed.rows.len() as u64,
+            wal_rows: tail.len() as u64,
             torn_tail_dropped: replayed.torn_tail,
             checkpoint_rows,
             checkpoint_version,
@@ -1350,6 +1523,7 @@ mod tests {
             Arc::clone(&reg2),
             &wal_path,
             Some(&ckpt_path),
+            false,
         )
         .unwrap();
         assert_eq!(rec.wal_rows, 160, "all acked rows survive, zero lost");
@@ -1378,6 +1552,257 @@ mod tests {
         std::fs::remove_file(&dump_ref).ok();
         std::fs::remove_file(&wal_path).ok();
         std::fs::remove_file(&ckpt_path).ok();
+    }
+
+    #[test]
+    fn rotated_wal_stays_bounded_and_crash_recovery_matches_the_uninterrupted_run() {
+        let ds = two_moons(360, 0.12, 37);
+        let config = || config_for(ds.len(), 30);
+        let run = RunConfig::new().seed(19);
+
+        // Reference: a rotated run over all 360 rows, never interrupted,
+        // with explicit publishes at 300 and 360 (the recovery below
+        // publishes at the same points).
+        let ref_wal = tmp("rot-ref.wal");
+        let ref_ckpt = tmp("rot-ref.ckpt");
+        std::fs::remove_file(&ref_wal).ok();
+        std::fs::remove_file(&ref_ckpt).ok();
+        let ref_reg = Arc::new(ModelRegistry::new());
+        let mut reference =
+            ShardedIngest::new(config(), run.clone(), 2, 100, Arc::clone(&ref_reg)).unwrap();
+        reference.enable_wal(&ref_wal).unwrap();
+        reference.checkpoint_at(&ref_ckpt);
+        reference.enable_wal_rotation();
+        let mut start = 0;
+        while start < 300 {
+            let idx: Vec<usize> = (start..start + 60).collect();
+            reference.ingest(&ds.subset(&idx, "chunk")).unwrap();
+            start += 60;
+        }
+        reference.publish_now().unwrap();
+        let idx: Vec<usize> = (300..360).collect();
+        reference.ingest(&ds.subset(&idx, "chunk")).unwrap();
+        reference.publish_now().unwrap();
+        reference.finish().unwrap();
+        // Rotation kept the WAL empty past the last checkpoint instead of
+        // holding all 360 frames.
+        let left = wal::replay(&ref_wal, None).unwrap();
+        assert_eq!(left.base_rows, 360);
+        assert!(left.rows.is_empty(), "rotated WAL must only hold the current generation");
+        let dump_ref = tmp("rot-ref.bsvm");
+        ref_reg.dump(&dump_ref).unwrap();
+
+        // Crashed run: same stream, torn-write crash at row 270 — after
+        // the rotation at 240, mid-generation.
+        let wal_path = tmp("rot-crash.wal");
+        let ckpt_path = tmp("rot-crash.ckpt");
+        std::fs::remove_file(&wal_path).ok();
+        std::fs::remove_file(&ckpt_path).ok();
+        let registry = Arc::new(ModelRegistry::new());
+        let mut ing =
+            ShardedIngest::new(config(), run.clone(), 2, 100, Arc::clone(&registry)).unwrap();
+        ing.enable_wal(&wal_path).unwrap();
+        ing.checkpoint_at(&ckpt_path);
+        ing.enable_wal_rotation();
+        ing.fault_inject(FaultPlan::none().with_crash_at_rows(270, true)).unwrap();
+        let mut start = 0;
+        let mut crashed = false;
+        while start < 300 {
+            let idx: Vec<usize> = (start..start + 60).collect();
+            if let Err(e) = ing.ingest(&ds.subset(&idx, "chunk")) {
+                assert!(crate::serve::faults::is_injected_crash(&e.to_string()));
+                crashed = true;
+                break;
+            }
+            start += 60;
+        }
+        assert!(crashed, "the fault plan must fire");
+        ing.finish().unwrap();
+
+        // Recover: only the generation tail (60 rows past the checkpoint
+        // at 240) replays — bounded, not the full 300-row history.
+        let reg2 = Arc::new(ModelRegistry::new());
+        let (mut recovered, rec) = ShardedIngest::recover(
+            SolverSpec::Bsgd,
+            config(),
+            run,
+            2,
+            100,
+            Arc::clone(&reg2),
+            &wal_path,
+            Some(&ckpt_path),
+            true,
+        )
+        .unwrap();
+        assert_eq!(rec.checkpoint_rows, 240);
+        assert_eq!(rec.wal_rows, 60, "only the generation tail replays");
+        assert!(rec.torn_tail_dropped, "the torn frame must be truncated");
+        assert_eq!(recovered.rows_ingested(), 300);
+        let idx: Vec<usize> = (300..360).collect();
+        recovered.ingest(&ds.subset(&idx, "chunk")).unwrap();
+        recovered.publish_now().unwrap();
+        recovered.finish().unwrap();
+        let dump_rec = tmp("rot-crash.bsvm");
+        reg2.dump(&dump_rec).unwrap();
+
+        assert_eq!(
+            std::fs::read(&dump_ref).unwrap(),
+            std::fs::read(&dump_rec).unwrap(),
+            "recovered rotated run must match the uninterrupted one byte for byte"
+        );
+        for p in [&ref_wal, &ref_ckpt, &dump_ref, &wal_path, &ckpt_path, &dump_rec] {
+            std::fs::remove_file(p).ok();
+        }
+    }
+
+    #[test]
+    fn a_torn_rotation_recovers_byte_identical_to_a_clean_rotation() {
+        // A crash between the checkpoint write and the WAL rotation
+        // leaves the WAL one generation behind the checkpoint. Before the
+        // first rotation the rotated and unrotated pipelines are
+        // bit-identical, so running with rotation *disabled* manufactures
+        // exactly that torn disk state: checkpoint at 100, WAL still
+        // holding all 100 frames at base 0.
+        let ds = two_moons(150, 0.12, 43);
+        let config = || config_for(ds.len(), 30);
+        let run = RunConfig::new().seed(29);
+        let first: Vec<usize> = (0..100).collect();
+        let extra: Vec<usize> = (100..150).collect();
+
+        let run_to_100 = |wal: &Path, ckpt: &Path, rotate: bool, registry: &Arc<ModelRegistry>| {
+            std::fs::remove_file(wal).ok();
+            std::fs::remove_file(ckpt).ok();
+            let mut ing =
+                ShardedIngest::new(config(), run.clone(), 2, 100, Arc::clone(registry)).unwrap();
+            ing.enable_wal(wal).unwrap();
+            ing.checkpoint_at(ckpt);
+            if rotate {
+                ing.enable_wal_rotation();
+            }
+            for half in first.chunks(50) {
+                ing.ingest(&ds.subset(half, "chunk")).unwrap();
+            }
+            ing
+        };
+
+        // Clean rotation, never interrupted: rotate at 100, train on.
+        let clean_wal = tmp("torn-clean.wal");
+        let clean_ckpt = tmp("torn-clean.ckpt");
+        let clean_reg = Arc::new(ModelRegistry::new());
+        let mut clean = run_to_100(&clean_wal, &clean_ckpt, true, &clean_reg);
+        clean.ingest(&ds.subset(&extra, "extra")).unwrap();
+        clean.publish_now().unwrap();
+        clean.finish().unwrap();
+        let dump_clean = tmp("torn-clean.bsvm");
+        clean_reg.dump(&dump_clean).unwrap();
+
+        // Torn rotation: checkpoint landed, rotation did not.
+        let torn_wal = tmp("torn.wal");
+        let torn_ckpt = tmp("torn.ckpt");
+        let torn_reg = Arc::new(ModelRegistry::new());
+        run_to_100(&torn_wal, &torn_ckpt, false, &torn_reg).finish().unwrap();
+        let before = wal::replay(&torn_wal, None).unwrap();
+        assert_eq!(
+            (before.base_rows, before.rows.len()),
+            (0, 100),
+            "torn state: the WAL is one generation behind the checkpoint"
+        );
+
+        // Recovery skips the 100 checkpoint-covered frames (nothing to
+        // replay) and converges the torn state by completing the
+        // rotation; the continued run is byte-identical to the clean one.
+        let reg2 = Arc::new(ModelRegistry::new());
+        let (mut recovered, rec) = ShardedIngest::recover(
+            SolverSpec::Bsgd,
+            config(),
+            run.clone(),
+            2,
+            100,
+            Arc::clone(&reg2),
+            &torn_wal,
+            Some(&torn_ckpt),
+            true,
+        )
+        .unwrap();
+        assert_eq!(rec.checkpoint_rows, 100);
+        assert_eq!(rec.wal_rows, 0, "checkpoint-covered frames are skipped, not replayed");
+        let after = wal::replay(&torn_wal, None).unwrap();
+        assert_eq!((after.base_rows, after.rows.len()), (100, 0), "rotation completed");
+        recovered.ingest(&ds.subset(&extra, "extra")).unwrap();
+        recovered.publish_now().unwrap();
+        recovered.finish().unwrap();
+        let dump_torn = tmp("torn.bsvm");
+        reg2.dump(&dump_torn).unwrap();
+
+        assert_eq!(
+            std::fs::read(&dump_clean).unwrap(),
+            std::fs::read(&dump_torn).unwrap(),
+            "torn-rotation recovery must be byte-identical to the clean rotation"
+        );
+        for p in [&clean_wal, &clean_ckpt, &dump_clean, &torn_wal, &torn_ckpt, &dump_torn] {
+            std::fs::remove_file(p).ok();
+        }
+    }
+
+    #[test]
+    fn recovering_a_rotated_wal_without_rotation_is_a_typed_error() {
+        let ds = two_moons(100, 0.12, 47);
+        let wal_path = tmp("rot-guard.wal");
+        let ckpt_path = tmp("rot-guard.ckpt");
+        std::fs::remove_file(&wal_path).ok();
+        std::fs::remove_file(&ckpt_path).ok();
+        let registry = Arc::new(ModelRegistry::new());
+        let mut ing = ShardedIngest::new(
+            config_for(ds.len(), 30),
+            RunConfig::new().seed(3),
+            2,
+            100,
+            Arc::clone(&registry),
+        )
+        .unwrap();
+        ing.enable_wal(&wal_path).unwrap();
+        ing.checkpoint_at(&ckpt_path);
+        ing.enable_wal_rotation();
+        ing.ingest(&ds).unwrap();
+        ing.finish().unwrap();
+
+        // The WAL is now based at 100; pretending rotation never existed
+        // must fail loudly instead of replaying a truncated history.
+        let err = ShardedIngest::recover(
+            SolverSpec::Bsgd,
+            config_for(ds.len(), 30),
+            RunConfig::new().seed(3),
+            2,
+            100,
+            Arc::new(ModelRegistry::new()),
+            &wal_path,
+            Some(&ckpt_path),
+            false,
+        )
+        .map(|_| ())
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("recover with rotation enabled"), "{err}");
+
+        // Same refusal when the rotated WAL has lost its checkpoint
+        // anchor: a generation base with nothing to rebuild it from.
+        std::fs::remove_file(&ckpt_path).unwrap();
+        let err = ShardedIngest::recover(
+            SolverSpec::Bsgd,
+            config_for(ds.len(), 30),
+            RunConfig::new().seed(3),
+            2,
+            100,
+            Arc::new(ModelRegistry::new()),
+            &wal_path,
+            None,
+            true,
+        )
+        .map(|_| ())
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("recover with rotation enabled"), "{err}");
+        std::fs::remove_file(&wal_path).ok();
     }
 
     #[test]
@@ -1439,6 +1864,7 @@ mod tests {
             registry,
             &missing,
             None,
+            false,
         );
         assert!(err.is_err());
     }

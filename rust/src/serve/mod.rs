@@ -3,7 +3,7 @@
 //! This is the first subsystem where training and prediction run
 //! *concurrently* on the same model lineage, and the first with an
 //! explicit failure domain: deadlines, admission control, crash-safe
-//! persistence, and a supervised worker pool. Six pieces compose it:
+//! persistence, and a supervised worker pool. Seven pieces compose it:
 //!
 //! * [`registry`] — [`ModelRegistry`]: an atomically hot-swappable,
 //!   monotonically versioned **bounded history** of immutable model
@@ -38,6 +38,10 @@
 //! * [`protocol`] — the line-oriented wire front end, with socket
 //!   read/write timeouts and bounded line buffering so a dead or
 //!   malicious client can never pin a session thread.
+//! * [`cluster`] — the multi-node tier: a coordinator that deals acked
+//!   train rows to remote shard nodes over the same wire protocol,
+//!   merges their snapshots, and fans predict traffic over the replicas
+//!   with failover. See the fault-tolerance contract below.
 //!
 //! # Wire protocol (v1, line-oriented UTF-8 — see [`protocol`])
 //!
@@ -49,6 +53,9 @@
 //! flush                      -> ok published v<version>
 //! stats                      -> ok <json>
 //! metrics                    -> ok <json>            (telemetry registry snapshot)
+//! health                     -> ok <version> <ingested-rows>   (heartbeat probe)
+//! snapshot                   -> ok <version> <ingested-rows> <hex>  (model pull)
+//! snapshot load <ver> <hex>  -> ok loaded <ver>      (replica re-sync push)
 //! quit                       -> ok bye              (connection closes)
 //! anything else              -> err <message>
 //! ```
@@ -79,6 +86,45 @@
 //! largest index of the first valid `train` line) and every later row
 //! must fit inside it.
 //!
+//! # Multi-node fault-tolerance contract (see [`cluster`])
+//!
+//! `repro serve --coordinator --nodes host:port,...` runs this process
+//! as a **coordinator** over `N` ordinary serve nodes. The topology is
+//! a star: clients speak the same v1 wire protocol to the coordinator,
+//! which deals `train` rows to the nodes, pulls and merges their
+//! snapshots, and routes `predict` over the node replicas. The contract
+//! the tier upholds, in order of what it costs to break:
+//!
+//! * **No acked row is lost to a node death.** A node's `ok` is the
+//!   client's ack, and nodes run with a WAL, so an acked row is durable
+//!   on the node that acked it; a killed node's rows are recovered by
+//!   WAL replay (`--recover`). Rows dealt to a node that dies *before*
+//!   acking are re-dealt to survivors — **at-least-once**: a node that
+//!   applied a row whose ack was lost may replay it as a duplicate, and
+//!   the coordinator never deals an acked sequence number twice.
+//! * **Node loss degrades, never stops, the tier.** Every
+//!   coordinator↔node exchange runs under the client side of the
+//!   io-timeout plus a seeded equal-jitter backoff with a bounded retry
+//!   budget ([`crate::util::backoff`]). Budget exhaustion feeds a
+//!   per-node state machine `up → suspect → down → rejoining → up`
+//!   ([`cluster::NodeHealth`]) driven by `health` heartbeat probes; a
+//!   down node is out of both the deal and the predict rotations until
+//!   probes succeed again.
+//! * **A rejoining node never serves stale models.** Before readmission
+//!   the coordinator pushes its latest merged model (`snapshot load`) —
+//!   only a confirmed push (or having nothing merged yet) flips the
+//!   node back to up.
+//! * **Predict availability beats freshness.** Predicts fail over
+//!   sequentially across up replicas; with every replica down the
+//!   coordinator answers from its own last merged model. Failovers are
+//!   counted (`budgetsvm_failovers_total`), never silent.
+//! * **Deterministic under a seeded schedule.** Fault injection at the
+//!   network layer ([`faults::NetFaultPlan`]) is keyed on the
+//!   coordinator's dealt-row clock, never wall time, so a cluster
+//!   scenario (kill + partition mid-ingest) replays identically —
+//!   `repro bench --resilience --nodes N` gates zero acked-row loss and
+//!   byte-identical merged models across two runs of the same seed.
+//!
 //! # Ingest admission ladder (degradation order)
 //!
 //! ```text
@@ -102,7 +148,11 @@
 //!   ([`ShardedIngest::recover`], `repro serve --recover`) replays the
 //!   *entire* WAL through a fresh deterministic pipeline. The checkpoint
 //!   (registry incumbent + rows covered, atomically written) only
-//!   provides instant availability while replay runs.
+//!   provides instant availability while replay runs — except under
+//!   **rotation** (`--wal-rotate`), where segments older than the last
+//!   durable checkpoint are truncated away, the checkpoint model becomes
+//!   the generation base (merged into every publish, weighted by the
+//!   rows it covers), and replay covers only the tail since rotation.
 //! * **Byte-identity**: deterministic per-shard seeds, round-robin
 //!   partitioning by global row index, and batch-boundary invariance make
 //!   the recovered state byte-identical (`BSVMMDL2` dump) to an
@@ -217,6 +267,7 @@
 //! with monotonic `ts_ns` timestamps for offline timeline reconstruction.
 
 pub mod batcher;
+pub mod cluster;
 pub mod faults;
 pub mod ingest;
 pub mod merge;
@@ -227,7 +278,11 @@ pub mod wal;
 pub use batcher::{
     BatcherClient, BatcherOptions, BatcherStats, MicroBatcher, PredictError, PredictReply,
 };
-pub use faults::{FaultPlan, WorkerPanic};
+pub use cluster::{
+    canonical_train_line, run_coordinator_tcp, ClusterCoordinator, ClusterStats, NodeHealth,
+    NodeLink, NodeState,
+};
+pub use faults::{FaultPlan, NetFaultPlan, WorkerPanic};
 pub use ingest::{
     Admission, IngestHealth, IngestReport, RecoveryReport, ShardedIngest,
 };
@@ -281,7 +336,8 @@ pub struct ServeConfig {
     /// budget get a typed overloaded reply. 0 = no deadline.
     pub predict_deadline_ms: u64,
     /// Socket read/write timeout in seconds; an idle or stalled client is
-    /// disconnected after this long. 0 = no timeout.
+    /// disconnected after this long, and the same budget bounds every
+    /// coordinator↔node exchange in cluster mode. 0 = no timeout.
     pub io_timeout_secs: u64,
     /// Directory for the WAL + checkpoint pair (crash-safe persistence).
     /// `None` = volatile ingest (no WAL, no checkpoint).
@@ -289,6 +345,18 @@ pub struct ServeConfig {
     /// Recover from the `wal_dir` pair at startup instead of starting
     /// fresh (requires `wal_dir`).
     pub recover: bool,
+    /// Rotate the WAL at every durable checkpoint (`--wal-rotate`):
+    /// segments older than the checkpoint are truncated away and the
+    /// checkpoint model becomes the generation base, keeping WAL size
+    /// proportional to the checkpoint cadence instead of the stream
+    /// length (requires `wal_dir`).
+    pub wal_rotate: bool,
+    /// Run as a cluster coordinator (`--coordinator`): deal train rows
+    /// to the `nodes`, merge their snapshots, route predicts over them.
+    pub coordinator: bool,
+    /// Cluster node addresses (`--nodes host:port,...`), coordinator
+    /// mode only.
+    pub nodes: Vec<String>,
     /// Gate publishes through shadow evaluation against the incumbent
     /// over live predict traffic.
     pub shadow_eval: bool,
@@ -321,6 +389,9 @@ impl Default for ServeConfig {
             io_timeout_secs: 0,
             wal_dir: None,
             recover: false,
+            wal_rotate: false,
+            coordinator: false,
+            nodes: Vec::new(),
             shadow_eval: false,
             history: registry::DEFAULT_HISTORY,
             metrics_port: 0,
@@ -345,6 +416,25 @@ impl ServeConfig {
             !self.recover || self.wal_dir.is_some(),
             "--recover needs --wal-dir (nothing to recover from)"
         );
+        ensure!(
+            !self.wal_rotate || self.wal_dir.is_some(),
+            "--wal-rotate needs --wal-dir (nothing to rotate)"
+        );
+        ensure!(
+            !self.coordinator || !self.nodes.is_empty(),
+            "--coordinator needs --nodes host:port,... (no cluster to coordinate)"
+        );
+        ensure!(
+            self.nodes.is_empty() || self.coordinator,
+            "--nodes only makes sense with --coordinator"
+        );
+        for addr in &self.nodes {
+            ensure!(
+                addr.rsplit_once(':')
+                    .is_some_and(|(h, p)| !h.is_empty() && p.parse::<u16>().is_ok()),
+                "bad node address '{addr}' (want host:port)"
+            );
+        }
         self.svm.validate()?;
         ensure!(
             self.svm.budget >= 2,
@@ -365,6 +455,22 @@ mod tests {
     }
 
     #[test]
+    fn coordinator_config_validates_with_well_formed_nodes() {
+        let cfg = ServeConfig {
+            coordinator: true,
+            nodes: vec!["127.0.0.1:9001".into(), "10.0.0.7:9002".into()],
+            ..Default::default()
+        };
+        cfg.validate().unwrap();
+        let rotated = ServeConfig {
+            wal_rotate: true,
+            wal_dir: Some("/tmp/wal".into()),
+            ..Default::default()
+        };
+        rotated.validate().unwrap();
+    }
+
+    #[test]
     fn serve_config_rejects_degenerate_knobs() {
         for bad in [
             ServeConfig { shards: 0, ..Default::default() },
@@ -373,6 +479,19 @@ mod tests {
             ServeConfig { ingest_chunk: 0, ..Default::default() },
             ServeConfig { history: 0, ..Default::default() },
             ServeConfig { recover: true, wal_dir: None, ..Default::default() },
+            ServeConfig { wal_rotate: true, wal_dir: None, ..Default::default() },
+            ServeConfig { coordinator: true, ..Default::default() },
+            ServeConfig { nodes: vec!["127.0.0.1:9000".into()], ..Default::default() },
+            ServeConfig {
+                coordinator: true,
+                nodes: vec!["127.0.0.1:bad".into()],
+                ..Default::default()
+            },
+            ServeConfig {
+                coordinator: true,
+                nodes: vec![":9000".into()],
+                ..Default::default()
+            },
             ServeConfig {
                 svm: SvmConfig::new().budget(1),
                 ..Default::default()

@@ -172,7 +172,7 @@ impl ServeState {
 /// into a dense row of dimension `d`. Values must be finite — NaN or
 /// infinite literals poison every downstream kernel evaluation, so they
 /// are rejected at the wire.
-fn parse_features<'a>(
+pub(crate) fn parse_features<'a>(
     tokens: impl Iterator<Item = &'a str>,
     d: usize,
 ) -> Result<Vec<f32>, String> {
@@ -355,8 +355,96 @@ fn dispatch(state: &ServeState, line: &str) -> Result<String, String> {
             // protocol.
             Ok(format!("ok {}", metrics_registry::snapshot().to_json()))
         }
+        "health" => {
+            // Heartbeat probe (cluster coordinator → node): cheap, no
+            // locks beyond the ingest front, answers even with no model.
+            if parts.next().is_some() {
+                return Err("health takes no arguments".to_string());
+            }
+            let ingested = {
+                let front = state.ingest.lock().expect("ingest lock poisoned");
+                front.pipeline.as_ref().map(|p| p.rows_ingested()).unwrap_or(0)
+            };
+            Ok(format!("ok {} {}", state.registry.version(), ingested))
+        }
+        "snapshot" => match parts.next() {
+            // `snapshot` — pull the incumbent model as hex-encoded
+            // BSVMMDL2 bytes (`ok <version> <ingested-rows> <hex>`), the
+            // coordinator's merge input. Budgeted models are small by
+            // construction (the budget bounds the SV set), which is what
+            // makes a hex line under [`MAX_LINE_BYTES`] a workable
+            // transfer unit.
+            None => {
+                let snap = state.registry.current().ok_or("no model published yet")?;
+                let mut bytes = Vec::new();
+                crate::model::io::save_any_writer(snap.model(), &mut bytes)
+                    .map_err(|e| e.to_string())?;
+                let ingested = {
+                    let front = state.ingest.lock().expect("ingest lock poisoned");
+                    front.pipeline.as_ref().map(|p| p.rows_ingested()).unwrap_or(0)
+                };
+                Ok(format!("ok {} {} {}", snap.version(), ingested, hex_encode(&bytes)))
+            }
+            // `snapshot load <version> <hex>` — push a merged model into
+            // this node's registry (coordinator → replica re-sync). The
+            // version token is the coordinator's stamp, echoed back; the
+            // registry assigns its own strictly monotonic local version.
+            Some("load") => {
+                let ver_tok = parts.next().ok_or("snapshot load takes <version> <hex>")?;
+                let coord_version: u64 = ver_tok
+                    .parse()
+                    .map_err(|_| format!("bad snapshot version '{ver_tok}'"))?;
+                let hex = parts.next().ok_or("snapshot load takes <version> <hex>")?;
+                if parts.next().is_some() {
+                    return Err("snapshot load takes <version> <hex>".to_string());
+                }
+                let bytes = hex_decode(hex)?;
+                let model = crate::model::io::load_any_reader(&bytes[..])
+                    .map_err(|e| format!("bad snapshot payload: {e}"))?;
+                let dim = model.dim();
+                state.registry.publish(model);
+                state.dim.store(dim, Ordering::Relaxed);
+                {
+                    let mut front = state.ingest.lock().expect("ingest lock poisoned");
+                    if front.dim == 0 {
+                        front.dim = dim;
+                    }
+                }
+                Ok(format!("ok loaded {coord_version}"))
+            }
+            Some(other) => Err(format!("unknown snapshot subcommand '{other}'")),
+        },
         other => Err(format!("unknown command '{other}'")),
     }
+}
+
+/// Lowercase hex of `bytes` (the wire form of snapshot payloads — no
+/// base64 in a dependency-free tree, and hex keeps the line printable).
+pub(crate) fn hex_encode(bytes: &[u8]) -> String {
+    let mut s = String::with_capacity(bytes.len() * 2);
+    for b in bytes {
+        s.push_str(&format!("{b:02x}"));
+    }
+    s
+}
+
+/// Inverse of [`hex_encode`]; malformed input is a typed wire error.
+pub(crate) fn hex_decode(s: &str) -> Result<Vec<u8>, String> {
+    if s.len() % 2 != 0 {
+        return Err("hex payload has odd length".to_string());
+    }
+    let b = s.as_bytes();
+    let mut out = Vec::with_capacity(b.len() / 2);
+    for pair in b.chunks_exact(2) {
+        let hi = (pair[0] as char)
+            .to_digit(16)
+            .ok_or_else(|| "bad hex digit in snapshot payload".to_string())?;
+        let lo = (pair[1] as char)
+            .to_digit(16)
+            .ok_or_else(|| "bad hex digit in snapshot payload".to_string())?;
+        out.push(((hi << 4) | lo) as u8);
+    }
+    Ok(out)
 }
 
 /// The pinned telemetry summary carried by the `stats` payload: the
@@ -397,6 +485,16 @@ fn telemetry_summary() -> Json {
             Json::num(metrics_registry::counter_value(Counter::ShadowRejected) as f64),
         ),
         ("simd_tier", Json::str(crate::kernel::simd::active().name())),
+        ("nodes_up", Json::num(metrics_registry::gauge_value(Gauge::NodesUp) as f64)),
+        (
+            "rows_redealt",
+            Json::num(metrics_registry::counter_value(Counter::RowsRedealt) as f64),
+        ),
+        ("failovers", Json::num(metrics_registry::counter_value(Counter::Failovers) as f64)),
+        (
+            "heartbeat_p99_ns",
+            Json::num(metrics_registry::stage_snapshot(Stage::Heartbeat).quantile(0.99) as f64),
+        ),
     ])
 }
 
@@ -405,7 +503,7 @@ fn telemetry_summary() -> Json {
 /// consumed through the terminating newline (keeping the stream
 /// line-synchronized) but never buffered — memory stays bounded no
 /// matter what the peer sends.
-fn read_bounded_line<R: BufRead>(
+pub(crate) fn read_bounded_line<R: BufRead>(
     reader: &mut R,
     max: usize,
 ) -> std::io::Result<Option<(Vec<u8>, bool)>> {
@@ -788,9 +886,13 @@ mod tests {
             "admission_reject",
             "admission_shed",
             "deadline_expired",
+            "failovers",
+            "heartbeat_p99_ns",
+            "nodes_up",
             "publishes",
             "queue_depth",
             "rollbacks",
+            "rows_redealt",
             "shadow_rejected",
             "simd_tier",
             "wal_append_p99_ns",
@@ -844,6 +946,72 @@ mod tests {
         for stage in crate::telemetry::Stage::ALL {
             assert!(stages.contains_key(stage.key()), "stage {} missing", stage.key());
         }
+    }
+
+    #[test]
+    fn health_answers_version_and_ingested_rows() {
+        let reg = registry_with_toy_model();
+        let (state, _batcher) = predict_only_state(reg);
+        // Predict-only server: version 1, zero ingested rows.
+        assert_eq!(handle_line(&state, "health"), "ok 1 0");
+    }
+
+    #[test]
+    fn snapshot_round_trips_a_model_through_hex() {
+        let reg = registry_with_toy_model();
+        let expect = {
+            let mut bytes = Vec::new();
+            crate::model::io::save_any_writer(reg.current().unwrap().model(), &mut bytes)
+                .unwrap();
+            bytes
+        };
+        let (state, _batcher) = predict_only_state(Arc::clone(&reg));
+        let resp = handle_line(&state, "snapshot");
+        let mut toks = resp.split_whitespace();
+        assert_eq!(toks.next(), Some("ok"));
+        assert_eq!(toks.next(), Some("1"), "version");
+        assert_eq!(toks.next(), Some("0"), "ingested rows");
+        let hex = toks.next().expect("hex payload");
+        assert!(toks.next().is_none());
+        assert_eq!(hex_decode(hex).unwrap(), expect, "hex round-trip drifted");
+        // Pushing the snapshot back publishes a fresh local version and
+        // echoes the coordinator's stamp.
+        assert_eq!(handle_line(&state, &format!("snapshot load 7 {hex}")), "ok loaded 7");
+        assert_eq!(reg.version(), 2);
+        assert!(handle_line(&state, "predict 1:1").starts_with("ok "));
+    }
+
+    /// Satellite: malformed `health`/`snapshot` input answers `err` on
+    /// that line only — the session survives, it is never disconnected.
+    #[test]
+    fn health_and_snapshot_answer_err_not_disconnect_on_malformed_input() {
+        let reg = registry_with_toy_model();
+        let (state, _batcher) = predict_only_state(reg);
+        let good_hex = {
+            let resp = handle_line(&state, "snapshot");
+            resp.split_whitespace().nth(3).unwrap().to_string()
+        };
+        for bad in [
+            "health extra".to_string(),
+            "snapshot bogus".to_string(),
+            "snapshot load".to_string(),
+            "snapshot load 1".to_string(),
+            "snapshot load x aabb".to_string(),
+            "snapshot load 1 zz".to_string(),
+            "snapshot load 1 abc".to_string(), // odd-length hex
+            "snapshot load 1 aabbcc".to_string(), // hex fine, bytes not a model
+            format!("snapshot load 1 {good_hex} trailing"),
+        ] {
+            let resp = handle_line(&state, &bad);
+            assert!(resp.starts_with("err "), "{bad} -> {resp}");
+        }
+        // No model published on a fresh registry: snapshot pull errors.
+        let empty = Arc::new(ModelRegistry::new());
+        let (empty_state, _b2) = predict_only_state(empty);
+        assert!(handle_line(&empty_state, "snapshot").starts_with("err "));
+        // The original session still serves after every bad line.
+        assert!(handle_line(&state, "health").starts_with("ok "));
+        assert!(handle_line(&state, "predict 1:1").starts_with("ok "));
     }
 
     #[test]

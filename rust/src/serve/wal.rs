@@ -23,12 +23,30 @@
 //!   frame (reporting it) and [`WalWriter::resume`] truncates it away —
 //!   only unacknowledged bytes are ever dropped.
 //!
+//! ## Rotation (generations)
+//!
+//! Without rotation the WAL grows without bound across checkpoints.
+//! [`WalWriter::rotate`] — called under a just-written durable
+//! checkpoint — atomically replaces the file with an empty
+//! **generation** segment whose header records how many rows the
+//! checkpoint covers (`base_rows`). The logical row count
+//! ([`WalWriter::rows`] = base + frames) never moves backwards, so the
+//! pipeline's accounting invariants hold across rotations, and replay
+//! reports the base so recovery can place surviving frames at their
+//! global row indices. Rotation is atomic (tmp + rename): a crash
+//! anywhere inside it leaves either the old segment (plus a stray tmp
+//! the next rotation truncates) or the new one — never a torn WAL.
+//!
 //! ## File formats
 //!
-//! WAL: magic `BSVMWAL1`, u64 LE dimension, then frames of
+//! WAL v1: magic `BSVMWAL1`, u64 LE dimension, then frames of
 //! `u32 LE len | u32 LE crc32(payload) | payload` where the payload is
 //! `f32 LE label` followed by `dim` `f32 LE` features (`len` must equal
 //! `4·(dim+1)`, which bounds every allocation during replay).
+//!
+//! WAL v2 (rotated generations): magic `BSVMWAL2`, u64 LE dimension,
+//! u64 LE base_rows, then the same frame stream. A v1 file reads as
+//! base 0.
 //!
 //! Checkpoint: magic `BSVMCKP1`, u64 LE rows_covered, u64 LE version,
 //! u64 LE model_len, u32 LE crc32(model bytes), then the `BSVMMDL2`
@@ -44,6 +62,7 @@ use crate::data::Dataset;
 use crate::model::{io as model_io, AnyModel};
 
 const WAL_MAGIC: &[u8; 8] = b"BSVMWAL1";
+const WAL_MAGIC_V2: &[u8; 8] = b"BSVMWAL2";
 const CKPT_MAGIC: &[u8; 8] = b"BSVMCKP1";
 
 /// Default WAL file name under a persistence directory.
@@ -95,7 +114,11 @@ pub struct WalWriter {
     file: File,
     path: PathBuf,
     dim: usize,
+    /// Logical rows acked through this WAL lineage: generation base
+    /// plus frames in the current segment.
     rows: u64,
+    /// Rows rotated away into the current segment's header base.
+    base: u64,
 }
 
 impl WalWriter {
@@ -110,7 +133,7 @@ impl WalWriter {
         file.write_all(WAL_MAGIC)?;
         file.write_all(&(dim as u64).to_le_bytes())?;
         file.sync_data().context("WAL header sync failed")?;
-        Ok(WalWriter { file, path, dim, rows: 0 })
+        Ok(WalWriter { file, path, dim, rows: 0, base: 0 })
     }
 
     /// Reopen an existing WAL for appending: validates the header, scans
@@ -130,8 +153,9 @@ impl WalWriter {
         file.set_len(replayed.valid_bytes).context("WAL tail truncation failed")?;
         file.seek(SeekFrom::End(0))?;
         file.sync_data().context("WAL truncation sync failed")?;
-        let rows = replayed.rows.len() as u64;
-        Ok((WalWriter { file, path, dim, rows }, replayed))
+        let base = replayed.base_rows;
+        let rows = base + replayed.rows.len() as u64;
+        Ok((WalWriter { file, path, dim, rows, base }, replayed))
     }
 
     /// The file this writer appends to.
@@ -139,15 +163,57 @@ impl WalWriter {
         &self.path
     }
 
-    /// Rows framed and synced so far (including rows already in the file
-    /// when the writer was resumed).
+    /// Logical rows acked through this WAL lineage: rows already in the
+    /// file (or resumed) plus rows rotated away into the generation
+    /// base. Never moves backwards, even across [`Self::rotate`].
     pub fn rows(&self) -> u64 {
         self.rows
+    }
+
+    /// Rows covered by the generation base (0 until the first rotation).
+    pub fn base_rows(&self) -> u64 {
+        self.base
     }
 
     /// Row dimension of this WAL.
     pub fn dim(&self) -> usize {
         self.dim
+    }
+
+    /// Rotate the WAL under a just-written durable checkpoint covering
+    /// `base_rows` rows: atomically replace the file with an empty v2
+    /// generation segment whose header carries `base_rows`, dropping
+    /// every frame the checkpoint already covers. `base_rows` must equal
+    /// the current logical row count — rotating under an older
+    /// checkpoint would drop acked rows the checkpoint does not cover.
+    pub fn rotate(&mut self, base_rows: u64) -> Result<()> {
+        ensure!(
+            base_rows == self.rows,
+            "rotation base {base_rows} must cover every acked row (have {})",
+            self.rows
+        );
+        let tmp = self.path.with_extension("wal.tmp");
+        let mut header = Vec::with_capacity(24);
+        header.extend_from_slice(WAL_MAGIC_V2);
+        header.extend_from_slice(&(self.dim as u64).to_le_bytes());
+        header.extend_from_slice(&base_rows.to_le_bytes());
+        {
+            let mut f = File::create(&tmp)
+                .with_context(|| format!("cannot create WAL rotation tmp {}", tmp.display()))?;
+            f.write_all(&header).context("WAL rotation header write failed")?;
+            f.sync_data().context("WAL rotation sync failed")?;
+        }
+        std::fs::rename(&tmp, &self.path)
+            .with_context(|| format!("cannot install rotated WAL {}", self.path.display()))?;
+        let mut file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .open(&self.path)
+            .with_context(|| format!("cannot reopen rotated WAL {}", self.path.display()))?;
+        file.seek(SeekFrom::End(0))?;
+        self.file = file;
+        self.base = base_rows;
+        Ok(())
     }
 
     /// Frame and durably append every row of `batch`. One buffered write
@@ -206,13 +272,17 @@ impl WalWriter {
 /// What a WAL scan recovered.
 #[derive(Debug)]
 pub struct WalReplay {
-    /// Every fully-framed, CRC-valid row, in append order.
+    /// Every fully-framed, CRC-valid row, in append order. The global
+    /// row index of `rows[i]` is `base_rows + i`.
     pub rows: Dataset,
     /// Whether the scan stopped at a torn/corrupt tail frame.
     pub torn_tail: bool,
     /// File offset just past the last valid frame (the truncation point
     /// for [`WalWriter::resume`]).
     pub valid_bytes: u64,
+    /// Rows rotated away into this generation's header base (0 for a
+    /// v1 segment).
+    pub base_rows: u64,
 }
 
 /// Scan a WAL file: header, then frames until EOF or the first torn or
@@ -228,16 +298,27 @@ pub fn replay(path: impl AsRef<Path>, expect_dim: Option<usize>) -> Result<WalRe
         .read_to_end(&mut bytes)
         .with_context(|| format!("cannot read WAL {}", path.display()))?;
     ensure!(bytes.len() >= 16, "WAL {} is shorter than its header", path.display());
-    ensure!(&bytes[..8] == WAL_MAGIC, "not a budgetsvm WAL (bad magic): {}", path.display());
+    let v2 = &bytes[..8] == WAL_MAGIC_V2;
+    ensure!(
+        v2 || &bytes[..8] == WAL_MAGIC,
+        "not a budgetsvm WAL (bad magic): {}",
+        path.display()
+    );
     let dim64 = u64::from_le_bytes(bytes[8..16].try_into().unwrap());
     ensure!(dim64 > 0 && dim64 <= MAX_WAL_DIM, "implausible WAL dimension {dim64}");
     let dim = dim64 as usize;
     if let Some(d) = expect_dim {
         ensure!(d == dim, "WAL dimension {dim} does not match the expected dimension {d}");
     }
+    let (base_rows, header_len) = if v2 {
+        ensure!(bytes.len() >= 24, "WAL {} is shorter than its v2 header", path.display());
+        (u64::from_le_bytes(bytes[16..24].try_into().unwrap()), 24usize)
+    } else {
+        (0u64, 16usize)
+    };
     let frame_len = 4 * (dim + 1);
     let mut rows = Dataset::empty("wal-replay", dim);
-    let mut pos = 16usize;
+    let mut pos = header_len;
     let mut torn = false;
     let mut row = vec![0.0f32; dim];
     while pos < bytes.len() {
@@ -259,7 +340,7 @@ pub fn replay(path: impl AsRef<Path>, expect_dim: Option<usize>) -> Result<WalRe
         rows.push_row(&row, label);
         pos += 8 + frame_len;
     }
-    Ok(WalReplay { rows, torn_tail: torn, valid_bytes: pos as u64 })
+    Ok(WalReplay { rows, torn_tail: torn, valid_bytes: pos as u64, base_rows })
 }
 
 /// One decoded checkpoint.
@@ -435,7 +516,67 @@ mod tests {
         huge.extend_from_slice(&u64::MAX.to_le_bytes());
         std::fs::write(&path, &huge).unwrap();
         assert!(replay(&path, None).is_err(), "absurd dimension must not drive allocations");
+        // A v2 segment cut off before its base field is a bad header,
+        // not a torn tail.
+        let mut short_v2 = Vec::new();
+        short_v2.extend_from_slice(WAL_MAGIC_V2);
+        short_v2.extend_from_slice(&2u64.to_le_bytes());
+        std::fs::write(&path, &short_v2).unwrap();
+        assert!(replay(&path, None).is_err());
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rotation_drops_covered_frames_but_preserves_logical_accounting() {
+        let path = tmp("rotate.wal");
+        let mut w = WalWriter::create(&path, 2).unwrap();
+        w.append_rows(&toy_batch(5, 2, 1.0)).unwrap();
+        w.rotate(5).unwrap();
+        assert_eq!(w.rows(), 5, "rotation never moves the logical count");
+        assert_eq!(w.base_rows(), 5);
+        let back = replay(&path, Some(2)).unwrap();
+        assert_eq!(back.base_rows, 5);
+        assert_eq!(back.rows.len(), 0, "frames under the checkpoint are gone");
+        assert!(!back.torn_tail);
+        // Appends continue in the new generation; resume sees base + tail.
+        let fresh = toy_batch(3, 2, 4.0);
+        w.append_rows(&fresh).unwrap();
+        assert_eq!(w.rows(), 8);
+        drop(w);
+        let (mut w, replayed) = WalWriter::resume(&path).unwrap();
+        assert_eq!(replayed.base_rows, 5);
+        assert_eq!(replayed.rows.len(), 3);
+        assert_eq!(replayed.rows.row(0), fresh.row(0));
+        assert_eq!(w.rows(), 8);
+        // A rotation base under the logical count would drop acked rows
+        // the checkpoint does not cover — refused.
+        assert!(w.rotate(5).is_err());
+        w.rotate(8).unwrap();
+        assert_eq!(replay(&path, Some(2)).unwrap().base_rows, 8);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn a_stray_rotation_tmp_never_confuses_resume() {
+        // Crash between writing the rotation tmp and the rename: the old
+        // segment is still the installed WAL; the tmp is garbage the
+        // next rotation truncates.
+        let path = tmp("rotate-torn.wal");
+        let mut w = WalWriter::create(&path, 2).unwrap();
+        w.append_rows(&toy_batch(4, 2, 2.0)).unwrap();
+        let tmp_path = path.with_extension("wal.tmp");
+        let mut header = Vec::new();
+        header.extend_from_slice(WAL_MAGIC_V2);
+        header.extend_from_slice(&2u64.to_le_bytes());
+        header.extend_from_slice(&4u64.to_le_bytes());
+        std::fs::write(&tmp_path, &header).unwrap();
+        drop(w);
+        let (w, replayed) = WalWriter::resume(&path).unwrap();
+        assert_eq!(replayed.base_rows, 0, "the old generation stays authoritative");
+        assert_eq!(replayed.rows.len(), 4);
+        assert_eq!(w.rows(), 4);
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(&tmp_path).ok();
     }
 
     #[test]

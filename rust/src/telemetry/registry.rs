@@ -39,9 +39,11 @@ pub enum Counter {
     ShadowRejected,
     MaintenanceEvents,
     DeferredPublishes,
+    RowsRedealt,
+    Failovers,
 }
 
-pub const N_COUNTERS: usize = 11;
+pub const N_COUNTERS: usize = 13;
 
 impl Counter {
     pub const ALL: [Counter; N_COUNTERS] = [
@@ -56,6 +58,8 @@ impl Counter {
         Counter::ShadowRejected,
         Counter::MaintenanceEvents,
         Counter::DeferredPublishes,
+        Counter::RowsRedealt,
+        Counter::Failovers,
     ];
 
     pub fn key(self) -> &'static str {
@@ -71,6 +75,8 @@ impl Counter {
             Counter::ShadowRejected => "budgetsvm_shadow_rejected_total",
             Counter::MaintenanceEvents => "budgetsvm_maintenance_events_total",
             Counter::DeferredPublishes => "budgetsvm_deferred_publishes_total",
+            Counter::RowsRedealt => "budgetsvm_rows_redealt_total",
+            Counter::Failovers => "budgetsvm_failovers_total",
         }
     }
 }
@@ -81,18 +87,21 @@ pub enum Gauge {
     QueueDepth,
     ModelVersion,
     ModelNumSv,
+    NodesUp,
 }
 
-pub const N_GAUGES: usize = 3;
+pub const N_GAUGES: usize = 4;
 
 impl Gauge {
-    pub const ALL: [Gauge; N_GAUGES] = [Gauge::QueueDepth, Gauge::ModelVersion, Gauge::ModelNumSv];
+    pub const ALL: [Gauge; N_GAUGES] =
+        [Gauge::QueueDepth, Gauge::ModelVersion, Gauge::ModelNumSv, Gauge::NodesUp];
 
     pub fn key(self) -> &'static str {
         match self {
             Gauge::QueueDepth => "budgetsvm_queue_depth_rows",
             Gauge::ModelVersion => "budgetsvm_model_version",
             Gauge::ModelNumSv => "budgetsvm_model_num_sv",
+            Gauge::NodesUp => "budgetsvm_nodes_up",
         }
     }
 }
@@ -115,9 +124,10 @@ pub enum Stage {
     PublishStall,
     ShardMerge,
     ShadowEval,
+    Heartbeat,
 }
 
-pub const N_STAGES: usize = 12;
+pub const N_STAGES: usize = 13;
 
 impl Stage {
     pub const ALL: [Stage; N_STAGES] = [
@@ -133,6 +143,7 @@ impl Stage {
         Stage::PublishStall,
         Stage::ShardMerge,
         Stage::ShadowEval,
+        Stage::Heartbeat,
     ];
 
     /// Stage slug: `train_*` for solver sections, `serve_*` for serving
@@ -151,6 +162,7 @@ impl Stage {
             Stage::PublishStall => "serve_publish_stall",
             Stage::ShardMerge => "serve_shard_merge",
             Stage::ShadowEval => "serve_shadow_eval",
+            Stage::Heartbeat => "serve_heartbeat",
         }
     }
 }

@@ -1,0 +1,166 @@
+//! Seeded-jitter exponential backoff with a bounded retry budget.
+//!
+//! Every coordinator↔node link in the cluster tier retries through one
+//! of these: the delay sequence is exponential with **equal jitter**
+//! (delay drawn uniformly from `[raw/2, raw)` where
+//! `raw = min(cap, base · 2^attempt)`), so synchronized retries from
+//! many links decorrelate without ever collapsing below half the
+//! nominal step. The jitter stream comes from [`crate::util::rng::Rng`]
+//! seeded per link, which keeps every retry schedule — and therefore
+//! every cluster bench scenario — deterministic under a fixed seed.
+//!
+//! A `Backoff` also carries a **retry budget**: once `budget` delays
+//! have been handed out, [`Backoff::next_delay`] returns the typed
+//! [`RetryBudgetExhausted`] error instead of another delay, which is
+//! the caller's signal to mark the link down rather than spin forever.
+
+use std::fmt;
+use std::time::Duration;
+
+use crate::util::rng::Rng;
+
+/// Typed error returned when a [`Backoff`]'s retry budget is spent.
+///
+/// Carries the number of attempts that were made so callers can report
+/// it without re-deriving state from the backoff handle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RetryBudgetExhausted {
+    /// Attempts made before the budget ran out.
+    pub attempts: u32,
+}
+
+impl fmt::Display for RetryBudgetExhausted {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "retry budget exhausted after {} attempts", self.attempts)
+    }
+}
+
+impl std::error::Error for RetryBudgetExhausted {}
+
+/// Deterministic equal-jitter exponential backoff with a retry budget.
+#[derive(Debug)]
+pub struct Backoff {
+    base: Duration,
+    cap: Duration,
+    budget: u32,
+    attempt: u32,
+    rng: Rng,
+}
+
+impl Backoff {
+    /// A backoff starting at `base`, doubling per attempt up to `cap`,
+    /// allowing at most `budget` delays, jittered by a stream seeded
+    /// with `seed`.
+    pub fn new(base: Duration, cap: Duration, budget: u32, seed: u64) -> Self {
+        Backoff { base, cap, budget, attempt: 0, rng: Rng::new(seed) }
+    }
+
+    /// The next delay to sleep before retrying, or the typed
+    /// [`RetryBudgetExhausted`] error once `budget` delays have been
+    /// consumed. Equal jitter: uniform in `[raw/2, raw)` with
+    /// `raw = min(cap, base · 2^attempt)`.
+    pub fn next_delay(&mut self) -> Result<Duration, RetryBudgetExhausted> {
+        if self.attempt >= self.budget {
+            return Err(RetryBudgetExhausted { attempts: self.attempt });
+        }
+        let raw = self.raw_delay(self.attempt);
+        self.attempt += 1;
+        let raw_ns = raw.as_nanos() as u64;
+        let half = raw_ns / 2;
+        let jittered = half + ((raw_ns - half) as f64 * self.rng.uniform()) as u64;
+        Ok(Duration::from_nanos(jittered))
+    }
+
+    /// Reset the attempt counter after a successful exchange so the
+    /// next failure starts from the base delay again. The jitter
+    /// stream is *not* rewound — determinism comes from the seed plus
+    /// the (deterministic, in benches) sequence of failures.
+    pub fn reset(&mut self) {
+        self.attempt = 0;
+    }
+
+    /// Delays handed out since construction or the last [`reset`].
+    ///
+    /// [`reset`]: Backoff::reset
+    pub fn attempts(&self) -> u32 {
+        self.attempt
+    }
+
+    fn raw_delay(&self, attempt: u32) -> Duration {
+        let mult = 1u32.checked_shl(attempt).unwrap_or(u32::MAX);
+        self.base.checked_mul(mult).map_or(self.cap, |d| d.min(self.cap))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn collect(b: &mut Backoff, n: usize) -> Vec<Duration> {
+        (0..n).map(|_| b.next_delay().unwrap()).collect()
+    }
+
+    #[test]
+    fn same_seed_gives_identical_delay_sequences() {
+        let mk = || Backoff::new(Duration::from_millis(10), Duration::from_secs(1), 8, 42);
+        let (mut a, mut b) = (mk(), mk());
+        assert_eq!(collect(&mut a, 8), collect(&mut b, 8));
+    }
+
+    #[test]
+    fn different_seeds_give_different_jitter() {
+        let mut a = Backoff::new(Duration::from_millis(10), Duration::from_secs(1), 8, 1);
+        let mut b = Backoff::new(Duration::from_millis(10), Duration::from_secs(1), 8, 2);
+        assert_ne!(collect(&mut a, 8), collect(&mut b, 8));
+    }
+
+    #[test]
+    fn delays_stay_in_the_equal_jitter_window_and_honor_the_cap() {
+        let base = Duration::from_millis(10);
+        let cap = Duration::from_millis(160);
+        let mut b = Backoff::new(base, cap, 10, 7);
+        for attempt in 0..10u32 {
+            let raw = (base * 2u32.pow(attempt.min(20))).min(cap);
+            let d = b.next_delay().unwrap();
+            assert!(d >= raw / 2, "attempt {attempt}: {d:?} below jitter floor {:?}", raw / 2);
+            assert!(d < raw, "attempt {attempt}: {d:?} at or above raw {raw:?}");
+            assert!(d <= cap, "attempt {attempt}: {d:?} exceeds cap");
+        }
+    }
+
+    #[test]
+    fn exhausted_budget_surfaces_the_typed_error() {
+        let mut b = Backoff::new(Duration::from_millis(1), Duration::from_millis(8), 3, 5);
+        for _ in 0..3 {
+            b.next_delay().unwrap();
+        }
+        let err = b.next_delay().unwrap_err();
+        assert_eq!(err, RetryBudgetExhausted { attempts: 3 });
+        assert!(err.to_string().contains("after 3 attempts"));
+        assert_eq!(b.attempts(), 3);
+    }
+
+    #[test]
+    fn reset_restores_the_full_budget_and_base_delay() {
+        let base = Duration::from_millis(4);
+        let mut b = Backoff::new(base, Duration::from_secs(1), 2, 11);
+        b.next_delay().unwrap();
+        b.next_delay().unwrap();
+        assert!(b.next_delay().is_err());
+        b.reset();
+        assert_eq!(b.attempts(), 0);
+        let d = b.next_delay().unwrap();
+        assert!(d >= base / 2 && d < base);
+    }
+
+    #[test]
+    fn huge_attempt_counts_saturate_at_the_cap() {
+        let cap = Duration::from_millis(50);
+        let mut b = Backoff::new(Duration::from_millis(1), cap, 64, 3);
+        let mut last = Duration::ZERO;
+        for _ in 0..64 {
+            last = b.next_delay().unwrap();
+        }
+        assert!(last >= cap / 2 && last < cap);
+    }
+}

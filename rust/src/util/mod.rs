@@ -8,6 +8,8 @@
 //!
 //! * [`aligned`] — a 64-byte-aligned growable `f32` buffer backing the
 //!   SoA tile storage so the AVX2 micro-kernels run on aligned lanes,
+//! * [`backoff`] — seeded-jitter exponential backoff with retry budgets,
+//!   the retry discipline on every coordinator↔node cluster link,
 //! * [`rng`] — a deterministic xoshiro256** PRNG with the sampling
 //!   distributions the data generators need,
 //! * [`stats`] — streaming/batch summary statistics used by the experiment
@@ -20,6 +22,7 @@
 //!   one-vs-rest training, batch prediction, and the experiment runner.
 
 pub mod aligned;
+pub mod backoff;
 pub mod bench;
 pub mod json;
 pub mod parallel;
